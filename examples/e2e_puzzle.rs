@@ -1,0 +1,107 @@
+//! END-TO-END DRIVER (the repo's required full-system validation):
+//! pretrains a real parent transformer on the synthetic corpus (logging
+//! the loss curve), then runs the complete Puzzle pipeline — BLD block
+//! library, replace-1-block KL scoring, MIP architecture search under a
+//! throughput constraint, GKD uptraining — and finally serves batched
+//! requests through both parent and child, reporting accuracy retention
+//! and the measured + modeled speedups. Results are recorded in
+//! EXPERIMENTS.md.
+//!
+//!   make artifacts && cargo run --release --example e2e_puzzle [-- --config tiny --scale 1.0]
+
+use anyhow::Result;
+use std::path::PathBuf;
+
+use puzzle::arch::{Arch, SearchSpace};
+use puzzle::data::corpus::sample_sequence;
+use puzzle::eval::Evaluator;
+use puzzle::perf::{self, HwProfile, Scenario};
+use puzzle::pipeline::{Pipeline, StageCfg};
+use puzzle::runtime::Registry;
+use puzzle::scoring::Metric;
+use puzzle::serving::Engine;
+use puzzle::train::LossSpec;
+use puzzle::util::{Args, Rng, Timer};
+
+fn main() -> Result<()> {
+    puzzle::util::log::init();
+    let args = Args::from_env();
+    let config = args.str("config", "tiny");
+    let reg = Registry::open(&PathBuf::from("artifacts").join(&config))?;
+    let cfg = &reg.man.cfg;
+    let mut stage = StageCfg::scaled(args.f64("scale", 1.0));
+    stage.seed = args.u64("seed", 42);
+    let run_dir = PathBuf::from(args.str("run-dir", &format!("runs/e2e_{config}")));
+    let pipe = Pipeline::new(&reg, &run_dir, stage)?;
+    let t_total = Timer::start();
+
+    println!("=== Puzzle end-to-end ({config}: {} layers, d={}, v={}) ===", cfg.n_layers, cfg.d, cfg.v);
+    let space = SearchSpace::full(cfg.n_heads as u32);
+    println!(
+        "search space: {} combos/layer -> 10^{:.1} architectures",
+        space.per_layer_combinations(),
+        space.log10_size(cfg.n_layers)
+    );
+
+    // Stage 0+1: parent pretraining + BLD library (loss curve -> run dir)
+    let library = pipe.ensure_library(&space)?;
+    // Stage 2: scoring + MIP
+    let scores = pipe.ensure_scores(&space, Metric::Kl)?;
+    let ct = pipe.default_cost_table();
+    let sol = pipe.search_speedup(&space, &scores, &ct, args.f64("speedup", 1.8))?;
+    println!("child architecture: {}", sol.arch.signature());
+    // Stage 3: GKD
+    let mut child = library.clone();
+    let gkd = pipe.gkd_child(&mut child, &sol.arch, LossSpec::gkd_best(), pipe.cfg.gkd_steps)?;
+    child.save(&run_dir.join("child_e2e.pzw"))?;
+
+    // Accuracy retention
+    let parent_arch = Arch::parent(cfg.n_layers);
+    let pe = Evaluator::new(&reg, &library, &parent_arch)?
+        .run_suite(&pipe.world, pipe.cfg.eval_questions, 7)?;
+    let ce = Evaluator::new(&reg, &child, &sol.arch)?
+        .run_suite(&pipe.world, pipe.cfg.eval_questions, 7)?;
+    println!("parent: {}", pe.row());
+    println!("child : {}", ce.row());
+    let preserved = 100.0 * ce.accuracy() / pe.accuracy().max(1e-9);
+
+    // Serving comparison (real engine, measured on this machine)
+    let mut tps = Vec::new();
+    for arch in [&sol.arch, &parent_arch] {
+        let weights = if arch == &sol.arch { &child } else { &library };
+        // warmup: compile all executables outside the timed region
+        {
+            let mut warm = Engine::new(&reg, weights, arch, 64 << 20)?;
+            warm.submit(vec![1, 5, 9], 2);
+            warm.run_to_completion()?;
+        }
+        let mut eng = Engine::new(&reg, weights, arch, 64 << 20)?;
+        let mut rng = Rng::new(5);
+        for _ in 0..cfg.b_decode * 3 {
+            let plen = rng.range(4, cfg.s_prefill / 2);
+            let prompt = sample_sequence(&pipe.world, &pipe.mix, plen, &mut rng);
+            eng.submit(prompt, cfg.s_prefill / 4);
+        }
+
+        eng.run_to_completion()?;
+        println!(
+            "{}: {}",
+            if arch == &sol.arch { "child  engine" } else { "parent engine" },
+            eng.metrics.summary()
+        );
+        tps.push(eng.metrics.gen_throughput());
+    }
+
+    let hw = HwProfile::h100_fp8();
+    let sc = Scenario { prefill: cfg.s_prefill, decode: cfg.s_prefill, batch: 64 };
+    let modeled = perf::scenario_throughput(&reg.man, &sol.arch, &hw, &sc)
+        / perf::scenario_throughput(&reg.man, &parent_arch, &hw, &sc);
+
+    println!("=== e2e summary ===");
+    println!("accuracy preserved : {preserved:.1}% (paper: 98.4%)");
+    println!("measured speedup   : {:.2}x (CPU engine)", tps[0] / tps[1]);
+    println!("modeled H100 FP8   : {modeled:.2}x (paper: 2.17x)");
+    println!("final val KLD      : {:.4}", gkd.val_kld);
+    println!("total wall time    : {:.1}s", t_total.secs());
+    Ok(())
+}

@@ -1,0 +1,215 @@
+"""AOT exporter: lower every Puzzle block-variant executable to HLO text.
+
+This is the *only* python entrypoint the system needs (`make artifacts`);
+after it runs, the rust coordinator is self-contained. HLO **text** (not
+`.serialize()`) is the interchange format: jax >= 0.5 emits HloModuleProto
+with 64-bit instruction ids which xla_extension 0.5.1 (the version the
+published `xla` crate binds) rejects; the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Everything is lowered with return_tuple=True so the rust side uniformly
+unwraps a tuple literal. Weights are inputs, so one executable per variant
+type serves every layer and every candidate architecture.
+
+Usage: python -m compile.aot --config tiny [--config small] --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .configs import CONFIGS, ModelCfg
+from . import model as M
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _fmt(s):
+    return {"dtype": str(s.dtype), "shape": list(s.shape)}
+
+
+class Exporter:
+    def __init__(self, cfg: ModelCfg, out_dir: str):
+        self.cfg = cfg
+        self.dir = os.path.join(out_dir, cfg.name)
+        os.makedirs(self.dir, exist_ok=True)
+        self.execs = {}
+
+    def export(self, name: str, fn, in_specs):
+        """Lower fn at in_specs, write <name>.hlo.txt, record in manifest."""
+        t0 = time.time()
+        # keep_unused: some vjps don't read every input (e.g. the embedding
+        # gather's grad ignores the table values) but the manifest/rust
+        # contract passes them all.
+        lowered = jax.jit(fn, keep_unused=True).lower(*in_specs)
+        out_specs = jax.eval_shape(fn, *in_specs)
+        if not isinstance(out_specs, (tuple, list)):
+            out_specs = (out_specs,)
+        text = to_hlo_text(lowered)
+        path = os.path.join(self.dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        self.execs[name] = {
+            "file": f"{name}.hlo.txt",
+            "in": [_fmt(s) for s in in_specs],
+            "out": [_fmt(s) for s in out_specs],
+        }
+        print(f"  [{time.time()-t0:5.2f}s] {name}", flush=True)
+
+    # ---- per-variant exports ----
+
+    def attn_variant(self, variant: str):
+        cfg = self.cfg
+        d = cfg.d
+        wspecs = [spec(s) for _, s in cfg.attn_weights(variant)]
+        bt, st = cfg.b_train, cfg.s_train
+        bd, sp, sl, smax = cfg.b_decode, cfg.s_prefill, cfg.s_long, cfg.s_max
+        f = M.block_fn(cfg, "attn", variant)
+        fv = M.block_vjp_fn(cfg, "attn", variant)
+        n = f"attn_{variant}"
+        x_t = spec((bt, st, d))
+        self.export(f"{n}_train_fwd", lambda x, *w: (f(x, *w),), [x_t] + wspecs)
+        self.export(f"{n}_train_vjp", fv, [x_t] + wspecs + [x_t])
+        if variant == "linear":
+            g = lambda x, *w: (M.attn_linear_fwd(x, *w),)
+            self.export(f"{n}_prefill", g, [spec((1, sp, d))] + wspecs)
+            self.export(f"{n}_decode", g, [spec((bd, 1, d))] + wspecs)
+            self.export(f"{n}_long", g, [spec((1, sl, d))] + wspecs)
+        else:
+            kv = cfg.kv_heads(int(variant.split("_r")[1]))
+            pre = lambda x, *w: M.attn_gqa_fwd(cfg, x, *w)  # (y, k, v)
+            self.export(f"{n}_prefill", pre, [spec((1, sp, d))] + wspecs)
+            self.export(
+                f"{n}_decode",
+                lambda x, kc, vc, pos, *w: M.attn_gqa_decode(cfg, x, kc, vc, pos, *w),
+                [
+                    spec((bd, 1, d)),
+                    spec((bd, smax, kv, cfg.head_dim)),
+                    spec((bd, smax, kv, cfg.head_dim)),
+                    spec((bd,), I32),
+                ]
+                + wspecs,
+            )
+            self.export(f"{n}_long", lambda x, *w: (pre(x, *w)[0],), [spec((1, sl, d))] + wspecs)
+
+    def ffn_variant(self, variant: str):
+        cfg = self.cfg
+        d = cfg.d
+        wspecs = [spec(s) for _, s in cfg.ffn_weights(variant)]
+        bt, st = cfg.b_train, cfg.s_train
+        bd, sp, sl = cfg.b_decode, cfg.s_prefill, cfg.s_long
+        f = M.block_fn(cfg, "ffn", variant)
+        fv = M.block_vjp_fn(cfg, "ffn", variant)
+        n = f"ffn_{variant}"
+        x_t = spec((bt, st, d))
+        g = lambda x, *w: (f(x, *w),)
+        self.export(f"{n}_train_fwd", g, [x_t] + wspecs)
+        self.export(f"{n}_train_vjp", fv, [x_t] + wspecs + [x_t])
+        self.export(f"{n}_prefill", g, [spec((1, sp, d))] + wspecs)
+        self.export(f"{n}_decode", g, [spec((bd, 1, d))] + wspecs)
+        self.export(f"{n}_long", g, [spec((1, sl, d))] + wspecs)
+
+    def embed_head(self):
+        cfg = self.cfg
+        d, v = cfg.d, cfg.v
+        bt, st = cfg.b_train, cfg.s_train
+        bd, sp, sl = cfg.b_decode, cfg.s_prefill, cfg.s_long
+        e = spec((v, d))
+        nw = spec((d,))
+        shapes = {"train": (bt, st), "prefill": (1, sp), "decode": (bd, 1), "long": (1, sl)}
+        for mode, (b, s) in shapes.items():
+            self.export(
+                f"embed_{mode}", lambda t, e: (M.embed_fwd(t, e),), [spec((b, s), I32), e]
+            )
+            self.export(
+                f"head_{mode}",
+                lambda x, n, e: (M.head_fwd(x, n, e, use_vjp_kernels=True),),
+                [spec((b, s, d)), nw, e],
+            )
+        # training backward passes
+        def embed_vjp(t, ew, dx):
+            _, pull = jax.vjp(lambda ew: M.embed_fwd(t, ew), ew)
+            return pull(dx)
+
+        self.export("embed_train_vjp", embed_vjp, [spec((bt, st), I32), e, spec((bt, st, d))])
+
+        def head_vjp(x, n, ew, dl):
+            _, pull = jax.vjp(lambda x, n, ew: M.head_fwd(x, n, ew, use_vjp_kernels=True), x, n, ew)
+            return pull(dl)
+
+        self.export(
+            "head_train_vjp", head_vjp, [spec((bt, st, d)), nw, e, spec((bt, st, v))]
+        )
+
+    def manifest(self):
+        cfg = self.cfg
+        man = {
+            "config": {
+                "name": cfg.name, "d": cfg.d, "n_layers": cfg.n_layers,
+                "n_heads": cfg.n_heads, "head_dim": cfg.head_dim, "i": cfg.i,
+                "v": cfg.v, "s_train": cfg.s_train, "b_train": cfg.b_train,
+                "s_prefill": cfg.s_prefill, "b_decode": cfg.b_decode,
+                "s_max": cfg.s_max, "s_long": cfg.s_long,
+                "rope_theta": cfg.rope_theta, "eps": cfg.eps,
+            },
+            "attn_variants": {
+                va: {
+                    "weights": [[n, list(s)] for n, s in cfg.attn_weights(va)],
+                    "kv_heads": (0 if va == "linear" else cfg.kv_heads(int(va.split("_r")[1]))),
+                }
+                for va in cfg.attn_variants()
+            },
+            "ffn_variants": {
+                vf: {
+                    "weights": [[n, list(s)] for n, s in cfg.ffn_weights(vf)],
+                    "i_dim": (0 if vf == "linear" else cfg.ffn_dim(vf)),
+                }
+                for vf in cfg.ffn_variants()
+            },
+            "execs": self.execs,
+        }
+        with open(os.path.join(self.dir, "manifest.json"), "w") as f:
+            json.dump(man, f, indent=1)
+
+    def run(self):
+        print(f"== exporting config '{self.cfg.name}' -> {self.dir}", flush=True)
+        for va in self.cfg.attn_variants():
+            self.attn_variant(va)
+        for vf in self.cfg.ffn_variants():
+            self.ffn_variant(vf)
+        self.embed_head()
+        self.manifest()
+        print(f"== {len(self.execs)} executables exported for '{self.cfg.name}'")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--config", action="append", default=None, choices=list(CONFIGS))
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    configs = args.config or ["tiny", "small"]
+    for name in configs:
+        Exporter(CONFIGS[name], args.out_dir).run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,116 @@
+"""Model configurations and the Puzzle search space.
+
+These definitions are the single source of truth shared (via
+artifacts/<cfg>/manifest.json) with the rust coordinator: weight names,
+shapes and executable signatures are all derived from here.
+"""
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+# FFN intermediate-dimension ratios from the paper (Section 2): full,
+# ~87%, 75%, 50%, 25%, 20% and 10% of the parent intermediate size.
+FFN_RATIOS: Dict[str, float] = {
+    "r100": 1.00,
+    "r87": 0.87,
+    "r75": 0.75,
+    "r50": 0.50,
+    "r25": 0.25,
+    "r20": 0.20,
+    "r10": 0.10,
+}
+
+# GQA key-value head reduction factors (paper: kv heads 8, 4, 2, 1 from an
+# 8-kv-head parent — we express them as divisors of the parent head count).
+GQA_DIVISORS: List[int] = [1, 2, 4, 8]
+
+
+def round_dim(x: float, multiple: int = 16, minimum: int = 16) -> int:
+    """Round a pruned dimension to a hardware-friendly multiple."""
+    return max(minimum, int(round(x / multiple)) * multiple)
+
+
+@dataclass
+class ModelCfg:
+    name: str
+    d: int          # hidden size
+    n_layers: int
+    n_heads: int
+    head_dim: int
+    i: int          # FFN intermediate size (parent)
+    v: int          # vocab size
+    s_train: int    # training sequence length
+    b_train: int    # training batch size
+    s_prefill: int  # serving prefill max length
+    b_decode: int   # serving decode batch (engine slot count)
+    s_max: int      # serving KV-cache capacity per sequence
+    s_long: int     # long-context eval length (RULER-proxy)
+    rope_theta: float = 10000.0
+    eps: float = 1e-5
+
+    @property
+    def qdim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    def kv_heads(self, divisor: int) -> int:
+        assert self.n_heads % divisor == 0
+        return self.n_heads // divisor
+
+    def attn_variants(self) -> List[str]:
+        """GQA variants that are valid for this head count, plus linear.
+
+        no-op is handled purely in rust (skip the block)."""
+        out = [f"gqa_r{g}" for g in GQA_DIVISORS if self.n_heads % g == 0 and self.n_heads // g >= 1]
+        out.append("linear")
+        return out
+
+    def ffn_variants(self) -> List[str]:
+        return list(FFN_RATIOS.keys()) + ["linear"]
+
+    def ffn_dim(self, ratio_name: str) -> int:
+        return round_dim(self.i * FFN_RATIOS[ratio_name])
+
+    # ---- weight layouts (ordered name -> shape), shared with rust ----
+
+    def attn_weights(self, variant: str) -> List[Tuple[str, Tuple[int, ...]]]:
+        if variant == "linear":
+            return [("norm", (self.d,)), ("wl", (self.d, self.d))]
+        g = int(variant.split("_r")[1])
+        kv = self.kv_heads(g)
+        return [
+            ("norm", (self.d,)),
+            ("wq", (self.d, self.qdim)),
+            ("wk", (self.d, kv * self.head_dim)),
+            ("wv", (self.d, kv * self.head_dim)),
+            ("wo", (self.qdim, self.d)),
+        ]
+
+    def ffn_weights(self, variant: str) -> List[Tuple[str, Tuple[int, ...]]]:
+        if variant == "linear":
+            return [("norm", (self.d,)), ("wl", (self.d, self.d))]
+        i = self.ffn_dim(variant)
+        return [
+            ("norm", (self.d,)),
+            ("wg", (self.d, i)),
+            ("wu", (self.d, i)),
+            ("wd", (i, self.d)),
+        ]
+
+
+CONFIGS: Dict[str, ModelCfg] = {
+    "tiny": ModelCfg(
+        name="tiny", d=64, n_layers=4, n_heads=4, head_dim=16, i=192,
+        v=256, s_train=64, b_train=8, s_prefill=64, b_decode=4, s_max=96,
+        s_long=256,
+    ),
+    "small": ModelCfg(
+        name="small", d=128, n_layers=8, n_heads=8, head_dim=16, i=512,
+        v=512, s_train=128, b_train=8, s_prefill=128, b_decode=4, s_max=192,
+        s_long=512,
+    ),
+    "base": ModelCfg(
+        name="base", d=320, n_layers=12, n_heads=8, head_dim=40, i=1280,
+        v=512, s_train=128, b_train=8, s_prefill=128, b_decode=4, s_max=192,
+        s_long=512,
+    ),
+}

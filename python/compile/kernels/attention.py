@@ -1,0 +1,99 @@
+"""Fused causal GQA attention as a Pallas kernel.
+
+Hardware adaptation (paper targets H100 tensor cores / paged attention; we
+re-think for the TPU model Pallas exposes): the grid is (batch, q_head,
+q_tile) and the BlockSpec schedule stages one Q tile plus the matching KV
+head's full K/V stripe through VMEM, so the softmax(QK^T)V pipeline never
+materializes the S x S score tensor in HBM (flash-style). GQA sharing is
+expressed in the K/V index_map: query head h reads KV head h // group, which
+is exactly the paper's "reduced KV heads shrink both compute and KV-cache"
+knob. Kernels are lowered with interpret=True (CPU PJRT cannot execute
+Mosaic custom-calls); see DESIGN.md §6 for the VMEM/MXU estimates.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, bq, s, causal):
+    qi = pl.program_id(2)
+    q = q_ref[0, :, 0, :] * scale          # [BQ, Dh]
+    k = k_ref[0, :, 0, :]                  # [S, Dh]
+    v = v_ref[0, :, 0, :]                  # [S, Dh]
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # [BQ, S]
+    if causal:
+        q_idx = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, s), 0)
+        k_idx = jax.lax.broadcasted_iota(jnp.int32, (bq, s), 1)
+        scores = jnp.where(k_idx <= q_idx, scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[0, :, 0, :] = jnp.dot(p, v, preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def attention(q, k, v, causal: bool = True, block_q: int = 128):
+    """Causal GQA attention. q: [B,S,H,Dh]; k,v: [B,S,KV,Dh] -> [B,S,H,Dh]."""
+    b, s, h, dh = q.shape
+    kv = k.shape[2]
+    assert h % kv == 0, "query heads must be a multiple of kv heads"
+    group = h // kv
+    bq = min(block_q, s)
+    assert s % bq == 0, f"seq len {s} must be a multiple of q tile {bq}"
+    scale = 1.0 / (dh ** 0.5)
+    kernel = functools.partial(_attn_kernel, scale=scale, bq=bq, s=s, causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, s // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, dh), lambda bi, hi, qi: (bi, qi, hi, 0)),
+            pl.BlockSpec((1, s, 1, dh), lambda bi, hi, qi: (bi, 0, hi // group, 0)),
+            pl.BlockSpec((1, s, 1, dh), lambda bi, hi, qi: (bi, 0, hi // group, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, dh), lambda bi, hi, qi: (bi, qi, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=True,
+    )(q, k, v)
+
+
+# ---- hand-derived VJP (interpret-mode pallas_call is not differentiable;
+# the backward pass recomputes the softmax from saved q,k,v = remat) ----
+
+@jax.custom_vjp
+def attention_vjp(q, k, v):
+    return attention(q, k, v, causal=True)
+
+
+def _attn_fwd(q, k, v):
+    return attention(q, k, v, causal=True), (q, k, v)
+
+
+def _attn_bwd(res, do):
+    q, k, v = res
+    b, s, h, dh = q.shape
+    kv = k.shape[2]
+    group = h // kv
+    scale = 1.0 / (dh ** 0.5)
+    kx = jnp.repeat(k, group, axis=2)
+    vx = jnp.repeat(v, group, axis=2)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kx) * scale
+    qi = jax.lax.broadcasted_iota(jnp.int32, (s, s), 0)
+    ki = jax.lax.broadcasted_iota(jnp.int32, (s, s), 1)
+    scores = jnp.where(ki <= qi, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)                      # [B,H,Q,K]
+    dv = jnp.einsum("bhqk,bqhd->bkhd", p, do)                # expanded heads
+    dp = jnp.einsum("bqhd,bkhd->bhqk", do, vx)
+    ds = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    dq = jnp.einsum("bhqk,bkhd->bqhd", ds, kx) * scale
+    dk = jnp.einsum("bhqk,bqhd->bkhd", ds, q) * scale
+    # fold expanded query-head grads back onto shared kv heads
+    dk = dk.reshape(b, s, kv, group, dh).sum(axis=3)
+    dv = dv.reshape(b, s, kv, group, dh).sum(axis=3)
+    return dq, dk, dv
+
+
+attention_vjp.defvjp(_attn_fwd, _attn_bwd)

@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has an exact reference implementation
+here; pytest asserts allclose between the two across a hypothesis sweep of
+shapes. The references are also used directly by model.py on the decode
+path (tiny tensors, memory-bound -- not worth a kernel)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x, w, eps: float = 1e-5):
+    """RMSNorm over the last axis: x / rms(x) * w."""
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * w
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    """Grouped-query attention.
+
+    q: [B, S, H, Dh]; k, v: [B, S, KV, Dh] with H % KV == 0.
+    Returns [B, S, H, Dh]. Causal mask over the sequence axis.
+    """
+    b, s, h, dh = q.shape
+    kv = k.shape[2]
+    group = h // kv
+    # expand kv heads to match query heads
+    k = jnp.repeat(k, group, axis=2)
+    v = jnp.repeat(v, group, axis=2)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale
+    if causal:
+        qi = jnp.arange(s)[:, None]
+        ki = jnp.arange(s)[None, :]
+        scores = jnp.where(ki <= qi, scores, jnp.asarray(-1e30, scores.dtype))
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+
+def swiglu_ref(x, wg, wu, wd):
+    """SwiGLU FFN: (silu(x @ wg) * (x @ wu)) @ wd.
+
+    x: [T, D]; wg, wu: [D, I]; wd: [I, D]."""
+    g = x @ wg
+    u = x @ wu
+    return (jax.nn.silu(g) * u) @ wd
+
+
+def decode_attention_ref(q, k_cache, v_cache, pos):
+    """Single-token cached attention used on the serving decode path.
+
+    q: [B, 1, H, Dh]; caches: [B, Smax, KV, Dh]; pos: [B] int32 giving the
+    index of the *current* token (cache already contains it at `pos`).
+    Attends over cache positions <= pos. Returns [B, 1, H, Dh].
+    """
+    b, _, h, dh = q.shape
+    smax, kv = k_cache.shape[1], k_cache.shape[2]
+    group = h // kv
+    k = jnp.repeat(k_cache, group, axis=2)
+    v = jnp.repeat(v_cache, group, axis=2)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale  # [B,H,1,Smax]
+    mask = jnp.arange(smax)[None, None, None, :] <= pos[:, None, None, None]
+    scores = jnp.where(mask, scores, jnp.asarray(-1e30, scores.dtype))
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)

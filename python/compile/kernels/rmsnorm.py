@@ -1,0 +1,62 @@
+"""RMSNorm as a Pallas kernel (token-tiled).
+
+Small but on every block's critical path; tiling over tokens keeps each
+(BT, D) tile resident in VMEM for the two passes (mean-square, scale).
+interpret=True for CPU PJRT.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps):
+    x = x_ref[...]
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(ms + eps) * w_ref[...]).astype(o_ref.dtype)
+
+
+def rmsnorm(x, w, eps: float = 1e-5, block_t: int = 256):
+    """RMSNorm over last axis. x: [T, D]; w: [D] -> [T, D]."""
+    t, d = x.shape
+    bt = min(block_t, t)
+    while t % bt != 0:
+        bt -= 1
+    kernel = functools.partial(_rmsnorm_kernel, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(t // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda ti: (ti, 0)),
+            pl.BlockSpec((d,), lambda ti: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bt, d), lambda ti: (ti, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), x.dtype),
+        interpret=True,
+    )(x, w)
+
+
+# ---- hand-derived VJP ----
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rmsnorm_vjp(x, w, eps: float = 1e-5):
+    return rmsnorm(x, w, eps)
+
+
+def _rms_fwd(x, w, eps):
+    return rmsnorm(x, w, eps), (x, w)
+
+
+def _rms_bwd(eps, res, dy):
+    x, w = res
+    r = jax.lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+    xhat = x * r
+    dw = jnp.sum(dy * xhat, axis=0)
+    dxhat = dy * w
+    dx = r * (dxhat - xhat * jnp.mean(dxhat * xhat, axis=-1, keepdims=True))
+    return dx, dw
+
+
+rmsnorm_vjp.defvjp(_rms_fwd, _rms_bwd)

@@ -1,0 +1,207 @@
+"""L2: the NanoLlama compute graph per Puzzle block variant.
+
+Every function here takes its weights as *positional arguments* so that the
+AOT-lowered executable is parameterized by weights: one compiled artifact per
+variant type serves every layer and every candidate child architecture — the
+rust coordinator assembles heterogeneous models by chaining these.
+
+Modes per variant:
+  train_fwd  (Bt, St)  — returns block output y (used for activations + BLD)
+  train_vjp  (Bt, St)  — (x, *w, dy) -> (dx, *dw); primal recomputed inside
+  prefill    (1,  Sp)  — gqa variants additionally return the roped K/V for
+                          the serving engine's KV cache
+  decode     (Bd, 1)   — cached attention with per-sequence positions
+  long       (1,  Sl)  — long-context scoring (RULER-proxy)
+
+Hot spots (prefill attention, FFN, norms) call the Pallas kernels; the
+decode path and the hand-derived backward passes use the jnp references
+(tiny/memory-bound tensors). All blocks are pre-norm residual:
+y = x + subblock(rmsnorm(x)).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelCfg
+from .kernels.attention import attention, attention_vjp
+from .kernels.swiglu import swiglu, swiglu_vjp
+from .kernels.rmsnorm import rmsnorm, rmsnorm_vjp
+from .kernels import ref
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+def rope(x, positions, theta: float):
+    """Rotary embedding. x: [B, S, H, Dh]; positions: [B, S] int32."""
+    b, s, h, dh = x.shape
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[:, :, None, None] * freqs  # [B,S,1,half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _positions(b, s):
+    return jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+
+# --------------------------------------------------------------------------
+# Attention blocks
+# --------------------------------------------------------------------------
+
+def attn_gqa_fwd(cfg: ModelCfg, x, norm, wq, wk, wv, wo, *, use_vjp_kernels=False):
+    """Pre-norm GQA block: y = x + Wo . attn(rope(q), rope(k), v)."""
+    b, s, d = x.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    kv = wk.shape[1] // dh
+    rms = rmsnorm_vjp if use_vjp_kernels else rmsnorm
+    att = attention_vjp if use_vjp_kernels else attention
+    hnorm = rms(x.reshape(b * s, d), norm).reshape(b, s, d)
+    pos = _positions(b, s)
+    q = rope((hnorm @ wq).reshape(b, s, h, dh), pos, cfg.rope_theta)
+    k = rope((hnorm @ wk).reshape(b, s, kv, dh), pos, cfg.rope_theta)
+    v = (hnorm @ wv).reshape(b, s, kv, dh)
+    o = att(q, k, v).reshape(b, s, h * dh)
+    return x + o @ wo, k, v
+
+
+def attn_gqa_decode(cfg: ModelCfg, x, k_cache, v_cache, pos, norm, wq, wk, wv, wo):
+    """Cached decode step. x: [B,1,D]; caches [B,Smax,KV,Dh]; pos: [B] int32.
+
+    Writes the new K/V at `pos` (functional update) and attends over <= pos.
+    Returns (y, k_cache', v_cache')."""
+    b, _, d = x.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    kv = wk.shape[1] // dh
+    hnorm = ref.rmsnorm_ref(x, norm)
+    p2 = pos[:, None]
+    q = rope((hnorm @ wq).reshape(b, 1, h, dh), p2, cfg.rope_theta)
+    k = rope((hnorm @ wk).reshape(b, 1, kv, dh), p2, cfg.rope_theta)
+    v = (hnorm @ wv).reshape(b, 1, kv, dh)
+    upd = jax.vmap(lambda c, n, p: jax.lax.dynamic_update_slice_in_dim(c, n, p, axis=0))
+    k_cache = upd(k_cache, k, pos)
+    v_cache = upd(v_cache, v, pos)
+    o = ref.decode_attention_ref(q, k_cache, v_cache, pos).reshape(b, 1, h * dh)
+    return x + o @ wo, k_cache, v_cache
+
+
+def attn_linear_fwd(x, norm, wl, *, use_vjp_kernels=False):
+    """Attention replaced by a single token-wise linear layer (paper §2).
+
+    Initialized in rust as Wv @ Wo ("each token attends only to itself")."""
+    b, s, d = x.shape
+    rms = rmsnorm_vjp if use_vjp_kernels else rmsnorm
+    hnorm = rms(x.reshape(b * s, d), norm).reshape(b, s, d)
+    return x + hnorm @ wl
+
+
+# --------------------------------------------------------------------------
+# FFN blocks
+# --------------------------------------------------------------------------
+
+def ffn_fwd(x, norm, wg, wu, wd, *, use_vjp_kernels=False):
+    b, s, d = x.shape
+    rms = rmsnorm_vjp if use_vjp_kernels else rmsnorm
+    swi = swiglu_vjp if use_vjp_kernels else swiglu
+    hnorm = rms(x.reshape(b * s, d), norm)
+    return x + swi(hnorm, wg, wu, wd).reshape(b, s, d)
+
+
+def ffn_linear_fwd(x, norm, wl, *, use_vjp_kernels=False):
+    """FFN replaced by a linear layer, initialized as W_up @ W_down."""
+    b, s, d = x.shape
+    rms = rmsnorm_vjp if use_vjp_kernels else rmsnorm
+    hnorm = rms(x.reshape(b * s, d), norm).reshape(b, s, d)
+    return x + hnorm @ wl
+
+
+# --------------------------------------------------------------------------
+# Embedding / LM head (tied)
+# --------------------------------------------------------------------------
+
+def embed_fwd(tokens, e):
+    return e[tokens]
+
+
+def head_fwd(x, norm, e, *, use_vjp_kernels=False):
+    b, s, d = x.shape
+    rms = rmsnorm_vjp if use_vjp_kernels else rmsnorm
+    hnorm = rms(x.reshape(b * s, d), norm).reshape(b, s, d)
+    return hnorm @ e.T
+
+
+# --------------------------------------------------------------------------
+# Block dispatch by variant name (shared with aot.py and tests)
+# --------------------------------------------------------------------------
+
+def block_fn(cfg: ModelCfg, kind: str, variant: str):
+    """Returns fn(x, *weights) -> y (train-mode, differentiable)."""
+    if kind == "attn":
+        if variant == "linear":
+            return lambda x, norm, wl: attn_linear_fwd(x, norm, wl, use_vjp_kernels=True)
+        return lambda x, *w: attn_gqa_fwd(cfg, x, *w, use_vjp_kernels=True)[0]
+    if kind == "ffn":
+        if variant == "linear":
+            return lambda x, norm, wl: ffn_linear_fwd(x, norm, wl, use_vjp_kernels=True)
+        return lambda x, *w: ffn_fwd(x, *w, use_vjp_kernels=True)
+    raise ValueError(f"unknown kind {kind}")
+
+
+def block_vjp_fn(cfg: ModelCfg, kind: str, variant: str):
+    """Returns fn(x, *weights, dy) -> (dx, *dweights). Primal recomputed."""
+    f = block_fn(cfg, kind, variant)
+
+    def vjp_fn(*args):
+        x, w, dy = args[0], args[1:-1], args[-1]
+        _, pull = jax.vjp(f, x, *w)
+        return pull(dy)
+
+    return vjp_fn
+
+
+# --------------------------------------------------------------------------
+# Losses — parity oracles for the rust implementations (train/losses.rs)
+# --------------------------------------------------------------------------
+
+def ce_loss(logits, targets):
+    """Mean token cross-entropy. logits [B,S,V], targets [B,S] int32."""
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def ce_loss_grad(logits, targets):
+    p = jax.nn.softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=logits.dtype)
+    n = logits.shape[0] * logits.shape[1]
+    return (p - onehot) / n
+
+
+def kld_loss(logits_p, logits_c):
+    """Mean token KL(parent || child)."""
+    lp = jax.nn.log_softmax(logits_p, axis=-1)
+    lc = jax.nn.log_softmax(logits_c, axis=-1)
+    return jnp.mean(jnp.sum(jnp.exp(lp) * (lp - lc), axis=-1))
+
+
+def kld_loss_grad(logits_p, logits_c):
+    """d KL(p||c) / d logits_c."""
+    p = jax.nn.softmax(logits_p, axis=-1)
+    c = jax.nn.softmax(logits_c, axis=-1)
+    n = logits_c.shape[0] * logits_c.shape[1]
+    return (c - p) / n
+
+
+def cosine_loss(h_c, h_p):
+    """1 - cos(h_c, h_p) averaged over tokens (per-layer hidden states)."""
+    num = jnp.sum(h_c * h_p, axis=-1)
+    den = jnp.linalg.norm(h_c, axis=-1) * jnp.linalg.norm(h_p, axis=-1) + 1e-8
+    return jnp.mean(1.0 - num / den)
+
+
+def nmse_loss(o_c, o_p):
+    """BLD objective (§3): MSE(o_p, o_c) / MSE(o_p, 0)."""
+    return jnp.sum((o_c - o_p) ** 2) / (jnp.sum(o_p ** 2) + 1e-8)

@@ -1,0 +1,82 @@
+"""AOT export integration: manifest completeness + HLO-text interchange."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.aot import Exporter, to_hlo_text
+from compile.configs import CONFIGS
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def export_dir(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    Exporter(CONFIGS["tiny"], str(out)).run()
+    return os.path.join(str(out), "tiny")
+
+
+def test_manifest_covers_search_space(export_dir):
+    man = json.load(open(os.path.join(export_dir, "manifest.json")))
+    cfg = CONFIGS["tiny"]
+    # paper search space: gqa variants + linear (no-op lives in rust)
+    assert set(man["attn_variants"]) == set(cfg.attn_variants())
+    assert set(man["ffn_variants"]) == set(cfg.ffn_variants())
+    for va in cfg.attn_variants():
+        for mode in ["train_fwd", "train_vjp", "prefill", "decode", "long"]:
+            assert f"attn_{va}_{mode}" in man["execs"], (va, mode)
+    for vf in cfg.ffn_variants():
+        for mode in ["train_fwd", "train_vjp", "prefill", "decode", "long"]:
+            assert f"ffn_{vf}_{mode}" in man["execs"], (vf, mode)
+    for n in ["embed_train", "head_train", "embed_train_vjp", "head_train_vjp",
+              "embed_decode", "head_decode", "embed_long", "head_long"]:
+        assert n in man["execs"]
+
+
+def test_hlo_files_are_parseable_text(export_dir):
+    man = json.load(open(os.path.join(export_dir, "manifest.json")))
+    for name, meta in man["execs"].items():
+        path = os.path.join(export_dir, meta["file"])
+        text = open(path).read()
+        assert "ENTRY" in text and "HloModule" in text, name
+        # the 64-bit-id failure mode shows up as serialized protos; text never.
+        assert not text.startswith("\x08"), name
+
+
+def test_manifest_shapes_match_lowering(export_dir):
+    man = json.load(open(os.path.join(export_dir, "manifest.json")))
+    cfg = CONFIGS["tiny"]
+    e = man["execs"]["attn_gqa_r2_decode"]
+    kv = cfg.n_heads // 2
+    assert e["in"][1]["shape"] == [cfg.b_decode, cfg.s_max, kv, cfg.head_dim]
+    assert e["out"][0]["shape"] == [cfg.b_decode, 1, cfg.d]
+    h = man["execs"]["head_train"]
+    assert h["out"][0]["shape"] == [cfg.b_train, cfg.s_train, cfg.v]
+
+
+def test_hlo_text_parses_back():
+    """The emitted text must parse back through XLA's HLO text parser —
+    the exact path the rust runtime uses (HloModuleProto::from_text_file).
+    Numerics of the round trip are covered by the rust integration tests."""
+    from jax._src.lib import xla_client as xc
+
+    fn = lambda a, b: (jnp.matmul(a, b) + 1.5,)
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((4, 4), jnp.float32), jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    )
+    text = to_hlo_text(lowered)
+    assert "ROOT" in text and "tuple(" in text  # tuple-rooted for uniform unwrap
+    mod = xc._xla.hlo_module_from_text(text)
+    assert mod is not None
+
+
+def test_exports_are_deterministic():
+    fn = lambda a: (a * 2.0,)
+    s = jax.ShapeDtypeStruct((3, 3), jnp.float32)
+    t1 = to_hlo_text(jax.jit(fn).lower(s))
+    t2 = to_hlo_text(jax.jit(fn).lower(s))
+    assert t1 == t2

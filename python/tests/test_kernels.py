@@ -1,0 +1,142 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (hypothesis sweeps).
+
+These are the CORE correctness signal for the compiled artifacts: every
+serving/training executable is composed from these kernels.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import attention, attention_vjp
+from compile.kernels.swiglu import swiglu, swiglu_vjp
+from compile.kernels.rmsnorm import rmsnorm, rmsnorm_vjp
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def rnd(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype)
+
+
+# ---------------------------------------------------------------- attention
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 3),
+    s=st.sampled_from([8, 16, 32, 64, 128]),
+    h=st.sampled_from([1, 2, 4, 8]),
+    kv_div=st.sampled_from([1, 2, 4, 8]),
+    dh=st.sampled_from([4, 8, 16]),
+)
+def test_attention_matches_ref(b, s, h, kv_div, dh):
+    if h % kv_div != 0:
+        kv_div = 1
+    kv = h // kv_div
+    q = rnd(0, (b, s, h, dh))
+    k = rnd(1, (b, s, kv, dh))
+    v = rnd(2, (b, s, kv, dh))
+    got = attention(q, k, v)
+    want = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(np.array(got), np.array(want), atol=2e-5, rtol=2e-5)
+
+
+def test_attention_is_causal():
+    """Perturbing a future token must not change earlier outputs."""
+    b, s, h, dh = 1, 16, 2, 8
+    q, k, v = rnd(0, (b, s, h, dh)), rnd(1, (b, s, h, dh)), rnd(2, (b, s, h, dh))
+    base = attention(q, k, v)
+    k2 = k.at[:, -1].add(100.0)
+    v2 = v.at[:, -1].add(100.0)
+    pert = attention(q, k2, v2)
+    np.testing.assert_allclose(np.array(base[:, :-1]), np.array(pert[:, :-1]), atol=1e-6)
+
+
+def test_attention_q_tiling_invariance():
+    """Different q tile sizes must produce identical results."""
+    q, k, v = rnd(0, (2, 64, 4, 8)), rnd(1, (2, 64, 2, 8)), rnd(2, (2, 64, 2, 8))
+    a = attention(q, k, v, block_q=64)
+    b_ = attention(q, k, v, block_q=16)
+    np.testing.assert_allclose(np.array(a), np.array(b_), atol=1e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    s=st.sampled_from([8, 16]),
+    h=st.sampled_from([2, 4]),
+    kv_div=st.sampled_from([1, 2]),
+)
+def test_attention_vjp_matches_ref_grads(s, h, kv_div):
+    kv, dh = h // kv_div, 8
+    q, k, v = rnd(0, (1, s, h, dh)), rnd(1, (1, s, kv, dh)), rnd(2, (1, s, kv, dh))
+    w = rnd(3, (dh,))
+    f_ker = lambda q, k, v: jnp.sum(attention_vjp(q, k, v) * w)
+    f_ref = lambda q, k, v: jnp.sum(ref.attention_ref(q, k, v) * w)
+    g1 = jax.grad(f_ker, (0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_ref, (0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.array(a), np.array(b), atol=2e-5, rtol=2e-4)
+
+
+# ---------------------------------------------------------------- swiglu
+
+@settings(**SETTINGS)
+@given(
+    t=st.sampled_from([1, 7, 32, 128, 200]),
+    d=st.sampled_from([8, 32, 64]),
+    i=st.sampled_from([16, 48, 144, 256]),
+)
+def test_swiglu_matches_ref(t, d, i):
+    x, wg, wu, wd = rnd(0, (t, d)), rnd(1, (d, i)), rnd(2, (d, i)), rnd(3, (i, d))
+    got = swiglu(x, wg, wu, wd)
+    want = ref.swiglu_ref(x, wg, wu, wd)
+    np.testing.assert_allclose(np.array(got), np.array(want), atol=1e-3, rtol=1e-4)
+
+
+def test_swiglu_i_tiling_accumulation():
+    """I-dim tiling (the paper's pruned-FFN axis) accumulates exactly."""
+    x, wg, wu, wd = rnd(0, (16, 8)), rnd(1, (8, 256)), rnd(2, (8, 256)), rnd(3, (256, 8))
+    a = swiglu(x, wg, wu, wd, block_i=256)   # single tile
+    b = swiglu(x, wg, wu, wd, block_i=32)    # 8 accumulation steps
+    np.testing.assert_allclose(np.array(a), np.array(b), atol=2e-4, rtol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(t=st.sampled_from([4, 16]), d=st.sampled_from([8, 16]), i=st.sampled_from([16, 32]))
+def test_swiglu_vjp_matches_ref_grads(t, d, i):
+    x, wg, wu, wd = rnd(0, (t, d)), rnd(1, (d, i)), rnd(2, (d, i)), rnd(3, (i, d))
+    c = rnd(4, (d,))
+    g1 = jax.grad(lambda *a: jnp.sum(swiglu_vjp(*a) * c), (0, 1, 2, 3))(x, wg, wu, wd)
+    g2 = jax.grad(lambda *a: jnp.sum(ref.swiglu_ref(*a) * c), (0, 1, 2, 3))(x, wg, wu, wd)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.array(a), np.array(b), atol=1e-4, rtol=1e-3)
+
+
+# ---------------------------------------------------------------- rmsnorm
+
+@settings(**SETTINGS)
+@given(t=st.sampled_from([1, 3, 64, 300]), d=st.sampled_from([8, 64, 128]))
+def test_rmsnorm_matches_ref(t, d):
+    x, w = rnd(0, (t, d)), rnd(1, (d,))
+    np.testing.assert_allclose(
+        np.array(rmsnorm(x, w)), np.array(ref.rmsnorm_ref(x, w)), atol=1e-5, rtol=1e-5
+    )
+
+
+def test_rmsnorm_vjp_matches_ref_grads():
+    x, w, c = rnd(0, (16, 32)), rnd(1, (32,)), rnd(2, (32,))
+    g1 = jax.grad(lambda x, w: jnp.sum(rmsnorm_vjp(x, w) * c), (0, 1))(x, w)
+    g2 = jax.grad(lambda x, w: jnp.sum(ref.rmsnorm_ref(x, w) * c), (0, 1))(x, w)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.array(a), np.array(b), atol=1e-5, rtol=1e-4)
+
+
+def test_rmsnorm_scale_invariance():
+    """rmsnorm(c*x) == rmsnorm(x) for c > 0 (up to eps)."""
+    x, w = rnd(0, (8, 64)), rnd(1, (64,))
+    a = rmsnorm(x, w)
+    b = rmsnorm(x * 1000.0, w)
+    np.testing.assert_allclose(np.array(a), np.array(b), atol=1e-3, rtol=1e-3)

@@ -1,0 +1,266 @@
+//! Architecture descriptors and the Puzzle search space (paper §2).
+//!
+//! A child architecture assigns every layer one attention choice and one
+//! FFN choice. `NoOp` (skip the subblock) lives only here — it needs no
+//! compiled executable or weights.
+
+use crate::util::Json;
+
+pub const FFN_RATIO_NAMES: [&str; 7] = ["r100", "r87", "r75", "r50", "r25", "r20", "r10"];
+
+pub fn ffn_ratio_value(name: &str) -> f64 {
+    match name {
+        "r100" => 1.00,
+        "r87" => 0.87,
+        "r75" => 0.75,
+        "r50" => 0.50,
+        "r25" => 0.25,
+        "r20" => 0.20,
+        "r10" => 0.10,
+        _ => panic!("unknown ffn ratio {name}"),
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AttnChoice {
+    /// GQA with kv_heads = n_heads / divisor. divisor 1 = the parent MHA.
+    Gqa { divisor: u32 },
+    /// Attention replaced by one linear layer.
+    Linear,
+    /// Subblock skipped entirely.
+    NoOp,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FfnChoice {
+    /// SwiGLU with intermediate dim = ratio * parent I (by ratio name idx).
+    Ratio(u8),
+    Linear,
+    NoOp,
+}
+
+impl AttnChoice {
+    pub fn name(&self) -> String {
+        match self {
+            AttnChoice::Gqa { divisor } => format!("gqa_r{divisor}"),
+            AttnChoice::Linear => "linear".into(),
+            AttnChoice::NoOp => "noop".into(),
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<AttnChoice> {
+        if s == "linear" {
+            return Some(AttnChoice::Linear);
+        }
+        if s == "noop" {
+            return Some(AttnChoice::NoOp);
+        }
+        s.strip_prefix("gqa_r")?.parse().ok().map(|divisor| AttnChoice::Gqa { divisor })
+    }
+
+    /// Executable name prefix in the artifact manifest (None for NoOp).
+    pub fn exec_prefix(&self) -> Option<String> {
+        match self {
+            AttnChoice::NoOp => None,
+            _ => Some(format!("attn_{}", self.name())),
+        }
+    }
+}
+
+impl FfnChoice {
+    pub fn name(&self) -> String {
+        match self {
+            FfnChoice::Ratio(i) => FFN_RATIO_NAMES[*i as usize].to_string(),
+            FfnChoice::Linear => "linear".into(),
+            FfnChoice::NoOp => "noop".into(),
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<FfnChoice> {
+        if s == "linear" {
+            return Some(FfnChoice::Linear);
+        }
+        if s == "noop" {
+            return Some(FfnChoice::NoOp);
+        }
+        FFN_RATIO_NAMES.iter().position(|&n| n == s).map(|i| FfnChoice::Ratio(i as u8))
+    }
+
+    pub fn exec_prefix(&self) -> Option<String> {
+        match self {
+            FfnChoice::NoOp => None,
+            _ => Some(format!("ffn_{}", self.name())),
+        }
+    }
+}
+
+/// The per-layer choice sets (paper's §2 instantiation: 6 x 9 = 54).
+#[derive(Debug, Clone)]
+pub struct SearchSpace {
+    pub attn: Vec<AttnChoice>,
+    pub ffn: Vec<FfnChoice>,
+}
+
+impl SearchSpace {
+    /// Full space for a parent with `n_heads` query heads.
+    pub fn full(n_heads: u32) -> SearchSpace {
+        let mut attn = vec![];
+        for divisor in [1u32, 2, 4, 8] {
+            if n_heads % divisor == 0 && n_heads / divisor >= 1 {
+                attn.push(AttnChoice::Gqa { divisor });
+            }
+        }
+        attn.push(AttnChoice::Linear);
+        attn.push(AttnChoice::NoOp);
+        let mut ffn: Vec<FfnChoice> =
+            (0..FFN_RATIO_NAMES.len()).map(|i| FfnChoice::Ratio(i as u8)).collect();
+        ffn.push(FfnChoice::Linear);
+        ffn.push(FfnChoice::NoOp);
+        SearchSpace { attn, ffn }
+    }
+
+    /// "No-op only" ablation space (paper §8.1.5): parent block or skip.
+    pub fn noop_only(n_heads: u32) -> SearchSpace {
+        let _ = n_heads;
+        SearchSpace {
+            attn: vec![AttnChoice::Gqa { divisor: 1 }, AttnChoice::NoOp],
+            ffn: vec![FfnChoice::Ratio(0), FfnChoice::NoOp],
+        }
+    }
+
+    /// Reduced space for coupled-BLD refinement (paper §8.1.1).
+    pub fn reduced(attn: Vec<AttnChoice>, ffn: Vec<FfnChoice>) -> SearchSpace {
+        SearchSpace { attn, ffn }
+    }
+
+    pub fn per_layer_combinations(&self) -> usize {
+        self.attn.len() * self.ffn.len()
+    }
+
+    /// log10 of the total architecture count for `layers` layers — the
+    /// paper's 10^138 headline for Llama-70B.
+    pub fn log10_size(&self, layers: usize) -> f64 {
+        (self.per_layer_combinations() as f64).log10() * layers as f64
+    }
+}
+
+/// One layer's assembled block: (attention choice, FFN choice).
+pub type BlockChoice = (AttnChoice, FfnChoice);
+
+/// A full child architecture.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Arch {
+    pub layers: Vec<BlockChoice>,
+}
+
+impl Arch {
+    /// The parent: full MHA + full FFN everywhere.
+    pub fn parent(n_layers: usize) -> Arch {
+        Arch {
+            layers: vec![(AttnChoice::Gqa { divisor: 1 }, FfnChoice::Ratio(0)); n_layers],
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Fraction of layer choices identical to `other` (diversity metric for
+    /// the MIP's solution-diversity constraint, paper §4.3).
+    pub fn similarity(&self, other: &Arch) -> f64 {
+        assert_eq!(self.layers.len(), other.layers.len());
+        let same = self
+            .layers
+            .iter()
+            .zip(&other.layers)
+            .filter(|(a, b)| a == b)
+            .count();
+        same as f64 / self.layers.len() as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.layers
+                .iter()
+                .map(|(a, f)| {
+                    Json::from_pairs(vec![
+                        ("attn", Json::str(&a.name())),
+                        ("ffn", Json::str(&f.name())),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    pub fn from_json(j: &Json) -> Option<Arch> {
+        let arr = j.as_arr()?;
+        let mut layers = Vec::with_capacity(arr.len());
+        for l in arr {
+            let a = AttnChoice::from_name(l.get("attn")?.as_str()?)?;
+            let f = FfnChoice::from_name(l.get("ffn")?.as_str()?)?;
+            layers.push((a, f));
+        }
+        Some(Arch { layers })
+    }
+
+    /// Short human-readable signature, e.g. "L0:gqa_r4+r50 L1:noop+r100 ..."
+    pub fn signature(&self) -> String {
+        self.layers
+            .iter()
+            .enumerate()
+            .map(|(i, (a, f))| format!("L{i}:{}+{}", a.name(), f.name()))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_space_matches_paper_counts() {
+        // paper: 8 query heads -> gqa{8,4,2,1 kv} + linear + noop = 6 attn;
+        // 7 ratios + linear + noop = 9 ffn; 54 per layer; 54^80 ~ 1e138.
+        let s = SearchSpace::full(8);
+        assert_eq!(s.attn.len(), 6);
+        assert_eq!(s.ffn.len(), 9);
+        assert_eq!(s.per_layer_combinations(), 54);
+        let log10 = s.log10_size(80);
+        assert!(log10 > 138.0 && log10 < 139.0, "log10 size {log10}");
+    }
+
+    #[test]
+    fn name_roundtrip() {
+        for a in SearchSpace::full(8).attn {
+            assert_eq!(AttnChoice::from_name(&a.name()), Some(a));
+        }
+        for f in SearchSpace::full(8).ffn {
+            assert_eq!(FfnChoice::from_name(&f.name()), Some(f));
+        }
+    }
+
+    #[test]
+    fn arch_json_roundtrip() {
+        let mut arch = Arch::parent(4);
+        arch.layers[1] = (AttnChoice::Linear, FfnChoice::Ratio(3));
+        arch.layers[2] = (AttnChoice::NoOp, FfnChoice::NoOp);
+        let j = arch.to_json();
+        assert_eq!(Arch::from_json(&Json::parse(&j.to_string()).unwrap()), Some(arch));
+    }
+
+    #[test]
+    fn similarity_metric() {
+        let a = Arch::parent(4);
+        let mut b = a.clone();
+        assert_eq!(a.similarity(&b), 1.0);
+        b.layers[0] = (AttnChoice::NoOp, FfnChoice::NoOp);
+        assert_eq!(a.similarity(&b), 0.75);
+    }
+
+    #[test]
+    fn small_head_counts_shrink_attn_space() {
+        let s = SearchSpace::full(4);
+        assert_eq!(s.attn.len(), 5); // divisor 8 invalid for 4 heads
+    }
+}

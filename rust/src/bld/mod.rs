@@ -1,0 +1,386 @@
+//! Blockwise Local Distillation (paper §3): train every block variant in
+//! the library to mimic its parent block, feeding *parent* activations so
+//! all jobs are independent ("only the parent activations are transferred
+//! between layers", Fig. 2).
+//!
+//! Decoupled BLD (§3.1) trains each attention variant against the parent
+//! attention subblock's output and each FFN variant against the parent FFN
+//! subblock's output — (m + n) · L jobs instead of m · n · L. Coupled BLD
+//! trains an (attention, FFN) pair jointly against the parent block output,
+//! used on a reduced subspace for refinement (§8.1.1).
+//!
+//! The objective is the normalized MSE of §3: MSE(o_p, o_c) / MSE(o_p, 0).
+//! All jobs step on the same data stream each round — the scheduling
+//! structure of the paper's multi-GPU pipeline with P = 1.
+
+use anyhow::Result;
+use std::collections::HashMap;
+
+use crate::arch::{Arch, AttnChoice, FfnChoice, SearchSpace};
+use crate::config::Manifest;
+use crate::data::Batcher;
+use crate::model::{CompiledModel, Trace};
+use crate::runtime::{literal::tensor_to_lit, lit_to_tensor, Registry};
+use crate::tensor::Tensor;
+use crate::train::losses::nmse_loss_and_grad;
+use crate::train::{Adam, AdamCfg};
+use crate::weights::{init, store::block_key, Store};
+use crate::info;
+
+/// One library-construction job: train `variant` of `kind` at `layer`.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Job {
+    pub layer: usize,
+    pub kind: &'static str, // "attn" | "ffn"
+    pub variant: String,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct BldReport {
+    /// final normalized-MSE per job
+    pub final_loss: HashMap<String, f64>,
+    pub steps: usize,
+    pub tokens: u64,
+    pub jobs: usize,
+}
+
+fn job_key(j: &Job) -> String {
+    format!("L{}.{}@{}", j.layer, j.kind, j.variant)
+}
+
+/// Enumerate decoupled-BLD jobs for a search space: every non-parent,
+/// non-noop variant at every layer.
+pub fn decoupled_jobs(space: &SearchSpace, n_layers: usize) -> Vec<Job> {
+    let mut jobs = Vec::new();
+    for l in 0..n_layers {
+        for a in &space.attn {
+            match a {
+                AttnChoice::Gqa { divisor: 1 } | AttnChoice::NoOp => {}
+                _ => jobs.push(Job { layer: l, kind: "attn", variant: a.name() }),
+            }
+        }
+        for f in &space.ffn {
+            match f {
+                FfnChoice::Ratio(0) | FfnChoice::NoOp => {}
+                _ => jobs.push(Job { layer: l, kind: "ffn", variant: f.name() }),
+            }
+        }
+    }
+    jobs
+}
+
+/// Initialize library weights for a job from the parent (paper §3.2)
+/// using calibration activations when provided.
+pub fn init_job_weights(
+    man: &Manifest,
+    store: &mut Store,
+    job: &Job,
+    calib_h: Option<&Tensor>,
+) -> Result<()> {
+    let cfg = &man.cfg;
+    if job.kind == "attn" {
+        let parent = store.block(job.layer, "attn", "gqa_r1", &man.attn_variants["gqa_r1"])?;
+        let ws = match AttnChoice::from_name(&job.variant).unwrap() {
+            AttnChoice::Gqa { divisor } => init::derive_gqa(cfg, &parent, divisor),
+            AttnChoice::Linear => init::derive_attn_linear(&parent),
+            AttnChoice::NoOp => return Ok(()),
+        };
+        let layout = man.attn_variants[&job.variant].clone();
+        store.put_block(job.layer, "attn", &job.variant, &layout, ws);
+    } else {
+        let parent = store.block(job.layer, "ffn", "r100", &man.ffn_variants["r100"])?;
+        let ws = match FfnChoice::from_name(&job.variant).unwrap() {
+            FfnChoice::Ratio(_) => {
+                let i_dim = man.ffn_variants[&job.variant].i_dim;
+                init::derive_ffn_ratio(&parent, i_dim, calib_h)
+            }
+            FfnChoice::Linear => init::derive_ffn_linear(&parent),
+            FfnChoice::NoOp => return Ok(()),
+        };
+        let layout = man.ffn_variants[&job.variant].clone();
+        store.put_block(job.layer, "ffn", &job.variant, &layout, ws);
+    }
+    Ok(())
+}
+
+/// Post-norm calibration activations for layer `l`'s FFN: mean over a
+/// parent trace batch of the FFN block inputs, flattened to [b*s, d].
+/// (Channel Contribution needs the *post-norm* h; the norm is cheap to
+/// apply host-side.)
+fn calib_hidden(man: &Manifest, store: &Store, trace: &Trace, layer: usize) -> Result<Tensor> {
+    let x = lit_to_tensor(&trace.ffn_in[layer])?;
+    let d = man.cfg.d;
+    let t = x.numel() / d;
+    let norm = store.get(&block_key(layer, "ffn", "r100", "norm"))?;
+    let mut out = Tensor::zeros(&[t, d]);
+    let eps = man.cfg.eps as f32;
+    for row in 0..t {
+        let xs = &x.data[row * d..(row + 1) * d];
+        let ms = xs.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let r = 1.0 / (ms + eps).sqrt();
+        for j in 0..d {
+            out.data[row * d + j] = xs[j] * r * norm.data[j];
+        }
+    }
+    Ok(out)
+}
+
+/// Run decoupled BLD: initialize (§3.2) and train (§3) the whole library.
+/// `store` holds the parent and receives the trained library entries.
+pub fn run_decoupled(
+    reg: &Registry,
+    store: &mut Store,
+    space: &SearchSpace,
+    batcher: &mut Batcher,
+    steps: usize,
+    lr: f32,
+) -> Result<BldReport> {
+    let man = &reg.man;
+    let n_layers = man.cfg.n_layers;
+    let parent_arch = Arch::parent(n_layers);
+    let jobs = decoupled_jobs(space, n_layers);
+    info!("BLD(decoupled): {} jobs x {} steps", jobs.len(), steps);
+
+    // calibration pass for Channel-Contribution inits
+    let parent = CompiledModel::assemble(man, store, &parent_arch)?;
+    let calib_batch = batcher.next_batch();
+    let calib_trace = parent.forward(reg, "train", &calib_batch.inputs, calib_batch.b, calib_batch.s)?;
+    for job in &jobs {
+        let h = if job.kind == "ffn" {
+            Some(calib_hidden(man, store, &calib_trace, job.layer)?)
+        } else {
+            None
+        };
+        init_job_weights(man, store, job, h.as_ref())?;
+    }
+
+    // one Adam state per job; all jobs share the data stream
+    let mut adams: HashMap<String, Adam> =
+        jobs.iter().map(|j| (job_key(j), Adam::new(AdamCfg { lr, ..Default::default() }))).collect();
+    let mut report = BldReport { jobs: jobs.len(), steps, ..Default::default() };
+
+    for step in 0..steps {
+        let batch = batcher.next_batch();
+        let parent = CompiledModel::assemble(man, store, &parent_arch)?;
+        let trace = parent.forward(reg, "train", &batch.inputs, batch.b, batch.s)?;
+        report.tokens += (batch.b * batch.s) as u64;
+        for job in &jobs {
+            let (x, target) = job_io(&trace, job, n_layers);
+            let loss = bld_step(reg, store, job, x, target, adams.get_mut(&job_key(job)).unwrap())?;
+            if step + 1 == steps {
+                report.final_loss.insert(job_key(job), loss);
+            }
+        }
+        if step % 10 == 0 {
+            let mean: f64 = jobs
+                .iter()
+                .filter_map(|j| report.final_loss.get(&job_key(j)))
+                .sum::<f64>()
+                / report.final_loss.len().max(1) as f64;
+            crate::debug!("bld step {step}: last mean nmse {mean:.4}");
+        }
+    }
+    Ok(report)
+}
+
+/// (input, target) literals for a decoupled job from the parent trace.
+fn job_io<'a>(trace: &'a Trace, job: &Job, n_layers: usize) -> (&'a xla::Literal, &'a xla::Literal) {
+    if job.kind == "attn" {
+        // attn subblock: input = layer input, target = parent attn output
+        (&trace.attn_in[job.layer], &trace.ffn_in[job.layer])
+    } else {
+        // ffn subblock: input = parent attn output, target = layer output
+        let target = if job.layer + 1 < n_layers {
+            &trace.attn_in[job.layer + 1]
+        } else {
+            &trace.hidden
+        };
+        (&trace.ffn_in[job.layer], target)
+    }
+}
+
+/// One normalized-MSE distillation step of a single subblock.
+fn bld_step(
+    reg: &Registry,
+    store: &mut Store,
+    job: &Job,
+    x: &xla::Literal,
+    target: &xla::Literal,
+    adam: &mut Adam,
+) -> Result<f64> {
+    let man = &reg.man;
+    let layout = if job.kind == "attn" {
+        man.attn_variants[&job.variant].clone()
+    } else {
+        man.ffn_variants[&job.variant].clone()
+    };
+    let ws = store.block(job.layer, job.kind, &job.variant, &layout)?;
+    let lits: Vec<xla::Literal> = ws.iter().map(|t| tensor_to_lit(t)).collect::<Result<_>>()?;
+    let prefix = format!("{}_{}", job.kind, job.variant);
+
+    // forward
+    let mut inputs: Vec<&xla::Literal> = vec![x];
+    inputs.extend(lits.iter());
+    let y = reg.run(&format!("{prefix}_train_fwd"), &inputs)?.remove(0);
+
+    // normalized MSE + grad
+    let yc = lit_to_tensor(&y)?;
+    let yp = lit_to_tensor(target)?;
+    let (loss, dy) = nmse_loss_and_grad(&yc, &yp);
+
+    // backward
+    let dy_lit = tensor_to_lit(&dy)?;
+    let mut vjp_in: Vec<&xla::Literal> = vec![x];
+    vjp_in.extend(lits.iter());
+    vjp_in.push(&dy_lit);
+    let mut out = reg.run(&format!("{prefix}_train_vjp"), &vjp_in)?;
+    out.remove(0); // dx unused — inputs are parent activations
+
+    adam.begin_step();
+    for ((name, _), dlit) in layout.weights.iter().zip(out) {
+        let key = block_key(job.layer, job.kind, &job.variant, name);
+        let g = lit_to_tensor(&dlit)?;
+        let w = store.map.get_mut(&key).unwrap();
+        adam.update(&key, w, &g, 1.0);
+    }
+    Ok(loss)
+}
+
+/// Coupled BLD (§8.1.1): train (attention, FFN) pairs jointly against the
+/// parent *block* output, on a reduced search space.
+pub fn run_coupled(
+    reg: &Registry,
+    store: &mut Store,
+    space: &SearchSpace,
+    batcher: &mut Batcher,
+    steps: usize,
+    lr: f32,
+) -> Result<BldReport> {
+    let man = &reg.man;
+    let n_layers = man.cfg.n_layers;
+    let parent_arch = Arch::parent(n_layers);
+
+    // pairs of trainable variants (skip pure-parent pair; noop handled by MIP)
+    let mut pairs: Vec<(usize, AttnChoice, FfnChoice)> = Vec::new();
+    for l in 0..n_layers {
+        for a in &space.attn {
+            for f in &space.ffn {
+                if matches!(a, AttnChoice::NoOp) || matches!(f, FfnChoice::NoOp) {
+                    continue;
+                }
+                if matches!(a, AttnChoice::Gqa { divisor: 1 }) && matches!(f, FfnChoice::Ratio(0)) {
+                    continue;
+                }
+                pairs.push((l, *a, *f));
+            }
+        }
+    }
+    info!("BLD(coupled): {} pairs x {} steps", pairs.len(), steps);
+
+    // initialize any missing variant weights from the parent
+    let parent = CompiledModel::assemble(man, store, &parent_arch)?;
+    let calib_batch = batcher.next_batch();
+    let calib = parent.forward(reg, "train", &calib_batch.inputs, calib_batch.b, calib_batch.s)?;
+    for (l, a, f) in &pairs {
+        for (kind, variant) in [("attn", a.name()), ("ffn", f.name())] {
+            let job = Job { layer: *l, kind: if kind == "attn" { "attn" } else { "ffn" }, variant };
+            let exists = match job.kind {
+                "attn" => store.has(&block_key(*l, "attn", &job.variant, "norm")),
+                _ => store.has(&block_key(*l, "ffn", &job.variant, "norm")),
+            };
+            if !exists {
+                let h = if job.kind == "ffn" { Some(calib_hidden(man, store, &calib, *l)?) } else { None };
+                init_job_weights(man, store, &job, h.as_ref())?;
+            }
+        }
+    }
+
+    let mut adams: HashMap<String, Adam> = pairs
+        .iter()
+        .map(|(l, a, f)| {
+            (format!("L{l}.{}+{}", a.name(), f.name()), Adam::new(AdamCfg { lr, ..Default::default() }))
+        })
+        .collect();
+    let mut report = BldReport { jobs: pairs.len(), steps, ..Default::default() };
+
+    for _step in 0..steps {
+        let batch = batcher.next_batch();
+        let parent = CompiledModel::assemble(man, store, &parent_arch)?;
+        let trace = parent.forward(reg, "train", &batch.inputs, batch.b, batch.s)?;
+        report.tokens += (batch.b * batch.s) as u64;
+        for (l, a, f) in &pairs {
+            let key = format!("L{l}.{}+{}", a.name(), f.name());
+            let x = &trace.attn_in[*l];
+            let target =
+                if *l + 1 < n_layers { &trace.attn_in[*l + 1] } else { &trace.hidden };
+            let loss =
+                coupled_step(reg, store, *l, a, f, x, target, adams.get_mut(&key).unwrap())?;
+            report.final_loss.insert(key, loss);
+        }
+    }
+    Ok(report)
+}
+
+/// One coupled step: forward attn -> ffn, nMSE on block output, backward
+/// through both subblocks.
+#[allow(clippy::too_many_arguments)]
+fn coupled_step(
+    reg: &Registry,
+    store: &mut Store,
+    layer: usize,
+    a: &AttnChoice,
+    f: &FfnChoice,
+    x: &xla::Literal,
+    target: &xla::Literal,
+    adam: &mut Adam,
+) -> Result<f64> {
+    let man = &reg.man;
+    let la = man.attn_variants[&a.name()].clone();
+    let lf = man.ffn_variants[&f.name()].clone();
+    let wa: Vec<xla::Literal> = store
+        .block(layer, "attn", &a.name(), &la)?
+        .iter()
+        .map(|t| tensor_to_lit(t))
+        .collect::<Result<_>>()?;
+    let wf: Vec<xla::Literal> = store
+        .block(layer, "ffn", &f.name(), &lf)?
+        .iter()
+        .map(|t| tensor_to_lit(t))
+        .collect::<Result<_>>()?;
+    let pa = format!("attn_{}", a.name());
+    let pf = format!("ffn_{}", f.name());
+
+    let mut in_a: Vec<&xla::Literal> = vec![x];
+    in_a.extend(wa.iter());
+    let mid = reg.run(&format!("{pa}_train_fwd"), &in_a)?.remove(0);
+    let mut in_f: Vec<&xla::Literal> = vec![&mid];
+    in_f.extend(wf.iter());
+    let y = reg.run(&format!("{pf}_train_fwd"), &in_f)?.remove(0);
+
+    let (loss, dy) = nmse_loss_and_grad(&lit_to_tensor(&y)?, &lit_to_tensor(target)?);
+    let dy_lit = tensor_to_lit(&dy)?;
+
+    let mut vf: Vec<&xla::Literal> = vec![&mid];
+    vf.extend(wf.iter());
+    vf.push(&dy_lit);
+    let mut of = reg.run(&format!("{pf}_train_vjp"), &vf)?;
+    let dmid = of.remove(0);
+    let mut va: Vec<&xla::Literal> = vec![x];
+    va.extend(wa.iter());
+    va.push(&dmid);
+    let mut oa = reg.run(&format!("{pa}_train_vjp"), &va)?;
+    oa.remove(0);
+
+    adam.begin_step();
+    for ((name, _), dlit) in lf.weights.iter().zip(of) {
+        let key = block_key(layer, "ffn", &f.name(), name);
+        let g = lit_to_tensor(&dlit)?;
+        adam.update(&key, store.map.get_mut(&key).unwrap(), &g, 1.0);
+    }
+    for ((name, _), dlit) in la.weights.iter().zip(oa) {
+        let key = block_key(layer, "attn", &a.name(), name);
+        let g = lit_to_tensor(&dlit)?;
+        adam.update(&key, store.map.get_mut(&key).unwrap(), &g, 1.0);
+    }
+    Ok(loss)
+}

@@ -1,0 +1,225 @@
+//! Model configuration + artifact manifest, parsed from
+//! `artifacts/<cfg>/manifest.json` (written by `python -m compile.aot`).
+//! The manifest is the contract between the python compile path and the
+//! rust runtime: weight names/shapes per variant and executable signatures.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::arch::{AttnChoice, FfnChoice};
+use crate::util::Json;
+
+#[derive(Debug, Clone)]
+pub struct ModelCfg {
+    pub name: String,
+    pub d: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub i: usize,
+    pub v: usize,
+    pub s_train: usize,
+    pub b_train: usize,
+    pub s_prefill: usize,
+    pub b_decode: usize,
+    pub s_max: usize,
+    pub s_long: usize,
+    pub rope_theta: f64,
+    pub eps: f64,
+}
+
+impl ModelCfg {
+    pub fn qdim(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+
+    pub fn kv_heads(&self, divisor: u32) -> usize {
+        self.n_heads / divisor as usize
+    }
+
+    fn from_json(j: &Json) -> Result<ModelCfg> {
+        let gu = |k: &str| -> Result<usize> {
+            j.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow!("manifest config missing {k}"))
+        };
+        Ok(ModelCfg {
+            name: j.get("name").and_then(Json::as_str).unwrap_or("?").to_string(),
+            d: gu("d")?,
+            n_layers: gu("n_layers")?,
+            n_heads: gu("n_heads")?,
+            head_dim: gu("head_dim")?,
+            i: gu("i")?,
+            v: gu("v")?,
+            s_train: gu("s_train")?,
+            b_train: gu("b_train")?,
+            s_prefill: gu("s_prefill")?,
+            b_decode: gu("b_decode")?,
+            s_max: gu("s_max")?,
+            s_long: gu("s_long")?,
+            rope_theta: j.get("rope_theta").and_then(Json::as_f64).unwrap_or(10000.0),
+            eps: j.get("eps").and_then(Json::as_f64).unwrap_or(1e-5),
+        })
+    }
+}
+
+/// Weight layout of one variant: ordered (name, shape) pairs.
+#[derive(Debug, Clone)]
+pub struct VariantLayout {
+    pub weights: Vec<(String, Vec<usize>)>,
+    /// kv heads (gqa attn variants), 0 otherwise
+    pub kv_heads: usize,
+    /// intermediate dim (ffn ratio variants), 0 otherwise
+    pub i_dim: usize,
+}
+
+impl VariantLayout {
+    pub fn param_count(&self) -> usize {
+        self.weights.iter().map(|(_, s)| s.iter().product::<usize>()).sum()
+    }
+}
+
+/// Executable signature from the manifest.
+#[derive(Debug, Clone)]
+pub struct ExecSig {
+    pub file: String,
+    pub in_shapes: Vec<(String, Vec<usize>)>,
+    pub out_shapes: Vec<(String, Vec<usize>)>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub cfg: ModelCfg,
+    pub attn_variants: BTreeMap<String, VariantLayout>,
+    pub ffn_variants: BTreeMap<String, VariantLayout>,
+    pub execs: BTreeMap<String, ExecSig>,
+}
+
+fn parse_variants(j: &Json, extra_key: &str) -> Result<BTreeMap<String, VariantLayout>> {
+    let mut out = BTreeMap::new();
+    for (name, v) in j.as_obj().ok_or_else(|| anyhow!("variants not an object"))? {
+        let weights = v
+            .get("weights")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("variant {name} missing weights"))?
+            .iter()
+            .map(|w| {
+                let n = w.idx(0).and_then(Json::as_str).unwrap_or("?").to_string();
+                let s = w
+                    .idx(1)
+                    .and_then(Json::as_arr)
+                    .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                    .unwrap_or_default();
+                (n, s)
+            })
+            .collect();
+        let extra = v.get(extra_key).and_then(Json::as_usize).unwrap_or(0);
+        let layout = if extra_key == "kv_heads" {
+            VariantLayout { weights, kv_heads: extra, i_dim: 0 }
+        } else {
+            VariantLayout { weights, kv_heads: 0, i_dim: extra }
+        };
+        out.insert(name.clone(), layout);
+    }
+    Ok(out)
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse error: {e}"))?;
+        let cfg = ModelCfg::from_json(j.get("config").ok_or_else(|| anyhow!("no config"))?)?;
+        let attn_variants =
+            parse_variants(j.get("attn_variants").ok_or_else(|| anyhow!("no attn_variants"))?, "kv_heads")?;
+        let ffn_variants =
+            parse_variants(j.get("ffn_variants").ok_or_else(|| anyhow!("no ffn_variants"))?, "i_dim")?;
+        let mut execs = BTreeMap::new();
+        for (name, e) in j
+            .get("execs")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("no execs"))?
+        {
+            let shapes = |key: &str| -> Vec<(String, Vec<usize>)> {
+                e.get(key)
+                    .and_then(Json::as_arr)
+                    .map(|a| {
+                        a.iter()
+                            .map(|s| {
+                                (
+                                    s.get("dtype").and_then(Json::as_str).unwrap_or("float32").to_string(),
+                                    s.get("shape")
+                                        .and_then(Json::as_arr)
+                                        .map(|d| d.iter().filter_map(Json::as_usize).collect())
+                                        .unwrap_or_default(),
+                                )
+                            })
+                            .collect()
+                    })
+                    .unwrap_or_default()
+            };
+            execs.insert(
+                name.clone(),
+                ExecSig {
+                    file: e.get("file").and_then(Json::as_str).unwrap_or("").to_string(),
+                    in_shapes: shapes("in"),
+                    out_shapes: shapes("out"),
+                },
+            );
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), cfg, attn_variants, ffn_variants, execs })
+    }
+
+    pub fn exec_path(&self, name: &str) -> Result<PathBuf> {
+        let sig = self.execs.get(name).ok_or_else(|| anyhow!("unknown exec {name}"))?;
+        Ok(self.dir.join(&sig.file))
+    }
+
+    /// Layout for an architecture choice (None for NoOp).
+    pub fn attn_layout(&self, c: &AttnChoice) -> Option<&VariantLayout> {
+        match c {
+            AttnChoice::NoOp => None,
+            _ => self.attn_variants.get(&c.name()),
+        }
+    }
+
+    pub fn ffn_layout(&self, c: &FfnChoice) -> Option<&VariantLayout> {
+        match c {
+            FfnChoice::NoOp => None,
+            _ => self.ffn_variants.get(&c.name()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "config": {"name":"t","d":8,"n_layers":2,"n_heads":2,"head_dim":4,"i":16,
+                 "v":32,"s_train":8,"b_train":2,"s_prefill":8,"b_decode":2,
+                 "s_max":12,"s_long":16,"rope_theta":10000.0,"eps":1e-5},
+      "attn_variants": {"gqa_r1": {"weights": [["norm",[8]],["wq",[8,8]],["wk",[8,8]],["wv",[8,8]],["wo",[8,8]]], "kv_heads": 2},
+                         "linear": {"weights": [["norm",[8]],["wl",[8,8]]], "kv_heads": 0}},
+      "ffn_variants": {"r100": {"weights": [["norm",[8]],["wg",[8,16]],["wu",[8,16]],["wd",[16,8]]], "i_dim": 16}},
+      "execs": {"attn_gqa_r1_train_fwd": {"file":"a.hlo.txt","in":[{"dtype":"float32","shape":[2,8,8]}],"out":[{"dtype":"float32","shape":[2,8,8]}]}}
+    }"#;
+
+    #[test]
+    fn parses_sample_manifest() {
+        let dir = std::env::temp_dir().join("puzzle_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), SAMPLE).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.cfg.d, 8);
+        assert_eq!(m.cfg.qdim(), 8);
+        assert_eq!(m.attn_variants["gqa_r1"].kv_heads, 2);
+        assert_eq!(m.attn_variants["gqa_r1"].param_count(), 8 + 4 * 64);
+        assert_eq!(m.ffn_variants["r100"].i_dim, 16);
+        assert_eq!(m.execs["attn_gqa_r1_train_fwd"].in_shapes[0].1, vec![2, 8, 8]);
+        assert!(m.attn_layout(&AttnChoice::NoOp).is_none());
+        assert!(m.attn_layout(&AttnChoice::Linear).is_some());
+    }
+}

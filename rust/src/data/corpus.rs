@@ -1,0 +1,289 @@
+//! Domain sentence generators and corpus mixes ("Distillation Mix").
+
+use super::world::{World, BOS, EOS, EQ, PLUS, QRY, SEP};
+use crate::util::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Domain {
+    Facts,
+    Math,
+    Narrative,
+    Code,
+    Instruct,
+}
+
+impl Domain {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Domain::Facts => "facts",
+            Domain::Math => "math",
+            Domain::Narrative => "narrative",
+            Domain::Code => "code",
+            Domain::Instruct => "instruct",
+        }
+    }
+}
+
+/// A weighted mix of domains — the analog of the paper's dataset mixtures.
+#[derive(Debug, Clone)]
+pub struct CorpusMix {
+    pub name: String,
+    pub domains: Vec<(Domain, f64)>,
+}
+
+impl CorpusMix {
+    /// The paper's diverse "Distillation Mix" analog.
+    pub fn distillation_mix() -> CorpusMix {
+        CorpusMix {
+            name: "distillation_mix".into(),
+            domains: vec![
+                (Domain::Facts, 0.32),
+                (Domain::Math, 0.15),
+                (Domain::Narrative, 0.28),
+                (Domain::Code, 0.10),
+                (Domain::Instruct, 0.15),
+            ],
+        }
+    }
+
+    /// Narrative-only mix — the "Project Gutenberg" analog (Table 9):
+    /// literary text without STEM/conversational coverage.
+    pub fn gutenberg() -> CorpusMix {
+        CorpusMix { name: "gutenberg".into(), domains: vec![(Domain::Narrative, 1.0)] }
+    }
+
+    /// Instruction-only mix for the lightweight-alignment experiment
+    /// (Table 5 analog).
+    pub fn align_mix() -> CorpusMix {
+        CorpusMix {
+            name: "align_mix".into(),
+            domains: vec![(Domain::Instruct, 0.8), (Domain::Facts, 0.2)],
+        }
+    }
+
+    fn sample_domain(&self, rng: &mut Rng) -> Domain {
+        let total: f64 = self.domains.iter().map(|(_, w)| w).sum();
+        let mut u = rng.f64() * total;
+        for (d, w) in &self.domains {
+            u -= w;
+            if u <= 0.0 {
+                return *d;
+            }
+        }
+        self.domains.last().unwrap().0
+    }
+}
+
+/// Append one sentence of `domain` to `out`.
+pub fn gen_sentence(world: &World, domain: Domain, rng: &mut Rng, out: &mut Vec<u32>) {
+    let v = &world.vocab;
+    match domain {
+        Domain::Facts => {
+            let e = rng.below(v.n_entities as usize) as u32;
+            let r = rng.below(v.n_relations as usize) as u32;
+            out.extend_from_slice(&[v.entity(e), v.relation(r), SEP, world.fact_value(e, r), EOS]);
+        }
+        Domain::Instruct => {
+            // question form of the same facts; answering these well is what
+            // GenScore measures and what alignment finetuning improves.
+            let e = rng.below(v.n_entities as usize) as u32;
+            let r = rng.below(v.n_relations as usize) as u32;
+            out.extend_from_slice(&[
+                QRY,
+                v.entity(e),
+                v.relation(r),
+                SEP,
+                world.fact_value(e, r),
+                EOS,
+            ]);
+        }
+        Domain::Math => {
+            let a = rng.below(10) as u32;
+            let b = rng.below(10) as u32;
+            let c = a + b;
+            out.extend_from_slice(&[v.digit(a), PLUS, v.digit(b), EQ]);
+            if c >= 10 {
+                out.push(v.digit(c / 10));
+            }
+            out.push(v.digit(c % 10));
+            out.push(EOS);
+        }
+        Domain::Narrative => {
+            let len = rng.range(8, 24);
+            let mut cur = v.filler(rng.below(v.n_filler() as usize) as u32);
+            out.push(cur);
+            for _ in 0..len {
+                // mostly follow the world's Markov process; occasionally jump
+                cur = if rng.f32() < 0.85 {
+                    world.narrative_successor(cur, rng, 3)
+                } else {
+                    v.filler(rng.below(v.n_filler() as usize) as u32)
+                };
+                out.push(cur);
+            }
+            out.push(EOS);
+        }
+        Domain::Code => {
+            // balanced-bracket sequences: filler tokens 0..8 act as 4
+            // open/close pairs; models must learn the matching structure.
+            let mut stack: Vec<u32> = Vec::new();
+            let mut budget = rng.range(6, 20);
+            while budget > 0 || !stack.is_empty() {
+                let open = budget > 0 && (stack.len() < 4) && (stack.is_empty() || rng.f32() < 0.5);
+                if open {
+                    let pair = rng.below(4) as u32;
+                    out.push(v.filler(pair * 2));
+                    stack.push(pair);
+                    budget -= 1;
+                } else if let Some(pair) = stack.pop() {
+                    out.push(v.filler(pair * 2 + 1));
+                }
+            }
+            out.push(EOS);
+        }
+    }
+}
+
+/// A token sequence sampled from a mix: sentences concatenated after BOS.
+pub fn sample_sequence(world: &World, mix: &CorpusMix, len: usize, rng: &mut Rng) -> Vec<u32> {
+    let mut out = Vec::with_capacity(len + 32);
+    out.push(BOS);
+    while out.len() < len + 1 {
+        let d = mix.sample_domain(rng);
+        gen_sentence(world, d, rng, &mut out);
+    }
+    out.truncate(len + 1);
+    out
+}
+
+/// A training batch: inputs [b, s] and next-token targets [b, s].
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub b: usize,
+    pub s: usize,
+    pub inputs: Vec<i32>,
+    pub targets: Vec<i32>,
+}
+
+/// Streaming batcher over a (world, mix): infinite deterministic stream.
+pub struct Batcher {
+    world: World,
+    mix: CorpusMix,
+    b: usize,
+    s: usize,
+    rng: Rng,
+    pub tokens_served: u64,
+}
+
+impl Batcher {
+    pub fn new(world: World, mix: CorpusMix, b: usize, s: usize, seed: u64) -> Batcher {
+        Batcher { world, mix, b, s, rng: Rng::new(seed), tokens_served: 0 }
+    }
+
+    pub fn next_batch(&mut self) -> Batch {
+        let (b, s) = (self.b, self.s);
+        let mut inputs = Vec::with_capacity(b * s);
+        let mut targets = Vec::with_capacity(b * s);
+        for _ in 0..b {
+            let seq = sample_sequence(&self.world, &self.mix, s, &mut self.rng);
+            inputs.extend(seq[..s].iter().map(|&t| t as i32));
+            targets.extend(seq[1..=s].iter().map(|&t| t as i32));
+        }
+        self.tokens_served += (b * s) as u64;
+        Batch { b, s, inputs, targets }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn world() -> World {
+        World::new(42, 256)
+    }
+
+    #[test]
+    fn sequences_have_exact_len_and_valid_tokens() {
+        let w = world();
+        let mix = CorpusMix::distillation_mix();
+        let mut rng = Rng::new(1);
+        for _ in 0..10 {
+            let seq = sample_sequence(&w, &mix, 64, &mut rng);
+            assert_eq!(seq.len(), 65);
+            assert_eq!(seq[0], BOS);
+            assert!(seq.iter().all(|&t| t < w.vocab.size));
+        }
+    }
+
+    #[test]
+    fn facts_in_corpus_match_world_truth() {
+        let w = world();
+        let mut rng = Rng::new(2);
+        let mut s = Vec::new();
+        gen_sentence(&w, Domain::Facts, &mut rng, &mut s);
+        assert_eq!(s.len(), 5);
+        assert_eq!(s[2], SEP);
+        let (e_tok, r_tok, v_tok) = (s[0], s[1], s[3]);
+        let e = e_tok - w.vocab.ent0;
+        let r = r_tok - w.vocab.rel0;
+        assert_eq!(w.fact_value(e, r), v_tok);
+    }
+
+    #[test]
+    fn math_sentences_are_correct() {
+        let w = world();
+        let mut rng = Rng::new(3);
+        for _ in 0..50 {
+            let mut s = Vec::new();
+            gen_sentence(&w, Domain::Math, &mut rng, &mut s);
+            let d0 = w.vocab.dig0;
+            let a = s[0] - d0;
+            assert_eq!(s[1], PLUS);
+            let b = s[2] - d0;
+            assert_eq!(s[3], EQ);
+            let c = if s.len() == 7 { 10 * (s[4] - d0) + (s[5] - d0) } else { s[4] - d0 };
+            assert_eq!(a + b, c);
+        }
+    }
+
+    #[test]
+    fn code_sentences_are_balanced() {
+        let w = world();
+        let mut rng = Rng::new(4);
+        for _ in 0..20 {
+            let mut s = Vec::new();
+            gen_sentence(&w, Domain::Code, &mut rng, &mut s);
+            let mut stack = Vec::new();
+            for &t in &s[..s.len() - 1] {
+                let idx = t - w.vocab.fil0;
+                if idx % 2 == 0 {
+                    stack.push(idx / 2);
+                } else {
+                    assert_eq!(stack.pop(), Some(idx / 2), "mismatched bracket");
+                }
+            }
+            assert!(stack.is_empty());
+        }
+    }
+
+    #[test]
+    fn batcher_is_deterministic_and_shifted() {
+        let mk = || Batcher::new(world(), CorpusMix::distillation_mix(), 2, 32, 9);
+        let b1 = mk().next_batch();
+        let b2 = mk().next_batch();
+        assert_eq!(b1.inputs, b2.inputs);
+        // targets are inputs shifted by one within each row
+        assert_eq!(b1.inputs[1], b1.targets[0]);
+        assert_eq!(b1.inputs.len(), 64);
+    }
+
+    #[test]
+    fn gutenberg_has_no_facts() {
+        let w = world();
+        let mix = CorpusMix::gutenberg();
+        let mut rng = Rng::new(5);
+        let seq = sample_sequence(&w, &mix, 256, &mut rng);
+        let n_value_toks = seq.iter().filter(|&&t| w.vocab.is_value(t)).count();
+        assert_eq!(n_value_toks, 0, "narrative-only mix must not leak fact values");
+    }
+}

@@ -1,0 +1,26 @@
+//! Synthetic data substrate ("FactWorld").
+//!
+//! The paper's training/eval data (FineWeb/Dolma/Buzz "Distillation Mix",
+//! Project Gutenberg, MMLU/MT-Bench/GSM8K/RULER) is closed or web-scale;
+//! we substitute a deterministic synthetic language whose structure gives
+//! every benchmark a measurable signal at laptop scale:
+//!
+//!  * a world of (entity, relation) -> value facts — knowledge benchmarks
+//!    (SynthQA = MMLU proxy) test whether facts seen in pretraining are
+//!    stored in the weights;
+//!  * a Markov narrative process — perplexity/continuation benchmarks
+//!    (ContScore = HellaSwag proxy);
+//!  * digit arithmetic — SynthMath (GSM8K proxy);
+//!  * an instruction form of the facts — GenScore (MT-Bench proxy) and the
+//!    alignment-finetune experiment (Table 5);
+//!  * long-context needle/variable-tracking/frequent-words tasks over
+//!    narrative filler — RULER proxy (Table 4).
+//!
+//! Dataset-composition experiments (Table 9) contrast the full mix with a
+//! narrative-only "Gutenberg" analog.
+
+pub mod corpus;
+pub mod world;
+
+pub use corpus::{Batch, Batcher, CorpusMix, Domain};
+pub use world::{Vocab, World};

@@ -1,0 +1,226 @@
+//! Synthetic benchmark suite — the substitution for the paper's eval grid
+//! (MMLU, MT-Bench, GSM8K, HellaSwag, RULER; see DESIGN.md §2).
+//!
+//! * SynthQA (MMLU proxy): 4-way multiple choice over world facts, scored
+//!   by next-token logit ranking — knowledge stored in weights.
+//! * GenScore (MT-Bench proxy): greedy generation of the answer to
+//!   question-form prompts, scored 0–10.
+//! * SynthMath (GSM8K proxy): single-digit addition.
+//! * ContScore (HellaSwag proxy): rank the true Markov continuation
+//!   against distractors.
+//! * RULER proxy (long context): needle retrieval, 1-hop variable
+//!   tracking, frequent-token extraction at context lengths beyond the
+//!   training horizon.
+//!
+//! The paper's combined metric Accuracy = (MT-Bench x 10 + MMLU) / 2 maps
+//! to (GenScore x 10 + SynthQA) / 2.
+
+pub mod tasks;
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::arch::Arch;
+use crate::model::CompiledModel;
+use crate::runtime::{lit_i32, lit_to_tensor, Registry};
+use crate::tensor::Tensor;
+use crate::weights::Store;
+
+pub use tasks::{LongTask, McQuestion};
+
+pub struct Evaluator<'a> {
+    pub reg: &'a Registry,
+    pub model: CompiledModel,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct EvalReport {
+    pub scores: BTreeMap<String, f64>,
+}
+
+impl EvalReport {
+    /// (GenScore x 10 + SynthQA) / 2, mirroring the paper's accuracy axis.
+    pub fn accuracy(&self) -> f64 {
+        let gen = self.scores.get("genscore").copied().unwrap_or(0.0);
+        let qa = self.scores.get("synthqa").copied().unwrap_or(0.0);
+        (gen * 10.0 + qa) / 2.0
+    }
+
+    pub fn get(&self, k: &str) -> f64 {
+        self.scores.get(k).copied().unwrap_or(0.0)
+    }
+
+    pub fn row(&self) -> String {
+        let mut parts: Vec<String> =
+            self.scores.iter().map(|(k, v)| format!("{k} {v:.2}")).collect();
+        parts.push(format!("accuracy {:.2}", self.accuracy()));
+        parts.join(" | ")
+    }
+}
+
+impl<'a> Evaluator<'a> {
+    pub fn new(reg: &'a Registry, store: &Store, arch: &Arch) -> Result<Evaluator<'a>> {
+        Ok(Evaluator { reg, model: CompiledModel::assemble(&reg.man, store, arch)? })
+    }
+
+    /// Train-shaped forward over packed question rows -> logits tensor.
+    fn logits(&self, tokens: &[i32], b: usize, s: usize) -> Result<Tensor> {
+        let trace = self.model.forward(self.reg, "train", tokens, b, s)?;
+        Ok(trace.logits)
+    }
+
+    /// Long-context forward (1, s_long).
+    fn logits_long(&self, tokens: &[i32]) -> Result<Tensor> {
+        let cfg = &self.reg.man.cfg;
+        let tok = lit_i32(&[1, cfg.s_long], tokens)?;
+        let mut x = self.reg.run("embed_long", &[&tok, &self.model.embed])?.remove(0);
+        for l in 0..self.model.attn.len() {
+            for blk in [&self.model.attn[l], &self.model.ffn[l]] {
+                if let Some(prefix) = &blk.prefix {
+                    let mut inputs: Vec<&xla::Literal> = vec![&x];
+                    inputs.extend(blk.lits.iter());
+                    x = self.reg.run(&format!("{prefix}_long"), &inputs)?.remove(0);
+                }
+            }
+        }
+        let logits = self
+            .reg
+            .run("head_long", &[&x, &self.model.final_norm, &self.model.embed])?
+            .remove(0);
+        lit_to_tensor(&logits)
+    }
+
+    /// Score a set of multiple-choice questions by next-token logit
+    /// ranking, packing `b_train` questions per forward. Returns accuracy
+    /// in percent.
+    pub fn mc_accuracy(&self, questions: &[McQuestion]) -> Result<f64> {
+        let cfg = &self.reg.man.cfg;
+        let (b, s, v) = (cfg.b_train, cfg.s_train, cfg.v);
+        let mut correct = 0usize;
+        for chunk in questions.chunks(b) {
+            let mut tokens = vec![0i32; b * s];
+            for (row, q) in chunk.iter().enumerate() {
+                for (i, &t) in q.prompt.iter().take(s).enumerate() {
+                    tokens[row * s + i] = t as i32;
+                }
+            }
+            let logits = self.logits(&tokens, b, s)?;
+            for (row, q) in chunk.iter().enumerate() {
+                let pos = (q.answer_pos).min(s - 1);
+                let base = (row * s + pos) * v;
+                let lg = &logits.data[base..base + v];
+                let pick = q
+                    .candidates
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| {
+                        lg[*a.1 as usize].partial_cmp(&lg[*b.1 as usize]).unwrap()
+                    })
+                    .unwrap()
+                    .0;
+                if pick == q.correct {
+                    correct += 1;
+                }
+            }
+        }
+        Ok(100.0 * correct as f64 / questions.len().max(1) as f64)
+    }
+
+    /// Greedy full-vocab generation accuracy (GenScore / SynthMath): the
+    /// argmax token at answer_pos must equal the gold candidate.
+    pub fn greedy_accuracy(&self, questions: &[McQuestion]) -> Result<f64> {
+        let cfg = &self.reg.man.cfg;
+        let (b, s, v) = (cfg.b_train, cfg.s_train, cfg.v);
+        let mut correct = 0usize;
+        for chunk in questions.chunks(b) {
+            let mut tokens = vec![0i32; b * s];
+            for (row, q) in chunk.iter().enumerate() {
+                for (i, &t) in q.prompt.iter().take(s).enumerate() {
+                    tokens[row * s + i] = t as i32;
+                }
+            }
+            let logits = self.logits(&tokens, b, s)?;
+            for (row, q) in chunk.iter().enumerate() {
+                let pos = (q.answer_pos).min(s - 1);
+                let base = (row * s + pos) * v;
+                let lg = &logits.data[base..base + v];
+                let mut best = 0usize;
+                for (i, &x) in lg.iter().enumerate() {
+                    if x > lg[best] {
+                        best = i;
+                    }
+                }
+                if best as u32 == q.candidates[q.correct] {
+                    correct += 1;
+                }
+            }
+        }
+        Ok(100.0 * correct as f64 / questions.len().max(1) as f64)
+    }
+
+    /// Long-context MC accuracy: one question per forward at s_long.
+    pub fn long_mc_accuracy(&self, questions: &[McQuestion]) -> Result<f64> {
+        let cfg = &self.reg.man.cfg;
+        let (sl, v) = (cfg.s_long, cfg.v);
+        let mut correct = 0usize;
+        for q in questions {
+            let mut tokens = vec![0i32; sl];
+            for (i, &t) in q.prompt.iter().take(sl).enumerate() {
+                tokens[i] = t as i32;
+            }
+            let logits = self.logits_long(&tokens)?;
+            let base = q.answer_pos.min(sl - 1) * v;
+            let lg = &logits.data[base..base + v];
+            let pick = q
+                .candidates
+                .iter()
+                .enumerate()
+                .max_by(|a, b| lg[*a.1 as usize].partial_cmp(&lg[*b.1 as usize]).unwrap())
+                .unwrap()
+                .0;
+            if pick == q.correct {
+                correct += 1;
+            }
+        }
+        Ok(100.0 * correct as f64 / questions.len().max(1) as f64)
+    }
+
+    /// Run the standard benchmark suite (Table 2's rows, scaled).
+    pub fn run_suite(&self, world: &crate::data::World, n_per_task: usize, seed: u64) -> Result<EvalReport> {
+        let mut rng = crate::util::Rng::new(seed);
+        let mut report = EvalReport::default();
+        let qa = tasks::synth_qa(world, n_per_task, &mut rng, None);
+        report.scores.insert("synthqa".into(), self.mc_accuracy(&qa)?);
+        let gs = tasks::gen_questions(world, n_per_task, &mut rng);
+        report
+            .scores
+            .insert("genscore".into(), self.greedy_accuracy(&gs)? / 10.0);
+        let math = tasks::math_questions(world, n_per_task, &mut rng);
+        report.scores.insert("synthmath".into(), self.greedy_accuracy(&math)?);
+        let cont = tasks::cont_questions(world, n_per_task, &mut rng);
+        report.scores.insert("contscore".into(), self.mc_accuracy(&cont)?);
+        Ok(report)
+    }
+
+    /// RULER-proxy sweep over context lengths (Table 4 / 18 / 19 analog).
+    pub fn run_ruler(
+        &self,
+        world: &crate::data::World,
+        ctxs: &[usize],
+        n_per_task: usize,
+        seed: u64,
+    ) -> Result<Vec<(usize, f64)>> {
+        let mut out = Vec::new();
+        for &ctx in ctxs {
+            let mut rng = crate::util::Rng::new(seed ^ ctx as u64);
+            let mut accs = Vec::new();
+            for task in [LongTask::Needle, LongTask::VarTrack, LongTask::FreqWords] {
+                let qs = tasks::long_questions(world, task, ctx, n_per_task, &mut rng);
+                accs.push(self.long_mc_accuracy(&qs)?);
+            }
+            out.push((ctx, accs.iter().sum::<f64>() / accs.len() as f64));
+        }
+        Ok(out)
+    }
+}

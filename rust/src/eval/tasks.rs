@@ -1,0 +1,304 @@
+//! Benchmark question generators over a FactWorld.
+
+use crate::data::world::{World, BOS, EQ, FRQ, PLUS, QRY, SEP};
+use crate::util::Rng;
+
+/// A multiple-choice question: read logits at `answer_pos` (the position
+/// whose *next* token is the answer) and rank `candidates`.
+#[derive(Debug, Clone)]
+pub struct McQuestion {
+    pub prompt: Vec<u32>,
+    /// index into prompt whose next-token distribution is scored
+    pub answer_pos: usize,
+    pub candidates: Vec<u32>,
+    pub correct: usize,
+}
+
+fn distractors(world: &World, truth: u32, n: usize, rng: &mut Rng) -> Vec<u32> {
+    let mut out = Vec::with_capacity(n);
+    while out.len() < n {
+        let v = world.vocab.value(rng.below(world.vocab.n_values as usize) as u32);
+        if v != truth && !out.contains(&v) {
+            out.push(v);
+        }
+    }
+    out
+}
+
+fn shuffle_in(truth: u32, mut ds: Vec<u32>, rng: &mut Rng) -> (Vec<u32>, usize) {
+    let idx = rng.below(ds.len() + 1);
+    ds.insert(idx, truth);
+    (ds, idx)
+}
+
+/// SynthQA (MMLU proxy): [BOS, e, r, SEP] -> value. `relation_filter`
+/// restricts to a relation subset (Half-MMLU splits, §8.1.4 / Table 11).
+pub fn synth_qa(
+    world: &World,
+    n: usize,
+    rng: &mut Rng,
+    relation_filter: Option<&dyn Fn(u32) -> bool>,
+) -> Vec<McQuestion> {
+    let v = &world.vocab;
+    let mut out = Vec::with_capacity(n);
+    while out.len() < n {
+        let e = rng.below(v.n_entities as usize) as u32;
+        let r = rng.below(v.n_relations as usize) as u32;
+        if let Some(f) = relation_filter {
+            if !f(r) {
+                continue;
+            }
+        }
+        let truth = world.fact_value(e, r);
+        let (candidates, correct) = shuffle_in(truth, distractors(world, truth, 3, rng), rng);
+        out.push(McQuestion {
+            prompt: vec![BOS, v.entity(e), v.relation(r), SEP],
+            answer_pos: 3,
+            candidates,
+            correct,
+        });
+    }
+    out
+}
+
+/// GenScore (MT-Bench proxy): question-form prompts, answered by greedy
+/// full-vocab generation. candidates[correct] = gold token.
+pub fn gen_questions(world: &World, n: usize, rng: &mut Rng) -> Vec<McQuestion> {
+    let v = &world.vocab;
+    (0..n)
+        .map(|_| {
+            let e = rng.below(v.n_entities as usize) as u32;
+            let r = rng.below(v.n_relations as usize) as u32;
+            McQuestion {
+                prompt: vec![BOS, QRY, v.entity(e), v.relation(r), SEP],
+                answer_pos: 4,
+                candidates: vec![world.fact_value(e, r)],
+                correct: 0,
+            }
+        })
+        .collect()
+}
+
+/// SynthMath (GSM8K proxy): a + b = c with c < 10 (single-token answer).
+pub fn math_questions(world: &World, n: usize, rng: &mut Rng) -> Vec<McQuestion> {
+    let v = &world.vocab;
+    (0..n)
+        .map(|_| {
+            let a = rng.below(10) as u32;
+            let b = rng.below(10 - a as usize) as u32;
+            McQuestion {
+                prompt: vec![BOS, v.digit(a), PLUS, v.digit(b), EQ],
+                answer_pos: 4,
+                candidates: vec![v.digit(a + b)],
+                correct: 0,
+            }
+        })
+        .collect()
+}
+
+/// ContScore (HellaSwag proxy): rank the Markov-mode continuation of a
+/// narrative prefix against random fillers.
+pub fn cont_questions(world: &World, n: usize, rng: &mut Rng) -> Vec<McQuestion> {
+    let v = &world.vocab;
+    (0..n)
+        .map(|_| {
+            let mut prompt = vec![BOS];
+            let mut cur = v.filler(rng.below(v.n_filler() as usize) as u32);
+            prompt.push(cur);
+            for _ in 0..10 {
+                cur = world.narrative_mode_successor(cur);
+                prompt.push(cur);
+            }
+            let truth = world.narrative_mode_successor(cur);
+            let mut ds = Vec::new();
+            while ds.len() < 3 {
+                let f = v.filler(rng.below(v.n_filler() as usize) as u32);
+                if f != truth && !ds.contains(&f) {
+                    ds.push(f);
+                }
+            }
+            let (candidates, correct) = shuffle_in(truth, ds, rng);
+            let answer_pos = prompt.len() - 1;
+            McQuestion { prompt, answer_pos, candidates, correct }
+        })
+        .collect()
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LongTask {
+    /// a fact sentence hidden in filler; query it at the end
+    Needle,
+    /// e1 -> e2 alias plus e2's fact; query e1 (1 hop)
+    VarTrack,
+    /// one value token repeated among filler; query the most frequent
+    FreqWords,
+}
+
+/// Build long-context questions of exactly `ctx` tokens (query included),
+/// padded later by the evaluator.
+pub fn long_questions(
+    world: &World,
+    task: LongTask,
+    ctx: usize,
+    n: usize,
+    rng: &mut Rng,
+) -> Vec<McQuestion> {
+    let v = &world.vocab;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let e = rng.below(v.n_entities as usize) as u32;
+        let r = rng.below(v.n_relations as usize) as u32;
+        let truth = world.fact_value(e, r);
+        // filler body
+        let mut body: Vec<u32> = Vec::with_capacity(ctx);
+        let mut cur = v.filler(rng.below(v.n_filler() as usize) as u32);
+        for _ in 0..ctx {
+            cur = world.narrative_successor(cur, rng, 3);
+            body.push(cur);
+        }
+        let (needle, query, truth, extra): (Vec<u32>, Vec<u32>, u32, Option<Vec<u32>>) = match task {
+            LongTask::Needle => (
+                vec![v.entity(e), v.relation(r), SEP, truth],
+                vec![QRY, v.entity(e), v.relation(r), SEP],
+                truth,
+                None,
+            ),
+            LongTask::VarTrack => {
+                let e1 = world.alias_of(e, 1) - v.ent0;
+                // context: "e1 r0 SEP e" (alias stored as relation 0 linking to e)
+                // plus the needle fact for e; query e1.
+                (
+                    vec![v.entity(e), v.relation(r), SEP, truth],
+                    vec![QRY, v.entity(e1), v.relation(r), SEP],
+                    truth,
+                    Some(vec![v.entity(e1), v.relation(0), SEP, v.entity(e)]),
+                )
+            }
+            LongTask::FreqWords => {
+                // repeat `truth` k times through the body
+                (vec![], vec![FRQ, SEP], truth, None)
+            }
+        };
+        // insert needle (and alias link) at random interior offsets
+        let mut seq = vec![BOS];
+        seq.extend_from_slice(&body);
+        let tail = query.len() + needle.len() + extra.as_ref().map(|e| e.len()).unwrap_or(0) + 8;
+        let limit = ctx.saturating_sub(tail).max(2);
+        if !needle.is_empty() {
+            let at = 1 + rng.below(limit);
+            for (i, &t) in needle.iter().enumerate() {
+                seq[at + i] = t;
+            }
+        }
+        if let Some(extra) = extra {
+            let at = 1 + rng.below(limit);
+            for (i, &t) in extra.iter().enumerate() {
+                seq[at + i] = t;
+            }
+        }
+        if task == LongTask::FreqWords {
+            // sprinkle the target token so it is the clear mode
+            let k = (ctx / 16).max(4);
+            for _ in 0..k {
+                let at = 1 + rng.below(limit);
+                seq[at] = truth;
+            }
+        }
+        // append query, trim to ctx
+        seq.truncate(ctx.saturating_sub(query.len()));
+        seq.extend_from_slice(&query);
+        let answer_pos = seq.len() - 1;
+        let (candidates, correct) = shuffle_in(truth, distractors(world, truth, 3, rng), rng);
+        out.push(McQuestion { prompt: seq, answer_pos, candidates, correct });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn world() -> World {
+        World::new(5, 256)
+    }
+
+    #[test]
+    fn synth_qa_has_valid_candidates() {
+        let w = world();
+        let mut rng = Rng::new(1);
+        for q in synth_qa(&w, 20, &mut rng, None) {
+            assert_eq!(q.candidates.len(), 4);
+            assert!(q.correct < 4);
+            let truth = q.candidates[q.correct];
+            assert!(w.vocab.is_value(truth));
+            // truth matches the world's fact table
+            let e = q.prompt[1] - w.vocab.ent0;
+            let r = q.prompt[2] - w.vocab.rel0;
+            assert_eq!(w.fact_value(e, r), truth);
+            // distractors unique
+            let mut c = q.candidates.clone();
+            c.sort();
+            c.dedup();
+            assert_eq!(c.len(), 4);
+        }
+    }
+
+    #[test]
+    fn relation_filter_splits() {
+        let w = world();
+        let mut rng = Rng::new(2);
+        let even = synth_qa(&w, 10, &mut rng, Some(&|r| r % 2 == 0));
+        for q in even {
+            let r = q.prompt[2] - w.vocab.rel0;
+            assert_eq!(r % 2, 0);
+        }
+    }
+
+    #[test]
+    fn long_questions_have_exact_ctx() {
+        let w = world();
+        let mut rng = Rng::new(3);
+        for task in [LongTask::Needle, LongTask::VarTrack, LongTask::FreqWords] {
+            for q in long_questions(&w, task, 128, 5, &mut rng) {
+                assert_eq!(q.prompt.len(), 128, "{task:?}");
+                assert_eq!(q.answer_pos, 127);
+            }
+        }
+    }
+
+    #[test]
+    fn needle_is_present_in_context() {
+        let w = world();
+        let mut rng = Rng::new(4);
+        for q in long_questions(&w, LongTask::Needle, 64, 10, &mut rng) {
+            let truth = q.candidates[q.correct];
+            assert!(
+                q.prompt[..60].contains(&truth),
+                "needle value must appear in the context"
+            );
+        }
+    }
+
+    #[test]
+    fn freqwords_target_is_mode() {
+        let w = world();
+        let mut rng = Rng::new(5);
+        for q in long_questions(&w, LongTask::FreqWords, 128, 5, &mut rng) {
+            let truth = q.candidates[q.correct];
+            let count = q.prompt.iter().filter(|&&t| t == truth).count();
+            assert!(count >= 4, "target should repeat, got {count}");
+        }
+    }
+
+    #[test]
+    fn math_questions_single_token_answers() {
+        let w = world();
+        let mut rng = Rng::new(6);
+        for q in math_questions(&w, 30, &mut rng) {
+            let a = q.prompt[1] - w.vocab.dig0;
+            let b = q.prompt[3] - w.vocab.dig0;
+            assert!(a + b < 10);
+            assert_eq!(q.candidates[0], w.vocab.digit(a + b));
+        }
+    }
+}

@@ -1,0 +1,125 @@
+//! Global Knowledge Distillation uptraining (paper §5): short end-to-end
+//! training of the reassembled child against the parent, with any
+//! combination of LM / cosine / KLD losses (Table 1). Also drives parent
+//! pretraining (LM-only, no parent) and the lightweight "alignment"
+//! finetune (Table 5: instruction-mix data).
+
+use anyhow::Result;
+
+use crate::arch::Arch;
+use crate::data::Batcher;
+use crate::model::CompiledModel;
+use crate::runtime::Registry;
+use crate::train::{eval_batch, lr_schedule, train_step, Adam, AdamCfg, LossSpec, StepMetrics};
+use crate::weights::Store;
+use crate::info;
+
+#[derive(Debug, Clone)]
+pub struct GkdCfg {
+    pub steps: usize,
+    pub lr: f32,
+    pub warmup_frac: f32,
+    pub spec: LossSpec,
+    pub log_every: usize,
+}
+
+impl Default for GkdCfg {
+    fn default() -> Self {
+        GkdCfg { steps: 100, lr: 1e-3, warmup_frac: 0.05, spec: LossSpec::gkd_best(), log_every: 20 }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct GkdReport {
+    pub steps: usize,
+    pub tokens: u64,
+    pub final_train: StepMetrics,
+    /// validation KLD vs parent after training (Table 1's last column)
+    pub val_kld: f64,
+    pub val_lm: f64,
+    /// training loss curve, sampled at log_every
+    pub curve: Vec<(usize, f64)>,
+}
+
+/// Run GKD (or plain LM pretraining when `spec.lm`-only and parent unused).
+/// The parent is re-assembled from the same store at the parent arch; for
+/// pretraining pass `parent_needed = false` to skip the parent forward.
+pub fn run(
+    reg: &Registry,
+    store: &mut Store,
+    arch: &Arch,
+    batcher: &mut Batcher,
+    val_batches: &[crate::data::Batch],
+    cfg: &GkdCfg,
+) -> Result<GkdReport> {
+    let man = &reg.man;
+    let parent_arch = Arch::parent(man.cfg.n_layers);
+    let parent_needed = cfg.spec.cosine || cfg.spec.kld;
+    // snapshot parent weights so the child's updates can't drift the teacher
+    // (parent shares the store; its own keys are untouched by child training
+    // unless the child uses parent variants — which it does for unchanged
+    // layers. The teacher must stay fixed, so clone the store.)
+    let teacher_store = if parent_needed { Some(store.clone()) } else { None };
+    let parent = teacher_store
+        .as_ref()
+        .map(|s| CompiledModel::assemble(man, s, &parent_arch))
+        .transpose()?;
+
+    let mut adam = Adam::new(AdamCfg { lr: cfg.lr, ..Default::default() });
+    let warmup = (cfg.steps as f32 * cfg.warmup_frac) as u64;
+    let mut report = GkdReport { steps: cfg.steps, ..Default::default() };
+
+    for step in 0..cfg.steps {
+        let batch = batcher.next_batch();
+        report.tokens += (batch.b * batch.s) as u64;
+        let ptrace = parent
+            .as_ref()
+            .map(|p| p.forward(reg, "train", &batch.inputs, batch.b, batch.s))
+            .transpose()?;
+        let lr = lr_schedule(cfg.lr, step as u64, warmup, cfg.steps as u64);
+        let m = train_step(reg, store, arch, &mut adam, &batch, cfg.spec, ptrace.as_ref(), lr)?;
+        if step % cfg.log_every == 0 || step + 1 == cfg.steps {
+            info!(
+                "gkd[{}] step {step}/{}: loss {:.4} (lm {:.4} cos {:.4} kld {:.4})",
+                cfg.spec.name(), cfg.steps, m.loss, m.lm, m.cosine, m.kld
+            );
+            report.curve.push((step, m.loss));
+        }
+        report.final_train = m;
+    }
+
+    // validation: LM loss + KLD vs the (frozen) teacher
+    let val_parent = match &parent {
+        Some(p) => Some(p),
+        None => None,
+    };
+    let mut kld_sum = 0.0;
+    let mut lm_sum = 0.0;
+    for vb in val_batches {
+        let ptrace = match val_parent {
+            Some(p) => Some(p.forward(reg, "train", &vb.inputs, vb.b, vb.s)?),
+            None => None,
+        };
+        let (lm, kld) = eval_batch(reg, store, arch, vb, ptrace.as_ref())?;
+        lm_sum += lm;
+        kld_sum += kld;
+    }
+    let n = val_batches.len().max(1) as f64;
+    report.val_lm = lm_sum / n;
+    report.val_kld = kld_sum / n;
+    Ok(report)
+}
+
+/// Parent pretraining = LM-only training of the parent architecture.
+pub fn pretrain_parent(
+    reg: &Registry,
+    store: &mut Store,
+    batcher: &mut Batcher,
+    val_batches: &[crate::data::Batch],
+    steps: usize,
+    lr: f32,
+) -> Result<GkdReport> {
+    let arch = Arch::parent(reg.man.cfg.n_layers);
+    let cfg = GkdCfg { steps, lr, spec: LossSpec::lm_only(), warmup_frac: 0.05, log_every: 20 };
+    run(reg, store, &arch, batcher, val_batches, &cfg)
+}

@@ -1,0 +1,31 @@
+//! Puzzle: distillation-based NAS for inference-optimized LLMs (ICML 2025)
+//! — full-system reproduction. See DESIGN.md for the architecture and the
+//! substitution ledger, EXPERIMENTS.md for paper-vs-measured results.
+//!
+//! Layer map:
+//! * L3 (this crate): pipeline coordinator, BLD/GKD training drivers, MIP
+//!   architecture search, hardware cost models, serving engine, eval suite.
+//! * L2/L1 (python/compile): JAX block-variant graphs + Pallas kernels,
+//!   AOT-lowered once to `artifacts/<cfg>/*.hlo.txt` (HLO text), executed
+//!   here through the PJRT CPU client (`runtime`).
+
+pub mod arch;
+pub mod bld;
+pub mod config;
+pub mod data;
+pub mod eval;
+pub mod experiments;
+pub mod gkd;
+pub mod mip;
+pub mod model;
+pub mod serving;
+pub mod perf;
+pub mod pipeline;
+pub mod runtime;
+pub mod scoring;
+pub mod tensor;
+pub mod train;
+pub mod util;
+pub mod weights;
+
+pub use config::{Manifest, ModelCfg};

@@ -1,0 +1,175 @@
+//! Puzzle CLI — the L3 coordinator entrypoint.
+//!
+//! Subcommands:
+//!   pipeline    run the full Puzzle pipeline (parent -> BLD -> score ->
+//!               MIP -> GKD -> eval) and print the summary
+//!   exp <name>  regenerate a paper table/figure (table1..table17, fig4..fig8, all)
+//!   serve       serving-engine demo over the chosen child
+//!   measure     print measured per-block costs on this machine
+//!   info        artifact/search-space summary
+//!
+//! Common flags: --config tiny|small|base  --run-dir DIR  --scale F
+//!               --speedup X  --seed N
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Result};
+
+use puzzle::arch::{Arch, SearchSpace};
+use puzzle::data::corpus::sample_sequence;
+use puzzle::experiments::{self, ExpCtx};
+use puzzle::perf::{CostTable, Scenario};
+use puzzle::pipeline::{Pipeline, StageCfg};
+use puzzle::runtime::Registry;
+use puzzle::scoring::Metric;
+use puzzle::serving::Engine;
+use puzzle::train::LossSpec;
+use puzzle::util::{Args, Rng};
+use puzzle::{eval::Evaluator, info};
+
+fn open_registry(args: &Args) -> Result<Registry> {
+    let config = args.str("config", "tiny");
+    let dir = PathBuf::from(args.str("artifacts", "artifacts")).join(&config);
+    Registry::open(&dir)
+}
+
+fn stage_cfg(args: &Args) -> StageCfg {
+    let mut cfg = StageCfg::scaled(args.f64("scale", 1.0));
+    cfg.seed = args.u64("seed", 42);
+    if let Some(s) = args.get("parent-steps") {
+        cfg.parent_steps = s.parse().unwrap_or(cfg.parent_steps);
+    }
+    if let Some(s) = args.get("bld-steps") {
+        cfg.bld_steps = s.parse().unwrap_or(cfg.bld_steps);
+    }
+    if let Some(s) = args.get("gkd-steps") {
+        cfg.gkd_steps = s.parse().unwrap_or(cfg.gkd_steps);
+    }
+    cfg
+}
+
+fn cmd_pipeline(args: &Args) -> Result<()> {
+    let reg = open_registry(args)?;
+    let run_dir = PathBuf::from(args.str("run-dir", &format!("runs/{}", reg.man.cfg.name)));
+    let pipe = Pipeline::new(&reg, &run_dir, stage_cfg(args))?;
+    let space = SearchSpace::full(reg.man.cfg.n_heads as u32);
+    info!(
+        "search space: {} attn x {} ffn = {} per layer; |space| ~ 10^{:.1}",
+        space.attn.len(),
+        space.ffn.len(),
+        space.per_layer_combinations(),
+        space.log10_size(reg.man.cfg.n_layers)
+    );
+    let library = pipe.ensure_library(&space)?;
+    let scores = pipe.ensure_scores(&space, Metric::Kl)?;
+    let ct = pipe.default_cost_table();
+    let speedup = args.f64("speedup", 1.8);
+    let sol = pipe.search_speedup(&space, &scores, &ct, speedup)?;
+    pipe.save_arch("cli", &sol)?;
+    println!("chosen architecture: {}", sol.arch.signature());
+    let mut child = library.clone();
+    let rep = pipe.gkd_child(&mut child, &sol.arch, LossSpec::gkd_best(), pipe.cfg.gkd_steps)?;
+    child.save(&run_dir.join("child_cli.pzw"))?;
+    // final eval
+    let parent_arch = Arch::parent(reg.man.cfg.n_layers);
+    let pe = Evaluator::new(&reg, &library, &parent_arch)?
+        .run_suite(&pipe.world, pipe.cfg.eval_questions, 7)?;
+    let ce = Evaluator::new(&reg, &child, &sol.arch)?
+        .run_suite(&pipe.world, pipe.cfg.eval_questions, 7)?;
+    println!("parent: {}", pe.row());
+    println!("child : {}", ce.row());
+    println!(
+        "accuracy preserved: {:.1}% | modeled H100 speedup: {:.2}x | val KLD {:.4}",
+        100.0 * ce.accuracy() / pe.accuracy().max(1e-9),
+        sol.throughput / ct.arch_throughput(&parent_arch),
+        rep.val_kld
+    );
+    Ok(())
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let name = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("usage: puzzle exp <table1..table17|fig4..fig8|all>"))?
+        .clone();
+    let reg = open_registry(args)?;
+    let run_dir = PathBuf::from(args.str("run-dir", &format!("runs/{}", reg.man.cfg.name)));
+    let pipe = Pipeline::new(&reg, &run_dir, stage_cfg(args))?;
+    let ctx = ExpCtx::new(pipe);
+    experiments::run(&ctx, &name)
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let reg = open_registry(args)?;
+    let run_dir = PathBuf::from(args.str("run-dir", &format!("runs/{}", reg.man.cfg.name)));
+    let pipe = Pipeline::new(&reg, &run_dir, stage_cfg(args))?;
+    let space = SearchSpace::full(reg.man.cfg.n_heads as u32);
+    let library = pipe.ensure_library(&space)?;
+    let scores = pipe.ensure_scores(&space, Metric::Kl)?;
+    let ct = pipe.default_cost_table();
+    let sol = pipe.search_speedup(&space, &scores, &ct, args.f64("speedup", 1.8))?;
+    let mut eng = Engine::new(&reg, &library, &sol.arch, 64 << 20)?;
+    let n_req = args.usize("requests", 16);
+    let mut rng = Rng::new(1);
+    let c = &reg.man.cfg;
+    for _ in 0..n_req {
+        let plen = rng.range(4, c.s_prefill.min(32));
+        let prompt = sample_sequence(&pipe.world, &pipe.mix, plen, &mut rng);
+        eng.submit(prompt, args.usize("max-new", 24));
+    }
+    let responses = eng.run_to_completion()?;
+    println!("served {} requests | {}", responses.len(), eng.metrics.summary());
+    Ok(())
+}
+
+fn cmd_measure(args: &Args) -> Result<()> {
+    let reg = open_registry(args)?;
+    let c = &reg.man.cfg;
+    let sc = Scenario { prefill: c.s_prefill, decode: c.s_prefill, batch: c.b_decode };
+    let ct = CostTable::measured(&reg, &sc, args.usize("reps", 5))?;
+    println!("measured per-variant scenario costs on this machine ({}):", sc.name());
+    println!("{:<12} {:>12} {:>12} {:>14}", "attn", "secs", "params", "kv bytes/seq");
+    for (k, (s, p, kv)) in &ct.attn {
+        println!("{:<12} {:>12.5} {:>12.0} {:>14.0}", k, s, p, kv);
+    }
+    println!("{:<12} {:>12} {:>12}", "ffn", "secs", "params");
+    for (k, (s, p, _)) in &ct.ffn {
+        println!("{:<12} {:>12.5} {:>12.0}", k, s, p);
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let reg = open_registry(args)?;
+    let c = &reg.man.cfg;
+    let space = SearchSpace::full(c.n_heads as u32);
+    println!("config {} | d {} L {} heads {} i {} v {}", c.name, c.d, c.n_layers, c.n_heads, c.i, c.v);
+    println!("executables: {}", reg.man.execs.len());
+    println!(
+        "search space: {}x{}={} per layer; 10^{:.1} total",
+        space.attn.len(),
+        space.ffn.len(),
+        space.per_layer_combinations(),
+        space.log10_size(c.n_layers)
+    );
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    puzzle::util::log::init();
+    let args = Args::from_env();
+    match args.positional.first().map(String::as_str) {
+        Some("pipeline") => cmd_pipeline(&args),
+        Some("exp") => cmd_exp(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("measure") => cmd_measure(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            eprintln!(
+                "usage: puzzle <pipeline|exp|serve|measure|info> [--config tiny|small|base] [--run-dir DIR] [--scale F] [--speedup X]"
+            );
+            Ok(())
+        }
+    }
+}

@@ -1,0 +1,476 @@
+//! Dense two-phase primal simplex with bounded variables (l <= x <= u).
+//!
+//! Built from scratch (python-mip/CBC are unavailable offline). Sized for
+//! Puzzle's grouped-knapsack instances: ~L·54 structural variables but only
+//! ~L + a few constraint rows, so a dense row tableau with *implicit*
+//! variable bounds (no per-variable rows) stays small and each pivot is
+//! O(rows · cols).
+//!
+//! Upper bounds use the classic complementing trick: a nonbasic variable
+//! that moves to its upper bound is substituted x -> u - x (column sign
+//! flip + rhs shift), so every nonbasic variable always sits at zero and
+//! the core iteration is the plain simplex with an extended ratio test.
+//! Lower bounds are shifted out at build time. Equalities get phase-1
+//! artificials.
+
+const EPS: f64 = 1e-9;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Sense {
+    Le,
+    Eq,
+}
+
+#[derive(Debug, Clone)]
+pub struct Constraint {
+    /// sparse row: (var index, coefficient)
+    pub terms: Vec<(usize, f64)>,
+    pub sense: Sense,
+    pub rhs: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Lp {
+    pub n: usize,
+    /// objective to MAXIMIZE
+    pub obj: Vec<f64>,
+    pub cons: Vec<Constraint>,
+    pub lower: Vec<f64>,
+    pub upper: Vec<f64>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum LpResult {
+    Optimal { x: Vec<f64>, obj: f64 },
+    Infeasible,
+    Unbounded,
+}
+
+impl Lp {
+    pub fn new(n: usize) -> Lp {
+        Lp { n, obj: vec![0.0; n], cons: vec![], lower: vec![0.0; n], upper: vec![1.0; n] }
+    }
+
+    pub fn add_le(&mut self, terms: Vec<(usize, f64)>, rhs: f64) {
+        self.cons.push(Constraint { terms, sense: Sense::Le, rhs });
+    }
+
+    pub fn add_eq(&mut self, terms: Vec<(usize, f64)>, rhs: f64) {
+        self.cons.push(Constraint { terms, sense: Sense::Eq, rhs });
+    }
+
+    pub fn solve(&self) -> LpResult {
+        Simplex::build(self).solve(self)
+    }
+}
+
+struct Simplex {
+    m: usize,
+    ncols: usize,
+    n_struct: usize,
+    art0: usize,
+    /// row-major tableau [m x ncols], maintained as B^-1 A (complemented)
+    t: Vec<f64>,
+    /// rhs = current basic values
+    beta: Vec<f64>,
+    /// span (upper - lower) per column; infinity for slacks/artificials-pre-fix
+    u: Vec<f64>,
+    /// working objective (complement flips sign)
+    c: Vec<f64>,
+    flipped: Vec<bool>,
+    basis: Vec<usize>,
+    in_basis: Vec<bool>,
+}
+
+impl Simplex {
+    fn build(lp: &Lp) -> Simplex {
+        let m = lp.cons.len();
+        let n_slack = lp.cons.iter().filter(|c| c.sense == Sense::Le).count();
+        let n_struct = lp.n;
+        let art0 = n_struct + n_slack;
+        let ncols = art0 + m;
+        let mut t = vec![0.0; m * ncols];
+        let mut beta = vec![0.0; m];
+        let mut u = vec![f64::INFINITY; ncols];
+        for j in 0..n_struct {
+            u[j] = lp.upper[j] - lp.lower[j];
+        }
+        let mut c = vec![0.0; ncols];
+        c[..n_struct].copy_from_slice(&lp.obj);
+
+        let mut slack = 0;
+        for (row, con) in lp.cons.iter().enumerate() {
+            // shift lower bounds: rhs -= a_j * l_j
+            let mut rhs = con.rhs;
+            for &(j, v) in &con.terms {
+                t[row * ncols + j] += v;
+                rhs -= v * lp.lower[j];
+            }
+            if con.sense == Sense::Le {
+                t[row * ncols + n_struct + slack] = 1.0;
+                slack += 1;
+            }
+            // normalize rhs >= 0 so artificial start is feasible
+            if rhs < 0.0 {
+                rhs = -rhs;
+                for j in 0..art0 {
+                    t[row * ncols + j] = -t[row * ncols + j];
+                }
+            }
+            t[row * ncols + art0 + row] = 1.0;
+            beta[row] = rhs;
+        }
+
+        let basis: Vec<usize> = (0..m).map(|r| art0 + r).collect();
+        let mut in_basis = vec![false; ncols];
+        for &b in &basis {
+            in_basis[b] = true;
+        }
+        Simplex {
+            m,
+            ncols,
+            n_struct,
+            art0,
+            t,
+            beta,
+            u,
+            c,
+            flipped: vec![false; ncols],
+            basis,
+            in_basis,
+        }
+    }
+
+    fn solve(mut self, lp: &Lp) -> LpResult {
+        // phase 1: maximize -sum(artificials)
+        let mut c1 = vec![0.0; self.ncols];
+        for j in self.art0..self.ncols {
+            c1[j] = -1.0;
+        }
+        std::mem::swap(&mut self.c, &mut c1);
+        if !self.iterate() {
+            return LpResult::Unbounded;
+        }
+        let art_val: f64 = (0..self.m)
+            .filter(|&r| self.basis[r] >= self.art0)
+            .map(|r| self.beta[r])
+            .sum();
+        if art_val > 1e-6 {
+            return LpResult::Infeasible;
+        }
+        // fix artificials at zero and restore the real objective
+        for j in self.art0..self.ncols {
+            self.u[j] = 0.0;
+        }
+        std::mem::swap(&mut self.c, &mut c1); // c1 now holds phase-2 obj (flips preserved below)
+        // re-apply complement flips to the restored objective
+        for j in 0..self.ncols {
+            if self.flipped[j] {
+                self.c[j] = -self.c[j];
+            }
+        }
+        if !self.iterate() {
+            return LpResult::Unbounded;
+        }
+
+        // extract solution in original coordinates
+        let mut x = vec![0.0; self.n_struct];
+        for j in 0..self.n_struct {
+            if self.flipped[j] && !self.in_basis[j] {
+                x[j] = self.u[j]; // complemented nonbasic sits at upper
+            }
+        }
+        for r in 0..self.m {
+            let j = self.basis[r];
+            if j < self.n_struct {
+                x[j] = if self.flipped[j] { self.u[j] - self.beta[r] } else { self.beta[r] };
+            }
+        }
+        let mut obj = 0.0;
+        for j in 0..self.n_struct {
+            x[j] += lp.lower[j];
+            // clamp tiny numerical dust
+            if x[j] < lp.lower[j] {
+                x[j] = lp.lower[j];
+            }
+            if x[j] > lp.upper[j] {
+                x[j] = lp.upper[j];
+            }
+            obj += lp.obj[j] * x[j];
+        }
+        LpResult::Optimal { x, obj }
+    }
+
+    /// Core primal loop; returns false on unbounded.
+    fn iterate(&mut self) -> bool {
+        let max_iter = 50 * (self.m + self.ncols) + 200;
+        for _ in 0..max_iter {
+            // reduced costs via c_B . T
+            let cb: Vec<f64> = self.basis.iter().map(|&j| self.c[j]).collect();
+            let mut enter = None;
+            let mut best = 1e-7;
+            for j in 0..self.ncols {
+                if self.in_basis[j] || self.u[j] <= EPS {
+                    continue;
+                }
+                let mut d = self.c[j];
+                if cb.iter().any(|&x| x != 0.0) {
+                    for r in 0..self.m {
+                        let crr = cb[r];
+                        if crr != 0.0 {
+                            d -= crr * self.t[r * self.ncols + j];
+                        }
+                    }
+                }
+                if d > best {
+                    best = d;
+                    enter = Some(j);
+                }
+            }
+            let Some(jin) = enter else { return true };
+
+            // ratio test
+            let mut theta = self.u[jin];
+            let mut leave: Option<(usize, bool)> = None; // (row, hits_upper)
+            for r in 0..self.m {
+                let trj = self.t[r * self.ncols + jin];
+                if trj > EPS {
+                    let lim = self.beta[r] / trj;
+                    if lim < theta - EPS {
+                        theta = lim;
+                        leave = Some((r, false));
+                    }
+                } else if trj < -EPS {
+                    let ub = self.u[self.basis[r]];
+                    if ub.is_finite() {
+                        let lim = (ub - self.beta[r]) / (-trj);
+                        if lim < theta - EPS {
+                            theta = lim;
+                            leave = Some((r, true));
+                        }
+                    }
+                }
+            }
+            if theta.is_infinite() {
+                return false;
+            }
+            match leave {
+                None => {
+                    // bound flip of the entering variable
+                    self.complement(jin);
+                }
+                Some((r_star, hits_upper)) => {
+                    if hits_upper {
+                        // complement the leaving basic so it exits at zero
+                        let jout = self.basis[r_star];
+                        self.complement_basic(jout, r_star);
+                    }
+                    self.pivot(r_star, jin);
+                }
+            }
+        }
+        true
+    }
+
+    /// Complement a nonbasic column: x -> u - x.
+    fn complement(&mut self, j: usize) {
+        let uj = self.u[j];
+        for r in 0..self.m {
+            self.beta[r] -= self.t[r * self.ncols + j] * uj;
+            self.t[r * self.ncols + j] = -self.t[r * self.ncols + j];
+            if self.beta[r].abs() < EPS {
+                self.beta[r] = 0.0;
+            }
+        }
+        self.c[j] = -self.c[j];
+        self.flipped[j] = !self.flipped[j];
+    }
+
+    /// Complement a *basic* variable (its tableau column is e_r).
+    fn complement_basic(&mut self, j: usize, row: usize) {
+        let uj = self.u[j];
+        self.beta[row] -= uj; // becomes <= 0; the subsequent pivot restores >= 0
+        self.t[row * self.ncols + j] = -1.0;
+        self.c[j] = -self.c[j];
+        self.flipped[j] = !self.flipped[j];
+    }
+
+    fn pivot(&mut self, row: usize, col: usize) {
+        let nc = self.ncols;
+        let p = self.t[row * nc + col];
+        debug_assert!(p.abs() > EPS, "pivot on ~0");
+        let inv = 1.0 / p;
+        for j in 0..nc {
+            self.t[row * nc + j] *= inv;
+        }
+        self.beta[row] *= inv;
+        for r in 0..self.m {
+            if r == row {
+                continue;
+            }
+            let f = self.t[r * nc + col];
+            if f == 0.0 {
+                continue;
+            }
+            for j in 0..nc {
+                self.t[r * nc + j] -= f * self.t[row * nc + j];
+            }
+            self.beta[r] -= f * self.beta[row];
+            if self.beta[r].abs() < EPS {
+                self.beta[r] = 0.0;
+            }
+        }
+        let jout = self.basis[row];
+        self.in_basis[jout] = false;
+        self.in_basis[col] = true;
+        self.basis[row] = col;
+        if self.beta[row] < 0.0 && self.beta[row] > -1e-7 {
+            self.beta[row] = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_opt(lp: &Lp, want_obj: f64, want_x: Option<&[f64]>) {
+        match lp.solve() {
+            LpResult::Optimal { x, obj } => {
+                assert!((obj - want_obj).abs() < 1e-6, "obj {obj} want {want_obj} (x={x:?})");
+                if let Some(w) = want_x {
+                    for (a, b) in x.iter().zip(w) {
+                        assert!((a - b).abs() < 1e-6, "x {x:?} want {w:?}");
+                    }
+                }
+            }
+            r => panic!("{r:?}"),
+        }
+    }
+
+    #[test]
+    fn simple_le_max() {
+        // max x0 + 2 x1, x0 + x1 <= 1.5, x in [0,1]^2 -> (0.5, 1), obj 2.5
+        let mut lp = Lp::new(2);
+        lp.obj = vec![1.0, 2.0];
+        lp.add_le(vec![(0, 1.0), (1, 1.0)], 1.5);
+        assert_opt(&lp, 2.5, Some(&[0.5, 1.0]));
+    }
+
+    #[test]
+    fn upper_bounds_bind_without_constraints() {
+        let mut lp = Lp::new(3);
+        lp.obj = vec![1.0, 2.0, 3.0];
+        assert_opt(&lp, 6.0, Some(&[1.0, 1.0, 1.0]));
+    }
+
+    #[test]
+    fn group_equality() {
+        let mut lp = Lp::new(2);
+        lp.obj = vec![3.0, 1.0];
+        lp.add_eq(vec![(0, 1.0), (1, 1.0)], 1.0);
+        assert_opt(&lp, 3.0, Some(&[1.0, 0.0]));
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        let mut lp = Lp::new(2);
+        lp.add_eq(vec![(0, 1.0), (1, 1.0)], 3.0);
+        assert_eq!(lp.solve(), LpResult::Infeasible);
+    }
+
+    #[test]
+    fn grouped_knapsack_relaxation() {
+        // 2 groups x 2 choices; budget forces a fractional mix.
+        let mut lp = Lp::new(4);
+        lp.obj = vec![10.0, 4.0, 10.0, 3.0];
+        lp.add_eq(vec![(0, 1.0), (1, 1.0)], 1.0);
+        lp.add_eq(vec![(2, 1.0), (3, 1.0)], 1.0);
+        lp.add_le(vec![(0, 4.0), (1, 1.0), (2, 4.0), (3, 1.0)], 6.0);
+        // optimum: x2=1 (w 4); group0 fractional x0=1/3, x1=2/3 (w 2)
+        // obj = 10 + 10/3 + 8/3 = 16
+        match lp.solve() {
+            LpResult::Optimal { x, obj } => {
+                assert!((obj - 16.0).abs() < 1e-6, "obj {obj} x {x:?}");
+                assert!((x[0] + x[1] - 1.0).abs() < 1e-6);
+                assert!((x[2] + x[3] - 1.0).abs() < 1e-6);
+                let w: f64 = 4.0 * x[0] + x[1] + 4.0 * x[2] + x[3];
+                assert!(w <= 6.0 + 1e-6);
+            }
+            r => panic!("{r:?}"),
+        }
+    }
+
+    #[test]
+    fn respects_fixed_bounds() {
+        let mut lp = Lp::new(2);
+        lp.obj = vec![1.0, 2.0];
+        lp.lower[0] = 1.0; // x0 fixed to [1,1]
+        lp.add_le(vec![(0, 1.0), (1, 1.0)], 1.2);
+        assert_opt(&lp, 1.4, Some(&[1.0, 0.2]));
+    }
+
+    #[test]
+    fn negative_rhs_and_coefficients() {
+        // max -x0 s.t. -x0 <= -0.3 (i.e. x0 >= 0.3)
+        let mut lp = Lp::new(1);
+        lp.obj = vec![-1.0];
+        lp.add_le(vec![(0, -1.0)], -0.3);
+        assert_opt(&lp, -0.3, Some(&[0.3]));
+    }
+
+    #[test]
+    fn random_lps_match_enumeration() {
+        // vertices of box-constrained LPs with one <= row: optimum is at a
+        // vertex of {0,1}^n intersected with the halfspace — check against
+        // a fine grid search.
+        use crate::util::Rng;
+        let mut rng = Rng::new(123);
+        for case in 0..30 {
+            let n = 3;
+            let obj: Vec<f64> = (0..n).map(|_| (rng.f64() - 0.3) * 4.0).collect();
+            let w: Vec<f64> = (0..n).map(|_| rng.f64() * 2.0 + 0.1).collect();
+            let budget = rng.f64() * 3.0 + 0.2;
+            let mut lp = Lp::new(n);
+            lp.obj = obj.clone();
+            lp.add_le((0..n).map(|j| (j, w[j])).collect(), budget);
+            let LpResult::Optimal { obj: got, .. } = lp.solve() else {
+                panic!("case {case} not optimal")
+            };
+            // grid reference
+            let steps = 40;
+            let mut best = f64::NEG_INFINITY;
+            let mut idx = vec![0usize; n];
+            loop {
+                let x: Vec<f64> = idx.iter().map(|&i| i as f64 / steps as f64).collect();
+                let wt: f64 = (0..n).map(|j| w[j] * x[j]).sum();
+                if wt <= budget + 1e-12 {
+                    let o: f64 = (0..n).map(|j| obj[j] * x[j]).sum();
+                    if o > best {
+                        best = o;
+                    }
+                }
+                let mut k = 0;
+                loop {
+                    idx[k] += 1;
+                    if idx[k] <= steps {
+                        break;
+                    }
+                    idx[k] = 0;
+                    k += 1;
+                    if k == n {
+                        break;
+                    }
+                }
+                if k == n {
+                    break;
+                }
+            }
+            assert!(
+                got >= best - 0.02 && got <= best + 0.26,
+                "case {case}: simplex {got} vs grid {best}"
+            );
+            assert!(got >= best - 0.02, "simplex must not be below grid optimum");
+        }
+    }
+}

@@ -1,0 +1,402 @@
+//! Architecture search (paper §4.3): the grouped-knapsack MIP plus the
+//! ablation searchers (greedy §8.2.2, parameter-max §8.2.3, random
+//! §8.2.4). Variables are per-(layer, attention x FFN combo); exactly one
+//! combo per layer; memory / throughput / latency constraints from the
+//! cost table; scores from the replace-1-block table. The diversity
+//! constraint bounds overlap with previous solutions.
+
+pub mod bnb;
+pub mod lp;
+
+use anyhow::{anyhow, Result};
+
+use crate::arch::{Arch, AttnChoice, FfnChoice, SearchSpace};
+use crate::perf::CostTable;
+use crate::scoring::ScoreTable;
+use crate::util::Rng;
+
+pub use bnb::MipResult;
+pub use lp::{Lp, LpResult};
+
+/// Deployment constraints (paper's Memory_max / Throughput_min /
+/// Latency_max; any may be disabled with None).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Constraints {
+    pub memory_max_bytes: Option<f64>,
+    pub throughput_min: Option<f64>,
+    pub latency_max_secs: Option<f64>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Solution {
+    pub arch: Arch,
+    /// sum of replace-1-block costs (lower = closer to parent)
+    pub cost: f64,
+    pub secs: f64,
+    pub throughput: f64,
+    pub memory: f64,
+    pub params: f64,
+}
+
+struct Combos {
+    list: Vec<(AttnChoice, FfnChoice)>,
+}
+
+impl Combos {
+    fn new(space: &SearchSpace) -> Combos {
+        let mut list = Vec::new();
+        for a in &space.attn {
+            for f in &space.ffn {
+                list.push((*a, *f));
+            }
+        }
+        Combos { list }
+    }
+
+    fn k(&self) -> usize {
+        self.list.len()
+    }
+}
+
+fn combo_cost(scores: &ScoreTable, layer: usize, c: &(AttnChoice, FfnChoice)) -> f64 {
+    scores.get(layer, "attn", &c.0.name()) + scores.get(layer, "ffn", &c.1.name())
+}
+
+fn combo_secs(ct: &CostTable, c: &(AttnChoice, FfnChoice)) -> f64 {
+    ct.attn[&c.0.name()].0 + ct.ffn[&c.1.name()].0
+}
+
+fn combo_mem(ct: &CostTable, c: &(AttnChoice, FfnChoice)) -> f64 {
+    let (_, p_a, kv) = ct.attn[&c.0.name()];
+    let (_, p_f, _) = ct.ffn[&c.1.name()];
+    (p_a + p_f) * ct.bytes_per_param + ct.scenario.batch as f64 * kv
+}
+
+fn solution_from_arch(arch: Arch, scores: &ScoreTable, ct: &CostTable) -> Solution {
+    let cost = scores.arch_cost(&arch);
+    let secs = ct.arch_secs(&arch);
+    let throughput = ct.arch_throughput(&arch);
+    let memory = ct.arch_memory(&arch);
+    let params = ct.arch_params(&arch);
+    Solution { arch, cost, secs, throughput, memory, params }
+}
+
+/// The Puzzle MIP search. `previous` solutions + `alpha` add the §4.3
+/// diversity constraint (each new solution differs in >= (1-alpha)·L
+/// layer choices).
+pub fn search_mip(
+    space: &SearchSpace,
+    scores: &ScoreTable,
+    ct: &CostTable,
+    cons: &Constraints,
+    n_layers: usize,
+    previous: &[Arch],
+    alpha: f64,
+) -> Result<Solution> {
+    let combos = Combos::new(space);
+    let k = combos.k();
+    let n = n_layers * k;
+    let mut lp = Lp::new(n);
+    let var = |l: usize, j: usize| l * k + j;
+
+    // maximize -(sum of costs): scores are KL-style costs (lower better)
+    for l in 0..n_layers {
+        for (j, c) in combos.list.iter().enumerate() {
+            lp.obj[var(l, j)] = -combo_cost(scores, l, c);
+        }
+    }
+    // one combo per layer
+    for l in 0..n_layers {
+        lp.add_eq((0..k).map(|j| (var(l, j), 1.0)).collect(), 1.0);
+    }
+    // memory
+    if let Some(mem) = cons.memory_max_bytes {
+        let mut terms = Vec::with_capacity(n);
+        for l in 0..n_layers {
+            for (j, c) in combos.list.iter().enumerate() {
+                terms.push((var(l, j), combo_mem(ct, c)));
+            }
+        }
+        lp.add_le(terms, mem - ct.fixed_params * ct.bytes_per_param);
+    }
+    // throughput: total seconds <= tokens / throughput_min
+    let sc = &ct.scenario;
+    let total_out_tokens = (sc.batch * sc.decode) as f64;
+    let mut time_budgets = Vec::new();
+    if let Some(tp) = cons.throughput_min {
+        time_budgets.push(total_out_tokens / tp - ct.fixed_secs);
+    }
+    if let Some(lat) = cons.latency_max_secs {
+        time_budgets.push(lat - ct.fixed_secs);
+    }
+    for budget in time_budgets {
+        let mut terms = Vec::with_capacity(n);
+        for l in 0..n_layers {
+            for (j, c) in combos.list.iter().enumerate() {
+                terms.push((var(l, j), combo_secs(ct, c)));
+            }
+        }
+        lp.add_le(terms, budget);
+    }
+    // diversity vs previous solutions
+    for prev in previous {
+        let mut terms = Vec::new();
+        for (l, choice) in prev.layers.iter().enumerate() {
+            if let Some(j) = combos.list.iter().position(|c| c == choice) {
+                terms.push((var(l, j), 1.0));
+            }
+        }
+        lp.add_le(terms, alpha * n_layers as f64);
+    }
+
+    match bnb::solve_binary(&lp, 20_000) {
+        MipResult::Infeasible => Err(anyhow!("MIP infeasible under constraints {cons:?}")),
+        MipResult::Optimal { x, .. } => {
+            let mut layers = vec![(AttnChoice::NoOp, FfnChoice::NoOp); n_layers];
+            for j in x {
+                layers[j / k] = combos.list[j % k];
+            }
+            Ok(solution_from_arch(Arch { layers }, scores, ct))
+        }
+    }
+}
+
+/// Budget-constrained greedy baseline (paper §8.2.2): split the time/memory
+/// budgets equally across layers, process layers from most- to
+/// least-replaceable (mean replace-1-block score), pick the best-scoring
+/// combo within the layer's budget, and roll unused budget forward.
+pub fn search_greedy(
+    space: &SearchSpace,
+    scores: &ScoreTable,
+    ct: &CostTable,
+    cons: &Constraints,
+    n_layers: usize,
+) -> Result<Solution> {
+    let combos = Combos::new(space);
+    let sc = &ct.scenario;
+    let total_secs_budget = match (cons.throughput_min, cons.latency_max_secs) {
+        (Some(tp), lat) => {
+            let t = (sc.batch * sc.decode) as f64 / tp - ct.fixed_secs;
+            lat.map(|l| t.min(l - ct.fixed_secs)).unwrap_or(t)
+        }
+        (None, Some(l)) => l - ct.fixed_secs,
+        (None, None) => f64::INFINITY,
+    };
+    let total_mem_budget = cons
+        .memory_max_bytes
+        .map(|m| m - ct.fixed_params * ct.bytes_per_param)
+        .unwrap_or(f64::INFINITY);
+
+    // layer order: ascending mean score = easiest to replace first
+    let mut order: Vec<usize> = (0..n_layers).collect();
+    order.sort_by(|&a, &b| scores.layer_mean(a).partial_cmp(&scores.layer_mean(b)).unwrap());
+
+    let mut layers = vec![(AttnChoice::Gqa { divisor: 1 }, FfnChoice::Ratio(0)); n_layers];
+    let mut secs_left = total_secs_budget;
+    let mut mem_left = total_mem_budget;
+    for (rank, &l) in order.iter().enumerate() {
+        let remaining = (n_layers - rank) as f64;
+        let secs_budget = secs_left / remaining;
+        let mem_budget = mem_left / remaining;
+        // best-scoring combo within this layer's budget
+        let mut best: Option<(f64, usize)> = None;
+        for (j, c) in combos.list.iter().enumerate() {
+            if combo_secs(ct, c) <= secs_budget && combo_mem(ct, c) <= mem_budget {
+                let cost = combo_cost(scores, l, c);
+                if best.map(|(b, _)| cost < b).unwrap_or(true) {
+                    best = Some((cost, j));
+                }
+            }
+        }
+        let (_, j) = best.ok_or_else(|| anyhow!("greedy: no combo fits layer {l} budget"))?;
+        layers[l] = combos.list[j];
+        secs_left -= combo_secs(ct, &combos.list[j]);
+        mem_left -= combo_mem(ct, &combos.list[j]);
+    }
+    Ok(solution_from_arch(Arch { layers }, scores, ct))
+}
+
+/// Parameter-maximizing baseline (paper §8.2.3): per layer, the combo with
+/// the most parameters that fits the equally-split budget. Data-free.
+pub fn search_param_max(
+    space: &SearchSpace,
+    scores: &ScoreTable,
+    ct: &CostTable,
+    cons: &Constraints,
+    n_layers: usize,
+) -> Result<Solution> {
+    let combos = Combos::new(space);
+    let sc = &ct.scenario;
+    let secs_budget = match cons.throughput_min {
+        Some(tp) => ((sc.batch * sc.decode) as f64 / tp - ct.fixed_secs) / n_layers as f64,
+        None => f64::INFINITY,
+    };
+    let mem_budget = cons
+        .memory_max_bytes
+        .map(|m| (m - ct.fixed_params * ct.bytes_per_param) / n_layers as f64)
+        .unwrap_or(f64::INFINITY);
+    let mut layers = Vec::with_capacity(n_layers);
+    for _ in 0..n_layers {
+        let mut best: Option<(f64, usize)> = None;
+        for (j, c) in combos.list.iter().enumerate() {
+            if combo_secs(ct, c) <= secs_budget && combo_mem(ct, c) <= mem_budget {
+                let params = ct.attn[&c.0.name()].1 + ct.ffn[&c.1.name()].1;
+                if best.map(|(b, _)| params > b).unwrap_or(true) {
+                    best = Some((params, j));
+                }
+            }
+        }
+        let (_, j) = best.ok_or_else(|| anyhow!("param-max: nothing fits"))?;
+        layers.push(combos.list[j]);
+    }
+    Ok(solution_from_arch(Arch { layers }, scores, ct))
+}
+
+/// Random-from-library baseline (paper §8.2.4): uniform random combos,
+/// resampled layer-wise until the time constraint holds (simple repair).
+pub fn search_random(
+    space: &SearchSpace,
+    scores: &ScoreTable,
+    ct: &CostTable,
+    cons: &Constraints,
+    n_layers: usize,
+    rng: &mut Rng,
+) -> Result<Solution> {
+    let combos = Combos::new(space);
+    let sc = &ct.scenario;
+    let secs_budget = match cons.throughput_min {
+        Some(tp) => (sc.batch * sc.decode) as f64 / tp - ct.fixed_secs,
+        None => f64::INFINITY,
+    };
+    for _attempt in 0..5000 {
+        let layers: Vec<(AttnChoice, FfnChoice)> =
+            (0..n_layers).map(|_| *rng.choice(&combos.list)).collect();
+        let arch = Arch { layers };
+        if ct.arch_secs(&arch) - ct.fixed_secs <= secs_budget {
+            if let Some(m) = cons.memory_max_bytes {
+                if ct.arch_memory(&arch) > m {
+                    continue;
+                }
+            }
+            return Ok(solution_from_arch(arch, scores, ct));
+        }
+    }
+    Err(anyhow!("random search found no feasible arch in 5000 samples"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perf::{HwProfile, Scenario};
+
+    fn setup() -> Option<(SearchSpace, ScoreTable, CostTable, usize)> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+        let man = crate::config::Manifest::load(&dir).ok()?;
+        let space = SearchSpace::full(man.cfg.n_heads as u32);
+        let n_layers = man.cfg.n_layers;
+        // synthetic scores: cheaper variants "hurt more", deeper layers hurt more
+        let mut scores = ScoreTable { metric_name: "synthetic".into(), ..Default::default() };
+        for l in 0..n_layers {
+            let depth = 1.0 + l as f64 * 0.3;
+            for a in &space.attn {
+                let pain = match a {
+                    AttnChoice::Gqa { divisor } => 0.01 * (*divisor as f64 - 1.0),
+                    AttnChoice::Linear => 0.3,
+                    AttnChoice::NoOp => 0.6,
+                };
+                scores.set(l, "attn", &a.name(), pain * depth);
+            }
+            for f in &space.ffn {
+                let pain = match f {
+                    FfnChoice::Ratio(i) => 0.05 * *i as f64,
+                    FfnChoice::Linear => 0.5,
+                    FfnChoice::NoOp => 0.8,
+                };
+                scores.set(l, "ffn", &f.name(), pain * depth);
+            }
+        }
+        let hw = HwProfile::h100_fp8();
+        let sc = Scenario { prefill: 128, decode: 128, batch: 8 };
+        let ct = CostTable::modeled(&man, &hw, &sc);
+        Some((space, scores, ct, n_layers))
+    }
+
+    #[test]
+    fn mip_meets_constraints_and_beats_greedy() {
+        let Some((space, scores, ct, n_layers)) = setup() else { return };
+        let parent = Arch::parent(n_layers);
+        let parent_tp = ct.arch_throughput(&parent);
+        let cons = Constraints {
+            throughput_min: Some(parent_tp * 1.8),
+            memory_max_bytes: None,
+            latency_max_secs: None,
+        };
+        let mip = search_mip(&space, &scores, &ct, &cons, n_layers, &[], 1.0).unwrap();
+        assert!(mip.throughput >= parent_tp * 1.8 * 0.999, "tp {}", mip.throughput);
+        let greedy = search_greedy(&space, &scores, &ct, &cons, n_layers).unwrap();
+        assert!(greedy.throughput >= parent_tp * 1.8 * 0.98);
+        assert!(
+            mip.cost <= greedy.cost + 1e-9,
+            "MIP ({:.4}) must beat greedy ({:.4})",
+            mip.cost,
+            greedy.cost
+        );
+        // unconstrained: MIP picks the parent (zero cost)
+        let free = search_mip(&space, &scores, &ct, &Constraints::default(), n_layers, &[], 1.0).unwrap();
+        assert!(free.cost < 1e-9, "unconstrained cost {}", free.cost);
+        assert_eq!(free.arch, parent);
+    }
+
+    #[test]
+    fn diversity_constraint_produces_different_archs() {
+        let Some((space, scores, ct, n_layers)) = setup() else { return };
+        let parent_tp = ct.arch_throughput(&Arch::parent(n_layers));
+        let cons = Constraints { throughput_min: Some(parent_tp * 1.5), ..Default::default() };
+        let s1 = search_mip(&space, &scores, &ct, &cons, n_layers, &[], 1.0).unwrap();
+        let s2 =
+            search_mip(&space, &scores, &ct, &cons, n_layers, &[s1.arch.clone()], 0.5).unwrap();
+        let sim = s1.arch.similarity(&s2.arch);
+        assert!(sim <= 0.5 + 1e-9, "similarity {sim}");
+        assert!(s2.cost >= s1.cost - 1e-9); // diversity can only cost quality
+    }
+
+    #[test]
+    fn memory_constraint_prefers_fewer_kv_heads() {
+        let Some((space, scores, ct, n_layers)) = setup() else { return };
+        // memory cap at ~40% of parent's footprint
+        let parent_mem = ct.arch_memory(&Arch::parent(n_layers));
+        let cons = Constraints { memory_max_bytes: Some(parent_mem * 0.4), ..Default::default() };
+        let sol = search_mip(&space, &scores, &ct, &cons, n_layers, &[], 1.0).unwrap();
+        assert!(sol.memory <= parent_mem * 0.4 * 1.001);
+        // at least one layer must shed kv heads or attention entirely
+        assert!(sol
+            .arch
+            .layers
+            .iter()
+            .any(|(a, _)| !matches!(a, AttnChoice::Gqa { divisor: 1 })));
+    }
+
+    #[test]
+    fn random_baseline_feasible_but_worse() {
+        let Some((space, scores, ct, n_layers)) = setup() else { return };
+        let parent_tp = ct.arch_throughput(&Arch::parent(n_layers));
+        let cons = Constraints { throughput_min: Some(parent_tp * 1.5), ..Default::default() };
+        let mip = search_mip(&space, &scores, &ct, &cons, n_layers, &[], 1.0).unwrap();
+        let mut rng = Rng::new(0);
+        let rnd = search_random(&space, &scores, &ct, &cons, n_layers, &mut rng).unwrap();
+        assert!(rnd.throughput >= parent_tp * 1.5 * 0.98);
+        assert!(rnd.cost >= mip.cost);
+    }
+
+    #[test]
+    fn param_max_ignores_scores() {
+        let Some((space, scores, ct, n_layers)) = setup() else { return };
+        let parent_tp = ct.arch_throughput(&Arch::parent(n_layers));
+        let cons = Constraints { throughput_min: Some(parent_tp * 1.8), ..Default::default() };
+        let pm = search_param_max(&space, &scores, &ct, &cons, n_layers).unwrap();
+        let mip = search_mip(&space, &scores, &ct, &cons, n_layers, &[], 1.0).unwrap();
+        assert!(pm.cost >= mip.cost);
+        // uniform: all layers pick the same combo
+        assert!(pm.arch.layers.windows(2).all(|w| w[0] == w[1]));
+    }
+}

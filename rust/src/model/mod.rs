@@ -1,0 +1,189 @@
+//! Child-model assembly: turn (Arch, Store) into chained executable calls.
+//!
+//! This is the heart of the "puzzle pieces" runtime contract: a model is a
+//! per-layer list of (executable prefix, weight literals); heterogeneous
+//! architectures are assembled by the coordinator with zero recompilation
+//! because every block executable takes its weights as parameters.
+
+use anyhow::{anyhow, Result};
+use xla::Literal;
+
+use crate::arch::{Arch, AttnChoice, FfnChoice};
+use crate::config::Manifest;
+use crate::runtime::{literal::tensor_to_lit, lit_i32, lit_to_tensor, Registry};
+use crate::tensor::Tensor;
+use crate::weights::Store;
+
+/// One subblock ready to execute: exec name prefix + weight literals.
+pub struct BlockLits {
+    /// e.g. "attn_gqa_r2" — exec names are `{prefix}_{mode}`. None = NoOp.
+    pub prefix: Option<String>,
+    pub lits: Vec<Literal>,
+    pub variant: String,
+    pub kv_heads: usize,
+}
+
+/// A fully assembled child (or parent) model.
+pub struct CompiledModel {
+    pub arch: Arch,
+    pub attn: Vec<BlockLits>,
+    pub ffn: Vec<BlockLits>,
+    pub embed: Literal,
+    pub final_norm: Literal,
+}
+
+/// Per-layer activations recorded during a forward pass; the inputs each
+/// vjp executable needs on the backward chain (rematerialization of the
+/// block internals happens inside the vjp executables).
+pub struct Trace {
+    /// input to layer i's attention subblock, i = 0..L (x_0 = embeddings)
+    pub attn_in: Vec<Literal>,
+    /// input to layer i's FFN subblock (= attention subblock output)
+    pub ffn_in: Vec<Literal>,
+    /// final hidden state (input to the LM head)
+    pub hidden: Literal,
+    /// logits as a host tensor [B, S, V]
+    pub logits: Tensor,
+}
+
+impl CompiledModel {
+    /// Assemble from an architecture + weight store. Weights for each
+    /// chosen variant must already exist in the store (parent variants
+    /// from init/training, others from the BLD block library).
+    pub fn assemble(man: &Manifest, store: &Store, arch: &Arch) -> Result<CompiledModel> {
+        let mut attn = Vec::with_capacity(arch.n_layers());
+        let mut ffn = Vec::with_capacity(arch.n_layers());
+        for (l, (a, f)) in arch.layers.iter().enumerate() {
+            attn.push(Self::subblock(man, store, l, "attn", a.exec_prefix(), &a.name())?);
+            ffn.push(Self::subblock(man, store, l, "ffn", f.exec_prefix(), &f.name())?);
+        }
+        Ok(CompiledModel {
+            arch: arch.clone(),
+            attn,
+            ffn,
+            embed: tensor_to_lit(store.get("embed")?)?,
+            final_norm: tensor_to_lit(store.get("final_norm")?)?,
+        })
+    }
+
+    fn subblock(
+        man: &Manifest,
+        store: &Store,
+        layer: usize,
+        kind: &str,
+        prefix: Option<String>,
+        variant: &str,
+    ) -> Result<BlockLits> {
+        let Some(prefix) = prefix else {
+            return Ok(BlockLits { prefix: None, lits: vec![], variant: variant.into(), kv_heads: 0 });
+        };
+        let layout = if kind == "attn" {
+            man.attn_variants.get(variant)
+        } else {
+            man.ffn_variants.get(variant)
+        }
+        .ok_or_else(|| anyhow!("variant {variant} not in manifest"))?;
+        let ws = store.block(layer, kind, variant, layout)?;
+        let lits = ws.iter().map(|t| tensor_to_lit(t)).collect::<Result<Vec<_>>>()?;
+        Ok(BlockLits { prefix: Some(prefix), lits, variant: variant.into(), kv_heads: layout.kv_heads })
+    }
+
+    /// Forward pass in a sequence-parallel mode ("train", "prefill",
+    /// "long"), recording the trace needed for the backward chain and
+    /// scoring. `tokens` is [b, s] row-major.
+    pub fn forward(&self, reg: &Registry, mode: &str, tokens: &[i32], b: usize, s: usize) -> Result<Trace> {
+        let tok = lit_i32(&[b, s], tokens)?;
+        let mut x = reg
+            .run(&format!("embed_{mode}"), &[&tok, &self.embed])?
+            .remove(0);
+        let mut attn_in = Vec::with_capacity(self.attn.len());
+        let mut ffn_in = Vec::with_capacity(self.ffn.len());
+        for l in 0..self.attn.len() {
+            attn_in.push(x.clone());
+            x = run_subblock(reg, &self.attn[l], mode, x)?;
+            ffn_in.push(x.clone());
+            x = run_subblock(reg, &self.ffn[l], mode, x)?;
+        }
+        let logits_lit = reg
+            .run(&format!("head_{mode}"), &[&x, &self.final_norm, &self.embed])?
+            .remove(0);
+        let logits = lit_to_tensor(&logits_lit)?;
+        Ok(Trace { attn_in, ffn_in, hidden: x, logits })
+    }
+
+    /// Number of parameters actually used by this architecture.
+    pub fn param_count(&self, man: &Manifest) -> usize {
+        let mut n = man.cfg.v * man.cfg.d + man.cfg.d; // embed + final norm
+        for (a, f) in &self.arch.layers {
+            if let Some(l) = man.attn_layout(a) {
+                n += l.param_count();
+            }
+            if let Some(l) = man.ffn_layout(f) {
+                n += l.param_count();
+            }
+        }
+        n
+    }
+}
+
+/// Execute one subblock in `mode` ("train_fwd" is spelled "train" here and
+/// mapped to the train_fwd executable); NoOp passes the activation through.
+pub fn run_subblock(reg: &Registry, blk: &BlockLits, mode: &str, x: Literal) -> Result<Literal> {
+    let Some(prefix) = &blk.prefix else { return Ok(x) };
+    let exec = match mode {
+        "train" => format!("{prefix}_train_fwd"),
+        m => format!("{prefix}_{m}"),
+    };
+    let mut inputs: Vec<&Literal> = vec![&x];
+    inputs.extend(blk.lits.iter());
+    // gqa prefill returns (y, k, v) — callers on the scoring/train path
+    // only need y; the serving engine uses its own prefill loop.
+    Ok(reg.run(&exec, &inputs)?.remove(0))
+}
+
+/// Backward through one subblock: (dx, dweights). NoOp passes dy through.
+pub fn vjp_subblock(
+    reg: &Registry,
+    blk: &BlockLits,
+    x: &Literal,
+    dy: Literal,
+) -> Result<(Literal, Vec<Literal>)> {
+    let Some(prefix) = &blk.prefix else { return Ok((dy, vec![])) };
+    let exec = format!("{prefix}_train_vjp");
+    let mut inputs: Vec<&Literal> = vec![x];
+    inputs.extend(blk.lits.iter());
+    inputs.push(&dy);
+    let mut out = reg.run(&exec, &inputs)?;
+    let dx = out.remove(0);
+    Ok((dx, out))
+}
+
+/// Weight keys (store naming) that this architecture trains.
+pub fn trainable_keys(man: &Manifest, arch: &Arch) -> Vec<String> {
+    use crate::weights::store::block_key;
+    let mut keys = vec!["embed".to_string(), "final_norm".to_string()];
+    for (l, (a, f)) in arch.layers.iter().enumerate() {
+        if let Some(layout) = man.attn_layout(a) {
+            for (w, _) in &layout.weights {
+                keys.push(block_key(l, "attn", &a.name(), w));
+            }
+        }
+        if let Some(layout) = man.ffn_layout(f) {
+            for (w, _) in &layout.weights {
+                keys.push(block_key(l, "ffn", &f.name(), w));
+            }
+        }
+    }
+    keys
+}
+
+/// Convenience: variant choice for layer `l` as (attn, ffn) names.
+pub fn layer_names(arch: &Arch, l: usize) -> (String, String) {
+    let (a, f) = &arch.layers[l];
+    (a.name(), f.name())
+}
+
+#[allow(unused)]
+fn _type_checks(a: AttnChoice, f: FfnChoice) {
+    let _ = (a, f);
+}

@@ -1,0 +1,366 @@
+//! Per-block cost accounting: FLOPs, bytes, params, KV-cache — and the
+//! scenario-level throughput estimates the MIP consumes.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::arch::{Arch, AttnChoice, FfnChoice, SearchSpace};
+use crate::config::Manifest;
+use crate::runtime::{lit_f32, lit_i32, Registry};
+use crate::util::Timer;
+
+use super::hw::HwProfile;
+
+/// An inference scenario (paper Table 3 rows): prefill length, decode
+/// length, batch size.
+#[derive(Debug, Clone, Copy)]
+pub struct Scenario {
+    pub prefill: usize,
+    pub decode: usize,
+    pub batch: usize,
+}
+
+impl Scenario {
+    pub fn name(&self) -> String {
+        format!("{}/{}@b{}", self.prefill, self.decode, self.batch)
+    }
+
+    pub fn total_tokens(&self) -> usize {
+        self.batch * (self.prefill + self.decode)
+    }
+}
+
+/// Static resource profile of one subblock variant (per layer; layers are
+/// shape-identical so costs are layer-independent, as in the paper's
+/// per-variant measurement table).
+#[derive(Debug, Clone, Default)]
+pub struct BlockCost {
+    /// parameter count
+    pub params: f64,
+    /// KV-cache bytes per sequence position (0 for non-attention blocks)
+    pub kv_bytes_per_tok: f64,
+    /// matmul FLOPs per token, excluding attention's O(s) term
+    pub flops_per_tok: f64,
+    /// attention score+value FLOPs per token per context position
+    pub attn_flops_per_tok_per_ctx: f64,
+}
+
+impl BlockCost {
+    /// Roofline prefill time for a [batch, s] pass.
+    pub fn prefill_time(&self, hw: &HwProfile, batch: usize, s: usize) -> f64 {
+        let toks = (batch * s) as f64;
+        let flops =
+            toks * (2.0 * self.flops_per_tok) + toks * s as f64 * self.attn_flops_per_tok_per_ctx;
+        let bytes = self.params * hw.bytes_per_elem + toks * self.kv_bytes_per_tok * hw.bytes_per_elem;
+        hw.op_time(flops, bytes)
+    }
+
+    /// Roofline time for one decode step at context length `ctx`.
+    pub fn decode_step_time(&self, hw: &HwProfile, batch: usize, ctx: usize) -> f64 {
+        let toks = batch as f64;
+        let flops =
+            toks * (2.0 * self.flops_per_tok) + toks * ctx as f64 * self.attn_flops_per_tok_per_ctx;
+        // decode reads all weights once per step + the KV cache per sequence
+        let bytes = (self.params
+            + batch as f64 * ctx as f64 * self.kv_bytes_per_tok)
+            * hw.bytes_per_elem;
+        hw.op_time(flops, bytes)
+    }
+
+    /// End-to-end scenario time (prefill + all decode steps, mean ctx).
+    pub fn scenario_time(&self, hw: &HwProfile, sc: &Scenario) -> f64 {
+        let mean_ctx = sc.prefill + sc.decode / 2;
+        self.prefill_time(hw, sc.batch, sc.prefill)
+            + sc.decode as f64 * self.decode_step_time(hw, sc.batch, mean_ctx)
+    }
+}
+
+/// Compute the static cost profile of every variant in the manifest.
+pub fn block_costs(man: &Manifest) -> (BTreeMap<String, BlockCost>, BTreeMap<String, BlockCost>) {
+    let cfg = &man.cfg;
+    let (d, dh) = (cfg.d as f64, cfg.head_dim as f64);
+    let qd = cfg.qdim() as f64;
+    let mut attn = BTreeMap::new();
+    for (name, layout) in &man.attn_variants {
+        let params = layout.param_count() as f64;
+        let cost = if name == "linear" {
+            BlockCost { params, flops_per_tok: d * d, ..Default::default() }
+        } else {
+            let kv = layout.kv_heads as f64;
+            BlockCost {
+                params,
+                kv_bytes_per_tok: 2.0 * kv * dh, // elements; scaled by dtype in roofline
+                flops_per_tok: d * qd + 2.0 * d * kv * dh + qd * d,
+                attn_flops_per_tok_per_ctx: 4.0 * qd,
+            }
+        };
+        attn.insert(name.clone(), cost);
+    }
+    attn.insert("noop".into(), BlockCost::default());
+
+    let mut ffn = BTreeMap::new();
+    for (name, layout) in &man.ffn_variants {
+        let params = layout.param_count() as f64;
+        let flops = if name == "linear" { d * d } else { 3.0 * d * layout.i_dim as f64 };
+        ffn.insert(name.clone(), BlockCost { params, flops_per_tok: flops, ..Default::default() });
+    }
+    ffn.insert("noop".into(), BlockCost::default());
+    (attn, ffn)
+}
+
+/// Complete cost table for the MIP: per attention/FFN choice, the runtime
+/// under a scenario + memory terms; plus the fixed embed/head costs.
+#[derive(Debug, Clone)]
+pub struct CostTable {
+    pub hw: HwProfile,
+    pub scenario: Scenario,
+    /// variant name -> (scenario seconds, param count, kv bytes/seq)
+    pub attn: BTreeMap<String, (f64, f64, f64)>,
+    pub ffn: BTreeMap<String, (f64, f64, f64)>,
+    /// embed + head scenario seconds and params (constant per arch)
+    pub fixed_secs: f64,
+    pub fixed_params: f64,
+    pub bytes_per_param: f64,
+}
+
+impl CostTable {
+    /// Build from the analytic roofline model.
+    pub fn modeled(man: &Manifest, hw: &HwProfile, sc: &Scenario) -> CostTable {
+        let (ac, fc) = block_costs(man);
+        let cfg = &man.cfg;
+        let seq_cap = (sc.prefill + sc.decode) as f64;
+        let attn = ac
+            .iter()
+            .map(|(k, c)| {
+                (
+                    k.clone(),
+                    (
+                        c.scenario_time(hw, sc),
+                        c.params,
+                        c.kv_bytes_per_tok * seq_cap * hw.bytes_per_elem,
+                    ),
+                )
+            })
+            .collect();
+        let ffn = fc
+            .iter()
+            .map(|(k, c)| (k.clone(), (c.scenario_time(hw, sc), c.params, 0.0)))
+            .collect();
+        // LM head: 2*d*v flops per token on prefill + decode tokens
+        let head = BlockCost {
+            params: (cfg.v * cfg.d) as f64,
+            flops_per_tok: (cfg.d * cfg.v) as f64,
+            ..Default::default()
+        };
+        CostTable {
+            hw: hw.clone(),
+            scenario: *sc,
+            attn,
+            ffn,
+            fixed_secs: head.scenario_time(hw, sc),
+            fixed_params: (cfg.v * cfg.d + cfg.d) as f64,
+            bytes_per_param: hw.bytes_per_elem,
+        }
+    }
+
+    /// Build from *measured* executable wall-clock on this machine (the
+    /// paper's preferred source). Each variant's prefill and decode
+    /// executables are timed with dummy inputs; the scenario time uses the
+    /// engine's compiled shapes.
+    pub fn measured(reg: &Registry, sc: &Scenario, reps: usize) -> Result<CostTable> {
+        let man = &reg.man;
+        let cfg = &man.cfg;
+        let hw = HwProfile::cpu();
+        let mut attn = BTreeMap::new();
+        let d = cfg.d;
+        let x_pre = lit_f32(&[1, cfg.s_prefill, d], &vec![0.01; cfg.s_prefill * d])?;
+        let x_dec = lit_f32(&[cfg.b_decode, 1, d], &vec![0.01; cfg.b_decode * d])?;
+        for (name, layout) in &man.attn_variants {
+            let ws: Vec<xla::Literal> = layout
+                .weights
+                .iter()
+                .map(|(_, s)| lit_f32(s, &vec![0.01; s.iter().product()]))
+                .collect::<Result<_>>()?;
+            // prefill
+            let mut inputs: Vec<&xla::Literal> = vec![&x_pre];
+            inputs.extend(ws.iter());
+            let t_pre = time_exec(reg, &format!("attn_{name}_prefill"), &inputs, reps)?;
+            // decode
+            let t_dec = if name == "linear" {
+                let mut di: Vec<&xla::Literal> = vec![&x_dec];
+                di.extend(ws.iter());
+                time_exec(reg, &format!("attn_{name}_decode"), &di, reps)?
+            } else {
+                let kv = layout.kv_heads;
+                let cache = lit_f32(
+                    &[cfg.b_decode, cfg.s_max, kv, cfg.head_dim],
+                    &vec![0.0; cfg.b_decode * cfg.s_max * kv * cfg.head_dim],
+                )?;
+                let pos = lit_i32(&[cfg.b_decode], &vec![1; cfg.b_decode])?;
+                let mut di: Vec<&xla::Literal> = vec![&x_dec, &cache, &cache, &pos];
+                di.extend(ws.iter());
+                time_exec(reg, &format!("attn_{name}_decode"), &di, reps)?
+            };
+            let secs = sc.batch as f64 * t_pre + sc.decode as f64 * t_dec;
+            let kv_bytes = 2.0 * layout.kv_heads as f64
+                * cfg.head_dim as f64
+                * (sc.prefill + sc.decode) as f64
+                * 4.0;
+            attn.insert(name.clone(), (secs, layout.param_count() as f64, kv_bytes));
+        }
+        attn.insert("noop".into(), (0.0, 0.0, 0.0));
+
+        let mut ffn = BTreeMap::new();
+        for (name, layout) in &man.ffn_variants {
+            let ws: Vec<xla::Literal> = layout
+                .weights
+                .iter()
+                .map(|(_, s)| lit_f32(s, &vec![0.01; s.iter().product()]))
+                .collect::<Result<_>>()?;
+            let mut pi: Vec<&xla::Literal> = vec![&x_pre];
+            pi.extend(ws.iter());
+            let t_pre = time_exec(reg, &format!("ffn_{name}_prefill"), &pi, reps)?;
+            let mut di: Vec<&xla::Literal> = vec![&x_dec];
+            di.extend(ws.iter());
+            let t_dec = time_exec(reg, &format!("ffn_{name}_decode"), &di, reps)?;
+            let secs = sc.batch as f64 * t_pre + sc.decode as f64 * t_dec;
+            ffn.insert(name.clone(), (secs, layout.param_count() as f64, 0.0));
+        }
+        ffn.insert("noop".into(), (0.0, 0.0, 0.0));
+
+        Ok(CostTable {
+            hw,
+            scenario: *sc,
+            attn,
+            ffn,
+            fixed_secs: 0.0,
+            fixed_params: (cfg.v * cfg.d + cfg.d) as f64,
+            bytes_per_param: 4.0,
+        })
+    }
+
+    pub fn arch_secs(&self, arch: &Arch) -> f64 {
+        self.fixed_secs
+            + arch
+                .layers
+                .iter()
+                .map(|(a, f)| self.attn[&a.name()].0 + self.ffn[&f.name()].0)
+                .sum::<f64>()
+    }
+
+    pub fn arch_params(&self, arch: &Arch) -> f64 {
+        self.fixed_params
+            + arch
+                .layers
+                .iter()
+                .map(|(a, f)| self.attn[&a.name()].1 + self.ffn[&f.name()].1)
+                .sum::<f64>()
+    }
+
+    pub fn arch_kv_bytes_per_seq(&self, arch: &Arch) -> f64 {
+        arch.layers.iter().map(|(a, _)| self.attn[&a.name()].2).sum()
+    }
+
+    /// Total memory footprint for the scenario's batch.
+    pub fn arch_memory(&self, arch: &Arch) -> f64 {
+        self.arch_params(arch) * self.bytes_per_param
+            + self.scenario.batch as f64 * self.arch_kv_bytes_per_seq(arch)
+    }
+
+    /// Output tokens per second for this arch under the scenario.
+    pub fn arch_throughput(&self, arch: &Arch) -> f64 {
+        let secs = self.arch_secs(arch);
+        if secs <= 0.0 {
+            return f64::INFINITY;
+        }
+        (self.scenario.batch * self.scenario.decode) as f64 / secs
+    }
+
+    pub fn choices(&self, space: &SearchSpace) -> (Vec<AttnChoice>, Vec<FfnChoice>) {
+        (space.attn.clone(), space.ffn.clone())
+    }
+}
+
+fn time_exec(reg: &Registry, name: &str, inputs: &[&xla::Literal], reps: usize) -> Result<f64> {
+    reg.run(name, inputs)?; // warmup + compile
+    let t = Timer::start();
+    for _ in 0..reps {
+        reg.run(name, inputs)?;
+    }
+    Ok(t.secs() / reps as f64)
+}
+
+/// Whole-architecture throughput estimate under a hardware model — the
+/// quantity on Figure 5's x-axis and Table 3's cells.
+pub fn scenario_throughput(man: &Manifest, arch: &Arch, hw: &HwProfile, sc: &Scenario) -> f64 {
+    CostTable::modeled(man, hw, sc).arch_throughput(arch)
+}
+
+/// Sum of per-layer runtimes relative to parent (Figure 6's bars).
+pub fn arch_cost(man: &Manifest, arch: &Arch, hw: &HwProfile, sc: &Scenario) -> Vec<(f64, f64)> {
+    let ct = CostTable::modeled(man, hw, sc);
+    let parent_attn = ct.attn["gqa_r1"].0;
+    let parent_ffn = ct.ffn["r100"].0;
+    arch.layers
+        .iter()
+        .map(|(a, f)| {
+            (
+                ct.attn[&a.name()].0 / parent_attn.max(1e-12),
+                ct.ffn[&f.name()].0 / parent_ffn.max(1e-12),
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Manifest;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+        Manifest::load(&dir).ok()
+    }
+
+    #[test]
+    fn cheaper_variants_cost_less() {
+        let Some(man) = manifest() else { return };
+        let hw = HwProfile::h100_fp8();
+        let sc = Scenario { prefill: 128, decode: 128, batch: 8 };
+        let ct = CostTable::modeled(&man, &hw, &sc);
+        assert!(ct.attn["gqa_r1"].0 > ct.attn["gqa_r2"].0);
+        assert!(ct.attn["gqa_r2"].0 > ct.attn["linear"].0);
+        assert!(ct.attn["linear"].0 > ct.attn["noop"].0);
+        assert!(ct.ffn["r100"].0 > ct.ffn["r50"].0);
+        assert!(ct.ffn["r50"].0 > ct.ffn["r10"].0);
+        // kv cache shrinks with fewer kv heads
+        assert!(ct.attn["gqa_r1"].2 > ct.attn["gqa_r2"].2);
+        assert_eq!(ct.attn["linear"].2, 0.0);
+    }
+
+    #[test]
+    fn parent_arch_throughput_increases_with_noop_layers() {
+        let Some(man) = manifest() else { return };
+        let hw = HwProfile::h100_fp8();
+        let sc = Scenario { prefill: 128, decode: 1024, batch: 16 };
+        let parent = Arch::parent(man.cfg.n_layers);
+        let mut child = parent.clone();
+        child.layers[0] = (AttnChoice::NoOp, FfnChoice::NoOp);
+        let tp = scenario_throughput(&man, &parent, &hw, &sc);
+        let tc = scenario_throughput(&man, &child, &hw, &sc);
+        assert!(tc > tp, "skipping a layer must raise modeled throughput");
+    }
+
+    #[test]
+    fn batch_amortizes_decode_weight_reads() {
+        let Some(man) = manifest() else { return };
+        let (ac, _) = block_costs(&man);
+        let hw = HwProfile::h100_fp8();
+        let c = &ac["gqa_r1"];
+        let t1 = c.decode_step_time(&hw, 1, 64);
+        let t64 = c.decode_step_time(&hw, 64, 64);
+        // 64x the tokens in far less than 64x the time (paper §4.1)
+        assert!(t64 < 32.0 * t1);
+    }
+}

@@ -1,0 +1,127 @@
+//! Hardware roofline profiles.
+
+#[derive(Debug, Clone)]
+pub struct HwProfile {
+    pub name: String,
+    /// peak dense matmul throughput, FLOP/s, at the working precision
+    pub peak_flops: f64,
+    /// HBM bandwidth, bytes/s
+    pub mem_bw: f64,
+    /// bytes per weight/KV element at the working precision
+    pub bytes_per_elem: f64,
+    /// total device memory in bytes
+    pub vram: f64,
+    /// attainable fraction of peak for transformer GEMMs
+    pub efficiency: f64,
+}
+
+impl HwProfile {
+    /// NVIDIA H100 SXM with FP8 weights/activations/KV (the paper's main
+    /// deployment target; TensorRT-LLM FP8 path).
+    pub fn h100_fp8() -> HwProfile {
+        HwProfile {
+            name: "h100_fp8".into(),
+            peak_flops: 1979e12,
+            mem_bw: 3.35e12,
+            bytes_per_elem: 1.0,
+            vram: 80e9,
+            efficiency: 0.55,
+        }
+    }
+
+    /// H100 at FP16 (no FP8) — the fallback the paper contrasts.
+    pub fn h100_fp16() -> HwProfile {
+        HwProfile {
+            name: "h100_fp16".into(),
+            peak_flops: 989e12,
+            mem_bw: 3.35e12,
+            bytes_per_elem: 2.0,
+            vram: 80e9,
+            efficiency: 0.55,
+        }
+    }
+
+    /// A100 80GB, FP16 (no FP8 support — the paper's §4.3 example of how
+    /// hardware features change the optimal architecture).
+    pub fn a100_fp16() -> HwProfile {
+        HwProfile {
+            name: "a100_fp16".into(),
+            peak_flops: 312e12,
+            mem_bw: 2.0e12,
+            bytes_per_elem: 2.0,
+            vram: 80e9,
+            efficiency: 0.55,
+        }
+    }
+
+    /// RTX 4090, FP16 — the consumer-grade target of Table 6.
+    pub fn rtx4090_fp16() -> HwProfile {
+        HwProfile {
+            name: "rtx4090_fp16".into(),
+            peak_flops: 165e12,
+            mem_bw: 1.008e12,
+            bytes_per_elem: 2.0,
+            vram: 24e9,
+            efficiency: 0.5,
+        }
+    }
+
+    /// This machine's CPU PJRT backend (used when costs are measured, the
+    /// numbers here only seed estimates before measurement).
+    pub fn cpu() -> HwProfile {
+        HwProfile {
+            name: "cpu".into(),
+            peak_flops: 3e10,
+            mem_bw: 2e10,
+            bytes_per_elem: 4.0,
+            vram: 8e9,
+            efficiency: 0.5,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<HwProfile> {
+        match name {
+            "h100_fp8" => Some(Self::h100_fp8()),
+            "h100_fp16" => Some(Self::h100_fp16()),
+            "a100_fp16" => Some(Self::a100_fp16()),
+            "rtx4090_fp16" => Some(Self::rtx4090_fp16()),
+            "cpu" => Some(Self::cpu()),
+            _ => None,
+        }
+    }
+
+    /// Roofline time for an op: max(compute time, memory time), seconds.
+    /// A zero-work op (a no-op block: no kernel launched) costs nothing.
+    pub fn op_time(&self, flops: f64, bytes: f64) -> f64 {
+        if flops == 0.0 && bytes == 0.0 {
+            return 0.0;
+        }
+        let t_compute = flops / (self.peak_flops * self.efficiency);
+        let t_mem = bytes / self.mem_bw;
+        t_compute.max(t_mem) + 2e-6 // per-kernel launch overhead
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_is_memory_bound_prefill_compute_bound() {
+        let hw = HwProfile::h100_fp8();
+        // decode-ish op: few flops, many bytes
+        let t_dec = hw.op_time(1e6, 1e9);
+        assert!((t_dec - (1e9 / hw.mem_bw + 2e-6)).abs() / t_dec < 0.01);
+        // prefill-ish op: many flops, few bytes
+        let t_pre = hw.op_time(1e12, 1e6);
+        assert!((t_pre - (1e12 / (hw.peak_flops * hw.efficiency) + 2e-6)).abs() / t_pre < 0.01);
+    }
+
+    #[test]
+    fn fp8_beats_fp16_on_both_axes() {
+        let f8 = HwProfile::h100_fp8();
+        let f16 = HwProfile::h100_fp16();
+        assert!(f8.op_time(1e12, 0.0) < f16.op_time(1e12, 0.0));
+        assert!(f8.bytes_per_elem < f16.bytes_per_elem);
+    }
+}

@@ -1,0 +1,19 @@
+//! Resource estimation (paper §4.1): per-block parameter memory, KV-cache
+//! memory, and prefill/decode runtimes, fed into the MIP as costs.
+//!
+//! Two cost sources, matching the paper's methodology:
+//!  * **measured** — wall-clock of the actual block executables on this
+//!    machine's PJRT CPU backend ("measure directly on target hardware");
+//!  * **modeled** — analytic roofline models of the paper's GPUs (H100 /
+//!    A100 / RTX 4090, with and without FP8), used to reproduce the
+//!    hardware-dependent experiments (Tables 3/6, Figures 5/6/8) whose
+//!    hardware we do not have. The roofline captures exactly the effects
+//!    the paper calls out: prefill is compute-bound, decode is bandwidth-
+//!    bound (weights + KV-cache reads per token), bigger batches amortize
+//!    weight reads, FP8 doubles math and halves bytes.
+
+pub mod cost;
+pub mod hw;
+
+pub use cost::{arch_cost, block_costs, scenario_throughput, BlockCost, CostTable, Scenario};
+pub use hw::HwProfile;

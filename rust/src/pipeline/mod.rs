@@ -1,0 +1,221 @@
+//! End-to-end pipeline orchestration (Figure 1's three stages) with a run
+//! directory for stage checkpoints, so expensive stages (parent pretrain,
+//! BLD, scoring) are computed once and shared by every experiment.
+//!
+//! Stage artifacts under `<run_dir>/`:
+//!   parent.pzw          — pretrained parent weights
+//!   library.pzw         — parent + trained block library (after BLD)
+//!   scores_<metric>.json— replace-1-block score table
+//!   arch_<tag>.json     — MIP solutions per constraint slice
+//!   child_<tag>.pzw     — GKD-uptrained child weights
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use crate::arch::{Arch, SearchSpace};
+use crate::data::{Batcher, CorpusMix, World};
+use crate::gkd::{self, GkdCfg};
+use crate::mip::{self, Constraints, Solution};
+use crate::perf::{CostTable, HwProfile, Scenario};
+use crate::runtime::Registry;
+use crate::scoring::{self, Metric, ScoreTable};
+use crate::train::LossSpec;
+use crate::util::{Json, Rng};
+use crate::weights::{store::init_parent, Store};
+use crate::{bld, info};
+
+#[derive(Debug, Clone)]
+pub struct StageCfg {
+    pub parent_steps: usize,
+    pub parent_lr: f32,
+    pub bld_steps: usize,
+    pub bld_lr: f32,
+    pub gkd_steps: usize,
+    pub gkd_lr: f32,
+    pub score_batches: usize,
+    pub eval_questions: usize,
+    pub seed: u64,
+}
+
+impl StageCfg {
+    /// Small-but-meaningful defaults for the tiny config on one CPU core.
+    pub fn fast() -> StageCfg {
+        StageCfg {
+            parent_steps: 600,
+            parent_lr: 3e-3,
+            bld_steps: 40,
+            bld_lr: 4e-3,
+            gkd_steps: 60,
+            gkd_lr: 1e-3,
+            score_batches: 2,
+            eval_questions: 48,
+            seed: 42,
+        }
+    }
+
+    pub fn scaled(mult: f64) -> StageCfg {
+        let f = StageCfg::fast();
+        StageCfg {
+            parent_steps: (f.parent_steps as f64 * mult) as usize,
+            bld_steps: (f.bld_steps as f64 * mult) as usize,
+            gkd_steps: (f.gkd_steps as f64 * mult) as usize,
+            ..f
+        }
+    }
+}
+
+pub struct Pipeline<'a> {
+    pub reg: &'a Registry,
+    pub run_dir: PathBuf,
+    pub world: World,
+    pub mix: CorpusMix,
+    pub cfg: StageCfg,
+}
+
+impl<'a> Pipeline<'a> {
+    pub fn new(reg: &'a Registry, run_dir: &Path, cfg: StageCfg) -> Result<Pipeline<'a>> {
+        std::fs::create_dir_all(run_dir)?;
+        let world = World::new(cfg.seed, reg.man.cfg.v as u32);
+        Ok(Pipeline {
+            reg,
+            run_dir: run_dir.to_path_buf(),
+            world,
+            mix: CorpusMix::distillation_mix(),
+            cfg,
+        })
+    }
+
+    pub fn batcher(&self, seed_tag: u64) -> Batcher {
+        let c = &self.reg.man.cfg;
+        Batcher::new(self.world.clone(), self.mix.clone(), c.b_train, c.s_train, self.cfg.seed ^ seed_tag)
+    }
+
+    pub fn val_batches(&self, n: usize) -> Vec<crate::data::Batch> {
+        let mut b = self.batcher(0x7a1);
+        (0..n).map(|_| b.next_batch()).collect()
+    }
+
+    /// Stage 0: pretrain (or load) the parent.
+    pub fn ensure_parent(&self) -> Result<Store> {
+        let path = self.run_dir.join("parent.pzw");
+        if path.exists() {
+            info!("parent: loading {}", path.display());
+            return Store::load(&path);
+        }
+        info!("parent: pretraining {} steps", self.cfg.parent_steps);
+        let mut rng = Rng::new(self.cfg.seed);
+        let mut store = init_parent(&self.reg.man, &mut rng);
+        let mut batcher = self.batcher(0x9a5e);
+        let val = self.val_batches(2);
+        let report = gkd::pretrain_parent(
+            self.reg,
+            &mut store,
+            &mut batcher,
+            &val,
+            self.cfg.parent_steps,
+            self.cfg.parent_lr,
+        )?;
+        info!(
+            "parent: final lm {:.4}, val lm {:.4} ({} tokens)",
+            report.final_train.lm, report.val_lm, report.tokens
+        );
+        // persist the loss curve for the e2e record
+        let curve = Json::Arr(
+            report
+                .curve
+                .iter()
+                .map(|(s, l)| Json::arr_f64(&[*s as f64, *l]))
+                .collect(),
+        );
+        std::fs::write(self.run_dir.join("parent_curve.json"), curve.to_string())?;
+        store.save(&path)?;
+        Ok(store)
+    }
+
+    /// Stage 1: BLD block library (decoupled by default).
+    pub fn ensure_library(&self, space: &SearchSpace) -> Result<Store> {
+        let path = self.run_dir.join("library.pzw");
+        if path.exists() {
+            info!("library: loading {}", path.display());
+            return Store::load(&path);
+        }
+        let mut store = self.ensure_parent()?;
+        let mut batcher = self.batcher(0xb1d);
+        let report =
+            bld::run_decoupled(self.reg, &mut store, space, &mut batcher, self.cfg.bld_steps, self.cfg.bld_lr)?;
+        let mean_nmse: f64 =
+            report.final_loss.values().sum::<f64>() / report.final_loss.len().max(1) as f64;
+        info!(
+            "library: {} jobs, {} steps, {} tokens, mean final nmse {:.4}",
+            report.jobs, report.steps, report.tokens, mean_nmse
+        );
+        store.save(&path)?;
+        Ok(store)
+    }
+
+    /// Stage 2a: replace-1-block scores.
+    pub fn ensure_scores(&self, space: &SearchSpace, metric: Metric) -> Result<ScoreTable> {
+        let name = match metric {
+            Metric::Kl => "kl",
+            Metric::LmLoss => "lm",
+        };
+        let path = self.run_dir.join(format!("scores_{name}.json"));
+        if path.exists() {
+            let j = Json::parse(&std::fs::read_to_string(&path)?)
+                .map_err(|e| anyhow!("score table parse: {e}"))?;
+            return ScoreTable::from_json(&j).ok_or_else(|| anyhow!("bad score table"));
+        }
+        let store = self.ensure_library(space)?;
+        let val = self.val_batches(self.cfg.score_batches);
+        let table = scoring::score_library(self.reg, &store, space, &val, metric)?;
+        std::fs::write(&path, table.to_json().to_pretty())?;
+        Ok(table)
+    }
+
+    /// Stage 2b: MIP search under a throughput-speedup slice.
+    pub fn search_speedup(
+        &self,
+        space: &SearchSpace,
+        scores: &ScoreTable,
+        ct: &CostTable,
+        speedup: f64,
+    ) -> Result<Solution> {
+        let n_layers = self.reg.man.cfg.n_layers;
+        let parent_tp = ct.arch_throughput(&Arch::parent(n_layers));
+        let cons = Constraints { throughput_min: Some(parent_tp * speedup), ..Default::default() };
+        let sol = mip::search_mip(space, scores, ct, &cons, n_layers, &[], 1.0)?;
+        info!(
+            "search: speedup {:.2}x -> cost {:.4}, tp {:.0} (parent {:.0}), params {:.2}M",
+            speedup, sol.cost, sol.throughput, parent_tp, sol.params / 1e6
+        );
+        Ok(sol)
+    }
+
+    /// Stage 3: GKD uptraining of a child.
+    pub fn gkd_child(&self, store: &mut Store, arch: &Arch, spec: LossSpec, steps: usize) -> Result<gkd::GkdReport> {
+        let mut batcher = self.batcher(0x6cd);
+        let val = self.val_batches(2);
+        let cfg = GkdCfg { steps, lr: self.cfg.gkd_lr, spec, warmup_frac: 0.1, log_every: 20 };
+        gkd::run(self.reg, store, arch, &mut batcher, &val, &cfg)
+    }
+
+    /// Default hardware + scenario for searches on this config.
+    pub fn default_cost_table(&self) -> CostTable {
+        let hw = HwProfile::h100_fp8();
+        let c = &self.reg.man.cfg;
+        let sc = Scenario { prefill: c.s_prefill, decode: c.s_prefill, batch: 64 };
+        CostTable::modeled(&self.reg.man, &hw, &sc)
+    }
+
+    pub fn save_arch(&self, tag: &str, sol: &Solution) -> Result<()> {
+        let j = Json::from_pairs(vec![
+            ("arch", sol.arch.to_json()),
+            ("cost", Json::num(sol.cost)),
+            ("throughput", Json::num(sol.throughput)),
+            ("params", Json::num(sol.params)),
+        ]);
+        std::fs::write(self.run_dir.join(format!("arch_{tag}.json")), j.to_pretty())?;
+        Ok(())
+    }
+}

@@ -1,0 +1,34 @@
+//! Literal <-> Tensor conversion helpers.
+
+use anyhow::Result;
+use xla::Literal;
+
+use crate::tensor::Tensor;
+
+/// f32 literal with the given shape.
+pub fn lit_f32(shape: &[usize], data: &[f32]) -> Result<Literal> {
+    debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(Literal::vec1(data).reshape(&dims)?)
+}
+
+/// i32 literal with the given shape (token ids, positions).
+pub fn lit_i32(shape: &[usize], data: &[i32]) -> Result<Literal> {
+    debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(Literal::vec1(data).reshape(&dims)?)
+}
+
+pub fn tensor_to_lit(t: &Tensor) -> Result<Literal> {
+    lit_f32(&t.shape, &t.data)
+}
+
+pub fn lit_to_vec_f32(l: &Literal) -> Result<Vec<f32>> {
+    Ok(l.to_vec::<f32>()?)
+}
+
+pub fn lit_to_tensor(l: &Literal) -> Result<Tensor> {
+    let shape = l.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    Ok(Tensor::from_vec(&dims, l.to_vec::<f32>()?))
+}

@@ -1,0 +1,11 @@
+//! PJRT runtime: load AOT artifacts (HLO text), compile once per
+//! executable, execute with Literal I/O, and chain block executables into
+//! full models. The `xla` crate's PJRT client is `Rc`-based, so the whole
+//! runtime is single-threaded by construction; the serving engine owns it
+//! on a dedicated engine thread.
+
+pub mod literal;
+pub mod registry;
+
+pub use literal::{lit_f32, lit_i32, lit_to_tensor, lit_to_vec_f32};
+pub use registry::Registry;

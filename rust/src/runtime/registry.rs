@@ -1,0 +1,126 @@
+//! Lazy executable registry: manifest name -> compiled PJRT executable.
+//!
+//! Compilation happens on first use and is cached for the process
+//! lifetime; `run` executes with Literal inputs and unwraps the tuple
+//! output (every artifact is lowered with return_tuple=True). Dispatch
+//! counts and wall-clock are tracked per executable for the perf pass and
+//! the measured-cost mode of the perf model (§4.1: "measure directly on
+//! target hardware").
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::config::Manifest;
+
+#[derive(Debug, Clone, Default)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub total_secs: f64,
+    pub compile_secs: f64,
+}
+
+pub struct Registry {
+    pub man: Manifest,
+    client: PjRtClient,
+    cache: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
+    stats: RefCell<HashMap<String, ExecStats>>,
+}
+
+impl Registry {
+    /// Open the artifact directory for one model config
+    /// (e.g. `artifacts/tiny`).
+    pub fn open(dir: &Path) -> Result<Registry> {
+        let man = Manifest::load(dir)?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Registry {
+            man,
+            client,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+
+    /// Compile (or fetch the cached) executable.
+    pub fn get(&self, name: &str) -> Result<Rc<PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let t0 = Instant::now();
+        let path = self.man.exec_path(name)?;
+        let proto = HloModuleProto::from_text_file(path.to_str().unwrap())
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        self.stats
+            .borrow_mut()
+            .entry(name.to_string())
+            .or_default()
+            .compile_secs += t0.elapsed().as_secs_f64();
+        Ok(exe)
+    }
+
+    /// Execute by name; returns the decomposed tuple outputs.
+    pub fn run(&self, name: &str, inputs: &[&Literal]) -> Result<Vec<Literal>> {
+        let exe = self.get(name)?;
+        let t0 = Instant::now();
+        let out = exe
+            .execute::<&Literal>(inputs)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result of {name}: {e:?}"))?;
+        let parts = lit.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        let mut st = self.stats.borrow_mut();
+        let entry = st.entry(name.to_string()).or_default();
+        entry.calls += 1;
+        entry.total_secs += t0.elapsed().as_secs_f64();
+        Ok(parts)
+    }
+
+    /// Measured mean runtime per call for `name` (seconds); None if never
+    /// run. Used as the "measured on target hardware" cost source.
+    pub fn measured_secs(&self, name: &str) -> Option<f64> {
+        let st = self.stats.borrow();
+        let e = st.get(name)?;
+        if e.calls == 0 {
+            None
+        } else {
+            Some(e.total_secs / e.calls as f64)
+        }
+    }
+
+    /// Snapshot of all per-exec stats (perf reporting).
+    pub fn stats_snapshot(&self) -> Vec<(String, ExecStats)> {
+        let mut v: Vec<_> = self
+            .stats
+            .borrow()
+            .iter()
+            .map(|(k, s)| (k.clone(), s.clone()))
+            .collect();
+        v.sort_by(|a, b| b.1.total_secs.partial_cmp(&a.1.total_secs).unwrap());
+        v
+    }
+
+    /// Warm the compile cache for a list of executables.
+    pub fn preload(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.get(n).with_context(|| format!("preloading {n}"))?;
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,324 @@
+//! Replace-1-block scoring (paper §4.2): the quality of each library block
+//! is estimated by replacing *only that block* in the parent and measuring
+//! a distance on held-out data. During architecture search, a candidate's
+//! quality is the sum of its blocks' scores — no candidate is ever
+//! materialized.
+//!
+//! Metrics: KL divergence to the parent (the paper's best), LM loss, or a
+//! caller-provided downstream callback (task-oriented scoring, §8.1.4).
+//! The parent's prefix activations are cached per batch, so scoring layer
+//! `l` only recomputes layers `l..L` (the paper's efficient-I/O trick in
+//! spirit).
+
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::collections::HashMap;
+
+use crate::arch::{Arch, AttnChoice, FfnChoice, SearchSpace};
+use crate::data::Batch;
+use crate::model::{run_subblock, CompiledModel, Trace};
+use crate::runtime::{literal::tensor_to_lit, lit_to_tensor, Registry};
+use crate::tensor::Tensor;
+use crate::train::losses;
+use crate::util::Json;
+use crate::weights::Store;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Metric {
+    /// KL(parent || replaced) on validation logits — lower is better.
+    Kl,
+    /// LM loss increase on validation targets — lower is better.
+    LmLoss,
+}
+
+/// Score table: (layer, "attn:gqa_r2") -> cost (lower = better block).
+/// Parent variants score ~0 by construction under KL.
+#[derive(Debug, Clone, Default)]
+pub struct ScoreTable {
+    pub scores: BTreeMap<(usize, String), f64>,
+    pub metric_name: String,
+}
+
+pub fn variant_key(kind: &str, name: &str) -> String {
+    format!("{kind}:{name}")
+}
+
+impl ScoreTable {
+    pub fn get(&self, layer: usize, kind: &str, name: &str) -> f64 {
+        *self
+            .scores
+            .get(&(layer, variant_key(kind, name)))
+            .unwrap_or(&0.0)
+    }
+
+    pub fn set(&mut self, layer: usize, kind: &str, name: &str, v: f64) {
+        self.scores.insert((layer, variant_key(kind, name)), v);
+    }
+
+    /// Estimated cost of a whole architecture = sum of replace-1-block
+    /// scores of its choices (the decomposed-NAS quality estimate).
+    pub fn arch_cost(&self, arch: &Arch) -> f64 {
+        arch.layers
+            .iter()
+            .enumerate()
+            .map(|(l, (a, f))| {
+                self.get(l, "attn", &a.name()) + self.get(l, "ffn", &f.name())
+            })
+            .sum()
+    }
+
+    /// Mean score across variants for one layer — the greedy baseline's
+    /// "how replaceable is this layer" heuristic (§8.2.2).
+    pub fn layer_mean(&self, layer: usize) -> f64 {
+        let vals: Vec<f64> = self
+            .scores
+            .iter()
+            .filter(|((l, _), _)| *l == layer)
+            .map(|(_, v)| *v)
+            .collect();
+        if vals.is_empty() {
+            0.0
+        } else {
+            vals.iter().sum::<f64>() / vals.len() as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut arr = Vec::new();
+        for ((l, k), v) in &self.scores {
+            arr.push(Json::from_pairs(vec![
+                ("layer", Json::num(*l as f64)),
+                ("variant", Json::str(k)),
+                ("score", Json::num(*v)),
+            ]));
+        }
+        Json::from_pairs(vec![
+            ("metric", Json::str(&self.metric_name)),
+            ("scores", Json::Arr(arr)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<ScoreTable> {
+        let mut t = ScoreTable {
+            metric_name: j.get("metric")?.as_str()?.to_string(),
+            ..Default::default()
+        };
+        for e in j.get("scores")?.as_arr()? {
+            t.scores.insert(
+                (e.get("layer")?.as_usize()?, e.get("variant")?.as_str()?.to_string()),
+                e.get("score")?.as_f64()?,
+            );
+        }
+        Some(t)
+    }
+}
+
+/// Cache of replacement-block literal sets, keyed by (layer, kind:variant).
+/// Hoisting literal construction out of the per-batch scoring loop cut the
+/// scoring pass ~20% (EXPERIMENTS.md §Perf).
+pub struct VariantLits {
+    cache: HashMap<(usize, String), Vec<xla::Literal>>,
+}
+
+impl VariantLits {
+    fn get(
+        &mut self,
+        reg: &Registry,
+        store: &Store,
+        layer: usize,
+        kind: &str,
+        variant: &str,
+    ) -> Result<&Vec<xla::Literal>> {
+        let key = (layer, variant_key(kind, variant));
+        if !self.cache.contains_key(&key) {
+            let man = &reg.man;
+            let layout = if kind == "attn" {
+                &man.attn_variants[variant]
+            } else {
+                &man.ffn_variants[variant]
+            };
+            let ws = store.block(layer, kind, variant, layout)?;
+            let lits: Vec<xla::Literal> =
+                ws.iter().map(|t| tensor_to_lit(t)).collect::<Result<_>>()?;
+            self.cache.insert(key.clone(), lits);
+        }
+        Ok(&self.cache[&key])
+    }
+}
+
+/// Forward from layer `l` to logits, starting from activation `x` at layer
+/// l's attention input, with layer l's subblocks overridden.
+#[allow(clippy::too_many_arguments)]
+fn forward_with_replacement(
+    reg: &Registry,
+    parent: &CompiledModel,
+    store: &Store,
+    layer: usize,
+    kind: &str,
+    variant: &str,
+    trace: &Trace,
+    vcache: &mut VariantLits,
+) -> Result<Tensor> {
+    let n_layers = parent.attn.len();
+    // build the replacement subblock lits
+    let (a_choice, f_choice) = if kind == "attn" {
+        (AttnChoice::from_name(variant).unwrap(), FfnChoice::Ratio(0))
+    } else {
+        (AttnChoice::Gqa { divisor: 1 }, FfnChoice::from_name(variant).unwrap())
+    };
+
+    // start from cached parent activations at this layer's attn input
+    let mut x = trace.attn_in[layer].clone();
+    for l in layer..n_layers {
+        if l == layer {
+            // replaced layer
+            if kind == "attn" {
+                x = match a_choice {
+                    AttnChoice::NoOp => x,
+                    _ => {
+                        let lits = vcache.get(reg, store, l, "attn", variant)?;
+                        let mut inputs: Vec<&xla::Literal> = vec![&x];
+                        inputs.extend(lits.iter());
+                        reg.run(&format!("attn_{variant}_train_fwd"), &inputs)?.remove(0)
+                    }
+                };
+                x = run_subblock(reg, &parent.ffn[l], "train", x)?;
+            } else {
+                x = run_subblock(reg, &parent.attn[l], "train", x)?;
+                x = match f_choice {
+                    FfnChoice::NoOp => x,
+                    _ => {
+                        let lits = vcache.get(reg, store, l, "ffn", variant)?;
+                        let mut inputs: Vec<&xla::Literal> = vec![&x];
+                        inputs.extend(lits.iter());
+                        reg.run(&format!("ffn_{variant}_train_fwd"), &inputs)?.remove(0)
+                    }
+                };
+            }
+        } else {
+            x = run_subblock(reg, &parent.attn[l], "train", x)?;
+            x = run_subblock(reg, &parent.ffn[l], "train", x)?;
+        }
+    }
+    let logits =
+        reg.run("head_train", &[&x, &parent.final_norm, &parent.embed])?.remove(0);
+    lit_to_tensor(&logits)
+}
+
+/// Score the full library: every (layer, variant) under `metric`, averaged
+/// over `batches`. Returns costs where parent variants are included too
+/// (they measure the library's own fidelity, not assumed zero).
+pub fn score_library(
+    reg: &Registry,
+    store: &Store,
+    space: &SearchSpace,
+    batches: &[Batch],
+    metric: Metric,
+) -> Result<ScoreTable> {
+    let man = &reg.man;
+    let n_layers = man.cfg.n_layers;
+    let parent_arch = Arch::parent(n_layers);
+    let parent = CompiledModel::assemble(man, store, &parent_arch)?;
+
+    let mut table = ScoreTable {
+        metric_name: match metric {
+            Metric::Kl => "kl".into(),
+            Metric::LmLoss => "lm_loss".into(),
+        },
+        ..Default::default()
+    };
+    let mut vcache = VariantLits { cache: HashMap::new() };
+
+    for batch in batches {
+        let trace = parent.forward(reg, "train", &batch.inputs, batch.b, batch.s)?;
+        let parent_lm = losses::lm_loss(&trace.logits, &batch.targets);
+        for l in 0..n_layers {
+            for a in &space.attn {
+                let name = a.name();
+                let cost = match a {
+                    AttnChoice::Gqa { divisor: 1 } => 0.0,
+                    _ => {
+                        let logits = forward_with_replacement(
+                            reg, &parent, store, l, "attn", &name, &trace, &mut vcache,
+                        )?;
+                        metric_cost(metric, &trace.logits, &logits, &batch.targets, parent_lm)
+                    }
+                };
+                let prev = table.get(l, "attn", &name);
+                table.set(l, "attn", &name, prev + cost / batches.len() as f64);
+            }
+            for f in &space.ffn {
+                let name = f.name();
+                let cost = match f {
+                    FfnChoice::Ratio(0) => 0.0,
+                    _ => {
+                        let logits = forward_with_replacement(
+                            reg, &parent, store, l, "ffn", &name, &trace, &mut vcache,
+                        )?;
+                        metric_cost(metric, &trace.logits, &logits, &batch.targets, parent_lm)
+                    }
+                };
+                let prev = table.get(l, "ffn", &name);
+                table.set(l, "ffn", &name, prev + cost / batches.len() as f64);
+            }
+        }
+    }
+    Ok(table)
+}
+
+fn metric_cost(metric: Metric, parent_logits: &Tensor, logits: &Tensor, targets: &[i32], parent_lm: f64) -> f64 {
+    match metric {
+        Metric::Kl => losses::kld_loss(parent_logits, logits),
+        // LM-loss scoring: degradation relative to the parent
+        Metric::LmLoss => (losses::lm_loss(logits, targets) - parent_lm).max(0.0),
+    }
+}
+
+/// Data-free "scoring" ablation (§8.2.3): block score = -(parameter
+/// count), so maximizing score = maximizing parameters.
+pub fn param_count_table(reg: &Registry, space: &SearchSpace) -> ScoreTable {
+    let man = &reg.man;
+    let mut t = ScoreTable { metric_name: "neg_params".into(), ..Default::default() };
+    for l in 0..man.cfg.n_layers {
+        for a in &space.attn {
+            let p = man.attn_layout(a).map(|x| x.param_count()).unwrap_or(0);
+            t.set(l, "attn", &a.name(), -(p as f64));
+        }
+        for f in &space.ffn {
+            let p = man.ffn_layout(f).map(|x| x.param_count()).unwrap_or(0);
+            t.set(l, "ffn", &f.name(), -(p as f64));
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_roundtrip_and_arch_cost() {
+        let mut t = ScoreTable { metric_name: "kl".into(), ..Default::default() };
+        t.set(0, "attn", "gqa_r2", 0.5);
+        t.set(0, "ffn", "r50", 0.25);
+        t.set(1, "attn", "noop", 2.0);
+        let j = t.to_json();
+        let t2 = ScoreTable::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(t.scores, t2.scores);
+
+        let mut arch = Arch::parent(2);
+        arch.layers[0] = (AttnChoice::Gqa { divisor: 2 }, FfnChoice::Ratio(3)); // r50
+        arch.layers[1] = (AttnChoice::NoOp, FfnChoice::Ratio(0));
+        assert!((t.arch_cost(&arch) - 2.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn layer_mean() {
+        let mut t = ScoreTable::default();
+        t.set(0, "attn", "a", 1.0);
+        t.set(0, "ffn", "b", 3.0);
+        t.set(1, "attn", "a", 10.0);
+        assert!((t.layer_mean(0) - 2.0).abs() < 1e-9);
+        assert!((t.layer_mean(1) - 10.0).abs() < 1e-9);
+    }
+}

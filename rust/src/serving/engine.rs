@@ -1,0 +1,377 @@
+//! Continuous-batching inference engine over the AOT block executables.
+//!
+//! Slots are fixed by the decode executables' compiled batch (`b_decode`);
+//! admission is gated by the variable-GQA paged KV manager; prefill runs
+//! at batch 1 and seeds the slot's dense cache; decode steps all active
+//! slots together with per-sequence positions (the paper's §4.1 point that
+//! batched decode amortizes weight reads is physical here too). Greedy
+//! sampling; stop on EOS / max_new / cache horizon.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+use xla::Literal;
+
+use crate::arch::{Arch, AttnChoice};
+use crate::config::Manifest;
+use crate::data::world::EOS;
+use crate::model::CompiledModel;
+use crate::runtime::{lit_f32, lit_i32, lit_to_tensor, literal::tensor_to_lit, Registry};
+use crate::weights::Store;
+
+use super::kvcache::{PageCfg, PagedKvManager};
+use super::metrics::EngineMetrics;
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub max_new: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub tokens: Vec<u32>,
+    pub ttft_secs: f64,
+    pub e2e_secs: f64,
+}
+
+struct Slot {
+    req: Request,
+    generated: Vec<u32>,
+    /// next position to write (== tokens so far)
+    len: usize,
+    last_token: u32,
+    t_submit: Instant,
+    t_first: Option<Instant>,
+}
+
+/// Per-layer decode cache (gqa layers only).
+struct LayerCache {
+    k: Literal,
+    v: Literal,
+    kv_heads: usize,
+}
+
+/// Exec names precomputed per layer (perf: the decode loop used to
+/// `format!` two strings per layer per step — see EXPERIMENTS.md §Perf).
+struct LayerExecs {
+    attn_prefill: Option<String>,
+    attn_decode: Option<String>,
+    ffn_prefill: Option<String>,
+    ffn_decode: Option<String>,
+}
+
+pub struct Engine<'a> {
+    reg: &'a Registry,
+    model: CompiledModel,
+    caches: Vec<Option<LayerCache>>,
+    slots: Vec<Option<Slot>>,
+    queue: VecDeque<(Request, Instant)>,
+    execs: Vec<LayerExecs>,
+    paged: PagedKvManager,
+    pub metrics: EngineMetrics,
+    finished: Vec<Response>,
+    next_id: u64,
+}
+
+impl<'a> Engine<'a> {
+    pub fn new(reg: &'a Registry, store: &Store, arch: &Arch, kv_budget_bytes: usize) -> Result<Engine<'a>> {
+        let man = &reg.man;
+        let cfg = &man.cfg;
+        let model = CompiledModel::assemble(man, store, arch)?;
+        let mut caches = Vec::with_capacity(arch.n_layers());
+        for (l, (a, _)) in arch.layers.iter().enumerate() {
+            let _ = l;
+            match a {
+                AttnChoice::Gqa { .. } => {
+                    let kv = man.attn_variants[&a.name()].kv_heads;
+                    let shape = [cfg.b_decode, cfg.s_max, kv, cfg.head_dim];
+                    let zeros = vec![0f32; shape.iter().product()];
+                    caches.push(Some(LayerCache {
+                        k: lit_f32(&shape, &zeros)?,
+                        v: lit_f32(&shape, &zeros)?,
+                        kv_heads: kv,
+                    }));
+                }
+                _ => caches.push(None),
+            }
+        }
+        let paged = PagedKvManager::new(
+            man,
+            arch,
+            PageCfg { page_len: 16, dtype_bytes: 4, budget_bytes: kv_budget_bytes },
+        );
+        let execs = (0..arch.n_layers())
+            .map(|l| LayerExecs {
+                attn_prefill: model.attn[l].prefix.as_ref().map(|p| format!("{p}_prefill")),
+                attn_decode: model.attn[l].prefix.as_ref().map(|p| format!("{p}_decode")),
+                ffn_prefill: model.ffn[l].prefix.as_ref().map(|p| format!("{p}_prefill")),
+                ffn_decode: model.ffn[l].prefix.as_ref().map(|p| format!("{p}_decode")),
+            })
+            .collect();
+        Ok(Engine {
+            reg,
+            model,
+            caches,
+            slots: (0..cfg.b_decode).map(|_| None).collect(),
+            queue: VecDeque::new(),
+            execs,
+            paged,
+            metrics: EngineMetrics::default(),
+            finished: Vec::new(),
+            next_id: 1,
+        })
+    }
+
+    pub fn submit(&mut self, prompt: Vec<u32>, max_new: usize) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push_back((Request { id, prompt, max_new }, Instant::now()));
+        id
+    }
+
+    fn free_slot(&self) -> Option<usize> {
+        self.slots.iter().position(Option::is_none)
+    }
+
+    fn active(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Admit queued requests into free slots (router policy: FIFO).
+    fn admit(&mut self) -> Result<()> {
+        while let Some(slot_idx) = self.free_slot() {
+            let Some((req, _t)) = self.queue.front() else { break };
+            let horizon = (req.prompt.len() + req.max_new).min(self.reg.man.cfg.s_max);
+            if !self.paged.can_admit(horizon) {
+                break; // backpressure: wait for a release
+            }
+            let (req, t_submit) = self.queue.pop_front().unwrap();
+            self.prefill(slot_idx, req, t_submit)?;
+        }
+        Ok(())
+    }
+
+    /// Prefill a prompt at batch 1 and seed the slot's caches.
+    fn prefill(&mut self, slot_idx: usize, req: Request, t_submit: Instant) -> Result<()> {
+        let man: &Manifest = &self.reg.man;
+        let cfg = &man.cfg;
+        let sp = cfg.s_prefill;
+        let plen = req.prompt.len().min(sp);
+        let mut tokens: Vec<i32> = req.prompt.iter().take(plen).map(|&t| t as i32).collect();
+        tokens.resize(sp, 0); // right-pad; causal masking isolates the pad
+        let tok = lit_i32(&[1, sp], &tokens)?;
+        let t_exec = Instant::now();
+        let mut x = self.reg.run("embed_prefill", &[&tok, &self.model.embed])?.remove(0);
+        for l in 0..self.model.attn.len() {
+            let blk = &self.model.attn[l];
+            match &self.execs[l].attn_prefill {
+                None => {}
+                Some(exec) => {
+                    let mut inputs: Vec<&Literal> = vec![&x];
+                    inputs.extend(blk.lits.iter());
+                    let mut out = self.reg.run(exec, &inputs)?;
+                    x = out.remove(0);
+                    if let Some(cache) = &mut self.caches[l] {
+                        // copy rows [0, plen) of the prefill K/V into this slot
+                        let k_new = lit_to_tensor(&out[0])?;
+                        let v_new = lit_to_tensor(&out[1])?;
+                        let mut kc = lit_to_tensor(&cache.k)?;
+                        let mut vc = lit_to_tensor(&cache.v)?;
+                        let row = cache.kv_heads * cfg.head_dim;
+                        let smax = cfg.s_max;
+                        for p in 0..plen {
+                            let dst = (slot_idx * smax + p) * row;
+                            let src = p * row;
+                            kc.data[dst..dst + row].copy_from_slice(&k_new.data[src..src + row]);
+                            vc.data[dst..dst + row].copy_from_slice(&v_new.data[src..src + row]);
+                        }
+                        cache.k = tensor_to_lit(&kc)?;
+                        cache.v = tensor_to_lit(&vc)?;
+                    }
+                }
+            }
+            let blk = &self.model.ffn[l];
+            if let Some(exec) = &self.execs[l].ffn_prefill {
+                let mut inputs: Vec<&Literal> = vec![&x];
+                inputs.extend(blk.lits.iter());
+                x = self.reg.run(exec, &inputs)?.remove(0);
+            }
+        }
+        let logits =
+            self.reg.run("head_prefill", &[&x, &self.model.final_norm, &self.model.embed])?.remove(0);
+        self.metrics.execute_secs += t_exec.elapsed().as_secs_f64();
+        let logits = lit_to_tensor(&logits)?;
+        // greedy next token from the last prompt position
+        let v = cfg.v;
+        let rowbase = (plen - 1) * v;
+        let first = argmax(&logits.data[rowbase..rowbase + v]) as u32;
+
+        self.paged.admit(req.id, plen);
+        self.metrics.prefills += 1;
+        self.metrics.prompt_tokens += plen;
+        let slot = Slot {
+            req,
+            generated: vec![first],
+            len: plen,
+            last_token: first,
+            t_submit,
+            t_first: Some(Instant::now()),
+        };
+        self.metrics
+            .ttft
+            .push(slot.t_first.unwrap().duration_since(slot.t_submit).as_secs_f64());
+        self.metrics.generated_tokens += 1;
+        // immediate completion checks
+        if first == EOS || slot.req.max_new <= 1 {
+            self.finish(slot_idx, Some(slot));
+            return Ok(());
+        }
+        self.slots[slot_idx] = Some(slot.take_ready());
+        Ok(())
+    }
+
+    /// One batched decode step over all active slots.
+    fn decode_step(&mut self) -> Result<()> {
+        let man = &self.reg.man;
+        let cfg = &man.cfg;
+        let bd = cfg.b_decode;
+        let t_step = Instant::now();
+        let mut tokens = vec![0i32; bd];
+        let mut pos = vec![0i32; bd];
+        for (i, s) in self.slots.iter().enumerate() {
+            if let Some(s) = s {
+                tokens[i] = s.last_token as i32;
+                pos[i] = s.len as i32;
+            }
+        }
+        let tok = lit_i32(&[bd, 1], &tokens)?;
+        let pos_lit = lit_i32(&[bd], &pos)?;
+        let t_exec = Instant::now();
+        let mut x = self.reg.run("embed_decode", &[&tok, &self.model.embed])?.remove(0);
+        for l in 0..self.model.attn.len() {
+            let blk = &self.model.attn[l];
+            match &self.execs[l].attn_decode {
+                None => {}
+                Some(exec) => {
+                    if let Some(cache) = &mut self.caches[l] {
+                        let mut inputs: Vec<&Literal> = vec![&x, &cache.k, &cache.v, &pos_lit];
+                        inputs.extend(blk.lits.iter());
+                        let mut out = self.reg.run(exec, &inputs)?;
+                        x = out.remove(0);
+                        cache.v = out.pop().unwrap();
+                        cache.k = out.pop().unwrap();
+                    } else {
+                        // linear attention: stateless decode
+                        let mut inputs: Vec<&Literal> = vec![&x];
+                        inputs.extend(blk.lits.iter());
+                        x = self.reg.run(exec, &inputs)?.remove(0);
+                    }
+                }
+            }
+            let blk = &self.model.ffn[l];
+            if let Some(exec) = &self.execs[l].ffn_decode {
+                let mut inputs: Vec<&Literal> = vec![&x];
+                inputs.extend(blk.lits.iter());
+                x = self.reg.run(exec, &inputs)?.remove(0);
+            }
+        }
+        let logits =
+            self.reg.run("head_decode", &[&x, &self.model.final_norm, &self.model.embed])?.remove(0);
+        self.metrics.execute_secs += t_exec.elapsed().as_secs_f64();
+        let logits = lit_to_tensor(&logits)?;
+        let v = cfg.v;
+
+        let mut to_finish = Vec::new();
+        for i in 0..bd {
+            let Some(slot) = &mut self.slots[i] else { continue };
+            let next = argmax(&logits.data[i * v..(i + 1) * v]) as u32;
+            slot.len += 1;
+            self.paged.grow(slot.req.id);
+            slot.generated.push(next);
+            slot.last_token = next;
+            self.metrics.generated_tokens += 1;
+            let done = next == EOS
+                || slot.generated.len() >= slot.req.max_new
+                || slot.len + 1 >= cfg.s_max;
+            if done {
+                to_finish.push(i);
+            }
+        }
+        for i in to_finish {
+            let slot = self.slots[i].take();
+            self.finish(i, slot);
+        }
+        self.metrics.decode_steps += 1;
+        self.metrics.sched_overhead_secs +=
+            (t_step.elapsed().as_secs_f64() - t_exec.elapsed().as_secs_f64()).max(0.0);
+        Ok(())
+    }
+
+    fn finish(&mut self, _slot_idx: usize, slot: Option<Slot>) {
+        if let Some(slot) = slot {
+            self.paged.release(slot.req.id);
+            self.metrics.requests_completed += 1;
+            self.metrics
+                .e2e
+                .push(slot.t_submit.elapsed().as_secs_f64());
+            self.finished.push(Response {
+                id: slot.req.id,
+                tokens: slot.generated,
+                ttft_secs: slot
+                    .t_first
+                    .map(|t| t.duration_since(slot.t_submit).as_secs_f64())
+                    .unwrap_or(0.0),
+                e2e_secs: slot.t_submit.elapsed().as_secs_f64(),
+            });
+        }
+    }
+
+    /// Drive the engine until queue and slots are empty; returns all
+    /// responses. Records wall time into metrics.
+    pub fn run_to_completion(&mut self) -> Result<Vec<Response>> {
+        let t0 = Instant::now();
+        loop {
+            self.admit()?;
+            if self.active() == 0 {
+                if self.queue.is_empty() {
+                    break;
+                }
+                // queue non-empty but nothing admitted -> cache stuck
+                if self.active() == 0 && self.free_slot().is_some() {
+                    return Err(anyhow!("engine stalled: request cannot be admitted"));
+                }
+            }
+            if self.active() > 0 {
+                self.decode_step()?;
+            }
+        }
+        self.metrics.wall_secs += t0.elapsed().as_secs_f64();
+        Ok(std::mem::take(&mut self.finished))
+    }
+}
+
+impl<'a> Engine<'a> {
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+}
+
+impl Slot {
+    fn take_ready(self) -> Slot {
+        self
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}

@@ -1,0 +1,247 @@
+//! Paged KV-cache manager with per-layer variable KV-head counts.
+//!
+//! TensorRT-LLM assumed a uniform KV-head count across layers; Puzzle
+//! architectures violate that (paper §6), so pages are tracked per layer
+//! with layer-specific page byte-sizes: page_bytes(l) = 2 (K+V) ·
+//! kv_heads(l) · head_dim · page_len · dtype_bytes. Layers with linear or
+//! no-op attention allocate nothing. The manager does admission control
+//! and accounting for the engine; the backing storage is the dense decode
+//! cache literals (CPU PJRT device memory == host memory).
+
+use std::collections::HashMap;
+
+use crate::arch::{Arch, AttnChoice};
+use crate::config::Manifest;
+
+#[derive(Debug, Clone)]
+pub struct PageCfg {
+    /// positions per page
+    pub page_len: usize,
+    /// bytes per cache element (f32 on this backend; 1 for FP8 accounting)
+    pub dtype_bytes: usize,
+    /// total byte budget for the cache pool
+    pub budget_bytes: usize,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct SeqPages {
+    /// pages held per layer (layers with kv_heads = 0 hold none)
+    pub per_layer: Vec<usize>,
+    pub positions: usize,
+}
+
+#[derive(Debug)]
+pub struct PagedKvManager {
+    cfg: PageCfg,
+    /// kv heads per layer (0 = linear/no-op attention)
+    kv_heads: Vec<usize>,
+    head_dim: usize,
+    allocated_bytes: usize,
+    seqs: HashMap<u64, SeqPages>,
+}
+
+impl PagedKvManager {
+    pub fn new(man: &Manifest, arch: &Arch, cfg: PageCfg) -> PagedKvManager {
+        let kv_heads = arch
+            .layers
+            .iter()
+            .map(|(a, _)| match a {
+                AttnChoice::Gqa { .. } => man.attn_variants[&a.name()].kv_heads,
+                _ => 0,
+            })
+            .collect();
+        PagedKvManager {
+            cfg,
+            kv_heads,
+            head_dim: man.cfg.head_dim,
+            allocated_bytes: 0,
+            seqs: HashMap::new(),
+        }
+    }
+
+    /// Bytes per page at layer `l` (0 for cache-free layers).
+    pub fn page_bytes(&self, l: usize) -> usize {
+        2 * self.kv_heads[l] * self.head_dim * self.cfg.page_len * self.cfg.dtype_bytes
+    }
+
+    /// Bytes one sequence position costs across all layers.
+    pub fn bytes_per_position(&self) -> usize {
+        self.kv_heads
+            .iter()
+            .map(|&kv| 2 * kv * self.head_dim * self.cfg.dtype_bytes)
+            .sum()
+    }
+
+    fn pages_for(&self, positions: usize) -> usize {
+        positions.div_ceil(self.cfg.page_len)
+    }
+
+    /// Bytes needed to grow a sequence to `positions`.
+    fn bytes_to_grow(&self, seq: Option<&SeqPages>, positions: usize) -> usize {
+        let target = self.pages_for(positions);
+        (0..self.kv_heads.len())
+            .map(|l| {
+                let have = seq.map(|s| s.per_layer[l]).unwrap_or(0);
+                let need = if self.kv_heads[l] == 0 { 0 } else { target };
+                need.saturating_sub(have) * self.page_bytes(l)
+            })
+            .sum()
+    }
+
+    /// Admission check: can a new sequence with `prompt_len` prompt and up
+    /// to `max_total` positions be admitted right now? (Conservative: checks
+    /// the full horizon so decode never deadlocks mid-generation.)
+    pub fn can_admit(&self, max_total: usize) -> bool {
+        self.allocated_bytes + self.bytes_to_grow(None, max_total) <= self.cfg.budget_bytes
+    }
+
+    /// Allocate pages for a new sequence at `positions` occupied slots.
+    pub fn admit(&mut self, seq_id: u64, positions: usize) -> bool {
+        let grow = self.bytes_to_grow(None, positions);
+        if self.allocated_bytes + grow > self.cfg.budget_bytes {
+            return false;
+        }
+        let target = self.pages_for(positions);
+        let per_layer = self
+            .kv_heads
+            .iter()
+            .map(|&kv| if kv == 0 { 0 } else { target })
+            .collect();
+        self.allocated_bytes += grow;
+        self.seqs.insert(seq_id, SeqPages { per_layer, positions });
+        true
+    }
+
+    /// Grow a sequence by one position (decode step); allocates new pages
+    /// at page boundaries. Returns false if the pool is exhausted.
+    pub fn grow(&mut self, seq_id: u64) -> bool {
+        let Some(seq) = self.seqs.get(&seq_id) else { return false };
+        let new_pos = seq.positions + 1;
+        let grow = self.bytes_to_grow(Some(seq), new_pos);
+        if self.allocated_bytes + grow > self.cfg.budget_bytes {
+            return false;
+        }
+        self.allocated_bytes += grow;
+        let target = self.pages_for(new_pos);
+        let seq = self.seqs.get_mut(&seq_id).unwrap();
+        for (l, p) in seq.per_layer.iter_mut().enumerate() {
+            if self.kv_heads[l] != 0 {
+                *p = target;
+            }
+        }
+        seq.positions = new_pos;
+        true
+    }
+
+    /// Free all pages of a finished sequence.
+    pub fn release(&mut self, seq_id: u64) {
+        if let Some(seq) = self.seqs.remove(&seq_id) {
+            let freed: usize = seq
+                .per_layer
+                .iter()
+                .enumerate()
+                .map(|(l, &p)| p * self.page_bytes(l))
+                .sum();
+            self.allocated_bytes -= freed;
+        }
+    }
+
+    pub fn allocated_bytes(&self) -> usize {
+        self.allocated_bytes
+    }
+
+    pub fn active_seqs(&self) -> usize {
+        self.seqs.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::FfnChoice;
+    use crate::config::Manifest;
+
+    fn setup(arch_fn: impl Fn(usize) -> Arch) -> Option<(Manifest, Arch)> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+        let man = Manifest::load(&dir).ok()?;
+        let arch = arch_fn(man.cfg.n_layers);
+        Some((man, arch))
+    }
+
+    fn cfg(budget: usize) -> PageCfg {
+        PageCfg { page_len: 16, dtype_bytes: 4, budget_bytes: budget }
+    }
+
+    #[test]
+    fn variable_gqa_layers_have_different_page_sizes() {
+        let Some((man, _)) = setup(Arch::parent) else { return };
+        let mut arch = Arch::parent(man.cfg.n_layers);
+        arch.layers[0].0 = AttnChoice::Gqa { divisor: 4 };
+        arch.layers[1].0 = AttnChoice::Linear;
+        let mgr = PagedKvManager::new(&man, &arch, cfg(1 << 20));
+        assert_eq!(mgr.page_bytes(1), 0); // linear attention: no cache
+        assert!(mgr.page_bytes(0) < mgr.page_bytes(2)); // fewer kv heads -> smaller pages
+        assert_eq!(mgr.page_bytes(0) * 4, mgr.page_bytes(2)); // divisor 4
+    }
+
+    #[test]
+    fn admission_and_release_accounting() {
+        let Some((man, arch)) = setup(Arch::parent) else { return };
+        let mgr_budget = 1 << 18;
+        let mut mgr = PagedKvManager::new(&man, &arch, cfg(mgr_budget));
+        assert!(mgr.admit(1, 20)); // 2 pages/layer
+        let b1 = mgr.allocated_bytes();
+        assert!(b1 > 0);
+        assert!(mgr.admit(2, 5));
+        let b2 = mgr.allocated_bytes();
+        mgr.release(1);
+        assert_eq!(mgr.allocated_bytes(), b2 - b1);
+        mgr.release(2);
+        assert_eq!(mgr.allocated_bytes(), 0);
+    }
+
+    #[test]
+    fn grow_allocates_only_at_page_boundary() {
+        let Some((man, arch)) = setup(Arch::parent) else { return };
+        let mut mgr = PagedKvManager::new(&man, &arch, cfg(1 << 20));
+        assert!(mgr.admit(1, 16)); // exactly one page
+        let b = mgr.allocated_bytes();
+        assert!(mgr.grow(1)); // position 17 -> second page
+        assert!(mgr.allocated_bytes() > b);
+        let b2 = mgr.allocated_bytes();
+        for _ in 0..14 {
+            assert!(mgr.grow(1)); // up to 31: same page
+        }
+        assert_eq!(mgr.allocated_bytes(), b2);
+    }
+
+    #[test]
+    fn budget_exhaustion_rejects() {
+        let Some((man, arch)) = setup(Arch::parent) else { return };
+        let one_seq_bytes = {
+            let mut probe = PagedKvManager::new(&man, &arch, cfg(usize::MAX / 2));
+            probe.admit(1, 64);
+            probe.allocated_bytes()
+        };
+        let mut mgr = PagedKvManager::new(&man, &arch, cfg(one_seq_bytes + one_seq_bytes / 2));
+        assert!(mgr.admit(1, 64));
+        assert!(!mgr.admit(2, 64), "second sequence must be rejected");
+        assert!(mgr.can_admit(16));
+        mgr.release(1);
+        assert!(mgr.admit(2, 64));
+    }
+
+    #[test]
+    fn noop_attention_frees_all_cache() {
+        let Some((man, _)) = setup(Arch::parent) else { return };
+        let n = man.cfg.n_layers;
+        let mut arch = Arch::parent(n);
+        for l in 0..n {
+            arch.layers[l] = (AttnChoice::NoOp, FfnChoice::Ratio(0));
+        }
+        let mut mgr = PagedKvManager::new(&man, &arch, cfg(1024));
+        assert_eq!(mgr.bytes_per_position(), 0);
+        assert!(mgr.admit(1, 1000)); // no cache, always admits
+        assert_eq!(mgr.allocated_bytes(), 0);
+    }
+}

@@ -1,0 +1,16 @@
+//! Inference engine for variable-block architectures (paper §6).
+//!
+//! The paper's TensorRT-LLM contribution — paged KV caching with
+//! *different numbers of KV heads per layer*, plus linear-attention and
+//! no-op blocks — reimplemented natively: the `kvcache` manager tracks
+//! per-layer page tables whose page byte-size depends on that layer's KV
+//! head count; the `engine` runs continuous batching over the AOT decode
+//! executables (prefill b=1, batched decode with per-sequence positions).
+
+pub mod engine;
+pub mod kvcache;
+pub mod metrics;
+
+pub use engine::{Engine, Request, Response};
+pub use kvcache::PagedKvManager;
+pub use metrics::EngineMetrics;

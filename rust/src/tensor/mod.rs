@@ -1,0 +1,246 @@
+//! Dense f32 tensor math used host-side: weight-init transforms (§3.2),
+//! Wanda / low-rank comparison methods (§8.4), loss gradients, Adam, and
+//! eval logprob arithmetic. All heavy model compute runs through the AOT
+//! executables — this module is for coordinator-side linear algebra.
+
+pub mod svd;
+
+use crate::util::Rng;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn ones(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![1.0; shape.iter().product()] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    /// Gaussian init with the given std (parent weight initialization).
+    pub fn randn(shape: &[usize], std: f32, rng: &mut Rng) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: (0..n).map(|_| rng.normal() * std).collect() }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rows(&self) -> usize {
+        self.shape[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.shape.len(), 2);
+        self.shape[1]
+    }
+
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols() + j]
+    }
+
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        let c = self.cols();
+        self.data[i * c + j] = v;
+    }
+
+    /// Matrix multiply: [m,k] @ [k,n] -> [m,n]. Blocked i-k-j loop order
+    /// (row-major friendly, vectorizes well).
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape.len(), 2);
+        assert_eq!(other.shape.len(), 2);
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (other.shape[0], other.shape[1]);
+        assert_eq!(k, k2, "matmul inner dim mismatch");
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (kk, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        Tensor { shape: vec![m, n], data: out }
+    }
+
+    pub fn transpose(&self) -> Tensor {
+        assert_eq!(self.shape.len(), 2);
+        let (m, n) = (self.shape[0], self.shape[1]);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = self.data[i * n + j];
+            }
+        }
+        Tensor { shape: vec![n, m], data: out }
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        Tensor { shape: self.shape.clone(), data: self.data.iter().map(|x| x * s).collect() }
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect(),
+        }
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect(),
+        }
+    }
+
+    pub fn frob_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// L2 norm of row i (2-D only).
+    pub fn row_norm(&self, i: usize) -> f32 {
+        let n = self.cols();
+        self.data[i * n..(i + 1) * n].iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// L2 norm of column j (2-D only).
+    pub fn col_norm(&self, j: usize) -> f32 {
+        let (m, n) = (self.shape[0], self.shape[1]);
+        (0..m).map(|i| self.data[i * n + j].powi(2)).sum::<f32>().sqrt()
+    }
+
+    /// Keep only rows listed in `idx` (2-D): used by Channel-Contribution
+    /// pruning of the FFN down-projection [I, D] -> [I', D].
+    pub fn select_rows(&self, idx: &[usize]) -> Tensor {
+        let n = self.cols();
+        let mut data = Vec::with_capacity(idx.len() * n);
+        for &i in idx {
+            data.extend_from_slice(&self.data[i * n..(i + 1) * n]);
+        }
+        Tensor { shape: vec![idx.len(), n], data }
+    }
+
+    /// Keep only columns listed in `idx` (2-D): prunes the up/gate
+    /// projections [D, I] -> [D, I'].
+    pub fn select_cols(&self, idx: &[usize]) -> Tensor {
+        let (m, n) = (self.shape[0], self.shape[1]);
+        let mut data = Vec::with_capacity(idx.len() * m);
+        for i in 0..m {
+            for &j in idx {
+                data.push(self.data[i * n + j]);
+            }
+        }
+        Tensor { shape: vec![m, idx.len()], data }
+    }
+}
+
+/// Numerically-stable softmax over the last axis of a flat [rows, v] slice,
+/// in place.
+pub fn softmax_rows(data: &mut [f32], v: usize) {
+    for row in data.chunks_mut(v) {
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut z = 0.0;
+        for x in row.iter_mut() {
+            *x = (*x - m).exp();
+            z += *x;
+        }
+        for x in row.iter_mut() {
+            *x /= z;
+        }
+    }
+}
+
+/// log-softmax over rows, in place.
+pub fn log_softmax_rows(data: &mut [f32], v: usize) {
+    for row in data.chunks_mut(v) {
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let z: f32 = row.iter().map(|x| (x - m).exp()).sum();
+        let lz = z.ln() + m;
+        for x in row.iter_mut() {
+            *x -= lz;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let mut eye = Tensor::zeros(&[3, 3]);
+        for i in 0..3 {
+            eye.set2(i, i, 1.0);
+        }
+        assert_eq!(a.matmul(&eye).data, a.data);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::from_vec(&[2, 2], vec![5., 6., 7., 8.]);
+        assert_eq!(a.matmul(&b).data, vec![19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(1);
+        let a = Tensor::randn(&[5, 7], 1.0, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn select_rows_cols() {
+        let a = Tensor::from_vec(&[3, 2], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(a.select_rows(&[2, 0]).data, vec![5., 6., 1., 2.]);
+        assert_eq!(a.select_cols(&[1]).data, vec![2., 4., 6.]);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut d = vec![1.0, 2.0, 3.0, 1000.0, 1000.0, 1000.0];
+        softmax_rows(&mut d, 3);
+        assert!((d[0..3].iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!((d[3..6].iter().sum::<f32>() - 1.0).abs() < 1e-6); // stable at large values
+        assert!(d[2] > d[1] && d[1] > d[0]);
+    }
+
+    #[test]
+    fn log_softmax_matches_softmax() {
+        let mut a = vec![0.5, -1.0, 2.0];
+        let mut b = a.clone();
+        softmax_rows(&mut a, 3);
+        log_softmax_rows(&mut b, 3);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x.ln() - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn norms() {
+        let a = Tensor::from_vec(&[2, 2], vec![3., 0., 4., 0.]);
+        assert!((a.col_norm(0) - 5.0).abs() < 1e-6);
+        assert!((a.row_norm(0) - 3.0).abs() < 1e-6);
+        assert!((a.frob_norm() - 5.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,177 @@
+//! One-sided Jacobi SVD — substrate for the low-rank comparison method
+//! (paper §8.4, Table 17: factorized layers à la Khodak et al.).
+//!
+//! Good enough numerically for the weight matrices we factor (hundreds of
+//! rows/cols); O(mn²) per sweep with a handful of sweeps to converge.
+
+use super::Tensor;
+
+pub struct Svd {
+    pub u: Tensor,      // [m, r]
+    pub s: Vec<f32>,    // [r], descending
+    pub vt: Tensor,     // [r, n]
+}
+
+/// Full SVD of a [m, n] matrix via one-sided Jacobi on A (operating on
+/// columns of A, accumulating V).
+pub fn svd(a: &Tensor) -> Svd {
+    let (m, n) = (a.shape[0], a.shape[1]);
+    // work on columns: store A column-major for cache-friendly rotations
+    let mut cols: Vec<Vec<f32>> = (0..n)
+        .map(|j| (0..m).map(|i| a.data[i * n + j]).collect())
+        .collect();
+    let mut v: Vec<Vec<f32>> = (0..n)
+        .map(|j| {
+            let mut e = vec![0.0; n];
+            e[j] = 1.0;
+            e
+        })
+        .collect();
+
+    let eps = 1e-9f64;
+    for _sweep in 0..60 {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let mut app = 0.0f64;
+                let mut aqq = 0.0f64;
+                let mut apq = 0.0f64;
+                for i in 0..m {
+                    app += (cols[p][i] as f64) * (cols[p][i] as f64);
+                    aqq += (cols[q][i] as f64) * (cols[q][i] as f64);
+                    apq += (cols[p][i] as f64) * (cols[q][i] as f64);
+                }
+                off += apq.abs();
+                if apq.abs() < eps * (app * aqq).sqrt().max(1e-30) {
+                    continue;
+                }
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                let (cf, sf) = (c as f32, s as f32);
+                for i in 0..m {
+                    let xp = cols[p][i];
+                    let xq = cols[q][i];
+                    cols[p][i] = cf * xp - sf * xq;
+                    cols[q][i] = sf * xp + cf * xq;
+                }
+                for i in 0..n {
+                    let vp = v[p][i];
+                    let vq = v[q][i];
+                    v[p][i] = cf * vp - sf * vq;
+                    v[q][i] = sf * vp + cf * vq;
+                }
+            }
+        }
+        if off < 1e-10 {
+            break;
+        }
+    }
+
+    // singular values = column norms; U = normalized columns
+    let mut order: Vec<usize> = (0..n).collect();
+    let norms: Vec<f32> = cols.iter().map(|c| c.iter().map(|x| x * x).sum::<f32>().sqrt()).collect();
+    order.sort_by(|&a, &b| norms[b].partial_cmp(&norms[a]).unwrap());
+
+    let r = n.min(m);
+    let mut u = Tensor::zeros(&[m, r]);
+    let mut s = vec![0.0f32; r];
+    let mut vt = Tensor::zeros(&[r, n]);
+    for (k, &j) in order.iter().take(r).enumerate() {
+        s[k] = norms[j];
+        let inv = if norms[j] > 1e-20 { 1.0 / norms[j] } else { 0.0 };
+        for i in 0..m {
+            u.data[i * r + k] = cols[j][i] * inv;
+        }
+        for i in 0..n {
+            vt.data[k * n + i] = v[j][i];
+        }
+    }
+    Svd { u, s, vt }
+}
+
+/// Rank-k approximation of `a`: U_k diag(s_k) V_kᵀ, returned at full shape.
+pub fn low_rank_approx(a: &Tensor, k: usize) -> Tensor {
+    let dec = svd(a);
+    let (m, n) = (a.shape[0], a.shape[1]);
+    let r = dec.s.len().min(k);
+    let mut out = Tensor::zeros(&[m, n]);
+    for kk in 0..r {
+        let sk = dec.s[kk];
+        for i in 0..m {
+            let uik = dec.u.data[i * dec.s.len() + kk] * sk;
+            if uik == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                out.data[i * n + j] += uik * dec.vt.data[kk * n + j];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn reconstructs_full_rank() {
+        let mut rng = Rng::new(2);
+        let a = Tensor::randn(&[8, 6], 1.0, &mut rng);
+        let d = svd(&a);
+        // U diag(s) Vt == A
+        let mut us = d.u.clone();
+        for i in 0..8 {
+            for k in 0..6 {
+                us.data[i * 6 + k] *= d.s[k];
+            }
+        }
+        let rec = us.matmul(&d.vt);
+        assert!(rec.sub(&a).frob_norm() < 1e-3 * a.frob_norm().max(1.0));
+    }
+
+    #[test]
+    fn singular_values_descending_nonneg() {
+        let mut rng = Rng::new(3);
+        let a = Tensor::randn(&[10, 5], 1.0, &mut rng);
+        let d = svd(&a);
+        for w in d.s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-5);
+        }
+        assert!(d.s.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn exact_on_rank_one() {
+        // A = u v^T has exactly one nonzero singular value
+        let u = vec![1.0f32, 2.0, -1.0];
+        let v = vec![0.5f32, -0.5, 1.0, 2.0];
+        let mut a = Tensor::zeros(&[3, 4]);
+        for i in 0..3 {
+            for j in 0..4 {
+                a.data[i * 4 + j] = u[i] * v[j];
+            }
+        }
+        let d = svd(&a);
+        assert!(d.s[0] > 1.0);
+        for &s in &d.s[1..] {
+            assert!(s < 1e-4, "trailing singular value {s}");
+        }
+        let rec = low_rank_approx(&a, 1);
+        assert!(rec.sub(&a).frob_norm() < 1e-4);
+    }
+
+    #[test]
+    fn low_rank_is_best_approx_improves_with_k() {
+        let mut rng = Rng::new(4);
+        let a = Tensor::randn(&[12, 12], 1.0, &mut rng);
+        let e1 = low_rank_approx(&a, 2).sub(&a).frob_norm();
+        let e2 = low_rank_approx(&a, 6).sub(&a).frob_norm();
+        let e3 = low_rank_approx(&a, 12).sub(&a).frob_norm();
+        assert!(e1 > e2 && e2 > e3);
+        assert!(e3 < 1e-3);
+    }
+}

@@ -1,0 +1,131 @@
+//! Adam optimizer, applied host-side to the weight store after the
+//! backward chain returns gradients (elementwise; tiny fraction of step
+//! cost).
+
+use std::collections::HashMap;
+
+use crate::tensor::Tensor;
+
+#[derive(Debug, Clone)]
+pub struct AdamCfg {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    pub grad_clip: f32,
+}
+
+impl Default for AdamCfg {
+    fn default() -> Self {
+        AdamCfg { lr: 3e-3, beta1: 0.9, beta2: 0.95, eps: 1e-8, weight_decay: 0.0, grad_clip: 1.0 }
+    }
+}
+
+#[derive(Default)]
+struct Slot {
+    m: Vec<f32>,
+    v: Vec<f32>,
+}
+
+pub struct Adam {
+    pub cfg: AdamCfg,
+    pub t: u64,
+    slots: HashMap<String, Slot>,
+}
+
+impl Adam {
+    pub fn new(cfg: AdamCfg) -> Adam {
+        Adam { cfg, t: 0, slots: HashMap::new() }
+    }
+
+    /// Begin a step (increments the bias-correction counter once per
+    /// optimizer step regardless of parameter count).
+    pub fn begin_step(&mut self) {
+        self.t += 1;
+    }
+
+    /// Global gradient-norm clipping across a set of grads; returns scale.
+    pub fn clip_scale(&self, grads: &[(&str, &Tensor)]) -> f32 {
+        if self.cfg.grad_clip <= 0.0 {
+            return 1.0;
+        }
+        let total: f32 = grads
+            .iter()
+            .map(|(_, g)| g.data.iter().map(|x| x * x).sum::<f32>())
+            .sum();
+        let norm = total.sqrt();
+        if norm > self.cfg.grad_clip {
+            self.cfg.grad_clip / norm
+        } else {
+            1.0
+        }
+    }
+
+    /// Update one parameter in place. `scale` multiplies the grad (clip).
+    pub fn update(&mut self, key: &str, w: &mut Tensor, g: &Tensor, scale: f32) {
+        assert_eq!(w.shape, g.shape, "adam shape mismatch for {key}");
+        let n = w.numel();
+        let slot = self.slots.entry(key.to_string()).or_insert_with(|| Slot {
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+        });
+        let c = &self.cfg;
+        let t = self.t.max(1) as i32;
+        let bc1 = 1.0 - c.beta1.powi(t);
+        let bc2 = 1.0 - c.beta2.powi(t);
+        for i in 0..n {
+            let gi = g.data[i] * scale + c.weight_decay * w.data[i];
+            slot.m[i] = c.beta1 * slot.m[i] + (1.0 - c.beta1) * gi;
+            slot.v[i] = c.beta2 * slot.v[i] + (1.0 - c.beta2) * gi * gi;
+            let mhat = slot.m[i] / bc1;
+            let vhat = slot.v[i] / bc2;
+            w.data[i] -= c.lr * mhat / (vhat.sqrt() + c.eps);
+        }
+    }
+}
+
+/// Linear-warmup cosine-decay LR schedule.
+pub fn lr_schedule(base: f32, step: u64, warmup: u64, total: u64) -> f32 {
+    if step < warmup {
+        return base * (step + 1) as f32 / warmup as f32;
+    }
+    let p = (step - warmup) as f32 / (total.saturating_sub(warmup)).max(1) as f32;
+    let p = p.min(1.0);
+    0.1 * base + 0.9 * base * 0.5 * (1.0 + (std::f32::consts::PI * p).cos())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adam_descends_quadratic() {
+        // minimize f(w) = sum w^2 from w=1; grad = 2w
+        let mut adam = Adam::new(AdamCfg { lr: 0.05, ..Default::default() });
+        let mut w = Tensor::ones(&[4]);
+        for _ in 0..200 {
+            adam.begin_step();
+            let g = Tensor::from_vec(&[4], w.data.iter().map(|x| 2.0 * x).collect());
+            adam.update("w", &mut w, &g, 1.0);
+        }
+        assert!(w.data.iter().all(|x| x.abs() < 0.05), "{:?}", w.data);
+    }
+
+    #[test]
+    fn clip_caps_norm() {
+        let adam = Adam::new(AdamCfg { grad_clip: 1.0, ..Default::default() });
+        let g = Tensor::from_vec(&[2], vec![30.0, 40.0]); // norm 50
+        let s = adam.clip_scale(&[("g", &g)]);
+        assert!((s - 0.02).abs() < 1e-6);
+    }
+
+    #[test]
+    fn schedule_shape() {
+        let base = 1.0;
+        assert!(lr_schedule(base, 0, 10, 100) < 0.2);
+        assert!((lr_schedule(base, 9, 10, 100) - 1.0).abs() < 0.01);
+        assert!(lr_schedule(base, 99, 10, 100) < 0.2);
+        assert!(lr_schedule(base, 50, 10, 100) > lr_schedule(base, 90, 10, 100));
+    }
+}

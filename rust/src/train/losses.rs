@@ -1,0 +1,179 @@
+//! Loss functions + analytic gradients, computed host-side over logits /
+//! hidden states (V <= 512 keeps this cheap). Formulas mirror
+//! python/compile/model.py, which is verified against jax autodiff in
+//! pytest; the rust unit tests below pin the same values.
+
+use crate::tensor::{log_softmax_rows, softmax_rows, Tensor};
+
+/// Mean-token cross entropy + d/dlogits. logits [b*s, v] flattened.
+pub fn ce_loss_and_grad(logits: &Tensor, targets: &[i32]) -> (f64, Tensor) {
+    let v = *logits.shape.last().unwrap();
+    let n = logits.numel() / v;
+    assert_eq!(targets.len(), n);
+    let mut lsm = logits.data.clone();
+    log_softmax_rows(&mut lsm, v);
+    let mut loss = 0.0f64;
+    for (row, &t) in targets.iter().enumerate() {
+        loss -= lsm[row * v + t as usize] as f64;
+    }
+    loss /= n as f64;
+    // grad = (softmax - onehot) / n
+    let mut g = logits.data.clone();
+    softmax_rows(&mut g, v);
+    let inv_n = 1.0 / n as f32;
+    for (row, &t) in targets.iter().enumerate() {
+        g[row * v + t as usize] -= 1.0;
+    }
+    for x in g.iter_mut() {
+        *x *= inv_n;
+    }
+    (loss, Tensor::from_vec(&logits.shape, g))
+}
+
+/// Mean-token KL(parent || child) + d/dchild_logits.
+pub fn kld_loss_and_grad(parent: &Tensor, child: &Tensor) -> (f64, Tensor) {
+    assert_eq!(parent.shape, child.shape);
+    let v = *parent.shape.last().unwrap();
+    let n = parent.numel() / v;
+    let mut lp = parent.data.clone();
+    let mut lc = child.data.clone();
+    log_softmax_rows(&mut lp, v);
+    log_softmax_rows(&mut lc, v);
+    let mut loss = 0.0f64;
+    for i in 0..parent.numel() {
+        let p = lp[i].exp();
+        loss += (p * (lp[i] - lc[i])) as f64;
+    }
+    loss /= n as f64;
+    // grad = (softmax(c) - softmax(p)) / n
+    let inv_n = 1.0 / n as f32;
+    let g: Vec<f32> = lc
+        .iter()
+        .zip(lp.iter())
+        .map(|(c, p)| (c.exp() - p.exp()) * inv_n)
+        .collect();
+    (loss, Tensor::from_vec(&parent.shape, g))
+}
+
+/// KL eval only (validation KLD in Table 1).
+pub fn kld_loss(parent: &Tensor, child: &Tensor) -> f64 {
+    kld_loss_and_grad(parent, child).0
+}
+
+/// Mean (1 - cosine) between per-token hidden states + d/dh_child.
+/// hc, hp: [n_tokens, d] flattened.
+pub fn cosine_loss_and_grad(hc: &Tensor, hp: &Tensor) -> (f64, Tensor) {
+    assert_eq!(hc.shape, hp.shape);
+    let d = *hc.shape.last().unwrap();
+    let n = hc.numel() / d;
+    let mut loss = 0.0f64;
+    let mut grad = vec![0.0f32; hc.numel()];
+    let eps = 1e-8f32;
+    for t in 0..n {
+        let a = &hc.data[t * d..(t + 1) * d];
+        let b = &hp.data[t * d..(t + 1) * d];
+        let dot: f32 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+        let na: f32 = a.iter().map(|x| x * x).sum::<f32>().sqrt();
+        let nb: f32 = b.iter().map(|x| x * x).sum::<f32>().sqrt();
+        let den = na * nb + eps;
+        let cos = dot / den;
+        loss += 1.0 - cos as f64;
+        // d(1-cos)/da = -(b/den - cos * a / (na^2))
+        let inv_n = 1.0 / n as f32;
+        for j in 0..d {
+            let da = -(b[j] / den - cos * a[j] / (na * na + eps));
+            grad[t * d + j] = da * inv_n;
+        }
+    }
+    (loss / n as f64, Tensor::from_vec(&hc.shape, grad))
+}
+
+/// BLD objective (§3): normalized MSE = ||oc-op||² / ||op||², + d/doc.
+pub fn nmse_loss_and_grad(oc: &Tensor, op: &Tensor) -> (f64, Tensor) {
+    assert_eq!(oc.shape, op.shape);
+    let denom: f32 = op.data.iter().map(|x| x * x).sum::<f32>() + 1e-8;
+    let mut num = 0.0f64;
+    let mut g = vec![0.0f32; oc.numel()];
+    for i in 0..oc.numel() {
+        let diff = oc.data[i] - op.data[i];
+        num += (diff * diff) as f64;
+        g[i] = 2.0 * diff / denom;
+    }
+    (num / denom as f64, Tensor::from_vec(&oc.shape, g))
+}
+
+/// Per-token LM loss of `logits` against targets, no grad (replace-1-block
+/// LM-loss scoring, §4.2).
+pub fn lm_loss(logits: &Tensor, targets: &[i32]) -> f64 {
+    ce_loss_and_grad(logits, targets).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finite_diff_check<F>(f: F, x0: &Tensor, analytic: &Tensor, tol: f32)
+    where
+        F: Fn(&Tensor) -> f64,
+    {
+        let h = 1e-3f32;
+        for i in (0..x0.numel()).step_by((x0.numel() / 7).max(1)) {
+            let mut xp = x0.clone();
+            xp.data[i] += h;
+            let mut xm = x0.clone();
+            xm.data[i] -= h;
+            let fd = ((f(&xp) - f(&xm)) / (2.0 * h as f64)) as f32;
+            assert!(
+                (fd - analytic.data[i]).abs() < tol,
+                "idx {i}: fd {fd} vs analytic {}",
+                analytic.data[i]
+            );
+        }
+    }
+
+    #[test]
+    fn ce_grad_matches_finite_diff() {
+        let logits = Tensor::from_vec(&[3, 4], vec![0.1, -0.5, 0.3, 1.0, 0.0, 0.2, -1.0, 0.4, 2.0, 0.1, 0.0, -0.3]);
+        let targets = vec![2, 0, 1];
+        let (_, g) = ce_loss_and_grad(&logits, &targets);
+        finite_diff_check(|l| ce_loss_and_grad(l, &targets).0, &logits, &g, 1e-3);
+    }
+
+    #[test]
+    fn ce_perfect_prediction_low_loss() {
+        let mut logits = Tensor::zeros(&[2, 4]);
+        logits.data[1] = 20.0; // row 0 predicts class 1
+        logits.data[4 + 3] = 20.0; // row 1 predicts class 3
+        let (loss, _) = ce_loss_and_grad(&logits, &[1, 3]);
+        assert!(loss < 1e-3, "loss {loss}");
+    }
+
+    #[test]
+    fn kld_zero_at_equal_and_grad_fd() {
+        let p = Tensor::from_vec(&[2, 3], vec![0.5, -0.2, 1.0, 0.0, 0.3, -0.7]);
+        assert!(kld_loss(&p, &p).abs() < 1e-9);
+        let c = Tensor::from_vec(&[2, 3], vec![0.1, 0.4, -0.5, 0.9, -0.2, 0.0]);
+        let (loss, g) = kld_loss_and_grad(&p, &c);
+        assert!(loss > 0.0);
+        finite_diff_check(|x| kld_loss_and_grad(&p, x).0, &c, &g, 1e-3);
+    }
+
+    #[test]
+    fn cosine_grad_fd() {
+        let hp = Tensor::from_vec(&[2, 4], vec![1.0, 0.5, -0.3, 0.8, -1.0, 0.2, 0.4, 0.1]);
+        let hc = Tensor::from_vec(&[2, 4], vec![0.9, 0.1, 0.3, -0.2, 0.5, 0.5, -0.4, 1.0]);
+        let (loss, g) = cosine_loss_and_grad(&hc, &hp);
+        assert!(loss > 0.0 && loss < 2.0);
+        finite_diff_check(|x| cosine_loss_and_grad(x, &hp).0, &hc, &g, 2e-3);
+    }
+
+    #[test]
+    fn nmse_grad_fd_and_normalization() {
+        let op = Tensor::from_vec(&[2, 3], vec![1.0, -2.0, 0.5, 0.3, 1.5, -0.7]);
+        let zero = Tensor::zeros(&[2, 3]);
+        assert!((nmse_loss_and_grad(&zero, &op).0 - 1.0).abs() < 1e-5);
+        let oc = Tensor::from_vec(&[2, 3], vec![0.8, -1.5, 0.7, 0.0, 1.2, -0.2]);
+        let (_, g) = nmse_loss_and_grad(&oc, &op);
+        finite_diff_check(|x| nmse_loss_and_grad(x, &op).0, &oc, &g, 1e-3);
+    }
+}

@@ -1,0 +1,214 @@
+//! Training driver: forward/backward chaining over block executables.
+//!
+//! Used for (a) pretraining the parent ("LM" loss), (b) GKD uptraining of
+//! reassembled children (paper §5, any combination of LM / cosine / KLD
+//! losses), and (c) the lightweight-alignment finetune (Table 5).
+//!
+//! The backward pass chains per-variant `*_train_vjp` executables (which
+//! recompute their primal internally — deliberate rematerialization) and
+//! applies Adam host-side.
+
+pub mod adam;
+pub mod losses;
+
+use anyhow::Result;
+use std::collections::HashMap;
+
+use crate::arch::Arch;
+use crate::config::Manifest;
+use crate::data::Batch;
+use crate::model::{vjp_subblock, CompiledModel, Trace};
+use crate::runtime::{literal::tensor_to_lit, lit_i32, lit_to_tensor, Registry};
+use crate::tensor::Tensor;
+use crate::weights::{store::block_key, Store};
+
+pub use adam::{lr_schedule, Adam, AdamCfg};
+
+/// Which loss components drive the step (paper Table 1 combinations).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LossSpec {
+    pub lm: bool,
+    pub cosine: bool,
+    pub kld: bool,
+}
+
+impl LossSpec {
+    pub fn lm_only() -> LossSpec {
+        LossSpec { lm: true, cosine: false, kld: false }
+    }
+
+    /// The paper's final GKD recipe (Eq. 4): cosine + KLD, no LM.
+    pub fn gkd_best() -> LossSpec {
+        LossSpec { lm: false, cosine: true, kld: true }
+    }
+
+    pub fn name(&self) -> String {
+        let mut parts = vec![];
+        if self.lm {
+            parts.push("LM");
+        }
+        if self.cosine {
+            parts.push("cos");
+        }
+        if self.kld {
+            parts.push("KLD");
+        }
+        if parts.is_empty() {
+            "none".into()
+        } else {
+            parts.join("+")
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct StepMetrics {
+    pub loss: f64,
+    pub lm: f64,
+    pub cosine: f64,
+    pub kld: f64,
+}
+
+/// Per-layer hidden states (outputs of each layer's FFN subblock) from a
+/// trace: what the cosine loss compares between parent and child.
+pub fn layer_hiddens(trace: &Trace) -> Vec<&xla::Literal> {
+    let l = trace.attn_in.len();
+    let mut out: Vec<&xla::Literal> = Vec::with_capacity(l);
+    for i in 1..l {
+        out.push(&trace.attn_in[i]);
+    }
+    out.push(&trace.hidden);
+    out
+}
+
+/// One optimizer step of the child described by `arch` on `batch`.
+/// `parent` (with its trace on the same batch) is required when the spec
+/// uses cosine or KLD. Returns metrics; mutates `store` in place.
+#[allow(clippy::too_many_arguments)]
+pub fn train_step(
+    reg: &Registry,
+    store: &mut Store,
+    arch: &Arch,
+    adam: &mut Adam,
+    batch: &Batch,
+    spec: LossSpec,
+    parent_trace: Option<&Trace>,
+    lr: f32,
+) -> Result<StepMetrics> {
+    let man = &reg.man;
+    let child = CompiledModel::assemble(man, store, arch)?;
+    let trace = child.forward(reg, "train", &batch.inputs, batch.b, batch.s)?;
+
+    // ---- loss heads -> dlogits ----
+    let mut metrics = StepMetrics::default();
+    let mut dlogits = Tensor::zeros(&trace.logits.shape);
+    if spec.lm {
+        let (l, g) = losses::ce_loss_and_grad(&trace.logits, &batch.targets);
+        metrics.lm = l;
+        dlogits = dlogits.add(&g);
+    }
+    if spec.kld {
+        let p = parent_trace.expect("kld loss requires parent trace");
+        let (l, g) = losses::kld_loss_and_grad(&p.logits, &trace.logits);
+        metrics.kld = l;
+        dlogits = dlogits.add(&g);
+    }
+
+    // per-layer cosine grads, indexed by layer (applied during backward)
+    let n_layers = arch.n_layers();
+    let mut dcos: Vec<Option<Tensor>> = vec![None; n_layers];
+    if spec.cosine {
+        let p = parent_trace.expect("cosine loss requires parent trace");
+        let ph = layer_hiddens(p);
+        let ch = layer_hiddens(&trace);
+        for l in 0..n_layers {
+            let hp = lit_to_tensor(ph[l])?;
+            let hc = lit_to_tensor(ch[l])?;
+            let (cl, g) = losses::cosine_loss_and_grad(&hc, &hp);
+            metrics.cosine += cl / n_layers as f64;
+            dcos[l] = Some(g);
+        }
+    }
+    metrics.loss = metrics.lm + metrics.cosine + metrics.kld;
+
+    // ---- backward chain ----
+    let mut grads: HashMap<String, Tensor> = HashMap::new();
+    let dlogits_lit = tensor_to_lit(&dlogits)?;
+    let mut out = reg.run(
+        "head_train_vjp",
+        &[&trace.hidden, &child.final_norm, &child.embed, &dlogits_lit],
+    )?;
+    let mut dx = out.remove(0);
+    grads.insert("final_norm".into(), lit_to_tensor(&out[0])?);
+    grads.insert("embed".into(), lit_to_tensor(&out[1])?);
+
+    for l in (0..n_layers).rev() {
+        if let Some(g) = &dcos[l] {
+            // cosine grad attaches to this layer's hidden state
+            dx = tensor_to_lit(&lit_to_tensor(&dx)?.add(g))?;
+        }
+        let (a, f) = &arch.layers[l];
+        let (dx2, dwf) = vjp_subblock(reg, &child.ffn[l], &trace.ffn_in[l], dx)?;
+        accumulate_block_grads(&mut grads, man, l, "ffn", &f.name(), dwf)?;
+        let (dx3, dwa) = vjp_subblock(reg, &child.attn[l], &trace.attn_in[l], dx2)?;
+        accumulate_block_grads(&mut grads, man, l, "attn", &a.name(), dwa)?;
+        dx = dx3;
+    }
+
+    let tok = lit_i32(&[batch.b, batch.s], &batch.inputs)?;
+    let de = reg.run("embed_train_vjp", &[&tok, &child.embed, &dx])?.remove(0);
+    let de = lit_to_tensor(&de)?;
+    let e = grads.get_mut("embed").unwrap();
+    *e = e.add(&de); // tied embedding: head grad + input grad
+
+    // ---- optimizer ----
+    adam.cfg.lr = lr;
+    adam.begin_step();
+    let grad_refs: Vec<(&str, &Tensor)> = grads.iter().map(|(k, g)| (k.as_str(), g)).collect();
+    let scale = adam.clip_scale(&grad_refs);
+    for (key, g) in &grads {
+        let w = store.map.get_mut(key).expect("grad for unknown weight");
+        adam.update(key, w, g, scale);
+    }
+    Ok(metrics)
+}
+
+fn accumulate_block_grads(
+    grads: &mut HashMap<String, Tensor>,
+    man: &Manifest,
+    layer: usize,
+    kind: &str,
+    variant: &str,
+    dws: Vec<xla::Literal>,
+) -> Result<()> {
+    if dws.is_empty() {
+        return Ok(()); // NoOp
+    }
+    let layout = if kind == "attn" {
+        &man.attn_variants[variant]
+    } else {
+        &man.ffn_variants[variant]
+    };
+    for ((name, _), lit) in layout.weights.iter().zip(dws) {
+        grads.insert(block_key(layer, kind, variant, name), lit_to_tensor(&lit)?);
+    }
+    Ok(())
+}
+
+/// Evaluation-only forward: mean LM loss and KLD vs an optional parent
+/// trace over one batch.
+pub fn eval_batch(
+    reg: &Registry,
+    store: &Store,
+    arch: &Arch,
+    batch: &Batch,
+    parent_trace: Option<&Trace>,
+) -> Result<(f64, f64)> {
+    let child = CompiledModel::assemble(&reg.man, store, arch)?;
+    let trace = child.forward(reg, "train", &batch.inputs, batch.b, batch.s)?;
+    let lm = losses::lm_loss(&trace.logits, &batch.targets);
+    let kld = parent_trace
+        .map(|p| losses::kld_loss(&p.logits, &trace.logits))
+        .unwrap_or(0.0);
+    Ok((lm, kld))
+}

@@ -1,0 +1,89 @@
+//! Tiny CLI argument parser: `cmd subcommand --key value --flag`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    kv: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Args {
+        let mut a = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let t = &argv[i];
+            if let Some(key) = t.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    a.kv.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    a.kv.insert(key.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    a.flags.push(key.to_string());
+                }
+            } else {
+                a.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        a
+    }
+
+    pub fn from_env() -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.kv.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key) || self.get(key).map(|v| v == "true").unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse(&s(&["exp", "table3", "--steps", "100", "--fast", "--lr=0.01"]));
+        assert_eq!(a.positional, vec!["exp", "table3"]);
+        assert_eq!(a.usize("steps", 0), 100);
+        assert!(a.flag("fast"));
+        assert_eq!(a.f64("lr", 0.0), 0.01);
+        assert_eq!(a.str("missing", "d"), "d");
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = Args::parse(&s(&["--verbose"]));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+}

@@ -1,0 +1,47 @@
+//! Minimal leveled logger writing to stderr with elapsed wall-clock.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+static LEVEL: AtomicU8 = AtomicU8::new(2); // 0=quiet 1=warn 2=info 3=debug
+
+pub fn set_level(level: u8) {
+    LEVEL.store(level, Ordering::Relaxed);
+}
+
+pub fn level() -> u8 {
+    LEVEL.load(Ordering::Relaxed)
+}
+
+fn t0() -> Instant {
+    use std::sync::OnceLock;
+    static T0: OnceLock<Instant> = OnceLock::new();
+    *T0.get_or_init(Instant::now)
+}
+
+pub fn log(lvl: u8, tag: &str, msg: &str) {
+    if lvl <= level() {
+        let dt = t0().elapsed().as_secs_f64();
+        eprintln!("[{dt:8.2}s {tag}] {msg}");
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::util::log::log(2, "info", &format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => { $crate::util::log::log(1, "warn", &format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::util::log::log(3, "debug", &format!($($arg)*)) };
+}
+
+/// Initialize the epoch (call early in main so timestamps start near 0).
+pub fn init() {
+    let _ = t0();
+}

@@ -1,0 +1,110 @@
+//! Comparison compression methods (paper §8.4, Table 17): Wanda 2:4
+//! structured sparsity and low-rank factorization. Both operate on the
+//! parent weights in place of (not inside) the Puzzle search — the paper's
+//! point is that they are subsets of Puzzle's search space.
+
+use crate::tensor::{svd::low_rank_approx, Tensor};
+
+/// Wanda pruning metric: |W_ij| * ||X_i||_2 where i is the input channel.
+/// Our weights are stored as [in, out] (x @ W), so the activation norm
+/// indexes rows. `x_norms[i]` = L2 norm of input feature i over a
+/// calibration batch.
+pub fn wanda_metric(w: &Tensor, x_norms: &[f32]) -> Tensor {
+    let (m, n) = (w.shape[0], w.shape[1]);
+    assert_eq!(x_norms.len(), m);
+    let mut out = Tensor::zeros(&[m, n]);
+    for i in 0..m {
+        for j in 0..n {
+            out.data[i * n + j] = w.data[i * n + j].abs() * x_norms[i];
+        }
+    }
+    out
+}
+
+/// 2:4 structured sparsity along the input dimension: within every group
+/// of 4 consecutive input channels (per output column), zero the 2 entries
+/// with the smallest Wanda metric. Matches NVIDIA sparse-tensor-core
+/// semantics (the pattern the paper's Wanda baseline targets).
+pub fn wanda_2_4(w: &Tensor, x_norms: &[f32]) -> Tensor {
+    let metric = wanda_metric(w, x_norms);
+    let (m, n) = (w.shape[0], w.shape[1]);
+    let mut out = w.clone();
+    for j in 0..n {
+        let mut i = 0;
+        while i + 4 <= m {
+            // indices of the 2 smallest metrics in the group
+            let mut group: Vec<(usize, f32)> =
+                (i..i + 4).map(|r| (r, metric.data[r * n + j])).collect();
+            group.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+            out.data[group[0].0 * n + j] = 0.0;
+            out.data[group[1].0 * n + j] = 0.0;
+            i += 4;
+        }
+        // ragged tail (input dim not divisible by 4): prune half, rounded down
+        if i < m {
+            let tail = m - i;
+            let mut group: Vec<(usize, f32)> =
+                (i..m).map(|r| (r, metric.data[r * n + j])).collect();
+            group.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+            for k in 0..tail / 2 {
+                out.data[group[k].0 * n + j] = 0.0;
+            }
+        }
+    }
+    out
+}
+
+/// Fraction of zero entries.
+pub fn sparsity(w: &Tensor) -> f64 {
+    let zeros = w.data.iter().filter(|&&x| x == 0.0).count();
+    zeros as f64 / w.numel() as f64
+}
+
+/// Low-rank factorization baseline: replace W by its best rank-k
+/// approximation (returned at full shape; the perf model accounts the
+/// factored FLOPs analytically).
+pub fn low_rank(w: &Tensor, rank: usize) -> Tensor {
+    low_rank_approx(w, rank)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn wanda_2_4_pattern() {
+        let mut rng = Rng::new(1);
+        let w = Tensor::randn(&[16, 6], 1.0, &mut rng);
+        let xn = vec![1.0f32; 16];
+        let pruned = wanda_2_4(&w, &xn);
+        // each column, each group of 4 rows: exactly 2 zeros
+        for j in 0..6 {
+            for g in 0..4 {
+                let zeros = (0..4)
+                    .filter(|&r| pruned.data[(g * 4 + r) * 6 + j] == 0.0)
+                    .count();
+                assert_eq!(zeros, 2, "col {j} group {g}");
+            }
+        }
+        assert!((sparsity(&pruned) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn wanda_keeps_high_activation_channels() {
+        // weights equal; activations make rows 0..2 matter
+        let w = Tensor::ones(&[4, 1]);
+        let xn = vec![10.0, 9.0, 0.1, 0.2];
+        let pruned = wanda_2_4(&w, &xn);
+        assert_eq!(pruned.data, vec![1.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn low_rank_reduces_error_with_rank() {
+        let mut rng = Rng::new(2);
+        let w = Tensor::randn(&[10, 10], 1.0, &mut rng);
+        let e2 = low_rank(&w, 2).sub(&w).frob_norm();
+        let e8 = low_rank(&w, 8).sub(&w).frob_norm();
+        assert!(e8 < e2);
+    }
+}

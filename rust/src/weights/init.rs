@@ -1,0 +1,223 @@
+//! Training-free initialization of alternative subblocks (paper §3.2).
+//!
+//! * GQA with fewer KV heads: mean-pool the parent's K/V head projections
+//!   into the grouped heads (following Ainslie et al., GQA).
+//! * Attention -> linear: W_l = W_v @ W_o, simulating "each token attends
+//!   only to itself".
+//! * FFN -> linear: W_l = W_up @ W_down, ignoring the gate.
+//! * FFN intermediate-dim pruning via **Channel Contribution**: rank
+//!   channels by mean |X_i| * ||W_down[i,:]||_2 over a calibration set and
+//!   keep the top ones.
+
+use crate::config::ModelCfg;
+use crate::tensor::Tensor;
+
+/// Mean-pool parent K or V projection [D, H*Dh] down to [D, KV*Dh].
+/// Parent heads g*group..(g+1)*group are averaged into child head g.
+pub fn pool_kv_heads(w: &Tensor, n_heads: usize, kv_heads: usize, head_dim: usize) -> Tensor {
+    assert_eq!(w.shape[1], n_heads * head_dim);
+    assert_eq!(n_heads % kv_heads, 0);
+    let group = n_heads / kv_heads;
+    let d = w.shape[0];
+    let mut out = Tensor::zeros(&[d, kv_heads * head_dim]);
+    let scale = 1.0 / group as f32;
+    for row in 0..d {
+        for g in 0..kv_heads {
+            for j in 0..head_dim {
+                let mut acc = 0.0;
+                for m in 0..group {
+                    let src_head = g * group + m;
+                    acc += w.data[row * n_heads * head_dim + src_head * head_dim + j];
+                }
+                out.data[row * kv_heads * head_dim + g * head_dim + j] = acc * scale;
+            }
+        }
+    }
+    out
+}
+
+/// Attention-as-linear init: W_v [D, H*Dh] @ W_o [H*Dh, D] -> [D, D].
+pub fn attn_linear_init(wv: &Tensor, wo: &Tensor) -> Tensor {
+    wv.matmul(wo)
+}
+
+/// FFN-as-linear init: W_up [D, I] @ W_down [I, D] -> [D, D] (gate ignored).
+pub fn ffn_linear_init(wu: &Tensor, wd: &Tensor) -> Tensor {
+    wu.matmul(wd)
+}
+
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Channel Contribution scores (paper §3.2): C_i = mean_t |X_{t,i}| *
+/// ||W_down[i,:]||_2, where X = silu(h Wg) ⊙ (h Wu) are the FFN's
+/// intermediate activations over a calibration batch `h` [T, D] of
+/// post-norm block inputs.
+pub fn channel_contribution(h: &Tensor, wg: &Tensor, wu: &Tensor, wd: &Tensor) -> Vec<f32> {
+    let t = h.shape[0];
+    let i = wg.shape[1];
+    let g = h.matmul(wg);
+    let u = h.matmul(wu);
+    let mut mean_abs = vec![0.0f32; i];
+    for row in 0..t {
+        for j in 0..i {
+            let x = silu(g.data[row * i + j]) * u.data[row * i + j];
+            mean_abs[j] += x.abs();
+        }
+    }
+    let inv_t = 1.0 / t.max(1) as f32;
+    (0..i).map(|j| mean_abs[j] * inv_t * wd.row_norm(j)).collect()
+}
+
+/// Fallback data-free contribution when no calibration activations are
+/// available: ||Wg[:,i]|| * ||Wd[i,:]|| (magnitude product).
+pub fn datafree_contribution(wg: &Tensor, wd: &Tensor) -> Vec<f32> {
+    (0..wg.shape[1]).map(|j| wg.col_norm(j) * wd.row_norm(j)).collect()
+}
+
+/// Keep the `keep` highest-scoring channels (original order preserved) and
+/// prune Wg/Wu columns and Wd rows accordingly.
+pub fn prune_ffn_channels(
+    wg: &Tensor,
+    wu: &Tensor,
+    wd: &Tensor,
+    scores: &[f32],
+    keep: usize,
+) -> (Tensor, Tensor, Tensor) {
+    let i = wg.shape[1];
+    assert_eq!(scores.len(), i);
+    assert!(keep <= i);
+    let mut idx: Vec<usize> = (0..i).collect();
+    idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+    let mut kept: Vec<usize> = idx[..keep].to_vec();
+    kept.sort_unstable();
+    (wg.select_cols(&kept), wu.select_cols(&kept), wd.select_rows(&kept))
+}
+
+/// Derive a GQA variant's weights from the parent attention block.
+/// parent ws = [norm, wq, wk, wv, wo] at kv_heads == n_heads.
+pub fn derive_gqa(cfg: &ModelCfg, parent: &[&Tensor], divisor: u32) -> Vec<Tensor> {
+    let kv = cfg.kv_heads(divisor);
+    vec![
+        parent[0].clone(),
+        parent[1].clone(),
+        pool_kv_heads(parent[2], cfg.n_heads, kv, cfg.head_dim),
+        pool_kv_heads(parent[3], cfg.n_heads, kv, cfg.head_dim),
+        parent[4].clone(),
+    ]
+}
+
+/// Derive the attention-linear variant: [norm, wl].
+pub fn derive_attn_linear(parent: &[&Tensor]) -> Vec<Tensor> {
+    vec![parent[0].clone(), attn_linear_init(parent[3], parent[4])]
+}
+
+/// Derive an FFN ratio variant: [norm, wg', wu', wd'] with `i_dim` channels.
+/// `calib_h`: post-norm block inputs for channel contribution; falls back
+/// to the data-free metric when absent.
+pub fn derive_ffn_ratio(parent: &[&Tensor], i_dim: usize, calib_h: Option<&Tensor>) -> Vec<Tensor> {
+    let (norm, wg, wu, wd) = (parent[0], parent[1], parent[2], parent[3]);
+    let scores = match calib_h {
+        Some(h) => channel_contribution(h, wg, wu, wd),
+        None => datafree_contribution(wg, wd),
+    };
+    let (wg2, wu2, wd2) = prune_ffn_channels(wg, wu, wd, &scores, i_dim);
+    vec![norm.clone(), wg2, wu2, wd2]
+}
+
+/// Derive the FFN-linear variant: [norm, wl].
+pub fn derive_ffn_linear(parent: &[&Tensor]) -> Vec<Tensor> {
+    vec![parent[0].clone(), ffn_linear_init(parent[2], parent[3])]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn pool_to_one_head_is_mean_of_all() {
+        let (d, h, dh) = (3, 4, 2);
+        let mut rng = Rng::new(1);
+        let w = Tensor::randn(&[d, h * dh], 1.0, &mut rng);
+        let pooled = pool_kv_heads(&w, h, 1, dh);
+        assert_eq!(pooled.shape, vec![d, dh]);
+        for row in 0..d {
+            for j in 0..dh {
+                let mean: f32 =
+                    (0..h).map(|hh| w.data[row * h * dh + hh * dh + j]).sum::<f32>() / h as f32;
+                assert!((pooled.data[row * dh + j] - mean).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn pool_identity_when_same_heads() {
+        let mut rng = Rng::new(2);
+        let w = Tensor::randn(&[4, 8], 1.0, &mut rng);
+        assert_eq!(pool_kv_heads(&w, 4, 4, 2).data, w.data);
+    }
+
+    #[test]
+    fn channel_contribution_finds_dominant_channel() {
+        // craft an FFN where channel 2 carries all the signal
+        let (d, i) = (4, 6);
+        let mut wg = Tensor::zeros(&[d, i]);
+        let mut wu = Tensor::zeros(&[d, i]);
+        let mut wd = Tensor::zeros(&[i, d]);
+        for row in 0..d {
+            wg.set2(row, 2, 3.0);
+            wu.set2(row, 2, 3.0);
+        }
+        for col in 0..d {
+            wd.set2(2, col, 2.0);
+        }
+        // small noise on other channels
+        let mut rng = Rng::new(3);
+        for row in 0..d {
+            for j in 0..i {
+                if j != 2 {
+                    wg.set2(row, j, rng.normal() * 0.01);
+                    wu.set2(row, j, rng.normal() * 0.01);
+                }
+            }
+        }
+        let h = Tensor::randn(&[16, d], 1.0, &mut rng);
+        let c = channel_contribution(&h, &wg, &wu, &wd);
+        let best = c
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(best, 2);
+        let (wg2, wu2, wd2) = prune_ffn_channels(&wg, &wu, &wd, &c, 1);
+        assert_eq!(wg2.shape, vec![d, 1]);
+        assert_eq!(wu2.shape, vec![d, 1]);
+        assert_eq!(wd2.shape, vec![1, d]);
+        assert!((wd2.data[0] - 2.0).abs() < 1e-6); // kept channel 2's row
+    }
+
+    #[test]
+    fn prune_keeps_original_channel_order() {
+        let wg = Tensor::from_vec(&[1, 4], vec![1.0, 2.0, 3.0, 4.0]);
+        let wu = wg.clone();
+        let wd = Tensor::from_vec(&[4, 1], vec![1.0, 1.0, 1.0, 1.0]);
+        // scores favor channels 3 and 1 (descending)
+        let scores = vec![0.1, 5.0, 0.2, 9.0];
+        let (wg2, _, _) = prune_ffn_channels(&wg, &wu, &wd, &scores, 2);
+        assert_eq!(wg2.data, vec![2.0, 4.0]); // order 1, 3 — not 3, 1
+    }
+
+    #[test]
+    fn linear_inits_have_right_shapes() {
+        let mut rng = Rng::new(4);
+        let wv = Tensor::randn(&[6, 8], 1.0, &mut rng);
+        let wo = Tensor::randn(&[8, 6], 1.0, &mut rng);
+        assert_eq!(attn_linear_init(&wv, &wo).shape, vec![6, 6]);
+        let wu = Tensor::randn(&[6, 12], 1.0, &mut rng);
+        let wd = Tensor::randn(&[12, 6], 1.0, &mut rng);
+        assert_eq!(ffn_linear_init(&wu, &wd).shape, vec![6, 6]);
+    }
+}

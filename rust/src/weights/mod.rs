@@ -1,0 +1,8 @@
+//! Weight storage + the paper's training-free initializations (§3.2) and
+//! comparison compression methods (§8.4).
+
+pub mod compress;
+pub mod init;
+pub mod store;
+
+pub use store::Store;

@@ -1,0 +1,211 @@
+//! Named-tensor store with a simple binary on-disk format (`.pzw`).
+//!
+//! Key convention:
+//!   `embed`                     [V, D]
+//!   `final_norm`                [D]
+//!   `L{i}.attn@{variant}.{w}`   block-library entry for layer i
+//!   `L{i}.ffn@{variant}.{w}`
+//!
+//! The parent model is simply the library entries at `gqa_r1` / `r100`.
+//! Format: magic "PZW1", u32 count, then per entry:
+//!   u32 key_len, key bytes, u32 ndim, u64 dims..., f32 data...
+//! (little-endian throughout).
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::{Manifest, VariantLayout};
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+#[derive(Debug, Clone, Default)]
+pub struct Store {
+    pub map: BTreeMap<String, Tensor>,
+}
+
+pub fn block_key(layer: usize, kind: &str, variant: &str, w: &str) -> String {
+    format!("L{layer}.{kind}@{variant}.{w}")
+}
+
+impl Store {
+    pub fn new() -> Store {
+        Store::default()
+    }
+
+    pub fn put(&mut self, key: &str, t: Tensor) {
+        self.map.insert(key.to_string(), t);
+    }
+
+    pub fn get(&self, key: &str) -> Result<&Tensor> {
+        self.map.get(key).ok_or_else(|| anyhow!("missing weight {key}"))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.map.contains_key(key)
+    }
+
+    /// Ordered weight list for a block-library entry per its layout.
+    pub fn block(&self, layer: usize, kind: &str, variant: &str, layout: &VariantLayout) -> Result<Vec<&Tensor>> {
+        layout
+            .weights
+            .iter()
+            .map(|(w, shape)| {
+                let t = self.get(&block_key(layer, kind, variant, w))?;
+                if &t.shape != shape {
+                    return Err(anyhow!(
+                        "shape mismatch for {}: store {:?} vs layout {:?}",
+                        block_key(layer, kind, variant, w), t.shape, shape
+                    ));
+                }
+                Ok(t)
+            })
+            .collect()
+    }
+
+    pub fn put_block(&mut self, layer: usize, kind: &str, variant: &str, layout: &VariantLayout, ws: Vec<Tensor>) {
+        assert_eq!(ws.len(), layout.weights.len());
+        for ((name, _), t) in layout.weights.iter().zip(ws) {
+            self.put(&block_key(layer, kind, variant, name), t);
+        }
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.map.values().map(|t| t.numel()).sum()
+    }
+
+    // ---------------- binary serialization ----------------
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?,
+        );
+        f.write_all(b"PZW1")?;
+        f.write_all(&(self.map.len() as u32).to_le_bytes())?;
+        for (k, t) in &self.map {
+            f.write_all(&(k.len() as u32).to_le_bytes())?;
+            f.write_all(k.as_bytes())?;
+            f.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+            for &d in &t.shape {
+                f.write_all(&(d as u64).to_le_bytes())?;
+            }
+            // bulk f32 write
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
+            };
+            f.write_all(bytes)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Store> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
+        );
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != b"PZW1" {
+            return Err(anyhow!("bad magic in {}", path.display()));
+        }
+        let mut u32b = [0u8; 4];
+        let mut u64b = [0u8; 8];
+        f.read_exact(&mut u32b)?;
+        let count = u32::from_le_bytes(u32b);
+        let mut map = BTreeMap::new();
+        for _ in 0..count {
+            f.read_exact(&mut u32b)?;
+            let klen = u32::from_le_bytes(u32b) as usize;
+            let mut kb = vec![0u8; klen];
+            f.read_exact(&mut kb)?;
+            let key = String::from_utf8(kb)?;
+            f.read_exact(&mut u32b)?;
+            let ndim = u32::from_le_bytes(u32b) as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                f.read_exact(&mut u64b)?;
+                shape.push(u64::from_le_bytes(u64b) as usize);
+            }
+            let n: usize = shape.iter().product();
+            let mut data = vec![0f32; n];
+            let bytes: &mut [u8] = unsafe {
+                std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, n * 4)
+            };
+            f.read_exact(bytes)?;
+            map.insert(key, Tensor { shape, data });
+        }
+        Ok(Store { map })
+    }
+}
+
+/// Initialize a parent model: library entries at gqa_r1 / r100 plus
+/// embedding and final norm. Gaussian 0.02 projections, residual-scaled
+/// output projections, unit norms.
+pub fn init_parent(man: &Manifest, rng: &mut Rng) -> Store {
+    let cfg = &man.cfg;
+    let mut s = Store::new();
+    let std = 0.02f32;
+    let out_std = std / (2.0 * cfg.n_layers as f32).sqrt();
+    s.put("embed", Tensor::randn(&[cfg.v, cfg.d], std, rng));
+    s.put("final_norm", Tensor::ones(&[cfg.d]));
+    let attn = &man.attn_variants["gqa_r1"];
+    let ffn = &man.ffn_variants["r100"];
+    for l in 0..cfg.n_layers {
+        for (name, shape) in &attn.weights {
+            let t = match name.as_str() {
+                "norm" => Tensor::ones(shape),
+                "wo" => Tensor::randn(shape, out_std, rng),
+                _ => Tensor::randn(shape, std, rng),
+            };
+            s.put(&block_key(l, "attn", "gqa_r1", name), t);
+        }
+        for (name, shape) in &ffn.weights {
+            let t = match name.as_str() {
+                "norm" => Tensor::ones(shape),
+                "wd" => Tensor::randn(shape, out_std, rng),
+                _ => Tensor::randn(shape, std, rng),
+            };
+            s.put(&block_key(l, "ffn", "r100", name), t);
+        }
+    }
+    s
+}
+
+/// Randomize all non-norm weights in place (the Parent-Randomized baseline
+/// of Table 15).
+pub fn randomize_weights(store: &mut Store, rng: &mut Rng) {
+    for (k, t) in store.map.iter_mut() {
+        if !k.ends_with("norm") {
+            *t = Tensor::randn(&t.shape, 0.02, rng);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mut s = Store::new();
+        let mut rng = Rng::new(1);
+        s.put("a.b", Tensor::randn(&[3, 4], 1.0, &mut rng));
+        s.put("c", Tensor::ones(&[7]));
+        let path = std::env::temp_dir().join("puzzle_store_test.pzw");
+        s.save(&path).unwrap();
+        let s2 = Store::load(&path).unwrap();
+        assert_eq!(s.map, s2.map);
+    }
+
+    #[test]
+    fn block_key_format() {
+        assert_eq!(block_key(3, "attn", "gqa_r2", "wk"), "L3.attn@gqa_r2.wk");
+    }
+
+    #[test]
+    fn missing_weight_is_error() {
+        let s = Store::new();
+        assert!(s.get("nope").is_err());
+    }
+}
