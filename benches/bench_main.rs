@@ -2,7 +2,7 @@
 //! timing with warmup + repetitions). One bench per paper table/figure
 //! hot path plus the L3 micro-benchmarks driven in the §Perf pass:
 //!
-//!   mip_solve_paper_scale   — Table 13 / Fig 8: MIP at Llama-70B scale (80x54)
+//!   mip_solve_paper_scale   — Table 13 / Fig 8: MIP at Llama-70B scale (80 layers)
 //!   mip_solve_tiny          — search latency at this repo's scale
 //!   serving_decode_step     — Table 3: engine decode-step latency / throughput
 //!   serving_prefill         — Table 3: prefill latency
@@ -12,17 +12,17 @@
 //!   simplex_pivots          — LP substrate
 //!   tensor_matmul / jacobi_svd — host-side math substrates
 //!
-//! Run: cargo bench   (expects `make artifacts` first)
+//! Run: cargo bench   (hermetic: pure-Rust reference backend)
 
-use std::path::Path;
 use std::time::Instant;
 
 use puzzle::arch::{Arch, SearchSpace};
+use puzzle::config::TinyManifest;
 use puzzle::data::{corpus::sample_sequence, Batcher, CorpusMix, World};
 use puzzle::mip::{self, Constraints, Lp};
 use puzzle::model::CompiledModel;
 use puzzle::perf::{CostTable, HwProfile, Scenario};
-use puzzle::runtime::Registry;
+use puzzle::runtime::{Backend, RefBackend};
 use puzzle::scoring::{self, Metric, ScoreTable};
 use puzzle::serving::kvcache::{PageCfg, PagedKvManager};
 use puzzle::serving::Engine;
@@ -91,50 +91,47 @@ fn main() {
         let _ = lp.solve();
     });
 
+    // hermetic backend: in-memory manifest + rust interpreter
+    let be = RefBackend::new(TinyManifest::synthetic());
+    let be: &dyn Backend = &be;
+    let cfg = be.man().cfg.clone();
+
     // MIP at the paper's Llama-70B scale: 80 layers (combo count follows
     // this config's head count; paper = 54/layer)
     {
         let n_layers = 80;
-        // cost table from the tiny manifest if present, else skip
-        if let Ok(reg) = Registry::open(Path::new("artifacts/tiny")) {
-            let space = SearchSpace::full(reg.man.cfg.n_heads as u32);
-            let scores = synthetic_scores(&space, n_layers);
-            let hw = HwProfile::h100_fp8();
-            let sc = Scenario { prefill: 2048, decode: 2048, batch: 64 };
-            let ct = CostTable::modeled(&reg.man, &hw, &sc);
-            let parent_tp = {
-                let mut t = 0.0;
-                for _ in 0..n_layers {
-                    t += ct.attn["gqa_r1"].0 + ct.ffn["r100"].0;
-                }
-                (sc.batch * sc.decode) as f64 / t
-            };
-            let cons = Constraints { throughput_min: Some(parent_tp * 1.8), ..Default::default() };
-            b.time(
-                "mip_solve_paper_scale",
-                "80 layers (Llama-70B depth), <1s target",
-                3,
-                || {
-                    let _ = mip::search_mip(&space, &scores, &ct, &cons, n_layers, &[], 1.0);
-                },
-            );
-        }
+        let space = SearchSpace::full(cfg.n_heads as u32);
+        let scores = synthetic_scores(&space, n_layers);
+        let hw = HwProfile::h100_fp8();
+        let sc = Scenario { prefill: 2048, decode: 2048, batch: 64 };
+        let ct = CostTable::modeled(be.man(), &hw, &sc);
+        let parent_tp = {
+            let mut t = 0.0;
+            for _ in 0..n_layers {
+                t += ct.attn["gqa_r1"].0 + ct.ffn["r100"].0;
+            }
+            (sc.batch * sc.decode) as f64 / t
+        };
+        let cons = Constraints { throughput_min: Some(parent_tp * 1.8), ..Default::default() };
+        b.time(
+            "mip_solve_paper_scale",
+            "80 layers (Llama-70B depth), <1s target",
+            3,
+            || {
+                let _ = mip::search_mip(&space, &scores, &ct, &cons, n_layers, &[], 1.0);
+            },
+        );
     }
 
-    // ---------------- artifact-backed benches ----------------
-    let Ok(reg) = Registry::open(Path::new("artifacts/tiny")) else {
-        println!("artifacts/tiny missing; run `make artifacts` for the full suite");
-        return;
-    };
-    let cfg = reg.man.cfg.clone();
+    // ---------------- backend-executed benches ----------------
     let mut rng = Rng::new(7);
-    let mut store = init_parent(&reg.man, &mut rng);
+    let mut store = init_parent(be.man(), &mut rng);
     let space = SearchSpace::full(cfg.n_heads as u32);
     let n_layers = cfg.n_layers;
     // populate the block library via the training-free §3.2 inits so the
     // scoring bench covers the full variant set
     for job in puzzle::bld::decoupled_jobs(&space, n_layers) {
-        puzzle::bld::init_job_weights(&reg.man, &mut store, &job, None).unwrap();
+        puzzle::bld::init_job_weights(be.man(), &mut store, &job, None).unwrap();
     }
     let store = store;
     let arch = Arch::parent(n_layers);
@@ -145,7 +142,7 @@ fn main() {
     {
         let hw = HwProfile::h100_fp8();
         let sc = Scenario { prefill: cfg.s_prefill, decode: cfg.s_prefill, batch: 64 };
-        let ct = CostTable::modeled(&reg.man, &hw, &sc);
+        let ct = CostTable::modeled(be.man(), &hw, &sc);
         let scores = synthetic_scores(&space, n_layers);
         let parent_tp = ct.arch_throughput(&arch);
         let cons = Constraints { throughput_min: Some(parent_tp * 1.8), ..Default::default() };
@@ -156,11 +153,11 @@ fn main() {
 
     // full-model chained forward (Fig 5/6 inner loop)
     {
-        let model = CompiledModel::assemble(&reg.man, &store, &arch).unwrap();
+        let model = CompiledModel::assemble(be.man(), &store, &arch).unwrap();
         let mut batcher = Batcher::new(world.clone(), mix.clone(), cfg.b_train, cfg.s_train, 3);
         let batch = batcher.next_batch();
         b.time("block_chain_forward", "parent fwd, train shape", 10, || {
-            let _ = model.forward(&reg, "train", &batch.inputs, batch.b, batch.s).unwrap();
+            let _ = model.forward(be, "train", &batch.inputs, batch.b, batch.s).unwrap();
         });
     }
 
@@ -169,25 +166,26 @@ fn main() {
         let mut batcher = Batcher::new(world.clone(), mix.clone(), cfg.b_train, cfg.s_train, 4);
         let batches = vec![batcher.next_batch()];
         b.time("replace1_scoring", "full library x 1 batch, KL metric", 2, || {
-            let _ = scoring::score_library(&reg, &store, &space, &batches, Metric::Kl).unwrap();
+            let _ = scoring::score_library(be, &store, &space, &batches, Metric::Kl).unwrap();
         });
     }
 
     // serving: prefill + decode step (Table 3 inner loops)
     {
         b.time("serving_prefill", "1 prompt through the engine", 5, || {
-            let mut eng = Engine::new(&reg, &store, &arch, 64 << 20).unwrap();
+            let mut eng = Engine::new(be, &store, &arch, 64 << 20).unwrap();
             let mut r2 = Rng::new(5);
             let prompt = sample_sequence(&world, &mix, 16, &mut r2);
-            eng.submit(prompt, 1);
+            eng.submit(prompt, 1).unwrap();
             let _ = eng.run_to_completion().unwrap();
         });
-        b.time("serving_decode_16tok_b4", "4 seqs x 16 new tokens", 3, || {
-            let mut eng = Engine::new(&reg, &store, &arch, 64 << 20).unwrap();
+        let note = format!("{} seqs x 16 new tokens", cfg.b_decode);
+        b.time("serving_decode_16tok", &note, 3, || {
+            let mut eng = Engine::new(be, &store, &arch, 64 << 20).unwrap();
             let mut r2 = Rng::new(6);
             for _ in 0..cfg.b_decode {
                 let prompt = sample_sequence(&world, &mix, 8, &mut r2);
-                eng.submit(prompt, 16);
+                eng.submit(prompt, 16).unwrap();
             }
             let _ = eng.run_to_completion().unwrap();
         });
@@ -197,7 +195,7 @@ fn main() {
     {
         let mgr_cfg = PageCfg { page_len: 16, dtype_bytes: 4, budget_bytes: 1 << 24 };
         b.time("kvcache_ops", "admit+grow x64 + release, 8 seqs", 50, || {
-            let mut mgr = PagedKvManager::new(&reg.man, &arch, mgr_cfg.clone());
+            let mut mgr = PagedKvManager::new(be.man(), &arch, mgr_cfg.clone());
             for s in 0..8u64 {
                 mgr.admit(s, 16);
                 for _ in 0..64 {

@@ -5,19 +5,21 @@
 //! throughput constraint, GKD uptraining — and finally serves batched
 //! requests through both parent and child, reporting accuracy retention
 //! and the measured + modeled speedups. Results are recorded in
-//! EXPERIMENTS.md.
+//! EXPERIMENTS.md. Hermetic: runs on the pure-Rust reference backend with
+//! an in-memory manifest (no artifacts, no python).
 //!
-//!   make artifacts && cargo run --release --example e2e_puzzle [-- --config tiny --scale 1.0]
+//!   cargo run --release --example e2e_puzzle [-- --config tiny --scale 1.0]
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 use std::path::PathBuf;
 
 use puzzle::arch::{Arch, SearchSpace};
+use puzzle::config::TinyManifest;
 use puzzle::data::corpus::sample_sequence;
 use puzzle::eval::Evaluator;
 use puzzle::perf::{self, HwProfile, Scenario};
 use puzzle::pipeline::{Pipeline, StageCfg};
-use puzzle::runtime::Registry;
+use puzzle::runtime::{Backend, RefBackend};
 use puzzle::scoring::Metric;
 use puzzle::serving::Engine;
 use puzzle::train::LossSpec;
@@ -27,12 +29,18 @@ fn main() -> Result<()> {
     puzzle::util::log::init();
     let args = Args::from_env();
     let config = args.str("config", "tiny");
-    let reg = Registry::open(&PathBuf::from("artifacts").join(&config))?;
-    let cfg = &reg.man.cfg;
+    let man = match config.as_str() {
+        "tiny" => TinyManifest::synthetic(),
+        "small" => TinyManifest::synthetic_small(),
+        other => return Err(anyhow!("unknown synthetic config '{other}' (tiny|small)")),
+    };
+    let be = RefBackend::new(man);
+    let be: &dyn Backend = &be;
+    let cfg = be.man().cfg.clone();
     let mut stage = StageCfg::scaled(args.f64("scale", 1.0));
     stage.seed = args.u64("seed", 42);
     let run_dir = PathBuf::from(args.str("run-dir", &format!("runs/e2e_{config}")));
-    let pipe = Pipeline::new(&reg, &run_dir, stage)?;
+    let pipe = Pipeline::new(be, &run_dir, stage)?;
     let t_total = Timer::start();
 
     println!("=== Puzzle end-to-end ({config}: {} layers, d={}, v={}) ===", cfg.n_layers, cfg.d, cfg.v);
@@ -57,9 +65,9 @@ fn main() -> Result<()> {
 
     // Accuracy retention
     let parent_arch = Arch::parent(cfg.n_layers);
-    let pe = Evaluator::new(&reg, &library, &parent_arch)?
+    let pe = Evaluator::new(be, &library, &parent_arch)?
         .run_suite(&pipe.world, pipe.cfg.eval_questions, 7)?;
-    let ce = Evaluator::new(&reg, &child, &sol.arch)?
+    let ce = Evaluator::new(be, &child, &sol.arch)?
         .run_suite(&pipe.world, pipe.cfg.eval_questions, 7)?;
     println!("parent: {}", pe.row());
     println!("child : {}", ce.row());
@@ -69,18 +77,18 @@ fn main() -> Result<()> {
     let mut tps = Vec::new();
     for arch in [&sol.arch, &parent_arch] {
         let weights = if arch == &sol.arch { &child } else { &library };
-        // warmup: compile all executables outside the timed region
+        // warmup pass outside the timed region
         {
-            let mut warm = Engine::new(&reg, weights, arch, 64 << 20)?;
-            warm.submit(vec![1, 5, 9], 2);
+            let mut warm = Engine::new(be, weights, arch, 64 << 20)?;
+            warm.submit(vec![1, 5, 9], 2)?;
             warm.run_to_completion()?;
         }
-        let mut eng = Engine::new(&reg, weights, arch, 64 << 20)?;
+        let mut eng = Engine::new(be, weights, arch, 64 << 20)?;
         let mut rng = Rng::new(5);
         for _ in 0..cfg.b_decode * 3 {
             let plen = rng.range(4, cfg.s_prefill / 2);
             let prompt = sample_sequence(&pipe.world, &pipe.mix, plen, &mut rng);
-            eng.submit(prompt, cfg.s_prefill / 4);
+            eng.submit(prompt, cfg.s_prefill / 4)?;
         }
 
         eng.run_to_completion()?;
@@ -94,12 +102,12 @@ fn main() -> Result<()> {
 
     let hw = HwProfile::h100_fp8();
     let sc = Scenario { prefill: cfg.s_prefill, decode: cfg.s_prefill, batch: 64 };
-    let modeled = perf::scenario_throughput(&reg.man, &sol.arch, &hw, &sc)
-        / perf::scenario_throughput(&reg.man, &parent_arch, &hw, &sc);
+    let modeled = perf::scenario_throughput(be.man(), &sol.arch, &hw, &sc)
+        / perf::scenario_throughput(be.man(), &parent_arch, &hw, &sc);
 
     println!("=== e2e summary ===");
     println!("accuracy preserved : {preserved:.1}% (paper: 98.4%)");
-    println!("measured speedup   : {:.2}x (CPU engine)", tps[0] / tps[1]);
+    println!("measured speedup   : {:.2}x (ref backend)", tps[0] / tps[1]);
     println!("modeled H100 FP8   : {modeled:.2}x (paper: 2.17x)");
     println!("final val KLD      : {:.4}", gkd.val_kld);
     println!("total wall time    : {:.1}s", t_total.secs());

@@ -1,25 +1,28 @@
 //! "Train once, adapt on demand" (paper §4.3): reuse one block library and
 //! one score table to generate architectures for *different hardware
 //! targets* — H100 FP8, H100 FP16, A100, RTX 4090 — and show how the MIP
-//! adapts the chosen blocks to each platform's roofline.
+//! adapts the chosen blocks to each platform's roofline. Hermetic: runs on
+//! the pure-Rust reference backend.
 //!
-//!   make artifacts && cargo run --release --example hardware_sweep
+//!   cargo run --release --example hardware_sweep
 
 use anyhow::Result;
 use std::path::PathBuf;
 
 use puzzle::arch::{Arch, AttnChoice, SearchSpace};
+use puzzle::config::TinyManifest;
 use puzzle::mip::{self, Constraints};
 use puzzle::perf::{CostTable, HwProfile, Scenario};
 use puzzle::pipeline::{Pipeline, StageCfg};
-use puzzle::runtime::Registry;
+use puzzle::runtime::{Backend, RefBackend};
 use puzzle::scoring::Metric;
 
 fn main() -> Result<()> {
     puzzle::util::log::init();
-    let reg = Registry::open(&PathBuf::from("artifacts/tiny"))?;
-    let cfg = &reg.man.cfg;
-    let pipe = Pipeline::new(&reg, &PathBuf::from("runs/tiny"), StageCfg::fast())?;
+    let be = RefBackend::new(TinyManifest::synthetic());
+    let be: &dyn Backend = &be;
+    let cfg = be.man().cfg.clone();
+    let pipe = Pipeline::new(be, &PathBuf::from("runs/ref-tiny"), StageCfg::fast())?;
     let space = SearchSpace::full(cfg.n_heads as u32);
     let scores = pipe.ensure_scores(&space, Metric::Kl)?;
     let n_layers = cfg.n_layers;
@@ -32,7 +35,7 @@ fn main() -> Result<()> {
         HwProfile::a100_fp16(),
         HwProfile::rtx4090_fp16(),
     ] {
-        let ct = CostTable::modeled(&reg.man, &hw, &sc);
+        let ct = CostTable::modeled(be.man(), &hw, &sc);
         let parent_tp = ct.arch_throughput(&Arch::parent(n_layers));
         let cons = Constraints {
             throughput_min: Some(parent_tp * 1.8),

@@ -1,25 +1,27 @@
-//! Quickstart: load the AOT artifacts, assemble a heterogeneous Puzzle
-//! child out of "puzzle pieces", run a forward pass, and compare its cost
+//! Quickstart: open a runtime backend (hermetic pure-Rust reference by
+//! default — no artifacts needed), assemble a heterogeneous Puzzle child
+//! out of "puzzle pieces", run a forward pass, and compare its cost
 //! profile against the parent.
 //!
-//!   make artifacts && cargo run --release --example quickstart
+//!   cargo run --release --example quickstart
 
 use anyhow::Result;
-use std::path::Path;
 
 use puzzle::arch::{Arch, AttnChoice, FfnChoice, SearchSpace};
 use puzzle::bld;
+use puzzle::config::TinyManifest;
 use puzzle::data::{Batcher, CorpusMix, World};
 use puzzle::model::CompiledModel;
 use puzzle::perf::{HwProfile, Scenario};
-use puzzle::runtime::Registry;
+use puzzle::runtime::{Backend, RefBackend};
 use puzzle::util::Rng;
 use puzzle::weights::store::init_parent;
 
 fn main() -> Result<()> {
-    // 1. open the artifact registry (HLO-text executables + manifest)
-    let reg = Registry::open(Path::new("artifacts/tiny"))?;
-    let cfg = &reg.man.cfg;
+    // 1. open the execution backend (in-memory manifest + rust interpreter)
+    let be = RefBackend::new(TinyManifest::synthetic());
+    let be: &dyn Backend = &be;
+    let cfg = &be.man().cfg;
     println!("model: d={} layers={} heads={} vocab={}", cfg.d, cfg.n_layers, cfg.n_heads, cfg.v);
 
     // 2. the search space (paper §2): 54^L candidate architectures
@@ -32,24 +34,24 @@ fn main() -> Result<()> {
 
     // 3. initialize a parent and derive child blocks via §3.2 inits
     let mut rng = Rng::new(0);
-    let mut store = init_parent(&reg.man, &mut rng);
+    let mut store = init_parent(be.man(), &mut rng);
     for (kind, variant) in [("attn", "gqa_r2"), ("ffn", "r50")] {
         let job = bld::Job { layer: 1, kind: if kind == "attn" { "attn" } else { "ffn" }, variant: variant.into() };
-        bld::init_job_weights(&reg.man, &mut store, &job, None)?;
+        bld::init_job_weights(be.man(), &mut store, &job, None)?;
     }
 
     // 4. assemble a heterogeneous child: layer 1 slimmed, last layer skipped
     let mut arch = Arch::parent(cfg.n_layers);
     arch.layers[1] = (AttnChoice::Gqa { divisor: 2 }, FfnChoice::Ratio(3));
     arch.layers[cfg.n_layers - 1] = (AttnChoice::NoOp, FfnChoice::NoOp);
-    let child = CompiledModel::assemble(&reg.man, &store, &arch)?;
+    let child = CompiledModel::assemble(be.man(), &store, &arch)?;
     println!("child arch: {}", arch.signature());
 
     // 5. run a forward pass through the chained block executables
     let world = World::new(7, cfg.v as u32);
     let mut batcher = Batcher::new(world, CorpusMix::distillation_mix(), cfg.b_train, cfg.s_train, 1);
     let batch = batcher.next_batch();
-    let trace = child.forward(&reg, "train", &batch.inputs, batch.b, batch.s)?;
+    let trace = child.forward(be, "train", &batch.inputs, batch.b, batch.s)?;
     println!("logits shape: {:?} (finite: {})",
         trace.logits.shape,
         trace.logits.data.iter().all(|x| x.is_finite())
@@ -59,8 +61,8 @@ fn main() -> Result<()> {
     let hw = HwProfile::h100_fp8();
     let sc = Scenario { prefill: 128, decode: 128, batch: 64 };
     let parent = Arch::parent(cfg.n_layers);
-    let tp_parent = puzzle::perf::scenario_throughput(&reg.man, &parent, &hw, &sc);
-    let tp_child = puzzle::perf::scenario_throughput(&reg.man, &arch, &hw, &sc);
+    let tp_parent = puzzle::perf::scenario_throughput(be.man(), &parent, &hw, &sc);
+    let tp_child = puzzle::perf::scenario_throughput(be.man(), &arch, &hw, &sc);
     println!(
         "modeled H100 throughput: parent {:.0} tok/s, child {:.0} tok/s ({:.2}x)",
         tp_parent,

@@ -1,28 +1,30 @@
 //! Serving demo: run the variable-GQA continuous-batching engine (paper
 //! §6) over a heterogeneous child architecture with batched requests and
-//! report latency/throughput.
+//! report latency/throughput. Hermetic: runs on the pure-Rust reference
+//! backend with an in-memory manifest.
 //!
-//!   make artifacts && cargo run --release --example serve_demo
+//!   cargo run --release --example serve_demo
 
 use anyhow::Result;
-use std::path::Path;
 
 use puzzle::arch::{Arch, AttnChoice, FfnChoice};
 use puzzle::bld;
+use puzzle::config::TinyManifest;
 use puzzle::data::{corpus::sample_sequence, CorpusMix, World};
-use puzzle::runtime::Registry;
+use puzzle::runtime::{Backend, RefBackend};
 use puzzle::serving::Engine;
 use puzzle::util::Rng;
 use puzzle::weights::store::init_parent;
 
 fn main() -> Result<()> {
-    let reg = Registry::open(Path::new("artifacts/tiny"))?;
-    let cfg = &reg.man.cfg;
+    let be = RefBackend::new(TinyManifest::synthetic());
+    let be: &dyn Backend = &be;
+    let cfg = be.man().cfg.clone();
 
     // a child with per-layer variable KV-head counts — the exact case
     // TensorRT-LLM could not serve before the paper's §6 changes
     let mut rng = Rng::new(0);
-    let mut store = init_parent(&reg.man, &mut rng);
+    let mut store = init_parent(be.man(), &mut rng);
     let mut arch = Arch::parent(cfg.n_layers);
     arch.layers[0].0 = AttnChoice::Gqa { divisor: 2 };
     arch.layers[1].0 = AttnChoice::Gqa { divisor: 4 };
@@ -31,12 +33,12 @@ fn main() -> Result<()> {
         for (kind, variant) in [("attn", arch.layers[l].0.name()), ("ffn", arch.layers[l].1.name())] {
             if variant != "noop" && variant != "gqa_r1" && variant != "r100" {
                 let job = bld::Job { layer: l, kind: if kind == "attn" { "attn" } else { "ffn" }, variant };
-                bld::init_job_weights(&reg.man, &mut store, &job, None)?;
+                bld::init_job_weights(be.man(), &mut store, &job, None)?;
             }
         }
     }
 
-    let mut engine = Engine::new(&reg, &store, &arch, 32 << 20)?;
+    let mut engine = Engine::new(be, &store, &arch, 32 << 20)?;
     let world = World::new(3, cfg.v as u32);
     let mix = CorpusMix::distillation_mix();
     let mut rng = Rng::new(9);
@@ -44,7 +46,7 @@ fn main() -> Result<()> {
     for _ in 0..n_requests {
         let plen = rng.range(4, cfg.s_prefill.min(48));
         let prompt = sample_sequence(&world, &mix, plen, &mut rng);
-        engine.submit(prompt, rng.range(8, 32));
+        engine.submit(prompt, rng.range(8, 32))?;
     }
     println!("submitted {n_requests} requests (queue {})", engine.queue_len());
     let responses = engine.run_to_completion()?;

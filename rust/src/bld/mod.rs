@@ -19,13 +19,13 @@ use std::collections::HashMap;
 use crate::arch::{Arch, AttnChoice, FfnChoice, SearchSpace};
 use crate::config::Manifest;
 use crate::data::Batcher;
+use crate::info;
 use crate::model::{CompiledModel, Trace};
-use crate::runtime::{literal::tensor_to_lit, lit_to_tensor, Registry};
+use crate::runtime::{tensor_to_val, val_to_tensor, Backend, Value};
 use crate::tensor::Tensor;
 use crate::train::losses::nmse_loss_and_grad;
 use crate::train::{Adam, AdamCfg};
 use crate::weights::{init, store::block_key, Store};
-use crate::info;
 
 /// One library-construction job: train `variant` of `kind` at `layer`.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
@@ -108,7 +108,7 @@ pub fn init_job_weights(
 /// (Channel Contribution needs the *post-norm* h; the norm is cheap to
 /// apply host-side.)
 fn calib_hidden(man: &Manifest, store: &Store, trace: &Trace, layer: usize) -> Result<Tensor> {
-    let x = lit_to_tensor(&trace.ffn_in[layer])?;
+    let x = val_to_tensor(&trace.ffn_in[layer])?;
     let d = man.cfg.d;
     let t = x.numel() / d;
     let norm = store.get(&block_key(layer, "ffn", "r100", "norm"))?;
@@ -128,14 +128,14 @@ fn calib_hidden(man: &Manifest, store: &Store, trace: &Trace, layer: usize) -> R
 /// Run decoupled BLD: initialize (§3.2) and train (§3) the whole library.
 /// `store` holds the parent and receives the trained library entries.
 pub fn run_decoupled(
-    reg: &Registry,
+    be: &dyn Backend,
     store: &mut Store,
     space: &SearchSpace,
     batcher: &mut Batcher,
     steps: usize,
     lr: f32,
 ) -> Result<BldReport> {
-    let man = &reg.man;
+    let man = be.man();
     let n_layers = man.cfg.n_layers;
     let parent_arch = Arch::parent(n_layers);
     let jobs = decoupled_jobs(space, n_layers);
@@ -144,7 +144,7 @@ pub fn run_decoupled(
     // calibration pass for Channel-Contribution inits
     let parent = CompiledModel::assemble(man, store, &parent_arch)?;
     let calib_batch = batcher.next_batch();
-    let calib_trace = parent.forward(reg, "train", &calib_batch.inputs, calib_batch.b, calib_batch.s)?;
+    let calib_trace = parent.forward(be, "train", &calib_batch.inputs, calib_batch.b, calib_batch.s)?;
     for job in &jobs {
         let h = if job.kind == "ffn" {
             Some(calib_hidden(man, store, &calib_trace, job.layer)?)
@@ -162,11 +162,11 @@ pub fn run_decoupled(
     for step in 0..steps {
         let batch = batcher.next_batch();
         let parent = CompiledModel::assemble(man, store, &parent_arch)?;
-        let trace = parent.forward(reg, "train", &batch.inputs, batch.b, batch.s)?;
+        let trace = parent.forward(be, "train", &batch.inputs, batch.b, batch.s)?;
         report.tokens += (batch.b * batch.s) as u64;
         for job in &jobs {
             let (x, target) = job_io(&trace, job, n_layers);
-            let loss = bld_step(reg, store, job, x, target, adams.get_mut(&job_key(job)).unwrap())?;
+            let loss = bld_step(be, store, job, x, target, adams.get_mut(&job_key(job)).unwrap())?;
             if step + 1 == steps {
                 report.final_loss.insert(job_key(job), loss);
             }
@@ -183,8 +183,8 @@ pub fn run_decoupled(
     Ok(report)
 }
 
-/// (input, target) literals for a decoupled job from the parent trace.
-fn job_io<'a>(trace: &'a Trace, job: &Job, n_layers: usize) -> (&'a xla::Literal, &'a xla::Literal) {
+/// (input, target) values for a decoupled job from the parent trace.
+fn job_io<'a>(trace: &'a Trace, job: &Job, n_layers: usize) -> (&'a Value, &'a Value) {
     if job.kind == "attn" {
         // attn subblock: input = layer input, target = parent attn output
         (&trace.attn_in[job.layer], &trace.ffn_in[job.layer])
@@ -201,45 +201,45 @@ fn job_io<'a>(trace: &'a Trace, job: &Job, n_layers: usize) -> (&'a xla::Literal
 
 /// One normalized-MSE distillation step of a single subblock.
 fn bld_step(
-    reg: &Registry,
+    be: &dyn Backend,
     store: &mut Store,
     job: &Job,
-    x: &xla::Literal,
-    target: &xla::Literal,
+    x: &Value,
+    target: &Value,
     adam: &mut Adam,
 ) -> Result<f64> {
-    let man = &reg.man;
+    let man = be.man();
     let layout = if job.kind == "attn" {
         man.attn_variants[&job.variant].clone()
     } else {
         man.ffn_variants[&job.variant].clone()
     };
     let ws = store.block(job.layer, job.kind, &job.variant, &layout)?;
-    let lits: Vec<xla::Literal> = ws.iter().map(|t| tensor_to_lit(t)).collect::<Result<_>>()?;
+    let vals: Vec<Value> = ws.iter().map(|t| tensor_to_val(t)).collect::<Result<_>>()?;
     let prefix = format!("{}_{}", job.kind, job.variant);
 
     // forward
-    let mut inputs: Vec<&xla::Literal> = vec![x];
-    inputs.extend(lits.iter());
-    let y = reg.run(&format!("{prefix}_train_fwd"), &inputs)?.remove(0);
+    let mut inputs: Vec<&Value> = vec![x];
+    inputs.extend(vals.iter());
+    let y = be.run(&format!("{prefix}_train_fwd"), &inputs)?.remove(0);
 
     // normalized MSE + grad
-    let yc = lit_to_tensor(&y)?;
-    let yp = lit_to_tensor(target)?;
+    let yc = val_to_tensor(&y)?;
+    let yp = val_to_tensor(target)?;
     let (loss, dy) = nmse_loss_and_grad(&yc, &yp);
 
     // backward
-    let dy_lit = tensor_to_lit(&dy)?;
-    let mut vjp_in: Vec<&xla::Literal> = vec![x];
-    vjp_in.extend(lits.iter());
-    vjp_in.push(&dy_lit);
-    let mut out = reg.run(&format!("{prefix}_train_vjp"), &vjp_in)?;
+    let dy_val = tensor_to_val(&dy)?;
+    let mut vjp_in: Vec<&Value> = vec![x];
+    vjp_in.extend(vals.iter());
+    vjp_in.push(&dy_val);
+    let mut out = be.run(&format!("{prefix}_train_vjp"), &vjp_in)?;
     out.remove(0); // dx unused — inputs are parent activations
 
     adam.begin_step();
-    for ((name, _), dlit) in layout.weights.iter().zip(out) {
+    for ((name, _), dval) in layout.weights.iter().zip(out) {
         let key = block_key(job.layer, job.kind, &job.variant, name);
-        let g = lit_to_tensor(&dlit)?;
+        let g = val_to_tensor(&dval)?;
         let w = store.map.get_mut(&key).unwrap();
         adam.update(&key, w, &g, 1.0);
     }
@@ -249,14 +249,14 @@ fn bld_step(
 /// Coupled BLD (§8.1.1): train (attention, FFN) pairs jointly against the
 /// parent *block* output, on a reduced search space.
 pub fn run_coupled(
-    reg: &Registry,
+    be: &dyn Backend,
     store: &mut Store,
     space: &SearchSpace,
     batcher: &mut Batcher,
     steps: usize,
     lr: f32,
 ) -> Result<BldReport> {
-    let man = &reg.man;
+    let man = be.man();
     let n_layers = man.cfg.n_layers;
     let parent_arch = Arch::parent(n_layers);
 
@@ -280,7 +280,7 @@ pub fn run_coupled(
     // initialize any missing variant weights from the parent
     let parent = CompiledModel::assemble(man, store, &parent_arch)?;
     let calib_batch = batcher.next_batch();
-    let calib = parent.forward(reg, "train", &calib_batch.inputs, calib_batch.b, calib_batch.s)?;
+    let calib = parent.forward(be, "train", &calib_batch.inputs, calib_batch.b, calib_batch.s)?;
     for (l, a, f) in &pairs {
         for (kind, variant) in [("attn", a.name()), ("ffn", f.name())] {
             let job = Job { layer: *l, kind: if kind == "attn" { "attn" } else { "ffn" }, variant };
@@ -306,7 +306,7 @@ pub fn run_coupled(
     for _step in 0..steps {
         let batch = batcher.next_batch();
         let parent = CompiledModel::assemble(man, store, &parent_arch)?;
-        let trace = parent.forward(reg, "train", &batch.inputs, batch.b, batch.s)?;
+        let trace = parent.forward(be, "train", &batch.inputs, batch.b, batch.s)?;
         report.tokens += (batch.b * batch.s) as u64;
         for (l, a, f) in &pairs {
             let key = format!("L{l}.{}+{}", a.name(), f.name());
@@ -314,7 +314,7 @@ pub fn run_coupled(
             let target =
                 if *l + 1 < n_layers { &trace.attn_in[*l + 1] } else { &trace.hidden };
             let loss =
-                coupled_step(reg, store, *l, a, f, x, target, adams.get_mut(&key).unwrap())?;
+                coupled_step(be, store, *l, a, f, x, target, adams.get_mut(&key).unwrap())?;
             report.final_loss.insert(key, loss);
         }
     }
@@ -325,61 +325,61 @@ pub fn run_coupled(
 /// through both subblocks.
 #[allow(clippy::too_many_arguments)]
 fn coupled_step(
-    reg: &Registry,
+    be: &dyn Backend,
     store: &mut Store,
     layer: usize,
     a: &AttnChoice,
     f: &FfnChoice,
-    x: &xla::Literal,
-    target: &xla::Literal,
+    x: &Value,
+    target: &Value,
     adam: &mut Adam,
 ) -> Result<f64> {
-    let man = &reg.man;
+    let man = be.man();
     let la = man.attn_variants[&a.name()].clone();
     let lf = man.ffn_variants[&f.name()].clone();
-    let wa: Vec<xla::Literal> = store
+    let wa: Vec<Value> = store
         .block(layer, "attn", &a.name(), &la)?
         .iter()
-        .map(|t| tensor_to_lit(t))
+        .map(|t| tensor_to_val(t))
         .collect::<Result<_>>()?;
-    let wf: Vec<xla::Literal> = store
+    let wf: Vec<Value> = store
         .block(layer, "ffn", &f.name(), &lf)?
         .iter()
-        .map(|t| tensor_to_lit(t))
+        .map(|t| tensor_to_val(t))
         .collect::<Result<_>>()?;
     let pa = format!("attn_{}", a.name());
     let pf = format!("ffn_{}", f.name());
 
-    let mut in_a: Vec<&xla::Literal> = vec![x];
+    let mut in_a: Vec<&Value> = vec![x];
     in_a.extend(wa.iter());
-    let mid = reg.run(&format!("{pa}_train_fwd"), &in_a)?.remove(0);
-    let mut in_f: Vec<&xla::Literal> = vec![&mid];
+    let mid = be.run(&format!("{pa}_train_fwd"), &in_a)?.remove(0);
+    let mut in_f: Vec<&Value> = vec![&mid];
     in_f.extend(wf.iter());
-    let y = reg.run(&format!("{pf}_train_fwd"), &in_f)?.remove(0);
+    let y = be.run(&format!("{pf}_train_fwd"), &in_f)?.remove(0);
 
-    let (loss, dy) = nmse_loss_and_grad(&lit_to_tensor(&y)?, &lit_to_tensor(target)?);
-    let dy_lit = tensor_to_lit(&dy)?;
+    let (loss, dy) = nmse_loss_and_grad(&val_to_tensor(&y)?, &val_to_tensor(target)?);
+    let dy_val = tensor_to_val(&dy)?;
 
-    let mut vf: Vec<&xla::Literal> = vec![&mid];
+    let mut vf: Vec<&Value> = vec![&mid];
     vf.extend(wf.iter());
-    vf.push(&dy_lit);
-    let mut of = reg.run(&format!("{pf}_train_vjp"), &vf)?;
+    vf.push(&dy_val);
+    let mut of = be.run(&format!("{pf}_train_vjp"), &vf)?;
     let dmid = of.remove(0);
-    let mut va: Vec<&xla::Literal> = vec![x];
+    let mut va: Vec<&Value> = vec![x];
     va.extend(wa.iter());
     va.push(&dmid);
-    let mut oa = reg.run(&format!("{pa}_train_vjp"), &va)?;
+    let mut oa = be.run(&format!("{pa}_train_vjp"), &va)?;
     oa.remove(0);
 
     adam.begin_step();
-    for ((name, _), dlit) in lf.weights.iter().zip(of) {
+    for ((name, _), dval) in lf.weights.iter().zip(of) {
         let key = block_key(layer, "ffn", &f.name(), name);
-        let g = lit_to_tensor(&dlit)?;
+        let g = val_to_tensor(&dval)?;
         adam.update(&key, store.map.get_mut(&key).unwrap(), &g, 1.0);
     }
-    for ((name, _), dlit) in la.weights.iter().zip(oa) {
+    for ((name, _), dval) in la.weights.iter().zip(oa) {
         let key = block_key(layer, "attn", &a.name(), name);
-        let g = lit_to_tensor(&dlit)?;
+        let g = val_to_tensor(&dval)?;
         adam.update(&key, store.map.get_mut(&key).unwrap(), &g, 1.0);
     }
     Ok(loss)

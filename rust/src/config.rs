@@ -8,7 +8,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::arch::{AttnChoice, FfnChoice};
+use crate::arch::{ffn_ratio_value, AttnChoice, FfnChoice, FFN_RATIO_NAMES};
 use crate::util::Json;
 
 #[derive(Debug, Clone)]
@@ -172,6 +172,62 @@ impl Manifest {
         Ok(Manifest { dir: dir.to_path_buf(), cfg, attn_variants, ffn_variants, execs })
     }
 
+    /// Build a fully in-memory manifest for `cfg` — same variant layouts
+    /// and executable signatures that `python -m compile.aot` writes, but
+    /// with no artifact files behind the signatures. This is what lets the
+    /// `RefBackend` run the whole pipeline with no `artifacts/` directory.
+    pub fn synthetic(cfg: ModelCfg) -> Manifest {
+        let (d, dh, qd) = (cfg.d, cfg.head_dim, cfg.qdim());
+
+        let mut attn_variants = BTreeMap::new();
+        for divisor in [1usize, 2, 4, 8] {
+            if cfg.n_heads % divisor != 0 {
+                continue;
+            }
+            let kv = cfg.n_heads / divisor;
+            let weights = vec![
+                ("norm".to_string(), vec![d]),
+                ("wq".to_string(), vec![d, qd]),
+                ("wk".to_string(), vec![d, kv * dh]),
+                ("wv".to_string(), vec![d, kv * dh]),
+                ("wo".to_string(), vec![qd, d]),
+            ];
+            attn_variants
+                .insert(format!("gqa_r{divisor}"), VariantLayout { weights, kv_heads: kv, i_dim: 0 });
+        }
+        attn_variants.insert(
+            "linear".to_string(),
+            VariantLayout {
+                weights: vec![("norm".to_string(), vec![d]), ("wl".to_string(), vec![d, d])],
+                kv_heads: 0,
+                i_dim: 0,
+            },
+        );
+
+        let mut ffn_variants = BTreeMap::new();
+        for name in FFN_RATIO_NAMES {
+            let i_dim = round_dim(cfg.i as f64 * ffn_ratio_value(name));
+            let weights = vec![
+                ("norm".to_string(), vec![d]),
+                ("wg".to_string(), vec![d, i_dim]),
+                ("wu".to_string(), vec![d, i_dim]),
+                ("wd".to_string(), vec![i_dim, d]),
+            ];
+            ffn_variants.insert(name.to_string(), VariantLayout { weights, kv_heads: 0, i_dim });
+        }
+        ffn_variants.insert(
+            "linear".to_string(),
+            VariantLayout {
+                weights: vec![("norm".to_string(), vec![d]), ("wl".to_string(), vec![d, d])],
+                kv_heads: 0,
+                i_dim: 0,
+            },
+        );
+
+        let execs = synthetic_execs(&cfg, &attn_variants, &ffn_variants);
+        Manifest { dir: PathBuf::new(), cfg, attn_variants, ffn_variants, execs }
+    }
+
     pub fn exec_path(&self, name: &str) -> Result<PathBuf> {
         let sig = self.execs.get(name).ok_or_else(|| anyhow!("unknown exec {name}"))?;
         Ok(self.dir.join(&sig.file))
@@ -190,6 +246,173 @@ impl Manifest {
             FfnChoice::NoOp => None,
             _ => self.ffn_variants.get(&c.name()),
         }
+    }
+}
+
+/// Round a pruned dimension to a hardware-friendly multiple of 16
+/// (mirrors `compile.configs.round_dim`).
+fn round_dim(x: f64) -> usize {
+    (((x / 16.0).round() as usize) * 16).max(16)
+}
+
+type Sig = Vec<(String, Vec<usize>)>;
+
+fn f32s(shape: &[usize]) -> (String, Vec<usize>) {
+    ("float32".to_string(), shape.to_vec())
+}
+
+fn i32s(shape: &[usize]) -> (String, Vec<usize>) {
+    ("int32".to_string(), shape.to_vec())
+}
+
+/// Executable signatures for every (variant, mode), mirroring the export
+/// loop in `python/compile/aot.py`.
+fn synthetic_execs(
+    cfg: &ModelCfg,
+    attn_variants: &BTreeMap<String, VariantLayout>,
+    ffn_variants: &BTreeMap<String, VariantLayout>,
+) -> BTreeMap<String, ExecSig> {
+    let (d, dh, v) = (cfg.d, cfg.head_dim, cfg.v);
+    let (bt, st) = (cfg.b_train, cfg.s_train);
+    let (bd, sp, sl, smax) = (cfg.b_decode, cfg.s_prefill, cfg.s_long, cfg.s_max);
+    let mut execs = BTreeMap::new();
+    let mut add = |name: String, ins: Sig, outs: Sig| {
+        execs.insert(name, ExecSig { file: String::new(), in_shapes: ins, out_shapes: outs });
+    };
+    let wsig = |layout: &VariantLayout| -> Sig {
+        layout.weights.iter().map(|(_, s)| f32s(s)).collect()
+    };
+    let cat = |head: Sig, tail: Sig| -> Sig { head.into_iter().chain(tail).collect() };
+
+    for (variant, layout) in attn_variants {
+        let n = format!("attn_{variant}");
+        let ws = wsig(layout);
+        let x_t = f32s(&[bt, st, d]);
+        add(format!("{n}_train_fwd"), cat(vec![x_t.clone()], ws.clone()), vec![x_t.clone()]);
+        add(
+            format!("{n}_train_vjp"),
+            cat(cat(vec![x_t.clone()], ws.clone()), vec![x_t.clone()]),
+            cat(vec![x_t.clone()], ws.clone()),
+        );
+        if variant == "linear" {
+            for (mode, b, s) in [("prefill", 1, sp), ("decode", bd, 1), ("long", 1, sl)] {
+                let x = f32s(&[b, s, d]);
+                add(format!("{n}_{mode}"), cat(vec![x.clone()], ws.clone()), vec![x]);
+            }
+        } else {
+            let kv = layout.kv_heads;
+            let x_p = f32s(&[1, sp, d]);
+            let kv_p = f32s(&[1, sp, kv, dh]);
+            add(
+                format!("{n}_prefill"),
+                cat(vec![x_p.clone()], ws.clone()),
+                vec![x_p, kv_p.clone(), kv_p],
+            );
+            let x_d = f32s(&[bd, 1, d]);
+            let cache = f32s(&[bd, smax, kv, dh]);
+            add(
+                format!("{n}_decode"),
+                cat(
+                    vec![x_d.clone(), cache.clone(), cache.clone(), i32s(&[bd])],
+                    ws.clone(),
+                ),
+                vec![x_d, cache.clone(), cache],
+            );
+            let x_l = f32s(&[1, sl, d]);
+            add(format!("{n}_long"), cat(vec![x_l.clone()], ws.clone()), vec![x_l]);
+        }
+    }
+
+    for (variant, layout) in ffn_variants {
+        let n = format!("ffn_{variant}");
+        let ws = wsig(layout);
+        let x_t = f32s(&[bt, st, d]);
+        add(format!("{n}_train_fwd"), cat(vec![x_t.clone()], ws.clone()), vec![x_t.clone()]);
+        add(
+            format!("{n}_train_vjp"),
+            cat(cat(vec![x_t.clone()], ws.clone()), vec![x_t.clone()]),
+            cat(vec![x_t.clone()], ws.clone()),
+        );
+        for (mode, b, s) in [("prefill", 1, sp), ("decode", bd, 1), ("long", 1, sl)] {
+            let x = f32s(&[b, s, d]);
+            add(format!("{n}_{mode}"), cat(vec![x.clone()], ws.clone()), vec![x]);
+        }
+    }
+
+    let e = f32s(&[v, d]);
+    let nw = f32s(&[d]);
+    for (mode, b, s) in [("train", bt, st), ("prefill", 1, sp), ("decode", bd, 1), ("long", 1, sl)] {
+        add(
+            format!("embed_{mode}"),
+            vec![i32s(&[b, s]), e.clone()],
+            vec![f32s(&[b, s, d])],
+        );
+        add(
+            format!("head_{mode}"),
+            vec![f32s(&[b, s, d]), nw.clone(), e.clone()],
+            vec![f32s(&[b, s, v])],
+        );
+    }
+    add(
+        "embed_train_vjp".to_string(),
+        vec![i32s(&[bt, st]), e.clone(), f32s(&[bt, st, d])],
+        vec![e.clone()],
+    );
+    add(
+        "head_train_vjp".to_string(),
+        vec![f32s(&[bt, st, d]), nw.clone(), e.clone(), f32s(&[bt, st, v])],
+        vec![f32s(&[bt, st, d]), nw, e],
+    );
+    execs
+}
+
+/// Ready-made synthetic configurations for the hermetic reference backend:
+/// `TinyManifest::synthetic()` is the standard in-memory test model (no
+/// `artifacts/` directory, no python step).
+pub struct TinyManifest;
+
+impl TinyManifest {
+    /// A deliberately small config so the naive reference interpreter keeps
+    /// the whole test suite fast: 3 layers, d=32, 4 heads, vocab 128.
+    pub fn synthetic() -> Manifest {
+        Manifest::synthetic(ModelCfg {
+            name: "ref-tiny".to_string(),
+            d: 32,
+            n_layers: 3,
+            n_heads: 4,
+            head_dim: 8,
+            i: 64,
+            v: 128,
+            s_train: 32,
+            b_train: 4,
+            s_prefill: 32,
+            b_decode: 2,
+            s_max: 48,
+            s_long: 64,
+            rope_theta: 10000.0,
+            eps: 1e-5,
+        })
+    }
+
+    /// A larger synthetic config for demos and perf experiments.
+    pub fn synthetic_small() -> Manifest {
+        Manifest::synthetic(ModelCfg {
+            name: "ref-small".to_string(),
+            d: 64,
+            n_layers: 6,
+            n_heads: 8,
+            head_dim: 8,
+            i: 192,
+            v: 256,
+            s_train: 64,
+            b_train: 8,
+            s_prefill: 64,
+            b_decode: 4,
+            s_max: 96,
+            s_long: 128,
+            rope_theta: 10000.0,
+            eps: 1e-5,
+        })
     }
 }
 
@@ -221,5 +444,43 @@ mod tests {
         assert_eq!(m.execs["attn_gqa_r1_train_fwd"].in_shapes[0].1, vec![2, 8, 8]);
         assert!(m.attn_layout(&AttnChoice::NoOp).is_none());
         assert!(m.attn_layout(&AttnChoice::Linear).is_some());
+    }
+
+    #[test]
+    fn synthetic_manifest_mirrors_aot_contract() {
+        let m = TinyManifest::synthetic();
+        let c = &m.cfg;
+        // 4 heads -> divisors 1/2/4 valid, plus linear
+        assert_eq!(m.attn_variants.len(), 4);
+        assert_eq!(m.attn_variants["gqa_r1"].kv_heads, 4);
+        assert_eq!(m.attn_variants["gqa_r4"].kv_heads, 1);
+        assert_eq!(m.ffn_variants.len(), 8); // 7 ratios + linear
+        assert_eq!(m.ffn_variants["r100"].i_dim, c.i);
+        assert!(m.ffn_variants["r10"].i_dim >= 16);
+        // exec signatures present for every variant x mode + embed/head
+        for variant in m.attn_variants.keys() {
+            for mode in ["train_fwd", "train_vjp", "prefill", "decode", "long"] {
+                assert!(m.execs.contains_key(&format!("attn_{variant}_{mode}")), "{variant}/{mode}");
+            }
+        }
+        for variant in m.ffn_variants.keys() {
+            for mode in ["train_fwd", "train_vjp", "prefill", "decode", "long"] {
+                assert!(m.execs.contains_key(&format!("ffn_{variant}_{mode}")), "{variant}/{mode}");
+            }
+        }
+        for mode in ["train", "prefill", "decode", "long"] {
+            assert!(m.execs.contains_key(&format!("embed_{mode}")));
+            assert!(m.execs.contains_key(&format!("head_{mode}")));
+        }
+        // gqa prefill returns (y, k, v); decode takes caches + positions
+        let pre = &m.execs["attn_gqa_r2_prefill"];
+        assert_eq!(pre.out_shapes.len(), 3);
+        assert_eq!(pre.out_shapes[1].1, vec![1, c.s_prefill, 2, c.head_dim]);
+        let dec = &m.execs["attn_gqa_r2_decode"];
+        assert_eq!(dec.in_shapes[3].0, "int32");
+        assert_eq!(dec.in_shapes[1].1, vec![c.b_decode, c.s_max, 2, c.head_dim]);
+        // vjp returns (dx, *dweights) in manifest weight order
+        let vjp = &m.execs["ffn_r50_train_vjp"];
+        assert_eq!(vjp.out_shapes.len(), 1 + m.ffn_variants["r50"].weights.len());
     }
 }

@@ -23,14 +23,14 @@ use anyhow::Result;
 
 use crate::arch::Arch;
 use crate::model::CompiledModel;
-use crate::runtime::{lit_i32, lit_to_tensor, Registry};
+use crate::runtime::{val_i32, val_to_tensor, Backend, Value};
 use crate::tensor::Tensor;
 use crate::weights::Store;
 
 pub use tasks::{LongTask, McQuestion};
 
 pub struct Evaluator<'a> {
-    pub reg: &'a Registry,
+    pub be: &'a dyn Backend,
     pub model: CompiledModel,
 }
 
@@ -60,42 +60,42 @@ impl EvalReport {
 }
 
 impl<'a> Evaluator<'a> {
-    pub fn new(reg: &'a Registry, store: &Store, arch: &Arch) -> Result<Evaluator<'a>> {
-        Ok(Evaluator { reg, model: CompiledModel::assemble(&reg.man, store, arch)? })
+    pub fn new(be: &'a dyn Backend, store: &Store, arch: &Arch) -> Result<Evaluator<'a>> {
+        Ok(Evaluator { be, model: CompiledModel::assemble(be.man(), store, arch)? })
     }
 
     /// Train-shaped forward over packed question rows -> logits tensor.
     fn logits(&self, tokens: &[i32], b: usize, s: usize) -> Result<Tensor> {
-        let trace = self.model.forward(self.reg, "train", tokens, b, s)?;
+        let trace = self.model.forward(self.be, "train", tokens, b, s)?;
         Ok(trace.logits)
     }
 
     /// Long-context forward (1, s_long).
     fn logits_long(&self, tokens: &[i32]) -> Result<Tensor> {
-        let cfg = &self.reg.man.cfg;
-        let tok = lit_i32(&[1, cfg.s_long], tokens)?;
-        let mut x = self.reg.run("embed_long", &[&tok, &self.model.embed])?.remove(0);
+        let cfg = &self.be.man().cfg;
+        let tok = val_i32(&[1, cfg.s_long], tokens)?;
+        let mut x = self.be.run("embed_long", &[&tok, &self.model.embed])?.remove(0);
         for l in 0..self.model.attn.len() {
             for blk in [&self.model.attn[l], &self.model.ffn[l]] {
                 if let Some(prefix) = &blk.prefix {
-                    let mut inputs: Vec<&xla::Literal> = vec![&x];
-                    inputs.extend(blk.lits.iter());
-                    x = self.reg.run(&format!("{prefix}_long"), &inputs)?.remove(0);
+                    let mut inputs: Vec<&Value> = vec![&x];
+                    inputs.extend(blk.vals.iter());
+                    x = self.be.run(&format!("{prefix}_long"), &inputs)?.remove(0);
                 }
             }
         }
         let logits = self
-            .reg
+            .be
             .run("head_long", &[&x, &self.model.final_norm, &self.model.embed])?
             .remove(0);
-        lit_to_tensor(&logits)
+        val_to_tensor(&logits)
     }
 
     /// Score a set of multiple-choice questions by next-token logit
     /// ranking, packing `b_train` questions per forward. Returns accuracy
     /// in percent.
     pub fn mc_accuracy(&self, questions: &[McQuestion]) -> Result<f64> {
-        let cfg = &self.reg.man.cfg;
+        let cfg = &self.be.man().cfg;
         let (b, s, v) = (cfg.b_train, cfg.s_train, cfg.v);
         let mut correct = 0usize;
         for chunk in questions.chunks(b) {
@@ -130,7 +130,7 @@ impl<'a> Evaluator<'a> {
     /// Greedy full-vocab generation accuracy (GenScore / SynthMath): the
     /// argmax token at answer_pos must equal the gold candidate.
     pub fn greedy_accuracy(&self, questions: &[McQuestion]) -> Result<f64> {
-        let cfg = &self.reg.man.cfg;
+        let cfg = &self.be.man().cfg;
         let (b, s, v) = (cfg.b_train, cfg.s_train, cfg.v);
         let mut correct = 0usize;
         for chunk in questions.chunks(b) {
@@ -161,7 +161,7 @@ impl<'a> Evaluator<'a> {
 
     /// Long-context MC accuracy: one question per forward at s_long.
     pub fn long_mc_accuracy(&self, questions: &[McQuestion]) -> Result<f64> {
-        let cfg = &self.reg.man.cfg;
+        let cfg = &self.be.man().cfg;
         let (sl, v) = (cfg.s_long, cfg.v);
         let mut correct = 0usize;
         for q in questions {

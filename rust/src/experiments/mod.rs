@@ -27,7 +27,7 @@ pub struct ExpCtx<'a> {
 
 impl<'a> ExpCtx<'a> {
     pub fn new(pipe: Pipeline<'a>) -> ExpCtx<'a> {
-        let space = SearchSpace::full(pipe.reg.man.cfg.n_heads as u32);
+        let space = SearchSpace::full(pipe.be.man().cfg.n_heads as u32);
         ExpCtx { pipe, space }
     }
 
@@ -46,7 +46,7 @@ impl<'a> ExpCtx<'a> {
     }
 
     fn eval(&self, store: &Store, arch: &Arch) -> Result<crate::eval::EvalReport> {
-        let ev = Evaluator::new(self.pipe.reg, store, arch)?;
+        let ev = Evaluator::new(self.pipe.be, store, arch)?;
         ev.run_suite(self.world(), self.pipe.cfg.eval_questions, 7)
     }
 
@@ -127,7 +127,7 @@ pub fn table2(ctx: &ExpCtx) -> Result<()> {
     let (library, arch) = ctx.standard_child()?;
     let mut child_store = library.clone();
     ctx.pipe.gkd_child(&mut child_store, &arch, LossSpec::gkd_best(), ctx.pipe.cfg.gkd_steps)?;
-    let parent_arch = Arch::parent(ctx.pipe.reg.man.cfg.n_layers);
+    let parent_arch = Arch::parent(ctx.pipe.be.man().cfg.n_layers);
     let pe = ctx.eval(&library, &parent_arch)?;
     let ce = ctx.eval(&child_store, &arch)?;
     println!("{:<12} {:>8} {:>8} {:>11}", "benchmark", "parent", "child", "preserved%");
@@ -155,7 +155,7 @@ pub fn table2(ctx: &ExpCtx) -> Result<()> {
 pub fn table3(ctx: &ExpCtx) -> Result<()> {
     println!("== Table 3: throughput, parent vs child (measured CPU + modeled H100) ==");
     let (library, arch) = ctx.standard_child()?;
-    let man = &ctx.pipe.reg.man;
+    let man = ctx.pipe.be.man();
     let c = &man.cfg;
     let parent_arch = Arch::parent(c.n_layers);
     let hw = HwProfile::h100_fp8();
@@ -175,19 +175,19 @@ pub fn table3(ctx: &ExpCtx) -> Result<()> {
         for a in [&arch, &parent_arch] {
             // warmup pass: compile every executable outside the timed region
             {
-                let mut warm = Engine::new(ctx.pipe.reg, &library, a, 64 << 20)?;
-                warm.submit(vec![1, 5, 9], 2);
+                let mut warm = Engine::new(ctx.pipe.be, &library, a, 64 << 20)?;
+                warm.submit(vec![1, 5, 9], 2)?;
                 warm.run_to_completion()?;
             }
             // best of 2 repetitions (the first run in a fresh process can
             // still hit allocator/XLA cold paths)
             let mut best = 0.0f64;
             for _rep in 0..2 {
-                let mut eng = Engine::new(ctx.pipe.reg, &library, a, 64 << 20)?;
+                let mut eng = Engine::new(ctx.pipe.be, &library, a, 64 << 20)?;
                 let mut rng = Rng::new(3);
                 for _ in 0..c.b_decode * 2 {
                     let prompt = sample_sequence(ctx.world(), &ctx.pipe.mix, pin, &mut rng);
-                    eng.submit(prompt, pout);
+                    eng.submit(prompt, pout)?;
                 }
                 eng.run_to_completion()?;
                 best = best.max(eng.metrics.gen_throughput());
@@ -226,9 +226,9 @@ pub fn fig4(ctx: &ExpCtx) -> Result<()> {
     let (library, arch) = ctx.standard_child()?;
     let mut child = library.clone();
     ctx.pipe.gkd_child(&mut child, &arch, LossSpec::gkd_best(), ctx.pipe.cfg.gkd_steps)?;
-    let parent_arch = Arch::parent(ctx.pipe.reg.man.cfg.n_layers);
-    let pe = Evaluator::new(ctx.pipe.reg, &library, &parent_arch)?;
-    let ce = Evaluator::new(ctx.pipe.reg, &child, &arch)?;
+    let parent_arch = Arch::parent(ctx.pipe.be.man().cfg.n_layers);
+    let pe = Evaluator::new(ctx.pipe.be, &library, &parent_arch)?;
+    let ce = Evaluator::new(ctx.pipe.be, &child, &arch)?;
     let mut rng = Rng::new(11);
     let qs = tasks::gen_questions(ctx.world(), ctx.pipe.cfg.eval_questions, &mut rng);
     let (mut both, mut p_only, mut c_only, mut neither) = (0, 0, 0, 0);
@@ -266,7 +266,7 @@ pub fn fig5(ctx: &ExpCtx) -> Result<()> {
     let ct = ctx.pipe.default_cost_table();
     println!("{:<14} {:>12} {:>9}", "model", "tok/s(H100)", "accuracy");
     let mut rows = Vec::new();
-    let parent_arch = Arch::parent(ctx.pipe.reg.man.cfg.n_layers);
+    let parent_arch = Arch::parent(ctx.pipe.be.man().cfg.n_layers);
     let pe = ctx.eval(&library, &parent_arch)?;
     println!("{:<14} {:>12.0} {:>9.2}", "parent", ct.arch_throughput(&parent_arch), pe.accuracy());
     rows.push(Json::arr_f64(&[ct.arch_throughput(&parent_arch), pe.accuracy()]));
@@ -287,7 +287,7 @@ pub fn fig5(ctx: &ExpCtx) -> Result<()> {
 pub fn fig6(ctx: &ExpCtx) -> Result<()> {
     println!("== Figure 6: per-layer relative runtime of the chosen child ==");
     let (_, arch) = ctx.standard_child()?;
-    let man = &ctx.pipe.reg.man;
+    let man = ctx.pipe.be.man();
     let hw = HwProfile::h100_fp8();
     let c = &man.cfg;
     let sc = Scenario { prefill: c.s_prefill, decode: c.s_prefill, batch: 64 };
@@ -310,14 +310,14 @@ pub fn table4(ctx: &ExpCtx) -> Result<()> {
     let (library, arch) = ctx.standard_child()?;
     let mut child = library.clone();
     ctx.pipe.gkd_child(&mut child, &arch, LossSpec::gkd_best(), ctx.pipe.cfg.gkd_steps)?;
-    let c = &ctx.pipe.reg.man.cfg;
+    let c = &ctx.pipe.be.man().cfg;
     let ctxs: Vec<usize> = [c.s_train / 2, c.s_train, c.s_train * 2, c.s_long]
         .into_iter()
         .filter(|&x| x <= c.s_long)
         .collect();
     let parent_arch = Arch::parent(c.n_layers);
-    let pe = Evaluator::new(ctx.pipe.reg, &library, &parent_arch)?;
-    let ce = Evaluator::new(ctx.pipe.reg, &child, &arch)?;
+    let pe = Evaluator::new(ctx.pipe.be, &library, &parent_arch)?;
+    let ce = Evaluator::new(ctx.pipe.be, &child, &arch)?;
     let n = (ctx.pipe.cfg.eval_questions / 4).max(8);
     let pr = pe.run_ruler(ctx.world(), &ctxs, n, 5)?;
     let cr = ce.run_ruler(ctx.world(), &ctxs, n, 5)?;
@@ -341,7 +341,7 @@ pub fn table5(ctx: &ExpCtx) -> Result<()> {
     let before = ctx.eval(&child, &arch)?;
     // alignment = short LM finetune on the instruction mix
     let mut aligned = child.clone();
-    let c = &ctx.pipe.reg.man.cfg;
+    let c = &ctx.pipe.be.man().cfg;
     let mut batcher = crate::data::Batcher::new(
         ctx.world().clone(),
         CorpusMix::align_mix(),
@@ -356,7 +356,7 @@ pub fn table5(ctx: &ExpCtx) -> Result<()> {
         warmup_frac: 0.1,
         log_every: 50,
     };
-    gkd::run(ctx.pipe.reg, &mut aligned, &arch, &mut batcher, &[], &cfg)?;
+    gkd::run(ctx.pipe.be, &mut aligned, &arch, &mut batcher, &[], &cfg)?;
     let after = ctx.eval(&aligned, &arch)?;
     let parent_arch = Arch::parent(c.n_layers);
     let pe = ctx.eval(&library, &parent_arch)?;
@@ -382,7 +382,7 @@ pub fn table5(ctx: &ExpCtx) -> Result<()> {
 pub fn table7(ctx: &ExpCtx) -> Result<()> {
     println!("== Table 7: GKD budget sweep ==");
     let (library, arch) = ctx.standard_child()?;
-    let parent_arch = Arch::parent(ctx.pipe.reg.man.cfg.n_layers);
+    let parent_arch = Arch::parent(ctx.pipe.be.man().cfg.n_layers);
     let pe = ctx.eval(&library, &parent_arch)?;
     println!("{:<10} {:>10} {:>9} {:>11}", "gkd steps", "tokens", "accuracy", "preserved%");
     let mut rows = Vec::new();
@@ -422,12 +422,12 @@ pub fn table8(ctx: &ExpCtx) -> Result<()> {
         let mut store = ctx.pipe.ensure_parent()?;
         let mut batcher = ctx.pipe.batcher(0xc0de);
         if mode == "decoupled" {
-            crate::bld::run_decoupled(ctx.pipe.reg, &mut store, &reduced, &mut batcher, ctx.pipe.cfg.bld_steps, ctx.pipe.cfg.bld_lr)?;
+            crate::bld::run_decoupled(ctx.pipe.be, &mut store, &reduced, &mut batcher, ctx.pipe.cfg.bld_steps, ctx.pipe.cfg.bld_lr)?;
         } else {
-            crate::bld::run_coupled(ctx.pipe.reg, &mut store, &reduced, &mut batcher, ctx.pipe.cfg.bld_steps / 2, ctx.pipe.cfg.bld_lr)?;
+            crate::bld::run_coupled(ctx.pipe.be, &mut store, &reduced, &mut batcher, ctx.pipe.cfg.bld_steps / 2, ctx.pipe.cfg.bld_lr)?;
         }
         let val = ctx.pipe.val_batches(ctx.pipe.cfg.score_batches);
-        let scores = scoring::score_library(ctx.pipe.reg, &store, &reduced, &val, Metric::Kl)?;
+        let scores = scoring::score_library(ctx.pipe.be, &store, &reduced, &val, Metric::Kl)?;
         let sol = ctx.pipe.search_speedup(&reduced, &scores, &ct, 1.8)?;
         let mut child = store.clone();
         ctx.pipe.gkd_child(&mut child, &sol.arch, LossSpec::gkd_best(), ctx.pipe.cfg.gkd_steps / 2)?;
@@ -448,15 +448,15 @@ pub fn table8(ctx: &ExpCtx) -> Result<()> {
 pub fn table9(ctx: &ExpCtx) -> Result<()> {
     println!("== Table 9: dataset composition (mix vs narrative-only) ==");
     let ct = ctx.pipe.default_cost_table();
-    let c = &ctx.pipe.reg.man.cfg;
+    let c = &ctx.pipe.be.man().cfg;
     let mut rows = Vec::new();
     println!("{:<22} {:>8} {:>9} {:>9}", "bld corpus", "SynthQA", "GenScore", "Accuracy");
     for mix in [CorpusMix::distillation_mix(), CorpusMix::gutenberg()] {
         let mut store = ctx.pipe.ensure_parent()?;
         let mut batcher = crate::data::Batcher::new(ctx.world().clone(), mix.clone(), c.b_train, c.s_train, 0xda7a);
-        crate::bld::run_decoupled(ctx.pipe.reg, &mut store, &ctx.space, &mut batcher, ctx.pipe.cfg.bld_steps, ctx.pipe.cfg.bld_lr)?;
+        crate::bld::run_decoupled(ctx.pipe.be, &mut store, &ctx.space, &mut batcher, ctx.pipe.cfg.bld_steps, ctx.pipe.cfg.bld_lr)?;
         let val = ctx.pipe.val_batches(ctx.pipe.cfg.score_batches);
-        let scores = scoring::score_library(ctx.pipe.reg, &store, &ctx.space, &val, Metric::Kl)?;
+        let scores = scoring::score_library(ctx.pipe.be, &store, &ctx.space, &val, Metric::Kl)?;
         let sol = ctx.pipe.search_speedup(&ctx.space, &scores, &ct, 1.8)?;
         // Table 9 compares *without* GKD uptraining
         let ev = ctx.eval(&store, &sol.arch)?;
@@ -482,9 +482,9 @@ pub fn table10(ctx: &ExpCtx) -> Result<()> {
         let steps = ((ctx.pipe.cfg.bld_steps as f64) * frac).max(1.0) as usize;
         let mut store = ctx.pipe.ensure_parent()?;
         let mut batcher = ctx.pipe.batcher(0xb1d2);
-        let rep = crate::bld::run_decoupled(ctx.pipe.reg, &mut store, &ctx.space, &mut batcher, steps, ctx.pipe.cfg.bld_lr)?;
+        let rep = crate::bld::run_decoupled(ctx.pipe.be, &mut store, &ctx.space, &mut batcher, steps, ctx.pipe.cfg.bld_lr)?;
         let val = ctx.pipe.val_batches(ctx.pipe.cfg.score_batches);
-        let scores = scoring::score_library(ctx.pipe.reg, &store, &ctx.space, &val, Metric::Kl)?;
+        let scores = scoring::score_library(ctx.pipe.be, &store, &ctx.space, &val, Metric::Kl)?;
         let sol = ctx.pipe.search_speedup(&ctx.space, &scores, &ct, 1.8)?;
         let mut child = store.clone();
         ctx.pipe.gkd_child(&mut child, &sol.arch, LossSpec::gkd_best(), ctx.pipe.cfg.gkd_steps / 4)?;
@@ -529,13 +529,13 @@ pub fn fig7(ctx: &ExpCtx) -> Result<()> {
 pub fn table11(ctx: &ExpCtx) -> Result<()> {
     println!("== Table 11: Half-SynthQA task-oriented scoring ==");
     let library = ctx.pipe.ensure_library(&ctx.space)?;
-    let man = &ctx.pipe.reg.man;
+    let man = ctx.pipe.be.man();
     let n_layers = man.cfg.n_layers;
     // downstream scoring: accuracy drop on the "train" half (even relations)
     let mut rng = Rng::new(21);
     let train_qs = tasks::synth_qa(ctx.world(), ctx.pipe.cfg.eval_questions, &mut rng, Some(&|r| r % 2 == 0));
     let parent_arch = Arch::parent(n_layers);
-    let pe = Evaluator::new(ctx.pipe.reg, &library, &parent_arch)?;
+    let pe = Evaluator::new(ctx.pipe.be, &library, &parent_arch)?;
     let parent_acc = pe.mc_accuracy(&train_qs)?;
     let mut ds_scores = ScoreTable { metric_name: "half_synthqa".into(), ..Default::default() };
     for l in 0..n_layers {
@@ -545,7 +545,7 @@ pub fn table11(ctx: &ExpCtx) -> Result<()> {
                 _ => {
                     let mut arch = parent_arch.clone();
                     arch.layers[l].0 = *a;
-                    let ev = Evaluator::new(ctx.pipe.reg, &library, &arch)?;
+                    let ev = Evaluator::new(ctx.pipe.be, &library, &arch)?;
                     (parent_acc - ev.mc_accuracy(&train_qs)?).max(0.0)
                 }
             };
@@ -557,7 +557,7 @@ pub fn table11(ctx: &ExpCtx) -> Result<()> {
                 _ => {
                     let mut arch = parent_arch.clone();
                     arch.layers[l].1 = *f;
-                    let ev = Evaluator::new(ctx.pipe.reg, &library, &arch)?;
+                    let ev = Evaluator::new(ctx.pipe.be, &library, &arch)?;
                     (parent_acc - ev.mc_accuracy(&train_qs)?).max(0.0)
                 }
             };
@@ -575,7 +575,7 @@ pub fn table11(ctx: &ExpCtx) -> Result<()> {
         let sol = ctx.pipe.search_speedup(&ctx.space, table, &ct, 1.8)?;
         let mut child = library.clone();
         ctx.pipe.gkd_child(&mut child, &sol.arch, LossSpec::gkd_best(), ctx.pipe.cfg.gkd_steps / 2)?;
-        let ev = Evaluator::new(ctx.pipe.reg, &child, &sol.arch)?;
+        let ev = Evaluator::new(ctx.pipe.be, &child, &sol.arch)?;
         let acc = ev.mc_accuracy(&test_qs)?;
         println!("{:<28} {:>13.2}%", name, acc);
         rows.push(Json::from_pairs(vec![("scoring", Json::str(name)), ("test_acc", Json::num(acc))]));
@@ -593,11 +593,11 @@ pub fn table12(ctx: &ExpCtx) -> Result<()> {
     let mut rows = Vec::new();
     println!("{:<18} {:>8} {:>12}", "space", "SynthQA", "tok/s(H100)");
     for (name, space) in [
-        ("noop-only", SearchSpace::noop_only(ctx.pipe.reg.man.cfg.n_heads as u32)),
+        ("noop-only", SearchSpace::noop_only(ctx.pipe.be.man().cfg.n_heads as u32)),
         ("full", ctx.space.clone()),
     ] {
         let val = ctx.pipe.val_batches(ctx.pipe.cfg.score_batches);
-        let scores = scoring::score_library(ctx.pipe.reg, &library, &space, &val, Metric::Kl)?;
+        let scores = scoring::score_library(ctx.pipe.be, &library, &space, &val, Metric::Kl)?;
         let sol = ctx.pipe.search_speedup(&space, &scores, &ct, 1.8)?;
         let ev = ctx.eval(&library, &sol.arch)?;
         println!("{:<18} {:>8.2} {:>12.0}", name, ev.get("synthqa"), sol.throughput);
@@ -618,7 +618,7 @@ pub fn table13_14_15(ctx: &ExpCtx) -> Result<()> {
     let library = ctx.pipe.ensure_library(&ctx.space)?;
     let scores = ctx.pipe.ensure_scores(&ctx.space, Metric::Kl)?;
     let ct = ctx.pipe.default_cost_table();
-    let n_layers = ctx.pipe.reg.man.cfg.n_layers;
+    let n_layers = ctx.pipe.be.man().cfg.n_layers;
     let parent_tp = ct.arch_throughput(&Arch::parent(n_layers));
     let cons = Constraints { throughput_min: Some(parent_tp * 1.8), ..Default::default() };
 
@@ -663,7 +663,7 @@ pub fn table16(ctx: &ExpCtx) -> Result<()> {
     let mut after_store = library.clone();
     ctx.pipe.gkd_child(&mut after_store, &arch, LossSpec::gkd_best(), ctx.pipe.cfg.gkd_steps)?;
     let after = ctx.eval(&after_store, &arch)?;
-    let parent_arch = Arch::parent(ctx.pipe.reg.man.cfg.n_layers);
+    let parent_arch = Arch::parent(ctx.pipe.be.man().cfg.n_layers);
     let pe = ctx.eval(&library, &parent_arch)?;
     println!("{:<20} {:>8} {:>9} {:>9}", "model", "SynthQA", "GenScore", "Accuracy");
     for (name, e) in [("parent", &pe), ("child (no GKD)", &before), ("child (GKD)", &after)] {
@@ -687,7 +687,7 @@ pub fn table17(ctx: &ExpCtx) -> Result<()> {
     let (library, arch) = ctx.standard_child()?;
     let mut puzzle_store = library.clone();
     ctx.pipe.gkd_child(&mut puzzle_store, &arch, LossSpec::gkd_best(), ctx.pipe.cfg.gkd_steps)?;
-    let man = &ctx.pipe.reg.man;
+    let man = ctx.pipe.be.man();
     let n_layers = man.cfg.n_layers;
     let parent_arch = Arch::parent(n_layers);
 
@@ -753,7 +753,7 @@ pub fn fig8(ctx: &ExpCtx) -> Result<()> {
     println!("== Figure 8: MIP architectures across throughput targets ==");
     let scores = ctx.pipe.ensure_scores(&ctx.space, Metric::Kl)?;
     let ct = ctx.pipe.default_cost_table();
-    let man = &ctx.pipe.reg.man;
+    let man = ctx.pipe.be.man();
     let n_layers = man.cfg.n_layers;
     let hw = HwProfile::h100_fp8();
     let c = &man.cfg;

@@ -8,11 +8,11 @@ use anyhow::Result;
 
 use crate::arch::Arch;
 use crate::data::Batcher;
+use crate::info;
 use crate::model::CompiledModel;
-use crate::runtime::Registry;
+use crate::runtime::Backend;
 use crate::train::{eval_batch, lr_schedule, train_step, Adam, AdamCfg, LossSpec, StepMetrics};
 use crate::weights::Store;
-use crate::info;
 
 #[derive(Debug, Clone)]
 pub struct GkdCfg {
@@ -45,14 +45,14 @@ pub struct GkdReport {
 /// The parent is re-assembled from the same store at the parent arch; for
 /// pretraining pass `parent_needed = false` to skip the parent forward.
 pub fn run(
-    reg: &Registry,
+    be: &dyn Backend,
     store: &mut Store,
     arch: &Arch,
     batcher: &mut Batcher,
     val_batches: &[crate::data::Batch],
     cfg: &GkdCfg,
 ) -> Result<GkdReport> {
-    let man = &reg.man;
+    let man = be.man();
     let parent_arch = Arch::parent(man.cfg.n_layers);
     let parent_needed = cfg.spec.cosine || cfg.spec.kld;
     // snapshot parent weights so the child's updates can't drift the teacher
@@ -74,10 +74,10 @@ pub fn run(
         report.tokens += (batch.b * batch.s) as u64;
         let ptrace = parent
             .as_ref()
-            .map(|p| p.forward(reg, "train", &batch.inputs, batch.b, batch.s))
+            .map(|p| p.forward(be, "train", &batch.inputs, batch.b, batch.s))
             .transpose()?;
         let lr = lr_schedule(cfg.lr, step as u64, warmup, cfg.steps as u64);
-        let m = train_step(reg, store, arch, &mut adam, &batch, cfg.spec, ptrace.as_ref(), lr)?;
+        let m = train_step(be, store, arch, &mut adam, &batch, cfg.spec, ptrace.as_ref(), lr)?;
         if step % cfg.log_every == 0 || step + 1 == cfg.steps {
             info!(
                 "gkd[{}] step {step}/{}: loss {:.4} (lm {:.4} cos {:.4} kld {:.4})",
@@ -97,10 +97,10 @@ pub fn run(
     let mut lm_sum = 0.0;
     for vb in val_batches {
         let ptrace = match val_parent {
-            Some(p) => Some(p.forward(reg, "train", &vb.inputs, vb.b, vb.s)?),
+            Some(p) => Some(p.forward(be, "train", &vb.inputs, vb.b, vb.s)?),
             None => None,
         };
-        let (lm, kld) = eval_batch(reg, store, arch, vb, ptrace.as_ref())?;
+        let (lm, kld) = eval_batch(be, store, arch, vb, ptrace.as_ref())?;
         lm_sum += lm;
         kld_sum += kld;
     }
@@ -112,14 +112,14 @@ pub fn run(
 
 /// Parent pretraining = LM-only training of the parent architecture.
 pub fn pretrain_parent(
-    reg: &Registry,
+    be: &dyn Backend,
     store: &mut Store,
     batcher: &mut Batcher,
     val_batches: &[crate::data::Batch],
     steps: usize,
     lr: f32,
 ) -> Result<GkdReport> {
-    let arch = Arch::parent(reg.man.cfg.n_layers);
+    let arch = Arch::parent(be.man().cfg.n_layers);
     let cfg = GkdCfg { steps, lr, spec: LossSpec::lm_only(), warmup_frac: 0.05, log_every: 20 };
-    run(reg, store, &arch, batcher, val_batches, &cfg)
+    run(be, store, &arch, batcher, val_batches, &cfg)
 }

@@ -6,31 +6,58 @@
 //!   exp <name>  regenerate a paper table/figure (table1..table17, fig4..fig8, all)
 //!   serve       serving-engine demo over the chosen child
 //!   measure     print measured per-block costs on this machine
-//!   info        artifact/search-space summary
+//!   info        backend/search-space summary
 //!
-//! Common flags: --config tiny|small|base  --run-dir DIR  --scale F
-//!               --speedup X  --seed N
+//! Common flags: --backend ref|pjrt  --config tiny|small  --run-dir DIR
+//!               --scale F  --speedup X  --seed N
+//!
+//! The default `ref` backend is hermetic (in-memory synthetic manifest,
+//! pure-Rust execution); `--backend pjrt` needs the `pjrt` cargo feature,
+//! the external `xla` crate, and `make artifacts`.
 
 use std::path::PathBuf;
 
 use anyhow::{anyhow, Result};
 
 use puzzle::arch::{Arch, SearchSpace};
+use puzzle::config::TinyManifest;
 use puzzle::data::corpus::sample_sequence;
 use puzzle::experiments::{self, ExpCtx};
 use puzzle::perf::{CostTable, Scenario};
 use puzzle::pipeline::{Pipeline, StageCfg};
-use puzzle::runtime::Registry;
+use puzzle::runtime::{Backend, RefBackend};
 use puzzle::scoring::Metric;
 use puzzle::serving::Engine;
 use puzzle::train::LossSpec;
 use puzzle::util::{Args, Rng};
 use puzzle::{eval::Evaluator, info};
 
-fn open_registry(args: &Args) -> Result<Registry> {
+fn open_backend(args: &Args) -> Result<Box<dyn Backend>> {
     let config = args.str("config", "tiny");
-    let dir = PathBuf::from(args.str("artifacts", "artifacts")).join(&config);
-    Registry::open(&dir)
+    let backend = args.str("backend", "ref");
+    match backend.as_str() {
+        "ref" => {
+            let man = match config.as_str() {
+                "tiny" => TinyManifest::synthetic(),
+                "small" => TinyManifest::synthetic_small(),
+                other => return Err(anyhow!("ref backend has no synthetic config '{other}' (tiny|small)")),
+            };
+            Ok(Box::new(RefBackend::new(man)))
+        }
+        "pjrt" => open_pjrt(args, &config),
+        other => Err(anyhow!("unknown backend '{other}' (ref|pjrt)")),
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn open_pjrt(args: &Args, config: &str) -> Result<Box<dyn Backend>> {
+    let dir = PathBuf::from(args.str("artifacts", "artifacts")).join(config);
+    Ok(Box::new(puzzle::runtime::XlaBackend::open(&dir)?))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn open_pjrt(_args: &Args, _config: &str) -> Result<Box<dyn Backend>> {
+    Err(anyhow!("built without the `pjrt` feature; rebuild with --features pjrt"))
 }
 
 fn stage_cfg(args: &Args) -> StageCfg {
@@ -49,16 +76,17 @@ fn stage_cfg(args: &Args) -> StageCfg {
 }
 
 fn cmd_pipeline(args: &Args) -> Result<()> {
-    let reg = open_registry(args)?;
-    let run_dir = PathBuf::from(args.str("run-dir", &format!("runs/{}", reg.man.cfg.name)));
-    let pipe = Pipeline::new(&reg, &run_dir, stage_cfg(args))?;
-    let space = SearchSpace::full(reg.man.cfg.n_heads as u32);
+    let be = open_backend(args)?;
+    let be: &dyn Backend = &*be;
+    let run_dir = PathBuf::from(args.str("run-dir", &format!("runs/{}", be.man().cfg.name)));
+    let pipe = Pipeline::new(be, &run_dir, stage_cfg(args))?;
+    let space = SearchSpace::full(be.man().cfg.n_heads as u32);
     info!(
         "search space: {} attn x {} ffn = {} per layer; |space| ~ 10^{:.1}",
         space.attn.len(),
         space.ffn.len(),
         space.per_layer_combinations(),
-        space.log10_size(reg.man.cfg.n_layers)
+        space.log10_size(be.man().cfg.n_layers)
     );
     let library = pipe.ensure_library(&space)?;
     let scores = pipe.ensure_scores(&space, Metric::Kl)?;
@@ -71,10 +99,10 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     let rep = pipe.gkd_child(&mut child, &sol.arch, LossSpec::gkd_best(), pipe.cfg.gkd_steps)?;
     child.save(&run_dir.join("child_cli.pzw"))?;
     // final eval
-    let parent_arch = Arch::parent(reg.man.cfg.n_layers);
-    let pe = Evaluator::new(&reg, &library, &parent_arch)?
+    let parent_arch = Arch::parent(be.man().cfg.n_layers);
+    let pe = Evaluator::new(be, &library, &parent_arch)?
         .run_suite(&pipe.world, pipe.cfg.eval_questions, 7)?;
-    let ce = Evaluator::new(&reg, &child, &sol.arch)?
+    let ce = Evaluator::new(be, &child, &sol.arch)?
         .run_suite(&pipe.world, pipe.cfg.eval_questions, 7)?;
     println!("parent: {}", pe.row());
     println!("child : {}", ce.row());
@@ -93,30 +121,32 @@ fn cmd_exp(args: &Args) -> Result<()> {
         .get(1)
         .ok_or_else(|| anyhow!("usage: puzzle exp <table1..table17|fig4..fig8|all>"))?
         .clone();
-    let reg = open_registry(args)?;
-    let run_dir = PathBuf::from(args.str("run-dir", &format!("runs/{}", reg.man.cfg.name)));
-    let pipe = Pipeline::new(&reg, &run_dir, stage_cfg(args))?;
+    let be = open_backend(args)?;
+    let be: &dyn Backend = &*be;
+    let run_dir = PathBuf::from(args.str("run-dir", &format!("runs/{}", be.man().cfg.name)));
+    let pipe = Pipeline::new(be, &run_dir, stage_cfg(args))?;
     let ctx = ExpCtx::new(pipe);
     experiments::run(&ctx, &name)
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let reg = open_registry(args)?;
-    let run_dir = PathBuf::from(args.str("run-dir", &format!("runs/{}", reg.man.cfg.name)));
-    let pipe = Pipeline::new(&reg, &run_dir, stage_cfg(args))?;
-    let space = SearchSpace::full(reg.man.cfg.n_heads as u32);
+    let be = open_backend(args)?;
+    let be: &dyn Backend = &*be;
+    let run_dir = PathBuf::from(args.str("run-dir", &format!("runs/{}", be.man().cfg.name)));
+    let pipe = Pipeline::new(be, &run_dir, stage_cfg(args))?;
+    let space = SearchSpace::full(be.man().cfg.n_heads as u32);
     let library = pipe.ensure_library(&space)?;
     let scores = pipe.ensure_scores(&space, Metric::Kl)?;
     let ct = pipe.default_cost_table();
     let sol = pipe.search_speedup(&space, &scores, &ct, args.f64("speedup", 1.8))?;
-    let mut eng = Engine::new(&reg, &library, &sol.arch, 64 << 20)?;
+    let mut eng = Engine::new(be, &library, &sol.arch, 64 << 20)?;
     let n_req = args.usize("requests", 16);
     let mut rng = Rng::new(1);
-    let c = &reg.man.cfg;
+    let c = &be.man().cfg;
     for _ in 0..n_req {
         let plen = rng.range(4, c.s_prefill.min(32));
         let prompt = sample_sequence(&pipe.world, &pipe.mix, plen, &mut rng);
-        eng.submit(prompt, args.usize("max-new", 24));
+        eng.submit(prompt, args.usize("max-new", 24))?;
     }
     let responses = eng.run_to_completion()?;
     println!("served {} requests | {}", responses.len(), eng.metrics.summary());
@@ -124,11 +154,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 fn cmd_measure(args: &Args) -> Result<()> {
-    let reg = open_registry(args)?;
-    let c = &reg.man.cfg;
+    let be = open_backend(args)?;
+    let be: &dyn Backend = &*be;
+    let c = &be.man().cfg;
     let sc = Scenario { prefill: c.s_prefill, decode: c.s_prefill, batch: c.b_decode };
-    let ct = CostTable::measured(&reg, &sc, args.usize("reps", 5))?;
-    println!("measured per-variant scenario costs on this machine ({}):", sc.name());
+    let ct = CostTable::measured(be, &sc, args.usize("reps", 5))?;
+    println!(
+        "measured per-variant scenario costs on this machine ({} backend, {}):",
+        be.name(),
+        sc.name()
+    );
     println!("{:<12} {:>12} {:>12} {:>14}", "attn", "secs", "params", "kv bytes/seq");
     for (k, (s, p, kv)) in &ct.attn {
         println!("{:<12} {:>12.5} {:>12.0} {:>14.0}", k, s, p, kv);
@@ -141,11 +176,11 @@ fn cmd_measure(args: &Args) -> Result<()> {
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
-    let reg = open_registry(args)?;
-    let c = &reg.man.cfg;
+    let be = open_backend(args)?;
+    let c = &be.man().cfg;
     let space = SearchSpace::full(c.n_heads as u32);
-    println!("config {} | d {} L {} heads {} i {} v {}", c.name, c.d, c.n_layers, c.n_heads, c.i, c.v);
-    println!("executables: {}", reg.man.execs.len());
+    println!("backend {} | config {} | d {} L {} heads {} i {} v {}", be.name(), c.name, c.d, c.n_layers, c.n_heads, c.i, c.v);
+    println!("executables: {}", be.man().execs.len());
     println!(
         "search space: {}x{}={} per layer; 10^{:.1} total",
         space.attn.len(),
@@ -167,7 +202,7 @@ fn main() -> Result<()> {
         Some("info") => cmd_info(&args),
         _ => {
             eprintln!(
-                "usage: puzzle <pipeline|exp|serve|measure|info> [--config tiny|small|base] [--run-dir DIR] [--scale F] [--speedup X]"
+                "usage: puzzle <pipeline|exp|serve|measure|info> [--backend ref|pjrt] [--config tiny|small] [--run-dir DIR] [--scale F] [--speedup X]"
             );
             Ok(())
         }

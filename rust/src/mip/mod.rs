@@ -289,9 +289,8 @@ mod tests {
     use super::*;
     use crate::perf::{HwProfile, Scenario};
 
-    fn setup() -> Option<(SearchSpace, ScoreTable, CostTable, usize)> {
-        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
-        let man = crate::config::Manifest::load(&dir).ok()?;
+    fn setup() -> (SearchSpace, ScoreTable, CostTable, usize) {
+        let man = crate::config::TinyManifest::synthetic();
         let space = SearchSpace::full(man.cfg.n_heads as u32);
         let n_layers = man.cfg.n_layers;
         // synthetic scores: cheaper variants "hurt more", deeper layers hurt more
@@ -318,12 +317,12 @@ mod tests {
         let hw = HwProfile::h100_fp8();
         let sc = Scenario { prefill: 128, decode: 128, batch: 8 };
         let ct = CostTable::modeled(&man, &hw, &sc);
-        Some((space, scores, ct, n_layers))
+        (space, scores, ct, n_layers)
     }
 
     #[test]
     fn mip_meets_constraints_and_beats_greedy() {
-        let Some((space, scores, ct, n_layers)) = setup() else { return };
+        let (space, scores, ct, n_layers) = setup();
         let parent = Arch::parent(n_layers);
         let parent_tp = ct.arch_throughput(&parent);
         let cons = Constraints {
@@ -349,7 +348,7 @@ mod tests {
 
     #[test]
     fn diversity_constraint_produces_different_archs() {
-        let Some((space, scores, ct, n_layers)) = setup() else { return };
+        let (space, scores, ct, n_layers) = setup();
         let parent_tp = ct.arch_throughput(&Arch::parent(n_layers));
         let cons = Constraints { throughput_min: Some(parent_tp * 1.5), ..Default::default() };
         let s1 = search_mip(&space, &scores, &ct, &cons, n_layers, &[], 1.0).unwrap();
@@ -362,7 +361,7 @@ mod tests {
 
     #[test]
     fn memory_constraint_prefers_fewer_kv_heads() {
-        let Some((space, scores, ct, n_layers)) = setup() else { return };
+        let (space, scores, ct, n_layers) = setup();
         // memory cap at ~40% of parent's footprint
         let parent_mem = ct.arch_memory(&Arch::parent(n_layers));
         let cons = Constraints { memory_max_bytes: Some(parent_mem * 0.4), ..Default::default() };
@@ -378,7 +377,7 @@ mod tests {
 
     #[test]
     fn random_baseline_feasible_but_worse() {
-        let Some((space, scores, ct, n_layers)) = setup() else { return };
+        let (space, scores, ct, n_layers) = setup();
         let parent_tp = ct.arch_throughput(&Arch::parent(n_layers));
         let cons = Constraints { throughput_min: Some(parent_tp * 1.5), ..Default::default() };
         let mip = search_mip(&space, &scores, &ct, &cons, n_layers, &[], 1.0).unwrap();
@@ -390,7 +389,7 @@ mod tests {
 
     #[test]
     fn param_max_ignores_scores() {
-        let Some((space, scores, ct, n_layers)) = setup() else { return };
+        let (space, scores, ct, n_layers) = setup();
         let parent_tp = ct.arch_throughput(&Arch::parent(n_layers));
         let cons = Constraints { throughput_min: Some(parent_tp * 1.8), ..Default::default() };
         let pm = search_param_max(&space, &scores, &ct, &cons, n_layers).unwrap();
@@ -398,5 +397,61 @@ mod tests {
         assert!(pm.cost >= mip.cost);
         // uniform: all layers pick the same combo
         assert!(pm.arch.layers.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    /// Exhaustively enumerate every architecture of a 3-layer x 3-variant
+    /// space and check branch-and-bound returns exactly the brute-force
+    /// optimum under a memory constraint.
+    #[test]
+    fn bnb_equals_brute_force_on_small_space() {
+        let (_, scores, ct, _) = setup();
+        let n_layers = 3;
+        // 3 combos per layer: parent, linear-attention, and all-noop
+        let space = SearchSpace::reduced(
+            vec![AttnChoice::Gqa { divisor: 1 }, AttnChoice::Linear, AttnChoice::NoOp],
+            vec![FfnChoice::Ratio(0)],
+        );
+        let combos: Vec<(AttnChoice, FfnChoice)> = space
+            .attn
+            .iter()
+            .flat_map(|a| space.ffn.iter().map(move |f| (*a, *f)))
+            .collect();
+        assert_eq!(combos.len(), 3);
+
+        // memory cap: forces at least one non-parent layer but keeps the
+        // problem feasible (all-noop always fits)
+        let parent_mem = ct.arch_memory(&Arch::parent(n_layers));
+        for frac in [0.5, 0.75, 0.95] {
+            let cons = Constraints {
+                memory_max_bytes: Some(parent_mem * frac),
+                ..Default::default()
+            };
+            // brute force over all 3^3 = 27 architectures
+            let mut best: Option<(f64, Arch)> = None;
+            for i in 0..combos.len().pow(n_layers as u32) {
+                let mut idx = i;
+                let mut layers = Vec::with_capacity(n_layers);
+                for _ in 0..n_layers {
+                    layers.push(combos[idx % combos.len()]);
+                    idx /= combos.len();
+                }
+                let arch = Arch { layers };
+                if ct.arch_memory(&arch) > parent_mem * frac {
+                    continue;
+                }
+                let cost = scores.arch_cost(&arch);
+                if best.as_ref().map(|(b, _)| cost < *b).unwrap_or(true) {
+                    best = Some((cost, arch));
+                }
+            }
+            let (bf_cost, _) = best.expect("brute force must find a feasible arch");
+            let mip = search_mip(&space, &scores, &ct, &cons, n_layers, &[], 1.0).unwrap();
+            assert!(mip.memory <= parent_mem * frac * 1.001, "mip violates memory cap");
+            assert!(
+                (mip.cost - bf_cost).abs() < 1e-6,
+                "frac {frac}: bnb cost {} != brute-force optimum {bf_cost}",
+                mip.cost
+            );
+        }
     }
 }

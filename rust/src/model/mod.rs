@@ -1,24 +1,25 @@
 //! Child-model assembly: turn (Arch, Store) into chained executable calls.
 //!
 //! This is the heart of the "puzzle pieces" runtime contract: a model is a
-//! per-layer list of (executable prefix, weight literals); heterogeneous
+//! per-layer list of (executable prefix, weight values); heterogeneous
 //! architectures are assembled by the coordinator with zero recompilation
-//! because every block executable takes its weights as parameters.
+//! because every block executable takes its weights as parameters. The
+//! whole module is generic over the execution `Backend` — it never touches
+//! PJRT or any other concrete runtime.
 
 use anyhow::{anyhow, Result};
-use xla::Literal;
 
 use crate::arch::{Arch, AttnChoice, FfnChoice};
 use crate::config::Manifest;
-use crate::runtime::{literal::tensor_to_lit, lit_i32, lit_to_tensor, Registry};
+use crate::runtime::{tensor_to_val, val_i32, val_to_tensor, Backend, Value};
 use crate::tensor::Tensor;
 use crate::weights::Store;
 
-/// One subblock ready to execute: exec name prefix + weight literals.
-pub struct BlockLits {
+/// One subblock ready to execute: exec name prefix + weight values.
+pub struct BlockWeights {
     /// e.g. "attn_gqa_r2" — exec names are `{prefix}_{mode}`. None = NoOp.
     pub prefix: Option<String>,
-    pub lits: Vec<Literal>,
+    pub vals: Vec<Value>,
     pub variant: String,
     pub kv_heads: usize,
 }
@@ -26,10 +27,10 @@ pub struct BlockLits {
 /// A fully assembled child (or parent) model.
 pub struct CompiledModel {
     pub arch: Arch,
-    pub attn: Vec<BlockLits>,
-    pub ffn: Vec<BlockLits>,
-    pub embed: Literal,
-    pub final_norm: Literal,
+    pub attn: Vec<BlockWeights>,
+    pub ffn: Vec<BlockWeights>,
+    pub embed: Value,
+    pub final_norm: Value,
 }
 
 /// Per-layer activations recorded during a forward pass; the inputs each
@@ -37,11 +38,11 @@ pub struct CompiledModel {
 /// block internals happens inside the vjp executables).
 pub struct Trace {
     /// input to layer i's attention subblock, i = 0..L (x_0 = embeddings)
-    pub attn_in: Vec<Literal>,
+    pub attn_in: Vec<Value>,
     /// input to layer i's FFN subblock (= attention subblock output)
-    pub ffn_in: Vec<Literal>,
+    pub ffn_in: Vec<Value>,
     /// final hidden state (input to the LM head)
-    pub hidden: Literal,
+    pub hidden: Value,
     /// logits as a host tensor [B, S, V]
     pub logits: Tensor,
 }
@@ -61,8 +62,8 @@ impl CompiledModel {
             arch: arch.clone(),
             attn,
             ffn,
-            embed: tensor_to_lit(store.get("embed")?)?,
-            final_norm: tensor_to_lit(store.get("final_norm")?)?,
+            embed: tensor_to_val(store.get("embed")?)?,
+            final_norm: tensor_to_val(store.get("final_norm")?)?,
         })
     }
 
@@ -73,9 +74,9 @@ impl CompiledModel {
         kind: &str,
         prefix: Option<String>,
         variant: &str,
-    ) -> Result<BlockLits> {
+    ) -> Result<BlockWeights> {
         let Some(prefix) = prefix else {
-            return Ok(BlockLits { prefix: None, lits: vec![], variant: variant.into(), kv_heads: 0 });
+            return Ok(BlockWeights { prefix: None, vals: vec![], variant: variant.into(), kv_heads: 0 });
         };
         let layout = if kind == "attn" {
             man.attn_variants.get(variant)
@@ -84,30 +85,30 @@ impl CompiledModel {
         }
         .ok_or_else(|| anyhow!("variant {variant} not in manifest"))?;
         let ws = store.block(layer, kind, variant, layout)?;
-        let lits = ws.iter().map(|t| tensor_to_lit(t)).collect::<Result<Vec<_>>>()?;
-        Ok(BlockLits { prefix: Some(prefix), lits, variant: variant.into(), kv_heads: layout.kv_heads })
+        let vals = ws.iter().map(|t| tensor_to_val(t)).collect::<Result<Vec<_>>>()?;
+        Ok(BlockWeights { prefix: Some(prefix), vals, variant: variant.into(), kv_heads: layout.kv_heads })
     }
 
     /// Forward pass in a sequence-parallel mode ("train", "prefill",
     /// "long"), recording the trace needed for the backward chain and
     /// scoring. `tokens` is [b, s] row-major.
-    pub fn forward(&self, reg: &Registry, mode: &str, tokens: &[i32], b: usize, s: usize) -> Result<Trace> {
-        let tok = lit_i32(&[b, s], tokens)?;
-        let mut x = reg
+    pub fn forward(&self, be: &dyn Backend, mode: &str, tokens: &[i32], b: usize, s: usize) -> Result<Trace> {
+        let tok = val_i32(&[b, s], tokens)?;
+        let mut x = be
             .run(&format!("embed_{mode}"), &[&tok, &self.embed])?
             .remove(0);
         let mut attn_in = Vec::with_capacity(self.attn.len());
         let mut ffn_in = Vec::with_capacity(self.ffn.len());
         for l in 0..self.attn.len() {
             attn_in.push(x.clone());
-            x = run_subblock(reg, &self.attn[l], mode, x)?;
+            x = run_subblock(be, &self.attn[l], mode, x)?;
             ffn_in.push(x.clone());
-            x = run_subblock(reg, &self.ffn[l], mode, x)?;
+            x = run_subblock(be, &self.ffn[l], mode, x)?;
         }
-        let logits_lit = reg
+        let logits_val = be
             .run(&format!("head_{mode}"), &[&x, &self.final_norm, &self.embed])?
             .remove(0);
-        let logits = lit_to_tensor(&logits_lit)?;
+        let logits = val_to_tensor(&logits_val)?;
         Ok(Trace { attn_in, ffn_in, hidden: x, logits })
     }
 
@@ -128,32 +129,32 @@ impl CompiledModel {
 
 /// Execute one subblock in `mode` ("train_fwd" is spelled "train" here and
 /// mapped to the train_fwd executable); NoOp passes the activation through.
-pub fn run_subblock(reg: &Registry, blk: &BlockLits, mode: &str, x: Literal) -> Result<Literal> {
+pub fn run_subblock(be: &dyn Backend, blk: &BlockWeights, mode: &str, x: Value) -> Result<Value> {
     let Some(prefix) = &blk.prefix else { return Ok(x) };
     let exec = match mode {
         "train" => format!("{prefix}_train_fwd"),
         m => format!("{prefix}_{m}"),
     };
-    let mut inputs: Vec<&Literal> = vec![&x];
-    inputs.extend(blk.lits.iter());
+    let mut inputs: Vec<&Value> = vec![&x];
+    inputs.extend(blk.vals.iter());
     // gqa prefill returns (y, k, v) — callers on the scoring/train path
     // only need y; the serving engine uses its own prefill loop.
-    Ok(reg.run(&exec, &inputs)?.remove(0))
+    Ok(be.run(&exec, &inputs)?.remove(0))
 }
 
 /// Backward through one subblock: (dx, dweights). NoOp passes dy through.
 pub fn vjp_subblock(
-    reg: &Registry,
-    blk: &BlockLits,
-    x: &Literal,
-    dy: Literal,
-) -> Result<(Literal, Vec<Literal>)> {
+    be: &dyn Backend,
+    blk: &BlockWeights,
+    x: &Value,
+    dy: Value,
+) -> Result<(Value, Vec<Value>)> {
     let Some(prefix) = &blk.prefix else { return Ok((dy, vec![])) };
     let exec = format!("{prefix}_train_vjp");
-    let mut inputs: Vec<&Literal> = vec![x];
-    inputs.extend(blk.lits.iter());
+    let mut inputs: Vec<&Value> = vec![x];
+    inputs.extend(blk.vals.iter());
     inputs.push(&dy);
-    let mut out = reg.run(&exec, &inputs)?;
+    let mut out = be.run(&exec, &inputs)?;
     let dx = out.remove(0);
     Ok((dx, out))
 }

@@ -7,7 +7,7 @@ use anyhow::Result;
 
 use crate::arch::{Arch, AttnChoice, FfnChoice, SearchSpace};
 use crate::config::Manifest;
-use crate::runtime::{lit_f32, lit_i32, Registry};
+use crate::runtime::{val_f32, val_i32, Backend, Value};
 use crate::util::Timer;
 
 use super::hw::HwProfile;
@@ -166,41 +166,41 @@ impl CostTable {
 
     /// Build from *measured* executable wall-clock on this machine (the
     /// paper's preferred source). Each variant's prefill and decode
-    /// executables are timed with dummy inputs; the scenario time uses the
-    /// engine's compiled shapes.
-    pub fn measured(reg: &Registry, sc: &Scenario, reps: usize) -> Result<CostTable> {
-        let man = &reg.man;
+    /// executables are timed with dummy inputs on whatever backend is in
+    /// use; the scenario time uses the engine's compiled shapes.
+    pub fn measured(be: &dyn Backend, sc: &Scenario, reps: usize) -> Result<CostTable> {
+        let man = be.man();
         let cfg = &man.cfg;
         let hw = HwProfile::cpu();
         let mut attn = BTreeMap::new();
         let d = cfg.d;
-        let x_pre = lit_f32(&[1, cfg.s_prefill, d], &vec![0.01; cfg.s_prefill * d])?;
-        let x_dec = lit_f32(&[cfg.b_decode, 1, d], &vec![0.01; cfg.b_decode * d])?;
+        let x_pre = val_f32(&[1, cfg.s_prefill, d], &vec![0.01; cfg.s_prefill * d])?;
+        let x_dec = val_f32(&[cfg.b_decode, 1, d], &vec![0.01; cfg.b_decode * d])?;
         for (name, layout) in &man.attn_variants {
-            let ws: Vec<xla::Literal> = layout
+            let ws: Vec<Value> = layout
                 .weights
                 .iter()
-                .map(|(_, s)| lit_f32(s, &vec![0.01; s.iter().product()]))
+                .map(|(_, s)| val_f32(s, &vec![0.01; s.iter().product()]))
                 .collect::<Result<_>>()?;
             // prefill
-            let mut inputs: Vec<&xla::Literal> = vec![&x_pre];
+            let mut inputs: Vec<&Value> = vec![&x_pre];
             inputs.extend(ws.iter());
-            let t_pre = time_exec(reg, &format!("attn_{name}_prefill"), &inputs, reps)?;
+            let t_pre = time_exec(be, &format!("attn_{name}_prefill"), &inputs, reps)?;
             // decode
             let t_dec = if name == "linear" {
-                let mut di: Vec<&xla::Literal> = vec![&x_dec];
+                let mut di: Vec<&Value> = vec![&x_dec];
                 di.extend(ws.iter());
-                time_exec(reg, &format!("attn_{name}_decode"), &di, reps)?
+                time_exec(be, &format!("attn_{name}_decode"), &di, reps)?
             } else {
                 let kv = layout.kv_heads;
-                let cache = lit_f32(
+                let cache = val_f32(
                     &[cfg.b_decode, cfg.s_max, kv, cfg.head_dim],
                     &vec![0.0; cfg.b_decode * cfg.s_max * kv * cfg.head_dim],
                 )?;
-                let pos = lit_i32(&[cfg.b_decode], &vec![1; cfg.b_decode])?;
-                let mut di: Vec<&xla::Literal> = vec![&x_dec, &cache, &cache, &pos];
+                let pos = val_i32(&[cfg.b_decode], &vec![1; cfg.b_decode])?;
+                let mut di: Vec<&Value> = vec![&x_dec, &cache, &cache, &pos];
                 di.extend(ws.iter());
-                time_exec(reg, &format!("attn_{name}_decode"), &di, reps)?
+                time_exec(be, &format!("attn_{name}_decode"), &di, reps)?
             };
             let secs = sc.batch as f64 * t_pre + sc.decode as f64 * t_dec;
             let kv_bytes = 2.0 * layout.kv_heads as f64
@@ -213,17 +213,17 @@ impl CostTable {
 
         let mut ffn = BTreeMap::new();
         for (name, layout) in &man.ffn_variants {
-            let ws: Vec<xla::Literal> = layout
+            let ws: Vec<Value> = layout
                 .weights
                 .iter()
-                .map(|(_, s)| lit_f32(s, &vec![0.01; s.iter().product()]))
+                .map(|(_, s)| val_f32(s, &vec![0.01; s.iter().product()]))
                 .collect::<Result<_>>()?;
-            let mut pi: Vec<&xla::Literal> = vec![&x_pre];
+            let mut pi: Vec<&Value> = vec![&x_pre];
             pi.extend(ws.iter());
-            let t_pre = time_exec(reg, &format!("ffn_{name}_prefill"), &pi, reps)?;
-            let mut di: Vec<&xla::Literal> = vec![&x_dec];
+            let t_pre = time_exec(be, &format!("ffn_{name}_prefill"), &pi, reps)?;
+            let mut di: Vec<&Value> = vec![&x_dec];
             di.extend(ws.iter());
-            let t_dec = time_exec(reg, &format!("ffn_{name}_decode"), &di, reps)?;
+            let t_dec = time_exec(be, &format!("ffn_{name}_decode"), &di, reps)?;
             let secs = sc.batch as f64 * t_pre + sc.decode as f64 * t_dec;
             ffn.insert(name.clone(), (secs, layout.param_count() as f64, 0.0));
         }
@@ -282,11 +282,11 @@ impl CostTable {
     }
 }
 
-fn time_exec(reg: &Registry, name: &str, inputs: &[&xla::Literal], reps: usize) -> Result<f64> {
-    reg.run(name, inputs)?; // warmup + compile
+fn time_exec(be: &dyn Backend, name: &str, inputs: &[&Value], reps: usize) -> Result<f64> {
+    be.run(name, inputs)?; // warmup (+ compile on AOT backends)
     let t = Timer::start();
     for _ in 0..reps {
-        reg.run(name, inputs)?;
+        be.run(name, inputs)?;
     }
     Ok(t.secs() / reps as f64)
 }
@@ -316,16 +316,16 @@ pub fn arch_cost(man: &Manifest, arch: &Arch, hw: &HwProfile, sc: &Scenario) -> 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::Manifest;
+    use crate::config::{Manifest, TinyManifest};
+    use crate::runtime::RefBackend;
 
-    fn manifest() -> Option<Manifest> {
-        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
-        Manifest::load(&dir).ok()
+    fn manifest() -> Manifest {
+        TinyManifest::synthetic()
     }
 
     #[test]
     fn cheaper_variants_cost_less() {
-        let Some(man) = manifest() else { return };
+        let man = manifest();
         let hw = HwProfile::h100_fp8();
         let sc = Scenario { prefill: 128, decode: 128, batch: 8 };
         let ct = CostTable::modeled(&man, &hw, &sc);
@@ -341,7 +341,7 @@ mod tests {
 
     #[test]
     fn parent_arch_throughput_increases_with_noop_layers() {
-        let Some(man) = manifest() else { return };
+        let man = manifest();
         let hw = HwProfile::h100_fp8();
         let sc = Scenario { prefill: 128, decode: 1024, batch: 16 };
         let parent = Arch::parent(man.cfg.n_layers);
@@ -354,7 +354,7 @@ mod tests {
 
     #[test]
     fn batch_amortizes_decode_weight_reads() {
-        let Some(man) = manifest() else { return };
+        let man = manifest();
         let (ac, _) = block_costs(&man);
         let hw = HwProfile::h100_fp8();
         let c = &ac["gqa_r1"];
@@ -362,5 +362,21 @@ mod tests {
         let t64 = c.decode_step_time(&hw, 64, 64);
         // 64x the tokens in far less than 64x the time (paper §4.1)
         assert!(t64 < 32.0 * t1);
+    }
+
+    #[test]
+    fn measured_costs_on_ref_backend() {
+        let be = RefBackend::new(manifest());
+        let c = be.man().cfg.clone();
+        let sc = Scenario { prefill: c.s_prefill, decode: 8, batch: c.b_decode };
+        let ct = CostTable::measured(&be, &sc, 1).unwrap();
+        // every variant (plus noop) has a measured entry
+        assert!(ct.attn.contains_key("gqa_r1") && ct.attn.contains_key("noop"));
+        assert!(ct.ffn.contains_key("r100") && ct.ffn.contains_key("noop"));
+        assert!(ct.attn["gqa_r1"].0 > 0.0, "parent attention must cost > 0");
+        assert_eq!(ct.attn["noop"].0, 0.0);
+        // kv bytes scale with the variant's head count
+        assert!(ct.attn["gqa_r1"].2 > ct.attn["gqa_r4"].2);
+        assert_eq!(ct.attn["linear"].2, 0.0);
     }
 }

@@ -18,7 +18,7 @@ use crate::data::{Batcher, CorpusMix, World};
 use crate::gkd::{self, GkdCfg};
 use crate::mip::{self, Constraints, Solution};
 use crate::perf::{CostTable, HwProfile, Scenario};
-use crate::runtime::Registry;
+use crate::runtime::Backend;
 use crate::scoring::{self, Metric, ScoreTable};
 use crate::train::LossSpec;
 use crate::util::{Json, Rng};
@@ -66,7 +66,7 @@ impl StageCfg {
 }
 
 pub struct Pipeline<'a> {
-    pub reg: &'a Registry,
+    pub be: &'a dyn Backend,
     pub run_dir: PathBuf,
     pub world: World,
     pub mix: CorpusMix,
@@ -74,11 +74,11 @@ pub struct Pipeline<'a> {
 }
 
 impl<'a> Pipeline<'a> {
-    pub fn new(reg: &'a Registry, run_dir: &Path, cfg: StageCfg) -> Result<Pipeline<'a>> {
+    pub fn new(be: &'a dyn Backend, run_dir: &Path, cfg: StageCfg) -> Result<Pipeline<'a>> {
         std::fs::create_dir_all(run_dir)?;
-        let world = World::new(cfg.seed, reg.man.cfg.v as u32);
+        let world = World::new(cfg.seed, be.man().cfg.v as u32);
         Ok(Pipeline {
-            reg,
+            be,
             run_dir: run_dir.to_path_buf(),
             world,
             mix: CorpusMix::distillation_mix(),
@@ -87,7 +87,7 @@ impl<'a> Pipeline<'a> {
     }
 
     pub fn batcher(&self, seed_tag: u64) -> Batcher {
-        let c = &self.reg.man.cfg;
+        let c = &self.be.man().cfg;
         Batcher::new(self.world.clone(), self.mix.clone(), c.b_train, c.s_train, self.cfg.seed ^ seed_tag)
     }
 
@@ -105,11 +105,11 @@ impl<'a> Pipeline<'a> {
         }
         info!("parent: pretraining {} steps", self.cfg.parent_steps);
         let mut rng = Rng::new(self.cfg.seed);
-        let mut store = init_parent(&self.reg.man, &mut rng);
+        let mut store = init_parent(self.be.man(), &mut rng);
         let mut batcher = self.batcher(0x9a5e);
         let val = self.val_batches(2);
         let report = gkd::pretrain_parent(
-            self.reg,
+            self.be,
             &mut store,
             &mut batcher,
             &val,
@@ -143,7 +143,7 @@ impl<'a> Pipeline<'a> {
         let mut store = self.ensure_parent()?;
         let mut batcher = self.batcher(0xb1d);
         let report =
-            bld::run_decoupled(self.reg, &mut store, space, &mut batcher, self.cfg.bld_steps, self.cfg.bld_lr)?;
+            bld::run_decoupled(self.be, &mut store, space, &mut batcher, self.cfg.bld_steps, self.cfg.bld_lr)?;
         let mean_nmse: f64 =
             report.final_loss.values().sum::<f64>() / report.final_loss.len().max(1) as f64;
         info!(
@@ -168,7 +168,7 @@ impl<'a> Pipeline<'a> {
         }
         let store = self.ensure_library(space)?;
         let val = self.val_batches(self.cfg.score_batches);
-        let table = scoring::score_library(self.reg, &store, space, &val, metric)?;
+        let table = scoring::score_library(self.be, &store, space, &val, metric)?;
         std::fs::write(&path, table.to_json().to_pretty())?;
         Ok(table)
     }
@@ -181,7 +181,7 @@ impl<'a> Pipeline<'a> {
         ct: &CostTable,
         speedup: f64,
     ) -> Result<Solution> {
-        let n_layers = self.reg.man.cfg.n_layers;
+        let n_layers = self.be.man().cfg.n_layers;
         let parent_tp = ct.arch_throughput(&Arch::parent(n_layers));
         let cons = Constraints { throughput_min: Some(parent_tp * speedup), ..Default::default() };
         let sol = mip::search_mip(space, scores, ct, &cons, n_layers, &[], 1.0)?;
@@ -197,15 +197,15 @@ impl<'a> Pipeline<'a> {
         let mut batcher = self.batcher(0x6cd);
         let val = self.val_batches(2);
         let cfg = GkdCfg { steps, lr: self.cfg.gkd_lr, spec, warmup_frac: 0.1, log_every: 20 };
-        gkd::run(self.reg, store, arch, &mut batcher, &val, &cfg)
+        gkd::run(self.be, store, arch, &mut batcher, &val, &cfg)
     }
 
     /// Default hardware + scenario for searches on this config.
     pub fn default_cost_table(&self) -> CostTable {
         let hw = HwProfile::h100_fp8();
-        let c = &self.reg.man.cfg;
+        let c = &self.be.man().cfg;
         let sc = Scenario { prefill: c.s_prefill, decode: c.s_prefill, batch: 64 };
-        CostTable::modeled(&self.reg.man, &hw, &sc)
+        CostTable::modeled(self.be.man(), &hw, &sc)
     }
 
     pub fn save_arch(&self, tag: &str, sol: &Solution) -> Result<()> {

@@ -1,0 +1,66 @@
+//! The pluggable execution backend: everything above this trait (model
+//! assembly, serving engine, BLD/GKD/train/scoring/eval drivers) speaks
+//! only `Backend` + `Value`; everything below it owns how the manifest's
+//! block executables actually run.
+//!
+//! Contract (shared by every implementation; see DESIGN.md for the full
+//! executable-name grammar and shape table):
+//!  * `run(name, inputs)` executes the manifest executable `name` with the
+//!    manifest-declared input signature and returns the decomposed tuple
+//!    outputs. Inputs are `(x, *weights)` for block forwards,
+//!    `(x, *weights, dy)` for vjps, `(x, k_cache, v_cache, pos, *weights)`
+//!    for cached GQA decode.
+//!  * GQA prefill returns `(y, k, v)` (roped K and V for the serving
+//!    cache); GQA decode returns `(y, k_cache', v_cache')`; vjps return
+//!    `(dx, *dweights)` in manifest weight order; everything else returns
+//!    a single output.
+//!  * Per-executable call counts and wall clock are tracked so the perf
+//!    pass and the measured-cost mode of the cost model (§4.1: "measure
+//!    directly on target hardware") work on any backend.
+
+use anyhow::{Context, Result};
+
+use crate::config::Manifest;
+
+use super::value::Value;
+
+#[derive(Debug, Clone, Default)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub total_secs: f64,
+    pub compile_secs: f64,
+}
+
+pub trait Backend {
+    /// Human-readable backend identifier ("ref", "pjrt", ...).
+    fn name(&self) -> &'static str;
+
+    /// The manifest this backend serves (model config, variant layouts,
+    /// executable signatures).
+    fn man(&self) -> &Manifest;
+
+    /// Execute by name; returns the decomposed tuple outputs.
+    fn run(&self, name: &str, inputs: &[&Value]) -> Result<Vec<Value>>;
+
+    /// Measured mean runtime per call for `name` (seconds); None if never
+    /// run. The "measured on target hardware" cost source.
+    fn measured_secs(&self, name: &str) -> Option<f64>;
+
+    /// Snapshot of all per-exec stats (perf reporting), sorted by total
+    /// time descending.
+    fn stats_snapshot(&self) -> Vec<(String, ExecStats)>;
+
+    /// Warm whatever per-executable caches exist (compilation for PJRT,
+    /// a no-op for the reference interpreter).
+    fn preload(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.run_warmup(n).with_context(|| format!("preloading {n}"))?;
+        }
+        Ok(())
+    }
+
+    /// Backend-specific warm step for one executable; default does nothing.
+    fn run_warmup(&self, _name: &str) -> Result<()> {
+        Ok(())
+    }
+}

@@ -1,9 +1,11 @@
-//! Literal <-> Tensor conversion helpers.
+//! Literal <-> Tensor / Value conversion helpers (PJRT boundary only).
 
 use anyhow::Result;
 use xla::Literal;
 
 use crate::tensor::Tensor;
+
+use super::value::Value;
 
 /// f32 literal with the given shape.
 pub fn lit_f32(shape: &[usize], data: &[f32]) -> Result<Literal> {
@@ -31,4 +33,18 @@ pub fn lit_to_tensor(l: &Literal) -> Result<Tensor> {
     let shape = l.array_shape()?;
     let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
     Ok(Tensor::from_vec(&dims, l.to_vec::<f32>()?))
+}
+
+/// Backend-neutral `Value` -> PJRT literal.
+pub fn val_to_lit(v: &Value) -> Result<Literal> {
+    match v {
+        Value::F32(t) => lit_f32(&t.shape, &t.data),
+        Value::I32 { shape, data } => lit_i32(shape, data),
+    }
+}
+
+/// PJRT literal -> `Value`. Every executable output in the manifest is
+/// f32, so no dtype sniffing is needed.
+pub fn lit_to_val(l: &Literal) -> Result<Value> {
+    Ok(Value::F32(lit_to_tensor(l)?))
 }

@@ -1,11 +1,35 @@
-//! PJRT runtime: load AOT artifacts (HLO text), compile once per
-//! executable, execute with Literal I/O, and chain block executables into
-//! full models. The `xla` crate's PJRT client is `Rc`-based, so the whole
-//! runtime is single-threaded by construction; the serving engine owns it
-//! on a dedicated engine thread.
+//! Pluggable execution runtime.
+//!
+//! The `Backend` trait abstracts executable lookup + execution over the
+//! manifest's block executables; everything above it (model assembly, the
+//! serving engine, the BLD/GKD/train/scoring/eval drivers) is
+//! backend-agnostic and speaks host-side `Value`s.
+//!
+//! Implementations:
+//!  * `RefBackend` (always built) — a hermetic pure-Rust interpreter of
+//!    the block contract; runs the whole pipeline with no artifacts, no
+//!    `xla` crate, and no python step.
+//!  * `XlaBackend` (`pjrt` feature) — the original PJRT path: AOT HLO-text
+//!    artifacts compiled once per executable. The `xla` crate's PJRT
+//!    client is `Rc`-based, so that backend is single-threaded by
+//!    construction; the serving engine owns it on a dedicated thread.
 
+pub mod backend;
+pub mod refbackend;
+pub mod value;
+
+#[cfg(feature = "pjrt")]
 pub mod literal;
+#[cfg(feature = "pjrt")]
 pub mod registry;
+#[cfg(feature = "pjrt")]
+pub mod xla_backend;
 
-pub use literal::{lit_f32, lit_i32, lit_to_tensor, lit_to_vec_f32};
+pub use backend::{Backend, ExecStats};
+pub use refbackend::RefBackend;
+pub use value::{tensor_to_val, val_f32, val_i32, val_to_tensor, val_to_vec_f32, Value};
+
+#[cfg(feature = "pjrt")]
 pub use registry::Registry;
+#[cfg(feature = "pjrt")]
+pub use xla_backend::XlaBackend;

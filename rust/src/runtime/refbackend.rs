@@ -1,0 +1,1022 @@
+//! `RefBackend`: a hermetic pure-Rust interpreter for the manifest's block
+//! executables. It implements the same executable contract the AOT/PJRT
+//! path compiles (pre-norm GQA/linear attention with RoPE and KV-cache
+//! I/O, SwiGLU/linear FFN, tied embed/head, and the hand-derived vjps)
+//! directly on the in-crate `tensor` module, so the entire pipeline —
+//! BLD, GKD, scoring, MIP inputs, serving — runs end-to-end with no
+//! `artifacts/` directory, no `xla` crate, and no python step.
+//!
+//! Numerics mirror `python/compile/model.py` + `kernels/ref.py` (the same
+//! oracles the Pallas kernels are tested against): rmsnorm with eps inside
+//! the rsqrt, rotary embedding over split halves, causal softmax
+//! attention with grouped KV heads, silu-gated FFN, residual adds.
+//! Gradients are checked against central finite differences in the tests
+//! below.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::{Manifest, TinyManifest, VariantLayout};
+use crate::tensor::Tensor;
+
+use super::backend::{Backend, ExecStats};
+use super::value::Value;
+
+pub struct RefBackend {
+    man: Manifest,
+    stats: RefCell<HashMap<String, ExecStats>>,
+}
+
+impl RefBackend {
+    pub fn new(man: Manifest) -> RefBackend {
+        debug_assert!(man.cfg.head_dim % 2 == 0, "RoPE needs an even head_dim");
+        RefBackend { man, stats: RefCell::new(HashMap::new()) }
+    }
+
+    /// The standard hermetic test backend: in-memory tiny manifest.
+    pub fn tiny() -> RefBackend {
+        RefBackend::new(TinyManifest::synthetic())
+    }
+
+    fn validate(&self, name: &str, inputs: &[&Value]) -> Result<()> {
+        let sig = self
+            .man
+            .execs
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown exec {name} (not in manifest)"))?;
+        if sig.in_shapes.len() != inputs.len() {
+            bail!("exec {name}: expected {} inputs, got {}", sig.in_shapes.len(), inputs.len());
+        }
+        for (i, (v, (dtype, shape))) in inputs.iter().zip(sig.in_shapes.iter()).enumerate() {
+            if v.shape() != shape.as_slice() {
+                bail!("exec {name} input {i}: shape {:?} != manifest {:?}", v.shape(), shape);
+            }
+            if v.dtype_name() != dtype.as_str() {
+                bail!("exec {name} input {i}: dtype {} != manifest {}", v.dtype_name(), dtype);
+            }
+        }
+        Ok(())
+    }
+
+    fn dispatch(&self, name: &str, inputs: &[&Value]) -> Result<Vec<Value>> {
+        let cfg = &self.man.cfg;
+        let eps = cfg.eps as f32;
+        let theta = cfg.rope_theta as f32;
+
+        if name == "embed_train_vjp" {
+            // (tokens, E, dx) -> (dE,)
+            let tokens = inputs[0].as_i32()?;
+            let e = inputs[1].as_f32()?;
+            let dx = inputs[2].as_f32()?;
+            let d = e.shape[1];
+            let mut de = Tensor::zeros(&e.shape);
+            for (row, &tok) in tokens.iter().enumerate() {
+                let tok = tok as usize;
+                for j in 0..d {
+                    de.data[tok * d + j] += dx.data[row * d + j];
+                }
+            }
+            return Ok(vec![Value::F32(de)]);
+        }
+        if name == "head_train_vjp" {
+            // (x, norm, E, dlogits) -> (dx, dnorm, dE)
+            let x = inputs[0].as_f32()?;
+            let norm = inputs[1].as_f32()?;
+            let e = inputs[2].as_f32()?;
+            let dl = inputs[3].as_f32()?;
+            let (v, d) = (e.shape[0], e.shape[1]);
+            let t = x.numel() / d;
+            let hn = rmsnorm_fwd(&x.data, &norm.data, d, eps);
+            // dhn = dlogits @ E; dE = dlogitsᵀ @ hn
+            let dhn = matmul(&dl.data, &e.data, t, v, d);
+            let de = matmul_at_b(&dl.data, &hn, t, v, d);
+            let (dx, dnorm) = rmsnorm_bwd(&x.data, &norm.data, &dhn, d, eps);
+            return Ok(vec![
+                Value::F32(Tensor::from_vec(&x.shape, dx)),
+                Value::F32(Tensor::from_vec(&norm.shape, dnorm)),
+                Value::F32(Tensor::from_vec(&e.shape, de)),
+            ]);
+        }
+        if name.starts_with("embed_") {
+            // (tokens, E) -> (x,)
+            let tokens = inputs[0].as_i32()?;
+            let e = inputs[1].as_f32()?;
+            let (v, d) = (e.shape[0], e.shape[1]);
+            let mut shape = inputs[0].shape().to_vec();
+            shape.push(d);
+            let mut out = vec![0f32; tokens.len() * d];
+            for (row, &tok) in tokens.iter().enumerate() {
+                let tok = tok as usize;
+                if tok >= v {
+                    bail!("{name}: token id {tok} out of vocab {v}");
+                }
+                out[row * d..(row + 1) * d].copy_from_slice(&e.data[tok * d..(tok + 1) * d]);
+            }
+            return Ok(vec![Value::F32(Tensor::from_vec(&shape, out))]);
+        }
+        if name.starts_with("head_") {
+            // (x, norm, E) -> (logits,)
+            let x = inputs[0].as_f32()?;
+            let norm = inputs[1].as_f32()?;
+            let e = inputs[2].as_f32()?;
+            let (v, d) = (e.shape[0], e.shape[1]);
+            let t = x.numel() / d;
+            let hn = rmsnorm_fwd(&x.data, &norm.data, d, eps);
+            let logits = matmul_a_bt(&hn, &e.data, t, v, d);
+            let mut shape = x.shape.clone();
+            *shape.last_mut().unwrap() = v;
+            return Ok(vec![Value::F32(Tensor::from_vec(&shape, logits))]);
+        }
+
+        let (kind, rest) = if let Some(r) = name.strip_prefix("attn_") {
+            ("attn", r)
+        } else if let Some(r) = name.strip_prefix("ffn_") {
+            ("ffn", r)
+        } else {
+            bail!("unrecognized exec name {name}");
+        };
+        let (variant, mode) = split_mode(rest)
+            .ok_or_else(|| anyhow!("exec {name}: cannot split variant/mode"))?;
+        let layout = if kind == "attn" {
+            self.man.attn_variants.get(variant)
+        } else {
+            self.man.ffn_variants.get(variant)
+        }
+        .ok_or_else(|| anyhow!("exec {name}: unknown variant {variant}"))?;
+        let nw = layout.weights.len();
+
+        // weight slice position: decode GQA prepends (k_cache, v_cache, pos)
+        let gqa_decode = kind == "attn" && variant != "linear" && mode == "decode";
+        let wstart = if gqa_decode { 4 } else { 1 };
+        let w: Vec<&Tensor> =
+            inputs[wstart..wstart + nw].iter().map(|v| v.as_f32()).collect::<Result<_>>()?;
+        let x = inputs[0].as_f32()?;
+
+        match (kind, variant == "linear", mode) {
+            // token-wise linear replacements: same math in every mode
+            (_, true, "train_vjp") => {
+                let dy = inputs[1 + nw].as_f32()?;
+                let (dx, dws) = linear_vjp(x, &w, dy, eps);
+                Ok(pack_grads(x, layout, dx, dws))
+            }
+            (_, true, _) => Ok(vec![Value::F32(linear_fwd(x, &w, eps))]),
+            ("ffn", false, "train_vjp") => {
+                let dy = inputs[1 + nw].as_f32()?;
+                let (dx, dws) = ffn_vjp(x, &w, dy, eps);
+                Ok(pack_grads(x, layout, dx, dws))
+            }
+            ("ffn", false, _) => Ok(vec![Value::F32(ffn_fwd(x, &w, eps))]),
+            ("attn", false, "train_fwd") | ("attn", false, "long") => {
+                let (y, _, _) = attn_gqa_fwd(cfg.n_heads, cfg.head_dim, layout.kv_heads, x, &w, eps, theta);
+                Ok(vec![Value::F32(y)])
+            }
+            ("attn", false, "prefill") => {
+                let kv = layout.kv_heads;
+                let (b, s) = (x.shape[0], x.shape[1]);
+                let (y, k, v) = attn_gqa_fwd(cfg.n_heads, cfg.head_dim, kv, x, &w, eps, theta);
+                let kv_shape = vec![b, s, kv, cfg.head_dim];
+                Ok(vec![
+                    Value::F32(y),
+                    Value::F32(Tensor::from_vec(&kv_shape, k)),
+                    Value::F32(Tensor::from_vec(&kv_shape, v)),
+                ])
+            }
+            ("attn", false, "decode") => {
+                let kc = inputs[1].as_f32()?;
+                let vc = inputs[2].as_f32()?;
+                let pos = inputs[3].as_i32()?;
+                let (y, kc2, vc2) =
+                    attn_gqa_decode(cfg.n_heads, cfg.head_dim, layout.kv_heads, x, kc, vc, pos, &w, eps, theta)?;
+                Ok(vec![Value::F32(y), Value::F32(kc2), Value::F32(vc2)])
+            }
+            ("attn", false, "train_vjp") => {
+                let dy = inputs[1 + nw].as_f32()?;
+                let (dx, dws) =
+                    attn_gqa_vjp(cfg.n_heads, cfg.head_dim, layout.kv_heads, x, &w, dy, eps, theta);
+                Ok(pack_grads(x, layout, dx, dws))
+            }
+            _ => bail!("exec {name}: unsupported mode {mode}"),
+        }
+    }
+}
+
+impl Backend for RefBackend {
+    fn name(&self) -> &'static str {
+        "ref"
+    }
+
+    fn man(&self) -> &Manifest {
+        &self.man
+    }
+
+    fn run(&self, name: &str, inputs: &[&Value]) -> Result<Vec<Value>> {
+        self.validate(name, inputs)?;
+        let t0 = Instant::now();
+        let out = self.dispatch(name, inputs).with_context(|| format!("ref exec {name}"))?;
+        let mut st = self.stats.borrow_mut();
+        let entry = st.entry(name.to_string()).or_default();
+        entry.calls += 1;
+        entry.total_secs += t0.elapsed().as_secs_f64();
+        Ok(out)
+    }
+
+    fn measured_secs(&self, name: &str) -> Option<f64> {
+        let st = self.stats.borrow();
+        let e = st.get(name)?;
+        if e.calls == 0 {
+            None
+        } else {
+            Some(e.total_secs / e.calls as f64)
+        }
+    }
+
+    fn stats_snapshot(&self) -> Vec<(String, ExecStats)> {
+        let mut v: Vec<_> =
+            self.stats.borrow().iter().map(|(k, s)| (k.clone(), s.clone())).collect();
+        v.sort_by(|a, b| b.1.total_secs.partial_cmp(&a.1.total_secs).unwrap());
+        v
+    }
+
+    fn run_warmup(&self, name: &str) -> Result<()> {
+        // nothing to compile, but preloading an unknown executable is still
+        // a caller bug on every backend
+        self.man
+            .execs
+            .get(name)
+            .map(|_| ())
+            .ok_or_else(|| anyhow!("unknown exec {name} (not in manifest)"))
+    }
+}
+
+fn split_mode(rest: &str) -> Option<(&str, &str)> {
+    for m in ["_train_fwd", "_train_vjp", "_prefill", "_decode", "_long"] {
+        if let Some(v) = rest.strip_suffix(m) {
+            return Some((v, &m[1..]));
+        }
+    }
+    None
+}
+
+/// Wrap a vjp result as (dx, *dweights) values in manifest weight order.
+fn pack_grads(x: &Tensor, layout: &VariantLayout, dx: Vec<f32>, dws: Vec<Vec<f32>>) -> Vec<Value> {
+    let mut out = Vec::with_capacity(1 + dws.len());
+    out.push(Value::F32(Tensor::from_vec(&x.shape, dx)));
+    for ((_, shape), dw) in layout.weights.iter().zip(dws) {
+        out.push(Value::F32(Tensor::from_vec(shape, dw)));
+    }
+    out
+}
+
+// ======================================================================
+// dense math helpers (row-major flats)
+// ======================================================================
+
+/// a [m,k] @ b [k,n] -> [m,n]
+fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut out = vec![0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    out
+}
+
+/// aᵀ @ b with a [t,m], b [t,n] -> [m,n] (weight gradients)
+fn matmul_at_b(a: &[f32], b: &[f32], t: usize, m: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), t * m);
+    debug_assert_eq!(b.len(), t * n);
+    let mut out = vec![0f32; m * n];
+    for r in 0..t {
+        let arow = &a[r * m..(r + 1) * m];
+        let brow = &b[r * n..(r + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    out
+}
+
+/// a @ bᵀ with a [t,n], b [m,n] -> [t,m] (activation gradients)
+fn matmul_a_bt(a: &[f32], b: &[f32], t: usize, m: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), t * n);
+    debug_assert_eq!(b.len(), m * n);
+    let mut out = vec![0f32; t * m];
+    for r in 0..t {
+        let arow = &a[r * n..(r + 1) * n];
+        let orow = &mut out[r * m..(r + 1) * m];
+        for i in 0..m {
+            let brow = &b[i * n..(i + 1) * n];
+            let mut acc = 0f32;
+            for j in 0..n {
+                acc += arow[j] * brow[j];
+            }
+            orow[i] = acc;
+        }
+    }
+    out
+}
+
+fn add_vec(a: &[f32], b: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x + y).collect()
+}
+
+/// RMSNorm over rows of d: y = x / rms(x) * w.
+fn rmsnorm_fwd(x: &[f32], w: &[f32], d: usize, eps: f32) -> Vec<f32> {
+    let t = x.len() / d;
+    let mut out = vec![0f32; x.len()];
+    for row in 0..t {
+        let xs = &x[row * d..(row + 1) * d];
+        let ms = xs.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let r = 1.0 / (ms + eps).sqrt();
+        let os = &mut out[row * d..(row + 1) * d];
+        for j in 0..d {
+            os[j] = xs[j] * r * w[j];
+        }
+    }
+    out
+}
+
+/// RMSNorm vjp: given dy on the normalized output, return (dx, dw).
+fn rmsnorm_bwd(x: &[f32], w: &[f32], dy: &[f32], d: usize, eps: f32) -> (Vec<f32>, Vec<f32>) {
+    let t = x.len() / d;
+    let mut dx = vec![0f32; x.len()];
+    let mut dw = vec![0f32; d];
+    for row in 0..t {
+        let xs = &x[row * d..(row + 1) * d];
+        let dys = &dy[row * d..(row + 1) * d];
+        let ms = xs.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let r = 1.0 / (ms + eps).sqrt();
+        // a_j = dy_j * w_j; dx_j = r*a_j - (r^3/d) * x_j * Σ_k a_k x_k
+        let mut ax = 0f32;
+        for j in 0..d {
+            ax += dys[j] * w[j] * xs[j];
+        }
+        let c = r * r * r / d as f32 * ax;
+        let dxs = &mut dx[row * d..(row + 1) * d];
+        for j in 0..d {
+            dxs[j] = r * dys[j] * w[j] - c * xs[j];
+            dw[j] += dys[j] * xs[j] * r;
+        }
+    }
+    (dx, dw)
+}
+
+/// Rotary embedding in place over flat [t, heads, dh] with one position per
+/// row. `sign` = 1.0 applies the rotation, -1.0 its inverse (the vjp).
+fn rope(xs: &mut [f32], positions: &[f32], heads: usize, dh: usize, theta: f32, sign: f32) {
+    let half = dh / 2;
+    let freqs: Vec<f32> = (0..half).map(|j| theta.powf(-(j as f32) / half as f32)).collect();
+    for (r, &pos) in positions.iter().enumerate() {
+        for hh in 0..heads {
+            let off = (r * heads + hh) * dh;
+            for j in 0..half {
+                let ang = pos * freqs[j];
+                let (mut sn, cs) = ang.sin_cos();
+                sn *= sign;
+                let x1 = xs[off + j];
+                let x2 = xs[off + half + j];
+                xs[off + j] = x1 * cs - x2 * sn;
+                xs[off + half + j] = x1 * sn + x2 * cs;
+            }
+        }
+    }
+}
+
+/// Causal grouped-query attention: q [b,s,h,dh], k/v [b,s,kv,dh] (flats),
+/// returns o [b,s,h,dh].
+fn causal_attention(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    b: usize,
+    s: usize,
+    h: usize,
+    kv: usize,
+    dh: usize,
+) -> Vec<f32> {
+    let group = h / kv;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut o = vec![0f32; b * s * h * dh];
+    let mut p = vec![0f32; s];
+    for bi in 0..b {
+        for hi in 0..h {
+            let g = hi / group;
+            for qi in 0..s {
+                let qoff = ((bi * s + qi) * h + hi) * dh;
+                softmax_row_causal(q, k, &mut p, bi, s, kv, dh, g, qi, qoff, scale);
+                let ooff = qoff;
+                for (ki, &pk) in p.iter().enumerate().take(qi + 1) {
+                    let voff = ((bi * s + ki) * kv + g) * dh;
+                    for j in 0..dh {
+                        o[ooff + j] += pk * v[voff + j];
+                    }
+                }
+            }
+        }
+    }
+    o
+}
+
+/// One causal softmax row: fills p[0..=qi] with attention probabilities of
+/// query (bi, qi, head with kv-group g) against k.
+#[allow(clippy::too_many_arguments)]
+fn softmax_row_causal(
+    q: &[f32],
+    k: &[f32],
+    p: &mut [f32],
+    bi: usize,
+    s: usize,
+    kv: usize,
+    dh: usize,
+    g: usize,
+    qi: usize,
+    qoff: usize,
+    scale: f32,
+) {
+    let mut maxs = f32::NEG_INFINITY;
+    for ki in 0..=qi {
+        let koff = ((bi * s + ki) * kv + g) * dh;
+        let mut dot = 0f32;
+        for j in 0..dh {
+            dot += q[qoff + j] * k[koff + j];
+        }
+        p[ki] = dot * scale;
+        maxs = maxs.max(p[ki]);
+    }
+    let mut z = 0f32;
+    for ki in 0..=qi {
+        p[ki] = (p[ki] - maxs).exp();
+        z += p[ki];
+    }
+    let inv = 1.0 / z;
+    for ki in 0..=qi {
+        p[ki] *= inv;
+    }
+}
+
+/// Backward of `causal_attention`: returns (dq, dk, dv); dk/dv accumulate
+/// over the query heads sharing each KV head.
+#[allow(clippy::too_many_arguments)]
+fn causal_attention_bwd(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    dout: &[f32],
+    b: usize,
+    s: usize,
+    h: usize,
+    kv: usize,
+    dh: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let group = h / kv;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut dq = vec![0f32; b * s * h * dh];
+    let mut dk = vec![0f32; b * s * kv * dh];
+    let mut dv = vec![0f32; b * s * kv * dh];
+    let mut p = vec![0f32; s];
+    let mut dp = vec![0f32; s];
+    for bi in 0..b {
+        for hi in 0..h {
+            let g = hi / group;
+            for qi in 0..s {
+                let qoff = ((bi * s + qi) * h + hi) * dh;
+                softmax_row_causal(q, k, &mut p, bi, s, kv, dh, g, qi, qoff, scale);
+                // dp = dO·Vᵀ, rowdot = Σ p·dp
+                let mut rowdot = 0f32;
+                for ki in 0..=qi {
+                    let voff = ((bi * s + ki) * kv + g) * dh;
+                    let mut dd = 0f32;
+                    for j in 0..dh {
+                        dd += dout[qoff + j] * v[voff + j];
+                    }
+                    dp[ki] = dd;
+                    rowdot += p[ki] * dd;
+                }
+                // dS = P ⊙ (dP - rowdot); dQ += dS·K·scale; dK += dS·Q·scale;
+                // dV += P·dO
+                for ki in 0..=qi {
+                    let ds = p[ki] * (dp[ki] - rowdot) * scale;
+                    let koff = ((bi * s + ki) * kv + g) * dh;
+                    for j in 0..dh {
+                        dq[qoff + j] += ds * k[koff + j];
+                        dk[koff + j] += ds * q[qoff + j];
+                        dv[koff + j] += p[ki] * dout[qoff + j];
+                    }
+                }
+            }
+        }
+    }
+    (dq, dk, dv)
+}
+
+// ======================================================================
+// block implementations
+// ======================================================================
+
+/// Pre-norm GQA block forward. Returns (y, roped K flat [b,s,kv,dh],
+/// V flat) — the K/V are what prefill hands to the serving cache.
+fn attn_gqa_fwd(
+    h: usize,
+    dh: usize,
+    kv: usize,
+    x: &Tensor,
+    w: &[&Tensor],
+    eps: f32,
+    theta: f32,
+) -> (Tensor, Vec<f32>, Vec<f32>) {
+    let (b, s, d) = (x.shape[0], x.shape[1], x.shape[2]);
+    let t = b * s;
+    let qd = h * dh;
+    let hn = rmsnorm_fwd(&x.data, &w[0].data, d, eps);
+    let mut qf = matmul(&hn, &w[1].data, t, d, qd);
+    let mut kf = matmul(&hn, &w[2].data, t, d, kv * dh);
+    let vf = matmul(&hn, &w[3].data, t, d, kv * dh);
+    let positions: Vec<f32> = (0..t).map(|r| (r % s) as f32).collect();
+    rope(&mut qf, &positions, h, dh, theta, 1.0);
+    rope(&mut kf, &positions, kv, dh, theta, 1.0);
+    let att = causal_attention(&qf, &kf, &vf, b, s, h, kv, dh);
+    let proj = matmul(&att, &w[4].data, t, qd, d);
+    let y = add_vec(&x.data, &proj);
+    (Tensor::from_vec(&x.shape, y), kf, vf)
+}
+
+/// GQA block vjp: (dx, [dnorm, dwq, dwk, dwv, dwo]).
+#[allow(clippy::too_many_arguments)]
+fn attn_gqa_vjp(
+    h: usize,
+    dh: usize,
+    kv: usize,
+    x: &Tensor,
+    w: &[&Tensor],
+    dy: &Tensor,
+    eps: f32,
+    theta: f32,
+) -> (Vec<f32>, Vec<Vec<f32>>) {
+    let (b, s, d) = (x.shape[0], x.shape[1], x.shape[2]);
+    let t = b * s;
+    let qd = h * dh;
+    // recompute the primal (deliberate rematerialization, as in the AOT vjps)
+    let hn = rmsnorm_fwd(&x.data, &w[0].data, d, eps);
+    let mut qf = matmul(&hn, &w[1].data, t, d, qd);
+    let mut kf = matmul(&hn, &w[2].data, t, d, kv * dh);
+    let vf = matmul(&hn, &w[3].data, t, d, kv * dh);
+    let positions: Vec<f32> = (0..t).map(|r| (r % s) as f32).collect();
+    rope(&mut qf, &positions, h, dh, theta, 1.0);
+    rope(&mut kf, &positions, kv, dh, theta, 1.0);
+    let att = causal_attention(&qf, &kf, &vf, b, s, h, kv, dh);
+
+    // y = x + att @ wo
+    let datt = matmul_a_bt(&dy.data, &w[4].data, t, qd, d);
+    let dwo = matmul_at_b(&att, &dy.data, t, qd, d);
+    let (mut dq, mut dk, dv) = causal_attention_bwd(&qf, &kf, &vf, &datt, b, s, h, kv, dh);
+    rope(&mut dq, &positions, h, dh, theta, -1.0);
+    rope(&mut dk, &positions, kv, dh, theta, -1.0);
+    let mut dhn = matmul_a_bt(&dq, &w[1].data, t, d, qd);
+    let dhn_k = matmul_a_bt(&dk, &w[2].data, t, d, kv * dh);
+    let dhn_v = matmul_a_bt(&dv, &w[3].data, t, d, kv * dh);
+    for i in 0..dhn.len() {
+        dhn[i] += dhn_k[i] + dhn_v[i];
+    }
+    let dwq = matmul_at_b(&hn, &dq, t, d, qd);
+    let dwk = matmul_at_b(&hn, &dk, t, d, kv * dh);
+    let dwv = matmul_at_b(&hn, &dv, t, d, kv * dh);
+    let (dx_rms, dnorm) = rmsnorm_bwd(&x.data, &w[0].data, &dhn, d, eps);
+    let dx = add_vec(&dy.data, &dx_rms);
+    (dx, vec![dnorm, dwq, dwk, dwv, dwo])
+}
+
+/// Cached GQA decode step: writes the new roped K/V at each sequence's
+/// position (functional update) and attends over cache positions <= pos.
+#[allow(clippy::too_many_arguments)]
+fn attn_gqa_decode(
+    h: usize,
+    dh: usize,
+    kv: usize,
+    x: &Tensor,
+    kc: &Tensor,
+    vc: &Tensor,
+    pos: &[i32],
+    w: &[&Tensor],
+    eps: f32,
+    theta: f32,
+) -> Result<(Tensor, Tensor, Tensor)> {
+    let (b, d) = (x.shape[0], x.shape[2]);
+    let smax = kc.shape[1];
+    let qd = h * dh;
+    let hn = rmsnorm_fwd(&x.data, &w[0].data, d, eps);
+    let mut qf = matmul(&hn, &w[1].data, b, d, qd);
+    let mut kf = matmul(&hn, &w[2].data, b, d, kv * dh);
+    let vf = matmul(&hn, &w[3].data, b, d, kv * dh);
+    let positions: Vec<f32> = pos.iter().map(|&p| p as f32).collect();
+    rope(&mut qf, &positions, h, dh, theta, 1.0);
+    rope(&mut kf, &positions, kv, dh, theta, 1.0);
+    let mut kc2 = kc.clone();
+    let mut vc2 = vc.clone();
+    let row = kv * dh;
+    for bi in 0..b {
+        let p = pos[bi] as usize;
+        if p >= smax {
+            bail!("decode position {p} >= cache capacity {smax}");
+        }
+        let dst = (bi * smax + p) * row;
+        kc2.data[dst..dst + row].copy_from_slice(&kf[bi * row..(bi + 1) * row]);
+        vc2.data[dst..dst + row].copy_from_slice(&vf[bi * row..(bi + 1) * row]);
+    }
+    // attend over the cache: same softmax row as self-attention, with the
+    // cache playing the role of a length-smax sequence masked at pos
+    let group = h / kv;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut o = vec![0f32; b * qd];
+    let mut p_row = vec![0f32; smax];
+    for bi in 0..b {
+        let pmax = pos[bi] as usize;
+        for hi in 0..h {
+            let g = hi / group;
+            let qoff = bi * qd + hi * dh;
+            softmax_row_causal(&qf, &kc2.data, &mut p_row, bi, smax, kv, dh, g, pmax, qoff, scale);
+            for (ki, &pk) in p_row.iter().enumerate().take(pmax + 1) {
+                let voff = ((bi * smax + ki) * kv + g) * dh;
+                for j in 0..dh {
+                    o[qoff + j] += pk * vc2.data[voff + j];
+                }
+            }
+        }
+    }
+    let proj = matmul(&o, &w[4].data, b, qd, d);
+    let y = add_vec(&x.data, &proj);
+    Ok((Tensor::from_vec(&x.shape, y), kc2, vc2))
+}
+
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// SwiGLU FFN block: y = x + (silu(hn@wg) ⊙ (hn@wu)) @ wd.
+fn ffn_fwd(x: &Tensor, w: &[&Tensor], eps: f32) -> Tensor {
+    let d = *x.shape.last().unwrap();
+    let t = x.numel() / d;
+    let i = w[1].shape[1];
+    let hn = rmsnorm_fwd(&x.data, &w[0].data, d, eps);
+    let g = matmul(&hn, &w[1].data, t, d, i);
+    let u = matmul(&hn, &w[2].data, t, d, i);
+    let z: Vec<f32> = g.iter().zip(&u).map(|(&gv, &uv)| gv * sigmoid(gv) * uv).collect();
+    let proj = matmul(&z, &w[3].data, t, i, d);
+    Tensor::from_vec(&x.shape, add_vec(&x.data, &proj))
+}
+
+/// SwiGLU vjp: (dx, [dnorm, dwg, dwu, dwd]).
+fn ffn_vjp(x: &Tensor, w: &[&Tensor], dy: &Tensor, eps: f32) -> (Vec<f32>, Vec<Vec<f32>>) {
+    let d = *x.shape.last().unwrap();
+    let t = x.numel() / d;
+    let i = w[1].shape[1];
+    let hn = rmsnorm_fwd(&x.data, &w[0].data, d, eps);
+    let g = matmul(&hn, &w[1].data, t, d, i);
+    let u = matmul(&hn, &w[2].data, t, d, i);
+    let sg: Vec<f32> = g.iter().map(|&gv| sigmoid(gv)).collect();
+    let z: Vec<f32> = g.iter().zip(&sg).zip(&u).map(|((&gv, &s), &uv)| gv * s * uv).collect();
+
+    let dz = matmul_a_bt(&dy.data, &w[3].data, t, i, d);
+    let dwd = matmul_at_b(&z, &dy.data, t, i, d);
+    let mut dg = vec![0f32; t * i];
+    let mut du = vec![0f32; t * i];
+    for idx in 0..t * i {
+        let silu = g[idx] * sg[idx];
+        du[idx] = dz[idx] * silu;
+        // d silu(g)/dg = σ(g)·(1 + g·(1-σ(g)))
+        dg[idx] = dz[idx] * u[idx] * sg[idx] * (1.0 + g[idx] * (1.0 - sg[idx]));
+    }
+    let mut dhn = matmul_a_bt(&dg, &w[1].data, t, d, i);
+    let dhn_u = matmul_a_bt(&du, &w[2].data, t, d, i);
+    for idx in 0..dhn.len() {
+        dhn[idx] += dhn_u[idx];
+    }
+    let dwg = matmul_at_b(&hn, &dg, t, d, i);
+    let dwu = matmul_at_b(&hn, &du, t, d, i);
+    let (dx_rms, dnorm) = rmsnorm_bwd(&x.data, &w[0].data, &dhn, d, eps);
+    let dx = add_vec(&dy.data, &dx_rms);
+    (dx, vec![dnorm, dwg, dwu, dwd])
+}
+
+/// Token-wise linear replacement block (attention-linear / FFN-linear):
+/// y = x + rmsnorm(x) @ wl.
+fn linear_fwd(x: &Tensor, w: &[&Tensor], eps: f32) -> Tensor {
+    let d = *x.shape.last().unwrap();
+    let t = x.numel() / d;
+    let hn = rmsnorm_fwd(&x.data, &w[0].data, d, eps);
+    let proj = matmul(&hn, &w[1].data, t, d, d);
+    Tensor::from_vec(&x.shape, add_vec(&x.data, &proj))
+}
+
+/// Linear block vjp: (dx, [dnorm, dwl]).
+fn linear_vjp(x: &Tensor, w: &[&Tensor], dy: &Tensor, eps: f32) -> (Vec<f32>, Vec<Vec<f32>>) {
+    let d = *x.shape.last().unwrap();
+    let t = x.numel() / d;
+    let hn = rmsnorm_fwd(&x.data, &w[0].data, d, eps);
+    let dhn = matmul_a_bt(&dy.data, &w[1].data, t, d, d);
+    let dwl = matmul_at_b(&hn, &dy.data, t, d, d);
+    let (dx_rms, dnorm) = rmsnorm_bwd(&x.data, &w[0].data, &dhn, d, eps);
+    let dx = add_vec(&dy.data, &dx_rms);
+    (dx, vec![dnorm, dwl])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::value::val_i32;
+    use crate::util::Rng;
+
+    fn backend() -> RefBackend {
+        RefBackend::tiny()
+    }
+
+    fn randt(shape: &[usize], std: f32, rng: &mut Rng) -> Tensor {
+        Tensor::randn(shape, std, rng)
+    }
+
+    /// Scalar loss L = Σ y_0 ⊙ R over the first output of `exec`, where R
+    /// is a fixed random cotangent — evaluated in f64 for fd stability.
+    fn loss_of(be: &RefBackend, exec: &str, inputs: &[&Value], r: &[f32]) -> f64 {
+        let out = be.run(exec, inputs).unwrap();
+        let y = out[0].as_f32().unwrap();
+        y.data.iter().zip(r).map(|(&a, &b)| a as f64 * b as f64).sum()
+    }
+
+    /// Check d(loss)/d(inputs[which]) from the vjp exec against central
+    /// finite differences at a few coordinates.
+    fn grad_check(exec_fwd: &str, exec_vjp: &str, n_weights: usize, which: usize) {
+        let be = backend();
+        let man = be.man().clone();
+        let sig = man.execs[exec_fwd].clone();
+        let mut rng = Rng::new(17);
+        let vals: Vec<Value> = sig
+            .in_shapes
+            .iter()
+            .map(|(_, s)| Value::F32(randt(s, 0.3, &mut rng)))
+            .collect();
+        let y_shape = &sig.out_shapes[0].1;
+        let r = randt(y_shape, 1.0, &mut rng);
+
+        // analytic grads: run the vjp with dy = R
+        let dy = Value::F32(r.clone());
+        let mut vjp_in: Vec<&Value> = vals.iter().collect();
+        vjp_in.push(&dy);
+        let grads = be.run(exec_vjp, &vjp_in).unwrap();
+        assert_eq!(grads.len(), 1 + n_weights);
+        let analytic = grads[which].as_f32().unwrap().clone();
+
+        // finite differences on inputs[which]
+        let x0 = vals[which].as_f32().unwrap().clone();
+        let h = 1e-2f32;
+        let step = (x0.numel() / 7).max(1);
+        for idx in (0..x0.numel()).step_by(step) {
+            let eval = |delta: f32| -> f64 {
+                let mut xp = x0.clone();
+                xp.data[idx] += delta;
+                let vp = Value::F32(xp);
+                let refs: Vec<&Value> =
+                    vals.iter().enumerate().map(|(i, v)| if i == which { &vp } else { v }).collect();
+                loss_of(&be, exec_fwd, &refs, &r.data)
+            };
+            let fd = ((eval(h) - eval(-h)) / (2.0 * h as f64)) as f32;
+            let an = analytic.data[idx];
+            assert!(
+                (fd - an).abs() <= 2e-2 + 0.05 * an.abs(),
+                "{exec_vjp} input {which} idx {idx}: fd {fd} vs analytic {an}"
+            );
+        }
+    }
+
+    #[test]
+    fn rmsnorm_bwd_matches_fd() {
+        let mut rng = Rng::new(3);
+        let d = 8;
+        let x = randt(&[5, d], 0.5, &mut rng);
+        let w = randt(&[d], 0.5, &mut rng);
+        let r = randt(&[5, d], 1.0, &mut rng);
+        let (dx, dw) = rmsnorm_bwd(&x.data, &w.data, &r.data, d, 1e-5);
+        let loss = |xd: &[f32], wd: &[f32]| -> f64 {
+            rmsnorm_fwd(xd, wd, d, 1e-5)
+                .iter()
+                .zip(&r.data)
+                .map(|(&a, &b)| a as f64 * b as f64)
+                .sum()
+        };
+        let h = 1e-3f32;
+        for idx in [0, 7, 19, 33] {
+            let mut xp = x.data.clone();
+            xp[idx] += h;
+            let mut xm = x.data.clone();
+            xm[idx] -= h;
+            let fd = ((loss(&xp, &w.data) - loss(&xm, &w.data)) / (2.0 * h as f64)) as f32;
+            assert!((fd - dx[idx]).abs() < 1e-2, "dx[{idx}] fd {fd} vs {}", dx[idx]);
+        }
+        for idx in [0, 3] {
+            let mut wp = w.data.clone();
+            wp[idx] += h;
+            let mut wm = w.data.clone();
+            wm[idx] -= h;
+            let fd = ((loss(&x.data, &wp) - loss(&x.data, &wm)) / (2.0 * h as f64)) as f32;
+            assert!((fd - dw[idx]).abs() < 1e-2, "dw[{idx}] fd {fd} vs {}", dw[idx]);
+        }
+    }
+
+    #[test]
+    fn rope_inverse_roundtrips() {
+        let mut rng = Rng::new(5);
+        let (t, heads, dh) = (6, 2, 8);
+        let x0 = randt(&[t, heads, dh], 1.0, &mut rng);
+        let positions: Vec<f32> = (0..t).map(|i| i as f32).collect();
+        let mut x = x0.data.clone();
+        rope(&mut x, &positions, heads, dh, 10000.0, 1.0);
+        rope(&mut x, &positions, heads, dh, 10000.0, -1.0);
+        for (a, b) in x.iter().zip(&x0.data) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn gqa_vjp_input_grad_matches_fd() {
+        grad_check("attn_gqa_r2_train_fwd", "attn_gqa_r2_train_vjp", 5, 0);
+    }
+
+    #[test]
+    fn gqa_vjp_weight_grads_match_fd() {
+        for which in 1..=5 {
+            grad_check("attn_gqa_r2_train_fwd", "attn_gqa_r2_train_vjp", 5, which);
+        }
+    }
+
+    #[test]
+    fn ffn_vjp_grads_match_fd() {
+        for which in 0..=4 {
+            grad_check("ffn_r50_train_fwd", "ffn_r50_train_vjp", 4, which);
+        }
+    }
+
+    #[test]
+    fn linear_vjp_grads_match_fd() {
+        for which in 0..=2 {
+            grad_check("attn_linear_train_fwd", "attn_linear_train_vjp", 2, which);
+        }
+    }
+
+    #[test]
+    fn head_vjp_grads_match_fd() {
+        let be = backend();
+        let c = be.man().cfg.clone();
+        let mut rng = Rng::new(23);
+        let x = randt(&[c.b_train, c.s_train, c.d], 0.3, &mut rng);
+        let norm = randt(&[c.d], 0.5, &mut rng);
+        let e = randt(&[c.v, c.d], 0.3, &mut rng);
+        let r = randt(&[c.b_train, c.s_train, c.v], 1.0, &mut rng);
+        let (xv, nv, ev, rv) = (
+            Value::F32(x.clone()),
+            Value::F32(norm.clone()),
+            Value::F32(e.clone()),
+            Value::F32(r.clone()),
+        );
+        let grads = be.run("head_train_vjp", &[&xv, &nv, &ev, &rv]).unwrap();
+        assert_eq!(grads.len(), 3);
+        let dx = grads[0].as_f32().unwrap();
+        let h = 1e-2f32;
+        for idx in (0..x.numel()).step_by(x.numel() / 5) {
+            let eval = |delta: f32| -> f64 {
+                let mut xp = x.clone();
+                xp.data[idx] += delta;
+                let v = Value::F32(xp);
+                loss_of(&be, "head_train", &[&v, &nv, &ev], &r.data)
+            };
+            let fd = ((eval(h) - eval(-h)) / (2.0 * h as f64)) as f32;
+            let an = dx.data[idx];
+            assert!((fd - an).abs() <= 2e-2 + 0.05 * an.abs(), "head dx[{idx}]: {fd} vs {an}");
+        }
+    }
+
+    #[test]
+    fn embed_vjp_scatters_token_grads() {
+        let be = backend();
+        let c = be.man().cfg.clone();
+        let mut rng = Rng::new(29);
+        let (bt, st) = (c.b_train, c.s_train);
+        let tokens: Vec<i32> = (0..bt * st).map(|i| (i % c.v) as i32).collect();
+        let tok = val_i32(&[bt, st], &tokens).unwrap();
+        let e = Value::F32(randt(&[c.v, c.d], 0.3, &mut rng));
+        let dx = Value::F32(Tensor::ones(&[bt, st, c.d]));
+        let de = be.run("embed_train_vjp", &[&tok, &e, &dx]).unwrap().remove(0);
+        let de = de.as_f32().unwrap();
+        // token 0 appears bt*st/v times, each contributing 1.0 per dim
+        let expect = (bt * st / c.v) as f32;
+        assert!((de.data[0] - expect).abs() < 1e-5, "{} vs {expect}", de.data[0]);
+    }
+
+    #[test]
+    fn decode_matches_prefill_attention() {
+        // prefill a short sequence, then decode the same tokens one at a
+        // time into a cache: the final-position outputs must agree.
+        let be = backend();
+        let c = be.man().cfg.clone();
+        let man = be.man();
+        let mut rng = Rng::new(31);
+        let layout = man.attn_variants["gqa_r2"].clone();
+        let ws: Vec<Tensor> =
+            layout.weights.iter().map(|(_, s)| randt(s, 0.2, &mut rng)).collect();
+        let wvals: Vec<Value> = ws.iter().map(|t| Value::F32(t.clone())).collect();
+        let (sp, d, kvh, dh) = (c.s_prefill, c.d, layout.kv_heads, c.head_dim);
+
+        let x = randt(&[1, sp, d], 0.5, &mut rng);
+        let xv = Value::F32(x.clone());
+        let mut pre_in: Vec<&Value> = vec![&xv];
+        pre_in.extend(wvals.iter());
+        let pre = be.run("attn_gqa_r2_prefill", &pre_in).unwrap();
+        let y_pre = pre[0].as_f32().unwrap().clone();
+        let k_pre = pre[1].as_f32().unwrap().clone();
+        let v_pre = pre[2].as_f32().unwrap().clone();
+
+        // decode positions 0..n for batch lane 0 (lane 1 runs position 0)
+        let (bd, smax) = (c.b_decode, c.s_max);
+        let mut kc = Tensor::zeros(&[bd, smax, kvh, dh]);
+        let mut vc = Tensor::zeros(&[bd, smax, kvh, dh]);
+        let n = 5.min(sp);
+        let mut last_y = vec![];
+        for p in 0..n {
+            let mut xd = Tensor::zeros(&[bd, 1, d]);
+            xd.data[..d].copy_from_slice(&x.data[p * d..(p + 1) * d]);
+            let xdv = Value::F32(xd);
+            let kcv = Value::F32(kc.clone());
+            let vcv = Value::F32(vc.clone());
+            let pos = val_i32(&[bd], &vec![p as i32, 0][..bd]).unwrap();
+            let mut di: Vec<&Value> = vec![&xdv, &kcv, &vcv, &pos];
+            di.extend(wvals.iter());
+            let mut out = be.run("attn_gqa_r2_decode", &di).unwrap();
+            let y = out.remove(0);
+            vc = out.pop().unwrap().as_f32().unwrap().clone();
+            kc = out.pop().unwrap().as_f32().unwrap().clone();
+            last_y = y.as_f32().unwrap().data[..d].to_vec();
+        }
+        // decode cache rows must equal the prefill K/V rows
+        let row = kvh * dh;
+        for p in 0..n {
+            for j in 0..row {
+                assert!(
+                    (kc.data[p * row + j] - k_pre.data[p * row + j]).abs() < 1e-4,
+                    "k cache mismatch at pos {p}"
+                );
+                assert!((vc.data[p * row + j] - v_pre.data[p * row + j]).abs() < 1e-4);
+            }
+        }
+        // and the decode output at position n-1 must match prefill's row n-1
+        for j in 0..d {
+            let a = last_y[j];
+            let b = y_pre.data[(n - 1) * d + j];
+            assert!((a - b).abs() < 1e-4, "y mismatch at dim {j}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn validation_rejects_bad_shapes_and_names() {
+        let be = backend();
+        let c = be.man().cfg.clone();
+        assert!(be.run("no_such_exec", &[]).is_err());
+        let bad = Value::F32(Tensor::zeros(&[1, 2, 3]));
+        let e = Value::F32(Tensor::zeros(&[c.v, c.d]));
+        assert!(be.run("head_train", &[&bad, &bad, &e]).is_err());
+        // wrong dtype: embed tokens must be i32
+        let toks_f = Value::F32(Tensor::zeros(&[c.b_train, c.s_train]));
+        assert!(be.run("embed_train", &[&toks_f, &e]).is_err());
+    }
+
+    #[test]
+    fn stats_track_calls() {
+        let be = backend();
+        let c = be.man().cfg.clone();
+        let tok = val_i32(&[c.b_train, c.s_train], &vec![1; c.b_train * c.s_train]).unwrap();
+        let mut rng = Rng::new(1);
+        let e = Value::F32(randt(&[c.v, c.d], 0.1, &mut rng));
+        be.run("embed_train", &[&tok, &e]).unwrap();
+        be.run("embed_train", &[&tok, &e]).unwrap();
+        assert!(be.measured_secs("embed_train").is_some());
+        let snap = be.stats_snapshot();
+        assert_eq!(snap.iter().find(|(k, _)| k == "embed_train").unwrap().1.calls, 2);
+    }
+}

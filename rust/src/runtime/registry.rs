@@ -18,12 +18,7 @@ use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputat
 
 use crate::config::Manifest;
 
-#[derive(Debug, Clone, Default)]
-pub struct ExecStats {
-    pub calls: u64,
-    pub total_secs: f64,
-    pub compile_secs: f64,
-}
+use super::backend::ExecStats;
 
 pub struct Registry {
     pub man: Manifest,

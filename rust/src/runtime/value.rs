@@ -1,0 +1,110 @@
+//! Backend-neutral runtime values: the currency every `Backend` speaks.
+//!
+//! A `Value` is a host-resident dense array, either f32 (activations,
+//! weights, caches, logits) or i32 (token ids, positions). Backends that
+//! keep device-side buffers (PJRT) convert at their boundary; the
+//! reference backend operates on `Value`s directly.
+
+use anyhow::{anyhow, Result};
+
+use crate::tensor::Tensor;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    F32(Tensor),
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Value {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32(t) => &t.shape,
+            Value::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn dtype_name(&self) -> &'static str {
+        match self {
+            Value::F32(_) => "float32",
+            Value::I32 { .. } => "int32",
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&Tensor> {
+        match self {
+            Value::F32(t) => Ok(t),
+            Value::I32 { .. } => Err(anyhow!("expected f32 value, got i32")),
+        }
+    }
+
+    /// In-place mutable access (e.g. splicing rows into a host-resident
+    /// KV cache without round-trip copies).
+    pub fn as_f32_mut(&mut self) -> Result<&mut Tensor> {
+        match self {
+            Value::F32(t) => Ok(t),
+            Value::I32 { .. } => Err(anyhow!("expected f32 value, got i32")),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Value::I32 { data, .. } => Ok(data),
+            Value::F32(_) => Err(anyhow!("expected i32 value, got f32")),
+        }
+    }
+}
+
+/// f32 value with the given shape.
+pub fn val_f32(shape: &[usize], data: &[f32]) -> Result<Value> {
+    if shape.iter().product::<usize>() != data.len() {
+        return Err(anyhow!("val_f32 shape {shape:?} != data len {}", data.len()));
+    }
+    Ok(Value::F32(Tensor::from_vec(shape, data.to_vec())))
+}
+
+/// i32 value with the given shape (token ids, positions).
+pub fn val_i32(shape: &[usize], data: &[i32]) -> Result<Value> {
+    if shape.iter().product::<usize>() != data.len() {
+        return Err(anyhow!("val_i32 shape {shape:?} != data len {}", data.len()));
+    }
+    Ok(Value::I32 { shape: shape.to_vec(), data: data.to_vec() })
+}
+
+pub fn tensor_to_val(t: &Tensor) -> Result<Value> {
+    Ok(Value::F32(t.clone()))
+}
+
+pub fn val_to_tensor(v: &Value) -> Result<Tensor> {
+    Ok(v.as_f32()?.clone())
+}
+
+pub fn val_to_vec_f32(v: &Value) -> Result<Vec<f32>> {
+    Ok(v.as_f32()?.data.clone())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checks() {
+        assert!(val_f32(&[2, 3], &[0.0; 6]).is_ok());
+        assert!(val_f32(&[2, 3], &[0.0; 5]).is_err());
+        assert!(val_i32(&[4], &[1, 2, 3, 4]).is_ok());
+    }
+
+    #[test]
+    fn dtype_accessors() {
+        let f = val_f32(&[2], &[1.0, 2.0]).unwrap();
+        let i = val_i32(&[2], &[1, 2]).unwrap();
+        assert!(f.as_f32().is_ok() && f.as_i32().is_err());
+        assert!(i.as_i32().is_ok() && i.as_f32().is_err());
+        assert_eq!(f.dtype_name(), "float32");
+        assert_eq!(i.dtype_name(), "int32");
+        assert_eq!(val_to_tensor(&f).unwrap().data, vec![1.0, 2.0]);
+    }
+}

@@ -1,0 +1,61 @@
+//! `XlaBackend`: the PJRT-backed implementation of `Backend`, wrapping the
+//! lazy-compiling `Registry` over an AOT artifact directory. Only built
+//! with the `pjrt` cargo feature (requires the external `xla` crate and a
+//! `make artifacts` run).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::config::Manifest;
+
+use super::backend::{Backend, ExecStats};
+use super::literal::{lit_to_val, val_to_lit};
+use super::registry::Registry;
+use super::value::Value;
+
+pub struct XlaBackend {
+    reg: Registry,
+}
+
+impl XlaBackend {
+    /// Open the artifact directory for one model config
+    /// (e.g. `artifacts/tiny`).
+    pub fn open(dir: &Path) -> Result<XlaBackend> {
+        Ok(XlaBackend { reg: Registry::open(dir)? })
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.reg
+    }
+}
+
+impl Backend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn man(&self) -> &Manifest {
+        &self.reg.man
+    }
+
+    fn run(&self, name: &str, inputs: &[&Value]) -> Result<Vec<Value>> {
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(|v| val_to_lit(v)).collect::<Result<_>>()?;
+        let refs: Vec<&xla::Literal> = lits.iter().collect();
+        let out = self.reg.run(name, &refs)?;
+        out.iter().map(lit_to_val).collect()
+    }
+
+    fn measured_secs(&self, name: &str) -> Option<f64> {
+        self.reg.measured_secs(name)
+    }
+
+    fn stats_snapshot(&self) -> Vec<(String, ExecStats)> {
+        self.reg.stats_snapshot()
+    }
+
+    fn run_warmup(&self, name: &str) -> Result<()> {
+        self.reg.get(name).map(|_| ())
+    }
+}

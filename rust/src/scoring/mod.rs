@@ -17,7 +17,7 @@ use std::collections::HashMap;
 use crate::arch::{Arch, AttnChoice, FfnChoice, SearchSpace};
 use crate::data::Batch;
 use crate::model::{run_subblock, CompiledModel, Trace};
-use crate::runtime::{literal::tensor_to_lit, lit_to_tensor, Registry};
+use crate::runtime::{tensor_to_val, val_to_tensor, Backend, Value};
 use crate::tensor::Tensor;
 use crate::train::losses;
 use crate::util::Json;
@@ -113,34 +113,34 @@ impl ScoreTable {
     }
 }
 
-/// Cache of replacement-block literal sets, keyed by (layer, kind:variant).
-/// Hoisting literal construction out of the per-batch scoring loop cut the
-/// scoring pass ~20% (EXPERIMENTS.md §Perf).
-pub struct VariantLits {
-    cache: HashMap<(usize, String), Vec<xla::Literal>>,
+/// Cache of replacement-block weight-value sets, keyed by
+/// (layer, kind:variant). Hoisting value construction out of the per-batch
+/// scoring loop cut the scoring pass ~20% (EXPERIMENTS.md §Perf).
+pub struct VariantVals {
+    cache: HashMap<(usize, String), Vec<Value>>,
 }
 
-impl VariantLits {
+impl VariantVals {
     fn get(
         &mut self,
-        reg: &Registry,
+        be: &dyn Backend,
         store: &Store,
         layer: usize,
         kind: &str,
         variant: &str,
-    ) -> Result<&Vec<xla::Literal>> {
+    ) -> Result<&Vec<Value>> {
         let key = (layer, variant_key(kind, variant));
         if !self.cache.contains_key(&key) {
-            let man = &reg.man;
+            let man = be.man();
             let layout = if kind == "attn" {
                 &man.attn_variants[variant]
             } else {
                 &man.ffn_variants[variant]
             };
             let ws = store.block(layer, kind, variant, layout)?;
-            let lits: Vec<xla::Literal> =
-                ws.iter().map(|t| tensor_to_lit(t)).collect::<Result<_>>()?;
-            self.cache.insert(key.clone(), lits);
+            let vals: Vec<Value> =
+                ws.iter().map(|t| tensor_to_val(t)).collect::<Result<_>>()?;
+            self.cache.insert(key.clone(), vals);
         }
         Ok(&self.cache[&key])
     }
@@ -150,17 +150,17 @@ impl VariantLits {
 /// l's attention input, with layer l's subblocks overridden.
 #[allow(clippy::too_many_arguments)]
 fn forward_with_replacement(
-    reg: &Registry,
+    be: &dyn Backend,
     parent: &CompiledModel,
     store: &Store,
     layer: usize,
     kind: &str,
     variant: &str,
     trace: &Trace,
-    vcache: &mut VariantLits,
+    vcache: &mut VariantVals,
 ) -> Result<Tensor> {
     let n_layers = parent.attn.len();
-    // build the replacement subblock lits
+    // build the replacement subblock values
     let (a_choice, f_choice) = if kind == "attn" {
         (AttnChoice::from_name(variant).unwrap(), FfnChoice::Ratio(0))
     } else {
@@ -176,46 +176,46 @@ fn forward_with_replacement(
                 x = match a_choice {
                     AttnChoice::NoOp => x,
                     _ => {
-                        let lits = vcache.get(reg, store, l, "attn", variant)?;
-                        let mut inputs: Vec<&xla::Literal> = vec![&x];
-                        inputs.extend(lits.iter());
-                        reg.run(&format!("attn_{variant}_train_fwd"), &inputs)?.remove(0)
+                        let vals = vcache.get(be, store, l, "attn", variant)?;
+                        let mut inputs: Vec<&Value> = vec![&x];
+                        inputs.extend(vals.iter());
+                        be.run(&format!("attn_{variant}_train_fwd"), &inputs)?.remove(0)
                     }
                 };
-                x = run_subblock(reg, &parent.ffn[l], "train", x)?;
+                x = run_subblock(be, &parent.ffn[l], "train", x)?;
             } else {
-                x = run_subblock(reg, &parent.attn[l], "train", x)?;
+                x = run_subblock(be, &parent.attn[l], "train", x)?;
                 x = match f_choice {
                     FfnChoice::NoOp => x,
                     _ => {
-                        let lits = vcache.get(reg, store, l, "ffn", variant)?;
-                        let mut inputs: Vec<&xla::Literal> = vec![&x];
-                        inputs.extend(lits.iter());
-                        reg.run(&format!("ffn_{variant}_train_fwd"), &inputs)?.remove(0)
+                        let vals = vcache.get(be, store, l, "ffn", variant)?;
+                        let mut inputs: Vec<&Value> = vec![&x];
+                        inputs.extend(vals.iter());
+                        be.run(&format!("ffn_{variant}_train_fwd"), &inputs)?.remove(0)
                     }
                 };
             }
         } else {
-            x = run_subblock(reg, &parent.attn[l], "train", x)?;
-            x = run_subblock(reg, &parent.ffn[l], "train", x)?;
+            x = run_subblock(be, &parent.attn[l], "train", x)?;
+            x = run_subblock(be, &parent.ffn[l], "train", x)?;
         }
     }
     let logits =
-        reg.run("head_train", &[&x, &parent.final_norm, &parent.embed])?.remove(0);
-    lit_to_tensor(&logits)
+        be.run("head_train", &[&x, &parent.final_norm, &parent.embed])?.remove(0);
+    val_to_tensor(&logits)
 }
 
 /// Score the full library: every (layer, variant) under `metric`, averaged
 /// over `batches`. Returns costs where parent variants are included too
 /// (they measure the library's own fidelity, not assumed zero).
 pub fn score_library(
-    reg: &Registry,
+    be: &dyn Backend,
     store: &Store,
     space: &SearchSpace,
     batches: &[Batch],
     metric: Metric,
 ) -> Result<ScoreTable> {
-    let man = &reg.man;
+    let man = be.man();
     let n_layers = man.cfg.n_layers;
     let parent_arch = Arch::parent(n_layers);
     let parent = CompiledModel::assemble(man, store, &parent_arch)?;
@@ -227,10 +227,10 @@ pub fn score_library(
         },
         ..Default::default()
     };
-    let mut vcache = VariantLits { cache: HashMap::new() };
+    let mut vcache = VariantVals { cache: HashMap::new() };
 
     for batch in batches {
-        let trace = parent.forward(reg, "train", &batch.inputs, batch.b, batch.s)?;
+        let trace = parent.forward(be, "train", &batch.inputs, batch.b, batch.s)?;
         let parent_lm = losses::lm_loss(&trace.logits, &batch.targets);
         for l in 0..n_layers {
             for a in &space.attn {
@@ -239,7 +239,7 @@ pub fn score_library(
                     AttnChoice::Gqa { divisor: 1 } => 0.0,
                     _ => {
                         let logits = forward_with_replacement(
-                            reg, &parent, store, l, "attn", &name, &trace, &mut vcache,
+                            be, &parent, store, l, "attn", &name, &trace, &mut vcache,
                         )?;
                         metric_cost(metric, &trace.logits, &logits, &batch.targets, parent_lm)
                     }
@@ -253,7 +253,7 @@ pub fn score_library(
                     FfnChoice::Ratio(0) => 0.0,
                     _ => {
                         let logits = forward_with_replacement(
-                            reg, &parent, store, l, "ffn", &name, &trace, &mut vcache,
+                            be, &parent, store, l, "ffn", &name, &trace, &mut vcache,
                         )?;
                         metric_cost(metric, &trace.logits, &logits, &batch.targets, parent_lm)
                     }
@@ -276,8 +276,8 @@ fn metric_cost(metric: Metric, parent_logits: &Tensor, logits: &Tensor, targets:
 
 /// Data-free "scoring" ablation (§8.2.3): block score = -(parameter
 /// count), so maximizing score = maximizing parameters.
-pub fn param_count_table(reg: &Registry, space: &SearchSpace) -> ScoreTable {
-    let man = &reg.man;
+pub fn param_count_table(be: &dyn Backend, space: &SearchSpace) -> ScoreTable {
+    let man = be.man();
     let mut t = ScoreTable { metric_name: "neg_params".into(), ..Default::default() };
     for l in 0..man.cfg.n_layers {
         for a in &space.attn {

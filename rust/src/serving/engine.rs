@@ -1,4 +1,5 @@
-//! Continuous-batching inference engine over the AOT block executables.
+//! Continuous-batching inference engine over the block executables of any
+//! `Backend`.
 //!
 //! Slots are fixed by the decode executables' compiled batch (`b_decode`);
 //! admission is gated by the variable-GQA paged KV manager; prefill runs
@@ -6,18 +7,22 @@
 //! slots together with per-sequence positions (the paper's §4.1 point that
 //! batched decode amortizes weight reads is physical here too). Greedy
 //! sampling; stop on EOS / max_new / cache horizon.
+//!
+//! Prompts longer than the prefill window are *chunked*: the first
+//! `s_prefill` tokens go through the prefill executable, the remainder is
+//! streamed through decode steps (teacher-forcing the known prompt tokens)
+//! before generation starts — no silent truncation. Prompts that cannot
+//! fit the cache horizon at all are rejected at submit.
 
 use std::collections::VecDeque;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
-use xla::Literal;
 
 use crate::arch::{Arch, AttnChoice};
-use crate::config::Manifest;
 use crate::data::world::EOS;
 use crate::model::CompiledModel;
-use crate::runtime::{lit_f32, lit_i32, lit_to_tensor, literal::tensor_to_lit, Registry};
+use crate::runtime::{val_f32, val_i32, val_to_tensor, Backend, Value};
 use crate::weights::Store;
 
 use super::kvcache::{PageCfg, PagedKvManager};
@@ -28,6 +33,15 @@ pub struct Request {
     pub id: u64,
     pub prompt: Vec<u32>,
     pub max_new: usize,
+}
+
+impl Request {
+    /// The sequence's full cache horizon: what `can_admit` checks and
+    /// `prefill` reserves. Deriving both from one place is what makes the
+    /// no-deadlock invariant structural.
+    fn horizon(&self, s_max: usize) -> usize {
+        (self.prompt.len() + self.max_new).min(s_max)
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -44,14 +58,16 @@ struct Slot {
     /// next position to write (== tokens so far)
     len: usize,
     last_token: u32,
+    /// prompt tokens beyond the prefill window, still to be teacher-forced
+    pending: VecDeque<u32>,
     t_submit: Instant,
     t_first: Option<Instant>,
 }
 
 /// Per-layer decode cache (gqa layers only).
 struct LayerCache {
-    k: Literal,
-    v: Literal,
+    k: Value,
+    v: Value,
     kv_heads: usize,
 }
 
@@ -65,7 +81,7 @@ struct LayerExecs {
 }
 
 pub struct Engine<'a> {
-    reg: &'a Registry,
+    be: &'a dyn Backend,
     model: CompiledModel,
     caches: Vec<Option<LayerCache>>,
     slots: Vec<Option<Slot>>,
@@ -78,21 +94,20 @@ pub struct Engine<'a> {
 }
 
 impl<'a> Engine<'a> {
-    pub fn new(reg: &'a Registry, store: &Store, arch: &Arch, kv_budget_bytes: usize) -> Result<Engine<'a>> {
-        let man = &reg.man;
+    pub fn new(be: &'a dyn Backend, store: &Store, arch: &Arch, kv_budget_bytes: usize) -> Result<Engine<'a>> {
+        let man = be.man();
         let cfg = &man.cfg;
         let model = CompiledModel::assemble(man, store, arch)?;
         let mut caches = Vec::with_capacity(arch.n_layers());
-        for (l, (a, _)) in arch.layers.iter().enumerate() {
-            let _ = l;
+        for (a, _) in arch.layers.iter() {
             match a {
                 AttnChoice::Gqa { .. } => {
                     let kv = man.attn_variants[&a.name()].kv_heads;
                     let shape = [cfg.b_decode, cfg.s_max, kv, cfg.head_dim];
                     let zeros = vec![0f32; shape.iter().product()];
                     caches.push(Some(LayerCache {
-                        k: lit_f32(&shape, &zeros)?,
-                        v: lit_f32(&shape, &zeros)?,
+                        k: val_f32(&shape, &zeros)?,
+                        v: val_f32(&shape, &zeros)?,
                         kv_heads: kv,
                     }));
                 }
@@ -113,7 +128,7 @@ impl<'a> Engine<'a> {
             })
             .collect();
         Ok(Engine {
-            reg,
+            be,
             model,
             caches,
             slots: (0..cfg.b_decode).map(|_| None).collect(),
@@ -126,11 +141,27 @@ impl<'a> Engine<'a> {
         })
     }
 
-    pub fn submit(&mut self, prompt: Vec<u32>, max_new: usize) -> u64 {
+    /// Enqueue a request. Rejects prompts the engine can never serve:
+    /// empty prompts and prompts that fill the whole cache horizon leaving
+    /// no room for a generated token.
+    pub fn submit(&mut self, prompt: Vec<u32>, max_new: usize) -> Result<u64> {
+        let s_max = self.be.man().cfg.s_max;
+        if prompt.is_empty() {
+            self.metrics.rejected_prompts += 1;
+            return Err(anyhow!("empty prompt"));
+        }
+        if prompt.len() >= s_max {
+            self.metrics.rejected_prompts += 1;
+            return Err(anyhow!(
+                "prompt of {} tokens cannot fit the cache horizon s_max={} (needs >= 1 slot for generation)",
+                prompt.len(),
+                s_max
+            ));
+        }
         let id = self.next_id;
         self.next_id += 1;
         self.queue.push_back((Request { id, prompt, max_new }, Instant::now()));
-        id
+        Ok(id)
     }
 
     fn free_slot(&self) -> Option<usize> {
@@ -145,7 +176,7 @@ impl<'a> Engine<'a> {
     fn admit(&mut self) -> Result<()> {
         while let Some(slot_idx) = self.free_slot() {
             let Some((req, _t)) = self.queue.front() else { break };
-            let horizon = (req.prompt.len() + req.max_new).min(self.reg.man.cfg.s_max);
+            let horizon = req.horizon(self.be.man().cfg.s_max);
             if !self.paged.can_admit(horizon) {
                 break; // backpressure: wait for a release
             }
@@ -155,69 +186,104 @@ impl<'a> Engine<'a> {
         Ok(())
     }
 
-    /// Prefill a prompt at batch 1 and seed the slot's caches.
+    /// Prefill a prompt at batch 1 and seed the slot's caches. Prompts
+    /// longer than the prefill window leave their tail in `pending`, to be
+    /// teacher-forced through decode steps before generation starts.
+    ///
+    /// Pages for the sequence's *full horizon* are reserved here — the
+    /// same amount `can_admit` checked — so concurrently admitted
+    /// sequences can never jointly over-commit the pool and `grow` cannot
+    /// fail mid-generation.
     fn prefill(&mut self, slot_idx: usize, req: Request, t_submit: Instant) -> Result<()> {
-        let man: &Manifest = &self.reg.man;
-        let cfg = &man.cfg;
+        let cfg = &self.be.man().cfg;
+        let horizon = req.horizon(cfg.s_max);
         let sp = cfg.s_prefill;
         let plen = req.prompt.len().min(sp);
+        let chunked = req.prompt.len() > sp;
         let mut tokens: Vec<i32> = req.prompt.iter().take(plen).map(|&t| t as i32).collect();
         tokens.resize(sp, 0); // right-pad; causal masking isolates the pad
-        let tok = lit_i32(&[1, sp], &tokens)?;
+        let tok = val_i32(&[1, sp], &tokens)?;
         let t_exec = Instant::now();
-        let mut x = self.reg.run("embed_prefill", &[&tok, &self.model.embed])?.remove(0);
+        let mut x = self.be.run("embed_prefill", &[&tok, &self.model.embed])?.remove(0);
         for l in 0..self.model.attn.len() {
             let blk = &self.model.attn[l];
             match &self.execs[l].attn_prefill {
                 None => {}
                 Some(exec) => {
-                    let mut inputs: Vec<&Literal> = vec![&x];
-                    inputs.extend(blk.lits.iter());
-                    let mut out = self.reg.run(exec, &inputs)?;
+                    let mut inputs: Vec<&Value> = vec![&x];
+                    inputs.extend(blk.vals.iter());
+                    let mut out = self.be.run(exec, &inputs)?;
                     x = out.remove(0);
                     if let Some(cache) = &mut self.caches[l] {
-                        // copy rows [0, plen) of the prefill K/V into this slot
-                        let k_new = lit_to_tensor(&out[0])?;
-                        let v_new = lit_to_tensor(&out[1])?;
-                        let mut kc = lit_to_tensor(&cache.k)?;
-                        let mut vc = lit_to_tensor(&cache.v)?;
+                        // splice rows [0, plen) of the prefill K/V into this
+                        // slot's lane, in place (Values are host-resident)
                         let row = cache.kv_heads * cfg.head_dim;
                         let smax = cfg.s_max;
+                        let k_new = out[0].as_f32()?;
+                        let kc = cache.k.as_f32_mut()?;
                         for p in 0..plen {
                             let dst = (slot_idx * smax + p) * row;
-                            let src = p * row;
-                            kc.data[dst..dst + row].copy_from_slice(&k_new.data[src..src + row]);
-                            vc.data[dst..dst + row].copy_from_slice(&v_new.data[src..src + row]);
+                            kc.data[dst..dst + row].copy_from_slice(&k_new.data[p * row..(p + 1) * row]);
                         }
-                        cache.k = tensor_to_lit(&kc)?;
-                        cache.v = tensor_to_lit(&vc)?;
+                        let v_new = out[1].as_f32()?;
+                        let vc = cache.v.as_f32_mut()?;
+                        for p in 0..plen {
+                            let dst = (slot_idx * smax + p) * row;
+                            vc.data[dst..dst + row].copy_from_slice(&v_new.data[p * row..(p + 1) * row]);
+                        }
                     }
                 }
             }
             let blk = &self.model.ffn[l];
             if let Some(exec) = &self.execs[l].ffn_prefill {
-                let mut inputs: Vec<&Literal> = vec![&x];
-                inputs.extend(blk.lits.iter());
-                x = self.reg.run(exec, &inputs)?.remove(0);
+                let mut inputs: Vec<&Value> = vec![&x];
+                inputs.extend(blk.vals.iter());
+                x = self.be.run(exec, &inputs)?.remove(0);
             }
         }
+        if chunked {
+            // the prompt continues past the window: the true next token is
+            // known, so skip the head matmul entirely and stream the tail
+            // through decode steps.
+            self.metrics.execute_secs += t_exec.elapsed().as_secs_f64();
+            self.paged.admit(req.id, horizon);
+            self.metrics.prefills += 1;
+            self.metrics.prompt_tokens += req.prompt.len();
+            self.metrics.chunked_prefills += 1;
+            let mut pending: VecDeque<u32> = req.prompt[plen..].iter().copied().collect();
+            let first_pending = pending.pop_front().unwrap();
+            let slot = Slot {
+                req,
+                generated: vec![],
+                len: plen,
+                last_token: first_pending,
+                pending,
+                t_submit,
+                t_first: None,
+            };
+            self.slots[slot_idx] = Some(slot);
+            return Ok(());
+        }
+
         let logits =
-            self.reg.run("head_prefill", &[&x, &self.model.final_norm, &self.model.embed])?.remove(0);
+            self.be.run("head_prefill", &[&x, &self.model.final_norm, &self.model.embed])?.remove(0);
         self.metrics.execute_secs += t_exec.elapsed().as_secs_f64();
-        let logits = lit_to_tensor(&logits)?;
+        self.paged.admit(req.id, horizon);
+        self.metrics.prefills += 1;
+        self.metrics.prompt_tokens += req.prompt.len();
+
+        let logits = val_to_tensor(&logits)?;
         // greedy next token from the last prompt position
         let v = cfg.v;
         let rowbase = (plen - 1) * v;
         let first = argmax(&logits.data[rowbase..rowbase + v]) as u32;
 
-        self.paged.admit(req.id, plen);
-        self.metrics.prefills += 1;
-        self.metrics.prompt_tokens += plen;
         let slot = Slot {
             req,
             generated: vec![first],
             len: plen,
             last_token: first,
+            pending: VecDeque::new(),
             t_submit,
             t_first: Some(Instant::now()),
         };
@@ -227,17 +293,16 @@ impl<'a> Engine<'a> {
         self.metrics.generated_tokens += 1;
         // immediate completion checks
         if first == EOS || slot.req.max_new <= 1 {
-            self.finish(slot_idx, Some(slot));
+            self.finish(Some(slot));
             return Ok(());
         }
-        self.slots[slot_idx] = Some(slot.take_ready());
+        self.slots[slot_idx] = Some(slot);
         Ok(())
     }
 
     /// One batched decode step over all active slots.
     fn decode_step(&mut self) -> Result<()> {
-        let man = &self.reg.man;
-        let cfg = &man.cfg;
+        let cfg = &self.be.man().cfg;
         let bd = cfg.b_decode;
         let t_step = Instant::now();
         let mut tokens = vec![0i32; bd];
@@ -248,49 +313,75 @@ impl<'a> Engine<'a> {
                 pos[i] = s.len as i32;
             }
         }
-        let tok = lit_i32(&[bd, 1], &tokens)?;
-        let pos_lit = lit_i32(&[bd], &pos)?;
+        let tok = val_i32(&[bd, 1], &tokens)?;
+        let pos_val = val_i32(&[bd], &pos)?;
         let t_exec = Instant::now();
-        let mut x = self.reg.run("embed_decode", &[&tok, &self.model.embed])?.remove(0);
+        let mut x = self.be.run("embed_decode", &[&tok, &self.model.embed])?.remove(0);
         for l in 0..self.model.attn.len() {
             let blk = &self.model.attn[l];
             match &self.execs[l].attn_decode {
                 None => {}
                 Some(exec) => {
                     if let Some(cache) = &mut self.caches[l] {
-                        let mut inputs: Vec<&Literal> = vec![&x, &cache.k, &cache.v, &pos_lit];
-                        inputs.extend(blk.lits.iter());
-                        let mut out = self.reg.run(exec, &inputs)?;
+                        let mut inputs: Vec<&Value> = vec![&x, &cache.k, &cache.v, &pos_val];
+                        inputs.extend(blk.vals.iter());
+                        let mut out = self.be.run(exec, &inputs)?;
                         x = out.remove(0);
                         cache.v = out.pop().unwrap();
                         cache.k = out.pop().unwrap();
                     } else {
                         // linear attention: stateless decode
-                        let mut inputs: Vec<&Literal> = vec![&x];
-                        inputs.extend(blk.lits.iter());
-                        x = self.reg.run(exec, &inputs)?.remove(0);
+                        let mut inputs: Vec<&Value> = vec![&x];
+                        inputs.extend(blk.vals.iter());
+                        x = self.be.run(exec, &inputs)?.remove(0);
                     }
                 }
             }
             let blk = &self.model.ffn[l];
             if let Some(exec) = &self.execs[l].ffn_decode {
-                let mut inputs: Vec<&Literal> = vec![&x];
-                inputs.extend(blk.lits.iter());
-                x = self.reg.run(exec, &inputs)?.remove(0);
+                let mut inputs: Vec<&Value> = vec![&x];
+                inputs.extend(blk.vals.iter());
+                x = self.be.run(exec, &inputs)?.remove(0);
             }
         }
-        let logits =
-            self.reg.run("head_decode", &[&x, &self.model.final_norm, &self.model.embed])?.remove(0);
+        // the LM head is only needed if some slot will actually sample this
+        // step; while every active slot is still teacher-forcing a chunked
+        // prompt tail, its output would be discarded wholesale.
+        let sampling = self.slots.iter().flatten().any(|s| s.pending.is_empty());
+        let logits = if sampling {
+            let l = self
+                .be
+                .run("head_decode", &[&x, &self.model.final_norm, &self.model.embed])?
+                .remove(0);
+            Some(val_to_tensor(&l)?)
+        } else {
+            None
+        };
         self.metrics.execute_secs += t_exec.elapsed().as_secs_f64();
-        let logits = lit_to_tensor(&logits)?;
         let v = cfg.v;
 
         let mut to_finish = Vec::new();
         for i in 0..bd {
             let Some(slot) = &mut self.slots[i] else { continue };
-            let next = argmax(&logits.data[i * v..(i + 1) * v]) as u32;
+            // no per-step page growth: the full horizon was reserved at
+            // admission, and the done-checks below keep `len` inside it
             slot.len += 1;
-            self.paged.grow(slot.req.id);
+            debug_assert!(slot.len < self.be.man().cfg.s_max);
+            if let Some(next_prompt_tok) = slot.pending.pop_front() {
+                // still consuming the prompt tail: the model's prediction is
+                // discarded, the true prompt token is teacher-forced.
+                slot.last_token = next_prompt_tok;
+                continue;
+            }
+            let logits = logits.as_ref().expect("sampling slot implies head ran");
+            let next = argmax(&logits.data[i * v..(i + 1) * v]) as u32;
+            if slot.t_first.is_none() {
+                // first *generated* token of a chunked prompt
+                slot.t_first = Some(Instant::now());
+                self.metrics
+                    .ttft
+                    .push(slot.t_first.unwrap().duration_since(slot.t_submit).as_secs_f64());
+            }
             slot.generated.push(next);
             slot.last_token = next;
             self.metrics.generated_tokens += 1;
@@ -303,7 +394,7 @@ impl<'a> Engine<'a> {
         }
         for i in to_finish {
             let slot = self.slots[i].take();
-            self.finish(i, slot);
+            self.finish(slot);
         }
         self.metrics.decode_steps += 1;
         self.metrics.sched_overhead_secs +=
@@ -311,7 +402,7 @@ impl<'a> Engine<'a> {
         Ok(())
     }
 
-    fn finish(&mut self, _slot_idx: usize, slot: Option<Slot>) {
+    fn finish(&mut self, slot: Option<Slot>) {
         if let Some(slot) = slot {
             self.paged.release(slot.req.id);
             self.metrics.requests_completed += 1;
@@ -341,7 +432,7 @@ impl<'a> Engine<'a> {
                     break;
                 }
                 // queue non-empty but nothing admitted -> cache stuck
-                if self.active() == 0 && self.free_slot().is_some() {
+                if self.free_slot().is_some() {
                     return Err(anyhow!("engine stalled: request cannot be admitted"));
                 }
             }
@@ -352,26 +443,39 @@ impl<'a> Engine<'a> {
         self.metrics.wall_secs += t0.elapsed().as_secs_f64();
         Ok(std::mem::take(&mut self.finished))
     }
-}
 
-impl<'a> Engine<'a> {
     pub fn queue_len(&self) -> usize {
         self.queue.len()
     }
 }
 
-impl Slot {
-    fn take_ready(self) -> Slot {
-        self
-    }
-}
-
+/// NaN-safe greedy argmax: NaN logits are skipped (a NaN never wins);
+/// all-NaN rows fall back to index 0.
 fn argmax(xs: &[f32]) -> usize {
-    let mut best = 0;
+    let mut best: Option<usize> = None;
     for (i, &x) in xs.iter().enumerate() {
-        if x > xs[best] {
-            best = i;
+        if x.is_nan() {
+            continue;
+        }
+        match best {
+            None => best = Some(i),
+            Some(b) if x > xs[b] => best = Some(i),
+            _ => {}
         }
     }
-    best
+    best.unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::argmax;
+
+    #[test]
+    fn argmax_ignores_nans() {
+        assert_eq!(argmax(&[1.0, 5.0, 3.0]), 1);
+        assert_eq!(argmax(&[f32::NAN, 2.0, 1.0]), 1);
+        assert_eq!(argmax(&[2.0, f32::NAN, 1.0]), 0);
+        assert_eq!(argmax(&[f32::NAN, f32::NAN]), 0);
+        assert_eq!(argmax(&[f32::NEG_INFINITY, -1.0]), 1);
+    }
 }

@@ -159,13 +159,12 @@ impl PagedKvManager {
 mod tests {
     use super::*;
     use crate::arch::FfnChoice;
-    use crate::config::Manifest;
+    use crate::config::{Manifest, TinyManifest};
 
-    fn setup(arch_fn: impl Fn(usize) -> Arch) -> Option<(Manifest, Arch)> {
-        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
-        let man = Manifest::load(&dir).ok()?;
+    fn setup(arch_fn: impl Fn(usize) -> Arch) -> (Manifest, Arch) {
+        let man = TinyManifest::synthetic();
         let arch = arch_fn(man.cfg.n_layers);
-        Some((man, arch))
+        (man, arch)
     }
 
     fn cfg(budget: usize) -> PageCfg {
@@ -174,7 +173,7 @@ mod tests {
 
     #[test]
     fn variable_gqa_layers_have_different_page_sizes() {
-        let Some((man, _)) = setup(Arch::parent) else { return };
+        let (man, _) = setup(Arch::parent);
         let mut arch = Arch::parent(man.cfg.n_layers);
         arch.layers[0].0 = AttnChoice::Gqa { divisor: 4 };
         arch.layers[1].0 = AttnChoice::Linear;
@@ -186,23 +185,28 @@ mod tests {
 
     #[test]
     fn admission_and_release_accounting() {
-        let Some((man, arch)) = setup(Arch::parent) else { return };
+        let (man, arch) = setup(Arch::parent);
         let mgr_budget = 1 << 18;
         let mut mgr = PagedKvManager::new(&man, &arch, cfg(mgr_budget));
         assert!(mgr.admit(1, 20)); // 2 pages/layer
         let b1 = mgr.allocated_bytes();
         assert!(b1 > 0);
+        // 20 positions at page_len 16 = 2 pages on every caching layer
+        let expected: usize = (0..man.cfg.n_layers).map(|l| 2 * mgr.page_bytes(l)).sum();
+        assert_eq!(b1, expected);
+        assert_eq!(mgr.active_seqs(), 1);
         assert!(mgr.admit(2, 5));
         let b2 = mgr.allocated_bytes();
         mgr.release(1);
         assert_eq!(mgr.allocated_bytes(), b2 - b1);
         mgr.release(2);
         assert_eq!(mgr.allocated_bytes(), 0);
+        assert_eq!(mgr.active_seqs(), 0);
     }
 
     #[test]
     fn grow_allocates_only_at_page_boundary() {
-        let Some((man, arch)) = setup(Arch::parent) else { return };
+        let (man, arch) = setup(Arch::parent);
         let mut mgr = PagedKvManager::new(&man, &arch, cfg(1 << 20));
         assert!(mgr.admit(1, 16)); // exactly one page
         let b = mgr.allocated_bytes();
@@ -217,7 +221,7 @@ mod tests {
 
     #[test]
     fn budget_exhaustion_rejects() {
-        let Some((man, arch)) = setup(Arch::parent) else { return };
+        let (man, arch) = setup(Arch::parent);
         let one_seq_bytes = {
             let mut probe = PagedKvManager::new(&man, &arch, cfg(usize::MAX / 2));
             probe.admit(1, 64);
@@ -232,8 +236,57 @@ mod tests {
     }
 
     #[test]
+    fn can_admit_is_exact_at_the_budget_boundary() {
+        let (man, arch) = setup(Arch::parent);
+        let page_len = 16;
+        // budget for exactly 2 pages on every caching layer
+        let probe = PagedKvManager::new(&man, &arch, cfg(0));
+        let two_pages: usize = (0..man.cfg.n_layers).map(|l| 2 * probe.page_bytes(l)).sum();
+        let mgr = PagedKvManager::new(&man, &arch, cfg(two_pages));
+        // anything up to 2 full pages of positions fits exactly...
+        assert!(mgr.can_admit(2 * page_len));
+        // ...one more position needs a third page and must be refused
+        assert!(!mgr.can_admit(2 * page_len + 1));
+    }
+
+    #[test]
+    fn grow_rejects_at_exhaustion_without_corrupting_accounting() {
+        let (man, arch) = setup(Arch::parent);
+        let probe = PagedKvManager::new(&man, &arch, cfg(0));
+        let one_page: usize = (0..man.cfg.n_layers).map(|l| probe.page_bytes(l)).sum();
+        let mut mgr = PagedKvManager::new(&man, &arch, cfg(one_page));
+        assert!(mgr.admit(1, 16)); // fills the single page exactly
+        let b = mgr.allocated_bytes();
+        assert_eq!(b, one_page);
+        assert!(!mgr.grow(1), "position 17 needs a second page: must fail");
+        assert_eq!(mgr.allocated_bytes(), b, "failed grow must not leak bytes");
+        // growing an unknown sequence is also a clean refusal
+        assert!(!mgr.grow(999));
+        assert_eq!(mgr.allocated_bytes(), b);
+    }
+
+    #[test]
+    fn double_release_is_safe() {
+        let (man, arch) = setup(Arch::parent);
+        let mut mgr = PagedKvManager::new(&man, &arch, cfg(1 << 20));
+        assert!(mgr.admit(1, 20));
+        assert!(mgr.admit(2, 20));
+        let after_two = mgr.allocated_bytes();
+        mgr.release(1);
+        let after_one = mgr.allocated_bytes();
+        mgr.release(1); // second release of the same id: no-op
+        assert_eq!(mgr.allocated_bytes(), after_one);
+        mgr.release(7); // never-admitted id: no-op
+        assert_eq!(mgr.allocated_bytes(), after_one);
+        assert_eq!(mgr.active_seqs(), 1);
+        mgr.release(2);
+        assert_eq!(mgr.allocated_bytes(), 0);
+        assert!(after_two > after_one);
+    }
+
+    #[test]
     fn noop_attention_frees_all_cache() {
-        let Some((man, _)) = setup(Arch::parent) else { return };
+        let (man, _) = setup(Arch::parent);
         let n = man.cfg.n_layers;
         let mut arch = Arch::parent(n);
         for l in 0..n {

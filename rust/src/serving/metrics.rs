@@ -17,6 +17,11 @@ pub struct EngineMetrics {
     /// engine-side scheduling overhead per decode step (non-execute time)
     pub sched_overhead_secs: f64,
     pub execute_secs: f64,
+    /// prompts longer than the prefill window, ingested via chunked
+    /// (teacher-forced) decode steps instead of being truncated
+    pub chunked_prefills: usize,
+    /// prompts rejected at submit (empty, or >= the cache horizon)
+    pub rejected_prompts: usize,
 }
 
 impl EngineMetrics {
@@ -57,14 +62,16 @@ impl EngineMetrics {
 
     pub fn summary(&self) -> String {
         format!(
-            "reqs {} | gen {} tok | {:.1} tok/s (total {:.1}) | ttft {:.1} ms | p95 e2e {:.1} ms | overhead {:.1}%",
+            "reqs {} | gen {} tok | {:.1} tok/s (total {:.1}) | ttft {:.1} ms | p95 e2e {:.1} ms | overhead {:.1}% | chunked {} | rejected {}",
             self.requests_completed,
             self.generated_tokens,
             self.gen_throughput(),
             self.total_throughput(),
             self.mean_ttft() * 1e3,
             self.p95_e2e() * 1e3,
-            self.overhead_frac() * 100.0
+            self.overhead_frac() * 100.0,
+            self.chunked_prefills,
+            self.rejected_prompts
         )
     }
 }

@@ -4,8 +4,9 @@
 //! *different numbers of KV heads per layer*, plus linear-attention and
 //! no-op blocks — reimplemented natively: the `kvcache` manager tracks
 //! per-layer page tables whose page byte-size depends on that layer's KV
-//! head count; the `engine` runs continuous batching over the AOT decode
-//! executables (prefill b=1, batched decode with per-sequence positions).
+//! head count; the `engine` runs continuous batching over any `Backend`'s
+//! decode executables (prefill b=1, batched decode with per-sequence
+//! positions, chunked ingestion for prompts past the prefill window).
 
 pub mod engine;
 pub mod kvcache;

@@ -6,7 +6,7 @@
 //!
 //! The backward pass chains per-variant `*_train_vjp` executables (which
 //! recompute their primal internally — deliberate rematerialization) and
-//! applies Adam host-side.
+//! applies Adam host-side. Runs on any `Backend`.
 
 pub mod adam;
 pub mod losses;
@@ -18,7 +18,7 @@ use crate::arch::Arch;
 use crate::config::Manifest;
 use crate::data::Batch;
 use crate::model::{vjp_subblock, CompiledModel, Trace};
-use crate::runtime::{literal::tensor_to_lit, lit_i32, lit_to_tensor, Registry};
+use crate::runtime::{tensor_to_val, val_i32, val_to_tensor, Backend, Value};
 use crate::tensor::Tensor;
 use crate::weights::{store::block_key, Store};
 
@@ -71,9 +71,9 @@ pub struct StepMetrics {
 
 /// Per-layer hidden states (outputs of each layer's FFN subblock) from a
 /// trace: what the cosine loss compares between parent and child.
-pub fn layer_hiddens(trace: &Trace) -> Vec<&xla::Literal> {
+pub fn layer_hiddens(trace: &Trace) -> Vec<&Value> {
     let l = trace.attn_in.len();
-    let mut out: Vec<&xla::Literal> = Vec::with_capacity(l);
+    let mut out: Vec<&Value> = Vec::with_capacity(l);
     for i in 1..l {
         out.push(&trace.attn_in[i]);
     }
@@ -86,7 +86,7 @@ pub fn layer_hiddens(trace: &Trace) -> Vec<&xla::Literal> {
 /// uses cosine or KLD. Returns metrics; mutates `store` in place.
 #[allow(clippy::too_many_arguments)]
 pub fn train_step(
-    reg: &Registry,
+    be: &dyn Backend,
     store: &mut Store,
     arch: &Arch,
     adam: &mut Adam,
@@ -95,9 +95,9 @@ pub fn train_step(
     parent_trace: Option<&Trace>,
     lr: f32,
 ) -> Result<StepMetrics> {
-    let man = &reg.man;
+    let man = be.man();
     let child = CompiledModel::assemble(man, store, arch)?;
-    let trace = child.forward(reg, "train", &batch.inputs, batch.b, batch.s)?;
+    let trace = child.forward(be, "train", &batch.inputs, batch.b, batch.s)?;
 
     // ---- loss heads -> dlogits ----
     let mut metrics = StepMetrics::default();
@@ -122,8 +122,8 @@ pub fn train_step(
         let ph = layer_hiddens(p);
         let ch = layer_hiddens(&trace);
         for l in 0..n_layers {
-            let hp = lit_to_tensor(ph[l])?;
-            let hc = lit_to_tensor(ch[l])?;
+            let hp = val_to_tensor(ph[l])?;
+            let hc = val_to_tensor(ch[l])?;
             let (cl, g) = losses::cosine_loss_and_grad(&hc, &hp);
             metrics.cosine += cl / n_layers as f64;
             dcos[l] = Some(g);
@@ -133,31 +133,31 @@ pub fn train_step(
 
     // ---- backward chain ----
     let mut grads: HashMap<String, Tensor> = HashMap::new();
-    let dlogits_lit = tensor_to_lit(&dlogits)?;
-    let mut out = reg.run(
+    let dlogits_val = tensor_to_val(&dlogits)?;
+    let mut out = be.run(
         "head_train_vjp",
-        &[&trace.hidden, &child.final_norm, &child.embed, &dlogits_lit],
+        &[&trace.hidden, &child.final_norm, &child.embed, &dlogits_val],
     )?;
     let mut dx = out.remove(0);
-    grads.insert("final_norm".into(), lit_to_tensor(&out[0])?);
-    grads.insert("embed".into(), lit_to_tensor(&out[1])?);
+    grads.insert("final_norm".into(), val_to_tensor(&out[0])?);
+    grads.insert("embed".into(), val_to_tensor(&out[1])?);
 
     for l in (0..n_layers).rev() {
         if let Some(g) = &dcos[l] {
             // cosine grad attaches to this layer's hidden state
-            dx = tensor_to_lit(&lit_to_tensor(&dx)?.add(g))?;
+            dx = tensor_to_val(&val_to_tensor(&dx)?.add(g))?;
         }
         let (a, f) = &arch.layers[l];
-        let (dx2, dwf) = vjp_subblock(reg, &child.ffn[l], &trace.ffn_in[l], dx)?;
+        let (dx2, dwf) = vjp_subblock(be, &child.ffn[l], &trace.ffn_in[l], dx)?;
         accumulate_block_grads(&mut grads, man, l, "ffn", &f.name(), dwf)?;
-        let (dx3, dwa) = vjp_subblock(reg, &child.attn[l], &trace.attn_in[l], dx2)?;
+        let (dx3, dwa) = vjp_subblock(be, &child.attn[l], &trace.attn_in[l], dx2)?;
         accumulate_block_grads(&mut grads, man, l, "attn", &a.name(), dwa)?;
         dx = dx3;
     }
 
-    let tok = lit_i32(&[batch.b, batch.s], &batch.inputs)?;
-    let de = reg.run("embed_train_vjp", &[&tok, &child.embed, &dx])?.remove(0);
-    let de = lit_to_tensor(&de)?;
+    let tok = val_i32(&[batch.b, batch.s], &batch.inputs)?;
+    let de = be.run("embed_train_vjp", &[&tok, &child.embed, &dx])?.remove(0);
+    let de = val_to_tensor(&de)?;
     let e = grads.get_mut("embed").unwrap();
     *e = e.add(&de); // tied embedding: head grad + input grad
 
@@ -179,7 +179,7 @@ fn accumulate_block_grads(
     layer: usize,
     kind: &str,
     variant: &str,
-    dws: Vec<xla::Literal>,
+    dws: Vec<Value>,
 ) -> Result<()> {
     if dws.is_empty() {
         return Ok(()); // NoOp
@@ -189,8 +189,8 @@ fn accumulate_block_grads(
     } else {
         &man.ffn_variants[variant]
     };
-    for ((name, _), lit) in layout.weights.iter().zip(dws) {
-        grads.insert(block_key(layer, kind, variant, name), lit_to_tensor(&lit)?);
+    for ((name, _), val) in layout.weights.iter().zip(dws) {
+        grads.insert(block_key(layer, kind, variant, name), val_to_tensor(&val)?);
     }
     Ok(())
 }
@@ -198,14 +198,14 @@ fn accumulate_block_grads(
 /// Evaluation-only forward: mean LM loss and KLD vs an optional parent
 /// trace over one batch.
 pub fn eval_batch(
-    reg: &Registry,
+    be: &dyn Backend,
     store: &Store,
     arch: &Arch,
     batch: &Batch,
     parent_trace: Option<&Trace>,
 ) -> Result<(f64, f64)> {
-    let child = CompiledModel::assemble(&reg.man, store, arch)?;
-    let trace = child.forward(reg, "train", &batch.inputs, batch.b, batch.s)?;
+    let child = CompiledModel::assemble(be.man(), store, arch)?;
+    let trace = child.forward(be, "train", &batch.inputs, batch.b, batch.s)?;
     let lm = losses::lm_loss(&trace.logits, &batch.targets);
     let kld = parent_trace
         .map(|p| losses::kld_loss(&p.logits, &trace.logits))

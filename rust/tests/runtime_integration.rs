@@ -1,46 +1,54 @@
-//! Integration tests over the real AOT artifacts (requires `make
-//! artifacts`): the HLO-text interchange, block chaining, training step,
-//! BLD, and scoring all run against the tiny config.
-
-use std::path::Path;
+//! Integration tests over the runtime `Backend`: block chaining, training
+//! steps, BLD, and scoring, all running hermetically on the pure-Rust
+//! `RefBackend` with the in-memory synthetic manifest — no `artifacts/`
+//! directory, no `xla` crate, no python step.
+//!
+//! With the `pjrt` feature the same tests run against the AOT artifacts
+//! through `XlaBackend` (requires `make artifacts`).
 
 use puzzle::arch::{Arch, AttnChoice, FfnChoice, SearchSpace};
 use puzzle::bld;
 use puzzle::data::{Batcher, CorpusMix, World};
 use puzzle::gkd;
 use puzzle::model::CompiledModel;
-use puzzle::runtime::Registry;
-use puzzle::scoring::{self, Metric};
+use puzzle::runtime::Backend;
 use puzzle::train::{losses, train_step, Adam, AdamCfg, LossSpec};
 use puzzle::util::Rng;
 use puzzle::weights::store::init_parent;
 
-fn registry() -> Registry {
-    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+#[cfg(not(feature = "pjrt"))]
+fn backend() -> impl Backend {
+    puzzle::runtime::RefBackend::tiny()
+}
+
+#[cfg(feature = "pjrt")]
+fn backend() -> impl Backend {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
     assert!(
         dir.join("manifest.json").exists(),
         "artifacts/tiny missing — run `make artifacts` first"
     );
-    Registry::open(&dir).expect("open registry")
+    puzzle::runtime::XlaBackend::open(&dir).expect("open artifact backend")
 }
 
-fn batcher(reg: &Registry, seed: u64) -> Batcher {
-    let cfg = &reg.man.cfg;
+fn batcher(be: &dyn Backend, seed: u64) -> Batcher {
+    let cfg = &be.man().cfg;
     let world = World::new(42, cfg.v as u32);
     Batcher::new(world, CorpusMix::distillation_mix(), cfg.b_train, cfg.s_train, seed)
 }
 
 #[test]
 fn parent_forward_produces_finite_logits() {
-    let reg = registry();
+    let be = backend();
+    let be: &dyn Backend = &be;
     let mut rng = Rng::new(1);
-    let store = init_parent(&reg.man, &mut rng);
-    let arch = Arch::parent(reg.man.cfg.n_layers);
-    let model = CompiledModel::assemble(&reg.man, &store, &arch).unwrap();
-    let mut b = batcher(&reg, 7);
+    let store = init_parent(be.man(), &mut rng);
+    let arch = Arch::parent(be.man().cfg.n_layers);
+    let model = CompiledModel::assemble(be.man(), &store, &arch).unwrap();
+    let mut b = batcher(be, 7);
     let batch = b.next_batch();
-    let trace = model.forward(&reg, "train", &batch.inputs, batch.b, batch.s).unwrap();
-    let cfg = &reg.man.cfg;
+    let trace = model.forward(be, "train", &batch.inputs, batch.b, batch.s).unwrap();
+    let cfg = &be.man().cfg;
     assert_eq!(trace.logits.shape, vec![cfg.b_train, cfg.s_train, cfg.v]);
     assert!(trace.logits.data.iter().all(|x| x.is_finite()));
     // logits should not be constant
@@ -50,41 +58,43 @@ fn parent_forward_produces_finite_logits() {
 
 #[test]
 fn heterogeneous_arch_assembles_and_runs() {
-    let reg = registry();
+    let be = backend();
+    let be: &dyn Backend = &be;
     let mut rng = Rng::new(2);
-    let mut store = init_parent(&reg.man, &mut rng);
-    let n = reg.man.cfg.n_layers;
+    let mut store = init_parent(be.man(), &mut rng);
+    let n = be.man().cfg.n_layers;
     // derive variants for layer 1 via the §3.2 inits
     for (kind, variant) in [("attn", "gqa_r2"), ("attn", "linear"), ("ffn", "r50"), ("ffn", "linear")] {
         let job = bld::Job { layer: 1, kind: if kind == "attn" { "attn" } else { "ffn" }, variant: variant.into() };
-        bld::init_job_weights(&reg.man, &mut store, &job, None).unwrap();
+        bld::init_job_weights(be.man(), &mut store, &job, None).unwrap();
     }
     let mut arch = Arch::parent(n);
     arch.layers[1] = (AttnChoice::Gqa { divisor: 2 }, FfnChoice::Ratio(3)); // gqa_r2 + r50
     arch.layers[n - 1] = (AttnChoice::NoOp, FfnChoice::NoOp);
-    let model = CompiledModel::assemble(&reg.man, &store, &arch).unwrap();
-    let mut b = batcher(&reg, 8);
+    let model = CompiledModel::assemble(be.man(), &store, &arch).unwrap();
+    let mut b = batcher(be, 8);
     let batch = b.next_batch();
-    let trace = model.forward(&reg, "train", &batch.inputs, batch.b, batch.s).unwrap();
+    let trace = model.forward(be, "train", &batch.inputs, batch.b, batch.s).unwrap();
     assert!(trace.logits.data.iter().all(|x| x.is_finite()));
     // param count decreases vs parent
-    let parent = CompiledModel::assemble(&reg.man, &store, &Arch::parent(n)).unwrap();
-    assert!(model.param_count(&reg.man) < parent.param_count(&reg.man));
+    let parent = CompiledModel::assemble(be.man(), &store, &Arch::parent(n)).unwrap();
+    assert!(model.param_count(be.man()) < parent.param_count(be.man()));
 }
 
 #[test]
 fn lm_training_reduces_loss() {
-    let reg = registry();
+    let be = backend();
+    let be: &dyn Backend = &be;
     let mut rng = Rng::new(3);
-    let mut store = init_parent(&reg.man, &mut rng);
-    let arch = Arch::parent(reg.man.cfg.n_layers);
+    let mut store = init_parent(be.man(), &mut rng);
+    let arch = Arch::parent(be.man().cfg.n_layers);
     let mut adam = Adam::new(AdamCfg { lr: 3e-3, ..Default::default() });
-    let mut b = batcher(&reg, 9);
+    let mut b = batcher(be, 9);
     let mut first = 0.0;
     let mut last = 0.0;
     for step in 0..12 {
         let batch = b.next_batch();
-        let m = train_step(&reg, &mut store, &arch, &mut adam, &batch, LossSpec::lm_only(), None, 3e-3)
+        let m = train_step(be, &mut store, &arch, &mut adam, &batch, LossSpec::lm_only(), None, 3e-3)
             .unwrap();
         if step == 0 {
             first = m.lm;
@@ -99,28 +109,31 @@ fn lm_training_reduces_loss() {
 
 #[test]
 fn bld_reduces_block_nmse_and_scoring_prefers_trained_blocks() {
-    let reg = registry();
+    use puzzle::scoring::{self, Metric};
+
+    let be = backend();
+    let be: &dyn Backend = &be;
     let mut rng = Rng::new(4);
-    let mut store = init_parent(&reg.man, &mut rng);
+    let mut store = init_parent(be.man(), &mut rng);
     // brief parent pretrain so activations carry signal
-    let mut b = batcher(&reg, 10);
-    gkd::pretrain_parent(&reg, &mut store, &mut b, &[], 6, 3e-3).unwrap();
+    let mut b = batcher(be, 10);
+    gkd::pretrain_parent(be, &mut store, &mut b, &[], 6, 3e-3).unwrap();
 
     // decoupled BLD on a reduced space
     let space = SearchSpace::reduced(
         vec![AttnChoice::Gqa { divisor: 1 }, AttnChoice::Gqa { divisor: 2 }, AttnChoice::NoOp],
         vec![FfnChoice::Ratio(0), FfnChoice::Ratio(3), FfnChoice::NoOp],
     );
-    let report = bld::run_decoupled(&reg, &mut store, &space, &mut b, 8, 5e-3).unwrap();
-    assert_eq!(report.jobs, reg.man.cfg.n_layers * 2);
+    let report = bld::run_decoupled(be, &mut store, &space, &mut b, 8, 5e-3).unwrap();
+    assert_eq!(report.jobs, be.man().cfg.n_layers * 2);
     for (k, v) in &report.final_loss {
         assert!(v.is_finite() && *v < 1.5, "job {k} nmse {v}");
     }
 
     // replace-1-block scores: trained gqa_r2 should beat noop on KL
     let val: Vec<_> = (0..2).map(|_| b.next_batch()).collect();
-    let table = scoring::score_library(&reg, &store, &space, &val, Metric::Kl).unwrap();
-    for l in 0..reg.man.cfg.n_layers {
+    let table = scoring::score_library(be, &store, &space, &val, Metric::Kl).unwrap();
+    for l in 0..be.man().cfg.n_layers {
         let kl_gqa = table.get(l, "attn", "gqa_r2");
         let kl_noop = table.get(l, "attn", "noop");
         assert!(kl_gqa.is_finite() && kl_noop.is_finite());
@@ -133,22 +146,23 @@ fn bld_reduces_block_nmse_and_scoring_prefers_trained_blocks() {
 
 #[test]
 fn gkd_kld_training_moves_child_toward_parent() {
-    let reg = registry();
+    let be = backend();
+    let be: &dyn Backend = &be;
     let mut rng = Rng::new(5);
-    let mut store = init_parent(&reg.man, &mut rng);
-    let mut b = batcher(&reg, 11);
-    gkd::pretrain_parent(&reg, &mut store, &mut b, &[], 6, 3e-3).unwrap();
+    let mut store = init_parent(be.man(), &mut rng);
+    let mut b = batcher(be, 11);
+    gkd::pretrain_parent(be, &mut store, &mut b, &[], 6, 3e-3).unwrap();
 
     // child: drop the last layer entirely; init remaining from parent
-    let n = reg.man.cfg.n_layers;
+    let n = be.man().cfg.n_layers;
     let mut arch = Arch::parent(n);
     arch.layers[n - 1] = (AttnChoice::NoOp, FfnChoice::NoOp);
 
     let val: Vec<_> = (0..2).map(|_| b.next_batch()).collect();
     let cfg = gkd::GkdCfg { steps: 8, lr: 1e-3, spec: LossSpec::gkd_best(), ..Default::default() };
     // measure pre-GKD val KLD via a zero-step run
-    let pre = gkd::run(&reg, &mut store.clone(), &arch, &mut batcher(&reg, 12), &val, &gkd::GkdCfg { steps: 1, lr: 0.0, ..cfg.clone() }).unwrap();
-    let post = gkd::run(&reg, &mut store, &arch, &mut batcher(&reg, 12), &val, &cfg).unwrap();
+    let pre = gkd::run(be, &mut store.clone(), &arch, &mut batcher(be, 12), &val, &gkd::GkdCfg { steps: 1, lr: 0.0, ..cfg.clone() }).unwrap();
+    let post = gkd::run(be, &mut store, &arch, &mut batcher(be, 12), &val, &cfg).unwrap();
     assert!(post.val_kld.is_finite() && pre.val_kld.is_finite());
     assert!(
         post.val_kld <= pre.val_kld + 0.02,
@@ -156,6 +170,24 @@ fn gkd_kld_training_moves_child_toward_parent() {
         pre.val_kld,
         post.val_kld
     );
+}
+
+#[test]
+fn preload_and_stats_work_through_the_trait() {
+    let be = backend();
+    let be: &dyn Backend = &be;
+    be.preload(&["embed_train", "head_train"]).unwrap();
+    assert!(be.preload(&["no_such_exec"]).is_err(), "preloading an unknown exec must fail");
+    // run something and check stats land in the snapshot
+    let mut rng = Rng::new(6);
+    let store = init_parent(be.man(), &mut rng);
+    let arch = Arch::parent(be.man().cfg.n_layers);
+    let model = CompiledModel::assemble(be.man(), &store, &arch).unwrap();
+    let mut b = batcher(be, 13);
+    let batch = b.next_batch();
+    model.forward(be, "train", &batch.inputs, batch.b, batch.s).unwrap();
+    assert!(be.measured_secs("embed_train").is_some());
+    assert!(!be.stats_snapshot().is_empty());
 }
 
 #[test]

@@ -1,26 +1,33 @@
-//! Serving-engine integration tests over real artifacts: batching,
-//! variable-GQA caches, backpressure, and decode/prefill numerical
-//! consistency through the engine path.
-
-use std::path::Path;
+//! Serving-engine integration tests: batching, variable-GQA caches,
+//! backpressure, prompt chunking, EOS termination, and decode/prefill
+//! numerical consistency through the engine path. Hermetic by default
+//! (RefBackend + synthetic manifest); with the `pjrt` feature the same
+//! tests run over the AOT artifacts.
 
 use puzzle::arch::{Arch, AttnChoice, FfnChoice};
 use puzzle::bld;
+use puzzle::data::world::EOS;
 use puzzle::data::{corpus::sample_sequence, CorpusMix, World};
-use puzzle::runtime::Registry;
+use puzzle::runtime::Backend;
 use puzzle::serving::Engine;
 use puzzle::util::Rng;
-use puzzle::weights::store::init_parent;
+use puzzle::weights::store::{block_key, init_parent};
 use puzzle::weights::Store;
 
-fn registry() -> Registry {
-    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
-    assert!(dir.join("manifest.json").exists(), "run `make artifacts` first");
-    Registry::open(&dir).unwrap()
+#[cfg(not(feature = "pjrt"))]
+fn backend() -> impl Backend {
+    puzzle::runtime::RefBackend::tiny()
 }
 
-fn variable_arch(reg: &Registry, store: &mut Store) -> Arch {
-    let n = reg.man.cfg.n_layers;
+#[cfg(feature = "pjrt")]
+fn backend() -> impl Backend {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    assert!(dir.join("manifest.json").exists(), "run `make artifacts` first");
+    puzzle::runtime::XlaBackend::open(&dir).unwrap()
+}
+
+fn variable_arch(be: &dyn Backend, store: &mut Store) -> Arch {
+    let n = be.man().cfg.n_layers;
     let mut arch = Arch::parent(n);
     arch.layers[0].0 = AttnChoice::Gqa { divisor: 2 };
     arch.layers[1] = (AttnChoice::Linear, FfnChoice::Ratio(3));
@@ -28,7 +35,7 @@ fn variable_arch(reg: &Registry, store: &mut Store) -> Arch {
         for (kind, v) in [("attn", arch.layers[l].0.name()), ("ffn", arch.layers[l].1.name())] {
             if v != "gqa_r1" && v != "r100" && v != "noop" {
                 let job = bld::Job { layer: l, kind: if kind == "attn" { "attn" } else { "ffn" }, variant: v };
-                bld::init_job_weights(&reg.man, store, &job, None).unwrap();
+                bld::init_job_weights(be.man(), store, &job, None).unwrap();
             }
         }
     }
@@ -37,23 +44,24 @@ fn variable_arch(reg: &Registry, store: &mut Store) -> Arch {
 
 #[test]
 fn engine_serves_batched_requests_on_variable_gqa_arch() {
-    let reg = registry();
+    let be = backend();
+    let be: &dyn Backend = &be;
     let mut rng = Rng::new(1);
-    let mut store = init_parent(&reg.man, &mut rng);
-    let arch = variable_arch(&reg, &mut store);
-    let mut eng = Engine::new(&reg, &store, &arch, 32 << 20).unwrap();
-    let world = World::new(2, reg.man.cfg.v as u32);
+    let mut store = init_parent(be.man(), &mut rng);
+    let arch = variable_arch(be, &mut store);
+    let mut eng = Engine::new(be, &store, &arch, 32 << 20).unwrap();
+    let world = World::new(2, be.man().cfg.v as u32);
     let mix = CorpusMix::distillation_mix();
-    let n_req = reg.man.cfg.b_decode * 2 + 1; // forces continuous batching
+    let n_req = be.man().cfg.b_decode * 2 + 1; // forces continuous batching
     for _ in 0..n_req {
         let prompt = sample_sequence(&world, &mix, 8, &mut rng);
-        eng.submit(prompt, 6);
+        eng.submit(prompt, 6).unwrap();
     }
     let responses = eng.run_to_completion().unwrap();
     assert_eq!(responses.len(), n_req);
     for r in &responses {
         assert!(!r.tokens.is_empty() && r.tokens.len() <= 6);
-        assert!(r.tokens.iter().all(|&t| t < reg.man.cfg.v as u32));
+        assert!(r.tokens.iter().all(|&t| t < be.man().cfg.v as u32));
         assert!(r.ttft_secs > 0.0 && r.e2e_secs >= r.ttft_secs);
     }
     assert_eq!(eng.metrics.requests_completed, n_req);
@@ -62,22 +70,23 @@ fn engine_serves_batched_requests_on_variable_gqa_arch() {
 
 #[test]
 fn engine_greedy_generation_is_deterministic() {
-    let reg = registry();
+    let be = backend();
+    let be: &dyn Backend = &be;
     let mut rng = Rng::new(3);
-    let mut store = init_parent(&reg.man, &mut rng);
-    let arch = variable_arch(&reg, &mut store);
-    let world = World::new(2, reg.man.cfg.v as u32);
+    let mut store = init_parent(be.man(), &mut rng);
+    let arch = variable_arch(be, &mut store);
+    let world = World::new(2, be.man().cfg.v as u32);
     let mix = CorpusMix::distillation_mix();
     let mut prng = Rng::new(9);
     let prompt = sample_sequence(&world, &mix, 10, &mut prng);
 
-    let run = |reg: &Registry| {
-        let mut eng = Engine::new(reg, &store, &arch, 32 << 20).unwrap();
-        eng.submit(prompt.clone(), 8);
+    let run = |be: &dyn Backend| {
+        let mut eng = Engine::new(be, &store, &arch, 32 << 20).unwrap();
+        eng.submit(prompt.clone(), 8).unwrap();
         eng.run_to_completion().unwrap()[0].tokens.clone()
     };
-    let a = run(&reg);
-    let b = run(&reg);
+    let a = run(be);
+    let b = run(be);
     assert_eq!(a, b, "greedy decode must be deterministic");
 }
 
@@ -85,18 +94,19 @@ fn engine_greedy_generation_is_deterministic() {
 fn engine_decode_matches_prefill_continuation() {
     // serve the same prompt twice: once with max_new 1 (pure prefill) and
     // once with more tokens; the first generated token must agree.
-    let reg = registry();
+    let be = backend();
+    let be: &dyn Backend = &be;
     let mut rng = Rng::new(4);
-    let store = init_parent(&reg.man, &mut rng);
-    let arch = Arch::parent(reg.man.cfg.n_layers);
-    let world = World::new(5, reg.man.cfg.v as u32);
+    let store = init_parent(be.man(), &mut rng);
+    let arch = Arch::parent(be.man().cfg.n_layers);
+    let world = World::new(5, be.man().cfg.v as u32);
     let mix = CorpusMix::distillation_mix();
     let mut prng = Rng::new(2);
     let prompt = sample_sequence(&world, &mix, 12, &mut prng);
 
     let gen = |max_new: usize| {
-        let mut eng = Engine::new(&reg, &store, &arch, 32 << 20).unwrap();
-        eng.submit(prompt.clone(), max_new);
+        let mut eng = Engine::new(be, &store, &arch, 32 << 20).unwrap();
+        eng.submit(prompt.clone(), max_new).unwrap();
         eng.run_to_completion().unwrap()[0].tokens.clone()
     };
     let short = gen(1);
@@ -106,24 +116,150 @@ fn engine_decode_matches_prefill_continuation() {
 
 #[test]
 fn backpressure_defers_but_completes_all() {
-    let reg = registry();
+    let be = backend();
+    let be: &dyn Backend = &be;
     let mut rng = Rng::new(6);
-    let store = init_parent(&reg.man, &mut rng);
-    let arch = Arch::parent(reg.man.cfg.n_layers);
+    let store = init_parent(be.man(), &mut rng);
+    let arch = Arch::parent(be.man().cfg.n_layers);
     // tiny KV budget: roughly one sequence's worth
     let per_pos = {
         use puzzle::serving::kvcache::{PageCfg, PagedKvManager};
-        let mgr = PagedKvManager::new(&reg.man, &arch, PageCfg { page_len: 16, dtype_bytes: 4, budget_bytes: usize::MAX / 2 });
+        let mgr = PagedKvManager::new(be.man(), &arch, PageCfg { page_len: 16, dtype_bytes: 4, budget_bytes: usize::MAX / 2 });
         mgr.bytes_per_position()
     };
-    let budget = per_pos * (reg.man.cfg.s_max + 8);
-    let mut eng = Engine::new(&reg, &store, &arch, budget).unwrap();
-    let world = World::new(5, reg.man.cfg.v as u32);
+    let budget = per_pos * (be.man().cfg.s_max + 8);
+    let mut eng = Engine::new(be, &store, &arch, budget).unwrap();
+    let world = World::new(5, be.man().cfg.v as u32);
     let mix = CorpusMix::distillation_mix();
     for _ in 0..4 {
         let prompt = sample_sequence(&world, &mix, 6, &mut rng);
-        eng.submit(prompt, 4);
+        eng.submit(prompt, 4).unwrap();
     }
     let responses = eng.run_to_completion().unwrap();
     assert_eq!(responses.len(), 4, "backpressure must defer, not drop");
+}
+
+#[test]
+fn long_prompts_are_chunked_not_truncated() {
+    // a prompt longer than the prefill window must be ingested exactly:
+    // continuing prompt A with its own first generated token must
+    // reproduce the rest of A's continuation (greedy decoding is
+    // self-consistent), which fails if the tail were silently dropped.
+    let be = backend();
+    let be: &dyn Backend = &be;
+    let cfg = be.man().cfg.clone();
+    let sp = cfg.s_prefill;
+    let mut rng = Rng::new(7);
+    let store = init_parent(be.man(), &mut rng);
+    let arch = Arch::parent(cfg.n_layers);
+    let world = World::new(5, cfg.v as u32);
+    let mix = CorpusMix::distillation_mix();
+
+    let gen = |prompt: Vec<u32>, max_new: usize| {
+        let mut eng = Engine::new(be, &store, &arch, 64 << 20).unwrap();
+        eng.submit(prompt, max_new).unwrap();
+        let resp = eng.run_to_completion().unwrap();
+        (resp[0].tokens.clone(), eng.metrics.chunked_prefills)
+    };
+
+    // find a seed whose continuation is long enough to compare
+    let mut prompt = Vec::new();
+    let mut full = Vec::new();
+    for seed in 0..20u64 {
+        let mut prng = Rng::new(seed);
+        let p = sample_sequence(&world, &mix, sp, &mut prng);
+        assert_eq!(p.len(), sp + 1);
+        let p = p[..sp].to_vec(); // exactly the prefill window: not chunked
+        let (toks, chunked) = gen(p.clone(), 6);
+        assert_eq!(chunked, 0, "window-sized prompt must not chunk");
+        if toks.len() >= 3 {
+            prompt = p;
+            full = toks;
+            break;
+        }
+    }
+    assert!(full.len() >= 3, "no prompt produced a long enough continuation");
+
+    // extend the prompt past the window with the first generated token
+    let mut longer = prompt.clone();
+    longer.push(full[0]);
+    assert_eq!(longer.len(), sp + 1, "now one token past the prefill window");
+    let (cont, chunked) = gen(longer, full.len() - 1);
+    assert_eq!(chunked, 1, "over-window prompt must take the chunked path");
+    assert_eq!(
+        cont,
+        full[1..].to_vec(),
+        "chunked ingestion must reproduce the un-chunked continuation"
+    );
+}
+
+#[test]
+fn oversized_and_empty_prompts_are_rejected() {
+    let be = backend();
+    let be: &dyn Backend = &be;
+    let cfg = be.man().cfg.clone();
+    let mut rng = Rng::new(8);
+    let store = init_parent(be.man(), &mut rng);
+    let arch = Arch::parent(cfg.n_layers);
+    let mut eng = Engine::new(be, &store, &arch, 32 << 20).unwrap();
+    assert!(eng.submit(vec![], 4).is_err(), "empty prompt must be rejected");
+    let huge = vec![1u32; cfg.s_max];
+    assert!(eng.submit(huge, 4).is_err(), "prompt filling the horizon must be rejected");
+    assert_eq!(eng.metrics.rejected_prompts, 2);
+    // a prompt one token shorter than the horizon is admissible
+    let ok = vec![1u32; cfg.s_max - 1];
+    eng.submit(ok, 2).unwrap();
+    let resp = eng.run_to_completion().unwrap();
+    assert_eq!(resp.len(), 1);
+    assert_eq!(resp[0].tokens.len(), 1, "only one position left before the horizon");
+}
+
+#[test]
+fn generation_stops_at_eos_through_the_decode_path() {
+    // engineer weights so the model deterministically generates
+    // token-chain y -> z -> EOS: residual blocks are zeroed (wo = wd = 0),
+    // so the hidden state at each position is the token's embedding, and
+    // the tied head makes E rows steer the chain.
+    let be = backend();
+    let be: &dyn Backend = &be;
+    let cfg = be.man().cfg.clone();
+    let (d, v) = (cfg.d, cfg.v);
+    let mut rng = Rng::new(9);
+    let mut store = init_parent(be.man(), &mut rng);
+    let arch = Arch::parent(cfg.n_layers);
+
+    // zero the output projections: every block becomes the identity
+    for l in 0..cfg.n_layers {
+        let wo = store.get(&block_key(l, "attn", "gqa_r1", "wo")).unwrap().clone();
+        store.put(&block_key(l, "attn", "gqa_r1", "wo"), puzzle::tensor::Tensor::zeros(&wo.shape));
+        let wd = store.get(&block_key(l, "ffn", "r100", "wd")).unwrap().clone();
+        store.put(&block_key(l, "ffn", "r100", "wd"), puzzle::tensor::Tensor::zeros(&wd.shape));
+    }
+    // craft the embedding: rows are near-zero noise except the chain rows
+    let (y, z) = (10u32, 11u32);
+    let mut e = puzzle::tensor::Tensor::zeros(&[v, d]);
+    for x in e.data.iter_mut() {
+        *x = rng.normal() * 1e-3;
+    }
+    let row = |t: u32| (t as usize) * d;
+    e.data[row(y)..row(y) + d].fill(0.0);
+    e.data[row(y)] = 1.0; // E[y] = e1
+    e.data[row(z)..row(z) + d].fill(0.0);
+    e.data[row(z)] = 2.0; // E[z] = 2*e1 + e2: from y, z scores highest
+    e.data[row(z) + 1] = 1.0;
+    e.data[row(EOS)..row(EOS) + d].fill(0.0);
+    e.data[row(EOS) + 1] = 6.0; // from z, EOS scores highest
+    store.put("embed", e);
+
+    let mut eng = Engine::new(be, &store, &arch, 32 << 20).unwrap();
+    eng.submit(vec![1, y], 10).unwrap();
+    let resp = eng.run_to_completion().unwrap();
+    assert_eq!(resp.len(), 1);
+    assert_eq!(
+        resp[0].tokens,
+        vec![z, EOS],
+        "must generate z from prefill, then EOS through a decode step, then stop"
+    );
+    assert_eq!(eng.metrics.generated_tokens, 2);
+    assert!(eng.metrics.decode_steps >= 1, "EOS must be produced by the decode path");
 }
