@@ -22,12 +22,12 @@ use puzzle::data::{corpus::sample_sequence, Batcher, CorpusMix, World};
 use puzzle::mip::{self, Constraints, Lp};
 use puzzle::model::CompiledModel;
 use puzzle::perf::{CostTable, HwProfile, Scenario};
-use puzzle::runtime::{Backend, RefBackend};
+use puzzle::runtime::{share, Backend, RefBackend};
 use puzzle::scoring::{self, Metric, ScoreTable};
 use puzzle::serving::kvcache::{PageCfg, PagedKvManager};
-use puzzle::serving::Engine;
+use puzzle::serving::{EngineConfig, GenRequest};
 use puzzle::tensor::{svd::svd, Tensor};
-use puzzle::util::Rng;
+use puzzle::util::{Json, Rng};
 use puzzle::weights::store::init_parent;
 
 struct Bench {
@@ -92,8 +92,8 @@ fn main() {
     });
 
     // hermetic backend: in-memory manifest + rust interpreter
-    let be = RefBackend::new(TinyManifest::synthetic());
-    let be: &dyn Backend = &be;
+    let shared = share(RefBackend::new(TinyManifest::synthetic()));
+    let be: &dyn Backend = &*shared;
     let cfg = be.man().cfg.clone();
 
     // MIP at the paper's Llama-70B scale: 80 layers (combo count follows
@@ -173,22 +173,51 @@ fn main() {
     // serving: prefill + decode step (Table 3 inner loops)
     {
         b.time("serving_prefill", "1 prompt through the engine", 5, || {
-            let mut eng = Engine::new(be, &store, &arch, 64 << 20).unwrap();
+            let mut eng = EngineConfig::new().build(shared.clone(), &store, &arch).unwrap();
             let mut r2 = Rng::new(5);
             let prompt = sample_sequence(&world, &mix, 16, &mut r2);
-            eng.submit(prompt, 1).unwrap();
+            eng.submit(GenRequest::new(prompt, 1)).unwrap();
             let _ = eng.run_to_completion().unwrap();
         });
         let note = format!("{} seqs x 16 new tokens", cfg.b_decode);
         b.time("serving_decode_16tok", &note, 3, || {
-            let mut eng = Engine::new(be, &store, &arch, 64 << 20).unwrap();
+            let mut eng = EngineConfig::new().build(shared.clone(), &store, &arch).unwrap();
             let mut r2 = Rng::new(6);
             for _ in 0..cfg.b_decode {
                 let prompt = sample_sequence(&world, &mix, 8, &mut r2);
-                eng.submit(prompt, 16).unwrap();
+                eng.submit(GenRequest::new(prompt, 16)).unwrap();
             }
             let _ = eng.run_to_completion().unwrap();
         });
+    }
+
+    // serving perf trajectory: a continuous-batching run (3x oversubscribed
+    // slots) whose throughput and latency percentiles are persisted to
+    // BENCH_serving.json so future PRs can diff serving perf.
+    {
+        let mut eng = EngineConfig::new().build(shared.clone(), &store, &arch).unwrap();
+        let mut r2 = Rng::new(11);
+        let n_req = cfg.b_decode * 3;
+        for _ in 0..n_req {
+            let prompt = sample_sequence(&world, &mix, 8, &mut r2);
+            eng.submit(GenRequest::new(prompt, 16)).unwrap();
+        }
+        let _ = eng.run_to_completion().unwrap();
+        let m = &eng.metrics;
+        let j = Json::from_pairs(vec![
+            ("requests", Json::num(m.requests_completed as f64)),
+            ("generated_tokens", Json::num(m.generated_tokens as f64)),
+            ("gen_tok_per_s", Json::num(m.gen_throughput())),
+            ("total_tok_per_s", Json::num(m.total_throughput())),
+            ("p50_ttft_ms", Json::num(m.p50_ttft() * 1e3)),
+            ("p95_ttft_ms", Json::num(m.p95_ttft() * 1e3)),
+            ("p50_e2e_ms", Json::num(m.p50_e2e() * 1e3)),
+            ("p95_e2e_ms", Json::num(m.p95_e2e() * 1e3)),
+            ("overhead_frac", Json::num(m.overhead_frac())),
+        ]);
+        std::fs::write("BENCH_serving.json", j.to_pretty()).unwrap();
+        println!("serving perf -> BENCH_serving.json ({:.1} gen tok/s, p95 ttft {:.2} ms)",
+            m.gen_throughput(), m.p95_ttft() * 1e3);
     }
 
     // paged KV manager ops (§6)

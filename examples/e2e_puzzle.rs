@@ -19,9 +19,9 @@ use puzzle::data::corpus::sample_sequence;
 use puzzle::eval::Evaluator;
 use puzzle::perf::{self, HwProfile, Scenario};
 use puzzle::pipeline::{Pipeline, StageCfg};
-use puzzle::runtime::{Backend, RefBackend};
+use puzzle::runtime::{share, RefBackend};
 use puzzle::scoring::Metric;
-use puzzle::serving::Engine;
+use puzzle::serving::{EngineConfig, GenRequest};
 use puzzle::train::LossSpec;
 use puzzle::util::{Args, Rng, Timer};
 
@@ -34,13 +34,12 @@ fn main() -> Result<()> {
         "small" => TinyManifest::synthetic_small(),
         other => return Err(anyhow!("unknown synthetic config '{other}' (tiny|small)")),
     };
-    let be = RefBackend::new(man);
-    let be: &dyn Backend = &be;
+    let be = share(RefBackend::new(man));
     let cfg = be.man().cfg.clone();
     let mut stage = StageCfg::scaled(args.f64("scale", 1.0));
     stage.seed = args.u64("seed", 42);
     let run_dir = PathBuf::from(args.str("run-dir", &format!("runs/e2e_{config}")));
-    let pipe = Pipeline::new(be, &run_dir, stage)?;
+    let pipe = Pipeline::new(be.clone(), &run_dir, stage)?;
     let t_total = Timer::start();
 
     println!("=== Puzzle end-to-end ({config}: {} layers, d={}, v={}) ===", cfg.n_layers, cfg.d, cfg.v);
@@ -65,9 +64,9 @@ fn main() -> Result<()> {
 
     // Accuracy retention
     let parent_arch = Arch::parent(cfg.n_layers);
-    let pe = Evaluator::new(be, &library, &parent_arch)?
+    let pe = Evaluator::new(&*be, &library, &parent_arch)?
         .run_suite(&pipe.world, pipe.cfg.eval_questions, 7)?;
-    let ce = Evaluator::new(be, &child, &sol.arch)?
+    let ce = Evaluator::new(&*be, &child, &sol.arch)?
         .run_suite(&pipe.world, pipe.cfg.eval_questions, 7)?;
     println!("parent: {}", pe.row());
     println!("child : {}", ce.row());
@@ -79,16 +78,16 @@ fn main() -> Result<()> {
         let weights = if arch == &sol.arch { &child } else { &library };
         // warmup pass outside the timed region
         {
-            let mut warm = Engine::new(be, weights, arch, 64 << 20)?;
-            warm.submit(vec![1, 5, 9], 2)?;
+            let mut warm = EngineConfig::new().build(be.clone(), weights, arch)?;
+            warm.submit(GenRequest::new(vec![1, 5, 9], 2))?;
             warm.run_to_completion()?;
         }
-        let mut eng = Engine::new(be, weights, arch, 64 << 20)?;
+        let mut eng = EngineConfig::new().build(be.clone(), weights, arch)?;
         let mut rng = Rng::new(5);
         for _ in 0..cfg.b_decode * 3 {
             let plen = rng.range(4, cfg.s_prefill / 2);
             let prompt = sample_sequence(&pipe.world, &pipe.mix, plen, &mut rng);
-            eng.submit(prompt, cfg.s_prefill / 4)?;
+            eng.submit(GenRequest::new(prompt, cfg.s_prefill / 4))?;
         }
 
         eng.run_to_completion()?;

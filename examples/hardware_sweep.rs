@@ -14,15 +14,14 @@ use puzzle::config::TinyManifest;
 use puzzle::mip::{self, Constraints};
 use puzzle::perf::{CostTable, HwProfile, Scenario};
 use puzzle::pipeline::{Pipeline, StageCfg};
-use puzzle::runtime::{Backend, RefBackend};
+use puzzle::runtime::{share, RefBackend};
 use puzzle::scoring::Metric;
 
 fn main() -> Result<()> {
     puzzle::util::log::init();
-    let be = RefBackend::new(TinyManifest::synthetic());
-    let be: &dyn Backend = &be;
+    let be = share(RefBackend::new(TinyManifest::synthetic()));
     let cfg = be.man().cfg.clone();
-    let pipe = Pipeline::new(be, &PathBuf::from("runs/ref-tiny"), StageCfg::fast())?;
+    let pipe = Pipeline::new(be.clone(), &PathBuf::from("runs/ref-tiny"), StageCfg::fast())?;
     let space = SearchSpace::full(cfg.n_heads as u32);
     let scores = pipe.ensure_scores(&space, Metric::Kl)?;
     let n_layers = cfg.n_layers;

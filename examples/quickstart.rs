@@ -13,15 +13,16 @@ use puzzle::config::TinyManifest;
 use puzzle::data::{Batcher, CorpusMix, World};
 use puzzle::model::CompiledModel;
 use puzzle::perf::{HwProfile, Scenario};
-use puzzle::runtime::{Backend, RefBackend};
+use puzzle::runtime::{share, RefBackend};
+use puzzle::serving::{EngineConfig, GenRequest};
 use puzzle::util::Rng;
 use puzzle::weights::store::init_parent;
 
 fn main() -> Result<()> {
-    // 1. open the execution backend (in-memory manifest + rust interpreter)
-    let be = RefBackend::new(TinyManifest::synthetic());
-    let be: &dyn Backend = &be;
-    let cfg = &be.man().cfg;
+    // 1. open the execution backend (in-memory manifest + rust interpreter);
+    // the shared handle is what long-lived components (engines) hold
+    let be = share(RefBackend::new(TinyManifest::synthetic()));
+    let cfg = be.man().cfg.clone();
     println!("model: d={} layers={} heads={} vocab={}", cfg.d, cfg.n_layers, cfg.n_heads, cfg.v);
 
     // 2. the search space (paper §2): 54^L candidate architectures
@@ -51,7 +52,7 @@ fn main() -> Result<()> {
     let world = World::new(7, cfg.v as u32);
     let mut batcher = Batcher::new(world, CorpusMix::distillation_mix(), cfg.b_train, cfg.s_train, 1);
     let batch = batcher.next_batch();
-    let trace = child.forward(be, "train", &batch.inputs, batch.b, batch.s)?;
+    let trace = child.forward(&*be, "train", &batch.inputs, batch.b, batch.s)?;
     println!("logits shape: {:?} (finite: {})",
         trace.logits.shape,
         trace.logits.data.iter().all(|x| x.is_finite())
@@ -68,6 +69,17 @@ fn main() -> Result<()> {
         tp_parent,
         tp_child,
         tp_child / tp_parent
+    );
+
+    // 7. serve one prompt through the v2 engine (owned backend, greedy)
+    let mut eng = EngineConfig::new().build(be.clone(), &store, &arch)?;
+    eng.submit(GenRequest::new(vec![1, 5, 9, 7], 8))?;
+    let resp = eng.run_to_completion()?.remove(0);
+    println!(
+        "served 1 request: {} tokens generated, finish {}, ttft {:.2} ms",
+        resp.tokens.len(),
+        resp.finish.as_str(),
+        resp.ttft_secs * 1e3
     );
     Ok(())
 }

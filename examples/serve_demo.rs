@@ -1,7 +1,10 @@
-//! Serving demo: run the variable-GQA continuous-batching engine (paper
-//! §6) over a heterogeneous child architecture with batched requests and
-//! report latency/throughput. Hermetic: runs on the pure-Rust reference
-//! backend with an in-memory manifest.
+//! Serving demo for the v2 API: a long-lived engine that owns its backend,
+//! a priority scheduler under contention, mixed per-request sampling
+//! (greedy next to seeded temperature/top-k/top-p), and the step-driven
+//! streaming event loop — tokens are printed as the engine emits them,
+//! one request is cancelled mid-generation. Runs over a heterogeneous
+//! child architecture with per-layer variable KV-head counts (paper §6).
+//! Hermetic: pure-Rust reference backend with an in-memory manifest.
 //!
 //!   cargo run --release --example serve_demo
 
@@ -11,14 +14,13 @@ use puzzle::arch::{Arch, AttnChoice, FfnChoice};
 use puzzle::bld;
 use puzzle::config::TinyManifest;
 use puzzle::data::{corpus::sample_sequence, CorpusMix, World};
-use puzzle::runtime::{Backend, RefBackend};
-use puzzle::serving::Engine;
+use puzzle::runtime::{share, RefBackend};
+use puzzle::serving::{EngineConfig, GenRequest, SamplingParams, SchedulerKind, StreamEvent};
 use puzzle::util::Rng;
 use puzzle::weights::store::init_parent;
 
 fn main() -> Result<()> {
-    let be = RefBackend::new(TinyManifest::synthetic());
-    let be: &dyn Backend = &be;
+    let be = share(RefBackend::new(TinyManifest::synthetic()));
     let cfg = be.man().cfg.clone();
 
     // a child with per-layer variable KV-head counts — the exact case
@@ -38,25 +40,76 @@ fn main() -> Result<()> {
         }
     }
 
-    let mut engine = Engine::new(be, &store, &arch, 32 << 20)?;
+    // the engine owns its backend handle: it could move to a server thread
+    let mut engine = EngineConfig::new()
+        .kv_budget_bytes(32 << 20)
+        .scheduler(SchedulerKind::Priority)
+        .build(be.clone(), &store, &arch)?;
+
     let world = World::new(3, cfg.v as u32);
     let mix = CorpusMix::distillation_mix();
     let mut rng = Rng::new(9);
     let n_requests = 24;
-    for _ in 0..n_requests {
+    let mut cancel_target = None;
+    for i in 0..n_requests {
         let plen = rng.range(4, cfg.s_prefill.min(48));
         let prompt = sample_sequence(&world, &mix, plen, &mut rng);
-        engine.submit(prompt, rng.range(8, 32))?;
+        // mixed sampling in one batch: greedy, seeded temperature, and
+        // temperature restricted by top-k + nucleus
+        let sampling = match i % 3 {
+            0 => SamplingParams::greedy(),
+            1 => SamplingParams::temperature(0.8).with_seed(100 + i as u64),
+            _ => SamplingParams::temperature(1.0).with_top_k(32).with_top_p(0.9).with_seed(i as u64),
+        };
+        let id = engine.submit(
+            GenRequest::new(prompt, rng.range(8, 32))
+                .with_priority((i % 4) as i32) // contention: priority beats arrival order
+                .with_sampling(sampling),
+        )?;
+        if i == 5 {
+            cancel_target = Some(id);
+        }
     }
-    println!("submitted {n_requests} requests (queue {})", engine.queue_len());
-    let responses = engine.run_to_completion()?;
-    println!("completed {}", responses.len());
+    println!(
+        "submitted {n_requests} requests (queue {}, scheduler {})",
+        engine.queue_len(),
+        engine.scheduler_name()
+    );
+
+    // step-driven streaming: one batched decode step per iteration; print
+    // the event stream for a few requests and cancel one mid-generation.
+    let mut steps = 0usize;
+    while !engine.is_idle() {
+        for ev in engine.step()? {
+            match ev {
+                StreamEvent::Token { id, tok } if id <= 3 => println!("  step {steps:>3} | req {id}: token {tok}"),
+                StreamEvent::Token { .. } => {}
+                StreamEvent::Finished { id, reason } => {
+                    println!("  step {steps:>3} | req {id}: finished ({})", reason.as_str())
+                }
+                StreamEvent::Rejected { id, cause } => {
+                    println!("  step {steps:>3} | req {id}: rejected ({cause})")
+                }
+            }
+        }
+        if steps == 4 {
+            if let Some(id) = cancel_target.take() {
+                let hit = engine.cancel(id);
+                println!("  step {steps:>3} | cancel({id}) -> {hit} (KV pages freed immediately)");
+            }
+        }
+        steps += 1;
+    }
+
+    let responses = engine.take_finished();
+    println!("completed {} (in {} steps)", responses.len(), steps);
     println!("{}", engine.metrics.summary());
     for r in responses.iter().take(3) {
         println!(
-            "  req {}: {} tokens, ttft {:.1} ms, e2e {:.1} ms",
+            "  req {}: {} tokens, finish {}, ttft {:.1} ms, e2e {:.1} ms",
             r.id,
             r.tokens.len(),
+            r.finish.as_str(),
             r.ttft_secs * 1e3,
             r.e2e_secs * 1e3
         );

@@ -14,19 +14,19 @@ use crate::mip::{self, Constraints};
 use crate::perf::{self, HwProfile, Scenario};
 use crate::pipeline::Pipeline;
 use crate::scoring::{self, Metric, ScoreTable};
-use crate::serving::Engine;
+use crate::serving::{EngineConfig, GenRequest};
 use crate::train::LossSpec;
 use crate::util::{Json, Rng};
 use crate::weights::{compress, store::block_key, store::randomize_weights, Store};
 use crate::info;
 
-pub struct ExpCtx<'a> {
-    pub pipe: Pipeline<'a>,
+pub struct ExpCtx {
+    pub pipe: Pipeline,
     pub space: SearchSpace,
 }
 
-impl<'a> ExpCtx<'a> {
-    pub fn new(pipe: Pipeline<'a>) -> ExpCtx<'a> {
+impl ExpCtx {
+    pub fn new(pipe: Pipeline) -> ExpCtx {
         let space = SearchSpace::full(pipe.be.man().cfg.n_heads as u32);
         ExpCtx { pipe, space }
     }
@@ -46,7 +46,7 @@ impl<'a> ExpCtx<'a> {
     }
 
     fn eval(&self, store: &Store, arch: &Arch) -> Result<crate::eval::EvalReport> {
-        let ev = Evaluator::new(self.pipe.be, store, arch)?;
+        let ev = Evaluator::new(&*self.pipe.be, store, arch)?;
         ev.run_suite(self.world(), self.pipe.cfg.eval_questions, 7)
     }
 
@@ -175,19 +175,19 @@ pub fn table3(ctx: &ExpCtx) -> Result<()> {
         for a in [&arch, &parent_arch] {
             // warmup pass: compile every executable outside the timed region
             {
-                let mut warm = Engine::new(ctx.pipe.be, &library, a, 64 << 20)?;
-                warm.submit(vec![1, 5, 9], 2)?;
+                let mut warm = EngineConfig::new().build(ctx.pipe.be.clone(), &library, a)?;
+                warm.submit(GenRequest::new(vec![1, 5, 9], 2))?;
                 warm.run_to_completion()?;
             }
             // best of 2 repetitions (the first run in a fresh process can
             // still hit allocator/XLA cold paths)
             let mut best = 0.0f64;
             for _rep in 0..2 {
-                let mut eng = Engine::new(ctx.pipe.be, &library, a, 64 << 20)?;
+                let mut eng = EngineConfig::new().build(ctx.pipe.be.clone(), &library, a)?;
                 let mut rng = Rng::new(3);
                 for _ in 0..c.b_decode * 2 {
                     let prompt = sample_sequence(ctx.world(), &ctx.pipe.mix, pin, &mut rng);
-                    eng.submit(prompt, pout)?;
+                    eng.submit(GenRequest::new(prompt, pout))?;
                 }
                 eng.run_to_completion()?;
                 best = best.max(eng.metrics.gen_throughput());
@@ -227,8 +227,8 @@ pub fn fig4(ctx: &ExpCtx) -> Result<()> {
     let mut child = library.clone();
     ctx.pipe.gkd_child(&mut child, &arch, LossSpec::gkd_best(), ctx.pipe.cfg.gkd_steps)?;
     let parent_arch = Arch::parent(ctx.pipe.be.man().cfg.n_layers);
-    let pe = Evaluator::new(ctx.pipe.be, &library, &parent_arch)?;
-    let ce = Evaluator::new(ctx.pipe.be, &child, &arch)?;
+    let pe = Evaluator::new(&*ctx.pipe.be, &library, &parent_arch)?;
+    let ce = Evaluator::new(&*ctx.pipe.be, &child, &arch)?;
     let mut rng = Rng::new(11);
     let qs = tasks::gen_questions(ctx.world(), ctx.pipe.cfg.eval_questions, &mut rng);
     let (mut both, mut p_only, mut c_only, mut neither) = (0, 0, 0, 0);
@@ -316,8 +316,8 @@ pub fn table4(ctx: &ExpCtx) -> Result<()> {
         .filter(|&x| x <= c.s_long)
         .collect();
     let parent_arch = Arch::parent(c.n_layers);
-    let pe = Evaluator::new(ctx.pipe.be, &library, &parent_arch)?;
-    let ce = Evaluator::new(ctx.pipe.be, &child, &arch)?;
+    let pe = Evaluator::new(&*ctx.pipe.be, &library, &parent_arch)?;
+    let ce = Evaluator::new(&*ctx.pipe.be, &child, &arch)?;
     let n = (ctx.pipe.cfg.eval_questions / 4).max(8);
     let pr = pe.run_ruler(ctx.world(), &ctxs, n, 5)?;
     let cr = ce.run_ruler(ctx.world(), &ctxs, n, 5)?;
@@ -356,7 +356,7 @@ pub fn table5(ctx: &ExpCtx) -> Result<()> {
         warmup_frac: 0.1,
         log_every: 50,
     };
-    gkd::run(ctx.pipe.be, &mut aligned, &arch, &mut batcher, &[], &cfg)?;
+    gkd::run(&*ctx.pipe.be, &mut aligned, &arch, &mut batcher, &[], &cfg)?;
     let after = ctx.eval(&aligned, &arch)?;
     let parent_arch = Arch::parent(c.n_layers);
     let pe = ctx.eval(&library, &parent_arch)?;
@@ -422,12 +422,12 @@ pub fn table8(ctx: &ExpCtx) -> Result<()> {
         let mut store = ctx.pipe.ensure_parent()?;
         let mut batcher = ctx.pipe.batcher(0xc0de);
         if mode == "decoupled" {
-            crate::bld::run_decoupled(ctx.pipe.be, &mut store, &reduced, &mut batcher, ctx.pipe.cfg.bld_steps, ctx.pipe.cfg.bld_lr)?;
+            crate::bld::run_decoupled(&*ctx.pipe.be, &mut store, &reduced, &mut batcher, ctx.pipe.cfg.bld_steps, ctx.pipe.cfg.bld_lr)?;
         } else {
-            crate::bld::run_coupled(ctx.pipe.be, &mut store, &reduced, &mut batcher, ctx.pipe.cfg.bld_steps / 2, ctx.pipe.cfg.bld_lr)?;
+            crate::bld::run_coupled(&*ctx.pipe.be, &mut store, &reduced, &mut batcher, ctx.pipe.cfg.bld_steps / 2, ctx.pipe.cfg.bld_lr)?;
         }
         let val = ctx.pipe.val_batches(ctx.pipe.cfg.score_batches);
-        let scores = scoring::score_library(ctx.pipe.be, &store, &reduced, &val, Metric::Kl)?;
+        let scores = scoring::score_library(&*ctx.pipe.be, &store, &reduced, &val, Metric::Kl)?;
         let sol = ctx.pipe.search_speedup(&reduced, &scores, &ct, 1.8)?;
         let mut child = store.clone();
         ctx.pipe.gkd_child(&mut child, &sol.arch, LossSpec::gkd_best(), ctx.pipe.cfg.gkd_steps / 2)?;
@@ -454,9 +454,9 @@ pub fn table9(ctx: &ExpCtx) -> Result<()> {
     for mix in [CorpusMix::distillation_mix(), CorpusMix::gutenberg()] {
         let mut store = ctx.pipe.ensure_parent()?;
         let mut batcher = crate::data::Batcher::new(ctx.world().clone(), mix.clone(), c.b_train, c.s_train, 0xda7a);
-        crate::bld::run_decoupled(ctx.pipe.be, &mut store, &ctx.space, &mut batcher, ctx.pipe.cfg.bld_steps, ctx.pipe.cfg.bld_lr)?;
+        crate::bld::run_decoupled(&*ctx.pipe.be, &mut store, &ctx.space, &mut batcher, ctx.pipe.cfg.bld_steps, ctx.pipe.cfg.bld_lr)?;
         let val = ctx.pipe.val_batches(ctx.pipe.cfg.score_batches);
-        let scores = scoring::score_library(ctx.pipe.be, &store, &ctx.space, &val, Metric::Kl)?;
+        let scores = scoring::score_library(&*ctx.pipe.be, &store, &ctx.space, &val, Metric::Kl)?;
         let sol = ctx.pipe.search_speedup(&ctx.space, &scores, &ct, 1.8)?;
         // Table 9 compares *without* GKD uptraining
         let ev = ctx.eval(&store, &sol.arch)?;
@@ -482,9 +482,9 @@ pub fn table10(ctx: &ExpCtx) -> Result<()> {
         let steps = ((ctx.pipe.cfg.bld_steps as f64) * frac).max(1.0) as usize;
         let mut store = ctx.pipe.ensure_parent()?;
         let mut batcher = ctx.pipe.batcher(0xb1d2);
-        let rep = crate::bld::run_decoupled(ctx.pipe.be, &mut store, &ctx.space, &mut batcher, steps, ctx.pipe.cfg.bld_lr)?;
+        let rep = crate::bld::run_decoupled(&*ctx.pipe.be, &mut store, &ctx.space, &mut batcher, steps, ctx.pipe.cfg.bld_lr)?;
         let val = ctx.pipe.val_batches(ctx.pipe.cfg.score_batches);
-        let scores = scoring::score_library(ctx.pipe.be, &store, &ctx.space, &val, Metric::Kl)?;
+        let scores = scoring::score_library(&*ctx.pipe.be, &store, &ctx.space, &val, Metric::Kl)?;
         let sol = ctx.pipe.search_speedup(&ctx.space, &scores, &ct, 1.8)?;
         let mut child = store.clone();
         ctx.pipe.gkd_child(&mut child, &sol.arch, LossSpec::gkd_best(), ctx.pipe.cfg.gkd_steps / 4)?;
@@ -535,7 +535,7 @@ pub fn table11(ctx: &ExpCtx) -> Result<()> {
     let mut rng = Rng::new(21);
     let train_qs = tasks::synth_qa(ctx.world(), ctx.pipe.cfg.eval_questions, &mut rng, Some(&|r| r % 2 == 0));
     let parent_arch = Arch::parent(n_layers);
-    let pe = Evaluator::new(ctx.pipe.be, &library, &parent_arch)?;
+    let pe = Evaluator::new(&*ctx.pipe.be, &library, &parent_arch)?;
     let parent_acc = pe.mc_accuracy(&train_qs)?;
     let mut ds_scores = ScoreTable { metric_name: "half_synthqa".into(), ..Default::default() };
     for l in 0..n_layers {
@@ -545,7 +545,7 @@ pub fn table11(ctx: &ExpCtx) -> Result<()> {
                 _ => {
                     let mut arch = parent_arch.clone();
                     arch.layers[l].0 = *a;
-                    let ev = Evaluator::new(ctx.pipe.be, &library, &arch)?;
+                    let ev = Evaluator::new(&*ctx.pipe.be, &library, &arch)?;
                     (parent_acc - ev.mc_accuracy(&train_qs)?).max(0.0)
                 }
             };
@@ -557,7 +557,7 @@ pub fn table11(ctx: &ExpCtx) -> Result<()> {
                 _ => {
                     let mut arch = parent_arch.clone();
                     arch.layers[l].1 = *f;
-                    let ev = Evaluator::new(ctx.pipe.be, &library, &arch)?;
+                    let ev = Evaluator::new(&*ctx.pipe.be, &library, &arch)?;
                     (parent_acc - ev.mc_accuracy(&train_qs)?).max(0.0)
                 }
             };
@@ -575,7 +575,7 @@ pub fn table11(ctx: &ExpCtx) -> Result<()> {
         let sol = ctx.pipe.search_speedup(&ctx.space, table, &ct, 1.8)?;
         let mut child = library.clone();
         ctx.pipe.gkd_child(&mut child, &sol.arch, LossSpec::gkd_best(), ctx.pipe.cfg.gkd_steps / 2)?;
-        let ev = Evaluator::new(ctx.pipe.be, &child, &sol.arch)?;
+        let ev = Evaluator::new(&*ctx.pipe.be, &child, &sol.arch)?;
         let acc = ev.mc_accuracy(&test_qs)?;
         println!("{:<28} {:>13.2}%", name, acc);
         rows.push(Json::from_pairs(vec![("scoring", Json::str(name)), ("test_acc", Json::num(acc))]));
@@ -597,7 +597,7 @@ pub fn table12(ctx: &ExpCtx) -> Result<()> {
         ("full", ctx.space.clone()),
     ] {
         let val = ctx.pipe.val_batches(ctx.pipe.cfg.score_batches);
-        let scores = scoring::score_library(ctx.pipe.be, &library, &space, &val, Metric::Kl)?;
+        let scores = scoring::score_library(&*ctx.pipe.be, &library, &space, &val, Metric::Kl)?;
         let sol = ctx.pipe.search_speedup(&space, &scores, &ct, 1.8)?;
         let ev = ctx.eval(&library, &sol.arch)?;
         println!("{:<18} {:>8.2} {:>12.0}", name, ev.get("synthqa"), sol.throughput);

@@ -45,4 +45,4 @@ pub mod util;
 pub mod weights;
 
 pub use config::{Manifest, ModelCfg, TinyManifest};
-pub use runtime::{Backend, RefBackend};
+pub use runtime::{share, Backend, RefBackend, SharedBackend};

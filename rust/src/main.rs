@@ -25,14 +25,14 @@ use puzzle::data::corpus::sample_sequence;
 use puzzle::experiments::{self, ExpCtx};
 use puzzle::perf::{CostTable, Scenario};
 use puzzle::pipeline::{Pipeline, StageCfg};
-use puzzle::runtime::{Backend, RefBackend};
+use puzzle::runtime::{share, RefBackend, SharedBackend};
 use puzzle::scoring::Metric;
-use puzzle::serving::Engine;
+use puzzle::serving::{EngineConfig, GenRequest, SamplingParams, SchedulerKind, StreamEvent};
 use puzzle::train::LossSpec;
 use puzzle::util::{Args, Rng};
 use puzzle::{eval::Evaluator, info};
 
-fn open_backend(args: &Args) -> Result<Box<dyn Backend>> {
+fn open_backend(args: &Args) -> Result<SharedBackend> {
     let config = args.str("config", "tiny");
     let backend = args.str("backend", "ref");
     match backend.as_str() {
@@ -42,7 +42,7 @@ fn open_backend(args: &Args) -> Result<Box<dyn Backend>> {
                 "small" => TinyManifest::synthetic_small(),
                 other => return Err(anyhow!("ref backend has no synthetic config '{other}' (tiny|small)")),
             };
-            Ok(Box::new(RefBackend::new(man)))
+            Ok(share(RefBackend::new(man)))
         }
         "pjrt" => open_pjrt(args, &config),
         other => Err(anyhow!("unknown backend '{other}' (ref|pjrt)")),
@@ -50,13 +50,13 @@ fn open_backend(args: &Args) -> Result<Box<dyn Backend>> {
 }
 
 #[cfg(feature = "pjrt")]
-fn open_pjrt(args: &Args, config: &str) -> Result<Box<dyn Backend>> {
+fn open_pjrt(args: &Args, config: &str) -> Result<SharedBackend> {
     let dir = PathBuf::from(args.str("artifacts", "artifacts")).join(config);
-    Ok(Box::new(puzzle::runtime::XlaBackend::open(&dir)?))
+    Ok(share(puzzle::runtime::XlaBackend::open(&dir)?))
 }
 
 #[cfg(not(feature = "pjrt"))]
-fn open_pjrt(_args: &Args, _config: &str) -> Result<Box<dyn Backend>> {
+fn open_pjrt(_args: &Args, _config: &str) -> Result<SharedBackend> {
     Err(anyhow!("built without the `pjrt` feature; rebuild with --features pjrt"))
 }
 
@@ -77,9 +77,8 @@ fn stage_cfg(args: &Args) -> StageCfg {
 
 fn cmd_pipeline(args: &Args) -> Result<()> {
     let be = open_backend(args)?;
-    let be: &dyn Backend = &*be;
     let run_dir = PathBuf::from(args.str("run-dir", &format!("runs/{}", be.man().cfg.name)));
-    let pipe = Pipeline::new(be, &run_dir, stage_cfg(args))?;
+    let pipe = Pipeline::new(be.clone(), &run_dir, stage_cfg(args))?;
     let space = SearchSpace::full(be.man().cfg.n_heads as u32);
     info!(
         "search space: {} attn x {} ffn = {} per layer; |space| ~ 10^{:.1}",
@@ -100,9 +99,9 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     child.save(&run_dir.join("child_cli.pzw"))?;
     // final eval
     let parent_arch = Arch::parent(be.man().cfg.n_layers);
-    let pe = Evaluator::new(be, &library, &parent_arch)?
+    let pe = Evaluator::new(&*be, &library, &parent_arch)?
         .run_suite(&pipe.world, pipe.cfg.eval_questions, 7)?;
-    let ce = Evaluator::new(be, &child, &sol.arch)?
+    let ce = Evaluator::new(&*be, &child, &sol.arch)?
         .run_suite(&pipe.world, pipe.cfg.eval_questions, 7)?;
     println!("parent: {}", pe.row());
     println!("child : {}", ce.row());
@@ -122,43 +121,80 @@ fn cmd_exp(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow!("usage: puzzle exp <table1..table17|fig4..fig8|all>"))?
         .clone();
     let be = open_backend(args)?;
-    let be: &dyn Backend = &*be;
     let run_dir = PathBuf::from(args.str("run-dir", &format!("runs/{}", be.man().cfg.name)));
-    let pipe = Pipeline::new(be, &run_dir, stage_cfg(args))?;
+    let pipe = Pipeline::new(be.clone(), &run_dir, stage_cfg(args))?;
     let ctx = ExpCtx::new(pipe);
     experiments::run(&ctx, &name)
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let be = open_backend(args)?;
-    let be: &dyn Backend = &*be;
     let run_dir = PathBuf::from(args.str("run-dir", &format!("runs/{}", be.man().cfg.name)));
-    let pipe = Pipeline::new(be, &run_dir, stage_cfg(args))?;
+    let pipe = Pipeline::new(be.clone(), &run_dir, stage_cfg(args))?;
     let space = SearchSpace::full(be.man().cfg.n_heads as u32);
     let library = pipe.ensure_library(&space)?;
     let scores = pipe.ensure_scores(&space, Metric::Kl)?;
     let ct = pipe.default_cost_table();
     let sol = pipe.search_speedup(&space, &scores, &ct, args.f64("speedup", 1.8))?;
-    let mut eng = Engine::new(be, &library, &sol.arch, 64 << 20)?;
+    let scheduler = args.str("scheduler", "fifo");
+    let scheduler = SchedulerKind::parse(&scheduler)
+        .ok_or_else(|| anyhow!("unknown scheduler '{scheduler}' (fifo|priority|spf)"))?;
+    let mut eng = EngineConfig::new()
+        .kv_budget_bytes(64 << 20)
+        .scheduler(scheduler)
+        .build(be.clone(), &library, &sol.arch)?;
     let n_req = args.usize("requests", 16);
+    let temperature = args.f64("temperature", 0.0) as f32;
+    let seed = args.u64("seed", 42);
     let mut rng = Rng::new(1);
     let c = &be.man().cfg;
-    for _ in 0..n_req {
+    for i in 0..n_req {
         let plen = rng.range(4, c.s_prefill.min(32));
         let prompt = sample_sequence(&pipe.world, &pipe.mix, plen, &mut rng);
-        eng.submit(prompt, args.usize("max-new", 24))?;
+        let sampling = if temperature > 0.0 {
+            SamplingParams::temperature(temperature).with_seed(seed ^ i as u64)
+        } else {
+            SamplingParams::greedy()
+        };
+        eng.submit(
+            GenRequest::new(prompt, args.usize("max-new", 24))
+                .with_priority((i % 3) as i32)
+                .with_sampling(sampling),
+        )?;
     }
-    let responses = eng.run_to_completion()?;
-    println!("served {} requests | {}", responses.len(), eng.metrics.summary());
+    let responses = if args.flag("stream") {
+        // step-driven event loop: print tokens as the engine produces them
+        while !eng.is_idle() {
+            for ev in eng.step()? {
+                match ev {
+                    StreamEvent::Token { id, tok } => println!("  req {id}: token {tok}"),
+                    StreamEvent::Finished { id, reason } => {
+                        println!("  req {id}: finished ({})", reason.as_str())
+                    }
+                    StreamEvent::Rejected { id, cause } => {
+                        println!("  req {id}: rejected ({cause})")
+                    }
+                }
+            }
+        }
+        eng.take_finished()
+    } else {
+        eng.run_to_completion()?
+    };
+    println!(
+        "served {} requests ({} scheduler) | {}",
+        responses.len(),
+        eng.scheduler_name(),
+        eng.metrics.summary()
+    );
     Ok(())
 }
 
 fn cmd_measure(args: &Args) -> Result<()> {
     let be = open_backend(args)?;
-    let be: &dyn Backend = &*be;
     let c = &be.man().cfg;
     let sc = Scenario { prefill: c.s_prefill, decode: c.s_prefill, batch: c.b_decode };
-    let ct = CostTable::measured(be, &sc, args.usize("reps", 5))?;
+    let ct = CostTable::measured(&*be, &sc, args.usize("reps", 5))?;
     println!(
         "measured per-variant scenario costs on this machine ({} backend, {}):",
         be.name(),
@@ -202,7 +238,7 @@ fn main() -> Result<()> {
         Some("info") => cmd_info(&args),
         _ => {
             eprintln!(
-                "usage: puzzle <pipeline|exp|serve|measure|info> [--backend ref|pjrt] [--config tiny|small] [--run-dir DIR] [--scale F] [--speedup X]"
+                "usage: puzzle <pipeline|exp|serve|measure|info> [--backend ref|pjrt] [--config tiny|small] [--run-dir DIR] [--scale F] [--speedup X]\n       serve also takes: [--scheduler fifo|priority|spf] [--temperature T] [--stream] [--requests N] [--max-new N]"
             );
             Ok(())
         }

@@ -18,7 +18,7 @@ use crate::data::{Batcher, CorpusMix, World};
 use crate::gkd::{self, GkdCfg};
 use crate::mip::{self, Constraints, Solution};
 use crate::perf::{CostTable, HwProfile, Scenario};
-use crate::runtime::Backend;
+use crate::runtime::SharedBackend;
 use crate::scoring::{self, Metric, ScoreTable};
 use crate::train::LossSpec;
 use crate::util::{Json, Rng};
@@ -65,16 +65,17 @@ impl StageCfg {
     }
 }
 
-pub struct Pipeline<'a> {
-    pub be: &'a dyn Backend,
+pub struct Pipeline {
+    /// Owned backend handle; clone it to hand engines their own copy.
+    pub be: SharedBackend,
     pub run_dir: PathBuf,
     pub world: World,
     pub mix: CorpusMix,
     pub cfg: StageCfg,
 }
 
-impl<'a> Pipeline<'a> {
-    pub fn new(be: &'a dyn Backend, run_dir: &Path, cfg: StageCfg) -> Result<Pipeline<'a>> {
+impl Pipeline {
+    pub fn new(be: SharedBackend, run_dir: &Path, cfg: StageCfg) -> Result<Pipeline> {
         std::fs::create_dir_all(run_dir)?;
         let world = World::new(cfg.seed, be.man().cfg.v as u32);
         Ok(Pipeline {
@@ -109,7 +110,7 @@ impl<'a> Pipeline<'a> {
         let mut batcher = self.batcher(0x9a5e);
         let val = self.val_batches(2);
         let report = gkd::pretrain_parent(
-            self.be,
+            &*self.be,
             &mut store,
             &mut batcher,
             &val,
@@ -143,7 +144,7 @@ impl<'a> Pipeline<'a> {
         let mut store = self.ensure_parent()?;
         let mut batcher = self.batcher(0xb1d);
         let report =
-            bld::run_decoupled(self.be, &mut store, space, &mut batcher, self.cfg.bld_steps, self.cfg.bld_lr)?;
+            bld::run_decoupled(&*self.be, &mut store, space, &mut batcher, self.cfg.bld_steps, self.cfg.bld_lr)?;
         let mean_nmse: f64 =
             report.final_loss.values().sum::<f64>() / report.final_loss.len().max(1) as f64;
         info!(
@@ -168,7 +169,7 @@ impl<'a> Pipeline<'a> {
         }
         let store = self.ensure_library(space)?;
         let val = self.val_batches(self.cfg.score_batches);
-        let table = scoring::score_library(self.be, &store, space, &val, metric)?;
+        let table = scoring::score_library(&*self.be, &store, space, &val, metric)?;
         std::fs::write(&path, table.to_json().to_pretty())?;
         Ok(table)
     }
@@ -197,7 +198,7 @@ impl<'a> Pipeline<'a> {
         let mut batcher = self.batcher(0x6cd);
         let val = self.val_batches(2);
         let cfg = GkdCfg { steps, lr: self.cfg.gkd_lr, spec, warmup_frac: 0.1, log_every: 20 };
-        gkd::run(self.be, store, arch, &mut batcher, &val, &cfg)
+        gkd::run(&*self.be, store, arch, &mut batcher, &val, &cfg)
     }
 
     /// Default hardware + scenario for searches on this config.

@@ -64,3 +64,24 @@ pub trait Backend {
         Ok(())
     }
 }
+
+/// How long-lived components (the serving `Engine`, the `Pipeline`) hold a
+/// backend. `RefBackend` is `Send + Sync` (its stats sit behind a `Mutex`),
+/// so the default build shares backends through an `Arc` that can be handed
+/// to a server thread. The PJRT path wraps an `Rc`-based client that is
+/// single-threaded by construction, so with the `pjrt` feature the shared
+/// handle degrades to `Rc` and engines stay on the thread that built them.
+#[cfg(not(feature = "pjrt"))]
+pub type SharedBackend = std::sync::Arc<dyn Backend + Send + Sync>;
+#[cfg(feature = "pjrt")]
+pub type SharedBackend = std::rc::Rc<dyn Backend>;
+
+/// Wrap a concrete backend in the build's `SharedBackend` handle.
+#[cfg(not(feature = "pjrt"))]
+pub fn share(be: impl Backend + Send + Sync + 'static) -> SharedBackend {
+    std::sync::Arc::new(be)
+}
+#[cfg(feature = "pjrt")]
+pub fn share(be: impl Backend + 'static) -> SharedBackend {
+    std::rc::Rc::new(be)
+}

@@ -8,11 +8,12 @@
 //! Implementations:
 //!  * `RefBackend` (always built) — a hermetic pure-Rust interpreter of
 //!    the block contract; runs the whole pipeline with no artifacts, no
-//!    `xla` crate, and no python step.
+//!    `xla` crate, and no python step. `Send + Sync`, so a `SharedBackend`
+//!    (`Arc`) handle can be moved to a server thread.
 //!  * `XlaBackend` (`pjrt` feature) — the original PJRT path: AOT HLO-text
 //!    artifacts compiled once per executable. The `xla` crate's PJRT
 //!    client is `Rc`-based, so that backend is single-threaded by
-//!    construction; the serving engine owns it on a dedicated thread.
+//!    construction; `SharedBackend` degrades to `Rc` under this feature.
 
 pub mod backend;
 pub mod refbackend;
@@ -25,7 +26,7 @@ pub mod registry;
 #[cfg(feature = "pjrt")]
 pub mod xla_backend;
 
-pub use backend::{Backend, ExecStats};
+pub use backend::{share, Backend, ExecStats, SharedBackend};
 pub use refbackend::RefBackend;
 pub use value::{tensor_to_val, val_f32, val_i32, val_to_tensor, val_to_vec_f32, Value};
 

@@ -13,7 +13,7 @@
 //! Gradients are checked against central finite differences in the tests
 //! below.
 
-use std::cell::RefCell;
+use std::sync::Mutex;
 use std::collections::HashMap;
 use std::time::Instant;
 
@@ -27,13 +27,13 @@ use super::value::Value;
 
 pub struct RefBackend {
     man: Manifest,
-    stats: RefCell<HashMap<String, ExecStats>>,
+    stats: Mutex<HashMap<String, ExecStats>>,
 }
 
 impl RefBackend {
     pub fn new(man: Manifest) -> RefBackend {
         debug_assert!(man.cfg.head_dim % 2 == 0, "RoPE needs an even head_dim");
-        RefBackend { man, stats: RefCell::new(HashMap::new()) }
+        RefBackend { man, stats: Mutex::new(HashMap::new()) }
     }
 
     /// The standard hermetic test backend: in-memory tiny manifest.
@@ -216,7 +216,7 @@ impl Backend for RefBackend {
         self.validate(name, inputs)?;
         let t0 = Instant::now();
         let out = self.dispatch(name, inputs).with_context(|| format!("ref exec {name}"))?;
-        let mut st = self.stats.borrow_mut();
+        let mut st = self.stats.lock().unwrap();
         let entry = st.entry(name.to_string()).or_default();
         entry.calls += 1;
         entry.total_secs += t0.elapsed().as_secs_f64();
@@ -224,7 +224,7 @@ impl Backend for RefBackend {
     }
 
     fn measured_secs(&self, name: &str) -> Option<f64> {
-        let st = self.stats.borrow();
+        let st = self.stats.lock().unwrap();
         let e = st.get(name)?;
         if e.calls == 0 {
             None
@@ -235,7 +235,7 @@ impl Backend for RefBackend {
 
     fn stats_snapshot(&self) -> Vec<(String, ExecStats)> {
         let mut v: Vec<_> =
-            self.stats.borrow().iter().map(|(k, s)| (k.clone(), s.clone())).collect();
+            self.stats.lock().unwrap().iter().map(|(k, s)| (k.clone(), s.clone())).collect();
         v.sort_by(|a, b| b.1.total_secs.partial_cmp(&a.1.total_secs).unwrap());
         v
     }

@@ -1,18 +1,30 @@
 //! Continuous-batching inference engine over the block executables of any
-//! `Backend`.
+//! `Backend` — the v2 serving core.
+//!
+//! The engine *owns* its backend through a `SharedBackend` handle, so it
+//! can outlive the stack frame that built it and move to a server thread
+//! (default build; the PJRT handle is `Rc` and stays put). Construction
+//! goes through the `EngineConfig` builder (KV budget, page length, queue
+//! depth, scheduler policy); requests are `GenRequest`s carrying their
+//! own priority and `SamplingParams`; progress is driven by the public
+//! `step()`, which returns the `StreamEvent`s produced by that step
+//! (tokens, finishes, rejections) — `run_to_completion` is a thin loop
+//! over it. `cancel(id)` frees the slot and its KV pages mid-generation.
 //!
 //! Slots are fixed by the decode executables' compiled batch (`b_decode`);
-//! admission is gated by the variable-GQA paged KV manager; prefill runs
-//! at batch 1 and seeds the slot's dense cache; decode steps all active
-//! slots together with per-sequence positions (the paper's §4.1 point that
-//! batched decode amortizes weight reads is physical here too). Greedy
-//! sampling; stop on EOS / max_new / cache horizon.
+//! admission is delegated to the configured `Scheduler` and gated by the
+//! variable-GQA paged KV manager; prefill runs at batch 1 and seeds the
+//! slot's dense cache; decode steps all active slots together with
+//! per-sequence positions (the paper's §4.1 point that batched decode
+//! amortizes weight reads is physical here too).
 //!
 //! Prompts longer than the prefill window are *chunked*: the first
 //! `s_prefill` tokens go through the prefill executable, the remainder is
 //! streamed through decode steps (teacher-forcing the known prompt tokens)
-//! before generation starts — no silent truncation. Prompts that cannot
-//! fit the cache horizon at all are rejected at submit.
+//! before generation starts — no silent truncation. Requests the engine
+//! can never serve — empty prompt, `max_new == 0`, prompt filling the
+//! whole cache horizon, or a horizon that exceeds the *total* KV budget —
+//! are rejected at `submit`.
 
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -22,21 +34,41 @@ use anyhow::{anyhow, Result};
 use crate::arch::{Arch, AttnChoice};
 use crate::data::world::EOS;
 use crate::model::CompiledModel;
-use crate::runtime::{val_f32, val_i32, val_to_tensor, Backend, Value};
+use crate::runtime::{val_f32, val_i32, val_to_tensor, SharedBackend, Value};
+use crate::util::Rng;
 use crate::weights::Store;
 
 use super::kvcache::{PageCfg, PagedKvManager};
 use super::metrics::EngineMetrics;
+use super::sampling::{sample, SamplingParams};
+use super::scheduler::{QueueView, Scheduler, SchedulerKind};
 
+/// A generation request: prompt plus per-request generation policy.
 #[derive(Debug, Clone)]
-pub struct Request {
-    pub id: u64,
+pub struct GenRequest {
     pub prompt: Vec<u32>,
     pub max_new: usize,
+    /// Larger = more urgent; only the `Priority` scheduler looks at it.
+    pub priority: i32,
+    pub sampling: SamplingParams,
 }
 
-impl Request {
-    /// The sequence's full cache horizon: what `can_admit` checks and
+impl GenRequest {
+    pub fn new(prompt: Vec<u32>, max_new: usize) -> GenRequest {
+        GenRequest { prompt, max_new, priority: 0, sampling: SamplingParams::greedy() }
+    }
+
+    pub fn with_priority(mut self, priority: i32) -> GenRequest {
+        self.priority = priority;
+        self
+    }
+
+    pub fn with_sampling(mut self, sampling: SamplingParams) -> GenRequest {
+        self.sampling = sampling;
+        self
+    }
+
+    /// The sequence's full cache horizon: what admission checks and
     /// `prefill` reserves. Deriving both from one place is what makes the
     /// no-deadlock invariant structural.
     fn horizon(&self, s_max: usize) -> usize {
@@ -44,16 +76,114 @@ impl Request {
     }
 }
 
+/// Why a sequence stopped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// The model emitted the end-of-sequence token.
+    Eos,
+    /// The request's `max_new` budget is spent.
+    MaxNew,
+    /// The compiled cache horizon `s_max` is full.
+    CacheHorizon,
+    /// `cancel(id)` tore the request down.
+    Cancelled,
+}
+
+impl FinishReason {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FinishReason::Eos => "eos",
+            FinishReason::MaxNew => "max_new",
+            FinishReason::CacheHorizon => "cache_horizon",
+            FinishReason::Cancelled => "cancelled",
+        }
+    }
+}
+
+/// What one engine step can emit, in order of occurrence. `Token` carries
+/// every *generated* token (teacher-forced prompt-tail tokens are not
+/// echoed); `Finished` is terminal per id; `Rejected` is emitted by
+/// `submit` for requests that never enter the queue.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StreamEvent {
+    Token { id: u64, tok: u32 },
+    Finished { id: u64, reason: FinishReason },
+    Rejected { id: u64, cause: String },
+}
+
 #[derive(Debug, Clone)]
 pub struct Response {
     pub id: u64,
     pub tokens: Vec<u32>,
+    pub finish: FinishReason,
     pub ttft_secs: f64,
     pub e2e_secs: f64,
 }
 
+/// Engine construction parameters (replaces the v1 positional args).
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Total byte budget of the paged KV pool.
+    pub kv_budget_bytes: usize,
+    /// Positions per KV page.
+    pub page_len: usize,
+    /// Max waiting requests before `submit` rejects.
+    pub max_queue: usize,
+    pub scheduler: SchedulerKind,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            kv_budget_bytes: 64 << 20,
+            page_len: 16,
+            max_queue: 1024,
+            scheduler: SchedulerKind::Fifo,
+        }
+    }
+}
+
+impl EngineConfig {
+    pub fn new() -> EngineConfig {
+        EngineConfig::default()
+    }
+
+    pub fn kv_budget_bytes(mut self, bytes: usize) -> EngineConfig {
+        self.kv_budget_bytes = bytes;
+        self
+    }
+
+    pub fn page_len(mut self, page_len: usize) -> EngineConfig {
+        self.page_len = page_len;
+        self
+    }
+
+    pub fn max_queue(mut self, max_queue: usize) -> EngineConfig {
+        self.max_queue = max_queue;
+        self
+    }
+
+    pub fn scheduler(mut self, kind: SchedulerKind) -> EngineConfig {
+        self.scheduler = kind;
+        self
+    }
+
+    /// Assemble the model and build a long-lived engine that owns `be`.
+    pub fn build(self, be: SharedBackend, store: &Store, arch: &Arch) -> Result<Engine> {
+        Engine::with_config(be, store, arch, self)
+    }
+}
+
+struct Queued {
+    id: u64,
+    req: GenRequest,
+    t_submit: Instant,
+}
+
 struct Slot {
-    req: Request,
+    id: u64,
+    req: GenRequest,
+    rng: Rng,
     generated: Vec<u32>,
     /// next position to write (== tokens so far)
     len: usize,
@@ -80,30 +210,34 @@ struct LayerExecs {
     ffn_decode: Option<String>,
 }
 
-pub struct Engine<'a> {
-    be: &'a dyn Backend,
+pub struct Engine {
+    be: SharedBackend,
+    cfg: EngineConfig,
     model: CompiledModel,
     caches: Vec<Option<LayerCache>>,
     slots: Vec<Option<Slot>>,
-    queue: VecDeque<(Request, Instant)>,
+    /// waiting requests in arrival order (schedulers index into this)
+    queue: Vec<Queued>,
+    sched: Box<dyn Scheduler>,
     execs: Vec<LayerExecs>,
     paged: PagedKvManager,
+    events: Vec<StreamEvent>,
     pub metrics: EngineMetrics,
     finished: Vec<Response>,
     next_id: u64,
 }
 
-impl<'a> Engine<'a> {
-    pub fn new(be: &'a dyn Backend, store: &Store, arch: &Arch, kv_budget_bytes: usize) -> Result<Engine<'a>> {
+impl Engine {
+    fn with_config(be: SharedBackend, store: &Store, arch: &Arch, cfg: EngineConfig) -> Result<Engine> {
         let man = be.man();
-        let cfg = &man.cfg;
+        let mcfg = &man.cfg;
         let model = CompiledModel::assemble(man, store, arch)?;
         let mut caches = Vec::with_capacity(arch.n_layers());
         for (a, _) in arch.layers.iter() {
             match a {
                 AttnChoice::Gqa { .. } => {
                     let kv = man.attn_variants[&a.name()].kv_heads;
-                    let shape = [cfg.b_decode, cfg.s_max, kv, cfg.head_dim];
+                    let shape = [mcfg.b_decode, mcfg.s_max, kv, mcfg.head_dim];
                     let zeros = vec![0f32; shape.iter().product()];
                     caches.push(Some(LayerCache {
                         k: val_f32(&shape, &zeros)?,
@@ -117,7 +251,7 @@ impl<'a> Engine<'a> {
         let paged = PagedKvManager::new(
             man,
             arch,
-            PageCfg { page_len: 16, dtype_bytes: 4, budget_bytes: kv_budget_bytes },
+            PageCfg { page_len: cfg.page_len, dtype_bytes: 4, budget_bytes: cfg.kv_budget_bytes },
         );
         let execs = (0..arch.n_layers())
             .map(|l| LayerExecs {
@@ -127,61 +261,159 @@ impl<'a> Engine<'a> {
                 ffn_decode: model.ffn[l].prefix.as_ref().map(|p| format!("{p}_decode")),
             })
             .collect();
+        let slots = (0..mcfg.b_decode).map(|_| None).collect();
+        let sched = cfg.scheduler.build();
         Ok(Engine {
             be,
+            cfg,
             model,
             caches,
-            slots: (0..cfg.b_decode).map(|_| None).collect(),
-            queue: VecDeque::new(),
+            slots,
+            queue: Vec::new(),
+            sched,
             execs,
             paged,
+            events: Vec::new(),
             metrics: EngineMetrics::default(),
             finished: Vec::new(),
             next_id: 1,
         })
     }
 
-    /// Enqueue a request. Rejects prompts the engine can never serve:
-    /// empty prompts and prompts that fill the whole cache horizon leaving
-    /// no room for a generated token.
-    pub fn submit(&mut self, prompt: Vec<u32>, max_new: usize) -> Result<u64> {
+    /// Enqueue a request. Requests the engine can *never* serve are
+    /// rejected here rather than stalling later: empty prompts,
+    /// `max_new == 0` (prefill would still sample a token), prompts that
+    /// fill the whole cache horizon, horizons whose pages exceed the total
+    /// KV budget, and queue overflow past `max_queue`.
+    pub fn submit(&mut self, req: GenRequest) -> Result<u64> {
         let s_max = self.be.man().cfg.s_max;
-        if prompt.is_empty() {
-            self.metrics.rejected_prompts += 1;
-            return Err(anyhow!("empty prompt"));
-        }
-        if prompt.len() >= s_max {
-            self.metrics.rejected_prompts += 1;
-            return Err(anyhow!(
-                "prompt of {} tokens cannot fit the cache horizon s_max={} (needs >= 1 slot for generation)",
-                prompt.len(),
-                s_max
-            ));
-        }
         let id = self.next_id;
         self.next_id += 1;
-        self.queue.push_back((Request { id, prompt, max_new }, Instant::now()));
+        if req.prompt.is_empty() {
+            return Err(self.reject(id, "empty prompt".into()));
+        }
+        if req.max_new == 0 {
+            return Err(self.reject(id, "max_new == 0: nothing to generate".into()));
+        }
+        if req.prompt.len() >= s_max {
+            return Err(self.reject(
+                id,
+                format!(
+                    "prompt of {} tokens cannot fit the cache horizon s_max={} (needs >= 1 slot for generation)",
+                    req.prompt.len(),
+                    s_max
+                ),
+            ));
+        }
+        let horizon = req.horizon(s_max);
+        if !self.paged.fits_budget(horizon) {
+            return Err(self.reject(
+                id,
+                format!(
+                    "horizon of {} positions needs more KV pages than the total budget of {} bytes",
+                    horizon,
+                    self.paged.budget_bytes()
+                ),
+            ));
+        }
+        if self.queue.len() >= self.cfg.max_queue {
+            return Err(self.reject(id, format!("queue full (max_queue = {})", self.cfg.max_queue)));
+        }
+        self.queue.push(Queued { id, req, t_submit: Instant::now() });
         Ok(id)
+    }
+
+    fn reject(&mut self, id: u64, cause: String) -> anyhow::Error {
+        self.metrics.rejected_prompts += 1;
+        let err = anyhow!("request {id} rejected: {cause}");
+        self.events.push(StreamEvent::Rejected { id, cause });
+        err
+    }
+
+    /// Cancel a queued or running request: the slot and all its KV pages
+    /// are freed immediately and a `Finished{Cancelled}` event plus a
+    /// partial `Response` are produced. Returns false for unknown ids.
+    pub fn cancel(&mut self, id: u64) -> bool {
+        if let Some(qidx) = self.queue.iter().position(|q| q.id == id) {
+            let q = self.queue.remove(qidx);
+            // never admitted: no pages held, no tokens generated
+            self.emit_terminal(id, vec![], FinishReason::Cancelled, 0.0, q.t_submit.elapsed().as_secs_f64());
+            return true;
+        }
+        if let Some(sidx) = self
+            .slots
+            .iter()
+            .position(|s| s.as_ref().is_some_and(|s| s.id == id))
+        {
+            let slot = self.slots[sidx].take().unwrap();
+            self.finish(slot, FinishReason::Cancelled);
+            return true;
+        }
+        false
     }
 
     fn free_slot(&self) -> Option<usize> {
         self.slots.iter().position(Option::is_none)
     }
 
-    fn active(&self) -> usize {
+    /// Number of sequences currently holding a decode slot.
+    pub fn active(&self) -> usize {
         self.slots.iter().filter(|s| s.is_some()).count()
     }
 
-    /// Admit queued requests into free slots (router policy: FIFO).
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Nothing queued and nothing running.
+    pub fn is_idle(&self) -> bool {
+        self.queue.is_empty() && self.active() == 0
+    }
+
+    pub fn scheduler_name(&self) -> &'static str {
+        self.sched.name()
+    }
+
+    /// Paged-KV accounting, exposed for tests and ops dashboards.
+    pub fn kv_allocated_bytes(&self) -> usize {
+        self.paged.allocated_bytes()
+    }
+
+    pub fn kv_active_seqs(&self) -> usize {
+        self.paged.active_seqs()
+    }
+
+    /// Drain finished responses accumulated so far (streaming consumers;
+    /// `run_to_completion` calls this at the end).
+    pub fn take_finished(&mut self) -> Vec<Response> {
+        std::mem::take(&mut self.finished)
+    }
+
+    /// Admit queued requests into free slots under the configured policy.
+    /// If the picked request does not fit the KV pool *right now*, wait
+    /// for a release (backpressure) instead of skipping past it.
     fn admit(&mut self) -> Result<()> {
-        while let Some(slot_idx) = self.free_slot() {
-            let Some((req, _t)) = self.queue.front() else { break };
-            let horizon = req.horizon(self.be.man().cfg.s_max);
+        let s_max = self.be.man().cfg.s_max;
+        while self.free_slot().is_some() && !self.queue.is_empty() {
+            let view: Vec<QueueView> = self
+                .queue
+                .iter()
+                .map(|q| QueueView {
+                    id: q.id,
+                    priority: q.req.priority,
+                    prompt_len: q.req.prompt.len(),
+                    max_new: q.req.max_new,
+                })
+                .collect();
+            let Some(qidx) = self.sched.pick(&view) else { break };
+            debug_assert!(qidx < self.queue.len(), "scheduler returned an out-of-range index");
+            let horizon = self.queue[qidx].req.horizon(s_max);
             if !self.paged.can_admit(horizon) {
                 break; // backpressure: wait for a release
             }
-            let (req, t_submit) = self.queue.pop_front().unwrap();
-            self.prefill(slot_idx, req, t_submit)?;
+            let slot_idx = self.free_slot().unwrap();
+            let q = self.queue.remove(qidx);
+            self.prefill(slot_idx, q)?;
         }
         Ok(())
     }
@@ -194,10 +426,11 @@ impl<'a> Engine<'a> {
     /// same amount `can_admit` checked — so concurrently admitted
     /// sequences can never jointly over-commit the pool and `grow` cannot
     /// fail mid-generation.
-    fn prefill(&mut self, slot_idx: usize, req: Request, t_submit: Instant) -> Result<()> {
-        let cfg = &self.be.man().cfg;
-        let horizon = req.horizon(cfg.s_max);
-        let sp = cfg.s_prefill;
+    fn prefill(&mut self, slot_idx: usize, q: Queued) -> Result<()> {
+        let mcfg = &self.be.man().cfg;
+        let (s_max, sp, head_dim, v) = (mcfg.s_max, mcfg.s_prefill, mcfg.head_dim, mcfg.v);
+        let Queued { id, req, t_submit } = q;
+        let horizon = req.horizon(s_max);
         let plen = req.prompt.len().min(sp);
         let chunked = req.prompt.len() > sp;
         let mut tokens: Vec<i32> = req.prompt.iter().take(plen).map(|&t| t as i32).collect();
@@ -217,18 +450,17 @@ impl<'a> Engine<'a> {
                     if let Some(cache) = &mut self.caches[l] {
                         // splice rows [0, plen) of the prefill K/V into this
                         // slot's lane, in place (Values are host-resident)
-                        let row = cache.kv_heads * cfg.head_dim;
-                        let smax = cfg.s_max;
+                        let row = cache.kv_heads * head_dim;
                         let k_new = out[0].as_f32()?;
                         let kc = cache.k.as_f32_mut()?;
                         for p in 0..plen {
-                            let dst = (slot_idx * smax + p) * row;
+                            let dst = (slot_idx * s_max + p) * row;
                             kc.data[dst..dst + row].copy_from_slice(&k_new.data[p * row..(p + 1) * row]);
                         }
                         let v_new = out[1].as_f32()?;
                         let vc = cache.v.as_f32_mut()?;
                         for p in 0..plen {
-                            let dst = (slot_idx * smax + p) * row;
+                            let dst = (slot_idx * s_max + p) * row;
                             vc.data[dst..dst + row].copy_from_slice(&v_new.data[p * row..(p + 1) * row]);
                         }
                     }
@@ -246,14 +478,17 @@ impl<'a> Engine<'a> {
             // known, so skip the head matmul entirely and stream the tail
             // through decode steps.
             self.metrics.execute_secs += t_exec.elapsed().as_secs_f64();
-            self.paged.admit(req.id, horizon);
+            self.paged.admit(id, horizon);
             self.metrics.prefills += 1;
             self.metrics.prompt_tokens += req.prompt.len();
             self.metrics.chunked_prefills += 1;
             let mut pending: VecDeque<u32> = req.prompt[plen..].iter().copied().collect();
             let first_pending = pending.pop_front().unwrap();
+            let rng = Rng::new(req.sampling.seed);
             let slot = Slot {
+                id,
                 req,
+                rng,
                 generated: vec![],
                 len: plen,
                 last_token: first_pending,
@@ -268,18 +503,20 @@ impl<'a> Engine<'a> {
         let logits =
             self.be.run("head_prefill", &[&x, &self.model.final_norm, &self.model.embed])?.remove(0);
         self.metrics.execute_secs += t_exec.elapsed().as_secs_f64();
-        self.paged.admit(req.id, horizon);
+        self.paged.admit(id, horizon);
         self.metrics.prefills += 1;
         self.metrics.prompt_tokens += req.prompt.len();
 
         let logits = val_to_tensor(&logits)?;
-        // greedy next token from the last prompt position
-        let v = cfg.v;
+        // next token from the last prompt position, per-request policy
         let rowbase = (plen - 1) * v;
-        let first = argmax(&logits.data[rowbase..rowbase + v]) as u32;
+        let mut rng = Rng::new(req.sampling.seed);
+        let first = sample(&logits.data[rowbase..rowbase + v], &req.sampling, &mut rng) as u32;
 
         let slot = Slot {
+            id,
             req,
+            rng,
             generated: vec![first],
             len: plen,
             last_token: first,
@@ -291,9 +528,18 @@ impl<'a> Engine<'a> {
             .ttft
             .push(slot.t_first.unwrap().duration_since(slot.t_submit).as_secs_f64());
         self.metrics.generated_tokens += 1;
-        // immediate completion checks
-        if first == EOS || slot.req.max_new <= 1 {
-            self.finish(Some(slot));
+        self.events.push(StreamEvent::Token { id, tok: first });
+        // immediate completion checks (max_new == 0 is rejected at submit,
+        // so max_new == 1 is the only budget exhausted here)
+        let reason = if first == EOS {
+            Some(FinishReason::Eos)
+        } else if slot.req.max_new <= 1 {
+            Some(FinishReason::MaxNew)
+        } else {
+            None
+        };
+        if let Some(reason) = reason {
+            self.finish(slot, reason);
             return Ok(());
         }
         self.slots[slot_idx] = Some(slot);
@@ -302,8 +548,8 @@ impl<'a> Engine<'a> {
 
     /// One batched decode step over all active slots.
     fn decode_step(&mut self) -> Result<()> {
-        let cfg = &self.be.man().cfg;
-        let bd = cfg.b_decode;
+        let mcfg = &self.be.man().cfg;
+        let (bd, v, s_max) = (mcfg.b_decode, mcfg.v, mcfg.s_max);
         let t_step = Instant::now();
         let mut tokens = vec![0i32; bd];
         let mut pos = vec![0i32; bd];
@@ -358,7 +604,6 @@ impl<'a> Engine<'a> {
             None
         };
         self.metrics.execute_secs += t_exec.elapsed().as_secs_f64();
-        let v = cfg.v;
 
         let mut to_finish = Vec::new();
         for i in 0..bd {
@@ -366,7 +611,7 @@ impl<'a> Engine<'a> {
             // no per-step page growth: the full horizon was reserved at
             // admission, and the done-checks below keep `len` inside it
             slot.len += 1;
-            debug_assert!(slot.len < self.be.man().cfg.s_max);
+            debug_assert!(slot.len < s_max);
             if let Some(next_prompt_tok) = slot.pending.pop_front() {
                 // still consuming the prompt tail: the model's prediction is
                 // discarded, the true prompt token is teacher-forced.
@@ -374,7 +619,8 @@ impl<'a> Engine<'a> {
                 continue;
             }
             let logits = logits.as_ref().expect("sampling slot implies head ran");
-            let next = argmax(&logits.data[i * v..(i + 1) * v]) as u32;
+            let next =
+                sample(&logits.data[i * v..(i + 1) * v], &slot.req.sampling, &mut slot.rng) as u32;
             if slot.t_first.is_none() {
                 // first *generated* token of a chunked prompt
                 slot.t_first = Some(Instant::now());
@@ -385,16 +631,24 @@ impl<'a> Engine<'a> {
             slot.generated.push(next);
             slot.last_token = next;
             self.metrics.generated_tokens += 1;
-            let done = next == EOS
-                || slot.generated.len() >= slot.req.max_new
-                || slot.len + 1 >= cfg.s_max;
-            if done {
-                to_finish.push(i);
+            let id = slot.id;
+            let reason = if next == EOS {
+                Some(FinishReason::Eos)
+            } else if slot.generated.len() >= slot.req.max_new {
+                Some(FinishReason::MaxNew)
+            } else if slot.len + 1 >= s_max {
+                Some(FinishReason::CacheHorizon)
+            } else {
+                None
+            };
+            self.events.push(StreamEvent::Token { id, tok: next });
+            if let Some(reason) = reason {
+                to_finish.push((i, reason));
             }
         }
-        for i in to_finish {
-            let slot = self.slots[i].take();
-            self.finish(slot);
+        for (i, reason) in to_finish {
+            let slot = self.slots[i].take().unwrap();
+            self.finish(slot, reason);
         }
         self.metrics.decode_steps += 1;
         self.metrics.sched_overhead_secs +=
@@ -402,80 +656,100 @@ impl<'a> Engine<'a> {
         Ok(())
     }
 
-    fn finish(&mut self, slot: Option<Slot>) {
-        if let Some(slot) = slot {
-            self.paged.release(slot.req.id);
-            self.metrics.requests_completed += 1;
-            self.metrics
-                .e2e
-                .push(slot.t_submit.elapsed().as_secs_f64());
-            self.finished.push(Response {
-                id: slot.req.id,
-                tokens: slot.generated,
-                ttft_secs: slot
-                    .t_first
-                    .map(|t| t.duration_since(slot.t_submit).as_secs_f64())
-                    .unwrap_or(0.0),
-                e2e_secs: slot.t_submit.elapsed().as_secs_f64(),
-            });
-        }
+    fn finish(&mut self, slot: Slot, reason: FinishReason) {
+        self.paged.release(slot.id);
+        let ttft = slot
+            .t_first
+            .map(|t| t.duration_since(slot.t_submit).as_secs_f64())
+            .unwrap_or(0.0);
+        let e2e = slot.t_submit.elapsed().as_secs_f64();
+        self.emit_terminal(slot.id, slot.generated, reason, ttft, e2e);
     }
 
-    /// Drive the engine until queue and slots are empty; returns all
-    /// responses. Records wall time into metrics.
-    pub fn run_to_completion(&mut self) -> Result<Vec<Response>> {
+    /// Shared terminal-state protocol for every way a request ends:
+    /// metrics, `Finished` event, and the `Response` record.
+    fn emit_terminal(&mut self, id: u64, tokens: Vec<u32>, reason: FinishReason, ttft_secs: f64, e2e_secs: f64) {
+        self.metrics.record_finish(reason);
+        if reason != FinishReason::Cancelled {
+            self.metrics.requests_completed += 1;
+            self.metrics.e2e.push(e2e_secs);
+        }
+        self.events.push(StreamEvent::Finished { id, reason });
+        self.finished.push(Response { id, tokens, finish: reason, ttft_secs, e2e_secs });
+    }
+
+    /// One engine iteration: admit waiting requests into free slots
+    /// (running their prefills), then run one batched decode step over the
+    /// active slots. Returns the stream events produced by this step, in
+    /// order. Wall time accrues here, so step-driven and
+    /// `run_to_completion` callers see the same throughput metrics.
+    pub fn step(&mut self) -> Result<Vec<StreamEvent>> {
         let t0 = Instant::now();
-        loop {
-            self.admit()?;
-            if self.active() == 0 {
-                if self.queue.is_empty() {
-                    break;
-                }
-                // queue non-empty but nothing admitted -> cache stuck
-                if self.free_slot().is_some() {
-                    return Err(anyhow!("engine stalled: request cannot be admitted"));
-                }
-            }
-            if self.active() > 0 {
-                self.decode_step()?;
-            }
+        self.admit()?;
+        if self.active() > 0 {
+            self.decode_step()?;
         }
         self.metrics.wall_secs += t0.elapsed().as_secs_f64();
-        Ok(std::mem::take(&mut self.finished))
+        Ok(std::mem::take(&mut self.events))
     }
 
-    pub fn queue_len(&self) -> usize {
-        self.queue.len()
-    }
-}
-
-/// NaN-safe greedy argmax: NaN logits are skipped (a NaN never wins);
-/// all-NaN rows fall back to index 0.
-fn argmax(xs: &[f32]) -> usize {
-    let mut best: Option<usize> = None;
-    for (i, &x) in xs.iter().enumerate() {
-        if x.is_nan() {
-            continue;
+    /// Drive `step()` until queue and slots are empty; returns all
+    /// responses (the streaming events are dropped — use `step()` directly
+    /// to observe them).
+    pub fn run_to_completion(&mut self) -> Result<Vec<Response>> {
+        while !self.is_idle() {
+            // a stall is a step that started with nothing running and still
+            // could not admit anything. `active_before` matters: when the
+            // last running slot finishes *inside* this step, its pages are
+            // released after admit() already ran, so the queue legitimately
+            // stays put until the next iteration re-admits.
+            let active_before = self.active();
+            let queued_before = self.queue.len();
+            self.step()?;
+            if active_before == 0 && !self.queue.is_empty() && self.queue.len() == queued_before {
+                // submit-time validation guarantees every queued horizon
+                // fits an empty pool, so an idle engine can always admit.
+                debug_assert!(false, "engine stalled: queued request cannot be admitted");
+                return Err(anyhow!("engine stalled: request cannot be admitted"));
+            }
         }
-        match best {
-            None => best = Some(i),
-            Some(b) if x > xs[b] => best = Some(i),
-            _ => {}
-        }
+        Ok(self.take_finished())
     }
-    best.unwrap_or(0)
 }
 
 #[cfg(test)]
 mod tests {
-    use super::argmax;
+    use super::*;
 
     #[test]
-    fn argmax_ignores_nans() {
-        assert_eq!(argmax(&[1.0, 5.0, 3.0]), 1);
-        assert_eq!(argmax(&[f32::NAN, 2.0, 1.0]), 1);
-        assert_eq!(argmax(&[2.0, f32::NAN, 1.0]), 0);
-        assert_eq!(argmax(&[f32::NAN, f32::NAN]), 0);
-        assert_eq!(argmax(&[f32::NEG_INFINITY, -1.0]), 1);
+    fn engine_config_builder_defaults() {
+        let cfg = EngineConfig::new();
+        assert_eq!(cfg.scheduler, SchedulerKind::Fifo);
+        assert_eq!(cfg.page_len, 16);
+        let cfg = cfg.kv_budget_bytes(1 << 20).page_len(8).max_queue(2).scheduler(SchedulerKind::Priority);
+        assert_eq!(cfg.kv_budget_bytes, 1 << 20);
+        assert_eq!(cfg.page_len, 8);
+        assert_eq!(cfg.max_queue, 2);
+        assert_eq!(cfg.scheduler, SchedulerKind::Priority);
+    }
+
+    #[test]
+    fn gen_request_builder() {
+        let r = GenRequest::new(vec![1, 2], 4)
+            .with_priority(3)
+            .with_sampling(SamplingParams::temperature(0.5).with_seed(7));
+        assert_eq!(r.priority, 3);
+        assert_eq!(r.sampling.seed, 7);
+        assert_eq!(r.horizon(100), 6);
+        assert_eq!(r.horizon(5), 5, "horizon is capped at s_max");
+    }
+
+    /// The whole point of the owned-backend redesign: an engine (default
+    /// build) can move to a server thread.
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn engine_is_send() {
+        fn assert_send<T: Send>() {}
+        assert_send::<Engine>();
     }
 }

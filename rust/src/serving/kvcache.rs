@@ -95,6 +95,18 @@ impl PagedKvManager {
         self.allocated_bytes + self.bytes_to_grow(None, max_total) <= self.cfg.budget_bytes
     }
 
+    /// Could a sequence of `max_total` positions EVER be admitted — i.e.
+    /// do its pages fit an *empty* pool? The engine uses this at `submit`
+    /// to reject unservable horizons instead of stalling later.
+    pub fn fits_budget(&self, max_total: usize) -> bool {
+        self.bytes_to_grow(None, max_total) <= self.cfg.budget_bytes
+    }
+
+    /// Total pool capacity in bytes.
+    pub fn budget_bytes(&self) -> usize {
+        self.cfg.budget_bytes
+    }
+
     /// Allocate pages for a new sequence at `positions` occupied slots.
     pub fn admit(&mut self, seq_id: u64, positions: usize) -> bool {
         let grow = self.bytes_to_grow(None, positions);
@@ -231,6 +243,12 @@ mod tests {
         assert!(mgr.admit(1, 64));
         assert!(!mgr.admit(2, 64), "second sequence must be rejected");
         assert!(mgr.can_admit(16));
+        // fits_budget ignores current occupancy: 64 positions still *fit*
+        // the pool even while seq 1 holds it...
+        assert!(mgr.fits_budget(64));
+        assert!(!mgr.can_admit(64));
+        // ...but a horizon beyond total capacity can never fit
+        assert!(!mgr.fits_budget(64 * 16));
         mgr.release(1);
         assert!(mgr.admit(2, 64));
     }

@@ -2,6 +2,8 @@
 
 use crate::util::{mean, percentile};
 
+use super::engine::FinishReason;
+
 #[derive(Debug, Clone, Default)]
 pub struct EngineMetrics {
     pub requests_completed: usize,
@@ -12,7 +14,7 @@ pub struct EngineMetrics {
     pub wall_secs: f64,
     /// per-request time-to-first-token (secs)
     pub ttft: Vec<f64>,
-    /// per-request end-to-end latency (secs)
+    /// per-request end-to-end latency (secs; naturally finished requests)
     pub e2e: Vec<f64>,
     /// engine-side scheduling overhead per decode step (non-execute time)
     pub sched_overhead_secs: f64,
@@ -20,11 +22,26 @@ pub struct EngineMetrics {
     /// prompts longer than the prefill window, ingested via chunked
     /// (teacher-forced) decode steps instead of being truncated
     pub chunked_prefills: usize,
-    /// prompts rejected at submit (empty, or >= the cache horizon)
+    /// requests rejected at submit (empty / max_new == 0 / over-horizon /
+    /// over-budget / queue full)
     pub rejected_prompts: usize,
+    /// finish-reason histogram
+    pub finished_eos: usize,
+    pub finished_max_new: usize,
+    pub finished_horizon: usize,
+    pub cancelled: usize,
 }
 
 impl EngineMetrics {
+    pub fn record_finish(&mut self, reason: FinishReason) {
+        match reason {
+            FinishReason::Eos => self.finished_eos += 1,
+            FinishReason::MaxNew => self.finished_max_new += 1,
+            FinishReason::CacheHorizon => self.finished_horizon += 1,
+            FinishReason::Cancelled => self.cancelled += 1,
+        }
+    }
+
     /// Output tokens per second — Table 3's headline number.
     pub fn gen_throughput(&self) -> f64 {
         if self.wall_secs <= 0.0 {
@@ -46,6 +63,18 @@ impl EngineMetrics {
         mean(&self.ttft)
     }
 
+    pub fn p50_ttft(&self) -> f64 {
+        percentile(&self.ttft, 50.0)
+    }
+
+    pub fn p95_ttft(&self) -> f64 {
+        percentile(&self.ttft, 95.0)
+    }
+
+    pub fn p50_e2e(&self) -> f64 {
+        percentile(&self.e2e, 50.0)
+    }
+
     pub fn p95_e2e(&self) -> f64 {
         percentile(&self.e2e, 95.0)
     }
@@ -62,14 +91,20 @@ impl EngineMetrics {
 
     pub fn summary(&self) -> String {
         format!(
-            "reqs {} | gen {} tok | {:.1} tok/s (total {:.1}) | ttft {:.1} ms | p95 e2e {:.1} ms | overhead {:.1}% | chunked {} | rejected {}",
+            "reqs {} | gen {} tok | {:.1} tok/s (total {:.1}) | ttft p50/p95 {:.1}/{:.1} ms | e2e p50/p95 {:.1}/{:.1} ms | overhead {:.1}% | finish eos/max/horizon {}/{}/{} | cancelled {} | chunked {} | rejected {}",
             self.requests_completed,
             self.generated_tokens,
             self.gen_throughput(),
             self.total_throughput(),
-            self.mean_ttft() * 1e3,
+            self.p50_ttft() * 1e3,
+            self.p95_ttft() * 1e3,
+            self.p50_e2e() * 1e3,
             self.p95_e2e() * 1e3,
             self.overhead_frac() * 100.0,
+            self.finished_eos,
+            self.finished_max_new,
+            self.finished_horizon,
+            self.cancelled,
             self.chunked_prefills,
             self.rejected_prompts
         )
@@ -90,5 +125,33 @@ mod tests {
         };
         assert_eq!(m.gen_throughput(), 50.0);
         assert_eq!(m.total_throughput(), 75.0);
+    }
+
+    #[test]
+    fn finish_reason_histogram() {
+        let mut m = EngineMetrics::default();
+        m.record_finish(FinishReason::Eos);
+        m.record_finish(FinishReason::Eos);
+        m.record_finish(FinishReason::MaxNew);
+        m.record_finish(FinishReason::CacheHorizon);
+        m.record_finish(FinishReason::Cancelled);
+        assert_eq!(
+            (m.finished_eos, m.finished_max_new, m.finished_horizon, m.cancelled),
+            (2, 1, 1, 1)
+        );
+    }
+
+    #[test]
+    fn latency_percentiles() {
+        let m = EngineMetrics {
+            ttft: vec![0.010, 0.020, 0.030, 0.040, 0.100],
+            e2e: vec![0.1, 0.2, 0.3, 0.4, 0.5],
+            ..Default::default()
+        };
+        assert_eq!(m.p50_ttft(), 0.030);
+        assert_eq!(m.p95_ttft(), 0.100);
+        assert_eq!(m.p50_e2e(), 0.3);
+        assert_eq!(m.p95_e2e(), 0.5);
+        assert!(m.summary().contains("ttft p50/p95"));
     }
 }

@@ -1,17 +1,31 @@
-//! Inference engine for variable-block architectures (paper §6).
+//! Inference serving for variable-block architectures (paper §6) — v2 API.
 //!
 //! The paper's TensorRT-LLM contribution — paged KV caching with
 //! *different numbers of KV heads per layer*, plus linear-attention and
-//! no-op blocks — reimplemented natively: the `kvcache` manager tracks
-//! per-layer page tables whose page byte-size depends on that layer's KV
-//! head count; the `engine` runs continuous batching over any `Backend`'s
-//! decode executables (prefill b=1, batched decode with per-sequence
-//! positions, chunked ingestion for prompts past the prefill window).
+//! no-op blocks — reimplemented natively, behind a layered server core:
+//!
+//! * `engine` — the continuous-batching `Engine`. Owns its backend via a
+//!   `SharedBackend` handle (movable to a server thread on the default
+//!   build), is built through the `EngineConfig` builder, consumes
+//!   `GenRequest`s with per-request `SamplingParams`, and is driven by the
+//!   public `step()` event loop yielding `StreamEvent`s; `cancel(id)`
+//!   frees a request's slot and KV pages mid-generation.
+//! * `scheduler` — pluggable admission policies (`Fifo` — the default,
+//!   `Priority`, `ShortestPromptFirst`).
+//! * `sampling` — greedy / temperature / top-k / top-p with a seeded
+//!   per-request RNG stream for reproducibility.
+//! * `kvcache` — the paged manager tracking per-layer page tables whose
+//!   page byte-size depends on that layer's KV head count.
+//! * `metrics` — throughput, TTFT/e2e percentiles, finish-reason counts.
 
 pub mod engine;
 pub mod kvcache;
 pub mod metrics;
+pub mod sampling;
+pub mod scheduler;
 
-pub use engine::{Engine, Request, Response};
+pub use engine::{Engine, EngineConfig, FinishReason, GenRequest, Response, StreamEvent};
 pub use kvcache::PagedKvManager;
 pub use metrics::EngineMetrics;
+pub use sampling::SamplingParams;
+pub use scheduler::{Scheduler, SchedulerKind};

@@ -1,0 +1,207 @@
+//! Per-request token sampling policies for the serving engine.
+//!
+//! Every request carries its own `SamplingParams` and a private seeded
+//! `Rng` stream, so a batch can mix greedy and stochastic requests and a
+//! stochastic request is bit-reproducible across runs: same weights +
+//! same prompt + same seed => same tokens, regardless of what shares the
+//! batch. The default is greedy (temperature 0), which is byte-identical
+//! to the pre-v2 engine's NaN-safe argmax.
+
+use crate::util::Rng;
+
+/// Per-request sampling policy. `temperature == 0.0` means greedy argmax
+/// (the default); otherwise logits are temperature-scaled, optionally
+/// truncated to the `top_k` highest and to the `top_p` nucleus, and the
+/// next token is drawn from the renormalized distribution.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SamplingParams {
+    /// 0.0 = greedy; higher flattens the distribution.
+    pub temperature: f32,
+    /// Keep only the k highest logits before sampling (0 = no limit).
+    pub top_k: usize,
+    /// Nucleus sampling: keep the smallest prefix of the sorted
+    /// distribution with cumulative probability >= top_p (1.0 = no limit).
+    pub top_p: f32,
+    /// Seed for this request's private RNG stream (reproducibility).
+    pub seed: u64,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams::greedy()
+    }
+}
+
+impl SamplingParams {
+    pub fn greedy() -> SamplingParams {
+        SamplingParams { temperature: 0.0, top_k: 0, top_p: 1.0, seed: 0 }
+    }
+
+    pub fn temperature(t: f32) -> SamplingParams {
+        SamplingParams { temperature: t, ..SamplingParams::greedy() }
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> SamplingParams {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_top_k(mut self, k: usize) -> SamplingParams {
+        self.top_k = k;
+        self
+    }
+
+    pub fn with_top_p(mut self, p: f32) -> SamplingParams {
+        self.top_p = p;
+        self
+    }
+
+    pub fn is_greedy(&self) -> bool {
+        self.temperature <= 0.0
+    }
+}
+
+/// NaN-safe greedy argmax: NaN logits are skipped (a NaN never wins);
+/// all-NaN rows fall back to index 0.
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best: Option<usize> = None;
+    for (i, &x) in xs.iter().enumerate() {
+        if x.is_nan() {
+            continue;
+        }
+        match best {
+            None => best = Some(i),
+            Some(b) if x > xs[b] => best = Some(i),
+            _ => {}
+        }
+    }
+    best.unwrap_or(0)
+}
+
+/// Sample one token index from `logits` under `params`, advancing `rng`.
+/// Greedy params never touch the RNG, so greedy requests stay
+/// reproducible independent of batch composition.
+pub fn sample(logits: &[f32], params: &SamplingParams, rng: &mut Rng) -> usize {
+    if params.is_greedy() {
+        return argmax(logits);
+    }
+    // candidates sorted by logit descending, NaNs dropped
+    let mut cand: Vec<(usize, f32)> =
+        logits.iter().enumerate().filter(|(_, x)| !x.is_nan()).map(|(i, &x)| (i, x)).collect();
+    if cand.is_empty() {
+        return 0;
+    }
+    cand.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    if params.top_k > 0 && params.top_k < cand.len() {
+        cand.truncate(params.top_k);
+    }
+    let m = cand[0].1;
+    if !m.is_finite() {
+        // every surviving logit is -inf: degenerate row, fall back to best
+        return cand[0].0;
+    }
+    let t = params.temperature as f64;
+    let mut probs: Vec<f64> = cand.iter().map(|(_, x)| (((x - m) as f64) / t).exp()).collect();
+    if params.top_p < 1.0 {
+        let total: f64 = probs.iter().sum();
+        let mut acc = 0.0;
+        let mut cut = probs.len();
+        for (i, p) in probs.iter().enumerate() {
+            acc += p / total;
+            if acc >= params.top_p as f64 {
+                cut = i + 1;
+                break;
+            }
+        }
+        probs.truncate(cut);
+        cand.truncate(cut);
+    }
+    let total: f64 = probs.iter().sum();
+    let mut u = rng.f64() * total;
+    for (i, p) in probs.iter().enumerate() {
+        u -= p;
+        if u <= 0.0 {
+            return cand[i].0;
+        }
+    }
+    cand.last().unwrap().0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_ignores_nans() {
+        assert_eq!(argmax(&[1.0, 5.0, 3.0]), 1);
+        assert_eq!(argmax(&[f32::NAN, 2.0, 1.0]), 1);
+        assert_eq!(argmax(&[2.0, f32::NAN, 1.0]), 0);
+        assert_eq!(argmax(&[f32::NAN, f32::NAN]), 0);
+        assert_eq!(argmax(&[f32::NEG_INFINITY, -1.0]), 1);
+    }
+
+    #[test]
+    fn greedy_matches_argmax_without_touching_rng() {
+        let logits = [0.1, 2.0, -1.0, 1.9];
+        let mut rng = Rng::new(1);
+        let before = rng.clone().next_u64();
+        assert_eq!(sample(&logits, &SamplingParams::greedy(), &mut rng), 1);
+        assert_eq!(rng.next_u64(), before, "greedy must not consume randomness");
+    }
+
+    #[test]
+    fn seeded_sampling_is_deterministic() {
+        let logits: Vec<f32> = (0..32).map(|i| ((i * 7) % 13) as f32 * 0.3).collect();
+        let p = SamplingParams::temperature(1.0).with_seed(42);
+        let draw = |seed: u64| {
+            let mut rng = Rng::new(seed);
+            (0..64).map(|_| sample(&logits, &p, &mut rng)).collect::<Vec<_>>()
+        };
+        assert_eq!(draw(42), draw(42));
+        assert_ne!(draw(42), draw(43), "different streams must differ");
+    }
+
+    #[test]
+    fn top_k_one_is_greedy() {
+        let logits = [0.5, 3.0, 2.9, -1.0];
+        let p = SamplingParams::temperature(2.0).with_top_k(1).with_seed(5);
+        let mut rng = Rng::new(5);
+        for _ in 0..20 {
+            assert_eq!(sample(&logits, &p, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn tiny_top_p_collapses_to_mode() {
+        // one dominant logit: the nucleus at p=0.1 holds only the mode
+        let logits = [0.0, 10.0, 0.1, 0.2];
+        let p = SamplingParams::temperature(0.7).with_top_p(0.1).with_seed(3);
+        let mut rng = Rng::new(3);
+        for _ in 0..20 {
+            assert_eq!(sample(&logits, &p, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn high_temperature_spreads_mass() {
+        let logits = [1.0, 1.1, 0.9, 1.05];
+        let p = SamplingParams::temperature(5.0).with_seed(9);
+        let mut rng = Rng::new(9);
+        let mut seen = [false; 4];
+        for _ in 0..200 {
+            seen[sample(&logits, &p, &mut rng)] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "near-uniform logits at high temp must hit every bucket");
+    }
+
+    #[test]
+    fn neg_infinity_logits_are_never_sampled() {
+        let logits = [f32::NEG_INFINITY, 1.0, f32::NEG_INFINITY, 0.5];
+        let p = SamplingParams::temperature(1.5).with_seed(2);
+        let mut rng = Rng::new(2);
+        for _ in 0..50 {
+            let s = sample(&logits, &p, &mut rng);
+            assert!(s == 1 || s == 3);
+        }
+    }
+}

@@ -1,0 +1,161 @@
+//! Pluggable admission scheduling for the serving engine.
+//!
+//! The engine keeps waiting requests in arrival order and, whenever a
+//! decode slot is free, asks its `Scheduler` which one to admit next. The
+//! scheduler only ranks; capacity is still the engine's job — if the
+//! picked request does not fit the KV budget right now, the engine waits
+//! for a release rather than skipping ahead (no starvation by memory
+//! footprint). `Fifo` is the default and reproduces the pre-v2 engine
+//! byte for byte.
+
+/// What a scheduler sees of one waiting request. Slice order passed to
+/// `pick` is arrival order, so index 0 is always the oldest request.
+#[derive(Debug, Clone)]
+pub struct QueueView {
+    pub id: u64,
+    /// Larger = more urgent (only `Priority` looks at this; default 0).
+    pub priority: i32,
+    pub prompt_len: usize,
+    pub max_new: usize,
+}
+
+/// Admission policy: rank the waiting requests.
+///
+/// Contract: `pick` returns an index into `queue` (arrival order) or
+/// `None` when the queue is empty; it must not assume it will be called
+/// once per request (the engine re-picks after every admission and every
+/// release). Implementations must be `Send` so an engine can move to a
+/// server thread.
+pub trait Scheduler: Send {
+    fn name(&self) -> &'static str;
+    fn pick(&mut self, queue: &[QueueView]) -> Option<usize>;
+}
+
+/// First-in first-out: admit strictly in arrival order (v1 behavior).
+pub struct Fifo;
+
+impl Scheduler for Fifo {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn pick(&mut self, queue: &[QueueView]) -> Option<usize> {
+        if queue.is_empty() {
+            None
+        } else {
+            Some(0)
+        }
+    }
+}
+
+/// Highest `priority` first; ties broken by arrival order.
+pub struct Priority;
+
+impl Scheduler for Priority {
+    fn name(&self) -> &'static str {
+        "priority"
+    }
+
+    fn pick(&mut self, queue: &[QueueView]) -> Option<usize> {
+        queue
+            .iter()
+            .enumerate()
+            .max_by_key(|(i, q)| (q.priority, std::cmp::Reverse(*i)))
+            .map(|(i, _)| i)
+    }
+}
+
+/// Shortest prompt first (cheap prefills drain the queue fastest and
+/// minimize mean TTFT under contention); ties broken by arrival order.
+pub struct ShortestPromptFirst;
+
+impl Scheduler for ShortestPromptFirst {
+    fn name(&self) -> &'static str {
+        "spf"
+    }
+
+    fn pick(&mut self, queue: &[QueueView]) -> Option<usize> {
+        queue.iter().enumerate().min_by_key(|(i, q)| (q.prompt_len, *i)).map(|(i, _)| i)
+    }
+}
+
+/// Scheduler choice carried by `EngineConfig` (and the CLI's
+/// `--scheduler` flag).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SchedulerKind {
+    #[default]
+    Fifo,
+    Priority,
+    ShortestPromptFirst,
+}
+
+impl SchedulerKind {
+    pub fn build(self) -> Box<dyn Scheduler> {
+        match self {
+            SchedulerKind::Fifo => Box::new(Fifo),
+            SchedulerKind::Priority => Box::new(Priority),
+            SchedulerKind::ShortestPromptFirst => Box::new(ShortestPromptFirst),
+        }
+    }
+
+    /// Parse a CLI name: fifo | priority | spf (aliases: shortest,
+    /// shortest-prompt-first).
+    pub fn parse(s: &str) -> Option<SchedulerKind> {
+        match s {
+            "fifo" => Some(SchedulerKind::Fifo),
+            "priority" => Some(SchedulerKind::Priority),
+            "spf" | "shortest" | "shortest-prompt-first" => Some(SchedulerKind::ShortestPromptFirst),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SchedulerKind::Fifo => "fifo",
+            SchedulerKind::Priority => "priority",
+            SchedulerKind::ShortestPromptFirst => "spf",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q(id: u64, priority: i32, prompt_len: usize) -> QueueView {
+        QueueView { id, priority, prompt_len, max_new: 8 }
+    }
+
+    #[test]
+    fn fifo_picks_oldest() {
+        let mut s = Fifo;
+        assert_eq!(s.pick(&[]), None);
+        assert_eq!(s.pick(&[q(7, 0, 4), q(8, 9, 2)]), Some(0));
+    }
+
+    #[test]
+    fn priority_picks_highest_then_oldest() {
+        let mut s = Priority;
+        assert_eq!(s.pick(&[q(1, 0, 4), q(2, 5, 4), q(3, 5, 4), q(4, 1, 4)]), Some(1));
+        // all equal: degrade to FIFO
+        assert_eq!(s.pick(&[q(1, 2, 4), q(2, 2, 4)]), Some(0));
+        assert_eq!(s.pick(&[]), None);
+    }
+
+    #[test]
+    fn spf_picks_shortest_then_oldest() {
+        let mut s = ShortestPromptFirst;
+        assert_eq!(s.pick(&[q(1, 0, 9), q(2, 0, 3), q(3, 0, 3)]), Some(1));
+        assert_eq!(s.pick(&[]), None);
+    }
+
+    #[test]
+    fn kind_parses_cli_names() {
+        assert_eq!(SchedulerKind::parse("fifo"), Some(SchedulerKind::Fifo));
+        assert_eq!(SchedulerKind::parse("priority"), Some(SchedulerKind::Priority));
+        assert_eq!(SchedulerKind::parse("spf"), Some(SchedulerKind::ShortestPromptFirst));
+        assert_eq!(SchedulerKind::parse("shortest"), Some(SchedulerKind::ShortestPromptFirst));
+        assert_eq!(SchedulerKind::parse("lifo"), None);
+        assert_eq!(SchedulerKind::default(), SchedulerKind::Fifo);
+    }
+}

@@ -199,3 +199,29 @@ fn loss_parity_with_python_oracles() {
     let (ce, _) = losses::ce_loss_and_grad(&logits, &targets);
     assert!((ce - (v as f64).ln()).abs() < 1e-6);
 }
+
+/// The v2 serving redesign's ownership contract: on the default build a
+/// `SharedBackend` is an `Arc<dyn Backend + Send + Sync>`, so a backend
+/// handle (and an engine holding one) can move to a server thread.
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn shared_backend_handle_crosses_threads() {
+    use puzzle::runtime::{share, SharedBackend};
+    let be: SharedBackend = share(puzzle::runtime::RefBackend::tiny());
+    let be2 = be.clone();
+    let handle = std::thread::spawn(move || {
+        let mut rng = Rng::new(21);
+        let store = init_parent(be2.man(), &mut rng);
+        let arch = Arch::parent(be2.man().cfg.n_layers);
+        let model = CompiledModel::assemble(be2.man(), &store, &arch).unwrap();
+        let cfg = &be2.man().cfg;
+        let world = World::new(42, cfg.v as u32);
+        let mut b = Batcher::new(world, CorpusMix::distillation_mix(), cfg.b_train, cfg.s_train, 3);
+        let batch = b.next_batch();
+        let trace = model.forward(&*be2, "train", &batch.inputs, batch.b, batch.s).unwrap();
+        trace.logits.data.iter().all(|x| x.is_finite())
+    });
+    assert!(handle.join().unwrap(), "forward on a second thread must produce finite logits");
+    // stats recorded on the worker thread are visible through the shared handle
+    assert!(be.measured_secs("embed_train").is_some());
+}

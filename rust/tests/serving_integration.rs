@@ -1,29 +1,33 @@
-//! Serving-engine integration tests: batching, variable-GQA caches,
-//! backpressure, prompt chunking, EOS termination, and decode/prefill
-//! numerical consistency through the engine path. Hermetic by default
-//! (RefBackend + synthetic manifest); with the `pjrt` feature the same
-//! tests run over the AOT artifacts.
+//! Serving-engine integration tests over the v2 API: batching,
+//! variable-GQA caches, scheduler policies, backpressure, cancellation,
+//! per-request sampling, step-driven streaming, prompt chunking, EOS
+//! termination, and decode/prefill numerical consistency. Hermetic by
+//! default (RefBackend + synthetic manifest); with the `pjrt` feature the
+//! same tests run over the AOT artifacts.
+
+use std::collections::HashMap;
 
 use puzzle::arch::{Arch, AttnChoice, FfnChoice};
 use puzzle::bld;
 use puzzle::data::world::EOS;
 use puzzle::data::{corpus::sample_sequence, CorpusMix, World};
-use puzzle::runtime::Backend;
-use puzzle::serving::Engine;
+use puzzle::runtime::{share, Backend, SharedBackend};
+use puzzle::serving::kvcache::{PageCfg, PagedKvManager};
+use puzzle::serving::{EngineConfig, FinishReason, GenRequest, SamplingParams, SchedulerKind, StreamEvent};
 use puzzle::util::Rng;
 use puzzle::weights::store::{block_key, init_parent};
 use puzzle::weights::Store;
 
 #[cfg(not(feature = "pjrt"))]
-fn backend() -> impl Backend {
-    puzzle::runtime::RefBackend::tiny()
+fn backend() -> SharedBackend {
+    share(puzzle::runtime::RefBackend::tiny())
 }
 
 #[cfg(feature = "pjrt")]
-fn backend() -> impl Backend {
+fn backend() -> SharedBackend {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
     assert!(dir.join("manifest.json").exists(), "run `make artifacts` first");
-    puzzle::runtime::XlaBackend::open(&dir).unwrap()
+    share(puzzle::runtime::XlaBackend::open(&dir).unwrap())
 }
 
 fn variable_arch(be: &dyn Backend, store: &mut Store) -> Arch {
@@ -42,20 +46,45 @@ fn variable_arch(be: &dyn Backend, store: &mut Store) -> Arch {
     arch
 }
 
+/// Zero every residual block and craft the embedding so the model
+/// deterministically self-loops on token `y` (never EOS): the hidden
+/// state at each position is the token's embedding, and E[y] is the only
+/// row with significant mass along e1, so from y the argmax is y again.
+/// Used by tests that need a sequence to stay alive mid-generation.
+fn self_loop_store(be: &dyn Backend, y: u32, rng: &mut Rng) -> Store {
+    let cfg = be.man().cfg.clone();
+    let (d, v) = (cfg.d, cfg.v);
+    let mut store = init_parent(be.man(), rng);
+    for l in 0..cfg.n_layers {
+        let wo = store.get(&block_key(l, "attn", "gqa_r1", "wo")).unwrap().clone();
+        store.put(&block_key(l, "attn", "gqa_r1", "wo"), puzzle::tensor::Tensor::zeros(&wo.shape));
+        let wd = store.get(&block_key(l, "ffn", "r100", "wd")).unwrap().clone();
+        store.put(&block_key(l, "ffn", "r100", "wd"), puzzle::tensor::Tensor::zeros(&wd.shape));
+    }
+    let mut e = puzzle::tensor::Tensor::zeros(&[v, d]);
+    for x in e.data.iter_mut() {
+        *x = rng.normal() * 1e-3;
+    }
+    let row = (y as usize) * d;
+    e.data[row..row + d].fill(0.0);
+    e.data[row] = 1.0; // E[y] = e1: from y, y itself scores highest
+    store.put("embed", e);
+    store
+}
+
 #[test]
 fn engine_serves_batched_requests_on_variable_gqa_arch() {
     let be = backend();
-    let be: &dyn Backend = &be;
     let mut rng = Rng::new(1);
     let mut store = init_parent(be.man(), &mut rng);
-    let arch = variable_arch(be, &mut store);
-    let mut eng = Engine::new(be, &store, &arch, 32 << 20).unwrap();
+    let arch = variable_arch(&*be, &mut store);
+    let mut eng = EngineConfig::new().kv_budget_bytes(32 << 20).build(be.clone(), &store, &arch).unwrap();
     let world = World::new(2, be.man().cfg.v as u32);
     let mix = CorpusMix::distillation_mix();
     let n_req = be.man().cfg.b_decode * 2 + 1; // forces continuous batching
     for _ in 0..n_req {
         let prompt = sample_sequence(&world, &mix, 8, &mut rng);
-        eng.submit(prompt, 6).unwrap();
+        eng.submit(GenRequest::new(prompt, 6)).unwrap();
     }
     let responses = eng.run_to_completion().unwrap();
     assert_eq!(responses.len(), n_req);
@@ -63,30 +92,32 @@ fn engine_serves_batched_requests_on_variable_gqa_arch() {
         assert!(!r.tokens.is_empty() && r.tokens.len() <= 6);
         assert!(r.tokens.iter().all(|&t| t < be.man().cfg.v as u32));
         assert!(r.ttft_secs > 0.0 && r.e2e_secs >= r.ttft_secs);
+        assert!(matches!(r.finish, FinishReason::Eos | FinishReason::MaxNew));
     }
     assert_eq!(eng.metrics.requests_completed, n_req);
+    assert_eq!(eng.metrics.finished_eos + eng.metrics.finished_max_new, n_req);
     assert!(eng.metrics.gen_throughput() > 0.0);
 }
 
 #[test]
 fn engine_greedy_generation_is_deterministic() {
     let be = backend();
-    let be: &dyn Backend = &be;
     let mut rng = Rng::new(3);
     let mut store = init_parent(be.man(), &mut rng);
-    let arch = variable_arch(be, &mut store);
+    let arch = variable_arch(&*be, &mut store);
     let world = World::new(2, be.man().cfg.v as u32);
     let mix = CorpusMix::distillation_mix();
     let mut prng = Rng::new(9);
     let prompt = sample_sequence(&world, &mix, 10, &mut prng);
 
-    let run = |be: &dyn Backend| {
-        let mut eng = Engine::new(be, &store, &arch, 32 << 20).unwrap();
-        eng.submit(prompt.clone(), 8).unwrap();
+    let run = |be: &SharedBackend| {
+        let mut eng =
+            EngineConfig::new().kv_budget_bytes(32 << 20).build(be.clone(), &store, &arch).unwrap();
+        eng.submit(GenRequest::new(prompt.clone(), 8)).unwrap();
         eng.run_to_completion().unwrap()[0].tokens.clone()
     };
-    let a = run(be);
-    let b = run(be);
+    let a = run(&be);
+    let b = run(&be);
     assert_eq!(a, b, "greedy decode must be deterministic");
 }
 
@@ -95,7 +126,6 @@ fn engine_decode_matches_prefill_continuation() {
     // serve the same prompt twice: once with max_new 1 (pure prefill) and
     // once with more tokens; the first generated token must agree.
     let be = backend();
-    let be: &dyn Backend = &be;
     let mut rng = Rng::new(4);
     let store = init_parent(be.man(), &mut rng);
     let arch = Arch::parent(be.man().cfg.n_layers);
@@ -105,8 +135,9 @@ fn engine_decode_matches_prefill_continuation() {
     let prompt = sample_sequence(&world, &mix, 12, &mut prng);
 
     let gen = |max_new: usize| {
-        let mut eng = Engine::new(be, &store, &arch, 32 << 20).unwrap();
-        eng.submit(prompt.clone(), max_new).unwrap();
+        let mut eng =
+            EngineConfig::new().kv_budget_bytes(32 << 20).build(be.clone(), &store, &arch).unwrap();
+        eng.submit(GenRequest::new(prompt.clone(), max_new)).unwrap();
         eng.run_to_completion().unwrap()[0].tokens.clone()
     };
     let short = gen(1);
@@ -117,23 +148,21 @@ fn engine_decode_matches_prefill_continuation() {
 #[test]
 fn backpressure_defers_but_completes_all() {
     let be = backend();
-    let be: &dyn Backend = &be;
     let mut rng = Rng::new(6);
     let store = init_parent(be.man(), &mut rng);
     let arch = Arch::parent(be.man().cfg.n_layers);
     // tiny KV budget: roughly one sequence's worth
     let per_pos = {
-        use puzzle::serving::kvcache::{PageCfg, PagedKvManager};
         let mgr = PagedKvManager::new(be.man(), &arch, PageCfg { page_len: 16, dtype_bytes: 4, budget_bytes: usize::MAX / 2 });
         mgr.bytes_per_position()
     };
     let budget = per_pos * (be.man().cfg.s_max + 8);
-    let mut eng = Engine::new(be, &store, &arch, budget).unwrap();
+    let mut eng = EngineConfig::new().kv_budget_bytes(budget).build(be.clone(), &store, &arch).unwrap();
     let world = World::new(5, be.man().cfg.v as u32);
     let mix = CorpusMix::distillation_mix();
     for _ in 0..4 {
         let prompt = sample_sequence(&world, &mix, 6, &mut rng);
-        eng.submit(prompt, 4).unwrap();
+        eng.submit(GenRequest::new(prompt, 4)).unwrap();
     }
     let responses = eng.run_to_completion().unwrap();
     assert_eq!(responses.len(), 4, "backpressure must defer, not drop");
@@ -146,7 +175,6 @@ fn long_prompts_are_chunked_not_truncated() {
     // reproduce the rest of A's continuation (greedy decoding is
     // self-consistent), which fails if the tail were silently dropped.
     let be = backend();
-    let be: &dyn Backend = &be;
     let cfg = be.man().cfg.clone();
     let sp = cfg.s_prefill;
     let mut rng = Rng::new(7);
@@ -156,8 +184,9 @@ fn long_prompts_are_chunked_not_truncated() {
     let mix = CorpusMix::distillation_mix();
 
     let gen = |prompt: Vec<u32>, max_new: usize| {
-        let mut eng = Engine::new(be, &store, &arch, 64 << 20).unwrap();
-        eng.submit(prompt, max_new).unwrap();
+        let mut eng =
+            EngineConfig::new().kv_budget_bytes(64 << 20).build(be.clone(), &store, &arch).unwrap();
+        eng.submit(GenRequest::new(prompt, max_new)).unwrap();
         let resp = eng.run_to_completion().unwrap();
         (resp[0].tokens.clone(), eng.metrics.chunked_prefills)
     };
@@ -194,24 +223,238 @@ fn long_prompts_are_chunked_not_truncated() {
 }
 
 #[test]
-fn oversized_and_empty_prompts_are_rejected() {
+fn unservable_requests_are_rejected_at_submit() {
     let be = backend();
-    let be: &dyn Backend = &be;
     let cfg = be.man().cfg.clone();
     let mut rng = Rng::new(8);
     let store = init_parent(be.man(), &mut rng);
     let arch = Arch::parent(cfg.n_layers);
-    let mut eng = Engine::new(be, &store, &arch, 32 << 20).unwrap();
-    assert!(eng.submit(vec![], 4).is_err(), "empty prompt must be rejected");
+    let mut eng = EngineConfig::new().kv_budget_bytes(32 << 20).build(be.clone(), &store, &arch).unwrap();
+    assert!(eng.submit(GenRequest::new(vec![], 4)).is_err(), "empty prompt must be rejected");
     let huge = vec![1u32; cfg.s_max];
-    assert!(eng.submit(huge, 4).is_err(), "prompt filling the horizon must be rejected");
-    assert_eq!(eng.metrics.rejected_prompts, 2);
+    assert!(
+        eng.submit(GenRequest::new(huge, 4)).is_err(),
+        "prompt filling the horizon must be rejected"
+    );
+    assert!(
+        eng.submit(GenRequest::new(vec![1, 3], 0)).is_err(),
+        "max_new == 0 must be rejected (prefill always samples one token)"
+    );
+    assert_eq!(eng.metrics.rejected_prompts, 3);
+    // each rejection surfaced as a StreamEvent::Rejected on the next step
+    let events = eng.step().unwrap();
+    assert_eq!(
+        events.iter().filter(|e| matches!(e, StreamEvent::Rejected { .. })).count(),
+        3
+    );
     // a prompt one token shorter than the horizon is admissible
     let ok = vec![1u32; cfg.s_max - 1];
-    eng.submit(ok, 2).unwrap();
+    eng.submit(GenRequest::new(ok, 2)).unwrap();
     let resp = eng.run_to_completion().unwrap();
     assert_eq!(resp.len(), 1);
     assert_eq!(resp[0].tokens.len(), 1, "only one position left before the horizon");
+    assert!(matches!(resp[0].finish, FinishReason::Eos | FinishReason::CacheHorizon | FinishReason::MaxNew));
+}
+
+#[test]
+fn over_budget_horizon_is_rejected_at_submit_not_stalled() {
+    // v1 accepted any request that fit s_max and only failed later with
+    // "engine stalled"; v2 rejects a horizon whose pages exceed the total
+    // budget right at submit.
+    let be = backend();
+    let mut rng = Rng::new(12);
+    let store = init_parent(be.man(), &mut rng);
+    let arch = Arch::parent(be.man().cfg.n_layers);
+    let one_page: usize = {
+        let probe = PagedKvManager::new(be.man(), &arch, PageCfg { page_len: 16, dtype_bytes: 4, budget_bytes: 0 });
+        (0..be.man().cfg.n_layers).map(|l| probe.page_bytes(l)).sum()
+    };
+    // budget of exactly one page per layer: horizons <= 16 positions serve,
+    // anything longer can never fit
+    let mut eng = EngineConfig::new().kv_budget_bytes(one_page).build(be.clone(), &store, &arch).unwrap();
+    assert!(
+        eng.submit(GenRequest::new(vec![1; 8], 16)).is_err(),
+        "24-position horizon must be rejected against a 16-position pool"
+    );
+    assert_eq!(eng.metrics.rejected_prompts, 1);
+    eng.submit(GenRequest::new(vec![1; 8], 8)).unwrap();
+    let resp = eng.run_to_completion().unwrap();
+    assert_eq!(resp.len(), 1, "a horizon that fits the pool must still serve");
+}
+
+#[test]
+fn schedulers_order_admissions_under_contention() {
+    let be = backend();
+    let mut rng = Rng::new(13);
+    let store = init_parent(be.man(), &mut rng);
+    let arch = Arch::parent(be.man().cfg.n_layers);
+    // budget for ~1.5 sequences: admissions serialize, so completion order
+    // == admission order == the scheduler's policy order
+    let one_seq: usize = {
+        let mut probe = PagedKvManager::new(be.man(), &arch, PageCfg { page_len: 16, dtype_bytes: 4, budget_bytes: usize::MAX / 2 });
+        probe.admit(1, 16);
+        probe.allocated_bytes()
+    };
+    let world = World::new(5, be.man().cfg.v as u32);
+    let mix = CorpusMix::distillation_mix();
+    let mut prompts: Vec<Vec<u32>> = Vec::new();
+    let mut prng = Rng::new(3);
+    for len in [12usize, 4, 8, 6] {
+        prompts.push(sample_sequence(&world, &mix, len, &mut prng)[..len].to_vec());
+    }
+
+    let run = |kind: SchedulerKind, priorities: [i32; 4]| {
+        let mut eng = EngineConfig::new()
+            .kv_budget_bytes(one_seq + one_seq / 2)
+            .scheduler(kind)
+            .build(be.clone(), &store, &arch)
+            .unwrap();
+        for (p, prio) in prompts.iter().zip(priorities) {
+            // horizon <= 16 for every request: exactly one page each
+            eng.submit(GenRequest::new(p.clone(), 16 - p.len()).with_priority(prio)).unwrap();
+        }
+        let order: Vec<u64> = eng.run_to_completion().unwrap().iter().map(|r| r.id).collect();
+        order
+    };
+
+    assert_eq!(run(SchedulerKind::Fifo, [0, 3, 1, 2]), vec![1, 2, 3, 4], "fifo = arrival order");
+    assert_eq!(
+        run(SchedulerKind::Priority, [0, 3, 1, 2]),
+        vec![2, 4, 3, 1],
+        "priority must beat arrival order under contention"
+    );
+    assert_eq!(
+        run(SchedulerKind::ShortestPromptFirst, [0, 0, 0, 0]),
+        vec![2, 4, 3, 1],
+        "spf admits prompts of len 4,6,8,12 in that order"
+    );
+}
+
+#[test]
+fn cancellation_frees_kv_pages_exactly() {
+    let be = backend();
+    let y = 10u32;
+    let mut rng = Rng::new(14);
+    let store = self_loop_store(&*be, y, &mut rng);
+    let arch = Arch::parent(be.man().cfg.n_layers);
+    let mut eng = EngineConfig::new().kv_budget_bytes(32 << 20).build(be.clone(), &store, &arch).unwrap();
+    assert_eq!(eng.kv_allocated_bytes(), 0);
+
+    let id1 = eng.submit(GenRequest::new(vec![1, y], 40)).unwrap();
+    eng.step().unwrap();
+    assert_eq!(eng.kv_active_seqs(), 1);
+    let after_one = eng.kv_allocated_bytes();
+    assert!(after_one > 0);
+
+    let id2 = eng.submit(GenRequest::new(vec![1, y, y], 40)).unwrap();
+    eng.step().unwrap();
+    assert_eq!(eng.kv_active_seqs(), 2, "self-loop store keeps both mid-generation");
+    let after_two = eng.kv_allocated_bytes();
+    assert!(after_two > after_one);
+
+    // a third request queues behind the full slots; cancelling it never
+    // touches the pool
+    let id3 = eng.submit(GenRequest::new(vec![1, y], 40)).unwrap();
+    assert!(eng.cancel(id3));
+    assert_eq!(eng.kv_allocated_bytes(), after_two);
+
+    // cancel mid-generation: exactly the second sequence's pages come back
+    assert!(eng.cancel(id2));
+    assert_eq!(eng.kv_allocated_bytes(), after_one);
+    assert_eq!(eng.kv_active_seqs(), 1);
+    assert!(!eng.cancel(id2), "cancelling twice is a no-op");
+    assert!(!eng.cancel(9999), "unknown id is a no-op");
+
+    assert!(eng.cancel(id1));
+    assert_eq!(eng.kv_allocated_bytes(), 0);
+    assert!(eng.is_idle());
+
+    let resp = eng.take_finished();
+    assert_eq!(resp.len(), 3);
+    assert!(resp.iter().all(|r| r.finish == FinishReason::Cancelled));
+    let r1 = resp.iter().find(|r| r.id == id1).unwrap();
+    assert!(!r1.tokens.is_empty(), "cancelled mid-generation keeps its partial tokens");
+    let r3 = resp.iter().find(|r| r.id == id3).unwrap();
+    assert!(r3.tokens.is_empty(), "cancelled while queued never generated");
+    assert_eq!(eng.metrics.cancelled, 3);
+    assert_eq!(eng.metrics.requests_completed, 0);
+}
+
+#[test]
+fn seeded_sampling_is_reproducible_and_seed_sensitive() {
+    let be = backend();
+    let mut rng = Rng::new(15);
+    let store = init_parent(be.man(), &mut rng);
+    let arch = Arch::parent(be.man().cfg.n_layers);
+    let world = World::new(5, be.man().cfg.v as u32);
+    let mix = CorpusMix::distillation_mix();
+    let mut prng = Rng::new(4);
+    let prompt = sample_sequence(&world, &mix, 10, &mut prng);
+
+    let run = |seed: u64| {
+        let mut eng =
+            EngineConfig::new().kv_budget_bytes(32 << 20).build(be.clone(), &store, &arch).unwrap();
+        let params = SamplingParams::temperature(0.9).with_seed(seed);
+        eng.submit(GenRequest::new(prompt.clone(), 12).with_sampling(params)).unwrap();
+        eng.run_to_completion().unwrap()[0].tokens.clone()
+    };
+    let a = run(7);
+    assert_eq!(a, run(7), "same seed must reproduce the same tokens");
+    assert!(a.iter().all(|&t| t < be.man().cfg.v as u32));
+    let differs = [8u64, 9, 10].iter().any(|&s| run(s) != a);
+    assert!(differs, "different seeds must eventually produce different tokens");
+}
+
+#[test]
+fn step_streaming_yields_the_same_tokens_as_run_to_completion() {
+    let be = backend();
+    let mut rng = Rng::new(16);
+    let store = init_parent(be.man(), &mut rng);
+    let arch = Arch::parent(be.man().cfg.n_layers);
+    let world = World::new(5, be.man().cfg.v as u32);
+    let mix = CorpusMix::distillation_mix();
+    let n_req = be.man().cfg.b_decode * 2 + 1;
+    let mut prompts = Vec::new();
+    let mut prng = Rng::new(6);
+    for _ in 0..n_req {
+        prompts.push(sample_sequence(&world, &mix, 8, &mut prng));
+    }
+
+    let mk = || EngineConfig::new().kv_budget_bytes(32 << 20).build(be.clone(), &store, &arch).unwrap();
+    let mut blocking = mk();
+    let mut streaming = mk();
+    for p in &prompts {
+        blocking.submit(GenRequest::new(p.clone(), 6)).unwrap();
+        streaming.submit(GenRequest::new(p.clone(), 6)).unwrap();
+    }
+    let responses = blocking.run_to_completion().unwrap();
+
+    let mut events = Vec::new();
+    while !streaming.is_idle() {
+        events.extend(streaming.step().unwrap());
+    }
+    let streamed = streaming.take_finished();
+
+    let mut by_id: HashMap<u64, Vec<u32>> = HashMap::new();
+    let mut finishes: HashMap<u64, FinishReason> = HashMap::new();
+    for ev in &events {
+        match ev {
+            StreamEvent::Token { id, tok } => by_id.entry(*id).or_default().push(*tok),
+            StreamEvent::Finished { id, reason } => {
+                assert!(finishes.insert(*id, *reason).is_none(), "Finished must be terminal per id");
+            }
+            StreamEvent::Rejected { .. } => panic!("no rejections expected"),
+        }
+    }
+    assert_eq!(streamed.len(), responses.len());
+    assert_eq!(finishes.len(), responses.len());
+    for r in &responses {
+        let s = streamed.iter().find(|x| x.id == r.id).unwrap();
+        assert_eq!(s.tokens, r.tokens, "streamed tokens must match the blocking run");
+        assert_eq!(s.finish, r.finish);
+        assert_eq!(by_id[&r.id], r.tokens, "Token events must carry exactly the generated tokens");
+        assert_eq!(finishes[&r.id], r.finish);
+    }
 }
 
 #[test]
@@ -221,7 +464,6 @@ fn generation_stops_at_eos_through_the_decode_path() {
     // so the hidden state at each position is the token's embedding, and
     // the tied head makes E rows steer the chain.
     let be = backend();
-    let be: &dyn Backend = &be;
     let cfg = be.man().cfg.clone();
     let (d, v) = (cfg.d, cfg.v);
     let mut rng = Rng::new(9);
@@ -251,8 +493,8 @@ fn generation_stops_at_eos_through_the_decode_path() {
     e.data[row(EOS) + 1] = 6.0; // from z, EOS scores highest
     store.put("embed", e);
 
-    let mut eng = Engine::new(be, &store, &arch, 32 << 20).unwrap();
-    eng.submit(vec![1, y], 10).unwrap();
+    let mut eng = EngineConfig::new().kv_budget_bytes(32 << 20).build(be.clone(), &store, &arch).unwrap();
+    eng.submit(GenRequest::new(vec![1, y], 10)).unwrap();
     let resp = eng.run_to_completion().unwrap();
     assert_eq!(resp.len(), 1);
     assert_eq!(
@@ -260,6 +502,8 @@ fn generation_stops_at_eos_through_the_decode_path() {
         vec![z, EOS],
         "must generate z from prefill, then EOS through a decode step, then stop"
     );
+    assert_eq!(resp[0].finish, FinishReason::Eos);
     assert_eq!(eng.metrics.generated_tokens, 2);
+    assert_eq!(eng.metrics.finished_eos, 1);
     assert!(eng.metrics.decode_steps >= 1, "EOS must be produced by the decode path");
 }
