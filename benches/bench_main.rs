@@ -220,6 +220,39 @@ fn main() {
             m.gen_throughput(), m.p95_ttft() * 1e3);
     }
 
+    // speculative decoding round-trip: child drafts, parent verifies
+    // (specdec). The self-drafted run bounds the machinery's overhead and
+    // must amortize > 1 token per parent forward — the whole point.
+    {
+        use puzzle::serving::SamplingParams;
+        use puzzle::specdec::{SpecConfig, SpecSession};
+        let parent_arch = Arch::parent(n_layers);
+        let mut r2 = Rng::new(21);
+        let prompts: Vec<Vec<u32>> =
+            (0..4).map(|_| sample_sequence(&world, &mix, 8, &mut r2)).collect();
+        let mut agg = (0usize, 0usize); // (tokens, parent passes)
+        b.time("specdec_selfdraft_4x32tok", "k=4, parent as its own drafter", 2, || {
+            let mut sess = SpecSession::new(
+                shared.clone(),
+                &store,
+                &parent_arch,
+                &store,
+                &parent_arch,
+                SpecConfig::default(),
+            )
+            .unwrap();
+            agg = (0, 0);
+            for p in &prompts {
+                let r = sess.generate(p, 32, SamplingParams::greedy()).unwrap();
+                agg.0 += r.tokens.len();
+                agg.1 += r.parent_passes;
+            }
+        });
+        let tpp = agg.0 as f64 / agg.1.max(1) as f64;
+        println!("specdec amortization: {} tokens / {} parent passes = {tpp:.2} tok/pass", agg.0, agg.1);
+        assert!(tpp > 1.0, "speculative decoding must amortize > 1 token per parent forward");
+    }
+
     // paged KV manager ops (§6)
     {
         let mgr_cfg = PageCfg { page_len: 16, dtype_bytes: 4, budget_bytes: 1 << 24 };

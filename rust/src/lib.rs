@@ -39,6 +39,7 @@ pub mod perf;
 pub mod pipeline;
 pub mod runtime;
 pub mod scoring;
+pub mod specdec;
 pub mod tensor;
 pub mod train;
 pub mod util;

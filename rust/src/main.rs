@@ -4,7 +4,8 @@
 //!   pipeline    run the full Puzzle pipeline (parent -> BLD -> score ->
 //!               MIP -> GKD -> eval) and print the summary
 //!   exp <name>  regenerate a paper table/figure (table1..table17, fig4..fig8, all)
-//!   serve       serving-engine demo over the chosen child
+//!   serve       serving-engine demo over the chosen child; --speculate
+//!               serves the parent with the child as speculative drafter
 //!   measure     print measured per-block costs on this machine
 //!   info        backend/search-space summary
 //!
@@ -28,6 +29,7 @@ use puzzle::pipeline::{Pipeline, StageCfg};
 use puzzle::runtime::{share, RefBackend, SharedBackend};
 use puzzle::scoring::Metric;
 use puzzle::serving::{EngineConfig, GenRequest, SamplingParams, SchedulerKind, StreamEvent};
+use puzzle::specdec::{SpecConfig, SpecSession};
 use puzzle::train::LossSpec;
 use puzzle::util::{Args, Rng};
 use puzzle::{eval::Evaluator, info};
@@ -132,6 +134,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let run_dir = PathBuf::from(args.str("run-dir", &format!("runs/{}", be.man().cfg.name)));
     let pipe = Pipeline::new(be.clone(), &run_dir, stage_cfg(args))?;
     let space = SearchSpace::full(be.man().cfg.n_heads as u32);
+    if args.flag("speculate") {
+        return cmd_serve_speculative(args, &be, &pipe, &space);
+    }
     let library = pipe.ensure_library(&space)?;
     let scores = pipe.ensure_scores(&space, Metric::Kl)?;
     let ct = pipe.default_cost_table();
@@ -190,6 +195,69 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `serve --speculate`: the GKD-uptrained Puzzle child drafts `--draft-k`
+/// tokens per round, the parent verifies them in one teacher-forced pass.
+/// `--draft-arch <arch_tag.json>` pins the drafter architecture instead
+/// of searching.
+fn cmd_serve_speculative(
+    args: &Args,
+    be: &SharedBackend,
+    pipe: &Pipeline,
+    space: &SearchSpace,
+) -> Result<()> {
+    let draft_k = args.usize("draft-k", 4);
+    let draft_arch = args.get("draft-arch").map(PathBuf::from);
+    let pair = pipe.ensure_spec_pair(space, Metric::Kl, args.f64("speedup", 1.8), draft_arch.as_deref())?;
+    info!("speculative serve: drafter {}", pair.child_arch.signature());
+    let mut sess = SpecSession::new(
+        be.clone(),
+        &pair.parent_store,
+        &pair.parent_arch,
+        &pair.child_store,
+        &pair.child_arch,
+        SpecConfig { draft_k, engine: EngineConfig::new().kv_budget_bytes(64 << 20) },
+    )?;
+    let temperature = args.f64("temperature", 0.0) as f32;
+    let seed = args.u64("seed", 42);
+    let n_req = args.usize("requests", 8);
+    let max_new = args.usize("max-new", 24);
+    let mut rng = Rng::new(1);
+    let c = &be.man().cfg;
+    let mut total_tokens = 0usize;
+    let mut total_passes = 0usize;
+    for i in 0..n_req {
+        let plen = rng.range(4, c.s_prefill.min(32));
+        let prompt = sample_sequence(&pipe.world, &pipe.mix, plen, &mut rng);
+        let sampling = if temperature > 0.0 {
+            SamplingParams::temperature(temperature).with_seed(seed ^ i as u64)
+        } else {
+            SamplingParams::greedy()
+        };
+        let r = sess.generate(&prompt, max_new, sampling)?;
+        total_tokens += r.tokens.len();
+        total_passes += r.parent_passes;
+        println!(
+            "  req {i}: {} tokens in {} parent passes ({:.2} tok/pass) | accepted/proposed {}/{} (α {:.0}%) | finish {}",
+            r.tokens.len(),
+            r.parent_passes,
+            r.tokens_per_pass(),
+            r.accepted,
+            r.proposed,
+            r.acceptance_rate() * 100.0,
+            r.finish.as_str()
+        );
+    }
+    println!(
+        "speculative: {} tokens / {} parent forwards = {:.2} amortized tok/pass (draft_k {})",
+        total_tokens,
+        total_passes,
+        total_tokens as f64 / total_passes.max(1) as f64,
+        draft_k
+    );
+    println!("{}", sess.parent_metrics().summary());
+    Ok(())
+}
+
 fn cmd_measure(args: &Args) -> Result<()> {
     let be = open_backend(args)?;
     let c = &be.man().cfg;
@@ -238,7 +306,7 @@ fn main() -> Result<()> {
         Some("info") => cmd_info(&args),
         _ => {
             eprintln!(
-                "usage: puzzle <pipeline|exp|serve|measure|info> [--backend ref|pjrt] [--config tiny|small] [--run-dir DIR] [--scale F] [--speedup X]\n       serve also takes: [--scheduler fifo|priority|spf] [--temperature T] [--stream] [--requests N] [--max-new N]"
+                "usage: puzzle <pipeline|exp|serve|measure|info> [--backend ref|pjrt] [--config tiny|small] [--run-dir DIR] [--scale F] [--speedup X]\n       serve also takes: [--scheduler fifo|priority|spf] [--temperature T] [--stream] [--requests N] [--max-new N]\n                         [--speculate] [--draft-k N] [--draft-arch arch_tag.json]"
             );
             Ok(())
         }

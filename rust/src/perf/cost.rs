@@ -68,6 +68,19 @@ impl BlockCost {
         hw.op_time(flops, bytes)
     }
 
+    /// Roofline time for a teacher-forced pass over `m` tokens of ONE
+    /// sequence at context `ctx` (speculative verification): weights and
+    /// the sequence's KV cache are read once and amortized across the m
+    /// positions. `decode_step_time` is the batch-of-sequences variant
+    /// (KV read per sequence); the two coincide at m = batch = 1.
+    pub fn multi_token_pass_time(&self, hw: &HwProfile, m: usize, ctx: usize) -> f64 {
+        let toks = m as f64;
+        let flops =
+            toks * (2.0 * self.flops_per_tok) + toks * ctx as f64 * self.attn_flops_per_tok_per_ctx;
+        let bytes = (self.params + ctx as f64 * self.kv_bytes_per_tok) * hw.bytes_per_elem;
+        hw.op_time(flops, bytes)
+    }
+
     /// End-to-end scenario time (prefill + all decode steps, mean ctx).
     pub fn scenario_time(&self, hw: &HwProfile, sc: &Scenario) -> f64 {
         let mean_ctx = sc.prefill + sc.decode / 2;
@@ -107,6 +120,29 @@ pub fn block_costs(man: &Manifest) -> (BTreeMap<String, BlockCost>, BTreeMap<Str
     }
     ffn.insert("noop".into(), BlockCost::default());
     (attn, ffn)
+}
+
+/// Sum the per-block costs of a whole architecture (additive across
+/// layers) plus the tied LM head into one aggregate `BlockCost`
+/// describing a full-model forward of one token. The currency of
+/// `specdec::speedup`'s draft-value model and any whole-arch roofline.
+pub fn arch_block_cost(man: &Manifest, arch: &Arch) -> BlockCost {
+    let (ac, fc) = block_costs(man);
+    let cfg = &man.cfg;
+    let mut agg = BlockCost {
+        params: (cfg.v * cfg.d) as f64,
+        flops_per_tok: (cfg.d * cfg.v) as f64,
+        ..Default::default()
+    };
+    for (a, f) in &arch.layers {
+        for c in [&ac[&a.name()], &fc[&f.name()]] {
+            agg.params += c.params;
+            agg.kv_bytes_per_tok += c.kv_bytes_per_tok;
+            agg.flops_per_tok += c.flops_per_tok;
+            agg.attn_flops_per_tok_per_ctx += c.attn_flops_per_tok_per_ctx;
+        }
+    }
+    agg
 }
 
 /// Complete cost table for the MIP: per attention/FFN choice, the runtime
@@ -362,6 +398,38 @@ mod tests {
         let t64 = c.decode_step_time(&hw, 64, 64);
         // 64x the tokens in far less than 64x the time (paper §4.1)
         assert!(t64 < 32.0 * t1);
+    }
+
+    #[test]
+    fn multi_token_pass_coincides_with_decode_step_at_one() {
+        let man = manifest();
+        let (ac, _) = block_costs(&man);
+        let hw = HwProfile::h100_fp8();
+        let c = &ac["gqa_r1"];
+        assert_eq!(c.multi_token_pass_time(&hw, 1, 64), c.decode_step_time(&hw, 1, 64));
+        // more tokens never cost less, and amortize far below m separate steps
+        let t1 = c.multi_token_pass_time(&hw, 1, 64);
+        let t5 = c.multi_token_pass_time(&hw, 5, 64);
+        assert!(t5 >= t1);
+        assert!(t5 <= 5.0 * t1);
+    }
+
+    #[test]
+    fn arch_block_cost_is_additive_and_shrinks_with_cheaper_blocks() {
+        let man = manifest();
+        let n = man.cfg.n_layers;
+        let parent = arch_block_cost(&man, &Arch::parent(n));
+        // head + n_layers * (parent attn + parent ffn)
+        let (ac, fc) = block_costs(&man);
+        let expect = (man.cfg.v * man.cfg.d) as f64
+            + n as f64 * (ac["gqa_r1"].params + fc["r100"].params);
+        assert_eq!(parent.params, expect);
+        let mut child = Arch::parent(n);
+        child.layers[0] = (AttnChoice::Gqa { divisor: 4 }, FfnChoice::Ratio(5));
+        let cc = arch_block_cost(&man, &child);
+        assert!(cc.params < parent.params);
+        assert!(cc.kv_bytes_per_tok < parent.kv_bytes_per_tok);
+        assert!(cc.flops_per_tok < parent.flops_per_tok);
     }
 
     #[test]

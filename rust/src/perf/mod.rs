@@ -15,5 +15,5 @@
 pub mod cost;
 pub mod hw;
 
-pub use cost::{arch_cost, block_costs, scenario_throughput, BlockCost, CostTable, Scenario};
+pub use cost::{arch_block_cost, arch_cost, block_costs, scenario_throughput, BlockCost, CostTable, Scenario};
 pub use hw::HwProfile;

@@ -74,6 +74,27 @@ pub struct Pipeline {
     pub cfg: StageCfg,
 }
 
+/// A parent/child weight+arch pair ready for speculative serving: the
+/// Puzzle child drafts, the parent verifies.
+pub struct SpecPair {
+    pub parent_store: Store,
+    pub parent_arch: Arch,
+    pub child_store: Store,
+    pub child_arch: Arch,
+}
+
+/// Stable short fingerprint of an architecture (FNV-1a over its JSON),
+/// used to key per-arch stage artifacts like the uptrained drafter.
+fn arch_fingerprint(arch: &Arch) -> String {
+    let s = arch.to_json().to_string();
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    format!("{h:016x}")
+}
+
 impl Pipeline {
     pub fn new(be: SharedBackend, run_dir: &Path, cfg: StageCfg) -> Result<Pipeline> {
         std::fs::create_dir_all(run_dir)?;
@@ -199,6 +220,54 @@ impl Pipeline {
         let val = self.val_batches(2);
         let cfg = GkdCfg { steps, lr: self.cfg.gkd_lr, spec, warmup_frac: 0.1, log_every: 20 };
         gkd::run(&*self.be, store, arch, &mut batcher, &val, &cfg)
+    }
+
+    /// Stage 4: load (or build) the parent+child weight/arch pair that
+    /// speculative decoding serves (`specdec::SpecSession`): parent
+    /// weights from `library.pzw` (a superset of `parent.pzw` that also
+    /// holds the trained block library), the child architecture from
+    /// `draft_arch` (an `arch_<tag>.json` file) or a fresh MIP search at
+    /// `speedup`, and the child weights GKD-uptrained once and cached as
+    /// `child_spec.pzw`.
+    pub fn ensure_spec_pair(
+        &self,
+        space: &SearchSpace,
+        metric: Metric,
+        speedup: f64,
+        draft_arch: Option<&Path>,
+    ) -> Result<SpecPair> {
+        let library = self.ensure_library(space)?;
+        let parent_arch = Arch::parent(self.be.man().cfg.n_layers);
+        let child_arch = match draft_arch {
+            Some(p) => {
+                let j = Json::parse(&std::fs::read_to_string(p)?)
+                    .map_err(|e| anyhow!("draft arch parse: {e}"))?;
+                let aj = j.get("arch").unwrap_or(&j);
+                Arch::from_json(aj)
+                    .ok_or_else(|| anyhow!("bad draft architecture in {}", p.display()))?
+            }
+            None => {
+                let scores = self.ensure_scores(space, metric)?;
+                let ct = self.default_cost_table();
+                self.search_speedup(space, &scores, &ct, speedup)?.arch
+            }
+        };
+        // cache keyed by the drafter architecture: a different --draft-arch
+        // (or a different search result) must never reuse weights that were
+        // GKD-uptrained for another child
+        let child_path = self.run_dir.join(format!("child_spec_{}.pzw", arch_fingerprint(&child_arch)));
+        let child_store = if child_path.exists() {
+            info!("spec child: loading {}", child_path.display());
+            Store::load(&child_path)?
+        } else {
+            info!("spec child: GKD-uptraining the drafter ({} steps)", self.cfg.gkd_steps);
+            let mut child = library.clone();
+            let rep = self.gkd_child(&mut child, &child_arch, LossSpec::gkd_best(), self.cfg.gkd_steps)?;
+            info!("spec child: val KLD {:.4} after uptraining", rep.val_kld);
+            child.save(&child_path)?;
+            child
+        };
+        Ok(SpecPair { parent_store: library, parent_arch, child_store, child_arch })
     }
 
     /// Default hardware + scenario for searches on this config.

@@ -35,6 +35,7 @@ use crate::arch::{Arch, AttnChoice};
 use crate::data::world::EOS;
 use crate::model::CompiledModel;
 use crate::runtime::{val_f32, val_i32, val_to_tensor, SharedBackend, Value};
+use crate::tensor::Tensor;
 use crate::util::Rng;
 use crate::weights::Store;
 
@@ -194,6 +195,16 @@ struct Slot {
     t_first: Option<Instant>,
 }
 
+/// A single-sequence speculative handle: the KV lane it pins and its
+/// committed write position. Speculative sequences are driven externally
+/// (`specdec::SpecSession`) through `spec_open` / `spec_extend` /
+/// `spec_truncate`, never by the batched `step()` loop.
+struct SpecSlot {
+    id: u64,
+    /// next cache position to write (== positions teacher-forced so far)
+    len: usize,
+}
+
 /// Per-layer decode cache (gqa layers only).
 struct LayerCache {
     k: Value,
@@ -216,6 +227,9 @@ pub struct Engine {
     model: CompiledModel,
     caches: Vec<Option<LayerCache>>,
     slots: Vec<Option<Slot>>,
+    /// speculative sequences, sharing the decode lanes with `slots` (a
+    /// lane is free only when both are None at its index)
+    spec: Vec<Option<SpecSlot>>,
     /// waiting requests in arrival order (schedulers index into this)
     queue: Vec<Queued>,
     sched: Box<dyn Scheduler>,
@@ -262,6 +276,7 @@ impl Engine {
             })
             .collect();
         let slots = (0..mcfg.b_decode).map(|_| None).collect();
+        let spec = (0..mcfg.b_decode).map(|_| None).collect();
         let sched = cfg.scheduler.build();
         Ok(Engine {
             be,
@@ -269,6 +284,7 @@ impl Engine {
             model,
             caches,
             slots,
+            spec,
             queue: Vec::new(),
             sched,
             execs,
@@ -289,6 +305,13 @@ impl Engine {
         let s_max = self.be.man().cfg.s_max;
         let id = self.next_id;
         self.next_id += 1;
+        if self.spec.iter().any(Option::is_some) {
+            // a batched decode step would teacher-force garbage into the
+            // idle lanes' position 0 — harmless for empty lanes (prefill
+            // overwrites it) but fatal for a live speculative sequence, so
+            // an engine is either batched or speculative at a time
+            return Err(self.reject(id, "engine is serving a speculative sequence".into()));
+        }
         if req.prompt.is_empty() {
             return Err(self.reject(id, "empty prompt".into()));
         }
@@ -353,7 +376,7 @@ impl Engine {
     }
 
     fn free_slot(&self) -> Option<usize> {
-        self.slots.iter().position(Option::is_none)
+        (0..self.slots.len()).find(|&i| self.slots[i].is_none() && self.spec[i].is_none())
     }
 
     /// Number of sequences currently holding a decode slot.
@@ -418,22 +441,17 @@ impl Engine {
         Ok(())
     }
 
-    /// Prefill a prompt at batch 1 and seed the slot's caches. Prompts
-    /// longer than the prefill window leave their tail in `pending`, to be
-    /// teacher-forced through decode steps before generation starts.
-    ///
-    /// Pages for the sequence's *full horizon* are reserved here — the
-    /// same amount `can_admit` checked — so concurrently admitted
-    /// sequences can never jointly over-commit the pool and `grow` cannot
-    /// fail mid-generation.
-    fn prefill(&mut self, slot_idx: usize, q: Queued) -> Result<()> {
+    /// Run the prefill executable chain over the first `min(len,
+    /// s_prefill)` prompt tokens, splicing each GQA layer's K/V rows into
+    /// slot `slot_idx`'s cache lane in place. Returns the final hidden
+    /// state (for the optional head matmul) and the number of prompt
+    /// tokens the window covered. Shared by the batched admission path and
+    /// the speculative `spec_open`.
+    fn prefill_window(&mut self, slot_idx: usize, prompt: &[u32]) -> Result<(Value, usize)> {
         let mcfg = &self.be.man().cfg;
-        let (s_max, sp, head_dim, v) = (mcfg.s_max, mcfg.s_prefill, mcfg.head_dim, mcfg.v);
-        let Queued { id, req, t_submit } = q;
-        let horizon = req.horizon(s_max);
-        let plen = req.prompt.len().min(sp);
-        let chunked = req.prompt.len() > sp;
-        let mut tokens: Vec<i32> = req.prompt.iter().take(plen).map(|&t| t as i32).collect();
+        let (s_max, sp, head_dim) = (mcfg.s_max, mcfg.s_prefill, mcfg.head_dim);
+        let plen = prompt.len().min(sp);
+        let mut tokens: Vec<i32> = prompt.iter().take(plen).map(|&t| t as i32).collect();
         tokens.resize(sp, 0); // right-pad; causal masking isolates the pad
         let tok = val_i32(&[1, sp], &tokens)?;
         let t_exec = Instant::now();
@@ -473,11 +491,29 @@ impl Engine {
                 x = self.be.run(exec, &inputs)?.remove(0);
             }
         }
+        self.metrics.execute_secs += t_exec.elapsed().as_secs_f64();
+        Ok((x, plen))
+    }
+
+    /// Prefill a prompt at batch 1 and seed the slot's caches. Prompts
+    /// longer than the prefill window leave their tail in `pending`, to be
+    /// teacher-forced through decode steps before generation starts.
+    ///
+    /// Pages for the sequence's *full horizon* are reserved here — the
+    /// same amount `can_admit` checked — so concurrently admitted
+    /// sequences can never jointly over-commit the pool and `grow` cannot
+    /// fail mid-generation.
+    fn prefill(&mut self, slot_idx: usize, q: Queued) -> Result<()> {
+        let mcfg = &self.be.man().cfg;
+        let (s_max, sp, v) = (mcfg.s_max, mcfg.s_prefill, mcfg.v);
+        let Queued { id, req, t_submit } = q;
+        let horizon = req.horizon(s_max);
+        let chunked = req.prompt.len() > sp;
+        let (x, plen) = self.prefill_window(slot_idx, &req.prompt)?;
         if chunked {
             // the prompt continues past the window: the true next token is
             // known, so skip the head matmul entirely and stream the tail
             // through decode steps.
-            self.metrics.execute_secs += t_exec.elapsed().as_secs_f64();
             self.paged.admit(id, horizon);
             self.metrics.prefills += 1;
             self.metrics.prompt_tokens += req.prompt.len();
@@ -500,6 +536,7 @@ impl Engine {
             return Ok(());
         }
 
+        let t_exec = Instant::now();
         let logits =
             self.be.run("head_prefill", &[&x, &self.model.final_norm, &self.model.embed])?.remove(0);
         self.metrics.execute_secs += t_exec.elapsed().as_secs_f64();
@@ -530,11 +567,16 @@ impl Engine {
         self.metrics.generated_tokens += 1;
         self.events.push(StreamEvent::Token { id, tok: first });
         // immediate completion checks (max_new == 0 is rejected at submit,
-        // so max_new == 1 is the only budget exhausted here)
+        // so max_new == 1 is the only budget exhausted here). The horizon
+        // check mirrors decode_step: a prompt of s_max-1 tokens fills the
+        // cache with its first sample, and entering decode would write
+        // past the compiled horizon.
         let reason = if first == EOS {
             Some(FinishReason::Eos)
         } else if slot.req.max_new <= 1 {
             Some(FinishReason::MaxNew)
+        } else if slot.len + 1 >= s_max {
+            Some(FinishReason::CacheHorizon)
         } else {
             None
         };
@@ -546,21 +588,14 @@ impl Engine {
         Ok(())
     }
 
-    /// One batched decode step over all active slots.
-    fn decode_step(&mut self) -> Result<()> {
-        let mcfg = &self.be.man().cfg;
-        let (bd, v, s_max) = (mcfg.b_decode, mcfg.v, mcfg.s_max);
-        let t_step = Instant::now();
-        let mut tokens = vec![0i32; bd];
-        let mut pos = vec![0i32; bd];
-        for (i, s) in self.slots.iter().enumerate() {
-            if let Some(s) = s {
-                tokens[i] = s.last_token as i32;
-                pos[i] = s.len as i32;
-            }
-        }
-        let tok = val_i32(&[bd, 1], &tokens)?;
-        let pos_val = val_i32(&[bd], &pos)?;
+    /// One decode forward over the full compiled batch: embed -> blocks
+    /// (updating the dense caches in place) -> optionally the LM head.
+    /// Shared by the batched `decode_step` and the single-lane speculative
+    /// paths; `execute_secs` accrues here.
+    fn decode_forward(&mut self, tokens: &[i32], pos: &[i32], with_head: bool) -> Result<Option<Tensor>> {
+        let bd = tokens.len();
+        let tok = val_i32(&[bd, 1], tokens)?;
+        let pos_val = val_i32(&[bd], pos)?;
         let t_exec = Instant::now();
         let mut x = self.be.run("embed_decode", &[&tok, &self.model.embed])?.remove(0);
         for l in 0..self.model.attn.len() {
@@ -590,11 +625,7 @@ impl Engine {
                 x = self.be.run(exec, &inputs)?.remove(0);
             }
         }
-        // the LM head is only needed if some slot will actually sample this
-        // step; while every active slot is still teacher-forcing a chunked
-        // prompt tail, its output would be discarded wholesale.
-        let sampling = self.slots.iter().flatten().any(|s| s.pending.is_empty());
-        let logits = if sampling {
+        let logits = if with_head {
             let l = self
                 .be
                 .run("head_decode", &[&x, &self.model.final_norm, &self.model.embed])?
@@ -604,6 +635,28 @@ impl Engine {
             None
         };
         self.metrics.execute_secs += t_exec.elapsed().as_secs_f64();
+        Ok(logits)
+    }
+
+    /// One batched decode step over all active slots.
+    fn decode_step(&mut self) -> Result<()> {
+        let mcfg = &self.be.man().cfg;
+        let (bd, v, s_max) = (mcfg.b_decode, mcfg.v, mcfg.s_max);
+        let t_step = Instant::now();
+        let mut tokens = vec![0i32; bd];
+        let mut pos = vec![0i32; bd];
+        for (i, s) in self.slots.iter().enumerate() {
+            if let Some(s) = s {
+                tokens[i] = s.last_token as i32;
+                pos[i] = s.len as i32;
+            }
+        }
+        // the LM head is only needed if some slot will actually sample this
+        // step; while every active slot is still teacher-forcing a chunked
+        // prompt tail, its output would be discarded wholesale.
+        let sampling = self.slots.iter().flatten().any(|s| s.pending.is_empty());
+        let exec_before = self.metrics.execute_secs;
+        let logits = self.decode_forward(&tokens, &pos, sampling)?;
 
         let mut to_finish = Vec::new();
         for i in 0..bd {
@@ -651,8 +704,8 @@ impl Engine {
             self.finish(slot, reason);
         }
         self.metrics.decode_steps += 1;
-        self.metrics.sched_overhead_secs +=
-            (t_step.elapsed().as_secs_f64() - t_exec.elapsed().as_secs_f64()).max(0.0);
+        let exec_delta = self.metrics.execute_secs - exec_before;
+        self.metrics.sched_overhead_secs += (t_step.elapsed().as_secs_f64() - exec_delta).max(0.0);
         Ok(())
     }
 
@@ -714,6 +767,167 @@ impl Engine {
             }
         }
         Ok(self.take_finished())
+    }
+
+    // ---- speculative-decoding API (`specdec::SpecSession` drives it) ----
+    //
+    // A speculative sequence is a single-lane, externally driven sequence:
+    // nothing is sampled inside the engine, every token is teacher-forced,
+    // and the caller reads raw logits rows. The three primitives —
+    // `spec_open` (prefill), `spec_extend` (teacher-forced multi-token
+    // pass), `spec_truncate` (KV rollback) — are exactly the draft /
+    // verify / rollback state machine of DESIGN.md §5.
+
+    /// Compiled cache horizon `s_max` (exposed for speculative drivers).
+    pub fn cache_horizon(&self) -> usize {
+        self.be.man().cfg.s_max
+    }
+
+    fn spec_lane(&self, id: u64) -> Result<usize> {
+        self.spec
+            .iter()
+            .position(|s| s.as_ref().is_some_and(|s| s.id == id))
+            .ok_or_else(|| anyhow!("unknown speculative sequence {id}"))
+    }
+
+    /// Committed positions of a speculative sequence (== tokens whose K/V
+    /// are in the cache).
+    pub fn spec_len(&self, id: u64) -> Result<usize> {
+        Ok(self.spec[self.spec_lane(id)?].as_ref().unwrap().len)
+    }
+
+    /// Open a speculative sequence: prefill `prompt` (chunked through
+    /// teacher-forced decode steps when longer than the window) and return
+    /// the handle id plus the logits row after the final prompt token.
+    /// Unlike `submit`, nothing is sampled — the speculative driver owns
+    /// the sampling policy. Pages are booked as the sequence actually
+    /// grows (and handed back by `spec_truncate`), not for a horizon.
+    pub fn spec_open(&mut self, prompt: &[u32]) -> Result<(u64, Vec<f32>)> {
+        let mcfg = &self.be.man().cfg;
+        let (s_max, sp, v) = (mcfg.s_max, mcfg.s_prefill, mcfg.v);
+        if prompt.is_empty() {
+            return Err(anyhow!("spec_open: empty prompt"));
+        }
+        if prompt.len() >= s_max {
+            return Err(anyhow!(
+                "spec_open: prompt of {} tokens cannot fit the cache horizon s_max={}",
+                prompt.len(),
+                s_max
+            ));
+        }
+        // exclusivity both ways (see `submit`): a speculative forward
+        // writes garbage K/V into the other lanes' position 0, so it must
+        // not coexist with batched slots or a second speculative sequence
+        if self.spec.iter().any(Option::is_some) {
+            return Err(anyhow!("spec_open: engine already serves a speculative sequence"));
+        }
+        if self.active() > 0 || !self.queue.is_empty() {
+            return Err(anyhow!("spec_open: engine has batched requests in flight"));
+        }
+        let Some(lane) = self.free_slot() else {
+            return Err(anyhow!("spec_open: no free decode lane"));
+        };
+        let id = self.next_id;
+        self.next_id += 1;
+        // book the prefill window's pages BEFORE running the multi-layer
+        // forward (mirrors the batched path's admit-before-prefill), so a
+        // budget rejection costs nothing
+        if !self.paged.admit(id, prompt.len().min(sp)) {
+            return Err(anyhow!("spec_open: KV budget exhausted"));
+        }
+        let (x, plen) = match self.prefill_window(lane, prompt) {
+            Ok(v) => v,
+            Err(e) => {
+                self.paged.release(id);
+                return Err(e);
+            }
+        };
+        self.metrics.prefills += 1;
+        self.metrics.prompt_tokens += prompt.len();
+        self.spec[lane] = Some(SpecSlot { id, len: plen });
+        if prompt.len() > sp {
+            // stream the prompt tail through teacher-forced decode steps;
+            // only the final position's logits are needed. A mid-tail
+            // failure (KV exhaustion) must tear the half-open sequence
+            // down, or the lane and its pages leak with no handle to
+            // close them by.
+            self.metrics.chunked_prefills += 1;
+            let tail = &prompt[plen..];
+            let tailed = self.spec_extend(id, tail, tail.len() - 1).and_then(|mut rows| {
+                rows.pop().ok_or_else(|| anyhow!("chunked spec prefill produced no logits"))
+            });
+            match tailed {
+                Ok(row) => return Ok((id, row)),
+                Err(e) => {
+                    self.spec_close(id);
+                    return Err(e);
+                }
+            }
+        }
+        let t_exec = Instant::now();
+        let logits =
+            self.be.run("head_prefill", &[&x, &self.model.final_norm, &self.model.embed])?.remove(0);
+        self.metrics.execute_secs += t_exec.elapsed().as_secs_f64();
+        let logits = val_to_tensor(&logits)?;
+        let rowbase = (plen - 1) * v;
+        Ok((id, logits.data[rowbase..rowbase + v].to_vec()))
+    }
+
+    /// Teacher-force `tokens` through single-lane decode steps — the
+    /// multi-token verify pass (and the child's catch-up/draft steps).
+    /// Returns the logits row after each token from index `collect_from`
+    /// on; head matmuls for earlier positions are skipped. KV pages grow
+    /// per position and the pool rejects exhaustion cleanly.
+    pub fn spec_extend(&mut self, id: u64, tokens: &[u32], collect_from: usize) -> Result<Vec<Vec<f32>>> {
+        let mcfg = &self.be.man().cfg;
+        let (bd, v, s_max) = (mcfg.b_decode, mcfg.v, mcfg.s_max);
+        let lane = self.spec_lane(id)?;
+        let mut rows = Vec::with_capacity(tokens.len().saturating_sub(collect_from));
+        for (i, &t) in tokens.iter().enumerate() {
+            let len = self.spec[lane].as_ref().unwrap().len;
+            if len >= s_max {
+                return Err(anyhow!("spec_extend: sequence at the cache horizon s_max={s_max}"));
+            }
+            if !self.paged.grow(id) {
+                return Err(anyhow!("spec_extend: KV budget exhausted"));
+            }
+            let mut toks = vec![0i32; bd];
+            let mut pos = vec![0i32; bd];
+            toks[lane] = t as i32;
+            pos[lane] = len as i32;
+            let logits = self.decode_forward(&toks, &pos, i >= collect_from)?;
+            if let Some(l) = logits {
+                rows.push(l.data[lane * v..(lane + 1) * v].to_vec());
+            }
+            self.spec[lane].as_mut().unwrap().len = len + 1;
+            self.metrics.spec_steps += 1;
+        }
+        Ok(rows)
+    }
+
+    /// Rewind a speculative sequence to `new_len` committed positions —
+    /// the KV rollback after a partial acceptance. Trailing pages are
+    /// freed exactly (`PagedKvManager::truncate`); the stale cache rows
+    /// beyond `new_len` are dead by construction, because decode attention
+    /// masks at the fed position. Rewinding to >= the current length is a
+    /// no-op and counts no rollback.
+    pub fn spec_truncate(&mut self, id: u64, new_len: usize) -> Result<()> {
+        let lane = self.spec_lane(id)?;
+        let slot = self.spec[lane].as_mut().unwrap();
+        if new_len < slot.len {
+            slot.len = new_len;
+            self.paged.truncate(id, new_len);
+            self.metrics.spec_rollbacks += 1;
+        }
+        Ok(())
+    }
+
+    /// Release a speculative sequence's lane and all its KV pages.
+    pub fn spec_close(&mut self, id: u64) {
+        if let Ok(lane) = self.spec_lane(id) {
+            self.spec[lane] = None;
+            self.paged.release(id);
+        }
     }
 }
 

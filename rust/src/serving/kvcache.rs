@@ -145,6 +145,32 @@ impl PagedKvManager {
         true
     }
 
+    /// Rewind a sequence to `new_len` positions, freeing its trailing
+    /// pages exactly — the speculative-decoding KV rollback primitive
+    /// (rejected draft tokens hand their pages straight back to the
+    /// pool). Truncating to zero is equivalent to `release`; truncating
+    /// at or past the current length, or an unknown id, is a no-op.
+    pub fn truncate(&mut self, seq_id: u64, new_len: usize) {
+        if new_len == 0 {
+            self.release(seq_id);
+            return;
+        }
+        let target = self.pages_for(new_len);
+        let page_bytes: Vec<usize> = (0..self.kv_heads.len()).map(|l| self.page_bytes(l)).collect();
+        let Some(seq) = self.seqs.get_mut(&seq_id) else { return };
+        if new_len >= seq.positions {
+            return;
+        }
+        let mut freed = 0usize;
+        for (l, p) in seq.per_layer.iter_mut().enumerate() {
+            let keep = target.min(*p);
+            freed += (*p - keep) * page_bytes[l];
+            *p = keep;
+        }
+        seq.positions = new_len;
+        self.allocated_bytes -= freed;
+    }
+
     /// Free all pages of a finished sequence.
     pub fn release(&mut self, seq_id: u64) {
         if let Some(seq) = self.seqs.remove(&seq_id) {
@@ -300,6 +326,71 @@ mod tests {
         mgr.release(2);
         assert_eq!(mgr.allocated_bytes(), 0);
         assert!(after_two > after_one);
+    }
+
+    #[test]
+    fn truncate_frees_trailing_pages_exactly() {
+        let (man, arch) = setup(Arch::parent);
+        let mut mgr = PagedKvManager::new(&man, &arch, cfg(1 << 20));
+        let pages = |n: usize| -> usize { (0..man.cfg.n_layers).map(|l| n * mgr.page_bytes(l)).sum() };
+        assert!(mgr.admit(1, 40)); // 3 pages/layer at page_len 16
+        assert_eq!(mgr.allocated_bytes(), pages(3));
+        // rewind within the last page: nothing to free
+        mgr.truncate(1, 33);
+        assert_eq!(mgr.allocated_bytes(), pages(3));
+        // rewind to a page boundary: exactly one trailing page per layer back
+        mgr.truncate(1, 32);
+        assert_eq!(mgr.allocated_bytes(), pages(2));
+        // deep rewind: down to a single page per layer
+        mgr.truncate(1, 1);
+        assert_eq!(mgr.allocated_bytes(), pages(1));
+        // the freed budget is usable again
+        assert!(mgr.can_admit(32));
+        mgr.release(1);
+        assert_eq!(mgr.allocated_bytes(), 0);
+    }
+
+    #[test]
+    fn truncate_to_zero_equals_release() {
+        let (man, arch) = setup(Arch::parent);
+        let mut mgr = PagedKvManager::new(&man, &arch, cfg(1 << 20));
+        assert!(mgr.admit(1, 20));
+        assert!(mgr.allocated_bytes() > 0);
+        mgr.truncate(1, 0);
+        assert_eq!(mgr.allocated_bytes(), 0);
+        assert_eq!(mgr.active_seqs(), 0);
+        // the id is gone, exactly as after release: re-admission works
+        assert!(mgr.admit(1, 20));
+        assert_eq!(mgr.active_seqs(), 1);
+    }
+
+    #[test]
+    fn truncate_past_current_len_is_noop() {
+        let (man, arch) = setup(Arch::parent);
+        let mut mgr = PagedKvManager::new(&man, &arch, cfg(1 << 20));
+        assert!(mgr.admit(1, 20));
+        let b = mgr.allocated_bytes();
+        mgr.truncate(1, 25); // beyond current positions
+        assert_eq!(mgr.allocated_bytes(), b);
+        mgr.truncate(1, 20); // exactly current positions
+        assert_eq!(mgr.allocated_bytes(), b);
+        mgr.truncate(999, 5); // unknown id
+        assert_eq!(mgr.allocated_bytes(), b);
+        assert_eq!(mgr.active_seqs(), 1);
+    }
+
+    #[test]
+    fn truncate_then_grow_reaccounts() {
+        let (man, arch) = setup(Arch::parent);
+        let mut mgr = PagedKvManager::new(&man, &arch, cfg(1 << 20));
+        assert!(mgr.admit(1, 32)); // 2 pages/layer
+        let two = mgr.allocated_bytes();
+        mgr.truncate(1, 16); // back to 1 page/layer
+        let one = mgr.allocated_bytes();
+        assert!(one < two);
+        // grow back across the page boundary: same accounting as before
+        assert!(mgr.grow(1)); // position 17 -> second page again
+        assert_eq!(mgr.allocated_bytes(), two);
     }
 
     #[test]

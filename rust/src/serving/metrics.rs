@@ -30,6 +30,16 @@ pub struct EngineMetrics {
     pub finished_max_new: usize,
     pub finished_horizon: usize,
     pub cancelled: usize,
+    /// speculative decoding: draft tokens proposed by the child drafter
+    pub draft_proposed: usize,
+    /// draft tokens accepted by parent verification
+    pub draft_accepted: usize,
+    /// teacher-forced multi-token verify passes (parent side)
+    pub spec_passes: usize,
+    /// KV rollbacks after a partial acceptance (`spec_truncate` shrinks)
+    pub spec_rollbacks: usize,
+    /// single-lane teacher-forced decode steps driven by the spec API
+    pub spec_steps: usize,
 }
 
 impl EngineMetrics {
@@ -89,7 +99,32 @@ impl EngineMetrics {
         }
     }
 
+    /// Mean draft acceptance rate accepted/proposed — 0.0 (not NaN) when
+    /// no speculative requests ran.
+    pub fn mean_acceptance(&self) -> f64 {
+        if self.draft_proposed == 0 {
+            0.0
+        } else {
+            self.draft_accepted as f64 / self.draft_proposed as f64
+        }
+    }
+
     pub fn summary(&self) -> String {
+        let mut s = self.base_summary();
+        if self.draft_proposed > 0 {
+            s.push_str(&format!(
+                " | spec accepted/proposed {}/{} ({:.0}%) passes {} rollbacks {}",
+                self.draft_accepted,
+                self.draft_proposed,
+                self.mean_acceptance() * 100.0,
+                self.spec_passes,
+                self.spec_rollbacks
+            ));
+        }
+        s
+    }
+
+    fn base_summary(&self) -> String {
         format!(
             "reqs {} | gen {} tok | {:.1} tok/s (total {:.1}) | ttft p50/p95 {:.1}/{:.1} ms | e2e p50/p95 {:.1}/{:.1} ms | overhead {:.1}% | finish eos/max/horizon {}/{}/{} | cancelled {} | chunked {} | rejected {}",
             self.requests_completed,
@@ -139,6 +174,18 @@ mod tests {
             (m.finished_eos, m.finished_max_new, m.finished_horizon, m.cancelled),
             (2, 1, 1, 1)
         );
+    }
+
+    #[test]
+    fn acceptance_rate_guards_zero_division() {
+        let m = EngineMetrics::default();
+        assert_eq!(m.mean_acceptance(), 0.0, "no spec requests: rate is 0, not NaN");
+        assert!(!m.summary().contains("spec"), "spec section hidden when nothing was drafted");
+        let m = EngineMetrics { draft_proposed: 8, draft_accepted: 6, spec_passes: 2, spec_rollbacks: 1, ..Default::default() };
+        assert_eq!(m.mean_acceptance(), 0.75);
+        let s = m.summary();
+        assert!(s.contains("spec accepted/proposed 6/8 (75%)"), "summary was: {s}");
+        assert!(s.contains("rollbacks 1"));
     }
 
     #[test]

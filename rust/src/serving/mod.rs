@@ -9,7 +9,10 @@
 //!   build), is built through the `EngineConfig` builder, consumes
 //!   `GenRequest`s with per-request `SamplingParams`, and is driven by the
 //!   public `step()` event loop yielding `StreamEvent`s; `cancel(id)`
-//!   frees a request's slot and KV pages mid-generation.
+//!   frees a request's slot and KV pages mid-generation. A second,
+//!   externally driven surface (`spec_open` / `spec_extend` /
+//!   `spec_truncate`) exposes teacher-forced multi-token passes and KV
+//!   rollback for `specdec::SpecSession`.
 //! * `scheduler` — pluggable admission policies (`Fifo` — the default,
 //!   `Priority`, `ShortestPromptFirst`).
 //! * `sampling` — greedy / temperature / top-k / top-p with a seeded

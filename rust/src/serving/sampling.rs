@@ -78,18 +78,18 @@ pub fn argmax(xs: &[f32]) -> usize {
     best.unwrap_or(0)
 }
 
-/// Sample one token index from `logits` under `params`, advancing `rng`.
-/// Greedy params never touch the RNG, so greedy requests stay
-/// reproducible independent of batch composition.
-pub fn sample(logits: &[f32], params: &SamplingParams, rng: &mut Rng) -> usize {
-    if params.is_greedy() {
-        return argmax(logits);
-    }
+/// Candidates surviving temperature / top-k / top-p truncation, sorted by
+/// logit descending, with their unnormalized probabilities. `degenerate`
+/// flags rows where the probabilities carry no information (all-NaN or
+/// every surviving logit -inf): callers take the best candidate without
+/// consuming randomness. The nucleus cut always keeps >= 1 candidate
+/// (`acc >= top_p` is first reached at some `cut >= 1`).
+fn truncated(logits: &[f32], params: &SamplingParams) -> (Vec<(usize, f32)>, Vec<f64>, bool) {
     // candidates sorted by logit descending, NaNs dropped
     let mut cand: Vec<(usize, f32)> =
         logits.iter().enumerate().filter(|(_, x)| !x.is_nan()).map(|(i, &x)| (i, x)).collect();
     if cand.is_empty() {
-        return 0;
+        return (vec![(0, 0.0)], vec![1.0], true);
     }
     cand.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
     if params.top_k > 0 && params.top_k < cand.len() {
@@ -98,7 +98,7 @@ pub fn sample(logits: &[f32], params: &SamplingParams, rng: &mut Rng) -> usize {
     let m = cand[0].1;
     if !m.is_finite() {
         // every surviving logit is -inf: degenerate row, fall back to best
-        return cand[0].0;
+        return (vec![cand[0]], vec![1.0], true);
     }
     let t = params.temperature as f64;
     let mut probs: Vec<f64> = cand.iter().map(|(_, x)| (((x - m) as f64) / t).exp()).collect();
@@ -116,6 +116,20 @@ pub fn sample(logits: &[f32], params: &SamplingParams, rng: &mut Rng) -> usize {
         probs.truncate(cut);
         cand.truncate(cut);
     }
+    (cand, probs, false)
+}
+
+/// Sample one token index from `logits` under `params`, advancing `rng`.
+/// Greedy params never touch the RNG, so greedy requests stay
+/// reproducible independent of batch composition.
+pub fn sample(logits: &[f32], params: &SamplingParams, rng: &mut Rng) -> usize {
+    if params.is_greedy() {
+        return argmax(logits);
+    }
+    let (cand, probs, degenerate) = truncated(logits, params);
+    if degenerate {
+        return cand[0].0;
+    }
     let total: f64 = probs.iter().sum();
     let mut u = rng.f64() * total;
     for (i, p) in probs.iter().enumerate() {
@@ -125,6 +139,48 @@ pub fn sample(logits: &[f32], params: &SamplingParams, rng: &mut Rng) -> usize {
         }
     }
     cand.last().unwrap().0
+}
+
+/// The full modified distribution `sample` would draw from, as sparse
+/// `(token, prob)` pairs sorted by descending probability, summing to 1.
+/// Greedy params yield a point mass on the argmax. This is the p/q
+/// currency of speculative rejection sampling (`specdec`): verification
+/// needs the *distribution* at each position, not one draw from it.
+pub fn dist(logits: &[f32], params: &SamplingParams) -> Vec<(usize, f64)> {
+    if params.is_greedy() {
+        return vec![(argmax(logits), 1.0)];
+    }
+    let (cand, probs, degenerate) = truncated(logits, params);
+    if degenerate {
+        return vec![(cand[0].0, 1.0)];
+    }
+    let total: f64 = probs.iter().sum();
+    // drop zero-mass tails (exp underflow at tiny temperatures): the
+    // result is a *support*, every listed token must be drawable
+    cand.iter()
+        .zip(&probs)
+        .map(|(&(i, _), &p)| (i, p / total))
+        .filter(|&(_, p)| p > 0.0)
+        .collect()
+}
+
+/// Draw one token from a sparse distribution (as produced by `dist` or
+/// `specdec::accept::residual`). Point masses consume no randomness, so
+/// greedy speculative decoding stays bit-reproducible.
+pub fn draw(d: &[(usize, f64)], rng: &mut Rng) -> usize {
+    debug_assert!(!d.is_empty(), "draw from an empty distribution");
+    if d.len() == 1 {
+        return d[0].0;
+    }
+    let total: f64 = d.iter().map(|(_, p)| p).sum();
+    let mut u = rng.f64() * total;
+    for &(i, p) in d {
+        u -= p;
+        if u <= 0.0 {
+            return i;
+        }
+    }
+    d.last().unwrap().0
 }
 
 #[cfg(test)]
@@ -192,6 +248,107 @@ mod tests {
             seen[sample(&logits, &p, &mut rng)] = true;
         }
         assert!(seen.iter().all(|&s| s), "near-uniform logits at high temp must hit every bucket");
+    }
+
+    #[test]
+    fn nucleus_is_never_empty() {
+        // a microscopic top_p must still keep the mode — an empty nucleus
+        // would make sampling impossible
+        let logits = [0.1, 0.2, 0.3, 4.0];
+        let p = SamplingParams::temperature(1.0).with_top_p(1e-9).with_seed(1);
+        let d = dist(&logits, &p);
+        assert_eq!(d.len(), 1, "tiny nucleus keeps exactly the mode");
+        assert_eq!(d[0].0, 3);
+        assert!((d[0].1 - 1.0).abs() < 1e-12);
+        let mut rng = Rng::new(1);
+        assert_eq!(sample(&logits, &p, &mut rng), 3);
+        // near-uniform logits with top_p just above one candidate's mass
+        let flat = [1.0f32; 8];
+        let p = SamplingParams::temperature(1.0).with_top_p(0.13).with_seed(2);
+        let d = dist(&flat, &p);
+        assert!(!d.is_empty() && d.len() <= 2);
+    }
+
+    #[test]
+    fn top_k_one_matches_greedy_for_any_temperature() {
+        let logits: Vec<f32> = (0..64).map(|i| ((i * 13) % 29) as f32 * 0.17 - 1.0).collect();
+        let g = argmax(&logits);
+        for t in [0.1f32, 1.0, 4.0, 100.0] {
+            let p = SamplingParams::temperature(t).with_top_k(1).with_seed(9);
+            let mut rng = Rng::new(9);
+            for _ in 0..10 {
+                assert_eq!(sample(&logits, &p, &mut rng), g, "top_k=1 at t={t} must be greedy");
+            }
+            assert_eq!(dist(&logits, &p), vec![(g, 1.0)]);
+        }
+    }
+
+    #[test]
+    fn extreme_temperatures_keep_finite_logprobs() {
+        let logits = [3.0f32, -2.0, 0.5, 1.0e4, -1.0e4];
+        for t in [1e-8f32, 1e-3, 1e3, 1e8] {
+            let p = SamplingParams::temperature(t).with_seed(4);
+            let d = dist(&logits, &p);
+            let total: f64 = d.iter().map(|(_, q)| q).sum();
+            assert!((total - 1.0).abs() < 1e-9, "probs must sum to 1 at t={t}");
+            for &(_, q) in &d {
+                assert!(q.is_finite() && q > 0.0, "prob {q} at t={t}");
+                assert!(q.ln().is_finite(), "logprob must be finite at t={t}");
+            }
+            let mut rng = Rng::new(4);
+            let s = sample(&logits, &p, &mut rng);
+            assert!(s < logits.len());
+        }
+        // t -> 0 collapses to the argmax, t -> inf spreads to all candidates
+        let cold = dist(&logits, &SamplingParams::temperature(1e-8));
+        assert_eq!(cold[0].0, 3);
+        assert!(cold[0].1 > 0.999);
+        let hot = dist(&logits, &SamplingParams::temperature(1e8));
+        assert_eq!(hot.len(), logits.len());
+    }
+
+    #[test]
+    fn seeded_streams_are_unaffected_by_interleaved_requests() {
+        // two requests with private seeded rngs must see the same tokens
+        // whether their draws are interleaved (batched serving) or not
+        let logits: Vec<f32> = (0..32).map(|i| ((i * 11) % 17) as f32 * 0.25).collect();
+        let pa = SamplingParams::temperature(0.9).with_seed(21);
+        let pb = SamplingParams::temperature(1.3).with_top_k(8).with_seed(22);
+        let solo = |p: &SamplingParams| {
+            let mut rng = Rng::new(p.seed);
+            (0..32).map(|_| sample(&logits, p, &mut rng)).collect::<Vec<_>>()
+        };
+        let (sa, sb) = (solo(&pa), solo(&pb));
+        let mut ra = Rng::new(pa.seed);
+        let mut rb = Rng::new(pb.seed);
+        let mut ia = Vec::new();
+        let mut ib = Vec::new();
+        for step in 0..64 {
+            // irregular interleaving, as under continuous batching
+            if step % 3 != 0 && ia.len() < 32 {
+                ia.push(sample(&logits, &pa, &mut ra));
+            } else if ib.len() < 32 {
+                ib.push(sample(&logits, &pb, &mut rb));
+            }
+        }
+        assert_eq!(ia, sa, "stream A must not see stream B's draws");
+        assert_eq!(ib, sb, "stream B must not see stream A's draws");
+    }
+
+    #[test]
+    fn draw_matches_dist_support_and_point_mass_skips_rng() {
+        let logits = [0.2f32, 1.7, -0.3, 0.9];
+        let p = SamplingParams::temperature(0.8).with_seed(6);
+        let d = dist(&logits, &p);
+        let mut rng = Rng::new(6);
+        for _ in 0..100 {
+            let t = draw(&d, &mut rng);
+            assert!(d.iter().any(|&(i, _)| i == t));
+        }
+        let mut rng = Rng::new(8);
+        let before = rng.clone().next_u64();
+        assert_eq!(draw(&[(5, 1.0)], &mut rng), 5);
+        assert_eq!(rng.next_u64(), before, "point mass must not consume randomness");
     }
 
     #[test]

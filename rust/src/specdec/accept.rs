@@ -1,0 +1,124 @@
+//! The speculative acceptance rule (Leviathan et al.'s rejection
+//! sampling, reduced to exact-match under greedy).
+//!
+//! A draft token `d` drawn from the child's modified distribution `q` is
+//! verified against the parent's modified distribution `p` at the same
+//! position: accept with probability `min(1, p(d)/q(d))`; on rejection
+//! the verifier samples the parent's correction token from the residual
+//! `max(0, p - q)` renormalized. Over draft + accept + residual the
+//! emitted token is distributed exactly as `p` — speculation changes
+//! wall-clock, never the output law. Point-mass pairs (greedy) decide
+//! deterministically and consume no randomness, which is what makes
+//! greedy speculative decoding byte-identical to plain parent decoding.
+
+use crate::util::Rng;
+
+/// Probability of `tok` under a sparse `(token, prob)` distribution.
+pub fn prob_of(d: &[(usize, f64)], tok: usize) -> f64 {
+    d.iter().find(|&&(i, _)| i == tok).map(|&(_, p)| p).unwrap_or(0.0)
+}
+
+/// One acceptance decision for draft `d` proposed from `q`, verified
+/// against `p`. Certain outcomes (`p(d) >= q(d)` accept, `p(d) == 0`
+/// reject) consume no randomness.
+pub fn accept(p: &[(usize, f64)], q: &[(usize, f64)], d: usize, rng: &mut Rng) -> bool {
+    let pd = prob_of(p, d);
+    let qd = prob_of(q, d);
+    if pd >= qd {
+        // covers the greedy match (1 >= 1) and any ratio >= 1
+        return true;
+    }
+    if pd <= 0.0 {
+        // covers the greedy mismatch (0 < 1) and tokens outside p's support
+        return false;
+    }
+    rng.f64() < pd / qd
+}
+
+/// The residual distribution `max(0, p - q)`, renormalized — what the
+/// verifier samples on rejection so the overall output law is exactly
+/// `p`. Falls back to `p` itself when the residual carries no mass
+/// (p == q up to float error, where any correction is unbiased anyway).
+pub fn residual(p: &[(usize, f64)], q: &[(usize, f64)]) -> Vec<(usize, f64)> {
+    let mut r: Vec<(usize, f64)> = p
+        .iter()
+        .map(|&(i, pi)| (i, (pi - prob_of(q, i)).max(0.0)))
+        .filter(|&(_, x)| x > 0.0)
+        .collect();
+    let total: f64 = r.iter().map(|&(_, x)| x).sum();
+    if total <= 1e-12 {
+        return p.to_vec();
+    }
+    for (_, x) in r.iter_mut() {
+        *x /= total;
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::sampling::draw;
+
+    #[test]
+    fn greedy_point_masses_decide_without_randomness() {
+        let p = vec![(7usize, 1.0)];
+        let q_match = vec![(7usize, 1.0)];
+        let q_miss = vec![(3usize, 1.0)];
+        let mut rng = Rng::new(1);
+        let before = rng.clone().next_u64();
+        assert!(accept(&p, &q_match, 7, &mut rng));
+        assert!(!accept(&p, &q_miss, 3, &mut rng));
+        assert_eq!(rng.next_u64(), before, "deterministic decisions must not touch the rng");
+    }
+
+    #[test]
+    fn residual_removes_the_overlap() {
+        let p = vec![(0usize, 0.5), (1, 0.3), (2, 0.2)];
+        let q = vec![(0usize, 0.2), (1, 0.8)];
+        let r = residual(&p, &q);
+        // token 1 is over-proposed (0.8 > 0.3): no residual mass
+        assert!(r.iter().all(|&(i, _)| i != 1));
+        // remaining mass proportional to p - q: 0.3 and 0.2
+        let r0 = prob_of(&r, 0);
+        let r2 = prob_of(&r, 2);
+        assert!((r0 - 0.6).abs() < 1e-12, "r0 = {r0}");
+        assert!((r2 - 0.4).abs() < 1e-12, "r2 = {r2}");
+    }
+
+    #[test]
+    fn identical_distributions_fall_back_to_p() {
+        let p = vec![(0usize, 0.5), (1, 0.5)];
+        let r = residual(&p, &p);
+        assert_eq!(r, p, "zero residual mass must fall back to p");
+    }
+
+    /// The subsystem's statistical contract: draft from q, accept or
+    /// resample from the residual — the emitted token is distributed as p,
+    /// for a q that both under- and over-proposes.
+    #[test]
+    fn speculative_sampling_is_unbiased() {
+        let p = vec![(0usize, 0.45), (1, 0.35), (2, 0.15), (3, 0.05)];
+        let q = vec![(0usize, 0.10), (1, 0.60), (2, 0.05), (3, 0.25)];
+        let n = 200_000usize;
+        let mut draft_rng = Rng::new(11);
+        let mut accept_rng = Rng::new(12);
+        let mut counts = [0usize; 4];
+        for _ in 0..n {
+            let d = draw(&q, &mut draft_rng);
+            let tok = if accept(&p, &q, d, &mut accept_rng) {
+                d
+            } else {
+                draw(&residual(&p, &q), &mut accept_rng)
+            };
+            counts[tok] += 1;
+        }
+        for (i, &(tok, pi)) in p.iter().enumerate() {
+            let hat = counts[tok] as f64 / n as f64;
+            assert!(
+                (hat - pi).abs() < 0.01,
+                "token {i}: empirical {hat:.4} vs target {pi:.4}"
+            );
+        }
+    }
+}

@@ -1,0 +1,205 @@
+//! Analytic speedup model for speculative decoding: expected tokens per
+//! parent pass as a function of acceptance rate α and draft length k,
+//! costed per block through the same roofline currency as the MIP's
+//! `perf::CostTable`. This is what ties the NAS stage to serving
+//! throughput: a good Puzzle child is precisely a *cheap architecture
+//! with high α against its parent*, and `rank_drafters` scores candidate
+//! children by that "draft value" instead of standalone quality alone.
+
+use crate::arch::Arch;
+use crate::config::Manifest;
+use crate::perf::{arch_block_cost, BlockCost, HwProfile};
+
+/// Expected tokens emitted per verify pass at per-position acceptance
+/// rate `alpha` and draft length `k`, under the standard geometric model
+/// (positions accept independently; the pass emits the accepted prefix
+/// plus one parent token): E = (1 - α^{k+1}) / (1 - α), reaching k + 1
+/// at α = 1.
+pub fn expected_tokens_per_pass(alpha: f64, k: usize) -> f64 {
+    let alpha = alpha.clamp(0.0, 1.0);
+    if 1.0 - alpha < 1e-9 {
+        return (k + 1) as f64;
+    }
+    (1.0 - alpha.powi(k as i32 + 1)) / (1.0 - alpha)
+}
+
+/// Roofline cost model of one speculative round versus plain parent
+/// decoding: the child pays k sequential draft steps, the parent verifies
+/// k + 1 positions in one fused multi-token pass.
+#[derive(Debug, Clone)]
+pub struct SpecModel {
+    pub hw: HwProfile,
+    /// mean decode context the model is evaluated at
+    pub ctx: usize,
+    parent: BlockCost,
+    child: BlockCost,
+}
+
+impl SpecModel {
+    pub fn new(man: &Manifest, parent: &Arch, child: &Arch, hw: &HwProfile, ctx: usize) -> SpecModel {
+        SpecModel {
+            hw: hw.clone(),
+            ctx,
+            parent: arch_block_cost(man, parent),
+            child: arch_block_cost(man, child),
+        }
+    }
+
+    /// One plain parent decode step — the baseline per-token cost (the
+    /// same `BlockCost` roofline the MIP's `CostTable` is built on).
+    pub fn parent_step_secs(&self) -> f64 {
+        self.parent.decode_step_time(&self.hw, 1, self.ctx)
+    }
+
+    /// One child draft step.
+    pub fn child_step_secs(&self) -> f64 {
+        self.child.decode_step_time(&self.hw, 1, self.ctx)
+    }
+
+    /// The parent's fused verify pass over `m` teacher-forced tokens —
+    /// the amortization speculative decoding banks on.
+    pub fn verify_pass_secs(&self, m: usize) -> f64 {
+        self.parent.multi_token_pass_time(&self.hw, m, self.ctx)
+    }
+
+    /// Modeled wall-clock speedup of speculative decoding over plain
+    /// parent decoding at acceptance rate `alpha` and draft length `k`:
+    /// tokens-per-round / round-cost, normalized by the baseline rate.
+    pub fn speedup(&self, alpha: f64, k: usize) -> f64 {
+        let e = expected_tokens_per_pass(alpha, k);
+        let round = self.child_step_secs() * k as f64 + self.verify_pass_secs(k + 1);
+        e * self.parent_step_secs() / round
+    }
+
+    /// The draft length maximizing modeled speedup in `1..=k_max`.
+    pub fn best_k(&self, alpha: f64, k_max: usize) -> (usize, f64) {
+        (1..=k_max.max(1))
+            .map(|k| (k, self.speedup(alpha, k)))
+            .max_by(|a, b| a.1.total_cmp(&b.1))
+            .unwrap()
+    }
+}
+
+/// Rank candidate drafter architectures by modeled speedup at draft
+/// length `k`. Each candidate carries its (estimated or measured)
+/// acceptance rate α against the parent. Returns `(candidate index,
+/// modeled speedup)` sorted best-first — the NAS-to-serving bridge: run
+/// it over the MIP's solution slices to pick the child worth deploying
+/// as the parent's drafter.
+pub fn rank_drafters(
+    man: &Manifest,
+    parent: &Arch,
+    candidates: &[(Arch, f64)],
+    hw: &HwProfile,
+    ctx: usize,
+    k: usize,
+) -> Vec<(usize, f64)> {
+    let mut ranked: Vec<(usize, f64)> = candidates
+        .iter()
+        .enumerate()
+        .map(|(i, (child, alpha))| (i, SpecModel::new(man, parent, child, hw, ctx).speedup(*alpha, k)))
+        .collect();
+    ranked.sort_by(|a, b| b.1.total_cmp(&a.1));
+    ranked
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{AttnChoice, FfnChoice};
+    use crate::config::ModelCfg;
+
+    /// Llama-70B-scale shape descriptors (no weights are allocated): the
+    /// tiny CI manifest is launch-overhead-dominated on the roofline,
+    /// which would hide exactly the amortization effects this model is
+    /// about, so the model tests run at the paper's deployment scale.
+    fn paper_scale() -> Manifest {
+        Manifest::synthetic(ModelCfg {
+            name: "llama70b-ish".into(),
+            d: 8192,
+            n_layers: 80,
+            n_heads: 64,
+            head_dim: 128,
+            i: 28672,
+            v: 128256,
+            s_train: 8,
+            b_train: 1,
+            s_prefill: 2048,
+            b_decode: 1,
+            s_max: 4096,
+            s_long: 4096,
+            rope_theta: 10000.0,
+            eps: 1e-5,
+        })
+    }
+
+    #[test]
+    fn expected_tokens_limits_and_monotonicity() {
+        // α = 0: only the parent's own token survives each pass
+        assert_eq!(expected_tokens_per_pass(0.0, 4), 1.0);
+        // α = 1: full draft plus the bonus token
+        assert_eq!(expected_tokens_per_pass(1.0, 4), 5.0);
+        // monotone in α and in k
+        assert!(expected_tokens_per_pass(0.8, 4) > expected_tokens_per_pass(0.5, 4));
+        assert!(expected_tokens_per_pass(0.8, 8) > expected_tokens_per_pass(0.8, 4));
+        // geometric identity at α = 1/2, k = 2: 1 + 1/2 + 1/4
+        assert!((expected_tokens_per_pass(0.5, 2) - 1.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cheap_child_with_high_alpha_speeds_up() {
+        let man = paper_scale();
+        let n = man.cfg.n_layers;
+        let parent = Arch::parent(n);
+        let mut child = parent.clone();
+        for l in 0..n {
+            child.layers[l] = (AttnChoice::Gqa { divisor: 4 }, FfnChoice::Ratio(5));
+        }
+        let hw = HwProfile::h100_fp8();
+        let m = SpecModel::new(&man, &parent, &child, &hw, 512);
+        assert!(m.child_step_secs() < m.parent_step_secs(), "child must be cheaper");
+        // decode is bandwidth-bound: a fused k+1-token pass is far cheaper
+        // than k+1 separate steps
+        assert!(m.verify_pass_secs(5) < 5.0 * m.parent_step_secs());
+        let s = m.speedup(0.9, 4);
+        assert!(s > 1.0, "high-α cheap drafter must be a modeled win, got {s:.3}");
+        // a drafter that is never right cannot win
+        assert!(m.speedup(0.0, 4) < 1.0);
+    }
+
+    #[test]
+    fn best_k_grows_with_alpha() {
+        let man = paper_scale();
+        let n = man.cfg.n_layers;
+        let parent = Arch::parent(n);
+        let mut child = parent.clone();
+        for l in 0..n {
+            child.layers[l] = (AttnChoice::Linear, FfnChoice::Ratio(6));
+        }
+        let hw = HwProfile::h100_fp8();
+        let m = SpecModel::new(&man, &parent, &child, &hw, 512);
+        let (k_lo, _) = m.best_k(0.3, 16);
+        let (k_hi, _) = m.best_k(0.95, 16);
+        assert!(k_hi >= k_lo, "higher acceptance sustains longer drafts ({k_lo} vs {k_hi})");
+    }
+
+    #[test]
+    fn rank_drafters_prefers_cheaper_at_equal_alpha() {
+        let man = paper_scale();
+        let n = man.cfg.n_layers;
+        let parent = Arch::parent(n);
+        let mut cheap = parent.clone();
+        for l in 0..n {
+            cheap.layers[l] = (AttnChoice::Gqa { divisor: 4 }, FfnChoice::Ratio(6));
+        }
+        let expensive = parent.clone();
+        let hw = HwProfile::h100_fp8();
+        let ranked = rank_drafters(&man, &parent, &[(expensive, 0.8), (cheap, 0.8)], &hw, 512, 4);
+        assert_eq!(ranked[0].0, 1, "same α: the cheaper drafter must rank first");
+        // and a much better α can outweigh a cost disadvantage
+        let mut mid = parent.clone();
+        mid.layers[0] = (AttnChoice::Gqa { divisor: 2 }, FfnChoice::Ratio(2));
+        let ranked = rank_drafters(&man, &parent, &[(mid, 0.95), (Arch::parent(n), 0.1)], &hw, 512, 4);
+        assert_eq!(ranked[0].0, 0);
+    }
+}

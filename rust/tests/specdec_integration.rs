@@ -1,0 +1,426 @@
+//! Speculative-decoding integration tests: the correctness invariant
+//! (greedy speculative output is byte-identical to plain greedy parent
+//! decoding — any draft length, any drafter, chunked prompts included),
+//! exact KV rollback at both the engine and the page-accounting level,
+//! seeded reproducibility of stochastic speculation, and the analytic
+//! speedup model validated against a measured run. Hermetic: RefBackend
+//! over the in-memory synthetic manifest.
+
+use puzzle::arch::{Arch, AttnChoice, FfnChoice};
+use puzzle::bld;
+use puzzle::data::world::EOS;
+use puzzle::data::{corpus::sample_sequence, CorpusMix, World};
+use puzzle::runtime::{share, Backend, SharedBackend};
+use puzzle::serving::{EngineConfig, FinishReason, GenRequest, SamplingParams};
+use puzzle::specdec::{expected_tokens_per_pass, SpecConfig, SpecSession};
+use puzzle::util::Rng;
+use puzzle::weights::store::{block_key, init_parent};
+use puzzle::weights::Store;
+
+#[cfg(not(feature = "pjrt"))]
+fn backend() -> SharedBackend {
+    share(puzzle::runtime::RefBackend::tiny())
+}
+
+#[cfg(feature = "pjrt")]
+fn backend() -> SharedBackend {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    assert!(dir.join("manifest.json").exists(), "run `make artifacts` first");
+    share(puzzle::runtime::XlaBackend::open(&dir).unwrap())
+}
+
+/// A Puzzle-style child: cheaper attention on two layers, a slimmer FFN
+/// on one, weights training-free-initialized from the parent (bld §3.2).
+fn child_arch(be: &dyn Backend, store: &mut Store) -> Arch {
+    let n = be.man().cfg.n_layers;
+    let mut arch = Arch::parent(n);
+    arch.layers[0].0 = AttnChoice::Gqa { divisor: 2 };
+    arch.layers[1] = (AttnChoice::Linear, FfnChoice::Ratio(3));
+    for l in 0..n {
+        for (kind, v) in [("attn", arch.layers[l].0.name()), ("ffn", arch.layers[l].1.name())] {
+            if v != "gqa_r1" && v != "r100" && v != "noop" {
+                let job = bld::Job { layer: l, kind: if kind == "attn" { "attn" } else { "ffn" }, variant: v };
+                bld::init_job_weights(be.man(), store, &job, None).unwrap();
+            }
+        }
+    }
+    arch
+}
+
+/// Zero every residual block and craft the embedding so greedy decoding
+/// self-loops on token `y` forever (never EOS) — deterministic long
+/// generations for exact-count assertions.
+fn self_loop_store(be: &dyn Backend, y: u32, rng: &mut Rng) -> Store {
+    let cfg = be.man().cfg.clone();
+    let (d, v) = (cfg.d, cfg.v);
+    let mut store = init_parent(be.man(), rng);
+    for l in 0..cfg.n_layers {
+        let wo = store.get(&block_key(l, "attn", "gqa_r1", "wo")).unwrap().clone();
+        store.put(&block_key(l, "attn", "gqa_r1", "wo"), puzzle::tensor::Tensor::zeros(&wo.shape));
+        let wd = store.get(&block_key(l, "ffn", "r100", "wd")).unwrap().clone();
+        store.put(&block_key(l, "ffn", "r100", "wd"), puzzle::tensor::Tensor::zeros(&wd.shape));
+    }
+    let mut e = puzzle::tensor::Tensor::zeros(&[v, d]);
+    for x in e.data.iter_mut() {
+        *x = rng.normal() * 1e-3;
+    }
+    let row = (y as usize) * d;
+    e.data[row..row + d].fill(0.0);
+    e.data[row] = 1.0;
+    store.put("embed", e);
+    store
+}
+
+/// Plain greedy decoding through the batched engine: the oracle.
+fn plain_greedy(be: &SharedBackend, store: &Store, arch: &Arch, prompts: &[Vec<u32>], max_new: usize) -> Vec<Vec<u32>> {
+    let mut eng = EngineConfig::new().kv_budget_bytes(32 << 20).build(be.clone(), store, arch).unwrap();
+    let mut ids = Vec::new();
+    for p in prompts {
+        ids.push(eng.submit(GenRequest::new(p.clone(), max_new)).unwrap());
+    }
+    let resp = eng.run_to_completion().unwrap();
+    ids.iter()
+        .map(|id| resp.iter().find(|r| r.id == *id).unwrap().tokens.clone())
+        .collect()
+}
+
+#[test]
+fn greedy_speculative_is_byte_identical_to_plain_decoding() {
+    let be = backend();
+    let cfg = be.man().cfg.clone();
+    let mut rng = Rng::new(31);
+    let mut store = init_parent(be.man(), &mut rng);
+    let child = child_arch(&*be, &mut store);
+    let parent = Arch::parent(cfg.n_layers);
+    let world = World::new(5, cfg.v as u32);
+    let mix = CorpusMix::distillation_mix();
+
+    let mut prompts: Vec<Vec<u32>> = Vec::new();
+    let mut prng = Rng::new(8);
+    for len in [4usize, 7, 12, 20] {
+        prompts.push(sample_sequence(&world, &mix, len, &mut prng));
+    }
+    // one prompt past the prefill window: the chunked spec_open path
+    prompts.push(sample_sequence(&world, &mix, cfg.s_prefill, &mut prng));
+    assert!(prompts.last().unwrap().len() > cfg.s_prefill);
+
+    let max_new = 8usize;
+    let oracle = plain_greedy(&be, &store, &parent, &prompts, max_new);
+    assert!(oracle.iter().any(|t| t.len() > 1), "oracle generations must be non-trivial");
+
+    // the invariant must hold for ANY drafter and ANY draft length: the
+    // drafts only ever gate wall-clock, never content
+    for (name, drafter_arch) in [("self", &parent), ("puzzle_child", &child)] {
+        for draft_k in [1usize, 3, 6] {
+            let mut sess = SpecSession::new(
+                be.clone(),
+                &store,
+                &parent,
+                &store,
+                drafter_arch,
+                SpecConfig { draft_k, engine: EngineConfig::new().kv_budget_bytes(32 << 20) },
+            )
+            .unwrap();
+            for (p, want) in prompts.iter().zip(&oracle) {
+                let r = sess.generate(p, max_new, SamplingParams::greedy()).unwrap();
+                assert_eq!(
+                    &r.tokens, want,
+                    "drafter {name}, k={draft_k}: speculative greedy must match plain greedy"
+                );
+                assert!(matches!(r.finish, FinishReason::Eos | FinishReason::MaxNew));
+                // exact rollback: no pages may survive the request
+                assert_eq!(sess.kv_allocated_bytes(), (0, 0), "KV pages leaked");
+            }
+        }
+    }
+}
+
+#[test]
+fn horizon_reaching_prompts_stay_byte_identical() {
+    // max_new larger than the cache allows: plain decoding finishes
+    // CacheHorizon when the committed stream reaches s_max; speculation
+    // must emit exactly the same tokens and the same finish reason (the
+    // k_eff cap stops committing at s_max, never one past it)
+    let be = backend();
+    let cfg = be.man().cfg.clone();
+    let y = 10u32;
+    let mut rng = Rng::new(41);
+    let store = self_loop_store(&*be, y, &mut rng); // never EOS: horizon must bind
+    let parent = Arch::parent(cfg.n_layers);
+    let prompt = vec![1u32, y];
+    let max_new = cfg.s_max; // cannot fit: 2 + 48 > 48
+    let oracle = plain_greedy(&be, &store, &parent, &[prompt.clone()], max_new);
+    assert_eq!(oracle[0].len(), cfg.s_max - prompt.len(), "oracle must hit the horizon");
+
+    for draft_k in [1usize, 4, 7] {
+        let mut sess = SpecSession::new(
+            be.clone(),
+            &store,
+            &parent,
+            &store,
+            &parent,
+            SpecConfig { draft_k, engine: EngineConfig::new().kv_budget_bytes(32 << 20) },
+        )
+        .unwrap();
+        let r = sess.generate(&prompt, max_new, SamplingParams::greedy()).unwrap();
+        assert_eq!(r.tokens, oracle[0], "k={draft_k}: horizon run must match plain decoding");
+        assert_eq!(r.finish, FinishReason::CacheHorizon, "k={draft_k}");
+        assert_eq!(sess.kv_allocated_bytes(), (0, 0));
+    }
+}
+
+#[test]
+fn self_drafter_accepts_everything_and_amortizes_k_plus_1() {
+    // parent as its own drafter: verification compares bitwise-identical
+    // logits, so every draft is accepted — acceptance 1.0 exactly, and
+    // each verify pass nets draft_k + 1 tokens, matching the analytic
+    // model with zero tolerance. The self-loop store never emits EOS, so
+    // the counts are exact.
+    let be = backend();
+    let y = 10u32;
+    let mut rng = Rng::new(33);
+    let store = self_loop_store(&*be, y, &mut rng);
+    let parent = Arch::parent(be.man().cfg.n_layers);
+    let k = 4usize;
+    let max_new = 1 + 3 * (k + 1); // one prefill token + exactly 3 full rounds
+    let mut sess = SpecSession::new(
+        be.clone(),
+        &store,
+        &parent,
+        &store,
+        &parent,
+        SpecConfig { draft_k: k, engine: EngineConfig::new().kv_budget_bytes(32 << 20) },
+    )
+    .unwrap();
+    let r = sess.generate(&[1, y], max_new, SamplingParams::greedy()).unwrap();
+    assert_eq!(r.tokens.len(), max_new);
+    assert!(r.tokens.iter().all(|&t| t == y), "self-loop store must keep emitting y");
+    assert_eq!(r.finish, FinishReason::MaxNew);
+    assert_eq!(r.acceptance_rate(), 1.0);
+    assert_eq!(r.proposed, 3 * k);
+    assert_eq!(r.accepted, 3 * k);
+    assert_eq!(r.parent_passes, 4, "1 prefill + 3 verify passes");
+    assert_eq!(r.rollbacks, 0, "full acceptance never rolls back");
+    assert_eq!(r.tokens_per_verify_pass(), (k + 1) as f64);
+    assert_eq!(expected_tokens_per_pass(r.acceptance_rate(), k), (k + 1) as f64);
+    // the headline: amortized tokens per parent forward is well above 1
+    assert!(r.tokens_per_pass() > 3.0);
+    let m = sess.parent_metrics();
+    assert_eq!(m.draft_proposed, 3 * k);
+    assert_eq!(m.draft_accepted, 3 * k);
+    assert_eq!(m.mean_acceptance(), 1.0);
+    assert!(m.summary().contains("spec accepted/proposed"));
+}
+
+#[test]
+fn speedup_model_matches_measured_acceptance_within_tolerance() {
+    // A real (imperfect) drafter under stochastic sampling: estimate α̂
+    // per attempted position, then check the geometric model's expected
+    // tokens per verify pass against the measured value. Stated
+    // tolerance: 40% relative + 0.4 absolute slack — the model assumes
+    // i.i.d. acceptance, the measurement is a few hundred tokens.
+    let be = backend();
+    let cfg = be.man().cfg.clone();
+    let mut rng = Rng::new(35);
+    let mut store = init_parent(be.man(), &mut rng);
+    let child = child_arch(&*be, &mut store);
+    let parent = Arch::parent(cfg.n_layers);
+    let world = World::new(5, cfg.v as u32);
+    let mix = CorpusMix::distillation_mix();
+    let k = 4usize;
+    let mut sess = SpecSession::new(
+        be.clone(),
+        &store,
+        &parent,
+        &store,
+        &child,
+        SpecConfig { draft_k: k, engine: EngineConfig::new().kv_budget_bytes(32 << 20) },
+    )
+    .unwrap();
+    let mut prng = Rng::new(12);
+    let (mut tokens, mut verify_passes, mut accepted, mut attempted) = (0usize, 0usize, 0usize, 0usize);
+    for i in 0..12u64 {
+        let prompt = sample_sequence(&world, &mix, 6, &mut prng);
+        let r = sess
+            .generate(&prompt, 24, SamplingParams::temperature(0.8).with_seed(100 + i))
+            .unwrap();
+        tokens += r.tokens.len() - 1; // exclude the prefill token
+        verify_passes += r.parent_passes - 1;
+        accepted += r.accepted;
+        attempted += r.attempted;
+    }
+    assert!(verify_passes > 0 && attempted > 0);
+    let alpha_hat = accepted as f64 / attempted as f64;
+    let measured = tokens as f64 / verify_passes as f64;
+    let modeled = expected_tokens_per_pass(alpha_hat, k);
+    assert!(
+        measured >= 1.0 && measured <= (k + 1) as f64,
+        "measured tokens/verify-pass out of range: {measured}"
+    );
+    let err = (modeled - measured).abs();
+    assert!(
+        err <= 0.40 * measured + 0.4,
+        "speedup model off: measured {measured:.3} tok/pass vs modeled {modeled:.3} at α̂ {alpha_hat:.3}"
+    );
+}
+
+#[test]
+fn stochastic_speculation_is_seed_reproducible() {
+    let be = backend();
+    let cfg = be.man().cfg.clone();
+    let mut rng = Rng::new(36);
+    let mut store = init_parent(be.man(), &mut rng);
+    let child = child_arch(&*be, &mut store);
+    let parent = Arch::parent(cfg.n_layers);
+    let world = World::new(5, cfg.v as u32);
+    let mix = CorpusMix::distillation_mix();
+    let mut prng = Rng::new(2);
+    let prompt = sample_sequence(&world, &mix, 10, &mut prng);
+
+    let run = |seed: u64| {
+        let mut sess = SpecSession::new(
+            be.clone(),
+            &store,
+            &parent,
+            &store,
+            &child,
+            SpecConfig { draft_k: 3, engine: EngineConfig::new().kv_budget_bytes(32 << 20) },
+        )
+        .unwrap();
+        sess.generate(&prompt, 12, SamplingParams::temperature(0.9).with_seed(seed))
+            .unwrap()
+            .tokens
+    };
+    let a = run(7);
+    assert_eq!(a, run(7), "same seed must reproduce the same speculative tokens");
+    assert!(a.iter().all(|&t| t < cfg.v as u32));
+    let differs = [8u64, 9, 10, 11].iter().any(|&s| run(s) != a);
+    assert!(differs, "different seeds must eventually diverge");
+}
+
+#[test]
+fn engine_rollback_is_exact_recompute() {
+    // the engine-level contract behind verification: teacher-force a few
+    // tokens, roll back, teacher-force the same tokens again — logits
+    // must be bitwise identical (stale cache rows beyond the rewound
+    // position are dead because attention masks at the fed position).
+    let be = backend();
+    let mut rng = Rng::new(37);
+    let store = init_parent(be.man(), &mut rng);
+    let parent = Arch::parent(be.man().cfg.n_layers);
+    let mut eng = EngineConfig::new().kv_budget_bytes(32 << 20).build(be.clone(), &store, &parent).unwrap();
+    let (id, first) = eng.spec_open(&[1, 5, 9]).unwrap();
+    assert_eq!(first.len(), be.man().cfg.v);
+    let base_len = eng.spec_len(id).unwrap();
+    assert_eq!(base_len, 3);
+    let kv_base = eng.kv_allocated_bytes();
+
+    let probe = [7u32, 11, 13];
+    let rows1 = eng.spec_extend(id, &probe, 0).unwrap();
+    assert_eq!(rows1.len(), 3);
+    let kv_grown = eng.kv_allocated_bytes();
+    assert!(kv_grown >= kv_base);
+
+    eng.spec_truncate(id, base_len).unwrap();
+    assert_eq!(eng.spec_len(id).unwrap(), base_len);
+    assert_eq!(eng.kv_allocated_bytes(), kv_base, "rollback must free exactly the grown pages");
+    assert_eq!(eng.metrics.spec_rollbacks, 1);
+
+    let rows2 = eng.spec_extend(id, &probe, 0).unwrap();
+    assert_eq!(rows1, rows2, "recompute after rollback must be bitwise identical");
+
+    // collect_from skips the head for earlier positions
+    eng.spec_truncate(id, base_len).unwrap();
+    let tail_only = eng.spec_extend(id, &probe, 2).unwrap();
+    assert_eq!(tail_only.len(), 1);
+    assert_eq!(tail_only[0], rows1[2]);
+
+    eng.spec_close(id);
+    assert_eq!(eng.kv_allocated_bytes(), 0);
+    assert!(eng.spec_len(id).is_err(), "closed handle must be unknown");
+}
+
+#[test]
+fn speculative_and_batched_modes_are_mutually_exclusive() {
+    // a decode forward teacher-forces garbage into idle lanes' position 0
+    // — harmless for empty lanes (prefill overwrites), fatal for a live
+    // sequence in another lane — so an engine serves either batched
+    // requests or ONE speculative sequence at a time, enforced both ways
+    let be = backend();
+    let y = 10u32;
+    let mut rng = Rng::new(38);
+    let store = self_loop_store(&*be, y, &mut rng);
+    let parent = Arch::parent(be.man().cfg.n_layers);
+    let mut eng = EngineConfig::new().kv_budget_bytes(32 << 20).build(be.clone(), &store, &parent).unwrap();
+
+    let (sid, _) = eng.spec_open(&[1, y]).unwrap();
+    assert!(eng.submit(GenRequest::new(vec![1, y], 4)).is_err(), "batched submit must be refused in speculative mode");
+    assert!(eng.spec_open(&[1, y]).is_err(), "one speculative sequence per engine");
+    eng.spec_close(sid);
+
+    // back to batched mode: the lane is clean (prefill overwrites it)
+    let rid = eng.submit(GenRequest::new(vec![1, y], 4)).unwrap();
+    let resp = eng.run_to_completion().unwrap();
+    assert_eq!(resp.len(), 1);
+    assert_eq!(resp[0].id, rid);
+    assert_eq!(resp[0].tokens, vec![y; 4]);
+
+    // and with a batched request in flight, spec_open is refused
+    eng.submit(GenRequest::new(vec![1, y], 20)).unwrap();
+    eng.step().unwrap();
+    assert!(eng.active() > 0);
+    assert!(eng.spec_open(&[1, y]).is_err(), "speculative open must be refused mid-batch");
+    let done = eng.run_to_completion().unwrap();
+    assert_eq!(done.len(), 1);
+    assert_eq!(eng.kv_allocated_bytes(), 0);
+}
+
+#[test]
+fn eos_inside_an_accepted_draft_stops_the_stream() {
+    // engineer a chain 1 -> y -> z -> EOS (see serving_integration):
+    // with the parent as its own drafter every draft is accepted, so EOS
+    // arrives *inside* a draft and must terminate the request exactly
+    // there, byte-identical to the plain engine
+    let be = backend();
+    let cfg = be.man().cfg.clone();
+    let (d, v) = (cfg.d, cfg.v);
+    let mut rng = Rng::new(39);
+    let mut store = init_parent(be.man(), &mut rng);
+    for l in 0..cfg.n_layers {
+        let wo = store.get(&block_key(l, "attn", "gqa_r1", "wo")).unwrap().clone();
+        store.put(&block_key(l, "attn", "gqa_r1", "wo"), puzzle::tensor::Tensor::zeros(&wo.shape));
+        let wd = store.get(&block_key(l, "ffn", "r100", "wd")).unwrap().clone();
+        store.put(&block_key(l, "ffn", "r100", "wd"), puzzle::tensor::Tensor::zeros(&wd.shape));
+    }
+    let (y, z) = (10u32, 11u32);
+    let mut e = puzzle::tensor::Tensor::zeros(&[v, d]);
+    for x in e.data.iter_mut() {
+        *x = rng.normal() * 1e-3;
+    }
+    let row = |t: u32| (t as usize) * d;
+    e.data[row(y)..row(y) + d].fill(0.0);
+    e.data[row(y)] = 1.0;
+    e.data[row(z)..row(z) + d].fill(0.0);
+    e.data[row(z)] = 2.0;
+    e.data[row(z) + 1] = 1.0;
+    e.data[row(EOS)..row(EOS) + d].fill(0.0);
+    e.data[row(EOS) + 1] = 6.0;
+    store.put("embed", e);
+
+    let parent = Arch::parent(cfg.n_layers);
+    let oracle = plain_greedy(&be, &store, &parent, &[vec![1, y]], 10);
+    assert_eq!(oracle[0], vec![z, EOS]);
+    let mut sess = SpecSession::new(
+        be.clone(),
+        &store,
+        &parent,
+        &store,
+        &parent,
+        SpecConfig { draft_k: 6, engine: EngineConfig::new().kv_budget_bytes(32 << 20) },
+    )
+    .unwrap();
+    let r = sess.generate(&[1, y], 10, SamplingParams::greedy()).unwrap();
+    assert_eq!(r.tokens, vec![z, EOS]);
+    assert_eq!(r.finish, FinishReason::Eos);
+    assert_eq!(sess.kv_allocated_bytes(), (0, 0));
+}
