@@ -253,6 +253,61 @@ fn main() {
         assert!(tpp > 1.0, "speculative decoding must amortize > 1 token per parent forward");
     }
 
+    // batched speculation: the same N=4 requests at once, sharing the
+    // engines' decode lanes with the fused multi-token verify — compare
+    // against the sequential session bench above
+    {
+        use puzzle::serving::SamplingParams;
+        use puzzle::specdec::{SpecBatch, SpecConfig, SpecRequest, SpecSession};
+        let parent_arch = Arch::parent(n_layers);
+        let mut r2 = Rng::new(21);
+        let prompts: Vec<Vec<u32>> =
+            (0..4).map(|_| sample_sequence(&world, &mix, 8, &mut r2)).collect();
+        let mut seq_tokens = 0usize;
+        b.time("specdec_sequential_4seq", "4 sequences one-by-one, k=4", 2, || {
+            let mut sess = SpecSession::new(
+                shared.clone(),
+                &store,
+                &parent_arch,
+                &store,
+                &parent_arch,
+                SpecConfig::default(),
+            )
+            .unwrap();
+            seq_tokens = 0;
+            for p in &prompts {
+                let r = sess.generate(p, 32, SamplingParams::greedy()).unwrap();
+                seq_tokens += r.tokens.len();
+            }
+        });
+        let mut agg = (0usize, 0usize); // (tokens, per-lane parent passes)
+        b.time("specdec_batched_4seq", "same 4 sequences batched, k=4", 2, || {
+            let mut batch = SpecBatch::new(
+                shared.clone(),
+                &store,
+                &parent_arch,
+                &store,
+                &parent_arch,
+                SpecConfig::default(),
+            )
+            .unwrap();
+            let reqs: Vec<SpecRequest> =
+                prompts.iter().map(|p| SpecRequest::new(p.clone(), 32)).collect();
+            agg = (0, 0);
+            for r in batch.generate_many(&reqs).unwrap() {
+                agg.0 += r.tokens.len();
+                agg.1 += r.parent_passes;
+            }
+        });
+        assert_eq!(agg.0, seq_tokens, "batched and sequential runs must emit the same tokens");
+        let tpp = agg.0 as f64 / agg.1.max(1) as f64;
+        println!("batched specdec amortization: {} tokens / {} parent passes = {tpp:.2} tok/pass", agg.0, agg.1);
+        assert!(tpp > 1.0, "batched speculation must amortize > 1 token per parent pass");
+        let seq = b.rows.iter().find(|(n, _, _)| n == "specdec_sequential_4seq").map(|(_, p, _)| *p).unwrap();
+        let bat = b.rows.iter().find(|(n, _, _)| n == "specdec_batched_4seq").map(|(_, p, _)| *p).unwrap();
+        println!("batched vs sequential wall: {:.1} ms vs {:.1} ms ({:.2}x)", bat * 1e3, seq * 1e3, seq / bat.max(1e-12));
+    }
+
     // paged KV manager ops (§6)
     {
         let mgr_cfg = PageCfg { page_len: 16, dtype_bytes: 4, budget_bytes: 1 << 24 };

@@ -19,7 +19,7 @@ use puzzle::config::TinyManifest;
 use puzzle::data::{corpus::sample_sequence, CorpusMix, World};
 use puzzle::runtime::{share, RefBackend};
 use puzzle::serving::{EngineConfig, GenRequest, SamplingParams, SchedulerKind, StreamEvent};
-use puzzle::specdec::{expected_tokens_per_pass, SpecConfig, SpecSession};
+use puzzle::specdec::{expected_tokens_per_pass, SpecBatch, SpecConfig, SpecRequest, SpecSession};
 use puzzle::util::{Json, Rng};
 use puzzle::weights::store::init_parent;
 
@@ -157,7 +157,7 @@ fn main() -> Result<()> {
             &parent_arch,
             &store,
             drafter_arch,
-            SpecConfig { draft_k, engine: EngineConfig::new().kv_budget_bytes(32 << 20) },
+            SpecConfig { draft_k, engine: EngineConfig::new().kv_budget_bytes(32 << 20), ..Default::default() },
         )?;
         let t_spec = Instant::now();
         let (mut tokens, mut passes, mut accepted, mut proposed, mut attempted) = (0, 0, 0, 0, 0);
@@ -205,6 +205,58 @@ fn main() -> Result<()> {
         ]));
     }
     println!("  all speculative outputs byte-identical to plain greedy decoding ✓");
+
+    // ---- batched speculation: N=4 sequences sharing the engines' ----
+    // ---- decode lanes, fused multi-token verify (DESIGN.md §6)   ----
+    let batch_n = 4usize;
+    let batch_prompts: Vec<Vec<u32>> = prompts.iter().take(batch_n).cloned().collect();
+    let batch_oracle: Vec<Vec<u32>> =
+        (0..batch_n).map(|i| plain_by_id[&ids[i]].clone()).collect();
+    let spec_cfg = || SpecConfig {
+        draft_k,
+        engine: EngineConfig::new().kv_budget_bytes(32 << 20),
+        ..Default::default()
+    };
+
+    // baseline: the same 4 requests one after another through the
+    // single-sequence session (one lane busy, the rest parked)
+    let mut seq_sess =
+        SpecSession::new(be.clone(), &store, &parent_arch, &store, &arch, spec_cfg())?;
+    let t_seq = Instant::now();
+    let mut seq_tokens = 0usize;
+    for (p, want) in batch_prompts.iter().zip(&batch_oracle) {
+        let r = seq_sess.generate(p, max_new, SamplingParams::greedy())?;
+        assert_eq!(&r.tokens, want, "sequential speculative run must stay byte-identical");
+        seq_tokens += r.tokens.len();
+    }
+    let seq_wall = t_seq.elapsed().as_secs_f64();
+
+    // batched: all 4 at once, lanes backfilled as sequences finish
+    let mut batch =
+        SpecBatch::new(be.clone(), &store, &parent_arch, &store, &arch, spec_cfg())?;
+    let reqs: Vec<SpecRequest> =
+        batch_prompts.iter().map(|p| SpecRequest::new(p.clone(), max_new)).collect();
+    let t_batch = Instant::now();
+    let rs = batch.generate_many(&reqs)?;
+    let batch_wall = t_batch.elapsed().as_secs_f64();
+    let (mut b_tokens, mut b_passes) = (0usize, 0usize);
+    for (r, want) in rs.iter().zip(&batch_oracle) {
+        assert_eq!(&r.tokens, want, "batched speculative run must stay byte-identical");
+        b_tokens += r.tokens.len();
+        b_passes += r.parent_passes;
+    }
+    assert_eq!(batch.kv_allocated_bytes(), (0, 0), "batched run must hand every page back");
+    let batched_tpp = b_tokens as f64 / b_passes.max(1) as f64;
+    println!(
+        "batched speculation: N={batch_n} over {} lanes | {b_tokens} tokens = {batched_tpp:.2} tok/parent-pass | wall {:.1} ms vs {:.1} ms sequential ({:.2}x) | fused verify passes {}",
+        batch.lane_capacity(),
+        batch_wall * 1e3,
+        seq_wall * 1e3,
+        seq_wall / batch_wall.max(1e-12),
+        batch.parent_metrics().spec_fused_passes
+    );
+    assert_eq!(seq_tokens, b_tokens);
+
     // headline = best drafter (labeled); the deployable Puzzle child's own
     // numbers are first-class fields so a child regression is visible
     // without digging into the drafters array
@@ -220,11 +272,19 @@ fn main() -> Result<()> {
         ("plain_wall_s", Json::num(plain_wall)),
         ("plain_tokens", Json::num(plain_tokens as f64)),
         ("greedy_equivalent", Json::Bool(true)),
+        ("batched_n", Json::num(batch_n as f64)),
+        ("batched_lanes", Json::num(batch.lane_capacity() as f64)),
+        ("batched_tokens_per_pass", Json::num(batched_tpp)),
+        ("batched_wall_s", Json::num(batch_wall)),
+        ("sequential_wall_s", Json::num(seq_wall)),
+        ("batched_speedup_vs_sequential", Json::num(seq_wall / batch_wall.max(1e-12))),
+        ("batched_fused_passes", Json::num(batch.parent_metrics().spec_fused_passes as f64)),
+        ("batched_greedy_equivalent", Json::Bool(true)),
         ("drafters", Json::Arr(rows)),
     ]);
     std::fs::write("BENCH_specdec.json", j.to_pretty())?;
     println!(
-        "speculative perf -> BENCH_specdec.json (best {best_tpp:.2} tok/parent-pass [{best_name}], puzzle child {child_tpp:.2} at α̂ {:.0}%)",
+        "speculative perf -> BENCH_specdec.json (best {best_tpp:.2} tok/parent-pass [{best_name}], puzzle child {child_tpp:.2} at α̂ {:.0}%, batched N={batch_n} {batched_tpp:.2} tok/pass)",
         child_alpha * 100.0
     );
     Ok(())

@@ -6,8 +6,10 @@
 
 use crate::util::Json;
 
+/// FFN intermediate-size ratios in the search space, largest first.
 pub const FFN_RATIO_NAMES: [&str; 7] = ["r100", "r87", "r75", "r50", "r25", "r20", "r10"];
 
+/// Numeric value of an FFN ratio name (e.g. "r50" -> 0.50).
 pub fn ffn_ratio_value(name: &str) -> f64 {
     match name {
         "r100" => 1.00,
@@ -22,6 +24,7 @@ pub fn ffn_ratio_value(name: &str) -> f64 {
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+/// Per-layer attention replacement choices (paper §2).
 pub enum AttnChoice {
     /// GQA with kv_heads = n_heads / divisor. divisor 1 = the parent MHA.
     Gqa { divisor: u32 },
@@ -32,14 +35,18 @@ pub enum AttnChoice {
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+/// Per-layer FFN replacement choices (paper §2).
 pub enum FfnChoice {
     /// SwiGLU with intermediate dim = ratio * parent I (by ratio name idx).
     Ratio(u8),
+    /// FFN replaced by one linear layer.
     Linear,
+    /// Subblock skipped entirely.
     NoOp,
 }
 
 impl AttnChoice {
+    /// Variant name as used in manifests and score tables (e.g. "gqa_r2").
     pub fn name(&self) -> String {
         match self {
             AttnChoice::Gqa { divisor } => format!("gqa_r{divisor}"),
@@ -48,6 +55,7 @@ impl AttnChoice {
         }
     }
 
+    /// Parse a variant name back into a choice.
     pub fn from_name(s: &str) -> Option<AttnChoice> {
         if s == "linear" {
             return Some(AttnChoice::Linear);
@@ -68,6 +76,7 @@ impl AttnChoice {
 }
 
 impl FfnChoice {
+    /// Variant name as used in manifests and score tables (e.g. "r50").
     pub fn name(&self) -> String {
         match self {
             FfnChoice::Ratio(i) => FFN_RATIO_NAMES[*i as usize].to_string(),
@@ -76,6 +85,7 @@ impl FfnChoice {
         }
     }
 
+    /// Parse a variant name back into a choice.
     pub fn from_name(s: &str) -> Option<FfnChoice> {
         if s == "linear" {
             return Some(FfnChoice::Linear);
@@ -86,6 +96,7 @@ impl FfnChoice {
         FFN_RATIO_NAMES.iter().position(|&n| n == s).map(|i| FfnChoice::Ratio(i as u8))
     }
 
+    /// Executable name prefix in the artifact manifest (None for NoOp).
     pub fn exec_prefix(&self) -> Option<String> {
         match self {
             FfnChoice::NoOp => None,
@@ -97,7 +108,9 @@ impl FfnChoice {
 /// The per-layer choice sets (paper's §2 instantiation: 6 x 9 = 54).
 #[derive(Debug, Clone)]
 pub struct SearchSpace {
+    /// Attention choices available at every layer.
     pub attn: Vec<AttnChoice>,
+    /// FFN choices available at every layer.
     pub ffn: Vec<FfnChoice>,
 }
 
@@ -133,6 +146,7 @@ impl SearchSpace {
         SearchSpace { attn, ffn }
     }
 
+    /// Number of (attention, FFN) combinations per layer.
     pub fn per_layer_combinations(&self) -> usize {
         self.attn.len() * self.ffn.len()
     }
@@ -150,6 +164,7 @@ pub type BlockChoice = (AttnChoice, FfnChoice);
 /// A full child architecture.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Arch {
+    /// One (attention, FFN) choice per layer, input to output.
     pub layers: Vec<BlockChoice>,
 }
 
@@ -161,6 +176,7 @@ impl Arch {
         }
     }
 
+    /// Depth of the architecture.
     pub fn n_layers(&self) -> usize {
         self.layers.len()
     }
@@ -178,6 +194,7 @@ impl Arch {
         same as f64 / self.layers.len() as f64
     }
 
+    /// Serialize as a per-layer array of {attn, ffn} variant names.
     pub fn to_json(&self) -> Json {
         Json::Arr(
             self.layers
@@ -192,6 +209,7 @@ impl Arch {
         )
     }
 
+    /// Parse the `to_json` form; None on malformed input.
     pub fn from_json(j: &Json) -> Option<Arch> {
         let arr = j.as_arr()?;
         let mut layers = Vec::with_capacity(arr.len());

@@ -30,17 +30,24 @@ use crate::weights::{init, store::block_key, Store};
 /// One library-construction job: train `variant` of `kind` at `layer`.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct Job {
+    /// Layer index the block lives at.
     pub layer: usize,
+    /// Subblock kind: "attn" or "ffn".
     pub kind: &'static str, // "attn" | "ffn"
+    /// Variant name from the search space (e.g. "gqa_r2", "r50").
     pub variant: String,
 }
 
 #[derive(Debug, Clone, Default)]
+/// Aggregate outcome of one BLD run over the whole library.
 pub struct BldReport {
     /// final normalized-MSE per job
     pub final_loss: HashMap<String, f64>,
+    /// Optimizer steps each job took.
     pub steps: usize,
+    /// Training tokens streamed through the jobs.
     pub tokens: u64,
+    /// Number of jobs trained.
     pub jobs: usize,
 }
 

@@ -12,29 +12,47 @@ use crate::arch::{ffn_ratio_value, AttnChoice, FfnChoice, FFN_RATIO_NAMES};
 use crate::util::Json;
 
 #[derive(Debug, Clone)]
+/// Model hyperparameters shared by every executable in a manifest.
 pub struct ModelCfg {
+    /// Config name (e.g. "tiny", "small").
     pub name: String,
+    /// Model (residual stream) dimension.
     pub d: usize,
+    /// Transformer layer count.
     pub n_layers: usize,
+    /// Query head count.
     pub n_heads: usize,
+    /// Per-head dimension.
     pub head_dim: usize,
+    /// Parent FFN intermediate dimension.
     pub i: usize,
+    /// Vocabulary size.
     pub v: usize,
+    /// Training sequence length.
     pub s_train: usize,
+    /// Training batch size.
     pub b_train: usize,
+    /// Compiled prefill window length.
     pub s_prefill: usize,
+    /// Compiled decode batch (the engine's lane count).
     pub b_decode: usize,
+    /// Compiled KV-cache horizon (max sequence length at decode).
     pub s_max: usize,
+    /// Long-context evaluation sequence length.
     pub s_long: usize,
+    /// Rotary embedding base.
     pub rope_theta: f64,
+    /// RMSNorm epsilon.
     pub eps: f64,
 }
 
 impl ModelCfg {
+    /// Query projection width (`n_heads * head_dim`).
     pub fn qdim(&self) -> usize {
         self.n_heads * self.head_dim
     }
 
+    /// KV head count for a GQA divisor.
     pub fn kv_heads(&self, divisor: u32) -> usize {
         self.n_heads / divisor as usize
     }
@@ -66,6 +84,7 @@ impl ModelCfg {
 /// Weight layout of one variant: ordered (name, shape) pairs.
 #[derive(Debug, Clone)]
 pub struct VariantLayout {
+    /// Ordered (name, shape) weight pairs, as the executables expect them.
     pub weights: Vec<(String, Vec<usize>)>,
     /// kv heads (gqa attn variants), 0 otherwise
     pub kv_heads: usize,
@@ -74,6 +93,7 @@ pub struct VariantLayout {
 }
 
 impl VariantLayout {
+    /// Total parameters across the variant's weights.
     pub fn param_count(&self) -> usize {
         self.weights.iter().map(|(_, s)| s.iter().product::<usize>()).sum()
     }
@@ -82,17 +102,28 @@ impl VariantLayout {
 /// Executable signature from the manifest.
 #[derive(Debug, Clone)]
 pub struct ExecSig {
+    /// HLO text file relative to the manifest directory.
     pub file: String,
+    /// Ordered (dtype, shape) input signature.
     pub in_shapes: Vec<(String, Vec<usize>)>,
+    /// Ordered (dtype, shape) output signature.
     pub out_shapes: Vec<(String, Vec<usize>)>,
 }
 
 #[derive(Debug, Clone)]
+/// The artifact manifest: model config, per-variant weight layouts, and
+/// executable signatures — the contract between the compile path (or the
+/// synthetic in-memory builder) and every `Backend`.
 pub struct Manifest {
+    /// Artifact directory (empty for in-memory synthetic manifests).
     pub dir: PathBuf,
+    /// Model hyperparameters.
     pub cfg: ModelCfg,
+    /// Attention variant name -> weight layout.
     pub attn_variants: BTreeMap<String, VariantLayout>,
+    /// FFN variant name -> weight layout.
     pub ffn_variants: BTreeMap<String, VariantLayout>,
+    /// Executable name -> signature.
     pub execs: BTreeMap<String, ExecSig>,
 }
 
@@ -126,6 +157,7 @@ fn parse_variants(j: &Json, extra_key: &str) -> Result<BTreeMap<String, VariantL
 }
 
 impl Manifest {
+    /// Parse `<dir>/manifest.json` (the `python -m compile.aot` output).
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
@@ -228,6 +260,7 @@ impl Manifest {
         Manifest { dir: PathBuf::new(), cfg, attn_variants, ffn_variants, execs }
     }
 
+    /// Absolute path of an executable's HLO text file.
     pub fn exec_path(&self, name: &str) -> Result<PathBuf> {
         let sig = self.execs.get(name).ok_or_else(|| anyhow!("unknown exec {name}"))?;
         Ok(self.dir.join(&sig.file))
@@ -241,6 +274,7 @@ impl Manifest {
         }
     }
 
+    /// Layout for an FFN choice (None for NoOp).
     pub fn ffn_layout(&self, c: &FfnChoice) -> Option<&VariantLayout> {
         match c {
             FfnChoice::NoOp => None,

@@ -4,15 +4,22 @@ use super::world::{World, BOS, EOS, EQ, PLUS, QRY, SEP};
 use crate::util::Rng;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Synthetic corpus domains (the "Distillation Mix" components).
 pub enum Domain {
+    /// (entity, relation) -> value statements.
     Facts,
+    /// Digit arithmetic.
     Math,
+    /// Markov narrative filler.
     Narrative,
+    /// Code-shaped token patterns.
     Code,
+    /// Instruction-form facts.
     Instruct,
 }
 
 impl Domain {
+    /// Domain name for reports and mix definitions.
     pub fn name(&self) -> &'static str {
         match self {
             Domain::Facts => "facts",
@@ -27,7 +34,9 @@ impl Domain {
 /// A weighted mix of domains — the analog of the paper's dataset mixtures.
 #[derive(Debug, Clone)]
 pub struct CorpusMix {
+    /// Mix name for reports.
     pub name: String,
+    /// (domain, weight) pairs; weights need not sum to 1.
     pub domains: Vec<(Domain, f64)>,
 }
 
@@ -159,9 +168,13 @@ pub fn sample_sequence(world: &World, mix: &CorpusMix, len: usize, rng: &mut Rng
 /// A training batch: inputs [b, s] and next-token targets [b, s].
 #[derive(Debug, Clone)]
 pub struct Batch {
+    /// Sequences per batch.
     pub b: usize,
+    /// Tokens per sequence.
     pub s: usize,
+    /// Token ids, row-major [b, s].
     pub inputs: Vec<i32>,
+    /// Next-token targets, row-major [b, s].
     pub targets: Vec<i32>,
 }
 
@@ -172,14 +185,17 @@ pub struct Batcher {
     b: usize,
     s: usize,
     rng: Rng,
+    /// Total tokens produced so far (throughput accounting).
     pub tokens_served: u64,
 }
 
 impl Batcher {
+    /// A deterministic stream over (world, mix) from `seed`.
     pub fn new(world: World, mix: CorpusMix, b: usize, s: usize, seed: u64) -> Batcher {
         Batcher { world, mix, b, s, rng: Rng::new(seed), tokens_served: 0 }
     }
 
+    /// Produce the next [b, s] batch with next-token targets.
     pub fn next_batch(&mut self) -> Batch {
         let (b, s) = (self.b, self.s);
         let mut inputs = Vec::with_capacity(b * s);

@@ -4,29 +4,46 @@ use crate::util::Rng;
 
 /// Special token ids (fixed across vocab sizes).
 pub const PAD: u32 = 0;
+/// Beginning-of-sequence marker.
 pub const BOS: u32 = 1;
+/// End-of-sequence marker (generation stops here).
 pub const EOS: u32 = 2;
+/// Fact separator ("is").
 pub const SEP: u32 = 3; // "is"
+/// Question marker.
 pub const QRY: u32 = 4; // question marker
+/// Equality marker in arithmetic statements.
 pub const EQ: u32 = 5;
+/// Plus sign in arithmetic statements.
 pub const PLUS: u32 = 6;
+/// Frequent-words query marker (long-context task).
 pub const FRQ: u32 = 7; // frequent-words query marker
 
 /// Vocabulary layout: contiguous id blocks for each token class.
 #[derive(Debug, Clone)]
 pub struct Vocab {
+    /// Total vocabulary size.
     pub size: u32,
+    /// Number of entity tokens.
     pub n_entities: u32,
+    /// Number of relation tokens.
     pub n_relations: u32,
+    /// Number of value tokens.
     pub n_values: u32,
+    /// First entity token id.
     pub ent0: u32,
+    /// First relation token id.
     pub rel0: u32,
+    /// First value token id.
     pub val0: u32,
+    /// First digit token id (10 digits).
     pub dig0: u32,
+    /// First filler (narrative) token id.
     pub fil0: u32,
 }
 
 impl Vocab {
+    /// Derive the layout for a vocabulary of `v` tokens.
     pub fn for_size(v: u32) -> Vocab {
         assert!(v >= 128, "vocab too small for FactWorld layout");
         // proportions tuned so filler keeps >= 1/3 of the vocab
@@ -42,31 +59,38 @@ impl Vocab {
         Vocab { size: v, n_entities, n_relations, n_values, ent0, rel0, val0, dig0, fil0 }
     }
 
+    /// Number of filler tokens.
     pub fn n_filler(&self) -> u32 {
         self.size - self.fil0
     }
 
+    /// The i-th entity token (wrapping).
     pub fn entity(&self, i: u32) -> u32 {
         self.ent0 + (i % self.n_entities)
     }
 
+    /// The i-th relation token (wrapping).
     pub fn relation(&self, i: u32) -> u32 {
         self.rel0 + (i % self.n_relations)
     }
 
+    /// The i-th value token (wrapping).
     pub fn value(&self, i: u32) -> u32 {
         self.val0 + (i % self.n_values)
     }
 
+    /// The token for digit `d` (0..=9).
     pub fn digit(&self, d: u32) -> u32 {
         debug_assert!(d < 10);
         self.dig0 + d
     }
 
+    /// The i-th filler token (wrapping).
     pub fn filler(&self, i: u32) -> u32 {
         self.fil0 + (i % self.n_filler())
     }
 
+    /// Whether `t` lies in the value block.
     pub fn is_value(&self, t: u32) -> bool {
         t >= self.val0 && t < self.dig0
     }
@@ -85,11 +109,14 @@ fn mix64(mut x: u64) -> u64 {
 /// distractors all agree without storing anything.
 #[derive(Debug, Clone)]
 pub struct World {
+    /// World seed: all facts and narratives derive from it.
     pub seed: u64,
+    /// The vocabulary layout.
     pub vocab: Vocab,
 }
 
 impl World {
+    /// A world over a fresh vocabulary layout for `vocab_size` tokens.
     pub fn new(seed: u64, vocab_size: u32) -> World {
         World { seed, vocab: Vocab::for_size(vocab_size) }
     }

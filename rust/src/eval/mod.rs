@@ -29,13 +29,18 @@ use crate::weights::Store;
 
 pub use tasks::{LongTask, McQuestion};
 
+/// Runs the synthetic benchmark suite over one assembled model.
 pub struct Evaluator<'a> {
+    /// Backend executing the model's block chain.
     pub be: &'a dyn Backend,
+    /// The assembled (Arch, Store) model under evaluation.
     pub model: CompiledModel,
 }
 
 #[derive(Debug, Clone, Default)]
+/// Benchmark name -> score for one evaluated model.
 pub struct EvalReport {
+    /// Per-benchmark scores (e.g. "synthqa", "genscore").
     pub scores: BTreeMap<String, f64>,
 }
 
@@ -47,10 +52,12 @@ impl EvalReport {
         (gen * 10.0 + qa) / 2.0
     }
 
+    /// One benchmark's score (0.0 when absent).
     pub fn get(&self, k: &str) -> f64 {
         self.scores.get(k).copied().unwrap_or(0.0)
     }
 
+    /// One-line report row of every score plus the accuracy axis.
     pub fn row(&self) -> String {
         let mut parts: Vec<String> =
             self.scores.iter().map(|(k, v)| format!("{k} {v:.2}")).collect();
@@ -60,6 +67,7 @@ impl EvalReport {
 }
 
 impl<'a> Evaluator<'a> {
+    /// Assemble `arch` over `store` for evaluation on `be`.
     pub fn new(be: &'a dyn Backend, store: &Store, arch: &Arch) -> Result<Evaluator<'a>> {
         Ok(Evaluator { be, model: CompiledModel::assemble(be.man(), store, arch)? })
     }

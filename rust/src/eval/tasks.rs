@@ -7,10 +7,13 @@ use crate::util::Rng;
 /// whose *next* token is the answer) and rank `candidates`.
 #[derive(Debug, Clone)]
 pub struct McQuestion {
+    /// Question tokens.
     pub prompt: Vec<u32>,
     /// index into prompt whose next-token distribution is scored
     pub answer_pos: usize,
+    /// Candidate answer tokens, one correct.
     pub candidates: Vec<u32>,
+    /// Index of the correct candidate.
     pub correct: usize,
 }
 
@@ -62,7 +65,7 @@ pub fn synth_qa(
 }
 
 /// GenScore (MT-Bench proxy): question-form prompts, answered by greedy
-/// full-vocab generation. candidates[correct] = gold token.
+/// full-vocab generation. `candidates[correct]` = gold token.
 pub fn gen_questions(world: &World, n: usize, rng: &mut Rng) -> Vec<McQuestion> {
     let v = &world.vocab;
     (0..n)
@@ -125,6 +128,7 @@ pub fn cont_questions(world: &World, n: usize, rng: &mut Rng) -> Vec<McQuestion>
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Long-context task families (the RULER-proxy suite, Table 4).
 pub enum LongTask {
     /// a fact sentence hidden in filler; query it at the end
     Needle,

@@ -20,12 +20,16 @@ use crate::util::{Json, Rng};
 use crate::weights::{compress, store::block_key, store::randomize_weights, Store};
 use crate::info;
 
+/// Shared context for regenerating paper tables/figures.
 pub struct ExpCtx {
+    /// The pipeline (backend, run dir, stage config) experiments draw on.
     pub pipe: Pipeline,
+    /// The search space derived from the backend's head count.
     pub space: SearchSpace,
 }
 
 impl ExpCtx {
+    /// Wrap a pipeline, deriving the full search space.
     pub fn new(pipe: Pipeline) -> ExpCtx {
         let space = SearchSpace::full(pipe.be.man().cfg.n_heads as u32);
         ExpCtx { pipe, space }
@@ -74,6 +78,7 @@ fn pct(child: f64, parent: f64) -> f64 {
 // ======================================================================
 // Table 1 — GKD loss-combination ablation
 // ======================================================================
+/// Table 1: GKD loss-combination ablation (LM / cosine / KLD).
 pub fn table1(ctx: &ExpCtx) -> Result<()> {
     println!("== Table 1: GKD loss combinations (LM / cosine / KLD) ==");
     let (library, arch) = ctx.standard_child()?;
@@ -122,6 +127,7 @@ pub fn table1(ctx: &ExpCtx) -> Result<()> {
 // ======================================================================
 // Table 2 — accuracy preservation across benchmarks
 // ======================================================================
+/// Table 2: accuracy preservation across benchmarks, child vs parent.
 pub fn table2(ctx: &ExpCtx) -> Result<()> {
     println!("== Table 2: child vs parent across benchmarks ==");
     let (library, arch) = ctx.standard_child()?;
@@ -152,6 +158,7 @@ pub fn table2(ctx: &ExpCtx) -> Result<()> {
 // ======================================================================
 // Table 3 — serving throughput across scenarios
 // ======================================================================
+/// Table 3: serving throughput across scenarios (measured + modeled).
 pub fn table3(ctx: &ExpCtx) -> Result<()> {
     println!("== Table 3: throughput, parent vs child (measured CPU + modeled H100) ==");
     let (library, arch) = ctx.standard_child()?;
@@ -221,6 +228,7 @@ pub fn table3(ctx: &ExpCtx) -> Result<()> {
 // ======================================================================
 // Figure 4 — blind preference proxy
 // ======================================================================
+/// Figure 4: blind-preference proxy (per-prompt answer correctness).
 pub fn fig4(ctx: &ExpCtx) -> Result<()> {
     println!("== Figure 4: blind-preference proxy (per-prompt answer correctness) ==");
     let (library, arch) = ctx.standard_child()?;
@@ -259,6 +267,7 @@ pub fn fig4(ctx: &ExpCtx) -> Result<()> {
 // ======================================================================
 // Figure 5 — accuracy vs throughput frontier
 // ======================================================================
+/// Figure 5: accuracy-vs-throughput frontier.
 pub fn fig5(ctx: &ExpCtx) -> Result<()> {
     println!("== Figure 5: accuracy vs throughput frontier ==");
     let library = ctx.pipe.ensure_library(&ctx.space)?;
@@ -284,6 +293,7 @@ pub fn fig5(ctx: &ExpCtx) -> Result<()> {
 // ======================================================================
 // Figure 6 — per-layer runtime of the child relative to the parent
 // ======================================================================
+/// Figure 6: per-layer runtime of the child relative to the parent.
 pub fn fig6(ctx: &ExpCtx) -> Result<()> {
     println!("== Figure 6: per-layer relative runtime of the chosen child ==");
     let (_, arch) = ctx.standard_child()?;
@@ -305,6 +315,7 @@ pub fn fig6(ctx: &ExpCtx) -> Result<()> {
 // ======================================================================
 // Table 4 — long-context (RULER proxy) retention
 // ======================================================================
+/// Table 4: long-context (RULER-proxy) retention.
 pub fn table4(ctx: &ExpCtx) -> Result<()> {
     println!("== Table 4: RULER-proxy retention across context lengths ==");
     let (library, arch) = ctx.standard_child()?;
@@ -333,6 +344,7 @@ pub fn table4(ctx: &ExpCtx) -> Result<()> {
 // ======================================================================
 // Table 5 — lightweight alignment finetune
 // ======================================================================
+/// Table 5: lightweight alignment finetune on the child.
 pub fn table5(ctx: &ExpCtx) -> Result<()> {
     println!("== Table 5: lightweight alignment on the child ==");
     let (library, arch) = ctx.standard_child()?;
@@ -379,6 +391,7 @@ pub fn table5(ctx: &ExpCtx) -> Result<()> {
 // ======================================================================
 // Table 7 — GKD token-budget sweep
 // ======================================================================
+/// Table 7: GKD token-budget sweep.
 pub fn table7(ctx: &ExpCtx) -> Result<()> {
     println!("== Table 7: GKD budget sweep ==");
     let (library, arch) = ctx.standard_child()?;
@@ -403,6 +416,7 @@ pub fn table7(ctx: &ExpCtx) -> Result<()> {
 // ======================================================================
 // Table 8 — coupled vs decoupled BLD
 // ======================================================================
+/// Table 8: coupled vs decoupled BLD on a reduced space.
 pub fn table8(ctx: &ExpCtx) -> Result<()> {
     println!("== Table 8: coupled vs decoupled BLD (reduced space) ==");
     // reduced space as in §8.1.1
@@ -445,6 +459,7 @@ pub fn table8(ctx: &ExpCtx) -> Result<()> {
 // ======================================================================
 // Table 9 — dataset composition (Distillation Mix vs Gutenberg)
 // ======================================================================
+/// Table 9: dataset composition (Distillation Mix vs narrative-only).
 pub fn table9(ctx: &ExpCtx) -> Result<()> {
     println!("== Table 9: dataset composition (mix vs narrative-only) ==");
     let ct = ctx.pipe.default_cost_table();
@@ -473,6 +488,7 @@ pub fn table9(ctx: &ExpCtx) -> Result<()> {
 // ======================================================================
 // Table 10 — BLD token-budget sweep
 // ======================================================================
+/// Table 10: BLD token-budget sweep.
 pub fn table10(ctx: &ExpCtx) -> Result<()> {
     println!("== Table 10: BLD budget sweep ==");
     let ct = ctx.pipe.default_cost_table();
@@ -498,6 +514,7 @@ pub fn table10(ctx: &ExpCtx) -> Result<()> {
 // ======================================================================
 // Figure 7 — KL vs LM-loss block scoring
 // ======================================================================
+/// Figure 7: KL vs LM-loss replace-1-block scoring.
 pub fn fig7(ctx: &ExpCtx) -> Result<()> {
     println!("== Figure 7: KL vs LM-loss replace-1-block scoring ==");
     let library = ctx.pipe.ensure_library(&ctx.space)?;
@@ -526,6 +543,7 @@ pub fn fig7(ctx: &ExpCtx) -> Result<()> {
 // ======================================================================
 // Table 11 — task-oriented (Half-MMLU) block scoring
 // ======================================================================
+/// Table 11: task-oriented (Half-SynthQA) block scoring.
 pub fn table11(ctx: &ExpCtx) -> Result<()> {
     println!("== Table 11: Half-SynthQA task-oriented scoring ==");
     let library = ctx.pipe.ensure_library(&ctx.space)?;
@@ -586,6 +604,7 @@ pub fn table11(ctx: &ExpCtx) -> Result<()> {
 // ======================================================================
 // Table 12 — no-op-only search space
 // ======================================================================
+/// Table 12: no-op-only vs full search space.
 pub fn table12(ctx: &ExpCtx) -> Result<()> {
     println!("== Table 12: no-op-only vs full search space (pre-uptraining) ==");
     let library = ctx.pipe.ensure_library(&ctx.space)?;
@@ -613,6 +632,7 @@ pub fn table12(ctx: &ExpCtx) -> Result<()> {
 // ======================================================================
 // Table 13 — greedy vs MIP / Table 14 — param-max / Table 15 — random
 // ======================================================================
+/// Tables 13/14/15: greedy vs MIP vs param-max vs random search.
 pub fn table13_14_15(ctx: &ExpCtx) -> Result<()> {
     println!("== Tables 13/14/15: search-algorithm ablations ==");
     let library = ctx.pipe.ensure_library(&ctx.space)?;
@@ -656,6 +676,7 @@ pub fn table13_14_15(ctx: &ExpCtx) -> Result<()> {
 // ======================================================================
 // Table 16 — GKD uptraining impact
 // ======================================================================
+/// Table 16: impact of GKD uptraining.
 pub fn table16(ctx: &ExpCtx) -> Result<()> {
     println!("== Table 16: impact of GKD uptraining ==");
     let (library, arch) = ctx.standard_child()?;
@@ -682,6 +703,7 @@ pub fn table16(ctx: &ExpCtx) -> Result<()> {
 // ======================================================================
 // Table 17 — vs Wanda 2:4 and low-rank factorization
 // ======================================================================
+/// Table 17: Puzzle vs Wanda 2:4 vs low-rank factorization.
 pub fn table17(ctx: &ExpCtx) -> Result<()> {
     println!("== Table 17: Puzzle vs Wanda 2:4 vs low-rank ==");
     let (library, arch) = ctx.standard_child()?;
@@ -749,6 +771,7 @@ pub fn table17(ctx: &ExpCtx) -> Result<()> {
 // ======================================================================
 // Figure 8 — MIP solutions across throughput targets (heatmap rows)
 // ======================================================================
+/// Figure 8: MIP architectures across throughput targets.
 pub fn fig8(ctx: &ExpCtx) -> Result<()> {
     println!("== Figure 8: MIP architectures across throughput targets ==");
     let scores = ctx.pipe.ensure_scores(&ctx.space, Metric::Kl)?;

@@ -15,11 +15,17 @@ use crate::train::{eval_batch, lr_schedule, train_step, Adam, AdamCfg, LossSpec,
 use crate::weights::Store;
 
 #[derive(Debug, Clone)]
+/// GKD uptraining hyperparameters.
 pub struct GkdCfg {
+    /// Optimizer steps.
     pub steps: usize,
+    /// Peak learning rate.
     pub lr: f32,
+    /// Fraction of steps spent on linear warmup.
     pub warmup_frac: f32,
+    /// Loss combination (LM / cosine / KLD weights).
     pub spec: LossSpec,
+    /// Steps between progress log lines.
     pub log_every: usize,
 }
 
@@ -30,12 +36,17 @@ impl Default for GkdCfg {
 }
 
 #[derive(Debug, Clone, Default)]
+/// Outcome of one GKD run.
 pub struct GkdReport {
+    /// Optimizer steps taken.
     pub steps: usize,
+    /// Training tokens consumed.
     pub tokens: u64,
+    /// Metrics of the final training step.
     pub final_train: StepMetrics,
     /// validation KLD vs parent after training (Table 1's last column)
     pub val_kld: f64,
+    /// Validation LM loss after training.
     pub val_lm: f64,
     /// training loss curve, sampled at log_every
     pub curve: Vec<(usize, f64)>,

@@ -24,6 +24,9 @@
     clippy::manual_memcpy,
     clippy::new_without_default
 )]
+// Every public item carries rustdoc; CI builds `cargo doc --no-deps` with
+// `-D warnings`, so a missing doc is a build failure, not a nit.
+#![warn(missing_docs)]
 
 pub mod arch;
 pub mod bld;

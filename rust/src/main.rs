@@ -3,7 +3,7 @@
 //! Subcommands:
 //!   pipeline    run the full Puzzle pipeline (parent -> BLD -> score ->
 //!               MIP -> GKD -> eval) and print the summary
-//!   exp <name>  regenerate a paper table/figure (table1..table17, fig4..fig8, all)
+//!   exp `<name>` regenerate a paper table/figure (table1..table17, fig4..fig8, all)
 //!   serve       serving-engine demo over the chosen child; --speculate
 //!               serves the parent with the child as speculative drafter
 //!   measure     print measured per-block costs on this machine
@@ -29,7 +29,7 @@ use puzzle::pipeline::{Pipeline, StageCfg};
 use puzzle::runtime::{share, RefBackend, SharedBackend};
 use puzzle::scoring::Metric;
 use puzzle::serving::{EngineConfig, GenRequest, SamplingParams, SchedulerKind, StreamEvent};
-use puzzle::specdec::{SpecConfig, SpecSession};
+use puzzle::specdec::{SpecBatch, SpecConfig, SpecRequest};
 use puzzle::train::LossSpec;
 use puzzle::util::{Args, Rng};
 use puzzle::{eval::Evaluator, info};
@@ -195,27 +195,36 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `serve --speculate`: the GKD-uptrained Puzzle child drafts `--draft-k`
-/// tokens per round, the parent verifies them in one teacher-forced pass.
-/// `--draft-arch <arch_tag.json>` pins the drafter architecture instead
-/// of searching.
+/// `serve --speculate`: the GKD-uptrained Puzzle child drafts for the
+/// parent, which verifies each batch of drafts in one fused teacher-
+/// forced pass; all requests share the engines' decode lanes
+/// (`SpecBatch`). `--draft-k N` pins the draft length; without it the
+/// length is tuned online from the running acceptance rate
+/// (`SpecModel::best_k`). `--draft-arch <arch_tag.json>` pins the
+/// drafter architecture instead of searching.
 fn cmd_serve_speculative(
     args: &Args,
     be: &SharedBackend,
     pipe: &Pipeline,
     space: &SearchSpace,
 ) -> Result<()> {
-    let draft_k = args.usize("draft-k", 4);
+    let pinned_k = args.get("draft-k").and_then(|v| v.parse::<usize>().ok());
     let draft_arch = args.get("draft-arch").map(PathBuf::from);
     let pair = pipe.ensure_spec_pair(space, Metric::Kl, args.f64("speedup", 1.8), draft_arch.as_deref())?;
     info!("speculative serve: drafter {}", pair.child_arch.signature());
-    let mut sess = SpecSession::new(
+    let cfg = SpecConfig {
+        draft_k: pinned_k.unwrap_or(4),
+        // no pin: tune k online from the measured acceptance rate
+        adapt_k_max: if pinned_k.is_some() { None } else { Some(8) },
+        engine: EngineConfig::new().kv_budget_bytes(64 << 20),
+    };
+    let mut batch = SpecBatch::new(
         be.clone(),
         &pair.parent_store,
         &pair.parent_arch,
         &pair.child_store,
         &pair.child_arch,
-        SpecConfig { draft_k, engine: EngineConfig::new().kv_budget_bytes(64 << 20) },
+        cfg,
     )?;
     let temperature = args.f64("temperature", 0.0) as f32;
     let seed = args.u64("seed", 42);
@@ -223,8 +232,7 @@ fn cmd_serve_speculative(
     let max_new = args.usize("max-new", 24);
     let mut rng = Rng::new(1);
     let c = &be.man().cfg;
-    let mut total_tokens = 0usize;
-    let mut total_passes = 0usize;
+    let mut reqs = Vec::with_capacity(n_req);
     for i in 0..n_req {
         let plen = rng.range(4, c.s_prefill.min(32));
         let prompt = sample_sequence(&pipe.world, &pipe.mix, plen, &mut rng);
@@ -233,7 +241,13 @@ fn cmd_serve_speculative(
         } else {
             SamplingParams::greedy()
         };
-        let r = sess.generate(&prompt, max_new, sampling)?;
+        reqs.push(SpecRequest { prompt, max_new, sampling });
+    }
+    // one batched call: every sequence shares the engines' decode lanes
+    let responses = batch.generate_many(&reqs)?;
+    let mut total_tokens = 0usize;
+    let mut total_passes = 0usize;
+    for (i, r) in responses.iter().enumerate() {
         total_tokens += r.tokens.len();
         total_passes += r.parent_passes;
         println!(
@@ -248,13 +262,16 @@ fn cmd_serve_speculative(
         );
     }
     println!(
-        "speculative: {} tokens / {} parent forwards = {:.2} amortized tok/pass (draft_k {})",
+        "speculative: {} tokens / {} parent forwards = {:.2} amortized tok/pass ({} lanes, draft_k {}{}, α̂ {:.0}%)",
         total_tokens,
         total_passes,
         total_tokens as f64 / total_passes.max(1) as f64,
-        draft_k
+        batch.lane_capacity(),
+        batch.current_draft_k(),
+        if pinned_k.is_some() { " pinned" } else { " auto" },
+        batch.observed_alpha() * 100.0
     );
-    println!("{}", sess.parent_metrics().summary());
+    println!("{}", batch.parent_metrics().summary());
     Ok(())
 }
 
@@ -306,7 +323,7 @@ fn main() -> Result<()> {
         Some("info") => cmd_info(&args),
         _ => {
             eprintln!(
-                "usage: puzzle <pipeline|exp|serve|measure|info> [--backend ref|pjrt] [--config tiny|small] [--run-dir DIR] [--scale F] [--speedup X]\n       serve also takes: [--scheduler fifo|priority|spf] [--temperature T] [--stream] [--requests N] [--max-new N]\n                         [--speculate] [--draft-k N] [--draft-arch arch_tag.json]"
+                "usage: puzzle <pipeline|exp|serve|measure|info> [--backend ref|pjrt] [--config tiny|small] [--run-dir DIR] [--scale F] [--speedup X]\n       serve also takes: [--scheduler fifo|priority|spf] [--temperature T] [--stream] [--requests N] [--max-new N]\n                         [--speculate] [--draft-k N (pins; omit to auto-tune)] [--draft-arch arch_tag.json]"
             );
             Ok(())
         }

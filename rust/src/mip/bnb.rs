@@ -7,8 +7,11 @@
 use super::lp::{Lp, LpResult};
 
 #[derive(Debug, Clone, PartialEq)]
+/// Outcome of a branch-and-bound solve.
 pub enum MipResult {
+    /// Integral optimum: chosen index per group and the objective.
     Optimal { x: Vec<usize>, obj: f64 },
+    /// No integral feasible point.
     Infeasible,
 }
 

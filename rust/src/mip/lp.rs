@@ -16,49 +16,68 @@
 const EPS: f64 = 1e-9;
 
 #[derive(Debug, Clone, Copy, PartialEq)]
+/// Constraint sense.
 pub enum Sense {
+    /// Less-than-or-equal row.
     Le,
+    /// Equality row.
     Eq,
 }
 
 #[derive(Debug, Clone)]
+/// One sparse constraint row.
 pub struct Constraint {
     /// sparse row: (var index, coefficient)
     pub terms: Vec<(usize, f64)>,
+    /// Row sense.
     pub sense: Sense,
+    /// Right-hand side.
     pub rhs: f64,
 }
 
 #[derive(Debug, Clone)]
+/// A bounded-variable LP, maximized by `solve`.
 pub struct Lp {
+    /// Structural variable count.
     pub n: usize,
     /// objective to MAXIMIZE
     pub obj: Vec<f64>,
+    /// Constraint rows.
     pub cons: Vec<Constraint>,
+    /// Per-variable lower bounds.
     pub lower: Vec<f64>,
+    /// Per-variable upper bounds.
     pub upper: Vec<f64>,
 }
 
 #[derive(Debug, Clone, PartialEq)]
+/// Outcome of an LP solve.
 pub enum LpResult {
+    /// Optimal solution vector and objective.
     Optimal { x: Vec<f64>, obj: f64 },
+    /// No feasible point.
     Infeasible,
+    /// Objective unbounded above.
     Unbounded,
 }
 
 impl Lp {
+    /// An LP over `n` variables bounded to [0, 1] by default.
     pub fn new(n: usize) -> Lp {
         Lp { n, obj: vec![0.0; n], cons: vec![], lower: vec![0.0; n], upper: vec![1.0; n] }
     }
 
+    /// Add a `terms . x <= rhs` row.
     pub fn add_le(&mut self, terms: Vec<(usize, f64)>, rhs: f64) {
         self.cons.push(Constraint { terms, sense: Sense::Le, rhs });
     }
 
+    /// Add a `terms . x == rhs` row.
     pub fn add_eq(&mut self, terms: Vec<(usize, f64)>, rhs: f64) {
         self.cons.push(Constraint { terms, sense: Sense::Eq, rhs });
     }
 
+    /// Two-phase primal simplex; maximizes the objective.
     pub fn solve(&self) -> LpResult {
         Simplex::build(self).solve(self)
     }

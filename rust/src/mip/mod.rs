@@ -22,19 +22,28 @@ pub use lp::{Lp, LpResult};
 /// Latency_max; any may be disabled with None).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Constraints {
+    /// Max KV + weight bytes (None = unconstrained).
     pub memory_max_bytes: Option<f64>,
+    /// Min tokens/s under the cost table's scenario.
     pub throughput_min: Option<f64>,
+    /// Max per-request latency in seconds.
     pub latency_max_secs: Option<f64>,
 }
 
 #[derive(Debug, Clone)]
+/// One architecture chosen by the search, with its modeled stats.
 pub struct Solution {
+    /// The chosen architecture.
     pub arch: Arch,
     /// sum of replace-1-block costs (lower = closer to parent)
     pub cost: f64,
+    /// Modeled scenario runtime in seconds.
     pub secs: f64,
+    /// Modeled throughput (tokens/s).
     pub throughput: f64,
+    /// Modeled memory footprint in bytes.
     pub memory: f64,
+    /// Parameter count.
     pub params: f64,
 }
 

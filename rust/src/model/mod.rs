@@ -19,17 +19,25 @@ use crate::weights::Store;
 pub struct BlockWeights {
     /// e.g. "attn_gqa_r2" — exec names are `{prefix}_{mode}`. None = NoOp.
     pub prefix: Option<String>,
+    /// Weight values in manifest order.
     pub vals: Vec<Value>,
+    /// Variant name (for page sizing and reports).
     pub variant: String,
+    /// KV head count (GQA variants; 0 otherwise).
     pub kv_heads: usize,
 }
 
 /// A fully assembled child (or parent) model.
 pub struct CompiledModel {
+    /// The architecture this model realizes.
     pub arch: Arch,
+    /// Per-layer attention subblocks.
     pub attn: Vec<BlockWeights>,
+    /// Per-layer FFN subblocks.
     pub ffn: Vec<BlockWeights>,
+    /// Tied embedding matrix value.
     pub embed: Value,
+    /// Final RMSNorm weight value.
     pub final_norm: Value,
 }
 

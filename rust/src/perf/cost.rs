@@ -16,16 +16,21 @@ use super::hw::HwProfile;
 /// length, batch size.
 #[derive(Debug, Clone, Copy)]
 pub struct Scenario {
+    /// Prefill (prompt) length.
     pub prefill: usize,
+    /// Generated tokens per sequence.
     pub decode: usize,
+    /// Concurrent sequences.
     pub batch: usize,
 }
 
 impl Scenario {
+    /// Short label, e.g. "2048/2048@b64".
     pub fn name(&self) -> String {
         format!("{}/{}@b{}", self.prefill, self.decode, self.batch)
     }
 
+    /// Total tokens processed across the batch.
     pub fn total_tokens(&self) -> usize {
         self.batch * (self.prefill + self.decode)
     }
@@ -149,14 +154,19 @@ pub fn arch_block_cost(man: &Manifest, arch: &Arch) -> BlockCost {
 /// under a scenario + memory terms; plus the fixed embed/head costs.
 #[derive(Debug, Clone)]
 pub struct CostTable {
+    /// Hardware profile the times were costed against.
     pub hw: HwProfile,
+    /// Scenario the times were costed under.
     pub scenario: Scenario,
     /// variant name -> (scenario seconds, param count, kv bytes/seq)
     pub attn: BTreeMap<String, (f64, f64, f64)>,
+    /// FFN variant name -> (scenario seconds, params, kv bytes/seq).
     pub ffn: BTreeMap<String, (f64, f64, f64)>,
     /// embed + head scenario seconds and params (constant per arch)
     pub fixed_secs: f64,
+    /// Embed + head parameter count.
     pub fixed_params: f64,
+    /// Bytes per weight element at the profile's precision.
     pub bytes_per_param: f64,
 }
 
@@ -276,6 +286,7 @@ impl CostTable {
         })
     }
 
+    /// Modeled scenario seconds for a whole architecture.
     pub fn arch_secs(&self, arch: &Arch) -> f64 {
         self.fixed_secs
             + arch
@@ -285,6 +296,7 @@ impl CostTable {
                 .sum::<f64>()
     }
 
+    /// Parameter count of a whole architecture (fixed costs included).
     pub fn arch_params(&self, arch: &Arch) -> f64 {
         self.fixed_params
             + arch
@@ -294,6 +306,7 @@ impl CostTable {
                 .sum::<f64>()
     }
 
+    /// KV-cache bytes per sequence for a whole architecture.
     pub fn arch_kv_bytes_per_seq(&self, arch: &Arch) -> f64 {
         arch.layers.iter().map(|(a, _)| self.attn[&a.name()].2).sum()
     }
@@ -313,6 +326,7 @@ impl CostTable {
         (self.scenario.batch * self.scenario.decode) as f64 / secs
     }
 
+    /// The space's choices as parallel (attn, ffn) vectors (MIP layout).
     pub fn choices(&self, space: &SearchSpace) -> (Vec<AttnChoice>, Vec<FfnChoice>) {
         (space.attn.clone(), space.ffn.clone())
     }

@@ -1,7 +1,9 @@
 //! Hardware roofline profiles.
 
 #[derive(Debug, Clone)]
+/// One accelerator's roofline numbers.
 pub struct HwProfile {
+    /// Profile name (e.g. "h100_fp8").
     pub name: String,
     /// peak dense matmul throughput, FLOP/s, at the working precision
     pub peak_flops: f64,
@@ -79,6 +81,7 @@ impl HwProfile {
         }
     }
 
+    /// Look a built-in profile up by name.
     pub fn by_name(name: &str) -> Option<HwProfile> {
         match name {
             "h100_fp8" => Some(Self::h100_fp8()),

@@ -3,11 +3,14 @@
 //! BLD, scoring) are computed once and shared by every experiment.
 //!
 //! Stage artifacts under `<run_dir>/`:
-//!   parent.pzw          — pretrained parent weights
-//!   library.pzw         — parent + trained block library (after BLD)
-//!   scores_<metric>.json— replace-1-block score table
-//!   arch_<tag>.json     — MIP solutions per constraint slice
-//!   child_<tag>.pzw     — GKD-uptrained child weights
+//!
+//! ```text
+//! parent.pzw           — pretrained parent weights
+//! library.pzw          — parent + trained block library (after BLD)
+//! scores_<metric>.json — replace-1-block score table
+//! arch_<tag>.json      — MIP solutions per constraint slice
+//! child_<tag>.pzw      — GKD-uptrained child weights
+//! ```
 
 use std::path::{Path, PathBuf};
 
@@ -26,15 +29,25 @@ use crate::weights::{store::init_parent, Store};
 use crate::{bld, info};
 
 #[derive(Debug, Clone)]
+/// Per-stage step/lr/size knobs for one pipeline run.
 pub struct StageCfg {
+    /// Parent pretraining steps.
     pub parent_steps: usize,
+    /// Parent pretraining learning rate.
     pub parent_lr: f32,
+    /// BLD steps per job.
     pub bld_steps: usize,
+    /// BLD learning rate.
     pub bld_lr: f32,
+    /// GKD uptraining steps.
     pub gkd_steps: usize,
+    /// GKD learning rate.
     pub gkd_lr: f32,
+    /// Validation batches for replace-1-block scoring.
     pub score_batches: usize,
+    /// Questions per eval benchmark.
     pub eval_questions: usize,
+    /// Master seed (world, data order, inits).
     pub seed: u64,
 }
 
@@ -54,6 +67,7 @@ impl StageCfg {
         }
     }
 
+    /// `fast` with the training-step counts scaled by `mult`.
     pub fn scaled(mult: f64) -> StageCfg {
         let f = StageCfg::fast();
         StageCfg {
@@ -65,21 +79,30 @@ impl StageCfg {
     }
 }
 
+/// Stage orchestrator: backend + run directory + stage config.
 pub struct Pipeline {
     /// Owned backend handle; clone it to hand engines their own copy.
     pub be: SharedBackend,
+    /// Run directory holding stage checkpoints.
     pub run_dir: PathBuf,
+    /// The synthetic data world.
     pub world: World,
+    /// Training corpus mix.
     pub mix: CorpusMix,
+    /// Stage knobs.
     pub cfg: StageCfg,
 }
 
 /// A parent/child weight+arch pair ready for speculative serving: the
 /// Puzzle child drafts, the parent verifies.
 pub struct SpecPair {
+    /// Parent (verifier) weights.
     pub parent_store: Store,
+    /// Parent architecture.
     pub parent_arch: Arch,
+    /// Drafter weights (GKD-uptrained).
     pub child_store: Store,
+    /// Drafter architecture.
     pub child_arch: Arch,
 }
 
@@ -96,6 +119,7 @@ fn arch_fingerprint(arch: &Arch) -> String {
 }
 
 impl Pipeline {
+    /// A pipeline over `be`, checkpointing into `run_dir`.
     pub fn new(be: SharedBackend, run_dir: &Path, cfg: StageCfg) -> Result<Pipeline> {
         std::fs::create_dir_all(run_dir)?;
         let world = World::new(cfg.seed, be.man().cfg.v as u32);
@@ -108,11 +132,13 @@ impl Pipeline {
         })
     }
 
+    /// A training-data stream whose seed mixes in `seed_tag`.
     pub fn batcher(&self, seed_tag: u64) -> Batcher {
         let c = &self.be.man().cfg;
         Batcher::new(self.world.clone(), self.mix.clone(), c.b_train, c.s_train, self.cfg.seed ^ seed_tag)
     }
 
+    /// `n` deterministic validation batches (fixed seed tag).
     pub fn val_batches(&self, n: usize) -> Vec<crate::data::Batch> {
         let mut b = self.batcher(0x7a1);
         (0..n).map(|_| b.next_batch()).collect()
@@ -278,6 +304,7 @@ impl Pipeline {
         CostTable::modeled(self.be.man(), &hw, &sc)
     }
 
+    /// Persist a search solution as `arch_<tag>.json` in the run dir.
     pub fn save_arch(&self, tag: &str, sol: &Solution) -> Result<()> {
         let j = Json::from_pairs(vec![
             ("arch", sol.arch.to_json()),

@@ -24,13 +24,19 @@ use crate::config::Manifest;
 
 use super::value::Value;
 
+/// Per-executable call accounting kept by every backend.
 #[derive(Debug, Clone, Default)]
 pub struct ExecStats {
+    /// Number of completed `run` calls.
     pub calls: u64,
+    /// Total wall-clock seconds across all calls.
     pub total_secs: f64,
+    /// Seconds spent compiling/lowering (PJRT only; 0 on the interpreter).
     pub compile_secs: f64,
 }
 
+/// The pluggable execution backend. See the module docs for the
+/// executable contract and DESIGN.md for the full name grammar.
 pub trait Backend {
     /// Human-readable backend identifier ("ref", "pjrt", ...).
     fn name(&self) -> &'static str;
@@ -41,6 +47,30 @@ pub trait Backend {
 
     /// Execute by name; returns the decomposed tuple outputs.
     fn run(&self, name: &str, inputs: &[&Value]) -> Result<Vec<Value>>;
+
+    /// Fused multi-token decode: execute the *decode-mode* executable
+    /// `name` over `m >= 1` new positions per batch lane in ONE pass —
+    /// the physical form of speculative verification (prefill-style
+    /// attention over the new positions against the existing cache).
+    ///
+    /// Shape contract (the decode contract with the position axis widened
+    /// from 1 to `m`; `m` is read from the inputs, not the manifest):
+    ///  * `embed_decode`: `(tokens i32 [b, m], E)` -> `(x [b, m, d])`
+    ///  * `attn_{v}_decode` (GQA): `(x [b, m, d], k_cache, v_cache,
+    ///    pos i32 [b], *weights)` -> `(y, k_cache', v_cache')`, where
+    ///    `pos[i]` is lane i's FIRST new position: the roped K/V of lane
+    ///    i's j-th token is written at `pos[i] + j` and its query attends
+    ///    over cache positions `<= pos[i] + j`;
+    ///  * linear attention / FFN / `head_decode`: token-wise, same inputs
+    ///    as decode with the widened `x`.
+    ///
+    /// Returns `Ok(None)` when the backend cannot fuse (the default), in
+    /// which case the caller must lower the pass to `m` sequential decode
+    /// steps — the two lowerings must produce identical logits.
+    fn run_fused(&self, name: &str, inputs: &[&Value]) -> Result<Option<Vec<Value>>> {
+        let _ = (name, inputs);
+        Ok(None)
+    }
 
     /// Measured mean runtime per call for `name` (seconds); None if never
     /// run. The "measured on target hardware" cost source.
@@ -74,6 +104,7 @@ pub trait Backend {
 #[cfg(not(feature = "pjrt"))]
 pub type SharedBackend = std::sync::Arc<dyn Backend + Send + Sync>;
 #[cfg(feature = "pjrt")]
+/// The pjrt-feature handle: single-threaded `Rc` (see above).
 pub type SharedBackend = std::rc::Rc<dyn Backend>;
 
 /// Wrap a concrete backend in the build's `SharedBackend` handle.
@@ -82,6 +113,7 @@ pub fn share(be: impl Backend + Send + Sync + 'static) -> SharedBackend {
     std::sync::Arc::new(be)
 }
 #[cfg(feature = "pjrt")]
+/// Wrap a concrete backend in the build's `SharedBackend` handle.
 pub fn share(be: impl Backend + 'static) -> SharedBackend {
     std::rc::Rc::new(be)
 }

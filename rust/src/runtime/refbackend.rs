@@ -25,12 +25,16 @@ use crate::tensor::Tensor;
 use super::backend::{Backend, ExecStats};
 use super::value::Value;
 
+/// Hermetic pure-Rust interpreter of the manifest's block executables
+/// (see the module docs); the default backend for tests, CI, and demos.
 pub struct RefBackend {
     man: Manifest,
     stats: Mutex<HashMap<String, ExecStats>>,
 }
 
 impl RefBackend {
+    /// Build an interpreter over `man` (usually `Manifest::synthetic` or
+    /// an `artifacts/` manifest; no weights are loaded here).
     pub fn new(man: Manifest) -> RefBackend {
         debug_assert!(man.cfg.head_dim % 2 == 0, "RoPE needs an even head_dim");
         RefBackend { man, stats: Mutex::new(HashMap::new()) }
@@ -201,6 +205,54 @@ impl RefBackend {
             _ => bail!("exec {name}: unsupported mode {mode}"),
         }
     }
+
+    /// Fused multi-token dispatch (`Backend::run_fused`): shapes come
+    /// from the inputs, not the manifest, since the new-position count
+    /// `m` varies per call. GQA decode gets a dedicated fused kernel;
+    /// every other decode-mode executable (embed, head, FFN, linear
+    /// attention) is token-wise and reuses the plain interpreter, which
+    /// already derives its shapes from the inputs.
+    fn dispatch_fused(&self, name: &str, inputs: &[&Value]) -> Result<Vec<Value>> {
+        let cfg = &self.man.cfg;
+        if !name.ends_with("_decode") {
+            bail!("fused execution is defined for decode-mode executables only, got {name}");
+        }
+        if let Some(rest) = name.strip_prefix("attn_") {
+            let (variant, _) = split_mode(rest)
+                .ok_or_else(|| anyhow!("exec {name}: cannot split variant/mode"))?;
+            if variant != "linear" {
+                let layout = self
+                    .man
+                    .attn_variants
+                    .get(variant)
+                    .ok_or_else(|| anyhow!("exec {name}: unknown variant {variant}"))?;
+                let nw = layout.weights.len();
+                if inputs.len() != 4 + nw {
+                    bail!("fused exec {name}: expected {} inputs, got {}", 4 + nw, inputs.len());
+                }
+                let x = inputs[0].as_f32()?;
+                let kc = inputs[1].as_f32()?;
+                let vc = inputs[2].as_f32()?;
+                let pos = inputs[3].as_i32()?;
+                let w: Vec<&Tensor> =
+                    inputs[4..4 + nw].iter().map(|v| v.as_f32()).collect::<Result<_>>()?;
+                let (y, kc2, vc2) = attn_gqa_decode_fused(
+                    cfg.n_heads,
+                    cfg.head_dim,
+                    layout.kv_heads,
+                    x,
+                    kc,
+                    vc,
+                    pos,
+                    &w,
+                    cfg.eps as f32,
+                    cfg.rope_theta as f32,
+                )?;
+                return Ok(vec![Value::F32(y), Value::F32(kc2), Value::F32(vc2)]);
+            }
+        }
+        self.dispatch(name, inputs)
+    }
 }
 
 impl Backend for RefBackend {
@@ -221,6 +273,19 @@ impl Backend for RefBackend {
         entry.calls += 1;
         entry.total_secs += t0.elapsed().as_secs_f64();
         Ok(out)
+    }
+
+    fn run_fused(&self, name: &str, inputs: &[&Value]) -> Result<Option<Vec<Value>>> {
+        let t0 = Instant::now();
+        let out =
+            self.dispatch_fused(name, inputs).with_context(|| format!("ref fused exec {name}"))?;
+        // stats under a distinct key so fused passes are visible next to
+        // the per-step decode numbers they amortize
+        let mut st = self.stats.lock().unwrap();
+        let entry = st.entry(format!("{name}__fused")).or_default();
+        entry.calls += 1;
+        entry.total_secs += t0.elapsed().as_secs_f64();
+        Ok(Some(out))
     }
 
     fn measured_secs(&self, name: &str) -> Option<f64> {
@@ -664,6 +729,88 @@ fn attn_gqa_decode(
         }
     }
     let proj = matmul(&o, &w[4].data, b, qd, d);
+    let y = add_vec(&x.data, &proj);
+    Ok((Tensor::from_vec(&x.shape, y), kc2, vc2))
+}
+
+/// Fused multi-token cached GQA decode: `x` is `[b, m, d]` — `m` new
+/// tokens per lane, lane `bi`'s j-th token at cache position
+/// `pos[bi] + j` — writing all roped K/V rows first and then attending
+/// each query over cache positions `<= pos[bi] + j` (prefill-style
+/// attention against the existing cache). Arithmetic per row is
+/// identical to `m` sequential `attn_gqa_decode` steps, so the fused and
+/// sequential lowerings agree bitwise.
+///
+/// Rows that would land at or past the cache horizon are dropped and
+/// their queries clamped to the last row: callers validate real feeds,
+/// so out-of-range rows only come from parked/padded lanes whose output
+/// is discarded and whose frontier rows are dead by the masking rule.
+#[allow(clippy::too_many_arguments)]
+fn attn_gqa_decode_fused(
+    h: usize,
+    dh: usize,
+    kv: usize,
+    x: &Tensor,
+    kc: &Tensor,
+    vc: &Tensor,
+    pos: &[i32],
+    w: &[&Tensor],
+    eps: f32,
+    theta: f32,
+) -> Result<(Tensor, Tensor, Tensor)> {
+    let (b, m, d) = (x.shape[0], x.shape[1], x.shape[2]);
+    let smax = kc.shape[1];
+    if pos.len() != b {
+        bail!("fused decode: {} positions for batch {b}", pos.len());
+    }
+    let t = b * m;
+    let qd = h * dh;
+    let hn = rmsnorm_fwd(&x.data, &w[0].data, d, eps);
+    let mut qf = matmul(&hn, &w[1].data, t, d, qd);
+    let mut kf = matmul(&hn, &w[2].data, t, d, kv * dh);
+    let vf = matmul(&hn, &w[3].data, t, d, kv * dh);
+    // one rotary position per row: lane bi's j-th token sits at pos[bi]+j
+    let positions: Vec<f32> = (0..t).map(|r| (pos[r / m] as usize + r % m) as f32).collect();
+    rope(&mut qf, &positions, h, dh, theta, 1.0);
+    rope(&mut kf, &positions, kv, dh, theta, 1.0);
+    let mut kc2 = kc.clone();
+    let mut vc2 = vc.clone();
+    let row = kv * dh;
+    for bi in 0..b {
+        for j in 0..m {
+            let p = pos[bi] as usize + j;
+            if p >= smax {
+                continue; // padded/parked overflow: dropped, never read
+            }
+            let src = (bi * m + j) * row;
+            let dst = (bi * smax + p) * row;
+            kc2.data[dst..dst + row].copy_from_slice(&kf[src..src + row]);
+            vc2.data[dst..dst + row].copy_from_slice(&vf[src..src + row]);
+        }
+    }
+    // attend each new position over the cache, masked at that position —
+    // same softmax row as the sequential step, new K/V already in place
+    let group = h / kv;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut o = vec![0f32; t * qd];
+    let mut p_row = vec![0f32; smax];
+    for bi in 0..b {
+        for j in 0..m {
+            let pmax = (pos[bi] as usize + j).min(smax - 1);
+            for hi in 0..h {
+                let g = hi / group;
+                let qoff = (bi * m + j) * qd + hi * dh;
+                softmax_row_causal(&qf, &kc2.data, &mut p_row, bi, smax, kv, dh, g, pmax, qoff, scale);
+                for (ki, &pk) in p_row.iter().enumerate().take(pmax + 1) {
+                    let voff = ((bi * smax + ki) * kv + g) * dh;
+                    for jj in 0..dh {
+                        o[qoff + jj] += pk * vc2.data[voff + jj];
+                    }
+                }
+            }
+        }
+    }
+    let proj = matmul(&o, &w[4].data, t, qd, d);
     let y = add_vec(&x.data, &proj);
     Ok((Tensor::from_vec(&x.shape, y), kc2, vc2))
 }

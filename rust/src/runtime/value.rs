@@ -10,12 +10,16 @@ use anyhow::{anyhow, Result};
 use crate::tensor::Tensor;
 
 #[derive(Debug, Clone, PartialEq)]
+/// A host-resident dense array: f32 tensor or i32 buffer.
 pub enum Value {
+    /// Dense f32 tensor (activations, weights, caches, logits).
     F32(Tensor),
+    /// Dense i32 buffer with an explicit shape (token ids, positions).
     I32 { shape: Vec<usize>, data: Vec<i32> },
 }
 
 impl Value {
+    /// The value's shape.
     pub fn shape(&self) -> &[usize] {
         match self {
             Value::F32(t) => &t.shape,
@@ -23,10 +27,12 @@ impl Value {
         }
     }
 
+    /// Total element count.
     pub fn numel(&self) -> usize {
         self.shape().iter().product()
     }
 
+    /// Manifest dtype string ("float32" / "int32").
     pub fn dtype_name(&self) -> &'static str {
         match self {
             Value::F32(_) => "float32",
@@ -34,6 +40,7 @@ impl Value {
         }
     }
 
+    /// Borrow as an f32 tensor; errors on i32 values.
     pub fn as_f32(&self) -> Result<&Tensor> {
         match self {
             Value::F32(t) => Ok(t),
@@ -50,6 +57,7 @@ impl Value {
         }
     }
 
+    /// Borrow as an i32 slice; errors on f32 values.
     pub fn as_i32(&self) -> Result<&[i32]> {
         match self {
             Value::I32 { data, .. } => Ok(data),
@@ -74,14 +82,17 @@ pub fn val_i32(shape: &[usize], data: &[i32]) -> Result<Value> {
     Ok(Value::I32 { shape: shape.to_vec(), data: data.to_vec() })
 }
 
+/// Wrap a tensor as an f32 value (clones the data).
 pub fn tensor_to_val(t: &Tensor) -> Result<Value> {
     Ok(Value::F32(t.clone()))
 }
 
+/// Unwrap an f32 value into a tensor (clones the data).
 pub fn val_to_tensor(v: &Value) -> Result<Tensor> {
     Ok(v.as_f32()?.clone())
 }
 
+/// Unwrap an f32 value into a flat vec (clones the data).
 pub fn val_to_vec_f32(v: &Value) -> Result<Vec<f32>> {
     Ok(v.as_f32()?.data.clone())
 }

@@ -24,6 +24,7 @@ use crate::util::Json;
 use crate::weights::Store;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Distance metric for replace-1-block scoring.
 pub enum Metric {
     /// KL(parent || replaced) on validation logits — lower is better.
     Kl,
@@ -35,15 +36,19 @@ pub enum Metric {
 /// Parent variants score ~0 by construction under KL.
 #[derive(Debug, Clone, Default)]
 pub struct ScoreTable {
+    /// (layer, "kind:variant") -> cost; lower = better block.
     pub scores: BTreeMap<(usize, String), f64>,
+    /// Which metric produced the scores.
     pub metric_name: String,
 }
 
+/// Canonical "kind:variant" key used in the table.
 pub fn variant_key(kind: &str, name: &str) -> String {
     format!("{kind}:{name}")
 }
 
 impl ScoreTable {
+    /// One block's score (0.0 when absent, e.g. parent variants).
     pub fn get(&self, layer: usize, kind: &str, name: &str) -> f64 {
         *self
             .scores
@@ -51,6 +56,7 @@ impl ScoreTable {
             .unwrap_or(&0.0)
     }
 
+    /// Set one block's score.
     pub fn set(&mut self, layer: usize, kind: &str, name: &str, v: f64) {
         self.scores.insert((layer, variant_key(kind, name)), v);
     }
@@ -83,6 +89,7 @@ impl ScoreTable {
         }
     }
 
+    /// Serialize as {metric, scores: [{layer, variant, score}]}.
     pub fn to_json(&self) -> Json {
         let mut arr = Vec::new();
         for ((l, k), v) in &self.scores {
@@ -98,6 +105,7 @@ impl ScoreTable {
         ])
     }
 
+    /// Parse the `to_json` form; None on malformed input.
     pub fn from_json(j: &Json) -> Option<ScoreTable> {
         let mut t = ScoreTable {
             metric_name: j.get("metric")?.as_str()?.to_string(),

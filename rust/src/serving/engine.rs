@@ -47,23 +47,29 @@ use super::scheduler::{QueueView, Scheduler, SchedulerKind};
 /// A generation request: prompt plus per-request generation policy.
 #[derive(Debug, Clone)]
 pub struct GenRequest {
+    /// Prompt token ids (non-empty).
     pub prompt: Vec<u32>,
+    /// Maximum generated tokens (>= 1).
     pub max_new: usize,
     /// Larger = more urgent; only the `Priority` scheduler looks at it.
     pub priority: i32,
+    /// Per-request sampling policy.
     pub sampling: SamplingParams,
 }
 
 impl GenRequest {
+    /// A default-priority greedy request.
     pub fn new(prompt: Vec<u32>, max_new: usize) -> GenRequest {
         GenRequest { prompt, max_new, priority: 0, sampling: SamplingParams::greedy() }
     }
 
+    /// Override the scheduling priority.
     pub fn with_priority(mut self, priority: i32) -> GenRequest {
         self.priority = priority;
         self
     }
 
+    /// Override the sampling policy.
     pub fn with_sampling(mut self, sampling: SamplingParams) -> GenRequest {
         self.sampling = sampling;
         self
@@ -91,6 +97,7 @@ pub enum FinishReason {
 }
 
 impl FinishReason {
+    /// Stable lowercase label (metrics, CLI output).
     pub fn as_str(&self) -> &'static str {
         match self {
             FinishReason::Eos => "eos",
@@ -107,21 +114,42 @@ impl FinishReason {
 /// `submit` for requests that never enter the queue.
 #[derive(Debug, Clone, PartialEq)]
 pub enum StreamEvent {
+    /// One generated token of request `id`.
     Token { id: u64, tok: u32 },
+    /// Request `id` reached a terminal state (exactly once per id).
     Finished { id: u64, reason: FinishReason },
+    /// Submit-time validation refused the request.
     Rejected { id: u64, cause: String },
 }
 
 #[derive(Debug, Clone)]
+/// A finished request's output and latency record.
 pub struct Response {
+    /// Request id from `submit`.
     pub id: u64,
+    /// Generated tokens (prompt excluded).
     pub tokens: Vec<u32>,
+    /// Why generation stopped.
     pub finish: FinishReason,
+    /// Time to first generated token, seconds.
     pub ttft_secs: f64,
+    /// Submit-to-finish latency, seconds.
     pub e2e_secs: f64,
 }
 
 /// Engine construction parameters (replaces the v1 positional args).
+///
+/// ```
+/// use puzzle::serving::{EngineConfig, SchedulerKind};
+/// let cfg = EngineConfig::new()
+///     .kv_budget_bytes(32 << 20)
+///     .page_len(8)
+///     .max_queue(64)
+///     .scheduler(SchedulerKind::Priority);
+/// assert_eq!(cfg.page_len, 8);
+/// assert_eq!(cfg.scheduler, SchedulerKind::Priority);
+/// assert!(cfg.fused_verify, "fused multi-token decode is on by default");
+/// ```
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
     /// Total byte budget of the paged KV pool.
@@ -130,7 +158,13 @@ pub struct EngineConfig {
     pub page_len: usize,
     /// Max waiting requests before `submit` rejects.
     pub max_queue: usize,
+    /// Admission policy for the waiting queue.
     pub scheduler: SchedulerKind,
+    /// Use the backend's fused multi-token decode for speculative
+    /// extensions when it offers one (`Backend::run_fused`); off forces
+    /// the sequential-decode lowering (the two produce identical logits —
+    /// asserted in the integration tests).
+    pub fused_verify: bool,
 }
 
 impl Default for EngineConfig {
@@ -140,32 +174,46 @@ impl Default for EngineConfig {
             page_len: 16,
             max_queue: 1024,
             scheduler: SchedulerKind::Fifo,
+            fused_verify: true,
         }
     }
 }
 
 impl EngineConfig {
+    /// Default configuration (64 MiB KV pool, 16-position pages, FIFO).
     pub fn new() -> EngineConfig {
         EngineConfig::default()
     }
 
+    /// Set the total byte budget of the paged KV pool.
     pub fn kv_budget_bytes(mut self, bytes: usize) -> EngineConfig {
         self.kv_budget_bytes = bytes;
         self
     }
 
+    /// Set the number of positions per KV page.
     pub fn page_len(mut self, page_len: usize) -> EngineConfig {
         self.page_len = page_len;
         self
     }
 
+    /// Set the queue depth beyond which `submit` rejects.
     pub fn max_queue(mut self, max_queue: usize) -> EngineConfig {
         self.max_queue = max_queue;
         self
     }
 
+    /// Choose the admission scheduler.
     pub fn scheduler(mut self, kind: SchedulerKind) -> EngineConfig {
         self.scheduler = kind;
+        self
+    }
+
+    /// Enable/disable the fused multi-token decode path for speculative
+    /// extensions (on by default; disabling forces the sequential
+    /// lowering, which is useful for equivalence tests and benchmarks).
+    pub fn fused_verify(mut self, fused: bool) -> EngineConfig {
+        self.fused_verify = fused;
         self
     }
 
@@ -195,14 +243,29 @@ struct Slot {
     t_first: Option<Instant>,
 }
 
-/// A single-sequence speculative handle: the KV lane it pins and its
-/// committed write position. Speculative sequences are driven externally
-/// (`specdec::SpecSession`) through `spec_open` / `spec_extend` /
-/// `spec_truncate`, never by the batched `step()` loop.
+/// A speculative sequence handle: the KV lane it pins and its committed
+/// write position. Speculative sequences are driven externally
+/// (`specdec::SpecBatch` / `specdec::SpecSession`) through `spec_open` /
+/// `spec_extend_batch` / `spec_truncate`, never by the batched `step()`
+/// loop; up to `b_decode` of them share the decode lanes.
 struct SpecSlot {
     id: u64,
     /// next cache position to write (== positions teacher-forced so far)
     len: usize,
+}
+
+/// One entry of a batched teacher-forced extension
+/// (`Engine::spec_extend_batch`): which speculative sequence to extend,
+/// the tokens to feed, and from which token index logits are wanted.
+#[derive(Debug, Clone, Copy)]
+pub struct SpecFeed<'a> {
+    /// Speculative sequence handle returned by `spec_open`.
+    pub id: u64,
+    /// Tokens to teacher-force, in order (must be non-empty).
+    pub tokens: &'a [u32],
+    /// Collect the post-token logits row from this token index on
+    /// (`tokens.len()` collects nothing, `0` collects every row).
+    pub collect_from: usize,
 }
 
 /// Per-layer decode cache (gqa layers only).
@@ -221,6 +284,8 @@ struct LayerExecs {
     ffn_decode: Option<String>,
 }
 
+/// The continuous-batching inference engine (see the module docs for
+/// the lifecycle, and DESIGN.md §4-§6 for the serving API contract).
 pub struct Engine {
     be: SharedBackend,
     cfg: EngineConfig,
@@ -236,6 +301,7 @@ pub struct Engine {
     execs: Vec<LayerExecs>,
     paged: PagedKvManager,
     events: Vec<StreamEvent>,
+    /// Engine-level counters and latency records.
     pub metrics: EngineMetrics,
     finished: Vec<Response>,
     next_id: u64,
@@ -384,6 +450,7 @@ impl Engine {
         self.slots.iter().filter(|s| s.is_some()).count()
     }
 
+    /// Number of waiting requests.
     pub fn queue_len(&self) -> usize {
         self.queue.len()
     }
@@ -393,6 +460,7 @@ impl Engine {
         self.queue.is_empty() && self.active() == 0
     }
 
+    /// Name of the configured admission scheduler.
     pub fn scheduler_name(&self) -> &'static str {
         self.sched.name()
     }
@@ -402,6 +470,7 @@ impl Engine {
         self.paged.allocated_bytes()
     }
 
+    /// Sequences currently holding KV pages.
     pub fn kv_active_seqs(&self) -> usize {
         self.paged.active_seqs()
     }
@@ -590,8 +659,8 @@ impl Engine {
 
     /// One decode forward over the full compiled batch: embed -> blocks
     /// (updating the dense caches in place) -> optionally the LM head.
-    /// Shared by the batched `decode_step` and the single-lane speculative
-    /// paths; `execute_secs` accrues here.
+    /// Shared by the batched `decode_step` and the speculative sequential
+    /// lowering; `execute_secs` accrues here.
     fn decode_forward(&mut self, tokens: &[i32], pos: &[i32], with_head: bool) -> Result<Option<Tensor>> {
         let bd = tokens.len();
         let tok = val_i32(&[bd, 1], tokens)?;
@@ -769,18 +838,34 @@ impl Engine {
         Ok(self.take_finished())
     }
 
-    // ---- speculative-decoding API (`specdec::SpecSession` drives it) ----
+    // ---- speculative-decoding API (`specdec::SpecBatch` drives it) ----
     //
-    // A speculative sequence is a single-lane, externally driven sequence:
-    // nothing is sampled inside the engine, every token is teacher-forced,
-    // and the caller reads raw logits rows. The three primitives —
-    // `spec_open` (prefill), `spec_extend` (teacher-forced multi-token
-    // pass), `spec_truncate` (KV rollback) — are exactly the draft /
-    // verify / rollback state machine of DESIGN.md §5.
+    // A speculative sequence is an externally driven sequence: nothing is
+    // sampled inside the engine, every token is teacher-forced, and the
+    // caller reads raw logits rows. The primitives — `spec_open`
+    // (prefill), `spec_extend_batch` (teacher-forced multi-token pass
+    // over any subset of the open sequences), `spec_truncate` (KV
+    // rollback) — are exactly the draft / verify / rollback state machine
+    // of DESIGN.md §5/§6. Up to `b_decode` speculative sequences share
+    // the decode lanes; lanes not named by a call are *parked*: they are
+    // fed a dummy token at their own frontier position, whose K/V write
+    // lands past their committed stream and is dead by the masking rule
+    // (per-lane garbage-write isolation).
 
     /// Compiled cache horizon `s_max` (exposed for speculative drivers).
     pub fn cache_horizon(&self) -> usize {
         self.be.man().cfg.s_max
+    }
+
+    /// Number of decode lanes (`b_decode`) — the maximum concurrent
+    /// speculative sequences an engine can hold open.
+    pub fn decode_lanes(&self) -> usize {
+        self.be.man().cfg.b_decode
+    }
+
+    /// Number of speculative sequences currently holding a lane.
+    pub fn spec_active(&self) -> usize {
+        self.spec.iter().filter(|s| s.is_some()).count()
     }
 
     fn spec_lane(&self, id: u64) -> Result<usize> {
@@ -815,12 +900,11 @@ impl Engine {
                 s_max
             ));
         }
-        // exclusivity both ways (see `submit`): a speculative forward
-        // writes garbage K/V into the other lanes' position 0, so it must
-        // not coexist with batched slots or a second speculative sequence
-        if self.spec.iter().any(Option::is_some) {
-            return Err(anyhow!("spec_open: engine already serves a speculative sequence"));
-        }
+        // exclusivity with the batched mode (see `submit`): a batched
+        // decode step would teacher-force garbage into speculative lanes'
+        // position 0. Multiple speculative sequences DO coexist — the
+        // spec-path forwards park every unfed live lane at its own
+        // frontier, so their committed K/V is never touched.
         if self.active() > 0 || !self.queue.is_empty() {
             return Err(anyhow!("spec_open: engine has batched requests in flight"));
         }
@@ -873,36 +957,252 @@ impl Engine {
         Ok((id, logits.data[rowbase..rowbase + v].to_vec()))
     }
 
-    /// Teacher-force `tokens` through single-lane decode steps — the
-    /// multi-token verify pass (and the child's catch-up/draft steps).
-    /// Returns the logits row after each token from index `collect_from`
-    /// on; head matmuls for earlier positions are skipped. KV pages grow
-    /// per position and the pool rejects exhaustion cleanly.
+    /// Teacher-force `tokens` through one speculative sequence — the
+    /// single-sequence convenience over `spec_extend_batch`. Returns the
+    /// logits row after each token from index `collect_from` on.
     pub fn spec_extend(&mut self, id: u64, tokens: &[u32], collect_from: usize) -> Result<Vec<Vec<f32>>> {
+        let mut rows = self.spec_extend_batch(&[SpecFeed { id, tokens, collect_from }])?;
+        Ok(rows.pop().unwrap())
+    }
+
+    /// Teacher-force every feed's tokens through its speculative sequence
+    /// in lockstep — the multi-token verify pass (and the drafters'
+    /// catch-up/draft steps), shared by all open speculative sequences.
+    ///
+    /// When the backend offers a fused multi-token decode
+    /// (`Backend::run_fused`) and `EngineConfig::fused_verify` is on, the
+    /// whole batch runs as ONE forward chain over the widest feed;
+    /// otherwise it lowers to one decode forward per token index. The two
+    /// lowerings produce identical logits.
+    ///
+    /// Isolation rule: lanes not named by a feed — other live speculative
+    /// sequences, or lanes a short feed has finished with — are parked at
+    /// their own frontier position, so their garbage K/V writes land past
+    /// their committed stream where the masking rule makes them dead.
+    /// Logits rows are returned per feed in call order; KV pages for
+    /// every fed position are grown up front and handed back exactly if
+    /// the pool cannot hold them all (all-or-nothing).
+    pub fn spec_extend_batch(&mut self, feeds: &[SpecFeed]) -> Result<Vec<Vec<Vec<f32>>>> {
         let mcfg = &self.be.man().cfg;
         let (bd, v, s_max) = (mcfg.b_decode, mcfg.v, mcfg.s_max);
-        let lane = self.spec_lane(id)?;
-        let mut rows = Vec::with_capacity(tokens.len().saturating_sub(collect_from));
-        for (i, &t) in tokens.iter().enumerate() {
-            let len = self.spec[lane].as_ref().unwrap().len;
-            if len >= s_max {
-                return Err(anyhow!("spec_extend: sequence at the cache horizon s_max={s_max}"));
-            }
-            if !self.paged.grow(id) {
-                return Err(anyhow!("spec_extend: KV budget exhausted"));
-            }
-            let mut toks = vec![0i32; bd];
-            let mut pos = vec![0i32; bd];
-            toks[lane] = t as i32;
-            pos[lane] = len as i32;
-            let logits = self.decode_forward(&toks, &pos, i >= collect_from)?;
-            if let Some(l) = logits {
-                rows.push(l.data[lane * v..(lane + 1) * v].to_vec());
-            }
-            self.spec[lane].as_mut().unwrap().len = len + 1;
-            self.metrics.spec_steps += 1;
+        if feeds.is_empty() {
+            return Ok(Vec::new());
         }
-        Ok(rows)
+        // resolve + validate every feed before touching any state
+        let mut lanes = Vec::with_capacity(feeds.len());
+        let mut starts = Vec::with_capacity(feeds.len());
+        for f in feeds {
+            let lane = self.spec_lane(f.id)?;
+            if lanes.contains(&lane) {
+                return Err(anyhow!("spec_extend_batch: duplicate sequence {}", f.id));
+            }
+            if f.tokens.is_empty() {
+                return Err(anyhow!("spec_extend_batch: empty token feed for sequence {}", f.id));
+            }
+            let len = self.spec[lane].as_ref().unwrap().len;
+            if len + f.tokens.len() > s_max {
+                return Err(anyhow!(
+                    "spec_extend_batch: sequence {} would pass the cache horizon s_max={s_max}",
+                    f.id
+                ));
+            }
+            lanes.push(lane);
+            starts.push(len);
+        }
+        // exact page accounting, all-or-nothing: grow every fed position
+        // up front; on exhaustion hand back exactly what this call grew
+        for (i, f) in feeds.iter().enumerate() {
+            for _ in 0..f.tokens.len() {
+                if !self.paged.grow(f.id) {
+                    for (g, &s) in feeds.iter().zip(&starts).take(i + 1) {
+                        self.paged.truncate(g.id, s);
+                    }
+                    return Err(anyhow!("spec_extend_batch: KV budget exhausted"));
+                }
+            }
+        }
+        let res = if self.cfg.fused_verify {
+            self.spec_forward_fused(feeds, &lanes, &starts, bd, v, s_max)
+        } else {
+            Ok(None)
+        };
+        let res = match res {
+            Ok(Some(rows)) => Ok(rows),
+            Ok(None) => self.spec_forward_sequential(feeds, &lanes, bd, v, s_max),
+            Err(e) => Err(e),
+        };
+        match res {
+            Ok(rows) => Ok(rows),
+            Err(e) => {
+                // restore the pre-call invariant (pages == committed len)
+                for (f, &lane) in feeds.iter().zip(&lanes) {
+                    let len = self.spec[lane].as_ref().unwrap().len;
+                    self.paged.truncate(f.id, len);
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// The fused lowering of `spec_extend_batch`: one decode-shaped
+    /// forward chain over `[bd, m]` tokens (`m` = widest feed), with
+    /// per-lane start positions. Returns `Ok(None)` when the backend
+    /// does not fuse (callers fall back to the sequential lowering).
+    fn spec_forward_fused(
+        &mut self,
+        feeds: &[SpecFeed],
+        lanes: &[usize],
+        starts: &[usize],
+        bd: usize,
+        v: usize,
+        s_max: usize,
+    ) -> Result<Option<Vec<Vec<Vec<f32>>>>> {
+        let m = feeds.iter().map(|f| f.tokens.len()).max().unwrap();
+        // parked baseline: live lanes at their own frontier, free lanes at 0
+        let mut pos = vec![0i32; bd];
+        for (lane, p) in pos.iter_mut().enumerate() {
+            if let Some(s) = &self.spec[lane] {
+                *p = s.len.min(s_max - 1) as i32;
+            }
+        }
+        let mut toks = vec![0i32; bd * m];
+        for ((f, &lane), &start) in feeds.iter().zip(lanes).zip(starts) {
+            pos[lane] = start as i32;
+            for (j, &t) in f.tokens.iter().enumerate() {
+                toks[lane * m + j] = t as i32;
+            }
+        }
+        let tok = val_i32(&[bd, m], &toks)?;
+        let pos_val = val_i32(&[bd], &pos)?;
+        let t_exec = Instant::now();
+        let Some(mut out) = self.be.run_fused("embed_decode", &[&tok, &self.model.embed])? else {
+            return Ok(None);
+        };
+        let mut x = out.remove(0);
+        for l in 0..self.model.attn.len() {
+            let blk = &self.model.attn[l];
+            match &self.execs[l].attn_decode {
+                None => {}
+                Some(exec) => {
+                    if let Some(cache) = &mut self.caches[l] {
+                        let mut inputs: Vec<&Value> = vec![&x, &cache.k, &cache.v, &pos_val];
+                        inputs.extend(blk.vals.iter());
+                        let mut out = fused_step(&self.be, exec, &inputs)?;
+                        x = out.remove(0);
+                        cache.v = out.pop().unwrap();
+                        cache.k = out.pop().unwrap();
+                    } else {
+                        let mut inputs: Vec<&Value> = vec![&x];
+                        inputs.extend(blk.vals.iter());
+                        x = fused_step(&self.be, exec, &inputs)?.remove(0);
+                    }
+                }
+            }
+            let blk = &self.model.ffn[l];
+            if let Some(exec) = &self.execs[l].ffn_decode {
+                let mut inputs: Vec<&Value> = vec![&x];
+                inputs.extend(blk.vals.iter());
+                x = fused_step(&self.be, exec, &inputs)?.remove(0);
+            }
+        }
+        // the vocab-sized head runs only over the rows actually collected
+        // (mirrors the sequential lowering, which skips non-collecting
+        // steps): gather those hidden rows, one head call, scatter back.
+        // The head is token-wise, so the gathered rows are bitwise
+        // identical to a full-width head pass.
+        let mut need: Vec<(usize, usize)> = Vec::new(); // (feed index, j)
+        for (fi, f) in feeds.iter().enumerate() {
+            for j in f.collect_from..f.tokens.len() {
+                need.push((fi, j));
+            }
+        }
+        let logits = if need.is_empty() {
+            None
+        } else {
+            let xt = x.as_f32()?;
+            let d = *xt.shape.last().unwrap();
+            let mut xh = Vec::with_capacity(need.len() * d);
+            for &(fi, j) in &need {
+                let base = (lanes[fi] * m + j) * d;
+                xh.extend_from_slice(&xt.data[base..base + d]);
+            }
+            let xh = Value::F32(Tensor::from_vec(&[need.len(), 1, d], xh));
+            let l = fused_step(
+                &self.be,
+                "head_decode",
+                &[&xh, &self.model.final_norm, &self.model.embed],
+            )?
+            .remove(0);
+            Some(val_to_tensor(&l)?)
+        };
+        self.metrics.execute_secs += t_exec.elapsed().as_secs_f64();
+        let mut all_rows: Vec<Vec<Vec<f32>>> = feeds
+            .iter()
+            .map(|f| Vec::with_capacity(f.tokens.len().saturating_sub(f.collect_from)))
+            .collect();
+        if let Some(l) = &logits {
+            for (r, &(fi, _)) in need.iter().enumerate() {
+                all_rows[fi].push(l.data[r * v..(r + 1) * v].to_vec());
+            }
+        }
+        for (f, &lane) in feeds.iter().zip(lanes) {
+            self.spec[lane].as_mut().unwrap().len += f.tokens.len();
+            self.metrics.spec_steps += f.tokens.len();
+        }
+        self.metrics.spec_fused_passes += 1;
+        Ok(Some(all_rows))
+    }
+
+    /// The sequential lowering of `spec_extend_batch`: one batched decode
+    /// forward per token index, feeds advancing in lockstep (short feeds
+    /// park once exhausted).
+    fn spec_forward_sequential(
+        &mut self,
+        feeds: &[SpecFeed],
+        lanes: &[usize],
+        bd: usize,
+        v: usize,
+        s_max: usize,
+    ) -> Result<Vec<Vec<Vec<f32>>>> {
+        let m = feeds.iter().map(|f| f.tokens.len()).max().unwrap();
+        let mut all_rows: Vec<Vec<Vec<f32>>> = feeds
+            .iter()
+            .map(|f| Vec::with_capacity(f.tokens.len().saturating_sub(f.collect_from)))
+            .collect();
+        for j in 0..m {
+            let mut toks = vec![0i32; bd];
+            // parked baseline: every live lane at its own frontier (active
+            // feeds included — their len IS start + j at this step). The
+            // horizon clamp only ever binds for a parked lane sitting at
+            // s_max, whose overwritten row is dead after any rollback.
+            let mut pos = vec![0i32; bd];
+            for (lane, p) in pos.iter_mut().enumerate() {
+                if let Some(s) = &self.spec[lane] {
+                    *p = s.len.min(s_max - 1) as i32;
+                }
+            }
+            let mut with_head = false;
+            for (f, &lane) in feeds.iter().zip(lanes) {
+                if j < f.tokens.len() {
+                    toks[lane] = f.tokens[j] as i32;
+                    if j >= f.collect_from {
+                        with_head = true;
+                    }
+                }
+            }
+            let logits = self.decode_forward(&toks, &pos, with_head)?;
+            for (fi, (f, &lane)) in feeds.iter().zip(lanes).enumerate() {
+                if j < f.tokens.len() {
+                    if j >= f.collect_from {
+                        let l = logits.as_ref().expect("collected feed implies head ran");
+                        all_rows[fi].push(l.data[lane * v..(lane + 1) * v].to_vec());
+                    }
+                    self.spec[lane].as_mut().unwrap().len += 1;
+                    self.metrics.spec_steps += 1;
+                }
+            }
+        }
+        Ok(all_rows)
     }
 
     /// Rewind a speculative sequence to `new_len` committed positions —
@@ -931,6 +1231,15 @@ impl Engine {
     }
 }
 
+/// One executable of a fused decode chain. A backend that fused the
+/// chain's first step must fuse them all: `None` mid-chain would leave
+/// the dense caches half-updated, so it is an error, not a fallback.
+fn fused_step(be: &SharedBackend, name: &str, inputs: &[&Value]) -> Result<Vec<Value>> {
+    be.run_fused(name, inputs)?.ok_or_else(|| {
+        anyhow!("backend refused fused exec {name} mid-chain (fused decode is all-or-nothing)")
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -940,11 +1249,18 @@ mod tests {
         let cfg = EngineConfig::new();
         assert_eq!(cfg.scheduler, SchedulerKind::Fifo);
         assert_eq!(cfg.page_len, 16);
-        let cfg = cfg.kv_budget_bytes(1 << 20).page_len(8).max_queue(2).scheduler(SchedulerKind::Priority);
+        assert!(cfg.fused_verify, "the fused path is the default");
+        let cfg = cfg
+            .kv_budget_bytes(1 << 20)
+            .page_len(8)
+            .max_queue(2)
+            .scheduler(SchedulerKind::Priority)
+            .fused_verify(false);
         assert_eq!(cfg.kv_budget_bytes, 1 << 20);
         assert_eq!(cfg.page_len, 8);
         assert_eq!(cfg.max_queue, 2);
         assert_eq!(cfg.scheduler, SchedulerKind::Priority);
+        assert!(!cfg.fused_verify);
     }
 
     #[test]

@@ -14,6 +14,7 @@ use crate::arch::{Arch, AttnChoice};
 use crate::config::Manifest;
 
 #[derive(Debug, Clone)]
+/// Page-pool geometry and budget.
 pub struct PageCfg {
     /// positions per page
     pub page_len: usize,
@@ -24,13 +25,17 @@ pub struct PageCfg {
 }
 
 #[derive(Debug, Clone, Default)]
+/// Pages held by one sequence.
 pub struct SeqPages {
     /// pages held per layer (layers with kv_heads = 0 hold none)
     pub per_layer: Vec<usize>,
+    /// Occupied positions (== the sequence's committed length).
     pub positions: usize,
 }
 
 #[derive(Debug)]
+/// Admission control and exact byte accounting for the paged KV pool
+/// (per-layer page tables; see the module docs).
 pub struct PagedKvManager {
     cfg: PageCfg,
     /// kv heads per layer (0 = linear/no-op attention)
@@ -41,6 +46,7 @@ pub struct PagedKvManager {
 }
 
 impl PagedKvManager {
+    /// A manager for `arch` over `man`'s shapes under `cfg`.
     pub fn new(man: &Manifest, arch: &Arch, cfg: PageCfg) -> PagedKvManager {
         let kv_heads = arch
             .layers
@@ -184,10 +190,12 @@ impl PagedKvManager {
         }
     }
 
+    /// Bytes currently allocated across all sequences.
     pub fn allocated_bytes(&self) -> usize {
         self.allocated_bytes
     }
 
+    /// Number of sequences holding pages.
     pub fn active_seqs(&self) -> usize {
         self.seqs.len()
     }

@@ -5,12 +5,19 @@ use crate::util::{mean, percentile};
 use super::engine::FinishReason;
 
 #[derive(Debug, Clone, Default)]
+/// Engine-level counters and latency records (Table 3's columns).
 pub struct EngineMetrics {
+    /// Requests that ran to a natural finish (cancellations excluded).
     pub requests_completed: usize,
+    /// Prompt tokens ingested.
     pub prompt_tokens: usize,
+    /// Tokens sampled (or committed, for speculative serving).
     pub generated_tokens: usize,
+    /// Batched decode forwards executed.
     pub decode_steps: usize,
+    /// Prefill passes executed.
     pub prefills: usize,
+    /// Wall-clock seconds inside `step()` / speculative drivers.
     pub wall_secs: f64,
     /// per-request time-to-first-token (secs)
     pub ttft: Vec<f64>,
@@ -18,6 +25,7 @@ pub struct EngineMetrics {
     pub e2e: Vec<f64>,
     /// engine-side scheduling overhead per decode step (non-execute time)
     pub sched_overhead_secs: f64,
+    /// Seconds inside backend executions.
     pub execute_secs: f64,
     /// prompts longer than the prefill window, ingested via chunked
     /// (teacher-forced) decode steps instead of being truncated
@@ -27,8 +35,11 @@ pub struct EngineMetrics {
     pub rejected_prompts: usize,
     /// finish-reason histogram
     pub finished_eos: usize,
+    /// Requests that exhausted their `max_new` budget.
     pub finished_max_new: usize,
+    /// Requests that filled the cache horizon.
     pub finished_horizon: usize,
+    /// Requests torn down by `cancel`.
     pub cancelled: usize,
     /// speculative decoding: draft tokens proposed by the child drafter
     pub draft_proposed: usize,
@@ -38,11 +49,17 @@ pub struct EngineMetrics {
     pub spec_passes: usize,
     /// KV rollbacks after a partial acceptance (`spec_truncate` shrinks)
     pub spec_rollbacks: usize,
-    /// single-lane teacher-forced decode steps driven by the spec API
+    /// teacher-forced decode steps (per sequence per token) driven by the
+    /// spec API
     pub spec_steps: usize,
+    /// fused multi-token forward chains (one per `spec_extend_batch` call
+    /// the backend fused — each replaces up to `max feed × lanes`
+    /// sequential decode forwards)
+    pub spec_fused_passes: usize,
 }
 
 impl EngineMetrics {
+    /// Count one terminal state in the finish histogram.
     pub fn record_finish(&mut self, reason: FinishReason) {
         match reason {
             FinishReason::Eos => self.finished_eos += 1,
@@ -61,6 +78,7 @@ impl EngineMetrics {
         }
     }
 
+    /// Prompt + generated tokens per second.
     pub fn total_throughput(&self) -> f64 {
         if self.wall_secs <= 0.0 {
             0.0
@@ -69,22 +87,27 @@ impl EngineMetrics {
         }
     }
 
+    /// Mean time-to-first-token, seconds.
     pub fn mean_ttft(&self) -> f64 {
         mean(&self.ttft)
     }
 
+    /// Median time-to-first-token, seconds.
     pub fn p50_ttft(&self) -> f64 {
         percentile(&self.ttft, 50.0)
     }
 
+    /// 95th-percentile time-to-first-token, seconds.
     pub fn p95_ttft(&self) -> f64 {
         percentile(&self.ttft, 95.0)
     }
 
+    /// Median end-to-end latency, seconds.
     pub fn p50_e2e(&self) -> f64 {
         percentile(&self.e2e, 50.0)
     }
 
+    /// 95th-percentile end-to-end latency, seconds.
     pub fn p95_e2e(&self) -> f64 {
         percentile(&self.e2e, 95.0)
     }
@@ -109,16 +132,18 @@ impl EngineMetrics {
         }
     }
 
+    /// One-line operational summary (plus a spec section when drafting ran).
     pub fn summary(&self) -> String {
         let mut s = self.base_summary();
         if self.draft_proposed > 0 {
             s.push_str(&format!(
-                " | spec accepted/proposed {}/{} ({:.0}%) passes {} rollbacks {}",
+                " | spec accepted/proposed {}/{} ({:.0}%) passes {} rollbacks {} fused {}",
                 self.draft_accepted,
                 self.draft_proposed,
                 self.mean_acceptance() * 100.0,
                 self.spec_passes,
-                self.spec_rollbacks
+                self.spec_rollbacks,
+                self.spec_fused_passes
             ));
         }
         s

@@ -10,9 +10,11 @@
 //!   `GenRequest`s with per-request `SamplingParams`, and is driven by the
 //!   public `step()` event loop yielding `StreamEvent`s; `cancel(id)`
 //!   frees a request's slot and KV pages mid-generation. A second,
-//!   externally driven surface (`spec_open` / `spec_extend` /
-//!   `spec_truncate`) exposes teacher-forced multi-token passes and KV
-//!   rollback for `specdec::SpecSession`.
+//!   externally driven surface (`spec_open` / `spec_extend_batch` /
+//!   `spec_truncate`) exposes teacher-forced multi-token passes — fused
+//!   into one forward per batch when the backend supports it
+//!   (`Backend::run_fused`) — and exact KV rollback, for up to
+//!   `b_decode` concurrent `specdec` sequences sharing the decode lanes.
 //! * `scheduler` — pluggable admission policies (`Fifo` — the default,
 //!   `Priority`, `ShortestPromptFirst`).
 //! * `sampling` — greedy / temperature / top-k / top-p with a seeded
@@ -27,7 +29,7 @@ pub mod metrics;
 pub mod sampling;
 pub mod scheduler;
 
-pub use engine::{Engine, EngineConfig, FinishReason, GenRequest, Response, StreamEvent};
+pub use engine::{Engine, EngineConfig, FinishReason, GenRequest, Response, SpecFeed, StreamEvent};
 pub use kvcache::PagedKvManager;
 pub use metrics::EngineMetrics;
 pub use sampling::SamplingParams;

@@ -13,6 +13,15 @@ use crate::util::Rng;
 /// (the default); otherwise logits are temperature-scaled, optionally
 /// truncated to the `top_k` highest and to the `top_p` nucleus, and the
 /// next token is drawn from the renormalized distribution.
+///
+/// ```
+/// use puzzle::serving::SamplingParams;
+/// let greedy = SamplingParams::greedy();
+/// assert!(greedy.is_greedy(), "temperature 0 consumes no randomness");
+/// let stochastic = SamplingParams::temperature(0.8).with_top_k(40).with_top_p(0.95).with_seed(7);
+/// assert!(!stochastic.is_greedy());
+/// assert_eq!((stochastic.top_k, stochastic.seed), (40, 7));
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SamplingParams {
     /// 0.0 = greedy; higher flattens the distribution.
@@ -33,29 +42,35 @@ impl Default for SamplingParams {
 }
 
 impl SamplingParams {
+    /// Greedy argmax (the default policy).
     pub fn greedy() -> SamplingParams {
         SamplingParams { temperature: 0.0, top_k: 0, top_p: 1.0, seed: 0 }
     }
 
+    /// Temperature sampling at `t` (greedy otherwise unchanged).
     pub fn temperature(t: f32) -> SamplingParams {
         SamplingParams { temperature: t, ..SamplingParams::greedy() }
     }
 
+    /// Set the private rng stream's seed.
     pub fn with_seed(mut self, seed: u64) -> SamplingParams {
         self.seed = seed;
         self
     }
 
+    /// Keep only the `k` highest logits (0 = no limit).
     pub fn with_top_k(mut self, k: usize) -> SamplingParams {
         self.top_k = k;
         self
     }
 
+    /// Nucleus truncation at cumulative probability `p` (1.0 = no limit).
     pub fn with_top_p(mut self, p: f32) -> SamplingParams {
         self.top_p = p;
         self
     }
 
+    /// Whether this policy is greedy (consumes no randomness).
     pub fn is_greedy(&self) -> bool {
         self.temperature <= 0.0
     }

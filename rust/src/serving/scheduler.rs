@@ -12,10 +12,13 @@
 /// `pick` is arrival order, so index 0 is always the oldest request.
 #[derive(Debug, Clone)]
 pub struct QueueView {
+    /// Request id.
     pub id: u64,
     /// Larger = more urgent (only `Priority` looks at this; default 0).
     pub priority: i32,
+    /// Prompt length in tokens.
     pub prompt_len: usize,
+    /// Requested generation budget.
     pub max_new: usize,
 }
 
@@ -27,7 +30,9 @@ pub struct QueueView {
 /// release). Implementations must be `Send` so an engine can move to a
 /// server thread.
 pub trait Scheduler: Send {
+    /// Stable lowercase policy label.
     fn name(&self) -> &'static str;
+    /// Index of the request to admit next, or None when the queue is empty.
     fn pick(&mut self, queue: &[QueueView]) -> Option<usize>;
 }
 
@@ -84,12 +89,16 @@ impl Scheduler for ShortestPromptFirst {
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum SchedulerKind {
     #[default]
+    /// Arrival order (the default; byte-identical to the v1 engine).
     Fifo,
+    /// Highest `GenRequest.priority` first, ties by arrival.
     Priority,
+    /// Shortest prompt first (latency-oriented).
     ShortestPromptFirst,
 }
 
 impl SchedulerKind {
+    /// Instantiate the policy.
     pub fn build(self) -> Box<dyn Scheduler> {
         match self {
             SchedulerKind::Fifo => Box::new(Fifo),
@@ -109,6 +118,7 @@ impl SchedulerKind {
         }
     }
 
+    /// Stable lowercase label.
     pub fn name(self) -> &'static str {
         match self {
             SchedulerKind::Fifo => "fifo",

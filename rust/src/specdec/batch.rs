@@ -1,0 +1,502 @@
+//! Batched speculative decoding: N draft/verify sequences sharing the
+//! child and parent engines' decode lanes.
+//!
+//! `SpecBatch` generalizes the single-lane session to a wave of
+//! sequences advancing in lockstep (DESIGN.md §6). Per round, every
+//! live lane drafts on the child (one *batched* decode forward per draft
+//! step serves all lanes), then the parent verifies ALL lanes' drafts in
+//! one fused multi-token pass (`Engine::spec_extend_batch` →
+//! `Backend::run_fused`), and each lane accepts/commits/rolls back
+//! independently with its own seeded rng streams. Requests beyond the
+//! engines' lane count queue up and backfill freed lanes as sequences
+//! finish — continuous batching for the speculative path.
+//!
+//! Per-sequence behavior is *identical* to `SpecSession`: greedy output
+//! is byte-identical to plain greedy parent decoding for every sequence
+//! in the batch, stochastic output follows exactly the parent's
+//! distribution, and both engines return every rejected draft's KV pages
+//! exactly. Lane isolation is the engine's parking rule: lanes a forward
+//! does not feed are teacher-forced a dummy token at their own frontier,
+//! where the write is dead by the attention masking rule.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::arch::Arch;
+use crate::data::world::EOS;
+use crate::perf::HwProfile;
+use crate::runtime::SharedBackend;
+use crate::serving::sampling::{dist, draw, sample};
+use crate::serving::{Engine, EngineMetrics, FinishReason, SamplingParams, SpecFeed};
+use crate::util::Rng;
+use crate::weights::Store;
+
+use super::accept;
+use super::speedup::{KTuner, SpecModel};
+use super::{SpecConfig, SpecResponse};
+
+/// One speculative generation request (prompt + stopping budget +
+/// per-request sampling policy with its private seed).
+#[derive(Debug, Clone)]
+pub struct SpecRequest {
+    /// Prompt tokens (non-empty, shorter than the cache horizon).
+    pub prompt: Vec<u32>,
+    /// Maximum generated tokens (>= 1).
+    pub max_new: usize,
+    /// Sampling policy; greedy keeps the byte-equivalence invariant.
+    pub sampling: SamplingParams,
+}
+
+impl SpecRequest {
+    /// A greedy request.
+    pub fn new(prompt: Vec<u32>, max_new: usize) -> SpecRequest {
+        SpecRequest { prompt, max_new, sampling: SamplingParams::greedy() }
+    }
+
+    /// Override the sampling policy.
+    pub fn with_sampling(mut self, sampling: SamplingParams) -> SpecRequest {
+        self.sampling = sampling;
+        self
+    }
+}
+
+/// Per-lane state of one in-flight speculative sequence.
+struct Lane {
+    /// Index into the request/response vectors.
+    req: usize,
+    pid: u64,
+    cid: u64,
+    sampling: SamplingParams,
+    greedy: bool,
+    max_new: usize,
+    /// accept/bonus draws; independent of draft draws or the rejection
+    /// test would correlate with the proposal and bias the output law
+    accept_rng: Rng,
+    draft_rng: Rng,
+    committed: Vec<u32>,
+    out: Vec<u32>,
+    resp: SpecResponse,
+    // per-round scratch
+    drafts: Vec<u32>,
+    qdists: Vec<Vec<(usize, f64)>>,
+    k_eff: usize,
+    done: Option<FinishReason>,
+}
+
+/// A batched draft/verify driver over two engines sharing one backend:
+/// the parent holds each sequence's verified truth, the child speculates
+/// ahead, and up to `b_decode` sequences advance together per forward.
+pub struct SpecBatch {
+    parent: Engine,
+    child: Engine,
+    /// Construction parameters (draft length, adaptation, engine config).
+    pub cfg: SpecConfig,
+    tuner: Option<KTuner>,
+    total_accepted: usize,
+    total_attempted: usize,
+}
+
+impl SpecBatch {
+    /// Build the parent and child engines over one shared backend.
+    /// `cfg.draft_k == 0` is rejected; `cfg.adapt_k_max = Some(k_max)`
+    /// arms the online draft-length tuner (`KTuner` over the roofline
+    /// `SpecModel` of this parent/child pair).
+    pub fn new(
+        be: SharedBackend,
+        parent_store: &Store,
+        parent_arch: &Arch,
+        child_store: &Store,
+        child_arch: &Arch,
+        cfg: SpecConfig,
+    ) -> Result<SpecBatch> {
+        if cfg.draft_k == 0 {
+            return Err(anyhow!("draft_k must be >= 1"));
+        }
+        let tuner = cfg.adapt_k_max.map(|k_max| {
+            let man = be.man();
+            let ctx = (man.cfg.s_max / 2).max(1);
+            let model = SpecModel::new(man, parent_arch, child_arch, &HwProfile::h100_fp8(), ctx);
+            KTuner::new(model, cfg.draft_k, k_max)
+        });
+        let parent = cfg.engine.clone().build(be.clone(), parent_store, parent_arch)?;
+        let child = cfg.engine.clone().build(be, child_store, child_arch)?;
+        Ok(SpecBatch { parent, child, cfg, tuner, total_accepted: 0, total_attempted: 0 })
+    }
+
+    /// The parent engine's metrics: generation counters plus the
+    /// speculative section (draft_proposed/accepted, passes, rollbacks,
+    /// fused passes).
+    pub fn parent_metrics(&self) -> &EngineMetrics {
+        &self.parent.metrics
+    }
+
+    /// The child (drafter) engine's metrics.
+    pub fn child_metrics(&self) -> &EngineMetrics {
+        &self.child.metrics
+    }
+
+    /// Paged-KV bytes currently held by the (parent, child) engines —
+    /// both must return to zero between `generate_many` calls.
+    pub fn kv_allocated_bytes(&self) -> (usize, usize) {
+        (self.parent.kv_allocated_bytes(), self.child.kv_allocated_bytes())
+    }
+
+    /// Concurrent speculative sequences the engines can hold
+    /// (`min(b_decode)` of the two).
+    pub fn lane_capacity(&self) -> usize {
+        self.parent.decode_lanes().min(self.child.decode_lanes()).max(1)
+    }
+
+    /// The draft length the next round will use: the tuner's current
+    /// choice under adaptation, the configured pin otherwise.
+    pub fn current_draft_k(&self) -> usize {
+        self.tuner.as_ref().map(|t| t.k()).unwrap_or(self.cfg.draft_k)
+    }
+
+    /// Running per-attempt acceptance rate α̂ across everything this
+    /// batch has generated (0.0 before any verification).
+    pub fn observed_alpha(&self) -> f64 {
+        if self.total_attempted == 0 {
+            0.0
+        } else {
+            self.total_accepted as f64 / self.total_attempted as f64
+        }
+    }
+
+    /// Generate all `reqs` speculatively, sharing the engines' decode
+    /// lanes: up to `lane_capacity()` sequences run concurrently and
+    /// waiting requests backfill lanes as sequences finish. Responses
+    /// come back in request order. Greedy sequences are byte-identical
+    /// to plain greedy parent decoding; stochastic sequences draw from
+    /// exactly the parent's modified distribution, reproducibly per seed.
+    ///
+    /// Errors abort the whole batch: every open lane is torn down (no
+    /// pages or lanes leak, the engines stay reusable) but responses of
+    /// already-finished sequences are discarded too. Speculative
+    /// sequences book pages as they grow rather than reserving a horizon
+    /// up front, so unlike `Engine::submit` a KV-budget exhaustion is
+    /// reachable mid-run — size `SpecConfig::engine`'s
+    /// `kv_budget_bytes` for `lane_capacity()` concurrent horizons.
+    pub fn generate_many(&mut self, reqs: &[SpecRequest]) -> Result<Vec<SpecResponse>> {
+        if reqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        for r in reqs {
+            if r.max_new == 0 {
+                return Err(anyhow!("max_new == 0: nothing to generate"));
+            }
+        }
+        let mut lanes: Vec<Lane> = Vec::new();
+        let res = self.run(reqs, &mut lanes);
+        // on error, tear down whatever is still open so the engines stay
+        // reusable (no leaked lanes or pages)
+        for lane in &lanes {
+            self.parent.spec_close(lane.pid);
+            self.child.spec_close(lane.cid);
+        }
+        res
+    }
+
+    fn run(&mut self, reqs: &[SpecRequest], lanes: &mut Vec<Lane>) -> Result<Vec<SpecResponse>> {
+        let s_max = self.parent.cache_horizon();
+        let capacity = self.lane_capacity();
+        let mut results: Vec<Option<SpecResponse>> = vec![None; reqs.len()];
+        let mut next_req = 0usize;
+        while lanes.len() < capacity && next_req < reqs.len() {
+            lanes.push(self.open_lane(next_req, &reqs[next_req])?);
+            next_req += 1;
+        }
+        loop {
+            // harvest finished lanes and backfill from waiting requests
+            let mut i = 0;
+            while i < lanes.len() {
+                if lanes[i].done.is_some() {
+                    let lane = lanes.swap_remove(i);
+                    results[lane.req] = Some(self.close_lane(lane));
+                    while lanes.len() < capacity && next_req < reqs.len() {
+                        lanes.push(self.open_lane(next_req, &reqs[next_req])?);
+                        next_req += 1;
+                    }
+                    // re-examine index i: swap_remove moved another lane in
+                } else {
+                    i += 1;
+                }
+            }
+            if lanes.is_empty() {
+                break;
+            }
+            self.round(lanes, s_max)?;
+        }
+        Ok(results
+            .into_iter()
+            .map(|r| r.expect("every admitted request produces a response"))
+            .collect())
+    }
+
+    /// Open one sequence on both engines and take its first token from
+    /// the parent prefill — the same sample the plain engine takes at
+    /// admission, from the same (accept) stream as the session driver.
+    fn open_lane(&mut self, req_idx: usize, req: &SpecRequest) -> Result<Lane> {
+        let (pid, first) = self.parent.spec_open(&req.prompt)?;
+        let cid = match self.child.spec_open(&req.prompt) {
+            Ok((cid, _)) => cid,
+            Err(e) => {
+                self.parent.spec_close(pid);
+                return Err(e);
+            }
+        };
+        let mut accept_rng = Rng::new(req.sampling.seed);
+        let draft_rng = Rng::new(req.sampling.seed ^ 0x5bec_dec0);
+        let t0 = sample(&first, &req.sampling, &mut accept_rng) as u32;
+        let mut committed = req.prompt.clone();
+        committed.push(t0);
+        let done = if t0 == EOS {
+            Some(FinishReason::Eos)
+        } else if req.max_new <= 1 {
+            Some(FinishReason::MaxNew)
+        } else {
+            None
+        };
+        Ok(Lane {
+            req: req_idx,
+            pid,
+            cid,
+            sampling: req.sampling,
+            greedy: req.sampling.is_greedy(),
+            max_new: req.max_new,
+            accept_rng,
+            draft_rng,
+            committed,
+            out: vec![t0],
+            resp: SpecResponse {
+                tokens: vec![],
+                finish: FinishReason::MaxNew,
+                parent_passes: 1,
+                proposed: 0,
+                accepted: 0,
+                attempted: 0,
+                rollbacks: 0,
+            },
+            drafts: Vec::new(),
+            qdists: Vec::new(),
+            k_eff: 0,
+            done,
+        })
+    }
+
+    /// One lockstep round over every live lane: draft on the child,
+    /// verify all lanes in one batched parent pass, accept/commit/roll
+    /// back per lane, feed the tuner.
+    fn round(&mut self, lanes: &mut [Lane], s_max: usize) -> Result<()> {
+        let k = self.current_draft_k();
+        // pre-round finish checks, in the single-lane driver's order (the
+        // max_new budget binds before the horizon check)
+        for lane in lanes.iter_mut() {
+            if lane.done.is_some() {
+                continue;
+            }
+            if lane.out.len() >= lane.max_new {
+                lane.done = Some(FinishReason::MaxNew);
+            } else if lane.committed.len() >= s_max {
+                lane.done = Some(FinishReason::CacheHorizon);
+            }
+        }
+        let active: Vec<usize> =
+            (0..lanes.len()).filter(|&i| lanes[i].done.is_none()).collect();
+        if active.is_empty() {
+            return Ok(());
+        }
+        // cap each draft so a full acceptance (k_eff + 1 tokens) never
+        // overshoots max_new, and the committed stream never exceeds the
+        // plain engine's CacheHorizon point (committed == s_max): this is
+        // what keeps horizon-reaching prompts byte-identical
+        for &i in &active {
+            let lane = &mut lanes[i];
+            lane.k_eff = k
+                .min(lane.max_new - lane.out.len() - 1)
+                .min(s_max - lane.committed.len() - 1);
+            lane.drafts.clear();
+            lane.qdists.clear();
+        }
+        // --- draft: the child catches up to each lane's committed stream
+        // (one batched pass), then the lanes propose in lockstep, each
+        // recording the modified distribution q it drew from ---
+        let drafting: Vec<usize> =
+            active.iter().copied().filter(|&i| lanes[i].k_eff > 0).collect();
+        let mut rows: HashMap<usize, Vec<f32>> = HashMap::new();
+        if !drafting.is_empty() {
+            let mut cls = Vec::with_capacity(drafting.len());
+            for &i in &drafting {
+                cls.push(self.child.spec_len(lanes[i].cid)?);
+            }
+            let feeds: Vec<SpecFeed> = drafting
+                .iter()
+                .zip(&cls)
+                .map(|(&i, &cl)| {
+                    let toks = &lanes[i].committed[cl..];
+                    SpecFeed { id: lanes[i].cid, tokens: toks, collect_from: toks.len() - 1 }
+                })
+                .collect();
+            let out = self.child.spec_extend_batch(&feeds)?;
+            drop(feeds);
+            for (&i, mut r) in drafting.iter().zip(out) {
+                let row =
+                    r.pop().ok_or_else(|| anyhow!("child catch-up produced no logits"))?;
+                rows.insert(i, row);
+            }
+            let mut live = drafting;
+            loop {
+                let mut continuing: Vec<usize> = Vec::new();
+                for &i in &live {
+                    let lane = &mut lanes[i];
+                    let q = dist(&rows[&i], &lane.sampling);
+                    let d = draw(&q, &mut lane.draft_rng) as u32;
+                    lane.drafts.push(d);
+                    lane.qdists.push(q);
+                    if lane.drafts.len() < lane.k_eff && d != EOS {
+                        continuing.push(i);
+                    }
+                }
+                if continuing.is_empty() {
+                    break;
+                }
+                let feeds: Vec<SpecFeed> = continuing
+                    .iter()
+                    .map(|&i| SpecFeed {
+                        id: lanes[i].cid,
+                        tokens: std::slice::from_ref(lanes[i].drafts.last().unwrap()),
+                        collect_from: 0,
+                    })
+                    .collect();
+                let out = self.child.spec_extend_batch(&feeds)?;
+                drop(feeds);
+                for (&i, mut r) in continuing.iter().zip(out) {
+                    let row =
+                        r.pop().ok_or_else(|| anyhow!("child draft step produced no logits"))?;
+                    rows.insert(i, row);
+                }
+                live = continuing;
+            }
+        }
+        // --- verify: ONE batched parent pass over every lane's newest
+        // committed token plus its drafts; kd + 1 logit rows per lane ---
+        let feed_tokens: Vec<(usize, Vec<u32>)> = active
+            .iter()
+            .map(|&i| {
+                let lane = &lanes[i];
+                let mut t = Vec::with_capacity(lane.drafts.len() + 1);
+                t.push(*lane.committed.last().unwrap());
+                t.extend_from_slice(&lane.drafts);
+                (i, t)
+            })
+            .collect();
+        let feeds: Vec<SpecFeed> = feed_tokens
+            .iter()
+            .map(|(i, t)| SpecFeed { id: lanes[*i].pid, tokens: t, collect_from: 0 })
+            .collect();
+        let vrows = self.parent.spec_extend_batch(&feeds)?;
+        drop(feeds);
+        // --- accept / commit / rollback, independently per lane ---
+        let (mut round_accepted, mut round_attempted) = (0usize, 0usize);
+        for ((iref, _), prows) in feed_tokens.iter().zip(vrows) {
+            let i = *iref;
+            let lane = &mut lanes[i];
+            lane.resp.parent_passes += 1;
+            let kd = lane.drafts.len();
+            lane.resp.proposed += kd;
+            let mut a = 0usize;
+            let mut bonus_dist: Option<Vec<(usize, f64)>> = None;
+            for t in 0..kd {
+                lane.resp.attempted += 1;
+                round_attempted += 1;
+                let p = dist(&prows[t], &lane.sampling);
+                let ok = if lane.greedy {
+                    p[0].0 == lane.drafts[t] as usize
+                } else {
+                    accept::accept(&p, &lane.qdists[t], lane.drafts[t] as usize, &mut lane.accept_rng)
+                };
+                if !ok {
+                    bonus_dist =
+                        Some(if lane.greedy { p } else { accept::residual(&p, &lane.qdists[t]) });
+                    break;
+                }
+                a += 1;
+            }
+            lane.resp.accepted += a;
+            round_accepted += a;
+            // the pass always nets one parent-sampled token: bonus from
+            // the last row on full acceptance, residual-corrected on a
+            // rejection (drawn before commit so the rng order matches the
+            // single-lane driver even when EOS cuts the commit short)
+            let bonus_dist = bonus_dist.unwrap_or_else(|| dist(&prows[kd], &lane.sampling));
+            let bonus = draw(&bonus_dist, &mut lane.accept_rng) as u32;
+            for t in 0..a {
+                let d = lane.drafts[t];
+                lane.out.push(d);
+                lane.committed.push(d);
+                if d == EOS {
+                    lane.done = Some(FinishReason::Eos);
+                    break;
+                }
+            }
+            if lane.done.is_none() {
+                lane.out.push(bonus);
+                lane.committed.push(bonus);
+                // same precedence as the plain engine's decode_step
+                lane.done = if bonus == EOS {
+                    Some(FinishReason::Eos)
+                } else if lane.out.len() >= lane.max_new {
+                    Some(FinishReason::MaxNew)
+                } else if lane.committed.len() >= s_max {
+                    Some(FinishReason::CacheHorizon)
+                } else {
+                    None
+                };
+            }
+            // --- rollback: rejected drafts hand their pages back; other
+            // lanes' pages are untouched (asserted in the tests) ---
+            self.rollback_lane(lanes, i)?;
+        }
+        if let Some(t) = self.tuner.as_mut() {
+            t.observe(round_accepted, round_attempted);
+        }
+        self.total_accepted += round_accepted;
+        self.total_attempted += round_attempted;
+        Ok(())
+    }
+
+    /// Restore one lane's engines to the inter-round invariant: each
+    /// holds KV for every committed token except the newest (which the
+    /// next pass feeds). Frees the rejected drafts' pages exactly.
+    fn rollback_lane(&mut self, lanes: &mut [Lane], i: usize) -> Result<()> {
+        let lane = &mut lanes[i];
+        let target = lane.committed.len() - 1;
+        if self.parent.spec_len(lane.pid)? > target {
+            self.parent.spec_truncate(lane.pid, target)?;
+            lane.resp.rollbacks += 1;
+        }
+        if self.child.spec_len(lane.cid)? > target {
+            self.child.spec_truncate(lane.cid, target)?;
+            lane.resp.rollbacks += 1;
+        }
+        Ok(())
+    }
+
+    /// Close a finished lane on both engines, stamp its response, and
+    /// fold its counters into the parent engine's metrics.
+    fn close_lane(&mut self, mut lane: Lane) -> SpecResponse {
+        self.parent.spec_close(lane.pid);
+        self.child.spec_close(lane.cid);
+        lane.resp.tokens = std::mem::take(&mut lane.out);
+        lane.resp.finish = lane.done.unwrap_or(FinishReason::MaxNew);
+        let resp = lane.resp;
+        self.parent.metrics.draft_proposed += resp.proposed;
+        self.parent.metrics.draft_accepted += resp.accepted;
+        self.parent.metrics.spec_passes += resp.parent_passes.saturating_sub(1);
+        self.parent.metrics.generated_tokens += resp.tokens.len();
+        self.parent.metrics.record_finish(resp.finish);
+        self.parent.metrics.requests_completed += 1;
+        resp
+    }
+}

@@ -4,14 +4,15 @@
 //! a fraction of the cost — a near-ideal *draft model* for speculative
 //! decoding of its own parent, which turns the NAS result into a
 //! serving-time speedup rather than only a standalone model. The loop
-//! (per round, DESIGN.md §5):
+//! (per round and per sequence, DESIGN.md §5/§6):
 //!
 //! 1. **draft** — the child engine proposes up to `draft_k` tokens from
 //!    its own state, one cheap decode step each, recording the modified
 //!    distribution `q` it drew every token from;
 //! 2. **verify** — the parent engine runs ONE teacher-forced multi-token
-//!    pass (`Engine::spec_extend`) over the newest committed token plus
-//!    all drafts, yielding the parent distribution `p` at every position;
+//!    pass (`Engine::spec_extend_batch`) over the newest committed token
+//!    plus all drafts, yielding the parent distribution `p` at every
+//!    position;
 //! 3. **accept** — the longest draft prefix survives: exact argmax match
 //!    under greedy (making greedy speculative output byte-identical to
 //!    plain parent decoding), `min(1, p/q)` rejection sampling under
@@ -22,37 +23,53 @@
 //!    (`Engine::spec_truncate` -> `PagedKvManager::truncate`), handing
 //!    the rejected drafts' KV pages straight back to the pool.
 //!
+//! `batch::SpecBatch` drives N such sequences concurrently over the
+//! engines' shared decode lanes (one fused verify forward serves the
+//! whole batch); `SpecSession` is its single-sequence convenience.
 //! `speedup` holds the analytic model (expected tokens/pass over α and
 //! k, roofline-costed) that ranks candidate children by *draft value* —
-//! the bridge from the MIP/NAS stage to serving throughput.
+//! the bridge from the MIP/NAS stage to serving throughput — plus the
+//! score-table α estimator and the online `draft_k` tuner.
 
 pub mod accept;
+pub mod batch;
 pub mod speedup;
 
 use anyhow::{anyhow, Result};
 
 use crate::arch::Arch;
-use crate::data::world::EOS;
 use crate::runtime::SharedBackend;
-use crate::serving::sampling::{dist, draw, sample};
-use crate::serving::{Engine, EngineConfig, EngineMetrics, FinishReason, SamplingParams};
-use crate::util::Rng;
+use crate::serving::{EngineConfig, EngineMetrics, FinishReason, SamplingParams};
 use crate::weights::Store;
 
-pub use speedup::{expected_tokens_per_pass, rank_drafters, SpecModel};
+pub use batch::{SpecBatch, SpecRequest};
+pub use speedup::{
+    estimate_alpha, expected_tokens_per_pass, rank_drafters, rank_drafters_estimated, KTuner,
+    SpecModel,
+};
 
-/// Session construction parameters.
+/// Session/batch construction parameters.
 #[derive(Debug, Clone)]
 pub struct SpecConfig {
-    /// Draft tokens proposed per round (>= 1).
+    /// Draft tokens proposed per round (>= 1): the pin when `adapt_k_max`
+    /// is `None`, the starting point otherwise.
     pub draft_k: usize,
+    /// Online `draft_k` tuning: `Some(k_max)` re-tunes the draft length
+    /// every round to `SpecModel::best_k` at the running acceptance rate
+    /// (capped at `k_max`); `None` pins `draft_k`. Adaptation only gates
+    /// wall-clock — the greedy byte-equivalence invariant is unaffected.
+    /// The tuner costs rounds on the paper's deployment roofline
+    /// (`HwProfile::h100_fp8`), a *proxy* when serving on other hardware
+    /// (notably the CPU reference backend): the measured α̂ is real, the
+    /// draft/verify cost ratio is modeled.
+    pub adapt_k_max: Option<usize>,
     /// Engine construction for BOTH engines (KV budget, page length).
     pub engine: EngineConfig,
 }
 
 impl Default for SpecConfig {
     fn default() -> Self {
-        SpecConfig { draft_k: 4, engine: EngineConfig::default() }
+        SpecConfig { draft_k: 4, adapt_k_max: None, engine: EngineConfig::default() }
     }
 }
 
@@ -60,9 +77,12 @@ impl Default for SpecConfig {
 /// model is validated against.
 #[derive(Debug, Clone)]
 pub struct SpecResponse {
+    /// Generated tokens (prompt excluded), in order.
     pub tokens: Vec<u32>,
+    /// Why generation stopped.
     pub finish: FinishReason,
-    /// Parent forwards: 1 prefill + one per verify pass.
+    /// Parent forwards attributed to this sequence: 1 prefill + one per
+    /// verify pass (a fused batched pass counts once per participant).
     pub parent_passes: usize,
     /// Draft tokens proposed by the child.
     pub proposed: usize,
@@ -107,18 +127,18 @@ impl SpecResponse {
     }
 }
 
-/// A draft/verify session over two engines sharing one backend: the
-/// parent holds the verified truth, the child speculates ahead. Both
-/// engines keep their own KV caches and page accounting; the session
-/// maintains the invariant that between rounds each engine has exactly
-/// the committed stream minus its newest token in cache.
+/// A single-sequence draft/verify session — the convenience wrapper over
+/// `SpecBatch` for callers generating one stream at a time. The parent
+/// engine holds the verified truth, the child speculates ahead; both
+/// keep their own KV caches and page accounting, and between rounds each
+/// holds exactly the committed stream minus its newest token in cache.
 pub struct SpecSession {
-    parent: Engine,
-    child: Engine,
-    pub cfg: SpecConfig,
+    batch: SpecBatch,
 }
 
 impl SpecSession {
+    /// Build the parent and child engines over one shared backend.
+    /// `cfg.draft_k == 0` is rejected.
     pub fn new(
         be: SharedBackend,
         parent_store: &Store,
@@ -127,28 +147,31 @@ impl SpecSession {
         child_arch: &Arch,
         cfg: SpecConfig,
     ) -> Result<SpecSession> {
-        if cfg.draft_k == 0 {
-            return Err(anyhow!("draft_k must be >= 1"));
-        }
-        let parent = cfg.engine.clone().build(be.clone(), parent_store, parent_arch)?;
-        let child = cfg.engine.clone().build(be, child_store, child_arch)?;
-        Ok(SpecSession { parent, child, cfg })
+        Ok(SpecSession {
+            batch: SpecBatch::new(be, parent_store, parent_arch, child_store, child_arch, cfg)?,
+        })
+    }
+
+    /// The session's configuration.
+    pub fn cfg(&self) -> &SpecConfig {
+        &self.batch.cfg
     }
 
     /// The parent engine's metrics: generation counters plus the
     /// speculative section (draft_proposed/accepted, passes, rollbacks).
     pub fn parent_metrics(&self) -> &EngineMetrics {
-        &self.parent.metrics
+        self.batch.parent_metrics()
     }
 
+    /// The child (drafter) engine's metrics.
     pub fn child_metrics(&self) -> &EngineMetrics {
-        &self.child.metrics
+        self.batch.child_metrics()
     }
 
     /// Paged-KV bytes currently held by the (parent, child) engines —
     /// both must return to zero between requests (exact rollback).
     pub fn kv_allocated_bytes(&self) -> (usize, usize) {
-        (self.parent.kv_allocated_bytes(), self.child.kv_allocated_bytes())
+        self.batch.kv_allocated_bytes()
     }
 
     /// Generate up to `max_new` tokens speculatively. Greedy sampling is
@@ -157,185 +180,9 @@ impl SpecSession {
     /// distribution (rejection-sampling correctness), reproducible per
     /// seed though not draw-for-draw identical to the plain engine.
     pub fn generate(&mut self, prompt: &[u32], max_new: usize, sampling: SamplingParams) -> Result<SpecResponse> {
-        if max_new == 0 {
-            return Err(anyhow!("max_new == 0: nothing to generate"));
-        }
-        let rollbacks_before =
-            self.parent.metrics.spec_rollbacks + self.child.metrics.spec_rollbacks;
-        let (pid, first_logits) = self.parent.spec_open(prompt)?;
-        let cid = match self.child.spec_open(prompt) {
-            Ok((cid, _)) => cid,
-            Err(e) => {
-                self.parent.spec_close(pid);
-                return Err(e);
-            }
-        };
-        let res = self.run_rounds(pid, cid, prompt, &first_logits, max_new, sampling);
-        self.parent.spec_close(pid);
-        self.child.spec_close(cid);
-        let mut resp = res?;
-        resp.rollbacks =
-            self.parent.metrics.spec_rollbacks + self.child.metrics.spec_rollbacks - rollbacks_before;
-        self.parent.metrics.draft_proposed += resp.proposed;
-        self.parent.metrics.draft_accepted += resp.accepted;
-        self.parent.metrics.spec_passes += resp.parent_passes.saturating_sub(1);
-        self.parent.metrics.generated_tokens += resp.tokens.len();
-        self.parent.metrics.record_finish(resp.finish);
-        self.parent.metrics.requests_completed += 1;
-        Ok(resp)
-    }
-
-    fn run_rounds(
-        &mut self,
-        pid: u64,
-        cid: u64,
-        prompt: &[u32],
-        first_logits: &[f32],
-        max_new: usize,
-        sampling: SamplingParams,
-    ) -> Result<SpecResponse> {
-        let greedy = sampling.is_greedy();
-        let s_max = self.parent.cache_horizon();
-        let k = self.cfg.draft_k;
-        // two private streams: accept/bonus draws must be independent of
-        // draft draws, or the rejection test would correlate with the
-        // proposal and bias the output law
-        let mut accept_rng = Rng::new(sampling.seed);
-        let mut draft_rng = Rng::new(sampling.seed ^ 0x5bec_dec0);
-        let mut committed: Vec<u32> = prompt.to_vec();
-        let mut out: Vec<u32> = Vec::new();
-        let mut resp = SpecResponse {
-            tokens: vec![],
-            finish: FinishReason::MaxNew,
-            parent_passes: 1,
-            proposed: 0,
-            accepted: 0,
-            attempted: 0,
-            rollbacks: 0,
-        };
-        // token 1 comes from the parent prefill itself — the same sample
-        // the plain engine takes at admission
-        let t0 = sample(first_logits, &sampling, &mut accept_rng) as u32;
-        out.push(t0);
-        committed.push(t0);
-        if t0 == EOS {
-            resp.finish = FinishReason::Eos;
-            resp.tokens = out;
-            return Ok(resp);
-        }
-        'rounds: while out.len() < max_new {
-            if committed.len() >= s_max {
-                // only reachable when the prompt itself fills the horizon
-                // minus one: the plain engine finishes CacheHorizon right
-                // after its first sample too (at prefill, or on the first
-                // decode step of a chunked prompt)
-                resp.finish = FinishReason::CacheHorizon;
-                break;
-            }
-            // cap the draft so a full acceptance (k_eff + 1 tokens) never
-            // overshoots max_new, and the committed stream never exceeds
-            // the plain engine's CacheHorizon point (committed == s_max):
-            // this is what keeps horizon-reaching prompts byte-identical
-            let k_eff = k.min(max_new - out.len() - 1).min(s_max - committed.len() - 1);
-            // --- draft: child catches up to the committed stream, then
-            // proposes, recording each position's q ---
-            let mut drafts: Vec<u32> = Vec::new();
-            let mut qdists: Vec<Vec<(usize, f64)>> = Vec::new();
-            if k_eff > 0 {
-                let cl = self.child.spec_len(cid)?;
-                let missing = &committed[cl..];
-                let mut row = self
-                    .child
-                    .spec_extend(cid, missing, missing.len() - 1)?
-                    .pop()
-                    .ok_or_else(|| anyhow!("child catch-up produced no logits"))?;
-                loop {
-                    let q = dist(&row, &sampling);
-                    let d = draw(&q, &mut draft_rng) as u32;
-                    drafts.push(d);
-                    qdists.push(q);
-                    if drafts.len() == k_eff || d == EOS {
-                        break;
-                    }
-                    row = self
-                        .child
-                        .spec_extend(cid, &[d], 0)?
-                        .pop()
-                        .ok_or_else(|| anyhow!("child draft step produced no logits"))?;
-                }
-            }
-            let kd = drafts.len();
-            // --- verify: ONE parent pass over the newest committed token
-            // plus all drafts, kd + 1 logit rows out ---
-            let mut feed: Vec<u32> = Vec::with_capacity(kd + 1);
-            feed.push(*committed.last().unwrap());
-            feed.extend_from_slice(&drafts);
-            let rows = self.parent.spec_extend(pid, &feed, 0)?;
-            resp.parent_passes += 1;
-            resp.proposed += kd;
-            // --- accept: longest surviving prefix + the parent's token ---
-            let mut a = 0usize;
-            let mut bonus_dist: Option<Vec<(usize, f64)>> = None;
-            for i in 0..kd {
-                resp.attempted += 1;
-                let p = dist(&rows[i], &sampling);
-                let ok = if greedy {
-                    p[0].0 == drafts[i] as usize
-                } else {
-                    accept::accept(&p, &qdists[i], drafts[i] as usize, &mut accept_rng)
-                };
-                if !ok {
-                    bonus_dist = Some(if greedy { p } else { accept::residual(&p, &qdists[i]) });
-                    break;
-                }
-                a += 1;
-            }
-            resp.accepted += a;
-            let bonus_dist = bonus_dist.unwrap_or_else(|| dist(&rows[kd], &sampling));
-            let bonus = draw(&bonus_dist, &mut accept_rng) as u32;
-            // --- commit: accepted drafts, then the parent's own token ---
-            for &d in drafts.iter().take(a) {
-                out.push(d);
-                committed.push(d);
-                if d == EOS {
-                    resp.finish = FinishReason::Eos;
-                    self.rollback(pid, cid, committed.len())?;
-                    break 'rounds;
-                }
-            }
-            out.push(bonus);
-            committed.push(bonus);
-            // same precedence as the plain engine's decode_step
-            let done = if bonus == EOS {
-                Some(FinishReason::Eos)
-            } else if out.len() >= max_new {
-                Some(FinishReason::MaxNew)
-            } else if committed.len() >= s_max {
-                Some(FinishReason::CacheHorizon)
-            } else {
-                None
-            };
-            // --- rollback: rejected drafts hand their pages back ---
-            self.rollback(pid, cid, committed.len())?;
-            if let Some(f) = done {
-                resp.finish = f;
-                break;
-            }
-        }
-        resp.tokens = out;
-        Ok(resp)
-    }
-
-    /// Restore both engines to the inter-round invariant: each holds KV
-    /// for every committed token except the newest (which the next pass
-    /// feeds). Frees the trailing pages of rejected drafts exactly.
-    fn rollback(&mut self, pid: u64, cid: u64, committed_len: usize) -> Result<()> {
-        let target = committed_len - 1;
-        self.parent.spec_truncate(pid, target)?;
-        if self.child.spec_len(cid)? > target {
-            self.child.spec_truncate(cid, target)?;
-        }
-        Ok(())
+        let req = SpecRequest { prompt: prompt.to_vec(), max_new, sampling };
+        let mut out = self.batch.generate_many(&[req])?;
+        out.pop().ok_or_else(|| anyhow!("speculative batch returned no response"))
     }
 }
 
@@ -344,6 +191,7 @@ mod tests {
     use super::*;
     use crate::config::TinyManifest;
     use crate::runtime::{share, RefBackend};
+    use crate::util::Rng;
     use crate::weights::store::init_parent;
 
     #[test]
@@ -368,5 +216,6 @@ mod tests {
         // the failed request must not leak lanes: a real one still works
         let r = sess.generate(&[1, 2, 3], 4, SamplingParams::greedy()).unwrap();
         assert!(!r.tokens.is_empty());
+        assert_eq!(sess.kv_allocated_bytes(), (0, 0));
     }
 }

@@ -5,16 +5,31 @@
 //! throughput: a good Puzzle child is precisely a *cheap architecture
 //! with high α against its parent*, and `rank_drafters` scores candidate
 //! children by that "draft value" instead of standalone quality alone.
+//! `estimate_alpha` predicts a candidate's α straight from the
+//! replace-1-block score table (no speculative run needed), and `KTuner`
+//! closes the loop at serving time by re-tuning the draft length to the
+//! *measured* acceptance rate.
 
 use crate::arch::Arch;
 use crate::config::Manifest;
 use crate::perf::{arch_block_cost, BlockCost, HwProfile};
+use crate::scoring::ScoreTable;
 
 /// Expected tokens emitted per verify pass at per-position acceptance
 /// rate `alpha` and draft length `k`, under the standard geometric model
 /// (positions accept independently; the pass emits the accepted prefix
 /// plus one parent token): E = (1 - α^{k+1}) / (1 - α), reaching k + 1
 /// at α = 1.
+///
+/// ```
+/// use puzzle::specdec::expected_tokens_per_pass;
+/// // a drafter that is never right still nets the parent's own token...
+/// assert_eq!(expected_tokens_per_pass(0.0, 4), 1.0);
+/// // ...a perfect drafter nets the full draft plus the bonus token...
+/// assert_eq!(expected_tokens_per_pass(1.0, 4), 5.0);
+/// // ...and at α = 1/2, k = 2 the geometric sum is 1 + 1/2 + 1/4
+/// assert!((expected_tokens_per_pass(0.5, 2) - 1.75).abs() < 1e-12);
+/// ```
 pub fn expected_tokens_per_pass(alpha: f64, k: usize) -> f64 {
     let alpha = alpha.clamp(0.0, 1.0);
     if 1.0 - alpha < 1e-9 {
@@ -28,6 +43,7 @@ pub fn expected_tokens_per_pass(alpha: f64, k: usize) -> f64 {
 /// k + 1 positions in one fused multi-token pass.
 #[derive(Debug, Clone)]
 pub struct SpecModel {
+    /// Hardware profile the round is costed against.
     pub hw: HwProfile,
     /// mean decode context the model is evaluated at
     pub ctx: usize,
@@ -36,6 +52,7 @@ pub struct SpecModel {
 }
 
 impl SpecModel {
+    /// A model of `child` drafting for `parent` on `hw` at context `ctx`.
     pub fn new(man: &Manifest, parent: &Arch, child: &Arch, hw: &HwProfile, ctx: usize) -> SpecModel {
         SpecModel {
             hw: hw.clone(),
@@ -101,6 +118,126 @@ pub fn rank_drafters(
         .collect();
     ranked.sort_by(|a, b| b.1.total_cmp(&a.1));
     ranked
+}
+
+/// Estimate a candidate drafter's per-position acceptance rate α from
+/// the replace-1-block score table, with no speculative run.
+///
+/// Derivation. Under greedy-free speculative sampling the acceptance
+/// probability at one position is exactly the distributions' overlap,
+/// `α = Σ_x min(p(x), q(x)) = 1 − TV(p, q)` (Leviathan et al.). The
+/// score table measures each block substitution's KL divergence to the
+/// parent on held-out data, and the decomposed-NAS assumption the whole
+/// search rests on (paper §4.2) is that these penalties add, so
+/// `KL(p‖q) ≈ ScoreTable::arch_cost(child)` — the same additive
+/// surrogate the MIP maximizes quality with. The Bretagnolle–Huber
+/// inequality then bounds total variation by
+/// `TV(p, q) ≤ sqrt(1 − exp(−KL))`, giving
+///
+/// `α̂ = 1 − sqrt(1 − exp(−KL))`.
+///
+/// B–H is preferred over Pinsker (`TV ≤ sqrt(KL/2)`) because it stays
+/// informative at large KL: α̂ decays smoothly to 0 instead of going
+/// negative beyond KL = 2. The estimate is exact at KL = 0 (the parent
+/// drafting for itself accepts everything) and monotone decreasing in
+/// the table cost, which is all `rank_drafters` needs to order
+/// candidates; it is a lower bound in expectation, so modeled speedups
+/// fed from it are conservative.
+///
+/// ```
+/// use puzzle::arch::Arch;
+/// use puzzle::scoring::ScoreTable;
+/// use puzzle::specdec::estimate_alpha;
+/// // the parent scores 0 everywhere: it drafts for itself with α = 1
+/// let table = ScoreTable::default();
+/// assert_eq!(estimate_alpha(&table, &Arch::parent(3)), 1.0);
+/// ```
+pub fn estimate_alpha(table: &ScoreTable, child: &Arch) -> f64 {
+    let kl = table.arch_cost(child).max(0.0);
+    1.0 - (1.0 - (-kl).exp()).max(0.0).sqrt()
+}
+
+/// `rank_drafters` with every candidate's α *predicted* from the score
+/// table (`estimate_alpha`) instead of measured — draft value becomes a
+/// pure function of the NAS artifacts, so the MIP's solution slices can
+/// be ranked for deployment before any child is ever run speculatively.
+pub fn rank_drafters_estimated(
+    man: &Manifest,
+    parent: &Arch,
+    candidates: &[Arch],
+    table: &ScoreTable,
+    hw: &HwProfile,
+    ctx: usize,
+    k: usize,
+) -> Vec<(usize, f64)> {
+    let scored: Vec<(Arch, f64)> =
+        candidates.iter().map(|c| (c.clone(), estimate_alpha(table, c))).collect();
+    rank_drafters(man, parent, &scored, hw, ctx, k)
+}
+
+/// Minimum (decayed) verified positions before the tuner trusts its α̂
+/// and starts re-tuning the draft length.
+const KTUNER_WARMUP: f64 = 16.0;
+
+/// Per-round decay of the acceptance counters: recent rounds dominate
+/// α̂ (effective window ≈ 1/(1 − decay) rounds), so a mid-stream
+/// acceptance collapse moves the estimate within a few rounds instead of
+/// being averaged away by a long history.
+const KTUNER_DECAY: f64 = 0.9;
+
+/// Online draft-length controller: accumulates the measured acceptance
+/// counts round by round under an exponential decay and, once past a
+/// short warmup, re-tunes the draft length to `SpecModel::best_k` at the
+/// windowed α̂ — so a drafter whose acceptance collapses mid-stream
+/// stops paying for long drafts within a few rounds, and a hot one
+/// stretches toward `k_max`. Changing k between rounds only gates
+/// wall-clock: the byte-equivalence invariant is per position, not per
+/// draft length.
+#[derive(Debug, Clone)]
+pub struct KTuner {
+    model: SpecModel,
+    k_max: usize,
+    k: usize,
+    accepted: f64,
+    attempted: f64,
+    warm: bool,
+}
+
+impl KTuner {
+    /// Start at `k0` (clamped to `1..=k_max`), tuning over `model`.
+    pub fn new(model: SpecModel, k0: usize, k_max: usize) -> KTuner {
+        let k_max = k_max.max(1);
+        KTuner { model, k_max, k: k0.clamp(1, k_max), accepted: 0.0, attempted: 0.0, warm: false }
+    }
+
+    /// Fold one round's acceptance counts in (decaying the history) and
+    /// re-tune once warm.
+    pub fn observe(&mut self, accepted: usize, attempted: usize) {
+        self.accepted = self.accepted * KTUNER_DECAY + accepted as f64;
+        self.attempted = self.attempted * KTUNER_DECAY + attempted as f64;
+        // warmth latches: once enough positions have been verified the
+        // tuner keeps re-tuning even if an adapted-down k makes single
+        // rounds small (k could otherwise get stuck at 1 forever)
+        self.warm = self.warm || self.attempted >= KTUNER_WARMUP;
+        if self.warm {
+            self.k = self.model.best_k(self.alpha_hat(), self.k_max).0;
+        }
+    }
+
+    /// Decay-windowed per-attempt acceptance rate (0.0 before any
+    /// observation).
+    pub fn alpha_hat(&self) -> f64 {
+        if self.attempted <= 0.0 {
+            0.0
+        } else {
+            self.accepted / self.attempted
+        }
+    }
+
+    /// The draft length the next round should use.
+    pub fn k(&self) -> usize {
+        self.k
+    }
 }
 
 #[cfg(test)]
@@ -181,6 +318,100 @@ mod tests {
         let (k_lo, _) = m.best_k(0.3, 16);
         let (k_hi, _) = m.best_k(0.95, 16);
         assert!(k_hi >= k_lo, "higher acceptance sustains longer drafts ({k_lo} vs {k_hi})");
+    }
+
+    #[test]
+    fn alpha_estimator_tracks_the_score_table() {
+        let n = 4usize;
+        let parent = Arch::parent(n);
+        let mut table = ScoreTable { metric_name: "kl".into(), ..Default::default() };
+        for l in 0..n {
+            table.set(l, "attn", "gqa_r4", 0.05);
+            table.set(l, "attn", "linear", 1.5);
+            table.set(l, "ffn", "r25", 0.1);
+        }
+        // parent blocks score 0 by construction: α̂ is exactly 1
+        assert_eq!(estimate_alpha(&table, &parent), 1.0);
+        // a light substitution keeps α̂ high...
+        let mut light = parent.clone();
+        light.layers[0].0 = AttnChoice::Gqa { divisor: 4 };
+        let a_light = estimate_alpha(&table, &light);
+        assert!(a_light > 0.7, "light child must keep a high α̂, got {a_light:.3}");
+        // ...heavier substitution strictly lowers it, and α̂ stays in [0, 1]
+        let mut heavy = light.clone();
+        for l in 0..n {
+            heavy.layers[l].0 = AttnChoice::Linear;
+        }
+        let a_heavy = estimate_alpha(&table, &heavy);
+        assert!(a_heavy < a_light, "more KL must mean less acceptance");
+        assert!((0.0..=1.0).contains(&a_heavy) && (0.0..=1.0).contains(&a_light));
+    }
+
+    #[test]
+    fn estimated_ranking_prefers_the_low_kl_drafter_at_equal_cost() {
+        let man = paper_scale();
+        let n = man.cfg.n_layers;
+        let parent = Arch::parent(n);
+        // two children with identical compute cost but different scores
+        let mut good = parent.clone();
+        let mut bad = parent.clone();
+        for l in 0..n {
+            good.layers[l].0 = AttnChoice::Gqa { divisor: 4 };
+            bad.layers[l].0 = AttnChoice::Gqa { divisor: 4 };
+        }
+        let mut table = ScoreTable { metric_name: "kl".into(), ..Default::default() };
+        for l in 0..n {
+            table.set(l, "attn", "gqa_r4", 0.001);
+        }
+        // `bad` additionally swaps in FFNs the table scores terribly
+        for l in 0..n {
+            bad.layers[l].1 = FfnChoice::Ratio(6); // "r10"
+            table.set(l, "ffn", "r10", 2.0);
+        }
+        let hw = HwProfile::h100_fp8();
+        let ranked =
+            rank_drafters_estimated(&man, &parent, &[bad.clone(), good.clone()], &table, &hw, 512, 4);
+        assert_eq!(ranked.len(), 2);
+        // `bad` is CHEAPER (smaller FFN) yet its predicted α is so low the
+        // well-matched child must still win the draft-value ranking
+        assert_eq!(ranked[0].0, 1, "score-table α must drive the ranking");
+    }
+
+    #[test]
+    fn ktuner_adapts_k_downward_when_alpha_collapses() {
+        let man = paper_scale();
+        let n = man.cfg.n_layers;
+        let parent = Arch::parent(n);
+        let mut child = parent.clone();
+        for l in 0..n {
+            child.layers[l] = (AttnChoice::Linear, FfnChoice::Ratio(6));
+        }
+        let hw = HwProfile::h100_fp8();
+        let model = SpecModel::new(&man, &parent, &child, &hw, 512);
+        let k0 = 6usize;
+        // a hot drafter holds (or stretches) the draft length
+        let mut hot = KTuner::new(model.clone(), k0, 12);
+        assert_eq!(hot.k(), k0, "the pin holds until warmup");
+        for _ in 0..8 {
+            hot.observe(6, 6);
+        }
+        assert!(hot.alpha_hat() > 0.99);
+        assert!(hot.k() >= k0, "near-perfect acceptance must sustain long drafts");
+        // a MID-STREAM collapse re-tunes within a few rounds: the decayed
+        // window keeps the long hot history from averaging it away
+        for _ in 0..12 {
+            hot.observe(0, 6);
+        }
+        assert!(hot.alpha_hat() < 0.5, "the window must forget the hot past");
+        assert!(hot.k() < k0, "collapse must shorten drafts, got {}", hot.k());
+        // a drafter that is cold from the start is cut back hard
+        let mut cold = KTuner::new(model, k0, 12);
+        for _ in 0..8 {
+            cold.observe(0, 6);
+        }
+        assert_eq!(cold.alpha_hat(), 0.0);
+        assert!(cold.k() < k0, "collapsed acceptance must shorten drafts, got {}", cold.k());
+        assert_eq!(cold.k(), 1, "at α = 0 every drafted token is wasted work");
     }
 
     #[test]

@@ -8,20 +8,26 @@ pub mod svd;
 use crate::util::Rng;
 
 #[derive(Debug, Clone, PartialEq)]
+/// Dense row-major f32 tensor.
 pub struct Tensor {
+    /// Dimension sizes, outermost first.
     pub shape: Vec<usize>,
+    /// Row-major element storage.
     pub data: Vec<f32>,
 }
 
 impl Tensor {
+    /// All-zeros tensor.
     pub fn zeros(shape: &[usize]) -> Tensor {
         Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
     }
 
+    /// All-ones tensor.
     pub fn ones(shape: &[usize]) -> Tensor {
         Tensor { shape: shape.to_vec(), data: vec![1.0; shape.iter().product()] }
     }
 
+    /// Wrap `data` (length must equal the shape's product).
     pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
         assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
         Tensor { shape: shape.to_vec(), data }
@@ -33,23 +39,28 @@ impl Tensor {
         Tensor { shape: shape.to_vec(), data: (0..n).map(|_| rng.normal() * std).collect() }
     }
 
+    /// Total element count.
     pub fn numel(&self) -> usize {
         self.data.len()
     }
 
+    /// Leading dimension (2-D).
     pub fn rows(&self) -> usize {
         self.shape[0]
     }
 
+    /// Trailing dimension (2-D).
     pub fn cols(&self) -> usize {
         assert_eq!(self.shape.len(), 2);
         self.shape[1]
     }
 
+    /// Element (i, j) of a 2-D tensor.
     pub fn at2(&self, i: usize, j: usize) -> f32 {
         self.data[i * self.cols() + j]
     }
 
+    /// Set element (i, j) of a 2-D tensor.
     pub fn set2(&mut self, i: usize, j: usize, v: f32) {
         let c = self.cols();
         self.data[i * c + j] = v;
@@ -80,6 +91,7 @@ impl Tensor {
         Tensor { shape: vec![m, n], data: out }
     }
 
+    /// 2-D transpose.
     pub fn transpose(&self) -> Tensor {
         assert_eq!(self.shape.len(), 2);
         let (m, n) = (self.shape[0], self.shape[1]);
@@ -92,10 +104,12 @@ impl Tensor {
         Tensor { shape: vec![n, m], data: out }
     }
 
+    /// Scalar multiply.
     pub fn scale(&self, s: f32) -> Tensor {
         Tensor { shape: self.shape.clone(), data: self.data.iter().map(|x| x * s).collect() }
     }
 
+    /// Elementwise sum (shapes must match).
     pub fn add(&self, other: &Tensor) -> Tensor {
         assert_eq!(self.shape, other.shape);
         Tensor {
@@ -104,6 +118,7 @@ impl Tensor {
         }
     }
 
+    /// Elementwise difference (shapes must match).
     pub fn sub(&self, other: &Tensor) -> Tensor {
         assert_eq!(self.shape, other.shape);
         Tensor {
@@ -112,6 +127,7 @@ impl Tensor {
         }
     }
 
+    /// Frobenius norm.
     pub fn frob_norm(&self) -> f32 {
         self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
     }

@@ -6,9 +6,13 @@
 
 use super::Tensor;
 
+/// Singular value decomposition A = U diag(s) Vᵀ.
 pub struct Svd {
+    /// Left singular vectors [m, r].
     pub u: Tensor,      // [m, r]
+    /// Singular values, descending.
     pub s: Vec<f32>,    // [r], descending
+    /// Right singular vectors, transposed [r, n].
     pub vt: Tensor,     // [r, n]
 }
 

@@ -7,12 +7,19 @@ use std::collections::HashMap;
 use crate::tensor::Tensor;
 
 #[derive(Debug, Clone)]
+/// Adam hyperparameters.
 pub struct AdamCfg {
+    /// Learning rate.
     pub lr: f32,
+    /// First-moment decay.
     pub beta1: f32,
+    /// Second-moment decay.
     pub beta2: f32,
+    /// Denominator epsilon.
     pub eps: f32,
+    /// Decoupled weight decay (0 = off).
     pub weight_decay: f32,
+    /// Global gradient-norm clip (<= 0 disables).
     pub grad_clip: f32,
 }
 
@@ -28,13 +35,17 @@ struct Slot {
     v: Vec<f32>,
 }
 
+/// Adam state over named parameters.
 pub struct Adam {
+    /// Hyperparameters.
     pub cfg: AdamCfg,
+    /// Step counter (bias correction).
     pub t: u64,
     slots: HashMap<String, Slot>,
 }
 
 impl Adam {
+    /// Fresh optimizer state under `cfg`.
     pub fn new(cfg: AdamCfg) -> Adam {
         Adam { cfg, t: 0, slots: HashMap::new() }
     }

@@ -27,12 +27,16 @@ pub use adam::{lr_schedule, Adam, AdamCfg};
 /// Which loss components drive the step (paper Table 1 combinations).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct LossSpec {
+    /// Next-token cross-entropy against the data.
     pub lm: bool,
+    /// Per-layer hidden-state cosine distance to the parent.
     pub cosine: bool,
+    /// KL divergence of logits to the parent.
     pub kld: bool,
 }
 
 impl LossSpec {
+    /// Plain language-model pretraining (no parent).
     pub fn lm_only() -> LossSpec {
         LossSpec { lm: true, cosine: false, kld: false }
     }
@@ -42,6 +46,7 @@ impl LossSpec {
         LossSpec { lm: false, cosine: true, kld: true }
     }
 
+    /// Short label, e.g. "cos+KLD".
     pub fn name(&self) -> String {
         let mut parts = vec![];
         if self.lm {
@@ -62,10 +67,15 @@ impl LossSpec {
 }
 
 #[derive(Debug, Clone, Default)]
+/// Loss values of one training step.
 pub struct StepMetrics {
+    /// Total weighted loss.
     pub loss: f64,
+    /// LM component (0 when disabled).
     pub lm: f64,
+    /// Cosine component (0 when disabled).
     pub cosine: f64,
+    /// KLD component (0 when disabled).
     pub kld: f64,
 }
 

@@ -3,13 +3,16 @@
 use std::collections::BTreeMap;
 
 #[derive(Debug, Clone, Default)]
+/// Parsed command line: positionals + `--key value` pairs + flags.
 pub struct Args {
+    /// Positional arguments in order.
     pub positional: Vec<String>,
     kv: BTreeMap<String, String>,
     flags: Vec<String>,
 }
 
 impl Args {
+    /// Parse raw argv tokens.
     pub fn parse(argv: &[String]) -> Args {
         let mut a = Args::default();
         let mut i = 0;
@@ -32,31 +35,38 @@ impl Args {
         a
     }
 
+    /// Parse the process's own arguments.
     pub fn from_env() -> Args {
         let argv: Vec<String> = std::env::args().skip(1).collect();
         Args::parse(&argv)
     }
 
+    /// Raw value of `--key`, if given.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.kv.get(key).map(|s| s.as_str())
     }
 
+    /// String value of `--key`, or `default`.
     pub fn str(&self, key: &str, default: &str) -> String {
         self.get(key).unwrap_or(default).to_string()
     }
 
+    /// usize value of `--key`, or `default`.
     pub fn usize(&self, key: &str, default: usize) -> usize {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// u64 value of `--key`, or `default`.
     pub fn u64(&self, key: &str, default: u64) -> u64 {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// f64 value of `--key`, or `default`.
     pub fn f64(&self, key: &str, default: f64) -> f64 {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Whether `--key` was given as a bare flag (or `--key true`).
     pub fn flag(&self, key: &str) -> bool {
         self.flags.iter().any(|f| f == key) || self.get(key).map(|v| v == "true").unwrap_or(false)
     }

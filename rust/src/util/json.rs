@@ -9,20 +9,29 @@ use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
 #[derive(Debug, Clone, PartialEq)]
+/// A parsed JSON value (hand-rolled; serde is reserved for stores).
 pub enum Json {
+    /// JSON null.
     Null,
+    /// JSON boolean.
     Bool(bool),
+    /// JSON number (always f64).
     Num(f64),
+    /// JSON string.
     Str(String),
+    /// JSON array.
     Arr(Vec<Json>),
+    /// JSON object as ordered key-value pairs.
     Obj(Vec<(String, Json)>),
 }
 
 impl Json {
+    /// An empty object.
     pub fn obj() -> Json {
         Json::Obj(Vec::new())
     }
 
+    /// Set `key` on an object (replacing an existing entry).
     pub fn set(&mut self, key: &str, val: Json) {
         if let Json::Obj(m) = self {
             if let Some(e) = m.iter_mut().find(|(k, _)| k == key) {
@@ -35,6 +44,7 @@ impl Json {
         }
     }
 
+    /// Member lookup on an object.
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.iter().find(|(k, _)| k == key).map(|(_, v)| v),
@@ -42,6 +52,7 @@ impl Json {
         }
     }
 
+    /// Index into an array.
     pub fn idx(&self, i: usize) -> Option<&Json> {
         match self {
             Json::Arr(a) => a.get(i),
@@ -49,6 +60,7 @@ impl Json {
         }
     }
 
+    /// Numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -56,10 +68,12 @@ impl Json {
         }
     }
 
+    /// Numeric value as usize, if integral.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
 
+    /// String value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -67,6 +81,7 @@ impl Json {
         }
     }
 
+    /// Boolean value, if this is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -74,6 +89,7 @@ impl Json {
         }
     }
 
+    /// Element slice, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -81,6 +97,7 @@ impl Json {
         }
     }
 
+    /// Key-value slice, if this is an object.
     pub fn as_obj(&self) -> Option<&[(String, Json)]> {
         match self {
             Json::Obj(m) => Some(m),
@@ -93,28 +110,34 @@ impl Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// A number value.
     pub fn num(n: f64) -> Json {
         Json::Num(n)
     }
 
+    /// A string value.
     pub fn str(s: &str) -> Json {
         Json::Str(s.to_string())
     }
 
+    /// An array of numbers.
     pub fn arr_f64(v: &[f64]) -> Json {
         Json::Arr(v.iter().map(|x| Json::Num(*x)).collect())
     }
 
+    /// An array of numbers from usizes.
     pub fn arr_usize(v: &[usize]) -> Json {
         Json::Arr(v.iter().map(|x| Json::Num(*x as f64)).collect())
     }
 
+    /// Compact serialization.
     pub fn to_string(&self) -> String {
         let mut s = String::new();
         self.write(&mut s, 0, false);
         s
     }
 
+    /// Pretty-printed serialization (2-space indent).
     pub fn to_pretty(&self) -> String {
         let mut s = String::new();
         self.write(&mut s, 0, true);
@@ -177,6 +200,7 @@ impl Json {
         }
     }
 
+    /// Parse JSON text.
     pub fn parse(text: &str) -> Result<Json, String> {
         let mut p = Parser { b: text.as_bytes(), i: 0 };
         p.ws();

@@ -5,10 +5,12 @@ use std::time::Instant;
 
 static LEVEL: AtomicU8 = AtomicU8::new(2); // 0=quiet 1=warn 2=info 3=debug
 
+/// Set the global verbosity (0=quiet 1=warn 2=info 3=debug).
 pub fn set_level(level: u8) {
     LEVEL.store(level, Ordering::Relaxed);
 }
 
+/// Current global verbosity.
 pub fn level() -> u8 {
     LEVEL.load(Ordering::Relaxed)
 }
@@ -19,6 +21,7 @@ fn t0() -> Instant {
     *T0.get_or_init(Instant::now)
 }
 
+/// Write one line at `lvl` if the global level allows it.
 pub fn log(lvl: u8, tag: &str, msg: &str) {
     if lvl <= level() {
         let dt = t0().elapsed().as_secs_f64();
@@ -27,16 +30,19 @@ pub fn log(lvl: u8, tag: &str, msg: &str) {
 }
 
 #[macro_export]
+/// Log at info level with `format!` arguments.
 macro_rules! info {
     ($($arg:tt)*) => { $crate::util::log::log(2, "info", &format!($($arg)*)) };
 }
 
 #[macro_export]
+/// Log at warn level with `format!` arguments.
 macro_rules! warn {
     ($($arg:tt)*) => { $crate::util::log::log(1, "warn", &format!($($arg)*)) };
 }
 
 #[macro_export]
+/// Log at debug level with `format!` arguments.
 macro_rules! debug {
     ($($arg:tt)*) => { $crate::util::log::log(3, "debug", &format!($($arg)*)) };
 }

@@ -16,14 +16,17 @@ use std::time::Instant;
 pub struct Timer(Instant);
 
 impl Timer {
+    /// Start timing now.
     pub fn start() -> Self {
         Timer(Instant::now())
     }
 
+    /// Elapsed seconds since `start`.
     pub fn secs(&self) -> f64 {
         self.0.elapsed().as_secs_f64()
     }
 
+    /// Elapsed milliseconds since `start`.
     pub fn ms(&self) -> f64 {
         self.secs() * 1e3
     }

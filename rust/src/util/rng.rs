@@ -5,12 +5,14 @@
 //! baselines) takes an explicit `Rng` so runs are reproducible end to end.
 
 #[derive(Debug, Clone)]
+/// PCG32 stream (state + stream-selector increment).
 pub struct Rng {
     state: u64,
     inc: u64,
 }
 
 impl Rng {
+    /// A stream seeded by `seed` (different seeds, independent streams).
     pub fn new(seed: u64) -> Self {
         let mut r = Rng { state: 0, inc: (seed << 1) | 1 };
         r.next_u32();
@@ -24,6 +26,7 @@ impl Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9e3779b97f4a7c15))
     }
 
+    /// Next raw 32-bit output.
     pub fn next_u32(&mut self) -> u32 {
         let old = self.state;
         self.state = old.wrapping_mul(6364136223846793005).wrapping_add(self.inc);
@@ -32,6 +35,7 @@ impl Rng {
         xorshifted.rotate_right(rot)
     }
 
+    /// Next raw 64-bit output (two 32-bit draws).
     pub fn next_u64(&mut self) -> u64 {
         ((self.next_u32() as u64) << 32) | self.next_u32() as u64
     }
@@ -41,6 +45,7 @@ impl Rng {
         (self.next_u32() >> 8) as f32 / (1u32 << 24) as f32
     }
 
+    /// Uniform f64 in [0, 1).
     pub fn f64(&mut self) -> f64 {
         (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
     }
@@ -51,6 +56,7 @@ impl Rng {
         (self.next_u64() % n as u64) as usize
     }
 
+    /// Uniform integer in [lo, hi).
     pub fn range(&mut self, lo: usize, hi: usize) -> usize {
         lo + self.below(hi - lo)
     }
@@ -62,6 +68,7 @@ impl Rng {
         (-2.0 * u1.ln()).sqrt() * (2.0 * std::f32::consts::PI * u2).cos()
     }
 
+    /// Fisher-Yates shuffle in place.
     pub fn shuffle<T>(&mut self, v: &mut [T]) {
         for i in (1..v.len()).rev() {
             let j = self.below(i + 1);
@@ -69,6 +76,7 @@ impl Rng {
         }
     }
 
+    /// Uniformly chosen element (panics on empty).
     pub fn choice<'a, T>(&mut self, v: &'a [T]) -> &'a T {
         &v[self.below(v.len())]
     }
@@ -96,6 +104,7 @@ pub struct ZipfTable {
 }
 
 impl ZipfTable {
+    /// A table over ranks 1..=n with exponent `s`.
     pub fn new(n: usize, s: f64) -> Self {
         let mut cdf = Vec::with_capacity(n);
         let mut acc = 0.0;
@@ -110,6 +119,7 @@ impl ZipfTable {
         ZipfTable { cdf }
     }
 
+    /// Draw one rank index in [0, n).
     pub fn sample(&self, rng: &mut Rng) -> usize {
         let u = rng.f64();
         match self.cdf.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {

@@ -1,14 +1,17 @@
 //! Named-tensor store with a simple binary on-disk format (`.pzw`).
 //!
 //! Key convention:
-//!   `embed`                     [V, D]
-//!   `final_norm`                [D]
-//!   `L{i}.attn@{variant}.{w}`   block-library entry for layer i
-//!   `L{i}.ffn@{variant}.{w}`
+//!
+//! ```text
+//! embed                     [V, D]
+//! final_norm                [D]
+//! L{i}.attn@{variant}.{w}   block-library entry for layer i
+//! L{i}.ffn@{variant}.{w}
+//! ```
 //!
 //! The parent model is simply the library entries at `gqa_r1` / `r100`.
 //! Format: magic "PZW1", u32 count, then per entry:
-//!   u32 key_len, key bytes, u32 ndim, u64 dims..., f32 data...
+//! u32 key_len, key bytes, u32 ndim, u64 dims, f32 data
 //! (little-endian throughout).
 
 use std::collections::BTreeMap;
@@ -22,27 +25,34 @@ use crate::tensor::Tensor;
 use crate::util::Rng;
 
 #[derive(Debug, Clone, Default)]
+/// Named weight tensors (parent + block library + children).
 pub struct Store {
+    /// Key -> tensor, ordered for stable serialization.
     pub map: BTreeMap<String, Tensor>,
 }
 
+/// Canonical key of one block weight: `L{layer}.{kind}@{variant}.{w}`.
 pub fn block_key(layer: usize, kind: &str, variant: &str, w: &str) -> String {
     format!("L{layer}.{kind}@{variant}.{w}")
 }
 
 impl Store {
+    /// An empty store.
     pub fn new() -> Store {
         Store::default()
     }
 
+    /// Insert or replace a tensor.
     pub fn put(&mut self, key: &str, t: Tensor) {
         self.map.insert(key.to_string(), t);
     }
 
+    /// Borrow a tensor; errors with the missing key's name.
     pub fn get(&self, key: &str) -> Result<&Tensor> {
         self.map.get(key).ok_or_else(|| anyhow!("missing weight {key}"))
     }
 
+    /// Whether `key` exists.
     pub fn has(&self, key: &str) -> bool {
         self.map.contains_key(key)
     }
@@ -65,6 +75,7 @@ impl Store {
             .collect()
     }
 
+    /// Insert a whole block's weights in layout order.
     pub fn put_block(&mut self, layer: usize, kind: &str, variant: &str, layout: &VariantLayout, ws: Vec<Tensor>) {
         assert_eq!(ws.len(), layout.weights.len());
         for ((name, _), t) in layout.weights.iter().zip(ws) {
@@ -72,12 +83,14 @@ impl Store {
         }
     }
 
+    /// Total parameters across all tensors.
     pub fn total_params(&self) -> usize {
         self.map.values().map(|t| t.numel()).sum()
     }
 
     // ---------------- binary serialization ----------------
 
+    /// Serialize to a `.pzw` file (bincode-free custom format).
     pub fn save(&self, path: &Path) -> Result<()> {
         let mut f = std::io::BufWriter::new(
             std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?,
@@ -100,6 +113,7 @@ impl Store {
         Ok(())
     }
 
+    /// Load a `.pzw` file written by `save`.
     pub fn load(path: &Path) -> Result<Store> {
         let mut f = std::io::BufReader::new(
             std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,

@@ -1,18 +1,22 @@
 //! Speculative-decoding integration tests: the correctness invariant
 //! (greedy speculative output is byte-identical to plain greedy parent
-//! decoding — any draft length, any drafter, chunked prompts included),
-//! exact KV rollback at both the engine and the page-accounting level,
-//! seeded reproducibility of stochastic speculation, and the analytic
-//! speedup model validated against a measured run. Hermetic: RefBackend
-//! over the in-memory synthetic manifest.
+//! decoding — any draft length, any drafter, chunked prompts included,
+//! batched or not), the fused-verify ≡ sequential-decode logits
+//! equivalence, exact KV rollback at both the engine and the
+//! page-accounting level (including one lane rolling back while others
+//! advance), seeded reproducibility of stochastic speculation, and the
+//! analytic speedup model validated against a measured run. Hermetic:
+//! RefBackend over the in-memory synthetic manifest.
 
 use puzzle::arch::{Arch, AttnChoice, FfnChoice};
 use puzzle::bld;
 use puzzle::data::world::EOS;
 use puzzle::data::{corpus::sample_sequence, CorpusMix, World};
 use puzzle::runtime::{share, Backend, SharedBackend};
-use puzzle::serving::{EngineConfig, FinishReason, GenRequest, SamplingParams};
-use puzzle::specdec::{expected_tokens_per_pass, SpecConfig, SpecSession};
+use puzzle::serving::{EngineConfig, FinishReason, GenRequest, SamplingParams, SpecFeed};
+use puzzle::specdec::{
+    expected_tokens_per_pass, SpecBatch, SpecConfig, SpecRequest, SpecSession,
+};
 use puzzle::util::Rng;
 use puzzle::weights::store::{block_key, init_parent};
 use puzzle::weights::Store;
@@ -118,7 +122,7 @@ fn greedy_speculative_is_byte_identical_to_plain_decoding() {
                 &parent,
                 &store,
                 drafter_arch,
-                SpecConfig { draft_k, engine: EngineConfig::new().kv_budget_bytes(32 << 20) },
+                SpecConfig { draft_k, engine: EngineConfig::new().kv_budget_bytes(32 << 20), ..Default::default() },
             )
             .unwrap();
             for (p, want) in prompts.iter().zip(&oracle) {
@@ -159,7 +163,7 @@ fn horizon_reaching_prompts_stay_byte_identical() {
             &parent,
             &store,
             &parent,
-            SpecConfig { draft_k, engine: EngineConfig::new().kv_budget_bytes(32 << 20) },
+            SpecConfig { draft_k, engine: EngineConfig::new().kv_budget_bytes(32 << 20), ..Default::default() },
         )
         .unwrap();
         let r = sess.generate(&prompt, max_new, SamplingParams::greedy()).unwrap();
@@ -189,7 +193,7 @@ fn self_drafter_accepts_everything_and_amortizes_k_plus_1() {
         &parent,
         &store,
         &parent,
-        SpecConfig { draft_k: k, engine: EngineConfig::new().kv_budget_bytes(32 << 20) },
+        SpecConfig { draft_k: k, engine: EngineConfig::new().kv_budget_bytes(32 << 20), ..Default::default() },
     )
     .unwrap();
     let r = sess.generate(&[1, y], max_new, SamplingParams::greedy()).unwrap();
@@ -234,7 +238,7 @@ fn speedup_model_matches_measured_acceptance_within_tolerance() {
         &parent,
         &store,
         &child,
-        SpecConfig { draft_k: k, engine: EngineConfig::new().kv_budget_bytes(32 << 20) },
+        SpecConfig { draft_k: k, engine: EngineConfig::new().kv_budget_bytes(32 << 20), ..Default::default() },
     )
     .unwrap();
     let mut prng = Rng::new(12);
@@ -284,7 +288,7 @@ fn stochastic_speculation_is_seed_reproducible() {
             &parent,
             &store,
             &child,
-            SpecConfig { draft_k: 3, engine: EngineConfig::new().kv_budget_bytes(32 << 20) },
+            SpecConfig { draft_k: 3, engine: EngineConfig::new().kv_budget_bytes(32 << 20), ..Default::default() },
         )
         .unwrap();
         sess.generate(&prompt, 12, SamplingParams::temperature(0.9).with_seed(seed))
@@ -342,10 +346,12 @@ fn engine_rollback_is_exact_recompute() {
 
 #[test]
 fn speculative_and_batched_modes_are_mutually_exclusive() {
-    // a decode forward teacher-forces garbage into idle lanes' position 0
-    // — harmless for empty lanes (prefill overwrites), fatal for a live
-    // sequence in another lane — so an engine serves either batched
-    // requests or ONE speculative sequence at a time, enforced both ways
+    // a batched decode step teacher-forces garbage into idle lanes'
+    // position 0 — harmless for empty lanes (prefill overwrites), fatal
+    // for a live speculative sequence — so an engine serves either
+    // batched requests or speculative sequences, never both. Speculative
+    // sequences coexist with EACH OTHER (the spec-path forwards park
+    // unfed lanes at their own frontier), up to the decode lane count.
     let be = backend();
     let y = 10u32;
     let mut rng = Rng::new(38);
@@ -355,7 +361,11 @@ fn speculative_and_batched_modes_are_mutually_exclusive() {
 
     let (sid, _) = eng.spec_open(&[1, y]).unwrap();
     assert!(eng.submit(GenRequest::new(vec![1, y], 4)).is_err(), "batched submit must be refused in speculative mode");
-    assert!(eng.spec_open(&[1, y]).is_err(), "one speculative sequence per engine");
+    let (sid2, _) = eng.spec_open(&[1, y, y]).unwrap();
+    assert_eq!(eng.spec_active(), 2, "speculative sequences share the decode lanes");
+    assert_eq!(eng.decode_lanes(), 2, "tiny config compiles 2 decode lanes");
+    assert!(eng.spec_open(&[1, y]).is_err(), "no third sequence: every lane is pinned");
+    eng.spec_close(sid2);
     eng.spec_close(sid);
 
     // back to batched mode: the lane is clean (prefill overwrites it)
@@ -416,11 +426,227 @@ fn eos_inside_an_accepted_draft_stops_the_stream() {
         &parent,
         &store,
         &parent,
-        SpecConfig { draft_k: 6, engine: EngineConfig::new().kv_budget_bytes(32 << 20) },
+        SpecConfig { draft_k: 6, engine: EngineConfig::new().kv_budget_bytes(32 << 20), ..Default::default() },
     )
     .unwrap();
     let r = sess.generate(&[1, y], 10, SamplingParams::greedy()).unwrap();
     assert_eq!(r.tokens, vec![z, EOS]);
     assert_eq!(r.finish, FinishReason::Eos);
     assert_eq!(sess.kv_allocated_bytes(), (0, 0));
+}
+
+#[test]
+fn batched_spec_equivalence_matrix() {
+    // N ∈ {1, 2, 4} sequences (4 oversubscribes the 2 decode lanes, so
+    // the waiting requests backfill as lanes finish) × unchunked and
+    // chunked prompts: every sequence in the batch must be byte-identical
+    // to plain greedy parent decoding, and both engines must hand back
+    // every page.
+    let be = backend();
+    let cfg = be.man().cfg.clone();
+    let mut rng = Rng::new(51);
+    let mut store = init_parent(be.man(), &mut rng);
+    let child = child_arch(&*be, &mut store);
+    let parent = Arch::parent(cfg.n_layers);
+    let world = World::new(5, cfg.v as u32);
+    let mix = CorpusMix::distillation_mix();
+    let mut prng = Rng::new(9);
+    let mut prompts: Vec<Vec<u32>> = Vec::new();
+    for len in [4usize, 9, 14] {
+        prompts.push(sample_sequence(&world, &mix, len, &mut prng));
+    }
+    // one prompt past the prefill window: the chunked spec_open path
+    prompts.push(sample_sequence(&world, &mix, cfg.s_prefill, &mut prng));
+    assert!(prompts.last().unwrap().len() > cfg.s_prefill);
+
+    let max_new = 8usize;
+    let oracle = plain_greedy(&be, &store, &parent, &prompts, max_new);
+
+    for n in [1usize, 2, 4] {
+        let mut batch = SpecBatch::new(
+            be.clone(),
+            &store,
+            &parent,
+            &store,
+            &child,
+            SpecConfig { draft_k: 3, engine: EngineConfig::new().kv_budget_bytes(32 << 20), ..Default::default() },
+        )
+        .unwrap();
+        let reqs: Vec<SpecRequest> =
+            prompts.iter().take(n).map(|p| SpecRequest::new(p.clone(), max_new)).collect();
+        let rs = batch.generate_many(&reqs).unwrap();
+        assert_eq!(rs.len(), n);
+        for (i, r) in rs.iter().enumerate() {
+            assert_eq!(
+                r.tokens, oracle[i],
+                "N={n}, seq {i}: batched greedy speculation must match plain greedy"
+            );
+            assert!(matches!(r.finish, FinishReason::Eos | FinishReason::MaxNew));
+        }
+        // exact rollback across the whole batch: no pages may survive
+        assert_eq!(batch.kv_allocated_bytes(), (0, 0), "N={n}: KV pages leaked");
+        // the verify passes actually took the fused path
+        assert!(
+            batch.parent_metrics().spec_fused_passes > 0,
+            "N={n}: fused multi-token verify must be exercised"
+        );
+    }
+}
+
+#[test]
+fn fused_verify_matches_sequential_decode_logits() {
+    // the Backend contract behind the fused path: the fused multi-token
+    // lowering and the sequential per-step lowering must produce
+    // bitwise-identical logits rows, for a single sequence and for two
+    // sequences extended together (ragged feeds).
+    let be = backend();
+    let mut rng = Rng::new(52);
+    let store = init_parent(be.man(), &mut rng);
+    let parent = Arch::parent(be.man().cfg.n_layers);
+    let pa = vec![1u32, 5, 9, 2];
+    let pb = vec![3u32, 7];
+    let feed_a = [11u32, 4, 8, 6, 2];
+    let feed_b = [13u32, 10, 1];
+
+    let run = |fused: bool| {
+        let mut eng = EngineConfig::new()
+            .kv_budget_bytes(32 << 20)
+            .fused_verify(fused)
+            .build(be.clone(), &store, &parent)
+            .unwrap();
+        let (ida, first_a) = eng.spec_open(&pa).unwrap();
+        let (idb, first_b) = eng.spec_open(&pb).unwrap();
+        let rows = eng
+            .spec_extend_batch(&[
+                SpecFeed { id: ida, tokens: &feed_a, collect_from: 0 },
+                SpecFeed { id: idb, tokens: &feed_b, collect_from: 1 },
+            ])
+            .unwrap();
+        let fused_passes = eng.metrics.spec_fused_passes;
+        eng.spec_close(ida);
+        eng.spec_close(idb);
+        assert_eq!(eng.kv_allocated_bytes(), 0);
+        (first_a, first_b, rows, fused_passes)
+    };
+    let (fa1, fb1, rows_fused, fp1) = run(true);
+    let (fa2, fb2, rows_seq, fp0) = run(false);
+    assert!(fp1 > 0, "fused engine must fuse");
+    assert_eq!(fp0, 0, "fused_verify(false) must lower sequentially");
+    assert_eq!(fa1, fa2);
+    assert_eq!(fb1, fb2);
+    assert_eq!(rows_fused.len(), 2);
+    assert_eq!(rows_fused[0].len(), feed_a.len());
+    assert_eq!(rows_fused[1].len(), feed_b.len() - 1, "collect_from skips early rows");
+    assert_eq!(rows_fused, rows_seq, "fused and sequential logits must agree bitwise");
+
+    // batch composition must not change a sequence's logits: a solo run
+    // of sequence A gives the same rows as the two-lane batch
+    let mut solo = EngineConfig::new()
+        .kv_budget_bytes(32 << 20)
+        .build(be.clone(), &store, &parent)
+        .unwrap();
+    let (id, first) = solo.spec_open(&pa).unwrap();
+    assert_eq!(first, fa1);
+    let solo_rows = solo.spec_extend(id, &feed_a, 0).unwrap();
+    assert_eq!(solo_rows, rows_fused[0], "a co-batched lane must see identical logits");
+    solo.spec_close(id);
+}
+
+#[test]
+fn page_accounting_exact_when_one_lane_rolls_back() {
+    // two speculative sequences share the pool; one rolls back while the
+    // other advances — the freed bytes must be exactly the rolled-back
+    // lane's growth, bit-for-bit in the allocator's accounting.
+    let be = backend();
+    let mut rng = Rng::new(53);
+    let store = init_parent(be.man(), &mut rng);
+    let parent = Arch::parent(be.man().cfg.n_layers);
+    let mut eng =
+        EngineConfig::new().kv_budget_bytes(32 << 20).build(be.clone(), &store, &parent).unwrap();
+
+    // identical 16-token prompts: both sequences hold exactly one page
+    // per caching layer (page_len = 16), so growth deltas are symmetric
+    let prompt: Vec<u32> = (0..16u32).map(|i| i % 7 + 1).collect();
+    let (s1, _) = eng.spec_open(&prompt).unwrap();
+    let per_seq = eng.kv_allocated_bytes();
+    assert!(per_seq > 0);
+    let (s2, _) = eng.spec_open(&prompt).unwrap();
+    let b0 = eng.kv_allocated_bytes();
+    assert_eq!(b0, 2 * per_seq, "identical prompts must book identical pages");
+
+    // batch-extend both across a page boundary (16 -> 33 positions)
+    let ext: Vec<u32> = (0..17u32).map(|i| i % 5 + 1).collect();
+    eng.spec_extend_batch(&[
+        SpecFeed { id: s1, tokens: &ext, collect_from: ext.len() },
+        SpecFeed { id: s2, tokens: &ext, collect_from: ext.len() },
+    ])
+    .unwrap();
+    let b1 = eng.kv_allocated_bytes();
+    assert!(b1 > b0);
+    assert_eq!((b1 - b0) % 2, 0, "symmetric extensions must book symmetric pages");
+    let per_ext = (b1 - b0) / 2;
+
+    // lane 1 rolls back to its prompt; lane 2 keeps its extension
+    eng.spec_truncate(s1, 16).unwrap();
+    assert_eq!(eng.spec_len(s1).unwrap(), 16);
+    assert_eq!(eng.spec_len(s2).unwrap(), 33);
+    assert_eq!(
+        eng.kv_allocated_bytes(),
+        b0 + per_ext,
+        "rollback must free exactly the rolled-back lane's growth"
+    );
+
+    // the rolled-back lane can re-extend while the other is parked, and
+    // re-booking costs exactly what it freed
+    eng.spec_extend_batch(&[SpecFeed { id: s1, tokens: &ext, collect_from: ext.len() }]).unwrap();
+    assert_eq!(eng.kv_allocated_bytes(), b1);
+
+    eng.spec_close(s1);
+    assert_eq!(eng.kv_allocated_bytes(), per_seq + per_ext, "lane 2 must be untouched");
+    eng.spec_close(s2);
+    assert_eq!(eng.kv_allocated_bytes(), 0);
+}
+
+#[test]
+fn adaptive_draft_k_keeps_greedy_equivalence() {
+    // online draft-length tuning only gates wall-clock: with adaptation
+    // armed, batched greedy speculation stays byte-identical to plain
+    // greedy decoding (the invariant is per position, not per k)
+    let be = backend();
+    let cfg = be.man().cfg.clone();
+    let mut rng = Rng::new(54);
+    let mut store = init_parent(be.man(), &mut rng);
+    let child = child_arch(&*be, &mut store);
+    let parent = Arch::parent(cfg.n_layers);
+    let world = World::new(5, cfg.v as u32);
+    let mix = CorpusMix::distillation_mix();
+    let mut prng = Rng::new(13);
+    let prompts: Vec<Vec<u32>> =
+        [5usize, 8, 11].iter().map(|&l| sample_sequence(&world, &mix, l, &mut prng)).collect();
+    let max_new = 12usize;
+    let oracle = plain_greedy(&be, &store, &parent, &prompts, max_new);
+
+    let mut batch = SpecBatch::new(
+        be.clone(),
+        &store,
+        &parent,
+        &store,
+        &child,
+        SpecConfig {
+            draft_k: 4,
+            adapt_k_max: Some(6),
+            engine: EngineConfig::new().kv_budget_bytes(32 << 20),
+        },
+    )
+    .unwrap();
+    let reqs: Vec<SpecRequest> =
+        prompts.iter().map(|p| SpecRequest::new(p.clone(), max_new)).collect();
+    let rs = batch.generate_many(&reqs).unwrap();
+    for (i, r) in rs.iter().enumerate() {
+        assert_eq!(r.tokens, oracle[i], "adaptive k must not change content (seq {i})");
+    }
+    assert_eq!(batch.kv_allocated_bytes(), (0, 0));
+    let k = batch.current_draft_k();
+    assert!((1..=6).contains(&k), "tuned k must stay within 1..=k_max, got {k}");
+    assert!(batch.observed_alpha() >= 0.0 && batch.observed_alpha() <= 1.0);
 }

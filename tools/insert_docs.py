@@ -1,0 +1,28 @@
+#!/usr/bin/env python3
+"""Insert rustdoc lines above given 1-based line numbers.
+
+Driven by per-file dicts in docs specs: `python3 insert_docs.py <file> <spec.py>`
+where spec.py defines DOCS = {line_no: "one line" or ["multi", "line"]}.
+Indent is copied from the target line. Inserts bottom-up so numbers stay valid.
+"""
+import sys
+
+
+def apply(path, docs):
+    lines = open(path).read().splitlines(keepends=True)
+    for ln in sorted(docs, reverse=True):
+        target = lines[ln - 1]
+        indent = target[: len(target) - len(target.lstrip())]
+        text = docs[ln]
+        if isinstance(text, str):
+            text = [text]
+        ins = "".join(f"{indent}/// {t}\n" if t else f"{indent}///\n" for t in text)
+        lines.insert(ln - 1, ins)
+    open(path, "w").write("".join(lines))
+
+
+if __name__ == "__main__":
+    spec = {}
+    exec(open(sys.argv[2]).read(), spec)
+    apply(sys.argv[1], spec["DOCS"])
+    print(f"inserted {len(spec['DOCS'])} doc blocks into {sys.argv[1]}")

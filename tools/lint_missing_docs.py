@@ -1,0 +1,93 @@
+#!/usr/bin/env python3
+"""Heuristic pre-flight for rustc's `missing_docs` lint (no cargo in this
+container): flags public items, public struct fields, and public-enum
+variants that lack a doc comment or #[doc] attribute directly above.
+Over-approximates (pub items in private modules are flagged too); trait
+impls and `pub use` re-exports are skipped, matching the real lint.
+"""
+import re
+import sys
+from pathlib import Path
+
+ITEM = re.compile(r"^(\s*)pub (fn|struct|enum|trait|type|const|static|unsafe fn) ")
+FIELD = re.compile(r"^(\s+)pub [a-zA-Z_][a-zA-Z0-9_]*\s*:")
+VARIANT = re.compile(r"^(\s+)(?:#\[[^\]]*\]\s*)?[A-Z][A-Za-z0-9_]*(\s*\{|\s*\(|\s*,|\s*$|\s*=)")
+MACRO = re.compile(r"^\s*macro_rules!\s")
+
+
+def has_doc(lines, i):
+    j = i - 1
+    while j >= 0:
+        t = lines[j].strip()
+        if t.startswith("///") or t.startswith("#[doc") or t.endswith("*/"):
+            return True
+        if t.startswith("#[") or t.startswith("#!["):  # other attrs: keep looking up
+            j -= 1
+            continue
+        if t == "":
+            return False
+        return False
+    return False
+
+
+def scan(path):
+    lines = path.read_text().splitlines()
+    out = []
+    enum_depth = None  # indentation depth inside a pub enum body
+    brace = 0
+    in_tests = False
+    test_depth = 0
+    exported_macro = False
+    for i, line in enumerate(lines):
+        stripped = line.strip()
+        if stripped.startswith("#[cfg(test)]"):
+            in_tests = True
+            test_depth = brace
+        if in_tests and brace < test_depth and stripped.startswith("}"):
+            in_tests = False
+        opens = line.count("{") - line.count("}")
+        if not in_tests:
+            if stripped.startswith("#[macro_export]"):
+                exported_macro = True
+            elif MACRO.match(line) and exported_macro:
+                if not has_doc(lines, i):
+                    out.append((i + 1, "macro", stripped[:70]))
+                exported_macro = False
+            m = ITEM.match(line)
+            if m and "pub use" not in line:
+                if not has_doc(lines, i):
+                    out.append((i + 1, m.group(2), stripped[:70]))
+                if m.group(2) == "enum" and "{" in line and "}" not in line:
+                    enum_depth = brace
+            elif enum_depth is not None and brace == enum_depth + 1:
+                if FIELD.match(line) or VARIANT.match(line):
+                    if not has_doc(lines, i):
+                        out.append((i + 1, "variant", stripped[:70]))
+            elif FIELD.match(line) and enum_depth is None and brace >= 1:
+                if not has_doc(lines, i):
+                    out.append((i + 1, "field", stripped[:70]))
+        brace += opens
+        if enum_depth is not None and brace <= enum_depth:
+            enum_depth = None
+    return out
+
+
+def main():
+    root = Path(sys.argv[1] if len(sys.argv) > 1 else "rust/src")
+    total = 0
+    for p in sorted(root.rglob("*.rs")):
+        if p.name in ("main.rs", "literal.rs", "registry.rs", "xla_backend.rs"):
+            # bin crate / pjrt-feature-gated: not in the default docs build
+            continue
+        found = scan(p)
+        if found:
+            print(f"== {p} ({len(found)})")
+            for ln, kind, text in found:
+                print(f"  {ln:5} {kind:8} {text}")
+            total += len(found)
+    print(f"TOTAL {total}")
+    return 0 if total == 0 else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

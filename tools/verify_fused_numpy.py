@@ -1,0 +1,203 @@
+#!/usr/bin/env python3
+"""Toolchain-free cross-check of the fused multi-token decode kernel.
+
+The growth container has no cargo, so this transcribes the two Rust
+lowerings of the speculative verify pass into numpy, loop-for-loop:
+
+  * `seq_step`   — rust `attn_gqa_decode` (one decode step per token)
+  * `fused_pass` — rust `attn_gqa_decode_fused` (one pass over m tokens)
+
+and checks, on random inputs:
+
+  1. fused == m sequential steps, exactly (same arithmetic per row, same
+     accumulation order — the bitwise-equivalence claim of DESIGN.md §6),
+     including ragged lanes with parked padding;
+  2. the sequential transcription matches the independent JAX oracle
+     `python/compile/model.py::attn_gqa_decode` to float32 tolerance
+     (anchors the transcription itself);
+  3. lane isolation: garbage in cache rows past a lane's committed
+     length never changes any output (the masking/deadness rule).
+
+Run: PYTHONPATH=python python3 tools/verify_fused_numpy.py
+"""
+import numpy as np
+
+rng = np.random.default_rng(7)
+F = np.float32
+
+
+def rmsnorm(x, w, eps):  # rows of d
+    ms = (x.astype(F) ** 2).mean(axis=-1, keepdims=True)
+    r = 1.0 / np.sqrt(ms + F(eps))
+    return (x * r * w).astype(F)
+
+
+def rope(x, positions, theta):  # x [rows, heads, dh], positions [rows]
+    rows, heads, dh = x.shape
+    half = dh // 2
+    freqs = theta ** (-np.arange(half, dtype=F) / F(half))
+    ang = positions.astype(F)[:, None, None] * freqs  # [rows,1,half]
+    cos, sin = np.cos(ang).astype(F), np.sin(ang).astype(F)
+    x1, x2 = x[..., :half], x[..., half:]
+    return np.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1).astype(F)
+
+
+def softmax_row(q_row, kc_lane, pmax, scale):
+    # q_row [dh], kc_lane [smax, dh] for one kv group
+    dots = (kc_lane[: pmax + 1] @ q_row) * F(scale)
+    m = dots.max()
+    e = np.exp(dots - m)
+    return (e / e.sum()).astype(F)
+
+
+def attn_over_cache(qf, kc, vc, pos_row, b_index, h, kv, dh):
+    # qf [heads*dh] for one row; returns o [h*dh]
+    group = h // kv
+    scale = 1.0 / np.sqrt(F(dh))
+    o = np.zeros(h * dh, dtype=F)
+    for hi in range(h):
+        g = hi // group
+        q_row = qf[hi * dh : (hi + 1) * dh]
+        p = softmax_row(q_row, kc[b_index, :, g, :], pos_row, scale)
+        o[hi * dh : (hi + 1) * dh] = (p[:, None] * vc[b_index, : pos_row + 1, g, :]).sum(axis=0)
+    return o
+
+
+def seq_step(cfg, x, kc, vc, pos, w):
+    """rust attn_gqa_decode: x [b,1,d], caches [b,smax,kv,dh], pos [b]."""
+    h, dh, kv, eps, theta = cfg
+    b, _, d = x.shape
+    smax = kc.shape[1]
+    hn = rmsnorm(x.reshape(b, d), w["norm"], eps)
+    qf = rope((hn @ w["wq"]).reshape(b, h, dh), pos, theta)
+    kf = rope((hn @ w["wk"]).reshape(b, kv, dh), pos, theta)
+    vf = (hn @ w["wv"]).reshape(b, kv, dh)
+    kc2, vc2 = kc.copy(), vc.copy()
+    for bi in range(b):
+        p = int(pos[bi])
+        assert p < smax, "sequential path bails at the horizon"
+        kc2[bi, p] = kf[bi]
+        vc2[bi, p] = vf[bi]
+    y = np.empty((b, h * dh), dtype=F)
+    for bi in range(b):
+        y[bi] = attn_over_cache(qf[bi].reshape(h * dh), kc2, vc2, int(pos[bi]), bi, h, kv, dh)
+    out = x.reshape(b, d) + y @ w["wo"]
+    return out.astype(F).reshape(b, 1, d), kc2, vc2
+
+
+def fused_pass(cfg, x, kc, vc, pos, w):
+    """rust attn_gqa_decode_fused: x [b,m,d], pos [b] = first new position."""
+    h, dh, kv, eps, theta = cfg
+    b, m, d = x.shape
+    smax = kc.shape[1]
+    t = b * m
+    hn = rmsnorm(x.reshape(t, d), w["norm"], eps)
+    positions = np.array([int(pos[r // m]) + r % m for r in range(t)], dtype=np.int64)
+    qf = rope((hn @ w["wq"]).reshape(t, h, dh), positions, theta)
+    kf = rope((hn @ w["wk"]).reshape(t, kv, dh), positions, theta)
+    vf = (hn @ w["wv"]).reshape(t, kv, dh)
+    kc2, vc2 = kc.copy(), vc.copy()
+    for bi in range(b):
+        for j in range(m):
+            p = int(pos[bi]) + j
+            if p >= smax:
+                continue  # padded/parked overflow: dropped, never read
+            kc2[bi, p] = kf[bi * m + j]
+            vc2[bi, p] = vf[bi * m + j]
+    y = np.empty((t, h * dh), dtype=F)
+    for bi in range(b):
+        for j in range(m):
+            pmax = min(int(pos[bi]) + j, smax - 1)
+            y[bi * m + j] = attn_over_cache(
+                qf[bi * m + j].reshape(h * dh), kc2, vc2, pmax, bi, h, kv, dh
+            )
+    out = x.reshape(t, d) + y @ w["wo"]
+    return out.astype(F).reshape(b, m, d), kc2, vc2
+
+
+def main():
+    h, dh, kv, eps, theta = 4, 8, 2, 1e-5, 10000.0
+    cfg = (h, dh, kv, eps, theta)
+    b, smax, d = 2, 24, 32
+    w = {
+        "norm": rng.normal(0, 0.5, d).astype(F),
+        "wq": rng.normal(0, 0.2, (d, h * dh)).astype(F),
+        "wk": rng.normal(0, 0.2, (d, kv * dh)).astype(F),
+        "wv": rng.normal(0, 0.2, (d, kv * dh)).astype(F),
+        "wo": rng.normal(0, 0.2, (h * dh, d)).astype(F),
+    }
+    # committed prefixes: lane 0 holds 6 positions, lane 1 holds 3
+    kc = rng.normal(0, 0.3, (b, smax, kv, dh)).astype(F)
+    vc = rng.normal(0, 0.3, (b, smax, kv, dh)).astype(F)
+    committed = [6, 3]
+    m = 5  # lane 0 feeds 5 real tokens; lane 1 feeds 3 real + 2 padded
+    real = [5, 3]
+    x = rng.normal(0, 0.5, (b, m, d)).astype(F)
+    pos = np.array(committed, dtype=np.int64)
+
+    # --- 1. fused == sequential, exactly, on all real rows + cache ---
+    yf, kcf, vcf = fused_pass(cfg, x, kc, vc, pos, w)
+    kcs, vcs = kc, vc
+    ys = np.empty_like(yf)
+    for j in range(m):
+        # sequential lowering: at step j a lane past its feed is parked at
+        # its own frontier (dummy token 0 -> here: its own x row is fed to
+        # a dead position; the engine feeds token 0, but ANY values work
+        # since the row is discarded — use the same x for exactness)
+        xj = x[:, j : j + 1, :]
+        pj = np.array(
+            [committed[i] + min(j, real[i]) for i in range(b)], dtype=np.int64
+        )
+        yj, kcs, vcs = seq_step(cfg, xj, kcs, vcs, pj, w)
+        ys[:, j, :] = yj[:, 0, :]
+    for i in range(b):
+        r = real[i]
+        assert np.array_equal(yf[i, :r], ys[i, :r]), f"lane {i}: fused != sequential"
+        tot = committed[i] + r
+        assert np.array_equal(kcf[i, :tot], kcs[i, :tot]), f"lane {i}: K cache diverged"
+        assert np.array_equal(vcf[i, :tot], vcs[i, :tot]), f"lane {i}: V cache diverged"
+    print("1. fused == sequential on every real row and cache position (exact) ✓")
+
+    # --- 2. anchor the sequential transcription to the JAX oracle ---
+    try:
+        from compile.configs import ModelCfg
+        from compile import model as jmodel
+        import jax.numpy as jnp
+
+        jcfg = ModelCfg(
+            name="verify", d=d, n_layers=1, n_heads=h, head_dim=dh, i=64, v=64,
+            s_train=8, b_train=1, s_prefill=8, b_decode=b, s_max=smax, s_long=8,
+            rope_theta=theta, eps=eps,
+        )
+        xj = x[:, 0:1, :]
+        yj_np, kc1, vc1 = seq_step(cfg, xj, kc, vc, pos, w)
+        yj, kcj, vcj = jmodel.attn_gqa_decode(
+            jcfg, jnp.asarray(xj), jnp.asarray(kc), jnp.asarray(vc),
+            jnp.asarray(pos, dtype=jnp.int32), jnp.asarray(w["norm"]),
+            jnp.asarray(w["wq"]), jnp.asarray(w["wk"]), jnp.asarray(w["wv"]),
+            jnp.asarray(w["wo"]),
+        )
+        assert np.allclose(yj_np, np.asarray(yj), atol=2e-5), "JAX oracle mismatch (y)"
+        assert np.allclose(kc1, np.asarray(kcj), atol=2e-5), "JAX oracle mismatch (K)"
+        assert np.allclose(vc1, np.asarray(vcj), atol=2e-5), "JAX oracle mismatch (V)"
+        print("2. sequential transcription matches the JAX attn_gqa_decode oracle ✓")
+    except ImportError as e:
+        print(f"2. SKIPPED (jax unavailable: {e})")
+
+    # --- 3. deadness: garbage past the committed length changes nothing ---
+    kc_g, vc_g = kc.copy(), vc.copy()
+    for i in range(b):
+        kc_g[i, committed[i] :] = rng.normal(0, 9.0, (smax - committed[i], kv, dh))
+        vc_g[i, committed[i] :] = rng.normal(0, 9.0, (smax - committed[i], kv, dh))
+    yg, kcg2, _ = fused_pass(cfg, x, kc_g, vc_g, pos, w)
+    for i in range(b):
+        r = real[i]
+        assert np.array_equal(yg[i, :r], yf[i, :r]), f"lane {i}: stale rows leaked into output"
+        tot = committed[i] + r
+        assert np.array_equal(kcg2[i, :tot], kcf[i, :tot])
+    print("3. rows past the committed length are dead (parking isolation holds) ✓")
+    print("all fused-decode cross-checks passed")
+
+
+if __name__ == "__main__":
+    main()
