@@ -191,6 +191,38 @@ fn main() {
         });
     }
 
+    // prefix cache: 8 sequences sharing a 24-token system prompt — the
+    // shared prefix prefills once (cold retention), every later request
+    // imports the retained K/V rows and prefills only its suffix
+    {
+        let mut r2 = Rng::new(31);
+        let sys = sample_sequence(&world, &mix, 23, &mut r2);
+        let prompts: Vec<Vec<u32>> = (0..8)
+            .map(|_| {
+                let mut p = sys.clone();
+                p.extend(sample_sequence(&world, &mix, 3, &mut r2));
+                p
+            })
+            .collect();
+        let mut saved = 0usize;
+        let mut hits = 0usize;
+        b.time("prefix_reuse_8seq", "8 seqs sharing a 24-tok system prompt", 3, || {
+            let mut eng = EngineConfig::new()
+                .page_len(8)
+                .prefix_cache(true, 8 << 20)
+                .build(shared.clone(), &store, &arch)
+                .unwrap();
+            for p in &prompts {
+                eng.submit(GenRequest::new(p.clone(), 4)).unwrap();
+            }
+            let _ = eng.run_to_completion().unwrap();
+            saved = eng.metrics.prefix_tokens_saved;
+            hits = eng.metrics.prefix_hits;
+        });
+        assert!(hits > 0 && saved > 0, "shared prompts must hit the prefix cache");
+        println!("prefix cache: {hits} hits, {saved} prefill tokens saved across 8 shared-prompt sequences");
+    }
+
     // serving perf trajectory: a continuous-batching run (3x oversubscribed
     // slots) whose throughput and latency percentiles are persisted to
     // BENCH_serving.json so future PRs can diff serving perf.

@@ -287,5 +287,77 @@ fn main() -> Result<()> {
         "speculative perf -> BENCH_specdec.json (best {best_tpp:.2} tok/parent-pass [{best_name}], puzzle child {child_tpp:.2} at α̂ {:.0}%, batched N={batch_n} {batched_tpp:.2} tok/pass)",
         child_alpha * 100.0
     );
+
+    // ---- prefix cache: a fleet of requests sharing one system ----
+    // ---- prompt prefills it once (serving/prefixcache.rs)       ----
+    let sys = sample_sequence(&world, &mix, 23, &mut rng); // 24-token system prompt
+    let n_shared = 8usize;
+    let shared_prompts: Vec<Vec<u32>> = (0..n_shared)
+        .map(|_| {
+            let mut p = sys.clone();
+            p.extend(sample_sequence(&world, &mix, 3, &mut rng));
+            p
+        })
+        .collect();
+    let shared_max_new = 4usize;
+    // requests run one at a time so each TTFT isolates its own prefill
+    let serve_all = |eng: &mut puzzle::serving::Engine| -> Result<(Vec<Vec<u32>>, Vec<f64>)> {
+        let mut tokens = Vec::new();
+        let mut ttfts = Vec::new();
+        for p in &shared_prompts {
+            eng.submit(GenRequest::new(p.clone(), shared_max_new))?;
+            let r = eng.run_to_completion()?.pop().expect("one response per request");
+            tokens.push(r.tokens);
+            ttfts.push(r.ttft_secs);
+        }
+        Ok((tokens, ttfts))
+    };
+
+    let mut cold_eng =
+        EngineConfig::new().kv_budget_bytes(32 << 20).page_len(8).build(be.clone(), &store, &arch)?;
+    let (cold_tokens, cold_ttfts) = serve_all(&mut cold_eng)?;
+    let mut warm_eng = EngineConfig::new()
+        .kv_budget_bytes(32 << 20)
+        .page_len(8)
+        .prefix_cache(true, 8 << 20)
+        .build(be.clone(), &store, &arch)?;
+    let (warm_tokens, warm_ttfts) = serve_all(&mut warm_eng)?;
+    assert_eq!(
+        warm_tokens, cold_tokens,
+        "cache-hit generations must be byte-identical to cold-miss generations"
+    );
+    let m = &warm_eng.metrics;
+    assert!(m.prefix_hits > 0, "the shared system prompt must produce hits");
+    // request 0 is the cold miss that retains; every later TTFT rides it
+    let ttft_miss = warm_ttfts[0];
+    let ttft_hit = warm_ttfts[1..].iter().sum::<f64>() / (warm_ttfts.len() - 1) as f64;
+    let ttft_cold_mean = cold_ttfts.iter().sum::<f64>() / cold_ttfts.len() as f64;
+    println!(
+        "\nprefix cache: {n_shared} requests sharing a {}-token system prompt | hit rate {:.0}% | {} prefill tokens saved | ttft hit {:.2} ms vs miss {:.2} ms (uncached mean {:.2} ms) | {} segments holding {} KiB | outputs byte-identical ✓",
+        sys.len(),
+        m.prefix_hit_rate() * 100.0,
+        m.prefix_tokens_saved,
+        ttft_hit * 1e3,
+        ttft_miss * 1e3,
+        ttft_cold_mean * 1e3,
+        warm_eng.prefix_segments(),
+        warm_eng.prefix_retained_bytes() / 1024
+    );
+    let j = Json::from_pairs(vec![
+        ("requests", Json::num(n_shared as f64)),
+        ("system_prompt_tokens", Json::num(sys.len() as f64)),
+        ("hits", Json::num(m.prefix_hits as f64)),
+        ("misses", Json::num(m.prefix_misses as f64)),
+        ("hit_rate", Json::num(m.prefix_hit_rate())),
+        ("prefill_tokens_saved", Json::num(m.prefix_tokens_saved as f64)),
+        ("ttft_hit_ms", Json::num(ttft_hit * 1e3)),
+        ("ttft_miss_ms", Json::num(ttft_miss * 1e3)),
+        ("ttft_uncached_mean_ms", Json::num(ttft_cold_mean * 1e3)),
+        ("retained_segments", Json::num(warm_eng.prefix_segments() as f64)),
+        ("retained_bytes", Json::num(warm_eng.prefix_retained_bytes() as f64)),
+        ("byte_identical", Json::Bool(true)),
+    ]);
+    std::fs::write("BENCH_prefixcache.json", j.to_pretty())?;
+    println!("prefix-cache perf -> BENCH_prefixcache.json");
     Ok(())
 }

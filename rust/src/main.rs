@@ -143,10 +143,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let sol = pipe.search_speedup(&space, &scores, &ct, args.f64("speedup", 1.8))?;
     let scheduler = args.str("scheduler", "fifo");
     let scheduler = SchedulerKind::parse(&scheduler)
-        .ok_or_else(|| anyhow!("unknown scheduler '{scheduler}' (fifo|priority|spf)"))?;
+        .ok_or_else(|| anyhow!("unknown scheduler '{scheduler}' (fifo|priority|spf|prefix)"))?;
     let mut eng = EngineConfig::new()
         .kv_budget_bytes(64 << 20)
         .scheduler(scheduler)
+        .prefix_cache(args.flag("prefix-cache"), args.usize("retain-budget", 8 << 20))
         .build(be.clone(), &library, &sol.arch)?;
     let n_req = args.usize("requests", 16);
     let temperature = args.f64("temperature", 0.0) as f32;
@@ -192,6 +193,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         eng.scheduler_name(),
         eng.metrics.summary()
     );
+    if eng.prefix_enabled() {
+        println!(
+            "prefix cache: {} retained segments holding {} KiB ({} prompt tokens served from cache)",
+            eng.prefix_segments(),
+            eng.prefix_retained_bytes() / 1024,
+            eng.metrics.prefix_tokens_saved
+        );
+    }
     Ok(())
 }
 
@@ -216,7 +225,11 @@ fn cmd_serve_speculative(
         draft_k: pinned_k.unwrap_or(4),
         // no pin: tune k online from the measured acceptance rate
         adapt_k_max: if pinned_k.is_some() { None } else { Some(8) },
-        engine: EngineConfig::new().kv_budget_bytes(64 << 20),
+        // --prefix-cache: BOTH engines reuse retained prompt prefixes, so
+        // a fleet of requests sharing a system prompt prefills it once
+        engine: EngineConfig::new()
+            .kv_budget_bytes(64 << 20)
+            .prefix_cache(args.flag("prefix-cache"), args.usize("retain-budget", 8 << 20)),
     };
     let mut batch = SpecBatch::new(
         be.clone(),
@@ -272,6 +285,10 @@ fn cmd_serve_speculative(
         batch.observed_alpha() * 100.0
     );
     println!("{}", batch.parent_metrics().summary());
+    if args.flag("prefix-cache") {
+        let (p, c) = batch.prefix_tokens_saved();
+        println!("prefix cache: parent saved {p} prompt tokens, drafter saved {c}");
+    }
     Ok(())
 }
 
@@ -323,7 +340,7 @@ fn main() -> Result<()> {
         Some("info") => cmd_info(&args),
         _ => {
             eprintln!(
-                "usage: puzzle <pipeline|exp|serve|measure|info> [--backend ref|pjrt] [--config tiny|small] [--run-dir DIR] [--scale F] [--speedup X]\n       serve also takes: [--scheduler fifo|priority|spf] [--temperature T] [--stream] [--requests N] [--max-new N]\n                         [--speculate] [--draft-k N (pins; omit to auto-tune)] [--draft-arch arch_tag.json]"
+                "usage: puzzle <pipeline|exp|serve|measure|info> [--backend ref|pjrt] [--config tiny|small] [--run-dir DIR] [--scale F] [--speedup X]\n       serve also takes: [--scheduler fifo|priority|spf|prefix] [--temperature T] [--stream] [--requests N] [--max-new N]\n                         [--prefix-cache] [--retain-budget BYTES]\n                         [--speculate] [--draft-k N (pins; omit to auto-tune)] [--draft-arch arch_tag.json]"
             );
             Ok(())
         }

@@ -252,9 +252,14 @@ impl Pipeline {
     /// speculative decoding serves (`specdec::SpecSession`): parent
     /// weights from `library.pzw` (a superset of `parent.pzw` that also
     /// holds the trained block library), the child architecture from
-    /// `draft_arch` (an `arch_<tag>.json` file) or a fresh MIP search at
-    /// `speedup`, and the child weights GKD-uptrained once and cached as
-    /// `child_spec.pzw`.
+    /// `draft_arch` (an `arch_<tag>.json` file) or — when no arch is
+    /// pinned — the *draft-value* winner among MIP solutions at several
+    /// speedup slices around `speedup`: each candidate's acceptance rate
+    /// is predicted straight from the score table
+    /// (`specdec::estimate_alpha`) and `rank_drafters_estimated` orders
+    /// them by modeled speculative speedup, so the default drafter is the
+    /// one worth deploying, not merely the one slice searched. The child
+    /// weights are GKD-uptrained once and cached per architecture.
     pub fn ensure_spec_pair(
         &self,
         space: &SearchSpace,
@@ -275,7 +280,42 @@ impl Pipeline {
             None => {
                 let scores = self.ensure_scores(space, metric)?;
                 let ct = self.default_cost_table();
-                self.search_speedup(space, &scores, &ct, speedup)?.arch
+                // candidate slices: cheaper, requested, and more aggressive
+                let mut candidates: Vec<Arch> = Vec::new();
+                for slice in [speedup * 0.75, speedup, speedup * 1.5] {
+                    match self.search_speedup(space, &scores, &ct, slice) {
+                        Ok(sol) => {
+                            if !candidates.iter().any(|c| c.signature() == sol.arch.signature()) {
+                                candidates.push(sol.arch);
+                            }
+                        }
+                        Err(e) => info!("spec drafter: slice {slice:.2}x infeasible ({e})"),
+                    }
+                }
+                if candidates.is_empty() {
+                    return Err(anyhow!("no feasible drafter architecture at any speedup slice"));
+                }
+                let hw = HwProfile::h100_fp8();
+                let ctx = (self.be.man().cfg.s_max / 2).max(1);
+                let ranked = crate::specdec::rank_drafters_estimated(
+                    self.be.man(),
+                    &parent_arch,
+                    &candidates,
+                    &scores,
+                    &hw,
+                    ctx,
+                    4,
+                );
+                for (rank, (idx, value)) in ranked.iter().enumerate() {
+                    info!(
+                        "spec drafter rank {}: {} (estimated α̂ {:.2}, modeled speculative speedup {:.2}x)",
+                        rank + 1,
+                        candidates[*idx].signature(),
+                        crate::specdec::estimate_alpha(&scores, &candidates[*idx]),
+                        value
+                    );
+                }
+                candidates[ranked[0].0].clone()
             }
         };
         // cache keyed by the drafter architecture: a different --draft-arch

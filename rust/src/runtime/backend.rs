@@ -72,6 +72,32 @@ pub trait Backend {
         Ok(None)
     }
 
+    /// Export `len` cache positions of lane `lane`, starting at position
+    /// `start`, out of one layer's dense decode-cache value `cache`
+    /// (shape `[b_decode, s_max, kv_heads, head_dim]`) as a host-resident
+    /// row flat of `len * kv_heads * head_dim` f32s — one half of the
+    /// cache-transfer contract behind the serving prefix cache (the other
+    /// half is `import_kv`).
+    ///
+    /// Returns `Ok(None)` (the default) when the backend cannot move KV
+    /// between lanes — e.g. a device-memory backend with no readback path
+    /// — in which case the prefix cache disables itself for that engine.
+    /// A backend that returns `Some` here must also implement `import_kv`
+    /// such that export-then-import round-trips rows bitwise.
+    fn export_kv(&self, cache: &Value, lane: usize, start: usize, len: usize) -> Result<Option<Vec<f32>>> {
+        let _ = (cache, lane, start, len);
+        Ok(None)
+    }
+
+    /// Import `len` positions of previously exported rows into lane
+    /// `lane` of `cache` at position `at` (see `export_kv` for the row
+    /// layout). Returns `Ok(false)` (the default) when the backend does
+    /// not support cache transfer; `Ok(true)` after a successful write.
+    fn import_kv(&self, cache: &mut Value, lane: usize, at: usize, len: usize, rows: &[f32]) -> Result<bool> {
+        let _ = (cache, lane, at, len, rows);
+        Ok(false)
+    }
+
     /// Measured mean runtime per call for `name` (seconds); None if never
     /// run. The "measured on target hardware" cost source.
     fn measured_secs(&self, name: &str) -> Option<f64>;

@@ -288,6 +288,30 @@ impl Backend for RefBackend {
         Ok(Some(out))
     }
 
+    fn export_kv(&self, cache: &Value, lane: usize, start: usize, len: usize) -> Result<Option<Vec<f32>>> {
+        let (lane_stride, row, smax) = kv_cache_geometry(cache, lane)?;
+        if start + len > smax {
+            bail!("export_kv: rows [{start}, {}) exceed cache horizon {smax}", start + len);
+        }
+        let t = cache.as_f32()?;
+        let base = lane * lane_stride + start * row;
+        Ok(Some(t.data[base..base + len * row].to_vec()))
+    }
+
+    fn import_kv(&self, cache: &mut Value, lane: usize, at: usize, len: usize, rows: &[f32]) -> Result<bool> {
+        let (lane_stride, row, smax) = kv_cache_geometry(cache, lane)?;
+        if at + len > smax {
+            bail!("import_kv: rows [{at}, {}) exceed cache horizon {smax}", at + len);
+        }
+        if rows.len() != len * row {
+            bail!("import_kv: {} floats for {len} positions of row width {row}", rows.len());
+        }
+        let t = cache.as_f32_mut()?;
+        let base = lane * lane_stride + at * row;
+        t.data[base..base + len * row].copy_from_slice(rows);
+        Ok(true)
+    }
+
     fn measured_secs(&self, name: &str) -> Option<f64> {
         let st = self.stats.lock().unwrap();
         let e = st.get(name)?;
@@ -314,6 +338,23 @@ impl Backend for RefBackend {
             .map(|_| ())
             .ok_or_else(|| anyhow!("unknown exec {name} (not in manifest)"))
     }
+}
+
+/// Validate a dense decode-cache value `[b, s_max, kv, head_dim]` against
+/// `lane` and return `(lane_stride, row_width, s_max)` in f32 elements —
+/// shared by the `export_kv`/`import_kv` cache-transfer pair, which is how
+/// per-layer variable KV-head counts are honored (the row width comes from
+/// each layer's own cache shape).
+fn kv_cache_geometry(cache: &Value, lane: usize) -> Result<(usize, usize, usize)> {
+    let shape = cache.shape();
+    if shape.len() != 4 {
+        bail!("kv transfer expects a [b, s_max, kv, head_dim] cache, got {shape:?}");
+    }
+    let (b, smax, kv, dh) = (shape[0], shape[1], shape[2], shape[3]);
+    if lane >= b {
+        bail!("kv transfer: lane {lane} out of {b} decode lanes");
+    }
+    Ok((smax * kv * dh, kv * dh, smax))
 }
 
 fn split_mode(rest: &str) -> Option<(&str, &str)> {
@@ -1151,6 +1192,34 @@ mod tests {
         // wrong dtype: embed tokens must be i32
         let toks_f = Value::F32(Tensor::zeros(&[c.b_train, c.s_train]));
         assert!(be.run("embed_train", &[&toks_f, &e]).is_err());
+    }
+
+    #[test]
+    fn kv_export_import_roundtrips_bitwise() {
+        let be = backend();
+        let c = be.man().cfg.clone();
+        let (bd, smax, kv, dh) = (c.b_decode, c.s_max, 2usize, c.head_dim);
+        let mut rng = Rng::new(77);
+        let src = Value::F32(randt(&[bd, smax, kv, dh], 1.0, &mut rng));
+        // export 5 positions of lane 1 starting at position 3
+        let rows = be.export_kv(&src, 1, 3, 5).unwrap().expect("ref backend supports kv transfer");
+        assert_eq!(rows.len(), 5 * kv * dh);
+        // import them into lane 0 at position 0 of a zeroed cache
+        let mut dst = Value::F32(Tensor::zeros(&[bd, smax, kv, dh]));
+        assert!(be.import_kv(&mut dst, 0, 0, 5, &rows).unwrap());
+        let (s, d) = (src.as_f32().unwrap(), dst.as_f32().unwrap());
+        let row = kv * dh;
+        for p in 0..5 {
+            let from = (smax + 3 + p) * row; // lane 1, position 3 + p
+            let to = p * row; // lane 0, position p
+            assert_eq!(s.data[from..from + row], d.data[to..to + row], "row {p} must copy bitwise");
+        }
+        // untouched rows stay zero
+        assert!(d.data[5 * row..6 * row].iter().all(|&x| x == 0.0));
+        // bounds violations are errors, not silent clamps
+        assert!(be.export_kv(&src, 0, smax - 2, 5).unwrap_err().to_string().contains("horizon"));
+        assert!(be.import_kv(&mut dst, bd, 0, 1, &rows[..row]).is_err());
+        assert!(be.import_kv(&mut dst, 0, 0, 2, &rows[..row]).is_err(), "row count mismatch");
     }
 
     #[test]

@@ -25,6 +25,19 @@
 //! can never serve — empty prompt, `max_new == 0`, prompt filling the
 //! whole cache horizon, or a horizon that exceeds the *total* KV budget —
 //! are rejected at `submit`.
+//!
+//! With `EngineConfig::prefix_cache` on, cold prefills retain their
+//! prompt's page-aligned K/V prefix in a radix tree
+//! (`serving::prefixcache`); later prompts sharing that prefix import the
+//! rows (`Backend::import_kv`) and teacher-force only the unmatched
+//! suffix — a cache-hit generation is byte-identical to the cold miss,
+//! because every reference kernel is row-wise bit-identical between the
+//! prefill and decode lowerings.
+//!
+//! Batched and speculative sequences share the decode lanes (mixed-mode
+//! serving): every forward — batched decode steps and spec-path passes
+//! alike — parks unfed live lanes at their own cache frontier, where the
+//! garbage K/V write is dead by the attention masking rule.
 
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -41,6 +54,7 @@ use crate::weights::Store;
 
 use super::kvcache::{PageCfg, PagedKvManager};
 use super::metrics::EngineMetrics;
+use super::prefixcache::{align_down, KvSegment, PrefixCache, PrefixHit};
 use super::sampling::{sample, SamplingParams};
 use super::scheduler::{QueueView, Scheduler, SchedulerKind};
 
@@ -165,6 +179,17 @@ pub struct EngineConfig {
     /// the sequential-decode lowering (the two produce identical logits —
     /// asserted in the integration tests).
     pub fused_verify: bool,
+    /// Enable the radix-tree prefix cache: prompts sharing a page-aligned
+    /// prefix with a retained one import its K/V rows and prefill only
+    /// the unmatched suffix. Off by default; on backends without a
+    /// `Backend::export_kv` implementation (pjrt) the cache disables
+    /// itself at the first retention attempt. A cache-hit generation is
+    /// byte-identical to the cold-miss generation.
+    pub prefix_cache: bool,
+    /// Host-byte budget for retained prefix rows; LRU unreferenced
+    /// segments are evicted past it (and under KV-pool pressure, so
+    /// retention never starves admission).
+    pub prefix_retain_budget: usize,
 }
 
 impl Default for EngineConfig {
@@ -175,6 +200,8 @@ impl Default for EngineConfig {
             max_queue: 1024,
             scheduler: SchedulerKind::Fifo,
             fused_verify: true,
+            prefix_cache: false,
+            prefix_retain_budget: 8 << 20,
         }
     }
 }
@@ -214,6 +241,15 @@ impl EngineConfig {
     /// lowering, which is useful for equivalence tests and benchmarks).
     pub fn fused_verify(mut self, fused: bool) -> EngineConfig {
         self.fused_verify = fused;
+        self
+    }
+
+    /// Enable the prefix cache with a host retain budget of
+    /// `retain_budget` bytes (see the `prefix_cache` field docs; off by
+    /// default).
+    pub fn prefix_cache(mut self, on: bool, retain_budget: usize) -> EngineConfig {
+        self.prefix_cache = on;
+        self.prefix_retain_budget = retain_budget;
         self
     }
 
@@ -300,6 +336,9 @@ pub struct Engine {
     sched: Box<dyn Scheduler>,
     execs: Vec<LayerExecs>,
     paged: PagedKvManager,
+    /// Radix-tree prefix cache (`EngineConfig::prefix_cache`); dropped to
+    /// `None` when off or when the backend cannot transfer KV rows.
+    prefix: Option<PrefixCache>,
     events: Vec<StreamEvent>,
     /// Engine-level counters and latency records.
     pub metrics: EngineMetrics,
@@ -344,6 +383,11 @@ impl Engine {
         let slots = (0..mcfg.b_decode).map(|_| None).collect();
         let spec = (0..mcfg.b_decode).map(|_| None).collect();
         let sched = cfg.scheduler.build();
+        let prefix = if cfg.prefix_cache {
+            Some(PrefixCache::new(cfg.page_len, cfg.prefix_retain_budget))
+        } else {
+            None
+        };
         Ok(Engine {
             be,
             cfg,
@@ -355,6 +399,7 @@ impl Engine {
             sched,
             execs,
             paged,
+            prefix,
             events: Vec::new(),
             metrics: EngineMetrics::default(),
             finished: Vec::new(),
@@ -371,13 +416,10 @@ impl Engine {
         let s_max = self.be.man().cfg.s_max;
         let id = self.next_id;
         self.next_id += 1;
-        if self.spec.iter().any(Option::is_some) {
-            // a batched decode step would teacher-force garbage into the
-            // idle lanes' position 0 — harmless for empty lanes (prefill
-            // overwrites it) but fatal for a live speculative sequence, so
-            // an engine is either batched or speculative at a time
-            return Err(self.reject(id, "engine is serving a speculative sequence".into()));
-        }
+        // batched and speculative sequences coexist (mixed-mode serving):
+        // every forward — batched decode steps included — parks unfed
+        // live lanes at their own frontier, where garbage K/V writes are
+        // dead by the masking rule, so neither mode can corrupt the other
         if req.prompt.is_empty() {
             return Err(self.reject(id, "empty prompt".into()));
         }
@@ -470,6 +512,33 @@ impl Engine {
         self.paged.allocated_bytes()
     }
 
+    /// Is the prefix cache live? (False when configured off, and after it
+    /// disabled itself on a backend without KV transfer.)
+    pub fn prefix_enabled(&self) -> bool {
+        self.prefix.is_some()
+    }
+
+    /// Retained prefix segments currently held by the cache.
+    pub fn prefix_segments(&self) -> usize {
+        self.prefix.as_ref().map(|p| p.segments()).unwrap_or(0)
+    }
+
+    /// Pool bytes charged to retained prefix segments (the share of
+    /// `kv_allocated_bytes` that outlives individual sequences).
+    pub fn prefix_retained_bytes(&self) -> usize {
+        self.paged.shared_allocated_bytes()
+    }
+
+    /// Evict every unreferenced retained segment (tests and ops; live
+    /// references are never broken). Returns the number evicted.
+    pub fn clear_prefix_cache(&mut self) -> usize {
+        let mut n = 0;
+        while self.evict_prefix_lru(None) {
+            n += 1;
+        }
+        n
+    }
+
     /// Sequences currently holding KV pages.
     pub fn kv_active_seqs(&self) -> usize {
         self.paged.active_seqs()
@@ -482,10 +551,15 @@ impl Engine {
     }
 
     /// Admit queued requests into free slots under the configured policy.
-    /// If the picked request does not fit the KV pool *right now*, wait
-    /// for a release (backpressure) instead of skipping past it.
+    /// If the picked request does not fit the KV pool *right now*, first
+    /// evict unreferenced retained prefix segments (retention must never
+    /// starve admission), then wait for a release (backpressure) instead
+    /// of skipping past it.
     fn admit(&mut self) -> Result<()> {
         let s_max = self.be.man().cfg.s_max;
+        // the per-request radix walk is only paid for the scheduler that
+        // actually ranks by it; every other policy sees 0
+        let rank_by_prefix = self.cfg.scheduler == SchedulerKind::PrefixAffinity;
         while self.free_slot().is_some() && !self.queue.is_empty() {
             let view: Vec<QueueView> = self
                 .queue
@@ -495,19 +569,59 @@ impl Engine {
                     priority: q.req.priority,
                     prompt_len: q.req.prompt.len(),
                     max_new: q.req.max_new,
+                    cached_prefix: if rank_by_prefix {
+                        self.prefix
+                            .as_ref()
+                            .map(|p| p.matched_len(&q.req.prompt))
+                            .unwrap_or(0)
+                    } else {
+                        0
+                    },
                 })
                 .collect();
             let Some(qidx) = self.sched.pick(&view) else { break };
             debug_assert!(qidx < self.queue.len(), "scheduler returned an out-of-range index");
             let horizon = self.queue[qidx].req.horizon(s_max);
-            if !self.paged.can_admit(horizon) {
+            let mut hit = match &mut self.prefix {
+                Some(p) => p.lookup(&self.queue[qidx].req.prompt),
+                None => None,
+            };
+            while !self.admissible(horizon, hit) {
+                // evict LRU unreferenced retained segments (never the one
+                // this request is about to ride) before giving up
+                if !self.evict_prefix_lru(hit.map(|h| h.seg_id)) {
+                    break;
+                }
+            }
+            if !self.admissible(horizon, hit) && hit.is_some() {
+                // the protected segment itself may be what blocks the pool
+                // (a partial hit into a segment longer than its discount):
+                // fall back to a cold admission, which may evict it too —
+                // this is what keeps "admitted work always fits an idle
+                // pool" true with retention in play
+                hit = None;
+                while !self.admissible(horizon, None) {
+                    if !self.evict_prefix_lru(None) {
+                        break;
+                    }
+                }
+            }
+            if !self.admissible(horizon, hit) {
                 break; // backpressure: wait for a release
             }
             let slot_idx = self.free_slot().unwrap();
             let q = self.queue.remove(qidx);
-            self.prefill(slot_idx, q)?;
+            self.prefill(slot_idx, q, hit)?;
         }
         Ok(())
+    }
+
+    /// Does `horizon` fit the pool right now, riding `hit` if present?
+    fn admissible(&self, horizon: usize, hit: Option<PrefixHit>) -> bool {
+        match hit {
+            Some(h) => self.paged.can_admit_shared(horizon, h.len),
+            None => self.paged.can_admit(horizon),
+        }
     }
 
     /// Run the prefill executable chain over the first `min(len,
@@ -566,17 +680,48 @@ impl Engine {
 
     /// Prefill a prompt at batch 1 and seed the slot's caches. Prompts
     /// longer than the prefill window leave their tail in `pending`, to be
-    /// teacher-forced through decode steps before generation starts.
+    /// teacher-forced through decode steps before generation starts. On a
+    /// prefix-cache hit the prefill executable is skipped entirely: the
+    /// matched rows are imported and the whole unmatched suffix rides the
+    /// same teacher-forced tail path (byte-identical by the bitwise
+    /// prefill≡decode equivalence of the reference kernels).
     ///
     /// Pages for the sequence's *full horizon* are reserved here — the
-    /// same amount `can_admit` checked — so concurrently admitted
-    /// sequences can never jointly over-commit the pool and `grow` cannot
-    /// fail mid-generation.
-    fn prefill(&mut self, slot_idx: usize, q: Queued) -> Result<()> {
+    /// same amount `can_admit`/`can_admit_shared` checked — so
+    /// concurrently admitted sequences can never jointly over-commit the
+    /// pool and `grow` cannot fail mid-generation.
+    fn prefill(&mut self, slot_idx: usize, q: Queued, hit: Option<PrefixHit>) -> Result<()> {
         let mcfg = &self.be.man().cfg;
         let (s_max, sp, v) = (mcfg.s_max, mcfg.s_prefill, mcfg.v);
         let Queued { id, req, t_submit } = q;
         let horizon = req.horizon(s_max);
+        if let Some(hit) = hit {
+            // admit() checked can_admit_shared for this horizon, so the
+            // booking cannot fail here short of an internal bug
+            self.admit_prefix_hit(slot_idx, id, hit, horizon)?;
+            self.metrics.prompt_tokens += req.prompt.len();
+            // the unmatched suffix (>= 1 token by the lookup cap) is
+            // teacher-forced through decode steps, exactly like a chunked
+            // prompt tail; sampling begins when it is consumed
+            let mut pending: VecDeque<u32> = req.prompt[hit.len..].iter().copied().collect();
+            let first_pending = pending.pop_front().unwrap();
+            let rng = Rng::new(req.sampling.seed);
+            self.slots[slot_idx] = Some(Slot {
+                id,
+                req,
+                rng,
+                generated: vec![],
+                len: hit.len,
+                last_token: first_pending,
+                pending,
+                t_submit,
+                t_first: None,
+            });
+            return Ok(());
+        }
+        if self.prefix.is_some() {
+            self.metrics.prefix_misses += 1;
+        }
         let chunked = req.prompt.len() > sp;
         let (x, plen) = self.prefill_window(slot_idx, &req.prompt)?;
         if chunked {
@@ -587,6 +732,7 @@ impl Engine {
             self.metrics.prefills += 1;
             self.metrics.prompt_tokens += req.prompt.len();
             self.metrics.chunked_prefills += 1;
+            self.maybe_retain(&req.prompt, slot_idx, plen);
             let mut pending: VecDeque<u32> = req.prompt[plen..].iter().copied().collect();
             let first_pending = pending.pop_front().unwrap();
             let rng = Rng::new(req.sampling.seed);
@@ -612,6 +758,7 @@ impl Engine {
         self.paged.admit(id, horizon);
         self.metrics.prefills += 1;
         self.metrics.prompt_tokens += req.prompt.len();
+        self.maybe_retain(&req.prompt, slot_idx, plen);
 
         let logits = val_to_tensor(&logits)?;
         // next token from the last prompt position, per-request policy
@@ -718,6 +865,13 @@ impl Engine {
             if let Some(s) = s {
                 tokens[i] = s.last_token as i32;
                 pos[i] = s.len as i32;
+            } else if let Some(sp) = &self.spec[i] {
+                // mixed-mode serving: a live speculative sequence sharing
+                // the lanes is parked at its own frontier, where the
+                // garbage K/V write is dead by the masking rule (the old
+                // position-0 write corrupted its committed stream, which
+                // is why the modes used to be mutually exclusive)
+                pos[i] = sp.len.min(s_max - 1) as i32;
             }
         }
         // the LM head is only needed if some slot will actually sample this
@@ -800,6 +954,143 @@ impl Engine {
         self.finished.push(Response { id, tokens, finish: reason, ttft_secs, e2e_secs });
     }
 
+    // ---- prefix-cache internals (`serving::prefixcache` holds the ----
+    // ---- radix tree; `PagedKvManager` holds the shared accounting) ----
+
+    /// Evict the least-recently-used retained segment without live
+    /// references (skipping `protect`, the segment an admission is about
+    /// to ride). Returns false when nothing is evictable.
+    fn evict_prefix_lru(&mut self, protect: Option<u64>) -> bool {
+        let Some(cache) = &self.prefix else { return false };
+        let candidate = cache
+            .lru_order()
+            .into_iter()
+            .find(|&id| Some(id) != protect && self.paged.seg_refs(id) == Some(0));
+        let Some(id) = candidate else { return false };
+        self.prefix.as_mut().unwrap().remove(id);
+        let evicted = self.paged.evict_shared(id);
+        debug_assert!(evicted, "unreferenced segment must evict cleanly");
+        self.metrics.prefix_evictions += 1;
+        true
+    }
+
+    /// Book pages for a prefix-cache hit and import its rows into `lane`
+    /// for sequence `id`, reserving `positions` total positions — shared
+    /// by the batched admission path and `spec_open`. Rolls the booking
+    /// back if the import fails, and bumps the hit metrics.
+    fn admit_prefix_hit(&mut self, lane: usize, id: u64, hit: PrefixHit, positions: usize) -> Result<()> {
+        if !self.paged.admit_shared(id, positions, hit.seg_id, hit.len) {
+            return Err(anyhow!("prefix hit admission: KV budget exhausted"));
+        }
+        if let Err(e) = self.import_segment(lane, hit.seg_id, hit.len) {
+            self.paged.release(id);
+            return Err(e);
+        }
+        self.metrics.prefix_hits += 1;
+        self.metrics.prefix_tokens_saved += hit.len;
+        Ok(())
+    }
+
+    /// Copy the first `len` positions of a retained segment into lane
+    /// `lane` of every caching layer via `Backend::import_kv` (rows land
+    /// at positions `[0, len)`, bitwise as exported). `len` may be
+    /// shorter than the segment — a partial match imports only the
+    /// matched rows, never another prompt's diverging tail.
+    fn import_segment(&mut self, lane: usize, seg_id: u64, len: usize) -> Result<()> {
+        let be = self.be.clone();
+        let Some(cache) = &self.prefix else {
+            return Err(anyhow!("prefix cache is disabled"));
+        };
+        let seg = cache.rows(seg_id)?;
+        debug_assert_eq!(seg.layers.len(), self.caches.len());
+        if len > seg.len {
+            return Err(anyhow!("import of {len} rows from a {}-row segment", seg.len));
+        }
+        for (l, lc) in self.caches.iter_mut().enumerate() {
+            let Some(lc) = lc else { continue };
+            let Some((k_rows, v_rows)) = &seg.layers[l] else {
+                return Err(anyhow!("prefix segment {seg_id} is missing layer {l} rows"));
+            };
+            let row = k_rows.len() / seg.len;
+            if !be.import_kv(&mut lc.k, lane, 0, len, &k_rows[..len * row])?
+                || !be.import_kv(&mut lc.v, lane, 0, len, &v_rows[..len * row])?
+            {
+                return Err(anyhow!("backend refused import_kv after exporting (layer {l})"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Export the first `len` positions of lane `lane` across all caching
+    /// layers. `Ok(None)` means the backend cannot transfer KV — the
+    /// caller disables the prefix cache.
+    fn export_segment(&self, lane: usize, len: usize) -> Result<Option<KvSegment>> {
+        let mut layers = Vec::with_capacity(self.caches.len());
+        for lc in &self.caches {
+            match lc {
+                None => layers.push(None),
+                Some(lc) => {
+                    let Some(k_rows) = self.be.export_kv(&lc.k, lane, 0, len)? else {
+                        return Ok(None);
+                    };
+                    let Some(v_rows) = self.be.export_kv(&lc.v, lane, 0, len)? else {
+                        return Ok(None);
+                    };
+                    layers.push(Some((k_rows, v_rows)));
+                }
+            }
+        }
+        Ok(Some(KvSegment { len, layers }))
+    }
+
+    /// After a cold prefill ingested `ingested` prompt tokens into lane
+    /// `lane`, retain the page-aligned prefix for future requests —
+    /// unless it is already covered, too short, or neither the host
+    /// retain budget nor the KV pool can take it even after evicting LRU
+    /// unreferenced segments. Retention is strictly best-effort and can
+    /// never fail the (already admitted) request: a backend that cannot
+    /// export — `Ok(None)` or an outright error — just disables the
+    /// cache.
+    fn maybe_retain(&mut self, prompt: &[u32], lane: usize, ingested: usize) {
+        let Some(cache) = &self.prefix else { return };
+        let retain_len = align_down(ingested.min(prompt.len()), self.cfg.page_len);
+        if retain_len == 0 || cache.covered(prompt, retain_len) {
+            return;
+        }
+        // budgets first, export second: a page-aligned f32 segment's host
+        // bytes equal its pool bytes, so both budgets are checkable before
+        // paying for the row copies (otherwise every cold prefill under a
+        // full, pinned retain budget would export and discard a segment)
+        let pool_bytes = self.paged.shared_bytes(retain_len);
+        loop {
+            let cache = self.prefix.as_ref().unwrap();
+            let fits = cache.fits_retain_budget(pool_bytes)
+                && self.paged.allocated_bytes() + pool_bytes <= self.paged.budget_bytes();
+            if fits {
+                break;
+            }
+            if !self.evict_prefix_lru(None) {
+                return; // cannot make room: skip retention
+            }
+        }
+        let seg = match self.export_segment(lane, retain_len) {
+            Ok(Some(seg)) => seg,
+            // backend keeps its caches out of reach (or failed mid-export):
+            // disable the cache rather than fail the admitted request
+            Ok(None) | Err(_) => {
+                self.prefix = None;
+                return;
+            }
+        };
+        debug_assert_eq!(seg.host_bytes(), pool_bytes, "aligned f32 rows: host == pool bytes");
+        let seg_id = self.prefix.as_mut().unwrap().insert(prompt, seg);
+        let retained = self.paged.retain_shared(seg_id, retain_len);
+        debug_assert!(retained, "pool fit was just checked");
+        if !retained {
+            self.prefix.as_mut().unwrap().remove(seg_id);
+        }
+    }
+
     /// One engine iteration: admit waiting requests into free slots
     /// (running their prefills), then run one batched decode step over the
     /// active slots. Returns the stream events produced by this step, in
@@ -829,6 +1120,15 @@ impl Engine {
             let queued_before = self.queue.len();
             self.step()?;
             if active_before == 0 && !self.queue.is_empty() && self.queue.len() == queued_before {
+                if self.spec_active() > 0 {
+                    // mixed mode: the queued request waits on lanes or KV
+                    // pages held by speculative sequences, and nothing
+                    // inside this loop will ever close them — that is a
+                    // driver error, not a spin-wait
+                    return Err(anyhow!(
+                        "run_to_completion cannot admit: lanes/KV held by open speculative sequences"
+                    ));
+                }
                 // submit-time validation guarantees every queued horizon
                 // fits an empty pool, so an idle engine can always admit.
                 debug_assert!(false, "engine stalled: queued request cannot be admitted");
@@ -900,19 +1200,41 @@ impl Engine {
                 s_max
             ));
         }
-        // exclusivity with the batched mode (see `submit`): a batched
-        // decode step would teacher-force garbage into speculative lanes'
-        // position 0. Multiple speculative sequences DO coexist — the
-        // spec-path forwards park every unfed live lane at its own
-        // frontier, so their committed K/V is never touched.
-        if self.active() > 0 || !self.queue.is_empty() {
-            return Err(anyhow!("spec_open: engine has batched requests in flight"));
-        }
+        // batched requests and speculative sequences coexist (mixed-mode
+        // serving): every forward parks unfed live lanes — batched slots
+        // included — at their own frontier, where garbage K/V writes are
+        // dead by the masking rule.
         let Some(lane) = self.free_slot() else {
             return Err(anyhow!("spec_open: no free decode lane"));
         };
         let id = self.next_id;
         self.next_id += 1;
+        // prefix-cache hit: import the matched rows and teacher-force only
+        // the unmatched suffix — no prefill executable at all. The final
+        // logits row is byte-identical to the cold path's.
+        let hit = match &mut self.prefix {
+            Some(p) => p.lookup(prompt),
+            None => None,
+        };
+        if let Some(hit) = hit {
+            self.admit_prefix_hit(lane, id, hit, hit.len)?;
+            self.metrics.prompt_tokens += prompt.len();
+            self.spec[lane] = Some(SpecSlot { id, len: hit.len });
+            let tail = &prompt[hit.len..];
+            let tailed = self.spec_extend(id, tail, tail.len() - 1).and_then(|mut rows| {
+                rows.pop().ok_or_else(|| anyhow!("prefix-hit suffix produced no logits"))
+            });
+            return match tailed {
+                Ok(row) => Ok((id, row)),
+                Err(e) => {
+                    self.spec_close(id);
+                    Err(e)
+                }
+            };
+        }
+        if self.prefix.is_some() {
+            self.metrics.prefix_misses += 1;
+        }
         // book the prefill window's pages BEFORE running the multi-layer
         // forward (mirrors the batched path's admit-before-prefill), so a
         // budget rejection costs nothing
@@ -928,6 +1250,7 @@ impl Engine {
         };
         self.metrics.prefills += 1;
         self.metrics.prompt_tokens += prompt.len();
+        self.maybe_retain(prompt, lane, plen);
         self.spec[lane] = Some(SpecSlot { id, len: plen });
         if prompt.len() > sp {
             // stream the prompt tail through teacher-forced decode steps;
@@ -1058,10 +1381,13 @@ impl Engine {
         s_max: usize,
     ) -> Result<Option<Vec<Vec<Vec<f32>>>>> {
         let m = feeds.iter().map(|f| f.tokens.len()).max().unwrap();
-        // parked baseline: live lanes at their own frontier, free lanes at 0
+        // parked baseline: live lanes — speculative AND batched (mixed-
+        // mode serving) — at their own frontier, free lanes at 0
         let mut pos = vec![0i32; bd];
         for (lane, p) in pos.iter_mut().enumerate() {
             if let Some(s) = &self.spec[lane] {
+                *p = s.len.min(s_max - 1) as i32;
+            } else if let Some(s) = &self.slots[lane] {
                 *p = s.len.min(s_max - 1) as i32;
             }
         }
@@ -1171,13 +1497,16 @@ impl Engine {
             .collect();
         for j in 0..m {
             let mut toks = vec![0i32; bd];
-            // parked baseline: every live lane at its own frontier (active
-            // feeds included — their len IS start + j at this step). The
-            // horizon clamp only ever binds for a parked lane sitting at
-            // s_max, whose overwritten row is dead after any rollback.
+            // parked baseline: every live lane — speculative and batched
+            // alike — at its own frontier (active feeds included: their
+            // len IS start + j at this step). The horizon clamp only ever
+            // binds for a parked lane sitting at s_max, whose overwritten
+            // row is dead after any rollback.
             let mut pos = vec![0i32; bd];
             for (lane, p) in pos.iter_mut().enumerate() {
                 if let Some(s) = &self.spec[lane] {
+                    *p = s.len.min(s_max - 1) as i32;
+                } else if let Some(s) = &self.slots[lane] {
                     *p = s.len.min(s_max - 1) as i32;
                 }
             }
@@ -1250,17 +1579,21 @@ mod tests {
         assert_eq!(cfg.scheduler, SchedulerKind::Fifo);
         assert_eq!(cfg.page_len, 16);
         assert!(cfg.fused_verify, "the fused path is the default");
+        assert!(!cfg.prefix_cache, "the prefix cache is opt-in");
         let cfg = cfg
             .kv_budget_bytes(1 << 20)
             .page_len(8)
             .max_queue(2)
             .scheduler(SchedulerKind::Priority)
-            .fused_verify(false);
+            .fused_verify(false)
+            .prefix_cache(true, 1 << 20);
         assert_eq!(cfg.kv_budget_bytes, 1 << 20);
         assert_eq!(cfg.page_len, 8);
         assert_eq!(cfg.max_queue, 2);
         assert_eq!(cfg.scheduler, SchedulerKind::Priority);
         assert!(!cfg.fused_verify);
+        assert!(cfg.prefix_cache);
+        assert_eq!(cfg.prefix_retain_budget, 1 << 20);
     }
 
     #[test]

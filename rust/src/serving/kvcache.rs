@@ -27,15 +27,38 @@ pub struct PageCfg {
 #[derive(Debug, Clone, Default)]
 /// Pages held by one sequence.
 pub struct SeqPages {
-    /// pages held per layer (layers with kv_heads = 0 hold none)
+    /// pages held per layer (layers with kv_heads = 0 hold none),
+    /// including pages backed by a shared retained segment
     pub per_layer: Vec<usize>,
     /// Occupied positions (== the sequence's committed length).
     pub positions: usize,
+    /// Leading pages per caching layer backed by a shared segment — those
+    /// bytes are charged to the segment, not to this sequence.
+    shared_pages: usize,
+    /// The shared segment this sequence holds a reference on, if any.
+    seg: Option<u64>,
+}
+
+#[derive(Debug, Clone)]
+/// A retained prefix segment: its pages are charged to the pool exactly
+/// once, no matter how many sequences reference them.
+struct SharedSeg {
+    /// pages per caching layer
+    pages: usize,
+    /// live sequence references (an unreferenced segment is evictable)
+    refs: usize,
+    /// total bytes charged for the segment across all caching layers
+    bytes: usize,
 }
 
 #[derive(Debug)]
 /// Admission control and exact byte accounting for the paged KV pool
-/// (per-layer page tables; see the module docs).
+/// (per-layer page tables; see the module docs). Besides per-sequence
+/// pages it tracks *shared* retained-prefix segments (`retain_shared`):
+/// a segment's bytes are charged once, sequences admitted over it
+/// (`admit_shared`) hold references instead of copies, and an
+/// unreferenced segment can be evicted (`evict_shared`) to make room —
+/// the accounting substrate of the serving prefix cache.
 pub struct PagedKvManager {
     cfg: PageCfg,
     /// kv heads per layer (0 = linear/no-op attention)
@@ -43,6 +66,7 @@ pub struct PagedKvManager {
     head_dim: usize,
     allocated_bytes: usize,
     seqs: HashMap<u64, SeqPages>,
+    shared: HashMap<u64, SharedSeg>,
 }
 
 impl PagedKvManager {
@@ -62,6 +86,7 @@ impl PagedKvManager {
             head_dim: man.cfg.head_dim,
             allocated_bytes: 0,
             seqs: HashMap::new(),
+            shared: HashMap::new(),
         }
     }
 
@@ -82,16 +107,41 @@ impl PagedKvManager {
         positions.div_ceil(self.cfg.page_len)
     }
 
-    /// Bytes needed to grow a sequence to `positions`.
+    /// Bytes needed to grow a sequence to `positions`. Pages inside a
+    /// shared-backed prefix are never charged: growing back through a
+    /// region the sequence's segment still covers is free.
     fn bytes_to_grow(&self, seq: Option<&SeqPages>, positions: usize) -> usize {
         let target = self.pages_for(positions);
         (0..self.kv_heads.len())
             .map(|l| {
-                let have = seq.map(|s| s.per_layer[l]).unwrap_or(0);
+                let have = seq.map(|s| s.per_layer[l].max(s.shared_pages)).unwrap_or(0);
                 let need = if self.kv_heads[l] == 0 { 0 } else { target };
                 need.saturating_sub(have) * self.page_bytes(l)
             })
             .sum()
+    }
+
+    /// Bytes a fresh sequence of `max_total` positions costs when its
+    /// first `shared_positions` positions are backed by a shared segment
+    /// (those pages are already charged to the segment).
+    fn bytes_for_new(&self, max_total: usize, shared_positions: usize) -> usize {
+        let target = self.pages_for(max_total);
+        let shared = self.pages_for(shared_positions).min(target);
+        (0..self.kv_heads.len())
+            .map(|l| {
+                if self.kv_heads[l] == 0 {
+                    0
+                } else {
+                    (target - shared) * self.page_bytes(l)
+                }
+            })
+            .sum()
+    }
+
+    /// Pages per caching layer this sequence pays for itself (total minus
+    /// the shared-segment-backed prefix).
+    fn owned_pages(seq: &SeqPages, l: usize) -> usize {
+        seq.per_layer[l].saturating_sub(seq.shared_pages)
     }
 
     /// Admission check: can a new sequence with `prompt_len` prompt and up
@@ -99,6 +149,12 @@ impl PagedKvManager {
     /// the full horizon so decode never deadlocks mid-generation.)
     pub fn can_admit(&self, max_total: usize) -> bool {
         self.allocated_bytes + self.bytes_to_grow(None, max_total) <= self.cfg.budget_bytes
+    }
+
+    /// `can_admit` for a sequence whose first `shared_positions` positions
+    /// ride an already-retained shared segment.
+    pub fn can_admit_shared(&self, max_total: usize, shared_positions: usize) -> bool {
+        self.allocated_bytes + self.bytes_for_new(max_total, shared_positions) <= self.cfg.budget_bytes
     }
 
     /// Could a sequence of `max_total` positions EVER be admitted — i.e.
@@ -114,8 +170,40 @@ impl PagedKvManager {
     }
 
     /// Allocate pages for a new sequence at `positions` occupied slots.
+    /// Re-admitting a live `seq_id` is refused: silently replacing its
+    /// page table would orphan the bytes already charged to it (the
+    /// accounting leak this guard regression-tests against).
     pub fn admit(&mut self, seq_id: u64, positions: usize) -> bool {
-        let grow = self.bytes_to_grow(None, positions);
+        self.admit_inner(seq_id, positions, 0, None)
+    }
+
+    /// Admit a sequence whose first `shared_positions` positions are
+    /// backed by retained segment `seg_id`: the sequence is charged only
+    /// for pages beyond the shared prefix and holds a reference on the
+    /// segment (pinning it against eviction) until it is released.
+    pub fn admit_shared(&mut self, seq_id: u64, positions: usize, seg_id: u64, shared_positions: usize) -> bool {
+        let shared = self.pages_for(shared_positions);
+        match self.shared.get(&seg_id) {
+            None => {
+                debug_assert!(false, "admit_shared over unknown segment {seg_id}");
+                return false;
+            }
+            Some(seg) => {
+                debug_assert!(
+                    shared <= seg.pages && shared_positions <= positions,
+                    "admit_shared: shared prefix exceeds the segment or the horizon"
+                );
+            }
+        }
+        self.admit_inner(seq_id, positions, shared, Some(seg_id))
+    }
+
+    fn admit_inner(&mut self, seq_id: u64, positions: usize, shared_pages: usize, seg: Option<u64>) -> bool {
+        if self.seqs.contains_key(&seq_id) {
+            debug_assert!(false, "admit of already-present sequence {seq_id}");
+            return false;
+        }
+        let grow = self.bytes_for_new(positions, shared_pages * self.cfg.page_len);
         if self.allocated_bytes + grow > self.cfg.budget_bytes {
             return false;
         }
@@ -126,8 +214,61 @@ impl PagedKvManager {
             .map(|&kv| if kv == 0 { 0 } else { target })
             .collect();
         self.allocated_bytes += grow;
-        self.seqs.insert(seq_id, SeqPages { per_layer, positions });
+        if let Some(seg_id) = seg {
+            self.shared.get_mut(&seg_id).unwrap().refs += 1;
+        }
+        self.seqs.insert(seq_id, SeqPages { per_layer, positions, shared_pages, seg });
         true
+    }
+
+    /// Bytes a retained segment of `positions` positions costs across all
+    /// caching layers (what `retain_shared` would charge).
+    pub fn shared_bytes(&self, positions: usize) -> usize {
+        let pages = self.pages_for(positions);
+        (0..self.kv_heads.len())
+            .map(|l| if self.kv_heads[l] == 0 { 0 } else { pages * self.page_bytes(l) })
+            .sum()
+    }
+
+    /// Charge a retained prefix segment of `positions` positions to the
+    /// pool — once, regardless of how many sequences will reference it.
+    /// Refuses duplicates and budget overruns.
+    pub fn retain_shared(&mut self, seg_id: u64, positions: usize) -> bool {
+        if self.shared.contains_key(&seg_id) {
+            debug_assert!(false, "retain_shared of already-present segment {seg_id}");
+            return false;
+        }
+        let bytes = self.shared_bytes(positions);
+        if self.allocated_bytes + bytes > self.cfg.budget_bytes {
+            return false;
+        }
+        self.allocated_bytes += bytes;
+        self.shared.insert(seg_id, SharedSeg { pages: self.pages_for(positions), refs: 0, bytes });
+        true
+    }
+
+    /// Free an *unreferenced* retained segment's pages. Returns false —
+    /// and frees nothing — while any live sequence still references it
+    /// (retention can be evicted, admitted work cannot).
+    pub fn evict_shared(&mut self, seg_id: u64) -> bool {
+        match self.shared.get(&seg_id) {
+            Some(seg) if seg.refs == 0 => {
+                let seg = self.shared.remove(&seg_id).unwrap();
+                self.allocated_bytes -= seg.bytes;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Live sequence references on a retained segment (None if unknown).
+    pub fn seg_refs(&self, seg_id: u64) -> Option<usize> {
+        self.shared.get(&seg_id).map(|s| s.refs)
+    }
+
+    /// Bytes currently charged to retained shared segments.
+    pub fn shared_allocated_bytes(&self) -> usize {
+        self.shared.values().map(|s| s.bytes).sum()
     }
 
     /// Grow a sequence by one position (decode step); allocates new pages
@@ -167,26 +308,36 @@ impl PagedKvManager {
         if new_len >= seq.positions {
             return;
         }
+        let shared = seq.shared_pages;
         let mut freed = 0usize;
         for (l, p) in seq.per_layer.iter_mut().enumerate() {
             let keep = target.min(*p);
-            freed += (*p - keep) * page_bytes[l];
+            // only the sequence's own pages are freed; a shared-backed
+            // prefix page belongs to its segment and is never handed back
+            // here (the segment outlives any one sequence's rewind)
+            let owned_before = p.saturating_sub(shared);
+            let owned_after = keep.saturating_sub(shared);
+            freed += (owned_before - owned_after) * page_bytes[l];
             *p = keep;
         }
         seq.positions = new_len;
         self.allocated_bytes -= freed;
     }
 
-    /// Free all pages of a finished sequence.
+    /// Free all pages of a finished sequence (and drop its reference on a
+    /// shared segment, if it held one — the segment's own bytes stay
+    /// charged until `evict_shared`).
     pub fn release(&mut self, seq_id: u64) {
         if let Some(seq) = self.seqs.remove(&seq_id) {
-            let freed: usize = seq
-                .per_layer
-                .iter()
-                .enumerate()
-                .map(|(l, &p)| p * self.page_bytes(l))
+            let freed: usize = (0..seq.per_layer.len())
+                .map(|l| Self::owned_pages(&seq, l) * self.page_bytes(l))
                 .sum();
             self.allocated_bytes -= freed;
+            if let Some(seg_id) = seq.seg {
+                if let Some(seg) = self.shared.get_mut(&seg_id) {
+                    seg.refs -= 1;
+                }
+            }
         }
     }
 
@@ -399,6 +550,104 @@ mod tests {
         // grow back across the page boundary: same accounting as before
         assert!(mgr.grow(1)); // position 17 -> second page again
         assert_eq!(mgr.allocated_bytes(), two);
+    }
+
+    #[test]
+    fn duplicate_admit_is_refused_without_leaking() {
+        // regression: admit of a live seq_id used to silently replace its
+        // SeqPages, orphaning the bytes already charged to it
+        let (man, arch) = setup(Arch::parent);
+        let mut mgr = PagedKvManager::new(&man, &arch, cfg(1 << 20));
+        assert!(mgr.admit(1, 40)); // 3 pages/layer
+        let b = mgr.allocated_bytes();
+        let refused = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            // debug builds assert; release builds must still refuse
+            mgr.admit(1, 16)
+        }));
+        if let Ok(accepted) = refused {
+            assert!(!accepted, "duplicate admit must be refused");
+        }
+        assert_eq!(mgr.allocated_bytes(), b, "refused duplicate must not change accounting");
+        assert_eq!(mgr.active_seqs(), 1);
+        mgr.release(1);
+        assert_eq!(mgr.allocated_bytes(), 0, "the original pages must still be released exactly");
+    }
+
+    #[test]
+    fn shared_segments_charge_once_and_refcount() {
+        let (man, arch) = setup(Arch::parent);
+        let mut mgr = PagedKvManager::new(&man, &arch, cfg(1 << 20));
+        let seg_bytes = mgr.shared_bytes(32); // 2 pages/layer
+        assert!(seg_bytes > 0);
+        assert!(mgr.retain_shared(100, 32));
+        assert_eq!(mgr.allocated_bytes(), seg_bytes);
+        assert_eq!(mgr.shared_allocated_bytes(), seg_bytes);
+        assert_eq!(mgr.seg_refs(100), Some(0));
+
+        // two sequences ride the same 32-position prefix toward a
+        // 48-position horizon: each pays only its own 1 extra page/layer
+        let own: usize = (0..man.cfg.n_layers).map(|l| mgr.page_bytes(l)).sum();
+        assert!(mgr.admit_shared(1, 48, 100, 32));
+        assert_eq!(mgr.allocated_bytes(), seg_bytes + own, "prefix bytes must be charged once");
+        assert!(mgr.admit_shared(2, 48, 100, 32));
+        assert_eq!(mgr.allocated_bytes(), seg_bytes + 2 * own);
+        assert_eq!(mgr.seg_refs(100), Some(2));
+
+        // a referenced segment is pinned
+        assert!(!mgr.evict_shared(100), "a segment with live refs must not be evictable");
+        assert_eq!(mgr.allocated_bytes(), seg_bytes + 2 * own);
+
+        // releases drop refs and free exactly the owned bytes
+        mgr.release(1);
+        assert_eq!(mgr.allocated_bytes(), seg_bytes + own);
+        assert_eq!(mgr.seg_refs(100), Some(1));
+        mgr.release(2);
+        assert_eq!(mgr.allocated_bytes(), seg_bytes);
+        assert_eq!(mgr.seg_refs(100), Some(0));
+
+        // now unreferenced: evictable, and the pool returns to empty
+        assert!(mgr.evict_shared(100));
+        assert_eq!(mgr.allocated_bytes(), 0);
+        assert_eq!(mgr.seg_refs(100), None);
+        assert!(!mgr.evict_shared(100), "double eviction is a no-op");
+    }
+
+    #[test]
+    fn shared_truncate_never_frees_segment_pages() {
+        let (man, arch) = setup(Arch::parent);
+        let mut mgr = PagedKvManager::new(&man, &arch, cfg(1 << 20));
+        assert!(mgr.retain_shared(7, 32));
+        let seg_bytes = mgr.allocated_bytes();
+        assert!(mgr.admit_shared(1, 48, 7, 32)); // 1 owned page/layer on top
+        let full = mgr.allocated_bytes();
+        // rewind into the shared region: only the owned page comes back
+        mgr.truncate(1, 16);
+        assert_eq!(mgr.allocated_bytes(), seg_bytes, "shared pages must stay charged to the segment");
+        // grow back across the shared boundary re-charges exactly the owned page
+        for _ in 16..48 {
+            assert!(mgr.grow(1));
+        }
+        assert_eq!(mgr.allocated_bytes(), full);
+        // truncate-to-zero == release: ref dropped, segment intact
+        mgr.truncate(1, 0);
+        assert_eq!(mgr.allocated_bytes(), seg_bytes);
+        assert_eq!(mgr.seg_refs(7), Some(0));
+    }
+
+    #[test]
+    fn can_admit_shared_discounts_the_prefix() {
+        let (man, arch) = setup(Arch::parent);
+        // budget: exactly one 2-page segment plus one extra page per layer
+        let probe = PagedKvManager::new(&man, &arch, cfg(0));
+        let page: usize = (0..man.cfg.n_layers).map(|l| probe.page_bytes(l)).sum();
+        let mut mgr = PagedKvManager::new(&man, &arch, cfg(3 * page));
+        assert!(mgr.retain_shared(5, 32)); // 2 pages/layer charged
+        // a cold 48-position horizon (3 pages) cannot fit the 1 remaining page...
+        assert!(!mgr.can_admit(48));
+        // ...but riding the retained 32-position prefix it costs only 1 page
+        assert!(mgr.can_admit_shared(48, 32));
+        assert!(mgr.admit_shared(1, 48, 5, 32));
+        assert_eq!(mgr.allocated_bytes(), 3 * page);
     }
 
     #[test]

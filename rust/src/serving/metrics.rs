@@ -56,6 +56,18 @@ pub struct EngineMetrics {
     /// the backend fused — each replaces up to `max feed × lanes`
     /// sequential decode forwards)
     pub spec_fused_passes: usize,
+    /// prefix-cache hits: admissions that imported a retained prefix and
+    /// prefilled only the unmatched suffix
+    pub prefix_hits: usize,
+    /// prefix-cache misses: admissions that ran a full cold prefill with
+    /// the cache enabled
+    pub prefix_misses: usize,
+    /// prompt tokens whose K/V came from a retained prefix instead of
+    /// being recomputed — prefill work saved
+    pub prefix_tokens_saved: usize,
+    /// retained prefix segments evicted (LRU, unreferenced only) under
+    /// retain-budget or KV-pool pressure
+    pub prefix_evictions: usize,
 }
 
 impl EngineMetrics {
@@ -132,7 +144,19 @@ impl EngineMetrics {
         }
     }
 
-    /// One-line operational summary (plus a spec section when drafting ran).
+    /// Prefix-cache hit rate hits/(hits+misses) — 0.0 (not NaN) when the
+    /// cache never saw an admission.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let total = self.prefix_hits + self.prefix_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.prefix_hits as f64 / total as f64
+        }
+    }
+
+    /// One-line operational summary (plus a spec section when drafting
+    /// ran, and a prefix section when the cache saw traffic).
     pub fn summary(&self) -> String {
         let mut s = self.base_summary();
         if self.draft_proposed > 0 {
@@ -144,6 +168,16 @@ impl EngineMetrics {
                 self.spec_passes,
                 self.spec_rollbacks,
                 self.spec_fused_passes
+            ));
+        }
+        if self.prefix_hits + self.prefix_misses > 0 {
+            s.push_str(&format!(
+                " | prefix hit/miss {}/{} ({:.0}%) saved {} tok evicted {}",
+                self.prefix_hits,
+                self.prefix_misses,
+                self.prefix_hit_rate() * 100.0,
+                self.prefix_tokens_saved,
+                self.prefix_evictions
             ));
         }
         s
@@ -211,6 +245,24 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("spec accepted/proposed 6/8 (75%)"), "summary was: {s}");
         assert!(s.contains("rollbacks 1"));
+    }
+
+    #[test]
+    fn prefix_hit_rate_guards_zero_division() {
+        let m = EngineMetrics::default();
+        assert_eq!(m.prefix_hit_rate(), 0.0, "no cache traffic: rate is 0, not NaN");
+        assert!(!m.summary().contains("prefix"), "prefix section hidden without traffic");
+        let m = EngineMetrics {
+            prefix_hits: 3,
+            prefix_misses: 1,
+            prefix_tokens_saved: 48,
+            prefix_evictions: 2,
+            ..Default::default()
+        };
+        assert_eq!(m.prefix_hit_rate(), 0.75);
+        let s = m.summary();
+        assert!(s.contains("prefix hit/miss 3/1 (75%)"), "summary was: {s}");
+        assert!(s.contains("saved 48 tok evicted 2"));
     }
 
     #[test]

@@ -16,21 +16,29 @@
 //!   (`Backend::run_fused`) — and exact KV rollback, for up to
 //!   `b_decode` concurrent `specdec` sequences sharing the decode lanes.
 //! * `scheduler` — pluggable admission policies (`Fifo` — the default,
-//!   `Priority`, `ShortestPromptFirst`).
+//!   `Priority`, `ShortestPromptFirst`, `PrefixAffinity`).
 //! * `sampling` — greedy / temperature / top-k / top-p with a seeded
 //!   per-request RNG stream for reproducibility.
 //! * `kvcache` — the paged manager tracking per-layer page tables whose
-//!   page byte-size depends on that layer's KV head count.
-//! * `metrics` — throughput, TTFT/e2e percentiles, finish-reason counts.
+//!   page byte-size depends on that layer's KV head count, plus
+//!   refcounted *shared* retained-prefix segments charged once.
+//! * `prefixcache` — the radix-tree prefix cache: prompts sharing a
+//!   page-aligned prefix with a retained one import its K/V rows
+//!   (`Backend::export_kv`/`import_kv`) and prefill only the unmatched
+//!   suffix; a cache-hit generation is byte-identical to the cold miss.
+//! * `metrics` — throughput, TTFT/e2e percentiles, finish-reason counts,
+//!   prefix hit rates.
 
 pub mod engine;
 pub mod kvcache;
 pub mod metrics;
+pub mod prefixcache;
 pub mod sampling;
 pub mod scheduler;
 
 pub use engine::{Engine, EngineConfig, FinishReason, GenRequest, Response, SpecFeed, StreamEvent};
 pub use kvcache::PagedKvManager;
 pub use metrics::EngineMetrics;
+pub use prefixcache::{KvSegment, PrefixCache, PrefixHit};
 pub use sampling::SamplingParams;
 pub use scheduler::{Scheduler, SchedulerKind};

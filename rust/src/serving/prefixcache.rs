@@ -1,0 +1,511 @@
+//! Prefix cache: radix-matched KV reuse so shared prompts prefill once.
+//!
+//! A fleet of requests sharing a long system prompt is the dominant
+//! serving pattern at scale, yet a naive engine recomputes the full
+//! prompt prefill for every one of them. This module keeps a token-level
+//! **radix tree** mapping prompt prefixes to retained, page-aligned KV
+//! segments (the dense rows exported from a lane after a cold prefill via
+//! `Backend::export_kv`). On admission the engine looks up the longest
+//! page-aligned match, imports the matched rows into the new lane
+//! (`Backend::import_kv`) and prefills only the unmatched suffix through
+//! teacher-forced decode steps — which the repo's bitwise
+//! prefill≡decode equivalence makes **byte-identical** to the cold-miss
+//! generation (asserted in the integration tests, greedy and seeded
+//! sampling alike).
+//!
+//! Accounting lives in `PagedKvManager`: a retained segment's pages are
+//! charged once (`retain_shared`), sequences admitted over it hold
+//! references (`admit_shared`), and unreferenced segments are evicted in
+//! LRU order under budget pressure — retention can never starve
+//! admission, and a segment a live sequence rides is never evicted.
+//!
+//! Matches are page-aligned by construction: a partial-page overlap
+//! cannot share pages in a paged allocator, so `lookup` only returns
+//! multiples of `page_len` and anything shorter falls back to a full
+//! prefill. A match is also capped at `prompt_len - 1` — the engine must
+//! always feed at least one real token to produce the next-token logits.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+/// Dense K/V rows of one retained prefix, per layer: `None` for
+/// cache-free layers (linear / no-op attention), `Some((k, v))` flats of
+/// `len * kv_heads(l) * head_dim` f32s otherwise — per-layer variable
+/// KV-head counts fall out of each layer keeping its own row width.
+#[derive(Debug, Clone)]
+pub struct KvSegment {
+    /// Positions covered (page-aligned).
+    pub len: usize,
+    /// Per-layer `(k_rows, v_rows)` flats; `None` where the layer keeps
+    /// no cache.
+    pub layers: Vec<Option<(Vec<f32>, Vec<f32>)>>,
+}
+
+impl KvSegment {
+    /// Host bytes this segment's rows occupy (for the retain budget).
+    pub fn host_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .flatten()
+            .map(|(k, v)| (k.len() + v.len()) * std::mem::size_of::<f32>())
+            .sum()
+    }
+}
+
+/// A successful prefix lookup: the retained segment and how many prompt
+/// tokens it covers.
+#[derive(Debug, Clone, Copy)]
+pub struct PrefixHit {
+    /// Retained segment id (key into the cache and `PagedKvManager`'s
+    /// shared-segment table).
+    pub seg_id: u64,
+    /// Matched token count (page-aligned, `>= page_len`).
+    pub len: usize,
+}
+
+/// One radix-tree node: a compressed edge from its parent plus an
+/// optional retained segment ending exactly at this node's depth.
+#[derive(Debug)]
+struct Node {
+    /// Token label of the edge from the parent (empty only at the root).
+    edge: Vec<u32>,
+    /// Child node indices (looked up by the first token of their edge).
+    children: Vec<usize>,
+    /// Retained segment ending at this node, if any.
+    seg: Option<u64>,
+    /// Tokens from the root to this node.
+    depth: usize,
+    /// Parent node index (self-parent at the root).
+    parent: usize,
+}
+
+/// A retained segment's bookkeeping inside the cache.
+#[derive(Debug)]
+struct Retained {
+    seg: KvSegment,
+    node: usize,
+    /// Logical-clock stamp of the last lookup that used this segment.
+    last_use: u64,
+}
+
+/// The radix-tree prefix cache an `Engine` owns when
+/// `EngineConfig::prefix_cache` is on. Pure bookkeeping: the engine does
+/// the exporting/importing and keeps `PagedKvManager` accounting in sync.
+#[derive(Debug)]
+pub struct PrefixCache {
+    nodes: Vec<Node>,
+    segs: HashMap<u64, Retained>,
+    next_seg: u64,
+    clock: u64,
+    page_len: usize,
+    retain_budget: usize,
+    retained_bytes: usize,
+}
+
+/// Round `len` down to a page boundary.
+pub fn align_down(len: usize, page_len: usize) -> usize {
+    (len / page_len) * page_len
+}
+
+impl PrefixCache {
+    /// An empty cache for `page_len`-position pages under a host retain
+    /// budget of `retain_budget` bytes.
+    pub fn new(page_len: usize, retain_budget: usize) -> PrefixCache {
+        PrefixCache {
+            nodes: vec![Node { edge: Vec::new(), children: Vec::new(), seg: None, depth: 0, parent: 0 }],
+            segs: HashMap::new(),
+            next_seg: 1,
+            clock: 0,
+            page_len,
+            retain_budget,
+            retained_bytes: 0,
+        }
+    }
+
+    /// Retained segment count.
+    pub fn segments(&self) -> usize {
+        self.segs.len()
+    }
+
+    /// Host bytes across all retained segments' rows.
+    pub fn retained_bytes(&self) -> usize {
+        self.retained_bytes
+    }
+
+    /// The configured host retain budget in bytes.
+    pub fn retain_budget(&self) -> usize {
+        self.retain_budget
+    }
+
+    /// Walk the tree along `prompt` and return the best usable retained
+    /// segment plus the page-aligned hit length, without touching LRU
+    /// state. Partial matches *into* a deeper segment are usable too: a
+    /// segment's first `m` rows correspond exactly to its first `m` path
+    /// tokens, so any segment whose path shares `m >= page_len` aligned
+    /// tokens with the prompt can serve those rows.
+    fn best_match(&self, prompt: &[u32]) -> Option<(u64, usize)> {
+        let mut cur = 0usize;
+        let mut i = 0usize;
+        // deepest segment on a fully-matched node, and (on divergence or
+        // prompt exhaustion mid-path) the subtree that still shares the
+        // first `i` prompt tokens
+        let mut deepest: Option<(u64, usize)> = None;
+        let mut frontier: Option<usize> = None;
+        loop {
+            let node = &self.nodes[cur];
+            if let Some(seg) = node.seg {
+                if node.depth > 0 {
+                    deepest = Some((seg, node.depth));
+                }
+            }
+            if i >= prompt.len() {
+                frontier = node.children.first().copied();
+                break;
+            }
+            let Some(&child) = node
+                .children
+                .iter()
+                .find(|&&c| self.nodes[c].edge.first() == Some(&prompt[i]))
+            else {
+                // divergence at a node boundary: every subtree below this
+                // node still shares the first `i` tokens, so any of them
+                // can serve an aligned prefix of the match
+                frontier = node.children.first().copied();
+                break;
+            };
+            let edge = &self.nodes[child].edge;
+            let common = edge.iter().zip(&prompt[i..]).take_while(|(a, b)| a == b).count();
+            i += common;
+            if common == edge.len() {
+                cur = child;
+                continue;
+            }
+            // diverged (or prompt ran out) inside the child's edge: the
+            // child's whole subtree still shares the first `i` tokens
+            frontier = Some(child);
+            break;
+        }
+        // the hit must be page-aligned and leave >= 1 token to feed
+        let m = align_down(i.min(prompt.len() - 1), self.page_len);
+        if m == 0 {
+            return None;
+        }
+        // any segment below the frontier shares >= m tokens: use its
+        // first m rows (every leaf carries a segment, so this descent
+        // always terminates on one)
+        if let Some(mut n) = frontier {
+            loop {
+                if let Some(seg) = self.nodes[n].seg {
+                    return Some((seg, m));
+                }
+                match self.nodes[n].children.first() {
+                    Some(&c) => n = c,
+                    None => break,
+                }
+            }
+        }
+        deepest.map(|(seg, depth)| (seg, depth.min(m)))
+    }
+
+    /// Longest page-aligned retained prefix of `prompt`, capped at
+    /// `prompt.len() - 1` (at least one token must be fed to produce
+    /// logits). Read-only: LRU state is untouched.
+    pub fn matched_len(&self, prompt: &[u32]) -> usize {
+        if prompt.len() <= 1 {
+            return 0;
+        }
+        self.best_match(prompt).map(|(_, len)| len).unwrap_or(0)
+    }
+
+    /// `matched_len` that also returns the segment and bumps its LRU
+    /// stamp — what admission calls when it commits to reusing the match.
+    pub fn lookup(&mut self, prompt: &[u32]) -> Option<PrefixHit> {
+        if prompt.len() <= 1 {
+            return None;
+        }
+        let (seg_id, len) = self.best_match(prompt)?;
+        self.clock += 1;
+        self.segs.get_mut(&seg_id).unwrap().last_use = self.clock;
+        Some(PrefixHit { seg_id, len })
+    }
+
+    /// Is `tokens[..len]` already fully covered by retained rows — i.e.
+    /// does the tree contain that exact token path? (Every node subtree
+    /// carries at least one segment, and any segment below the path
+    /// serves its leading rows, so path containment is coverage.)
+    /// Retention calls this to skip redundant re-exports.
+    pub fn covered(&self, tokens: &[u32], len: usize) -> bool {
+        let mut cur = 0usize;
+        let mut i = 0usize;
+        while i < len {
+            let Some(&child) = self.nodes[cur]
+                .children
+                .iter()
+                .find(|&&c| self.nodes[c].edge.first() == Some(&tokens[i]))
+            else {
+                return false;
+            };
+            let edge = &self.nodes[child].edge;
+            let common = edge
+                .iter()
+                .zip(&tokens[i..len])
+                .take_while(|(a, b)| a == b)
+                .count();
+            i += common;
+            if common < edge.len() {
+                return i == len;
+            }
+            cur = child;
+        }
+        true
+    }
+
+    /// Borrow a retained segment's rows for import into a lane.
+    pub fn rows(&self, seg_id: u64) -> Result<&KvSegment> {
+        self.segs
+            .get(&seg_id)
+            .map(|r| &r.seg)
+            .ok_or_else(|| anyhow!("unknown prefix segment {seg_id}"))
+    }
+
+    /// Would retaining `bytes` more fit the host retain budget right now?
+    pub fn fits_retain_budget(&self, bytes: usize) -> bool {
+        self.retained_bytes + bytes <= self.retain_budget
+    }
+
+    /// Insert a retained segment covering `seg.len` tokens of `tokens`
+    /// and return its id. The caller has already checked both budgets
+    /// (`fits_retain_budget` + `PagedKvManager::retain_shared`).
+    pub fn insert(&mut self, tokens: &[u32], seg: KvSegment) -> u64 {
+        debug_assert!(seg.len > 0 && seg.len <= tokens.len());
+        debug_assert!(seg.len % self.page_len == 0, "retained prefixes are page-aligned");
+        let node = self.insert_path(&tokens[..seg.len]);
+        debug_assert!(self.nodes[node].seg.is_none(), "caller deduplicates retained prefixes");
+        let id = self.next_seg;
+        self.next_seg += 1;
+        self.nodes[node].seg = Some(id);
+        self.clock += 1;
+        self.retained_bytes += seg.host_bytes();
+        self.segs.insert(id, Retained { seg, node, last_use: self.clock });
+        id
+    }
+
+    /// Walk (splitting compressed edges as needed) to the node at exactly
+    /// `tokens`' depth, creating it if absent.
+    fn insert_path(&mut self, tokens: &[u32]) -> usize {
+        let mut cur = 0usize;
+        let mut i = 0usize;
+        while i < tokens.len() {
+            let child = self.nodes[cur]
+                .children
+                .iter()
+                .copied()
+                .find(|&c| self.nodes[c].edge.first() == Some(&tokens[i]));
+            let Some(child) = child else {
+                // no child shares the next token: one fresh leaf edge
+                let idx = self.nodes.len();
+                self.nodes.push(Node {
+                    edge: tokens[i..].to_vec(),
+                    children: Vec::new(),
+                    seg: None,
+                    depth: tokens.len(),
+                    parent: cur,
+                });
+                self.nodes[cur].children.push(idx);
+                return idx;
+            };
+            let edge = self.nodes[child].edge.clone();
+            let common = edge.iter().zip(&tokens[i..]).take_while(|(a, b)| a == b).count();
+            if common == edge.len() {
+                cur = child;
+                i += common;
+                continue;
+            }
+            // split the edge at `common`: cur -> mid -> child
+            let mid = self.nodes.len();
+            self.nodes.push(Node {
+                edge: edge[..common].to_vec(),
+                children: vec![child],
+                seg: None,
+                depth: self.nodes[cur].depth + common,
+                parent: cur,
+            });
+            let pos = self.nodes[cur].children.iter().position(|&c| c == child).unwrap();
+            self.nodes[cur].children[pos] = mid;
+            self.nodes[child].edge = edge[common..].to_vec();
+            self.nodes[child].parent = mid;
+            if i + common == tokens.len() {
+                return mid;
+            }
+            let leaf = self.nodes.len();
+            self.nodes.push(Node {
+                edge: tokens[i + common..].to_vec(),
+                children: Vec::new(),
+                seg: None,
+                depth: tokens.len(),
+                parent: mid,
+            });
+            self.nodes[mid].children.push(leaf);
+            return leaf;
+        }
+        cur
+    }
+
+    /// Drop a retained segment (after the caller evicted its pages from
+    /// the `PagedKvManager`), pruning now-useless tree nodes upward.
+    pub fn remove(&mut self, seg_id: u64) -> bool {
+        let Some(retained) = self.segs.remove(&seg_id) else { return false };
+        self.retained_bytes -= retained.seg.host_bytes();
+        let mut cur = retained.node;
+        self.nodes[cur].seg = None;
+        // prune childless, segment-less nodes (slots become tombstones;
+        // the tree is small and rebuilt per engine, so no free-list)
+        while cur != 0 && self.nodes[cur].seg.is_none() && self.nodes[cur].children.is_empty() {
+            let parent = self.nodes[cur].parent;
+            let pos = self.nodes[parent].children.iter().position(|&c| c == cur).unwrap();
+            self.nodes[parent].children.swap_remove(pos);
+            cur = parent;
+        }
+        true
+    }
+
+    /// Retained segment ids, least-recently-used first — the eviction
+    /// scan order. The caller skips segments with live references.
+    pub fn lru_order(&self) -> Vec<u64> {
+        let mut ids: Vec<(u64, u64)> = self.segs.iter().map(|(&id, r)| (r.last_use, id)).collect();
+        ids.sort_unstable();
+        ids.into_iter().map(|(_, id)| id).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seg(len: usize) -> KvSegment {
+        // one caching layer with a 4-float row, one cache-free layer
+        KvSegment { len, layers: vec![Some((vec![0.5; len * 4], vec![0.25; len * 4])), None] }
+    }
+
+    #[test]
+    fn lookup_returns_longest_aligned_match() {
+        let mut c = PrefixCache::new(4, 1 << 20);
+        let base: Vec<u32> = (1..=16).collect();
+        c.insert(&base[..8], seg(8));
+        c.insert(&base, seg(16));
+        // full 16-token prefix + one extra token: deepest match wins
+        let mut p = base.clone();
+        p.push(99);
+        let hit = c.lookup(&p).unwrap();
+        assert_eq!(hit.len, 16);
+        // a 16-token prompt caps the match at len-1, aligned: the 16-deep
+        // segment still serves its first 12 rows
+        let hit = c.lookup(&base).unwrap();
+        assert_eq!(hit.len, 12, "match must leave at least one token to feed");
+        // diverging after 8 tokens: the shallow segment still matches
+        let mut div = base[..8].to_vec();
+        div.extend([77u32, 78, 79]);
+        assert_eq!(c.lookup(&div).unwrap().len, 8);
+        // diverging inside the first page: no match at all
+        let other: Vec<u32> = (100..116).collect();
+        assert!(c.lookup(&other).is_none());
+        assert_eq!(c.matched_len(&other), 0);
+    }
+
+    #[test]
+    fn partial_page_overlap_is_not_a_hit() {
+        let mut c = PrefixCache::new(8, 1 << 20);
+        let base: Vec<u32> = (1..=16).collect();
+        c.insert(&base, seg(16));
+        // shares only 5 tokens (< one page): falls back to full prefill
+        let mut p = base[..5].to_vec();
+        p.extend([50u32, 51, 52, 53, 54, 55]);
+        assert!(c.lookup(&p).is_none());
+        // shares 11 tokens: aligned match is exactly one page (8)
+        let mut p = base[..11].to_vec();
+        p.extend([60u32, 61]);
+        assert_eq!(c.lookup(&p).unwrap().len, 8, "match must round down to the page boundary");
+    }
+
+    #[test]
+    fn edge_splitting_keeps_matches_exact() {
+        let mut c = PrefixCache::new(2, 1 << 20);
+        // insert a long path first, then a shorter diverging one that
+        // forces a mid-edge split
+        let a: Vec<u32> = vec![1, 2, 3, 4, 5, 6, 7, 8];
+        c.insert(&a, seg(8));
+        let b: Vec<u32> = vec![1, 2, 3, 4, 9, 9, 9, 9];
+        c.insert(&b, seg(4));
+        let mut q = a.clone();
+        q.push(42);
+        assert_eq!(c.lookup(&q).unwrap().len, 8);
+        let mut q = b.clone();
+        q.push(42);
+        // best match for the b-path prompt: the 4-deep segment (the
+        // 8-deep one diverges at token 5)
+        assert_eq!(c.lookup(&q).unwrap().len, 4);
+        // and the shared 4-token prefix alone (plus a diverging tail)
+        // also resolves to the 4-deep segment
+        let q = vec![1u32, 2, 3, 4, 100, 101];
+        assert_eq!(c.lookup(&q).unwrap().len, 4);
+    }
+
+    #[test]
+    fn lru_order_tracks_lookups_and_remove_prunes() {
+        let mut c = PrefixCache::new(2, 1 << 20);
+        let a: Vec<u32> = vec![1, 2, 3, 4];
+        let b: Vec<u32> = vec![9, 8, 7, 6];
+        let ida = c.insert(&a, seg(4));
+        let idb = c.insert(&b, seg(4));
+        assert_eq!(c.segments(), 2);
+        assert!(c.retained_bytes() > 0);
+        // touch a: b becomes the LRU candidate
+        let mut q = a.clone();
+        q.push(5);
+        c.lookup(&q).unwrap();
+        assert_eq!(c.lru_order(), vec![idb, ida]);
+        // evicting b removes its match and its bytes
+        let bytes_before = c.retained_bytes();
+        assert!(c.remove(idb));
+        assert!(c.retained_bytes() < bytes_before);
+        let mut q = b.clone();
+        q.push(5);
+        assert!(c.lookup(&q).is_none());
+        assert!(!c.remove(idb), "double remove is a no-op");
+        // a still matches after the prune
+        let mut q = a.clone();
+        q.push(5);
+        assert_eq!(c.lookup(&q).unwrap().len, 4);
+    }
+
+    #[test]
+    fn covered_is_exact_path_containment() {
+        let mut c = PrefixCache::new(4, 1 << 20);
+        let base: Vec<u32> = (1..=16).collect();
+        c.insert(&base, seg(16));
+        assert!(c.covered(&base, 16));
+        assert!(c.covered(&base, 8), "a shorter prefix of a retained path is covered");
+        let mut div = base[..8].to_vec();
+        div.extend([50u32, 51, 52, 53]);
+        assert!(c.covered(&div, 8));
+        assert!(!c.covered(&div, 12), "the diverging tail is not covered");
+        let mut ext = base.clone();
+        ext.extend([60u32, 61, 62, 63]);
+        assert!(!c.covered(&ext, 20), "an extension past the retained path is not covered");
+    }
+
+    #[test]
+    fn retain_budget_accounting() {
+        let one = seg(4).host_bytes();
+        let mut c = PrefixCache::new(4, 2 * one);
+        assert!(c.fits_retain_budget(one));
+        c.insert(&[1, 2, 3, 4], seg(4));
+        assert!(c.fits_retain_budget(one));
+        let id = c.insert(&[5, 6, 7, 8], seg(4));
+        assert!(!c.fits_retain_budget(one), "budget is full at two segments");
+        c.remove(id);
+        assert!(c.fits_retain_budget(one));
+        assert_eq!(c.retain_budget(), 2 * one);
+    }
+}

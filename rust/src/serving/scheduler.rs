@@ -20,6 +20,10 @@ pub struct QueueView {
     pub prompt_len: usize,
     /// Requested generation budget.
     pub max_new: usize,
+    /// Prompt tokens a retained prefix-cache segment already covers (0
+    /// when the cache is off or nothing matches) — what `PrefixAffinity`
+    /// ranks by.
+    pub cached_prefix: usize,
 }
 
 /// Admission policy: rank the waiting requests.
@@ -84,6 +88,27 @@ impl Scheduler for ShortestPromptFirst {
     }
 }
 
+/// Longest cached prefix first: requests whose prompts ride a retained
+/// prefix-cache segment skip most of their prefill, so admitting them
+/// first drains the queue with the least compute (cache-aware admission,
+/// the scheduling face of the prefix-cache subsystem); ties broken by
+/// arrival order, so with the cache off this degrades to FIFO.
+pub struct PrefixAffinity;
+
+impl Scheduler for PrefixAffinity {
+    fn name(&self) -> &'static str {
+        "prefix"
+    }
+
+    fn pick(&mut self, queue: &[QueueView]) -> Option<usize> {
+        queue
+            .iter()
+            .enumerate()
+            .max_by_key(|(i, q)| (q.cached_prefix, std::cmp::Reverse(*i)))
+            .map(|(i, _)| i)
+    }
+}
+
 /// Scheduler choice carried by `EngineConfig` (and the CLI's
 /// `--scheduler` flag).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -95,6 +120,8 @@ pub enum SchedulerKind {
     Priority,
     /// Shortest prompt first (latency-oriented).
     ShortestPromptFirst,
+    /// Longest cached prefix first (prefix-cache-aware admission).
+    PrefixAffinity,
 }
 
 impl SchedulerKind {
@@ -104,16 +131,18 @@ impl SchedulerKind {
             SchedulerKind::Fifo => Box::new(Fifo),
             SchedulerKind::Priority => Box::new(Priority),
             SchedulerKind::ShortestPromptFirst => Box::new(ShortestPromptFirst),
+            SchedulerKind::PrefixAffinity => Box::new(PrefixAffinity),
         }
     }
 
-    /// Parse a CLI name: fifo | priority | spf (aliases: shortest,
-    /// shortest-prompt-first).
+    /// Parse a CLI name: fifo | priority | spf | prefix (aliases:
+    /// shortest, shortest-prompt-first, prefix-affinity).
     pub fn parse(s: &str) -> Option<SchedulerKind> {
         match s {
             "fifo" => Some(SchedulerKind::Fifo),
             "priority" => Some(SchedulerKind::Priority),
             "spf" | "shortest" | "shortest-prompt-first" => Some(SchedulerKind::ShortestPromptFirst),
+            "prefix" | "prefix-affinity" => Some(SchedulerKind::PrefixAffinity),
             _ => None,
         }
     }
@@ -124,6 +153,7 @@ impl SchedulerKind {
             SchedulerKind::Fifo => "fifo",
             SchedulerKind::Priority => "priority",
             SchedulerKind::ShortestPromptFirst => "spf",
+            SchedulerKind::PrefixAffinity => "prefix",
         }
     }
 }
@@ -133,7 +163,7 @@ mod tests {
     use super::*;
 
     fn q(id: u64, priority: i32, prompt_len: usize) -> QueueView {
-        QueueView { id, priority, prompt_len, max_new: 8 }
+        QueueView { id, priority, prompt_len, max_new: 8, cached_prefix: 0 }
     }
 
     #[test]
@@ -160,12 +190,30 @@ mod tests {
     }
 
     #[test]
+    fn prefix_affinity_picks_longest_cached_then_oldest() {
+        let mut s = PrefixAffinity;
+        let qc = |id: u64, cached: usize| QueueView {
+            id,
+            priority: 0,
+            prompt_len: 20,
+            max_new: 8,
+            cached_prefix: cached,
+        };
+        assert_eq!(s.pick(&[qc(1, 0), qc(2, 16), qc(3, 8), qc(4, 16)]), Some(1));
+        // nothing cached: degrade to FIFO
+        assert_eq!(s.pick(&[qc(1, 0), qc(2, 0)]), Some(0));
+        assert_eq!(s.pick(&[]), None);
+    }
+
+    #[test]
     fn kind_parses_cli_names() {
         assert_eq!(SchedulerKind::parse("fifo"), Some(SchedulerKind::Fifo));
         assert_eq!(SchedulerKind::parse("priority"), Some(SchedulerKind::Priority));
         assert_eq!(SchedulerKind::parse("spf"), Some(SchedulerKind::ShortestPromptFirst));
         assert_eq!(SchedulerKind::parse("shortest"), Some(SchedulerKind::ShortestPromptFirst));
+        assert_eq!(SchedulerKind::parse("prefix"), Some(SchedulerKind::PrefixAffinity));
         assert_eq!(SchedulerKind::parse("lifo"), None);
         assert_eq!(SchedulerKind::default(), SchedulerKind::Fifo);
+        assert_eq!(SchedulerKind::PrefixAffinity.name(), "prefix");
     }
 }

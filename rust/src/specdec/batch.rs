@@ -18,6 +18,14 @@
 //! exactly. Lane isolation is the engine's parking rule: lanes a forward
 //! does not feed are teacher-forced a dummy token at their own frontier,
 //! where the write is dead by the attention masking rule.
+//!
+//! With `SpecConfig::engine` carrying `EngineConfig::prefix_cache`, BOTH
+//! engines run the radix-tree prefix cache: a fleet of requests sharing
+//! a system prompt prefills it once per engine — the drafter's `spec_open`
+//! and the parent's reuse their own retained segments (each engine keeps
+//! its own tree because per-layer KV-head counts differ between the two
+//! architectures), and lanes backfilled mid-run hit the prefix their
+//! predecessors retained. Hit or miss, outputs stay byte-identical.
 
 use std::collections::HashMap;
 
@@ -137,9 +145,27 @@ impl SpecBatch {
     }
 
     /// Paged-KV bytes currently held by the (parent, child) engines —
-    /// both must return to zero between `generate_many` calls.
+    /// with the prefix cache off, both must return to zero between
+    /// `generate_many` calls; with it on, exactly the retained segment
+    /// bytes (`prefix_retained_bytes`) persist.
     pub fn kv_allocated_bytes(&self) -> (usize, usize) {
         (self.parent.kv_allocated_bytes(), self.child.kv_allocated_bytes())
+    }
+
+    /// Pool bytes the (parent, child) engines hold as retained prefix
+    /// segments — the share of `kv_allocated_bytes` that deliberately
+    /// outlives requests.
+    pub fn prefix_retained_bytes(&self) -> (usize, usize) {
+        (self.parent.prefix_retained_bytes(), self.child.prefix_retained_bytes())
+    }
+
+    /// Prompt tokens the (parent, child) engines served from retained
+    /// prefixes instead of re-prefilling — the shared-system-prompt win.
+    pub fn prefix_tokens_saved(&self) -> (usize, usize) {
+        (
+            self.parent.metrics.prefix_tokens_saved,
+            self.child.metrics.prefix_tokens_saved,
+        )
     }
 
     /// Concurrent speculative sequences the engines can hold

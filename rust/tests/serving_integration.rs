@@ -457,6 +457,178 @@ fn step_streaming_yields_the_same_tokens_as_run_to_completion() {
     }
 }
 
+/// Submit `reqs` to `eng` in order and return each request's tokens, in
+/// submission order.
+fn run_all(eng: &mut puzzle::serving::Engine, reqs: &[GenRequest]) -> Vec<Vec<u32>> {
+    let ids: Vec<u64> = reqs.iter().map(|r| eng.submit(r.clone()).unwrap()).collect();
+    let resp = eng.run_to_completion().unwrap();
+    ids.iter()
+        .map(|id| resp.iter().find(|r| r.id == *id).unwrap().tokens.clone())
+        .collect()
+}
+
+#[test]
+fn prefix_cache_hit_is_byte_identical_to_cold_miss() {
+    // the prefix-cache core invariant: generations riding a retained
+    // prefix are byte-identical to cold-miss generations — greedy and
+    // seeded-stochastic, partial overlaps, chunked prompts, repeats.
+    let be = backend();
+    let cfg = be.man().cfg.clone();
+    let mut rng = Rng::new(61);
+    let mut store = init_parent(be.man(), &mut rng);
+    let arch = variable_arch(&*be, &mut store); // per-layer variable kv heads + a linear layer
+    let world = World::new(7, cfg.v as u32);
+    let mix = CorpusMix::distillation_mix();
+    let mut prng = Rng::new(5);
+    // a shared 24-token system prompt (page_len 16: aligned match = 16+)
+    let sys = sample_sequence(&world, &mix, 23, &mut prng);
+    assert_eq!(sys.len(), 24);
+    let mut prompts: Vec<Vec<u32>> = Vec::new();
+    for len in [4usize, 6, 2] {
+        let mut p = sys.clone();
+        p.extend(sample_sequence(&world, &mix, len, &mut prng));
+        prompts.push(p);
+    }
+    // partial-page overlap: shares only 5 tokens with sys -> must miss
+    let mut partial = sys[..5].to_vec();
+    partial.extend(sample_sequence(&world, &mix, 9, &mut prng));
+    prompts.push(partial);
+    // chunked prompt: past the 32-token prefill window, sharing sys
+    let mut chunked = sys.clone();
+    chunked.extend(sample_sequence(&world, &mix, 12, &mut prng));
+    assert!(chunked.len() > cfg.s_prefill);
+    prompts.push(chunked);
+    // exact repeat of the first prompt
+    prompts.push(prompts[0].clone());
+
+    let reqs: Vec<GenRequest> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let sampling = if i % 2 == 0 {
+                SamplingParams::greedy()
+            } else {
+                SamplingParams::temperature(0.8).with_seed(40 + i as u64)
+            };
+            GenRequest::new(p.clone(), 6).with_sampling(sampling)
+        })
+        .collect();
+
+    let mut cold = EngineConfig::new().kv_budget_bytes(32 << 20).build(be.clone(), &store, &arch).unwrap();
+    let oracle = run_all(&mut cold, &reqs);
+    assert_eq!(cold.metrics.prefix_hits + cold.metrics.prefix_misses, 0, "cache off: no prefix traffic");
+
+    let mut warm = EngineConfig::new()
+        .kv_budget_bytes(32 << 20)
+        .prefix_cache(true, 8 << 20)
+        .build(be.clone(), &store, &arch)
+        .unwrap();
+    let got = run_all(&mut warm, &reqs);
+    for (i, (g, want)) in got.iter().zip(&oracle).enumerate() {
+        assert_eq!(g, want, "request {i}: cache-hit generation must be byte-identical to cold miss");
+    }
+    assert!(warm.prefix_enabled(), "RefBackend supports kv transfer");
+    assert!(warm.metrics.prefix_hits >= 3, "sys-sharing prompts and the repeat must hit");
+    assert!(warm.metrics.prefix_tokens_saved >= 3 * 16, "each hit saves >= one page of prefill");
+    assert!(warm.metrics.prefix_misses >= 2, "the first prompt and the partial overlap miss");
+    // all request pages returned; only retained segments keep bytes
+    assert_eq!(warm.kv_allocated_bytes(), warm.prefix_retained_bytes());
+    assert!(warm.prefix_segments() > 0);
+
+    // a full-window retention serves >= 32-token hits: chunked prompt
+    // cold on a fresh engine, then again
+    let mut warm2 = EngineConfig::new()
+        .kv_budget_bytes(32 << 20)
+        .prefix_cache(true, 8 << 20)
+        .build(be.clone(), &store, &arch)
+        .unwrap();
+    let chunked_req = vec![GenRequest::new(chunked.clone(), 6)];
+    let first = run_all(&mut warm2, &chunked_req);
+    let again = run_all(&mut warm2, &chunked_req);
+    assert_eq!(first, again, "chunked hit must reproduce the chunked cold run");
+    assert_eq!(warm2.metrics.prefix_hits, 1);
+    assert_eq!(
+        warm2.metrics.prefix_tokens_saved, 32,
+        "the full prefill window is retained and reused"
+    );
+}
+
+#[test]
+fn prefix_eviction_respects_live_refs_and_budget() {
+    // satellite edge cases: eviction under budget pressure never evicts a
+    // segment with live references; once the reference drops the LRU
+    // segment goes; a hit on a prefix retained by a *cancelled* request
+    // still works; retain -> cancel -> re-admit accounting stays exact.
+    let be = backend();
+    let y = 10u32;
+    let mut rng = Rng::new(62);
+    let store = self_loop_store(&*be, y, &mut rng);
+    let arch = Arch::parent(be.man().cfg.n_layers);
+    // retain budget for exactly ONE 16-token segment
+    let one_seg = {
+        let probe = PagedKvManager::new(
+            be.man(),
+            &arch,
+            PageCfg { page_len: 16, dtype_bytes: 4, budget_bytes: usize::MAX / 2 },
+        );
+        probe.shared_bytes(16)
+    };
+    let mut eng = EngineConfig::new()
+        .kv_budget_bytes(32 << 20)
+        .prefix_cache(true, one_seg)
+        .build(be.clone(), &store, &arch)
+        .unwrap();
+
+    let p1: Vec<u32> = std::iter::once(1u32).chain(std::iter::repeat(y).take(16)).collect();
+    let mut p2 = p1.clone();
+    p2[0] = 3; // diverges at token 0: its own radix path
+
+    // cold run retains S1 (16 tokens of p1)
+    eng.submit(GenRequest::new(p1.clone(), 2)).unwrap();
+    eng.run_to_completion().unwrap();
+    assert_eq!(eng.prefix_segments(), 1);
+    let retained = eng.prefix_retained_bytes();
+    assert_eq!(retained, one_seg, "page-aligned pool and host bytes agree");
+
+    // B hits S1 and keeps running (self-loop: never finishes on its own)
+    let idb = eng.submit(GenRequest::new(p1.clone(), 40)).unwrap();
+    eng.step().unwrap();
+    assert_eq!(eng.metrics.prefix_hits, 1);
+
+    // C's retention wants the only budget slot, but S1 has a live ref:
+    // nothing may be evicted, so retention is skipped — admission never
+    // breaks, the segment survives
+    eng.submit(GenRequest::new(p2.clone(), 2)).unwrap();
+    while eng.queue_len() > 0 || eng.active() > 1 {
+        eng.step().unwrap();
+    }
+    assert_eq!(eng.metrics.prefix_evictions, 0, "a referenced segment must never be evicted");
+    assert_eq!(eng.prefix_segments(), 1, "S1 survives the pressure");
+
+    // cancel B: its pages come back, accounting is exactly retained-only
+    assert!(eng.cancel(idb));
+    assert_eq!(eng.kv_allocated_bytes(), retained, "retain -> cancel accounting must be exact");
+
+    // a hit on the prefix retained via the now-cancelled lineage works
+    let idd = eng.submit(GenRequest::new(p1.clone(), 3)).unwrap();
+    let resp = eng.run_to_completion().unwrap();
+    assert_eq!(resp.iter().find(|r| r.id == idd).unwrap().tokens, vec![y; 3]);
+    assert_eq!(eng.metrics.prefix_hits, 2, "cancellation must not invalidate the segment");
+    assert_eq!(eng.kv_allocated_bytes(), retained);
+
+    // with the ref gone, C's retention now evicts LRU S1 and takes the slot
+    eng.submit(GenRequest::new(p2.clone(), 2)).unwrap();
+    eng.run_to_completion().unwrap();
+    assert_eq!(eng.metrics.prefix_evictions, 1, "unreferenced LRU segment must be evicted");
+    assert_eq!(eng.prefix_segments(), 1, "the retain budget holds exactly one segment");
+    // p1 now misses (its segment is gone) but stays byte-identical
+    let ide = eng.submit(GenRequest::new(p1.clone(), 3)).unwrap();
+    let resp = eng.run_to_completion().unwrap();
+    assert_eq!(resp.iter().find(|r| r.id == ide).unwrap().tokens, vec![y; 3]);
+    assert_eq!(eng.clear_prefix_cache(), 1);
+    assert_eq!(eng.kv_allocated_bytes(), 0, "clearing the cache returns the pool to empty");
+}
+
 #[test]
 fn generation_stops_at_eos_through_the_decode_path() {
     // engineer weights so the model deterministically generates

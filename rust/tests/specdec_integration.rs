@@ -345,43 +345,81 @@ fn engine_rollback_is_exact_recompute() {
 }
 
 #[test]
-fn speculative_and_batched_modes_are_mutually_exclusive() {
-    // a batched decode step teacher-forces garbage into idle lanes'
-    // position 0 — harmless for empty lanes (prefill overwrites), fatal
-    // for a live speculative sequence — so an engine serves either
-    // batched requests or speculative sequences, never both. Speculative
-    // sequences coexist with EACH OTHER (the spec-path forwards park
-    // unfed lanes at their own frontier), up to the decode lane count.
+fn mixed_mode_serving_is_byte_identical_to_isolated_runs() {
+    // mixed-mode serving: ONE engine interleaves a plain batched request
+    // and an externally driven speculative sequence. Every forward —
+    // batched decode steps included — parks unfed live lanes at their
+    // own frontier (not position 0), so neither mode perturbs the other:
+    // both must be bitwise identical to isolated runs.
     let be = backend();
     let y = 10u32;
     let mut rng = Rng::new(38);
+    // self-loop store: the batched request deterministically emits `y`
+    // forever, so it cannot finish early and the interleaving below is
+    // stable; the spec comparisons are raw logits and need no structure
     let store = self_loop_store(&*be, y, &mut rng);
     let parent = Arch::parent(be.man().cfg.n_layers);
-    let mut eng = EngineConfig::new().kv_budget_bytes(32 << 20).build(be.clone(), &store, &parent).unwrap();
-
-    let (sid, _) = eng.spec_open(&[1, y]).unwrap();
-    assert!(eng.submit(GenRequest::new(vec![1, y], 4)).is_err(), "batched submit must be refused in speculative mode");
-    let (sid2, _) = eng.spec_open(&[1, y, y]).unwrap();
-    assert_eq!(eng.spec_active(), 2, "speculative sequences share the decode lanes");
+    let mut eng =
+        EngineConfig::new().kv_budget_bytes(32 << 20).build(be.clone(), &store, &parent).unwrap();
     assert_eq!(eng.decode_lanes(), 2, "tiny config compiles 2 decode lanes");
-    assert!(eng.spec_open(&[1, y]).is_err(), "no third sequence: every lane is pinned");
-    eng.spec_close(sid2);
+
+    let spec_prompt = vec![1u32, 5, 9];
+    let probe = [7u32, 11, 13];
+    let batch_prompt = vec![1u32, y];
+
+    // isolated speculative oracle
+    let (sid, first_iso) = eng.spec_open(&spec_prompt).unwrap();
+    let rows_iso = eng.spec_extend(sid, &probe, 0).unwrap();
     eng.spec_close(sid);
+    // isolated batched oracle
+    eng.submit(GenRequest::new(batch_prompt.clone(), 6)).unwrap();
+    let tokens_iso = eng.run_to_completion().unwrap()[0].tokens.clone();
+    assert_eq!(tokens_iso, vec![y; 6], "self-loop store keeps generating y");
+    assert_eq!(eng.kv_allocated_bytes(), 0);
 
-    // back to batched mode: the lane is clean (prefill overwrites it)
-    let rid = eng.submit(GenRequest::new(vec![1, y], 4)).unwrap();
-    let resp = eng.run_to_completion().unwrap();
-    assert_eq!(resp.len(), 1);
-    assert_eq!(resp[0].id, rid);
-    assert_eq!(resp[0].tokens, vec![y; 4]);
-
-    // and with a batched request in flight, spec_open is refused
-    eng.submit(GenRequest::new(vec![1, y], 20)).unwrap();
+    // mixed: the spec sequence opens first, then a batched request joins
+    let (sid, first_mix) = eng.spec_open(&spec_prompt).unwrap();
+    assert_eq!(first_mix, first_iso, "spec prefill must not see the batched lane");
+    eng.submit(GenRequest::new(batch_prompt.clone(), 6)).unwrap();
+    eng.step().unwrap(); // admits + decodes the batched slot, spec lane parked
+    assert!(eng.active() > 0 && eng.spec_active() > 0, "both modes live on one engine");
+    // spec extensions interleave with batched decode steps
+    let mut rows_mix = eng.spec_extend(sid, &probe[..1], 0).unwrap();
     eng.step().unwrap();
-    assert!(eng.active() > 0);
-    assert!(eng.spec_open(&[1, y]).is_err(), "speculative open must be refused mid-batch");
-    let done = eng.run_to_completion().unwrap();
-    assert_eq!(done.len(), 1);
+    rows_mix.extend(eng.spec_extend(sid, &probe[1..], 0).unwrap());
+    while !eng.is_idle() {
+        eng.step().unwrap();
+    }
+    let resp = eng.take_finished();
+    assert_eq!(resp.len(), 1);
+    assert_eq!(resp[0].tokens, tokens_iso, "batched output must ignore the parked spec lane");
+    assert_eq!(rows_mix, rows_iso, "spec logits must ignore the interleaved batched steps");
+
+    // rollback + recompute still exact in mixed mode
+    eng.spec_truncate(sid, spec_prompt.len()).unwrap();
+    let rows_again = eng.spec_extend(sid, &probe, 0).unwrap();
+    assert_eq!(rows_again, rows_iso);
+    eng.spec_close(sid);
+    assert_eq!(eng.kv_allocated_bytes(), 0);
+
+    // lane capacity still binds: spec sequences + batched slots share it
+    let (s1, _) = eng.spec_open(&spec_prompt).unwrap();
+    let (s2, _) = eng.spec_open(&[1, 2]).unwrap();
+    assert!(eng.spec_open(&[3, 4]).is_err(), "no third sequence: every lane is pinned");
+    eng.submit(GenRequest::new(batch_prompt.clone(), 2)).unwrap();
+    eng.step().unwrap();
+    assert_eq!(eng.active(), 0, "no lane free: the batched request must wait in queue");
+    assert_eq!(eng.queue_len(), 1);
+    eng.spec_close(s2);
+    eng.step().unwrap();
+    assert_eq!(eng.queue_len(), 0, "a freed lane admits the waiting batched request");
+    while !eng.is_idle() {
+        eng.step().unwrap();
+    }
+    let resp = eng.take_finished();
+    let want = &tokens_iso[..tokens_iso.len().min(2)];
+    assert_eq!(resp[0].tokens, want, "max_new 2 prefix of the oracle");
+    eng.spec_close(s1);
     assert_eq!(eng.kv_allocated_bytes(), 0);
 }
 
@@ -491,6 +529,66 @@ fn batched_spec_equivalence_matrix() {
             "N={n}: fused multi-token verify must be exercised"
         );
     }
+}
+
+#[test]
+fn prefix_cache_keeps_specbatch_byte_identical() {
+    // the shared-system-prompt regime under batched speculation: with
+    // `EngineConfig::prefix_cache` on, BOTH engines (parent verifier and
+    // child drafter) retain the first cold prompt's prefix and every
+    // later lane imports it instead of re-prefilling — and the output
+    // stays byte-identical to plain greedy parent decoding.
+    let be = backend();
+    let cfg = be.man().cfg.clone();
+    let mut rng = Rng::new(55);
+    let mut store = init_parent(be.man(), &mut rng);
+    let child = child_arch(&*be, &mut store);
+    let parent = Arch::parent(cfg.n_layers);
+    let world = World::new(5, cfg.v as u32);
+    let mix = CorpusMix::distillation_mix();
+    let mut prng = Rng::new(17);
+    // 4 requests over 2 lanes sharing a 17-token system prompt: the
+    // first two retain (one per engine tree), the backfilled lanes hit
+    let sys = sample_sequence(&world, &mix, 16, &mut prng);
+    assert_eq!(sys.len(), 17);
+    let prompts: Vec<Vec<u32>> = (0..4)
+        .map(|i| {
+            let mut p = sys.clone();
+            p.extend(sample_sequence(&world, &mix, 3 + i, &mut prng));
+            p
+        })
+        .collect();
+    let max_new = 8usize;
+    let oracle = plain_greedy(&be, &store, &parent, &prompts, max_new);
+
+    let mut batch = SpecBatch::new(
+        be.clone(),
+        &store,
+        &parent,
+        &store,
+        &child,
+        SpecConfig {
+            draft_k: 3,
+            engine: EngineConfig::new().kv_budget_bytes(32 << 20).prefix_cache(true, 8 << 20),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let reqs: Vec<SpecRequest> =
+        prompts.iter().map(|p| SpecRequest::new(p.clone(), max_new)).collect();
+    let rs = batch.generate_many(&reqs).unwrap();
+    for (i, r) in rs.iter().enumerate() {
+        assert_eq!(r.tokens, oracle[i], "seq {i}: prefix-cached speculation must match plain greedy");
+    }
+    let (psaved, csaved) = batch.prefix_tokens_saved();
+    assert!(psaved >= 16, "parent lanes must reuse the retained system prompt (saved {psaved})");
+    assert!(csaved >= 16, "drafter lanes must reuse their own retained prefix (saved {csaved})");
+    // only the retained segments outlive the batch — request pages are
+    // all handed back
+    let (pkv, ckv) = batch.kv_allocated_bytes();
+    let (pret, cret) = batch.prefix_retained_bytes();
+    assert_eq!((pkv, ckv), (pret, cret), "only retained segments may hold bytes after the run");
+    assert!(pret > 0 && cret > 0);
 }
 
 #[test]

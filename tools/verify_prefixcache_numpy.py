@@ -1,0 +1,619 @@
+#!/usr/bin/env python3
+"""Toolchain-free cross-checks of the prefix-cache subsystem (PR 5).
+
+The growth container has no cargo, so this verifies the load-bearing
+claims of rust/src/serving/prefixcache.rs + engine.rs in python:
+
+  1. hit == miss, exactly: a full-model cold prefill of a prompt versus
+     importing the retained K/V prefix and teacher-forcing only the
+     suffix through decode steps — transcribed loop-for-loop from
+     refbackend.rs (per-row rmsnorm/rope/matmul, causal attention with
+     grouped KV heads, variable kv-heads per layer, tied head) — must
+     produce bitwise-identical suffix hidden rows, cache rows, and
+     final logits. This is the inductive argument DESIGN.md §7 leans on.
+  2. the prefill transcription is anchored against the independent JAX
+     oracles (compile/model.py attn_gqa_fwd / ffn_fwd / head_fwd).
+  3. radix tree fuzz: a python port of PrefixCache::{insert, best_match,
+     covered, remove} checked against a brute-force oracle (the best hit
+     is the max over retained paths of align_down(min(common, P-1))) on
+     thousands of random small-alphabet workloads.
+  4. shared-page accounting fuzz: a python port of PagedKvManager's
+     retain/admit_shared/grow/truncate/release/evict checked after every
+     op against from-scratch recomputation of the pool accounting
+     (segment bytes charged once + per-sequence owned bytes) and the
+     refcount/eviction rules.
+
+Run: PYTHONPATH=python python3 tools/verify_prefixcache_numpy.py
+"""
+import numpy as np
+
+rng = np.random.default_rng(11)
+F = np.float32
+
+
+# ======================================================================
+# per-row primitives shared by BOTH lowerings (as in refbackend.rs,
+# where prefill and decode run the same row-wise arithmetic)
+# ======================================================================
+
+def rmsnorm_row(x, w, eps):
+    ms = (x.astype(F) ** 2).mean()
+    r = F(1.0) / np.sqrt(ms + F(eps))
+    return (x * r * w).astype(F)
+
+
+def rope_row(x, pos, heads, dh, theta):
+    x = x.reshape(heads, dh).copy()
+    half = dh // 2
+    freqs = theta ** (-np.arange(half, dtype=F) / F(half))
+    ang = F(pos) * freqs
+    cos, sin = np.cos(ang).astype(F), np.sin(ang).astype(F)
+    x1, x2 = x[:, :half].copy(), x[:, half:].copy()
+    x[:, :half] = x1 * cos - x2 * sin
+    x[:, half:] = x1 * sin + x2 * cos
+    return x.reshape(heads * dh)
+
+
+def attn_row(q, kbuf, vbuf, pmax, h, kv, dh):
+    """One query row against K/V rows [0..pmax] ([npos, kv, dh])."""
+    group = h // kv
+    scale = F(1.0 / np.sqrt(dh))
+    o = np.zeros(h * dh, dtype=F)
+    for hi in range(h):
+        g = hi // group
+        qr = q[hi * dh : (hi + 1) * dh]
+        dots = (kbuf[: pmax + 1, g, :] @ qr) * scale
+        m = dots.max()
+        e = np.exp(dots - m)
+        p = (e / e.sum()).astype(F)
+        o[hi * dh : (hi + 1) * dh] = (p[:, None] * vbuf[: pmax + 1, g, :]).sum(axis=0)
+    return o
+
+
+def block_row(x, pos, kbuf, vbuf, layer, cfg):
+    """One token row through one (GQA attn + FFN) layer, writing its K/V
+    at `pos` and attending over [0..pos] — identical arithmetic whether
+    the row is part of a prefill window or a decode step."""
+    h, dh, eps, theta = cfg["h"], cfg["dh"], cfg["eps"], cfg["theta"]
+    kv = layer["kv"]
+    hn = rmsnorm_row(x, layer["anorm"], eps)
+    q = rope_row((hn @ layer["wq"]).astype(F), pos, h, dh, theta)
+    k = rope_row((hn @ layer["wk"]).astype(F), pos, kv, dh, theta)
+    v = (hn @ layer["wv"]).astype(F)
+    kbuf[pos] = k.reshape(kv, dh)
+    vbuf[pos] = v.reshape(kv, dh)
+    o = attn_row(q, kbuf, vbuf, pos, h, kv, dh)
+    x = (x + (o @ layer["wo"]).astype(F)).astype(F)
+    hn = rmsnorm_row(x, layer["fnorm"], eps)
+    g = (hn @ layer["wg"]).astype(F)
+    u = (hn @ layer["wu"]).astype(F)
+    z = (g * (F(1.0) / (F(1.0) + np.exp(-g))) * u).astype(F)
+    return (x + (z @ layer["wd"]).astype(F)).astype(F)
+
+
+def head_row(x, norm, e, eps):
+    return (rmsnorm_row(x, norm, eps) @ e.T).astype(F)
+
+
+def forward_positions(tokens, positions, caches, cfg):
+    """Run `tokens` (at `positions`) through the whole model, updating
+    each layer's K/V buffers in place; returns the final hidden rows.
+    The cold prefill runs this over ALL prompt rows; the hit path runs
+    it only over the suffix rows against imported buffers."""
+    out = []
+    for tok, pos in zip(tokens, positions):
+        x = cfg["embed"][tok].copy()
+        for layer, (kbuf, vbuf) in zip(cfg["layers"], caches):
+            x = block_row(x, pos, kbuf, vbuf, layer, cfg)
+        out.append(x)
+    return out
+
+
+def check_hit_equals_miss():
+    d, h, dh, vsz = 32, 4, 8, 64
+    cfg = {
+        "h": h, "dh": dh, "eps": 1e-5, "theta": 10000.0,
+        "embed": rng.normal(0, 0.3, (vsz, d)).astype(F),
+        "fnorm": rng.normal(0, 0.5, d).astype(F),
+        "layers": [],
+    }
+    for kv in (2, 1):  # per-layer VARIABLE kv-head counts (paper §6)
+        i = 48
+        cfg["layers"].append({
+            "kv": kv,
+            "anorm": rng.normal(0, 0.5, d).astype(F),
+            "wq": rng.normal(0, 0.2, (d, h * dh)).astype(F),
+            "wk": rng.normal(0, 0.2, (d, kv * dh)).astype(F),
+            "wv": rng.normal(0, 0.2, (d, kv * dh)).astype(F),
+            "wo": rng.normal(0, 0.2, (h * dh, d)).astype(F),
+            "fnorm": rng.normal(0, 0.5, d).astype(F),
+            "wg": rng.normal(0, 0.2, (d, i)).astype(F),
+            "wu": rng.normal(0, 0.2, (d, i)).astype(F),
+            "wd": rng.normal(0, 0.2, (i, d)).astype(F),
+        })
+    smax, P, L = 24, 13, 8  # 13-token prompt, 8-token retained prefix
+
+    prompt = rng.integers(0, vsz, P).tolist()
+    fresh = lambda: [
+        (np.zeros((smax, lay["kv"], dh), dtype=F), np.zeros((smax, lay["kv"], dh), dtype=F))
+        for lay in cfg["layers"]
+    ]
+
+    # cold miss: every prompt row computed (the prefill window)
+    cold_caches = fresh()
+    cold_hidden = forward_positions(prompt, range(P), cold_caches, cfg)
+    cold_logits = head_row(cold_hidden[-1], cfg["fnorm"], cfg["embed"], cfg["eps"])
+
+    # retention: export rows [0, L) — bitwise copies (Backend::export_kv)
+    seg = [(k[:L].copy(), v[:L].copy()) for (k, v) in cold_caches]
+
+    # hit: import the segment, teacher-force ONLY the suffix
+    hit_caches = fresh()
+    for (kb, vb), (ks, vs) in zip(hit_caches, seg):
+        kb[:L] = ks
+        vb[:L] = vs
+    hit_hidden = forward_positions(prompt[L:], range(L, P), hit_caches, cfg)
+    hit_logits = head_row(hit_hidden[-1], cfg["fnorm"], cfg["embed"], cfg["eps"])
+
+    assert np.array_equal(cold_logits, hit_logits), "hit logits != miss logits"
+    for j in range(P - L):
+        assert np.array_equal(cold_hidden[L + j], hit_hidden[j]), f"suffix row {j} diverged"
+    for (ck, cv), (hk, hv) in zip(cold_caches, hit_caches):
+        assert np.array_equal(ck[:P], hk[:P]), "K cache rows diverged"
+        assert np.array_equal(cv[:P], hv[:P]), "V cache rows diverged"
+    # garbage beyond the import never leaks: poison rows >= P, recompute
+    poisoned = fresh()
+    for (kb, vb), (ks, vs) in zip(poisoned, seg):
+        kb[:L] = ks
+        vb[:L] = vs
+        kb[P:] = rng.normal(0, 9.0, kb[P:].shape)
+        vb[P:] = rng.normal(0, 9.0, vb[P:].shape)
+    pois_hidden = forward_positions(prompt[L:], range(L, P), poisoned, cfg)
+    assert np.array_equal(pois_hidden[-1], hit_hidden[-1]), "stale rows leaked"
+    print("1. cache-hit forward == cold-miss forward, bitwise (logits, hidden, caches) ✓")
+    return cfg, cold_caches, prompt
+
+
+def check_jax_anchor(cfg, prompt):
+    try:
+        from compile.configs import ModelCfg
+        from compile import model as jmodel
+        import jax.numpy as jnp
+    except ImportError as e:
+        print(f"2. SKIPPED (jax unavailable: {e})")
+        return
+    d, h, dh = 32, cfg["h"], cfg["dh"]
+    P = len(prompt)
+    lay = cfg["layers"][0]
+    jcfg = ModelCfg(
+        name="verify", d=d, n_layers=2, n_heads=h, head_dim=dh, i=48, v=64,
+        s_train=8, b_train=1, s_prefill=P, b_decode=1, s_max=24, s_long=8,
+        rope_theta=cfg["theta"], eps=cfg["eps"],
+    )
+    # numpy per-row transcription of ONE attn block over the window ...
+    kbuf = np.zeros((24, lay["kv"], dh), dtype=F)
+    vbuf = np.zeros((24, lay["kv"], dh), dtype=F)
+    x0 = cfg["embed"][np.array(prompt)]
+    ys = []
+    for p in range(P):
+        hn = rmsnorm_row(x0[p], lay["anorm"], cfg["eps"])
+        q = rope_row((hn @ lay["wq"]).astype(F), p, h, dh, cfg["theta"])
+        k = rope_row((hn @ lay["wk"]).astype(F), p, lay["kv"], dh, cfg["theta"])
+        kbuf[p] = k.reshape(lay["kv"], dh)
+        vbuf[p] = (hn @ lay["wv"]).astype(F).reshape(lay["kv"], dh)
+        ys.append(x0[p] + attn_row(q, kbuf, vbuf, p, h, lay["kv"], dh) @ lay["wo"])
+    ys = np.stack(ys)[None].astype(F)
+    # ... against the JAX prefill oracle
+    yj, kj, vj = jmodel.attn_gqa_fwd(
+        jcfg, jnp.asarray(x0[None]), jnp.asarray(lay["anorm"]), jnp.asarray(lay["wq"]),
+        jnp.asarray(lay["wk"]), jnp.asarray(lay["wv"]), jnp.asarray(lay["wo"]),
+    )
+    assert np.allclose(ys, np.asarray(yj), atol=2e-5), "attn prefill oracle mismatch"
+    assert np.allclose(kbuf[:P], np.asarray(kj)[0], atol=2e-5), "prefill K oracle mismatch"
+    assert np.allclose(vbuf[:P], np.asarray(vj)[0], atol=2e-5), "prefill V oracle mismatch"
+    # ffn + head rows
+    yf = np.stack([
+        ys[0, p] + (
+            lambda hn: ((hn @ lay["wg"]) * (1.0 / (1.0 + np.exp(-(hn @ lay["wg"]))))
+                        * (hn @ lay["wu"])) @ lay["wd"]
+        )(rmsnorm_row(ys[0, p], lay["fnorm"], cfg["eps"]))
+        for p in range(P)
+    ]).astype(F)
+    yfj = jmodel.ffn_fwd(jnp.asarray(ys), jnp.asarray(lay["fnorm"]), jnp.asarray(lay["wg"]),
+                         jnp.asarray(lay["wu"]), jnp.asarray(lay["wd"]))
+    assert np.allclose(yf[None], np.asarray(yfj), atol=2e-5), "ffn oracle mismatch"
+    lg = head_row(yf[-1], cfg["fnorm"], cfg["embed"], cfg["eps"])
+    lgj = jmodel.head_fwd(jnp.asarray(yf[None, -1:, :]), jnp.asarray(cfg["fnorm"]),
+                          jnp.asarray(cfg["embed"]))
+    assert np.allclose(lg, np.asarray(lgj)[0, 0], atol=2e-4), "head oracle mismatch"
+    print("2. per-row transcription matches the JAX prefill/ffn/head oracles ✓")
+
+
+# ======================================================================
+# 3. radix tree vs brute force (port of serving/prefixcache.rs)
+# ======================================================================
+
+def align_down(n, p):
+    return (n // p) * p
+
+
+class PyPrefixCache:
+    """Line-for-line port of PrefixCache (tree logic only)."""
+
+    def __init__(self, page_len):
+        self.nodes = [{"edge": [], "children": [], "seg": None, "depth": 0, "parent": 0}]
+        self.paths = {}  # seg_id -> full token path (for validity checks)
+        self.page_len = page_len
+        self.next = 1
+
+    def best_match(self, prompt):
+        cur, i = 0, 0
+        deepest, frontier = None, None
+        while True:
+            node = self.nodes[cur]
+            if node["seg"] is not None and node["depth"] > 0:
+                deepest = (node["seg"], node["depth"])
+            if i >= len(prompt):
+                frontier = node["children"][0] if node["children"] else None
+                break
+            child = next(
+                (c for c in node["children"] if self.nodes[c]["edge"][0] == prompt[i]), None
+            )
+            if child is None:
+                frontier = node["children"][0] if node["children"] else None
+                break
+            edge = self.nodes[child]["edge"]
+            common = 0
+            for a, b in zip(edge, prompt[i:]):
+                if a != b:
+                    break
+                common += 1
+            i += common
+            if common == len(edge):
+                cur = child
+                continue
+            frontier = child
+            break
+        m = align_down(min(i, len(prompt) - 1), self.page_len)
+        if m == 0:
+            return None
+        if frontier is not None:
+            n = frontier
+            while True:
+                if self.nodes[n]["seg"] is not None:
+                    return (self.nodes[n]["seg"], m)
+                if not self.nodes[n]["children"]:
+                    break
+                n = self.nodes[n]["children"][0]
+        if deepest is None:
+            return None
+        return (deepest[0], min(deepest[1], m))
+
+    def covered(self, tokens, length):
+        cur, i = 0, 0
+        while i < length:
+            node = self.nodes[cur]
+            child = next(
+                (c for c in node["children"] if self.nodes[c]["edge"][0] == tokens[i]), None
+            )
+            if child is None:
+                return False
+            edge = self.nodes[child]["edge"]
+            common = 0
+            for a, b in zip(edge, tokens[i:length]):
+                if a != b:
+                    break
+                common += 1
+            i += common
+            if common < len(edge):
+                return i == length
+            cur = child
+        return True
+
+    def insert_path(self, tokens):
+        cur, i = 0, 0
+        while i < len(tokens):
+            node = self.nodes[cur]
+            child = next(
+                (c for c in node["children"] if self.nodes[c]["edge"][0] == tokens[i]), None
+            )
+            if child is None:
+                idx = len(self.nodes)
+                self.nodes.append({"edge": list(tokens[i:]), "children": [], "seg": None,
+                                   "depth": len(tokens), "parent": cur})
+                self.nodes[cur]["children"].append(idx)
+                return idx
+            edge = self.nodes[child]["edge"]
+            common = 0
+            for a, b in zip(edge, tokens[i:]):
+                if a != b:
+                    break
+                common += 1
+            if common == len(edge):
+                cur = child
+                i += common
+                continue
+            mid = len(self.nodes)
+            self.nodes.append({"edge": edge[:common], "children": [child], "seg": None,
+                               "depth": self.nodes[cur]["depth"] + common, "parent": cur})
+            pos = self.nodes[cur]["children"].index(child)
+            self.nodes[cur]["children"][pos] = mid
+            self.nodes[child]["edge"] = edge[common:]
+            self.nodes[child]["parent"] = mid
+            if i + common == len(tokens):
+                return mid
+            leaf = len(self.nodes)
+            self.nodes.append({"edge": list(tokens[i + common:]), "children": [], "seg": None,
+                               "depth": len(tokens), "parent": mid})
+            self.nodes[mid]["children"].append(leaf)
+            return leaf
+        return cur
+
+    def insert(self, tokens, seg_len):
+        assert seg_len % self.page_len == 0 and 0 < seg_len <= len(tokens)
+        node = self.insert_path(tokens[:seg_len])
+        assert self.nodes[node]["seg"] is None, "caller deduplicates"
+        sid = self.next
+        self.next += 1
+        self.nodes[node]["seg"] = sid
+        self.paths[sid] = list(tokens[:seg_len])
+        return sid, node
+
+    def remove(self, sid, node):
+        del self.paths[sid]
+        self.nodes[node]["seg"] = None
+        cur = node
+        while (cur != 0 and self.nodes[cur]["seg"] is None
+               and not self.nodes[cur]["children"]):
+            parent = self.nodes[cur]["parent"]
+            self.nodes[parent]["children"].remove(cur)
+            cur = parent
+
+
+def common_len(a, b):
+    n = 0
+    for x, y in zip(a, b):
+        if x != y:
+            break
+        n += 1
+    return n
+
+
+def check_radix_fuzz():
+    trials, lookups = 0, 0
+    for page in (2, 4):
+        for case in range(400):
+            r = np.random.default_rng(1000 + case + page)
+            cache = PyPrefixCache(page)
+            nodes_of = {}
+            alphabet = 4
+            for _ in range(r.integers(1, 7)):
+                ln = int(r.integers(1, 5)) * page
+                path = [int(t) for t in r.integers(0, alphabet, ln + int(r.integers(0, 3)))]
+                if len(path) < ln:
+                    continue
+                if cache.covered(path, ln):
+                    continue  # engine dedupes exactly like this
+                sid, node = cache.insert(path, ln)
+                nodes_of[sid] = node
+                trials += 1
+            for _ in range(8):
+                prompt = [int(t) for t in r.integers(0, alphabet, int(r.integers(1, 14)))]
+                got = cache.best_match(prompt)
+                # brute-force oracle over the retained paths
+                want = 0
+                for path in cache.paths.values():
+                    c = common_len(path, prompt)
+                    want = max(want, align_down(min(c, len(prompt) - 1), page))
+                if want == 0:
+                    assert got is None, f"page {page}: expected no hit, got {got}"
+                else:
+                    assert got is not None, f"page {page}: missed a {want}-token hit for {prompt}"
+                    sid, ln = got
+                    assert ln == want, f"page {page}: hit {ln} != best {want} for {prompt}"
+                    # validity: the chosen segment really shares ln tokens
+                    assert common_len(cache.paths[sid], prompt) >= ln, "invalid segment chosen"
+                # covered == some path contains tokens[:L]
+                lmax = min(len(prompt), 8)
+                if lmax >= 1:
+                    lchk = int(r.integers(1, lmax + 1))
+                    want_cov = any(
+                        common_len(p, prompt) >= lchk for p in cache.paths.values()
+                    )
+                    assert cache.covered(prompt, lchk) == want_cov, "covered() disagrees"
+                lookups += 1
+            # removals keep the survivors intact
+            for sid in list(cache.paths):
+                if r.random() < 0.5:
+                    cache.remove(sid, nodes_of[sid])
+            for sid, path in cache.paths.items():
+                probe = path + [99]
+                got = cache.best_match(probe)
+                assert got is not None and got[1] == align_down(len(path), page), \
+                    "survivor lost after pruning"
+    print(f"3. radix tree == brute-force oracle ({trials} inserts, {lookups} lookups) ✓")
+
+
+# ======================================================================
+# 4. shared-page accounting (port of PagedKvManager's shared segments)
+# ======================================================================
+
+class PyPaged:
+    def __init__(self, kv_heads, head_dim, page_len, budget):
+        self.kv = kv_heads
+        self.dh = head_dim
+        self.page_len = page_len
+        self.budget = budget
+        self.allocated = 0
+        self.seqs = {}
+        self.shared = {}
+
+    def page_bytes(self, l):
+        return 2 * self.kv[l] * self.dh * self.page_len * 4
+
+    def pages_for(self, positions):
+        return -(-positions // self.page_len)
+
+    def bytes_for_new(self, total, shared_positions):
+        t = self.pages_for(total)
+        s = min(self.pages_for(shared_positions), t)
+        return sum((t - s) * self.page_bytes(l) for l in range(len(self.kv)) if self.kv[l])
+
+    def shared_bytes(self, positions):
+        p = self.pages_for(positions)
+        return sum(p * self.page_bytes(l) for l in range(len(self.kv)) if self.kv[l])
+
+    def retain(self, sid, positions):
+        if sid in self.shared:
+            return False
+        b = self.shared_bytes(positions)
+        if self.allocated + b > self.budget:
+            return False
+        self.allocated += b
+        self.shared[sid] = {"pages": self.pages_for(positions), "refs": 0, "bytes": b}
+        return True
+
+    def evict(self, sid):
+        s = self.shared.get(sid)
+        if s is None or s["refs"]:
+            return False
+        self.allocated -= s["bytes"]
+        del self.shared[sid]
+        return True
+
+    def admit(self, qid, positions, sid=None, shared_positions=0):
+        if qid in self.seqs:
+            return False
+        if sid is not None and sid not in self.shared:
+            return False
+        grow = self.bytes_for_new(positions, shared_positions)
+        if self.allocated + grow > self.budget:
+            return False
+        self.allocated += grow
+        if sid is not None:
+            self.shared[sid]["refs"] += 1
+        t = self.pages_for(positions)
+        self.seqs[qid] = {
+            "per_layer": [t if self.kv[l] else 0 for l in range(len(self.kv))],
+            "positions": positions,
+            "shared": self.pages_for(shared_positions) if sid is not None else 0,
+            "seg": sid,
+        }
+        return True
+
+    def grow(self, qid):
+        s = self.seqs.get(qid)
+        if s is None:
+            return False
+        new_pos = s["positions"] + 1
+        t = self.pages_for(new_pos)
+        g = sum(
+            max(t - max(s["per_layer"][l], s["shared"]), 0) * self.page_bytes(l)
+            for l in range(len(self.kv)) if self.kv[l]
+        )
+        if self.allocated + g > self.budget:
+            return False
+        self.allocated += g
+        for l in range(len(self.kv)):
+            if self.kv[l]:
+                s["per_layer"][l] = t
+        s["positions"] = new_pos
+        return True
+
+    def truncate(self, qid, new_len):
+        if new_len == 0:
+            return self.release(qid)
+        s = self.seqs.get(qid)
+        if s is None or new_len >= s["positions"]:
+            return
+        t = self.pages_for(new_len)
+        freed = 0
+        for l in range(len(self.kv)):
+            keep = min(t, s["per_layer"][l])
+            freed += (max(s["per_layer"][l] - s["shared"], 0)
+                      - max(keep - s["shared"], 0)) * self.page_bytes(l)
+            s["per_layer"][l] = keep
+        s["positions"] = new_len
+        self.allocated -= freed
+
+    def release(self, qid):
+        s = self.seqs.pop(qid, None)
+        if s is None:
+            return
+        self.allocated -= sum(
+            max(s["per_layer"][l] - s["shared"], 0) * self.page_bytes(l)
+            for l in range(len(self.kv))
+        )
+        if s["seg"] is not None and s["seg"] in self.shared:
+            self.shared[s["seg"]]["refs"] -= 1
+
+    def check(self):
+        want = sum(s["bytes"] for s in self.shared.values())
+        for s in self.seqs.values():
+            want += sum(
+                max(s["per_layer"][l] - s["shared"], 0) * self.page_bytes(l)
+                for l in range(len(self.kv))
+            )
+        assert self.allocated == want, f"accounting drift: {self.allocated} != {want}"
+        assert 0 <= self.allocated <= self.budget
+        for sid, seg in self.shared.items():
+            live = sum(1 for s in self.seqs.values() if s["seg"] == sid)
+            assert seg["refs"] == live, f"seg {sid}: refs {seg['refs']} != live {live}"
+
+
+def check_accounting_fuzz():
+    ops = 0
+    for case in range(250):
+        r = np.random.default_rng(5000 + case)
+        kv = [int(k) for k in r.choice([0, 1, 2, 4], size=int(r.integers(1, 4)))]
+        if not any(kv):
+            kv[0] = 2
+        pg = PyPaged(kv, 8, int(r.choice([4, 8, 16])), int(r.integers(1, 40)) * 4096)
+        next_seq, next_seg = 1, 100
+        for _ in range(60):
+            op = r.random()
+            ops += 1
+            if op < 0.2:
+                pg.retain(next_seg, int(r.integers(1, 40)))
+                next_seg += 1
+            elif op < 0.45:
+                segs = [s for s, v in pg.shared.items()]
+                if segs and r.random() < 0.6:
+                    sid = int(r.choice(segs))
+                    sp = min(int(r.integers(0, 40)), pg.shared[sid]["pages"] * pg.page_len)
+                    pg.admit(next_seq, sp + int(r.integers(0, 20)), sid, sp)
+                else:
+                    pg.admit(next_seq, int(r.integers(1, 40)))
+                next_seq += 1
+                # duplicate admits must be refused without drift
+                if pg.seqs:
+                    qid = int(r.choice(list(pg.seqs)))
+                    assert not pg.admit(qid, 8), "duplicate admit accepted"
+            elif op < 0.65 and pg.seqs:
+                pg.grow(int(r.choice(list(pg.seqs))))
+            elif op < 0.8 and pg.seqs:
+                qid = int(r.choice(list(pg.seqs)))
+                pg.truncate(qid, int(r.integers(0, pg.seqs[qid]["positions"] + 2)))
+            elif op < 0.9 and pg.seqs:
+                pg.release(int(r.choice(list(pg.seqs))))
+            elif pg.shared:
+                sid = int(r.choice(list(pg.shared)))
+                before_refs = pg.shared[sid]["refs"]
+                evicted = pg.evict(sid)
+                assert evicted == (before_refs == 0), "eviction broke a live reference"
+            pg.check()
+        for qid in list(pg.seqs):
+            pg.release(qid)
+        for sid in list(pg.shared):
+            assert pg.evict(sid)
+        pg.check()
+        assert pg.allocated == 0, "pool did not drain to zero"
+    print(f"4. shared-page accounting exact under {ops} random ops (drains to zero) ✓")
+
+
+if __name__ == "__main__":
+    cfg, caches, prompt = check_hit_equals_miss()
+    check_jax_anchor(cfg, prompt)
+    check_radix_fuzz()
+    check_accounting_fuzz()
+    print("all prefix-cache cross-checks passed")
