@@ -340,6 +340,31 @@ fn main() {
         println!("batched vs sequential wall: {:.1} ms vs {:.1} ms ({:.2}x)", bat * 1e3, seq * 1e3, seq / bat.max(1e-12));
     }
 
+    // workload harness: a seeded multi-turn trace replayed closed-loop
+    // against the prefix-cache engine — the end-to-end serving hot path
+    // (admission, chunked prefill, decode, finish-time retention, hits on
+    // generated-origin rows) under a realistic arrival process
+    {
+        use puzzle::workload::{replay, MixKind, Server, TraceSpec};
+        let trace =
+            TraceSpec::small(MixKind::MultiTurn, 7).generate(cfg.v as u32, cfg.s_prefill, cfg.s_max);
+        let mut gen_hits = 0usize;
+        let mut ticks = 0usize;
+        b.time("workload_multiturn_replay", "6 conversations x 3 turns, prefix cache", 2, || {
+            let mut eng = EngineConfig::new()
+                .kv_budget_bytes(16 << 20)
+                .page_len(4)
+                .prefix_cache(true, 8 << 20)
+                .build(shared.clone(), &store, &arch)
+                .unwrap();
+            let run = replay(&trace, &mut Server::Engine(&mut eng), "prefix_cache").unwrap();
+            gen_hits = run.metrics.prefix_gen_hits;
+            ticks = run.ticks;
+        });
+        assert!(gen_hits > 0, "multi-turn prompts must hit segments retained from generated tokens");
+        println!("workload replay: {ticks} virtual ticks, {gen_hits} generated-origin prefix hits");
+    }
+
     // paged KV manager ops (§6)
     {
         let mgr_cfg = PageCfg { page_len: 16, dtype_bytes: 4, budget_bytes: 1 << 24 };

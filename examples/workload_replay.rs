@@ -1,0 +1,87 @@
+//! Workload-harness demo (DESIGN.md §9): generate a seeded mixed trace
+//! (chat, shared-system-prompt, multi-turn, speculative, long-context
+//! conversations over Poisson arrivals), replay it closed-loop against
+//! three serving configurations — plain engine, prefix-cache engine,
+//! speculative drafter/verifier — and score goodput under the lenient
+//! and strict (TTFT, ITL) SLO profiles. Every latency is a virtual tick
+//! count, so the whole table is deterministic; only the tok/s column is
+//! wall clock. Hermetic: pure-Rust reference backend.
+//!
+//!   cargo run --release --example workload_replay
+
+use anyhow::Result;
+
+use puzzle::arch::Arch;
+use puzzle::config::TinyManifest;
+use puzzle::runtime::{share, RefBackend};
+use puzzle::serving::EngineConfig;
+use puzzle::specdec::{SpecBatch, SpecConfig};
+use puzzle::util::Rng;
+use puzzle::weights::store::init_parent;
+use puzzle::workload::{default_profiles, goodput, replay, MixKind, Server, TraceSpec};
+
+fn main() -> Result<()> {
+    let be = share(RefBackend::new(TinyManifest::synthetic()));
+    let cfg = be.man().cfg.clone();
+    let mut rng = Rng::new(0);
+    let store = init_parent(be.man(), &mut rng);
+    let arch = Arch::parent(cfg.n_layers);
+
+    let trace = TraceSpec::small(MixKind::Mixed, 7).generate(cfg.v as u32, cfg.s_prefill, cfg.s_max);
+    println!(
+        "trace '{}': {} conversations, {} requests, Poisson arrivals\n",
+        trace.name,
+        trace.convs.len(),
+        trace.requests()
+    );
+
+    let engine_cfg = |prefix: bool| {
+        EngineConfig::new().kv_budget_bytes(16 << 20).page_len(4).prefix_cache(prefix, 8 << 20)
+    };
+    let mut runs = Vec::new();
+    {
+        let mut eng = engine_cfg(false).build(be.clone(), &store, &arch)?;
+        runs.push(replay(&trace, &mut Server::Engine(&mut eng), "plain")?);
+    }
+    {
+        let mut eng = engine_cfg(true).build(be.clone(), &store, &arch)?;
+        runs.push(replay(&trace, &mut Server::Engine(&mut eng), "prefix_cache")?);
+    }
+    {
+        let scfg = SpecConfig { draft_k: 3, adapt_k_max: None, engine: engine_cfg(true) };
+        let mut batch = SpecBatch::new(be.clone(), &store, &arch, &store, &arch, scfg)?;
+        runs.push(replay(&trace, &mut Server::Spec(&mut batch), "speculative")?);
+    }
+
+    let slos = default_profiles();
+    println!(
+        "{:<14} {:>6} {:>9} {:>12} {:>10} {:>10} {:>10}",
+        "config", "ticks", "completed", "tok/forward", "gen-hits", "lenient", "strict"
+    );
+    for run in &runs {
+        let m = &run.metrics;
+        let g: Vec<f64> = slos.iter().map(|s| goodput(run, s).1).collect();
+        println!(
+            "{:<14} {:>6} {:>9} {:>12.2} {:>10} {:>9.0}% {:>9.0}%",
+            run.config,
+            run.ticks,
+            run.completed(),
+            run.tok_per_forward(),
+            m.prefix_gen_hits,
+            g[0] * 100.0,
+            g[1] * 100.0
+        );
+        assert!(g[1] <= g[0] + 1e-12, "strict goodput can never beat lenient");
+    }
+    let warm = &runs[1];
+    assert!(
+        warm.metrics.prefix_hits > 0,
+        "shared-prefix and multi-turn conversations must hit the cache"
+    );
+    println!("\nper-config summaries:");
+    for run in &runs {
+        println!("[{}] {}", run.config, run.metrics.summary());
+    }
+    println!("\n(one `bench-workload` CLI run writes this table to BENCH_workloads.json)");
+    Ok(())
+}

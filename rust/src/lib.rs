@@ -47,6 +47,7 @@ pub mod tensor;
 pub mod train;
 pub mod util;
 pub mod weights;
+pub mod workload;
 
 pub use config::{Manifest, ModelCfg, TinyManifest};
 pub use runtime::{share, Backend, RefBackend, SharedBackend};

@@ -6,6 +6,9 @@
 //!   exp `<name>` regenerate a paper table/figure (table1..table17, fig4..fig8, all)
 //!   serve       serving-engine demo over the chosen child; --speculate
 //!               serves the parent with the child as speculative drafter
+//!   bench-workload  replay a seeded workload trace against plain,
+//!               prefix-cache, and speculative configs; score goodput
+//!               under (TTFT, ITL) SLOs -> BENCH_workloads.json
 //!   measure     print measured per-block costs on this machine
 //!   info        backend/search-space summary
 //!
@@ -20,7 +23,7 @@ use std::path::PathBuf;
 
 use anyhow::{anyhow, Result};
 
-use puzzle::arch::{Arch, SearchSpace};
+use puzzle::arch::{Arch, AttnChoice, FfnChoice, SearchSpace};
 use puzzle::config::TinyManifest;
 use puzzle::data::corpus::sample_sequence;
 use puzzle::experiments::{self, ExpCtx};
@@ -32,7 +35,9 @@ use puzzle::serving::{EngineConfig, GenRequest, SamplingParams, SchedulerKind, S
 use puzzle::specdec::{SpecBatch, SpecConfig, SpecRequest};
 use puzzle::train::LossSpec;
 use puzzle::util::{Args, Rng};
-use puzzle::{eval::Evaluator, info};
+use puzzle::weights::store::init_parent;
+use puzzle::workload::{default_profiles, goodput, replay, report_json, MixKind, Server, TraceSpec};
+use puzzle::{bld, eval::Evaluator, info};
 
 fn open_backend(args: &Args) -> Result<SharedBackend> {
     let config = args.str("config", "tiny");
@@ -292,6 +297,110 @@ fn cmd_serve_speculative(
     Ok(())
 }
 
+/// `bench-workload`: replay one seeded trace against three serving
+/// configurations — plain engine, prefix-cache engine, and speculative
+/// drafter/verifier (prefix cache on both) — scoring per-request TTFT /
+/// inter-token latency / goodput on the deterministic virtual tick
+/// clock, and write `BENCH_workloads.json` for the CI gate. Wall tok/s
+/// is printed but deliberately kept out of the json.
+fn cmd_bench_workload(args: &Args) -> Result<()> {
+    let be = open_backend(args)?;
+    let cfg = be.man().cfg.clone();
+    let seed = args.u64("seed", 7);
+    let mix_s = args.str("trace", "multiturn");
+    let mix = MixKind::parse(&mix_s).ok_or_else(|| {
+        anyhow!("unknown trace mix '{mix_s}' (chat|longcontext|shared|spec|multiturn|mixed)")
+    })?;
+    let mut spec = TraceSpec::small(mix, seed);
+    spec.conversations = args.usize("conversations", 6);
+    let trace = spec.generate(cfg.v as u32, cfg.s_prefill, cfg.s_max);
+    println!(
+        "trace '{}' seed {}: {} conversations, {} requests",
+        trace.name,
+        trace.seed,
+        trace.convs.len(),
+        trace.requests()
+    );
+
+    // parent weights plus a variable-arch drafter (per-layer KV-head
+    // counts differ — the serving case the paper's §6 contributes)
+    let mut rng = Rng::new(0);
+    let mut store = init_parent(be.man(), &mut rng);
+    let parent_arch = Arch::parent(cfg.n_layers);
+    let mut child_arch = Arch::parent(cfg.n_layers);
+    child_arch.layers[0].0 = AttnChoice::Gqa { divisor: 2 };
+    if cfg.n_layers > 1 {
+        child_arch.layers[1].0 = AttnChoice::Gqa { divisor: 4 };
+    }
+    if cfg.n_layers > 2 {
+        child_arch.layers[2] = (AttnChoice::Linear, FfnChoice::Ratio(3));
+    }
+    for l in 0..cfg.n_layers {
+        for (kind, variant) in
+            [("attn", child_arch.layers[l].0.name()), ("ffn", child_arch.layers[l].1.name())]
+        {
+            if variant != "noop" && variant != "gqa_r1" && variant != "r100" {
+                let job = bld::Job { layer: l, kind, variant };
+                bld::init_job_weights(be.man(), &mut store, &job, None)?;
+            }
+        }
+    }
+
+    let page_len = args.usize("page-len", 4);
+    let retain = args.usize("retain-budget", 8 << 20);
+    let engine_cfg = |prefix: bool| {
+        EngineConfig::new()
+            .kv_budget_bytes(16 << 20)
+            .page_len(page_len)
+            .prefix_cache(prefix, retain)
+    };
+    let slos = default_profiles();
+    let mut runs = Vec::new();
+    {
+        let mut eng = engine_cfg(false).build(be.clone(), &store, &parent_arch)?;
+        runs.push(replay(&trace, &mut Server::Engine(&mut eng), "plain")?);
+    }
+    {
+        let mut eng = engine_cfg(true).build(be.clone(), &store, &parent_arch)?;
+        runs.push(replay(&trace, &mut Server::Engine(&mut eng), "prefix_cache")?);
+    }
+    {
+        let scfg = SpecConfig {
+            draft_k: args.usize("draft-k", 3),
+            adapt_k_max: None,
+            engine: engine_cfg(true),
+        };
+        let mut batch =
+            SpecBatch::new(be.clone(), &store, &parent_arch, &store, &child_arch, scfg)?;
+        runs.push(replay(&trace, &mut Server::Spec(&mut batch), "speculative")?);
+    }
+    for run in &runs {
+        println!("[{}] {}", run.config, run.metrics.summary());
+        let wall_tok_s = if run.wall_secs > 0.0 {
+            run.metrics.generated_tokens as f64 / run.wall_secs
+        } else {
+            0.0
+        };
+        let slo_line = slos
+            .iter()
+            .map(|s| {
+                let (met, frac) = goodput(run, s);
+                format!("{} {:.0}% ({met}/{})", s.name, frac * 100.0, run.intended)
+            })
+            .collect::<Vec<_>>()
+            .join(", ");
+        println!(
+            "  {} ticks | {:.2} tok/forward | goodput: {slo_line} | wall {wall_tok_s:.1} tok/s",
+            run.ticks,
+            run.tok_per_forward()
+        );
+    }
+    let j = report_json(&trace, &runs, &slos);
+    std::fs::write("BENCH_workloads.json", j.to_pretty())?;
+    println!("wrote BENCH_workloads.json");
+    Ok(())
+}
+
 fn cmd_measure(args: &Args) -> Result<()> {
     let be = open_backend(args)?;
     let c = &be.man().cfg;
@@ -336,11 +445,12 @@ fn main() -> Result<()> {
         Some("pipeline") => cmd_pipeline(&args),
         Some("exp") => cmd_exp(&args),
         Some("serve") => cmd_serve(&args),
+        Some("bench-workload") => cmd_bench_workload(&args),
         Some("measure") => cmd_measure(&args),
         Some("info") => cmd_info(&args),
         _ => {
             eprintln!(
-                "usage: puzzle <pipeline|exp|serve|measure|info> [--backend ref|pjrt] [--config tiny|small] [--run-dir DIR] [--scale F] [--speedup X]\n       serve also takes: [--scheduler fifo|priority|spf|prefix] [--temperature T] [--stream] [--requests N] [--max-new N]\n                         [--prefix-cache] [--retain-budget BYTES]\n                         [--speculate] [--draft-k N (pins; omit to auto-tune)] [--draft-arch arch_tag.json]"
+                "usage: puzzle <pipeline|exp|serve|bench-workload|measure|info> [--backend ref|pjrt] [--config tiny|small] [--run-dir DIR] [--scale F] [--speedup X]\n       serve also takes: [--scheduler fifo|priority|spf|prefix] [--temperature T] [--stream] [--requests N] [--max-new N]\n                         [--prefix-cache] [--retain-budget BYTES]\n                         [--speculate] [--draft-k N (pins; omit to auto-tune)] [--draft-arch arch_tag.json]\n       bench-workload takes: [--trace chat|longcontext|shared|spec|multiturn|mixed] [--seed N] [--conversations N]\n                             [--page-len N] [--draft-k N] [--retain-budget BYTES]"
             );
             Ok(())
         }

@@ -32,7 +32,11 @@
 //! rows (`Backend::import_kv`) and teacher-force only the unmatched
 //! suffix — a cache-hit generation is byte-identical to the cold miss,
 //! because every reference kernel is row-wise bit-identical between the
-//! prefill and decode lowerings.
+//! prefill and decode lowerings. Retention also runs when a sequence
+//! *finishes*: the committed stream — prompt **and** generated tokens —
+//! becomes a shared segment, so a multi-turn conversation whose next
+//! prompt extends the previous completion reuses the whole turn
+//! (DESIGN.md §9). Cancelled sequences retain nothing.
 //!
 //! Batched and speculative sequences share the decode lanes (mixed-mode
 //! serving): every forward — batched decode steps and spec-path passes
@@ -277,6 +281,8 @@ struct Slot {
     pending: VecDeque<u32>,
     t_submit: Instant,
     t_first: Option<Instant>,
+    /// when the previous generated token was sampled (ITL gaps)
+    t_last: Option<Instant>,
 }
 
 /// A speculative sequence handle: the KV lane it pins and its committed
@@ -477,7 +483,7 @@ impl Engine {
             .position(|s| s.as_ref().is_some_and(|s| s.id == id))
         {
             let slot = self.slots[sidx].take().unwrap();
-            self.finish(slot, FinishReason::Cancelled);
+            self.finish(sidx, slot, FinishReason::Cancelled);
             return true;
         }
         false
@@ -716,6 +722,7 @@ impl Engine {
                 pending,
                 t_submit,
                 t_first: None,
+                t_last: None,
             });
             return Ok(());
         }
@@ -732,7 +739,7 @@ impl Engine {
             self.metrics.prefills += 1;
             self.metrics.prompt_tokens += req.prompt.len();
             self.metrics.chunked_prefills += 1;
-            self.maybe_retain(&req.prompt, slot_idx, plen);
+            self.maybe_retain(&req.prompt, slot_idx, plen, req.prompt.len());
             let mut pending: VecDeque<u32> = req.prompt[plen..].iter().copied().collect();
             let first_pending = pending.pop_front().unwrap();
             let rng = Rng::new(req.sampling.seed);
@@ -746,6 +753,7 @@ impl Engine {
                 pending,
                 t_submit,
                 t_first: None,
+                t_last: None,
             };
             self.slots[slot_idx] = Some(slot);
             return Ok(());
@@ -758,7 +766,7 @@ impl Engine {
         self.paged.admit(id, horizon);
         self.metrics.prefills += 1;
         self.metrics.prompt_tokens += req.prompt.len();
-        self.maybe_retain(&req.prompt, slot_idx, plen);
+        self.maybe_retain(&req.prompt, slot_idx, plen, req.prompt.len());
 
         let logits = val_to_tensor(&logits)?;
         // next token from the last prompt position, per-request policy
@@ -766,6 +774,7 @@ impl Engine {
         let mut rng = Rng::new(req.sampling.seed);
         let first = sample(&logits.data[rowbase..rowbase + v], &req.sampling, &mut rng) as u32;
 
+        let t_first = Instant::now();
         let slot = Slot {
             id,
             req,
@@ -775,7 +784,8 @@ impl Engine {
             last_token: first,
             pending: VecDeque::new(),
             t_submit,
-            t_first: Some(Instant::now()),
+            t_first: Some(t_first),
+            t_last: Some(t_first),
         };
         self.metrics
             .ttft
@@ -797,7 +807,7 @@ impl Engine {
             None
         };
         if let Some(reason) = reason {
-            self.finish(slot, reason);
+            self.finish(slot_idx, slot, reason);
             return Ok(());
         }
         self.slots[slot_idx] = Some(slot);
@@ -897,13 +907,16 @@ impl Engine {
             let logits = logits.as_ref().expect("sampling slot implies head ran");
             let next =
                 sample(&logits.data[i * v..(i + 1) * v], &slot.req.sampling, &mut slot.rng) as u32;
+            let now = Instant::now();
             if slot.t_first.is_none() {
                 // first *generated* token of a chunked prompt
-                slot.t_first = Some(Instant::now());
-                self.metrics
-                    .ttft
-                    .push(slot.t_first.unwrap().duration_since(slot.t_submit).as_secs_f64());
+                slot.t_first = Some(now);
+                self.metrics.ttft.push(now.duration_since(slot.t_submit).as_secs_f64());
+            } else if let Some(prev) = slot.t_last {
+                // gap since the previous generated token of this request
+                self.metrics.itl.push(now.duration_since(prev).as_secs_f64());
             }
+            slot.t_last = Some(now);
             slot.generated.push(next);
             slot.last_token = next;
             self.metrics.generated_tokens += 1;
@@ -924,7 +937,7 @@ impl Engine {
         }
         for (i, reason) in to_finish {
             let slot = self.slots[i].take().unwrap();
-            self.finish(slot, reason);
+            self.finish(i, slot, reason);
         }
         self.metrics.decode_steps += 1;
         let exec_delta = self.metrics.execute_secs - exec_before;
@@ -932,7 +945,24 @@ impl Engine {
         Ok(())
     }
 
-    fn finish(&mut self, slot: Slot, reason: FinishReason) {
+    /// Terminal path for the batched slot that occupied `lane`. Before
+    /// the pages go back to the pool, the sequence's *committed* tokens —
+    /// prompt AND generated — are offered to the prefix cache
+    /// (generated-token retention, DESIGN.md §9): a later prompt that
+    /// extends this turn's full prompt+completion (the multi-turn
+    /// pattern) then rides the whole turn instead of re-prefilling it.
+    /// Cancelled sequences retain nothing — a partially teacher-forced
+    /// prompt must never become a reusable segment.
+    fn finish(&mut self, lane: usize, slot: Slot, reason: FinishReason) {
+        if reason != FinishReason::Cancelled && self.prefix.is_some() {
+            // lane rows [0, slot.len) hold prompt ++ generated minus the
+            // newest sampled token (which has no K/V row yet), so a
+            // retention capped at `slot.len` is always row-backed
+            let mut toks = slot.req.prompt.clone();
+            toks.extend_from_slice(&slot.generated);
+            let ingested = slot.len.min(toks.len());
+            self.maybe_retain(&toks, lane, ingested, slot.req.prompt.len());
+        }
         self.paged.release(slot.id);
         let ttft = slot
             .t_first
@@ -988,6 +1018,12 @@ impl Engine {
         }
         self.metrics.prefix_hits += 1;
         self.metrics.prefix_tokens_saved += hit.len;
+        if hit.gen_tokens > 0 {
+            // part of the reused prefix was *generated* by an earlier
+            // sequence (finish-time retention) — the multi-turn win
+            self.metrics.prefix_gen_hits += 1;
+            self.metrics.prefix_gen_tokens_saved += hit.gen_tokens;
+        }
         Ok(())
     }
 
@@ -1043,18 +1079,21 @@ impl Engine {
         Ok(Some(KvSegment { len, layers }))
     }
 
-    /// After a cold prefill ingested `ingested` prompt tokens into lane
-    /// `lane`, retain the page-aligned prefix for future requests —
+    /// After lane `lane` ingested `ingested` tokens of `tokens` (a cold
+    /// prefill's prompt window, or a finished sequence's full committed
+    /// stream), retain the page-aligned prefix for future requests —
     /// unless it is already covered, too short, or neither the host
     /// retain budget nor the KV pool can take it even after evicting LRU
-    /// unreferenced segments. Retention is strictly best-effort and can
-    /// never fail the (already admitted) request: a backend that cannot
-    /// export — `Ok(None)` or an outright error — just disables the
-    /// cache.
-    fn maybe_retain(&mut self, prompt: &[u32], lane: usize, ingested: usize) {
+    /// unreferenced segments. The first `prompt_len` tokens are
+    /// prompt-origin; anything past that was *generated* (finish-time
+    /// retention), which the cache records so hits over it can be
+    /// attributed. Retention is strictly best-effort and can never fail
+    /// the (already admitted) request: a backend that cannot export —
+    /// `Ok(None)` or an outright error — just disables the cache.
+    fn maybe_retain(&mut self, tokens: &[u32], lane: usize, ingested: usize, prompt_len: usize) {
         let Some(cache) = &self.prefix else { return };
-        let retain_len = align_down(ingested.min(prompt.len()), self.cfg.page_len);
-        if retain_len == 0 || cache.covered(prompt, retain_len) {
+        let retain_len = align_down(ingested.min(tokens.len()), self.cfg.page_len);
+        if retain_len == 0 || cache.covered(tokens, retain_len) {
             return;
         }
         // budgets first, export second: a page-aligned f32 segment's host
@@ -1083,7 +1122,7 @@ impl Engine {
             }
         };
         debug_assert_eq!(seg.host_bytes(), pool_bytes, "aligned f32 rows: host == pool bytes");
-        let seg_id = self.prefix.as_mut().unwrap().insert(prompt, seg);
+        let seg_id = self.prefix.as_mut().unwrap().insert(tokens, seg, prompt_len.min(retain_len));
         let retained = self.paged.retain_shared(seg_id, retain_len);
         debug_assert!(retained, "pool fit was just checked");
         if !retained {
@@ -1250,7 +1289,7 @@ impl Engine {
         };
         self.metrics.prefills += 1;
         self.metrics.prompt_tokens += prompt.len();
-        self.maybe_retain(prompt, lane, plen);
+        self.maybe_retain(prompt, lane, plen, prompt.len());
         self.spec[lane] = Some(SpecSlot { id, len: plen });
         if prompt.len() > sp {
             // stream the prompt tail through teacher-forced decode steps;
@@ -1554,6 +1593,24 @@ impl Engine {
     /// Release a speculative sequence's lane and all its KV pages.
     pub fn spec_close(&mut self, id: u64) {
         if let Ok(lane) = self.spec_lane(id) {
+            self.spec[lane] = None;
+            self.paged.release(id);
+        }
+    }
+
+    /// `spec_close` that first offers the sequence's committed stream to
+    /// the prefix cache — the speculative side of finish-time
+    /// generated-token retention (DESIGN.md §9). `tokens` is the full
+    /// committed stream (prompt plus generated tokens), `prompt_len` how
+    /// many of them came from the prompt; retention is capped at the
+    /// positions actually held in the lane's cache and is a plain close
+    /// when the prefix cache is off or disabled.
+    pub fn spec_close_retained(&mut self, id: u64, tokens: &[u32], prompt_len: usize) {
+        if let Ok(lane) = self.spec_lane(id) {
+            if self.prefix.is_some() {
+                let len = self.spec[lane].as_ref().unwrap().len;
+                self.maybe_retain(tokens, lane, len.min(tokens.len()), prompt_len);
+            }
             self.spec[lane] = None;
             self.paged.release(id);
         }

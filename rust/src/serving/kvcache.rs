@@ -41,7 +41,10 @@ pub struct SeqPages {
 
 #[derive(Debug, Clone)]
 /// A retained prefix segment: its pages are charged to the pool exactly
-/// once, no matter how many sequences reference them.
+/// once, no matter how many sequences reference them. Segments come from
+/// cold prompt prefills *and* from finished sequences' committed streams
+/// (prompt plus generated tokens — finish-time retention); the accounting
+/// here is origin-agnostic.
 struct SharedSeg {
     /// pages per caching layer
     pages: usize,

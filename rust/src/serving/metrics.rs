@@ -21,6 +21,10 @@ pub struct EngineMetrics {
     pub wall_secs: f64,
     /// per-request time-to-first-token (secs)
     pub ttft: Vec<f64>,
+    /// inter-token latency: gap between consecutive *generated* tokens of
+    /// one request (secs, pooled across requests; SLO goodput scoring and
+    /// the summary percentiles both read this)
+    pub itl: Vec<f64>,
     /// per-request end-to-end latency (secs; naturally finished requests)
     pub e2e: Vec<f64>,
     /// engine-side scheduling overhead per decode step (non-execute time)
@@ -68,6 +72,12 @@ pub struct EngineMetrics {
     /// retained prefix segments evicted (LRU, unreferenced only) under
     /// retain-budget or KV-pool pressure
     pub prefix_evictions: usize,
+    /// prefix hits whose match reached into tokens *generated* by the
+    /// retaining sequence (finish-time retention) — the multi-turn win a
+    /// cold-prefill-only cache cannot score
+    pub prefix_gen_hits: usize,
+    /// matched tokens that were generated-origin across those hits
+    pub prefix_gen_tokens_saved: usize,
 }
 
 impl EngineMetrics {
@@ -112,6 +122,21 @@ impl EngineMetrics {
     /// 95th-percentile time-to-first-token, seconds.
     pub fn p95_ttft(&self) -> f64 {
         percentile(&self.ttft, 95.0)
+    }
+
+    /// Mean inter-token latency, seconds.
+    pub fn mean_itl(&self) -> f64 {
+        mean(&self.itl)
+    }
+
+    /// Median inter-token latency, seconds.
+    pub fn p50_itl(&self) -> f64 {
+        percentile(&self.itl, 50.0)
+    }
+
+    /// 95th-percentile inter-token latency, seconds.
+    pub fn p95_itl(&self) -> f64 {
+        percentile(&self.itl, 95.0)
     }
 
     /// Median end-to-end latency, seconds.
@@ -179,19 +204,27 @@ impl EngineMetrics {
                 self.prefix_tokens_saved,
                 self.prefix_evictions
             ));
+            if self.prefix_gen_hits > 0 {
+                s.push_str(&format!(
+                    " gen-hit {} (+{} tok)",
+                    self.prefix_gen_hits, self.prefix_gen_tokens_saved
+                ));
+            }
         }
         s
     }
 
     fn base_summary(&self) -> String {
         format!(
-            "reqs {} | gen {} tok | {:.1} tok/s (total {:.1}) | ttft p50/p95 {:.1}/{:.1} ms | e2e p50/p95 {:.1}/{:.1} ms | overhead {:.1}% | finish eos/max/horizon {}/{}/{} | cancelled {} | chunked {} | rejected {}",
+            "reqs {} | gen {} tok | {:.1} tok/s (total {:.1}) | ttft p50/p95 {:.1}/{:.1} ms | itl p50/p95 {:.1}/{:.1} ms | e2e p50/p95 {:.1}/{:.1} ms | overhead {:.1}% | finish eos/max/horizon {}/{}/{} | cancelled {} | chunked {} | rejected {}",
             self.requests_completed,
             self.generated_tokens,
             self.gen_throughput(),
             self.total_throughput(),
             self.p50_ttft() * 1e3,
             self.p95_ttft() * 1e3,
+            self.p50_itl() * 1e3,
+            self.p95_itl() * 1e3,
             self.p50_e2e() * 1e3,
             self.p95_e2e() * 1e3,
             self.overhead_frac() * 100.0,
@@ -263,6 +296,35 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("prefix hit/miss 3/1 (75%)"), "summary was: {s}");
         assert!(s.contains("saved 48 tok evicted 2"));
+    }
+
+    #[test]
+    fn itl_percentiles_on_known_timeline() {
+        // one request whose generated tokens landed at t = 0, 10, 20, 30,
+        // 100 ms: four inter-token gaps of 10/10/10/70 ms — a p95 stall
+        // the mean alone would hide
+        let m = EngineMetrics { itl: vec![0.010, 0.010, 0.010, 0.070], ..Default::default() };
+        assert_eq!(m.p50_itl(), 0.010);
+        assert_eq!(m.p95_itl(), 0.070);
+        assert!((m.mean_itl() - 0.025).abs() < 1e-12);
+        let s = m.summary();
+        assert!(s.contains("itl p50/p95 10.0/70.0 ms"), "summary was: {s}");
+    }
+
+    #[test]
+    fn gen_hit_section_rides_the_prefix_summary() {
+        let m = EngineMetrics {
+            prefix_hits: 2,
+            prefix_misses: 2,
+            prefix_tokens_saved: 24,
+            prefix_gen_hits: 1,
+            prefix_gen_tokens_saved: 9,
+            ..Default::default()
+        };
+        let s = m.summary();
+        assert!(s.contains("gen-hit 1 (+9 tok)"), "summary was: {s}");
+        let m = EngineMetrics { prefix_hits: 1, prefix_misses: 0, ..Default::default() };
+        assert!(!m.summary().contains("gen-hit"), "hidden when no generated-origin hits");
     }
 
     #[test]

@@ -26,8 +26,13 @@
 //!   page-aligned prefix with a retained one import its K/V rows
 //!   (`Backend::export_kv`/`import_kv`) and prefill only the unmatched
 //!   suffix; a cache-hit generation is byte-identical to the cold miss.
-//! * `metrics` — throughput, TTFT/e2e percentiles, finish-reason counts,
-//!   prefix hit rates.
+//!   Segments are retained from cold prefills *and* at sequence finish
+//!   over the full committed stream — prompt plus generated tokens — so
+//!   multi-turn conversations whose next prompt extends the previous
+//!   completion reuse whole turns (`PrefixHit::gen_tokens` > 0 marks
+//!   those; cancelled sequences retain nothing).
+//! * `metrics` — throughput, TTFT/ITL/e2e percentiles, finish-reason
+//!   counts, prefix hit rates (generated-origin hits broken out).
 
 pub mod engine;
 pub mod kvcache;

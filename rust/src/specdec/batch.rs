@@ -25,9 +25,19 @@
 //! and the parent's reuse their own retained segments (each engine keeps
 //! its own tree because per-layer KV-head counts differ between the two
 //! architectures), and lanes backfilled mid-run hit the prefix their
-//! predecessors retained. Hit or miss, outputs stay byte-identical.
+//! predecessors retained. Finished sequences retain their full committed
+//! stream (prompt + generated) on both engines, so a follow-up turn
+//! extending a completion is a warm hit too. Hit or miss, outputs stay
+//! byte-identical.
+//!
+//! Two driving surfaces share the same lane machinery: the batch call
+//! `generate_many` (submit everything, block until done, responses in
+//! request order) and the incremental `submit` / `tick` / `take_finished`
+//! loop, which interleaves speculative sequences with external work —
+//! the workload replay harness drives this surface one simulated tick at
+//! a time and reads per-token `StreamEvent`s for latency scoring.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 
 use anyhow::{anyhow, Result};
 
@@ -36,7 +46,7 @@ use crate::data::world::EOS;
 use crate::perf::HwProfile;
 use crate::runtime::SharedBackend;
 use crate::serving::sampling::{dist, draw, sample};
-use crate::serving::{Engine, EngineMetrics, FinishReason, SamplingParams, SpecFeed};
+use crate::serving::{Engine, EngineMetrics, FinishReason, SamplingParams, SpecFeed, StreamEvent};
 use crate::util::Rng;
 use crate::weights::Store;
 
@@ -71,13 +81,18 @@ impl SpecRequest {
 
 /// Per-lane state of one in-flight speculative sequence.
 struct Lane {
-    /// Index into the request/response vectors.
-    req: usize,
+    /// Batch-level request id (`submit`'s return; `StreamEvent` ids).
+    id: u64,
     pid: u64,
     cid: u64,
     sampling: SamplingParams,
     greedy: bool,
     max_new: usize,
+    /// Prompt token count: the prompt/generated boundary finish-time
+    /// retention reports to the prefix cache.
+    prompt_len: usize,
+    /// `out` tokens already surfaced as `StreamEvent::Token`s.
+    emitted: usize,
     /// accept/bonus draws; independent of draft draws or the rejection
     /// test would correlate with the proposal and bias the output law
     accept_rng: Rng,
@@ -103,6 +118,15 @@ pub struct SpecBatch {
     tuner: Option<KTuner>,
     total_accepted: usize,
     total_attempted: usize,
+    /// Live lanes (the incremental surface's in-flight sequences).
+    lanes: Vec<Lane>,
+    /// Admitted requests waiting for a free lane, FIFO.
+    waiting: VecDeque<(u64, SpecRequest)>,
+    /// Finished-but-unclaimed responses (`take_finished` drains).
+    finished: Vec<(u64, SpecResponse)>,
+    /// Pending stream events (`tick` drains).
+    events: Vec<StreamEvent>,
+    next_id: u64,
 }
 
 impl SpecBatch {
@@ -129,7 +153,19 @@ impl SpecBatch {
         });
         let parent = cfg.engine.clone().build(be.clone(), parent_store, parent_arch)?;
         let child = cfg.engine.clone().build(be, child_store, child_arch)?;
-        Ok(SpecBatch { parent, child, cfg, tuner, total_accepted: 0, total_attempted: 0 })
+        Ok(SpecBatch {
+            parent,
+            child,
+            cfg,
+            tuner,
+            total_accepted: 0,
+            total_attempted: 0,
+            lanes: Vec::new(),
+            waiting: VecDeque::new(),
+            finished: Vec::new(),
+            events: Vec::new(),
+            next_id: 0,
+        })
     }
 
     /// The parent engine's metrics: generation counters plus the
@@ -213,57 +249,176 @@ impl SpecBatch {
                 return Err(anyhow!("max_new == 0: nothing to generate"));
             }
         }
-        let mut lanes: Vec<Lane> = Vec::new();
-        let res = self.run(reqs, &mut lanes);
-        // on error, tear down whatever is still open so the engines stay
-        // reusable (no leaked lanes or pages)
-        for lane in &lanes {
+        let mut ids = Vec::with_capacity(reqs.len());
+        let res: Result<()> = (|| {
+            for r in reqs {
+                ids.push(self.submit(r.clone())?);
+            }
+            while !self.is_idle() {
+                self.tick()?;
+            }
+            Ok(())
+        })();
+        if res.is_err() {
+            // a submit-time rejection leaves earlier requests queued:
+            // tear everything down so the engines stay reusable
+            self.abort();
+        }
+        // the batch surface has no event consumer, and on error it
+        // discards partial results
+        self.events.clear();
+        let mut by_id: HashMap<u64, SpecResponse> = self.take_finished().into_iter().collect();
+        res?;
+        ids.iter()
+            .map(|id| {
+                by_id.remove(id).ok_or_else(|| anyhow!("request {id} produced no response"))
+            })
+            .collect()
+    }
+
+    /// Admit one request to the incremental surface and return its id;
+    /// it waits FIFO for a free lane and starts on a later `tick`.
+    /// Submit-time validation (empty prompt, `max_new == 0`, prompt over
+    /// the cache horizon) emits a `StreamEvent::Rejected` and errors
+    /// without touching engine state — mirroring `Engine::submit`.
+    pub fn submit(&mut self, req: SpecRequest) -> Result<u64> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let s_max = self.parent.cache_horizon();
+        let cause = if req.prompt.is_empty() {
+            Some("empty prompt".to_string())
+        } else if req.max_new == 0 {
+            Some("max_new == 0: nothing to generate".to_string())
+        } else if req.prompt.len() >= s_max {
+            Some(format!(
+                "prompt of {} tokens cannot fit the cache horizon s_max={}",
+                req.prompt.len(),
+                s_max
+            ))
+        } else {
+            None
+        };
+        if let Some(cause) = cause {
+            self.parent.metrics.rejected_prompts += 1;
+            let err = anyhow!("request {id} rejected: {cause}");
+            self.events.push(StreamEvent::Rejected { id, cause });
+            return Err(err);
+        }
+        self.waiting.push_back((id, req));
+        Ok(id)
+    }
+
+    /// Anything still in flight (live lanes or queued requests)?
+    pub fn is_idle(&self) -> bool {
+        self.lanes.is_empty() && self.waiting.is_empty()
+    }
+
+    /// Finished responses accumulated since the last call, as
+    /// `(submit id, response)` pairs in finish order.
+    pub fn take_finished(&mut self) -> Vec<(u64, SpecResponse)> {
+        std::mem::take(&mut self.finished)
+    }
+
+    /// Advance every live sequence by ONE speculative round (draft →
+    /// fused verify → accept/rollback), backfilling free lanes from the
+    /// waiting queue before and after, and return the `StreamEvent`s the
+    /// round produced — `Token` per committed token (the admission token
+    /// included), then `Finished` once per sequence. An error aborts the
+    /// whole in-flight set (`abort`), exactly like `generate_many`.
+    pub fn tick(&mut self) -> Result<Vec<StreamEvent>> {
+        match self.tick_inner() {
+            Ok(()) => Ok(std::mem::take(&mut self.events)),
+            Err(e) => {
+                self.abort();
+                Err(e)
+            }
+        }
+    }
+
+    fn tick_inner(&mut self) -> Result<()> {
+        // open lanes, close any that finished at admission (EOS first
+        // token / max_new == 1), and keep backfilling until stable
+        loop {
+            self.backfill()?;
+            if !self.harvest() {
+                break;
+            }
+        }
+        if self.lanes.is_empty() {
+            return Ok(());
+        }
+        let s_max = self.parent.cache_horizon();
+        // the round borrows the engines and the lanes independently
+        let mut lanes = std::mem::take(&mut self.lanes);
+        let r = self.round(&mut lanes, s_max);
+        self.lanes = lanes;
+        r?;
+        for lane in &mut self.lanes {
+            while lane.emitted < lane.out.len() {
+                self.events.push(StreamEvent::Token { id: lane.id, tok: lane.out[lane.emitted] });
+                lane.emitted += 1;
+            }
+        }
+        self.harvest();
+        Ok(())
+    }
+
+    /// Tear down every live lane and drop the waiting queue — the
+    /// incremental surface's cancel-all. Engines stay reusable; no pages
+    /// or lanes leak; aborted sequences retain no prefix segments.
+    /// Already-finished responses stay claimable via `take_finished`.
+    pub fn abort(&mut self) {
+        for lane in std::mem::take(&mut self.lanes) {
             self.parent.spec_close(lane.pid);
             self.child.spec_close(lane.cid);
         }
-        res
+        self.waiting.clear();
+        self.events.clear();
     }
 
-    fn run(&mut self, reqs: &[SpecRequest], lanes: &mut Vec<Lane>) -> Result<Vec<SpecResponse>> {
-        let s_max = self.parent.cache_horizon();
+    /// Open waiting requests into free lanes, FIFO, until capacity.
+    fn backfill(&mut self) -> Result<()> {
         let capacity = self.lane_capacity();
-        let mut results: Vec<Option<SpecResponse>> = vec![None; reqs.len()];
-        let mut next_req = 0usize;
-        while lanes.len() < capacity && next_req < reqs.len() {
-            lanes.push(self.open_lane(next_req, &reqs[next_req])?);
-            next_req += 1;
+        while self.lanes.len() < capacity {
+            let Some((id, req)) = self.waiting.pop_front() else { break };
+            let lane = self.open_lane(id, &req)?;
+            self.lanes.push(lane);
         }
-        loop {
-            // harvest finished lanes and backfill from waiting requests
-            let mut i = 0;
-            while i < lanes.len() {
-                if lanes[i].done.is_some() {
-                    let lane = lanes.swap_remove(i);
-                    results[lane.req] = Some(self.close_lane(lane));
-                    while lanes.len() < capacity && next_req < reqs.len() {
-                        lanes.push(self.open_lane(next_req, &reqs[next_req])?);
-                        next_req += 1;
-                    }
-                    // re-examine index i: swap_remove moved another lane in
-                } else {
-                    i += 1;
+        Ok(())
+    }
+
+    /// Close every lane marked done: flush its remaining `Token` events,
+    /// release both engines' lanes (retaining the committed stream for
+    /// the prefix cache), emit `Finished`, and stash the response.
+    /// Returns whether anything closed (freeing lanes to backfill).
+    fn harvest(&mut self) -> bool {
+        let mut closed = false;
+        let mut i = 0;
+        while i < self.lanes.len() {
+            if self.lanes[i].done.is_some() {
+                let mut lane = self.lanes.swap_remove(i);
+                while lane.emitted < lane.out.len() {
+                    self.events
+                        .push(StreamEvent::Token { id: lane.id, tok: lane.out[lane.emitted] });
+                    lane.emitted += 1;
                 }
+                let id = lane.id;
+                let resp = self.close_lane(lane);
+                self.events.push(StreamEvent::Finished { id, reason: resp.finish });
+                self.finished.push((id, resp));
+                closed = true;
+                // re-examine index i: swap_remove moved another lane in
+            } else {
+                i += 1;
             }
-            if lanes.is_empty() {
-                break;
-            }
-            self.round(lanes, s_max)?;
         }
-        Ok(results
-            .into_iter()
-            .map(|r| r.expect("every admitted request produces a response"))
-            .collect())
+        closed
     }
 
     /// Open one sequence on both engines and take its first token from
     /// the parent prefill — the same sample the plain engine takes at
     /// admission, from the same (accept) stream as the session driver.
-    fn open_lane(&mut self, req_idx: usize, req: &SpecRequest) -> Result<Lane> {
+    fn open_lane(&mut self, id: u64, req: &SpecRequest) -> Result<Lane> {
         let (pid, first) = self.parent.spec_open(&req.prompt)?;
         let cid = match self.child.spec_open(&req.prompt) {
             Ok((cid, _)) => cid,
@@ -285,12 +440,14 @@ impl SpecBatch {
             None
         };
         Ok(Lane {
-            req: req_idx,
+            id,
             pid,
             cid,
             sampling: req.sampling,
             greedy: req.sampling.is_greedy(),
             max_new: req.max_new,
+            prompt_len: req.prompt.len(),
+            emitted: 0,
             accept_rng,
             draft_rng,
             committed,
@@ -509,11 +666,13 @@ impl SpecBatch {
         Ok(())
     }
 
-    /// Close a finished lane on both engines, stamp its response, and
-    /// fold its counters into the parent engine's metrics.
+    /// Close a finished lane on both engines — retaining the committed
+    /// stream (prompt + generated) as a prefix segment when the cache is
+    /// on, so the conversation's next turn starts warm — stamp its
+    /// response, and fold its counters into the parent engine's metrics.
     fn close_lane(&mut self, mut lane: Lane) -> SpecResponse {
-        self.parent.spec_close(lane.pid);
-        self.child.spec_close(lane.cid);
+        self.parent.spec_close_retained(lane.pid, &lane.committed, lane.prompt_len);
+        self.child.spec_close_retained(lane.cid, &lane.committed, lane.prompt_len);
         lane.resp.tokens = std::mem::take(&mut lane.out);
         lane.resp.finish = lane.done.unwrap_or(FinishReason::MaxNew);
         let resp = lane.resp;

@@ -25,7 +25,11 @@
 //!
 //! `batch::SpecBatch` drives N such sequences concurrently over the
 //! engines' shared decode lanes (one fused verify forward serves the
-//! whole batch); `SpecSession` is its single-sequence convenience.
+//! whole batch); `SpecSession` is its single-sequence convenience. The
+//! batch also exposes an incremental `submit`/`tick`/`take_finished`
+//! surface — one speculative round per tick, with per-token
+//! `StreamEvent`s — which the workload replay harness drives alongside
+//! plain engines for latency scoring.
 //! `speedup` holds the analytic model (expected tokens/pass over α and
 //! k, roofline-costed) that ranks candidate children by *draft value* —
 //! the bridge from the MIP/NAS stage to serving throughput — plus the

@@ -1,0 +1,294 @@
+//! Closed-loop trace replay against a serving engine.
+//!
+//! The driver advances a **virtual clock**: one tick = one engine step
+//! (or one speculative round), so every latency in the output is a
+//! deterministic tick count, not a wall-clock reading — the same trace,
+//! seed, and engine configuration reproduce the event log and every
+//! metric byte-for-byte (asserted in the integration tests). Wall-clock
+//! throughput is measured separately and reported only on stdout.
+//!
+//! Multi-turn conversations are stitched **closed-loop**: turn N+1's
+//! prompt is turn N's full prompt + completion (trailing EOS stripped)
+//! + the new user tokens. Against a prefix-cache engine those prompts
+//! land on segments retained at the previous turn's *finish* — the
+//! generated-token retention rule of DESIGN.md §9.
+
+use std::collections::HashMap;
+use std::fmt::Write as _;
+
+use anyhow::{anyhow, Result};
+
+use crate::data::world::EOS;
+use crate::serving::{Engine, EngineMetrics, FinishReason, GenRequest, StreamEvent};
+use crate::specdec::{SpecBatch, SpecRequest};
+use crate::util::Timer;
+
+use super::trace::Trace;
+
+/// The serving configuration a trace replays against — a plain or
+/// prefix-cache `Engine`, or a speculative `SpecBatch` (drafter +
+/// verifier), all driven one tick at a time through the same loop.
+pub enum Server<'a> {
+    /// A continuous-batching engine (`step()` per tick).
+    Engine(&'a mut Engine),
+    /// A speculative batch (one draft/verify round per tick).
+    Spec(&'a mut SpecBatch),
+}
+
+impl Server<'_> {
+    fn submit(&mut self, prompt: Vec<u32>, max_new: usize) -> Result<u64> {
+        match self {
+            Server::Engine(e) => e.submit(GenRequest::new(prompt, max_new)),
+            Server::Spec(s) => s.submit(SpecRequest::new(prompt, max_new)),
+        }
+    }
+
+    fn tick(&mut self) -> Result<Vec<StreamEvent>> {
+        match self {
+            Server::Engine(e) => e.step(),
+            Server::Spec(s) => s.tick(),
+        }
+    }
+
+    fn is_idle(&self) -> bool {
+        match self {
+            Server::Engine(e) => e.is_idle(),
+            Server::Spec(s) => s.is_idle(),
+        }
+    }
+
+    /// The engine metrics this replay accumulates into (the parent
+    /// engine's, for a speculative server).
+    pub fn metrics(&self) -> &EngineMetrics {
+        match self {
+            Server::Engine(e) => &e.metrics,
+            Server::Spec(s) => s.parent_metrics(),
+        }
+    }
+}
+
+/// Per-request latency record, in virtual ticks.
+#[derive(Debug, Clone)]
+pub struct ReqRecord {
+    /// Conversation index in the trace.
+    pub conv: usize,
+    /// Turn index within the conversation.
+    pub turn: usize,
+    /// Tick the request was submitted on.
+    pub submit_tick: usize,
+    /// Tick the first generated token landed on (`None`: rejected, or
+    /// finished without emitting — cannot happen for accepted requests).
+    pub first_tick: Option<usize>,
+    /// Tick of the most recent token (internal cursor for gap tracking).
+    pub last_tick: Option<usize>,
+    /// Tick the terminal event landed on.
+    pub finish_tick: usize,
+    /// Inter-token gaps, one per token after the first (ticks; 0 when a
+    /// speculative round commits several tokens at once).
+    pub gaps: Vec<usize>,
+    /// The generated tokens (the driver stitches these into the
+    /// conversation's next prompt).
+    pub gen: Vec<u32>,
+    /// Terminal reason; `None` means the submit was rejected.
+    pub finish: Option<FinishReason>,
+}
+
+impl ReqRecord {
+    /// Time to first token, ticks (`None` until one lands).
+    pub fn ttft_ticks(&self) -> Option<usize> {
+        self.first_tick.map(|t| t - self.submit_tick)
+    }
+
+    /// Worst inter-token gap, ticks (0 for single-token completions).
+    pub fn max_gap_ticks(&self) -> usize {
+        self.gaps.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Submit-to-finish latency, ticks.
+    pub fn e2e_ticks(&self) -> usize {
+        self.finish_tick - self.submit_tick
+    }
+}
+
+/// One trace replayed against one server configuration.
+#[derive(Debug, Clone)]
+pub struct WorkloadRun {
+    /// Configuration label (`plain`, `prefix_cache`, `speculative`).
+    pub config: String,
+    /// Per-request records, in submit order.
+    pub records: Vec<ReqRecord>,
+    /// Requests the trace intended (the goodput denominator — a rejected
+    /// or never-submitted turn counts against goodput).
+    pub intended: usize,
+    /// Virtual ticks the replay took.
+    pub ticks: usize,
+    /// Deterministic text log of every submit/token/finish event.
+    pub event_log: String,
+    /// Wall seconds inside the replay loop (stdout reporting only — NOT
+    /// deterministic, excluded from BENCH json).
+    pub wall_secs: f64,
+    /// Snapshot of the server's engine metrics after the replay.
+    pub metrics: EngineMetrics,
+}
+
+impl WorkloadRun {
+    /// Requests that reached a natural finish.
+    pub fn completed(&self) -> usize {
+        self.records.iter().filter(|r| r.finish.is_some()).count()
+    }
+
+    /// Generated tokens per deterministic forward (prefills + decode
+    /// steps + fused speculative passes) — the virtual-clock throughput
+    /// proxy that, unlike wall tok/s, is identical across runs.
+    pub fn tok_per_forward(&self) -> f64 {
+        let fwd = self.metrics.prefills + self.metrics.decode_steps + self.metrics.spec_fused_passes;
+        if fwd == 0 {
+            0.0
+        } else {
+            self.metrics.generated_tokens as f64 / fwd as f64
+        }
+    }
+}
+
+/// Conversation replay cursor.
+struct ConvState {
+    /// Prompt context so far (previous prompt + completion).
+    context: Vec<u32>,
+    next_turn: usize,
+    /// Tick the next turn may submit on (start tick, then finish tick +
+    /// think time).
+    ready_at: usize,
+    /// In-flight request's record index, if any.
+    running: Option<usize>,
+}
+
+/// Replay `trace` against `server`, one virtual tick at a time, and
+/// score every request's TTFT / inter-token gaps / e2e in ticks.
+/// Conversations are closed-loop: a turn submits only after the previous
+/// turn's completion landed (plus its think time), with the completion
+/// stitched into the prompt. A rejected submit abandons the rest of that
+/// conversation; the abandoned turns still count against goodput.
+pub fn replay(trace: &Trace, server: &mut Server, config: &str) -> Result<WorkloadRun> {
+    let timer = Timer::start();
+    let mut convs: Vec<ConvState> = trace
+        .convs
+        .iter()
+        .map(|c| ConvState { context: Vec::new(), next_turn: 0, ready_at: c.start, running: None })
+        .collect();
+    let mut records: Vec<ReqRecord> = Vec::new();
+    let mut by_id: HashMap<u64, usize> = HashMap::new();
+    let mut log = String::new();
+    let mut now = 0usize;
+    loop {
+        // submit due turns, in conversation order (deterministic)
+        for ci in 0..convs.len() {
+            let cs = &mut convs[ci];
+            let turns = &trace.convs[ci].turns;
+            if cs.running.is_some() || cs.next_turn >= turns.len() || now < cs.ready_at {
+                continue;
+            }
+            let turn = &turns[cs.next_turn];
+            let mut prompt = std::mem::take(&mut cs.context);
+            prompt.extend(&turn.user);
+            let idx = records.len();
+            records.push(ReqRecord {
+                conv: ci,
+                turn: cs.next_turn,
+                submit_tick: now,
+                first_tick: None,
+                last_tick: None,
+                finish_tick: now,
+                gaps: Vec::new(),
+                gen: Vec::new(),
+                finish: None,
+            });
+            match server.submit(prompt.clone(), turn.max_new) {
+                Ok(id) => {
+                    let _ = writeln!(
+                        log,
+                        "t={now} submit conv={ci} turn={} id={id} prompt={} max_new={}",
+                        cs.next_turn,
+                        prompt.len(),
+                        turn.max_new
+                    );
+                    by_id.insert(id, idx);
+                    cs.context = prompt;
+                    cs.running = Some(idx);
+                    cs.next_turn += 1;
+                }
+                Err(e) => {
+                    // the rest of the conversation has no coherent prompt
+                    let _ = writeln!(
+                        log,
+                        "t={now} reject conv={ci} turn={} cause={e}",
+                        cs.next_turn
+                    );
+                    cs.next_turn = turns.len();
+                }
+            }
+        }
+        // one virtual tick of serving work
+        for ev in server.tick()? {
+            match ev {
+                StreamEvent::Token { id, tok } => {
+                    let Some(&idx) = by_id.get(&id) else { continue };
+                    let rec = &mut records[idx];
+                    let _ = writeln!(log, "t={now} token id={id} tok={tok}");
+                    if let Some(prev) = rec.last_tick {
+                        rec.gaps.push(now - prev);
+                    } else {
+                        rec.first_tick = Some(now);
+                    }
+                    rec.last_tick = Some(now);
+                    rec.gen.push(tok);
+                }
+                StreamEvent::Finished { id, reason } => {
+                    let Some(&idx) = by_id.get(&id) else { continue };
+                    let rec = &mut records[idx];
+                    let _ = writeln!(log, "t={now} finished id={id} reason={}", reason.as_str());
+                    rec.finish = Some(reason);
+                    rec.finish_tick = now;
+                    let (ci, turn_idx) = (rec.conv, rec.turn);
+                    // stitch the completion (sans trailing EOS) into the
+                    // conversation context for the next turn
+                    let mut gen = rec.gen.clone();
+                    if gen.last() == Some(&EOS) {
+                        gen.pop();
+                    }
+                    let cs = &mut convs[ci];
+                    cs.context.extend(&gen);
+                    cs.running = None;
+                    if let Some(next) = trace.convs[ci].turns.get(turn_idx + 1) {
+                        cs.ready_at = now + 1 + next.think_ticks;
+                    }
+                }
+                StreamEvent::Rejected { id, cause } => {
+                    // submit-time rejection: already handled at the call
+                    // site (the id never entered by_id); logged for the
+                    // deterministic record
+                    let _ = writeln!(log, "t={now} rejected id={id} cause={cause}");
+                }
+            }
+        }
+        let exhausted = convs
+            .iter()
+            .zip(&trace.convs)
+            .all(|(cs, c)| cs.running.is_none() && cs.next_turn >= c.turns.len());
+        if exhausted && server.is_idle() {
+            break;
+        }
+        now += 1;
+        if now > 100_000 {
+            return Err(anyhow!("workload replay did not converge within 100k ticks"));
+        }
+    }
+    Ok(WorkloadRun {
+        config: config.to_string(),
+        records,
+        intended: trace.requests(),
+        ticks: now,
+        event_log: log,
+        wall_secs: timer.secs(),
+        metrics: server.metrics().clone(),
+    })
+}

@@ -1,0 +1,32 @@
+//! Trace-driven workload harness: seeded traces, closed-loop replay,
+//! goodput SLO scoring (DESIGN.md §9).
+//!
+//! Puzzle's thesis is that *deployment* metrics should drive model
+//! selection, and batching/caching/speculation wins only show up under
+//! representative request mixes — a one-shot tok/s bench cannot see a
+//! prefix cache's multi-turn hit rate or a queue-induced TTFT stall.
+//! This module turns that into something CI can falsify:
+//!
+//! * `trace` — deterministic workload generation: arrival processes
+//!   (Poisson, bursty ON/OFF), request mixes (chat, long-context,
+//!   shared-system-prompt, speculative), and multi-turn conversations
+//!   whose turn N+1 prompt extends turn N's prompt **and completion**.
+//! * `driver` — replays a trace against a `Server` (plain `Engine`,
+//!   prefix-cache `Engine`, or speculative `SpecBatch`) on a virtual
+//!   tick clock, recording per-request TTFT / inter-token gaps / e2e in
+//!   ticks plus a byte-reproducible event log.
+//! * `report` — goodput under `(TTFT, ITL)` SLO profiles and the
+//!   `BENCH_workloads.json` emitter the CI gate consumes.
+//!
+//! The multi-turn mix is the reason this PR also taught the engine to
+//! retain prefix segments over *generated* tokens at sequence finish:
+//! without that, turn N+1 re-prefills turn N's completion and the
+//! prefix cache's `prefix_gen_hits` stays zero.
+
+pub mod driver;
+pub mod report;
+pub mod trace;
+
+pub use driver::{replay, ReqRecord, Server, WorkloadRun};
+pub use report::{default_profiles, fnv1a64, goodput, report_json, SloProfile};
+pub use trace::{Arrival, Conversation, MixKind, Trace, TraceSpec, Turn};

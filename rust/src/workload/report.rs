@@ -1,0 +1,201 @@
+//! Goodput scoring and the `BENCH_workloads.json` report.
+//!
+//! **Goodput** is the fraction of a trace's intended requests that
+//! finished naturally AND met a `(TTFT, ITL)` service-level objective:
+//! time-to-first-token within `ttft_ticks` and every inter-token gap
+//! within `itl_ticks`, all in deterministic virtual ticks. Raw tok/s
+//! rewards batching everything; goodput only pays for tokens that arrive
+//! on time — the serving-level lens Puzzle argues model selection should
+//! use. Everything emitted here is a pure function of the replay, so CI
+//! can diff two runs byte-for-byte.
+
+use crate::util::{percentile, Json};
+
+use super::driver::{ReqRecord, WorkloadRun};
+use super::trace::Trace;
+
+/// A `(TTFT, ITL)` service-level objective, in virtual ticks.
+#[derive(Debug, Clone, Copy)]
+pub struct SloProfile {
+    /// Profile label (`lenient`, `strict`).
+    pub name: &'static str,
+    /// Time-to-first-token budget, ticks.
+    pub ttft_ticks: usize,
+    /// Per-gap inter-token budget, ticks.
+    pub itl_ticks: usize,
+}
+
+impl SloProfile {
+    /// Did this request meet the SLO? Rejected / unfinished requests
+    /// never do.
+    pub fn met_by(&self, r: &ReqRecord) -> bool {
+        r.finish.is_some()
+            && r.ttft_ticks().is_some_and(|t| t <= self.ttft_ticks)
+            && r.max_gap_ticks() <= self.itl_ticks
+    }
+}
+
+/// The two default profiles: `lenient` (queue waits and chunked prefill
+/// tolerated) and `strict` (near-interactive). Strict budgets are
+/// component-wise tighter, so strict goodput <= lenient goodput on any
+/// run — a structural sanity invariant the CI gate asserts.
+pub fn default_profiles() -> [SloProfile; 2] {
+    [
+        SloProfile { name: "lenient", ttft_ticks: 48, itl_ticks: 6 },
+        SloProfile { name: "strict", ttft_ticks: 3, itl_ticks: 1 },
+    ]
+}
+
+/// `(requests met, fraction of intended)` under one SLO. The denominator
+/// is every request the trace *intended* — abandoning a conversation
+/// cannot improve goodput.
+pub fn goodput(run: &WorkloadRun, slo: &SloProfile) -> (usize, f64) {
+    let met = run.records.iter().filter(|r| slo.met_by(r)).count();
+    if run.intended == 0 {
+        (0, 0.0)
+    } else {
+        (met, met as f64 / run.intended as f64)
+    }
+}
+
+/// FNV-1a 64-bit hash of the event log — a compact determinism witness
+/// (two runs of the same spec + seed + config must agree).
+pub fn fnv1a64(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Assemble `BENCH_workloads.json`: trace identity, then one entry per
+/// replayed configuration with throughput proxies, latency percentiles
+/// (ticks), prefix/speculative counters, and goodput under every SLO.
+/// Deliberately excludes wall-clock readings — every field is
+/// deterministic for a fixed trace spec, seed, and configuration.
+pub fn report_json(trace: &Trace, runs: &[WorkloadRun], slos: &[SloProfile]) -> Json {
+    let mut j = Json::obj();
+    j.set("trace", Json::str(&trace.name));
+    j.set("seed", Json::num(trace.seed as f64));
+    j.set("conversations", Json::num(trace.convs.len() as f64));
+    j.set("requests", Json::num(trace.requests() as f64));
+    let mut configs = Vec::with_capacity(runs.len());
+    for run in runs {
+        let m = &run.metrics;
+        let ttfts: Vec<f64> =
+            run.records.iter().filter_map(|r| r.ttft_ticks()).map(|t| t as f64).collect();
+        let gaps: Vec<f64> =
+            run.records.iter().flat_map(|r| r.gaps.iter().map(|&g| g as f64)).collect();
+        let e2es: Vec<f64> = run
+            .records
+            .iter()
+            .filter(|r| r.finish.is_some())
+            .map(|r| r.e2e_ticks() as f64)
+            .collect();
+        let mut c = Json::obj();
+        c.set("config", Json::str(&run.config));
+        c.set("ticks", Json::num(run.ticks as f64));
+        c.set("completed", Json::num(run.completed() as f64));
+        c.set("generated_tokens", Json::num(m.generated_tokens as f64));
+        let forwards = m.prefills + m.decode_steps + m.spec_fused_passes;
+        c.set("forwards", Json::num(forwards as f64));
+        c.set("tok_per_forward", Json::num(run.tok_per_forward()));
+        c.set("ttft_p50_ticks", Json::num(percentile(&ttfts, 50.0)));
+        c.set("ttft_p95_ticks", Json::num(percentile(&ttfts, 95.0)));
+        c.set("itl_p50_ticks", Json::num(percentile(&gaps, 50.0)));
+        c.set("itl_p95_ticks", Json::num(percentile(&gaps, 95.0)));
+        c.set("e2e_p50_ticks", Json::num(percentile(&e2es, 50.0)));
+        c.set("e2e_p95_ticks", Json::num(percentile(&e2es, 95.0)));
+        c.set("chunked_prefills", Json::num(m.chunked_prefills as f64));
+        c.set("prefix_hits", Json::num(m.prefix_hits as f64));
+        c.set("prefix_misses", Json::num(m.prefix_misses as f64));
+        c.set("prefix_tokens_saved", Json::num(m.prefix_tokens_saved as f64));
+        c.set("prefix_gen_hits", Json::num(m.prefix_gen_hits as f64));
+        c.set("prefix_gen_tokens_saved", Json::num(m.prefix_gen_tokens_saved as f64));
+        c.set("draft_proposed", Json::num(m.draft_proposed as f64));
+        c.set("draft_accepted", Json::num(m.draft_accepted as f64));
+        c.set("accept_rate", Json::num(m.mean_acceptance()));
+        c.set("event_log_fnv", Json::str(&format!("{:016x}", fnv1a64(&run.event_log))));
+        let mut slo_arr = Vec::with_capacity(slos.len());
+        for slo in slos {
+            let (met, frac) = goodput(run, slo);
+            let mut g = Json::obj();
+            g.set("slo", Json::str(slo.name));
+            g.set("ttft_ticks", Json::num(slo.ttft_ticks as f64));
+            g.set("itl_ticks", Json::num(slo.itl_ticks as f64));
+            g.set("met", Json::num(met as f64));
+            g.set("goodput", Json::num(frac));
+            slo_arr.push(g);
+        }
+        c.set("goodput", Json::Arr(slo_arr));
+        configs.push(c);
+    }
+    j.set("configs", Json::Arr(configs));
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::{EngineMetrics, FinishReason};
+
+    fn rec(submit: usize, first: usize, gaps: Vec<usize>, finish: Option<FinishReason>) -> ReqRecord {
+        let last = first + gaps.iter().sum::<usize>();
+        ReqRecord {
+            conv: 0,
+            turn: 0,
+            submit_tick: submit,
+            first_tick: finish.map(|_| first),
+            last_tick: finish.map(|_| last),
+            finish_tick: last,
+            gaps,
+            gen: vec![9],
+            finish,
+        }
+    }
+
+    fn run_of(records: Vec<ReqRecord>, intended: usize) -> WorkloadRun {
+        WorkloadRun {
+            config: "plain".into(),
+            records,
+            intended,
+            ticks: 10,
+            event_log: String::new(),
+            wall_secs: 0.0,
+            metrics: EngineMetrics::default(),
+        }
+    }
+
+    #[test]
+    fn goodput_counts_only_on_time_finishes() {
+        let slo = SloProfile { name: "t", ttft_ticks: 2, itl_ticks: 1 };
+        let records = vec![
+            rec(0, 1, vec![1, 1], Some(FinishReason::Eos)), // meets
+            rec(0, 5, vec![1], Some(FinishReason::MaxNew)), // ttft blown
+            rec(0, 1, vec![1, 3], Some(FinishReason::Eos)), // gap blown
+            rec(0, 1, vec![], None),                        // rejected
+        ];
+        let run = run_of(records, 5); // one intended turn never submitted
+        let (met, frac) = goodput(&run, &slo);
+        assert_eq!(met, 1);
+        assert!((frac - 0.2).abs() < 1e-12, "denominator is intended requests");
+    }
+
+    #[test]
+    fn strict_profile_is_componentwise_tighter() {
+        let [lenient, strict] = default_profiles();
+        assert!(strict.ttft_ticks <= lenient.ttft_ticks);
+        assert!(strict.itl_ticks <= lenient.itl_ticks);
+        // therefore met_by(strict) implies met_by(lenient) for any record
+        let r = rec(0, 2, vec![1, 1], Some(FinishReason::Eos));
+        assert!(!strict.met_by(&r) || lenient.met_by(&r));
+    }
+
+    #[test]
+    fn fnv_is_stable() {
+        assert_eq!(fnv1a64(""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64("a"), fnv1a64("a"));
+        assert_ne!(fnv1a64("a"), fnv1a64("b"));
+    }
+}

@@ -1,0 +1,333 @@
+//! Seeded, deterministic workload traces: arrival processes, request
+//! mixes, and multi-turn conversations.
+//!
+//! A trace is a list of conversations, each with a start tick drawn from
+//! an arrival process and one or more turns. Turn tokens come from the
+//! synthetic `data::world` corpus (the same token distributions the
+//! models were trained on), sized against the serving geometry so long
+//! prompts exercise chunked prefill without overrunning the cache
+//! horizon. Everything is a pure function of `TraceSpec` — two calls to
+//! `generate` with the same spec yield identical traces, which is what
+//! lets the replay harness assert byte-identical event logs.
+
+use crate::data::corpus::{sample_sequence, CorpusMix};
+use crate::data::world::World;
+use crate::util::Rng;
+
+/// When conversations start, in virtual ticks.
+#[derive(Debug, Clone)]
+pub enum Arrival {
+    /// Poisson process: exponential inter-arrival gaps with the given
+    /// mean (ticks).
+    Poisson {
+        /// Mean gap between consecutive conversation starts.
+        mean_gap: f64,
+    },
+    /// ON/OFF bursts: `burst` conversations arrive back-to-back on one
+    /// tick, then `idle` quiet ticks before the next burst.
+    Bursty {
+        /// Conversations per burst.
+        burst: usize,
+        /// Quiet ticks between bursts.
+        idle: usize,
+    },
+}
+
+impl Arrival {
+    /// Start ticks for `n` conversations, non-decreasing.
+    pub fn starts(&self, n: usize, rng: &mut Rng) -> Vec<usize> {
+        let mut out = Vec::with_capacity(n);
+        match *self {
+            Arrival::Poisson { mean_gap } => {
+                let mut t = 0.0f64;
+                for _ in 0..n {
+                    // inverse-CDF exponential draw; 1 - u keeps ln finite
+                    t += -mean_gap * (1.0 - rng.f64()).ln();
+                    out.push(t as usize);
+                }
+            }
+            Arrival::Bursty { burst, idle } => {
+                let burst = burst.max(1);
+                for i in 0..n {
+                    out.push((i / burst) * (idle + 1));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Request-mix families a trace draws its conversations from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MixKind {
+    /// Short prompt, short completion — interactive chat.
+    Chat,
+    /// Prompt longer than the prefill window — exercises chunked
+    /// (teacher-forced) prefill.
+    LongContext,
+    /// A common system prompt shared by every conversation plus a short
+    /// unique tail — the prefix cache's bread and butter.
+    Shared,
+    /// Moderate prompt, longer completion — the shape speculative
+    /// decoding amortizes best.
+    Spec,
+    /// Three-turn conversations where each turn's prompt extends the
+    /// previous prompt *and* completion — only finish-time retention of
+    /// generated tokens can serve these warm.
+    MultiTurn,
+    /// Round-robin over all of the above.
+    Mixed,
+}
+
+impl MixKind {
+    /// CLI / report name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            MixKind::Chat => "chat",
+            MixKind::LongContext => "longcontext",
+            MixKind::Shared => "shared",
+            MixKind::Spec => "spec",
+            MixKind::MultiTurn => "multiturn",
+            MixKind::Mixed => "mixed",
+        }
+    }
+
+    /// Parse a CLI name (`chat|longcontext|shared|spec|multiturn|mixed`).
+    pub fn parse(s: &str) -> Option<MixKind> {
+        Some(match s {
+            "chat" => MixKind::Chat,
+            "longcontext" => MixKind::LongContext,
+            "shared" => MixKind::Shared,
+            "spec" => MixKind::Spec,
+            "multiturn" => MixKind::MultiTurn,
+            "mixed" => MixKind::Mixed,
+            _ => return None,
+        })
+    }
+}
+
+/// One user turn of a conversation.
+#[derive(Debug, Clone)]
+pub struct Turn {
+    /// Tokens appended to the conversation context for this turn (the
+    /// first turn starts with BOS; later turns are bare continuations).
+    pub user: Vec<u32>,
+    /// Generation budget for this turn (>= 1).
+    pub max_new: usize,
+    /// Quiet ticks between the previous turn's finish and this submit.
+    pub think_ticks: usize,
+}
+
+/// One conversation: a start tick plus its turns, replayed closed-loop
+/// (turn N+1's prompt is turn N's full prompt + completion + new user
+/// tokens — the replay driver stitches completions in as they land).
+#[derive(Debug, Clone)]
+pub struct Conversation {
+    /// Tick at which the first turn may be submitted.
+    pub start: usize,
+    /// The turns, in order.
+    pub turns: Vec<Turn>,
+}
+
+/// A fully materialized workload trace.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    /// Mix name (report key).
+    pub name: String,
+    /// Generator seed (report key).
+    pub seed: u64,
+    /// The conversations to replay.
+    pub convs: Vec<Conversation>,
+}
+
+impl Trace {
+    /// Total request count (one per turn).
+    pub fn requests(&self) -> usize {
+        self.convs.iter().map(|c| c.turns.len()).sum()
+    }
+}
+
+/// Trace generator parameters — the whole workload is a deterministic
+/// function of this spec plus the serving geometry.
+#[derive(Debug, Clone)]
+pub struct TraceSpec {
+    /// Request-mix family.
+    pub mix: MixKind,
+    /// Arrival process for conversation start ticks.
+    pub arrival: Arrival,
+    /// Conversation count.
+    pub conversations: usize,
+    /// Generator seed: same spec + seed ⇒ identical trace.
+    pub seed: u64,
+}
+
+impl TraceSpec {
+    /// A small default spec for `mix`: 6 conversations, Poisson arrivals
+    /// with a 3-tick mean gap.
+    pub fn small(mix: MixKind, seed: u64) -> TraceSpec {
+        TraceSpec { mix, arrival: Arrival::Poisson { mean_gap: 3.0 }, conversations: 6, seed }
+    }
+
+    /// Materialize the trace against a serving geometry: `vocab_size`
+    /// drives token realism, `prefill_window` (`s_prefill`) is what
+    /// long-context prompts deliberately exceed, and every conversation
+    /// keeps prompt + generation within `horizon` (`s_max`) so nothing
+    /// trips the engine's admission checks.
+    pub fn generate(&self, vocab_size: u32, prefill_window: usize, horizon: usize) -> Trace {
+        let mut rng = Rng::new(self.seed ^ 0x1_7ace);
+        let world = World::new(3, vocab_size);
+        let mix = CorpusMix::distillation_mix();
+        // the shared-system-prompt mix prepends this to every conversation
+        let system = sample_sequence(&world, &mix, 11, &mut rng);
+        let mut starts = self.arrival.starts(self.conversations, &mut rng);
+        let mut convs = Vec::with_capacity(self.conversations);
+        for ci in 0..self.conversations {
+            let kind = match self.mix {
+                MixKind::Mixed => [
+                    MixKind::Chat,
+                    MixKind::Shared,
+                    MixKind::MultiTurn,
+                    MixKind::Spec,
+                    MixKind::LongContext,
+                ][ci % 5],
+                k => k,
+            };
+            let turns = self.turns_for(kind, &world, &mix, &system, prefill_window, horizon, &mut rng);
+            convs.push(Conversation { start: starts.remove(0), turns });
+        }
+        Trace { name: self.mix.name().to_string(), seed: self.seed, convs }
+    }
+
+    fn turns_for(
+        &self,
+        kind: MixKind,
+        world: &World,
+        mix: &CorpusMix,
+        system: &[u32],
+        prefill_window: usize,
+        horizon: usize,
+        rng: &mut Rng,
+    ) -> Vec<Turn> {
+        match kind {
+            MixKind::Chat => {
+                let user = sample_sequence(world, mix, rng.range(4, 10), rng);
+                vec![Turn { user, max_new: rng.range(4, 9), think_ticks: 0 }]
+            }
+            MixKind::LongContext => {
+                // past the prefill window (chunked ingest), with headroom
+                // for the completion under the horizon
+                let max_new = rng.range(3, 7);
+                let want = prefill_window + rng.range(1, prefill_window / 2 + 2);
+                let len = want.min(horizon.saturating_sub(max_new + 2)).max(2);
+                let user = sample_sequence(world, mix, len, rng);
+                vec![Turn { user, max_new, think_ticks: 0 }]
+            }
+            MixKind::Shared => {
+                let mut user = system.to_vec();
+                // sample_sequence leads with BOS; drop it on the tail so
+                // the shared prefix is the longest common prefix
+                user.extend(&sample_sequence(world, mix, rng.range(3, 7), rng)[1..]);
+                vec![Turn { user, max_new: rng.range(4, 9), think_ticks: 0 }]
+            }
+            MixKind::Spec => {
+                let user = sample_sequence(world, mix, rng.range(5, 9), rng);
+                vec![Turn { user, max_new: rng.range(8, 11), think_ticks: 0 }]
+            }
+            MixKind::MultiTurn => {
+                // sized so the third turn's prompt (two turns of context
+                // plus completions) can exceed the prefill window while
+                // prompt + max_new stays under the horizon
+                let mut turns = vec![Turn {
+                    user: sample_sequence(world, mix, rng.range(5, 8), rng),
+                    max_new: rng.range(6, 8),
+                    think_ticks: rng.below(3),
+                }];
+                for _ in 0..2 {
+                    turns.push(Turn {
+                        user: sample_sequence(world, mix, rng.range(7, 10), rng)[1..].to_vec(),
+                        max_new: rng.range(6, 8),
+                        think_ticks: rng.below(3),
+                    });
+                }
+                turns
+            }
+            MixKind::Mixed => unreachable!("mixed resolves to a concrete kind per conversation"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_deterministic() {
+        let spec = TraceSpec::small(MixKind::Mixed, 7);
+        let a = spec.generate(128, 32, 48);
+        let b = spec.generate(128, 32, 48);
+        assert_eq!(a.convs.len(), b.convs.len());
+        for (ca, cb) in a.convs.iter().zip(&b.convs) {
+            assert_eq!(ca.start, cb.start);
+            assert_eq!(ca.turns.len(), cb.turns.len());
+            for (ta, tb) in ca.turns.iter().zip(&cb.turns) {
+                assert_eq!(ta.user, tb.user);
+                assert_eq!(ta.max_new, tb.max_new);
+                assert_eq!(ta.think_ticks, tb.think_ticks);
+            }
+        }
+        let c = TraceSpec::small(MixKind::Mixed, 8).generate(128, 32, 48);
+        let users = |t: &Trace| {
+            t.convs.iter().flat_map(|c| c.turns.iter().flat_map(|t| t.user.clone())).collect::<Vec<_>>()
+        };
+        assert_ne!(users(&a), users(&c), "a different seed must change the trace");
+    }
+
+    #[test]
+    fn conversations_respect_the_horizon() {
+        for mix in [
+            MixKind::Chat,
+            MixKind::LongContext,
+            MixKind::Shared,
+            MixKind::Spec,
+            MixKind::MultiTurn,
+            MixKind::Mixed,
+        ] {
+            for seed in 0..4 {
+                let trace = TraceSpec::small(mix, seed).generate(128, 32, 48);
+                assert_eq!(trace.requests(), trace.convs.iter().map(|c| c.turns.len()).sum());
+                for conv in &trace.convs {
+                    let total: usize =
+                        conv.turns.iter().map(|t| t.user.len() + t.max_new).sum();
+                    assert!(total <= 48, "conversation cannot outgrow the horizon: {total}");
+                    for turn in &conv.turns {
+                        assert!(turn.max_new >= 1);
+                        assert!(!turn.user.is_empty());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multiturn_third_prompt_can_exceed_the_prefill_window() {
+        let trace = TraceSpec::small(MixKind::MultiTurn, 7).generate(128, 32, 48);
+        // worst case (every turn maxes its budget) the third prompt is
+        // users + two full completions; at least one conversation must be
+        // able to cross the 32-token prefill window
+        let can_cross = trace.convs.iter().any(|c| {
+            let users: usize = c.turns.iter().map(|t| t.user.len()).sum();
+            let gens: usize = c.turns[..2].iter().map(|t| t.max_new).sum();
+            users + gens > 32
+        });
+        assert!(can_cross, "multiturn sizing must be able to exercise chunked prefill");
+    }
+
+    #[test]
+    fn arrivals_are_nondecreasing_and_bursty_groups() {
+        let mut rng = Rng::new(3);
+        let starts = Arrival::Poisson { mean_gap: 2.0 }.starts(16, &mut rng);
+        assert!(starts.windows(2).all(|w| w[0] <= w[1]));
+        let starts = Arrival::Bursty { burst: 3, idle: 4 }.starts(7, &mut rng);
+        assert_eq!(starts, vec![0, 0, 0, 5, 5, 5, 10]);
+    }
+}

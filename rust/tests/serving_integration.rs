@@ -630,6 +630,60 @@ fn prefix_eviction_respects_live_refs_and_budget() {
 }
 
 #[test]
+fn finished_sequences_retain_segments_over_generated_tokens() {
+    // DESIGN.md §9 retention rule: at finish, the engine retains the
+    // committed stream (prompt ++ generated, minus the newest sampled
+    // token, page-aligned) — so a multi-turn follow-up whose prompt
+    // extends the previous completion hits rows the *decode* path wrote,
+    // not just cold-prefill rows.
+    let be = backend();
+    let y = 10u32;
+    let mut rng = Rng::new(63);
+    let store = self_loop_store(&*be, y, &mut rng);
+    let arch = Arch::parent(be.man().cfg.n_layers);
+    let mut eng = EngineConfig::new()
+        .kv_budget_bytes(16 << 20)
+        .page_len(4)
+        .prefix_cache(true, 8 << 20)
+        .build(be.clone(), &store, &arch)
+        .unwrap();
+
+    // turn 1: 7-token prompt, 9 generated (self-loop on y, no EOS).
+    // finish retains align_down(7 + 9 - 1, 4) = 12 rows: 7 prompt-origin
+    // + 5 generated-origin (gen_from = 7).
+    let p1: Vec<u32> = std::iter::once(1u32).chain(std::iter::repeat(y).take(6)).collect();
+    eng.submit(GenRequest::new(p1.clone(), 9)).unwrap();
+    let r1 = eng.run_to_completion().unwrap().remove(0);
+    assert_eq!(r1.tokens, vec![y; 9]);
+    assert_eq!(r1.finish, FinishReason::MaxNew);
+    assert!(eng.prefix_segments() >= 2, "admit-time chunk AND finish-time stream retained");
+    assert_eq!(eng.metrics.prefix_gen_hits, 0, "retention alone is not a hit");
+
+    // turn 2 extends turn 1's full prompt + completion: the hit runs 12
+    // tokens deep, 5 of them past the prompt-origin boundary
+    let mut p2 = p1.clone();
+    p2.extend(&r1.tokens);
+    p2.push(y);
+    eng.submit(GenRequest::new(p2.clone(), 4)).unwrap();
+    let r2 = eng.run_to_completion().unwrap().remove(0);
+    assert_eq!(r2.tokens, vec![y; 4], "generation over retained decode rows stays correct");
+    assert_eq!(eng.metrics.prefix_hits, 1);
+    assert_eq!(eng.metrics.prefix_tokens_saved, 12);
+    assert_eq!(eng.metrics.prefix_gen_hits, 1, "the hit crossed into generated-origin rows");
+    assert_eq!(eng.metrics.prefix_gen_tokens_saved, 5);
+    // the oracle: a cache-off engine generates the same continuation
+    let mut cold = EngineConfig::new()
+        .kv_budget_bytes(16 << 20)
+        .page_len(4)
+        .build(be.clone(), &store, &arch)
+        .unwrap();
+    cold.submit(GenRequest::new(p2, 4)).unwrap();
+    assert_eq!(cold.run_to_completion().unwrap()[0].tokens, r2.tokens);
+    // pages: everything beyond retained segments was handed back
+    assert_eq!(eng.kv_allocated_bytes(), eng.prefix_retained_bytes());
+}
+
+#[test]
 fn generation_stops_at_eos_through_the_decode_path() {
     // engineer weights so the model deterministically generates
     // token-chain y -> z -> EOS: residual blocks are zeroed (wo = wd = 0),

@@ -1,0 +1,182 @@
+//! Workload-harness integration tests: deterministic replay (satellite
+//! of DESIGN.md §9 — same trace spec + seed reproduces the event log and
+//! the BENCH json byte-for-byte, per engine configuration), multi-turn
+//! prefix reuse over segments retained from *generated* tokens, the
+//! cancel-during-chunked-prefill page-accounting regression, and
+//! per-request gap bookkeeping. Hermetic (RefBackend + tiny manifest).
+
+use puzzle::arch::Arch;
+use puzzle::runtime::{share, SharedBackend};
+use puzzle::serving::{EngineConfig, FinishReason, GenRequest};
+use puzzle::specdec::{SpecBatch, SpecConfig};
+use puzzle::util::Rng;
+use puzzle::weights::store::init_parent;
+use puzzle::weights::Store;
+use puzzle::workload::{
+    default_profiles, goodput, replay, report_json, MixKind, Server, Trace, TraceSpec, WorkloadRun,
+};
+
+#[cfg(not(feature = "pjrt"))]
+fn backend() -> SharedBackend {
+    share(puzzle::runtime::RefBackend::tiny())
+}
+
+#[cfg(feature = "pjrt")]
+fn backend() -> SharedBackend {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    assert!(dir.join("manifest.json").exists(), "run `make artifacts` first");
+    share(puzzle::runtime::XlaBackend::open(&dir).unwrap())
+}
+
+fn setup() -> (SharedBackend, Store, Arch, Trace) {
+    let be = backend();
+    let cfg = be.man().cfg.clone();
+    let mut rng = Rng::new(1);
+    let store = init_parent(be.man(), &mut rng);
+    let arch = Arch::parent(cfg.n_layers);
+    let trace =
+        TraceSpec::small(MixKind::MultiTurn, 7).generate(cfg.v as u32, cfg.s_prefill, cfg.s_max);
+    (be, store, arch, trace)
+}
+
+fn engine_cfg(prefix: bool) -> EngineConfig {
+    EngineConfig::new().kv_budget_bytes(16 << 20).page_len(4).prefix_cache(prefix, 8 << 20)
+}
+
+/// One fresh replay of `trace` under the named configuration.
+fn run_once(
+    be: &SharedBackend,
+    store: &Store,
+    arch: &Arch,
+    trace: &Trace,
+    config: &str,
+) -> WorkloadRun {
+    match config {
+        "plain" => {
+            let mut eng = engine_cfg(false).build(be.clone(), store, arch).unwrap();
+            replay(trace, &mut Server::Engine(&mut eng), config).unwrap()
+        }
+        "prefix_cache" => {
+            let mut eng = engine_cfg(true).build(be.clone(), store, arch).unwrap();
+            replay(trace, &mut Server::Engine(&mut eng), config).unwrap()
+        }
+        "speculative" => {
+            let cfg = SpecConfig { draft_k: 3, adapt_k_max: None, engine: engine_cfg(true) };
+            let mut batch =
+                SpecBatch::new(be.clone(), store, arch, store, arch, cfg).unwrap();
+            replay(trace, &mut Server::Spec(&mut batch), config).unwrap()
+        }
+        other => panic!("unknown test config {other}"),
+    }
+}
+
+#[test]
+fn replay_is_deterministic_per_engine_configuration() {
+    let (be, store, arch, trace) = setup();
+    let slos = default_profiles();
+    for config in ["plain", "prefix_cache", "speculative"] {
+        let a = run_once(&be, &store, &arch, &trace, config);
+        let b = run_once(&be, &store, &arch, &trace, config);
+        assert!(!a.event_log.is_empty(), "{config}: replay must log events");
+        assert_eq!(a.event_log, b.event_log, "{config}: event log must be byte-identical");
+        assert_eq!(a.ticks, b.ticks, "{config}: virtual tick count must agree");
+        // the BENCH json (which excludes wall clock) must also agree
+        // byte-for-byte — the property the CI artifact diff relies on
+        let ja = report_json(&trace, &[a], &slos).to_pretty();
+        let jb = report_json(&trace, &[b], &slos).to_pretty();
+        assert_eq!(ja, jb, "{config}: BENCH_workloads.json must be reproducible");
+    }
+}
+
+#[test]
+fn multiturn_replay_hits_segments_retained_from_generated_tokens() {
+    let (be, store, arch, trace) = setup();
+    let plain = run_once(&be, &store, &arch, &trace, "plain");
+    let warm = run_once(&be, &store, &arch, &trace, "prefix_cache");
+    // later turns land on segments retained at earlier turns' *finish*,
+    // which cover the completion tokens — the PR's engine change
+    assert!(warm.metrics.prefix_hits > 0, "multi-turn prompts must hit the cache");
+    assert!(
+        warm.metrics.prefix_gen_hits > 0,
+        "hits must extend past the prompt into generated-origin rows"
+    );
+    assert!(warm.metrics.prefix_gen_tokens_saved > 0);
+    // caching is an optimization, not a model change: every request's
+    // token stream matches the plain engine's byte-for-byte
+    assert_eq!(plain.records.len(), warm.records.len());
+    for (p, w) in plain.records.iter().zip(&warm.records) {
+        assert_eq!((p.conv, p.turn), (w.conv, w.turn));
+        assert_eq!(p.gen, w.gen, "conv {} turn {}: cached generation diverged", p.conv, p.turn);
+        assert_eq!(p.finish, w.finish);
+    }
+    // structural SLO sanity on real runs: strict is componentwise tighter
+    let [lenient, strict] = default_profiles();
+    for run in [&plain, &warm] {
+        assert!(goodput(run, &strict).1 <= goodput(run, &lenient).1 + 1e-12);
+    }
+}
+
+#[test]
+fn cancel_during_chunked_prefill_frees_pages_and_retains_no_partial_segment() {
+    let (be, store, arch, _) = setup();
+    let cfg = be.man().cfg.clone();
+    let mut eng = engine_cfg(true).build(be.clone(), &store, &arch).unwrap();
+    // prompt longer than the prefill window: admit ingests one
+    // s_prefill-sized chunk (retained — it was fully ingested), then
+    // teacher-forces the tail one token per step
+    let plen = cfg.s_prefill + 8;
+    let prompt: Vec<u32> = (0..plen).map(|i| (i % (cfg.v - 2)) as u32 + 1).collect();
+    let id = eng.submit(GenRequest::new(prompt.clone(), 8)).unwrap();
+    eng.step().unwrap(); // admit + first teacher-forced tail token
+    assert_eq!(eng.active(), 1);
+    assert_eq!(eng.metrics.chunked_prefills, 1);
+    assert_eq!(eng.prefix_segments(), 1, "the ingested first chunk is retained at admit");
+    let retained = eng.prefix_retained_bytes();
+    assert!(retained > 0);
+
+    // cancel while the unmatched suffix is still being teacher-forced
+    assert!(eng.cancel(id));
+    assert_eq!(eng.active(), 0);
+    assert_eq!(
+        eng.kv_allocated_bytes(),
+        eng.prefix_retained_bytes(),
+        "cancel must free the sequence's pages exactly (only retained segment bytes remain)"
+    );
+    assert_eq!(eng.prefix_retained_bytes(), retained);
+    assert_eq!(
+        eng.prefix_segments(),
+        1,
+        "a partially teacher-forced prompt must not become a new segment"
+    );
+    assert_eq!(eng.metrics.prefix_gen_hits, 0);
+    let resp = eng.take_finished().pop().expect("cancelled response is emitted");
+    assert_eq!(resp.finish, FinishReason::Cancelled);
+
+    // the same prompt resubmitted hits exactly the admit-time chunk — if
+    // cancel had retained teacher-forced progress, more would be saved
+    eng.submit(GenRequest::new(prompt, 4)).unwrap();
+    eng.run_to_completion().unwrap();
+    assert_eq!(eng.metrics.prefix_hits, 1);
+    assert_eq!(eng.metrics.prefix_tokens_saved, cfg.s_prefill);
+}
+
+#[test]
+fn per_request_gap_counts_match_token_streams() {
+    let (be, store, arch, trace) = setup();
+    let run = run_once(&be, &store, &arch, &trace, "prefix_cache");
+    assert!(run.completed() > 0);
+    for r in &run.records {
+        match r.finish {
+            Some(_) => {
+                assert!(!r.gen.is_empty(), "finished requests emit at least one token");
+                assert_eq!(r.gaps.len() + 1, r.gen.len(), "one gap per token after the first");
+                let ttft = r.ttft_ticks().expect("finished requests have a first token");
+                assert!(r.e2e_ticks() >= ttft);
+            }
+            None => assert!(r.gen.is_empty(), "rejected requests never emit tokens"),
+        }
+    }
+    // the engine-side ITL series is one gap per decode-emitted token
+    // after each sequence's first — it must be populated on a real run
+    assert!(!run.metrics.itl.is_empty());
+}

@@ -1,0 +1,351 @@
+#!/usr/bin/env python3
+"""Toolchain-free cross-check of the PR-6 prefix-cache extensions
+(rust/src/serving/prefixcache.rs): the radix tree's generated-origin
+bookkeeping (`gen_from` on insert, `PrefixHit.gen_tokens` on lookup) and
+the engine's finish-time retention arithmetic (engine.rs `maybe_retain` /
+`finish`).
+
+1. A line-for-line python transcription of the radix tree (insert with
+   edge splitting, best_match with frontier descent, covered, remove with
+   upward pruning, LRU order) is fuzzed against a naive
+   `[(id, path, gen_from)]` model: hit length must equal the brute-force
+   page-aligned longest-common-prefix bound, the chosen segment must
+   really share the matched tokens, gen_tokens must be the segment's
+   generated-origin share of the match, and covered/segments/bytes stay
+   exact across random insert/lookup/evict interleavings.
+2. The finish-time retention rule — rows ingested = prompt + generated
+   - 1 (the newest sampled token has no K/V row), retain_len =
+   align_down(min(ingested, stream)), gen_from = min(prompt_len,
+   retain_len) — is checked against the tree over random
+   (prompt, completion) pairs: a follow-up prompt extending the full
+   stream hits exactly align_down(min(lcp, follow_len - 1)) tokens and
+   credits exactly max(0, hit - prompt_len) generated-origin rows.
+3. The concrete anchor from tests/serving_integration.rs
+   (`finished_sequences_retain_segments_over_generated_tokens`): prompt
+   7, 9 generated, page 4 -> retained 12 with gen_from 7; the 17-token
+   follow-up hits 12 and saves 5 generated-origin rows.
+
+Run: python3 tools/verify_workload_radix.py
+"""
+
+import random
+import sys
+
+
+def align_down(n, page):
+    return (n // page) * page
+
+
+def lcp(a, b):
+    n = 0
+    for x, y in zip(a, b):
+        if x != y:
+            break
+        n += 1
+    return n
+
+
+class Node:
+    __slots__ = ("edge", "children", "seg", "depth", "parent")
+
+    def __init__(self, edge, children, seg, depth, parent):
+        self.edge, self.children, self.seg, self.depth, self.parent = (
+            edge, children, seg, depth, parent)
+
+
+class PrefixCache:
+    """Transcription of prefixcache.rs::PrefixCache (bookkeeping only;
+    KvSegment rows are reduced to a byte count)."""
+
+    def __init__(self, page_len, seg_bytes):
+        self.nodes = [Node([], [], None, 0, 0)]
+        self.segs = {}  # id -> (node, last_use, gen_from, bytes, len)
+        self.next_seg = 1
+        self.clock = 0
+        self.page_len = page_len
+        self.seg_bytes = seg_bytes  # len -> host bytes
+        self.retained_bytes = 0
+
+    def segments(self):
+        return len(self.segs)
+
+    def best_match(self, prompt):
+        cur, i = 0, 0
+        deepest = None
+        frontier = None
+        while True:
+            node = self.nodes[cur]
+            if node.seg is not None and node.depth > 0:
+                deepest = (node.seg, node.depth)
+            if i >= len(prompt):
+                frontier = node.children[0] if node.children else None
+                break
+            child = next((c for c in node.children
+                          if self.nodes[c].edge[0] == prompt[i]), None)
+            if child is None:
+                frontier = node.children[0] if node.children else None
+                break
+            edge = self.nodes[child].edge
+            common = lcp(edge, prompt[i:])
+            i += common
+            if common == len(edge):
+                cur = child
+                continue
+            frontier = child
+            break
+        m = align_down(min(i, len(prompt) - 1), self.page_len)
+        if m == 0:
+            return None
+        if frontier is not None:
+            n = frontier
+            while True:
+                if self.nodes[n].seg is not None:
+                    return (self.nodes[n].seg, m)
+                if not self.nodes[n].children:
+                    break
+                n = self.nodes[n].children[0]
+        if deepest is None:
+            return None
+        seg, depth = deepest
+        return (seg, min(depth, m))
+
+    def lookup(self, prompt):
+        if len(prompt) <= 1:
+            return None
+        hit = self.best_match(prompt)
+        if hit is None:
+            return None
+        seg_id, length = hit
+        self.clock += 1
+        node, _, gen_from, nbytes, slen = self.segs[seg_id]
+        self.segs[seg_id] = (node, self.clock, gen_from, nbytes, slen)
+        return (seg_id, length, max(0, length - gen_from))
+
+    def covered(self, tokens, length):
+        cur, i = 0, 0
+        while i < length:
+            child = next((c for c in self.nodes[cur].children
+                          if self.nodes[c].edge[0] == tokens[i]), None)
+            if child is None:
+                return False
+            edge = self.nodes[child].edge
+            common = lcp(edge, tokens[i:length])
+            i += common
+            if common < len(edge):
+                return i == length
+            cur = child
+        return True
+
+    def insert(self, tokens, seg_len, gen_from):
+        assert 0 < seg_len <= len(tokens)
+        assert seg_len % self.page_len == 0
+        assert gen_from <= seg_len
+        node = self.insert_path(tokens[:seg_len])
+        assert self.nodes[node].seg is None
+        sid = self.next_seg
+        self.next_seg += 1
+        self.nodes[node].seg = sid
+        self.clock += 1
+        nbytes = self.seg_bytes(seg_len)
+        self.retained_bytes += nbytes
+        self.segs[sid] = (node, self.clock, gen_from, nbytes, seg_len)
+        return sid
+
+    def insert_path(self, tokens):
+        cur, i = 0, 0
+        while i < len(tokens):
+            child = next((c for c in self.nodes[cur].children
+                          if self.nodes[c].edge[0] == tokens[i]), None)
+            if child is None:
+                idx = len(self.nodes)
+                self.nodes.append(
+                    Node(list(tokens[i:]), [], None, len(tokens), cur))
+                self.nodes[cur].children.append(idx)
+                return idx
+            edge = list(self.nodes[child].edge)
+            common = lcp(edge, tokens[i:])
+            if common == len(edge):
+                cur = child
+                i += common
+                continue
+            mid = len(self.nodes)
+            self.nodes.append(Node(edge[:common], [child], None,
+                                   self.nodes[cur].depth + common, cur))
+            pos = self.nodes[cur].children.index(child)
+            self.nodes[cur].children[pos] = mid
+            self.nodes[child].edge = edge[common:]
+            self.nodes[child].parent = mid
+            if i + common == len(tokens):
+                return mid
+            leaf = len(self.nodes)
+            self.nodes.append(
+                Node(list(tokens[i + common:]), [], None, len(tokens), mid))
+            self.nodes[mid].children.append(leaf)
+            return leaf
+        return cur
+
+    def remove(self, seg_id):
+        if seg_id not in self.segs:
+            return False
+        node, _, _, nbytes, _ = self.segs.pop(seg_id)
+        self.retained_bytes -= nbytes
+        cur = node
+        self.nodes[cur].seg = None
+        while (cur != 0 and self.nodes[cur].seg is None
+               and not self.nodes[cur].children):
+            parent = self.nodes[cur].parent
+            self.nodes[parent].children.remove(cur)
+            cur = parent
+        return True
+
+
+def seg_bytes(length):
+    # mirrors the rust unit-test fixture: one caching layer, 4-float
+    # rows, k+v, 4 bytes per f32
+    return 2 * (length * 4) * 4
+
+
+def fuzz_tree(seed, rounds=400, page=2):
+    rng = random.Random(seed)
+    c = PrefixCache(page, seg_bytes)
+    model = []  # (id, path, gen_from)
+
+    def gen_path():
+        length = page * rng.randrange(1, 7)
+        p = []
+        if model and rng.randrange(2) == 0:
+            base = model[rng.randrange(len(model))][1]
+            keep = rng.randrange(min(len(base), length) + 1)
+            p = list(base[:keep])
+        while len(p) < length:
+            p.append(rng.randrange(4))
+        return p
+
+    for _ in range(rounds):
+        op = rng.randrange(10)
+        if op <= 3:
+            path = gen_path()
+            model_covered = any(lcp(p, path) >= len(path) for _, p, _ in model)
+            assert c.covered(path, len(path)) == model_covered
+            if not model_covered:
+                gen_from = rng.randrange(len(path) + 1)
+                sid = c.insert(path, len(path), gen_from)
+                model.append((sid, path, gen_from))
+        elif op <= 7:
+            q = gen_path()
+            if rng.randrange(4) == 0 and q:
+                q[rng.randrange(len(q))] = 7
+            for _ in range(rng.randrange(3)):
+                q.append(rng.randrange(4))
+            if len(q) <= 1:
+                expect = 0
+            else:
+                best = max((lcp(p, q) for _, p, _ in model), default=0)
+                expect = align_down(min(best, len(q) - 1), page)
+            hit = c.lookup(q)
+            if hit is None:
+                assert expect == 0, (q, expect)
+            else:
+                sid, hlen, gen_tokens = hit
+                assert hlen == expect, (q, hlen, expect)
+                _, path, gen_from = next(m for m in model if m[0] == sid)
+                assert lcp(path, q) >= hlen
+                assert gen_tokens == max(0, hlen - gen_from)
+        elif op == 8:
+            if model and rng.randrange(4) != 0:
+                sid, _, _ = model.pop(rng.randrange(len(model)))
+                assert c.remove(sid)
+                assert not c.remove(sid)
+            else:
+                assert not c.remove(1 << 60)
+        else:
+            q = gen_path()
+            ln = rng.randrange(len(q) + 1)
+            model_covered = ln == 0 or any(
+                lcp(p, q) >= ln for _, p, _ in model)
+            assert c.covered(q, ln) == model_covered
+        assert c.segments() == len(model)
+        assert c.retained_bytes == sum(
+            seg_bytes(len(p)) for _, p, _ in model)
+
+
+def fuzz_retention_rule(seed, rounds=300):
+    """Engine finish-time retention (engine.rs finish -> maybe_retain)
+    against the tree: retain the committed stream capped at ingested
+    rows, then check a follow-up prompt's hit and gen-credit exactly."""
+    rng = random.Random(seed)
+    for _ in range(rounds):
+        page = rng.choice([2, 4, 8])
+        c = PrefixCache(page, seg_bytes)
+        prompt = [rng.randrange(1, 50) for _ in range(rng.randrange(2, 20))]
+        gen = [rng.randrange(1, 50) for _ in range(rng.randrange(1, 16))]
+        stream = prompt + gen
+        # rows ingested by finish: prompt + generated - 1 (the newest
+        # sampled token was never fed, so it has no K/V row)
+        ingested = len(prompt) + len(gen) - 1
+        retain_len = align_down(min(ingested, len(stream)), page)
+        if retain_len == 0:
+            continue
+        gen_from = min(len(prompt), retain_len)
+        c.insert(stream, retain_len, gen_from)
+        # turn N+1: full stream plus fresh user tokens
+        follow = stream + [rng.randrange(50, 60) for _ in range(rng.randrange(1, 6))]
+        hit = c.lookup(follow)
+        expect = align_down(min(retain_len, len(follow) - 1), page)
+        assert expect == retain_len  # follow extends the whole path
+        assert hit is not None and hit[1] == retain_len
+        assert hit[2] == max(0, retain_len - len(prompt))
+        # a prompt diverging inside the completion still gets the
+        # aligned shared part, credited correctly
+        cut = rng.randrange(len(prompt), len(stream))
+        div = stream[:cut] + [99, 99]
+        hit = c.lookup(div)
+        share = align_down(min(cut, retain_len, len(div) - 1), page)
+        if share == 0:
+            assert hit is None
+        else:
+            assert hit is not None and hit[1] == share
+            assert hit[2] == max(0, share - len(prompt))
+
+
+def anchor_integration_case():
+    """tests/serving_integration.rs::finished_sequences_retain_segments_
+    over_generated_tokens, exactly."""
+    page = 4
+    c = PrefixCache(page, seg_bytes)
+    y = 10
+    p1 = [1] + [y] * 6          # 7-token prompt
+    r1 = [y] * 9                # 9 generated (MaxNew)
+    stream = p1 + r1
+    ingested = len(p1) + len(r1) - 1          # 15 rows
+    retain_len = align_down(min(ingested, len(stream)), page)
+    assert retain_len == 12
+    gen_from = min(len(p1), retain_len)
+    assert gen_from == 7
+    c.insert(stream, retain_len, gen_from)
+    p2 = p1 + r1 + [y]                         # 17-token follow-up
+    hit = c.lookup(p2)
+    assert hit is not None
+    _, hlen, gen_tokens = hit
+    assert hlen == 12, f"prefix_tokens_saved must be 12, got {hlen}"
+    assert gen_tokens == 5, f"gen_tokens_saved must be 5, got {gen_tokens}"
+
+
+def main():
+    for seed in range(6):
+        fuzz_tree(seed)
+    print("1. radix tree (insert/split/lookup/evict + gen_from) == "
+          "naive model over 6 fuzz seeds ✓")
+    for seed in range(4):
+        fuzz_retention_rule(seed)
+    print("2. finish-time retention rule (ingested rows, alignment, "
+          "gen_from clamp, follow-up credit) exact under fuzz ✓")
+    anchor_integration_case()
+    print("3. serving_integration.rs multi-turn anchor: retain 12 rows, "
+          "gen_from 7, follow-up saves 12 (5 generated-origin) ✓")
+    print("all workload-radix cross-checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
