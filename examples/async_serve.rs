@@ -1,0 +1,174 @@
+//! Async serving front-end demo: one worker thread owns the engine,
+//! eight concurrent client threads stream completions through cloned
+//! `ServerHandle`s, and one extra client cancels its request
+//! mid-generation. The engine runs SLO-aware chunked prefill
+//! (`prefill_budget`), and every streamed completion is asserted
+//! byte-identical to a synchronous engine WITHOUT chunking — greedy and
+//! seeded-stochastic sampling alike — over a heterogeneous child
+//! architecture with per-layer variable KV-head counts (paper §6).
+//! Hermetic: pure-Rust reference backend, in-memory manifest.
+//!
+//!   cargo run --release --example async_serve
+
+#[cfg(not(feature = "pjrt"))]
+fn main() -> anyhow::Result<()> {
+    demo::run()
+}
+
+#[cfg(feature = "pjrt")]
+fn main() {
+    println!("async_serve needs the threaded front-end of the default backend build (the PJRT engine is not Send); rebuild without --features pjrt");
+}
+
+#[cfg(not(feature = "pjrt"))]
+mod demo {
+    use anyhow::Result;
+
+    use puzzle::arch::{Arch, AttnChoice, FfnChoice};
+    use puzzle::bld;
+    use puzzle::config::TinyManifest;
+    use puzzle::data::{corpus::sample_sequence, CorpusMix, World};
+    use puzzle::runtime::{share, RefBackend};
+    use puzzle::server::{AsyncServer, StreamItem};
+    use puzzle::serving::{EngineConfig, FinishReason, GenRequest, SamplingParams};
+    use puzzle::util::Rng;
+    use puzzle::weights::store::init_parent;
+
+    pub fn run() -> Result<()> {
+        let be = share(RefBackend::new(TinyManifest::synthetic()));
+        let cfg = be.man().cfg.clone();
+
+        // a child with per-layer variable KV-head counts — the serving
+        // case the paper's §6 contributes
+        let mut rng = Rng::new(0);
+        let mut store = init_parent(be.man(), &mut rng);
+        let mut arch = Arch::parent(cfg.n_layers);
+        arch.layers[0].0 = AttnChoice::Gqa { divisor: 2 };
+        arch.layers[1].0 = AttnChoice::Gqa { divisor: 4 };
+        arch.layers[2] = (AttnChoice::Linear, FfnChoice::Ratio(3));
+        for l in 0..cfg.n_layers {
+            for (kind, variant) in
+                [("attn", arch.layers[l].0.name()), ("ffn", arch.layers[l].1.name())]
+            {
+                if variant != "noop" && variant != "gqa_r1" && variant != "r100" {
+                    let job = bld::Job { layer: l, kind, variant };
+                    bld::init_job_weights(be.man(), &mut store, &job, None)?;
+                }
+            }
+        }
+
+        // one deterministic request set, replayed through both engines;
+        // mixed sampling so byte identity covers greedy AND seeded
+        // stochastic streams
+        let world = World::new(3, cfg.v as u32);
+        let mix = CorpusMix::distillation_mix();
+        let mut rng = Rng::new(9);
+        let n_requests = 16usize;
+        let clients = 8usize;
+        let reqs: Vec<GenRequest> = (0..n_requests)
+            .map(|i| {
+                let plen = rng.range(4, cfg.s_prefill.min(32));
+                let prompt = sample_sequence(&world, &mix, plen, &mut rng);
+                let sampling = if i % 2 == 0 {
+                    SamplingParams::greedy()
+                } else {
+                    SamplingParams::temperature(0.8).with_seed(100 + i as u64)
+                };
+                GenRequest::new(prompt, 8 + (i % 3) * 8).with_sampling(sampling)
+            })
+            .collect();
+
+        // oracle: the same requests through a synchronous engine with NO
+        // prefill budget (whole-prompt inline prefills)
+        let mut sync_eng =
+            EngineConfig::new().kv_budget_bytes(32 << 20).build(be.clone(), &store, &arch)?;
+        let mut ids = Vec::new();
+        for r in &reqs {
+            ids.push(sync_eng.submit(r.clone())?);
+        }
+        let by_id: std::collections::HashMap<u64, Vec<u32>> =
+            sync_eng.run_to_completion()?.into_iter().map(|r| (r.id, r.tokens)).collect();
+        let oracle: Vec<Vec<u32>> = ids.iter().map(|id| by_id[id].clone()).collect();
+
+        // async: chunked prefill (12 tokens/step), eight client threads
+        let eng = EngineConfig::new()
+            .kv_budget_bytes(32 << 20)
+            .prefill_budget(12)
+            .build(be.clone(), &store, &arch)?;
+        let server = AsyncServer::spawn(eng);
+        let mut got: Vec<(usize, Vec<u32>)> = Vec::new();
+        let mut cancelled_tokens = 0usize;
+        std::thread::scope(|s| -> Result<()> {
+            let mut joins = Vec::new();
+            for ci in 0..clients {
+                let h = server.handle();
+                let lot: Vec<(usize, GenRequest)> = reqs
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| i % clients == ci)
+                    .map(|(i, r)| (i, r.clone()))
+                    .collect();
+                joins.push(s.spawn(move || -> Result<Vec<(usize, Vec<u32>)>> {
+                    let mut out = Vec::new();
+                    for (i, req) in lot {
+                        let stream = h.submit(req)?;
+                        let (tokens, finish) = stream.collect();
+                        anyhow::ensure!(finish.is_some(), "server died mid-request {i}");
+                        out.push((i, tokens));
+                    }
+                    Ok(out)
+                }));
+            }
+            // a ninth client: cancel mid-generation, concurrently with the
+            // byte-identity fleet — per-lane isolation means the other
+            // streams must not change
+            let hc = server.handle();
+            let canceller = s.spawn(move || -> Result<usize> {
+                let prompt = vec![3u32; 12];
+                let stream = hc.submit(GenRequest::new(prompt, 64))?;
+                let first = stream.recv();
+                anyhow::ensure!(
+                    matches!(first, Some(StreamItem::Token(_))),
+                    "expected a first token before cancelling, got {first:?}"
+                );
+                stream.cancel();
+                let (tokens, finish) = stream.collect();
+                anyhow::ensure!(
+                    finish == Some(FinishReason::Cancelled),
+                    "cancelled stream must finish with Cancelled, got {finish:?}"
+                );
+                Ok(1 + tokens.len())
+            });
+            for j in joins {
+                got.extend(j.join().expect("client thread panicked")?);
+            }
+            cancelled_tokens = canceller.join().expect("cancel thread panicked")?;
+            Ok(())
+        })?;
+        got.sort_by_key(|(i, _)| *i);
+        for (i, tokens) in &got {
+            assert_eq!(
+                tokens, &oracle[*i],
+                "async chunked-prefill stream {i} must be byte-identical to the sync engine"
+            );
+        }
+        println!(
+            "served {n_requests} requests from {clients} concurrent clients — all byte-identical to the unchunked sync engine ✓"
+        );
+        println!("cancelled client got {cancelled_tokens} tokens, then Finished(Cancelled) ✓");
+
+        // the worker is idle now: no live sequences, no queued work, and
+        // every KV page handed back (the cancel freed its pages too)
+        let stats = server.handle().stats()?;
+        assert_eq!((stats.active, stats.queued), (0, 0), "server must drain to idle");
+        assert_eq!(stats.kv_allocated_bytes, 0, "all KV pages must be back in the pool");
+        let eng = server.shutdown();
+        assert!(
+            eng.metrics.prefill_chunk_passes > 0,
+            "budgeted prefill must have run chunk passes"
+        );
+        println!("server stats at idle: {stats:?}");
+        println!("{}", eng.metrics.summary());
+        Ok(())
+    }
+}

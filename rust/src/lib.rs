@@ -42,6 +42,10 @@ pub mod perf;
 pub mod pipeline;
 pub mod runtime;
 pub mod scoring;
+// The async front-end needs `Engine: Send`, which only the default
+// (owned-`Arc`) backend build provides — the PJRT handle is `Rc`.
+#[cfg(not(feature = "pjrt"))]
+pub mod server;
 pub mod specdec;
 pub mod tensor;
 pub mod train;

@@ -5,10 +5,17 @@
 //!               MIP -> GKD -> eval) and print the summary
 //!   exp `<name>` regenerate a paper table/figure (table1..table17, fig4..fig8, all)
 //!   serve       serving-engine demo over the chosen child; --speculate
-//!               serves the parent with the child as speculative drafter
+//!               serves the parent with the child as speculative drafter;
+//!               --async serves through the threaded front-end (many
+//!               client threads, one engine worker), optionally with
+//!               --prefill-budget N chunked prefill
 //!   bench-workload  replay a seeded workload trace against plain,
 //!               prefix-cache, and speculative configs; score goodput
 //!               under (TTFT, ITL) SLOs -> BENCH_workloads.json
+//!   bench-async replay one trace in wall-clock time through the async
+//!               server, chunked vs unchunked prefill, checking byte
+//!               identity against the sync replay ->
+//!               BENCH_serving_async.json
 //!   measure     print measured per-block costs on this machine
 //!   info        backend/search-space summary
 //!
@@ -31,7 +38,7 @@ use puzzle::perf::{CostTable, Scenario};
 use puzzle::pipeline::{Pipeline, StageCfg};
 use puzzle::runtime::{share, RefBackend, SharedBackend};
 use puzzle::scoring::Metric;
-use puzzle::serving::{EngineConfig, GenRequest, SamplingParams, SchedulerKind, StreamEvent};
+use puzzle::serving::{Engine, EngineConfig, GenRequest, SamplingParams, SchedulerKind, StreamEvent};
 use puzzle::specdec::{SpecBatch, SpecConfig, SpecRequest};
 use puzzle::train::LossSpec;
 use puzzle::util::{Args, Rng};
@@ -149,11 +156,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let scheduler = args.str("scheduler", "fifo");
     let scheduler = SchedulerKind::parse(&scheduler)
         .ok_or_else(|| anyhow!("unknown scheduler '{scheduler}' (fifo|priority|spf|prefix)"))?;
-    let mut eng = EngineConfig::new()
+    let mut ecfg = EngineConfig::new()
         .kv_budget_bytes(64 << 20)
         .scheduler(scheduler)
-        .prefix_cache(args.flag("prefix-cache"), args.usize("retain-budget", 8 << 20))
-        .build(be.clone(), &library, &sol.arch)?;
+        .prefix_cache(args.flag("prefix-cache"), args.usize("retain-budget", 8 << 20));
+    if let Some(b) = args.get("prefill-budget") {
+        let b: usize =
+            b.parse().map_err(|_| anyhow!("--prefill-budget wants a token count, got '{b}'"))?;
+        ecfg = ecfg.prefill_budget(b);
+    }
+    let mut eng = ecfg.build(be.clone(), &library, &sol.arch)?;
+    if args.flag("async") {
+        return cmd_serve_async(args, &be, &pipe, eng);
+    }
     let n_req = args.usize("requests", 16);
     let temperature = args.f64("temperature", 0.0) as f32;
     let seed = args.u64("seed", 42);
@@ -207,6 +222,69 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
     }
     Ok(())
+}
+
+/// `serve --async`: the same request mix as the synchronous path, but
+/// submitted from `--clients` concurrent threads through the threaded
+/// front-end (`server::AsyncServer`) — each client holds a cloned
+/// `ServerHandle`, streams its completions token by token, and the
+/// worker thread owns the engine. With `--prefill-budget N` the engine
+/// ingests prompts N tokens per step interleaved with live decode.
+#[cfg(not(feature = "pjrt"))]
+fn cmd_serve_async(args: &Args, be: &SharedBackend, pipe: &Pipeline, eng: Engine) -> Result<()> {
+    use puzzle::server::AsyncServer;
+    let n_req = args.usize("requests", 16);
+    let clients = args.usize("clients", 8).max(1);
+    let temperature = args.f64("temperature", 0.0) as f32;
+    let seed = args.u64("seed", 42);
+    let max_new = args.usize("max-new", 24);
+    let mut rng = Rng::new(1);
+    let c = &be.man().cfg;
+    // deterministic prompt set (same generator as the sync path), dealt
+    // round-robin to the client threads
+    let mut lots: Vec<Vec<(usize, GenRequest)>> = vec![Vec::new(); clients];
+    for i in 0..n_req {
+        let plen = rng.range(4, c.s_prefill.min(32));
+        let prompt = sample_sequence(&pipe.world, &pipe.mix, plen, &mut rng);
+        let sampling = if temperature > 0.0 {
+            SamplingParams::temperature(temperature).with_seed(seed ^ i as u64)
+        } else {
+            SamplingParams::greedy()
+        };
+        lots[i % clients].push((i, GenRequest::new(prompt, max_new).with_sampling(sampling)));
+    }
+    let server = AsyncServer::spawn(eng);
+    std::thread::scope(|s| {
+        for (ci, lot) in lots.into_iter().enumerate() {
+            let h = server.handle();
+            s.spawn(move || {
+                for (i, req) in lot {
+                    match h.submit(req) {
+                        Ok(stream) => {
+                            let (tokens, finish) = stream.collect();
+                            println!(
+                                "  client {ci} req {i}: {} tokens ({})",
+                                tokens.len(),
+                                finish.map(|f| f.as_str()).unwrap_or("server gone")
+                            );
+                        }
+                        Err(e) => println!("  client {ci} req {i}: shed ({e})"),
+                    }
+                }
+            });
+        }
+    });
+    let eng = server.shutdown();
+    println!("async-served {n_req} requests over {clients} client threads | {}", eng.metrics.summary());
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn cmd_serve_async(_args: &Args, _be: &SharedBackend, _pipe: &Pipeline, _eng: Engine) -> Result<()> {
+    Err(anyhow!(
+        "serve --async needs the threaded front-end, which the pjrt build cannot provide \
+         (the PJRT engine is not Send); rebuild without --features pjrt"
+    ))
 }
 
 /// `serve --speculate`: the GKD-uptrained Puzzle child drafts for the
@@ -401,6 +479,117 @@ fn cmd_bench_workload(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `bench-async`: replay one seeded trace in *wall-clock* time through
+/// the threaded async server, twice — unchunked (inline prefills) and
+/// chunked (`--prefill-budget` tokens per step) — plus once through the
+/// synchronous virtual-tick driver as the byte-identity oracle. Emits
+/// `BENCH_serving_async.json`; the CI gate requires `byte_identical` and
+/// a chunked p95 TTFT below the unchunked one.
+#[cfg(not(feature = "pjrt"))]
+fn cmd_bench_async(args: &Args) -> Result<()> {
+    use std::collections::BTreeMap;
+    use std::time::Duration;
+
+    use puzzle::server::AsyncServer;
+    use puzzle::serving::EngineMetrics;
+    use puzzle::util::percentile;
+    use puzzle::workload::{replay_wall, wall_report_json, WallRun};
+
+    let be = open_backend(args)?;
+    let cfg = be.man().cfg.clone();
+    let seed = args.u64("seed", 7);
+    let mix_s = args.str("trace", "mixed");
+    let mix = MixKind::parse(&mix_s).ok_or_else(|| {
+        anyhow!("unknown trace mix '{mix_s}' (chat|longcontext|shared|spec|multiturn|mixed)")
+    })?;
+    let mut spec = TraceSpec::small(mix, seed);
+    spec.conversations = args.usize("conversations", 10);
+    let trace = spec.generate(cfg.v as u32, cfg.s_prefill, cfg.s_max);
+    let tick = Duration::from_secs_f64(args.f64("tick-ms", 5.0) / 1e3);
+    let budget = args.usize("prefill-budget", 16);
+    println!(
+        "trace '{}' seed {}: {} conversations, {} requests | tick {:.1} ms | prefill budget {budget}",
+        trace.name,
+        trace.seed,
+        trace.convs.len(),
+        trace.requests(),
+        tick.as_secs_f64() * 1e3
+    );
+
+    let mut rng = Rng::new(0);
+    let store = init_parent(be.man(), &mut rng);
+    let arch = Arch::parent(cfg.n_layers);
+    // a queue deep enough that shedding never depends on wall timing —
+    // shed-vs-served divergence would fail the byte-identity check
+    let engine_cfg = || {
+        EngineConfig::new()
+            .kv_budget_bytes(16 << 20)
+            .page_len(args.usize("page-len", 4))
+            .max_queue(1024)
+    };
+
+    // oracle: the deterministic virtual-tick replay, no budget
+    let oracle = {
+        let mut eng = engine_cfg().build(be.clone(), &store, &arch)?;
+        replay(&trace, &mut Server::Engine(&mut eng), "sync_oracle")?
+    };
+
+    let run_wall = |label: &str, budget: Option<usize>| -> Result<(WallRun, EngineMetrics)> {
+        let mut ec = engine_cfg();
+        if let Some(b) = budget {
+            ec = ec.prefill_budget(b);
+        }
+        let eng = ec.build(be.clone(), &store, &arch)?;
+        let server = AsyncServer::spawn(eng);
+        let handle = server.handle();
+        let run = replay_wall(&trace, &handle, tick, label);
+        drop(handle);
+        let eng = server.shutdown();
+        Ok((run, eng.metrics.clone()))
+    };
+    let (unchunked, m_un) = run_wall("unchunked", None)?;
+    let (chunked, m_ch) = run_wall("chunked", Some(budget))?;
+
+    // byte identity: every (conv, turn)'s generated stream must match the
+    // sync oracle in BOTH wall runs, chunked and not
+    let oracle_map: BTreeMap<(usize, usize), Vec<u32>> =
+        oracle.records.iter().map(|r| ((r.conv, r.turn), r.gen.clone())).collect();
+    let wall_map = |run: &WallRun| -> BTreeMap<(usize, usize), Vec<u32>> {
+        run.records.iter().map(|r| ((r.conv, r.turn), r.gen.clone())).collect()
+    };
+    let byte_identical = wall_map(&unchunked) == oracle_map && wall_map(&chunked) == oracle_map;
+
+    for (run, m) in [(&unchunked, &m_un), (&chunked, &m_ch)] {
+        let done = run.records.iter().filter(|r| r.finish.is_some()).count();
+        let ttfts: Vec<f64> =
+            run.records.iter().filter_map(|r| r.ttft_secs).map(|t| t * 1e3).collect();
+        println!(
+            "[{}] completed {done}/{} | ttft p50 {:.1} ms p95 {:.1} ms | wall {:.2} s | chunk passes {} ({} tok)",
+            run.config,
+            run.intended,
+            percentile(&ttfts, 50.0),
+            percentile(&ttfts, 95.0),
+            run.wall_secs,
+            m.prefill_chunk_passes,
+            m.prefill_chunk_tokens
+        );
+    }
+    println!("byte identical to sync oracle: {byte_identical}");
+    let j =
+        wall_report_json(&trace, tick, byte_identical, &[(&unchunked, &m_un), (&chunked, &m_ch)]);
+    std::fs::write("BENCH_serving_async.json", j.to_pretty())?;
+    println!("wrote BENCH_serving_async.json");
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn cmd_bench_async(_args: &Args) -> Result<()> {
+    Err(anyhow!(
+        "bench-async needs the threaded front-end, which the pjrt build cannot provide \
+         (the PJRT engine is not Send); rebuild without --features pjrt"
+    ))
+}
+
 fn cmd_measure(args: &Args) -> Result<()> {
     let be = open_backend(args)?;
     let c = &be.man().cfg;
@@ -446,11 +635,12 @@ fn main() -> Result<()> {
         Some("exp") => cmd_exp(&args),
         Some("serve") => cmd_serve(&args),
         Some("bench-workload") => cmd_bench_workload(&args),
+        Some("bench-async") => cmd_bench_async(&args),
         Some("measure") => cmd_measure(&args),
         Some("info") => cmd_info(&args),
         _ => {
             eprintln!(
-                "usage: puzzle <pipeline|exp|serve|bench-workload|measure|info> [--backend ref|pjrt] [--config tiny|small] [--run-dir DIR] [--scale F] [--speedup X]\n       serve also takes: [--scheduler fifo|priority|spf|prefix] [--temperature T] [--stream] [--requests N] [--max-new N]\n                         [--prefix-cache] [--retain-budget BYTES]\n                         [--speculate] [--draft-k N (pins; omit to auto-tune)] [--draft-arch arch_tag.json]\n       bench-workload takes: [--trace chat|longcontext|shared|spec|multiturn|mixed] [--seed N] [--conversations N]\n                             [--page-len N] [--draft-k N] [--retain-budget BYTES]"
+                "usage: puzzle <pipeline|exp|serve|bench-workload|bench-async|measure|info> [--backend ref|pjrt] [--config tiny|small] [--run-dir DIR] [--scale F] [--speedup X]\n       serve also takes: [--scheduler fifo|priority|spf|prefix] [--temperature T] [--stream] [--requests N] [--max-new N]\n                         [--prefix-cache] [--retain-budget BYTES] [--prefill-budget TOKENS]\n                         [--async] [--clients N]\n                         [--speculate] [--draft-k N (pins; omit to auto-tune)] [--draft-arch arch_tag.json]\n       bench-workload takes: [--trace chat|longcontext|shared|spec|multiturn|mixed] [--seed N] [--conversations N]\n                             [--page-len N] [--draft-k N] [--retain-budget BYTES]\n       bench-async takes: [--trace ...] [--seed N] [--conversations N] [--tick-ms MS] [--prefill-budget TOKENS] [--page-len N]"
             );
             Ok(())
         }

@@ -1,0 +1,154 @@
+//! Client-side types of the async front-end: the cloneable
+//! [`ServerHandle`], the per-request [`TokenStream`], and the control
+//! messages they exchange with the worker thread.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use anyhow::{anyhow, Result};
+
+use crate::serving::{EngineMetrics, FinishReason, GenRequest};
+
+/// One item of a request's token stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StreamItem {
+    /// One generated token (teacher-forced prompt tokens are not echoed).
+    Token(u32),
+    /// Terminal state — sent exactly once, then the stream ends.
+    Finished(FinishReason),
+}
+
+/// Point-in-time occupancy counters of the serving engine, fetched over
+/// the control channel (`ServerHandle::stats`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServerStats {
+    /// Sequences currently holding a decode slot.
+    pub active: usize,
+    /// Requests waiting in the admission queue.
+    pub queued: usize,
+    /// Bytes of the paged KV pool currently allocated.
+    pub kv_allocated_bytes: usize,
+    /// The share of allocated bytes held by retained prefix segments.
+    pub prefix_retained_bytes: usize,
+    /// Retained prefix segments currently held by the cache.
+    pub prefix_segments: usize,
+}
+
+/// Control messages from handles to the worker (crate-internal).
+pub(super) enum Ctl {
+    /// Submit a request; the reply carries the id and the stream
+    /// receiver, or the engine's rejection message.
+    Submit {
+        /// The request to enqueue.
+        req: GenRequest,
+        /// One-shot reply channel for this submission.
+        reply: Sender<SubmitReply>,
+    },
+    /// Cancel a queued or running request (fire-and-forget).
+    Cancel(u64),
+    /// Fetch point-in-time occupancy counters.
+    Stats(Sender<ServerStats>),
+    /// Fetch a snapshot of the engine's accumulated metrics.
+    Metrics(Sender<EngineMetrics>),
+    /// Stop the worker and hand the engine back to `shutdown`.
+    Shutdown,
+}
+
+pub(super) type SubmitReply = std::result::Result<(u64, Receiver<StreamItem>), String>;
+
+/// A client's connection to the [`super::AsyncServer`] worker. Clone one
+/// per client thread; all clones feed the same engine.
+#[derive(Clone)]
+pub struct ServerHandle {
+    ctl: Sender<Ctl>,
+}
+
+impl ServerHandle {
+    pub(super) fn new(ctl: Sender<Ctl>) -> ServerHandle {
+        ServerHandle { ctl }
+    }
+
+    /// Submit a request and get its token stream. Blocks only for the
+    /// round-trip to the worker (one queue insertion), never for
+    /// generation. Engine-side rejections — queue full (shedding),
+    /// over-horizon prompts, zero budgets — come back as `Err` with the
+    /// engine's message; the request then holds no server state.
+    pub fn submit(&self, req: GenRequest) -> Result<TokenStream> {
+        let (reply, rx) = channel();
+        self.ctl
+            .send(Ctl::Submit { req, reply })
+            .map_err(|_| anyhow!("server is shut down"))?;
+        match rx.recv().map_err(|_| anyhow!("server dropped the submit reply"))? {
+            Ok((id, stream)) => Ok(TokenStream { id, rx: stream, ctl: self.ctl.clone() }),
+            Err(cause) => Err(anyhow!(cause)),
+        }
+    }
+
+    /// Cancel a request by id (fire-and-forget; unknown ids are ignored).
+    /// Its stream still receives `Finished(Cancelled)`.
+    pub fn cancel(&self, id: u64) {
+        let _ = self.ctl.send(Ctl::Cancel(id));
+    }
+
+    /// Point-in-time occupancy counters (blocks for one round-trip).
+    pub fn stats(&self) -> Result<ServerStats> {
+        let (reply, rx) = channel();
+        self.ctl.send(Ctl::Stats(reply)).map_err(|_| anyhow!("server is shut down"))?;
+        rx.recv().map_err(|_| anyhow!("server dropped the stats reply"))
+    }
+
+    /// Snapshot of the engine's accumulated metrics (blocks for one
+    /// round-trip).
+    pub fn metrics(&self) -> Result<EngineMetrics> {
+        let (reply, rx) = channel();
+        self.ctl.send(Ctl::Metrics(reply)).map_err(|_| anyhow!("server is shut down"))?;
+        rx.recv().map_err(|_| anyhow!("server dropped the metrics reply"))
+    }
+}
+
+/// The receiving end of one request's generation: tokens as they are
+/// sampled, then exactly one [`StreamItem::Finished`]. Dropping the
+/// stream mid-generation auto-cancels the request on the worker's next
+/// token send.
+pub struct TokenStream {
+    id: u64,
+    rx: Receiver<StreamItem>,
+    ctl: Sender<Ctl>,
+}
+
+impl TokenStream {
+    /// The engine-assigned request id.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Block for the next item; `None` once the stream is finished (or
+    /// the server died mid-request).
+    pub fn recv(&self) -> Option<StreamItem> {
+        self.rx.recv().ok()
+    }
+
+    /// Non-blocking poll for the next item.
+    pub fn try_recv(&self) -> Option<StreamItem> {
+        self.rx.try_recv().ok()
+    }
+
+    /// Cancel this request. The stream still receives its
+    /// `Finished(Cancelled)` terminal item (any tokens generated before
+    /// the cancel lands are delivered first).
+    pub fn cancel(&self) {
+        let _ = self.ctl.send(Ctl::Cancel(self.id));
+    }
+
+    /// Drain the stream to completion: all generated tokens plus the
+    /// finish reason (`None` if the server died before finishing).
+    pub fn collect(self) -> (Vec<u32>, Option<FinishReason>) {
+        let mut tokens = Vec::new();
+        while let Some(item) = self.recv() {
+            match item {
+                StreamItem::Token(t) => tokens.push(t),
+                StreamItem::Finished(reason) => return (tokens, Some(reason)),
+            }
+        }
+        (tokens, None)
+    }
+}

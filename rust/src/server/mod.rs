@@ -1,0 +1,183 @@
+//! Async serving front-end: a worker thread owns the `Engine`, many
+//! concurrent clients stream tokens through channel-based handles.
+//!
+//! The engine is single-threaded by design — one `step()` loop drives
+//! admission, budgeted prefill chunks, and the batched decode. What this
+//! module adds is *concurrency at the edges*: `AsyncServer::spawn` moves
+//! the engine (it is `Send` on the default backend build) onto a
+//! dedicated worker thread, and any number of `ServerHandle` clones —
+//! one per client thread — talk to it over an mpsc control channel.
+//!
+//! Channel grammar (DESIGN.md §10):
+//!
+//! * `submit(req)` sends `Ctl::Submit` carrying a one-shot reply channel;
+//!   the worker answers with either a fresh per-request stream receiver
+//!   (wrapped as a [`TokenStream`]) or the engine's rejection message —
+//!   queue-full shedding surfaces as an `Err` on the *submitting* client
+//!   only, never as a worker failure.
+//! * Each generated token is forwarded to its request's stream as
+//!   [`StreamItem::Token`]; the terminal [`StreamItem::Finished`] is sent
+//!   exactly once, after which the worker drops the sender and the
+//!   stream's iteration ends.
+//! * `cancel(id)` (from the handle or the stream) is fire-and-forget; the
+//!   cancelled stream still receives `Finished(Cancelled)` — ordering
+//!   between an in-flight token and the cancel is the engine's, not the
+//!   channel's.
+//! * Dropping a [`TokenStream`] mid-generation is detected on the next
+//!   token send and auto-cancels the request, so an abandoned client
+//!   cannot pin a decode lane or its KV pages.
+//! * `shutdown()` returns the engine itself, so tests and benches can
+//!   inspect `Engine::metrics` after the last stream closes.
+//!
+//! The worker parks on the control channel whenever the engine is idle
+//! (no busy-waiting between requests) and otherwise drains pending
+//! control messages between `step()` calls, so submissions and
+//! cancellations land with at most one step of latency.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::thread::JoinHandle;
+
+use crate::serving::{Engine, StreamEvent};
+
+mod handle;
+
+pub use handle::{ServerHandle, ServerStats, StreamItem, TokenStream};
+use handle::Ctl;
+
+/// The worker-thread front-end over an [`Engine`] (see the module docs
+/// for the channel grammar). Spawn it with an engine, hand out
+/// [`ServerHandle`] clones to client threads, and call
+/// [`AsyncServer::shutdown`] to get the engine back.
+pub struct AsyncServer {
+    ctl: Sender<Ctl>,
+    join: JoinHandle<Engine>,
+}
+
+impl AsyncServer {
+    /// Move `engine` onto a dedicated worker thread and start serving.
+    pub fn spawn(engine: Engine) -> AsyncServer {
+        let (ctl, rx) = channel();
+        let join = std::thread::spawn(move || worker(engine, rx));
+        AsyncServer { ctl, join }
+    }
+
+    /// A new client handle (cheap to clone, safe to move across threads).
+    pub fn handle(&self) -> ServerHandle {
+        ServerHandle::new(self.ctl.clone())
+    }
+
+    /// Stop the worker and return the engine (with its accumulated
+    /// metrics). In-flight requests are torn down: their streams end
+    /// without a terminal item.
+    pub fn shutdown(self) -> Engine {
+        let _ = self.ctl.send(Ctl::Shutdown);
+        self.join.join().expect("server worker panicked")
+    }
+}
+
+/// The worker loop: park while idle, otherwise interleave control
+/// messages with engine steps and fan events out to the per-request
+/// streams.
+fn worker(mut engine: Engine, rx: Receiver<Ctl>) -> Engine {
+    let mut streams: HashMap<u64, Sender<StreamItem>> = HashMap::new();
+    let mut disconnected = false;
+    'serve: loop {
+        let mut pending: Vec<Ctl> = Vec::new();
+        if engine.is_idle() {
+            if disconnected {
+                // no work and no possible source of work: every handle
+                // (and every stream's embedded handle) is gone
+                break;
+            }
+            match rx.recv() {
+                Ok(msg) => pending.push(msg),
+                Err(_) => break,
+            }
+        }
+        loop {
+            match rx.try_recv() {
+                Ok(msg) => pending.push(msg),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    disconnected = true;
+                    break;
+                }
+            }
+        }
+        let dirty = !pending.is_empty();
+        for msg in pending {
+            match msg {
+                Ctl::Submit { req, reply } => match engine.submit(req) {
+                    Ok(id) => {
+                        let (tx, stream_rx) = channel();
+                        streams.insert(id, tx);
+                        let _ = reply.send(Ok((id, stream_rx)));
+                    }
+                    // graceful shedding: the rejection (queue full,
+                    // over-horizon, ...) goes back to the one client
+                    Err(e) => {
+                        let _ = reply.send(Err(e.to_string()));
+                    }
+                },
+                Ctl::Cancel(id) => {
+                    engine.cancel(id);
+                }
+                Ctl::Stats(reply) => {
+                    let _ = reply.send(ServerStats {
+                        active: engine.active(),
+                        queued: engine.queue_len(),
+                        kv_allocated_bytes: engine.kv_allocated_bytes(),
+                        prefix_retained_bytes: engine.prefix_retained_bytes(),
+                        prefix_segments: engine.prefix_segments(),
+                    });
+                }
+                Ctl::Metrics(reply) => {
+                    let _ = reply.send(engine.metrics.clone());
+                }
+                Ctl::Shutdown => break 'serve,
+            }
+        }
+        if !engine.is_idle() || dirty {
+            // a step on an idle engine is still needed after control
+            // traffic: cancellations of queued requests produce their
+            // terminal events without any slot running
+            match engine.step() {
+                Ok(events) => dispatch(&mut engine, &mut streams, events),
+                Err(_) => break, // backend failure: streams end item-less
+            }
+            // responses were already streamed event-by-event; drop the
+            // accumulated duplicates so a long-lived server stays flat
+            engine.take_finished();
+        }
+    }
+    engine
+}
+
+/// Forward one step's events to the per-request streams. A send failure
+/// means the client dropped its `TokenStream`: the request is cancelled
+/// so it stops burning lane time and KV pages (its `Finished(Cancelled)`
+/// event then finds no stream and is dropped on the floor).
+fn dispatch(engine: &mut Engine, streams: &mut HashMap<u64, Sender<StreamItem>>, events: Vec<StreamEvent>) {
+    for ev in events {
+        match ev {
+            StreamEvent::Token { id, tok } => {
+                let dead = match streams.get(&id) {
+                    Some(tx) => tx.send(StreamItem::Token(tok)).is_err(),
+                    None => false,
+                };
+                if dead {
+                    streams.remove(&id);
+                    engine.cancel(id);
+                }
+            }
+            StreamEvent::Finished { id, reason } => {
+                if let Some(tx) = streams.remove(&id) {
+                    let _ = tx.send(StreamItem::Finished(reason));
+                }
+            }
+            // rejections never got a stream: the submit reply carried them
+            StreamEvent::Rejected { .. } => {}
+        }
+    }
+}

@@ -26,6 +26,18 @@
 //! whole cache horizon, or a horizon that exceeds the *total* KV budget —
 //! are rejected at `submit`.
 //!
+//! With `EngineConfig::prefill_budget` set, admission stops running
+//! prefill to completion: an admitted prompt only books its KV pages and
+//! queues ALL its tokens for ingestion, and every `step()` spends at most
+//! that many prompt tokens in one teacher-forced multi-token pass (the
+//! same fused machinery the speculative verify uses) before the batched
+//! decode step runs. One long prompt can therefore never stall a live
+//! lane's next token by more than a budget's worth of work — the
+//! SLO-aware chunked prefill of DESIGN.md §10 — while outputs stay
+//! byte-identical to the synchronous path, because decode-lowered rows
+//! are bitwise equal to prefill rows and each request's sampling rng
+//! draws the same stream regardless of how its prompt was chunked.
+//!
 //! With `EngineConfig::prefix_cache` on, cold prefills retain their
 //! prompt's page-aligned K/V prefix in a radix tree
 //! (`serving::prefixcache`); later prompts sharing that prefix import the
@@ -194,6 +206,13 @@ pub struct EngineConfig {
     /// segments are evicted past it (and under KV-pool pressure, so
     /// retention never starves admission).
     pub prefix_retain_budget: usize,
+    /// SLO-aware chunked prefill: when set, each `step()` ingests at most
+    /// this many queued prompt tokens in one teacher-forced pass before
+    /// the batched decode step, instead of prefilling an admitted prompt
+    /// to completion inside `admit`. `None` (the default) keeps the
+    /// synchronous admit-then-prefill behavior. Outputs are byte-identical
+    /// either way (see the module docs).
+    pub prefill_budget: Option<usize>,
 }
 
 impl Default for EngineConfig {
@@ -206,6 +225,7 @@ impl Default for EngineConfig {
             fused_verify: true,
             prefix_cache: false,
             prefix_retain_budget: 8 << 20,
+            prefill_budget: None,
         }
     }
 }
@@ -257,6 +277,13 @@ impl EngineConfig {
         self
     }
 
+    /// Set the per-step prompt-token budget for SLO-aware chunked prefill
+    /// (see the `prefill_budget` field docs).
+    pub fn prefill_budget(mut self, tokens: usize) -> EngineConfig {
+        self.prefill_budget = Some(tokens);
+        self
+    }
+
     /// Assemble the model and build a long-lived engine that owns `be`.
     pub fn build(self, be: SharedBackend, store: &Store, arch: &Arch) -> Result<Engine> {
         Engine::with_config(be, store, arch, self)
@@ -267,6 +294,9 @@ struct Queued {
     id: u64,
     req: GenRequest,
     t_submit: Instant,
+    /// `Engine::steps` at submit time — schedulers see the difference as
+    /// the aging term that makes length/affinity policies starvation-free
+    submit_step: usize,
 }
 
 struct Slot {
@@ -310,6 +340,20 @@ pub struct SpecFeed<'a> {
     pub collect_from: usize,
 }
 
+/// One lane's contribution to the internal teacher-forced multi-token
+/// forward (`feeds_forward`), shared by the speculative verify path and
+/// the budgeted prefill-chunk phase. Unlike the public `SpecFeed` it is
+/// lane-addressed and carries its own start position, so it can feed
+/// batched slots mid-chunked-prefill as well as speculative sequences.
+struct LaneFeed<'a> {
+    lane: usize,
+    /// committed cache position the first token writes to
+    start: usize,
+    tokens: &'a [u32],
+    /// logits rows wanted from this token index on (`tokens.len()` = none)
+    collect_from: usize,
+}
+
 /// Per-layer decode cache (gqa layers only).
 struct LayerCache {
     k: Value,
@@ -350,6 +394,8 @@ pub struct Engine {
     pub metrics: EngineMetrics,
     finished: Vec<Response>,
     next_id: u64,
+    /// completed `step()` calls — the clock behind scheduler aging
+    steps: usize,
 }
 
 impl Engine {
@@ -410,6 +456,7 @@ impl Engine {
             metrics: EngineMetrics::default(),
             finished: Vec::new(),
             next_id: 1,
+            steps: 0,
         })
     }
 
@@ -456,7 +503,7 @@ impl Engine {
         if self.queue.len() >= self.cfg.max_queue {
             return Err(self.reject(id, format!("queue full (max_queue = {})", self.cfg.max_queue)));
         }
-        self.queue.push(Queued { id, req, t_submit: Instant::now() });
+        self.queue.push(Queued { id, req, t_submit: Instant::now(), submit_step: self.steps });
         Ok(id)
     }
 
@@ -583,6 +630,7 @@ impl Engine {
                     } else {
                         0
                     },
+                    waited: self.steps.saturating_sub(q.submit_step),
                 })
                 .collect();
             let Some(qidx) = self.sched.pick(&view) else { break };
@@ -699,7 +747,7 @@ impl Engine {
     fn prefill(&mut self, slot_idx: usize, q: Queued, hit: Option<PrefixHit>) -> Result<()> {
         let mcfg = &self.be.man().cfg;
         let (s_max, sp, v) = (mcfg.s_max, mcfg.s_prefill, mcfg.v);
-        let Queued { id, req, t_submit } = q;
+        let Queued { id, req, t_submit, .. } = q;
         let horizon = req.horizon(s_max);
         if let Some(hit) = hit {
             // admit() checked can_admit_shared for this horizon, so the
@@ -728,6 +776,36 @@ impl Engine {
         }
         if self.prefix.is_some() {
             self.metrics.prefix_misses += 1;
+        }
+        if self.cfg.prefill_budget.is_some() {
+            // SLO-aware chunked prefill: admission only books the pages
+            // and queues the WHOLE prompt for budgeted ingestion — no
+            // forward runs here, so admitting a long prompt can never
+            // stall the live lanes. `prefill_chunks` (and, for whatever
+            // the budget leaves over, the teacher-forcing decode steps)
+            // ingest the tokens; sampling starts when they are consumed,
+            // exactly like the prefix-hit path above.
+            self.paged.admit(id, horizon);
+            self.metrics.prompt_tokens += req.prompt.len();
+            if req.prompt.len() > sp {
+                self.metrics.chunked_prefills += 1;
+            }
+            let mut pending: VecDeque<u32> = req.prompt.iter().copied().collect();
+            let first_pending = pending.pop_front().unwrap();
+            let rng = Rng::new(req.sampling.seed);
+            self.slots[slot_idx] = Some(Slot {
+                id,
+                req,
+                rng,
+                generated: vec![],
+                len: 0,
+                last_token: first_pending,
+                pending,
+                t_submit,
+                t_first: None,
+                t_last: None,
+            });
+            return Ok(());
         }
         let chunked = req.prompt.len() > sp;
         let (x, plen) = self.prefill_window(slot_idx, &req.prompt)?;
@@ -1130,17 +1208,103 @@ impl Engine {
         }
     }
 
+    /// The budgeted prefill-chunk phase of `step()` (no-op without
+    /// `EngineConfig::prefill_budget`): spend up to the budget in prompt
+    /// tokens teacher-forcing the pending tails of admitted slots, all in
+    /// ONE multi-token pass over the decode lanes (fused when the backend
+    /// offers it, the sequential lowering otherwise — identical K/V
+    /// either way). The budget is allocated in lane order; no page ops
+    /// are needed because admission reserved each sequence's full
+    /// horizon. No logits are collected — every fed token is a known
+    /// prompt token — so the vocab-sized head never runs here.
+    ///
+    /// The head-of-line bound this buys: a step's prompt-ingestion work
+    /// is at most `budget` tokens, so admitting an arbitrarily long
+    /// prompt delays a live lane's next token by at most one budget's
+    /// worth of extra forward work (the regression test pins this).
+    fn prefill_chunks(&mut self) -> Result<()> {
+        let Some(budget) = self.cfg.prefill_budget else { return Ok(()) };
+        let mut left = budget;
+        // plan first (owned token chunks), then run one pass, then commit
+        // slot state — a failed pass leaves every slot untouched, with
+        // pages still matching the reserved horizon
+        let mut plan: Vec<(usize, usize, Vec<u32>)> = Vec::new(); // (lane, start, chunk)
+        for lane in 0..self.slots.len() {
+            if left == 0 {
+                break;
+            }
+            let Some(slot) = &self.slots[lane] else { continue };
+            if slot.pending.is_empty() {
+                continue;
+            }
+            // the chunk re-feeds `last_token` (the next unwritten
+            // position's token) followed by the pending head; the final
+            // pending token is deliberately left to become the new
+            // `last_token`, whose row the sampling decode step writes
+            let c = left.min(slot.pending.len());
+            let mut chunk = Vec::with_capacity(c);
+            chunk.push(slot.last_token);
+            chunk.extend(slot.pending.iter().take(c - 1).copied());
+            left -= c;
+            plan.push((lane, slot.len, chunk));
+        }
+        if plan.is_empty() {
+            return Ok(());
+        }
+        let feeds: Vec<LaneFeed> = plan
+            .iter()
+            .map(|(lane, start, chunk)| LaneFeed {
+                lane: *lane,
+                start: *start,
+                tokens: chunk,
+                collect_from: chunk.len(),
+            })
+            .collect();
+        self.feeds_forward(&feeds)?;
+        let mut done: Vec<usize> = Vec::new();
+        let mut fed = 0usize;
+        for (lane, _, chunk) in &plan {
+            let slot = self.slots[*lane].as_mut().unwrap();
+            let c = chunk.len();
+            slot.len += c;
+            for _ in 0..c - 1 {
+                slot.pending.pop_front();
+            }
+            slot.last_token = slot.pending.pop_front().expect("chunk size is capped at pending");
+            fed += c;
+            if slot.pending.is_empty() {
+                done.push(*lane);
+            }
+        }
+        self.metrics.prefill_chunk_passes += 1;
+        self.metrics.prefill_chunk_tokens += fed;
+        // prompt fully ingested: offer its page-aligned prefix to the
+        // cache now (the budgeted analog of the cold path's window-time
+        // retention), so same-prefix requests already queued get hits
+        for lane in done {
+            let slot = self.slots[lane].as_ref().unwrap();
+            let (prompt, ingested) = (slot.req.prompt.clone(), slot.len);
+            let prompt_len = prompt.len();
+            self.maybe_retain(&prompt, lane, ingested, prompt_len);
+        }
+        Ok(())
+    }
+
     /// One engine iteration: admit waiting requests into free slots
-    /// (running their prefills), then run one batched decode step over the
-    /// active slots. Returns the stream events produced by this step, in
-    /// order. Wall time accrues here, so step-driven and
-    /// `run_to_completion` callers see the same throughput metrics.
+    /// (running their prefills, or just booking pages under a
+    /// `prefill_budget`), spend the prefill-chunk budget if one is
+    /// configured, then run one batched decode step over the active
+    /// slots. Returns the stream events produced by this step, in order.
+    /// Wall time accrues here, so step-driven and `run_to_completion`
+    /// callers see the same throughput metrics.
     pub fn step(&mut self) -> Result<Vec<StreamEvent>> {
         let t0 = Instant::now();
         self.admit()?;
+        self.prefill_chunks()?;
         if self.active() > 0 {
             self.decode_step()?;
         }
+        self.steps += 1;
         self.metrics.wall_secs += t0.elapsed().as_secs_f64();
         Ok(std::mem::take(&mut self.events))
     }
@@ -1345,8 +1509,7 @@ impl Engine {
     /// every fed position are grown up front and handed back exactly if
     /// the pool cannot hold them all (all-or-nothing).
     pub fn spec_extend_batch(&mut self, feeds: &[SpecFeed]) -> Result<Vec<Vec<Vec<f32>>>> {
-        let mcfg = &self.be.man().cfg;
-        let (bd, v, s_max) = (mcfg.b_decode, mcfg.v, mcfg.s_max);
+        let s_max = self.be.man().cfg.s_max;
         if feeds.is_empty() {
             return Ok(Vec::new());
         }
@@ -1383,42 +1546,61 @@ impl Engine {
                 }
             }
         }
-        let res = if self.cfg.fused_verify {
-            self.spec_forward_fused(feeds, &lanes, &starts, bd, v, s_max)
-        } else {
-            Ok(None)
-        };
-        let res = match res {
-            Ok(Some(rows)) => Ok(rows),
-            Ok(None) => self.spec_forward_sequential(feeds, &lanes, bd, v, s_max),
-            Err(e) => Err(e),
-        };
-        match res {
-            Ok(rows) => Ok(rows),
-            Err(e) => {
-                // restore the pre-call invariant (pages == committed len)
+        let lane_feeds: Vec<LaneFeed> = feeds
+            .iter()
+            .zip(&lanes)
+            .zip(&starts)
+            .map(|((f, &lane), &start)| LaneFeed { lane, start, tokens: f.tokens, collect_from: f.collect_from })
+            .collect();
+        match self.feeds_forward(&lane_feeds) {
+            Ok((rows, fused)) => {
                 for (f, &lane) in feeds.iter().zip(&lanes) {
-                    let len = self.spec[lane].as_ref().unwrap().len;
-                    self.paged.truncate(f.id, len);
+                    self.spec[lane].as_mut().unwrap().len += f.tokens.len();
+                    self.metrics.spec_steps += f.tokens.len();
+                }
+                if fused {
+                    self.metrics.spec_fused_passes += 1;
+                }
+                Ok(rows)
+            }
+            Err(e) => {
+                // restore the pre-call invariant (pages == committed
+                // len): the core commits nothing on failure, so the
+                // recorded starts are exactly what this call grew past
+                for (f, &start) in feeds.iter().zip(&starts) {
+                    self.paged.truncate(f.id, start);
                 }
                 Err(e)
             }
         }
     }
 
-    /// The fused lowering of `spec_extend_batch`: one decode-shaped
-    /// forward chain over `[bd, m]` tokens (`m` = widest feed), with
-    /// per-lane start positions. Returns `Ok(None)` when the backend
-    /// does not fuse (callers fall back to the sequential lowering).
-    fn spec_forward_fused(
-        &mut self,
-        feeds: &[SpecFeed],
-        lanes: &[usize],
-        starts: &[usize],
-        bd: usize,
-        v: usize,
-        s_max: usize,
-    ) -> Result<Option<Vec<Vec<Vec<f32>>>>> {
+    /// Run one teacher-forced multi-token pass over `feeds` — the shared
+    /// core under `spec_extend_batch` and the budgeted `prefill_chunks`.
+    /// Uses the backend's fused multi-token decode when offered and
+    /// `EngineConfig::fused_verify` is on, lowering to one decode forward
+    /// per token index otherwise; the two produce identical logits and
+    /// K/V. Returns the collected rows per feed plus whether the fused
+    /// path ran (callers attribute the pass to their own metric).
+    /// Commits NO sequence/slot state — callers advance their own
+    /// lengths on success, so a failed pass leaves the engine exactly as
+    /// it was (modulo dead cache rows past the committed frontiers).
+    fn feeds_forward(&mut self, feeds: &[LaneFeed]) -> Result<(Vec<Vec<Vec<f32>>>, bool)> {
+        if self.cfg.fused_verify {
+            if let Some(rows) = self.feeds_forward_fused(feeds)? {
+                return Ok((rows, true));
+            }
+        }
+        Ok((self.feeds_forward_sequential(feeds)?, false))
+    }
+
+    /// The fused lowering of `feeds_forward`: one decode-shaped forward
+    /// chain over `[bd, m]` tokens (`m` = widest feed), with per-lane
+    /// start positions. Returns `Ok(None)` when the backend does not
+    /// fuse (callers fall back to the sequential lowering).
+    fn feeds_forward_fused(&mut self, feeds: &[LaneFeed]) -> Result<Option<Vec<Vec<Vec<f32>>>>> {
+        let mcfg = &self.be.man().cfg;
+        let (bd, v, s_max) = (mcfg.b_decode, mcfg.v, mcfg.s_max);
         let m = feeds.iter().map(|f| f.tokens.len()).max().unwrap();
         // parked baseline: live lanes — speculative AND batched (mixed-
         // mode serving) — at their own frontier, free lanes at 0
@@ -1431,10 +1613,10 @@ impl Engine {
             }
         }
         let mut toks = vec![0i32; bd * m];
-        for ((f, &lane), &start) in feeds.iter().zip(lanes).zip(starts) {
-            pos[lane] = start as i32;
+        for f in feeds {
+            pos[f.lane] = f.start as i32;
             for (j, &t) in f.tokens.iter().enumerate() {
-                toks[lane * m + j] = t as i32;
+                toks[f.lane * m + j] = t as i32;
             }
         }
         let tok = val_i32(&[bd, m], &toks)?;
@@ -1488,7 +1670,7 @@ impl Engine {
             let d = *xt.shape.last().unwrap();
             let mut xh = Vec::with_capacity(need.len() * d);
             for &(fi, j) in &need {
-                let base = (lanes[fi] * m + j) * d;
+                let base = (feeds[fi].lane * m + j) * d;
                 xh.extend_from_slice(&xt.data[base..base + d]);
             }
             let xh = Value::F32(Tensor::from_vec(&[need.len(), 1, d], xh));
@@ -1510,25 +1692,15 @@ impl Engine {
                 all_rows[fi].push(l.data[r * v..(r + 1) * v].to_vec());
             }
         }
-        for (f, &lane) in feeds.iter().zip(lanes) {
-            self.spec[lane].as_mut().unwrap().len += f.tokens.len();
-            self.metrics.spec_steps += f.tokens.len();
-        }
-        self.metrics.spec_fused_passes += 1;
         Ok(Some(all_rows))
     }
 
-    /// The sequential lowering of `spec_extend_batch`: one batched decode
+    /// The sequential lowering of `feeds_forward`: one batched decode
     /// forward per token index, feeds advancing in lockstep (short feeds
     /// park once exhausted).
-    fn spec_forward_sequential(
-        &mut self,
-        feeds: &[SpecFeed],
-        lanes: &[usize],
-        bd: usize,
-        v: usize,
-        s_max: usize,
-    ) -> Result<Vec<Vec<Vec<f32>>>> {
+    fn feeds_forward_sequential(&mut self, feeds: &[LaneFeed]) -> Result<Vec<Vec<Vec<f32>>>> {
+        let mcfg = &self.be.man().cfg;
+        let (bd, v, s_max) = (mcfg.b_decode, mcfg.v, mcfg.s_max);
         let m = feeds.iter().map(|f| f.tokens.len()).max().unwrap();
         let mut all_rows: Vec<Vec<Vec<f32>>> = feeds
             .iter()
@@ -1537,10 +1709,13 @@ impl Engine {
         for j in 0..m {
             let mut toks = vec![0i32; bd];
             // parked baseline: every live lane — speculative and batched
-            // alike — at its own frontier (active feeds included: their
-            // len IS start + j at this step). The horizon clamp only ever
-            // binds for a parked lane sitting at s_max, whose overwritten
-            // row is dead after any rollback.
+            // alike — at its own frontier. Fed lanes ride their chain
+            // position `start + j` (exhausted short feeds park at their
+            // own new frontier `start + tokens`); the engine state still
+            // holds `start` because the caller commits lengths only on
+            // success. The horizon clamp only ever binds for a parked
+            // lane sitting at s_max, whose overwritten row is dead after
+            // any rollback.
             let mut pos = vec![0i32; bd];
             for (lane, p) in pos.iter_mut().enumerate() {
                 if let Some(s) = &self.spec[lane] {
@@ -1550,23 +1725,20 @@ impl Engine {
                 }
             }
             let mut with_head = false;
-            for (f, &lane) in feeds.iter().zip(lanes) {
+            for f in feeds {
+                pos[f.lane] = ((f.start + j.min(f.tokens.len())).min(s_max - 1)) as i32;
                 if j < f.tokens.len() {
-                    toks[lane] = f.tokens[j] as i32;
+                    toks[f.lane] = f.tokens[j] as i32;
                     if j >= f.collect_from {
                         with_head = true;
                     }
                 }
             }
             let logits = self.decode_forward(&toks, &pos, with_head)?;
-            for (fi, (f, &lane)) in feeds.iter().zip(lanes).enumerate() {
-                if j < f.tokens.len() {
-                    if j >= f.collect_from {
-                        let l = logits.as_ref().expect("collected feed implies head ran");
-                        all_rows[fi].push(l.data[lane * v..(lane + 1) * v].to_vec());
-                    }
-                    self.spec[lane].as_mut().unwrap().len += 1;
-                    self.metrics.spec_steps += 1;
+            for (fi, f) in feeds.iter().enumerate() {
+                if j < f.tokens.len() && j >= f.collect_from {
+                    let l = logits.as_ref().expect("collected feed implies head ran");
+                    all_rows[fi].push(l.data[f.lane * v..(f.lane + 1) * v].to_vec());
                 }
             }
         }

@@ -34,6 +34,13 @@ pub struct EngineMetrics {
     /// prompts longer than the prefill window, ingested via chunked
     /// (teacher-forced) decode steps instead of being truncated
     pub chunked_prefills: usize,
+    /// budgeted prefill-chunk passes (`EngineConfig::prefill_budget`):
+    /// one teacher-forced multi-token forward per step that ingested
+    /// queued prompt chunks alongside live decode lanes
+    pub prefill_chunk_passes: usize,
+    /// prompt tokens ingested by those budgeted chunk passes (per step
+    /// this never exceeds the configured budget — the head-of-line bound)
+    pub prefill_chunk_tokens: usize,
     /// requests rejected at submit (empty / max_new == 0 / over-horizon /
     /// over-budget / queue full)
     pub rejected_prompts: usize,
@@ -184,6 +191,12 @@ impl EngineMetrics {
     /// ran, and a prefix section when the cache saw traffic).
     pub fn summary(&self) -> String {
         let mut s = self.base_summary();
+        if self.prefill_chunk_passes > 0 {
+            s.push_str(&format!(
+                " | chunk passes {} ({} tok)",
+                self.prefill_chunk_passes, self.prefill_chunk_tokens
+            ));
+        }
         if self.draft_proposed > 0 {
             s.push_str(&format!(
                 " | spec accepted/proposed {}/{} ({:.0}%) passes {} rollbacks {} fused {}",
@@ -325,6 +338,15 @@ mod tests {
         assert!(s.contains("gen-hit 1 (+9 tok)"), "summary was: {s}");
         let m = EngineMetrics { prefix_hits: 1, prefix_misses: 0, ..Default::default() };
         assert!(!m.summary().contains("gen-hit"), "hidden when no generated-origin hits");
+    }
+
+    #[test]
+    fn chunk_pass_section_hidden_without_budgeted_prefill() {
+        let m = EngineMetrics::default();
+        assert!(!m.summary().contains("chunk passes"), "hidden when no budgeted passes ran");
+        let m = EngineMetrics { prefill_chunk_passes: 3, prefill_chunk_tokens: 41, ..Default::default() };
+        let s = m.summary();
+        assert!(s.contains("chunk passes 3 (41 tok)"), "summary was: {s}");
     }
 
     #[test]

@@ -15,8 +15,14 @@
 //!   into one forward per batch when the backend supports it
 //!   (`Backend::run_fused`) — and exact KV rollback, for up to
 //!   `b_decode` concurrent `specdec` sequences sharing the decode lanes.
+//!   With `EngineConfig::prefill_budget` set, admission stops running
+//!   whole prefills inline: prompts are ingested a bounded number of
+//!   tokens per `step()` through the same teacher-forced machinery,
+//!   interleaved with live decode, with byte-identical outputs (SLO-aware
+//!   chunked prefill, DESIGN.md §10).
 //! * `scheduler` — pluggable admission policies (`Fifo` — the default,
-//!   `Priority`, `ShortestPromptFirst`, `PrefixAffinity`).
+//!   `Priority`, `ShortestPromptFirst`, `PrefixAffinity`; the ranked
+//!   policies fold in a queue-aging term so nothing starves).
 //! * `sampling` — greedy / temperature / top-k / top-p with a seeded
 //!   per-request RNG stream for reproducibility.
 //! * `kvcache` — the paged manager tracking per-layer page tables whose
@@ -32,7 +38,12 @@
 //!   completion reuse whole turns (`PrefixHit::gen_tokens` > 0 marks
 //!   those; cancelled sequences retain nothing).
 //! * `metrics` — throughput, TTFT/ITL/e2e percentiles, finish-reason
-//!   counts, prefix hit rates (generated-origin hits broken out).
+//!   counts, prefix hit rates (generated-origin hits broken out), and
+//!   chunked-prefill pass/token counters.
+//!
+//! The threaded async front-end over this engine — worker thread,
+//! cloneable handles, per-request token streams — lives in
+//! `crate::server` (default backend build only).
 
 pub mod engine;
 pub mod kvcache;

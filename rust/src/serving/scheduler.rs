@@ -7,6 +7,14 @@
 //! for a release rather than skipping ahead (no starvation by memory
 //! footprint). `Fifo` is the default and reproduces the pre-v2 engine
 //! byte for byte.
+//!
+//! Starvation-freedom: the length- and affinity-ranked policies fold the
+//! `waited` aging term into their key, so a request's effective rank
+//! improves by one every engine step it sits queued. Prompt lengths and
+//! cached-prefix discounts are bounded (by `s_max`), so any waiting
+//! request eventually dominates every ranking and is admitted — without
+//! aging, a steady stream of short (or cache-hot) arrivals starves a
+//! long prompt forever (the engine-level regression test pins this).
 
 /// What a scheduler sees of one waiting request. Slice order passed to
 /// `pick` is arrival order, so index 0 is always the oldest request.
@@ -24,6 +32,9 @@ pub struct QueueView {
     /// when the cache is off or nothing matches) — what `PrefixAffinity`
     /// ranks by.
     pub cached_prefix: usize,
+    /// Engine steps this request has spent waiting in the queue — the
+    /// aging term that keeps ranked policies starvation-free.
+    pub waited: usize,
 }
 
 /// Admission policy: rank the waiting requests.
@@ -76,6 +87,9 @@ impl Scheduler for Priority {
 
 /// Shortest prompt first (cheap prefills drain the queue fastest and
 /// minimize mean TTFT under contention); ties broken by arrival order.
+/// Each waited step discounts a request's effective length by one, so a
+/// long prompt under a sustained stream of short arrivals is admitted
+/// after at most `prompt_len` steps of waiting instead of starving.
 pub struct ShortestPromptFirst;
 
 impl Scheduler for ShortestPromptFirst {
@@ -84,7 +98,11 @@ impl Scheduler for ShortestPromptFirst {
     }
 
     fn pick(&mut self, queue: &[QueueView]) -> Option<usize> {
-        queue.iter().enumerate().min_by_key(|(i, q)| (q.prompt_len, *i)).map(|(i, _)| i)
+        queue
+            .iter()
+            .enumerate()
+            .min_by_key(|(i, q)| (q.prompt_len.saturating_sub(q.waited), *i))
+            .map(|(i, _)| i)
     }
 }
 
@@ -92,7 +110,10 @@ impl Scheduler for ShortestPromptFirst {
 /// prefix-cache segment skip most of their prefill, so admitting them
 /// first drains the queue with the least compute (cache-aware admission,
 /// the scheduling face of the prefix-cache subsystem); ties broken by
-/// arrival order, so with the cache off this degrades to FIFO.
+/// arrival order, so with the cache off this degrades to FIFO. Each
+/// waited step adds one to a request's effective cached length, so a
+/// cache-cold prompt under a sustained stream of cache-hot arrivals is
+/// admitted after at most `s_max` steps of waiting instead of starving.
 pub struct PrefixAffinity;
 
 impl Scheduler for PrefixAffinity {
@@ -104,7 +125,7 @@ impl Scheduler for PrefixAffinity {
         queue
             .iter()
             .enumerate()
-            .max_by_key(|(i, q)| (q.cached_prefix, std::cmp::Reverse(*i)))
+            .max_by_key(|(i, q)| (q.cached_prefix + q.waited, std::cmp::Reverse(*i)))
             .map(|(i, _)| i)
     }
 }
@@ -163,7 +184,7 @@ mod tests {
     use super::*;
 
     fn q(id: u64, priority: i32, prompt_len: usize) -> QueueView {
-        QueueView { id, priority, prompt_len, max_new: 8, cached_prefix: 0 }
+        QueueView { id, priority, prompt_len, max_new: 8, cached_prefix: 0, waited: 0 }
     }
 
     #[test]
@@ -198,11 +219,41 @@ mod tests {
             prompt_len: 20,
             max_new: 8,
             cached_prefix: cached,
+            waited: 0,
         };
         assert_eq!(s.pick(&[qc(1, 0), qc(2, 16), qc(3, 8), qc(4, 16)]), Some(1));
         // nothing cached: degrade to FIFO
         assert_eq!(s.pick(&[qc(1, 0), qc(2, 0)]), Some(0));
         assert_eq!(s.pick(&[]), None);
+    }
+
+    #[test]
+    fn spf_aging_lifts_a_starved_long_prompt() {
+        let mut s = ShortestPromptFirst;
+        let aged = |id: u64, prompt_len: usize, waited: usize| {
+            QueueView { id, priority: 0, prompt_len, max_new: 8, cached_prefix: 0, waited }
+        };
+        // a fresh short arrival still beats a long prompt early in its wait
+        assert_eq!(s.pick(&[aged(1, 12, 4), aged(2, 3, 0)]), Some(1));
+        // ...but once waited steps discount the long prompt below the
+        // short one's length, the long prompt wins despite its size
+        assert_eq!(s.pick(&[aged(1, 12, 10), aged(2, 3, 0)]), Some(0));
+        // effective length saturates at 0; oldest wins the tie
+        assert_eq!(s.pick(&[aged(1, 12, 50), aged(2, 3, 50)]), Some(0));
+    }
+
+    #[test]
+    fn prefix_affinity_aging_lifts_a_cache_cold_prompt() {
+        let mut s = PrefixAffinity;
+        let aged = |id: u64, cached: usize, waited: usize| {
+            QueueView { id, priority: 0, prompt_len: 20, max_new: 8, cached_prefix: cached, waited }
+        };
+        // fresh cache-hot arrivals win early...
+        assert_eq!(s.pick(&[aged(1, 0, 4), aged(2, 16, 0)]), Some(1));
+        // ...until the cold prompt's waited steps outgrow the discount
+        assert_eq!(s.pick(&[aged(1, 0, 17), aged(2, 16, 0)]), Some(0));
+        // equal effective keys: oldest wins
+        assert_eq!(s.pick(&[aged(1, 0, 16), aged(2, 16, 0)]), Some(0));
     }
 
     #[test]

@@ -138,10 +138,14 @@ impl WorkloadRun {
     }
 
     /// Generated tokens per deterministic forward (prefills + decode
-    /// steps + fused speculative passes) — the virtual-clock throughput
-    /// proxy that, unlike wall tok/s, is identical across runs.
+    /// steps + fused speculative passes + budgeted prefill-chunk passes)
+    /// — the virtual-clock throughput proxy that, unlike wall tok/s, is
+    /// identical across runs.
     pub fn tok_per_forward(&self) -> f64 {
-        let fwd = self.metrics.prefills + self.metrics.decode_steps + self.metrics.spec_fused_passes;
+        let fwd = self.metrics.prefills
+            + self.metrics.decode_steps
+            + self.metrics.spec_fused_passes
+            + self.metrics.prefill_chunk_passes;
         if fwd == 0 {
             0.0
         } else {

@@ -16,7 +16,14 @@
 //!   tick clock, recording per-request TTFT / inter-token gaps / e2e in
 //!   ticks plus a byte-reproducible event log.
 //! * `report` — goodput under `(TTFT, ITL)` SLO profiles and the
-//!   `BENCH_workloads.json` emitter the CI gate consumes.
+//!   `BENCH_workloads.json` emitter the CI gate consumes, plus the
+//!   wall-clock mirror types (`WallRecord` / `WallSlo` / `wall_goodput`)
+//!   scored in seconds.
+//! * `wallclock` (default backend build only) — the same closed-loop
+//!   replay in *real* time against the threaded async front-end
+//!   (`server::AsyncServer`), one client thread per conversation, and
+//!   the `BENCH_serving_async.json` emitter gating chunked-vs-unchunked
+//!   TTFT plus byte identity.
 //!
 //! The multi-turn mix is the reason this PR also taught the engine to
 //! retain prefix segments over *generated* tokens at sequence finish:
@@ -26,7 +33,16 @@
 pub mod driver;
 pub mod report;
 pub mod trace;
+// Wall-clock replay drives the async front-end, which needs the `Send`
+// engine of the default backend build (see `crate::server`).
+#[cfg(not(feature = "pjrt"))]
+pub mod wallclock;
 
 pub use driver::{replay, ReqRecord, Server, WorkloadRun};
-pub use report::{default_profiles, fnv1a64, goodput, report_json, SloProfile};
+pub use report::{
+    default_profiles, default_wall_profiles, fnv1a64, goodput, report_json, wall_goodput,
+    SloProfile, WallRecord, WallSlo,
+};
 pub use trace::{Arrival, Conversation, MixKind, Trace, TraceSpec, Turn};
+#[cfg(not(feature = "pjrt"))]
+pub use wallclock::{replay_wall, wall_report_json, WallRun};

@@ -8,7 +8,15 @@
 //! on time — the serving-level lens Puzzle argues model selection should
 //! use. Everything emitted here is a pure function of the replay, so CI
 //! can diff two runs byte-for-byte.
+//!
+//! The same trace can also be replayed in *wall-clock* time against the
+//! threaded async front-end (`workload::wallclock`); [`WallRecord`] /
+//! [`WallSlo`] / [`wall_goodput`] are the seconds-denominated mirror of
+//! the virtual-tick types, so one trace gates both clocks. Wall readings
+//! are machine-dependent: CI gates only *relative* wall numbers (chunked
+//! vs unchunked), never absolute ones.
 
+use crate::serving::FinishReason;
 use crate::util::{percentile, Json};
 
 use super::driver::{ReqRecord, WorkloadRun};
@@ -58,6 +66,81 @@ pub fn goodput(run: &WorkloadRun, slo: &SloProfile) -> (usize, f64) {
     }
 }
 
+/// One request's wall-clock latency record from a threaded replay
+/// (`workload::wallclock::replay_wall`) — the seconds-denominated mirror
+/// of `ReqRecord`. A `ttft_secs` of `None` means the request was shed at
+/// submit (or the server died before its first token).
+#[derive(Debug, Clone)]
+pub struct WallRecord {
+    /// Conversation index in the trace.
+    pub conv: usize,
+    /// Turn index within the conversation.
+    pub turn: usize,
+    /// Submit-to-first-token, seconds.
+    pub ttft_secs: Option<f64>,
+    /// Gaps between consecutive generated tokens, seconds.
+    pub gaps_secs: Vec<f64>,
+    /// Submit-to-terminal, seconds.
+    pub e2e_secs: f64,
+    /// Generated tokens as streamed (the byte-identity witness against a
+    /// synchronous virtual-tick replay of the same trace).
+    pub gen: Vec<u32>,
+    /// Terminal state; `None` when shed or the server died mid-request.
+    pub finish: Option<FinishReason>,
+}
+
+impl WallRecord {
+    /// The worst inter-token gap, seconds (0.0 with fewer than 2 tokens).
+    pub fn max_gap_secs(&self) -> f64 {
+        self.gaps_secs.iter().fold(0.0, |a, &g| a.max(g))
+    }
+}
+
+/// A `(TTFT, ITL)` service-level objective in wall-clock seconds — the
+/// async front-end's analog of [`SloProfile`].
+#[derive(Debug, Clone, Copy)]
+pub struct WallSlo {
+    /// Profile label.
+    pub name: &'static str,
+    /// Time-to-first-token budget, seconds.
+    pub ttft_secs: f64,
+    /// Per-gap inter-token budget, seconds.
+    pub itl_secs: f64,
+}
+
+impl WallSlo {
+    /// Did this request meet the SLO? Shed / unfinished requests never
+    /// do; cancellations count as finished (the client chose to stop).
+    pub fn met_by(&self, r: &WallRecord) -> bool {
+        r.finish.is_some()
+            && r.ttft_secs.is_some_and(|t| t <= self.ttft_secs)
+            && r.max_gap_secs() <= self.itl_secs
+    }
+}
+
+/// Default wall-clock profiles, deliberately generous: absolute wall
+/// numbers depend on the machine (the RefBackend interpreter is slow),
+/// so these exist to *report* goodput structure, while CI gates only the
+/// chunked-vs-unchunked comparison.
+pub fn default_wall_profiles() -> [WallSlo; 2] {
+    [
+        WallSlo { name: "wall_lenient", ttft_secs: 30.0, itl_secs: 5.0 },
+        WallSlo { name: "wall_strict", ttft_secs: 1.0, itl_secs: 0.25 },
+    ]
+}
+
+/// `(requests met, fraction of intended)` under one wall-clock SLO —
+/// same denominator rule as [`goodput`]: every request the trace
+/// intended, so shedding cannot improve the score.
+pub fn wall_goodput(records: &[WallRecord], intended: usize, slo: &WallSlo) -> (usize, f64) {
+    let met = records.iter().filter(|r| slo.met_by(r)).count();
+    if intended == 0 {
+        (0, 0.0)
+    } else {
+        (met, met as f64 / intended as f64)
+    }
+}
+
 /// FNV-1a 64-bit hash of the event log — a compact determinism witness
 /// (two runs of the same spec + seed + config must agree).
 pub fn fnv1a64(s: &str) -> u64 {
@@ -98,7 +181,7 @@ pub fn report_json(trace: &Trace, runs: &[WorkloadRun], slos: &[SloProfile]) -> 
         c.set("ticks", Json::num(run.ticks as f64));
         c.set("completed", Json::num(run.completed() as f64));
         c.set("generated_tokens", Json::num(m.generated_tokens as f64));
-        let forwards = m.prefills + m.decode_steps + m.spec_fused_passes;
+        let forwards = m.prefills + m.decode_steps + m.spec_fused_passes + m.prefill_chunk_passes;
         c.set("forwards", Json::num(forwards as f64));
         c.set("tok_per_forward", Json::num(run.tok_per_forward()));
         c.set("ttft_p50_ticks", Json::num(percentile(&ttfts, 50.0)));
@@ -190,6 +273,38 @@ mod tests {
         // therefore met_by(strict) implies met_by(lenient) for any record
         let r = rec(0, 2, vec![1, 1], Some(FinishReason::Eos));
         assert!(!strict.met_by(&r) || lenient.met_by(&r));
+    }
+
+    #[test]
+    fn wall_goodput_mirrors_the_tick_rules() {
+        let slo = WallSlo { name: "t", ttft_secs: 0.5, itl_secs: 0.1 };
+        let wrec = |ttft: Option<f64>, gaps: Vec<f64>, finish: Option<FinishReason>| WallRecord {
+            conv: 0,
+            turn: 0,
+            ttft_secs: ttft,
+            gaps_secs: gaps,
+            e2e_secs: 1.0,
+            gen: vec![9],
+            finish,
+        };
+        let records = vec![
+            wrec(Some(0.2), vec![0.05, 0.08], Some(FinishReason::Eos)), // meets
+            wrec(Some(0.9), vec![0.05], Some(FinishReason::MaxNew)),    // ttft blown
+            wrec(Some(0.2), vec![0.05, 0.3], Some(FinishReason::Eos)),  // gap blown
+            wrec(None, vec![], None),                                   // shed
+        ];
+        assert_eq!(records[2].max_gap_secs(), 0.3);
+        let (met, frac) = wall_goodput(&records, 5, &slo);
+        assert_eq!(met, 1);
+        assert!((frac - 0.2).abs() < 1e-12, "denominator is intended requests");
+        assert_eq!(wall_goodput(&[], 0, &slo), (0, 0.0), "empty trace guards the division");
+    }
+
+    #[test]
+    fn default_wall_profiles_are_componentwise_ordered() {
+        let [lenient, strict] = default_wall_profiles();
+        assert!(strict.ttft_secs <= lenient.ttft_secs);
+        assert!(strict.itl_secs <= lenient.itl_secs);
     }
 
     #[test]

@@ -1,0 +1,238 @@
+//! Wall-clock trace replay against the threaded async front-end.
+//!
+//! `driver::replay` advances a *virtual* clock — one tick per engine
+//! step — which makes every latency deterministic but says nothing about
+//! real concurrency. This module replays the **same trace** in real
+//! time: one client thread per conversation, each talking to the shared
+//! [`ServerHandle`], with arrival offsets and think times scaled by a
+//! configurable tick duration. The closed-loop stitching rule is
+//! byte-for-byte the virtual driver's (turn N+1's prompt = turn N's
+//! prompt + completion with the trailing EOS stripped + the new user
+//! tokens), so the generated tokens of a wall replay can be compared
+//! against a synchronous replay as a byte-identity witness — the
+//! budgeted chunked-prefill invariant of DESIGN.md §10.
+//!
+//! Latencies here are **seconds, not ticks**, and depend on the machine.
+//! The report emitter therefore carries both absolute numbers (for
+//! humans) and the chunked-vs-unchunked *relative* comparison (the only
+//! thing CI gates).
+
+use std::time::{Duration, Instant};
+
+use crate::data::world::EOS;
+use crate::server::ServerHandle;
+use crate::serving::{EngineMetrics, GenRequest};
+use crate::util::{percentile, Json};
+
+use super::report::{default_wall_profiles, wall_goodput, WallRecord};
+use super::trace::Trace;
+
+/// One trace replayed in wall-clock time against one server
+/// configuration — the seconds-denominated mirror of
+/// `driver::WorkloadRun`.
+#[derive(Debug, Clone)]
+pub struct WallRun {
+    /// Configuration label (`unchunked`, `chunked`, ...).
+    pub config: String,
+    /// Per-request records, grouped by conversation in trace order (turn
+    /// order within each conversation).
+    pub records: Vec<WallRecord>,
+    /// Requests the trace intended (the goodput denominator — shed or
+    /// never-submitted turns count against goodput).
+    pub intended: usize,
+    /// Wall seconds from the first client thread starting to the last
+    /// finishing.
+    pub wall_secs: f64,
+}
+
+impl WallRun {
+    /// The generated tokens of every `(conv, turn)` in trace order — the
+    /// byte-identity witness. Shed turns contribute their (empty) `gen`,
+    /// so two runs compare equal only if they shed identically too.
+    pub fn gen_transcript(&self) -> Vec<(usize, usize, Vec<u32>)> {
+        self.records.iter().map(|r| (r.conv, r.turn, r.gen.clone())).collect()
+    }
+}
+
+/// Replay `trace` against a running async server in wall-clock time.
+///
+/// One client thread per conversation: it sleeps until the
+/// conversation's arrival offset (`conv.start` ticks after the common
+/// epoch), then walks the turns closed-loop — submit, stream the
+/// completion, stitch it into the next prompt, pause `think_ticks`
+/// ticks, repeat. A shed submit (`Err` from [`ServerHandle::submit`])
+/// records a `ttft_secs: None` entry and abandons the rest of the
+/// conversation, exactly like the virtual driver; a server death
+/// mid-stream (`finish: None`) abandons it too.
+pub fn replay_wall(trace: &Trace, handle: &ServerHandle, tick: Duration, config: &str) -> WallRun {
+    let t0 = Instant::now();
+    let mut records: Vec<WallRecord> = Vec::new();
+    std::thread::scope(|s| {
+        let joins: Vec<_> = trace
+            .convs
+            .iter()
+            .enumerate()
+            .map(|(ci, conv)| {
+                let h = handle.clone();
+                s.spawn(move || {
+                    let mut recs: Vec<WallRecord> = Vec::new();
+                    let arrive = t0 + tick.mul_f64(conv.start as f64);
+                    std::thread::sleep(arrive.saturating_duration_since(Instant::now()));
+                    let mut context: Vec<u32> = Vec::new();
+                    for (ti, turn) in conv.turns.iter().enumerate() {
+                        if ti > 0 {
+                            std::thread::sleep(tick.mul_f64(turn.think_ticks as f64));
+                        }
+                        let mut prompt = std::mem::take(&mut context);
+                        prompt.extend(&turn.user);
+                        let submit_at = Instant::now();
+                        let stream =
+                            match h.submit(GenRequest::new(prompt.clone(), turn.max_new)) {
+                                Ok(stream) => stream,
+                                Err(_) => {
+                                    // shed: record the refusal, abandon the
+                                    // conversation (same as the tick driver)
+                                    recs.push(WallRecord {
+                                        conv: ci,
+                                        turn: ti,
+                                        ttft_secs: None,
+                                        gaps_secs: Vec::new(),
+                                        e2e_secs: submit_at.elapsed().as_secs_f64(),
+                                        gen: Vec::new(),
+                                        finish: None,
+                                    });
+                                    return recs;
+                                }
+                            };
+                        let mut rec = WallRecord {
+                            conv: ci,
+                            turn: ti,
+                            ttft_secs: None,
+                            gaps_secs: Vec::new(),
+                            e2e_secs: 0.0,
+                            gen: Vec::new(),
+                            finish: None,
+                        };
+                        let mut last_tok: Option<Instant> = None;
+                        while let Some(item) = stream.recv() {
+                            match item {
+                                crate::server::StreamItem::Token(t) => {
+                                    let now = Instant::now();
+                                    match last_tok {
+                                        None => {
+                                            rec.ttft_secs =
+                                                Some((now - submit_at).as_secs_f64());
+                                        }
+                                        Some(prev) => {
+                                            rec.gaps_secs.push((now - prev).as_secs_f64());
+                                        }
+                                    }
+                                    last_tok = Some(now);
+                                    rec.gen.push(t);
+                                }
+                                crate::server::StreamItem::Finished(reason) => {
+                                    rec.finish = Some(reason);
+                                    break;
+                                }
+                            }
+                        }
+                        rec.e2e_secs = submit_at.elapsed().as_secs_f64();
+                        let finished = rec.finish.is_some();
+                        let mut gen = rec.gen.clone();
+                        recs.push(rec);
+                        if !finished {
+                            // the server died mid-request: nothing left to
+                            // stream to, abandon the conversation
+                            return recs;
+                        }
+                        // closed-loop stitch (trailing EOS stripped), the
+                        // same rule as the virtual driver
+                        if gen.last() == Some(&EOS) {
+                            gen.pop();
+                        }
+                        context = prompt;
+                        context.extend(&gen);
+                    }
+                    recs
+                })
+            })
+            .collect();
+        for j in joins {
+            records.extend(j.join().expect("wall-replay client thread panicked"));
+        }
+    });
+    WallRun {
+        config: config.to_string(),
+        records,
+        intended: trace.requests(),
+        wall_secs: t0.elapsed().as_secs_f64(),
+    }
+}
+
+/// Latency summary of one wall run as a JSON object (milliseconds).
+/// Percentiles are over *finished* requests only; shed or abandoned
+/// turns are reported via `completed` / `shed` and the goodput block.
+fn wall_run_json(run: &WallRun, metrics: &EngineMetrics) -> Json {
+    let done: Vec<&WallRecord> = run.records.iter().filter(|r| r.finish.is_some()).collect();
+    let ttfts: Vec<f64> =
+        done.iter().filter_map(|r| r.ttft_secs).map(|t| t * 1e3).collect();
+    let gaps: Vec<f64> =
+        done.iter().flat_map(|r| r.gaps_secs.iter().map(|g| g * 1e3)).collect();
+    let e2es: Vec<f64> = done.iter().map(|r| r.e2e_secs * 1e3).collect();
+    let gen_tokens: usize = run.records.iter().map(|r| r.gen.len()).sum();
+    let goodput = Json::Arr(
+        default_wall_profiles()
+            .iter()
+            .map(|slo| {
+                let (met, frac) = wall_goodput(&run.records, run.intended, slo);
+                Json::from_pairs(vec![
+                    ("slo", Json::str(slo.name)),
+                    ("met", Json::num(met as f64)),
+                    ("fraction", Json::num(frac)),
+                ])
+            })
+            .collect(),
+    );
+    Json::from_pairs(vec![
+        ("config", Json::str(&run.config)),
+        ("intended", Json::num(run.intended as f64)),
+        ("completed", Json::num(done.len() as f64)),
+        ("shed", Json::num((run.records.len() - done.len()) as f64)),
+        ("ttft_p50_ms", Json::num(percentile(&ttfts, 50.0))),
+        ("ttft_p95_ms", Json::num(percentile(&ttfts, 95.0))),
+        ("itl_p50_ms", Json::num(percentile(&gaps, 50.0))),
+        ("itl_p95_ms", Json::num(percentile(&gaps, 95.0))),
+        ("e2e_p95_ms", Json::num(percentile(&e2es, 95.0))),
+        ("gen_tokens", Json::num(gen_tokens as f64)),
+        ("prefill_chunk_passes", Json::num(metrics.prefill_chunk_passes as f64)),
+        ("prefill_chunk_tokens", Json::num(metrics.prefill_chunk_tokens as f64)),
+        ("wall_secs", Json::num(run.wall_secs)),
+        ("goodput", goodput),
+    ])
+}
+
+/// The `BENCH_serving_async.json` document: trace identity, the
+/// byte-identity verdict, and one latency block per configuration (in
+/// the order given). The CI gate reads `byte_identical` and compares the
+/// configs' `ttft_p95_ms` — chunked prefill must beat unchunked on tail
+/// TTFT while producing byte-identical streams.
+pub fn wall_report_json(
+    trace: &Trace,
+    tick: Duration,
+    byte_identical: bool,
+    runs: &[(&WallRun, &EngineMetrics)],
+) -> Json {
+    let mut root = Json::obj();
+    root.set("bench", Json::str("serving_async"));
+    root.set("trace", Json::str(&trace.name));
+    root.set("seed", Json::num(trace.seed as f64));
+    root.set("conversations", Json::num(trace.convs.len() as f64));
+    root.set("requests", Json::num(trace.requests() as f64));
+    root.set("tick_ms", Json::num(tick.as_secs_f64() * 1e3));
+    root.set("byte_identical", Json::Bool(byte_identical));
+    root.set(
+        "configs",
+        Json::Arr(runs.iter().map(|(run, m)| wall_run_json(run, m)).collect()),
+    );
+    root
+}

@@ -1,0 +1,348 @@
+//! Integration tests for the threaded async front-end (`server`):
+//! concurrent clients streaming byte-identical results, cancellation
+//! mid-chunked-prefill with exact page accounting, queue-full shedding,
+//! dropped-stream auto-cancel, shutdown, and wall-clock trace replay
+//! matching the virtual-tick driver byte for byte. The server needs
+//! `Engine: Send`, so this whole crate is compiled only on the default
+//! (non-pjrt) backend build.
+#![cfg(not(feature = "pjrt"))]
+
+use puzzle::arch::{Arch, AttnChoice, FfnChoice};
+use puzzle::bld;
+use puzzle::data::{corpus::sample_sequence, CorpusMix, World};
+use puzzle::runtime::{share, Backend, SharedBackend};
+use puzzle::server::{AsyncServer, StreamItem};
+use puzzle::serving::{EngineConfig, FinishReason, GenRequest, SamplingParams};
+use puzzle::util::Rng;
+use puzzle::weights::store::{block_key, init_parent};
+use puzzle::weights::Store;
+
+fn backend() -> SharedBackend {
+    share(puzzle::runtime::RefBackend::tiny())
+}
+
+fn variable_arch(be: &dyn Backend, store: &mut Store) -> Arch {
+    let n = be.man().cfg.n_layers;
+    let mut arch = Arch::parent(n);
+    arch.layers[0].0 = AttnChoice::Gqa { divisor: 2 };
+    arch.layers[1] = (AttnChoice::Linear, FfnChoice::Ratio(3));
+    for l in 0..n {
+        for (kind, v) in [("attn", arch.layers[l].0.name()), ("ffn", arch.layers[l].1.name())] {
+            if v != "gqa_r1" && v != "r100" && v != "noop" {
+                let job = bld::Job { layer: l, kind, variant: v };
+                bld::init_job_weights(be.man(), store, &job, None).unwrap();
+            }
+        }
+    }
+    arch
+}
+
+/// Zero every residual block and craft the embedding so the model
+/// deterministically self-loops on token `y` (see serving_integration).
+fn self_loop_store(be: &dyn Backend, y: u32, rng: &mut Rng) -> Store {
+    let cfg = be.man().cfg.clone();
+    let (d, v) = (cfg.d, cfg.v);
+    let mut store = init_parent(be.man(), rng);
+    for l in 0..cfg.n_layers {
+        let wo = store.get(&block_key(l, "attn", "gqa_r1", "wo")).unwrap().clone();
+        store.put(&block_key(l, "attn", "gqa_r1", "wo"), puzzle::tensor::Tensor::zeros(&wo.shape));
+        let wd = store.get(&block_key(l, "ffn", "r100", "wd")).unwrap().clone();
+        store.put(&block_key(l, "ffn", "r100", "wd"), puzzle::tensor::Tensor::zeros(&wd.shape));
+    }
+    let mut e = puzzle::tensor::Tensor::zeros(&[v, d]);
+    for x in e.data.iter_mut() {
+        *x = rng.normal() * 1e-3;
+    }
+    let row = (y as usize) * d;
+    e.data[row..row + d].fill(0.0);
+    e.data[row] = 1.0;
+    store.put("embed", e);
+    store
+}
+
+#[test]
+fn concurrent_clients_stream_byte_identical_results() {
+    // 8 client threads hammer one worker-owned engine running budgeted
+    // chunked prefill; every stream must be byte-identical to a
+    // synchronous engine with inline prefills — greedy and seeded
+    // stochastic sampling, over a variable-KV-head child architecture.
+    let be = backend();
+    let cfg = be.man().cfg.clone();
+    let mut rng = Rng::new(81);
+    let mut store = init_parent(be.man(), &mut rng);
+    let arch = variable_arch(&*be, &mut store);
+    let world = World::new(2, cfg.v as u32);
+    let mix = CorpusMix::distillation_mix();
+    let mut prng = Rng::new(3);
+    let n_req = 16usize;
+    let clients = 8usize;
+    let reqs: Vec<GenRequest> = (0..n_req)
+        .map(|i| {
+            let plen = prng.range(4, cfg.s_prefill.min(32));
+            let prompt = sample_sequence(&world, &mix, plen, &mut prng);
+            let sampling = if i % 2 == 0 {
+                SamplingParams::greedy()
+            } else {
+                SamplingParams::temperature(0.8).with_seed(60 + i as u64)
+            };
+            GenRequest::new(prompt, 6).with_sampling(sampling)
+        })
+        .collect();
+
+    // sync oracle: no budget, inline prefills
+    let mut sync_eng =
+        EngineConfig::new().kv_budget_bytes(32 << 20).build(be.clone(), &store, &arch).unwrap();
+    let ids: Vec<u64> = reqs.iter().map(|r| sync_eng.submit(r.clone()).unwrap()).collect();
+    let resp = sync_eng.run_to_completion().unwrap();
+    let oracle: Vec<Vec<u32>> = ids
+        .iter()
+        .map(|id| resp.iter().find(|r| r.id == *id).unwrap().tokens.clone())
+        .collect();
+
+    let eng = EngineConfig::new()
+        .kv_budget_bytes(32 << 20)
+        .prefill_budget(5)
+        .build(be.clone(), &store, &arch)
+        .unwrap();
+    let server = AsyncServer::spawn(eng);
+    let mut got: Vec<(usize, Vec<u32>, Option<FinishReason>)> = Vec::new();
+    std::thread::scope(|s| {
+        let joins: Vec<_> = (0..clients)
+            .map(|ci| {
+                let h = server.handle();
+                let lot: Vec<(usize, GenRequest)> = reqs
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| i % clients == ci)
+                    .map(|(i, r)| (i, r.clone()))
+                    .collect();
+                s.spawn(move || {
+                    lot.into_iter()
+                        .map(|(i, req)| {
+                            let (tokens, finish) = h.submit(req).unwrap().collect();
+                            (i, tokens, finish)
+                        })
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        for j in joins {
+            got.extend(j.join().unwrap());
+        }
+    });
+    assert_eq!(got.len(), n_req);
+    for (i, tokens, finish) in &got {
+        assert!(finish.is_some(), "request {i} must finish");
+        assert_eq!(tokens, &oracle[*i], "async chunked stream {i} must match the sync engine");
+    }
+    let eng = server.shutdown();
+    assert!(eng.metrics.prefill_chunk_passes > 0, "the budget must have driven chunk passes");
+    assert_eq!(eng.metrics.prefills, 0, "a budgeted engine never runs inline prefills");
+    assert_eq!(eng.metrics.requests_completed, n_req);
+}
+
+#[test]
+fn cancel_mid_chunked_prefill_frees_pages_and_streams_cancelled() {
+    // the cancellation satellite: a huge prompt is cancelled while its
+    // chunked ingestion is still in flight, THROUGH the async handle.
+    // Its stream must end with Finished(Cancelled) and zero tokens, its
+    // pages must come back exactly, and no partial prefix segment may be
+    // retained — all while a live lane keeps decoding undisturbed.
+    let be = backend();
+    let cfg = be.man().cfg.clone();
+    let y = 10u32;
+    let mut rng = Rng::new(82);
+    let store = self_loop_store(&*be, y, &mut rng);
+    let arch = Arch::parent(cfg.n_layers);
+    let eng = EngineConfig::new()
+        .kv_budget_bytes(32 << 20)
+        .prefill_budget(2) // tiny budget: the monster needs ~20 steps to ingest
+        .prefix_cache(true, 8 << 20)
+        .build(be.clone(), &store, &arch)
+        .unwrap();
+    let server = AsyncServer::spawn(eng);
+    let h = server.handle();
+
+    // a live lane that keeps the worker stepping (self-loop on y); its
+    // generous budget keeps it alive across the cancel + stats round-trip
+    let live = h.submit(GenRequest::new(vec![1, y], 40)).unwrap();
+    assert!(
+        matches!(live.recv(), Some(StreamItem::Token(t)) if t == y),
+        "live lane must be decoding before the monster arrives"
+    );
+    let before = h.stats().unwrap();
+    assert!(before.kv_allocated_bytes > 0);
+
+    // monster prompt: 43 pending tokens at budget 2 — its first sampled
+    // token is ~20 steps away, so the cancel lands mid-ingestion
+    let monster: Vec<u32> = std::iter::once(1u32)
+        .chain(std::iter::repeat(y))
+        .take(cfg.s_max - 4)
+        .collect();
+    let stream = h.submit(GenRequest::new(monster, 2)).unwrap();
+    stream.cancel();
+    let (tokens, finish) = stream.collect();
+    assert_eq!(finish, Some(FinishReason::Cancelled), "the stream must see the cancel");
+    assert!(tokens.is_empty(), "cancelled mid-prefill: no token was ever sampled");
+
+    // exact page accounting: the monster's full-horizon booking is gone,
+    // the live lane's pages are untouched (horizons are booked at admit,
+    // so per-sequence bytes are constant while it runs)
+    let after = h.stats().unwrap();
+    assert_eq!(
+        after.kv_allocated_bytes, before.kv_allocated_bytes,
+        "cancel must free exactly the monster's pages"
+    );
+    assert_eq!(after.prefix_segments, 0, "no partial-prefix segment may be retained");
+    assert_eq!(after.active, 1, "the live lane survives the cancel");
+
+    // the live lane finishes undisturbed (its first token was consumed
+    // above; collect drains the rest of its 40-token budget)
+    let (live_tokens, live_finish) = live.collect();
+    assert_eq!(live_tokens, vec![y; 39]);
+    assert_eq!(live_finish, Some(FinishReason::MaxNew));
+
+    let eng = server.shutdown();
+    assert_eq!(eng.metrics.cancelled, 1);
+    assert!(eng.metrics.prefill_chunk_tokens > 0, "ingestion had started when the cancel hit");
+}
+
+#[test]
+fn queue_full_shedding_rejects_only_the_overflow_client() {
+    // graceful shedding: with both lanes busy and a 1-deep queue, the
+    // fourth submit comes back as an Err on ITS client only; everything
+    // already accepted still completes, and a freed lane admits the
+    // queued request.
+    let be = backend();
+    let y = 10u32;
+    let mut rng = Rng::new(83);
+    let store = self_loop_store(&*be, y, &mut rng);
+    let arch = Arch::parent(be.man().cfg.n_layers);
+    let eng = EngineConfig::new()
+        .kv_budget_bytes(32 << 20)
+        .max_queue(1)
+        .build(be.clone(), &store, &arch)
+        .unwrap();
+    let server = AsyncServer::spawn(eng);
+    let h = server.handle();
+
+    // fill both decode lanes (wait for a token = admission happened)
+    let a = h.submit(GenRequest::new(vec![1, y], 30)).unwrap();
+    assert!(matches!(a.recv(), Some(StreamItem::Token(_))));
+    let b = h.submit(GenRequest::new(vec![2, y], 12)).unwrap();
+    assert!(matches!(b.recv(), Some(StreamItem::Token(_))));
+    // c waits in the queue (no lane free: both self-loop mid-generation)
+    let c = h.submit(GenRequest::new(vec![3, y], 4)).unwrap();
+    // d overflows the 1-deep queue: shed with the engine's message
+    let err = match h.submit(GenRequest::new(vec![4, y], 4)) {
+        Err(e) => e,
+        Ok(_) => panic!("the fourth submit must be shed by the full queue"),
+    };
+    assert!(err.to_string().contains("queue"), "shed cause must surface to the client: {err}");
+
+    // cancelling a frees its lane; c gets admitted and completes
+    a.cancel();
+    let (_, a_finish) = a.collect();
+    assert_eq!(a_finish, Some(FinishReason::Cancelled));
+    let (c_tokens, c_finish) = c.collect();
+    assert_eq!(c_tokens, vec![y; 4], "the queued request must run once a lane frees");
+    assert_eq!(c_finish, Some(FinishReason::MaxNew));
+    // b's first token was consumed above; collect drains the other 11
+    let (b_tokens, b_finish) = b.collect();
+    assert_eq!(b_tokens, vec![y; 11]);
+    assert_eq!(b_finish, Some(FinishReason::MaxNew));
+
+    let stats = h.stats().unwrap();
+    assert_eq!((stats.active, stats.queued, stats.kv_allocated_bytes), (0, 0, 0));
+    let eng = server.shutdown();
+    assert_eq!(eng.metrics.requests_completed, 2);
+    assert_eq!(eng.metrics.cancelled, 1);
+    assert_eq!(eng.metrics.rejected_prompts, 1);
+}
+
+#[test]
+fn dropped_stream_auto_cancels_its_request() {
+    // an abandoned client must not pin a decode lane: once its stream is
+    // dropped, the next token send fails and the worker cancels the
+    // request, freeing the lane and its pages.
+    let be = backend();
+    let y = 10u32;
+    let mut rng = Rng::new(84);
+    let store = self_loop_store(&*be, y, &mut rng);
+    let arch = Arch::parent(be.man().cfg.n_layers);
+    let eng =
+        EngineConfig::new().kv_budget_bytes(32 << 20).build(be.clone(), &store, &arch).unwrap();
+    let server = AsyncServer::spawn(eng);
+    let h = server.handle();
+
+    let s = h.submit(GenRequest::new(vec![1, y], 40)).unwrap();
+    assert!(matches!(s.recv(), Some(StreamItem::Token(_))));
+    drop(s); // client walks away mid-generation
+
+    // the worker notices on its next token send; poll until the lane is
+    // back (bounded: the engine emits one token per step)
+    let mut freed = false;
+    for _ in 0..200 {
+        let st = h.stats().unwrap();
+        if st.active == 0 && st.kv_allocated_bytes == 0 {
+            freed = true;
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    assert!(freed, "dropping the stream must cancel the request and free its lane");
+    let eng = server.shutdown();
+    assert_eq!(eng.metrics.cancelled, 1);
+    assert!(
+        eng.metrics.generated_tokens < 40,
+        "the auto-cancel must land well before the request's budget"
+    );
+}
+
+#[test]
+fn wall_replay_matches_virtual_replay_byte_for_byte() {
+    // the bench-async invariant in test form: one trace, replayed on the
+    // virtual tick clock (sync) and in wall-clock time through the async
+    // server — unchunked AND chunked — must generate identical streams
+    // for every (conversation, turn).
+    use std::collections::BTreeMap;
+    use std::time::Duration;
+
+    use puzzle::workload::{replay, replay_wall, MixKind, Server, TraceSpec};
+
+    let be = backend();
+    let cfg = be.man().cfg.clone();
+    let mut rng = Rng::new(85);
+    let store = init_parent(be.man(), &mut rng);
+    let arch = Arch::parent(cfg.n_layers);
+    let mut spec = TraceSpec::small(MixKind::Mixed, 11);
+    spec.conversations = 4;
+    let trace = spec.generate(cfg.v as u32, cfg.s_prefill, cfg.s_max);
+    let engine_cfg = || EngineConfig::new().kv_budget_bytes(16 << 20).page_len(4).max_queue(1024);
+
+    let oracle = {
+        let mut eng = engine_cfg().build(be.clone(), &store, &arch).unwrap();
+        replay(&trace, &mut Server::Engine(&mut eng), "sync").unwrap()
+    };
+    let want: BTreeMap<(usize, usize), Vec<u32>> =
+        oracle.records.iter().map(|r| ((r.conv, r.turn), r.gen.clone())).collect();
+
+    for budget in [None, Some(6)] {
+        let mut ec = engine_cfg();
+        if let Some(b) = budget {
+            ec = ec.prefill_budget(b);
+        }
+        let server = AsyncServer::spawn(ec.build(be.clone(), &store, &arch).unwrap());
+        let h = server.handle();
+        let run = replay_wall(&trace, &h, Duration::from_millis(1), "wall");
+        drop(h);
+        let eng = server.shutdown();
+        let got: BTreeMap<(usize, usize), Vec<u32>> =
+            run.records.iter().map(|r| ((r.conv, r.turn), r.gen.clone())).collect();
+        assert_eq!(got, want, "wall replay (budget {budget:?}) must match the tick replay");
+        assert_eq!(run.intended, trace.requests());
+        if budget.is_some() {
+            assert!(eng.metrics.prefill_chunk_passes > 0, "chunked run must spend its budget");
+        }
+    }
+}

@@ -733,3 +733,318 @@ fn generation_stops_at_eos_through_the_decode_path() {
     assert_eq!(eng.metrics.finished_eos, 1);
     assert!(eng.metrics.decode_steps >= 1, "EOS must be produced by the decode path");
 }
+
+#[test]
+fn budgeted_prefill_is_byte_identical_across_budgets_and_caches() {
+    // the chunked-prefill core invariant (DESIGN.md §10): outputs are a
+    // pure function of (weights, prompt, sampling), never of the budget
+    // or of what shares the batch — so every budget, with and without
+    // the prefix cache, must reproduce the inline-prefill oracle exactly.
+    // Greedy and seeded-stochastic sampling, shared prefixes, a chunked
+    // (over-window) prompt, and an exact repeat, over a child arch with
+    // per-layer variable KV heads.
+    let be = backend();
+    let cfg = be.man().cfg.clone();
+    let mut rng = Rng::new(71);
+    let mut store = init_parent(be.man(), &mut rng);
+    let arch = variable_arch(&*be, &mut store);
+    let world = World::new(7, cfg.v as u32);
+    let mix = CorpusMix::distillation_mix();
+    let mut prng = Rng::new(8);
+    let sys = sample_sequence(&world, &mix, 23, &mut prng); // shared 24-token prefix
+    let mut prompts: Vec<Vec<u32>> = Vec::new();
+    for len in [4usize, 6] {
+        let mut p = sys.clone();
+        p.extend(sample_sequence(&world, &mix, len, &mut prng));
+        prompts.push(p);
+    }
+    prompts.push(sample_sequence(&world, &mix, 5, &mut prng)); // cold outlier
+    let mut long = sys.clone();
+    long.extend(sample_sequence(&world, &mix, 12, &mut prng));
+    assert!(long.len() > cfg.s_prefill, "one prompt must cross the prefill window");
+    prompts.push(long);
+    prompts.push(prompts[0].clone()); // repeat: budgeted retention must serve it
+
+    let reqs: Vec<GenRequest> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let sampling = if i % 2 == 0 {
+                SamplingParams::greedy()
+            } else {
+                SamplingParams::temperature(0.8).with_seed(50 + i as u64)
+            };
+            GenRequest::new(p.clone(), 6).with_sampling(sampling)
+        })
+        .collect();
+
+    let build = |budget: Option<usize>, cache: bool| {
+        let mut ec = EngineConfig::new().kv_budget_bytes(32 << 20);
+        if let Some(b) = budget {
+            ec = ec.prefill_budget(b);
+        }
+        if cache {
+            ec = ec.prefix_cache(true, 8 << 20);
+        }
+        ec.build(be.clone(), &store, &arch).unwrap()
+    };
+    let mut oracle_eng = build(None, false);
+    let oracle = run_all(&mut oracle_eng, &reqs);
+
+    for budget in [1usize, 3, 16, 64] {
+        for cache in [false, true] {
+            let mut eng = build(Some(budget), cache);
+            let got = run_all(&mut eng, &reqs);
+            assert_eq!(
+                got, oracle,
+                "budget {budget} cache {cache}: chunked outputs must be byte-identical"
+            );
+            assert!(
+                eng.metrics.prefill_chunk_passes > 0,
+                "budget {budget}: the budget path must have run"
+            );
+            assert_eq!(
+                eng.metrics.prefills, 0,
+                "a budgeted engine never runs an inline prefill pass"
+            );
+            if cache {
+                assert!(
+                    eng.metrics.prefix_hits > 0,
+                    "budget {budget}: full-ingest retention must produce hits"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn budgeted_admission_bounds_head_of_line_delay() {
+    // the head-of-line regression: a near-horizon prompt admitted while a
+    // lane is mid-decode adds at most `prefill_budget` tokens of
+    // ingestion work per step — the live lane emits a token on EVERY
+    // step, never stalling for the monster's prefill.
+    let be = backend();
+    let cfg = be.man().cfg.clone();
+    let y = 10u32;
+    let mut rng = Rng::new(72);
+    let store = self_loop_store(&*be, y, &mut rng);
+    let arch = Arch::parent(cfg.n_layers);
+    let budget = 4usize;
+    let mut eng = EngineConfig::new()
+        .kv_budget_bytes(32 << 20)
+        .prefill_budget(budget)
+        .build(be.clone(), &store, &arch)
+        .unwrap();
+
+    let ida = eng.submit(GenRequest::new(vec![1, y], 40)).unwrap();
+    let mut a_tokens = 0usize;
+    for _ in 0..3 {
+        for ev in eng.step().unwrap() {
+            if let StreamEvent::Token { id, .. } = ev {
+                assert_eq!(id, ida);
+                a_tokens += 1;
+            }
+        }
+    }
+    assert_eq!(a_tokens, 3, "the live lane decodes one token per step");
+
+    // a near-horizon prompt lands mid-decode; admission books pages only
+    let monster: Vec<u32> =
+        std::iter::once(1u32).chain(std::iter::repeat(y)).take(cfg.s_max - 4).collect();
+    let idm = eng.submit(GenRequest::new(monster.clone(), 2)).unwrap();
+    let need = monster.len() - 1; // pending tokens the chunk passes + TF steps ingest
+    let mut ingested = eng.metrics.prefill_chunk_tokens;
+    let mut m_first = None;
+    let mut steps = 0usize;
+    while m_first.is_none() {
+        steps += 1;
+        assert!(steps <= need, "the monster's first token must arrive within bounded steps");
+        let evs = eng.step().unwrap();
+        let delta = eng.metrics.prefill_chunk_tokens - ingested;
+        ingested = eng.metrics.prefill_chunk_tokens;
+        assert!(
+            delta <= budget,
+            "step ingested {delta} chunk tokens — the per-step budget bound is {budget}"
+        );
+        let a_now = evs
+            .iter()
+            .filter(|e| matches!(e, StreamEvent::Token { id, .. } if *id == ida))
+            .count();
+        assert_eq!(
+            a_now, 1,
+            "the live lane must emit exactly one token EVERY step — a monster admission may \
+             add at most one budget of work, never an inline-prefill stall"
+        );
+        if evs.iter().any(|e| matches!(e, StreamEvent::Token { id, .. } if *id == idm)) {
+            m_first = Some(steps);
+        }
+    }
+    // ingestion drains at (budget + 1 teacher-forced token) per step
+    let bound = need.div_ceil(budget + 1) + 2;
+    assert!(
+        m_first.unwrap() <= bound,
+        "monster TTFT {} steps exceeds the drain bound {bound}",
+        m_first.unwrap()
+    );
+}
+
+#[test]
+fn budgeted_cancellation_frees_pages_exactly_mid_ingest() {
+    // engine-level twin of the async-handle cancellation test: cancelling
+    // a request whose chunked ingestion is still in flight returns
+    // exactly its full-horizon page booking, retains no partial prefix
+    // segment, and leaves the live lane untouched.
+    let be = backend();
+    let cfg = be.man().cfg.clone();
+    let y = 10u32;
+    let mut rng = Rng::new(73);
+    let store = self_loop_store(&*be, y, &mut rng);
+    let arch = Arch::parent(cfg.n_layers);
+    let mut eng = EngineConfig::new()
+        .kv_budget_bytes(32 << 20)
+        .prefill_budget(3)
+        .prefix_cache(true, 8 << 20)
+        .build(be.clone(), &store, &arch)
+        .unwrap();
+    assert_eq!(eng.kv_allocated_bytes(), 0);
+
+    let ida = eng.submit(GenRequest::new(vec![1, y], 40)).unwrap();
+    eng.step().unwrap();
+    let after_a = eng.kv_allocated_bytes();
+    assert!(after_a > 0);
+
+    let monster: Vec<u32> =
+        std::iter::once(1u32).chain(std::iter::repeat(y)).take(cfg.s_max - 4).collect();
+    let need = monster.len() - 1;
+    let idm = eng.submit(GenRequest::new(monster, 2)).unwrap();
+    for _ in 0..3 {
+        eng.step().unwrap();
+    }
+    // horizons are booked at admit, so per-sequence bytes are constant
+    let mid = eng.kv_allocated_bytes();
+    assert!(mid > after_a, "the monster's horizon is booked up front");
+    assert!(
+        eng.metrics.prefill_chunk_tokens < need,
+        "the cancel must land while ingestion is still in flight"
+    );
+
+    assert!(eng.cancel(idm));
+    assert_eq!(
+        eng.kv_allocated_bytes(),
+        after_a,
+        "cancel mid-ingest must free exactly the monster's booking"
+    );
+    assert_eq!(eng.prefix_segments(), 0, "no partial-prefix segment may be retained");
+
+    // the live lane runs to its natural finish, byte-exact
+    let resp = eng.run_to_completion().unwrap();
+    let ra = resp.iter().find(|r| r.id == ida).unwrap();
+    assert_eq!(ra.tokens, vec![y; 40]);
+    assert_eq!(ra.finish, FinishReason::MaxNew);
+    let rm = resp.iter().find(|r| r.id == idm).unwrap();
+    assert!(rm.tokens.is_empty(), "cancelled mid-prefill: no token was ever sampled");
+    assert_eq!(rm.finish, FinishReason::Cancelled);
+    // only A's finish-time retention keeps bytes now
+    assert_eq!(eng.kv_allocated_bytes(), eng.prefix_retained_bytes());
+}
+
+#[test]
+fn budgeted_prefill_composes_with_external_spec_sequences() {
+    // SpecBatch composition: a budgeted engine serves chunk passes and an
+    // externally driven speculative sequence at once; per-lane isolation
+    // means the spec logits and the batched tokens both stay bitwise
+    // equal to isolated runs.
+    let be = backend();
+    let y = 10u32;
+    let mut rng = Rng::new(74);
+    let store = self_loop_store(&*be, y, &mut rng);
+    let arch = Arch::parent(be.man().cfg.n_layers);
+    let spec_prompt = vec![1u32, 5, 9];
+    let probe = [7u32, 11, 13];
+    let batch_prompt: Vec<u32> =
+        std::iter::once(1u32).chain(std::iter::repeat(y).take(11)).collect();
+
+    // isolated oracles on a budget-free engine
+    let mut eng =
+        EngineConfig::new().kv_budget_bytes(32 << 20).build(be.clone(), &store, &arch).unwrap();
+    let (sid, first_iso) = eng.spec_open(&spec_prompt).unwrap();
+    let rows_iso = eng.spec_extend(sid, &probe, 0).unwrap();
+    eng.spec_close(sid);
+    eng.submit(GenRequest::new(batch_prompt.clone(), 6)).unwrap();
+    let tokens_iso = eng.run_to_completion().unwrap().remove(0).tokens;
+    assert_eq!(tokens_iso, vec![y; 6]);
+
+    // mixed: the spec sequence stays open while the batched prompt
+    // ingests 3 tokens per step right alongside it
+    let mut eng = EngineConfig::new()
+        .kv_budget_bytes(32 << 20)
+        .prefill_budget(3)
+        .build(be.clone(), &store, &arch)
+        .unwrap();
+    let (sid, first_mix) = eng.spec_open(&spec_prompt).unwrap();
+    assert_eq!(first_mix, first_iso, "spec prefill must not see the budgeted lane");
+    eng.submit(GenRequest::new(batch_prompt, 6)).unwrap();
+    eng.step().unwrap(); // admission books pages; the first chunk pass runs
+    let mut rows_mix = eng.spec_extend(sid, &probe[..1], 0).unwrap();
+    eng.step().unwrap();
+    rows_mix.extend(eng.spec_extend(sid, &probe[1..], 0).unwrap());
+    while !eng.is_idle() {
+        eng.step().unwrap();
+    }
+    let resp = eng.take_finished();
+    assert_eq!(resp[0].tokens, tokens_iso, "budgeted ingestion must ignore the spec lane");
+    assert_eq!(rows_mix, rows_iso, "spec logits must ignore interleaved chunk passes");
+    assert!(eng.metrics.prefill_chunk_passes > 0, "the budget path must have run");
+    eng.spec_close(sid);
+    assert_eq!(eng.kv_allocated_bytes(), 0, "closing the spec lane returns the pool to empty");
+}
+
+#[test]
+fn spf_aging_admits_a_long_prompt_under_short_pressure() {
+    // engine-level starvation regression for the scheduler aging fix:
+    // without the `waited` term, ShortestPromptFirst would admit every
+    // short prompt before the long one — the long prompt finishes LAST,
+    // deterministically. With aging, each queued step discounts its
+    // effective length, so it overtakes the tail of the short stream.
+    let be = backend();
+    let y = 10u32;
+    let mut rng = Rng::new(75);
+    let store = self_loop_store(&*be, y, &mut rng);
+    let arch = Arch::parent(be.man().cfg.n_layers);
+    // budget for ~1.5 sequences: admissions serialize (same trick as
+    // schedulers_order_admissions_under_contention)
+    let one_seq: usize = {
+        let mut probe = PagedKvManager::new(
+            be.man(),
+            &arch,
+            PageCfg { page_len: 16, dtype_bytes: 4, budget_bytes: usize::MAX / 2 },
+        );
+        probe.admit(1, 16);
+        probe.allocated_bytes()
+    };
+    let mut eng = EngineConfig::new()
+        .kv_budget_bytes(one_seq + one_seq / 2)
+        .scheduler(SchedulerKind::ShortestPromptFirst)
+        .build(be.clone(), &store, &arch)
+        .unwrap();
+
+    // the long prompt arrives FIRST, then a stream of shorts; self-loop
+    // generation (no EOS) makes every completion run its full max_new, so
+    // the admission timeline is deterministic. Horizons are all 16 (one
+    // page): long 12+4, shorts 4+12.
+    let mut long = vec![2u32; 11];
+    long.push(y);
+    let long_id = eng.submit(GenRequest::new(long, 4)).unwrap();
+    for _ in 0..4 {
+        eng.submit(GenRequest::new(vec![3u32, 4, 5, y], 12)).unwrap();
+    }
+    let order: Vec<u64> = eng.run_to_completion().unwrap().iter().map(|r| r.id).collect();
+    assert_eq!(order.len(), 5);
+    let pos = order.iter().position(|&id| id == long_id).unwrap();
+    assert_ne!(pos, 0, "a fresh short still beats the long prompt at waited = 0");
+    assert!(
+        pos < order.len() - 1,
+        "aging must admit the long prompt before the short stream drains; without the \
+         waited term it would deterministically finish last (order: {order:?})"
+    );
+}
