@@ -37,6 +37,7 @@ pub mod experiments;
 pub mod gkd;
 pub mod mip;
 pub mod model;
+pub mod obs;
 pub mod serving;
 pub mod perf;
 pub mod pipeline;

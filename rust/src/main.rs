@@ -34,6 +34,7 @@ use puzzle::arch::{Arch, AttnChoice, FfnChoice, SearchSpace};
 use puzzle::config::TinyManifest;
 use puzzle::data::corpus::sample_sequence;
 use puzzle::experiments::{self, ExpCtx};
+use puzzle::obs::{self, Tracer, DEFAULT_RING_CAP};
 use puzzle::perf::{CostTable, Scenario};
 use puzzle::pipeline::{Pipeline, StageCfg};
 use puzzle::runtime::{share, RefBackend, SharedBackend};
@@ -72,6 +73,41 @@ fn open_pjrt(args: &Args, config: &str) -> Result<SharedBackend> {
 #[cfg(not(feature = "pjrt"))]
 fn open_pjrt(_args: &Args, _config: &str) -> Result<SharedBackend> {
     Err(anyhow!("built without the `pjrt` feature; rebuild with --features pjrt"))
+}
+
+/// Resolve a trace-output flag to a path, failing at startup (not after
+/// the run) when the path cannot be created.
+fn trace_sink(args: &Args, key: &str) -> Result<Option<PathBuf>> {
+    let Some(p) = args.get(key) else { return Ok(None) };
+    let p = PathBuf::from(p);
+    std::fs::File::create(&p)
+        .map_err(|e| anyhow!("--{key} {} is not writable: {e}", p.display()))?;
+    Ok(Some(p))
+}
+
+/// Export the tracer's log: Chrome trace-event JSON to `chrome`, JSONL to
+/// `jsonl_path` (either may be absent). Backend exec totals are bridged
+/// into the log here, once, at export time.
+fn export_trace(
+    tracer: &Tracer,
+    be: &SharedBackend,
+    chrome: &Option<PathBuf>,
+    jsonl_path: &Option<PathBuf>,
+) -> Result<()> {
+    if !tracer.enabled() {
+        return Ok(());
+    }
+    tracer.record_exec_totals(&be.stats_snapshot());
+    let log = tracer.snapshot();
+    if let Some(p) = chrome {
+        std::fs::write(p, obs::chrome_trace(&log).to_pretty())?;
+        println!("wrote {} ({} events, {} dropped)", p.display(), log.recs.len(), log.dropped);
+    }
+    if let Some(p) = jsonl_path {
+        std::fs::write(p, obs::jsonl(&log))?;
+        println!("wrote {} ({} events, {} dropped)", p.display(), log.recs.len(), log.dropped);
+    }
+    Ok(())
 }
 
 fn stage_cfg(args: &Args) -> StageCfg {
@@ -156,10 +192,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let scheduler = args.str("scheduler", "fifo");
     let scheduler = SchedulerKind::parse(&scheduler)
         .ok_or_else(|| anyhow!("unknown scheduler '{scheduler}' (fifo|priority|spf|prefix)"))?;
+    let chrome = trace_sink(args, "trace-out")?;
+    let jsonl_p = trace_sink(args, "trace-jsonl")?;
+    let tracer = if chrome.is_some() || jsonl_p.is_some() {
+        Tracer::wall(DEFAULT_RING_CAP)
+    } else {
+        Tracer::disabled()
+    };
     let mut ecfg = EngineConfig::new()
         .kv_budget_bytes(64 << 20)
         .scheduler(scheduler)
-        .prefix_cache(args.flag("prefix-cache"), args.usize("retain-budget", 8 << 20));
+        .prefix_cache(args.flag("prefix-cache"), args.usize("retain-budget", 8 << 20))
+        .tracer(tracer.clone());
     if let Some(b) = args.get("prefill-budget") {
         let b: usize =
             b.parse().map_err(|_| anyhow!("--prefill-budget wants a token count, got '{b}'"))?;
@@ -221,6 +265,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             eng.metrics.prefix_tokens_saved
         );
     }
+    export_trace(&tracer, &be, &chrome, &jsonl_p)?;
     Ok(())
 }
 
@@ -253,7 +298,8 @@ fn cmd_serve_async(args: &Args, be: &SharedBackend, pipe: &Pipeline, eng: Engine
         };
         lots[i % clients].push((i, GenRequest::new(prompt, max_new).with_sampling(sampling)));
     }
-    let server = AsyncServer::spawn(eng);
+    let metrics_interval = args.get("metrics-interval").and_then(|s| s.parse::<usize>().ok());
+    let server = AsyncServer::spawn_with(eng, metrics_interval);
     std::thread::scope(|s| {
         for (ci, lot) in lots.into_iter().enumerate() {
             let h = server.handle();
@@ -274,8 +320,18 @@ fn cmd_serve_async(args: &Args, be: &SharedBackend, pipe: &Pipeline, eng: Engine
             });
         }
     });
+    if args.flag("scrape") {
+        // the live Prometheus snapshot clients would poll on a real deploy
+        println!("{}", server.handle().metrics_text()?);
+    }
     let eng = server.shutdown();
     println!("async-served {n_req} requests over {clients} client threads | {}", eng.metrics.summary());
+    export_trace(
+        eng.tracer(),
+        be,
+        &trace_sink(args, "trace-out")?,
+        &trace_sink(args, "trace-jsonl")?,
+    )?;
     Ok(())
 }
 
@@ -304,6 +360,13 @@ fn cmd_serve_speculative(
     let draft_arch = args.get("draft-arch").map(PathBuf::from);
     let pair = pipe.ensure_spec_pair(space, Metric::Kl, args.f64("speedup", 1.8), draft_arch.as_deref())?;
     info!("speculative serve: drafter {}", pair.child_arch.signature());
+    let chrome = trace_sink(args, "trace-out")?;
+    let jsonl_p = trace_sink(args, "trace-jsonl")?;
+    let tracer = if chrome.is_some() || jsonl_p.is_some() {
+        Tracer::wall(DEFAULT_RING_CAP)
+    } else {
+        Tracer::disabled()
+    };
     let cfg = SpecConfig {
         draft_k: pinned_k.unwrap_or(4),
         // no pin: tune k online from the measured acceptance rate
@@ -312,7 +375,8 @@ fn cmd_serve_speculative(
         // a fleet of requests sharing a system prompt prefills it once
         engine: EngineConfig::new()
             .kv_budget_bytes(64 << 20)
-            .prefix_cache(args.flag("prefix-cache"), args.usize("retain-budget", 8 << 20)),
+            .prefix_cache(args.flag("prefix-cache"), args.usize("retain-budget", 8 << 20))
+            .tracer(tracer.clone()),
     };
     let mut batch = SpecBatch::new(
         be.clone(),
@@ -372,6 +436,7 @@ fn cmd_serve_speculative(
         let (p, c) = batch.prefix_tokens_saved();
         println!("prefix cache: parent saved {p} prompt tokens, drafter saved {c}");
     }
+    export_trace(&tracer, be, &chrome, &jsonl_p)?;
     Ok(())
 }
 
@@ -443,14 +508,24 @@ fn cmd_bench_workload(args: &Args) -> Result<()> {
         runs.push(replay(&trace, &mut Server::Engine(&mut eng), "prefix_cache")?);
     }
     {
+        // `--trace-out` / `--trace-jsonl` trace the speculative config: it
+        // has the prefix cache on both engines, so one trace carries every
+        // event kind (admitted hits, prefill chunks, spec rounds). The
+        // virtual-tick clock keeps the JSONL byte-deterministic per seed.
+        let chrome = trace_sink(args, "trace-out")?;
+        let jsonl_p = trace_sink(args, "trace-jsonl")?;
+        let traced = chrome.is_some() || jsonl_p.is_some();
+        let tracer =
+            if traced { Tracer::virtual_ticks(DEFAULT_RING_CAP) } else { Tracer::disabled() };
         let scfg = SpecConfig {
             draft_k: args.usize("draft-k", 3),
             adapt_k_max: None,
-            engine: engine_cfg(true),
+            engine: engine_cfg(true).tracer(tracer.clone()),
         };
         let mut batch =
             SpecBatch::new(be.clone(), &store, &parent_arch, &store, &child_arch, scfg)?;
         runs.push(replay(&trace, &mut Server::Spec(&mut batch), "speculative")?);
+        export_trace(&tracer, &be, &chrome, &jsonl_p)?;
     }
     for run in &runs {
         println!("[{}] {}", run.config, run.metrics.summary());
@@ -534,8 +609,8 @@ fn cmd_bench_async(args: &Args) -> Result<()> {
         replay(&trace, &mut Server::Engine(&mut eng), "sync_oracle")?
     };
 
-    let run_wall = |label: &str, budget: Option<usize>| -> Result<(WallRun, EngineMetrics)> {
-        let mut ec = engine_cfg();
+    let run_wall = |label: &str, budget: Option<usize>, tracer: Tracer| -> Result<(WallRun, EngineMetrics)> {
+        let mut ec = engine_cfg().tracer(tracer);
         if let Some(b) = budget {
             ec = ec.prefill_budget(b);
         }
@@ -547,8 +622,19 @@ fn cmd_bench_async(args: &Args) -> Result<()> {
         let eng = server.shutdown();
         Ok((run, eng.metrics.clone()))
     };
-    let (unchunked, m_un) = run_wall("unchunked", None)?;
-    let (chunked, m_ch) = run_wall("chunked", Some(budget))?;
+    // `--trace-out` traces the chunked run — the one whose step timeline
+    // (budgeted prefill chunks interleaved with live decode) is the point
+    // of this bench — on the wall clock.
+    let chrome = trace_sink(args, "trace-out")?;
+    let jsonl_p = trace_sink(args, "trace-jsonl")?;
+    let tracer = if chrome.is_some() || jsonl_p.is_some() {
+        Tracer::wall(DEFAULT_RING_CAP)
+    } else {
+        Tracer::disabled()
+    };
+    let (unchunked, m_un) = run_wall("unchunked", None, Tracer::disabled())?;
+    let (chunked, m_ch) = run_wall("chunked", Some(budget), tracer.clone())?;
+    export_trace(&tracer, &be, &chrome, &jsonl_p)?;
 
     // byte identity: every (conv, turn)'s generated stream must match the
     // sync oracle in BOTH wall runs, chunked and not
@@ -640,7 +726,7 @@ fn main() -> Result<()> {
         Some("info") => cmd_info(&args),
         _ => {
             eprintln!(
-                "usage: puzzle <pipeline|exp|serve|bench-workload|bench-async|measure|info> [--backend ref|pjrt] [--config tiny|small] [--run-dir DIR] [--scale F] [--speedup X]\n       serve also takes: [--scheduler fifo|priority|spf|prefix] [--temperature T] [--stream] [--requests N] [--max-new N]\n                         [--prefix-cache] [--retain-budget BYTES] [--prefill-budget TOKENS]\n                         [--async] [--clients N]\n                         [--speculate] [--draft-k N (pins; omit to auto-tune)] [--draft-arch arch_tag.json]\n       bench-workload takes: [--trace chat|longcontext|shared|spec|multiturn|mixed] [--seed N] [--conversations N]\n                             [--page-len N] [--draft-k N] [--retain-budget BYTES]\n       bench-async takes: [--trace ...] [--seed N] [--conversations N] [--tick-ms MS] [--prefill-budget TOKENS] [--page-len N]"
+                "usage: puzzle <pipeline|exp|serve|bench-workload|bench-async|measure|info> [--backend ref|pjrt] [--config tiny|small] [--run-dir DIR] [--scale F] [--speedup X]\n       serve also takes: [--scheduler fifo|priority|spf|prefix] [--temperature T] [--stream] [--requests N] [--max-new N]\n                         [--prefix-cache] [--retain-budget BYTES] [--prefill-budget TOKENS]\n                         [--async] [--clients N] [--metrics-interval STEPS] [--scrape]\n                         [--speculate] [--draft-k N (pins; omit to auto-tune)] [--draft-arch arch_tag.json]\n       bench-workload takes: [--trace chat|longcontext|shared|spec|multiturn|mixed] [--seed N] [--conversations N]\n                             [--page-len N] [--draft-k N] [--retain-budget BYTES]\n       bench-async takes: [--trace ...] [--seed N] [--conversations N] [--tick-ms MS] [--prefill-budget TOKENS] [--page-len N]\n       serve / bench-workload / bench-async also take: [--trace-out chrome_trace.json] [--trace-jsonl events.jsonl]"
             );
             Ok(())
         }

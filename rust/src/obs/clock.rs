@@ -1,0 +1,78 @@
+//! Timestamp source for the tracer: deterministic virtual ticks or wall clock.
+//!
+//! The workload harness replays traces on an integer tick clock so runs are
+//! byte-reproducible; the async server runs on real time. Both feed the same
+//! `Tracer`, so the clock is abstracted behind a single `now_us()` that
+//! returns microseconds: wall mode measures from an epoch captured at
+//! construction, virtual mode maps one tick to [`TICK_US`] microseconds and
+//! only advances when the driver calls [`Clock::set_tick`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Microseconds per virtual tick (1 tick = 1 ms keeps Perfetto scales sane).
+pub const TICK_US: u64 = 1_000;
+
+/// A monotonic timestamp source in microseconds.
+///
+/// `Virtual` holds the current tick (stored, never measured) so identical
+/// replays stamp identical timestamps; `Wall` measures elapsed time since the
+/// instant the clock was built.
+#[derive(Debug)]
+pub enum Clock {
+    /// Deterministic tick clock driven by [`Clock::set_tick`].
+    Virtual(AtomicU64),
+    /// Real time relative to the construction instant.
+    Wall(Instant),
+}
+
+impl Clock {
+    /// A virtual tick clock starting at tick 0.
+    pub fn virtual_ticks() -> Clock {
+        Clock::Virtual(AtomicU64::new(0))
+    }
+
+    /// A wall clock with its epoch at the call instant.
+    pub fn wall() -> Clock {
+        Clock::Wall(Instant::now())
+    }
+
+    /// Current timestamp in microseconds.
+    pub fn now_us(&self) -> u64 {
+        match self {
+            Clock::Virtual(t) => t.load(Ordering::Relaxed) * TICK_US,
+            Clock::Wall(t0) => t0.elapsed().as_micros() as u64,
+        }
+    }
+
+    /// Advance a virtual clock to `tick` (no-op on a wall clock).
+    pub fn set_tick(&self, tick: u64) {
+        if let Clock::Virtual(t) = self {
+            t.store(tick, Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_clock_is_driven_not_measured() {
+        let c = Clock::virtual_ticks();
+        assert_eq!(c.now_us(), 0);
+        c.set_tick(7);
+        assert_eq!(c.now_us(), 7 * TICK_US);
+        c.set_tick(7);
+        assert_eq!(c.now_us(), 7 * TICK_US);
+    }
+
+    #[test]
+    fn wall_clock_is_monotone_and_ignores_set_tick() {
+        let c = Clock::wall();
+        let a = c.now_us();
+        c.set_tick(1_000_000);
+        let b = c.now_us();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,393 @@
+//! Trace exporters: JSONL event log and Chrome trace-event JSON.
+//!
+//! The JSONL form is one compact JSON object per line in recording order —
+//! under the virtual clock it is byte-identical across replays of the same
+//! seeded trace, which is what the determinism tests pin. The Chrome form
+//! loads in Perfetto / `chrome://tracing`: one track for the engine step
+//! timeline, one per decode lane (prefill chunks, spec rounds), one per
+//! request (nested `queued` / `prefill` / `decode` spans inside a `request`
+//! span), plus backend exec totals and prefix-cache evictions.
+
+use crate::util::Json;
+
+use super::trace::{request_spans, Event, TraceLog};
+
+/// Serialize the log as one compact JSON object per line (`ts` first, then
+/// the event tag, then its fields in a fixed order).
+pub fn jsonl(log: &TraceLog) -> String {
+    let mut out = String::new();
+    for r in &log.recs {
+        let mut o = Json::obj();
+        o.set("ts", Json::num(r.ts_us as f64));
+        o.set("ev", Json::str(r.ev.tag()));
+        match &r.ev {
+            Event::Submitted { id, prompt, max_new } => {
+                o.set("id", Json::num(*id as f64));
+                o.set("prompt", Json::num(*prompt as f64));
+                o.set("max_new", Json::num(*max_new as f64));
+            }
+            Event::Rejected { id, cause } => {
+                o.set("id", Json::num(*id as f64));
+                o.set("cause", Json::str(cause));
+            }
+            Event::Admitted { id, lane, hit, matched } => {
+                o.set("id", Json::num(*id as f64));
+                o.set("lane", Json::num(*lane as f64));
+                o.set("hit", Json::Bool(*hit));
+                o.set("matched", Json::num(*matched as f64));
+            }
+            Event::PrefillChunk { id, lane, tokens } => {
+                o.set("id", Json::num(*id as f64));
+                o.set("lane", Json::num(*lane as f64));
+                o.set("tokens", Json::num(*tokens as f64));
+            }
+            Event::FirstToken { id } => {
+                o.set("id", Json::num(*id as f64));
+            }
+            Event::Token { id, tok } => {
+                o.set("id", Json::num(*id as f64));
+                o.set("tok", Json::num(*tok as f64));
+            }
+            Event::Finished { id, reason, tokens } => {
+                o.set("id", Json::num(*id as f64));
+                o.set("reason", Json::str(reason));
+                o.set("tokens", Json::num(*tokens as f64));
+            }
+            Event::SpecRound { id, lane, drafted, accepted, rolled_back } => {
+                o.set("id", Json::num(*id as f64));
+                o.set("lane", Json::num(*lane as f64));
+                o.set("drafted", Json::num(*drafted as f64));
+                o.set("accepted", Json::num(*accepted as f64));
+                o.set("rolled_back", Json::num(*rolled_back as f64));
+            }
+            Event::Step { step, active, queued, dur_us } => {
+                o.set("step", Json::num(*step as f64));
+                o.set("active", Json::num(*active as f64));
+                o.set("queued", Json::num(*queued as f64));
+                o.set("dur_us", Json::num(*dur_us as f64));
+            }
+            Event::PrefixEvict { seg, tokens } => {
+                o.set("seg", Json::num(*seg as f64));
+                o.set("tokens", Json::num(*tokens as f64));
+            }
+            Event::ExecTotal { name, calls, secs } => {
+                o.set("name", Json::str(name));
+                o.set("calls", Json::num(*calls as f64));
+                o.set("secs", Json::num(*secs));
+            }
+        }
+        out.push_str(&o.to_string());
+        out.push('\n');
+    }
+    out
+}
+
+const TID_ENGINE: u64 = 0;
+const TID_BACKEND: u64 = 1;
+const TID_PREFIX: u64 = 2;
+const TID_LANE_BASE: u64 = 100;
+const TID_REQ_BASE: u64 = 1_000;
+
+fn ev_base(name: &str, ph: &str, ts: u64, tid: u64) -> Json {
+    let mut o = Json::obj();
+    o.set("name", Json::str(name));
+    o.set("ph", Json::str(ph));
+    o.set("ts", Json::num(ts as f64));
+    o.set("pid", Json::num(1.0));
+    o.set("tid", Json::num(tid as f64));
+    o
+}
+
+fn complete(name: &str, ts: u64, dur: u64, tid: u64, args: Json) -> Json {
+    let mut o = ev_base(name, "X", ts, tid);
+    o.set("dur", Json::num(dur as f64));
+    o.set("args", args);
+    o
+}
+
+fn instant(name: &str, ts: u64, tid: u64, args: Json) -> Json {
+    let mut o = ev_base(name, "i", ts, tid);
+    o.set("s", Json::str("t"));
+    o.set("args", args);
+    o
+}
+
+fn thread_name(tid: u64, name: &str) -> Json {
+    let mut o = ev_base("thread_name", "M", 0, tid);
+    o.set("args", Json::from_pairs(vec![("name", Json::str(name))]));
+    o
+}
+
+/// Build a Chrome trace-event JSON document from the log.
+///
+/// Track layout: tid 0 = engine step timeline, tid 1 = backend exec totals,
+/// tid 2 = prefix-cache evictions, tid 100+lane = per-lane chunk/spec-round
+/// instants, tid 1000+id = per-request lifecycle spans.
+pub fn chrome_trace(log: &TraceLog) -> Json {
+    let last_ts = log.recs.iter().map(|r| r.ts_us).max().unwrap_or(0);
+    let mut events: Vec<Json> = Vec::new();
+
+    // Metadata first: process name, then one thread_name per used track.
+    let mut proc = ev_base("process_name", "M", 0, TID_ENGINE);
+    proc.set("args", Json::from_pairs(vec![("name", Json::str("puzzle-serve"))]));
+    events.push(proc);
+
+    let mut lanes: Vec<u64> = Vec::new();
+    let mut have_backend = false;
+    let mut have_prefix = false;
+    for r in &log.recs {
+        match &r.ev {
+            Event::PrefillChunk { lane, .. } | Event::SpecRound { lane, .. } => {
+                let l = *lane as u64;
+                if !lanes.contains(&l) {
+                    lanes.push(l);
+                }
+            }
+            Event::ExecTotal { .. } => have_backend = true,
+            Event::PrefixEvict { .. } => have_prefix = true,
+            _ => {}
+        }
+    }
+    lanes.sort_unstable();
+    let spans = request_spans(log);
+
+    events.push(thread_name(TID_ENGINE, "engine steps"));
+    if have_backend {
+        events.push(thread_name(TID_BACKEND, "backend execs"));
+    }
+    if have_prefix {
+        events.push(thread_name(TID_PREFIX, "prefix cache"));
+    }
+    for &l in &lanes {
+        events.push(thread_name(TID_LANE_BASE + l, &format!("lane{l}")));
+    }
+    for s in &spans {
+        events.push(thread_name(TID_REQ_BASE + s.id, &format!("req{}", s.id)));
+    }
+
+    // Engine track: step spans plus door rejections, sorted by timestamp
+    // with spans before instants at the same tick.
+    let mut engine: Vec<(u64, u8, Json)> = Vec::new();
+    if log.dropped > 0 {
+        engine.push((
+            0,
+            1,
+            instant(
+                "ring_dropped",
+                0,
+                TID_ENGINE,
+                Json::from_pairs(vec![("count", Json::num(log.dropped as f64))]),
+            ),
+        ));
+    }
+    for r in &log.recs {
+        match &r.ev {
+            Event::Step { step, active, queued, dur_us } => {
+                engine.push((
+                    r.ts_us,
+                    0,
+                    complete(
+                        "step",
+                        r.ts_us,
+                        (*dur_us).max(1),
+                        TID_ENGINE,
+                        Json::from_pairs(vec![
+                            ("step", Json::num(*step as f64)),
+                            ("active", Json::num(*active as f64)),
+                            ("queued", Json::num(*queued as f64)),
+                        ]),
+                    ),
+                ));
+            }
+            Event::Rejected { id, cause } => {
+                engine.push((
+                    r.ts_us,
+                    1,
+                    instant(
+                        "rejected",
+                        r.ts_us,
+                        TID_ENGINE,
+                        Json::from_pairs(vec![
+                            ("id", Json::num(*id as f64)),
+                            ("cause", Json::str(cause)),
+                        ]),
+                    ),
+                ));
+            }
+            _ => {}
+        }
+    }
+    engine.sort_by_key(|(ts, kind, _)| (*ts, *kind));
+    events.extend(engine.into_iter().map(|(_, _, e)| e));
+
+    if have_backend {
+        for r in &log.recs {
+            if let Event::ExecTotal { name, calls, secs } = &r.ev {
+                events.push(instant(
+                    name,
+                    r.ts_us,
+                    TID_BACKEND,
+                    Json::from_pairs(vec![
+                        ("calls", Json::num(*calls as f64)),
+                        ("total_ms", Json::num(secs * 1e3)),
+                    ]),
+                ));
+            }
+        }
+    }
+    if have_prefix {
+        for r in &log.recs {
+            if let Event::PrefixEvict { seg, tokens } = &r.ev {
+                events.push(instant(
+                    "prefix_evict",
+                    r.ts_us,
+                    TID_PREFIX,
+                    Json::from_pairs(vec![
+                        ("seg", Json::num(*seg as f64)),
+                        ("tokens", Json::num(*tokens as f64)),
+                    ]),
+                ));
+            }
+        }
+    }
+    for &l in &lanes {
+        for r in &log.recs {
+            match &r.ev {
+                Event::PrefillChunk { id, lane, tokens } if *lane as u64 == l => {
+                    events.push(instant(
+                        "prefill_chunk",
+                        r.ts_us,
+                        TID_LANE_BASE + l,
+                        Json::from_pairs(vec![
+                            ("id", Json::num(*id as f64)),
+                            ("tokens", Json::num(*tokens as f64)),
+                        ]),
+                    ));
+                }
+                Event::SpecRound { id, lane, drafted, accepted, rolled_back }
+                    if *lane as u64 == l =>
+                {
+                    events.push(instant(
+                        "spec_round",
+                        r.ts_us,
+                        TID_LANE_BASE + l,
+                        Json::from_pairs(vec![
+                            ("id", Json::num(*id as f64)),
+                            ("drafted", Json::num(*drafted as f64)),
+                            ("accepted", Json::num(*accepted as f64)),
+                            ("rolled_back", Json::num(*rolled_back as f64)),
+                        ]),
+                    ));
+                }
+                _ => {}
+            }
+        }
+    }
+
+    // Request tracks: an enclosing `request` span with the lifecycle
+    // segments nested inside it (equal-boundary zero-width spans allowed).
+    for s in &spans {
+        let tid = TID_REQ_BASE + s.id;
+        let end = s.finish_us.unwrap_or(last_ts).max(s.submit_us);
+        let mut args = Json::obj();
+        args.set("id", Json::num(s.id as f64));
+        args.set("hit", Json::Bool(s.hit));
+        args.set("matched", Json::num(s.matched as f64));
+        args.set("tokens", Json::num(s.tokens as f64));
+        if let Some(rs) = s.reason {
+            args.set("reason", Json::str(rs));
+        }
+        events.push(complete("request", s.submit_us, end - s.submit_us, tid, args));
+        if let Some(a) = s.admit_us {
+            events.push(complete(
+                "queued",
+                s.submit_us,
+                a - s.submit_us,
+                tid,
+                Json::obj(),
+            ));
+            if let Some(f) = s.first_us {
+                events.push(complete("prefill", a, f - a, tid, Json::obj()));
+                if let Some(e) = s.finish_us {
+                    events.push(complete("decode", f, e - f, tid, Json::obj()));
+                }
+            }
+        }
+    }
+
+    let mut doc = Json::obj();
+    doc.set("displayTimeUnit", Json::str("ms"));
+    doc.set("traceEvents", Json::Arr(events));
+    doc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Tracer;
+
+    fn sample_log() -> TraceLog {
+        let t = Tracer::virtual_ticks(256);
+        t.record(Event::Submitted { id: 1, prompt: 6, max_new: 4 });
+        t.set_virtual_tick(1);
+        t.record(Event::Admitted { id: 1, lane: 0, hit: false, matched: 0 });
+        t.record(Event::PrefillChunk { id: 1, lane: 0, tokens: 6 });
+        t.record_at(1_000, Event::Step { step: 0, active: 1, queued: 0, dur_us: 0 });
+        t.set_virtual_tick(2);
+        t.record(Event::FirstToken { id: 1 });
+        t.record(Event::Token { id: 1, tok: 11 });
+        t.set_virtual_tick(4);
+        t.record(Event::Finished { id: 1, reason: "eos", tokens: 4 });
+        t.snapshot()
+    }
+
+    #[test]
+    fn jsonl_is_one_parseable_object_per_line_and_deterministic() {
+        let log = sample_log();
+        let a = jsonl(&log);
+        let b = jsonl(&sample_log());
+        assert_eq!(a, b, "same events must serialize byte-identically");
+        let lines: Vec<&str> = a.lines().collect();
+        assert_eq!(lines.len(), log.recs.len());
+        for l in &lines {
+            let v = Json::parse(l).unwrap();
+            assert!(v.get("ts").is_some() && v.get("ev").is_some());
+        }
+        assert!(lines[0].contains("\"ev\":\"submitted\""));
+    }
+
+    #[test]
+    fn chrome_trace_nests_request_spans() {
+        let doc = chrome_trace(&sample_log());
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        // Every event carries the required keys.
+        for e in evs {
+            for k in ["name", "ph", "ts", "pid", "tid"] {
+                assert!(e.get(k).is_some(), "missing {k}: {}", e.to_string());
+            }
+        }
+        let span = |name: &str| {
+            evs.iter()
+                .find(|e| e.get("name").unwrap().as_str() == Some(name))
+                .unwrap_or_else(|| panic!("no {name} span"))
+        };
+        let req = span("request");
+        let (rts, rdur) = (
+            req.get("ts").unwrap().as_f64().unwrap(),
+            req.get("dur").unwrap().as_f64().unwrap(),
+        );
+        for child in ["queued", "prefill", "decode"] {
+            let c = span(child);
+            let ts = c.get("ts").unwrap().as_f64().unwrap();
+            let dur = c.get("dur").unwrap().as_f64().unwrap();
+            assert!(ts >= rts && ts + dur <= rts + rdur, "{child} escapes request span");
+            assert_eq!(c.get("tid"), req.get("tid"));
+        }
+        // queued + prefill + decode tile the request span end to end.
+        let total: f64 = ["queued", "prefill", "decode"]
+            .into_iter()
+            .map(|n| span(n).get("dur").unwrap().as_f64().unwrap())
+            .sum();
+        assert_eq!(total, rdur);
+    }
+}

@@ -1,0 +1,284 @@
+//! Log-bucketed histograms and bounded latency accumulators.
+//!
+//! `EngineMetrics` used to keep every TTFT/ITL/e2e sample in an unbounded
+//! `Vec<f64>`, which grows forever in a long-running server. The
+//! [`LatencySeries`] here is the bounded replacement: an exact mean via a
+//! running sum, a power-of-two [`LogHistogram`] for percentiles at any
+//! sample count, and a capped reservoir that keeps percentiles *exact*
+//! (nearest-rank, matching [`crate::util::percentile`]) until the cap is
+//! exceeded. Past the cap, a percentile falls back to the histogram and is
+//! correct to within one log2 bucket.
+
+/// Number of power-of-two buckets in [`LogHistogram::latency`]:
+/// `1 µs · 2^i` upper edges for `i in 0..28` spans 1 µs to ~134 s.
+pub const LATENCY_BUCKETS: usize = 28;
+
+/// Histogram over power-of-two buckets. Bucket `i` counts values in
+/// `(lo·2^(i-1), lo·2^i]` (bucket 0 additionally takes everything ≤ `lo`,
+/// the last bucket everything larger than its edge).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LogHistogram {
+    lo: f64,
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    max: f64,
+}
+
+impl LogHistogram {
+    /// A histogram with `buckets` power-of-two buckets whose first upper
+    /// edge is `lo`.
+    pub fn new(lo: f64, buckets: usize) -> LogHistogram {
+        LogHistogram { lo, counts: vec![0; buckets.max(1)], count: 0, sum: 0.0, max: 0.0 }
+    }
+
+    /// The standard latency shape: 1 µs … ~134 s in 28 buckets.
+    pub fn latency() -> LogHistogram {
+        LogHistogram::new(1e-6, LATENCY_BUCKETS)
+    }
+
+    /// Record one sample (negative samples clamp to 0).
+    pub fn observe(&mut self, v: f64) {
+        let v = if v.is_finite() && v > 0.0 { v } else { 0.0 };
+        let mut i = 0;
+        let mut edge = self.lo;
+        while v > edge && i + 1 < self.counts.len() {
+            edge *= 2.0;
+            i += 1;
+        }
+        self.counts[i] += 1;
+        self.count += 1;
+        self.sum += v;
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    /// Total samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Sum of all samples (exact, not bucketed).
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Exact mean over all samples (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Nearest-rank quantile estimate: the upper edge of the bucket holding
+    /// the rank-`⌈p/100·n⌉` sample, clamped to the observed max. The exact
+    /// value lies in the same bucket, i.e. within a factor of 2 below the
+    /// returned edge.
+    pub fn quantile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        let mut edge = self.lo;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return edge.min(self.max);
+            }
+            if i + 1 < self.counts.len() {
+                edge *= 2.0;
+            }
+        }
+        self.max
+    }
+
+    /// `(upper_edge, cumulative_count)` per bucket, for Prometheus
+    /// `_bucket{le=...}` lines (the `+Inf` bucket is implied by `count`).
+    pub fn cumulative(&self) -> Vec<(f64, u64)> {
+        let mut out = Vec::with_capacity(self.counts.len());
+        let mut edge = self.lo;
+        let mut acc = 0u64;
+        for c in &self.counts {
+            acc += c;
+            out.push((edge, acc));
+            edge *= 2.0;
+        }
+        out
+    }
+}
+
+/// Reservoir capacity of a [`LatencySeries`]: percentiles stay exact below
+/// this many samples.
+pub const RESERVOIR_CAP: usize = 4096;
+
+/// Bounded latency accumulator: exact below [`RESERVOIR_CAP`] samples,
+/// one-bucket-accurate above, O(cap) memory forever.
+///
+/// The reservoir uses deterministic Algorithm-R replacement (fixed-seed
+/// xorshift), so two identical sample streams produce identical state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatencySeries {
+    hist: LogHistogram,
+    reservoir: Vec<f64>,
+    seen: u64,
+    rng: u64,
+}
+
+impl Default for LatencySeries {
+    fn default() -> LatencySeries {
+        LatencySeries {
+            hist: LogHistogram::latency(),
+            reservoir: Vec::new(),
+            seen: 0,
+            rng: 0x9e37_79b9_7f4a_7c15,
+        }
+    }
+}
+
+impl LatencySeries {
+    /// An empty series.
+    pub fn new() -> LatencySeries {
+        LatencySeries::default()
+    }
+
+    fn next_rng(&mut self) -> u64 {
+        let mut x = self.rng;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.rng = x;
+        x
+    }
+
+    /// Record one sample in seconds.
+    pub fn push(&mut self, v: f64) {
+        self.hist.observe(v);
+        self.seen += 1;
+        if self.reservoir.len() < RESERVOIR_CAP {
+            self.reservoir.push(v);
+        } else {
+            let j = self.next_rng() % self.seen;
+            if (j as usize) < RESERVOIR_CAP {
+                self.reservoir[j as usize] = v;
+            }
+        }
+    }
+
+    /// Samples recorded over the series' lifetime.
+    pub fn count(&self) -> u64 {
+        self.seen
+    }
+
+    /// Number of samples currently held (≤ [`RESERVOIR_CAP`]).
+    pub fn len(&self) -> usize {
+        self.reservoir.len()
+    }
+
+    /// Whether any sample was recorded.
+    pub fn is_empty(&self) -> bool {
+        self.seen == 0
+    }
+
+    /// Exact mean over all samples ever pushed.
+    pub fn mean(&self) -> f64 {
+        self.hist.mean()
+    }
+
+    /// Nearest-rank percentile: exact while `count() ≤` [`RESERVOIR_CAP`],
+    /// histogram-bucketed (within one power-of-two bucket) beyond.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.seen <= RESERVOIR_CAP as u64 {
+            crate::util::percentile(&self.reservoir, p)
+        } else {
+            self.hist.quantile(p)
+        }
+    }
+
+    /// The backing histogram (for Prometheus exposition).
+    pub fn hist(&self) -> &LogHistogram {
+        &self.hist
+    }
+}
+
+impl From<Vec<f64>> for LatencySeries {
+    fn from(v: Vec<f64>) -> LatencySeries {
+        let mut s = LatencySeries::new();
+        for x in v {
+            s.push(x);
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::percentile;
+
+    #[test]
+    fn exact_below_cap() {
+        let mut s = LatencySeries::new();
+        let vals: Vec<f64> = (1..=100).map(|i| i as f64 * 1e-3).collect();
+        for &v in &vals {
+            s.push(v);
+        }
+        assert_eq!(s.percentile(50.0), percentile(&vals, 50.0));
+        assert_eq!(s.percentile(95.0), percentile(&vals, 95.0));
+        assert!((s.mean() - vals.iter().sum::<f64>() / 100.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn within_one_bucket_above_cap_on_known_timeline() {
+        // A known timeline long enough to overflow the reservoir: latencies
+        // cycle deterministically over three decades (0.5 ms … 0.4 s).
+        let mut s = LatencySeries::new();
+        let mut exact = Vec::new();
+        for i in 0..(RESERVOIR_CAP * 3) {
+            let v = match i % 10 {
+                0..=4 => 0.0005 * (1.0 + (i % 7) as f64 / 7.0),
+                5..=7 => 0.02 * (1.0 + (i % 5) as f64 / 5.0),
+                8 => 0.1,
+                _ => 0.4,
+            };
+            s.push(v);
+            exact.push(v);
+        }
+        assert!(s.count() > RESERVOIR_CAP as u64);
+        for p in [50.0, 95.0] {
+            let e = percentile(&exact, p);
+            let got = s.percentile(p);
+            // The estimate is the upper edge of the bucket holding the exact
+            // nearest-rank value: within a factor of 2 on either side.
+            assert!(got >= e * 0.999, "p{p}: {got} < exact {e}");
+            assert!(got <= e * 2.0 * 1.001, "p{p}: {got} > 2x exact {e}");
+        }
+        // Memory stays bounded.
+        assert_eq!(s.len(), RESERVOIR_CAP);
+    }
+
+    #[test]
+    fn histogram_quantile_clamps_to_max() {
+        let mut h = LogHistogram::latency();
+        for _ in 0..10 {
+            h.observe(3e-3);
+        }
+        // Bucket edge above 3 ms is 4.096 ms; clamped to observed max.
+        assert_eq!(h.quantile(50.0), 3e-3);
+        assert_eq!(h.quantile(100.0), 3e-3);
+        assert_eq!(h.count(), 10);
+    }
+
+    #[test]
+    fn from_vec_matches_pushes() {
+        let a: LatencySeries = vec![0.1, 0.2, 0.3].into();
+        let mut b = LatencySeries::new();
+        for v in [0.1, 0.2, 0.3] {
+            b.push(v);
+        }
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,33 @@
+//! Observability: request-lifecycle tracing, step timelines, and a typed
+//! metrics registry with Prometheus exposition.
+//!
+//! Three pieces, deliberately decoupled from the serving layer:
+//!
+//! * [`Tracer`] — a cloneable handle over a bounded ring buffer of typed
+//!   [`Event`]s. Disabled (the default) it is a single branch per call and
+//!   allocates nothing, so the engine, speculative batch, and async server
+//!   thread it through unconditionally. Timestamps come from a [`Clock`]
+//!   that is either the workload harness's deterministic virtual tick
+//!   counter or a wall-clock epoch, so the same event grammar covers
+//!   reproducible replays and live serving.
+//! * Exporters — [`jsonl`] (one object per line, byte-stable under the
+//!   virtual clock) and [`chrome_trace`] (Perfetto-loadable trace-event
+//!   JSON with per-lane and per-request tracks), plus [`request_spans`]
+//!   which rebuilds `queued → prefill → decode` segments that tile each
+//!   request's end-to-end time exactly.
+//! * [`MetricsRegistry`] — snapshot counters/gauges/histograms rendered in
+//!   the Prometheus text exposition format; [`LatencySeries`] backs the
+//!   engine's latency percentiles with bounded memory (exact up to a capped
+//!   reservoir, within one log2 bucket beyond).
+
+pub mod clock;
+pub mod export;
+pub mod hist;
+pub mod registry;
+pub mod trace;
+
+pub use clock::{Clock, TICK_US};
+pub use export::{chrome_trace, jsonl};
+pub use hist::{LatencySeries, LogHistogram, LATENCY_BUCKETS, RESERVOIR_CAP};
+pub use registry::{scrape_value, MetricsRegistry};
+pub use trace::{request_spans, Event, Rec, RequestSpans, TraceLog, Tracer, DEFAULT_RING_CAP};

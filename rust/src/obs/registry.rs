@@ -1,0 +1,157 @@
+//! Typed metrics registry with Prometheus text exposition.
+//!
+//! A [`MetricsRegistry`] is a snapshot, not a live store: producers
+//! (`EngineMetrics`, server stats) build one on demand from their own
+//! counters, so the hot path keeps its plain-field accounting and the
+//! registry only exists while rendering. [`MetricsRegistry::render`] emits
+//! the Prometheus text exposition format (`# HELP`/`# TYPE` + samples;
+//! histograms as cumulative `_bucket{le=...}` plus `_sum`/`_count`).
+
+use std::fmt::Write as _;
+
+use super::hist::LatencySeries;
+
+enum Value {
+    Counter(f64),
+    Gauge(f64),
+    Hist { buckets: Vec<(f64, u64)>, sum: f64, count: u64 },
+}
+
+struct Metric {
+    name: String,
+    help: String,
+    value: Value,
+}
+
+/// An ordered collection of named metric snapshots.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    metrics: Vec<Metric>,
+}
+
+fn fmt_num(out: &mut String, v: f64) {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        let _ = write!(out, "{}", v as i64);
+    } else {
+        let _ = write!(out, "{}", v);
+    }
+}
+
+impl MetricsRegistry {
+    /// An empty registry.
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    fn push(&mut self, name: &str, help: &str, value: Value) {
+        self.metrics.push(Metric { name: name.to_string(), help: help.to_string(), value });
+    }
+
+    /// Add a monotonically-increasing counter.
+    pub fn counter(&mut self, name: &str, help: &str, v: f64) {
+        self.push(name, help, Value::Counter(v));
+    }
+
+    /// Add a point-in-time gauge.
+    pub fn gauge(&mut self, name: &str, help: &str, v: f64) {
+        self.push(name, help, Value::Gauge(v));
+    }
+
+    /// Add a histogram snapshot from a latency series.
+    pub fn histogram(&mut self, name: &str, help: &str, s: &LatencySeries) {
+        self.push(
+            name,
+            help,
+            Value::Hist {
+                buckets: s.hist().cumulative(),
+                sum: s.hist().sum(),
+                count: s.hist().count(),
+            },
+        );
+    }
+
+    /// Number of metric families registered.
+    pub fn len(&self) -> usize {
+        self.metrics.len()
+    }
+
+    /// Whether the registry is empty.
+    pub fn is_empty(&self) -> bool {
+        self.metrics.is_empty()
+    }
+
+    /// Render the Prometheus text exposition format.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for m in &self.metrics {
+            let _ = writeln!(out, "# HELP {} {}", m.name, m.help);
+            match &m.value {
+                Value::Counter(v) => {
+                    let _ = writeln!(out, "# TYPE {} counter", m.name);
+                    let _ = write!(out, "{} ", m.name);
+                    fmt_num(&mut out, *v);
+                    out.push('\n');
+                }
+                Value::Gauge(v) => {
+                    let _ = writeln!(out, "# TYPE {} gauge", m.name);
+                    let _ = write!(out, "{} ", m.name);
+                    fmt_num(&mut out, *v);
+                    out.push('\n');
+                }
+                Value::Hist { buckets, sum, count } => {
+                    let _ = writeln!(out, "# TYPE {} histogram", m.name);
+                    for (le, c) in buckets {
+                        let _ = writeln!(out, "{}_bucket{{le=\"{}\"}} {}", m.name, le, c);
+                    }
+                    let _ = writeln!(out, "{}_bucket{{le=\"+Inf\"}} {}", m.name, count);
+                    let _ = write!(out, "{}_sum ", m.name);
+                    fmt_num(&mut out, *sum);
+                    out.push('\n');
+                    let _ = writeln!(out, "{}_count {}", m.name, count);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Parse the value of one plain sample line (`name value`) back out of a
+/// rendered exposition; `None` if the metric is absent. Exists so tests and
+/// callers can round-trip snapshots without a Prometheus client.
+pub fn scrape_value(text: &str, name: &str) -> Option<f64> {
+    for line in text.lines() {
+        if line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        if it.next() == Some(name) {
+            return it.next().and_then(|v| v.parse().ok());
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_and_scrapes_back() {
+        let mut r = MetricsRegistry::new();
+        r.counter("puzzle_prefills_total", "Completed prefill passes.", 42.0);
+        r.gauge("puzzle_active_lanes", "Occupied decode lanes.", 3.0);
+        let mut s = LatencySeries::new();
+        s.push(0.002);
+        s.push(0.004);
+        r.histogram("puzzle_ttft_seconds", "Time to first token.", &s);
+        let text = r.render();
+        assert!(text.contains("# TYPE puzzle_prefills_total counter"));
+        assert!(text.contains("# TYPE puzzle_ttft_seconds histogram"));
+        assert!(text.contains("puzzle_ttft_seconds_count 2"));
+        assert!(text.contains("_bucket{le=\"+Inf\"} 2"));
+        assert_eq!(scrape_value(&text, "puzzle_prefills_total"), Some(42.0));
+        assert_eq!(scrape_value(&text, "puzzle_active_lanes"), Some(3.0));
+        assert_eq!(scrape_value(&text, "puzzle_ttft_seconds_count"), Some(2.0));
+        assert_eq!(scrape_value(&text, "absent_metric"), None);
+    }
+}

@@ -1,0 +1,449 @@
+//! Bounded ring-buffer event recorder for the request lifecycle.
+//!
+//! Every stage a request moves through — submitted, admitted (with prefix
+//! hit/miss), prefill chunks, tokens, finish — plus engine-step timeline,
+//! speculative rounds and backend exec totals is a typed [`Event`]. The
+//! [`Tracer`] is a cheap cloneable handle: disabled (the default) it is a
+//! `None` check and records nothing, so serving paths can call it
+//! unconditionally; enabled it stamps each event from its [`Clock`] and
+//! pushes into a bounded ring that overwrites the oldest record when full
+//! (the `dropped` counter says how many were lost).
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::{Arc, Mutex};
+
+use super::clock::Clock;
+use crate::runtime::ExecStats;
+
+/// Default ring capacity (events), generous for bench-scale traces.
+pub const DEFAULT_RING_CAP: usize = 1 << 16;
+
+/// One typed trace event. `id` is the engine/batch request id.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// Request accepted into the waiting queue.
+    Submitted {
+        /// Request id.
+        id: u64,
+        /// Prompt length in tokens.
+        prompt: usize,
+        /// Decode budget in tokens.
+        max_new: usize,
+    },
+    /// Request refused at the door (queue full, prompt too long, ...).
+    Rejected {
+        /// Request id.
+        id: u64,
+        /// Human-readable refusal cause.
+        cause: String,
+    },
+    /// Scheduler moved the request from the queue onto a decode lane.
+    Admitted {
+        /// Request id.
+        id: u64,
+        /// Decode lane index the request landed on.
+        lane: usize,
+        /// Whether the prefix cache matched part of the prompt.
+        hit: bool,
+        /// Matched prefix length in tokens (0 on miss).
+        matched: usize,
+    },
+    /// One prefill pass over `tokens` prompt tokens (budgeted chunk or the
+    /// whole window when prefill is unchunked).
+    PrefillChunk {
+        /// Request id.
+        id: u64,
+        /// Decode lane index.
+        lane: usize,
+        /// Prompt tokens ingested by this pass.
+        tokens: usize,
+    },
+    /// First generated token left the engine (TTFT boundary).
+    FirstToken {
+        /// Request id.
+        id: u64,
+    },
+    /// One generated token.
+    Token {
+        /// Request id.
+        id: u64,
+        /// Token id emitted.
+        tok: u32,
+    },
+    /// Request left the engine.
+    Finished {
+        /// Request id.
+        id: u64,
+        /// Finish reason (`FinishReason::as_str`), or `"cancelled"`.
+        reason: &'static str,
+        /// Generated-token count at finish.
+        tokens: usize,
+    },
+    /// One speculative round on one lane: child drafted, parent verified.
+    SpecRound {
+        /// Batch request id.
+        id: u64,
+        /// Parent decode lane index.
+        lane: usize,
+        /// Draft tokens proposed this round.
+        drafted: usize,
+        /// Draft tokens the parent accepted.
+        accepted: usize,
+        /// Draft tokens rolled back (`drafted - accepted`).
+        rolled_back: usize,
+    },
+    /// One engine scheduler step (admission + prefill chunks + decode).
+    Step {
+        /// Step ordinal.
+        step: u64,
+        /// Active decode lanes after the step.
+        active: usize,
+        /// Requests still queued after the step.
+        queued: usize,
+        /// Step duration in microseconds (0 on the virtual clock, which
+        /// does not advance inside a step).
+        dur_us: u64,
+    },
+    /// Prefix-cache segment evicted to make room.
+    PrefixEvict {
+        /// Evicted segment id.
+        seg: u64,
+        /// Tokens the segment covered.
+        tokens: usize,
+    },
+    /// Cumulative per-executable backend timing, bridged from [`ExecStats`]
+    /// at export time (not per call — that would be far too hot).
+    ExecTotal {
+        /// Executable name.
+        name: String,
+        /// Total invocations.
+        calls: u64,
+        /// Total seconds inside the executable.
+        secs: f64,
+    },
+}
+
+impl Event {
+    /// Stable lowercase tag used by the JSONL exporter.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Event::Submitted { .. } => "submitted",
+            Event::Rejected { .. } => "rejected",
+            Event::Admitted { .. } => "admitted",
+            Event::PrefillChunk { .. } => "prefill_chunk",
+            Event::FirstToken { .. } => "first_token",
+            Event::Token { .. } => "token",
+            Event::Finished { .. } => "finished",
+            Event::SpecRound { .. } => "spec_round",
+            Event::Step { .. } => "step",
+            Event::PrefixEvict { .. } => "prefix_evict",
+            Event::ExecTotal { .. } => "exec_total",
+        }
+    }
+}
+
+/// A recorded event with its timestamp.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Rec {
+    /// Timestamp in microseconds from the tracer's clock.
+    pub ts_us: u64,
+    /// The event payload.
+    pub ev: Event,
+}
+
+struct Ring {
+    cap: usize,
+    dropped: u64,
+    recs: VecDeque<Rec>,
+}
+
+struct Shared {
+    clock: Clock,
+    ring: Mutex<Ring>,
+}
+
+/// Cheap cloneable tracing handle. Disabled is the default and costs one
+/// branch per call site; enabled handles share one clock and one ring.
+#[derive(Clone, Default)]
+pub struct Tracer {
+    inner: Option<Arc<Shared>>,
+}
+
+impl fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tracer(enabled={})", self.enabled())
+    }
+}
+
+impl Tracer {
+    /// A disabled tracer: records nothing, allocates nothing.
+    pub fn disabled() -> Tracer {
+        Tracer { inner: None }
+    }
+
+    fn enabled_with(clock: Clock, cap: usize) -> Tracer {
+        Tracer {
+            inner: Some(Arc::new(Shared {
+                clock,
+                ring: Mutex::new(Ring { cap: cap.max(1), dropped: 0, recs: VecDeque::new() }),
+            })),
+        }
+    }
+
+    /// An enabled tracer on the deterministic virtual tick clock.
+    pub fn virtual_ticks(cap: usize) -> Tracer {
+        Tracer::enabled_with(Clock::virtual_ticks(), cap)
+    }
+
+    /// An enabled tracer on the wall clock (epoch = now).
+    pub fn wall(cap: usize) -> Tracer {
+        Tracer::enabled_with(Clock::wall(), cap)
+    }
+
+    /// Whether events are being recorded.
+    pub fn enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Current clock reading in microseconds (0 when disabled).
+    pub fn now_us(&self) -> u64 {
+        match &self.inner {
+            Some(s) => s.clock.now_us(),
+            None => 0,
+        }
+    }
+
+    /// Advance the virtual clock (no-op when disabled or on wall clock).
+    pub fn set_virtual_tick(&self, tick: u64) {
+        if let Some(s) = &self.inner {
+            s.clock.set_tick(tick);
+        }
+    }
+
+    /// Record `ev` stamped with the current clock reading.
+    pub fn record(&self, ev: Event) {
+        if let Some(s) = &self.inner {
+            let ts = s.clock.now_us();
+            s.push(ts, ev);
+        }
+    }
+
+    /// Record `ev` with an explicit timestamp (used for span starts measured
+    /// before the work they cover).
+    pub fn record_at(&self, ts_us: u64, ev: Event) {
+        if let Some(s) = &self.inner {
+            s.push(ts_us, ev);
+        }
+    }
+
+    /// Bridge cumulative backend timing ([`crate::runtime::Backend::stats_snapshot`])
+    /// into the trace as [`Event::ExecTotal`] records.
+    pub fn record_exec_totals(&self, stats: &[(String, ExecStats)]) {
+        if !self.enabled() {
+            return;
+        }
+        for (name, s) in stats {
+            self.record(Event::ExecTotal { name: name.clone(), calls: s.calls, secs: s.total_secs });
+        }
+    }
+
+    /// Copy out everything currently in the ring.
+    pub fn snapshot(&self) -> TraceLog {
+        match &self.inner {
+            None => TraceLog::default(),
+            Some(s) => {
+                let ring = s.ring.lock().unwrap();
+                TraceLog { recs: ring.recs.iter().cloned().collect(), dropped: ring.dropped }
+            }
+        }
+    }
+}
+
+impl Shared {
+    fn push(&self, ts_us: u64, ev: Event) {
+        let mut ring = self.ring.lock().unwrap();
+        if ring.recs.len() == ring.cap {
+            ring.recs.pop_front();
+            ring.dropped += 1;
+        }
+        ring.recs.push_back(Rec { ts_us, ev });
+    }
+}
+
+/// A snapshot of the ring: recorded events in order plus the overwrite count.
+#[derive(Debug, Clone, Default)]
+pub struct TraceLog {
+    /// Events oldest-first.
+    pub recs: Vec<Rec>,
+    /// Events overwritten because the ring was full.
+    pub dropped: u64,
+}
+
+/// Per-request lifecycle boundaries reconstructed from a [`TraceLog`].
+///
+/// The three segments partition the request's end-to-end time exactly:
+/// `queued + prefill + decode == e2e` whenever all boundaries were recorded
+/// (each is a difference of the same four timestamps).
+#[derive(Debug, Clone)]
+pub struct RequestSpans {
+    /// Request id.
+    pub id: u64,
+    /// Submission timestamp (µs).
+    pub submit_us: u64,
+    /// Admission timestamp, if the request left the queue.
+    pub admit_us: Option<u64>,
+    /// First-token timestamp, if any token was generated.
+    pub first_us: Option<u64>,
+    /// Finish timestamp, if the request completed or was cancelled.
+    pub finish_us: Option<u64>,
+    /// Decode lane, once admitted.
+    pub lane: Option<usize>,
+    /// Whether admission hit the prefix cache.
+    pub hit: bool,
+    /// Matched prefix length in tokens.
+    pub matched: usize,
+    /// Finish reason, once finished.
+    pub reason: Option<&'static str>,
+    /// Generated tokens at finish.
+    pub tokens: usize,
+}
+
+impl RequestSpans {
+    /// Scheduler wait: submit → admit.
+    pub fn queued_us(&self) -> Option<u64> {
+        self.admit_us.map(|a| a - self.submit_us)
+    }
+
+    /// Prefill: admit → first token.
+    pub fn prefill_us(&self) -> Option<u64> {
+        match (self.admit_us, self.first_us) {
+            (Some(a), Some(f)) => Some(f - a),
+            _ => None,
+        }
+    }
+
+    /// Decode: first token → finish.
+    pub fn decode_us(&self) -> Option<u64> {
+        match (self.first_us, self.finish_us) {
+            (Some(f), Some(e)) => Some(e - f),
+            _ => None,
+        }
+    }
+
+    /// End-to-end: submit → finish.
+    pub fn e2e_us(&self) -> Option<u64> {
+        self.finish_us.map(|e| e - self.submit_us)
+    }
+}
+
+/// Reconstruct per-request span boundaries, ordered by first appearance.
+pub fn request_spans(log: &TraceLog) -> Vec<RequestSpans> {
+    let mut order: Vec<u64> = Vec::new();
+    let mut spans: std::collections::BTreeMap<u64, RequestSpans> = std::collections::BTreeMap::new();
+    for r in &log.recs {
+        let (id, ts) = match &r.ev {
+            Event::Submitted { id, .. }
+            | Event::Admitted { id, .. }
+            | Event::FirstToken { id }
+            | Event::Finished { id, .. } => (*id, r.ts_us),
+            _ => continue,
+        };
+        let e = spans.entry(id).or_insert_with(|| {
+            order.push(id);
+            RequestSpans {
+                id,
+                submit_us: ts,
+                admit_us: None,
+                first_us: None,
+                finish_us: None,
+                lane: None,
+                hit: false,
+                matched: 0,
+                reason: None,
+                tokens: 0,
+            }
+        });
+        match &r.ev {
+            Event::Submitted { .. } => e.submit_us = ts,
+            Event::Admitted { lane, hit, matched, .. } => {
+                e.admit_us = Some(ts);
+                e.lane = Some(*lane);
+                e.hit = *hit;
+                e.matched = *matched;
+            }
+            Event::FirstToken { .. } => {
+                if e.first_us.is_none() {
+                    e.first_us = Some(ts);
+                }
+            }
+            Event::Finished { reason, tokens, .. } => {
+                e.finish_us = Some(ts);
+                e.reason = Some(reason);
+                e.tokens = *tokens;
+            }
+            _ => {}
+        }
+    }
+    order.into_iter().filter_map(|id| spans.remove(&id)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_records_nothing() {
+        let t = Tracer::disabled();
+        assert!(!t.enabled());
+        t.record(Event::FirstToken { id: 1 });
+        t.set_virtual_tick(5);
+        assert_eq!(t.now_us(), 0);
+        let log = t.snapshot();
+        assert!(log.recs.is_empty());
+        assert_eq!(log.dropped, 0);
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_counts_drops() {
+        let t = Tracer::enabled_with(Clock::virtual_ticks(), 3);
+        for i in 0..5u64 {
+            t.set_virtual_tick(i);
+            t.record(Event::FirstToken { id: i });
+        }
+        let log = t.snapshot();
+        assert_eq!(log.dropped, 2);
+        let ids: Vec<u64> = log
+            .recs
+            .iter()
+            .map(|r| match r.ev {
+                Event::FirstToken { id } => id,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(ids, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn spans_partition_e2e_exactly() {
+        let t = Tracer::virtual_ticks(64);
+        t.record(Event::Submitted { id: 9, prompt: 4, max_new: 8 });
+        t.set_virtual_tick(3);
+        t.record(Event::Admitted { id: 9, lane: 1, hit: true, matched: 2 });
+        t.set_virtual_tick(5);
+        t.record(Event::FirstToken { id: 9 });
+        t.set_virtual_tick(11);
+        t.record(Event::Finished { id: 9, reason: "eos", tokens: 8 });
+        let spans = request_spans(&t.snapshot());
+        assert_eq!(spans.len(), 1);
+        let s = &spans[0];
+        assert_eq!(s.lane, Some(1));
+        assert!(s.hit);
+        assert_eq!(s.matched, 2);
+        assert_eq!(
+            s.queued_us().unwrap() + s.prefill_us().unwrap() + s.decode_us().unwrap(),
+            s.e2e_us().unwrap()
+        );
+        assert_eq!(s.e2e_us().unwrap(), 11 * super::super::clock::TICK_US);
+    }
+}

@@ -49,6 +49,9 @@ pub(super) enum Ctl {
     Stats(Sender<ServerStats>),
     /// Fetch a snapshot of the engine's accumulated metrics.
     Metrics(Sender<EngineMetrics>),
+    /// Fetch a Prometheus text-format rendering of the metrics registry
+    /// plus live occupancy gauges — the scrape endpoint's payload.
+    MetricsText(Sender<String>),
     /// Stop the worker and hand the engine back to `shutdown`.
     Shutdown,
 }
@@ -102,6 +105,17 @@ impl ServerHandle {
         let (reply, rx) = channel();
         self.ctl.send(Ctl::Metrics(reply)).map_err(|_| anyhow!("server is shut down"))?;
         rx.recv().map_err(|_| anyhow!("server dropped the metrics reply"))
+    }
+
+    /// Live scrape: the engine's metrics registry rendered in the
+    /// Prometheus text exposition format, with point-in-time occupancy
+    /// gauges (active lanes, queue depth, KV bytes) appended. Blocks for
+    /// one round-trip; the snapshot is consistent — the worker renders it
+    /// between engine steps.
+    pub fn metrics_text(&self) -> Result<String> {
+        let (reply, rx) = channel();
+        self.ctl.send(Ctl::MetricsText(reply)).map_err(|_| anyhow!("server is shut down"))?;
+        rx.recv().map_err(|_| anyhow!("server dropped the metrics-text reply"))
     }
 }
 

@@ -57,8 +57,15 @@ pub struct AsyncServer {
 impl AsyncServer {
     /// Move `engine` onto a dedicated worker thread and start serving.
     pub fn spawn(engine: Engine) -> AsyncServer {
+        AsyncServer::spawn_with(engine, None)
+    }
+
+    /// Like [`AsyncServer::spawn`], with a periodic telemetry snapshot:
+    /// every `metrics_interval` engine steps the worker logs a one-line
+    /// occupancy/throughput summary (`serve --metrics-interval N`).
+    pub fn spawn_with(engine: Engine, metrics_interval: Option<usize>) -> AsyncServer {
         let (ctl, rx) = channel();
-        let join = std::thread::spawn(move || worker(engine, rx));
+        let join = std::thread::spawn(move || worker(engine, rx, metrics_interval));
         AsyncServer { ctl, join }
     }
 
@@ -79,9 +86,10 @@ impl AsyncServer {
 /// The worker loop: park while idle, otherwise interleave control
 /// messages with engine steps and fan events out to the per-request
 /// streams.
-fn worker(mut engine: Engine, rx: Receiver<Ctl>) -> Engine {
+fn worker(mut engine: Engine, rx: Receiver<Ctl>, metrics_interval: Option<usize>) -> Engine {
     let mut streams: HashMap<u64, Sender<StreamItem>> = HashMap::new();
     let mut disconnected = false;
+    let mut steps: usize = 0;
     'serve: loop {
         let mut pending: Vec<Ctl> = Vec::new();
         if engine.is_idle() {
@@ -135,6 +143,9 @@ fn worker(mut engine: Engine, rx: Receiver<Ctl>) -> Engine {
                 Ctl::Metrics(reply) => {
                     let _ = reply.send(engine.metrics.clone());
                 }
+                Ctl::MetricsText(reply) => {
+                    let _ = reply.send(metrics_text(&engine));
+                }
                 Ctl::Shutdown => break 'serve,
             }
         }
@@ -149,9 +160,46 @@ fn worker(mut engine: Engine, rx: Receiver<Ctl>) -> Engine {
             // responses were already streamed event-by-event; drop the
             // accumulated duplicates so a long-lived server stays flat
             engine.take_finished();
+            steps += 1;
+            if let Some(n) = metrics_interval {
+                if n > 0 && steps % n == 0 {
+                    crate::info!(
+                        "serve: step={steps} active={} queued={} tokens={} kv_bytes={} prefix_hits={}",
+                        engine.active(),
+                        engine.queue_len(),
+                        engine.metrics.generated_tokens,
+                        engine.kv_allocated_bytes(),
+                        engine.metrics.prefix_hits,
+                    );
+                }
+            }
         }
     }
     engine
+}
+
+/// Render the engine's full metrics registry plus the worker's live
+/// occupancy gauges in the Prometheus text exposition format.
+fn metrics_text(engine: &Engine) -> String {
+    let mut reg = engine.metrics.registry();
+    reg.gauge("puzzle_active_lanes", "Sequences currently holding a decode slot", engine.active() as f64);
+    reg.gauge("puzzle_queue_depth", "Requests waiting in the admission queue", engine.queue_len() as f64);
+    reg.gauge(
+        "puzzle_kv_allocated_bytes",
+        "Bytes of the paged KV pool currently allocated",
+        engine.kv_allocated_bytes() as f64,
+    );
+    reg.gauge(
+        "puzzle_prefix_retained_bytes",
+        "Allocated bytes held by retained prefix segments",
+        engine.prefix_retained_bytes() as f64,
+    );
+    reg.gauge(
+        "puzzle_prefix_segments",
+        "Retained prefix segments currently held",
+        engine.prefix_segments() as f64,
+    );
+    reg.render()
 }
 
 /// Forward one step's events to the per-request streams. A send failure

@@ -63,6 +63,7 @@ use anyhow::{anyhow, Result};
 use crate::arch::{Arch, AttnChoice};
 use crate::data::world::EOS;
 use crate::model::CompiledModel;
+use crate::obs::{Event, Tracer};
 use crate::runtime::{val_f32, val_i32, val_to_tensor, SharedBackend, Value};
 use crate::tensor::Tensor;
 use crate::util::Rng;
@@ -213,6 +214,13 @@ pub struct EngineConfig {
     /// synchronous admit-then-prefill behavior. Outputs are byte-identical
     /// either way (see the module docs).
     pub prefill_budget: Option<usize>,
+    /// Request-lifecycle tracer threaded through the engine. Disabled by
+    /// default — one branch per call site, no allocation — so there is no
+    /// cost unless a handle built by `obs::Tracer::virtual_ticks`/`wall`
+    /// is installed. The engine records the full lifecycle (submitted /
+    /// admitted / prefill chunks / tokens / finished) plus the step
+    /// timeline into it; keep a clone to export after the run.
+    pub tracer: Tracer,
 }
 
 impl Default for EngineConfig {
@@ -226,6 +234,7 @@ impl Default for EngineConfig {
             prefix_cache: false,
             prefix_retain_budget: 8 << 20,
             prefill_budget: None,
+            tracer: Tracer::disabled(),
         }
     }
 }
@@ -281,6 +290,12 @@ impl EngineConfig {
     /// (see the `prefill_budget` field docs).
     pub fn prefill_budget(mut self, tokens: usize) -> EngineConfig {
         self.prefill_budget = Some(tokens);
+        self
+    }
+
+    /// Install a request-lifecycle tracer (see the `tracer` field docs).
+    pub fn tracer(mut self, tracer: Tracer) -> EngineConfig {
+        self.tracer = tracer;
         self
     }
 
@@ -390,6 +405,8 @@ pub struct Engine {
     /// `None` when off or when the backend cannot transfer KV rows.
     prefix: Option<PrefixCache>,
     events: Vec<StreamEvent>,
+    /// Lifecycle tracer (cloned from the config; disabled = no-op).
+    trace: Tracer,
     /// Engine-level counters and latency records.
     pub metrics: EngineMetrics,
     finished: Vec<Response>,
@@ -440,6 +457,7 @@ impl Engine {
         } else {
             None
         };
+        let trace = cfg.tracer.clone();
         Ok(Engine {
             be,
             cfg,
@@ -453,6 +471,7 @@ impl Engine {
             paged,
             prefix,
             events: Vec::new(),
+            trace,
             metrics: EngineMetrics::default(),
             finished: Vec::new(),
             next_id: 1,
@@ -503,12 +522,16 @@ impl Engine {
         if self.queue.len() >= self.cfg.max_queue {
             return Err(self.reject(id, format!("queue full (max_queue = {})", self.cfg.max_queue)));
         }
+        self.trace.record(Event::Submitted { id, prompt: req.prompt.len(), max_new: req.max_new });
         self.queue.push(Queued { id, req, t_submit: Instant::now(), submit_step: self.steps });
         Ok(id)
     }
 
     fn reject(&mut self, id: u64, cause: String) -> anyhow::Error {
         self.metrics.rejected_prompts += 1;
+        if self.trace.enabled() {
+            self.trace.record(Event::Rejected { id, cause: cause.clone() });
+        }
         let err = anyhow!("request {id} rejected: {cause}");
         self.events.push(StreamEvent::Rejected { id, cause });
         err
@@ -749,6 +772,12 @@ impl Engine {
         let (s_max, sp, v) = (mcfg.s_max, mcfg.s_prefill, mcfg.v);
         let Queued { id, req, t_submit, .. } = q;
         let horizon = req.horizon(s_max);
+        self.trace.record(Event::Admitted {
+            id,
+            lane: slot_idx,
+            hit: hit.is_some(),
+            matched: hit.map(|h| h.len).unwrap_or(0),
+        });
         if let Some(hit) = hit {
             // admit() checked can_admit_shared for this horizon, so the
             // booking cannot fail here short of an internal bug
@@ -809,6 +838,7 @@ impl Engine {
         }
         let chunked = req.prompt.len() > sp;
         let (x, plen) = self.prefill_window(slot_idx, &req.prompt)?;
+        self.trace.record(Event::PrefillChunk { id, lane: slot_idx, tokens: plen });
         if chunked {
             // the prompt continues past the window: the true next token is
             // known, so skip the head matmul entirely and stream the tail
@@ -869,6 +899,10 @@ impl Engine {
             .ttft
             .push(slot.t_first.unwrap().duration_since(slot.t_submit).as_secs_f64());
         self.metrics.generated_tokens += 1;
+        if self.trace.enabled() {
+            self.trace.record(Event::FirstToken { id });
+            self.trace.record(Event::Token { id, tok: first });
+        }
         self.events.push(StreamEvent::Token { id, tok: first });
         // immediate completion checks (max_new == 0 is rejected at submit,
         // so max_new == 1 is the only budget exhausted here). The horizon
@@ -990,6 +1024,7 @@ impl Engine {
                 // first *generated* token of a chunked prompt
                 slot.t_first = Some(now);
                 self.metrics.ttft.push(now.duration_since(slot.t_submit).as_secs_f64());
+                self.trace.record(Event::FirstToken { id: slot.id });
             } else if let Some(prev) = slot.t_last {
                 // gap since the previous generated token of this request
                 self.metrics.itl.push(now.duration_since(prev).as_secs_f64());
@@ -1008,6 +1043,7 @@ impl Engine {
             } else {
                 None
             };
+            self.trace.record(Event::Token { id, tok: next });
             self.events.push(StreamEvent::Token { id, tok: next });
             if let Some(reason) = reason {
                 to_finish.push((i, reason));
@@ -1058,6 +1094,7 @@ impl Engine {
             self.metrics.requests_completed += 1;
             self.metrics.e2e.push(e2e_secs);
         }
+        self.trace.record(Event::Finished { id, reason: reason.as_str(), tokens: tokens.len() });
         self.events.push(StreamEvent::Finished { id, reason });
         self.finished.push(Response { id, tokens, finish: reason, ttft_secs, e2e_secs });
     }
@@ -1075,10 +1112,12 @@ impl Engine {
             .into_iter()
             .find(|&id| Some(id) != protect && self.paged.seg_refs(id) == Some(0));
         let Some(id) = candidate else { return false };
+        let seg_tokens = cache.rows(id).map(|s| s.len).unwrap_or(0);
         self.prefix.as_mut().unwrap().remove(id);
         let evicted = self.paged.evict_shared(id);
         debug_assert!(evicted, "unreferenced segment must evict cleanly");
         self.metrics.prefix_evictions += 1;
+        self.trace.record(Event::PrefixEvict { seg: id, tokens: seg_tokens });
         true
     }
 
@@ -1266,6 +1305,7 @@ impl Engine {
         for (lane, _, chunk) in &plan {
             let slot = self.slots[*lane].as_mut().unwrap();
             let c = chunk.len();
+            self.trace.record(Event::PrefillChunk { id: slot.id, lane: *lane, tokens: c });
             slot.len += c;
             for _ in 0..c - 1 {
                 slot.pending.pop_front();
@@ -1299,6 +1339,7 @@ impl Engine {
     /// callers see the same throughput metrics.
     pub fn step(&mut self) -> Result<Vec<StreamEvent>> {
         let t0 = Instant::now();
+        let ts = self.trace.now_us();
         self.admit()?;
         self.prefill_chunks()?;
         if self.active() > 0 {
@@ -1306,6 +1347,17 @@ impl Engine {
         }
         self.steps += 1;
         self.metrics.wall_secs += t0.elapsed().as_secs_f64();
+        if self.trace.enabled() {
+            self.trace.record_at(
+                ts,
+                Event::Step {
+                    step: (self.steps - 1) as u64,
+                    active: self.active(),
+                    queued: self.queue.len(),
+                    dur_us: self.trace.now_us().saturating_sub(ts),
+                },
+            );
+        }
         Ok(std::mem::take(&mut self.events))
     }
 
@@ -1376,6 +1428,18 @@ impl Engine {
             .iter()
             .position(|s| s.as_ref().is_some_and(|s| s.id == id))
             .ok_or_else(|| anyhow!("unknown speculative sequence {id}"))
+    }
+
+    /// Lane currently held by speculative sequence `id`, if it is open —
+    /// exposed so speculative drivers can label per-lane trace events.
+    pub fn spec_lane_of(&self, id: u64) -> Option<usize> {
+        self.spec_lane(id).ok()
+    }
+
+    /// The engine's lifecycle tracer (disabled unless one was configured).
+    /// Drivers clone it to stamp their own events and to export the log.
+    pub fn tracer(&self) -> &Tracer {
+        &self.trace
     }
 
     /// Committed positions of a speculative sequence (== tokens whose K/V

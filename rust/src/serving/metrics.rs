@@ -1,6 +1,6 @@
 //! Engine-level serving metrics (throughput / latency, Table 3's columns).
 
-use crate::util::{mean, percentile};
+use crate::obs::{LatencySeries, MetricsRegistry};
 
 use super::engine::FinishReason;
 
@@ -19,14 +19,16 @@ pub struct EngineMetrics {
     pub prefills: usize,
     /// Wall-clock seconds inside `step()` / speculative drivers.
     pub wall_secs: f64,
-    /// per-request time-to-first-token (secs)
-    pub ttft: Vec<f64>,
+    /// per-request time-to-first-token (secs; bounded — exact percentiles
+    /// up to the reservoir cap, log-bucketed beyond, so a long-running
+    /// server never grows this)
+    pub ttft: LatencySeries,
     /// inter-token latency: gap between consecutive *generated* tokens of
     /// one request (secs, pooled across requests; SLO goodput scoring and
     /// the summary percentiles both read this)
-    pub itl: Vec<f64>,
+    pub itl: LatencySeries,
     /// per-request end-to-end latency (secs; naturally finished requests)
-    pub e2e: Vec<f64>,
+    pub e2e: LatencySeries,
     /// engine-side scheduling overhead per decode step (non-execute time)
     pub sched_overhead_secs: f64,
     /// Seconds inside backend executions.
@@ -118,42 +120,42 @@ impl EngineMetrics {
 
     /// Mean time-to-first-token, seconds.
     pub fn mean_ttft(&self) -> f64 {
-        mean(&self.ttft)
+        self.ttft.mean()
     }
 
     /// Median time-to-first-token, seconds.
     pub fn p50_ttft(&self) -> f64 {
-        percentile(&self.ttft, 50.0)
+        self.ttft.percentile(50.0)
     }
 
     /// 95th-percentile time-to-first-token, seconds.
     pub fn p95_ttft(&self) -> f64 {
-        percentile(&self.ttft, 95.0)
+        self.ttft.percentile(95.0)
     }
 
     /// Mean inter-token latency, seconds.
     pub fn mean_itl(&self) -> f64 {
-        mean(&self.itl)
+        self.itl.mean()
     }
 
     /// Median inter-token latency, seconds.
     pub fn p50_itl(&self) -> f64 {
-        percentile(&self.itl, 50.0)
+        self.itl.percentile(50.0)
     }
 
     /// 95th-percentile inter-token latency, seconds.
     pub fn p95_itl(&self) -> f64 {
-        percentile(&self.itl, 95.0)
+        self.itl.percentile(95.0)
     }
 
     /// Median end-to-end latency, seconds.
     pub fn p50_e2e(&self) -> f64 {
-        percentile(&self.e2e, 50.0)
+        self.e2e.percentile(50.0)
     }
 
     /// 95th-percentile end-to-end latency, seconds.
     pub fn p95_e2e(&self) -> f64 {
-        percentile(&self.e2e, 95.0)
+        self.e2e.percentile(95.0)
     }
 
     /// Fraction of wall time not spent executing blocks (L3 overhead; the
@@ -249,6 +251,46 @@ impl EngineMetrics {
             self.rejected_prompts
         )
     }
+
+    /// Snapshot every counter into a typed [`MetricsRegistry`] (the
+    /// Prometheus bridge behind `ServerHandle::metrics_text`). Spec and
+    /// prefix counters are always present — zero-valued when the feature
+    /// saw no traffic — so scrapers get a stable schema.
+    pub fn registry(&self) -> MetricsRegistry {
+        let mut r = MetricsRegistry::new();
+        let c = |v: usize| v as f64;
+        r.counter("puzzle_requests_completed_total", "Requests that ran to a natural finish.", c(self.requests_completed));
+        r.counter("puzzle_prompt_tokens_total", "Prompt tokens ingested.", c(self.prompt_tokens));
+        r.counter("puzzle_generated_tokens_total", "Tokens sampled or committed.", c(self.generated_tokens));
+        r.counter("puzzle_decode_steps_total", "Batched decode forwards executed.", c(self.decode_steps));
+        r.counter("puzzle_prefills_total", "Prefill passes executed.", c(self.prefills));
+        r.counter("puzzle_rejected_prompts_total", "Requests refused at submit.", c(self.rejected_prompts));
+        r.counter("puzzle_finished_eos_total", "Requests finished on EOS.", c(self.finished_eos));
+        r.counter("puzzle_finished_max_new_total", "Requests that exhausted max_new.", c(self.finished_max_new));
+        r.counter("puzzle_finished_horizon_total", "Requests that filled the cache horizon.", c(self.finished_horizon));
+        r.counter("puzzle_cancelled_total", "Requests torn down by cancel.", c(self.cancelled));
+        r.counter("puzzle_chunked_prefills_total", "Over-window prompts ingested via chunked decode.", c(self.chunked_prefills));
+        r.counter("puzzle_prefill_chunk_passes_total", "Budgeted prefill-chunk passes.", c(self.prefill_chunk_passes));
+        r.counter("puzzle_prefill_chunk_tokens_total", "Prompt tokens ingested by budgeted chunk passes.", c(self.prefill_chunk_tokens));
+        r.counter("puzzle_draft_proposed_total", "Draft tokens proposed by the child drafter.", c(self.draft_proposed));
+        r.counter("puzzle_draft_accepted_total", "Draft tokens accepted by parent verification.", c(self.draft_accepted));
+        r.counter("puzzle_spec_passes_total", "Teacher-forced multi-token verify passes.", c(self.spec_passes));
+        r.counter("puzzle_spec_rollbacks_total", "KV rollbacks after partial acceptance.", c(self.spec_rollbacks));
+        r.counter("puzzle_spec_fused_passes_total", "Fused multi-token forward chains.", c(self.spec_fused_passes));
+        r.counter("puzzle_prefix_hits_total", "Admissions that imported a retained prefix.", c(self.prefix_hits));
+        r.counter("puzzle_prefix_misses_total", "Admissions that ran a full cold prefill.", c(self.prefix_misses));
+        r.counter("puzzle_prefix_tokens_saved_total", "Prompt tokens served from retained prefixes.", c(self.prefix_tokens_saved));
+        r.counter("puzzle_prefix_evictions_total", "Retained prefix segments evicted.", c(self.prefix_evictions));
+        r.counter("puzzle_prefix_gen_hits_total", "Prefix hits reaching into generated tokens.", c(self.prefix_gen_hits));
+        r.counter("puzzle_prefix_gen_tokens_saved_total", "Generated-origin tokens matched by prefix hits.", c(self.prefix_gen_tokens_saved));
+        r.counter("puzzle_wall_seconds_total", "Wall-clock seconds inside step()/speculative drivers.", self.wall_secs);
+        r.counter("puzzle_execute_seconds_total", "Seconds inside backend executions.", self.execute_secs);
+        r.counter("puzzle_sched_overhead_seconds_total", "Engine-side scheduling overhead seconds.", self.sched_overhead_secs);
+        r.histogram("puzzle_ttft_seconds", "Per-request time to first token.", &self.ttft);
+        r.histogram("puzzle_itl_seconds", "Inter-token latency, pooled across requests.", &self.itl);
+        r.histogram("puzzle_e2e_seconds", "Per-request end-to-end latency.", &self.e2e);
+        r
+    }
 }
 
 #[cfg(test)]
@@ -316,7 +358,7 @@ mod tests {
         // one request whose generated tokens landed at t = 0, 10, 20, 30,
         // 100 ms: four inter-token gaps of 10/10/10/70 ms — a p95 stall
         // the mean alone would hide
-        let m = EngineMetrics { itl: vec![0.010, 0.010, 0.010, 0.070], ..Default::default() };
+        let m = EngineMetrics { itl: vec![0.010, 0.010, 0.010, 0.070].into(), ..Default::default() };
         assert_eq!(m.p50_itl(), 0.010);
         assert_eq!(m.p95_itl(), 0.070);
         assert!((m.mean_itl() - 0.025).abs() < 1e-12);
@@ -352,8 +394,8 @@ mod tests {
     #[test]
     fn latency_percentiles() {
         let m = EngineMetrics {
-            ttft: vec![0.010, 0.020, 0.030, 0.040, 0.100],
-            e2e: vec![0.1, 0.2, 0.3, 0.4, 0.5],
+            ttft: vec![0.010, 0.020, 0.030, 0.040, 0.100].into(),
+            e2e: vec![0.1, 0.2, 0.3, 0.4, 0.5].into(),
             ..Default::default()
         };
         assert_eq!(m.p50_ttft(), 0.030);
@@ -361,5 +403,33 @@ mod tests {
         assert_eq!(m.p50_e2e(), 0.3);
         assert_eq!(m.p95_e2e(), 0.5);
         assert!(m.summary().contains("ttft p50/p95"));
+    }
+
+    #[test]
+    fn registry_round_trips_prefix_spec_chunk_counters() {
+        let m = EngineMetrics {
+            generated_tokens: 64,
+            prefix_hits: 3,
+            prefix_tokens_saved: 48,
+            draft_proposed: 8,
+            draft_accepted: 6,
+            spec_passes: 2,
+            prefill_chunk_passes: 4,
+            prefill_chunk_tokens: 41,
+            ttft: vec![0.010, 0.020].into(),
+            ..Default::default()
+        };
+        let text = m.registry().render();
+        let v = |name: &str| crate::obs::scrape_value(&text, name).unwrap();
+        assert_eq!(v("puzzle_generated_tokens_total"), 64.0);
+        assert_eq!(v("puzzle_prefix_hits_total"), 3.0);
+        assert_eq!(v("puzzle_prefix_tokens_saved_total"), 48.0);
+        assert_eq!(v("puzzle_draft_proposed_total"), 8.0);
+        assert_eq!(v("puzzle_draft_accepted_total"), 6.0);
+        assert_eq!(v("puzzle_spec_passes_total"), 2.0);
+        assert_eq!(v("puzzle_prefill_chunk_passes_total"), 4.0);
+        assert_eq!(v("puzzle_prefill_chunk_tokens_total"), 41.0);
+        assert_eq!(v("puzzle_ttft_seconds_count"), 2.0);
+        assert!(text.contains("# TYPE puzzle_ttft_seconds histogram"));
     }
 }

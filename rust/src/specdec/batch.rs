@@ -38,11 +38,13 @@
 //! a time and reads per-token `StreamEvent`s for latency scoring.
 
 use std::collections::{HashMap, VecDeque};
+use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
 use crate::arch::Arch;
 use crate::data::world::EOS;
+use crate::obs::{Event, Tracer};
 use crate::perf::HwProfile;
 use crate::runtime::SharedBackend;
 use crate::serving::sampling::{dist, draw, sample};
@@ -126,6 +128,11 @@ pub struct SpecBatch {
     finished: Vec<(u64, SpecResponse)>,
     /// Pending stream events (`tick` drains).
     events: Vec<StreamEvent>,
+    /// Lifecycle tracer shared with both engines (disabled by default).
+    /// Batch ids are its request ids: the engines' own `spec_open`
+    /// sequence ids never produce lifecycle events, so the id spaces
+    /// cannot collide on per-request trace tracks.
+    trace: Tracer,
     next_id: u64,
 }
 
@@ -153,6 +160,7 @@ impl SpecBatch {
         });
         let parent = cfg.engine.clone().build(be.clone(), parent_store, parent_arch)?;
         let child = cfg.engine.clone().build(be, child_store, child_arch)?;
+        let trace = parent.tracer().clone();
         Ok(SpecBatch {
             parent,
             child,
@@ -164,8 +172,16 @@ impl SpecBatch {
             waiting: VecDeque::new(),
             finished: Vec::new(),
             events: Vec::new(),
+            trace,
             next_id: 0,
         })
+    }
+
+    /// The lifecycle tracer both engines share (disabled unless
+    /// `SpecConfig::engine` configured one). Drivers use it to stamp
+    /// virtual ticks and to export the trace.
+    pub fn tracer(&self) -> &Tracer {
+        &self.trace
     }
 
     /// The parent engine's metrics: generation counters plus the
@@ -300,10 +316,14 @@ impl SpecBatch {
         };
         if let Some(cause) = cause {
             self.parent.metrics.rejected_prompts += 1;
+            if self.trace.enabled() {
+                self.trace.record(Event::Rejected { id, cause: cause.clone() });
+            }
             let err = anyhow!("request {id} rejected: {cause}");
             self.events.push(StreamEvent::Rejected { id, cause });
             return Err(err);
         }
+        self.trace.record(Event::Submitted { id, prompt: req.prompt.len(), max_new: req.max_new });
         self.waiting.push_back((id, req));
         Ok(id)
     }
@@ -326,7 +346,14 @@ impl SpecBatch {
     /// included), then `Finished` once per sequence. An error aborts the
     /// whole in-flight set (`abort`), exactly like `generate_many`.
     pub fn tick(&mut self) -> Result<Vec<StreamEvent>> {
-        match self.tick_inner() {
+        // wall time accrues on the parent (the batch's metrics surface),
+        // mirroring Engine::step — execute_secs lands on whichever engine
+        // ran the forward, so parent overhead_frac stays meaningful under
+        // speculative serving too
+        let t0 = Instant::now();
+        let r = self.tick_inner();
+        self.parent.metrics.wall_secs += t0.elapsed().as_secs_f64();
+        match r {
             Ok(()) => Ok(std::mem::take(&mut self.events)),
             Err(e) => {
                 self.abort();
@@ -355,6 +382,12 @@ impl SpecBatch {
         r?;
         for lane in &mut self.lanes {
             while lane.emitted < lane.out.len() {
+                if self.trace.enabled() {
+                    if lane.emitted == 0 {
+                        self.trace.record(Event::FirstToken { id: lane.id });
+                    }
+                    self.trace.record(Event::Token { id: lane.id, tok: lane.out[lane.emitted] });
+                }
                 self.events.push(StreamEvent::Token { id: lane.id, tok: lane.out[lane.emitted] });
                 lane.emitted += 1;
             }
@@ -398,12 +431,23 @@ impl SpecBatch {
             if self.lanes[i].done.is_some() {
                 let mut lane = self.lanes.swap_remove(i);
                 while lane.emitted < lane.out.len() {
+                    if self.trace.enabled() {
+                        if lane.emitted == 0 {
+                            self.trace.record(Event::FirstToken { id: lane.id });
+                        }
+                        self.trace.record(Event::Token { id: lane.id, tok: lane.out[lane.emitted] });
+                    }
                     self.events
                         .push(StreamEvent::Token { id: lane.id, tok: lane.out[lane.emitted] });
                     lane.emitted += 1;
                 }
                 let id = lane.id;
                 let resp = self.close_lane(lane);
+                self.trace.record(Event::Finished {
+                    id,
+                    reason: resp.finish.as_str(),
+                    tokens: resp.tokens.len(),
+                });
                 self.events.push(StreamEvent::Finished { id, reason: resp.finish });
                 self.finished.push((id, resp));
                 closed = true;
@@ -419,6 +463,11 @@ impl SpecBatch {
     /// the parent prefill — the same sample the plain engine takes at
     /// admission, from the same (accept) stream as the session driver.
     fn open_lane(&mut self, id: u64, req: &SpecRequest) -> Result<Lane> {
+        // prefix-cache hit/miss for the Admitted event comes from the
+        // parent's counters around spec_open — the engine has no
+        // lifecycle view of externally driven sequences
+        let (hits0, saved0) =
+            (self.parent.metrics.prefix_hits, self.parent.metrics.prefix_tokens_saved);
         let (pid, first) = self.parent.spec_open(&req.prompt)?;
         let cid = match self.child.spec_open(&req.prompt) {
             Ok((cid, _)) => cid,
@@ -427,6 +476,14 @@ impl SpecBatch {
                 return Err(e);
             }
         };
+        if self.trace.enabled() {
+            self.trace.record(Event::Admitted {
+                id,
+                lane: self.parent.spec_lane_of(pid).unwrap_or(0),
+                hit: self.parent.metrics.prefix_hits > hits0,
+                matched: self.parent.metrics.prefix_tokens_saved - saved0,
+            });
+        }
         let mut accept_rng = Rng::new(req.sampling.seed);
         let draft_rng = Rng::new(req.sampling.seed ^ 0x5bec_dec0);
         let t0 = sample(&first, &req.sampling, &mut accept_rng) as u32;
@@ -636,6 +693,15 @@ impl SpecBatch {
                 } else {
                     None
                 };
+            }
+            if self.trace.enabled() {
+                self.trace.record(Event::SpecRound {
+                    id: lanes[i].id,
+                    lane: self.parent.spec_lane_of(lanes[i].pid).unwrap_or(0),
+                    drafted: kd,
+                    accepted: a,
+                    rolled_back: kd - a,
+                });
             }
             // --- rollback: rejected drafts hand their pages back; other
             // lanes' pages are untouched (asserted in the tests) ---

@@ -19,6 +19,7 @@ use std::fmt::Write as _;
 use anyhow::{anyhow, Result};
 
 use crate::data::world::EOS;
+use crate::obs::Tracer;
 use crate::serving::{Engine, EngineMetrics, FinishReason, GenRequest, StreamEvent};
 use crate::specdec::{SpecBatch, SpecRequest};
 use crate::util::Timer;
@@ -63,6 +64,16 @@ impl Server<'_> {
         match self {
             Server::Engine(e) => &e.metrics,
             Server::Spec(s) => s.parent_metrics(),
+        }
+    }
+
+    /// The server's lifecycle tracer (the parent engine's, for a
+    /// speculative server). The replay loop stamps it with the virtual
+    /// tick so trace timestamps match the scored latencies exactly.
+    pub fn tracer(&self) -> &Tracer {
+        match self {
+            Server::Engine(e) => e.tracer(),
+            Server::Spec(s) => s.tracer(),
         }
     }
 }
@@ -184,6 +195,7 @@ pub fn replay(trace: &Trace, server: &mut Server, config: &str) -> Result<Worklo
     let mut log = String::new();
     let mut now = 0usize;
     loop {
+        server.tracer().set_virtual_tick(now as u64);
         // submit due turns, in conversation order (deterministic)
         for ci in 0..convs.len() {
             let cs = &mut convs[ci];

@@ -1,0 +1,276 @@
+//! Observability integration tests: trace determinism (same trace spec +
+//! seed on the virtual clock serializes to byte-identical JSONL, per
+//! serving configuration), per-request span reconstruction (queued +
+//! prefill + decode tiles e2e exactly), event-kind coverage per config,
+//! the overhead-accounting regression for every serving mode (satellite
+//! of DESIGN.md §11), and the Prometheus scrape round-trip through the
+//! async server's control channel. Hermetic (RefBackend + tiny manifest).
+
+use puzzle::arch::Arch;
+use puzzle::obs::{jsonl, request_spans, Event, TraceLog, Tracer, DEFAULT_RING_CAP};
+use puzzle::runtime::{share, SharedBackend};
+use puzzle::serving::{EngineConfig, GenRequest};
+use puzzle::specdec::{SpecBatch, SpecConfig, SpecRequest};
+use puzzle::util::Rng;
+use puzzle::weights::store::init_parent;
+use puzzle::weights::Store;
+use puzzle::workload::{replay, MixKind, Server, Trace, TraceSpec, WorkloadRun};
+
+#[cfg(not(feature = "pjrt"))]
+fn backend() -> SharedBackend {
+    share(puzzle::runtime::RefBackend::tiny())
+}
+
+#[cfg(feature = "pjrt")]
+fn backend() -> SharedBackend {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    assert!(dir.join("manifest.json").exists(), "run `make artifacts` first");
+    share(puzzle::runtime::XlaBackend::open(&dir).unwrap())
+}
+
+fn setup() -> (SharedBackend, Store, Arch, Trace) {
+    let be = backend();
+    let cfg = be.man().cfg.clone();
+    let mut rng = Rng::new(1);
+    let store = init_parent(be.man(), &mut rng);
+    let arch = Arch::parent(cfg.n_layers);
+    let trace =
+        TraceSpec::small(MixKind::MultiTurn, 7).generate(cfg.v as u32, cfg.s_prefill, cfg.s_max);
+    (be, store, arch, trace)
+}
+
+fn engine_cfg(prefix: bool) -> EngineConfig {
+    EngineConfig::new().kv_budget_bytes(16 << 20).page_len(4).prefix_cache(prefix, 8 << 20)
+}
+
+/// One fresh replay of `trace` under the named configuration with a
+/// virtual-clock tracer attached; returns the run and the trace log.
+fn traced_run(
+    be: &SharedBackend,
+    store: &Store,
+    arch: &Arch,
+    trace: &Trace,
+    config: &str,
+    tracer: Tracer,
+) -> (WorkloadRun, TraceLog) {
+    let run = match config {
+        "plain" => {
+            let mut eng =
+                engine_cfg(false).tracer(tracer.clone()).build(be.clone(), store, arch).unwrap();
+            replay(trace, &mut Server::Engine(&mut eng), config).unwrap()
+        }
+        "prefix_cache" => {
+            let mut eng =
+                engine_cfg(true).tracer(tracer.clone()).build(be.clone(), store, arch).unwrap();
+            replay(trace, &mut Server::Engine(&mut eng), config).unwrap()
+        }
+        "speculative" => {
+            let cfg = SpecConfig {
+                draft_k: 3,
+                adapt_k_max: None,
+                engine: engine_cfg(true).tracer(tracer.clone()),
+            };
+            let mut batch = SpecBatch::new(be.clone(), store, arch, store, arch, cfg).unwrap();
+            replay(trace, &mut Server::Spec(&mut batch), config).unwrap()
+        }
+        other => panic!("unknown test config {other}"),
+    };
+    (run, tracer.snapshot())
+}
+
+#[test]
+fn traced_jsonl_is_byte_identical_per_configuration_and_does_not_perturb_serving() {
+    let (be, store, arch, trace) = setup();
+    for config in ["plain", "prefix_cache", "speculative"] {
+        let (run_a, log_a) =
+            traced_run(&be, &store, &arch, &trace, config, Tracer::virtual_ticks(DEFAULT_RING_CAP));
+        let (run_b, log_b) =
+            traced_run(&be, &store, &arch, &trace, config, Tracer::virtual_ticks(DEFAULT_RING_CAP));
+        assert!(!log_a.recs.is_empty(), "{config}: traced replay must record events");
+        assert_eq!(log_a.dropped, 0, "{config}: the default ring must hold a small trace");
+        assert_eq!(
+            jsonl(&log_a),
+            jsonl(&log_b),
+            "{config}: same trace + seed must serialize byte-identically"
+        );
+        // tracing must observe, never steer: the scored replay is
+        // identical to an untraced run of the same configuration
+        let (run_c, log_c) = traced_run(&be, &store, &arch, &trace, config, Tracer::disabled());
+        assert!(log_c.recs.is_empty());
+        assert_eq!(run_a.event_log, run_c.event_log, "{config}: tracing perturbed the replay");
+        assert_eq!(run_a.ticks, run_c.ticks);
+        assert_eq!(run_a.event_log, run_b.event_log);
+    }
+}
+
+#[test]
+fn request_spans_tile_e2e_exactly_on_the_virtual_clock() {
+    let (be, store, arch, trace) = setup();
+    let (run, log) = traced_run(
+        &be,
+        &store,
+        &arch,
+        &trace,
+        "prefix_cache",
+        Tracer::virtual_ticks(DEFAULT_RING_CAP),
+    );
+    let spans = request_spans(&log);
+    assert_eq!(
+        spans.iter().filter(|s| s.finish_us.is_some()).count(),
+        run.completed(),
+        "every completed request reconstructs a finished span"
+    );
+    let mut full = 0;
+    for s in &spans {
+        if let (Some(q), Some(p), Some(d), Some(e)) =
+            (s.queued_us(), s.prefill_us(), s.decode_us(), s.e2e_us())
+        {
+            assert_eq!(q + p + d, e, "req {}: spans must partition e2e exactly", s.id);
+            full += 1;
+        }
+    }
+    assert!(full > 0, "the replay must produce fully bounded spans");
+}
+
+#[test]
+fn event_kinds_cover_their_configurations() {
+    let (be, store, arch, trace) = setup();
+    let has = |log: &TraceLog, f: &dyn Fn(&Event) -> bool| log.recs.iter().any(|r| f(&r.ev));
+
+    let (_, plain) =
+        traced_run(&be, &store, &arch, &trace, "plain", Tracer::virtual_ticks(DEFAULT_RING_CAP));
+    assert!(has(&plain, &|e| matches!(e, Event::Submitted { .. })));
+    assert!(has(&plain, &|e| matches!(e, Event::Step { .. })));
+    assert!(has(&plain, &|e| matches!(e, Event::PrefillChunk { .. })));
+    assert!(has(&plain, &|e| matches!(e, Event::FirstToken { .. })));
+    assert!(has(&plain, &|e| matches!(e, Event::Finished { .. })));
+    assert!(
+        !has(&plain, &|e| matches!(e, Event::Admitted { hit: true, .. })),
+        "no prefix cache, no hits"
+    );
+
+    let (_, warm) = traced_run(
+        &be,
+        &store,
+        &arch,
+        &trace,
+        "prefix_cache",
+        Tracer::virtual_ticks(DEFAULT_RING_CAP),
+    );
+    assert!(
+        has(&warm, &|e| matches!(e, Event::Admitted { hit: true, .. })),
+        "multi-turn prompts must record prefix-hit admissions"
+    );
+
+    let (_, spec) = traced_run(
+        &be,
+        &store,
+        &arch,
+        &trace,
+        "speculative",
+        Tracer::virtual_ticks(DEFAULT_RING_CAP),
+    );
+    assert!(
+        has(&spec, &|e| matches!(e, Event::SpecRound { .. })),
+        "speculative serving must record draft/verify rounds"
+    );
+    assert!(has(&spec, &|e| matches!(
+        e,
+        Event::SpecRound { drafted, accepted, rolled_back, .. }
+            if *drafted == *accepted + *rolled_back
+    )));
+    assert!(
+        has(&spec, &|e| matches!(e, Event::Admitted { hit: true, .. })),
+        "the speculative config runs the prefix cache on both engines"
+    );
+}
+
+/// Satellite regression: every serving mode accrues both wall time and
+/// backend execute time, so `overhead_frac` is meaningful (< 1.0) whenever
+/// any forward ran — including fused speculative verification and budgeted
+/// chunked prefill.
+#[test]
+fn overhead_accounting_covers_every_serving_mode() {
+    let (be, store, arch, _) = setup();
+    let cfg = be.man().cfg.clone();
+    let check = |label: &str, m: &puzzle::serving::EngineMetrics| {
+        assert!(m.wall_secs > 0.0, "{label}: wall time must accrue");
+        assert!(m.execute_secs > 0.0, "{label}: backend execute time must accrue");
+        assert!(m.overhead_frac() < 1.0, "{label}: overhead cannot swallow all wall time");
+    };
+
+    // plain batched decode
+    let mut eng = engine_cfg(false).build(be.clone(), &store, &arch).unwrap();
+    eng.submit(GenRequest::new(vec![1, 2, 3, 4], 6)).unwrap();
+    eng.run_to_completion().unwrap();
+    check("plain", &eng.metrics);
+
+    // budgeted chunked prefill: the prompt outlives the per-step budget
+    let mut eng = engine_cfg(false)
+        .prefill_budget(4)
+        .build(be.clone(), &store, &arch)
+        .unwrap();
+    let prompt: Vec<u32> = (0..cfg.s_prefill + 6).map(|i| (i % (cfg.v - 2)) as u32 + 1).collect();
+    eng.submit(GenRequest::new(prompt, 4)).unwrap();
+    eng.run_to_completion().unwrap();
+    assert!(eng.metrics.prefill_chunk_passes > 0, "the budget must actually chunk");
+    check("chunked", &eng.metrics);
+
+    // speculative draft/verify (fused multi-token verification passes)
+    let scfg = SpecConfig { draft_k: 3, adapt_k_max: None, engine: engine_cfg(false) };
+    let mut batch = SpecBatch::new(be.clone(), &store, &arch, &store, &arch, scfg).unwrap();
+    batch.generate_many(&[SpecRequest::new(vec![1, 2, 3, 4], 8)]).unwrap();
+    assert!(batch.parent_metrics().spec_fused_passes > 0, "verification must run fused");
+    check("speculative", batch.parent_metrics());
+}
+
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn metrics_text_round_trips_over_the_control_channel() {
+    use puzzle::obs::scrape_value;
+    use puzzle::server::AsyncServer;
+
+    let (be, store, arch, _) = setup();
+    let eng = engine_cfg(true).prefill_budget(4).build(be.clone(), &store, &arch).unwrap();
+    let server = AsyncServer::spawn(eng);
+    let handle = server.handle();
+    let prompt: Vec<u32> = (0..be.man().cfg.s_prefill + 6).map(|i| (i % 11) as u32 + 1).collect();
+    for _ in 0..2 {
+        let stream = handle.submit(GenRequest::new(prompt.clone(), 5)).unwrap();
+        let (tokens, finish) = stream.collect();
+        assert!(finish.is_some());
+        assert!(!tokens.is_empty());
+    }
+    let text = handle.metrics_text().unwrap();
+    drop(handle);
+    let eng = server.shutdown();
+
+    // the scrape carries the engine counters (prefix / spec / chunk
+    // sections included) plus the worker's live occupancy gauges
+    assert_eq!(scrape_value(&text, "puzzle_requests_completed_total"), Some(2.0));
+    assert_eq!(
+        scrape_value(&text, "puzzle_generated_tokens_total"),
+        Some(eng.metrics.generated_tokens as f64)
+    );
+    assert_eq!(
+        scrape_value(&text, "puzzle_prefill_chunk_passes_total"),
+        Some(eng.metrics.prefill_chunk_passes as f64)
+    );
+    assert_eq!(
+        scrape_value(&text, "puzzle_prefix_hits_total"),
+        Some(eng.metrics.prefix_hits as f64)
+    );
+    assert_eq!(
+        scrape_value(&text, "puzzle_draft_proposed_total"),
+        Some(0.0),
+        "the plain engine proposes no drafts"
+    );
+    assert_eq!(scrape_value(&text, "puzzle_active_lanes"), Some(0.0), "scraped while idle");
+    assert_eq!(scrape_value(&text, "puzzle_queue_depth"), Some(0.0));
+    assert!(
+        scrape_value(&text, "puzzle_kv_allocated_bytes").is_some(),
+        "occupancy gauges must render"
+    );
+    assert!(text.contains("# TYPE puzzle_ttft_seconds histogram"));
+    assert!(scrape_value(&text, "puzzle_ttft_seconds_count").unwrap_or(0.0) >= 2.0);
+}

@@ -1,0 +1,171 @@
+#!/usr/bin/env python3
+"""Validate a Chrome trace-event JSON file produced by `--trace-out`.
+
+Checks (stdlib only, no Perfetto dependency):
+
+  1. Document shape: a JSON object with a `traceEvents` array; every event
+     carries `name` / `ph` / `ts` / `pid` / `tid`, `ph` is one of M/X/i,
+     and every `X` (complete) event has a numeric `dur >= 0`.
+  2. Per-track timestamps: within each `tid`, non-metadata events appear
+     in non-decreasing `ts` order (the exporter sorts each track).
+  3. Request lifecycle: each request track (tid >= 1000) holds exactly one
+     enclosing `request` span; its `queued` / `prefill` / `decode` children
+     nest inside it, chain end-to-start, and tile its duration exactly.
+     Every request that reached a natural finish (a non-cancelled `reason`
+     in its args) must carry all three stages — i.e. >= 3 lifecycle stages
+     beyond the enclosing span — and at least one such complete lifecycle
+     must exist in the file.
+  4. Optional config markers: `--expect-spec` requires at least one
+     `spec_round` lane instant (speculative serving ran), and
+     `--expect-prefix-hit` requires at least one request admitted with
+     `hit: true` (the prefix cache matched).
+
+Exit status 0 with a one-line summary on success, 1 with a diagnostic on
+the first failure.
+"""
+
+import argparse
+import json
+import sys
+
+LIFECYCLE = ("queued", "prefill", "decode")
+TID_REQ_BASE = 1000
+
+
+def fail(msg):
+    print(f"verify_trace: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"cannot load {path}: {e}")
+    if not isinstance(doc, dict) or not isinstance(doc.get("traceEvents"), list):
+        fail("document must be an object with a traceEvents array")
+    return doc
+
+
+def check_shape(events):
+    for i, e in enumerate(events):
+        if not isinstance(e, dict):
+            fail(f"traceEvents[{i}] is not an object")
+        for k in ("name", "ph", "ts", "pid", "tid"):
+            if k not in e:
+                fail(f"traceEvents[{i}] ({e.get('name', '?')}) missing key {k!r}")
+        if e["ph"] not in ("M", "X", "i"):
+            fail(f"traceEvents[{i}] has unsupported phase {e['ph']!r}")
+        if not isinstance(e["ts"], (int, float)):
+            fail(f"traceEvents[{i}] ts is not numeric")
+        if e["ph"] == "X":
+            dur = e.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                fail(f"traceEvents[{i}] ({e['name']}) X event needs dur >= 0, got {dur!r}")
+
+
+def check_monotonic(events):
+    last = {}
+    for i, e in enumerate(events):
+        if e["ph"] == "M":
+            continue
+        tid = e["tid"]
+        if tid in last and e["ts"] < last[tid]:
+            fail(
+                f"traceEvents[{i}] ({e['name']}) ts {e['ts']} goes backwards "
+                f"on tid {tid} (previous {last[tid]})"
+            )
+        last[tid] = e["ts"]
+
+
+def check_requests(events):
+    """Validate span nesting and lifecycle tiling on every request track."""
+    tracks = {}
+    for e in events:
+        if e["ph"] == "X" and e["tid"] >= TID_REQ_BASE:
+            tracks.setdefault(e["tid"], []).append(e)
+    complete = 0
+    hits = 0
+    for tid, spans in sorted(tracks.items()):
+        reqs = [s for s in spans if s["name"] == "request"]
+        if len(reqs) != 1:
+            fail(f"tid {tid}: expected exactly one enclosing request span, got {len(reqs)}")
+        req = reqs[0]
+        r0, r1 = req["ts"], req["ts"] + req["dur"]
+        args = req.get("args", {})
+        if args.get("hit") is True:
+            hits += 1
+        stages = {s["name"]: s for s in spans if s["name"] in LIFECYCLE}
+        for name, s in stages.items():
+            s0, s1 = s["ts"], s["ts"] + s["dur"]
+            if s0 < r0 or s1 > r1:
+                fail(f"tid {tid}: {name} span [{s0}, {s1}] escapes request [{r0}, {r1}]")
+        if len(stages) == len(LIFECYCLE):
+            # a full lifecycle must chain end-to-start and tile the request
+            if stages["queued"]["ts"] != r0:
+                fail(f"tid {tid}: queued must start at the request span")
+            cursor = r0
+            for name in LIFECYCLE:
+                s = stages[name]
+                if s["ts"] != cursor:
+                    fail(f"tid {tid}: {name} starts at {s['ts']}, expected {cursor}")
+                cursor = s["ts"] + s["dur"]
+            if cursor != r1:
+                fail(f"tid {tid}: lifecycle tiles to {cursor}, request ends at {r1}")
+            complete += 1
+        else:
+            reason = args.get("reason")
+            if reason is not None and reason != "cancelled":
+                fail(
+                    f"tid {tid}: finished request (reason={reason!r}) has only "
+                    f"{len(stages) + 1} lifecycle stages: {sorted(stages)}"
+                )
+    if tracks and complete == 0:
+        fail("no request track carries a complete queued/prefill/decode lifecycle")
+    return len(tracks), complete, hits
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="Chrome trace-event JSON file (--trace-out output)")
+    ap.add_argument(
+        "--expect-spec",
+        action="store_true",
+        help="require at least one spec_round event (speculative serving)",
+    )
+    ap.add_argument(
+        "--expect-prefix-hit",
+        action="store_true",
+        help="require at least one request admitted with a prefix-cache hit",
+    )
+    opts = ap.parse_args()
+
+    doc = load(opts.trace)
+    events = doc["traceEvents"]
+    if not events:
+        fail("traceEvents is empty")
+    check_shape(events)
+    check_monotonic(events)
+    n_req, n_complete, n_hits = check_requests(events)
+    if n_req == 0:
+        fail("no request tracks (tid >= 1000) in the trace")
+
+    n_steps = sum(1 for e in events if e["name"] == "step")
+    n_spec = sum(1 for e in events if e["name"] == "spec_round")
+    if n_steps == 0 and n_spec == 0:
+        fail("neither engine steps nor speculative rounds were recorded")
+    if opts.expect_spec and n_spec == 0:
+        fail("--expect-spec: no spec_round events in the trace")
+    if opts.expect_prefix_hit and n_hits == 0:
+        fail("--expect-prefix-hit: no request was admitted with a prefix-cache hit")
+
+    print(
+        f"verify_trace: ok: {len(events)} events, {n_req} requests "
+        f"({n_complete} complete lifecycles, {n_hits} prefix hits), "
+        f"{n_steps} steps, {n_spec} spec rounds"
+    )
+
+
+if __name__ == "__main__":
+    main()
