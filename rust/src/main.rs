@@ -8,7 +8,8 @@
 //!               serves the parent with the child as speculative drafter;
 //!               --async serves through the threaded front-end (many
 //!               client threads, one engine worker), optionally with
-//!               --prefill-budget N chunked prefill
+//!               --prefill-budget N chunked prefill and --replicas N
+//!               data-parallel engines behind the cache-aware router
 //!   bench-workload  replay a seeded workload trace against plain,
 //!               prefix-cache, and speculative configs; score goodput
 //!               under (TTFT, ITL) SLOs -> BENCH_workloads.json
@@ -16,6 +17,10 @@
 //!               server, chunked vs unchunked prefill, checking byte
 //!               identity against the sync replay ->
 //!               BENCH_serving_async.json
+//!   bench-router  replay one bursty shared-prefix trace open-loop
+//!               through a bare server vs an N-replica router (cache-
+//!               aware placement + prefix migration), checking byte
+//!               identity against the sync replay -> BENCH_router.json
 //!   measure     print measured per-block costs on this machine
 //!   info        backend/search-space summary
 //!
@@ -209,10 +214,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
             b.parse().map_err(|_| anyhow!("--prefill-budget wants a token count, got '{b}'"))?;
         ecfg = ecfg.prefill_budget(b);
     }
-    let mut eng = ecfg.build(be.clone(), &library, &sol.arch)?;
     if args.flag("async") {
-        return cmd_serve_async(args, &be, &pipe, eng);
+        // --replicas N: N identical engines behind the data-parallel
+        // router; 1 (the default) serves through a bare AsyncServer
+        let replicas = args.usize("replicas", 1).max(1);
+        let engines = (0..replicas)
+            .map(|_| ecfg.clone().build(be.clone(), &library, &sol.arch))
+            .collect::<Result<Vec<_>>>()?;
+        return cmd_serve_async(args, &be, &pipe, engines);
     }
+    let mut eng = ecfg.build(be.clone(), &library, &sol.arch)?;
     let n_req = args.usize("requests", 16);
     let temperature = args.f64("temperature", 0.0) as f32;
     let seed = args.u64("seed", 42);
@@ -271,13 +282,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
 /// `serve --async`: the same request mix as the synchronous path, but
 /// submitted from `--clients` concurrent threads through the threaded
-/// front-end (`server::AsyncServer`) — each client holds a cloned
-/// `ServerHandle`, streams its completions token by token, and the
-/// worker thread owns the engine. With `--prefill-budget N` the engine
-/// ingests prompts N tokens per step interleaved with live decode.
+/// front-end — each client holds a cloned handle, streams its
+/// completions token by token, and a worker thread owns each engine.
+/// With one engine (the default) that front-end is a bare
+/// `server::AsyncServer`; with `--replicas N` it is the data-parallel
+/// `server::Router`, which places every request on the replica with the
+/// longest retained prefix match and migrates hot segments when load
+/// shifts. With `--prefill-budget N` the engines ingest prompts N tokens
+/// per step interleaved with live decode.
 #[cfg(not(feature = "pjrt"))]
-fn cmd_serve_async(args: &Args, be: &SharedBackend, pipe: &Pipeline, eng: Engine) -> Result<()> {
-    use puzzle::server::AsyncServer;
+fn cmd_serve_async(
+    args: &Args,
+    be: &SharedBackend,
+    pipe: &Pipeline,
+    mut engines: Vec<Engine>,
+) -> Result<()> {
+    use puzzle::server::{AsyncServer, Router, RouterConfig};
     let n_req = args.usize("requests", 16);
     let clients = args.usize("clients", 8).max(1);
     let temperature = args.f64("temperature", 0.0) as f32;
@@ -298,11 +318,66 @@ fn cmd_serve_async(args: &Args, be: &SharedBackend, pipe: &Pipeline, eng: Engine
         };
         lots[i % clients].push((i, GenRequest::new(prompt, max_new).with_sampling(sampling)));
     }
-    let metrics_interval = args.get("metrics-interval").and_then(|s| s.parse::<usize>().ok());
-    let server = AsyncServer::spawn_with(eng, metrics_interval);
+    if engines.len() == 1 {
+        let metrics_interval =
+            args.get("metrics-interval").and_then(|s| s.parse::<usize>().ok());
+        let server = AsyncServer::spawn_with(engines.pop().expect("one engine"), metrics_interval);
+        drive_clients(&server.handle(), lots);
+        if args.flag("scrape") {
+            // the live Prometheus snapshot clients would poll on a real deploy
+            println!("{}", server.handle().metrics_text()?);
+        }
+        let eng = server.shutdown();
+        println!(
+            "async-served {n_req} requests over {clients} client threads | {}",
+            eng.metrics.summary()
+        );
+        export_trace(
+            eng.tracer(),
+            be,
+            &trace_sink(args, "trace-out")?,
+            &trace_sink(args, "trace-jsonl")?,
+        )?;
+        return Ok(());
+    }
+    let router = Router::spawn(engines, RouterConfig::default());
+    let handle = router.handle();
+    drive_clients(&handle, lots);
+    if args.flag("scrape") {
+        // the fleet rollup: router counters + per-replica sections
+        println!("{}", handle.metrics_text()?);
+    }
+    let stats = handle.stats()?;
+    let agg = handle.aggregate_metrics()?;
+    drop(handle);
+    let engines = router.shutdown();
+    println!(
+        "router-served {n_req} requests over {clients} client threads x {} replicas | routed {:?} (skew {}) | migrations {} ({} tok) | shed {} | {}",
+        engines.len(),
+        stats.routed,
+        stats.load_skew(),
+        stats.migrations,
+        stats.migrated_tokens,
+        stats.shed,
+        agg.summary()
+    );
+    export_trace(
+        engines[0].tracer(),
+        be,
+        &trace_sink(args, "trace-out")?,
+        &trace_sink(args, "trace-jsonl")?,
+    )?;
+    Ok(())
+}
+
+/// The `serve --async` client fan-out, front-end-agnostic: a
+/// `ServerHandle` and a `RouterHandle` drive it identically (the point
+/// of the `Frontend` trait). One scoped thread per client lot.
+#[cfg(not(feature = "pjrt"))]
+fn drive_clients<F: puzzle::server::Frontend>(handle: &F, lots: Vec<Vec<(usize, GenRequest)>>) {
     std::thread::scope(|s| {
         for (ci, lot) in lots.into_iter().enumerate() {
-            let h = server.handle();
+            let h = handle.clone();
             s.spawn(move || {
                 for (i, req) in lot {
                     match h.submit(req) {
@@ -320,23 +395,15 @@ fn cmd_serve_async(args: &Args, be: &SharedBackend, pipe: &Pipeline, eng: Engine
             });
         }
     });
-    if args.flag("scrape") {
-        // the live Prometheus snapshot clients would poll on a real deploy
-        println!("{}", server.handle().metrics_text()?);
-    }
-    let eng = server.shutdown();
-    println!("async-served {n_req} requests over {clients} client threads | {}", eng.metrics.summary());
-    export_trace(
-        eng.tracer(),
-        be,
-        &trace_sink(args, "trace-out")?,
-        &trace_sink(args, "trace-jsonl")?,
-    )?;
-    Ok(())
 }
 
 #[cfg(feature = "pjrt")]
-fn cmd_serve_async(_args: &Args, _be: &SharedBackend, _pipe: &Pipeline, _eng: Engine) -> Result<()> {
+fn cmd_serve_async(
+    _args: &Args,
+    _be: &SharedBackend,
+    _pipe: &Pipeline,
+    _engines: Vec<Engine>,
+) -> Result<()> {
     Err(anyhow!(
         "serve --async needs the threaded front-end, which the pjrt build cannot provide \
          (the PJRT engine is not Send); rebuild without --features pjrt"
@@ -676,6 +743,172 @@ fn cmd_bench_async(_args: &Args) -> Result<()> {
     ))
 }
 
+/// `bench-router`: replay one seeded *bursty* shared-prefix trace in
+/// wall-clock time with **open-loop** pacing (latency billed from the
+/// scheduled arrival — no coordinated omission), twice: once through a
+/// bare single-engine `AsyncServer`, once through an N-replica `Router`
+/// with cache-aware placement and prefix migration. A synchronous
+/// virtual-tick replay is the byte-identity oracle for both. Emits
+/// `BENCH_router.json`; the CI gate requires `byte_identical`, an
+/// aggregate prefix hit rate > 0, and routed goodput no worse than the
+/// single replica's under the lenient wall SLO.
+#[cfg(not(feature = "pjrt"))]
+fn cmd_bench_router(args: &Args) -> Result<()> {
+    use std::collections::BTreeMap;
+    use std::time::Duration;
+
+    use puzzle::server::{AsyncServer, Router, RouterConfig};
+    use puzzle::util::{percentile, Json};
+    use puzzle::workload::{replay_wall_paced, wall_run_json, Pacing, WallRun};
+
+    let be = open_backend(args)?;
+    let cfg = be.man().cfg.clone();
+    let seed = args.u64("seed", 7);
+    let mix_s = args.str("trace", "shared");
+    let mix = MixKind::parse(&mix_s).ok_or_else(|| {
+        anyhow!("unknown trace mix '{mix_s}' (chat|longcontext|shared|spec|multiturn|mixed)")
+    })?;
+    let mut spec = TraceSpec::bursty(mix, seed);
+    spec.conversations = args.usize("conversations", 12);
+    let trace = spec.generate(cfg.v as u32, cfg.s_prefill, cfg.s_max);
+    let replicas = args.usize("replicas", 4).max(1);
+    let tick = Duration::from_secs_f64(args.f64("tick-ms", 5.0) / 1e3);
+    println!(
+        "trace '{}' seed {}: {} conversations, {} requests | {} replicas | tick {:.1} ms | open-loop",
+        trace.name,
+        trace.seed,
+        trace.convs.len(),
+        trace.requests(),
+        replicas,
+        tick.as_secs_f64() * 1e3
+    );
+
+    let mut rng = Rng::new(0);
+    let store = init_parent(be.man(), &mut rng);
+    let arch = Arch::parent(cfg.n_layers);
+    // prefix cache on (the router's placement signal) and a queue deep
+    // enough that shedding never depends on wall timing — shed-vs-served
+    // divergence would fail the byte-identity check
+    let engine_cfg = || {
+        EngineConfig::new()
+            .kv_budget_bytes(16 << 20)
+            .page_len(args.usize("page-len", 4))
+            .max_queue(1024)
+            .prefix_cache(true, args.usize("retain-budget", 8 << 20))
+    };
+
+    // oracle: the deterministic virtual-tick replay on one engine
+    let oracle = {
+        let mut eng = engine_cfg().build(be.clone(), &store, &arch)?;
+        replay(&trace, &mut Server::Engine(&mut eng), "sync_oracle")?
+    };
+
+    // baseline: one engine behind a bare AsyncServer, same open pacing
+    let (single, m_single) = {
+        let eng = engine_cfg().build(be.clone(), &store, &arch)?;
+        let server = AsyncServer::spawn(eng);
+        let handle = server.handle();
+        let run = replay_wall_paced(&trace, &handle, tick, "single", Pacing::Open);
+        drop(handle);
+        let eng = server.shutdown();
+        (run, eng.metrics.clone())
+    };
+
+    // routed: N identical replicas, overload low enough that a burst
+    // spills past the hot replica and drags its prefix segment along
+    let rcfg = RouterConfig {
+        overload: args.usize("overload", 2).max(1),
+        min_migrate: 1,
+    };
+    let engines = (0..replicas)
+        .map(|_| engine_cfg().build(be.clone(), &store, &arch))
+        .collect::<Result<Vec<_>>>()?;
+    let router = Router::spawn(engines, rcfg);
+    let handle = router.handle();
+    let routed = replay_wall_paced(&trace, &handle, tick, "routed", Pacing::Open);
+    let stats = handle.stats()?;
+    let agg = handle.aggregate_metrics()?;
+    drop(handle);
+    router.shutdown();
+
+    // byte identity: every (conv, turn)'s generated stream must match the
+    // sync oracle through BOTH front-ends — placement must not steer
+    // sampling (DESIGN.md §12)
+    let oracle_map: BTreeMap<(usize, usize), Vec<u32>> =
+        oracle.records.iter().map(|r| ((r.conv, r.turn), r.gen.clone())).collect();
+    let wall_map = |run: &WallRun| -> BTreeMap<(usize, usize), Vec<u32>> {
+        run.records.iter().map(|r| ((r.conv, r.turn), r.gen.clone())).collect()
+    };
+    let byte_identical = wall_map(&single) == oracle_map && wall_map(&routed) == oracle_map;
+
+    for (run, m) in [(&single, &m_single), (&routed, &agg)] {
+        let done = run.records.iter().filter(|r| r.finish.is_some()).count();
+        let ttfts: Vec<f64> =
+            run.records.iter().filter_map(|r| r.ttft_secs).map(|t| t * 1e3).collect();
+        println!(
+            "[{}] completed {done}/{} | ttft p50 {:.1} ms p95 {:.1} ms | wall {:.2} s | prefix hits {} ({} tok saved)",
+            run.config,
+            run.intended,
+            percentile(&ttfts, 50.0),
+            percentile(&ttfts, 95.0),
+            run.wall_secs,
+            m.prefix_hits,
+            m.prefix_tokens_saved
+        );
+    }
+    println!(
+        "routed {:?} (skew {}) | migrations {} ({} tok) | shed {} | aggregate hit rate {:.2} | byte identical: {byte_identical}",
+        stats.routed,
+        stats.load_skew(),
+        stats.migrations,
+        stats.migrated_tokens,
+        stats.shed,
+        agg.prefix_hit_rate()
+    );
+
+    let mut root = Json::obj();
+    root.set("bench", Json::str("router"));
+    root.set("trace", Json::str(&trace.name));
+    root.set("seed", Json::num(trace.seed as f64));
+    root.set("conversations", Json::num(trace.convs.len() as f64));
+    root.set("requests", Json::num(trace.requests() as f64));
+    root.set("replicas", Json::num(replicas as f64));
+    root.set("tick_ms", Json::num(tick.as_secs_f64() * 1e3));
+    root.set("pacing", Json::str("open"));
+    root.set("byte_identical", Json::Bool(byte_identical));
+    root.set(
+        "configs",
+        Json::Arr(vec![wall_run_json(&single, &m_single), wall_run_json(&routed, &agg)]),
+    );
+    root.set(
+        "router",
+        Json::from_pairs(vec![
+            ("migrations", Json::num(stats.migrations as f64)),
+            ("migrated_tokens", Json::num(stats.migrated_tokens as f64)),
+            ("shed", Json::num(stats.shed as f64)),
+            (
+                "routed_per_replica",
+                Json::Arr(stats.routed.iter().map(|&n| Json::num(n as f64)).collect()),
+            ),
+            ("load_skew", Json::num(stats.load_skew() as f64)),
+            ("aggregate_prefix_hit_rate", Json::num(agg.prefix_hit_rate())),
+            ("prefix_hits", Json::num(agg.prefix_hits as f64)),
+            ("prefix_misses", Json::num(agg.prefix_misses as f64)),
+        ]),
+    );
+    std::fs::write("BENCH_router.json", root.to_pretty())?;
+    println!("wrote BENCH_router.json");
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn cmd_bench_router(_args: &Args) -> Result<()> {
+    Err(anyhow!(
+        "bench-router needs the threaded front-end, which the pjrt build cannot provide \
+         (the PJRT engine is not Send); rebuild without --features pjrt"
+    ))
+}
+
 fn cmd_measure(args: &Args) -> Result<()> {
     let be = open_backend(args)?;
     let c = &be.man().cfg;
@@ -722,11 +955,12 @@ fn main() -> Result<()> {
         Some("serve") => cmd_serve(&args),
         Some("bench-workload") => cmd_bench_workload(&args),
         Some("bench-async") => cmd_bench_async(&args),
+        Some("bench-router") => cmd_bench_router(&args),
         Some("measure") => cmd_measure(&args),
         Some("info") => cmd_info(&args),
         _ => {
             eprintln!(
-                "usage: puzzle <pipeline|exp|serve|bench-workload|bench-async|measure|info> [--backend ref|pjrt] [--config tiny|small] [--run-dir DIR] [--scale F] [--speedup X]\n       serve also takes: [--scheduler fifo|priority|spf|prefix] [--temperature T] [--stream] [--requests N] [--max-new N]\n                         [--prefix-cache] [--retain-budget BYTES] [--prefill-budget TOKENS]\n                         [--async] [--clients N] [--metrics-interval STEPS] [--scrape]\n                         [--speculate] [--draft-k N (pins; omit to auto-tune)] [--draft-arch arch_tag.json]\n       bench-workload takes: [--trace chat|longcontext|shared|spec|multiturn|mixed] [--seed N] [--conversations N]\n                             [--page-len N] [--draft-k N] [--retain-budget BYTES]\n       bench-async takes: [--trace ...] [--seed N] [--conversations N] [--tick-ms MS] [--prefill-budget TOKENS] [--page-len N]\n       serve / bench-workload / bench-async also take: [--trace-out chrome_trace.json] [--trace-jsonl events.jsonl]"
+                "usage: puzzle <pipeline|exp|serve|bench-workload|bench-async|bench-router|measure|info> [--backend ref|pjrt] [--config tiny|small] [--run-dir DIR] [--scale F] [--speedup X]\n       serve also takes: [--scheduler fifo|priority|spf|prefix] [--temperature T] [--stream] [--requests N] [--max-new N]\n                         [--prefix-cache] [--retain-budget BYTES] [--prefill-budget TOKENS]\n                         [--async] [--replicas N] [--clients N] [--metrics-interval STEPS] [--scrape]\n                         [--speculate] [--draft-k N (pins; omit to auto-tune)] [--draft-arch arch_tag.json]\n       bench-workload takes: [--trace chat|longcontext|shared|spec|multiturn|mixed] [--seed N] [--conversations N]\n                             [--page-len N] [--draft-k N] [--retain-budget BYTES]\n       bench-async takes: [--trace ...] [--seed N] [--conversations N] [--tick-ms MS] [--prefill-budget TOKENS] [--page-len N]\n       bench-router takes: [--trace ...] [--seed N] [--conversations N] [--replicas N] [--overload DEPTH] [--tick-ms MS] [--page-len N] [--retain-budget BYTES]\n       serve / bench-workload / bench-async also take: [--trace-out chrome_trace.json] [--trace-jsonl events.jsonl]"
             );
             Ok(())
         }

@@ -18,7 +18,11 @@
 //! * [`MetricsRegistry`] — snapshot counters/gauges/histograms rendered in
 //!   the Prometheus text exposition format; [`LatencySeries`] backs the
 //!   engine's latency percentiles with bounded memory (exact up to a capped
-//!   reservoir, within one log2 bucket beyond).
+//!   reservoir, within one log2 bucket beyond). Registries compose:
+//!   [`MetricsRegistry::merge`] appends one snapshot onto another, which
+//!   is how the data-parallel router rolls fleet-level counters and
+//!   namespaced per-replica sections into a single scrape payload
+//!   (DESIGN.md §12).
 
 pub mod clock;
 pub mod export;

@@ -70,6 +70,16 @@ impl MetricsRegistry {
         );
     }
 
+    /// Append every metric of `other`, preserving order — the router's
+    /// per-replica rollup builds fleet-level and per-replica sections as
+    /// separate registries and merges them into one scrape payload.
+    /// Names are not deduplicated: callers namespace their sections
+    /// (e.g. a `puzzle_router_replica_<i>_` prefix) so families stay
+    /// unique in the rendered exposition.
+    pub fn merge(&mut self, other: MetricsRegistry) {
+        self.metrics.extend(other.metrics);
+    }
+
     /// Number of metric families registered.
     pub fn len(&self) -> usize {
         self.metrics.len()
@@ -153,5 +163,21 @@ mod tests {
         assert_eq!(scrape_value(&text, "puzzle_active_lanes"), Some(3.0));
         assert_eq!(scrape_value(&text, "puzzle_ttft_seconds_count"), Some(2.0));
         assert_eq!(scrape_value(&text, "absent_metric"), None);
+    }
+
+    #[test]
+    fn merge_appends_in_order() {
+        let mut fleet = MetricsRegistry::new();
+        fleet.counter("puzzle_router_routed_total", "Requests routed.", 7.0);
+        let mut replica = MetricsRegistry::new();
+        replica.gauge("puzzle_router_replica_0_depth", "In-flight on replica 0.", 2.0);
+        fleet.merge(replica);
+        assert_eq!(fleet.len(), 2);
+        let text = fleet.render();
+        assert_eq!(scrape_value(&text, "puzzle_router_routed_total"), Some(7.0));
+        assert_eq!(scrape_value(&text, "puzzle_router_replica_0_depth"), Some(2.0));
+        let routed = text.find("puzzle_router_routed_total").unwrap();
+        let depth = text.find("puzzle_router_replica_0_depth").unwrap();
+        assert!(routed < depth, "merged metrics keep their section order");
     }
 }

@@ -6,7 +6,9 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 
 use anyhow::{anyhow, Result};
 
-use crate::serving::{EngineMetrics, FinishReason, GenRequest};
+use crate::serving::{EngineMetrics, FinishReason, GenRequest, MigratedPrefix};
+
+use super::placement::ReplicaProbe;
 
 /// One item of a request's token stream.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -52,6 +54,30 @@ pub(super) enum Ctl {
     /// Fetch a Prometheus text-format rendering of the metrics registry
     /// plus live occupancy gauges — the scrape endpoint's payload.
     MetricsText(Sender<String>),
+    /// Placement probe: longest retained prefix match for a prompt plus
+    /// load counters, answered between engine steps (router plumbing).
+    Probe {
+        /// The prompt to probe the prefix cache with.
+        prompt: Vec<u32>,
+        /// One-shot reply channel for the probe result.
+        reply: Sender<ReplicaProbe>,
+    },
+    /// Clone this engine's best retained match for a prompt out as a
+    /// migration payload (`None`: cache off or no match).
+    ExportPrefix {
+        /// The prompt whose matched prefix should be exported.
+        prompt: Vec<u32>,
+        /// One-shot reply channel carrying the payload.
+        reply: Sender<Option<MigratedPrefix>>,
+    },
+    /// Adopt a prefix exported from another engine (boxed: the rows are
+    /// large and `Ctl` travels by value through the channel).
+    ImportPrefix {
+        /// The migration payload to adopt.
+        prefix: Box<MigratedPrefix>,
+        /// One-shot reply: was the segment retained locally?
+        reply: Sender<bool>,
+    },
     /// Stop the worker and hand the engine back to `shutdown`.
     Shutdown,
 }
@@ -116,6 +142,64 @@ impl ServerHandle {
         let (reply, rx) = channel();
         self.ctl.send(Ctl::MetricsText(reply)).map_err(|_| anyhow!("server is shut down"))?;
         rx.recv().map_err(|_| anyhow!("server dropped the metrics-text reply"))
+    }
+
+    /// Placement probe: the engine's longest retained prefix match for
+    /// `prompt` (no LRU bump) plus its live load counters, in one
+    /// consistent snapshot taken between engine steps. The router calls
+    /// this on every replica per submit; also useful for tests.
+    pub fn probe(&self, prompt: &[u32]) -> Result<ReplicaProbe> {
+        let (reply, rx) = channel();
+        self.ctl
+            .send(Ctl::Probe { prompt: prompt.to_vec(), reply })
+            .map_err(|_| anyhow!("server is shut down"))?;
+        rx.recv().map_err(|_| anyhow!("server dropped the probe reply"))
+    }
+
+    /// Export this engine's best retained match for `prompt` as a
+    /// migration payload (the engine keeps its own copy — see
+    /// `Engine::export_prefix`). `Ok(None)`: cache off or no match.
+    pub fn export_prefix(&self, prompt: &[u32]) -> Result<Option<MigratedPrefix>> {
+        let (reply, rx) = channel();
+        self.ctl
+            .send(Ctl::ExportPrefix { prompt: prompt.to_vec(), reply })
+            .map_err(|_| anyhow!("server is shut down"))?;
+        rx.recv().map_err(|_| anyhow!("server dropped the export reply"))
+    }
+
+    /// Hand a migration payload to this engine for adoption (see
+    /// `Engine::adopt_prefix`). `Ok(false)`: declined — incompatible
+    /// geometry, already covered, or no budget room; never an error.
+    pub fn import_prefix(&self, prefix: MigratedPrefix) -> Result<bool> {
+        let (reply, rx) = channel();
+        self.ctl
+            .send(Ctl::ImportPrefix { prefix: Box::new(prefix), reply })
+            .map_err(|_| anyhow!("server is shut down"))?;
+        rx.recv().map_err(|_| anyhow!("server dropped the import reply"))
+    }
+}
+
+/// The client surface a wall-clock replay drives: anything that can
+/// accept a request and hand back its [`TokenStream`]. Implemented by
+/// [`ServerHandle`] (one engine) and `RouterHandle` (N replicas behind
+/// cache-aware placement), so `workload::wallclock::replay_wall` replays
+/// the same trace against either without caring which.
+pub trait Frontend: Clone + Send {
+    /// Submit a request, returning its stream; `Err` means shed (or shut
+    /// down) with no server state held.
+    fn submit(&self, req: GenRequest) -> Result<TokenStream>;
+
+    /// Cancel a request by id (fire-and-forget; unknown ids ignored).
+    fn cancel(&self, id: u64);
+}
+
+impl Frontend for ServerHandle {
+    fn submit(&self, req: GenRequest) -> Result<TokenStream> {
+        ServerHandle::submit(self, req)
+    }
+
+    fn cancel(&self, id: u64) {
+        ServerHandle::cancel(self, id)
     }
 }
 

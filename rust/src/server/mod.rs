@@ -33,6 +33,15 @@
 //! (no busy-waiting between requests) and otherwise drains pending
 //! control messages between `step()` calls, so submissions and
 //! cancellations land with at most one step of latency.
+//!
+//! Scaling past one engine, the [`Router`] owns N `AsyncServer` replicas
+//! behind one cloneable [`RouterHandle`] with the same submit/cancel
+//! surface: requests are placed on the replica with the longest retained
+//! prefix match (ties to the shallowest queue — the `placement` module),
+//! hot segments migrate between replicas when load shifts, and shedding
+//! happens only when every replica is full (DESIGN.md §12). The
+//! [`Frontend`] trait abstracts over both handle kinds so the wall-clock
+//! replay harness drives either.
 
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
@@ -41,8 +50,12 @@ use std::thread::JoinHandle;
 use crate::serving::{Engine, StreamEvent};
 
 mod handle;
+pub mod placement;
+mod router;
 
-pub use handle::{ServerHandle, ServerStats, StreamItem, TokenStream};
+pub use handle::{Frontend, ServerHandle, ServerStats, StreamItem, TokenStream};
+pub use placement::{choose, Placement, ReplicaProbe};
+pub use router::{Router, RouterConfig, RouterHandle, RouterStats, REPLICA_SHIFT};
 use handle::Ctl;
 
 /// The worker-thread front-end over an [`Engine`] (see the module docs
@@ -145,6 +158,23 @@ fn worker(mut engine: Engine, rx: Receiver<Ctl>, metrics_interval: Option<usize>
                 }
                 Ctl::MetricsText(reply) => {
                     let _ = reply.send(metrics_text(&engine));
+                }
+                Ctl::Probe { prompt, reply } => {
+                    // one consistent snapshot between steps: the match
+                    // length and the load counters describe the same
+                    // instant, which the placement rule relies on
+                    let _ = reply.send(ReplicaProbe {
+                        match_len: engine.prefix_probe(&prompt),
+                        active: engine.active(),
+                        queued: engine.queue_len(),
+                        full: engine.queue_full(),
+                    });
+                }
+                Ctl::ExportPrefix { prompt, reply } => {
+                    let _ = reply.send(engine.export_prefix(&prompt));
+                }
+                Ctl::ImportPrefix { prefix, reply } => {
+                    let _ = reply.send(engine.adopt_prefix(*prefix));
                 }
                 Ctl::Shutdown => break 'serve,
             }

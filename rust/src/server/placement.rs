@@ -1,0 +1,266 @@
+//! Cache-aware placement for the data-parallel router (DESIGN.md §12).
+//!
+//! Pure decision logic, separated from the channel plumbing so it can be
+//! fuzzed against a naive model without threads: given one
+//! [`ReplicaProbe`] per replica, [`choose`] picks where a request goes,
+//! which replicas to fall back to if the pick sheds in a race, and
+//! whether a retained prefix should migrate first.
+//!
+//! The rule extends the `PrefixAffinity` scheduler's ranking across
+//! engines: prefer the replica with the **longest retained prefix match**
+//! for the prompt, break ties by the **shallowest queue** (active +
+//! queued), then by the lowest replica index so equal states place
+//! deterministically. A replica whose match would win but whose depth has
+//! reached the overload threshold loses the pick to the best
+//! non-overloaded replica — and because that replica has a shorter (often
+//! zero) match, the router *migrates* the hot segment to it
+//! (`migrate_from`), so cache affinity follows load instead of pinning
+//! it. Shedding happens at the router's door only when **every** replica
+//! reports a full admission queue.
+
+/// One replica's answer to a placement probe, snapshotted between engine
+/// steps (so the counters are mutually consistent).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReplicaProbe {
+    /// Longest retained prefix match for the probed prompt, tokens
+    /// (page-aligned; 0 with the cache off or no match).
+    pub match_len: usize,
+    /// Sequences currently holding a decode slot.
+    pub active: usize,
+    /// Requests waiting in the admission queue.
+    pub queued: usize,
+    /// Would a submit be shed at the door right now?
+    pub full: bool,
+}
+
+impl ReplicaProbe {
+    /// In-flight requests: active + queued — the placement tie-breaker
+    /// and the overload measure.
+    pub fn depth(&self) -> usize {
+        self.active + self.queued
+    }
+}
+
+/// A placement decision from [`choose`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Placement {
+    /// Every non-full replica in submission order: the chosen target
+    /// first, then the remaining candidates by rank — the router walks
+    /// this list if a submit races to full.
+    pub order: Vec<usize>,
+    /// Migrate the retained prefix from this replica to the target before
+    /// submitting (`None`: the target already holds the best match, or no
+    /// replica has one worth moving).
+    pub migrate_from: Option<usize>,
+}
+
+impl Placement {
+    /// The chosen replica.
+    pub fn target(&self) -> usize {
+        self.order[0]
+    }
+}
+
+/// Pick a replica for a request probed as `probes` (one entry per
+/// replica, indexed by replica id).
+///
+/// * `None` iff every replica is full — the shed-at-the-door rule.
+/// * Otherwise candidates are ranked by `(match_len, -depth, -index)`
+///   descending; the target is the best-ranked candidate whose depth is
+///   below `overload`, falling back to the overall best-ranked candidate
+///   when everyone is at or past it (equal misery: affinity wins again).
+/// * `migrate_from` points at the replica with the longest match overall
+///   (lowest index on ties) whenever that beats the target's own match —
+///   full replicas included, since exporting reads the source without
+///   touching its queue.
+pub fn choose(probes: &[ReplicaProbe], overload: usize) -> Option<Placement> {
+    let mut order: Vec<usize> = (0..probes.len()).filter(|&i| !probes[i].full).collect();
+    if order.is_empty() {
+        return None;
+    }
+    // descending by (match_len, Reverse(depth), Reverse(index)): longest
+    // match first, then shallowest queue, then lowest index — the
+    // PrefixAffinity ranking, extended across replicas
+    order.sort_by(|&a, &b| {
+        let key = |i: usize| {
+            (probes[i].match_len, std::cmp::Reverse(probes[i].depth()), std::cmp::Reverse(i))
+        };
+        key(b).cmp(&key(a))
+    });
+    if let Some(pos) = order.iter().position(|&i| probes[i].depth() < overload) {
+        // hoist the best non-overloaded candidate to the front; the ranks
+        // behind it keep their relative order as the fallback chain
+        let target = order.remove(pos);
+        order.insert(0, target);
+    }
+    let target = order[0];
+    let best = (0..probes.len())
+        .max_by_key(|&i| (probes[i].match_len, std::cmp::Reverse(i)))
+        .expect("order is non-empty, so probes is too");
+    let migrate_from = (probes[best].match_len > probes[target].match_len).then_some(best);
+    Some(Placement { order, migrate_from })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn probe(match_len: usize, depth: usize, full: bool) -> ReplicaProbe {
+        ReplicaProbe { match_len, active: depth, queued: 0, full }
+    }
+
+    #[test]
+    fn longest_match_wins_then_depth_then_index() {
+        let probes = vec![probe(0, 0, false), probe(8, 2, false), probe(8, 1, false)];
+        let p = choose(&probes, usize::MAX).unwrap();
+        assert_eq!(p.target(), 2, "equal match: shallower queue wins");
+        assert_eq!(p.migrate_from, None, "target already holds the best match");
+        let probes = vec![probe(4, 3, false), probe(0, 0, false)];
+        assert_eq!(choose(&probes, usize::MAX).unwrap().target(), 0, "match beats depth");
+        let probes = vec![probe(0, 1, false), probe(0, 1, false)];
+        assert_eq!(choose(&probes, usize::MAX).unwrap().target(), 0, "ties break low-index");
+    }
+
+    #[test]
+    fn sheds_iff_all_full() {
+        assert!(choose(&[probe(9, 0, true), probe(0, 0, true)], usize::MAX).is_none());
+        let p = choose(&[probe(9, 0, true), probe(0, 5, false)], usize::MAX).unwrap();
+        assert_eq!(p.order, vec![1], "full replicas never appear in the order");
+        assert_eq!(p.migrate_from, Some(0), "a full replica can still be a migration source");
+        assert!(choose(&[], usize::MAX).is_none(), "no replicas means nowhere to place");
+    }
+
+    #[test]
+    fn overloaded_best_match_loses_pick_and_becomes_migration_source() {
+        // replica 0 holds the hot prefix but is at the overload threshold;
+        // replica 1 is idle and cold
+        let probes = vec![probe(8, 2, false), probe(0, 0, false)];
+        let p = choose(&probes, 2).unwrap();
+        assert_eq!(p.target(), 1);
+        assert_eq!(p.migrate_from, Some(0), "the hot segment follows the request");
+        assert_eq!(p.order, vec![1, 0], "the loser stays in the fallback chain");
+        // below the threshold, affinity holds the pick
+        let p = choose(&probes, 3).unwrap();
+        assert_eq!((p.target(), p.migrate_from), (0, None));
+        // everyone overloaded: affinity wins again (equal misery)
+        let probes = vec![probe(8, 4, false), probe(0, 4, false)];
+        let p = choose(&probes, 2).unwrap();
+        assert_eq!((p.target(), p.migrate_from), (0, None));
+    }
+
+    #[test]
+    fn order_is_a_permutation_of_the_non_full_replicas() {
+        let probes =
+            vec![probe(2, 1, false), probe(0, 0, true), probe(6, 3, false), probe(0, 0, false)];
+        // overload 1: replicas 0 (depth 1) and 2 (depth 3) are at or past
+        // it, so the only idle replica is hoisted from the back of the
+        // rank order (2, 0, 3)
+        let p = choose(&probes, 1).unwrap();
+        let mut sorted = p.order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 2, 3]);
+        assert_eq!(p.target(), 3, "best non-overloaded candidate (rank: 2, 0, 3 → 3 hoisted)");
+        assert_eq!(p.order, vec![3, 2, 0], "the overloaded ranks keep their order behind it");
+        // overload 2 lets replica 0's depth-1 queue back in: it outranks
+        // the idle replica 3 on match length
+        assert_eq!(choose(&probes, 2).unwrap().target(), 0);
+    }
+
+    /// The PR 6-style property fuzz: drive 5 seeds × 300 random
+    /// submit/finish/cancel ops through a naive model router (a `Vec` of
+    /// replica states with explicit depth counters and retained paths)
+    /// and assert, on every submit, that [`choose`] picks exactly the
+    /// replica maximizing `(match_len, -queue_depth)` (lowest index on
+    /// ties) and sheds iff every replica is full.
+    #[test]
+    fn placement_matches_naive_model_under_fuzz() {
+        const REPLICAS: usize = 4;
+        const CAP: usize = 3; // model max_queue: full iff depth >= CAP
+        const PAGE: usize = 2;
+        for fuzz_seed in 0..5u64 {
+            let mut rng = crate::util::Rng::new(0x907e_12 ^ fuzz_seed);
+            // naive model: per replica, (retained paths, depth)
+            let mut retained: Vec<Vec<Vec<u32>>> = vec![Vec::new(); REPLICAS];
+            let mut depth = [0usize; REPLICAS];
+            // in-flight (replica, prompt) pairs for finish/cancel ops
+            let mut inflight: Vec<(usize, Vec<u32>)> = Vec::new();
+            let mut placed = 0usize;
+            for _ in 0..300 {
+                let op = rng.below(10);
+                if op < 5 {
+                    // submit: half the time extend a retained path so
+                    // non-trivial matches actually occur
+                    let mut prompt: Vec<u32> = Vec::new();
+                    if rng.below(2) == 0 {
+                        let r = rng.below(REPLICAS);
+                        if !retained[r].is_empty() {
+                            prompt = retained[r][rng.below(retained[r].len())].clone();
+                        }
+                    }
+                    while prompt.len() < 2 || rng.below(3) > 0 {
+                        prompt.push(rng.below(3) as u32);
+                        if prompt.len() >= 8 {
+                            break;
+                        }
+                    }
+                    // the model's probes: longest retained path that
+                    // prefixes the prompt (page-aligned paths, capped at
+                    // prompt.len() - 1 like the radix cache)
+                    let probes: Vec<ReplicaProbe> = (0..REPLICAS)
+                        .map(|r| {
+                            let match_len = retained[r]
+                                .iter()
+                                .filter(|q| q.len() < prompt.len() && prompt.starts_with(q))
+                                .map(|q| q.len())
+                                .max()
+                                .unwrap_or(0);
+                            ReplicaProbe {
+                                match_len,
+                                active: depth[r].min(2),
+                                queued: depth[r].saturating_sub(2),
+                                full: depth[r] >= CAP,
+                            }
+                        })
+                        .collect();
+                    let decision = choose(&probes, usize::MAX);
+                    // naive argmax over non-full replicas
+                    let naive = (0..REPLICAS)
+                        .filter(|&r| depth[r] < CAP)
+                        .max_by_key(|&r| {
+                            (probes[r].match_len, std::cmp::Reverse(depth[r]), std::cmp::Reverse(r))
+                        });
+                    match (decision, naive) {
+                        (None, None) => {} // shed iff all full
+                        (Some(p), Some(n)) => {
+                            assert_eq!(
+                                p.target(),
+                                n,
+                                "seed {fuzz_seed}: choose disagrees with the naive argmax \
+                                 for probes {probes:?}"
+                            );
+                            depth[n] += 1;
+                            inflight.push((n, prompt));
+                            placed += 1;
+                        }
+                        (got, want) => panic!(
+                            "seed {fuzz_seed}: shed disagreement (choose: {}, naive: {})",
+                            got.is_some(),
+                            want.is_some()
+                        ),
+                    }
+                } else if !inflight.is_empty() {
+                    // finish (retaining the path, like finish-time
+                    // retention) or cancel (retaining nothing)
+                    let i = rng.below(inflight.len());
+                    let (r, prompt) = inflight.swap_remove(i);
+                    depth[r] -= 1;
+                    let aligned = (prompt.len() / PAGE) * PAGE;
+                    if op < 8 && aligned > 0 && !retained[r].iter().any(|q| q.len() == aligned && prompt.starts_with(&q[..])) {
+                        retained[r].push(prompt[..aligned].to_vec());
+                    }
+                }
+            }
+            assert!(placed > 50, "seed {fuzz_seed}: fuzz must actually place requests ({placed})");
+        }
+    }
+}

@@ -1,0 +1,329 @@
+//! Data-parallel multi-engine router: N `AsyncServer` replicas behind
+//! one cloneable handle, with cache-aware placement and prefix
+//! migration (DESIGN.md §12).
+//!
+//! A [`Router`] owns N worker threads (one [`super::AsyncServer`] each)
+//! and hands out [`RouterHandle`] clones with the same
+//! `submit -> TokenStream` / `cancel` surface as a single-engine
+//! [`super::ServerHandle`] — client code cannot tell one replica from
+//! eight. Per submit the handle probes every replica over its control
+//! channel (`Ctl::Probe`: longest retained prefix match + load counters,
+//! snapshotted between engine steps), places the request with
+//! [`super::placement::choose`], and — when the best-matching replica is
+//! overloaded — first *migrates* the retained segment to the chosen
+//! replica (`Ctl::ExportPrefix` → `Ctl::ImportPrefix`, cloned host rows,
+//! refcount-correct on both ends), so hot system prompts follow load.
+//!
+//! Placement never steers sampling: every request's RNG stream is seeded
+//! per-request, and a prefix hit is byte-identical to a cold prefill by
+//! the cache's core invariant — so routed outputs equal a single-engine
+//! run token-for-token, which `tests/router_integration.rs` and the
+//! `bench-router` CI gate both assert.
+//!
+//! Request ids are globally unique across replicas: replica `i`'s engine
+//! starts its id counter at `i << 48` (`Engine::set_request_id_base`), so
+//! `RouterHandle::cancel` recovers the owning replica from the id alone.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::obs::MetricsRegistry;
+use crate::serving::{Engine, EngineMetrics, GenRequest};
+use crate::workload::report::load_skew;
+
+use super::handle::Frontend;
+use super::placement::{choose, ReplicaProbe};
+use super::{AsyncServer, ServerHandle, ServerStats, TokenStream};
+
+/// Bits reserved for the per-replica request-id base: replica `i` issues
+/// ids in `[i << REPLICA_SHIFT, (i + 1) << REPLICA_SHIFT)`.
+pub const REPLICA_SHIFT: u32 = 48;
+
+/// Router tuning knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct RouterConfig {
+    /// In-flight depth (active + queued) at which a replica's prefix
+    /// match no longer pins placement: the request goes to the best
+    /// non-overloaded replica instead, and the segment migrates along.
+    pub overload: usize,
+    /// Minimum match length (tokens) worth migrating; shorter matches
+    /// just re-prefill at the destination.
+    pub min_migrate: usize,
+}
+
+impl Default for RouterConfig {
+    fn default() -> RouterConfig {
+        RouterConfig { overload: 4, min_migrate: 1 }
+    }
+}
+
+/// Router-level counters shared by every handle clone (atomics: handles
+/// bump them from many client threads).
+#[derive(Debug, Default)]
+struct RouterShared {
+    /// Requests accepted per replica, indexed by replica id.
+    routed: Vec<AtomicU64>,
+    /// Cross-replica prefix migrations performed.
+    migrations: AtomicU64,
+    /// Tokens of retained prefix moved by those migrations.
+    migrated_tokens: AtomicU64,
+    /// Requests shed at the router's door (every replica full).
+    shed: AtomicU64,
+}
+
+/// Point-in-time router counters plus each replica's [`ServerStats`]
+/// (`RouterHandle::stats`).
+#[derive(Debug, Clone)]
+pub struct RouterStats {
+    /// Per-replica occupancy, indexed by replica id.
+    pub replicas: Vec<ServerStats>,
+    /// Requests accepted per replica, indexed by replica id.
+    pub routed: Vec<u64>,
+    /// Cross-replica prefix migrations performed.
+    pub migrations: u64,
+    /// Tokens of retained prefix moved by those migrations.
+    pub migrated_tokens: u64,
+    /// Requests shed at the router's door (every replica full).
+    pub shed: u64,
+}
+
+impl RouterStats {
+    /// Requests accepted across all replicas.
+    pub fn total_routed(&self) -> u64 {
+        self.routed.iter().sum()
+    }
+
+    /// Routing imbalance: max − min of the per-replica routed counts (0
+    /// for a perfectly balanced fleet — the `bench-router` skew gauge).
+    pub fn load_skew(&self) -> u64 {
+        load_skew(&self.routed)
+    }
+}
+
+/// N engine replicas behind one routing front door. Spawn with
+/// [`Router::spawn`], hand out [`RouterHandle`]s via
+/// [`Router::handle`], and call [`Router::shutdown`] to get the engines
+/// (and their metrics) back.
+pub struct Router {
+    replicas: Vec<AsyncServer>,
+    shared: Arc<RouterShared>,
+    cfg: RouterConfig,
+}
+
+impl Router {
+    /// Move each engine onto its own worker thread and start routing.
+    /// Each engine's request-id counter is rebased to `i << 48` first so
+    /// ids are globally unique (see the module docs).
+    ///
+    /// # Panics
+    /// With an empty engine list — a router needs at least one replica.
+    pub fn spawn(engines: Vec<Engine>, cfg: RouterConfig) -> Router {
+        assert!(!engines.is_empty(), "Router::spawn needs at least one engine");
+        let replicas: Vec<AsyncServer> = engines
+            .into_iter()
+            .enumerate()
+            .map(|(i, mut eng)| {
+                eng.set_request_id_base((i as u64) << REPLICA_SHIFT);
+                AsyncServer::spawn(eng)
+            })
+            .collect();
+        let shared = Arc::new(RouterShared {
+            routed: (0..replicas.len()).map(|_| AtomicU64::new(0)).collect(),
+            ..Default::default()
+        });
+        Router { replicas, shared, cfg }
+    }
+
+    /// Number of replicas behind this router.
+    pub fn replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// A new routing handle (cheap to clone, safe to move across
+    /// threads; all clones share the router counters).
+    pub fn handle(&self) -> RouterHandle {
+        RouterHandle {
+            replicas: self.replicas.iter().map(|r| r.handle()).collect(),
+            shared: self.shared.clone(),
+            cfg: self.cfg,
+        }
+    }
+
+    /// Stop every worker and return the engines in replica order (with
+    /// their accumulated metrics). In-flight requests are torn down.
+    pub fn shutdown(self) -> Vec<Engine> {
+        self.replicas.into_iter().map(|r| r.shutdown()).collect()
+    }
+}
+
+/// A client's connection to the router — same surface as
+/// [`ServerHandle`], with placement in between. Clone one per client
+/// thread.
+#[derive(Clone)]
+pub struct RouterHandle {
+    replicas: Vec<ServerHandle>,
+    shared: Arc<RouterShared>,
+    cfg: RouterConfig,
+}
+
+impl RouterHandle {
+    /// Probe every replica for this prompt (a dead replica reports as
+    /// full so placement routes around it).
+    fn probe_all(&self, prompt: &[u32]) -> Vec<ReplicaProbe> {
+        self.replicas
+            .iter()
+            .map(|h| {
+                h.probe(prompt).unwrap_or(ReplicaProbe {
+                    match_len: 0,
+                    active: 0,
+                    queued: 0,
+                    full: true,
+                })
+            })
+            .collect()
+    }
+
+    /// Route a request: probe, place, migrate if the placement asks for
+    /// it, then submit — falling back through the remaining candidates
+    /// if a submit races to full. `Err` only when every replica refuses
+    /// (router-level shed) or the fleet is shut down.
+    pub fn submit(&self, req: GenRequest) -> Result<TokenStream> {
+        let probes = self.probe_all(&req.prompt);
+        let Some(placement) = choose(&probes, self.cfg.overload) else {
+            self.shared.shed.fetch_add(1, Ordering::Relaxed);
+            return Err(anyhow!(
+                "router: all {} replicas are full, request shed",
+                self.replicas.len()
+            ));
+        };
+        let target = placement.target();
+        if let Some(src) = placement.migrate_from {
+            if probes[src].match_len >= self.cfg.min_migrate {
+                self.migrate(src, target, &req.prompt);
+            }
+        }
+        let mut last_err = anyhow!("router has no replicas");
+        for &r in &placement.order {
+            match self.replicas[r].submit(req.clone()) {
+                Ok(stream) => {
+                    self.shared.routed[r].fetch_add(1, Ordering::Relaxed);
+                    return Ok(stream);
+                }
+                // raced to full (or this replica just shut down): try the
+                // next-best candidate before giving up
+                Err(e) => last_err = e,
+            }
+        }
+        self.shared.shed.fetch_add(1, Ordering::Relaxed);
+        Err(last_err)
+    }
+
+    /// Move the retained prefix matching `prompt` from replica `src` to
+    /// replica `dst`, best-effort: the source clones the rows out
+    /// (keeping its own copy and refcounts untouched), the destination
+    /// re-retains them under its own budgets and segment ids. Counted
+    /// only when the destination actually adopts.
+    fn migrate(&self, src: usize, dst: usize, prompt: &[u32]) {
+        let Ok(Some(prefix)) = self.replicas[src].export_prefix(prompt) else { return };
+        let tokens = prefix.seg.len as u64;
+        if self.replicas[dst].import_prefix(prefix).unwrap_or(false) {
+            self.shared.migrations.fetch_add(1, Ordering::Relaxed);
+            self.shared.migrated_tokens.fetch_add(tokens, Ordering::Relaxed);
+        }
+    }
+
+    /// Cancel a request by id, routed to the owning replica via the id's
+    /// replica bits (fire-and-forget; unknown ids are ignored).
+    pub fn cancel(&self, id: u64) {
+        if let Some(h) = self.replicas.get((id >> REPLICA_SHIFT) as usize) {
+            h.cancel(id);
+        }
+    }
+
+    /// Number of replicas behind this handle.
+    pub fn replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Router counters plus every replica's occupancy snapshot.
+    pub fn stats(&self) -> Result<RouterStats> {
+        let replicas =
+            self.replicas.iter().map(|h| h.stats()).collect::<Result<Vec<_>>>()?;
+        Ok(RouterStats {
+            replicas,
+            routed: self.shared.routed.iter().map(|c| c.load(Ordering::Relaxed)).collect(),
+            migrations: self.shared.migrations.load(Ordering::Relaxed),
+            migrated_tokens: self.shared.migrated_tokens.load(Ordering::Relaxed),
+            shed: self.shared.shed.load(Ordering::Relaxed),
+        })
+    }
+
+    /// Every replica's metrics snapshot, in replica order.
+    pub fn metrics(&self) -> Result<Vec<EngineMetrics>> {
+        self.replicas.iter().map(|h| h.metrics()).collect()
+    }
+
+    /// Fleet-wide counter rollup: every replica's counters folded into
+    /// one snapshot via [`EngineMetrics::absorb`] (latency series stay
+    /// per-replica — reservoirs do not compose).
+    pub fn aggregate_metrics(&self) -> Result<EngineMetrics> {
+        let mut agg = EngineMetrics::default();
+        for m in self.metrics()? {
+            agg.absorb(&m);
+        }
+        Ok(agg)
+    }
+
+    /// The router's scrape payload: fleet-level counters and gauges
+    /// (routed/migrated/shed totals, aggregate prefix hit rate, load
+    /// skew), then a namespaced `puzzle_router_replica_<i>_*` section
+    /// per replica — all merged into one Prometheus text exposition.
+    /// For a single replica's full engine registry (histograms
+    /// included), scrape that replica's own `metrics_text` instead.
+    pub fn metrics_text(&self) -> Result<String> {
+        let stats = self.stats()?;
+        let metrics = self.metrics()?;
+        let agg = {
+            let mut agg = EngineMetrics::default();
+            for m in &metrics {
+                agg.absorb(m);
+            }
+            agg
+        };
+        let mut reg = MetricsRegistry::new();
+        reg.gauge("puzzle_router_replicas", "Engine replicas behind the router.", self.replicas.len() as f64);
+        reg.counter("puzzle_router_routed_total", "Requests accepted across all replicas.", stats.total_routed() as f64);
+        reg.counter("puzzle_router_migrations_total", "Cross-replica prefix migrations performed.", stats.migrations as f64);
+        reg.counter("puzzle_router_migrated_tokens_total", "Tokens of retained prefix moved by migrations.", stats.migrated_tokens as f64);
+        reg.counter("puzzle_router_shed_total", "Requests shed with every replica full.", stats.shed as f64);
+        reg.gauge("puzzle_router_prefix_hit_rate", "Aggregate prefix hit rate across replicas.", agg.prefix_hit_rate());
+        reg.gauge("puzzle_router_load_skew", "Max minus min of per-replica routed counts.", stats.load_skew() as f64);
+        reg.counter("puzzle_router_generated_tokens_total", "Tokens generated across all replicas.", agg.generated_tokens as f64);
+        reg.counter("puzzle_router_prefix_hits_total", "Prefix-cache hits across all replicas.", agg.prefix_hits as f64);
+        reg.counter("puzzle_router_prefix_misses_total", "Prefix-cache misses across all replicas.", agg.prefix_misses as f64);
+        for (i, (s, m)) in stats.replicas.iter().zip(&metrics).enumerate() {
+            let mut section = MetricsRegistry::new();
+            let name = |field: &str| format!("puzzle_router_replica_{i}_{field}");
+            section.counter(&name("routed_total"), "Requests accepted by this replica.", stats.routed[i] as f64);
+            section.gauge(&name("depth"), "In-flight requests (active + queued).", (s.active + s.queued) as f64);
+            section.gauge(&name("kv_allocated_bytes"), "Paged KV bytes currently allocated.", s.kv_allocated_bytes as f64);
+            section.gauge(&name("prefix_segments"), "Retained prefix segments held.", s.prefix_segments as f64);
+            section.counter(&name("prefix_hits_total"), "Prefix-cache hits on this replica.", m.prefix_hits as f64);
+            section.counter(&name("generated_tokens_total"), "Tokens generated by this replica.", m.generated_tokens as f64);
+            reg.merge(section);
+        }
+        Ok(reg.render())
+    }
+}
+
+impl Frontend for RouterHandle {
+    fn submit(&self, req: GenRequest) -> Result<TokenStream> {
+        RouterHandle::submit(self, req)
+    }
+
+    fn cancel(&self, id: u64) {
+        RouterHandle::cancel(self, id)
+    }
+}

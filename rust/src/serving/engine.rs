@@ -71,7 +71,7 @@ use crate::weights::Store;
 
 use super::kvcache::{PageCfg, PagedKvManager};
 use super::metrics::EngineMetrics;
-use super::prefixcache::{align_down, KvSegment, PrefixCache, PrefixHit};
+use super::prefixcache::{align_down, KvSegment, MigratedPrefix, PrefixCache, PrefixHit};
 use super::sampling::{sample, SamplingParams};
 use super::scheduler::{QueueView, Scheduler, SchedulerKind};
 
@@ -624,6 +624,101 @@ impl Engine {
     /// `run_to_completion` calls this at the end).
     pub fn take_finished(&mut self) -> Vec<Response> {
         std::mem::take(&mut self.finished)
+    }
+
+    /// Would a submit be shed at the door right now? (Admission queue at
+    /// `max_queue`.) The router sheds only when every replica reports
+    /// this.
+    pub fn queue_full(&self) -> bool {
+        self.queue.len() >= self.cfg.max_queue
+    }
+
+    /// Read-only prefix probe: how many leading tokens of `prompt` the
+    /// cache could serve from a retained segment (page-aligned, capped at
+    /// `prompt.len() - 1`; 0 with the cache off or no match). Unlike a
+    /// real lookup this bumps no LRU clock — the router calls it on
+    /// *every* replica per placement decision, and only the replica that
+    /// actually serves the request should count as using the segment.
+    pub fn prefix_probe(&self, prompt: &[u32]) -> usize {
+        self.prefix.as_ref().map(|p| p.matched_len(prompt)).unwrap_or(0)
+    }
+
+    // ---- cross-engine prefix migration (router; DESIGN.md §12) ----
+
+    /// Package this engine's best retained match for `prompt` for
+    /// migration to another engine. The rows are **cloned** — the source
+    /// segment, its pool charge, and any live references are untouched,
+    /// so a mid-migration cancel on either side can never unbalance
+    /// refcounts. The export counts as a use (LRU bump): a segment hot
+    /// enough to migrate is hot enough to keep. `None` with the cache
+    /// off or no match.
+    pub fn export_prefix(&mut self, prompt: &[u32]) -> Option<MigratedPrefix> {
+        let hit = self.prefix.as_mut()?.lookup(prompt)?;
+        let seg = self.prefix.as_ref()?.rows(hit.seg_id).ok()?.truncated(hit.len);
+        Some(MigratedPrefix {
+            tokens: prompt[..hit.len].to_vec(),
+            prompt_tokens: hit.len - hit.gen_tokens,
+            seg,
+        })
+    }
+
+    /// Adopt a prefix exported from another engine: insert the rows as a
+    /// fresh retained segment (new local id, zero references) under the
+    /// same budget-or-evict rule as local retention, charging the pool
+    /// via `retain_shared` exactly like a locally exported segment.
+    /// Returns false — leaving all accounting untouched — when the cache
+    /// is off, the payload is misaligned or geometrically incompatible
+    /// with this engine's caches, the path is already covered locally, or
+    /// no room can be made; best-effort by design, like `maybe_retain`.
+    pub fn adopt_prefix(&mut self, prefix: MigratedPrefix) -> bool {
+        let Some(cache) = &self.prefix else { return false };
+        let len = prefix.seg.len;
+        if len == 0
+            || len % self.cfg.page_len != 0
+            || prefix.tokens.len() != len
+            || prefix.seg.layers.len() != self.caches.len()
+        {
+            return false;
+        }
+        if cache.covered(&prefix.tokens, len) {
+            return false; // already held here: nothing to do
+        }
+        // an aligned f32 segment's host bytes equal its pool bytes, so a
+        // geometry mismatch (different kv-head widths) shows up as a
+        // byte-count mismatch and is rejected before touching budgets
+        let pool_bytes = self.paged.shared_bytes(len);
+        if prefix.seg.host_bytes() != pool_bytes {
+            return false;
+        }
+        loop {
+            let cache = self.prefix.as_ref().unwrap();
+            let fits = cache.fits_retain_budget(pool_bytes)
+                && self.paged.allocated_bytes() + pool_bytes <= self.paged.budget_bytes();
+            if fits {
+                break;
+            }
+            if !self.evict_prefix_lru(None) {
+                return false; // cannot make room: decline the migration
+            }
+        }
+        let gen_from = prefix.prompt_tokens.min(len);
+        let seg_id = self.prefix.as_mut().unwrap().insert(&prefix.tokens, prefix.seg, gen_from);
+        let retained = self.paged.retain_shared(seg_id, len);
+        debug_assert!(retained, "pool fit was just checked");
+        if !retained {
+            self.prefix.as_mut().unwrap().remove(seg_id);
+            return false;
+        }
+        true
+    }
+
+    /// Raise the request-id counter to at least `base` (no-op if ids have
+    /// already passed it). The router gives replica `i` the base
+    /// `(i as u64) << 48` *before* serving starts, so every id is
+    /// globally unique and `id >> 48` recovers the owning replica —
+    /// `RouterHandle::cancel` routes on exactly that.
+    pub fn set_request_id_base(&mut self, base: u64) {
+        self.next_id = self.next_id.max(base.max(1));
     }
 
     /// Admit queued requests into free slots under the configured policy.

@@ -189,6 +189,43 @@ impl EngineMetrics {
         }
     }
 
+    /// Fold another engine's **counters** into this snapshot — the
+    /// router's per-replica rollup (`RouterHandle::metrics_text`, the
+    /// `bench-router` aggregate block). Latency series are deliberately
+    /// NOT merged: their percentile reservoirs do not compose, so
+    /// rollups report fleet-wide throughput counters and leave
+    /// TTFT/ITL/e2e distributions per-replica.
+    pub fn absorb(&mut self, o: &EngineMetrics) {
+        self.requests_completed += o.requests_completed;
+        self.prompt_tokens += o.prompt_tokens;
+        self.generated_tokens += o.generated_tokens;
+        self.decode_steps += o.decode_steps;
+        self.prefills += o.prefills;
+        self.wall_secs += o.wall_secs;
+        self.sched_overhead_secs += o.sched_overhead_secs;
+        self.execute_secs += o.execute_secs;
+        self.chunked_prefills += o.chunked_prefills;
+        self.prefill_chunk_passes += o.prefill_chunk_passes;
+        self.prefill_chunk_tokens += o.prefill_chunk_tokens;
+        self.rejected_prompts += o.rejected_prompts;
+        self.finished_eos += o.finished_eos;
+        self.finished_max_new += o.finished_max_new;
+        self.finished_horizon += o.finished_horizon;
+        self.cancelled += o.cancelled;
+        self.draft_proposed += o.draft_proposed;
+        self.draft_accepted += o.draft_accepted;
+        self.spec_passes += o.spec_passes;
+        self.spec_rollbacks += o.spec_rollbacks;
+        self.spec_steps += o.spec_steps;
+        self.spec_fused_passes += o.spec_fused_passes;
+        self.prefix_hits += o.prefix_hits;
+        self.prefix_misses += o.prefix_misses;
+        self.prefix_tokens_saved += o.prefix_tokens_saved;
+        self.prefix_evictions += o.prefix_evictions;
+        self.prefix_gen_hits += o.prefix_gen_hits;
+        self.prefix_gen_tokens_saved += o.prefix_gen_tokens_saved;
+    }
+
     /// One-line operational summary (plus a spec section when drafting
     /// ran, and a prefix section when the cache saw traffic).
     pub fn summary(&self) -> String {
@@ -403,6 +440,34 @@ mod tests {
         assert_eq!(m.p50_e2e(), 0.3);
         assert_eq!(m.p95_e2e(), 0.5);
         assert!(m.summary().contains("ttft p50/p95"));
+    }
+
+    #[test]
+    fn absorb_sums_counters_and_leaves_latency_series_alone() {
+        let mut a = EngineMetrics {
+            requests_completed: 2,
+            generated_tokens: 10,
+            prefix_hits: 1,
+            prefix_misses: 3,
+            ttft: vec![0.010].into(),
+            ..Default::default()
+        };
+        let b = EngineMetrics {
+            requests_completed: 3,
+            generated_tokens: 7,
+            prefix_hits: 3,
+            prefix_misses: 1,
+            cancelled: 1,
+            ttft: vec![0.999].into(),
+            ..Default::default()
+        };
+        a.absorb(&b);
+        assert_eq!(a.requests_completed, 5);
+        assert_eq!(a.generated_tokens, 17);
+        assert_eq!(a.cancelled, 1);
+        assert_eq!((a.prefix_hits, a.prefix_misses), (4, 4));
+        assert_eq!(a.prefix_hit_rate(), 0.5, "aggregate rate is over summed hits+misses");
+        assert_eq!(a.p95_ttft(), 0.010, "latency reservoirs are not merged");
     }
 
     #[test]

@@ -36,7 +36,12 @@
 //!   over the full committed stream — prompt plus generated tokens — so
 //!   multi-turn conversations whose next prompt extends the previous
 //!   completion reuse whole turns (`PrefixHit::gen_tokens` > 0 marks
-//!   those; cancelled sequences retain nothing).
+//!   those; cancelled sequences retain nothing). Retained segments can
+//!   also *migrate* between engines: `Engine::export_prefix` clones the
+//!   matched rows into a [`MigratedPrefix`] and `Engine::adopt_prefix`
+//!   re-retains them under the destination's own budgets and segment ids
+//!   — the data-parallel router (`crate::server`) uses this to move hot
+//!   system prompts to wherever load goes (DESIGN.md §12).
 //! * `metrics` — throughput, TTFT/ITL/e2e percentiles, finish-reason
 //!   counts, prefix hit rates (generated-origin hits broken out), and
 //!   chunked-prefill pass/token counters.
@@ -55,6 +60,6 @@ pub mod scheduler;
 pub use engine::{Engine, EngineConfig, FinishReason, GenRequest, Response, SpecFeed, StreamEvent};
 pub use kvcache::PagedKvManager;
 pub use metrics::EngineMetrics;
-pub use prefixcache::{KvSegment, PrefixCache, PrefixHit};
+pub use prefixcache::{KvSegment, MigratedPrefix, PrefixCache, PrefixHit};
 pub use sampling::SamplingParams;
 pub use scheduler::{Scheduler, SchedulerKind};

@@ -8,10 +8,14 @@
 //! throughput is measured separately and reported only on stdout.
 //!
 //! Multi-turn conversations are stitched **closed-loop**: turn N+1's
-//! prompt is turn N's full prompt + completion (trailing EOS stripped)
-//! + the new user tokens. Against a prefix-cache engine those prompts
-//! land on segments retained at the previous turn's *finish* — the
-//! generated-token retention rule of DESIGN.md §9.
+//! prompt is turn N's full prompt + completion (trailing EOS stripped
+//! by [`strip_trailing_eos`]) + the new user tokens. Against a
+//! prefix-cache engine those prompts land on segments retained at the
+//! previous turn's *finish* — the generated-token retention rule of
+//! DESIGN.md §9. The wall-clock replay (`workload::wallclock`) applies
+//! the identical rule, which is what makes its transcripts comparable
+//! against this driver's byte-for-byte — single engine or routed fleet
+//! alike.
 
 use std::collections::HashMap;
 use std::fmt::Write as _;
@@ -25,6 +29,17 @@ use crate::specdec::{SpecBatch, SpecRequest};
 use crate::util::Timer;
 
 use super::trace::Trace;
+
+/// Strip one trailing EOS token from a completion before stitching it
+/// into the conversation's next prompt. Both the virtual-tick driver and
+/// the wall-clock replay (`workload::wallclock`) stitch through this one
+/// function, which is what keeps their multi-turn transcripts
+/// byte-comparable.
+pub fn strip_trailing_eos(gen: &mut Vec<u32>) {
+    if gen.last() == Some(&EOS) {
+        gen.pop();
+    }
+}
 
 /// The serving configuration a trace replays against — a plain or
 /// prefix-cache `Engine`, or a speculative `SpecBatch` (drafter +
@@ -268,9 +283,7 @@ pub fn replay(trace: &Trace, server: &mut Server, config: &str) -> Result<Worklo
                     // stitch the completion (sans trailing EOS) into the
                     // conversation context for the next turn
                     let mut gen = rec.gen.clone();
-                    if gen.last() == Some(&EOS) {
-                        gen.pop();
-                    }
+                    strip_trailing_eos(&mut gen);
                     let cs = &mut convs[ci];
                     cs.context.extend(&gen);
                     cs.running = None;

@@ -20,10 +20,13 @@
 //!   wall-clock mirror types (`WallRecord` / `WallSlo` / `wall_goodput`)
 //!   scored in seconds.
 //! * `wallclock` (default backend build only) — the same closed-loop
-//!   replay in *real* time against the threaded async front-end
-//!   (`server::AsyncServer`), one client thread per conversation, and
-//!   the `BENCH_serving_async.json` emitter gating chunked-vs-unchunked
-//!   TTFT plus byte identity.
+//!   replay in *real* time against any `server::Frontend` (a
+//!   single-engine `ServerHandle` or a multi-replica `RouterHandle`),
+//!   one client thread per conversation, with closed- or open-loop
+//!   arrival pacing (`Pacing` — open pacing bills latency from the
+//!   scheduled arrival, so bursty-overload queueing counts against the
+//!   SLO), and the `BENCH_serving_async.json` emitter gating
+//!   chunked-vs-unchunked TTFT plus byte identity.
 //!
 //! The multi-turn mix is the reason this PR also taught the engine to
 //! retain prefix segments over *generated* tokens at sequence finish:
@@ -40,9 +43,11 @@ pub mod wallclock;
 
 pub use driver::{replay, ReqRecord, Server, WorkloadRun};
 pub use report::{
-    default_profiles, default_wall_profiles, fnv1a64, goodput, report_json, wall_goodput,
-    SloProfile, WallRecord, WallSlo,
+    default_profiles, default_wall_profiles, fnv1a64, goodput, load_skew, report_json,
+    wall_goodput, SloProfile, WallRecord, WallSlo,
 };
 pub use trace::{Arrival, Conversation, MixKind, Trace, TraceSpec, Turn};
 #[cfg(not(feature = "pjrt"))]
-pub use wallclock::{replay_wall, wall_report_json, WallRun};
+pub use wallclock::{
+    replay_wall, replay_wall_paced, wall_report_json, wall_run_json, Pacing, WallRun,
+};

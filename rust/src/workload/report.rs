@@ -141,6 +141,17 @@ pub fn wall_goodput(records: &[WallRecord], intended: usize, slo: &WallSlo) -> (
     }
 }
 
+/// Routing imbalance across a replica fleet: max − min of the
+/// per-replica routed-request counts (0 for an empty or single-replica
+/// fleet). The router's `puzzle_router_load_skew` gauge and
+/// `BENCH_router.json` both report this.
+pub fn load_skew(counts: &[u64]) -> u64 {
+    match (counts.iter().max(), counts.iter().min()) {
+        (Some(max), Some(min)) => max - min,
+        _ => 0,
+    }
+}
+
 /// FNV-1a 64-bit hash of the event log — a compact determinism witness
 /// (two runs of the same spec + seed + config must agree).
 pub fn fnv1a64(s: &str) -> u64 {
@@ -305,6 +316,14 @@ mod tests {
         let [lenient, strict] = default_wall_profiles();
         assert!(strict.ttft_secs <= lenient.ttft_secs);
         assert!(strict.itl_secs <= lenient.itl_secs);
+    }
+
+    #[test]
+    fn load_skew_is_max_minus_min() {
+        assert_eq!(load_skew(&[]), 0);
+        assert_eq!(load_skew(&[5]), 0);
+        assert_eq!(load_skew(&[3, 3, 3, 3]), 0, "balanced fleet");
+        assert_eq!(load_skew(&[7, 1, 4, 0]), 7);
     }
 
     #[test]

@@ -168,6 +168,16 @@ impl TraceSpec {
         TraceSpec { mix, arrival: Arrival::Poisson { mean_gap: 3.0 }, conversations: 6, seed }
     }
 
+    /// A bursty ON/OFF spec for `mix`: 12 conversations arriving in
+    /// back-to-back bursts of 4 with 8 quiet ticks between bursts — the
+    /// `bench-router` stress scale. Open-loop pacing over this arrival
+    /// pattern is what separates a replicated fleet from a single
+    /// engine: each burst lands on several replicas at once instead of
+    /// queueing behind one.
+    pub fn bursty(mix: MixKind, seed: u64) -> TraceSpec {
+        TraceSpec { mix, arrival: Arrival::Bursty { burst: 4, idle: 8 }, conversations: 12, seed }
+    }
+
     /// Materialize the trace against a serving geometry: `vocab_size`
     /// drives token realism, `prefill_window` (`s_prefill`) is what
     /// long-context prompts deliberately exceed, and every conversation
@@ -329,5 +339,24 @@ mod tests {
         assert!(starts.windows(2).all(|w| w[0] <= w[1]));
         let starts = Arrival::Bursty { burst: 3, idle: 4 }.starts(7, &mut rng);
         assert_eq!(starts, vec![0, 0, 0, 5, 5, 5, 10]);
+    }
+
+    #[test]
+    fn bursty_spec_is_deterministic_and_actually_bursts() {
+        let spec = TraceSpec::bursty(MixKind::Shared, 7);
+        let a = spec.generate(64, 16, 48);
+        let b = TraceSpec::bursty(MixKind::Shared, 7).generate(64, 16, 48);
+        assert_eq!(a.convs.len(), 12);
+        for (ca, cb) in a.convs.iter().zip(&b.convs) {
+            assert_eq!(ca.start, cb.start);
+            assert_eq!(ca.turns.len(), cb.turns.len());
+            for (ta, tb) in ca.turns.iter().zip(&cb.turns) {
+                assert_eq!(ta.user, tb.user);
+            }
+        }
+        // bursts of 4 share a start tick; bursts are separated by idle
+        let starts: Vec<usize> = a.convs.iter().map(|c| c.start).collect();
+        assert_eq!(starts[0], starts[3], "first burst arrives together");
+        assert!(starts[4] > starts[3], "quiet gap between bursts");
     }
 }

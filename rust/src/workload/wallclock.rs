@@ -3,36 +3,63 @@
 //! `driver::replay` advances a *virtual* clock — one tick per engine
 //! step — which makes every latency deterministic but says nothing about
 //! real concurrency. This module replays the **same trace** in real
-//! time: one client thread per conversation, each talking to the shared
-//! [`ServerHandle`], with arrival offsets and think times scaled by a
-//! configurable tick duration. The closed-loop stitching rule is
-//! byte-for-byte the virtual driver's (turn N+1's prompt = turn N's
-//! prompt + completion with the trailing EOS stripped + the new user
-//! tokens), so the generated tokens of a wall replay can be compared
-//! against a synchronous replay as a byte-identity witness — the
-//! budgeted chunked-prefill invariant of DESIGN.md §10.
+//! time: one client thread per conversation, each talking to a shared
+//! [`Frontend`] — a single-engine `ServerHandle` or a multi-replica
+//! `RouterHandle`, the replay cannot tell them apart — with arrival
+//! offsets and think times scaled by a configurable tick duration. The
+//! closed-loop stitching rule is byte-for-byte the virtual driver's
+//! (turn N+1's prompt = turn N's prompt + completion with the trailing
+//! EOS stripped + the new user tokens), so the generated tokens of a
+//! wall replay can be compared against a synchronous replay as a
+//! byte-identity witness — the budgeted chunked-prefill invariant of
+//! DESIGN.md §10 and the router placement invariant of §12.
+//!
+//! Two arrival pacings ([`Pacing`]):
+//!
+//! * **Closed** — turn N+1's clock starts when it is submitted, which
+//!   happens after turn N completes plus think time. Under overload this
+//!   *hides* queueing delay (coordinated omission: a slow server slows
+//!   the arrival process down with it).
+//! * **Open** — every turn has a *scheduled* arrival on the trace's tick
+//!   grid (conversation start + cumulative think times, independent of
+//!   service times), and TTFT/e2e are measured **from the scheduled
+//!   arrival**. A turn whose previous completion ran past its schedule
+//!   submits late and eats the delay in its own latency — the honest
+//!   regime for bursty goodput gating (`bench-router`).
 //!
 //! Latencies here are **seconds, not ticks**, and depend on the machine.
 //! The report emitter therefore carries both absolute numbers (for
-//! humans) and the chunked-vs-unchunked *relative* comparison (the only
-//! thing CI gates).
+//! humans) and *relative* comparisons (chunked vs unchunked, routed vs
+//! single-replica — the only things CI gates).
 
 use std::time::{Duration, Instant};
 
-use crate::data::world::EOS;
-use crate::server::ServerHandle;
+use crate::server::Frontend;
 use crate::serving::{EngineMetrics, GenRequest};
 use crate::util::{percentile, Json};
 
 use super::report::{default_wall_profiles, wall_goodput, WallRecord};
 use super::trace::Trace;
 
+/// Arrival pacing for a wall-clock replay (see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pacing {
+    /// Turn N+1 submits after turn N completes + think time; latencies
+    /// are measured from the actual submit instant.
+    Closed,
+    /// Every turn targets its scheduled arrival on the trace grid;
+    /// latencies are measured from the *schedule*, so queueing and
+    /// late-submit delay count against the SLO (no coordinated
+    /// omission). Stitching still waits for the previous completion.
+    Open,
+}
+
 /// One trace replayed in wall-clock time against one server
 /// configuration — the seconds-denominated mirror of
 /// `driver::WorkloadRun`.
 #[derive(Debug, Clone)]
 pub struct WallRun {
-    /// Configuration label (`unchunked`, `chunked`, ...).
+    /// Configuration label (`unchunked`, `chunked`, `routed`, ...).
     pub config: String,
     /// Per-request records, grouped by conversation in trace order (turn
     /// order within each conversation).
@@ -54,17 +81,28 @@ impl WallRun {
     }
 }
 
-/// Replay `trace` against a running async server in wall-clock time.
+/// Replay `trace` against a running front-end in wall-clock time with
+/// closed-loop pacing — see [`replay_wall_paced`] for the general form.
+pub fn replay_wall<F: Frontend>(trace: &Trace, handle: &F, tick: Duration, config: &str) -> WallRun {
+    replay_wall_paced(trace, handle, tick, config, Pacing::Closed)
+}
+
+/// Replay `trace` against a running async front-end (a `ServerHandle` or
+/// a `RouterHandle` — anything [`Frontend`]) in wall-clock time.
 ///
-/// One client thread per conversation: it sleeps until the
-/// conversation's arrival offset (`conv.start` ticks after the common
-/// epoch), then walks the turns closed-loop — submit, stream the
-/// completion, stitch it into the next prompt, pause `think_ticks`
-/// ticks, repeat. A shed submit (`Err` from [`ServerHandle::submit`])
-/// records a `ttft_secs: None` entry and abandons the rest of the
-/// conversation, exactly like the virtual driver; a server death
-/// mid-stream (`finish: None`) abandons it too.
-pub fn replay_wall(trace: &Trace, handle: &ServerHandle, tick: Duration, config: &str) -> WallRun {
+/// One client thread per conversation: it walks the turns in order —
+/// submit, stream the completion, stitch it into the next prompt —
+/// paced by `pacing` (see the module docs). A shed submit (`Err` from
+/// `Frontend::submit`) records a `ttft_secs: None` entry and abandons
+/// the rest of the conversation, exactly like the virtual driver; a
+/// server death mid-stream (`finish: None`) abandons it too.
+pub fn replay_wall_paced<F: Frontend>(
+    trace: &Trace,
+    handle: &F,
+    tick: Duration,
+    config: &str,
+    pacing: Pacing,
+) -> WallRun {
     let t0 = Instant::now();
     let mut records: Vec<WallRecord> = Vec::new();
     std::thread::scope(|s| {
@@ -76,16 +114,33 @@ pub fn replay_wall(trace: &Trace, handle: &ServerHandle, tick: Duration, config:
                 let h = handle.clone();
                 s.spawn(move || {
                     let mut recs: Vec<WallRecord> = Vec::new();
-                    let arrive = t0 + tick.mul_f64(conv.start as f64);
-                    std::thread::sleep(arrive.saturating_duration_since(Instant::now()));
                     let mut context: Vec<u32> = Vec::new();
+                    // scheduled arrival cursor, ticks on the trace grid
+                    // (start + cumulative think; service time excluded)
+                    let mut sched = conv.start;
                     for (ti, turn) in conv.turns.iter().enumerate() {
                         if ti > 0 {
-                            std::thread::sleep(tick.mul_f64(turn.think_ticks as f64));
+                            sched += turn.think_ticks;
+                            if pacing == Pacing::Closed {
+                                std::thread::sleep(tick.mul_f64(turn.think_ticks as f64));
+                            }
+                        }
+                        let scheduled = t0 + tick.mul_f64(sched as f64);
+                        if ti == 0 || pacing == Pacing::Open {
+                            std::thread::sleep(
+                                scheduled.saturating_duration_since(Instant::now()),
+                            );
                         }
                         let mut prompt = std::mem::take(&mut context);
                         prompt.extend(&turn.user);
                         let submit_at = Instant::now();
+                        // the latency epoch: open pacing bills from the
+                        // schedule so a late submit (previous turn ran
+                        // long) or a deep queue cannot hide
+                        let arrive_at = match pacing {
+                            Pacing::Closed => submit_at,
+                            Pacing::Open => scheduled,
+                        };
                         let stream =
                             match h.submit(GenRequest::new(prompt.clone(), turn.max_new)) {
                                 Ok(stream) => stream,
@@ -97,7 +152,7 @@ pub fn replay_wall(trace: &Trace, handle: &ServerHandle, tick: Duration, config:
                                         turn: ti,
                                         ttft_secs: None,
                                         gaps_secs: Vec::new(),
-                                        e2e_secs: submit_at.elapsed().as_secs_f64(),
+                                        e2e_secs: arrive_at.elapsed().as_secs_f64(),
                                         gen: Vec::new(),
                                         finish: None,
                                     });
@@ -120,8 +175,10 @@ pub fn replay_wall(trace: &Trace, handle: &ServerHandle, tick: Duration, config:
                                     let now = Instant::now();
                                     match last_tok {
                                         None => {
-                                            rec.ttft_secs =
-                                                Some((now - submit_at).as_secs_f64());
+                                            rec.ttft_secs = Some(
+                                                now.saturating_duration_since(arrive_at)
+                                                    .as_secs_f64(),
+                                            );
                                         }
                                         Some(prev) => {
                                             rec.gaps_secs.push((now - prev).as_secs_f64());
@@ -136,7 +193,7 @@ pub fn replay_wall(trace: &Trace, handle: &ServerHandle, tick: Duration, config:
                                 }
                             }
                         }
-                        rec.e2e_secs = submit_at.elapsed().as_secs_f64();
+                        rec.e2e_secs = arrive_at.elapsed().as_secs_f64();
                         let finished = rec.finish.is_some();
                         let mut gen = rec.gen.clone();
                         recs.push(rec);
@@ -147,9 +204,7 @@ pub fn replay_wall(trace: &Trace, handle: &ServerHandle, tick: Duration, config:
                         }
                         // closed-loop stitch (trailing EOS stripped), the
                         // same rule as the virtual driver
-                        if gen.last() == Some(&EOS) {
-                            gen.pop();
-                        }
+                        super::driver::strip_trailing_eos(&mut gen);
                         context = prompt;
                         context.extend(&gen);
                     }
@@ -172,7 +227,9 @@ pub fn replay_wall(trace: &Trace, handle: &ServerHandle, tick: Duration, config:
 /// Latency summary of one wall run as a JSON object (milliseconds).
 /// Percentiles are over *finished* requests only; shed or abandoned
 /// turns are reported via `completed` / `shed` and the goodput block.
-fn wall_run_json(run: &WallRun, metrics: &EngineMetrics) -> Json {
+/// Public so `bench-router` can embed per-configuration blocks in
+/// `BENCH_router.json` with the same schema as `BENCH_serving_async`.
+pub fn wall_run_json(run: &WallRun, metrics: &EngineMetrics) -> Json {
     let done: Vec<&WallRecord> = run.records.iter().filter(|r| r.finish.is_some()).collect();
     let ttfts: Vec<f64> =
         done.iter().filter_map(|r| r.ttft_secs).map(|t| t * 1e3).collect();

@@ -1,0 +1,409 @@
+//! Integration tests for the data-parallel router (`server::Router`):
+//! the single-replica equivalence oracle (a 1-replica router is byte-
+//! identical to a bare `AsyncServer`), routed N-replica fleets matching
+//! the single-engine sync replay token for token, the deterministic
+//! warm/pin/spill sequence that forces a cross-replica prefix migration,
+//! exact migration accounting on both engines (refcounts, retained
+//! bytes, double-adopt), mid-migration cancellation leaking no pages,
+//! and open-loop pacing preserving byte identity. The router needs
+//! `Engine: Send`, so this whole crate is compiled only on the default
+//! (non-pjrt) backend build.
+#![cfg(not(feature = "pjrt"))]
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use puzzle::arch::{Arch, AttnChoice, FfnChoice};
+use puzzle::bld;
+use puzzle::runtime::{share, Backend, SharedBackend};
+use puzzle::server::{AsyncServer, Router, RouterConfig, RouterHandle, REPLICA_SHIFT};
+use puzzle::serving::{Engine, EngineConfig, GenRequest};
+use puzzle::util::Rng;
+use puzzle::weights::store::init_parent;
+use puzzle::weights::Store;
+use puzzle::workload::{
+    replay, replay_wall, replay_wall_paced, MixKind, Pacing, Server, Trace, TraceSpec,
+};
+
+fn backend() -> SharedBackend {
+    share(puzzle::runtime::RefBackend::tiny())
+}
+
+/// A child with per-layer KV geometry differences (GQA divisors, one
+/// linear-attention layer with no KV at all) — the migration payload
+/// must slice and re-retain correctly across all of them.
+fn variable_arch(be: &dyn Backend, store: &mut Store) -> Arch {
+    let n = be.man().cfg.n_layers;
+    let mut arch = Arch::parent(n);
+    arch.layers[0].0 = AttnChoice::Gqa { divisor: 2 };
+    arch.layers[1] = (AttnChoice::Linear, FfnChoice::Ratio(3));
+    for l in 0..n {
+        for (kind, v) in [("attn", arch.layers[l].0.name()), ("ffn", arch.layers[l].1.name())] {
+            if v != "gqa_r1" && v != "r100" && v != "noop" {
+                let job = bld::Job { layer: l, kind, variant: v };
+                bld::init_job_weights(be.man(), store, &job, None).unwrap();
+            }
+        }
+    }
+    arch
+}
+
+/// The replica configuration every router test uses: prefix cache on
+/// (the placement signal) and a queue deep enough that shedding never
+/// depends on wall timing — shed-vs-served divergence would break the
+/// byte-identity comparisons.
+fn replica_cfg() -> EngineConfig {
+    EngineConfig::new()
+        .kv_budget_bytes(16 << 20)
+        .page_len(4)
+        .max_queue(1024)
+        .prefix_cache(true, 8 << 20)
+}
+
+fn build_engines(be: &SharedBackend, store: &Store, arch: &Arch, n: usize) -> Vec<Engine> {
+    (0..n).map(|_| replica_cfg().build(be.clone(), store, arch).unwrap()).collect()
+}
+
+fn transcript_of(records: &[puzzle::workload::WallRecord]) -> BTreeMap<(usize, usize), Vec<u32>> {
+    records.iter().map(|r| ((r.conv, r.turn), r.gen.clone())).collect()
+}
+
+/// The deterministic virtual-tick replay on one engine: the oracle every
+/// wall-clock transcript is compared against.
+fn sync_oracle(
+    be: &SharedBackend,
+    store: &Store,
+    arch: &Arch,
+    trace: &Trace,
+) -> BTreeMap<(usize, usize), Vec<u32>> {
+    let mut eng = replica_cfg().build(be.clone(), store, arch).unwrap();
+    let run = replay(trace, &mut Server::Engine(&mut eng), "sync_oracle").unwrap();
+    run.records.iter().map(|r| ((r.conv, r.turn), r.gen.clone())).collect()
+}
+
+/// Block until every replica has drained (no active or queued work), so
+/// page-accounting assertions see a settled fleet. Cancels are
+/// fire-and-forget, so the worker may still be tearing a request down
+/// when the cancel call returns.
+fn wait_idle(handle: &RouterHandle) {
+    for _ in 0..500 {
+        let stats = handle.stats().unwrap();
+        if stats.replicas.iter().all(|s| s.active == 0 && s.queued == 0) {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    panic!("router replicas did not drain");
+}
+
+#[test]
+fn one_replica_router_is_byte_identical_to_a_bare_async_server() {
+    // the equivalence oracle: the router's placement layer must be
+    // invisible when there is nothing to place — same trace, same
+    // streams, through a bare AsyncServer and through a 1-replica Router.
+    let be = backend();
+    let cfg = be.man().cfg.clone();
+    let mut rng = Rng::new(91);
+    let store = init_parent(be.man(), &mut rng);
+    let arch = Arch::parent(cfg.n_layers);
+    let mut spec = TraceSpec::small(MixKind::Mixed, 21);
+    spec.conversations = 4;
+    let trace = spec.generate(cfg.v as u32, cfg.s_prefill, cfg.s_max);
+    let want = sync_oracle(&be, &store, &arch, &trace);
+
+    let bare = {
+        let server = AsyncServer::spawn(replica_cfg().build(be.clone(), &store, &arch).unwrap());
+        let h = server.handle();
+        let run = replay_wall(&trace, &h, Duration::from_millis(1), "bare");
+        drop(h);
+        server.shutdown();
+        transcript_of(&run.records)
+    };
+    assert_eq!(bare, want, "bare AsyncServer must match the sync oracle");
+
+    let router = Router::spawn(build_engines(&be, &store, &arch, 1), RouterConfig::default());
+    let h = router.handle();
+    let run = replay_wall(&trace, &h, Duration::from_millis(1), "router1");
+    let stats = h.stats().unwrap();
+    drop(h);
+    router.shutdown();
+    assert_eq!(transcript_of(&run.records), want, "1-replica router must equal the bare server");
+    assert_eq!(stats.routed, vec![trace.requests() as u64], "every request lands on replica 0");
+    assert_eq!((stats.migrations, stats.shed), (0, 0), "one replica: nothing to migrate or shed");
+}
+
+#[test]
+fn routed_fleets_match_the_single_engine_oracle_byte_for_byte() {
+    // placement must never steer sampling: a shared-prefix trace routed
+    // across 2 and 4 replicas generates exactly the tokens of a fresh
+    // single-engine run, whichever replica each request landed on.
+    let be = backend();
+    let cfg = be.man().cfg.clone();
+    let mut rng = Rng::new(92);
+    let store = init_parent(be.man(), &mut rng);
+    let arch = Arch::parent(cfg.n_layers);
+    let mut spec = TraceSpec::small(MixKind::Shared, 13);
+    spec.conversations = 6;
+    let trace = spec.generate(cfg.v as u32, cfg.s_prefill, cfg.s_max);
+    let want = sync_oracle(&be, &store, &arch, &trace);
+
+    for n in [2usize, 4] {
+        let router = Router::spawn(build_engines(&be, &store, &arch, n), RouterConfig::default());
+        let h = router.handle();
+        let run = replay_wall(&trace, &h, Duration::from_millis(1), "routed");
+        let stats = h.stats().unwrap();
+        drop(h);
+        router.shutdown();
+        assert_eq!(
+            transcript_of(&run.records),
+            want,
+            "{n}-replica routed transcript must match the single-engine oracle"
+        );
+        assert_eq!(stats.total_routed(), trace.requests() as u64, "every request was accepted");
+        assert_eq!(stats.shed, 0, "a 1024-deep queue per replica never sheds this trace");
+        assert_eq!(stats.routed.len(), n);
+    }
+}
+
+#[test]
+fn overloaded_hot_replica_migrates_its_prefix_and_stays_byte_identical() {
+    // the acceptance scenario, made deterministic. warm: one request
+    // retains the shared prefix on replica 0. pin: a long request routes
+    // to replica 0 (longest match) and holds it at the overload depth.
+    // spill: the next shared-prefix request must route AWAY from the hot
+    // replica, dragging the retained segment along (exactly one
+    // migration of the 8-token page-aligned prefix), and its stream must
+    // still equal a cold single-engine run. A bursty shared-prefix trace
+    // then replays through the same fleet and must match the sync oracle
+    // with a positive aggregate hit rate.
+    let be = backend();
+    let cfg = be.man().cfg.clone();
+    let mut rng = Rng::new(93);
+    let store = init_parent(be.man(), &mut rng);
+    let arch = Arch::parent(cfg.n_layers);
+    let rcfg = RouterConfig { overload: 1, min_migrate: 1 };
+    let router = Router::spawn(build_engines(&be, &store, &arch, 4), rcfg);
+    let h = router.handle();
+
+    let shared: Vec<u32> = vec![1, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14]; // 11 tokens
+    let with_tail = |tail: &[u32]| {
+        let mut p = shared.clone();
+        p.extend_from_slice(tail);
+        p
+    };
+
+    // warm: all probes tie at match 0 / depth 0, lowest index wins
+    let warm = h.submit(GenRequest::new(with_tail(&[20, 21, 22]), 6)).unwrap();
+    assert_eq!(warm.id() >> REPLICA_SHIFT, 0, "first request must land on replica 0");
+    let (_, warm_finish) = warm.collect();
+    assert!(warm_finish.is_some());
+    assert!(
+        h.stats().unwrap().replicas[0].prefix_segments >= 1,
+        "warm's finish must retain the shared prefix on replica 0"
+    );
+
+    // pin: replica 0 now has the longest match (8 of the 11 shared
+    // tokens, page-aligned) and is idle, so it wins placement — and its
+    // in-flight depth reaches the overload threshold
+    let pin = h.submit(GenRequest::new(with_tail(&[23, 24, 25]), 24)).unwrap();
+    assert_eq!(pin.id() >> REPLICA_SHIFT, 0, "longest match must pin replica 0");
+
+    // spill: replica 0 still has the best match but sits at the
+    // overload depth, so placement picks replica 1 and migrates the
+    // segment first
+    let spill = h.submit(GenRequest::new(with_tail(&[26, 27, 28]), 6)).unwrap();
+    assert_eq!(spill.id() >> REPLICA_SHIFT, 1, "overloaded best match must lose the pick");
+    let (spill_tokens, spill_finish) = spill.collect();
+    assert!(spill_finish.is_some());
+
+    let stats = h.stats().unwrap();
+    assert_eq!(stats.migrations, 1, "exactly one cross-replica migration");
+    assert_eq!(stats.migrated_tokens, 8, "the page-aligned 8-token shared prefix moved");
+    assert_eq!(stats.routed, vec![2, 1, 0, 0]);
+    assert_eq!(stats.shed, 0);
+    assert!(
+        stats.replicas[1].prefix_segments >= 1,
+        "replica 1 must hold the adopted segment"
+    );
+
+    // the migrated hit is byte-identical to a cold run of the same
+    // request on a fresh engine (no cache at all)
+    let cold_tokens = {
+        let mut eng = EngineConfig::new()
+            .kv_budget_bytes(16 << 20)
+            .page_len(4)
+            .build(be.clone(), &store, &arch)
+            .unwrap();
+        let id = eng.submit(GenRequest::new(with_tail(&[26, 27, 28]), 6)).unwrap();
+        let resp = eng.run_to_completion().unwrap();
+        resp.into_iter().find(|r| r.id == id).unwrap().tokens
+    };
+    assert_eq!(spill_tokens, cold_tokens, "a migrated prefix hit must not change the stream");
+
+    let (_, pin_finish) = pin.collect();
+    assert!(pin_finish.is_some());
+
+    // a seeded bursty shared-prefix trace through the (already warm)
+    // fleet: still byte-identical to the fresh sync oracle — retained
+    // and migrated segments change where KV comes from, never the tokens
+    let trace = TraceSpec::bursty(MixKind::Shared, 17).generate(cfg.v as u32, cfg.s_prefill, cfg.s_max);
+    let want = sync_oracle(&be, &store, &arch, &trace);
+    let run = replay_wall_paced(&trace, &h, Duration::from_millis(1), "routed", Pacing::Open);
+    assert_eq!(transcript_of(&run.records), want, "routed bursty replay must match the oracle");
+
+    let agg = h.aggregate_metrics().unwrap();
+    assert!(agg.prefix_hits >= 2, "pin hit replica 0, spill hit the migrated copy on replica 1");
+    assert!(agg.prefix_hit_rate() > 0.0, "the fleet's aggregate hit rate must be positive");
+    drop(h);
+    router.shutdown();
+}
+
+#[test]
+fn migration_accounting_is_exact_on_both_engines() {
+    // export/adopt straight on two live engines, over an architecture
+    // with per-layer KV geometry differences. The source's refcounts and
+    // retained bytes must be exactly what they were before the export
+    // (the clone borrows nothing), the destination must charge exactly
+    // one segment and serve a byte-identical hit, and a second adopt of
+    // the same path is refused without touching accounting.
+    let be = backend();
+    let mut rng = Rng::new(94);
+    let mut store = init_parent(be.man(), &mut rng);
+    let arch = variable_arch(&*be, &mut store);
+    let p: Vec<u32> = vec![1, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15]; // 12 tokens
+
+    let mut a = replica_cfg().build(be.clone(), &store, &arch).unwrap();
+    let id = a.submit(GenRequest::new(p.clone(), 6)).unwrap();
+    let resp = a.run_to_completion().unwrap();
+    let cold_tokens = resp.into_iter().find(|r| r.id == id).unwrap().tokens;
+    assert_eq!(a.prefix_segments(), 1, "finish must retain the prompt+completion path");
+    let a_alloc = a.kv_allocated_bytes();
+    assert_eq!(a_alloc, a.prefix_retained_bytes(), "only the retained segment holds pages");
+    assert!(a_alloc > 0);
+
+    // export clones: the source's accounting must not move
+    let export = a.export_prefix(&p).expect("the retained path must export");
+    assert_eq!(export.seg.len, 8, "11 matchable tokens align down to 8 (page_len 4)");
+    assert_eq!(export.tokens, &p[..8]);
+    assert_eq!(export.prompt_tokens, 8, "the match ends inside the prompt part");
+    assert_eq!(a.kv_allocated_bytes(), a_alloc, "export must not charge the source pool");
+    assert_eq!(a.prefix_segments(), 1);
+
+    // adopt charges exactly one segment on the destination
+    let mut b = replica_cfg().build(be.clone(), &store, &arch).unwrap();
+    assert!(b.adopt_prefix(export.clone()), "a compatible payload must be adopted");
+    assert_eq!(b.prefix_segments(), 1);
+    let b_alloc = b.kv_allocated_bytes();
+    assert_eq!(b_alloc, b.prefix_retained_bytes());
+    assert!(b_alloc > 0);
+
+    // double-adopt of a covered path is refused, accounting untouched
+    assert!(!b.adopt_prefix(export), "the path is already covered on B");
+    assert_eq!((b.prefix_segments(), b.kv_allocated_bytes()), (1, b_alloc));
+
+    // the adopted segment serves a byte-identical hit
+    let id = b.submit(GenRequest::new(p.clone(), 6)).unwrap();
+    let resp = b.run_to_completion().unwrap();
+    let hit_tokens = resp.into_iter().find(|r| r.id == id).unwrap().tokens;
+    assert_eq!(hit_tokens, cold_tokens, "the migrated hit must equal the cold run");
+    assert_eq!(b.metrics.prefix_hits, 1);
+    assert_eq!(b.metrics.prefix_tokens_saved, 8);
+
+    // a local hit on the source is identical too
+    let id = a.submit(GenRequest::new(p.clone(), 6)).unwrap();
+    let resp = a.run_to_completion().unwrap();
+    assert_eq!(resp.into_iter().find(|r| r.id == id).unwrap().tokens, cold_tokens);
+    assert_eq!(a.metrics.prefix_hits, 1);
+
+    // refcount exactness: both caches evict down to zero bytes. A leaked
+    // reference from the export would pin the segment (evict_shared
+    // refuses at refs > 0) and leave bytes behind.
+    assert_eq!(a.clear_prefix_cache(), 1);
+    assert_eq!((a.kv_allocated_bytes(), a.prefix_retained_bytes()), (0, 0));
+    assert_eq!(b.clear_prefix_cache(), 1);
+    assert_eq!((b.kv_allocated_bytes(), b.prefix_retained_bytes()), (0, 0));
+}
+
+#[test]
+fn mid_migration_cancel_leaks_no_pages_on_either_replica() {
+    // cancel the request whose placement triggered the migration, plus
+    // the pin that forced it, then drain: both replicas must be down to
+    // exactly their retained-segment bytes (nothing leaked), and the
+    // destination keeps the migrated segment for the next hit.
+    let be = backend();
+    let cfg = be.man().cfg.clone();
+    let mut rng = Rng::new(95);
+    let store = init_parent(be.man(), &mut rng);
+    let arch = Arch::parent(cfg.n_layers);
+    let router =
+        Router::spawn(build_engines(&be, &store, &arch, 2), RouterConfig { overload: 1, min_migrate: 1 });
+    let h = router.handle();
+
+    let shared: Vec<u32> = vec![1, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14];
+    let with_tail = |tail: &[u32]| {
+        let mut p = shared.clone();
+        p.extend_from_slice(tail);
+        p
+    };
+    let warm = h.submit(GenRequest::new(with_tail(&[20, 21, 22]), 6)).unwrap();
+    let (_, warm_finish) = warm.collect();
+    assert!(warm_finish.is_some());
+    let pin = h.submit(GenRequest::new(with_tail(&[23, 24, 25]), 24)).unwrap();
+    assert_eq!(pin.id() >> REPLICA_SHIFT, 0);
+
+    let spill = h.submit(GenRequest::new(with_tail(&[26, 27, 28]), 12)).unwrap();
+    assert_eq!(spill.id() >> REPLICA_SHIFT, 1, "the spill must route to the cold replica");
+    assert_eq!(h.stats().unwrap().migrations, 1, "the spill's placement migrated the prefix");
+
+    // tear both down mid-flight; the pin through the router-level cancel
+    // (routed to replica 0 by the id's replica bits)
+    spill.cancel();
+    let (_, spill_finish) = spill.collect();
+    assert!(spill_finish.is_some(), "the cancelled stream still gets its terminal item");
+    h.cancel(pin.id());
+    let (_, pin_finish) = pin.collect();
+    assert!(pin_finish.is_some());
+
+    wait_idle(&h);
+    let stats = h.stats().unwrap();
+    for (i, s) in stats.replicas.iter().enumerate() {
+        assert_eq!(
+            s.kv_allocated_bytes, s.prefix_retained_bytes,
+            "replica {i}: every non-retained page must be back in the pool"
+        );
+    }
+    assert!(stats.replicas[1].prefix_segments >= 1, "the migrated segment survives the cancel");
+    drop(h);
+    let engines = router.shutdown();
+    for (i, e) in engines.iter().enumerate() {
+        assert_eq!(e.kv_active_seqs(), 0, "replica {i}: no sequence may still hold pages");
+        assert_eq!(e.kv_allocated_bytes(), e.prefix_retained_bytes());
+    }
+}
+
+#[test]
+fn open_loop_pacing_preserves_byte_identity() {
+    // the bench-router regime: open-loop pacing changes when requests
+    // arrive and how latency is billed, never what gets generated.
+    let be = backend();
+    let cfg = be.man().cfg.clone();
+    let mut rng = Rng::new(96);
+    let store = init_parent(be.man(), &mut rng);
+    let arch = Arch::parent(cfg.n_layers);
+    let trace = TraceSpec::bursty(MixKind::Shared, 29).generate(cfg.v as u32, cfg.s_prefill, cfg.s_max);
+    let want = sync_oracle(&be, &store, &arch, &trace);
+
+    for pacing in [Pacing::Closed, Pacing::Open] {
+        let server = AsyncServer::spawn(replica_cfg().build(be.clone(), &store, &arch).unwrap());
+        let h = server.handle();
+        let run = replay_wall_paced(&trace, &h, Duration::from_millis(1), "paced", pacing);
+        drop(h);
+        server.shutdown();
+        assert_eq!(
+            transcript_of(&run.records),
+            want,
+            "{pacing:?} pacing must generate the oracle's streams"
+        );
+        assert_eq!(run.intended, trace.requests());
+    }
+}

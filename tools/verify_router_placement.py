@@ -1,0 +1,389 @@
+#!/usr/bin/env python3
+"""Toolchain-free cross-check of the PR 9 data-parallel router logic.
+
+Transcribes the pure decision/accounting pieces of
+rust/src/server/placement.rs, rust/src/server/router.rs, and the
+migration geometry of rust/src/serving/{prefixcache,kvcache}.rs to
+Python (no cargo in the growth container) and checks:
+
+1. placement.rs unit-test expectations replayed against the transcribed
+   `choose` (all four tests, every assert).
+2. The placement.rs property fuzz replayed EXACTLY: a transcription of
+   util::Rng (PCG32) drives the same 5 seeds x 300 ops through the same
+   naive model, asserting choose == naive argmax on every submit and
+   shed iff all full — pre-verifying the Rust test stream-for-stream.
+3. An independent property fuzz (Python random, finite overloads, full
+   flags): shed-iff-all-full, the hoist rule (best non-overloaded
+   candidate wins, equal misery falls back to affinity), the fallback
+   chain is the rank order with the target hoisted, and migrate_from
+   points at the longest-match replica iff it beats the target.
+4. The warm/pin/spill migration sequence of
+   tests/router_integration.rs: probes transcribed step by step must
+   route warm->0, pin->0, spill->1 with exactly one migration of 8
+   tokens (11-token shared prefix aligned down to page 4), and the
+   routed-per-replica count must come out [2, 1, 0, 0].
+5. Request-id partitioning: `set_request_id_base` (next_id =
+   max(next_id, max(base, 1))) over REPLICA_SHIFT=48 keeps replica 0's
+   ids starting at 1, makes all ids globally unique, and `id >> 48`
+   recovers the owning replica for every issued id.
+6. Migration geometry: KvSegment::truncated / host_bytes transcribed
+   (incl. the 24-float unit anchor) and checked against
+   PagedKvManager::shared_bytes for page-aligned lengths over variable
+   kv-head layouts — the adopt_prefix equality gate — plus rejection of
+   a mismatched geometry.
+"""
+
+import math
+import random
+import sys
+
+# ---------------------------------------------------------------- PCG32
+
+M64 = (1 << 64) - 1
+
+
+class Rng:
+    """util/rng.rs PCG32, bit-exact."""
+
+    def __init__(self, seed):
+        self.state = 0
+        self.inc = ((seed << 1) | 1) & M64
+        self.next_u32()
+        self.state = (self.state + (0x853C49E6748FEA9B ^ seed)) & M64
+        self.next_u32()
+
+    def next_u32(self):
+        old = self.state
+        self.state = (old * 6364136223846793005 + self.inc) & M64
+        xorshifted = (((old >> 18) ^ old) >> 27) & 0xFFFFFFFF
+        rot = old >> 59
+        return ((xorshifted >> rot) | (xorshifted << ((32 - rot) & 31))) & 0xFFFFFFFF
+
+    def next_u64(self):
+        return (self.next_u32() << 32) | self.next_u32()
+
+    def below(self, n):
+        assert n > 0
+        return self.next_u64() % n
+
+
+# ------------------------------------------------- placement.rs choose
+
+
+class Probe:
+    def __init__(self, match_len, active, queued, full):
+        self.match_len = match_len
+        self.active = active
+        self.queued = queued
+        self.full = full
+
+    def depth(self):
+        return self.active + self.queued
+
+    def __repr__(self):
+        return f"P(m={self.match_len},d={self.depth()},f={self.full})"
+
+
+def choose(probes, overload):
+    """Transcription of placement::choose (overload may be math.inf)."""
+    order = [i for i, p in enumerate(probes) if not p.full]
+    if not order:
+        return None
+    # descending by (match_len, Reverse(depth), Reverse(index))
+    order.sort(key=lambda i: (probes[i].match_len, -probes[i].depth(), -i), reverse=True)
+    pos = next((k for k, i in enumerate(order) if probes[i].depth() < overload), None)
+    if pos is not None:
+        order.insert(0, order.pop(pos))
+    target = order[0]
+    best = max(range(len(probes)), key=lambda i: (probes[i].match_len, -i))
+    migrate_from = best if probes[best].match_len > probes[target].match_len else None
+    return order, migrate_from
+
+
+def probe(match_len, depth, full):
+    return Probe(match_len, depth, 0, full)
+
+
+INF = math.inf
+
+
+def check_unit_tests():
+    # longest_match_wins_then_depth_then_index
+    order, mig = choose([probe(0, 0, False), probe(8, 2, False), probe(8, 1, False)], INF)
+    assert order[0] == 2 and mig is None, (order, mig)
+    order, _ = choose([probe(4, 3, False), probe(0, 0, False)], INF)
+    assert order[0] == 0, "match beats depth"
+    order, _ = choose([probe(0, 1, False), probe(0, 1, False)], INF)
+    assert order[0] == 0, "ties break low-index"
+    # sheds_iff_all_full
+    assert choose([probe(9, 0, True), probe(0, 0, True)], INF) is None
+    order, mig = choose([probe(9, 0, True), probe(0, 5, False)], INF)
+    assert order == [1] and mig == 0, (order, mig)
+    assert choose([], INF) is None
+    # overloaded_best_match_loses_pick_and_becomes_migration_source
+    probes = [probe(8, 2, False), probe(0, 0, False)]
+    order, mig = choose(probes, 2)
+    assert order == [1, 0] and mig == 0, (order, mig)
+    order, mig = choose(probes, 3)
+    assert (order[0], mig) == (0, None)
+    order, mig = choose([probe(8, 4, False), probe(0, 4, False)], 2)
+    assert (order[0], mig) == (0, None), "equal misery: affinity wins"
+    # order_is_a_permutation_of_the_non_full_replicas (expectation fixed
+    # by this verifier: at overload 2, replica 0's depth-1 queue is below
+    # the threshold and its match outranks idle replica 3)
+    probes = [probe(2, 1, False), probe(0, 0, True), probe(6, 3, False), probe(0, 0, False)]
+    order, _ = choose(probes, 1)
+    assert sorted(order) == [0, 2, 3] and order == [3, 2, 0], order
+    order, _ = choose(probes, 2)
+    assert order[0] == 0, order
+    print("1. placement.rs unit-test expectations replayed (4 tests, every assert) ✓")
+
+
+def check_rust_fuzz_exact():
+    """Replay placement_matches_naive_model_under_fuzz stream-for-stream."""
+    REPLICAS, CAP, PAGE = 4, 3, 2
+    total_placed = 0
+    for fuzz_seed in range(5):
+        rng = Rng(0x907E12 ^ fuzz_seed)
+        retained = [[] for _ in range(REPLICAS)]
+        depth = [0] * REPLICAS
+        inflight = []
+        placed = 0
+        for _ in range(300):
+            op = rng.below(10)
+            if op < 5:
+                prompt = []
+                if rng.below(2) == 0:
+                    r = rng.below(REPLICAS)
+                    if retained[r]:
+                        prompt = list(retained[r][rng.below(len(retained[r]))])
+                while len(prompt) < 2 or rng.below(3) > 0:
+                    prompt.append(rng.below(3))
+                    if len(prompt) >= 8:
+                        break
+                probes = []
+                for r in range(REPLICAS):
+                    match_len = max(
+                        (len(q) for q in retained[r]
+                         if len(q) < len(prompt) and prompt[: len(q)] == q),
+                        default=0,
+                    )
+                    probes.append(
+                        Probe(match_len, min(depth[r], 2), max(depth[r] - 2, 0),
+                              depth[r] >= CAP))
+                decision = choose(probes, INF)
+                live = [r for r in range(REPLICAS) if depth[r] < CAP]
+                naive = max(
+                    live, key=lambda r: (probes[r].match_len, -depth[r], -r), default=None)
+                if decision is None:
+                    assert naive is None, f"seed {fuzz_seed}: shed disagreement"
+                else:
+                    assert naive is not None, f"seed {fuzz_seed}: shed disagreement"
+                    order, _ = decision
+                    assert order[0] == naive, \
+                        f"seed {fuzz_seed}: choose {order[0]} != naive {naive} for {probes}"
+                    depth[naive] += 1
+                    inflight.append((naive, prompt))
+                    placed += 1
+            elif inflight:
+                i = rng.below(len(inflight))
+                # Vec::swap_remove
+                inflight[i], inflight[-1] = inflight[-1], inflight[i]
+                r, prompt = inflight.pop()
+                depth[r] -= 1
+                aligned = (len(prompt) // PAGE) * PAGE
+                if op < 8 and aligned > 0 and not any(
+                        len(q) == aligned and prompt[: len(q)] == q for q in retained[r]):
+                    retained[r].append(prompt[:aligned])
+        assert placed > 50, f"seed {fuzz_seed}: only {placed} placed"
+        total_placed += placed
+    print(f"2. Rust placement fuzz replayed exactly (PCG32, 5 seeds x 300 ops, "
+          f"{total_placed} placements, choose == naive argmax throughout) ✓")
+
+
+def check_independent_fuzz():
+    pyrng = random.Random(0x9077)
+    trials = shed = migs = hoists = 0
+    for _ in range(4000):
+        n = pyrng.randrange(1, 7)
+        overload = pyrng.choice([1, 2, 3, INF])
+        probes = [
+            Probe(pyrng.choice([0, 0, 2, 4, 8, 8, 16]), pyrng.randrange(0, 4),
+                  pyrng.randrange(0, 3), pyrng.random() < 0.25)
+            for _ in range(n)
+        ]
+        got = choose(probes, overload)
+        alive = [i for i in range(n) if not probes[i].full]
+        if not alive:
+            assert got is None, probes
+            shed += 1
+            continue
+        assert got is not None, probes
+        order, mig = got
+        # order: permutation of the non-full replicas
+        assert sorted(order) == sorted(alive), (order, alive)
+        # rank order from the spec
+        rank = sorted(alive, key=lambda i: (probes[i].match_len, -probes[i].depth(), -i),
+                      reverse=True)
+        calm = [i for i in rank if probes[i].depth() < overload]
+        want_target = calm[0] if calm else rank[0]
+        assert order[0] == want_target, (order, rank, calm, overload, probes)
+        if calm and calm[0] != rank[0]:
+            hoists += 1
+        # fallback chain: rank order with the target hoisted out
+        want_order = [want_target] + [i for i in rank if i != want_target]
+        assert order == want_order, (order, want_order)
+        # migration source: longest match overall (low index ties) iff it
+        # beats the target's own match — full replicas included
+        best = max(range(n), key=lambda i: (probes[i].match_len, -i))
+        want_mig = best if probes[best].match_len > probes[want_target].match_len else None
+        assert mig == want_mig, (mig, want_mig, probes)
+        if mig is not None:
+            migs += 1
+        trials += 1
+    assert trials > 2000 and shed > 50 and migs > 100 and hoists > 50, \
+        (trials, shed, migs, hoists)
+    print(f"3. independent property fuzz ok ({trials} placements, {shed} sheds, "
+          f"{migs} migrations, {hoists} overload hoists — all rules exact) ✓")
+
+
+def check_warm_pin_spill():
+    """The deterministic migration sequence of tests/router_integration.rs."""
+    PAGE, SHARED_LEN, REPLICAS, OVERLOAD = 4, 11, 4, 1
+    aligned = (SHARED_LEN // PAGE) * PAGE
+    assert aligned == 8, aligned
+    routed = [0] * REPLICAS
+    migrations = migrated_tokens = 0
+
+    def submit(probes):
+        nonlocal migrations, migrated_tokens
+        order, mig = choose(probes, OVERLOAD)
+        if mig is not None and probes[mig].match_len >= 1:  # min_migrate: 1
+            migrations += 1
+            migrated_tokens += probes[mig].match_len
+        routed[order[0]] += 1
+        return order[0], mig
+
+    # warm: cold fleet, all probes (0, depth 0) -> replica 0 (low index),
+    # runs to completion (depth back to 0), retains the 8-token prefix
+    t, mig = submit([probe(0, 0, False)] * REPLICAS)
+    assert (t, mig) == (0, None), (t, mig)
+    # pin: replica 0 matches 8 at depth 0 (below overload) -> stays home,
+    # held open so replica 0's depth becomes 1 == overload
+    probes = [probe(aligned, 0, False)] + [probe(0, 0, False)] * 3
+    t, mig = submit(probes)
+    assert (t, mig) == (0, None), (t, mig)
+    # spill: replica 0 still holds the match but sits at the overload
+    # threshold -> hoist picks replica 1, dragging the segment along
+    probes = [probe(aligned, 1, False)] + [probe(0, 0, False)] * 3
+    t, mig = submit(probes)
+    assert (t, mig) == (1, 0), (t, mig)
+    assert routed == [2, 1, 0, 0], routed
+    assert (migrations, migrated_tokens) == (1, 8), (migrations, migrated_tokens)
+    print("4. warm/pin/spill sequence exact: routed [2,1,0,0], 1 migration of 8 tokens "
+          "(11-token shared prefix aligned down to page 4) ✓")
+
+
+def check_id_partitioning():
+    SHIFT = 48
+    issued = set()
+    for n in (1, 2, 4):
+        per = []
+        for i in range(n):
+            next_id = 1  # Engine::new starts ids at 1
+            base = i << SHIFT
+            next_id = max(next_id, max(base, 1))  # set_request_id_base
+            ids = []
+            for _ in range(5):
+                ids.append(next_id)
+                next_id += 1
+            per.append(ids)
+        flat = [x for ids in per for x in ids]
+        assert len(set(flat)) == len(flat), "ids must be globally unique"
+        issued |= set(flat)
+        assert per[0][0] == 1, "replica 0 keeps the bare-engine id space"
+        for i, ids in enumerate(per):
+            assert all(x >> SHIFT == i for x in ids), (i, ids)
+    assert max(issued) < (4 << SHIFT) + 5 and (1 << SHIFT) in issued
+    print("5. request-id partitioning ok: replica 0 starts at 1, ids unique, "
+          "id >> 48 recovers the replica for every issued id ✓")
+
+
+def check_migration_geometry():
+    F32 = 4
+
+    def host_bytes(layers):
+        return sum((len(k) + len(v)) * F32 for l in layers if l for (k, v) in [l])
+
+    def truncated(seg_len, layers, new_len):
+        out = []
+        for l in layers:
+            if l is None:
+                out.append(None)
+            else:
+                k, v = l
+                row = len(k) // seg_len
+                out.append((k[: new_len * row], v[: new_len * row]))
+        return out
+
+    # the prefixcache.rs unit anchor: rows 16/None/8 floats, truncate 4 -> 2
+    layers = [
+        (list(range(16)), [-x for x in range(16)]),
+        None,
+        (list(range(8)), [1.0] * 8),
+    ]
+    t = truncated(4, layers, 2)
+    assert t[0][0] == list(range(8)) and t[0][1] == [-x for x in range(8)]
+    assert t[1] is None
+    assert len(t[2][0]) == 4 and t[2][1] == [1.0] * 4
+    assert host_bytes(t) == 24 * F32
+    assert host_bytes(truncated(4, layers, 4)) == host_bytes(layers)
+
+    # adopt_prefix's gate: for page-aligned len, cloned host bytes must
+    # equal the destination pool charge (shared_bytes) — and a different
+    # kv-head layout must be caught by that same equality
+    def shared_bytes(kv_heads, head_dim, page_len, positions):
+        pages = -(-positions // page_len)  # div_ceil
+        return sum(
+            0 if h == 0 else pages * (2 * h * head_dim * page_len * F32)
+            for h in kv_heads)
+
+    pyrng = random.Random(7)
+    for _ in range(500):
+        page_len = pyrng.choice([2, 4])
+        head_dim = pyrng.choice([2, 4])
+        kv_heads = [pyrng.choice([0, 1, 2, 4]) for _ in range(pyrng.randrange(1, 5))]
+        pages = pyrng.randrange(1, 5)
+        length = pages * page_len  # export aligns down, so len is aligned
+        layers = [
+            None if h == 0 else
+            ([0.0] * (length * h * head_dim), [0.0] * (length * h * head_dim))
+            for h in kv_heads
+        ]
+        assert host_bytes(layers) == shared_bytes(kv_heads, head_dim, page_len, length), \
+            (kv_heads, head_dim, page_len, length)
+        # a destination with a different layout rejects by byte mismatch
+        other = [h + 1 for h in kv_heads]
+        assert host_bytes(layers) != shared_bytes(other, head_dim, page_len, length)
+        # truncating to fewer aligned rows keeps the equality
+        if pages > 1:
+            short = (pages - 1) * page_len
+            assert host_bytes(truncated(length, layers, short)) == \
+                shared_bytes(kv_heads, head_dim, page_len, short)
+    print("6. migration geometry ok: truncated/host_bytes anchor replayed, "
+          "host_bytes == shared_bytes for aligned lengths over 500 random "
+          "variable-kv-head layouts, mismatched layouts rejected ✓")
+
+
+def main():
+    check_unit_tests()
+    check_rust_fuzz_exact()
+    check_independent_fuzz()
+    check_warm_pin_spill()
+    check_id_partitioning()
+    check_migration_geometry()
+    print("all router placement/migration cross-checks passed")
+
+
+if __name__ == "__main__":
+    sys.exit(main())
