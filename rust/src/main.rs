@@ -40,7 +40,7 @@ use puzzle::config::TinyManifest;
 use puzzle::data::corpus::sample_sequence;
 use puzzle::experiments::{self, ExpCtx};
 use puzzle::obs::{self, Tracer, DEFAULT_RING_CAP};
-use puzzle::perf::{CostTable, Scenario};
+use puzzle::perf::{CostTable, HwProfile, Scenario};
 use puzzle::pipeline::{Pipeline, StageCfg};
 use puzzle::runtime::{share, RefBackend, SharedBackend};
 use puzzle::scoring::Metric;
@@ -104,6 +104,13 @@ fn export_trace(
     }
     tracer.record_exec_totals(&be.stats_snapshot());
     let log = tracer.snapshot();
+    if log.dropped > 0 {
+        eprintln!(
+            "warning: {} trace events dropped (ring full) — the exported timeline has holes; \
+             raise the ring capacity",
+            log.dropped
+        );
+    }
     if let Some(p) = chrome {
         std::fs::write(p, obs::chrome_trace(&log).to_pretty())?;
         println!("wrote {} ({} events, {} dropped)", p.display(), log.recs.len(), log.dropped);
@@ -111,6 +118,46 @@ fn export_trace(
     if let Some(p) = jsonl_path {
         std::fs::write(p, obs::jsonl(&log))?;
         println!("wrote {} ({} events, {} dropped)", p.display(), log.recs.len(), log.dropped);
+    }
+    Ok(())
+}
+
+/// Export a merged fleet trace — the router ring plus every replica ring,
+/// rebased onto one timeline (meaningful because all tracers shared one
+/// clock): Chrome trace-event JSON to `chrome` (router = pid 0, replica r
+/// = pid r+1), time-ordered JSONL to `jsonl_path`. Warns when any ring
+/// overwrote records: a dropped event means the merged timeline has
+/// holes and the ring capacity should grow.
+fn export_fleet_trace(
+    fleet: &obs::FleetLog,
+    chrome: &Option<PathBuf>,
+    jsonl_path: &Option<PathBuf>,
+) -> Result<()> {
+    if fleet.dropped() > 0 {
+        eprintln!(
+            "warning: {} trace events dropped fleet-wide (ring full) — the merged timeline has \
+             holes; raise the ring capacity",
+            fleet.dropped()
+        );
+    }
+    let events =
+        fleet.router.recs.len() + fleet.replicas.iter().map(|l| l.recs.len()).sum::<usize>();
+    let rings = fleet.replicas.len() + 1;
+    if let Some(p) = chrome {
+        std::fs::write(p, obs::merge_fleet(fleet).to_pretty())?;
+        println!(
+            "wrote {} ({events} events across {rings} rings, {} dropped)",
+            p.display(),
+            fleet.dropped()
+        );
+    }
+    if let Some(p) = jsonl_path {
+        std::fs::write(p, obs::fleet_jsonl(fleet))?;
+        println!(
+            "wrote {} ({events} events across {rings} rings, {} dropped)",
+            p.display(),
+            fleet.dropped()
+        );
     }
     Ok(())
 }
@@ -199,7 +246,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow!("unknown scheduler '{scheduler}' (fifo|priority|spf|prefix)"))?;
     let chrome = trace_sink(args, "trace-out")?;
     let jsonl_p = trace_sink(args, "trace-jsonl")?;
-    let tracer = if chrome.is_some() || jsonl_p.is_some() {
+    // --scrape wants the live SLO burn-rate gauges, which fold from the
+    // trace rings — a scrape request enables tracing even without an
+    // export sink
+    let tracer = if chrome.is_some() || jsonl_p.is_some() || args.flag("scrape") {
         Tracer::wall(DEFAULT_RING_CAP)
     } else {
         Tracer::disabled()
@@ -216,12 +266,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     if args.flag("async") {
         // --replicas N: N identical engines behind the data-parallel
-        // router; 1 (the default) serves through a bare AsyncServer
+        // router; 1 (the default) serves through a bare AsyncServer.
+        // With N > 1 and tracing on, each replica gets its OWN ring over
+        // the router tracer's clock, so the per-process logs rebase onto
+        // one fleet timeline at export (DESIGN.md §13).
         let replicas = args.usize("replicas", 1).max(1);
         let engines = (0..replicas)
-            .map(|_| ecfg.clone().build(be.clone(), &library, &sol.arch))
+            .map(|_| {
+                let mut ec = ecfg.clone();
+                if replicas > 1 {
+                    ec = ec.tracer(match tracer.clock() {
+                        Some(clock) => Tracer::with_clock(clock, DEFAULT_RING_CAP),
+                        None => Tracer::disabled(),
+                    });
+                }
+                ec.build(be.clone(), &library, &sol.arch)
+            })
             .collect::<Result<Vec<_>>>()?;
-        return cmd_serve_async(args, &be, &pipe, engines);
+        return cmd_serve_async(args, &be, &pipe, engines, &tracer);
     }
     let mut eng = ecfg.build(be.clone(), &library, &sol.arch)?;
     let n_req = args.usize("requests", 16);
@@ -289,13 +351,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// `server::Router`, which places every request on the replica with the
 /// longest retained prefix match and migrates hot segments when load
 /// shifts. With `--prefill-budget N` the engines ingest prompts N tokens
-/// per step interleaved with live decode.
+/// per step interleaved with live decode. `tracer` is the front door's
+/// own ring — the single engine's tracer in the 1-replica case, the
+/// router's placement ring otherwise.
 #[cfg(not(feature = "pjrt"))]
 fn cmd_serve_async(
     args: &Args,
     be: &SharedBackend,
     pipe: &Pipeline,
     mut engines: Vec<Engine>,
+    tracer: &Tracer,
 ) -> Result<()> {
     use puzzle::server::{AsyncServer, Router, RouterConfig};
     let n_req = args.usize("requests", 16);
@@ -340,11 +405,14 @@ fn cmd_serve_async(
         )?;
         return Ok(());
     }
-    let router = Router::spawn(engines, RouterConfig::default());
+    let rcfg = RouterConfig { tracer: tracer.clone(), ..RouterConfig::default() };
+    let router = Router::spawn(engines, rcfg);
     let handle = router.handle();
     drive_clients(&handle, lots);
     if args.flag("scrape") {
-        // the fleet rollup: router counters + per-replica sections
+        // the fleet rollup: router counters, per-replica sections, and —
+        // with tracing on — the live SLO burn-rate gauges folded from
+        // the merged rings
         println!("{}", handle.metrics_text()?);
     }
     let stats = handle.stats()?;
@@ -352,21 +420,32 @@ fn cmd_serve_async(
     drop(handle);
     let engines = router.shutdown();
     println!(
-        "router-served {n_req} requests over {clients} client threads x {} replicas | routed {:?} (skew {}) | migrations {} ({} tok) | shed {} | {}",
+        "router-served {n_req} requests over {clients} client threads x {} replicas | routed {:?} (skew {}) | migrations {} ({} tok) | shed {} | probes {} rounds ({} paid, {} memo) | {}",
         engines.len(),
         stats.routed,
         stats.load_skew(),
         stats.migrations,
         stats.migrated_tokens,
         stats.shed,
+        stats.probe_rounds,
+        stats.digest_refreshes,
+        stats.digest_hits,
         agg.summary()
     );
-    export_trace(
-        engines[0].tracer(),
-        be,
-        &trace_sink(args, "trace-out")?,
-        &trace_sink(args, "trace-jsonl")?,
-    )?;
+    if tracer.enabled() {
+        // merged fleet export: the router's placement ring plus every
+        // replica's engine ring, rebased onto the shared clock
+        tracer.record_exec_totals(&be.stats_snapshot());
+        let fleet = obs::FleetLog {
+            router: tracer.snapshot(),
+            replicas: engines.iter().map(|e| e.tracer().snapshot()).collect(),
+        };
+        export_fleet_trace(
+            &fleet,
+            &trace_sink(args, "trace-out")?,
+            &trace_sink(args, "trace-jsonl")?,
+        )?;
+    }
     Ok(())
 }
 
@@ -403,6 +482,7 @@ fn cmd_serve_async(
     _be: &SharedBackend,
     _pipe: &Pipeline,
     _engines: Vec<Engine>,
+    _tracer: &Tracer,
 ) -> Result<()> {
     Err(anyhow!(
         "serve --async needs the threaded front-end, which the pjrt build cannot provide \
@@ -814,14 +894,35 @@ fn cmd_bench_router(args: &Args) -> Result<()> {
         (run, eng.metrics.clone())
     };
 
+    // `--trace-out` / `--trace-jsonl` trace the routed run *fleet-wide*:
+    // the router's placement ring plus one ring per replica, all over one
+    // shared wall clock, merged at export. Tracing observes, never
+    // steers — byte identity and the scored goodput are unchanged, which
+    // the CI gate re-asserts against an untraced baseline run.
+    let chrome = trace_sink(args, "trace-out")?;
+    let jsonl_p = trace_sink(args, "trace-jsonl")?;
+    let traced = chrome.is_some() || jsonl_p.is_some();
+    let fleet_clock = std::sync::Arc::new(obs::Clock::wall());
+    let fleet_tracer = |on: bool| {
+        if on { Tracer::with_clock(fleet_clock.clone(), DEFAULT_RING_CAP) } else { Tracer::disabled() }
+    };
+
     // routed: N identical replicas, overload low enough that a burst
-    // spills past the hot replica and drags its prefix segment along
+    // spills past the hot replica and drags its prefix segment along.
+    // Each replica runs on its OWN backend instance so its exec wall is
+    // separable for the predicted-vs-measured drift block below.
     let rcfg = RouterConfig {
         overload: args.usize("overload", 2).max(1),
         min_migrate: 1,
+        tracer: fleet_tracer(traced),
+        ..RouterConfig::default()
     };
-    let engines = (0..replicas)
-        .map(|_| engine_cfg().build(be.clone(), &store, &arch))
+    let router_tracer = rcfg.tracer.clone();
+    let r_backends: Vec<SharedBackend> =
+        (0..replicas).map(|_| share(RefBackend::new(be.man().clone()))).collect();
+    let engines = r_backends
+        .iter()
+        .map(|rb| engine_cfg().tracer(fleet_tracer(traced)).build(rb.clone(), &store, &arch))
         .collect::<Result<Vec<_>>>()?;
     let router = Router::spawn(engines, rcfg);
     let handle = router.handle();
@@ -829,7 +930,7 @@ fn cmd_bench_router(args: &Args) -> Result<()> {
     let stats = handle.stats()?;
     let agg = handle.aggregate_metrics()?;
     drop(handle);
-    router.shutdown();
+    let engines = router.shutdown();
 
     // byte identity: every (conv, turn)'s generated stream must match the
     // sync oracle through BOTH front-ends — placement must not steer
@@ -865,6 +966,50 @@ fn cmd_bench_router(args: &Args) -> Result<()> {
         stats.shed,
         agg.prefix_hit_rate()
     );
+    println!(
+        "probes: {} rounds, {} paid over the channel, {} served from the digest memo",
+        stats.probe_rounds, stats.digest_refreshes, stats.digest_hits
+    );
+
+    // predicted vs measured: each replica ran on its own backend, so its
+    // exec wall is separable; the cost model predicts seconds for the
+    // tokens that replica actually generated. The ratio is machine- and
+    // load-dependent — reported for observability, never gated.
+    let sc = Scenario { prefill: cfg.s_prefill, decode: cfg.s_prefill, batch: cfg.b_decode };
+    let ct = CostTable::modeled(be.man(), &HwProfile::cpu(), &sc);
+    let modeled_tput = ct.arch_throughput(&arch);
+    let drift: Vec<Json> = engines
+        .iter()
+        .zip(&r_backends)
+        .enumerate()
+        .map(|(i, (e, rb))| {
+            let measured: f64 = rb.stats_snapshot().iter().map(|(_, s)| s.total_secs).sum();
+            let modeled = e.metrics.generated_tokens as f64 / modeled_tput;
+            let ratio = if modeled > 0.0 { measured / modeled } else { 0.0 };
+            println!(
+                "  replica {i}: exec wall {measured:.3} s vs modeled {modeled:.3} s for {} tokens (x{ratio:.2})",
+                e.metrics.generated_tokens
+            );
+            Json::from_pairs(vec![
+                ("replica", Json::num(i as f64)),
+                ("exec_wall_secs", Json::num(measured)),
+                ("generated_tokens", Json::num(e.metrics.generated_tokens as f64)),
+                ("modeled_secs", Json::num(modeled)),
+                ("measured_over_modeled", Json::num(ratio)),
+            ])
+        })
+        .collect();
+
+    if traced {
+        for (e, rb) in engines.iter().zip(&r_backends) {
+            e.tracer().record_exec_totals(&rb.stats_snapshot());
+        }
+        let fleet = obs::FleetLog {
+            router: router_tracer.snapshot(),
+            replicas: engines.iter().map(|e| e.tracer().snapshot()).collect(),
+        };
+        export_fleet_trace(&fleet, &chrome, &jsonl_p)?;
+    }
 
     let mut root = Json::obj();
     root.set("bench", Json::str("router"));
@@ -894,6 +1039,18 @@ fn cmd_bench_router(args: &Args) -> Result<()> {
             ("aggregate_prefix_hit_rate", Json::num(agg.prefix_hit_rate())),
             ("prefix_hits", Json::num(agg.prefix_hits as f64)),
             ("prefix_misses", Json::num(agg.prefix_misses as f64)),
+            ("probe_rounds", Json::num(stats.probe_rounds as f64)),
+            ("digest_refreshes", Json::num(stats.digest_refreshes as f64)),
+            ("digest_hits", Json::num(stats.digest_hits as f64)),
+        ]),
+    );
+    root.set("traced", Json::Bool(traced));
+    root.set(
+        "cost_model",
+        Json::from_pairs(vec![
+            ("hw", Json::str("cpu")),
+            ("modeled_tok_per_sec", Json::num(modeled_tput)),
+            ("per_replica", Json::Arr(drift)),
         ]),
     );
     std::fs::write("BENCH_router.json", root.to_pretty())?;
@@ -960,7 +1117,7 @@ fn main() -> Result<()> {
         Some("info") => cmd_info(&args),
         _ => {
             eprintln!(
-                "usage: puzzle <pipeline|exp|serve|bench-workload|bench-async|bench-router|measure|info> [--backend ref|pjrt] [--config tiny|small] [--run-dir DIR] [--scale F] [--speedup X]\n       serve also takes: [--scheduler fifo|priority|spf|prefix] [--temperature T] [--stream] [--requests N] [--max-new N]\n                         [--prefix-cache] [--retain-budget BYTES] [--prefill-budget TOKENS]\n                         [--async] [--replicas N] [--clients N] [--metrics-interval STEPS] [--scrape]\n                         [--speculate] [--draft-k N (pins; omit to auto-tune)] [--draft-arch arch_tag.json]\n       bench-workload takes: [--trace chat|longcontext|shared|spec|multiturn|mixed] [--seed N] [--conversations N]\n                             [--page-len N] [--draft-k N] [--retain-budget BYTES]\n       bench-async takes: [--trace ...] [--seed N] [--conversations N] [--tick-ms MS] [--prefill-budget TOKENS] [--page-len N]\n       bench-router takes: [--trace ...] [--seed N] [--conversations N] [--replicas N] [--overload DEPTH] [--tick-ms MS] [--page-len N] [--retain-budget BYTES]\n       serve / bench-workload / bench-async also take: [--trace-out chrome_trace.json] [--trace-jsonl events.jsonl]"
+                "usage: puzzle <pipeline|exp|serve|bench-workload|bench-async|bench-router|measure|info> [--backend ref|pjrt] [--config tiny|small] [--run-dir DIR] [--scale F] [--speedup X]\n       serve also takes: [--scheduler fifo|priority|spf|prefix] [--temperature T] [--stream] [--requests N] [--max-new N]\n                         [--prefix-cache] [--retain-budget BYTES] [--prefill-budget TOKENS]\n                         [--async] [--replicas N] [--clients N] [--metrics-interval STEPS] [--scrape]\n                         [--speculate] [--draft-k N (pins; omit to auto-tune)] [--draft-arch arch_tag.json]\n       bench-workload takes: [--trace chat|longcontext|shared|spec|multiturn|mixed] [--seed N] [--conversations N]\n                             [--page-len N] [--draft-k N] [--retain-budget BYTES]\n       bench-async takes: [--trace ...] [--seed N] [--conversations N] [--tick-ms MS] [--prefill-budget TOKENS] [--page-len N]\n       bench-router takes: [--trace ...] [--seed N] [--conversations N] [--replicas N] [--overload DEPTH] [--tick-ms MS] [--page-len N] [--retain-budget BYTES]\n       serve / bench-workload / bench-async / bench-router also take: [--trace-out chrome_trace.json] [--trace-jsonl events.jsonl]\n       (bench-router and serve --async --replicas N export a MERGED fleet trace: router ring = pid 0, replica r = pid r+1)"
             );
             Ok(())
         }

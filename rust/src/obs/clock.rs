@@ -51,6 +51,12 @@ impl Clock {
             t.store(tick, Ordering::Relaxed);
         }
     }
+
+    /// Whether this is the deterministic virtual tick clock (the SLO
+    /// monitor uses this to pick tick- vs wall-based latency budgets).
+    pub fn is_virtual(&self) -> bool {
+        matches!(self, Clock::Virtual(_))
+    }
 }
 
 #[cfg(test)]

@@ -7,10 +7,118 @@
 //! timeline, one per decode lane (prefill chunks, spec rounds), one per
 //! request (nested `queued` / `prefill` / `decode` spans inside a `request`
 //! span), plus backend exec totals and prefix-cache evictions.
+//!
+//! At fleet scope, [`merge_fleet`] rebases the router ring plus N replica
+//! rings (which share one clock — [`super::Tracer::with_clock`]) onto a
+//! single multi-process timeline: the router is pid 0, replica `r` is
+//! pid `r + 1`, and every routed request additionally gets a pid-0 track
+//! whose `placement → queued → prefill → decode` children tile the
+//! router-submit → finish span exactly. [`fleet_jsonl`] is the matching
+//! line format with a `pid` field per record, byte-stable under the
+//! virtual clock like the single-ring form.
 
 use crate::util::Json;
 
-use super::trace::{request_spans, Event, TraceLog};
+use super::trace::{merge_logs, request_spans, Event, TraceLog};
+
+/// Append one event's payload fields to `o` in a fixed per-variant order
+/// (shared by the single-ring and fleet JSONL forms).
+fn rec_fields(o: &mut Json, ev: &Event) {
+    match ev {
+        Event::Submitted { id, prompt, max_new } => {
+            o.set("id", Json::num(*id as f64));
+            o.set("prompt", Json::num(*prompt as f64));
+            o.set("max_new", Json::num(*max_new as f64));
+        }
+        Event::Rejected { id, cause } => {
+            o.set("id", Json::num(*id as f64));
+            o.set("cause", Json::str(cause));
+        }
+        Event::Admitted { id, lane, hit, matched } => {
+            o.set("id", Json::num(*id as f64));
+            o.set("lane", Json::num(*lane as f64));
+            o.set("hit", Json::Bool(*hit));
+            o.set("matched", Json::num(*matched as f64));
+        }
+        Event::PrefillChunk { id, lane, tokens } => {
+            o.set("id", Json::num(*id as f64));
+            o.set("lane", Json::num(*lane as f64));
+            o.set("tokens", Json::num(*tokens as f64));
+        }
+        Event::FirstToken { id } => {
+            o.set("id", Json::num(*id as f64));
+        }
+        Event::Token { id, tok } => {
+            o.set("id", Json::num(*id as f64));
+            o.set("tok", Json::num(*tok as f64));
+        }
+        Event::Finished { id, reason, tokens } => {
+            o.set("id", Json::num(*id as f64));
+            o.set("reason", Json::str(reason));
+            o.set("tokens", Json::num(*tokens as f64));
+        }
+        Event::SpecRound { id, lane, drafted, accepted, rolled_back } => {
+            o.set("id", Json::num(*id as f64));
+            o.set("lane", Json::num(*lane as f64));
+            o.set("drafted", Json::num(*drafted as f64));
+            o.set("accepted", Json::num(*accepted as f64));
+            o.set("rolled_back", Json::num(*rolled_back as f64));
+        }
+        Event::Step { step, active, queued, dur_us } => {
+            o.set("step", Json::num(*step as f64));
+            o.set("active", Json::num(*active as f64));
+            o.set("queued", Json::num(*queued as f64));
+            o.set("dur_us", Json::num(*dur_us as f64));
+        }
+        Event::PrefixEvict { seg, tokens } => {
+            o.set("seg", Json::num(*seg as f64));
+            o.set("tokens", Json::num(*tokens as f64));
+        }
+        Event::ExecTotal { name, calls, secs } => {
+            o.set("name", Json::str(name));
+            o.set("calls", Json::num(*calls as f64));
+            o.set("secs", Json::num(*secs));
+        }
+        Event::Routed { id, replica, matched, depth, reason, probes } => {
+            o.set("id", Json::num(*id as f64));
+            o.set("replica", Json::num(*replica as f64));
+            o.set("matched", Json::num(*matched as f64));
+            o.set("depth", Json::num(*depth as f64));
+            o.set("reason", Json::str(reason));
+            o.set(
+                "probes",
+                Json::Arr(
+                    probes
+                        .iter()
+                        .map(|(m, d)| {
+                            Json::Arr(vec![Json::num(*m as f64), Json::num(*d as f64)])
+                        })
+                        .collect(),
+                ),
+            );
+        }
+        Event::MigrationBegin { mig, src, dst } => {
+            o.set("mig", Json::num(*mig as f64));
+            o.set("src", Json::num(*src as f64));
+            o.set("dst", Json::num(*dst as f64));
+        }
+        Event::MigrationEnd { mig, src, dst, seg, tokens, adopted } => {
+            o.set("mig", Json::num(*mig as f64));
+            o.set("src", Json::num(*src as f64));
+            o.set("dst", Json::num(*dst as f64));
+            o.set("seg", Json::num(*seg as f64));
+            o.set("tokens", Json::num(*tokens as f64));
+            o.set("adopted", Json::Bool(*adopted));
+        }
+        Event::RouterShed { replicas } => {
+            o.set("replicas", Json::num(*replicas as f64));
+        }
+        Event::ProbeRound { probed, cached } => {
+            o.set("probed", Json::num(*probed as f64));
+            o.set("cached", Json::num(*cached as f64));
+        }
+    }
+}
 
 /// Serialize the log as one compact JSON object per line (`ts` first, then
 /// the event tag, then its fields in a fixed order).
@@ -20,62 +128,7 @@ pub fn jsonl(log: &TraceLog) -> String {
         let mut o = Json::obj();
         o.set("ts", Json::num(r.ts_us as f64));
         o.set("ev", Json::str(r.ev.tag()));
-        match &r.ev {
-            Event::Submitted { id, prompt, max_new } => {
-                o.set("id", Json::num(*id as f64));
-                o.set("prompt", Json::num(*prompt as f64));
-                o.set("max_new", Json::num(*max_new as f64));
-            }
-            Event::Rejected { id, cause } => {
-                o.set("id", Json::num(*id as f64));
-                o.set("cause", Json::str(cause));
-            }
-            Event::Admitted { id, lane, hit, matched } => {
-                o.set("id", Json::num(*id as f64));
-                o.set("lane", Json::num(*lane as f64));
-                o.set("hit", Json::Bool(*hit));
-                o.set("matched", Json::num(*matched as f64));
-            }
-            Event::PrefillChunk { id, lane, tokens } => {
-                o.set("id", Json::num(*id as f64));
-                o.set("lane", Json::num(*lane as f64));
-                o.set("tokens", Json::num(*tokens as f64));
-            }
-            Event::FirstToken { id } => {
-                o.set("id", Json::num(*id as f64));
-            }
-            Event::Token { id, tok } => {
-                o.set("id", Json::num(*id as f64));
-                o.set("tok", Json::num(*tok as f64));
-            }
-            Event::Finished { id, reason, tokens } => {
-                o.set("id", Json::num(*id as f64));
-                o.set("reason", Json::str(reason));
-                o.set("tokens", Json::num(*tokens as f64));
-            }
-            Event::SpecRound { id, lane, drafted, accepted, rolled_back } => {
-                o.set("id", Json::num(*id as f64));
-                o.set("lane", Json::num(*lane as f64));
-                o.set("drafted", Json::num(*drafted as f64));
-                o.set("accepted", Json::num(*accepted as f64));
-                o.set("rolled_back", Json::num(*rolled_back as f64));
-            }
-            Event::Step { step, active, queued, dur_us } => {
-                o.set("step", Json::num(*step as f64));
-                o.set("active", Json::num(*active as f64));
-                o.set("queued", Json::num(*queued as f64));
-                o.set("dur_us", Json::num(*dur_us as f64));
-            }
-            Event::PrefixEvict { seg, tokens } => {
-                o.set("seg", Json::num(*seg as f64));
-                o.set("tokens", Json::num(*tokens as f64));
-            }
-            Event::ExecTotal { name, calls, secs } => {
-                o.set("name", Json::str(name));
-                o.set("calls", Json::num(*calls as f64));
-                o.set("secs", Json::num(*secs));
-            }
-        }
+        rec_fields(&mut o, &r.ev);
         out.push_str(&o.to_string());
         out.push('\n');
     }
@@ -88,32 +141,42 @@ const TID_PREFIX: u64 = 2;
 const TID_LANE_BASE: u64 = 100;
 const TID_REQ_BASE: u64 = 1_000;
 
-fn ev_base(name: &str, ph: &str, ts: u64, tid: u64) -> Json {
+/// The router's tracks in a merged fleet trace (pid 0).
+const TID_ROUTER: u64 = 0;
+const TID_MIGRATIONS: u64 = 1;
+
+fn ev_base(name: &str, ph: &str, ts: u64, pid: u64, tid: u64) -> Json {
     let mut o = Json::obj();
     o.set("name", Json::str(name));
     o.set("ph", Json::str(ph));
     o.set("ts", Json::num(ts as f64));
-    o.set("pid", Json::num(1.0));
+    o.set("pid", Json::num(pid as f64));
     o.set("tid", Json::num(tid as f64));
     o
 }
 
-fn complete(name: &str, ts: u64, dur: u64, tid: u64, args: Json) -> Json {
-    let mut o = ev_base(name, "X", ts, tid);
+fn complete(name: &str, ts: u64, dur: u64, pid: u64, tid: u64, args: Json) -> Json {
+    let mut o = ev_base(name, "X", ts, pid, tid);
     o.set("dur", Json::num(dur as f64));
     o.set("args", args);
     o
 }
 
-fn instant(name: &str, ts: u64, tid: u64, args: Json) -> Json {
-    let mut o = ev_base(name, "i", ts, tid);
+fn instant(name: &str, ts: u64, pid: u64, tid: u64, args: Json) -> Json {
+    let mut o = ev_base(name, "i", ts, pid, tid);
     o.set("s", Json::str("t"));
     o.set("args", args);
     o
 }
 
-fn thread_name(tid: u64, name: &str) -> Json {
-    let mut o = ev_base("thread_name", "M", 0, tid);
+fn thread_name(pid: u64, tid: u64, name: &str) -> Json {
+    let mut o = ev_base("thread_name", "M", 0, pid, tid);
+    o.set("args", Json::from_pairs(vec![("name", Json::str(name))]));
+    o
+}
+
+fn process_name(pid: u64, name: &str) -> Json {
+    let mut o = ev_base("process_name", "M", 0, pid, TID_ENGINE);
     o.set("args", Json::from_pairs(vec![("name", Json::str(name))]));
     o
 }
@@ -124,13 +187,21 @@ fn thread_name(tid: u64, name: &str) -> Json {
 /// tid 2 = prefix-cache evictions, tid 100+lane = per-lane chunk/spec-round
 /// instants, tid 1000+id = per-request lifecycle spans.
 pub fn chrome_trace(log: &TraceLog) -> Json {
-    let last_ts = log.recs.iter().map(|r| r.ts_us).max().unwrap_or(0);
     let mut events: Vec<Json> = Vec::new();
+    events.push(process_name(1, "puzzle-serve"));
+    emit_log_tracks(&mut events, log, 1, 0);
+    let mut doc = Json::obj();
+    doc.set("displayTimeUnit", Json::str("ms"));
+    doc.set("traceEvents", Json::Arr(events));
+    doc
+}
 
-    // Metadata first: process name, then one thread_name per used track.
-    let mut proc = ev_base("process_name", "M", 0, TID_ENGINE);
-    proc.set("args", Json::from_pairs(vec![("name", Json::str("puzzle-serve"))]));
-    events.push(proc);
+/// Emit one ring's full track set (engine steps, backend, prefix, lanes,
+/// request lifecycles) under process `pid`, with every timestamp rebased
+/// by `t0` — the shared-timeline origin a fleet merge subtracts.
+fn emit_log_tracks(events: &mut Vec<Json>, log: &TraceLog, pid: u64, t0: u64) {
+    let rb = |ts: u64| ts.saturating_sub(t0);
+    let last_ts = log.recs.iter().map(|r| rb(r.ts_us)).max().unwrap_or(0);
 
     let mut lanes: Vec<u64> = Vec::new();
     let mut have_backend = false;
@@ -151,18 +222,18 @@ pub fn chrome_trace(log: &TraceLog) -> Json {
     lanes.sort_unstable();
     let spans = request_spans(log);
 
-    events.push(thread_name(TID_ENGINE, "engine steps"));
+    events.push(thread_name(pid, TID_ENGINE, "engine steps"));
     if have_backend {
-        events.push(thread_name(TID_BACKEND, "backend execs"));
+        events.push(thread_name(pid, TID_BACKEND, "backend execs"));
     }
     if have_prefix {
-        events.push(thread_name(TID_PREFIX, "prefix cache"));
+        events.push(thread_name(pid, TID_PREFIX, "prefix cache"));
     }
     for &l in &lanes {
-        events.push(thread_name(TID_LANE_BASE + l, &format!("lane{l}")));
+        events.push(thread_name(pid, TID_LANE_BASE + l, &format!("lane{l}")));
     }
     for s in &spans {
-        events.push(thread_name(TID_REQ_BASE + s.id, &format!("req{}", s.id)));
+        events.push(thread_name(pid, TID_REQ_BASE + s.id, &format!("req{}", s.id)));
     }
 
     // Engine track: step spans plus door rejections, sorted by timestamp
@@ -175,6 +246,7 @@ pub fn chrome_trace(log: &TraceLog) -> Json {
             instant(
                 "ring_dropped",
                 0,
+                pid,
                 TID_ENGINE,
                 Json::from_pairs(vec![("count", Json::num(log.dropped as f64))]),
             ),
@@ -184,12 +256,13 @@ pub fn chrome_trace(log: &TraceLog) -> Json {
         match &r.ev {
             Event::Step { step, active, queued, dur_us } => {
                 engine.push((
-                    r.ts_us,
+                    rb(r.ts_us),
                     0,
                     complete(
                         "step",
-                        r.ts_us,
+                        rb(r.ts_us),
                         (*dur_us).max(1),
+                        pid,
                         TID_ENGINE,
                         Json::from_pairs(vec![
                             ("step", Json::num(*step as f64)),
@@ -201,11 +274,12 @@ pub fn chrome_trace(log: &TraceLog) -> Json {
             }
             Event::Rejected { id, cause } => {
                 engine.push((
-                    r.ts_us,
+                    rb(r.ts_us),
                     1,
                     instant(
                         "rejected",
-                        r.ts_us,
+                        rb(r.ts_us),
+                        pid,
                         TID_ENGINE,
                         Json::from_pairs(vec![
                             ("id", Json::num(*id as f64)),
@@ -225,7 +299,8 @@ pub fn chrome_trace(log: &TraceLog) -> Json {
             if let Event::ExecTotal { name, calls, secs } = &r.ev {
                 events.push(instant(
                     name,
-                    r.ts_us,
+                    rb(r.ts_us),
+                    pid,
                     TID_BACKEND,
                     Json::from_pairs(vec![
                         ("calls", Json::num(*calls as f64)),
@@ -240,7 +315,8 @@ pub fn chrome_trace(log: &TraceLog) -> Json {
             if let Event::PrefixEvict { seg, tokens } = &r.ev {
                 events.push(instant(
                     "prefix_evict",
-                    r.ts_us,
+                    rb(r.ts_us),
+                    pid,
                     TID_PREFIX,
                     Json::from_pairs(vec![
                         ("seg", Json::num(*seg as f64)),
@@ -256,7 +332,8 @@ pub fn chrome_trace(log: &TraceLog) -> Json {
                 Event::PrefillChunk { id, lane, tokens } if *lane as u64 == l => {
                     events.push(instant(
                         "prefill_chunk",
-                        r.ts_us,
+                        rb(r.ts_us),
+                        pid,
                         TID_LANE_BASE + l,
                         Json::from_pairs(vec![
                             ("id", Json::num(*id as f64)),
@@ -269,7 +346,8 @@ pub fn chrome_trace(log: &TraceLog) -> Json {
                 {
                     events.push(instant(
                         "spec_round",
-                        r.ts_us,
+                        rb(r.ts_us),
+                        pid,
                         TID_LANE_BASE + l,
                         Json::from_pairs(vec![
                             ("id", Json::num(*id as f64)),
@@ -288,7 +366,8 @@ pub fn chrome_trace(log: &TraceLog) -> Json {
     // segments nested inside it (equal-boundary zero-width spans allowed).
     for s in &spans {
         let tid = TID_REQ_BASE + s.id;
-        let end = s.finish_us.unwrap_or(last_ts).max(s.submit_us);
+        let submit = rb(s.submit_us);
+        let end = s.finish_us.map(rb).unwrap_or(last_ts).max(submit);
         let mut args = Json::obj();
         args.set("id", Json::num(s.id as f64));
         args.set("hit", Json::Bool(s.hit));
@@ -297,28 +376,275 @@ pub fn chrome_trace(log: &TraceLog) -> Json {
         if let Some(rs) = s.reason {
             args.set("reason", Json::str(rs));
         }
-        events.push(complete("request", s.submit_us, end - s.submit_us, tid, args));
-        if let Some(a) = s.admit_us {
-            events.push(complete(
-                "queued",
-                s.submit_us,
-                a - s.submit_us,
-                tid,
-                Json::obj(),
-            ));
-            if let Some(f) = s.first_us {
-                events.push(complete("prefill", a, f - a, tid, Json::obj()));
-                if let Some(e) = s.finish_us {
-                    events.push(complete("decode", f, e - f, tid, Json::obj()));
+        events.push(complete("request", submit, end - submit, pid, tid, args));
+        if let Some(a) = s.admit_us.map(rb) {
+            events.push(complete("queued", submit, a - submit, pid, tid, Json::obj()));
+            if let Some(f) = s.first_us.map(rb) {
+                events.push(complete("prefill", a, f - a, pid, tid, Json::obj()));
+                if let Some(e) = s.finish_us.map(rb) {
+                    events.push(complete("decode", f, e - f, pid, tid, Json::obj()));
                 }
             }
         }
+    }
+}
+
+/// One fleet's ring snapshots: the router's placement-side ring plus one
+/// ring per replica, all recorded over ONE shared clock.
+#[derive(Debug, Clone, Default)]
+pub struct FleetLog {
+    /// The router ring (`routed` / migration / shed / probe records).
+    pub router: TraceLog,
+    /// Replica rings, indexed by replica id.
+    pub replicas: Vec<TraceLog>,
+}
+
+impl FleetLog {
+    /// Sum of events overwritten across every ring in the fleet.
+    pub fn dropped(&self) -> u64 {
+        self.router.dropped + self.replicas.iter().map(|l| l.dropped).sum::<u64>()
+    }
+
+    /// All rings merged onto the shared timeline (router first, so
+    /// same-timestamp `routed` records sort before the replica's
+    /// `submitted`), ready for [`request_spans`] stitching.
+    pub fn merged(&self) -> TraceLog {
+        let mut logs: Vec<&TraceLog> = vec![&self.router];
+        logs.extend(self.replicas.iter());
+        merge_logs(&logs)
+    }
+
+    /// The earliest timestamp across every ring — the merge's timeline
+    /// origin (everything is rebased so the trace starts at 0).
+    fn t0(&self) -> u64 {
+        std::iter::once(&self.router)
+            .chain(self.replicas.iter())
+            .flat_map(|l| l.recs.iter().map(|r| r.ts_us))
+            .min()
+            .unwrap_or(0)
+    }
+}
+
+/// Merge a fleet's rings into one Chrome trace-event document on a single
+/// rebased timeline: the router is **pid 0** (tid 0 = routing instants,
+/// tid 1 = migration spans, tid 1000+id = stitched per-request lifecycle
+/// tracks), replica `r` is **pid r+1** with its full single-engine track
+/// set. Each routed request's pid-0 track nests
+/// `placement → queued → prefill → decode` spans that tile the
+/// router-submit → finish interval exactly (`verify_trace.py --fleet`
+/// checks this structurally).
+pub fn merge_fleet(fleet: &FleetLog) -> Json {
+    let t0 = fleet.t0();
+    let rb = |ts: u64| ts.saturating_sub(t0);
+    let mut events: Vec<Json> = Vec::new();
+
+    events.push(process_name(0, "puzzle-router"));
+    for r in 0..fleet.replicas.len() {
+        events.push(process_name(r as u64 + 1, &format!("puzzle-replica-{r}")));
+    }
+    events.push(thread_name(0, TID_ROUTER, "routing"));
+
+    // Router timeline (tid 0): placement, shed, and probe-round instants
+    // in recording order; ring loss surfaces like the engine track's.
+    if fleet.router.dropped > 0 {
+        events.push(instant(
+            "ring_dropped",
+            0,
+            0,
+            TID_ROUTER,
+            Json::from_pairs(vec![("count", Json::num(fleet.router.dropped as f64))]),
+        ));
+    }
+    let mut router_line: Vec<(u64, Json)> = Vec::new();
+    for r in &fleet.router.recs {
+        match &r.ev {
+            Event::Routed { id, replica, matched, depth, reason, probes } => {
+                router_line.push((
+                    rb(r.ts_us),
+                    instant(
+                        "routed",
+                        rb(r.ts_us),
+                        0,
+                        TID_ROUTER,
+                        Json::from_pairs(vec![
+                            ("id", Json::num(*id as f64)),
+                            ("replica", Json::num(*replica as f64)),
+                            ("matched", Json::num(*matched as f64)),
+                            ("depth", Json::num(*depth as f64)),
+                            ("reason", Json::str(reason)),
+                            (
+                                "probes",
+                                Json::str(
+                                    &probes
+                                        .iter()
+                                        .map(|(m, d)| format!("{m}/{d}"))
+                                        .collect::<Vec<_>>()
+                                        .join(" "),
+                                ),
+                            ),
+                        ]),
+                    ),
+                ));
+            }
+            Event::RouterShed { replicas } => {
+                router_line.push((
+                    rb(r.ts_us),
+                    instant(
+                        "router_shed",
+                        rb(r.ts_us),
+                        0,
+                        TID_ROUTER,
+                        Json::from_pairs(vec![("replicas", Json::num(*replicas as f64))]),
+                    ),
+                ));
+            }
+            Event::ProbeRound { probed, cached } => {
+                router_line.push((
+                    rb(r.ts_us),
+                    instant(
+                        "probe_round",
+                        rb(r.ts_us),
+                        0,
+                        TID_ROUTER,
+                        Json::from_pairs(vec![
+                            ("probed", Json::num(*probed as f64)),
+                            ("cached", Json::num(*cached as f64)),
+                        ]),
+                    ),
+                ));
+            }
+            _ => {}
+        }
+    }
+    router_line.sort_by_key(|(ts, _)| *ts);
+    events.extend(router_line.into_iter().map(|(_, e)| e));
+
+    // Migration track (tid 1): begin/end records paired by `mig` into
+    // complete spans; a begin without its end becomes an instant marker
+    // so partial records stay visible instead of vanishing.
+    let mut begins: std::collections::BTreeMap<u64, u64> = std::collections::BTreeMap::new();
+    let mut migrations: Vec<(u64, Json)> = Vec::new();
+    for r in &fleet.router.recs {
+        match &r.ev {
+            Event::MigrationBegin { mig, .. } => {
+                begins.insert(*mig, rb(r.ts_us));
+            }
+            Event::MigrationEnd { mig, src, dst, seg, tokens, adopted } => {
+                let Some(start) = begins.remove(mig) else { continue };
+                migrations.push((
+                    start,
+                    complete(
+                        "migration",
+                        start,
+                        rb(r.ts_us) - start,
+                        0,
+                        TID_MIGRATIONS,
+                        Json::from_pairs(vec![
+                            ("mig", Json::num(*mig as f64)),
+                            ("src", Json::num(*src as f64)),
+                            ("dst", Json::num(*dst as f64)),
+                            ("seg", Json::num(*seg as f64)),
+                            ("tokens", Json::num(*tokens as f64)),
+                            ("adopted", Json::Bool(*adopted)),
+                        ]),
+                    ),
+                ));
+            }
+            _ => {}
+        }
+    }
+    for (mig, ts) in begins {
+        migrations.push((
+            ts,
+            instant(
+                "migration_unpaired",
+                ts,
+                0,
+                TID_MIGRATIONS,
+                Json::from_pairs(vec![("mig", Json::num(mig as f64))]),
+            ),
+        ));
+    }
+    if !migrations.is_empty() {
+        events.push(thread_name(0, TID_MIGRATIONS, "migrations"));
+        migrations.sort_by_key(|(ts, _)| *ts);
+        events.extend(migrations.into_iter().map(|(_, e)| e));
+    }
+
+    // Stitched per-request lifecycle tracks on the router pid: the global
+    // id names the track, and the four children tile router-submit →
+    // finish exactly (placement covers the placement+queue-hop gap the
+    // replica-local view cannot see).
+    let merged = fleet.merged();
+    let last_ts = merged.recs.iter().map(|r| rb(r.ts_us)).max().unwrap_or(0);
+    for s in request_spans(&merged) {
+        let Some(route) = s.route_us.map(rb) else { continue };
+        let tid = TID_REQ_BASE + s.id;
+        events.push(thread_name(0, tid, &format!("req{}", s.id)));
+        let end = s.finish_us.map(rb).unwrap_or(last_ts).max(route);
+        let mut args = Json::obj();
+        args.set("id", Json::num(s.id as f64));
+        args.set("replica", Json::num(s.replica.unwrap_or(0) as f64));
+        args.set("hit", Json::Bool(s.hit));
+        args.set("matched", Json::num(s.matched as f64));
+        args.set("tokens", Json::num(s.tokens as f64));
+        if let Some(rs) = s.reason {
+            args.set("reason", Json::str(rs));
+        }
+        events.push(complete("request", route, end - route, 0, tid, args));
+        let submit = rb(s.submit_us);
+        events.push(complete("placement", route, submit - route, 0, tid, Json::obj()));
+        if let Some(a) = s.admit_us.map(rb) {
+            events.push(complete("queued", submit, a - submit, 0, tid, Json::obj()));
+            if let Some(f) = s.first_us.map(rb) {
+                events.push(complete("prefill", a, f - a, 0, tid, Json::obj()));
+                if let Some(e) = s.finish_us.map(rb) {
+                    events.push(complete("decode", f, e - f, 0, tid, Json::obj()));
+                }
+            }
+        }
+    }
+
+    // Each replica's own process, rebased onto the same timeline.
+    for (r, log) in fleet.replicas.iter().enumerate() {
+        emit_log_tracks(&mut events, log, r as u64 + 1, t0);
     }
 
     let mut doc = Json::obj();
     doc.set("displayTimeUnit", Json::str("ms"));
     doc.set("traceEvents", Json::Arr(events));
     doc
+}
+
+/// The fleet's JSONL form: every ring's records merged onto the shared
+/// timeline (rebased to start at 0), one object per line with the owning
+/// process — `ts`, then `pid` (0 = router, r+1 = replica r), then the
+/// event tag and fields. Same-timestamp records order router-first then
+/// by replica, each ring keeping its recording order, so the bytes are
+/// stable across identical virtual-clock replays.
+pub fn fleet_jsonl(fleet: &FleetLog) -> String {
+    let t0 = fleet.t0();
+    let mut tagged: Vec<(u64, &super::trace::Rec)> = Vec::new();
+    for r in &fleet.router.recs {
+        tagged.push((0, r));
+    }
+    for (i, log) in fleet.replicas.iter().enumerate() {
+        for r in &log.recs {
+            tagged.push((i as u64 + 1, r));
+        }
+    }
+    tagged.sort_by_key(|(_, r)| r.ts_us); // stable: pid order on ties
+    let mut out = String::new();
+    for (pid, r) in tagged {
+        let mut o = Json::obj();
+        o.set("ts", Json::num(r.ts_us.saturating_sub(t0) as f64));
+        o.set("pid", Json::num(pid as f64));
+        o.set("ev", Json::str(r.ev.tag()));
+        rec_fields(&mut o, &r.ev);
+        out.push_str(&o.to_string());
+        out.push('\n');
+    }
+    out
 }
 
 #[cfg(test)]
@@ -389,5 +715,151 @@ mod tests {
             .map(|n| span(n).get("dur").unwrap().as_f64().unwrap())
             .sum();
         assert_eq!(total, rdur);
+    }
+
+    /// A hand-built two-replica fleet over one shared clock: the router
+    /// ring records the placement-side events, each replica ring the
+    /// local lifecycle, and the merge must stitch them into pid-0 request
+    /// tracks whose four children tile router-submit → finish exactly.
+    fn sample_fleet() -> FleetLog {
+        let router = Tracer::virtual_ticks(256);
+        let clock = router.clock().unwrap();
+        let replicas: Vec<Tracer> =
+            (0..2).map(|_| Tracer::with_clock(clock.clone(), 256)).collect();
+        let gid = |r: u64, local: u64| (r << 48) | local;
+
+        // Request A → replica 0: routed at t0, submitted t1, admitted t2,
+        // first token t3, finished t5.
+        router.record(Event::ProbeRound { probed: 2, cached: 0 });
+        router.record(Event::Routed {
+            id: gid(0, 1),
+            replica: 0,
+            matched: 0,
+            depth: 0,
+            reason: "load",
+            probes: vec![(0, 0), (0, 0)],
+        });
+        router.set_virtual_tick(1);
+        replicas[0].record(Event::Submitted { id: gid(0, 1), prompt: 4, max_new: 4 });
+        router.set_virtual_tick(2);
+        replicas[0].record(Event::Admitted { id: gid(0, 1), lane: 0, hit: false, matched: 0 });
+        router.set_virtual_tick(3);
+        replicas[0].record(Event::FirstToken { id: gid(0, 1) });
+        router.set_virtual_tick(5);
+        replicas[0].record(Event::Finished { id: gid(0, 1), reason: "eos", tokens: 4 });
+
+        // Request B → replica 1 behind a migration from 0 to 1.
+        router.set_virtual_tick(6);
+        router.record(Event::ProbeRound { probed: 2, cached: 0 });
+        router.record(Event::MigrationBegin { mig: 1, src: 0, dst: 1 });
+        router.set_virtual_tick(7);
+        router.record(Event::MigrationEnd {
+            mig: 1,
+            src: 0,
+            dst: 1,
+            seg: 3,
+            tokens: 4,
+            adopted: true,
+        });
+        router.record(Event::Routed {
+            id: gid(1, 1),
+            replica: 1,
+            matched: 4,
+            depth: 0,
+            reason: "spill",
+            probes: vec![(4, 9), (0, 0)],
+        });
+        router.set_virtual_tick(8);
+        replicas[1].record(Event::Submitted { id: gid(1, 1), prompt: 6, max_new: 2 });
+        replicas[1].record(Event::Admitted { id: gid(1, 1), lane: 0, hit: true, matched: 4 });
+        router.set_virtual_tick(9);
+        replicas[1].record(Event::FirstToken { id: gid(1, 1) });
+        router.set_virtual_tick(10);
+        replicas[1].record(Event::Finished { id: gid(1, 1), reason: "length", tokens: 2 });
+
+        FleetLog {
+            router: router.snapshot(),
+            replicas: replicas.iter().map(|t| t.snapshot()).collect(),
+        }
+    }
+
+    #[test]
+    fn merge_fleet_stitches_and_tiles_routed_lifecycles() {
+        let fleet = sample_fleet();
+        let doc = merge_fleet(&fleet);
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        // Router pid 0 and both replica pids are named.
+        let pnames: Vec<(f64, String)> = evs
+            .iter()
+            .filter(|e| e.get("name").unwrap().as_str() == Some("process_name"))
+            .map(|e| {
+                (
+                    e.get("pid").unwrap().as_f64().unwrap(),
+                    e.get("args").unwrap().get("name").unwrap().as_str().unwrap().to_string(),
+                )
+            })
+            .collect();
+        assert!(pnames.contains(&(0.0, "puzzle-router".into())));
+        assert!(pnames.contains(&(1.0, "puzzle-replica-0".into())));
+        assert!(pnames.contains(&(2.0, "puzzle-replica-1".into())));
+        // Every routed request gets a pid-0 track whose placement +
+        // queued + prefill + decode children tile the request span.
+        let pid0_reqs: Vec<&Json> = evs
+            .iter()
+            .filter(|e| {
+                e.get("pid").unwrap().as_f64() == Some(0.0)
+                    && e.get("name").unwrap().as_str() == Some("request")
+            })
+            .collect();
+        assert_eq!(pid0_reqs.len(), 2, "both routed requests get fleet tracks");
+        for req in pid0_reqs {
+            let tid = req.get("tid").unwrap().as_f64().unwrap();
+            let rdur = req.get("dur").unwrap().as_f64().unwrap();
+            let child_total: f64 = evs
+                .iter()
+                .filter(|e| {
+                    e.get("pid").unwrap().as_f64() == Some(0.0)
+                        && e.get("tid").unwrap().as_f64() == Some(tid)
+                        && matches!(
+                            e.get("name").unwrap().as_str(),
+                            Some("placement" | "queued" | "prefill" | "decode")
+                        )
+                })
+                .map(|e| e.get("dur").unwrap().as_f64().unwrap())
+                .sum();
+            assert_eq!(child_total, rdur, "fleet children must tile e2e exactly");
+        }
+        // The migration pair became one complete span on the migration track.
+        let mig: Vec<&Json> = evs
+            .iter()
+            .filter(|e| e.get("name").unwrap().as_str() == Some("migration"))
+            .collect();
+        assert_eq!(mig.len(), 1);
+        assert_eq!(mig[0].get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(mig[0].get("args").unwrap().get("tokens").unwrap().as_f64(), Some(4.0));
+        // Replica lifecycles still appear under their own pids.
+        assert!(evs.iter().any(|e| e.get("pid").unwrap().as_f64() == Some(2.0)
+            && e.get("name").unwrap().as_str() == Some("request")));
+    }
+
+    #[test]
+    fn fleet_jsonl_is_byte_stable_and_tags_pids() {
+        let a = fleet_jsonl(&sample_fleet());
+        let b = fleet_jsonl(&sample_fleet());
+        assert_eq!(a, b, "virtual-clock fleet JSONL must be byte-identical across builds");
+        let mut saw_routed = false;
+        let mut last_ts = 0.0;
+        for l in a.lines() {
+            let v = Json::parse(l).unwrap();
+            let ts = v.get("ts").unwrap().as_f64().unwrap();
+            assert!(ts >= last_ts, "fleet JSONL must be time-ordered");
+            last_ts = ts;
+            let pid = v.get("pid").unwrap().as_f64().unwrap();
+            if v.get("ev").unwrap().as_str() == Some("routed") {
+                saw_routed = true;
+                assert_eq!(pid, 0.0, "routed records belong to the router pid");
+            }
+        }
+        assert!(saw_routed);
     }
 }

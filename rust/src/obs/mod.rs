@@ -23,15 +23,25 @@
 //!   is how the data-parallel router rolls fleet-level counters and
 //!   namespaced per-replica sections into a single scrape payload
 //!   (DESIGN.md §12).
+//!
+//! At fleet scope (DESIGN.md §13) the same grammar covers the router:
+//! every ring shares ONE [`Clock`] ([`Tracer::with_clock`]), so
+//! [`merge_logs`] / [`merge_fleet`] / [`fleet_jsonl`] can rebase the
+//! router ring plus N replica rings onto a single timeline, and the
+//! [`slo`] module folds the merged rings into live multi-window SLO
+//! burn-rate gauges.
 
 pub mod clock;
 pub mod export;
 pub mod hist;
 pub mod registry;
+pub mod slo;
 pub mod trace;
 
 pub use clock::{Clock, TICK_US};
-pub use export::{chrome_trace, jsonl};
+pub use export::{chrome_trace, fleet_jsonl, jsonl, merge_fleet, FleetLog};
 pub use hist::{LatencySeries, LogHistogram, LATENCY_BUCKETS, RESERVOIR_CAP};
 pub use registry::{scrape_value, MetricsRegistry};
-pub use trace::{request_spans, Event, Rec, RequestSpans, TraceLog, Tracer, DEFAULT_RING_CAP};
+pub use trace::{
+    merge_logs, request_spans, Event, Rec, RequestSpans, TraceLog, Tracer, DEFAULT_RING_CAP,
+};

@@ -1,0 +1,297 @@
+//! Live SLO burn-rate monitor over trace rings (DESIGN.md §13).
+//!
+//! The workload harness scores goodput *after* a replay finishes; a live
+//! fleet needs the same `(TTFT, ITL)` judgment *while serving*. This
+//! module folds finished-request records out of one or more trace rings
+//! (single engine, or the merged router + replica fleet) into
+//! [`SloRecord`]s, evaluates them against the same lenient/strict budgets
+//! the harness gates on — microsecond conversions of
+//! `workload::report::default_profiles` (virtual clock) or
+//! `default_wall_profiles` (wall clock) — and renders multi-window
+//! **burn rates** as registry gauges.
+//!
+//! Burn rate is the SRE error-budget form: with objective `o` (target
+//! goodput fraction), a window whose miss fraction is `m` burns budget at
+//! `m / (1 - o)` — 1.0 means exactly on budget, >1 means the error budget
+//! is being consumed faster than it accrues. Two windows (1 minute and
+//! 5 minutes of timeline, virtual or wall) make the classic multi-window
+//! alert pair: the short window catches a fresh regression fast, the long
+//! window filters blips.
+
+use super::clock::TICK_US;
+use super::registry::MetricsRegistry;
+use super::trace::{merge_logs, request_spans, Event, TraceLog};
+
+/// Short burn window: 1 minute of timeline (virtual or wall), µs.
+pub const WINDOW_SHORT_US: u64 = 60_000_000;
+/// Long burn window: 5 minutes of timeline, µs.
+pub const WINDOW_LONG_US: u64 = 300_000_000;
+
+/// One `(TTFT, ITL)` latency budget in microseconds plus the goodput
+/// objective its error budget is measured against.
+#[derive(Debug, Clone, Copy)]
+pub struct BurnProfile {
+    /// Profile label (matches the harness profile it mirrors).
+    pub name: &'static str,
+    /// Time-to-first-token budget, µs.
+    pub ttft_us: u64,
+    /// Per-gap inter-token budget, µs.
+    pub itl_us: u64,
+    /// Goodput objective (fraction of requests that must meet the SLO);
+    /// the error budget is `1 - objective`.
+    pub objective: f64,
+}
+
+impl BurnProfile {
+    /// Did this finished-request record meet the budget? Records without
+    /// a first token never do (nothing arrived on time).
+    pub fn met_by(&self, r: &SloRecord) -> bool {
+        r.ttft_us.is_some_and(|t| t <= self.ttft_us) && r.max_gap_us <= self.itl_us
+    }
+}
+
+/// The monitor's two profiles for the given clock domain: µs conversions
+/// of the harness tick budgets (virtual) or wall budgets (wall), with a
+/// tight objective on the lenient budget and a loose one on the strict
+/// budget — lenient misses should be rare, strict misses are expected
+/// under load and meant to trend, not page.
+pub fn burn_profiles(virtual_clock: bool) -> [BurnProfile; 2] {
+    if virtual_clock {
+        // `default_profiles` in ticks, times TICK_US.
+        [
+            BurnProfile {
+                name: "lenient",
+                ttft_us: 48 * TICK_US,
+                itl_us: 6 * TICK_US,
+                objective: 0.99,
+            },
+            BurnProfile { name: "strict", ttft_us: 3 * TICK_US, itl_us: TICK_US, objective: 0.90 },
+        ]
+    } else {
+        // `default_wall_profiles` in seconds, times 1e6.
+        [
+            BurnProfile {
+                name: "wall_lenient",
+                ttft_us: 30_000_000,
+                itl_us: 5_000_000,
+                objective: 0.99,
+            },
+            BurnProfile {
+                name: "wall_strict",
+                ttft_us: 1_000_000,
+                itl_us: 250_000,
+                objective: 0.90,
+            },
+        ]
+    }
+}
+
+/// One finished request's latency facts, folded out of a trace ring.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SloRecord {
+    /// Finish timestamp, µs — the window key.
+    pub finish_us: u64,
+    /// Submit → first token, µs (from the router's door when the log has
+    /// a `routed` record for the request, i.e. placement time counts).
+    pub ttft_us: Option<u64>,
+    /// Worst inter-token gap, µs (first→second token onward; 0 with
+    /// fewer than 2 tokens).
+    pub max_gap_us: u64,
+}
+
+/// Fold every *finished* request in the given rings (merged onto their
+/// shared timeline) into [`SloRecord`]s. TTFT is measured from the
+/// router-submit timestamp when present — the fleet view charges
+/// placement and queue-hop time against the budget, exactly like the
+/// wall-clock harness charges submit-to-first-token.
+pub fn fold_requests(logs: &[&TraceLog]) -> Vec<SloRecord> {
+    let merged = merge_logs(logs);
+    // Worst inter-token gap per id, from consecutive Token records.
+    let mut gaps: std::collections::BTreeMap<u64, (u64, u64)> = std::collections::BTreeMap::new();
+    for r in &merged.recs {
+        if let Event::Token { id, .. } = &r.ev {
+            let e = gaps.entry(*id).or_insert((r.ts_us, 0));
+            e.1 = e.1.max(r.ts_us - e.0);
+            e.0 = r.ts_us;
+        }
+    }
+    request_spans(&merged)
+        .into_iter()
+        .filter(|s| s.reason.is_some_and(|r| r != "cancelled"))
+        .filter_map(|s| {
+            let finish = s.finish_us?;
+            let start = s.route_us.unwrap_or(s.submit_us);
+            Some(SloRecord {
+                finish_us: finish,
+                ttft_us: s.first_us.map(|f| f - start),
+                max_gap_us: gaps.get(&s.id).map_or(0, |&(_, g)| g),
+            })
+        })
+        .collect()
+}
+
+/// One profile × window evaluation.
+#[derive(Debug, Clone, Copy)]
+pub struct BurnRate {
+    /// Profile label.
+    pub profile: &'static str,
+    /// Window length, µs.
+    pub window_us: u64,
+    /// Requests that finished inside the window.
+    pub total: usize,
+    /// Of those, requests that met the budget.
+    pub met: usize,
+    /// `met / total` (1.0 for an empty window — no traffic, no misses).
+    pub goodput: f64,
+    /// `(1 - goodput) / (1 - objective)`: error-budget consumption rate.
+    pub burn: f64,
+}
+
+/// Evaluate every profile over the standard short/long window pair
+/// ending at `now_us`. An empty window reports goodput 1.0 and burn 0 —
+/// silence is not an outage.
+pub fn burn_rates(records: &[SloRecord], profiles: &[BurnProfile], now_us: u64) -> Vec<BurnRate> {
+    let mut out = Vec::with_capacity(profiles.len() * 2);
+    for p in profiles {
+        for window_us in [WINDOW_SHORT_US, WINDOW_LONG_US] {
+            let lo = now_us.saturating_sub(window_us);
+            let in_window: Vec<&SloRecord> =
+                records.iter().filter(|r| r.finish_us > lo && r.finish_us <= now_us).collect();
+            let total = in_window.len();
+            let met = in_window.iter().filter(|r| p.met_by(r)).count();
+            let goodput = if total == 0 { 1.0 } else { met as f64 / total as f64 };
+            let burn = (1.0 - goodput) / (1.0 - p.objective);
+            out.push(BurnRate { profile: p.name, window_us, total, met, goodput, burn });
+        }
+    }
+    out
+}
+
+/// Register the burn evaluations as gauges:
+/// `puzzle_slo_<profile>_{goodput,burn_rate}_{1m,5m}` plus one
+/// `puzzle_slo_window_requests_{1m,5m}` pair (so a scrape can tell "all
+/// met" from "no traffic" at a glance).
+pub fn register_gauges(reg: &mut MetricsRegistry, rates: &[BurnRate]) {
+    let win = |us: u64| if us == WINDOW_SHORT_US { "1m" } else { "5m" };
+    let mut seen_windows: Vec<u64> = Vec::new();
+    for r in rates {
+        if !seen_windows.contains(&r.window_us) {
+            seen_windows.push(r.window_us);
+            reg.gauge(
+                &format!("puzzle_slo_window_requests_{}", win(r.window_us)),
+                "Requests finished inside the burn window.",
+                r.total as f64,
+            );
+        }
+        reg.gauge(
+            &format!("puzzle_slo_{}_goodput_{}", r.profile, win(r.window_us)),
+            "Windowed goodput: fraction of finished requests meeting the SLO.",
+            r.goodput,
+        );
+        reg.gauge(
+            &format!("puzzle_slo_{}_burn_rate_{}", r.profile, win(r.window_us)),
+            "Error-budget burn rate: (1 - goodput) / (1 - objective).",
+            r.burn,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::registry::scrape_value;
+    use crate::obs::Tracer;
+
+    #[test]
+    fn profiles_mirror_the_harness_budgets() {
+        let [lenient, strict] = burn_profiles(true);
+        assert_eq!((lenient.ttft_us, lenient.itl_us), (48 * TICK_US, 6 * TICK_US));
+        assert_eq!((strict.ttft_us, strict.itl_us), (3 * TICK_US, TICK_US));
+        assert!(strict.objective < lenient.objective, "strict budgets get a looser objective");
+        let [wl, ws] = burn_profiles(false);
+        assert_eq!((wl.ttft_us, wl.itl_us), (30_000_000, 5_000_000));
+        assert_eq!((ws.ttft_us, ws.itl_us), (1_000_000, 250_000));
+    }
+
+    #[test]
+    fn fold_measures_ttft_from_the_router_door_and_worst_gap() {
+        let t = Tracer::virtual_ticks(64);
+        t.record(Event::Routed {
+            id: 1,
+            replica: 0,
+            matched: 0,
+            depth: 0,
+            reason: "load",
+            probes: vec![(0, 0)],
+        });
+        t.set_virtual_tick(2);
+        t.record(Event::Submitted { id: 1, prompt: 4, max_new: 4 });
+        t.set_virtual_tick(3);
+        t.record(Event::Admitted { id: 1, lane: 0, hit: false, matched: 0 });
+        t.set_virtual_tick(5);
+        t.record(Event::FirstToken { id: 1 });
+        t.record(Event::Token { id: 1, tok: 7 });
+        t.set_virtual_tick(6);
+        t.record(Event::Token { id: 1, tok: 8 });
+        t.set_virtual_tick(9);
+        t.record(Event::Token { id: 1, tok: 9 });
+        t.record(Event::Finished { id: 1, reason: "eos", tokens: 3 });
+        // An unfinished request must not produce a record.
+        t.record(Event::Submitted { id: 2, prompt: 4, max_new: 4 });
+        let log = t.snapshot();
+        let recs = fold_requests(&[&log]);
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].ttft_us, Some(5 * TICK_US), "TTFT charges placement time");
+        assert_eq!(recs[0].max_gap_us, 3 * TICK_US, "worst of the 1- and 3-tick gaps");
+        assert_eq!(recs[0].finish_us, 9 * TICK_US);
+    }
+
+    #[test]
+    fn cancelled_requests_are_excluded() {
+        let t = Tracer::virtual_ticks(64);
+        t.record(Event::Submitted { id: 1, prompt: 4, max_new: 4 });
+        t.set_virtual_tick(1);
+        t.record(Event::Finished { id: 1, reason: "cancelled", tokens: 0 });
+        assert!(fold_requests(&[&t.snapshot()]).is_empty());
+    }
+
+    #[test]
+    fn burn_is_miss_fraction_over_error_budget() {
+        let p = BurnProfile { name: "t", ttft_us: 100, itl_us: 100, objective: 0.9 };
+        // 4 in-window records, 3 meet → goodput 0.75, burn 2.5.
+        let recs: Vec<SloRecord> = (0..4)
+            .map(|i| SloRecord {
+                finish_us: 1_000 + i,
+                ttft_us: Some(if i == 0 { 500 } else { 50 }),
+                max_gap_us: 0,
+            })
+            .collect();
+        let rates = burn_rates(&recs, &[p], 10_000);
+        assert_eq!(rates.len(), 2, "one short and one long window");
+        for r in &rates {
+            assert_eq!((r.total, r.met), (4, 3));
+            assert!((r.goodput - 0.75).abs() < 1e-12);
+            assert!((r.burn - 2.5).abs() < 1e-12);
+        }
+        // Records outside the window fall out of the evaluation.
+        let old = vec![SloRecord { finish_us: 10, ttft_us: Some(500), max_gap_us: 0 }];
+        let r = &burn_rates(&old, &[p], WINDOW_SHORT_US + 1_000)[0];
+        assert_eq!((r.total, r.goodput.to_bits()), (0, 1.0f64.to_bits()));
+        assert_eq!(r.burn, 0.0, "no traffic is not an outage");
+    }
+
+    #[test]
+    fn gauges_render_per_profile_and_window() {
+        let recs = vec![SloRecord { finish_us: 1_000, ttft_us: Some(999_999), max_gap_us: 0 }];
+        let rates = burn_rates(&recs, &burn_profiles(true), 2_000);
+        let mut reg = MetricsRegistry::new();
+        register_gauges(&mut reg, &rates);
+        let text = reg.render();
+        assert_eq!(scrape_value(&text, "puzzle_slo_window_requests_1m"), Some(1.0));
+        assert_eq!(scrape_value(&text, "puzzle_slo_lenient_goodput_1m"), Some(1.0));
+        assert_eq!(scrape_value(&text, "puzzle_slo_lenient_burn_rate_5m"), Some(0.0));
+        // TTFT of ~1s blows the 3-tick strict budget → nonzero burn.
+        let strict = scrape_value(&text, "puzzle_slo_strict_burn_rate_1m").unwrap();
+        assert!(strict > 0.0, "strict miss must surface as burn");
+    }
+}

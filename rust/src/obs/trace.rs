@@ -8,6 +8,14 @@
 //! unconditionally; enabled it stamps each event from its [`Clock`] and
 //! pushes into a bounded ring that overwrites the oldest record when full
 //! (the `dropped` counter says how many were lost).
+//!
+//! At fleet scope (DESIGN.md §13) the router owns its own ring for the
+//! placement-side events — [`Event::Routed`], migration begin/end,
+//! [`Event::RouterShed`], [`Event::ProbeRound`] — and every ring in the
+//! fleet is built over ONE shared [`Clock`] ([`Tracer::with_clock`]), so
+//! timestamps from the router and all N replicas live on a single
+//! timeline and a request's lifecycle is stitchable across rings by its
+//! globally unique id (`replica << REPLICA_SHIFT | local`).
 
 use std::collections::VecDeque;
 use std::fmt;
@@ -122,6 +130,64 @@ pub enum Event {
         /// Total seconds inside the executable.
         secs: f64,
     },
+    /// Router placed a request on a replica (recorded on the router ring
+    /// with the timestamp of the submit's *entry*, so the gap to the
+    /// replica's own `Submitted` is the placement+channel cost).
+    Routed {
+        /// The replica-assigned, globally unique request id.
+        id: u64,
+        /// Chosen replica index.
+        replica: usize,
+        /// The chosen replica's prefix match for the prompt, tokens.
+        matched: usize,
+        /// The chosen replica's in-flight depth at placement.
+        depth: usize,
+        /// Why this replica won: `affinity` (longest match), `load`
+        /// (cold, shallowest queue), `spill` (best match was overloaded),
+        /// or `fallback` (earlier candidates raced to full).
+        reason: &'static str,
+        /// Per-replica `(match_len, depth)` probe results, by replica id.
+        probes: Vec<(usize, usize)>,
+    },
+    /// Cross-replica prefix migration started (span start; paired with
+    /// [`Event::MigrationEnd`] by `mig`).
+    MigrationBegin {
+        /// Router-assigned migration ordinal (1-based).
+        mig: u64,
+        /// Source replica holding the segment.
+        src: usize,
+        /// Destination replica the segment moves to.
+        dst: usize,
+    },
+    /// Cross-replica prefix migration finished (span end).
+    MigrationEnd {
+        /// Router-assigned migration ordinal (matches the begin).
+        mig: u64,
+        /// Source replica.
+        src: usize,
+        /// Destination replica.
+        dst: usize,
+        /// The source's segment id (0 when the export found no match).
+        seg: u64,
+        /// Tokens of retained prefix in the payload (0 on no match).
+        tokens: usize,
+        /// Whether the destination actually adopted the segment — only
+        /// adopted migrations count in `RouterStats::migrations`.
+        adopted: bool,
+    },
+    /// Request shed at the router's door (every replica full).
+    RouterShed {
+        /// Replica count that all reported full.
+        replicas: usize,
+    },
+    /// One placement probe round: how many replicas answered over the
+    /// control channel vs from the cached radix digest.
+    ProbeRound {
+        /// Replicas probed over the control channel this round.
+        probed: usize,
+        /// Replicas served from the digest cache (no round-trip).
+        cached: usize,
+    },
 }
 
 impl Event {
@@ -139,6 +205,11 @@ impl Event {
             Event::Step { .. } => "step",
             Event::PrefixEvict { .. } => "prefix_evict",
             Event::ExecTotal { .. } => "exec_total",
+            Event::Routed { .. } => "routed",
+            Event::MigrationBegin { .. } => "migration_begin",
+            Event::MigrationEnd { .. } => "migration_end",
+            Event::RouterShed { .. } => "router_shed",
+            Event::ProbeRound { .. } => "probe_round",
         }
     }
 }
@@ -159,7 +230,9 @@ struct Ring {
 }
 
 struct Shared {
-    clock: Clock,
+    /// `Arc` so N tracers (router + replicas) can share ONE timebase —
+    /// the precondition for merging their rings onto a single timeline.
+    clock: Arc<Clock>,
     ring: Mutex<Ring>,
 }
 
@@ -183,6 +256,14 @@ impl Tracer {
     }
 
     fn enabled_with(clock: Clock, cap: usize) -> Tracer {
+        Tracer::with_clock(Arc::new(clock), cap)
+    }
+
+    /// An enabled tracer with its own ring over an existing clock. Fleet
+    /// tracing builds every ring (router + each replica) over ONE shared
+    /// clock so their timestamps merge onto a single timeline; a virtual
+    /// tick stamped anywhere then advances the whole fleet.
+    pub fn with_clock(clock: Arc<Clock>, cap: usize) -> Tracer {
         Tracer {
             inner: Some(Arc::new(Shared {
                 clock,
@@ -204,6 +285,27 @@ impl Tracer {
     /// Whether events are being recorded.
     pub fn enabled(&self) -> bool {
         self.inner.is_some()
+    }
+
+    /// The tracer's clock handle (`None` when disabled) — clone it into
+    /// [`Tracer::with_clock`] to build sibling rings on the same timebase.
+    pub fn clock(&self) -> Option<Arc<Clock>> {
+        self.inner.as_ref().map(|s| s.clock.clone())
+    }
+
+    /// Whether the clock is the deterministic virtual tick clock (false
+    /// when disabled or on wall time).
+    pub fn is_virtual(&self) -> bool {
+        self.inner.as_ref().is_some_and(|s| s.clock.is_virtual())
+    }
+
+    /// Events overwritten because the ring was full — cheap (no ring
+    /// copy), for the `trace_dropped_events` exposition counter.
+    pub fn dropped(&self) -> u64 {
+        match &self.inner {
+            None => 0,
+            Some(s) => s.ring.lock().unwrap().dropped,
+        }
     }
 
     /// Current clock reading in microseconds (0 when disabled).
@@ -284,11 +386,21 @@ pub struct TraceLog {
 ///
 /// The three segments partition the request's end-to-end time exactly:
 /// `queued + prefill + decode == e2e` whenever all boundaries were recorded
-/// (each is a difference of the same four timestamps).
+/// (each is a difference of the same four timestamps). On a merged fleet
+/// log (the router ring's [`Event::Routed`] plus the owning replica's
+/// lifecycle) a fourth leading segment appears — `placement` (router
+/// submit → replica submit) — and the four together tile
+/// [`RequestSpans::routed_e2e_us`] exactly, telescoping over the same
+/// five timestamps.
 #[derive(Debug, Clone)]
 pub struct RequestSpans {
     /// Request id.
     pub id: u64,
+    /// Router-submit timestamp (µs), when a [`Event::Routed`] record for
+    /// this id is in the log (fleet scope only).
+    pub route_us: Option<u64>,
+    /// The replica the router placed the request on (fleet scope only).
+    pub replica: Option<usize>,
     /// Submission timestamp (µs).
     pub submit_us: u64,
     /// Admission timestamp, if the request left the queue.
@@ -310,6 +422,22 @@ pub struct RequestSpans {
 }
 
 impl RequestSpans {
+    /// Placement + channel hop: router submit → replica submit (fleet
+    /// logs only).
+    pub fn placement_us(&self) -> Option<u64> {
+        self.route_us.map(|r| self.submit_us - r)
+    }
+
+    /// End-to-end from the router's door: router submit → finish. With
+    /// all five boundaries present,
+    /// `placement + queued + prefill + decode == routed_e2e` exactly.
+    pub fn routed_e2e_us(&self) -> Option<u64> {
+        match (self.route_us, self.finish_us) {
+            (Some(r), Some(e)) => Some(e - r),
+            _ => None,
+        }
+    }
+
     /// Scheduler wait: submit → admit.
     pub fn queued_us(&self) -> Option<u64> {
         self.admit_us.map(|a| a - self.submit_us)
@@ -346,13 +474,16 @@ pub fn request_spans(log: &TraceLog) -> Vec<RequestSpans> {
             Event::Submitted { id, .. }
             | Event::Admitted { id, .. }
             | Event::FirstToken { id }
-            | Event::Finished { id, .. } => (*id, r.ts_us),
+            | Event::Finished { id, .. }
+            | Event::Routed { id, .. } => (*id, r.ts_us),
             _ => continue,
         };
         let e = spans.entry(id).or_insert_with(|| {
             order.push(id);
             RequestSpans {
                 id,
+                route_us: None,
+                replica: None,
                 submit_us: ts,
                 admit_us: None,
                 first_us: None,
@@ -366,6 +497,10 @@ pub fn request_spans(log: &TraceLog) -> Vec<RequestSpans> {
         });
         match &r.ev {
             Event::Submitted { .. } => e.submit_us = ts,
+            Event::Routed { replica, .. } => {
+                e.route_us = Some(ts);
+                e.replica = Some(*replica);
+            }
             Event::Admitted { lane, hit, matched, .. } => {
                 e.admit_us = Some(ts);
                 e.lane = Some(*lane);
@@ -386,6 +521,22 @@ pub fn request_spans(log: &TraceLog) -> Vec<RequestSpans> {
         }
     }
     order.into_iter().filter_map(|id| spans.remove(&id)).collect()
+}
+
+/// Merge N ring snapshots (which MUST share a clock — see
+/// [`Tracer::with_clock`]) into one log, stable-sorted by timestamp so
+/// cross-ring order follows the shared timeline and same-timestamp
+/// records keep their (ring, recording) order. `dropped` counts sum.
+/// Feeding the result to [`request_spans`] stitches routed lifecycles:
+/// the router's `Routed` record and the owning replica's
+/// submit/admit/first/finish land in one [`RequestSpans`].
+pub fn merge_logs(logs: &[&TraceLog]) -> TraceLog {
+    let mut recs: Vec<Rec> = Vec::with_capacity(logs.iter().map(|l| l.recs.len()).sum());
+    for l in logs {
+        recs.extend(l.recs.iter().cloned());
+    }
+    recs.sort_by_key(|r| r.ts_us); // stable: preserves per-ring order on ties
+    TraceLog { recs, dropped: logs.iter().map(|l| l.dropped).sum() }
 }
 
 #[cfg(test)]

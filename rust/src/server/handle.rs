@@ -6,6 +6,7 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 
 use anyhow::{anyhow, Result};
 
+use crate::obs::TraceLog;
 use crate::serving::{EngineMetrics, FinishReason, GenRequest, MigratedPrefix};
 
 use super::placement::ReplicaProbe;
@@ -56,12 +57,19 @@ pub(super) enum Ctl {
     MetricsText(Sender<String>),
     /// Placement probe: longest retained prefix match for a prompt plus
     /// load counters, answered between engine steps (router plumbing).
+    /// The reply pairs the probe with the engine's prefix-cache digest
+    /// (`Engine::prefix_generation`), so the router can cache the answer
+    /// until the retained set changes.
     Probe {
         /// The prompt to probe the prefix cache with.
         prompt: Vec<u32>,
-        /// One-shot reply channel for the probe result.
-        reply: Sender<ReplicaProbe>,
+        /// One-shot reply channel for the probe result + digest.
+        reply: Sender<(ReplicaProbe, u64)>,
     },
+    /// Copy out the engine tracer's ring (empty when tracing is off) —
+    /// fleet trace merging and the SLO monitor read replica rings this
+    /// way, consistently between engine steps.
+    TraceSnapshot(Sender<TraceLog>),
     /// Clone this engine's best retained match for a prompt out as a
     /// migration payload (`None`: cache off or no match).
     ExportPrefix {
@@ -149,11 +157,28 @@ impl ServerHandle {
     /// consistent snapshot taken between engine steps. The router calls
     /// this on every replica per submit; also useful for tests.
     pub fn probe(&self, prompt: &[u32]) -> Result<ReplicaProbe> {
+        self.probe_with_digest(prompt).map(|(p, _)| p)
+    }
+
+    /// [`ServerHandle::probe`] plus the engine's prefix-cache digest
+    /// (`Engine::prefix_generation` at answer time). While two answers
+    /// carry the same digest, the retained set did not change between
+    /// them — the router's probe memo keys on exactly this.
+    pub fn probe_with_digest(&self, prompt: &[u32]) -> Result<(ReplicaProbe, u64)> {
         let (reply, rx) = channel();
         self.ctl
             .send(Ctl::Probe { prompt: prompt.to_vec(), reply })
             .map_err(|_| anyhow!("server is shut down"))?;
         rx.recv().map_err(|_| anyhow!("server dropped the probe reply"))
+    }
+
+    /// Copy out the engine tracer's ring (empty when tracing is off),
+    /// consistently between engine steps. Fleet trace export and the SLO
+    /// monitor read every replica through this.
+    pub fn trace_snapshot(&self) -> Result<TraceLog> {
+        let (reply, rx) = channel();
+        self.ctl.send(Ctl::TraceSnapshot(reply)).map_err(|_| anyhow!("server is shut down"))?;
+        rx.recv().map_err(|_| anyhow!("server dropped the trace reply"))
     }
 
     /// Export this engine's best retained match for `prompt` as a

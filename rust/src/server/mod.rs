@@ -44,7 +44,9 @@
 //! replay harness drives either.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use crate::serving::{Engine, StreamEvent};
@@ -58,6 +60,55 @@ pub use placement::{choose, Placement, ReplicaProbe};
 pub use router::{Router, RouterConfig, RouterHandle, RouterStats, REPLICA_SHIFT};
 use handle::Ctl;
 
+/// Lock-free load snapshot one worker publishes for its router: occupancy
+/// counters plus the engine's prefix-cache digest
+/// (`Engine::prefix_generation`), refreshed after every control drain and
+/// engine step. The router reads these to decide whether a cached probe
+/// answer is still valid — a control-channel round-trip is only paid when
+/// the digest moved or the replica looks overloaded (DESIGN.md §13).
+#[derive(Debug, Default)]
+pub struct ReplicaLoad {
+    active: AtomicUsize,
+    queued: AtomicUsize,
+    full: AtomicBool,
+    digest: AtomicU64,
+    alive: AtomicBool,
+}
+
+impl ReplicaLoad {
+    fn publish(&self, engine: &Engine) {
+        self.active.store(engine.active(), Ordering::Relaxed);
+        self.queued.store(engine.queue_len(), Ordering::Relaxed);
+        self.full.store(engine.queue_full(), Ordering::Relaxed);
+        self.digest.store(engine.prefix_generation(), Ordering::Relaxed);
+    }
+
+    /// Sequences holding a decode slot at the last publish.
+    pub fn active(&self) -> usize {
+        self.active.load(Ordering::Relaxed)
+    }
+
+    /// Admission-queue depth at the last publish.
+    pub fn queued(&self) -> usize {
+        self.queued.load(Ordering::Relaxed)
+    }
+
+    /// Whether a submit would shed at the door at the last publish.
+    pub fn full(&self) -> bool {
+        self.full.load(Ordering::Relaxed)
+    }
+
+    /// The prefix-cache digest at the last publish.
+    pub fn digest(&self) -> u64 {
+        self.digest.load(Ordering::Relaxed)
+    }
+
+    /// False once the worker has exited (its publishes are final).
+    pub fn alive(&self) -> bool {
+        self.alive.load(Ordering::Relaxed)
+    }
+}
+
 /// The worker-thread front-end over an [`Engine`] (see the module docs
 /// for the channel grammar). Spawn it with an engine, hand out
 /// [`ServerHandle`] clones to client threads, and call
@@ -65,6 +116,7 @@ use handle::Ctl;
 pub struct AsyncServer {
     ctl: Sender<Ctl>,
     join: JoinHandle<Engine>,
+    load: Arc<ReplicaLoad>,
 }
 
 impl AsyncServer {
@@ -78,13 +130,24 @@ impl AsyncServer {
     /// occupancy/throughput summary (`serve --metrics-interval N`).
     pub fn spawn_with(engine: Engine, metrics_interval: Option<usize>) -> AsyncServer {
         let (ctl, rx) = channel();
-        let join = std::thread::spawn(move || worker(engine, rx, metrics_interval));
-        AsyncServer { ctl, join }
+        let load = Arc::new(ReplicaLoad::default());
+        load.alive.store(true, Ordering::Relaxed);
+        load.publish(&engine);
+        let wload = load.clone();
+        let join = std::thread::spawn(move || worker(engine, rx, metrics_interval, wload));
+        AsyncServer { ctl, join, load }
     }
 
     /// A new client handle (cheap to clone, safe to move across threads).
     pub fn handle(&self) -> ServerHandle {
         ServerHandle::new(self.ctl.clone())
+    }
+
+    /// The worker's published load snapshot (shared, lock-free) — the
+    /// router's digest-cached probing reads this instead of paying a
+    /// control-channel round-trip per placement.
+    pub fn load(&self) -> Arc<ReplicaLoad> {
+        self.load.clone()
     }
 
     /// Stop the worker and return the engine (with its accumulated
@@ -99,7 +162,12 @@ impl AsyncServer {
 /// The worker loop: park while idle, otherwise interleave control
 /// messages with engine steps and fan events out to the per-request
 /// streams.
-fn worker(mut engine: Engine, rx: Receiver<Ctl>, metrics_interval: Option<usize>) -> Engine {
+fn worker(
+    mut engine: Engine,
+    rx: Receiver<Ctl>,
+    metrics_interval: Option<usize>,
+    load: Arc<ReplicaLoad>,
+) -> Engine {
     let mut streams: HashMap<u64, Sender<StreamItem>> = HashMap::new();
     let mut disconnected = false;
     let mut steps: usize = 0;
@@ -161,30 +229,50 @@ fn worker(mut engine: Engine, rx: Receiver<Ctl>, metrics_interval: Option<usize>
                 }
                 Ctl::Probe { prompt, reply } => {
                     // one consistent snapshot between steps: the match
-                    // length and the load counters describe the same
-                    // instant, which the placement rule relies on
-                    let _ = reply.send(ReplicaProbe {
-                        match_len: engine.prefix_probe(&prompt),
-                        active: engine.active(),
-                        queued: engine.queue_len(),
-                        full: engine.queue_full(),
-                    });
+                    // length, the load counters, and the digest describe
+                    // the same instant, which both the placement rule and
+                    // the router's probe memo rely on
+                    let _ = reply.send((
+                        ReplicaProbe {
+                            match_len: engine.prefix_probe(&prompt),
+                            active: engine.active(),
+                            queued: engine.queue_len(),
+                            full: engine.queue_full(),
+                        },
+                        engine.prefix_generation(),
+                    ));
+                }
+                Ctl::TraceSnapshot(reply) => {
+                    let _ = reply.send(engine.tracer().snapshot());
                 }
                 Ctl::ExportPrefix { prompt, reply } => {
                     let _ = reply.send(engine.export_prefix(&prompt));
                 }
                 Ctl::ImportPrefix { prefix, reply } => {
-                    let _ = reply.send(engine.adopt_prefix(*prefix));
+                    let adopted = engine.adopt_prefix(*prefix);
+                    // adoption bumps the digest: republish before the
+                    // reply so the importer's next probe can't hit a
+                    // stale memo entry
+                    load.publish(&engine);
+                    let _ = reply.send(adopted);
                 }
                 Ctl::Shutdown => break 'serve,
             }
         }
+        load.publish(&engine);
         if !engine.is_idle() || dirty {
             // a step on an idle engine is still needed after control
             // traffic: cancellations of queued requests produce their
             // terminal events without any slot running
             match engine.step() {
-                Ok(events) => dispatch(&mut engine, &mut streams, events),
+                Ok(events) => {
+                    // publish BEFORE dispatching the step's events: a
+                    // client that observes a `Finished` item and probes
+                    // must see the digest the finishing retain bumped,
+                    // or a memoized probe could serve a stale match
+                    load.publish(&engine);
+                    dispatch(&mut engine, &mut streams, events);
+                }
                 Err(_) => break, // backend failure: streams end item-less
             }
             // responses were already streamed event-by-event; drop the
@@ -205,11 +293,17 @@ fn worker(mut engine: Engine, rx: Receiver<Ctl>, metrics_interval: Option<usize>
             }
         }
     }
+    // final publish, then mark the worker gone: a router that reads a
+    // dead replica's load must fall back to a real (failing) probe
+    load.publish(&engine);
+    load.alive.store(false, Ordering::Relaxed);
     engine
 }
 
 /// Render the engine's full metrics registry plus the worker's live
-/// occupancy gauges in the Prometheus text exposition format.
+/// occupancy gauges in the Prometheus text exposition format. With
+/// tracing enabled, the scrape also carries the ring-loss counter and
+/// live SLO burn-rate gauges folded from the ring (DESIGN.md §13).
 fn metrics_text(engine: &Engine) -> String {
     let mut reg = engine.metrics.registry();
     reg.gauge("puzzle_active_lanes", "Sequences currently holding a decode slot", engine.active() as f64);
@@ -229,6 +323,19 @@ fn metrics_text(engine: &Engine) -> String {
         "Retained prefix segments currently held",
         engine.prefix_segments() as f64,
     );
+    let tracer = engine.tracer();
+    if tracer.enabled() {
+        reg.counter(
+            "puzzle_trace_dropped_events",
+            "Trace-ring records overwritten because the ring was full",
+            tracer.dropped() as f64,
+        );
+        let log = tracer.snapshot();
+        let records = crate::obs::slo::fold_requests(&[&log]);
+        let profiles = crate::obs::slo::burn_profiles(tracer.is_virtual());
+        let rates = crate::obs::slo::burn_rates(&records, &profiles, tracer.now_us());
+        crate::obs::slo::register_gauges(&mut reg, &rates);
+    }
     reg.render()
 }
 

@@ -59,6 +59,24 @@ impl Placement {
     pub fn target(&self) -> usize {
         self.order[0]
     }
+
+    /// Classify why the request landed on `landed` — the `reason` field
+    /// of the router's `routed` trace record: `fallback` (a submit race
+    /// pushed it past the target down the order walk), `spill` (the best
+    /// match was overloaded, so the segment migrates to the pick),
+    /// `affinity` (the pick holds a prefix match), or `load` (cold pick
+    /// by queue depth alone).
+    pub fn reason(&self, probes: &[ReplicaProbe], landed: usize) -> &'static str {
+        if landed != self.target() {
+            "fallback"
+        } else if self.migrate_from.is_some() {
+            "spill"
+        } else if probes.get(landed).is_some_and(|p| p.match_len > 0) {
+            "affinity"
+        } else {
+            "load"
+        }
+    }
 }
 
 /// Pick a replica for a request probed as `probes` (one entry per
@@ -146,6 +164,25 @@ mod tests {
         let probes = vec![probe(8, 4, false), probe(0, 4, false)];
         let p = choose(&probes, 2).unwrap();
         assert_eq!((p.target(), p.migrate_from), (0, None));
+    }
+
+    #[test]
+    fn reason_classification_covers_the_four_outcomes() {
+        // affinity: the pick holds the best match
+        let probes = vec![probe(8, 0, false), probe(0, 0, false)];
+        let p = choose(&probes, usize::MAX).unwrap();
+        assert_eq!(p.reason(&probes, p.target()), "affinity");
+        // load: everyone cold, pick by depth
+        let probes = vec![probe(0, 2, false), probe(0, 0, false)];
+        let p = choose(&probes, usize::MAX).unwrap();
+        assert_eq!(p.reason(&probes, p.target()), "load");
+        // spill: best match overloaded, segment follows the request
+        let probes = vec![probe(8, 2, false), probe(0, 0, false)];
+        let p = choose(&probes, 2).unwrap();
+        assert_eq!(p.migrate_from, Some(0));
+        assert_eq!(p.reason(&probes, p.target()), "spill");
+        // fallback: landed past the target in the order walk
+        assert_eq!(p.reason(&probes, 0), "fallback");
     }
 
     #[test]

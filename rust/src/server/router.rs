@@ -23,26 +23,40 @@
 //! Request ids are globally unique across replicas: replica `i`'s engine
 //! starts its id counter at `i << 48` (`Engine::set_request_id_base`), so
 //! `RouterHandle::cancel` recovers the owning replica from the id alone.
+//!
+//! Two fleet-scope layers ride on top (DESIGN.md §13). **Digest-cached
+//! probing**: each worker publishes its load and prefix-cache digest
+//! lock-free ([`super::ReplicaLoad`]); with [`RouterConfig::probe_cache`]
+//! on, a replica that is alive, not full, under the overload threshold,
+//! and whose digest matches the memoized probe answer is served from the
+//! memo with zero channel round-trips — placement-equivalent to
+//! always-probe (the digest moves on every retained-set mutation) but
+//! without N round-trips per submit. **Router tracing**: an optional
+//! [`Tracer`] records `probe_round` / `routed` / migration spans /
+//! `router_shed` onto the router's own ring; built over the same shared
+//! clock as the replica tracers, the rings merge into one fleet timeline
+//! ([`crate::obs::merge_fleet`]).
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Result};
 
-use crate::obs::MetricsRegistry;
+use crate::obs::{Event, FleetLog, MetricsRegistry, Tracer};
 use crate::serving::{Engine, EngineMetrics, GenRequest};
 use crate::workload::report::load_skew;
 
 use super::handle::Frontend;
 use super::placement::{choose, ReplicaProbe};
-use super::{AsyncServer, ServerHandle, ServerStats, TokenStream};
+use super::{AsyncServer, ReplicaLoad, ServerHandle, ServerStats, TokenStream};
 
 /// Bits reserved for the per-replica request-id base: replica `i` issues
 /// ids in `[i << REPLICA_SHIFT, (i + 1) << REPLICA_SHIFT)`.
 pub const REPLICA_SHIFT: u32 = 48;
 
 /// Router tuning knobs.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct RouterConfig {
     /// In-flight depth (active + queued) at which a replica's prefix
     /// match no longer pins placement: the request goes to the best
@@ -51,12 +65,49 @@ pub struct RouterConfig {
     /// Minimum match length (tokens) worth migrating; shorter matches
     /// just re-prefill at the destination.
     pub min_migrate: usize,
+    /// Serve placement probes from the per-replica digest memo when the
+    /// retained set is provably unchanged, paying the control-channel
+    /// round-trip only on digest staleness, overload, or a full/dead
+    /// replica. Placement-equivalent to always-probe; off recovers the
+    /// PR 9 probe-everything behavior (and the equivalence test's
+    /// baseline).
+    pub probe_cache: bool,
+    /// The router's placement-side tracer (disabled by default). For a
+    /// mergeable fleet timeline, build it and every replica engine's
+    /// tracer over ONE shared clock (`Tracer::with_clock`).
+    pub tracer: Tracer,
 }
 
 impl Default for RouterConfig {
     fn default() -> RouterConfig {
-        RouterConfig { overload: 4, min_migrate: 1 }
+        RouterConfig {
+            overload: 4,
+            min_migrate: 1,
+            probe_cache: true,
+            tracer: Tracer::disabled(),
+        }
     }
+}
+
+/// One memoized probe answer: the digest it was taken under and the
+/// match length it reported. Keyed by `(replica, prompt fnv, prompt
+/// len)`; valid while the replica's published digest equals `gen`.
+type ProbeMemo = HashMap<(usize, u64, usize), (u64, usize)>;
+
+/// The memo is cleared rather than evicted when it grows past this —
+/// probe caching is an optimization, forgetting is always safe.
+const PROBE_MEMO_CAP: usize = 1 << 14;
+
+/// FNV-1a 64 over a token slice (the probe memo's prompt key).
+fn fnv_tokens(tokens: &[u32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    h
 }
 
 /// Router-level counters shared by every handle clone (atomics: handles
@@ -71,6 +122,21 @@ struct RouterShared {
     migrated_tokens: AtomicU64,
     /// Requests shed at the router's door (every replica full).
     shed: AtomicU64,
+    /// Placement probe rounds performed (one per submit attempt).
+    probe_rounds: AtomicU64,
+    /// Per-replica control-channel probes paid (memo miss, stale digest,
+    /// overload, or full/dead replica — and every probe with the cache
+    /// off).
+    digest_refreshes: AtomicU64,
+    /// Per-replica probes served from the digest memo with no
+    /// round-trip.
+    digest_hits: AtomicU64,
+    /// Migration ordinal source (pairs `migration_begin`/`_end` spans).
+    mig_seq: AtomicU64,
+    /// Each worker's lock-free load/digest publication, by replica id.
+    loads: Vec<Arc<ReplicaLoad>>,
+    /// Memoized probe answers (see [`ProbeMemo`]).
+    memo: Mutex<ProbeMemo>,
 }
 
 /// Point-in-time router counters plus each replica's [`ServerStats`]
@@ -87,6 +153,12 @@ pub struct RouterStats {
     pub migrated_tokens: u64,
     /// Requests shed at the router's door (every replica full).
     pub shed: u64,
+    /// Placement probe rounds performed (one per submit attempt).
+    pub probe_rounds: u64,
+    /// Per-replica control-channel probes paid across all rounds.
+    pub digest_refreshes: u64,
+    /// Per-replica probes served from the digest memo (no round-trip).
+    pub digest_hits: u64,
 }
 
 impl RouterStats {
@@ -131,6 +203,7 @@ impl Router {
             .collect();
         let shared = Arc::new(RouterShared {
             routed: (0..replicas.len()).map(|_| AtomicU64::new(0)).collect(),
+            loads: replicas.iter().map(|r| r.load()).collect(),
             ..Default::default()
         });
         Router { replicas, shared, cfg }
@@ -147,7 +220,7 @@ impl Router {
         RouterHandle {
             replicas: self.replicas.iter().map(|r| r.handle()).collect(),
             shared: self.shared.clone(),
-            cfg: self.cfg,
+            cfg: self.cfg.clone(),
         }
     }
 
@@ -169,30 +242,81 @@ pub struct RouterHandle {
 }
 
 impl RouterHandle {
-    /// Probe every replica for this prompt (a dead replica reports as
-    /// full so placement routes around it).
-    fn probe_all(&self, prompt: &[u32]) -> Vec<ReplicaProbe> {
-        self.replicas
-            .iter()
-            .map(|h| {
-                h.probe(prompt).unwrap_or(ReplicaProbe {
-                    match_len: 0,
-                    active: 0,
-                    queued: 0,
-                    full: true,
-                })
-            })
-            .collect()
+    /// Probe every replica for this prompt, returning the probes plus
+    /// how many were paid over the control channel vs served from the
+    /// digest memo. A dead replica reports as full so placement routes
+    /// around it. With [`RouterConfig::probe_cache`] on, a replica whose
+    /// published digest matches the memoized answer — and which is
+    /// alive, not full, and under the overload threshold — is answered
+    /// from the memo + its published load counters; everything else pays
+    /// the round-trip and refreshes the memo.
+    fn probe_all(&self, prompt: &[u32]) -> (Vec<ReplicaProbe>, usize, usize) {
+        let key_hash = fnv_tokens(prompt);
+        let mut probes = Vec::with_capacity(self.replicas.len());
+        let (mut probed, mut cached) = (0usize, 0usize);
+        for (r, h) in self.replicas.iter().enumerate() {
+            let key = (r, key_hash, prompt.len());
+            if self.cfg.probe_cache {
+                if let Some(load) = self.shared.loads.get(r) {
+                    let depth = load.active() + load.queued();
+                    if load.alive() && !load.full() && depth < self.cfg.overload {
+                        let memo = self.shared.memo.lock().unwrap();
+                        if let Some(&(gen, match_len)) = memo.get(&key) {
+                            if gen == load.digest() {
+                                cached += 1;
+                                probes.push(ReplicaProbe {
+                                    match_len,
+                                    active: load.active(),
+                                    queued: load.queued(),
+                                    full: false,
+                                });
+                                continue;
+                            }
+                        }
+                    }
+                }
+            }
+            probed += 1;
+            match h.probe_with_digest(prompt) {
+                Ok((p, gen)) => {
+                    if self.cfg.probe_cache {
+                        let mut memo = self.shared.memo.lock().unwrap();
+                        if memo.len() >= PROBE_MEMO_CAP {
+                            memo.clear();
+                        }
+                        memo.insert(key, (gen, p.match_len));
+                    }
+                    probes.push(p);
+                }
+                Err(_) => {
+                    probes.push(ReplicaProbe { match_len: 0, active: 0, queued: 0, full: true });
+                }
+            }
+        }
+        self.shared.probe_rounds.fetch_add(1, Ordering::Relaxed);
+        self.shared.digest_refreshes.fetch_add(probed as u64, Ordering::Relaxed);
+        self.shared.digest_hits.fetch_add(cached as u64, Ordering::Relaxed);
+        (probes, probed, cached)
     }
 
     /// Route a request: probe, place, migrate if the placement asks for
     /// it, then submit — falling back through the remaining candidates
     /// if a submit races to full. `Err` only when every replica refuses
     /// (router-level shed) or the fleet is shut down.
+    ///
+    /// With tracing on, the router ring gets one `probe_round` per call,
+    /// a `routed` record stamped at the submit's *entry* time (so its gap
+    /// to the replica's own `submitted` is the placement + channel-hop
+    /// cost — the merged timeline's `placement` span), and a
+    /// `router_shed` when every replica refuses. Tracing observes, never
+    /// steers: the records are written after the decisions they describe.
     pub fn submit(&self, req: GenRequest) -> Result<TokenStream> {
-        let probes = self.probe_all(&req.prompt);
+        let t0 = self.cfg.tracer.now_us();
+        let (probes, probed, cached) = self.probe_all(&req.prompt);
+        self.cfg.tracer.record_at(t0, Event::ProbeRound { probed, cached });
         let Some(placement) = choose(&probes, self.cfg.overload) else {
             self.shared.shed.fetch_add(1, Ordering::Relaxed);
+            self.cfg.tracer.record(Event::RouterShed { replicas: self.replicas.len() });
             return Err(anyhow!(
                 "router: all {} replicas are full, request shed",
                 self.replicas.len()
@@ -209,6 +333,20 @@ impl RouterHandle {
             match self.replicas[r].submit(req.clone()) {
                 Ok(stream) => {
                     self.shared.routed[r].fetch_add(1, Ordering::Relaxed);
+                    // the id exists only now, but the span starts at the
+                    // submit's entry: record_at back-stamps it so the
+                    // placement gap is visible on the merged timeline
+                    self.cfg.tracer.record_at(
+                        t0,
+                        Event::Routed {
+                            id: stream.id(),
+                            replica: r,
+                            matched: probes[r].match_len,
+                            depth: probes[r].depth(),
+                            reason: placement.reason(&probes, r),
+                            probes: probes.iter().map(|p| (p.match_len, p.depth())).collect(),
+                        },
+                    );
                     return Ok(stream);
                 }
                 // raced to full (or this replica just shut down): try the
@@ -217,6 +355,7 @@ impl RouterHandle {
             }
         }
         self.shared.shed.fetch_add(1, Ordering::Relaxed);
+        self.cfg.tracer.record(Event::RouterShed { replicas: self.replicas.len() });
         Err(last_err)
     }
 
@@ -224,14 +363,28 @@ impl RouterHandle {
     /// replica `dst`, best-effort: the source clones the rows out
     /// (keeping its own copy and refcounts untouched), the destination
     /// re-retains them under its own budgets and segment ids. Counted
-    /// only when the destination actually adopts.
+    /// only when the destination actually adopts. With tracing on, the
+    /// attempt is a `migration_begin`/`migration_end` span pair (shared
+    /// ordinal), the end carrying the source segment id, token count,
+    /// and whether adoption happened — adopted ends match
+    /// `RouterStats::migrations` exactly.
     fn migrate(&self, src: usize, dst: usize, prompt: &[u32]) {
-        let Ok(Some(prefix)) = self.replicas[src].export_prefix(prompt) else { return };
-        let tokens = prefix.seg.len as u64;
-        if self.replicas[dst].import_prefix(prefix).unwrap_or(false) {
+        let mig = self.shared.mig_seq.fetch_add(1, Ordering::Relaxed) + 1;
+        self.cfg.tracer.record(Event::MigrationBegin { mig, src, dst });
+        let (seg, tokens, adopted) = match self.replicas[src].export_prefix(prompt) {
+            Ok(Some(prefix)) => {
+                let (seg, tokens) = (prefix.src_seg, prefix.seg.len);
+                let adopted = self.replicas[dst].import_prefix(prefix).unwrap_or(false);
+                (seg, tokens, adopted)
+            }
+            // cache off, no match, or the source died: nothing moved
+            _ => (0, 0, false),
+        };
+        if adopted {
             self.shared.migrations.fetch_add(1, Ordering::Relaxed);
-            self.shared.migrated_tokens.fetch_add(tokens, Ordering::Relaxed);
+            self.shared.migrated_tokens.fetch_add(tokens as u64, Ordering::Relaxed);
         }
+        self.cfg.tracer.record(Event::MigrationEnd { mig, src, dst, seg, tokens, adopted });
     }
 
     /// Cancel a request by id, routed to the owning replica via the id's
@@ -257,6 +410,31 @@ impl RouterHandle {
             migrations: self.shared.migrations.load(Ordering::Relaxed),
             migrated_tokens: self.shared.migrated_tokens.load(Ordering::Relaxed),
             shed: self.shared.shed.load(Ordering::Relaxed),
+            probe_rounds: self.shared.probe_rounds.load(Ordering::Relaxed),
+            digest_refreshes: self.shared.digest_refreshes.load(Ordering::Relaxed),
+            digest_hits: self.shared.digest_hits.load(Ordering::Relaxed),
+        })
+    }
+
+    /// The router's placement-side tracer (disabled unless
+    /// [`RouterConfig::tracer`] was built enabled).
+    pub fn tracer(&self) -> &Tracer {
+        &self.cfg.tracer
+    }
+
+    /// Snapshot the whole fleet's trace rings: the router's own ring plus
+    /// every replica's (fetched over the control channels, each consistent
+    /// between engine steps). Feed the result to
+    /// [`crate::obs::merge_fleet`] / [`crate::obs::fleet_jsonl`] for one
+    /// merged timeline — meaningful when every tracer shares one clock.
+    pub fn trace_fleet(&self) -> Result<FleetLog> {
+        Ok(FleetLog {
+            router: self.cfg.tracer.snapshot(),
+            replicas: self
+                .replicas
+                .iter()
+                .map(|h| h.trace_snapshot())
+                .collect::<Result<Vec<_>>>()?,
         })
     }
 
@@ -303,6 +481,25 @@ impl RouterHandle {
         reg.counter("puzzle_router_generated_tokens_total", "Tokens generated across all replicas.", agg.generated_tokens as f64);
         reg.counter("puzzle_router_prefix_hits_total", "Prefix-cache hits across all replicas.", agg.prefix_hits as f64);
         reg.counter("puzzle_router_prefix_misses_total", "Prefix-cache misses across all replicas.", agg.prefix_misses as f64);
+        reg.counter("puzzle_router_probe_rounds_total", "Placement probe rounds (one per submit attempt).", stats.probe_rounds as f64);
+        reg.counter("puzzle_router_digest_refreshes_total", "Per-replica control-channel probes paid.", stats.digest_refreshes as f64);
+        reg.counter("puzzle_router_digest_hits_total", "Per-replica probes served from the digest memo.", stats.digest_hits as f64);
+        if self.cfg.tracer.enabled() {
+            // fleet SLO monitor: fold every ring's finished requests into
+            // rolling goodput / burn-rate gauges at scrape time
+            let fleet = self.trace_fleet()?;
+            reg.counter(
+                "puzzle_trace_dropped_events",
+                "Trace events dropped fleet-wide (ring capacity exceeded).",
+                fleet.dropped() as f64,
+            );
+            let logs: Vec<_> = std::iter::once(&fleet.router).chain(fleet.replicas.iter()).collect();
+            let records = crate::obs::slo::fold_requests(&logs);
+            let profiles = crate::obs::slo::burn_profiles(self.cfg.tracer.is_virtual());
+            let rates =
+                crate::obs::slo::burn_rates(&records, &profiles, self.cfg.tracer.now_us());
+            crate::obs::slo::register_gauges(&mut reg, &rates);
+        }
         for (i, (s, m)) in stats.replicas.iter().zip(&metrics).enumerate() {
             let mut section = MetricsRegistry::new();
             let name = |field: &str| format!("puzzle_router_replica_{i}_{field}");

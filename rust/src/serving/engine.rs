@@ -404,6 +404,12 @@ pub struct Engine {
     /// Radix-tree prefix cache (`EngineConfig::prefix_cache`); dropped to
     /// `None` when off or when the backend cannot transfer KV rows.
     prefix: Option<PrefixCache>,
+    /// Bumped on every retained-set mutation (retain / evict / adopt).
+    /// The router caches each replica's probe answers keyed by this
+    /// digest: while it is unchanged, the radix tree's retained paths are
+    /// unchanged, so `prefix_probe` would return the same answer for the
+    /// same prompt (DESIGN.md §13).
+    prefix_generation: u64,
     events: Vec<StreamEvent>,
     /// Lifecycle tracer (cloned from the config; disabled = no-op).
     trace: Tracer,
@@ -470,6 +476,7 @@ impl Engine {
             execs,
             paged,
             prefix,
+            prefix_generation: 0,
             events: Vec::new(),
             trace,
             metrics: EngineMetrics::default(),
@@ -643,6 +650,15 @@ impl Engine {
         self.prefix.as_ref().map(|p| p.matched_len(prompt)).unwrap_or(0)
     }
 
+    /// Retained-set digest: a counter bumped on every retain, eviction,
+    /// and adoption. Two probes of the same prompt under the same
+    /// generation are guaranteed equal, so the router can cache probe
+    /// answers and skip the control-channel round-trip while this is
+    /// unchanged.
+    pub fn prefix_generation(&self) -> u64 {
+        self.prefix_generation
+    }
+
     // ---- cross-engine prefix migration (router; DESIGN.md §12) ----
 
     /// Package this engine's best retained match for `prompt` for
@@ -658,6 +674,7 @@ impl Engine {
         Some(MigratedPrefix {
             tokens: prompt[..hit.len].to_vec(),
             prompt_tokens: hit.len - hit.gen_tokens,
+            src_seg: hit.seg_id,
             seg,
         })
     }
@@ -709,6 +726,7 @@ impl Engine {
             self.prefix.as_mut().unwrap().remove(seg_id);
             return false;
         }
+        self.prefix_generation += 1;
         true
     }
 
@@ -1212,6 +1230,7 @@ impl Engine {
         let evicted = self.paged.evict_shared(id);
         debug_assert!(evicted, "unreferenced segment must evict cleanly");
         self.metrics.prefix_evictions += 1;
+        self.prefix_generation += 1;
         self.trace.record(Event::PrefixEvict { seg: id, tokens: seg_tokens });
         true
     }
@@ -1328,8 +1347,10 @@ impl Engine {
             Ok(Some(seg)) => seg,
             // backend keeps its caches out of reach (or failed mid-export):
             // disable the cache rather than fail the admitted request
+            // (every probe answer changes, so the digest must move too)
             Ok(None) | Err(_) => {
                 self.prefix = None;
+                self.prefix_generation += 1;
                 return;
             }
         };
@@ -1339,7 +1360,9 @@ impl Engine {
         debug_assert!(retained, "pool fit was just checked");
         if !retained {
             self.prefix.as_mut().unwrap().remove(seg_id);
+            return;
         }
+        self.prefix_generation += 1;
     }
 
     /// The budgeted prefill-chunk phase of `step()` (no-op without

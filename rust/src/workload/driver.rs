@@ -16,6 +16,12 @@
 //! the identical rule, which is what makes its transcripts comparable
 //! against this driver's byte-for-byte — single engine or routed fleet
 //! alike.
+//!
+//! The same virtual clock doubles as a fleet timebase: sharing one
+//! `Arc<Clock>` across the router's and every replica's tracer
+//! (`Tracer::with_clock`) makes the merged trace (`obs::merge_fleet`)
+//! deterministic down to the byte, which is how the fleet-trace tests
+//! pin exact span tilings without touching wall time.
 
 use std::collections::HashMap;
 use std::fmt::Write as _;

@@ -31,6 +31,15 @@
 //! The report emitter therefore carries both absolute numbers (for
 //! humans) and *relative* comparisons (chunked vs unchunked, routed vs
 //! single-replica — the only things CI gates).
+//!
+//! To trace a wall replay fleet-wide, build the router's tracer and every
+//! replica engine's tracer over **one shared clock**
+//! (`Tracer::with_clock` on a single `Arc<Clock>`): all rings then stamp
+//! the same timebase and `obs::merge_fleet` can stitch a request's
+//! `routed` record (router ring) to its `submitted`/`admitted`/tokens
+//! (replica ring) into a tiled cross-process lifecycle. Tracing observes,
+//! never steers — the byte-identity witness above holds with rings on or
+//! off, which `bench-router --trace-out` re-asserts on every CI run.
 
 use std::time::{Duration, Instant};
 

@@ -1,0 +1,310 @@
+//! End-to-end fleet tracing (`DESIGN.md §13`): a live 4-replica router
+//! with router + replica rings over one shared clock must merge into a
+//! single Chrome-trace timeline whose stitched per-request tracks tile
+//! their lifecycle exactly; identical virtual-clock replays must produce
+//! identical rings (modulo the worker's control-triggered idle steps,
+//! whose count is scheduling-dependent by design); and the router's
+//! Prometheus scrape must carry the ring-loss counter and the live SLO
+//! burn-rate gauges folded from those rings. `Engine: Send` is required,
+//! so this crate compiles only on the default (non-pjrt) backend build.
+#![cfg(not(feature = "pjrt"))]
+
+use std::sync::Arc;
+
+use puzzle::arch::Arch;
+use puzzle::obs::{
+    fleet_jsonl, merge_fleet, scrape_value, Clock, Event, FleetLog, Rec, TraceLog, Tracer,
+    DEFAULT_RING_CAP,
+};
+use puzzle::runtime::{share, SharedBackend};
+use puzzle::server::{Router, RouterConfig, RouterHandle, REPLICA_SHIFT};
+use puzzle::serving::{Engine, EngineConfig, GenRequest};
+use puzzle::util::{Json, Rng};
+use puzzle::weights::store::init_parent;
+use puzzle::weights::Store;
+
+/// Matches the (private) exporter constant: per-request tracks start here.
+const TID_REQ_BASE: u64 = 1_000;
+
+fn backend() -> SharedBackend {
+    share(puzzle::runtime::RefBackend::tiny())
+}
+
+fn replica_cfg() -> EngineConfig {
+    EngineConfig::new()
+        .kv_budget_bytes(16 << 20)
+        .page_len(4)
+        .max_queue(1024)
+        .prefix_cache(true, 8 << 20)
+}
+
+/// A router over `n` replicas whose every ring shares `clock`.
+fn traced_fleet(
+    be: &SharedBackend,
+    store: &Store,
+    arch: &Arch,
+    n: usize,
+    clock: &Arc<Clock>,
+) -> Router {
+    let engines: Vec<Engine> = (0..n)
+        .map(|_| {
+            replica_cfg()
+                .tracer(Tracer::with_clock(clock.clone(), DEFAULT_RING_CAP))
+                .build(be.clone(), store, arch)
+                .unwrap()
+        })
+        .collect();
+    let rcfg = RouterConfig {
+        tracer: Tracer::with_clock(clock.clone(), DEFAULT_RING_CAP),
+        ..RouterConfig::default()
+    };
+    Router::spawn(engines, rcfg)
+}
+
+fn snapshot_fleet(h: &RouterHandle) -> FleetLog {
+    h.trace_fleet().unwrap()
+}
+
+#[test]
+fn four_replica_merged_trace_stitches_and_tiles_exactly() {
+    // the acceptance artifact, produced live: 4 traced replicas behind a
+    // traced router on one wall clock, a concurrent burst of requests,
+    // one merged timeline. Every routed request must appear as a pid-0
+    // track whose placement + queued + prefill + decode children tile
+    // the enclosing span to the microsecond, stitched to a request span
+    // on the owning replica's own pid by the global id.
+    let be = backend();
+    let mut rng = Rng::new(101);
+    let store = init_parent(be.man(), &mut rng);
+    let arch = Arch::parent(be.man().cfg.n_layers);
+    let clock = Arc::new(Clock::wall());
+    let router = traced_fleet(&be, &store, &arch, 4, &clock);
+    let h = router.handle();
+
+    // a concurrent burst so placement has in-flight depth to spread on
+    let streams: Vec<_> = (0..8u32)
+        .map(|i| {
+            h.submit(GenRequest::new(vec![1, 2 + i, 3 + i, 4 + i, 5 + i, 6 + i], 8)).unwrap()
+        })
+        .collect();
+    let n_requests = streams.len();
+    for s in streams {
+        let (_, finish) = s.collect();
+        assert!(finish.is_some(), "every request must reach a terminal item");
+    }
+
+    let fleet = snapshot_fleet(&h);
+    let stats = h.stats().unwrap();
+    drop(h);
+    router.shutdown();
+
+    assert_eq!(stats.total_routed(), n_requests as u64);
+    assert_eq!(fleet.replicas.len(), 4);
+    assert_eq!(fleet.dropped(), 0, "the burst fits the default rings");
+
+    let doc = merge_fleet(&fleet);
+    let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    let pname = |pid: f64| {
+        evs.iter()
+            .find(|e| {
+                e.get("name").unwrap().as_str() == Some("process_name")
+                    && e.get("pid").unwrap().as_f64() == Some(pid)
+            })
+            .map(|e| e.get("args").unwrap().get("name").unwrap().as_str().unwrap().to_string())
+    };
+    assert_eq!(pname(0.0).as_deref(), Some("puzzle-router"));
+    for r in 0..4 {
+        assert_eq!(pname((r + 1) as f64).as_deref(), Some(&*format!("puzzle-replica-{r}")));
+    }
+
+    // one routed instant per request, all on the router's routing track
+    let routed: Vec<&Json> =
+        evs.iter().filter(|e| e.get("name").unwrap().as_str() == Some("routed")).collect();
+    assert_eq!(routed.len(), n_requests);
+    for e in &routed {
+        assert_eq!(e.get("pid").unwrap().as_f64(), Some(0.0));
+        assert_eq!(e.get("tid").unwrap().as_f64(), Some(0.0));
+    }
+
+    // every stitched pid-0 request track tiles exactly and resolves to a
+    // request span on its replica's pid
+    let pid0_reqs: Vec<&Json> = evs
+        .iter()
+        .filter(|e| {
+            e.get("pid").unwrap().as_f64() == Some(0.0)
+                && e.get("name").unwrap().as_str() == Some("request")
+        })
+        .collect();
+    assert_eq!(pid0_reqs.len(), n_requests, "every routed request gets a fleet track");
+    for req in pid0_reqs {
+        let tid = req.get("tid").unwrap().as_f64().unwrap();
+        let (r0, rdur) =
+            (req.get("ts").unwrap().as_f64().unwrap(), req.get("dur").unwrap().as_f64().unwrap());
+        let args = req.get("args").unwrap();
+        let gid = args.get("id").unwrap().as_f64().unwrap() as u64;
+        let rep = args.get("replica").unwrap().as_f64().unwrap() as u64;
+        assert_eq!(gid >> REPLICA_SHIFT, rep, "the global id encodes its replica");
+        assert_eq!(tid, (TID_REQ_BASE + gid) as f64);
+        let mut cursor = r0;
+        for stage in ["placement", "queued", "prefill", "decode"] {
+            let s = evs
+                .iter()
+                .find(|e| {
+                    e.get("pid").unwrap().as_f64() == Some(0.0)
+                        && e.get("tid").unwrap().as_f64() == Some(tid)
+                        && e.get("name").unwrap().as_str() == Some(stage)
+                })
+                .unwrap_or_else(|| panic!("request {gid} lacks its {stage} span"));
+            assert_eq!(s.get("ts").unwrap().as_f64(), Some(cursor), "{stage} must start flush");
+            cursor += s.get("dur").unwrap().as_f64().unwrap();
+        }
+        assert_eq!(cursor, r0 + rdur, "the four stages must tile e2e exactly");
+        // cross-pid stitch: the owning replica carries the same id
+        assert!(
+            evs.iter().any(|e| e.get("pid").unwrap().as_f64() == Some((rep + 1) as f64)
+                && e.get("tid").unwrap().as_f64() == Some((TID_REQ_BASE + gid) as f64)
+                && e.get("name").unwrap().as_str() == Some("request")),
+            "request {gid} has no replica-side track on pid {}",
+            rep + 1
+        );
+    }
+}
+
+/// Drop the control-triggered `step` records whose *count* (not content)
+/// depends on how the worker's message batches land relative to its idle
+/// steps — the one scheduling artifact in an otherwise deterministic ring.
+fn without_steps(log: &TraceLog) -> TraceLog {
+    TraceLog {
+        recs: log
+            .recs
+            .iter()
+            .filter(|r| !matches!(r.ev, Event::Step { .. }))
+            .cloned()
+            .collect(),
+        dropped: log.dropped,
+    }
+}
+
+#[test]
+fn virtual_clock_fleet_rings_replay_byte_identically() {
+    // the determinism contract behind the CI fleet gate: two identical
+    // sequential replays on the shared virtual clock produce the same
+    // router ring record-for-record and the same replica lifecycles, so
+    // the merged JSONL is byte-identical.
+    let be = backend();
+    let mut rng = Rng::new(102);
+    let store = init_parent(be.man(), &mut rng);
+    let arch = Arch::parent(be.man().cfg.n_layers);
+    let shared: Vec<u32> = vec![1, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14];
+    let prompts: Vec<Vec<u32>> = vec![
+        [shared.clone(), vec![20, 21, 22]].concat(),
+        [shared.clone(), vec![23, 24, 25]].concat(),
+        vec![2, 40, 41, 42, 43, 44, 45, 46],
+        [shared.clone(), vec![26, 27, 28]].concat(),
+    ];
+
+    let run = || {
+        let clock = Arc::new(Clock::virtual_ticks());
+        let router = traced_fleet(&be, &store, &arch, 2, &clock);
+        let h = router.handle();
+        for (k, p) in prompts.iter().enumerate() {
+            // one tick per request phase; the full collect settles the
+            // fleet before the clock moves, so every record of phase k
+            // is stamped k on whichever thread wrote it
+            clock.set_tick(k as u64);
+            let s = h.submit(GenRequest::new(p.clone(), 6)).unwrap();
+            assert!(s.collect().1.is_some());
+        }
+        let fleet = snapshot_fleet(&h);
+        drop(h);
+        router.shutdown();
+        fleet
+    };
+
+    let (a, b) = (run(), run());
+    assert_eq!(a.router.recs, b.router.recs, "router rings must replay byte-identically");
+    assert_eq!(a.replicas.len(), b.replicas.len());
+    for (ra, rb) in a.replicas.iter().zip(&b.replicas) {
+        assert_eq!(
+            without_steps(ra).recs,
+            without_steps(rb).recs,
+            "replica lifecycles must replay byte-identically"
+        );
+    }
+    let strip = |f: &FleetLog| FleetLog {
+        router: f.router.clone(),
+        replicas: f.replicas.iter().map(without_steps).collect(),
+    };
+    assert_eq!(
+        fleet_jsonl(&strip(&a)),
+        fleet_jsonl(&strip(&b)),
+        "the merged fleet JSONL must be byte-stable across replays"
+    );
+
+    // the router ring really carries the fleet grammar
+    let routed: Vec<&Rec> =
+        a.router.recs.iter().filter(|r| matches!(r.ev, Event::Routed { .. })).collect();
+    assert_eq!(routed.len(), prompts.len());
+    for (k, r) in routed.iter().enumerate() {
+        assert_eq!(r.ts_us, (k as u64) * puzzle::obs::TICK_US, "routed at its phase tick");
+    }
+}
+
+#[test]
+fn fleet_scrape_exposes_ring_loss_and_burn_gauges() {
+    // the live monitor: a traced fleet's scrape must carry the ring-loss
+    // counter and, folded from the rings at scrape time, per-profile
+    // windowed goodput and burn-rate gauges with the finished requests
+    // in-window.
+    let be = backend();
+    let mut rng = Rng::new(103);
+    let store = init_parent(be.man(), &mut rng);
+    let arch = Arch::parent(be.man().cfg.n_layers);
+    let clock = Arc::new(Clock::virtual_ticks());
+    let router = traced_fleet(&be, &store, &arch, 2, &clock);
+    let h = router.handle();
+
+    // ticks start at 1: the scrape window predicate is half-open
+    // (`finish_us > now - window`), so with `now` inside the first window
+    // the lower bound saturates to 0 and a request finishing at tick 0
+    // would fall on the excluded boundary
+    for k in 1..=3u64 {
+        clock.set_tick(k);
+        let s = h.submit(GenRequest::new(vec![1, 10 + k as u32, 11, 12, 13, 14], 6)).unwrap();
+        assert!(s.collect().1.is_some());
+    }
+
+    let text = h.metrics_text().unwrap();
+    drop(h);
+    router.shutdown();
+
+    assert_eq!(
+        scrape_value(&text, "puzzle_trace_dropped_events"),
+        Some(0.0),
+        "ring loss must be scrapable (and zero here)"
+    );
+    assert_eq!(
+        scrape_value(&text, "puzzle_slo_window_requests_1m"),
+        Some(3.0),
+        "all three finishes land inside the short window"
+    );
+    for profile in ["lenient", "strict"] {
+        for window in ["1m", "5m"] {
+            let goodput = scrape_value(&text, &format!("puzzle_slo_{profile}_goodput_{window}"))
+                .unwrap_or_else(|| panic!("missing {profile}/{window} goodput gauge"));
+            assert!((0.0..=1.0).contains(&goodput));
+            let burn = scrape_value(&text, &format!("puzzle_slo_{profile}_burn_rate_{window}"))
+                .unwrap_or_else(|| panic!("missing {profile}/{window} burn gauge"));
+            assert!(burn >= 0.0);
+        }
+    }
+    // same-tick submit/first-token/finish: TTFT and every gap are 0 µs,
+    // so even the strict profile is met and nothing burns
+    assert_eq!(scrape_value(&text, "puzzle_slo_strict_goodput_1m"), Some(1.0));
+    assert_eq!(scrape_value(&text, "puzzle_slo_strict_burn_rate_1m"), Some(0.0));
+    assert_eq!(
+        scrape_value(&text, "puzzle_router_probe_rounds_total"),
+        Some(3.0),
+        "one placement round per request"
+    );
+}

@@ -274,3 +274,44 @@ fn metrics_text_round_trips_over_the_control_channel() {
     assert!(text.contains("# TYPE puzzle_ttft_seconds histogram"));
     assert!(scrape_value(&text, "puzzle_ttft_seconds_count").unwrap_or(0.0) >= 2.0);
 }
+
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn traced_scrape_carries_ring_loss_and_single_ring_slo_gauges() {
+    use puzzle::obs::scrape_value;
+    use puzzle::server::AsyncServer;
+
+    let (be, store, arch, _) = setup();
+    let eng = engine_cfg(true)
+        .tracer(Tracer::wall(DEFAULT_RING_CAP))
+        .build(be.clone(), &store, &arch)
+        .unwrap();
+    let server = AsyncServer::spawn(eng);
+    let handle = server.handle();
+    for i in 0..2u32 {
+        let stream = handle.submit(GenRequest::new(vec![1, 2 + i, 3, 4, 5], 5)).unwrap();
+        assert!(stream.collect().1.is_some());
+    }
+    let text = handle.metrics_text().unwrap();
+    drop(handle);
+    server.shutdown();
+
+    assert_eq!(
+        scrape_value(&text, "puzzle_trace_dropped_events"),
+        Some(0.0),
+        "a traced engine's scrape must expose the ring-loss counter"
+    );
+    assert_eq!(
+        scrape_value(&text, "puzzle_slo_window_requests_1m"),
+        Some(2.0),
+        "both finishes fold into the short burn window at scrape time"
+    );
+    // wall profiles on a wall tracer; a tiny hermetic engine finishes
+    // far inside the 30 s lenient TTFT budget
+    assert_eq!(scrape_value(&text, "puzzle_slo_wall_lenient_goodput_1m"), Some(1.0));
+    assert_eq!(scrape_value(&text, "puzzle_slo_wall_lenient_burn_rate_1m"), Some(0.0));
+    assert!(
+        scrape_value(&text, "puzzle_slo_wall_strict_burn_rate_5m").is_some(),
+        "every profile/window pair must render"
+    );
+}

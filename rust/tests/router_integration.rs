@@ -11,10 +11,12 @@
 #![cfg(not(feature = "pjrt"))]
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 use std::time::Duration;
 
 use puzzle::arch::{Arch, AttnChoice, FfnChoice};
 use puzzle::bld;
+use puzzle::obs::{Clock, Event, Tracer, DEFAULT_RING_CAP};
 use puzzle::runtime::{share, Backend, SharedBackend};
 use puzzle::server::{AsyncServer, Router, RouterConfig, RouterHandle, REPLICA_SHIFT};
 use puzzle::serving::{Engine, EngineConfig, GenRequest};
@@ -181,7 +183,7 @@ fn overloaded_hot_replica_migrates_its_prefix_and_stays_byte_identical() {
     let mut rng = Rng::new(93);
     let store = init_parent(be.man(), &mut rng);
     let arch = Arch::parent(cfg.n_layers);
-    let rcfg = RouterConfig { overload: 1, min_migrate: 1 };
+    let rcfg = RouterConfig { overload: 1, min_migrate: 1, ..RouterConfig::default() };
     let router = Router::spawn(build_engines(&be, &store, &arch, 4), rcfg);
     let h = router.handle();
 
@@ -335,8 +337,10 @@ fn mid_migration_cancel_leaks_no_pages_on_either_replica() {
     let mut rng = Rng::new(95);
     let store = init_parent(be.man(), &mut rng);
     let arch = Arch::parent(cfg.n_layers);
-    let router =
-        Router::spawn(build_engines(&be, &store, &arch, 2), RouterConfig { overload: 1, min_migrate: 1 });
+    let router = Router::spawn(
+        build_engines(&be, &store, &arch, 2),
+        RouterConfig { overload: 1, min_migrate: 1, ..RouterConfig::default() },
+    );
     let h = router.handle();
 
     let shared: Vec<u32> = vec![1, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14];
@@ -379,6 +383,209 @@ fn mid_migration_cancel_leaks_no_pages_on_either_replica() {
         assert_eq!(e.kv_active_seqs(), 0, "replica {i}: no sequence may still hold pages");
         assert_eq!(e.kv_allocated_bytes(), e.prefix_retained_bytes());
     }
+}
+
+#[test]
+fn fleet_tracing_observes_without_steering() {
+    // the observability contract at fleet scope: turning on router +
+    // replica tracers (one shared wall clock, the serve/bench wiring)
+    // must not change a single generated token, and the router's ring
+    // must actually have seen the placements it claims to observe.
+    let be = backend();
+    let cfg = be.man().cfg.clone();
+    let mut rng = Rng::new(97);
+    let store = init_parent(be.man(), &mut rng);
+    let arch = Arch::parent(cfg.n_layers);
+    let trace = TraceSpec::bursty(MixKind::Shared, 31).generate(cfg.v as u32, cfg.s_prefill, cfg.s_max);
+
+    let untraced = {
+        let router = Router::spawn(build_engines(&be, &store, &arch, 2), RouterConfig::default());
+        let h = router.handle();
+        let run = replay_wall(&trace, &h, Duration::from_millis(1), "untraced");
+        drop(h);
+        router.shutdown();
+        transcript_of(&run.records)
+    };
+
+    let clock = Arc::new(Clock::wall());
+    let engines: Vec<Engine> = (0..2)
+        .map(|_| {
+            replica_cfg()
+                .tracer(Tracer::with_clock(clock.clone(), DEFAULT_RING_CAP))
+                .build(be.clone(), &store, &arch)
+                .unwrap()
+        })
+        .collect();
+    let rcfg = RouterConfig {
+        tracer: Tracer::with_clock(clock.clone(), DEFAULT_RING_CAP),
+        ..RouterConfig::default()
+    };
+    let router = Router::spawn(engines, rcfg);
+    let h = router.handle();
+    let run = replay_wall(&trace, &h, Duration::from_millis(1), "traced");
+    let fleet = h.trace_fleet().unwrap();
+    let stats = h.stats().unwrap();
+    drop(h);
+    router.shutdown();
+
+    assert_eq!(transcript_of(&run.records), untraced, "tracing must never steer sampling");
+    assert_eq!(fleet.replicas.len(), 2);
+    assert_eq!(fleet.dropped(), 0, "this workload fits the default ring");
+    let routed = fleet
+        .router
+        .recs
+        .iter()
+        .filter(|r| matches!(r.ev, Event::Routed { .. }))
+        .count() as u64;
+    assert_eq!(routed, stats.total_routed(), "one Routed record per accepted request");
+    let rounds = fleet
+        .router
+        .recs
+        .iter()
+        .filter(|r| matches!(r.ev, Event::ProbeRound { .. }))
+        .count() as u64;
+    assert_eq!(rounds, stats.probe_rounds, "one ProbeRound record per placement round");
+    assert!(
+        fleet.replicas.iter().all(|l| !l.recs.is_empty()),
+        "every replica ring saw its share of the lifecycle"
+    );
+}
+
+#[test]
+fn migration_spans_pair_exactly_and_adopted_ends_match_stats() {
+    // the warm/pin/spill scenario with the router's ring on: every
+    // MigrationBegin must have its MigrationEnd (same ordinal, same
+    // src/dst), and the ends that report an adopted segment must count
+    // exactly what RouterStats.migrations counts.
+    let be = backend();
+    let mut rng = Rng::new(98);
+    let store = init_parent(be.man(), &mut rng);
+    let arch = Arch::parent(be.man().cfg.n_layers);
+    let rcfg = RouterConfig {
+        overload: 1,
+        min_migrate: 1,
+        tracer: Tracer::wall(DEFAULT_RING_CAP),
+        ..RouterConfig::default()
+    };
+    let router = Router::spawn(build_engines(&be, &store, &arch, 2), rcfg);
+    let h = router.handle();
+
+    let shared: Vec<u32> = vec![1, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14];
+    let with_tail = |tail: &[u32]| {
+        let mut p = shared.clone();
+        p.extend_from_slice(tail);
+        p
+    };
+    let warm = h.submit(GenRequest::new(with_tail(&[20, 21, 22]), 6)).unwrap();
+    assert!(warm.collect().1.is_some());
+    let pin = h.submit(GenRequest::new(with_tail(&[23, 24, 25]), 24)).unwrap();
+    assert_eq!(pin.id() >> REPLICA_SHIFT, 0);
+    let spill = h.submit(GenRequest::new(with_tail(&[26, 27, 28]), 6)).unwrap();
+    assert_eq!(spill.id() >> REPLICA_SHIFT, 1);
+    assert!(spill.collect().1.is_some());
+    assert!(pin.collect().1.is_some());
+
+    let stats = h.stats().unwrap();
+    let log = h.tracer().snapshot();
+    drop(h);
+    router.shutdown();
+
+    assert_eq!(stats.migrations, 1);
+    let begins: BTreeMap<u64, (usize, usize)> = log
+        .recs
+        .iter()
+        .filter_map(|r| match r.ev {
+            Event::MigrationBegin { mig, src, dst } => Some((mig, (src, dst))),
+            _ => None,
+        })
+        .collect();
+    let ends: Vec<(u64, usize, usize, bool)> = log
+        .recs
+        .iter()
+        .filter_map(|r| match r.ev {
+            Event::MigrationEnd { mig, src, dst, adopted, .. } => Some((mig, src, dst, adopted)),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(begins.len(), ends.len(), "every migration begin must be closed");
+    for (mig, src, dst, _) in &ends {
+        assert_eq!(
+            begins.get(mig),
+            Some(&(*src, *dst)),
+            "end {mig} must close a begin with the same src/dst"
+        );
+    }
+    let adopted = ends.iter().filter(|(_, _, _, a)| *a).count() as u64;
+    assert_eq!(adopted, stats.migrations, "adopted span ends ARE the migration counter");
+    let tokens_moved: u64 = log
+        .recs
+        .iter()
+        .filter_map(|r| match r.ev {
+            Event::MigrationEnd { tokens, adopted: true, .. } => Some(tokens as u64),
+            _ => None,
+        })
+        .sum();
+    assert_eq!(tokens_moved, stats.migrated_tokens, "span payloads tally the token counter");
+}
+
+#[test]
+fn digest_cached_probing_places_like_always_probing() {
+    // satellite acceptance: with sequential submits (loads settled
+    // between requests) the digest memo must produce byte-identical
+    // placements to paying a channel probe every round — while actually
+    // serving some probes from the cache.
+    let be = backend();
+    let mut rng = Rng::new(99);
+    let store = init_parent(be.man(), &mut rng);
+    let arch = Arch::parent(be.man().cfg.n_layers);
+    let shared: Vec<u32> = vec![1, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14];
+    let prompts: Vec<Vec<u32>> = vec![
+        [shared.clone(), vec![20, 21, 22]].concat(),
+        [shared.clone(), vec![23, 24, 25]].concat(),
+        vec![2, 40, 41, 42, 43, 44, 45, 46],
+        [shared.clone(), vec![26, 27, 28]].concat(),
+        vec![2, 40, 41, 42, 43, 44, 45, 46], // exact repeat: memo-friendly
+        [shared.clone(), vec![29, 30, 31]].concat(),
+    ];
+
+    let run = |probe_cache: bool| {
+        let rcfg = RouterConfig { probe_cache, ..RouterConfig::default() };
+        let router = Router::spawn(build_engines(&be, &store, &arch, 3), rcfg);
+        let h = router.handle();
+        let mut landings = Vec::new();
+        let mut streams = BTreeMap::new();
+        for p in &prompts {
+            let s = h.submit(GenRequest::new(p.clone(), 6)).unwrap();
+            landings.push((s.id() >> REPLICA_SHIFT) as usize);
+            // full collect settles the replica's published load + digest
+            // before the next placement decision
+            let (tokens, finish) = s.collect();
+            assert!(finish.is_some());
+            streams.insert(landings.len(), tokens);
+        }
+        let stats = h.stats().unwrap();
+        drop(h);
+        router.shutdown();
+        (landings, streams, stats)
+    };
+
+    let (paid_landings, paid_streams, paid) = run(false);
+    let (memo_landings, memo_streams, memo) = run(true);
+    assert_eq!(memo_landings, paid_landings, "the memo must never change a placement");
+    assert_eq!(memo_streams, paid_streams, "or a token");
+    assert_eq!(paid.digest_hits, 0, "probe_cache=false always pays the channel probe");
+    assert_eq!(
+        paid.digest_refreshes,
+        (prompts.len() * 3) as u64,
+        "every probe of every round goes over the channel"
+    );
+    assert!(memo.digest_hits > 0, "repeated prompts against idle replicas hit the memo");
+    assert_eq!(
+        memo.digest_hits + memo.digest_refreshes,
+        (prompts.len() * 3) as u64,
+        "every probe is either paid or served from the memo"
+    );
+    assert_eq!(memo.probe_rounds, prompts.len() as u64);
 }
 
 #[test]

@@ -1,0 +1,595 @@
+#!/usr/bin/env python3
+"""Toolchain-free cross-check of the fleet-tracing stack (DESIGN.md §13).
+
+Three parts, stdlib only:
+
+1. A transcription of `merge_fleet` / `emit_log_tracks` (rust/src/obs/
+   export.rs) and `request_spans` / `merge_logs` (rust/src/obs/trace.rs)
+   builds the export.rs unit tests' two-replica `sample_fleet` scenario
+   (plus one engine-step record so the validator's liveness check is
+   satisfiable) and replays the Rust tests' structural expectations
+   against the generated document, plus exact numeric anchors for the
+   stitched pid-0 tracks.
+2. `verify_trace.py --fleet` self-test: the generated document must be
+   accepted (with --expect-prefix-hit and --expect-migration), and ten
+   targeted corruptions must each be rejected with the *intended*
+   diagnostic, not an incidental one.
+3. A transcription of `obs::slo` (fold_requests, burn_rates,
+   burn_profiles) replays every slo.rs unit-test expectation, pins the
+   window boundary semantics (`finish == now - window` excluded,
+   `finish == now` included), and fuzzes fold_requests against directly
+   generated request boundaries over 5 seeds.
+
+Exit 0 and a summary on success; the first mismatch raises.
+"""
+
+import copy
+import json
+import os
+import random
+import subprocess
+import sys
+import tempfile
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+VERIFY = os.path.join(HERE, "verify_trace.py")
+
+TICK = 1000  # TICK_US
+TID_REQ_BASE = 1000
+REPLICA_SHIFT = 48
+
+# ---------------------------------------------------------------------------
+# trace.rs transcription: request_spans / merge_logs over (ts, ev-dict) recs
+# ---------------------------------------------------------------------------
+
+LIFE_EVS = ("submitted", "admitted", "first_token", "finished", "routed")
+
+
+def request_spans(recs):
+    order, spans = [], {}
+    for ts, ev in recs:
+        if ev["ev"] not in LIFE_EVS:
+            continue
+        rid = ev["id"]
+        if rid not in spans:
+            order.append(rid)
+            spans[rid] = {
+                "id": rid, "route_us": None, "replica": None, "submit_us": ts,
+                "admit_us": None, "first_us": None, "finish_us": None,
+                "lane": None, "hit": False, "matched": 0, "reason": None,
+                "tokens": 0,
+            }
+        s = spans[rid]
+        k = ev["ev"]
+        if k == "submitted":
+            s["submit_us"] = ts
+        elif k == "routed":
+            s["route_us"] = ts
+            s["replica"] = ev["replica"]
+        elif k == "admitted":
+            s["admit_us"] = ts
+            s["lane"] = ev["lane"]
+            s["hit"] = ev["hit"]
+            s["matched"] = ev["matched"]
+        elif k == "first_token":
+            if s["first_us"] is None:
+                s["first_us"] = ts
+        elif k == "finished":
+            s["finish_us"] = ts
+            s["reason"] = ev["reason"]
+            s["tokens"] = ev["tokens"]
+    return [spans[i] for i in order]
+
+
+def merge_logs(rings):
+    recs = [r for ring in rings for r in ring]
+    recs.sort(key=lambda r: r[0])  # python sort is stable: ring order on ties
+    return recs
+
+
+# ---------------------------------------------------------------------------
+# export.rs transcription: merge_fleet / emit_log_tracks
+# ---------------------------------------------------------------------------
+
+def ev_base(name, ph, ts, pid, tid):
+    return {"name": name, "ph": ph, "ts": ts, "pid": pid, "tid": tid}
+
+
+def complete(name, ts, dur, pid, tid, args):
+    e = ev_base(name, "X", ts, pid, tid)
+    e["dur"] = dur
+    e["args"] = args
+    return e
+
+
+def instant(name, ts, pid, tid, args):
+    e = ev_base(name, "i", ts, pid, tid)
+    e["s"] = "t"
+    e["args"] = args
+    return e
+
+
+def thread_name(pid, tid, name):
+    e = ev_base("thread_name", "M", 0, pid, tid)
+    e["args"] = {"name": name}
+    return e
+
+
+def process_name(pid, name):
+    e = ev_base("process_name", "M", 0, pid, 0)
+    e["args"] = {"name": name}
+    return e
+
+
+def emit_log_tracks(events, recs, dropped, pid, t0):
+    rb = lambda ts: max(ts - t0, 0)
+    last_ts = max((rb(ts) for ts, _ in recs), default=0)
+    lanes = []
+    for _, ev in recs:
+        if ev["ev"] in ("prefill_chunk", "spec_round") and ev["lane"] not in lanes:
+            lanes.append(ev["lane"])
+    lanes.sort()
+    spans = request_spans(recs)
+
+    events.append(thread_name(pid, 0, "engine steps"))
+    for l in lanes:
+        events.append(thread_name(pid, 100 + l, f"lane{l}"))
+    for s in spans:
+        events.append(thread_name(pid, TID_REQ_BASE + s["id"], f"req{s['id']}"))
+
+    engine = []
+    if dropped > 0:
+        engine.append((0, 1, instant("ring_dropped", 0, pid, 0, {"count": dropped})))
+    for ts, ev in recs:
+        if ev["ev"] == "step":
+            engine.append((rb(ts), 0, complete(
+                "step", rb(ts), max(ev["dur_us"], 1), pid, 0,
+                {"step": ev["step"], "active": ev["active"], "queued": ev["queued"]})))
+        elif ev["ev"] == "rejected":
+            engine.append((rb(ts), 1, instant(
+                "rejected", rb(ts), pid, 0, {"id": ev["id"], "cause": ev["cause"]})))
+    engine.sort(key=lambda t: (t[0], t[1]))
+    events.extend(e for _, _, e in engine)
+
+    for l in lanes:
+        for ts, ev in recs:
+            if ev["ev"] == "prefill_chunk" and ev["lane"] == l:
+                events.append(instant("prefill_chunk", rb(ts), pid, 100 + l,
+                                      {"id": ev["id"], "tokens": ev["tokens"]}))
+            elif ev["ev"] == "spec_round" and ev["lane"] == l:
+                events.append(instant("spec_round", rb(ts), pid, 100 + l,
+                                      {"id": ev["id"], "drafted": ev["drafted"],
+                                       "accepted": ev["accepted"],
+                                       "rolled_back": ev["rolled_back"]}))
+
+    for s in spans:
+        tid = TID_REQ_BASE + s["id"]
+        submit = rb(s["submit_us"])
+        end = max(rb(s["finish_us"]) if s["finish_us"] is not None else last_ts, submit)
+        args = {"id": s["id"], "hit": s["hit"], "matched": s["matched"],
+                "tokens": s["tokens"]}
+        if s["reason"] is not None:
+            args["reason"] = s["reason"]
+        events.append(complete("request", submit, end - submit, pid, tid, args))
+        if s["admit_us"] is not None:
+            a = rb(s["admit_us"])
+            events.append(complete("queued", submit, a - submit, pid, tid, {}))
+            if s["first_us"] is not None:
+                f = rb(s["first_us"])
+                events.append(complete("prefill", a, f - a, pid, tid, {}))
+                if s["finish_us"] is not None:
+                    e = rb(s["finish_us"])
+                    events.append(complete("decode", f, e - f, pid, tid, {}))
+
+
+def merge_fleet(router, replicas, router_dropped=0):
+    all_ts = [ts for ts, _ in router] + [ts for ring in replicas for ts, _ in ring]
+    t0 = min(all_ts, default=0)
+    rb = lambda ts: max(ts - t0, 0)
+    events = [process_name(0, "puzzle-router")]
+    for r in range(len(replicas)):
+        events.append(process_name(r + 1, f"puzzle-replica-{r}"))
+    events.append(thread_name(0, 0, "routing"))
+
+    if router_dropped > 0:
+        events.append(instant("ring_dropped", 0, 0, 0, {"count": router_dropped}))
+    line = []
+    for ts, ev in router:
+        if ev["ev"] == "routed":
+            line.append((rb(ts), instant("routed", rb(ts), 0, 0, {
+                "id": ev["id"], "replica": ev["replica"], "matched": ev["matched"],
+                "depth": ev["depth"], "reason": ev["reason"],
+                "probes": " ".join(f"{m}/{d}" for m, d in ev["probes"])})))
+        elif ev["ev"] == "router_shed":
+            line.append((rb(ts), instant("router_shed", rb(ts), 0, 0,
+                                         {"replicas": ev["replicas"]})))
+        elif ev["ev"] == "probe_round":
+            line.append((rb(ts), instant("probe_round", rb(ts), 0, 0,
+                                         {"probed": ev["probed"], "cached": ev["cached"]})))
+    line.sort(key=lambda t: t[0])
+    events.extend(e for _, e in line)
+
+    begins, migrations = {}, []
+    for ts, ev in router:
+        if ev["ev"] == "migration_begin":
+            begins[ev["mig"]] = rb(ts)
+        elif ev["ev"] == "migration_end":
+            if ev["mig"] not in begins:
+                continue
+            start = begins.pop(ev["mig"])
+            migrations.append((start, complete("migration", start, rb(ts) - start, 0, 1, {
+                "mig": ev["mig"], "src": ev["src"], "dst": ev["dst"], "seg": ev["seg"],
+                "tokens": ev["tokens"], "adopted": ev["adopted"]})))
+    for mig, ts in sorted(begins.items()):
+        migrations.append((ts, instant("migration_unpaired", ts, 0, 1, {"mig": mig})))
+    if migrations:
+        events.append(thread_name(0, 1, "migrations"))
+        migrations.sort(key=lambda t: t[0])
+        events.extend(e for _, e in migrations)
+
+    merged = merge_logs([router] + replicas)
+    last_ts = max((rb(ts) for ts, _ in merged), default=0)
+    for s in request_spans(merged):
+        if s["route_us"] is None:
+            continue
+        route = rb(s["route_us"])
+        tid = TID_REQ_BASE + s["id"]
+        events.append(thread_name(0, tid, f"req{s['id']}"))
+        end = max(rb(s["finish_us"]) if s["finish_us"] is not None else last_ts, route)
+        args = {"id": s["id"], "replica": s["replica"] or 0, "hit": s["hit"],
+                "matched": s["matched"], "tokens": s["tokens"]}
+        if s["reason"] is not None:
+            args["reason"] = s["reason"]
+        events.append(complete("request", route, end - route, 0, tid, args))
+        submit = rb(s["submit_us"])
+        events.append(complete("placement", route, submit - route, 0, tid, {}))
+        if s["admit_us"] is not None:
+            a = rb(s["admit_us"])
+            events.append(complete("queued", submit, a - submit, 0, tid, {}))
+            if s["first_us"] is not None:
+                f = rb(s["first_us"])
+                events.append(complete("prefill", a, f - a, 0, tid, {}))
+                if s["finish_us"] is not None:
+                    e = rb(s["finish_us"])
+                    events.append(complete("decode", f, e - f, 0, tid, {}))
+
+    for r, ring in enumerate(replicas):
+        emit_log_tracks(events, ring, 0, r + 1, t0)
+    return {"displayTimeUnit": "ms", "traceEvents": events}
+
+
+# ---------------------------------------------------------------------------
+# the export.rs sample_fleet scenario (+ one step record for liveness)
+# ---------------------------------------------------------------------------
+
+GID_B = (1 << REPLICA_SHIFT) | 1
+
+
+def sample_fleet():
+    router = [
+        (0, {"ev": "probe_round", "probed": 2, "cached": 0}),
+        (0, {"ev": "routed", "id": 1, "replica": 0, "matched": 0, "depth": 0,
+             "reason": "load", "probes": [(0, 0), (0, 0)]}),
+        (6 * TICK, {"ev": "probe_round", "probed": 2, "cached": 0}),
+        (6 * TICK, {"ev": "migration_begin", "mig": 1, "src": 0, "dst": 1}),
+        (7 * TICK, {"ev": "migration_end", "mig": 1, "src": 0, "dst": 1,
+                    "seg": 3, "tokens": 4, "adopted": True}),
+        (7 * TICK, {"ev": "routed", "id": GID_B, "replica": 1, "matched": 4,
+                    "depth": 0, "reason": "spill", "probes": [(4, 9), (0, 0)]}),
+    ]
+    replica0 = [
+        (1 * TICK, {"ev": "submitted", "id": 1, "prompt": 4, "max_new": 4}),
+        (2 * TICK, {"ev": "admitted", "id": 1, "lane": 0, "hit": False, "matched": 0}),
+        (3 * TICK, {"ev": "first_token", "id": 1}),
+        (3 * TICK, {"ev": "step", "step": 0, "active": 1, "queued": 0, "dur_us": 0}),
+        (5 * TICK, {"ev": "finished", "id": 1, "reason": "eos", "tokens": 4}),
+    ]
+    replica1 = [
+        (8 * TICK, {"ev": "submitted", "id": GID_B, "prompt": 6, "max_new": 2}),
+        (8 * TICK, {"ev": "admitted", "id": GID_B, "lane": 0, "hit": True, "matched": 4}),
+        (9 * TICK, {"ev": "first_token", "id": GID_B}),
+        (10 * TICK, {"ev": "finished", "id": GID_B, "reason": "length", "tokens": 2}),
+    ]
+    return router, [replica0, replica1]
+
+
+def check_anchors(doc):
+    """Replay merge_fleet_stitches_and_tiles_routed_lifecycles plus exact
+    numeric anchors for the stitched tracks."""
+    evs = doc["traceEvents"]
+    pnames = {e["pid"]: e["args"]["name"] for e in evs
+              if e["ph"] == "M" and e["name"] == "process_name"}
+    assert pnames == {0: "puzzle-router", 1: "puzzle-replica-0", 2: "puzzle-replica-1"}
+
+    pid0_reqs = [e for e in evs if e["pid"] == 0 and e["name"] == "request"]
+    assert len(pid0_reqs) == 2, "both routed requests get fleet tracks"
+    for req in pid0_reqs:
+        tid = req["tid"]
+        kids = [e for e in evs if e["pid"] == 0 and e["tid"] == tid
+                and e["name"] in ("placement", "queued", "prefill", "decode")]
+        assert sum(e["dur"] for e in kids) == req["dur"], "children tile e2e"
+
+    # exact boundaries: request A (gid 1) and B (gid (1<<48)|1)
+    by_tid = {}
+    for e in evs:
+        if e["pid"] == 0 and e["ph"] == "X" and e["tid"] >= TID_REQ_BASE:
+            by_tid.setdefault(e["tid"], {})[e["name"]] = e
+    a = by_tid[TID_REQ_BASE + 1]
+    assert (a["request"]["ts"], a["request"]["dur"]) == (0, 5 * TICK)
+    assert [(a[n]["ts"], a[n]["dur"]) for n in ("placement", "queued", "prefill", "decode")] \
+        == [(0, TICK), (TICK, TICK), (2 * TICK, TICK), (3 * TICK, 2 * TICK)]
+    b = by_tid[TID_REQ_BASE + GID_B]
+    assert (b["request"]["ts"], b["request"]["dur"]) == (7 * TICK, 3 * TICK)
+    assert [(b[n]["ts"], b[n]["dur"]) for n in ("placement", "queued", "prefill", "decode")] \
+        == [(7 * TICK, TICK), (8 * TICK, 0), (8 * TICK, TICK), (9 * TICK, TICK)]
+
+    migs = [e for e in evs if e["name"] == "migration"]
+    assert len(migs) == 1 and migs[0]["ph"] == "X"
+    assert (migs[0]["ts"], migs[0]["dur"]) == (6 * TICK, TICK)
+    assert migs[0]["args"]["tokens"] == 4 and migs[0]["args"]["adopted"] is True
+    assert any(e["pid"] == 2 and e["name"] == "request" for e in evs), \
+        "replica lifecycles appear under their own pids"
+
+
+# ---------------------------------------------------------------------------
+# verify_trace.py --fleet self-test: accept the valid doc, reject corruptions
+# ---------------------------------------------------------------------------
+
+def run_validator(doc, extra):
+    with tempfile.NamedTemporaryFile("w", suffix=".json", delete=False) as f:
+        json.dump(doc, f)
+        path = f.name
+    try:
+        return subprocess.run(
+            [sys.executable, VERIFY, path, "--fleet", *extra],
+            capture_output=True, text=True)
+    finally:
+        os.unlink(path)
+
+
+def find(evs, **kv):
+    for i, e in enumerate(evs):
+        if all(e.get(k) == v for k, v in kv.items()):
+            return i
+    raise AssertionError(f"no event matching {kv}")
+
+
+def corruptions(doc):
+    """Yield (label, corrupted-doc, expected-diagnostic-substring)."""
+    def fresh():
+        return copy.deepcopy(doc)
+
+    d = fresh()
+    evs = d["traceEvents"]
+    evs[find(evs, name="process_name", pid=0)]["args"]["name"] = "router"
+    yield "pid-0 rename", d, "must be named puzzle-router"
+
+    d = fresh()
+    evs = d["traceEvents"]
+    evs[find(evs, name="routed")]["tid"] = 5
+    yield "routed off the routing track", d, "expected pid 0 tid 0"
+
+    d = fresh()
+    evs = d["traceEvents"]
+    del evs[find(evs, name="placement", pid=0, tid=TID_REQ_BASE + 1)]
+    yield "finished request missing its placement stage", d, "lifecycle stages"
+
+    d = fresh()
+    evs = d["traceEvents"]
+    evs[find(evs, name="queued", pid=0, tid=TID_REQ_BASE + 1)]["dur"] = 1500
+    yield "stage chain broken (queued overruns)", d, "expected 2500"
+
+    d = fresh()
+    d["traceEvents"] = [e for e in d["traceEvents"]
+                        if not (e["pid"] == 1 and e["tid"] == TID_REQ_BASE + 1
+                                and e["ph"] == "X")]
+    yield "replica-side track removed", d, "has no track on pid 1"
+
+    d = fresh()
+    evs = d["traceEvents"]
+    evs[find(evs, name="request", pid=0, tid=TID_REQ_BASE + 1)]["args"]["replica"] = 1
+    yield "id high bits contradict the replica arg", d, "does not encode replica"
+
+    d = fresh()
+    d["traceEvents"].append(instant("migration_unpaired", 6 * TICK, 0, 1, {"mig": 9}))
+    yield "unpaired migration marker", d, "unpaired migration"
+
+    d = fresh()
+    evs = d["traceEvents"]
+    del evs[find(evs, name="migration")]["args"]["adopted"]
+    yield "migration span missing an arg", d, "missing arg"
+
+    d = fresh()
+    evs = d["traceEvents"]
+    evs[find(evs, name="decode", pid=0, tid=TID_REQ_BASE + 1)]["dur"] = -1
+    yield "negative span duration", d, "dur >= 0"
+
+    d = fresh()
+    evs = d["traceEvents"]
+    i = find(evs, name="request", pid=0, tid=TID_REQ_BASE + 1)
+    evs.insert(i + 1, copy.deepcopy(evs[i]))
+    yield "duplicate enclosing request span", d, "exactly one enclosing request"
+
+
+# ---------------------------------------------------------------------------
+# slo.rs transcription: fold_requests / burn_rates / burn_profiles
+# ---------------------------------------------------------------------------
+
+WINDOW_SHORT = 60_000_000
+WINDOW_LONG = 300_000_000
+
+
+def burn_profiles(virtual_clock):
+    if virtual_clock:
+        return [("lenient", 48 * TICK, 6 * TICK, 0.99),
+                ("strict", 3 * TICK, TICK, 0.90)]
+    return [("wall_lenient", 30_000_000, 5_000_000, 0.99),
+            ("wall_strict", 1_000_000, 250_000, 0.90)]
+
+
+def fold_requests(rings):
+    merged = merge_logs(rings)
+    gaps = {}
+    for ts, ev in merged:
+        if ev["ev"] == "token":
+            e = gaps.setdefault(ev["id"], [ts, 0])
+            e[1] = max(e[1], ts - e[0])
+            e[0] = ts
+    out = []
+    for s in request_spans(merged):
+        if s["reason"] is None or s["reason"] == "cancelled" or s["finish_us"] is None:
+            continue
+        start = s["route_us"] if s["route_us"] is not None else s["submit_us"]
+        ttft = s["first_us"] - start if s["first_us"] is not None else None
+        out.append((s["finish_us"], ttft, gaps.get(s["id"], (0, 0))[1]))
+    return out
+
+
+def met_by(profile, rec):
+    _, ttft_budget, itl_budget, _ = profile
+    finish, ttft, max_gap = rec
+    return ttft is not None and ttft <= ttft_budget and max_gap <= itl_budget
+
+
+def burn_rates(records, profiles, now):
+    out = []
+    for p in profiles:
+        for window in (WINDOW_SHORT, WINDOW_LONG):
+            lo = max(now - window, 0)
+            inw = [r for r in records if lo < r[0] <= now]
+            total, met = len(inw), sum(1 for r in inw if met_by(p, r))
+            goodput = 1.0 if total == 0 else met / total
+            burn = (1.0 - goodput) / (1.0 - p[3])
+            out.append((p[0], window, total, met, goodput, burn))
+    return out
+
+
+def check_slo():
+    # profiles_mirror_the_harness_budgets
+    [(ln, lt, li, lo), (sn, st, si, so)] = burn_profiles(True)
+    assert (ln, lt, li) == ("lenient", 48 * TICK, 6 * TICK)
+    assert (sn, st, si) == ("strict", 3 * TICK, TICK)
+    assert so < lo
+    [(_, wt, wi, _), (_, xt, xi, _)] = burn_profiles(False)
+    assert (wt, wi) == (30_000_000, 5_000_000) and (xt, xi) == (1_000_000, 250_000)
+
+    # fold_measures_ttft_from_the_router_door_and_worst_gap
+    ring = [
+        (0, {"ev": "routed", "id": 1, "replica": 0, "matched": 0, "depth": 0,
+             "reason": "load", "probes": [(0, 0)]}),
+        (2 * TICK, {"ev": "submitted", "id": 1, "prompt": 4, "max_new": 4}),
+        (3 * TICK, {"ev": "admitted", "id": 1, "lane": 0, "hit": False, "matched": 0}),
+        (5 * TICK, {"ev": "first_token", "id": 1}),
+        (5 * TICK, {"ev": "token", "id": 1, "tok": 7}),
+        (6 * TICK, {"ev": "token", "id": 1, "tok": 8}),
+        (9 * TICK, {"ev": "token", "id": 1, "tok": 9}),
+        (9 * TICK, {"ev": "finished", "id": 1, "reason": "eos", "tokens": 3}),
+        (9 * TICK, {"ev": "submitted", "id": 2, "prompt": 4, "max_new": 4}),
+    ]
+    recs = fold_requests([ring])
+    assert recs == [(9 * TICK, 5 * TICK, 3 * TICK)], recs
+
+    # cancelled_requests_are_excluded
+    ring = [(0, {"ev": "submitted", "id": 1, "prompt": 4, "max_new": 4}),
+            (TICK, {"ev": "finished", "id": 1, "reason": "cancelled", "tokens": 0})]
+    assert fold_requests([ring]) == []
+
+    # burn_is_miss_fraction_over_error_budget
+    p = ("t", 100, 100, 0.9)
+    recs = [(1_000 + i, 500 if i == 0 else 50, 0) for i in range(4)]
+    rates = burn_rates(recs, [p], 10_000)
+    assert len(rates) == 2
+    for _, _, total, met, goodput, burn in rates:
+        assert (total, met) == (4, 3)
+        assert abs(goodput - 0.75) < 1e-12 and abs(burn - 2.5) < 1e-12
+    old = [(10, 500, 0)]
+    _, _, total, _, goodput, burn = burn_rates(old, [p], WINDOW_SHORT + 1_000)[0]
+    assert (total, goodput, burn) == (0, 1.0, 0.0), "no traffic is not an outage"
+
+    # window boundary semantics: finish == now - window is OUT (the lower
+    # bound is exclusive — with now inside the first window the bound
+    # saturates to 0 and a tick-0 finish is excluded), finish == now is IN
+    now = WINDOW_SHORT + 5_000
+    edge = [(now - WINDOW_SHORT, 0, 0), (now - WINDOW_SHORT + 1, 0, 0), (now, 0, 0)]
+    assert burn_rates(edge, [p], now)[0][2] == 2
+    assert burn_rates([(0, 0, 0)], [p], 2 * TICK)[0][2] == 0, \
+        "a tick-0 finish sits on the excluded saturated bound"
+    # records without a first token never meet any budget
+    assert not met_by(p, (TICK, None, 0))
+
+    # fuzz fold_requests against directly generated boundaries
+    for seed in range(5):
+        rng = random.Random(seed)
+        rings = [[] for _ in range(3)]
+        expected = []
+        for i in range(1, 120):
+            t = rng.randrange(0, 1_000) * TICK
+            routed = rng.random() < 0.5
+            if routed:
+                rings[0].append((t, {"ev": "routed", "id": i, "replica": 0,
+                                     "matched": 0, "depth": 0, "reason": "load",
+                                     "probes": []}))
+            submit = t + rng.randrange(0, 3) * TICK
+            ring = rings[1 + i % 2]
+            ring.append((submit, {"ev": "submitted", "id": i, "prompt": 4, "max_new": 8}))
+            if rng.random() < 0.15:
+                continue  # never finishes: must not fold
+            admit = submit + rng.randrange(0, 4) * TICK
+            ring.append((admit, {"ev": "admitted", "id": i, "lane": 0,
+                                 "hit": False, "matched": 0}))
+            if rng.random() < 0.1:
+                ring.append((admit, {"ev": "finished", "id": i,
+                                     "reason": "cancelled", "tokens": 0}))
+                continue  # cancelled: must not fold
+            first = admit + rng.randrange(0, 5) * TICK
+            ring.append((first, {"ev": "first_token", "id": i}))
+            tok_ts, cur = [], first
+            for _ in range(rng.randrange(1, 6)):
+                ring.append((cur, {"ev": "token", "id": i, "tok": 1}))
+                tok_ts.append(cur)
+                cur += rng.randrange(0, 7) * TICK
+            finish = tok_ts[-1]
+            ring.append((finish, {"ev": "finished", "id": i, "reason": "eos",
+                                  "tokens": len(tok_ts)}))
+            gap = max((b - a for a, b in zip(tok_ts, tok_ts[1:])), default=0)
+            expected.append((finish, first - (t if routed else submit), gap))
+        for ring in rings:
+            ring.sort(key=lambda r: r[0])
+        got = sorted(fold_requests(rings))
+        assert got == sorted(expected), f"seed {seed}: fold mismatch"
+
+
+# ---------------------------------------------------------------------------
+
+def main():
+    router, replicas = sample_fleet()
+    doc = merge_fleet(router, replicas)
+    check_anchors(doc)
+    print("1. merge_fleet transcription matches the export.rs unit-test "
+          "expectations (pid naming, tiling, exact stitched boundaries, "
+          "paired migration span) ✓")
+
+    r = run_validator(doc, ["--expect-prefix-hit", "--expect-migration"])
+    assert r.returncode == 0, f"validator rejected the valid fleet doc:\n{r.stderr}"
+    assert "2 replicas, 2 routed, 1 migrations" in r.stdout, r.stdout
+    print(f"2. verify_trace.py --fleet accepts the generated document "
+          f"({r.stdout.strip().split(': ok: ')[1]}) ✓")
+
+    n = 0
+    for label, bad, want in corruptions(doc):
+        r = run_validator(bad, [])
+        assert r.returncode == 1, f"{label}: validator accepted a corrupted doc"
+        assert want in r.stderr, \
+            f"{label}: wrong diagnostic (wanted {want!r}):\n{r.stderr}"
+        n += 1
+    print(f"3. all {n} corruptions rejected with the intended diagnostic ✓")
+
+    check_slo()
+    print("4. obs::slo transcription: unit-test expectations, window "
+          "boundary semantics, and 5-seed fold fuzz (~500 lifecycles) all "
+          "exact ✓")
+    print("all fleet-trace cross-checks passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -6,19 +6,29 @@ Checks (stdlib only, no Perfetto dependency):
   1. Document shape: a JSON object with a `traceEvents` array; every event
      carries `name` / `ph` / `ts` / `pid` / `tid`, `ph` is one of M/X/i,
      and every `X` (complete) event has a numeric `dur >= 0`.
-  2. Per-track timestamps: within each `tid`, non-metadata events appear
-     in non-decreasing `ts` order (the exporter sorts each track).
+  2. Per-track timestamps: within each `(pid, tid)` track, non-metadata
+     events appear in non-decreasing `ts` order (the exporter sorts each
+     track).
   3. Request lifecycle: each request track (tid >= 1000) holds exactly one
-     enclosing `request` span; its `queued` / `prefill` / `decode` children
-     nest inside it, chain end-to-start, and tile its duration exactly.
-     Every request that reached a natural finish (a non-cancelled `reason`
-     in its args) must carry all three stages — i.e. >= 3 lifecycle stages
-     beyond the enclosing span — and at least one such complete lifecycle
-     must exist in the file.
-  4. Optional config markers: `--expect-spec` requires at least one
-     `spec_round` lane instant (speculative serving ran), and
+     enclosing `request` span; its lifecycle children nest inside it,
+     chain end-to-start, and tile its duration exactly. Single-engine
+     tracks carry `queued / prefill / decode`; the router's stitched
+     tracks (`--fleet`, pid 0) carry `placement / queued / prefill /
+     decode`. Every request that reached a natural finish (a
+     non-cancelled `reason` in its args) must carry every stage, and at
+     least one complete lifecycle must exist in the file.
+  4. Fleet structure (`--fleet`): pid 0 is named `puzzle-router` and pid
+     r+1 `puzzle-replica-<r>`; at least one `routed` instant exists on
+     the router's routing track; every stitched pid-0 request resolves
+     cross-process — its `replica` arg names a live replica pid that
+     carries the same request id on its own track, and the id's high
+     bits encode that replica; every `migration` span is a paired
+     begin/end (no `migration_unpaired` markers).
+  5. Optional config markers: `--expect-spec` requires at least one
+     `spec_round` lane instant (speculative serving ran),
      `--expect-prefix-hit` requires at least one request admitted with
-     `hit: true` (the prefix cache matched).
+     `hit: true`, and `--expect-migration` (fleet) requires at least one
+     adopted migration span.
 
 Exit status 0 with a one-line summary on success, 1 with a diagnostic on
 the first failure.
@@ -29,7 +39,9 @@ import json
 import sys
 
 LIFECYCLE = ("queued", "prefill", "decode")
+FLEET_LIFECYCLE = ("placement", "queued", "prefill", "decode")
 TID_REQ_BASE = 1000
+REPLICA_SHIFT = 48
 
 
 def fail(msg):
@@ -70,65 +82,145 @@ def check_monotonic(events):
     for i, e in enumerate(events):
         if e["ph"] == "M":
             continue
-        tid = e["tid"]
-        if tid in last and e["ts"] < last[tid]:
+        track = (e["pid"], e["tid"])
+        if track in last and e["ts"] < last[track]:
             fail(
                 f"traceEvents[{i}] ({e['name']}) ts {e['ts']} goes backwards "
-                f"on tid {tid} (previous {last[tid]})"
+                f"on pid {track[0]} tid {track[1]} (previous {last[track]})"
             )
-        last[tid] = e["ts"]
+        last[track] = e["ts"]
 
 
-def check_requests(events):
-    """Validate span nesting and lifecycle tiling on every request track."""
+def check_requests(events, lifecycle_for_pid):
+    """Validate span nesting and lifecycle tiling on every request track.
+
+    `lifecycle_for_pid(pid)` names the stage chain that pid's request
+    tracks must tile with (the router's stitched tracks lead with a
+    `placement` stage the replica-local view cannot see).
+    """
     tracks = {}
     for e in events:
         if e["ph"] == "X" and e["tid"] >= TID_REQ_BASE:
-            tracks.setdefault(e["tid"], []).append(e)
+            tracks.setdefault((e["pid"], e["tid"]), []).append(e)
     complete = 0
     hits = 0
-    for tid, spans in sorted(tracks.items()):
+    for (pid, tid), spans in sorted(tracks.items()):
+        lifecycle = lifecycle_for_pid(pid)
         reqs = [s for s in spans if s["name"] == "request"]
         if len(reqs) != 1:
-            fail(f"tid {tid}: expected exactly one enclosing request span, got {len(reqs)}")
+            fail(
+                f"pid {pid} tid {tid}: expected exactly one enclosing request span, "
+                f"got {len(reqs)}"
+            )
         req = reqs[0]
         r0, r1 = req["ts"], req["ts"] + req["dur"]
         args = req.get("args", {})
         if args.get("hit") is True:
             hits += 1
-        stages = {s["name"]: s for s in spans if s["name"] in LIFECYCLE}
+        stages = {s["name"]: s for s in spans if s["name"] in lifecycle}
         for name, s in stages.items():
             s0, s1 = s["ts"], s["ts"] + s["dur"]
             if s0 < r0 or s1 > r1:
-                fail(f"tid {tid}: {name} span [{s0}, {s1}] escapes request [{r0}, {r1}]")
-        if len(stages) == len(LIFECYCLE):
+                fail(f"pid {pid} tid {tid}: {name} span [{s0}, {s1}] escapes request [{r0}, {r1}]")
+        if len(stages) == len(lifecycle):
             # a full lifecycle must chain end-to-start and tile the request
-            if stages["queued"]["ts"] != r0:
-                fail(f"tid {tid}: queued must start at the request span")
             cursor = r0
-            for name in LIFECYCLE:
+            for name in lifecycle:
                 s = stages[name]
                 if s["ts"] != cursor:
-                    fail(f"tid {tid}: {name} starts at {s['ts']}, expected {cursor}")
+                    fail(f"pid {pid} tid {tid}: {name} starts at {s['ts']}, expected {cursor}")
                 cursor = s["ts"] + s["dur"]
             if cursor != r1:
-                fail(f"tid {tid}: lifecycle tiles to {cursor}, request ends at {r1}")
+                fail(f"pid {pid} tid {tid}: lifecycle tiles to {cursor}, request ends at {r1}")
             complete += 1
         else:
             reason = args.get("reason")
             if reason is not None and reason != "cancelled":
                 fail(
-                    f"tid {tid}: finished request (reason={reason!r}) has only "
+                    f"pid {pid} tid {tid}: finished request (reason={reason!r}) has only "
                     f"{len(stages) + 1} lifecycle stages: {sorted(stages)}"
                 )
     if tracks and complete == 0:
-        fail("no request track carries a complete queued/prefill/decode lifecycle")
+        fail("no request track carries a complete lifecycle")
     return len(tracks), complete, hits
+
+
+def check_fleet(events):
+    """Fleet-merge structure: pid naming, cross-pid request stitching, and
+    migration span pairing. Returns (replicas, routed, migrations)."""
+    # 1. Process naming: pid 0 is the router, pid r+1 replica r.
+    names = {
+        e["pid"]: e.get("args", {}).get("name")
+        for e in events
+        if e["ph"] == "M" and e["name"] == "process_name"
+    }
+    if names.get(0) != "puzzle-router":
+        fail(f"fleet: pid 0 must be named puzzle-router, got {names.get(0)!r}")
+    replicas = sorted(p for p in names if p != 0)
+    if not replicas:
+        fail("fleet: no replica processes (pid >= 1) are named")
+    for p in replicas:
+        want = f"puzzle-replica-{p - 1}"
+        if names[p] != want:
+            fail(f"fleet: pid {p} must be named {want!r}, got {names[p]!r}")
+
+    # 2. Routing instants live on the router's tid-0 track.
+    routed = [e for e in events if e["name"] == "routed"]
+    for e in routed:
+        if e["pid"] != 0 or e["tid"] != 0:
+            fail(f"fleet: routed instant on pid {e['pid']} tid {e['tid']}, expected pid 0 tid 0")
+    if not routed:
+        fail("fleet: no routed instants on the router timeline")
+
+    # 3. Cross-pid stitching: every stitched pid-0 request resolves to a
+    # replica-side request track carrying the same global id, and the
+    # id's high bits encode that replica.
+    replica_reqs = {
+        (e["pid"], e["tid"])
+        for e in events
+        if e["ph"] == "X" and e["name"] == "request" and e["pid"] != 0 and e["tid"] >= TID_REQ_BASE
+    }
+    stitched = 0
+    for e in events:
+        if e["ph"] != "X" or e["name"] != "request" or e["pid"] != 0 or e["tid"] < TID_REQ_BASE:
+            continue
+        args = e.get("args", {})
+        rid, rep = args.get("id"), args.get("replica")
+        if rid is None or rep is None:
+            fail(f"fleet: pid-0 request track tid {e['tid']} lacks id/replica args")
+        if int(rid) >> REPLICA_SHIFT != int(rep):
+            fail(f"fleet: request id {rid} does not encode replica {rep} in its high bits")
+        if (int(rep) + 1, TID_REQ_BASE + int(rid)) not in replica_reqs:
+            fail(f"fleet: request {rid} routed to replica {rep} has no track on pid {int(rep) + 1}")
+        stitched += 1
+    if stitched == 0:
+        fail("fleet: no stitched per-request tracks on the router pid")
+
+    # 4. Migration spans must be paired (the exporter demotes a begin
+    # without its end to a migration_unpaired marker).
+    unpaired = [e for e in events if e["name"] == "migration_unpaired"]
+    if unpaired:
+        fail(f"fleet: {len(unpaired)} unpaired migration begin(s) in the trace")
+    migrations = [e for e in events if e["ph"] == "X" and e["name"] == "migration"]
+    for e in migrations:
+        if e["pid"] != 0:
+            fail(f"fleet: migration span on pid {e['pid']}, expected the router pid 0")
+        for k in ("mig", "src", "dst", "seg", "tokens", "adopted"):
+            if k not in e.get("args", {}):
+                fail(f"fleet: migration span missing arg {k!r}")
+    adopted = sum(1 for e in migrations if e["args"].get("adopted") is True)
+    return len(replicas), len(routed), adopted
 
 
 def main():
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("trace", help="Chrome trace-event JSON file (--trace-out output)")
+    ap.add_argument(
+        "--fleet",
+        action="store_true",
+        help="expect a merged fleet trace (router pid 0 + replica pids), "
+        "checking pid naming, cross-pid stitching, and migration pairing",
+    )
     ap.add_argument(
         "--expect-spec",
         action="store_true",
@@ -139,6 +231,11 @@ def main():
         action="store_true",
         help="require at least one request admitted with a prefix-cache hit",
     )
+    ap.add_argument(
+        "--expect-migration",
+        action="store_true",
+        help="require at least one adopted migration span (--fleet only)",
+    )
     opts = ap.parse_args()
 
     doc = load(opts.trace)
@@ -147,7 +244,11 @@ def main():
         fail("traceEvents is empty")
     check_shape(events)
     check_monotonic(events)
-    n_req, n_complete, n_hits = check_requests(events)
+    if opts.fleet:
+        lifecycle_for_pid = lambda pid: FLEET_LIFECYCLE if pid == 0 else LIFECYCLE
+    else:
+        lifecycle_for_pid = lambda pid: LIFECYCLE
+    n_req, n_complete, n_hits = check_requests(events, lifecycle_for_pid)
     if n_req == 0:
         fail("no request tracks (tid >= 1000) in the trace")
 
@@ -160,10 +261,19 @@ def main():
     if opts.expect_prefix_hit and n_hits == 0:
         fail("--expect-prefix-hit: no request was admitted with a prefix-cache hit")
 
+    fleet_note = ""
+    if opts.fleet:
+        n_replicas, n_routed, n_migrations = check_fleet(events)
+        if opts.expect_migration and n_migrations == 0:
+            fail("--expect-migration: no adopted migration spans in the trace")
+        fleet_note = f", {n_replicas} replicas, {n_routed} routed, {n_migrations} migrations"
+    elif opts.expect_migration:
+        fail("--expect-migration only makes sense with --fleet")
+
     print(
         f"verify_trace: ok: {len(events)} events, {n_req} requests "
         f"({n_complete} complete lifecycles, {n_hits} prefix hits), "
-        f"{n_steps} steps, {n_spec} spec rounds"
+        f"{n_steps} steps, {n_spec} spec rounds{fleet_note}"
     )
 
 
